@@ -1,0 +1,58 @@
+//! Dashboard server — run a HOPAAS server with live traffic so the web
+//! UI has something to show, then keep serving until the duration ends.
+//!
+//! Open the printed URL in a browser: the study table and loss curves
+//! refresh every 2 s from the same data APIs the paper's Chartist UI
+//! polls.
+//!
+//! Run: `cargo run --release --example dashboard_server -- --duration 60`
+
+use hopaas::config::Args;
+use hopaas::coordinator::service::{HopaasConfig, HopaasServer};
+use hopaas::objectives::Objective;
+use hopaas::worker::Campaign;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    let duration = args.get_u64("duration", 30);
+    let addr = args.get_or("addr", "127.0.0.1:8021").to_string();
+
+    let server = HopaasServer::start(
+        &addr,
+        HopaasConfig { auth_required: false, ..Default::default() },
+    )?;
+    println!("dashboard: http://{}/", server.addr());
+    println!("metrics:   http://{}/metrics", server.addr());
+    println!("serving traffic for {duration}s ...");
+
+    // Background traffic: a slow-ticking campaign per objective.
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let mut feeders = Vec::new();
+    for (i, objective) in [Objective::Branin, Objective::Ackley, Objective::Rastrigin]
+        .into_iter()
+        .enumerate()
+    {
+        let addr = server.addr();
+        let stop = stop.clone();
+        feeders.push(std::thread::spawn(move || {
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                let mut c = Campaign::new(addr, "x".into(), objective);
+                c.n_nodes = 4;
+                c.max_trials = 16;
+                c.steps_per_trial = 10;
+                c.step_cost_us = 20_000; // visibly live curves
+                c.seed = 42 + i as u64;
+                let _ = c.run();
+            }
+        }));
+    }
+
+    std::thread::sleep(std::time::Duration::from_secs(duration));
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    for f in feeders {
+        let _ = f.join();
+    }
+    println!("done.");
+    server.stop();
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Microbenchmark of the PJRT GAN hot path: compile time, per-step
+//! latency and evaluation latency per compiled variant. Feeds the L1/L2
+//! rows of EXPERIMENTS.md §Perf.
+//!
+//! Run: `make artifacts && cargo run --release --example gan_timing`
+
+use hopaas::gan::{GanHyper, GanTrainer};
+use hopaas::runtime::Runtime;
+use std::sync::Arc;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Arc::new(
+        Runtime::open(Runtime::default_dir())
+            .map_err(|e| anyhow::anyhow!("{e}\nrun `make artifacts` first"))?,
+    );
+    println!("platform: {}\n", rt.platform());
+    println!(
+        "{:<10} {:>14} {:>12} {:>12} {:>14}",
+        "variant", "compile", "per-step", "eval", "steps/s"
+    );
+    let variants: Vec<(u64, u64)> = rt
+        .manifest
+        .variants
+        .iter()
+        .map(|v| (v.width, v.depth))
+        .collect();
+    for (w, d) in variants {
+        let mut t = GanTrainer::new(rt.clone(), w, d, 1)?;
+        let hp = GanHyper::default();
+        let t0 = Instant::now();
+        t.train(1, &hp)?; // includes compile
+        let compile = t0.elapsed();
+        let n = 30;
+        let t0 = Instant::now();
+        t.train(n, &hp)?;
+        let per = t0.elapsed() / n as u32;
+        let t0 = Instant::now();
+        let _ = t.evaluate()?;
+        let eval = t0.elapsed();
+        println!(
+            "{:<10} {:>14.2?} {:>12.2?} {:>12.2?} {:>14.1}",
+            format!("{w}x{d}"),
+            compile,
+            per,
+            eval,
+            1.0 / per.as_secs_f64()
+        );
+    }
+    Ok(())
+}

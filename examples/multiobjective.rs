@@ -1,0 +1,66 @@
+//! Multi-objective optimization over the HOPAAS protocol — the paper's
+//! §5 future work ("introduce support to multi-objective optimizations")
+//! as a working feature.
+//!
+//! A study declares `"direction": ["minimize", "minimize"]`; workers
+//! `tell` objective *vectors*; the server runs NSGA-II and tracks the
+//! Pareto front, served at `/api/studies/{id}/pareto`.
+//!
+//! Run: `cargo run --release --example multiobjective`
+
+use hopaas::coordinator::mo::hypervolume;
+use hopaas::coordinator::service::{HopaasConfig, HopaasServer};
+use hopaas::objectives::multi::MoProblem;
+use hopaas::worker::{HopaasClient, StudySpec};
+
+fn main() -> anyhow::Result<()> {
+    let server = HopaasServer::start(
+        "127.0.0.1:0",
+        HopaasConfig { auth_required: false, ..Default::default() },
+    )?;
+    let mut client = HopaasClient::connect(server.addr(), "mo".into())
+        .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+
+    let problem = MoProblem::Zdt1;
+    let spec = StudySpec::new("zdt1-pareto")
+        .properties_json(problem.properties())
+        .directions(&["minimize", "minimize"])
+        .sampler("nsga2");
+
+    println!("optimizing {} (bi-objective, d={}) with NSGA-II ...", problem.name(), problem.dim());
+    let mut study_id = 0;
+    let mut points = Vec::new();
+    for i in 0..250 {
+        let trial = client.ask(&spec).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        study_id = trial.study_id;
+        let [f1, f2] = problem.eval_params(&trial.params);
+        let on_front = client
+            .tell_values(&trial, &[f1, f2])
+            .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        points.push(vec![f1, f2]);
+        if i % 50 == 49 {
+            let hv = hypervolume(&points, &problem.hv_reference(), 0);
+            println!("  after {:>3} trials: hypervolume {:.3} (last trial on front: {})", i + 1, hv, on_front);
+        }
+    }
+
+    let front = client
+        .pareto(study_id)
+        .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    let front = front.as_arr().unwrap().to_vec();
+    println!("\nPareto front ({} trials) — f1 vs f2 (true front: f2 = 1 - sqrt(f1)):", front.len());
+    let mut pts: Vec<(f64, f64)> = front
+        .iter()
+        .map(|t| {
+            let v = t.get("values");
+            (v.at(0).as_f64().unwrap(), v.at(1).as_f64().unwrap())
+        })
+        .collect();
+    pts.sort_by(|a, b| a.0.total_cmp(&b.0));
+    for (f1, f2) in pts.iter().take(20) {
+        let ideal = 1.0 - f1.sqrt();
+        println!("  f1={f1:.3}  f2={f2:.3}  (front would be {ideal:.3})");
+    }
+    server.stop();
+    Ok(())
+}

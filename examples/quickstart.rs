@@ -1,0 +1,83 @@
+//! Quickstart — the paper's Figure 1 workflow, end to end.
+//!
+//! Starts a HOPAAS server in-process, connects a client over real HTTP,
+//! and runs the full optimization loop against the Branin function:
+//!
+//! ```text
+//!   client                      server
+//!     | -- POST /api/ask/{t} ---> |   (join/create study, suggest params)
+//!     |            train ...      |
+//!     | -- POST /api/should_prune |   (report step loss; prune?)
+//!     |            ...            |
+//!     | -- POST /api/tell/{t} --> |   (final objective)
+//! ```
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use hopaas::coordinator::service::{HopaasConfig, HopaasServer};
+use hopaas::objectives::Objective;
+use hopaas::worker::{HopaasClient, StudySpec};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A server with auth on — exactly what `hopaas serve` runs.
+    let server = HopaasServer::start("127.0.0.1:0", HopaasConfig::default())?;
+    println!("server    : http://{}", server.addr());
+    println!("dashboard : http://{}/", server.addr());
+
+    // 2. A client holding an API token (issued at startup here; the
+    //    `/api/token` endpoint mints more).
+    let mut client = HopaasClient::connect(server.addr(), server.bootstrap_token.clone())
+        .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+    println!("version   : {}", client.version().map_err(|e| anyhow::anyhow!(e.to_string()))?);
+
+    // 3. The study definition travels with every ask — any node posting
+    //    the same definition joins the same study.
+    let spec = StudySpec::new("quickstart-branin")
+        .properties_json(Objective::Branin.properties())
+        .sampler("tpe")
+        .pruner("median")
+        .from_node("quickstart-node");
+
+    let mut best = f64::INFINITY;
+    let mut best_params = String::new();
+    let trials = 60;
+    let mut pruned_count = 0;
+    for i in 0..trials {
+        let trial = client.ask(&spec).map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        let value = Objective::Branin.eval_params(&trial.params);
+
+        // Simulated "training": interim losses converge toward the final
+        // value; the server's median pruner kills hopeless trials early.
+        let mut pruned = false;
+        for step in 1..=8u64 {
+            let interim = value + 3.0 / step as f64;
+            if client
+                .should_prune(&trial, step, interim)
+                .map_err(|e| anyhow::anyhow!(e.to_string()))?
+            {
+                pruned = true;
+                pruned_count += 1;
+                break;
+            }
+        }
+        if pruned {
+            continue;
+        }
+        let is_best = client
+            .tell(&trial, value)
+            .map_err(|e| anyhow::anyhow!(e.to_string()))?;
+        if is_best {
+            best = value;
+            best_params = trial.params.to_string();
+            println!("trial {i:>3}: new best {best:.5}  params={best_params}");
+        }
+    }
+
+    println!(
+        "\nbest after {trials} trials: {best:.5}   (Branin f* = 0.39789)  pruned={pruned_count}"
+    );
+    println!("best params: {best_params}");
+    assert!(best < 2.0, "TPE should get close to the Branin optimum");
+    server.stop();
+    Ok(())
+}

@@ -1,0 +1,142 @@
+"""AOT compile path: lower the GAN train/eval steps to HLO text.
+
+Emits, per (width, depth) variant:
+  artifacts/gan_train_w{W}_d{D}.hlo.txt
+  artifacts/gan_eval_w{W}_d{D}.hlo.txt
+plus artifacts/manifest.json describing the exact positional signature
+(array shapes in order), which the Rust runtime uses to build input
+literals and to initialize parameters — no Python at run time.
+
+HLO **text** is the interchange format, not serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. Lowering goes stablehlo ->
+XlaComputation with `return_tuple=True`; the Rust side unwraps with
+`to_tuple()`.
+
+Usage: python -m compile.aot --out ../artifacts [--variants 64x2,128x3]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def train_signature(width, depth):
+    """Positional input shapes of the train artifact."""
+    state = [s for s in model.state_spec(width, depth)]
+    data = [
+        (model.BATCH, model.COND_DIM),
+        (model.BATCH, model.FEAT_DIM),
+        (model.BATCH, model.LATENT_DIM),
+    ]
+    scalars = [()] * 5  # lr_g, lr_d, beta1, beta2, leak
+    return state + data + scalars
+
+
+def eval_signature(width, depth):
+    """Positional input shapes of the eval artifact."""
+    gen_shapes = model.param_shapes(width, depth)[: model.n_gen_arrays(width, depth)]
+    data = [
+        (model.EVAL_BATCH, model.COND_DIM),
+        (model.EVAL_BATCH, model.FEAT_DIM),
+        (model.EVAL_BATCH, model.LATENT_DIM),
+    ]
+    return gen_shapes + data + [()]  # + leak
+
+
+def lower_variant(width, depth):
+    """Lower both artifacts of one variant; returns (train_hlo, eval_hlo)."""
+    train_args = [_spec(s) for s in train_signature(width, depth)]
+    train_hlo = to_hlo_text(
+        jax.jit(model.train_step_flat(width, depth)).lower(*train_args)
+    )
+    eval_args = [_spec(s) for s in eval_signature(width, depth)]
+    eval_hlo = to_hlo_text(
+        jax.jit(model.eval_step_flat(width, depth)).lower(*eval_args)
+    )
+    return train_hlo, eval_hlo
+
+
+def build_manifest(variants):
+    """Everything the Rust runtime needs to drive the artifacts."""
+    out = {
+        "cond_dim": model.COND_DIM,
+        "feat_dim": model.FEAT_DIM,
+        "latent_dim": model.LATENT_DIM,
+        "batch": model.BATCH,
+        "eval_batch": model.EVAL_BATCH,
+        "variants": [],
+    }
+    for width, depth in variants:
+        out["variants"].append(
+            {
+                "width": width,
+                "depth": depth,
+                "train_file": f"gan_train_w{width}_d{depth}.hlo.txt",
+                "eval_file": f"gan_eval_w{width}_d{depth}.hlo.txt",
+                "param_shapes": [list(s) for s in model.param_shapes(width, depth)],
+                "n_gen_arrays": model.n_gen_arrays(width, depth),
+                "n_state": len(model.state_spec(width, depth)),
+                # Train outputs: state' (n_state) + loss_d + loss_g.
+                "train_inputs": [list(s) for s in train_signature(width, depth)],
+                "eval_inputs": [list(s) for s in eval_signature(width, depth)],
+            }
+        )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default=None,
+        help="comma-separated WxD list, e.g. 64x2,128x3 (default: all)",
+    )
+    args = ap.parse_args()
+
+    variants = model.VARIANTS
+    if args.variants:
+        variants = [
+            tuple(int(x) for x in v.split("x")) for v in args.variants.split(",")
+        ]
+
+    os.makedirs(args.out, exist_ok=True)
+    for width, depth in variants:
+        train_hlo, eval_hlo = lower_variant(width, depth)
+        tpath = os.path.join(args.out, f"gan_train_w{width}_d{depth}.hlo.txt")
+        epath = os.path.join(args.out, f"gan_eval_w{width}_d{depth}.hlo.txt")
+        with open(tpath, "w") as f:
+            f.write(train_hlo)
+        with open(epath, "w") as f:
+            f.write(eval_hlo)
+        print(f"variant {width}x{depth}: {len(train_hlo)} + {len(eval_hlo)} chars")
+
+    manifest = build_manifest(variants)
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest with {len(variants)} variants to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

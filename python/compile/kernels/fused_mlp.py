@@ -1,0 +1,162 @@
+"""Pallas kernels for the GAN hot path.
+
+The compute hot-spot of the paper's §4 workload (GAN training for the
+LHCb Lamarr parameterizations) is the dense layer: every forward and
+backward pass of both generator and discriminator is dominated by
+`leaky_relu(x @ W + b)` and its gradient matmuls.
+
+Two kernels:
+
+* :func:`fused_dense` — ``y = leaky_relu(x @ W + b)`` in a single tiled
+  kernel: (bm, bk) x (bk, bn) partial products accumulate into the
+  VMEM-resident output tile across the K grid dimension, and the bias +
+  LeakyReLU epilogue runs on the last K step while the tile is still
+  resident. This is the TPU re-think of the GPU fused GEMM+epilogue
+  (DESIGN.md §Hardware-Adaptation): BlockSpec expresses the HBM<->VMEM
+  schedule that a CUDA kernel would express with threadblock tiling, and
+  the MXU gets ``jnp.dot(..., preferred_element_type=f32)`` on
+  128-aligned tiles.
+
+* :func:`matmul` — the same tiling without the epilogue, used by the
+  custom VJP for the gradient matmuls (dx = dz @ W^T, dW = x^T @ dz).
+
+Both run with ``interpret=True`` everywhere in this repo: the CPU PJRT
+plugin cannot execute Mosaic custom-calls, so interpret mode is the
+correctness (and AOT) path, while the BlockSpec structure documents the
+TPU schedule. The autodiff rule is supplied via ``jax.custom_vjp``
+(pallas_call has no automatic transpose); the LeakyReLU mask is cheap
+elementwise work left to XLA.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-native tile edge. Dims smaller than a tile are handled by clamping
+# the block to the full dim (small-variant networks).
+TILE = 128
+
+
+def _block(dim, tile=TILE):
+    """Largest power-of-two-ish block <= tile that divides `dim` exactly
+    (network dims here are powers of two or small feature counts)."""
+    if dim <= tile:
+        return dim
+    b = tile
+    while dim % b != 0:
+        b //= 2
+    return max(b, 1)
+
+
+def _fused_dense_kernel(x_ref, w_ref, b_ref, leak_ref, o_ref, *, nk):
+    """Grid point (i, j, k): accumulate x[i,k] @ w[k,j] into the resident
+    output tile; on the final k, add bias and apply LeakyReLU in place."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+    @pl.when(k == nk - 1)
+    def _epilogue():
+        z = o_ref[...] + b_ref[...].astype(o_ref.dtype)
+        leak = leak_ref[0, 0].astype(o_ref.dtype)
+        o_ref[...] = jnp.where(z >= 0, z, leak * z)
+
+
+def _fused_dense_impl(x, w, b, leak):
+    m, kdim = x.shape
+    _, n = w.shape
+    bm, bn, bk = _block(m), _block(n), _block(kdim)
+    nk = kdim // bk
+    grid = (m // bm, n // bn, nk)
+    leak_arr = jnp.reshape(jnp.asarray(leak, jnp.float32), (1, 1))
+    return pl.pallas_call(
+        functools.partial(_fused_dense_kernel, nk=nk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, jnp.reshape(b, (1, -1)), leak_arr)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def matmul(a, b):
+    """Tiled Pallas matmul (interpret mode). Dimensions must be divisible
+    by their chosen block — true for every shape the GAN variants use."""
+    m, kdim = a.shape
+    _, n = b.shape
+    bm, bn, bk = _block(m), _block(n), _block(kdim)
+    grid = (m // bm, n // bn, kdim // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)
+
+
+@jax.custom_vjp
+def fused_dense(x, w, b, leak):
+    """``leaky_relu(x @ w + b)`` as one fused Pallas kernel.
+
+    Args:
+      x: ``(batch, in_features)``.
+      w: ``(in_features, out_features)``.
+      b: ``(out_features,)``.
+      leak: scalar negative slope (a *traced* value — it is a runtime
+        hyperparameter suggested by HOPAAS). ``leak = 1.0`` yields a
+        plain affine layer, used for output layers.
+    """
+    return _fused_dense_impl(x, w, b, leak)
+
+
+def _fused_dense_fwd(x, w, b, leak):
+    y = _fused_dense_impl(x, w, b, leak)
+    # sign(y) == sign(z) because leak > 0, so y itself carries the mask —
+    # the pre-activation does not need to be materialized.
+    return y, (x, w, leak, y)
+
+
+def _fused_dense_bwd(res, dy):
+    x, w, leak, y = res
+    leak = jnp.asarray(leak, dy.dtype)
+    mask = jnp.where(y >= 0, jnp.asarray(1.0, dy.dtype), leak)
+    dz = dy * mask
+    dx = matmul(dz, w.T)
+    dw = matmul(x.T, dz)
+    db = jnp.sum(dz, axis=0)
+    # d/d(leak): contributions from the negative side, where z = y / leak.
+    dleak = jnp.sum(jnp.where(y < 0, dy * y / leak, 0.0)).astype(jnp.float32)
+    return dx, dw, db, dleak
+
+
+fused_dense.defvjp(_fused_dense_fwd, _fused_dense_bwd)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: every Pallas kernel must match
+its `ref_*` counterpart to float tolerance under pytest/hypothesis sweeps
+(python/tests/test_kernel.py). They are also used by the model tests as
+a slow-but-simple reference implementation of the GAN layers.
+"""
+
+import jax.numpy as jnp
+
+
+def ref_leaky_relu(z, leak):
+    """LeakyReLU with slope `leak` for negative inputs."""
+    return jnp.where(z >= 0, z, leak * z)
+
+
+def ref_fused_dense(x, w, b, leak):
+    """Reference for the fused dense block: leaky_relu(x @ w + b).
+
+    `leak == 1.0` degenerates to a plain affine layer (used for output
+    layers), matching the kernel's behaviour.
+    """
+    return ref_leaky_relu(x @ w + b[None, :], leak)
+
+
+def ref_matmul(a, b):
+    """Reference for the tiled matmul kernel."""
+    return a @ b

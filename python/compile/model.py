@@ -1,0 +1,265 @@
+"""Layer-2: the Lamarr-like conditional GAN, written in JAX on top of the
+Pallas `fused_dense` kernel.
+
+This is the workload of the paper's §4 campaign: a generative model of
+high-level "detector response" features conditioned on kinematics, whose
+hyperparameters HOPAAS optimizes. Everything is designed for AOT
+execution from Rust:
+
+* **All state is explicit.** The train step takes the flat list of
+  parameter/optimizer arrays and returns the updated list in the same
+  order, so the Rust runtime round-trips outputs to inputs without
+  understanding the model.
+* **Runtime hyperparameters are scalar inputs** (`lr_g`, `lr_d`,
+  `beta1`, `beta2`, `leak`) so a single compiled artifact serves every
+  continuous hyperparameter assignment.
+* **Architecture hyperparameters are compile-time variants**: one
+  artifact per (width, depth) — see `VARIANTS` and aot.py.
+* **Randomness comes from outside**: latent noise and data batches are
+  inputs produced by the Rust coordinator's RNG.
+
+The adversarial objective is least-squares GAN (Mao et al. 2017) — the
+stablest choice at this scale, with the same sensitivity to
+hyperparameters that motivates the paper's campaigns.
+
+Layout of the flat state list (see `state_spec`):
+    [gen w0, gen b0, ..., disc w0, disc b0, ...,
+     adam m (same order), adam v (same order), t]
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_mlp import fused_dense
+
+# ---------------------------------------------------------------------------
+# Problem dimensions (fixed across variants; see DESIGN.md)
+# ---------------------------------------------------------------------------
+
+COND_DIM = 3      # kinematic conditions: (p, eta, nTracks) normalized
+FEAT_DIM = 4      # generated detector-response features (PID-like)
+LATENT_DIM = 8    # generator latent noise
+BATCH = 256       # training batch
+EVAL_BATCH = 512  # evaluation batch (Wasserstein estimate)
+
+# Architecture variants compiled to separate artifacts: (width, depth).
+VARIANTS = [(w, d) for w in (32, 64, 128) for d in (2, 3)]
+
+ADAM_EPS = 1e-8
+
+
+def layer_dims(width, depth):
+    """Per-network layer dimension chains for a variant."""
+    gen = [COND_DIM + LATENT_DIM] + [width] * depth + [FEAT_DIM]
+    disc = [COND_DIM + FEAT_DIM] + [width] * depth + [1]
+    return gen, disc
+
+
+def param_shapes(width, depth):
+    """Shapes of the trainable arrays, in flat-state order."""
+    gen, disc = layer_dims(width, depth)
+    shapes = []
+    for dims in (gen, disc):
+        for i in range(len(dims) - 1):
+            shapes.append((dims[i], dims[i + 1]))  # w
+            shapes.append((dims[i + 1],))          # b
+    return shapes
+
+
+def state_spec(width, depth):
+    """Shapes of the *full* train-state list: params, adam m, adam v, t."""
+    p = param_shapes(width, depth)
+    return p + p + p + [()]
+
+
+def n_gen_arrays(width, depth):
+    """How many leading arrays of the param block belong to the generator."""
+    gen, _ = layer_dims(width, depth)
+    return 2 * (len(gen) - 1)
+
+
+# ---------------------------------------------------------------------------
+# Networks
+# ---------------------------------------------------------------------------
+
+
+def _mlp(params, x, leak):
+    """Run an MLP given [(w, b), ...]; hidden layers use the fused Pallas
+    block with the suggested LeakyReLU slope, the output layer is affine
+    (leak = 1)."""
+    n = len(params)
+    for i, (w, b) in enumerate(params):
+        slope = jnp.float32(1.0) if i == n - 1 else leak
+        x = fused_dense(x, w, b, slope)
+    return x
+
+
+def _pair(flat):
+    """Group a flat [w0, b0, w1, b1, ...] list into [(w, b), ...]."""
+    return [(flat[i], flat[i + 1]) for i in range(0, len(flat), 2)]
+
+
+def generator(gen_flat, cond, noise, leak):
+    """Generate FEAT_DIM response features for each condition row."""
+    x = jnp.concatenate([cond, noise], axis=1)
+    return _mlp(_pair(gen_flat), x, leak)
+
+
+def discriminator(disc_flat, cond, feats, leak):
+    """Score (cond, features) pairs; LSGAN targets 1 = real, 0 = fake."""
+    x = jnp.concatenate([cond, feats], axis=1)
+    return _mlp(_pair(disc_flat), x, leak)[:, 0]
+
+
+# ---------------------------------------------------------------------------
+# Training step (one D update + one G update, inlined Adam)
+# ---------------------------------------------------------------------------
+
+
+def _adam(params, grads, m, v, t, lr, beta1, beta2):
+    new_m = [beta1 * mi + (1 - beta1) * g for mi, g in zip(m, grads)]
+    new_v = [beta2 * vi + (1 - beta2) * g * g for vi, g in zip(v, grads)]
+    mhat = [mi / (1 - beta1**t) for mi in new_m]
+    vhat = [vi / (1 - beta2**t) for vi in new_v]
+    new_p = [
+        p - lr * mh / (jnp.sqrt(vh) + ADAM_EPS)
+        for p, mh, vh in zip(params, mhat, vhat)
+    ]
+    return new_p, new_m, new_v
+
+
+def train_step(width, depth, state, cond, real, noise, lr_g, lr_d, beta1, beta2, leak):
+    """One adversarial step. `state` is the flat list per `state_spec`.
+
+    Returns `(new_state, loss_d, loss_g)`.
+    """
+    n_params = len(param_shapes(width, depth))
+    ng = n_gen_arrays(width, depth)
+    params = list(state[:n_params])
+    m = list(state[n_params : 2 * n_params])
+    v = list(state[2 * n_params : 3 * n_params])
+    t = state[3 * n_params] + 1.0
+
+    gen_flat, disc_flat = params[:ng], params[ng:]
+    gen_m, disc_m = m[:ng], m[ng:]
+    gen_v, disc_v = v[:ng], v[ng:]
+
+    # --- discriminator update (LSGAN) ---------------------------------
+    fake = jax.lax.stop_gradient(generator(gen_flat, cond, noise, leak))
+
+    def d_loss_fn(disc_flat):
+        d_real = discriminator(disc_flat, cond, real, leak)
+        d_fake = discriminator(disc_flat, cond, fake, leak)
+        return 0.5 * jnp.mean((d_real - 1.0) ** 2) + 0.5 * jnp.mean(d_fake**2)
+
+    loss_d, d_grads = jax.value_and_grad(d_loss_fn)(disc_flat)
+    disc_flat, disc_m, disc_v = _adam(disc_flat, d_grads, disc_m, disc_v, t, lr_d, beta1, beta2)
+
+    # --- generator update against the updated discriminator -----------
+    def g_loss_fn(gen_flat):
+        fake = generator(gen_flat, cond, noise, leak)
+        d_fake = discriminator(disc_flat, cond, fake, leak)
+        return 0.5 * jnp.mean((d_fake - 1.0) ** 2)
+
+    loss_g, g_grads = jax.value_and_grad(g_loss_fn)(gen_flat)
+    gen_flat, gen_m, gen_v = _adam(gen_flat, g_grads, gen_m, gen_v, t, lr_g, beta1, beta2)
+
+    new_state = (
+        gen_flat + disc_flat + gen_m + disc_m + gen_v + disc_v + [t]
+    )
+    return new_state, loss_d, loss_g
+
+
+def train_step_flat(width, depth):
+    """The AOT entry point: a function of positional arrays only, returning
+    one flat tuple `(state'..., loss_d, loss_g)`."""
+    n_state = len(state_spec(width, depth))
+
+    def fn(*args):
+        state = list(args[:n_state])
+        cond, real, noise, lr_g, lr_d, beta1, beta2, leak = args[n_state:]
+        new_state, loss_d, loss_g = train_step(
+            width, depth, state, cond, real, noise, lr_g, lr_d, beta1, beta2, leak
+        )
+        return tuple(new_state) + (loss_d, loss_g)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Evaluation: the objective HOPAAS minimizes
+# ---------------------------------------------------------------------------
+
+
+def wasserstein1_per_feature(gen_feats, real_feats):
+    """Mean over features of the 1-D Wasserstein-1 distance between the
+    generated and reference marginals (equal sample counts → mean abs
+    difference of order statistics). Binning-free and robust — the same
+    family of two-sample distances used to score the LHCb GAN
+    parameterizations."""
+    gen_sorted = jnp.sort(gen_feats, axis=0)
+    real_sorted = jnp.sort(real_feats, axis=0)
+    return jnp.mean(jnp.abs(gen_sorted - real_sorted))
+
+
+def eval_step(width, depth, gen_flat, cond, real, noise, leak):
+    """Objective for a hyperparameter assignment: W1 distance between a
+    generated batch and a reference batch under the same conditions."""
+    del width, depth
+    fake = generator(list(gen_flat), cond, noise, leak)
+    return wasserstein1_per_feature(fake, real)
+
+
+def eval_step_flat(width, depth):
+    """AOT entry point for evaluation: positional args, 1-tuple output."""
+    ng = n_gen_arrays(width, depth)
+
+    def fn(*args):
+        gen_flat = list(args[:ng])
+        cond, real, noise, leak = args[ng:]
+        return (eval_step(width, depth, gen_flat, cond, real, noise, leak),)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Initialization + synthetic data (python-side tests; the Rust runtime
+# re-implements both from the manifest)
+# ---------------------------------------------------------------------------
+
+
+def init_state(key, width, depth):
+    """He-initialized params + zero Adam state, as the flat list."""
+    shapes = param_shapes(width, depth)
+    arrays = []
+    for shape in shapes:
+        key, sub = jax.random.split(key)
+        if len(shape) == 2:
+            std = (2.0 / shape[0]) ** 0.5
+            arrays.append(std * jax.random.normal(sub, shape, jnp.float32))
+        else:
+            arrays.append(jnp.zeros(shape, jnp.float32))
+    zeros = [jnp.zeros(s, jnp.float32) for s in shapes]
+    return arrays + zeros + [z for z in zeros] + [jnp.float32(0.0)]
+
+
+def synthetic_batch(key, batch):
+    """The synthetic 'detector response' ground truth (see DESIGN.md §3):
+    conditional, correlated, heteroscedastic — a miniature of the
+    distributions Lamarr parameterizes. The Rust data generator
+    (`gan/data.rs`) implements the same formulas."""
+    k1, k2 = jax.random.split(key)
+    cond = jax.random.uniform(k1, (batch, COND_DIM), jnp.float32)
+    p, eta, ntr = cond[:, 0], cond[:, 1], cond[:, 2]
+    eps = jax.random.normal(k2, (batch, FEAT_DIM), jnp.float32)
+    s = 0.1 + 0.2 * ntr
+    mu0 = 2.0 * p - 1.0 + 0.5 * jnp.sin(3.0 * eta)
+    mu1 = p * eta
+    mu2 = 0.5 * jnp.cos(3.0 * p) + 0.3 * ntr
+    mu3 = 0.5 * mu0 + mu1
+    y0 = mu0 + s * eps[:, 0]
+    y1 = mu1 + s * eps[:, 1]
+    y2 = mu2 + s * eps[:, 2]
+    y3 = mu3 + s * eps[:, 3] + 0.3 * s * eps[:, 0]
+    real = jnp.stack([y0, y1, y2, y3], axis=1)
+    return cond, real

@@ -1,0 +1,166 @@
+"""L2 correctness: GAN model shapes, Adam math, training smoke, and the
+Wasserstein objective vs a numpy reference."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+
+jax.config.update("jax_platform_name", "cpu")
+
+KEY = jax.random.PRNGKey(7)
+
+
+def hp(lr_g=1e-3, lr_d=2e-3, beta1=0.5, beta2=0.9, leak=0.1):
+    return tuple(jnp.float32(x) for x in (lr_g, lr_d, beta1, beta2, leak))
+
+
+def batch(key, n=model.BATCH):
+    cond, real = model.synthetic_batch(key, n)
+    noise = jax.random.normal(jax.random.fold_in(key, 1), (n, model.LATENT_DIM))
+    return cond, real, noise
+
+
+class TestShapes:
+    @settings(max_examples=6, deadline=None)
+    @given(variant=st.sampled_from(model.VARIANTS))
+    def test_state_spec_consistent(self, variant):
+        w, d = variant
+        spec = model.state_spec(w, d)
+        state = model.init_state(KEY, w, d)
+        assert len(state) == len(spec)
+        for arr, shape in zip(state, spec):
+            assert tuple(arr.shape) == tuple(shape)
+
+    def test_generator_output_shape(self):
+        w, d = 32, 2
+        state = model.init_state(KEY, w, d)
+        ng = model.n_gen_arrays(w, d)
+        cond, _, noise = batch(KEY)
+        out = model.generator(state[:ng], cond, noise, jnp.float32(0.1))
+        assert out.shape == (model.BATCH, model.FEAT_DIM)
+
+    def test_discriminator_output_shape(self):
+        w, d = 32, 2
+        state = model.init_state(KEY, w, d)
+        n_params = len(model.param_shapes(w, d))
+        ng = model.n_gen_arrays(w, d)
+        cond, real, _ = batch(KEY)
+        out = model.discriminator(state[ng:n_params], cond, real, jnp.float32(0.1))
+        assert out.shape == (model.BATCH,)
+
+    def test_train_step_preserves_layout(self):
+        w, d = 32, 2
+        state = model.init_state(KEY, w, d)
+        cond, real, noise = batch(KEY)
+        new_state, loss_d, loss_g = model.train_step(
+            w, d, state, cond, real, noise, *hp()
+        )
+        assert len(new_state) == len(state)
+        for a, b in zip(new_state, state):
+            assert a.shape == b.shape
+        assert float(new_state[-1]) == 1.0  # t incremented
+        assert np.isfinite(float(loss_d)) and np.isfinite(float(loss_g))
+
+
+class TestTraining:
+    def test_losses_move_toward_equilibrium(self):
+        # 60 steps of LSGAN on the synthetic target: D loss should drop
+        # from its untrained value and stay finite; the eval metric should
+        # improve vs the untrained generator.
+        w, d = 32, 2
+        state = model.init_state(KEY, w, d)
+        ng = model.n_gen_arrays(w, d)
+        step = jax.jit(
+            lambda state, cond, real, noise: model.train_step(
+                w, d, state, cond, real, noise, *hp()
+            )
+        )
+        key = KEY
+        cond_e, real_e, noise_e = batch(jax.random.PRNGKey(999), model.EVAL_BATCH)
+        w1_before = float(
+            model.eval_step(w, d, state[:ng], cond_e, real_e, noise_e, jnp.float32(0.1))
+        )
+        losses = []
+        for i in range(60):
+            key = jax.random.fold_in(key, i)
+            cond, real, noise = batch(key)
+            state, loss_d, loss_g = step(state, cond, real, noise)
+            losses.append((float(loss_d), float(loss_g)))
+        assert all(np.isfinite(l) for pair in losses for l in pair)
+        w1_after = float(
+            model.eval_step(w, d, state[:ng], cond_e, real_e, noise_e, jnp.float32(0.1))
+        )
+        assert w1_after < w1_before, f"{w1_after} !< {w1_before}"
+
+    def test_determinism(self):
+        w, d = 32, 2
+        cond, real, noise = batch(KEY)
+        s1 = model.init_state(KEY, w, d)
+        s2 = model.init_state(KEY, w, d)
+        n1, ld1, lg1 = model.train_step(w, d, s1, cond, real, noise, *hp())
+        n2, ld2, lg2 = model.train_step(w, d, s2, cond, real, noise, *hp())
+        assert float(ld1) == float(ld2) and float(lg1) == float(lg2)
+        for a, b in zip(n1, n2):
+            np.testing.assert_array_equal(a, b)
+
+    def test_lr_zero_freezes_params(self):
+        w, d = 32, 2
+        state = model.init_state(KEY, w, d)
+        cond, real, noise = batch(KEY)
+        new_state, _, _ = model.train_step(
+            w, d, state, cond, real, noise,
+            jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.5),
+            jnp.float32(0.9), jnp.float32(0.1),
+        )
+        n_params = len(model.param_shapes(w, d))
+        for a, b in zip(new_state[:n_params], state[:n_params]):
+            np.testing.assert_allclose(a, b, atol=1e-7)
+
+
+class TestObjective:
+    def test_wasserstein_matches_numpy(self):
+        rng = np.random.default_rng(0)
+        a = rng.normal(size=(512, 4)).astype(np.float32)
+        b = rng.normal(loc=0.5, size=(512, 4)).astype(np.float32)
+        got = float(model.wasserstein1_per_feature(jnp.array(a), jnp.array(b)))
+        want = np.mean(np.abs(np.sort(a, axis=0) - np.sort(b, axis=0)))
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_wasserstein_zero_on_identical(self):
+        a = jnp.arange(64.0).reshape(16, 4)
+        assert float(model.wasserstein1_per_feature(a, a)) == 0.0
+
+    @settings(max_examples=10, deadline=None)
+    @given(shift=st.floats(0.1, 2.0))
+    def test_wasserstein_detects_shift(self, shift):
+        rng = np.random.default_rng(1)
+        a = jnp.array(rng.normal(size=(256, 4)), jnp.float32)
+        b = a + jnp.float32(shift)
+        got = float(model.wasserstein1_per_feature(a, b))
+        np.testing.assert_allclose(got, shift, rtol=0.05)
+
+
+class TestSyntheticData:
+    def test_conditions_in_unit_cube(self):
+        cond, real = model.synthetic_batch(KEY, 1024)
+        assert cond.shape == (1024, model.COND_DIM)
+        assert real.shape == (1024, model.FEAT_DIM)
+        assert bool(jnp.all((cond >= 0) & (cond <= 1)))
+        assert bool(jnp.all(jnp.isfinite(real)))
+
+    def test_response_is_condition_dependent(self):
+        # Split on p: the mean of feature 0 must differ strongly (mu0 ~ 2p-1).
+        cond, real = model.synthetic_batch(KEY, 4096)
+        low = real[cond[:, 0] < 0.3, 0]
+        high = real[cond[:, 0] > 0.7, 0]
+        assert float(jnp.mean(high) - jnp.mean(low)) > 0.5
+
+    def test_feature_correlation(self):
+        # y3 is built from mu0/mu1 + shared noise: corr(y0, y3) > 0.3.
+        _, real = model.synthetic_batch(KEY, 8192)
+        r = np.corrcoef(np.asarray(real[:, 0]), np.asarray(real[:, 3]))[0, 1]
+        assert r > 0.3, f"corr={r}"

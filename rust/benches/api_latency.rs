@@ -1,0 +1,193 @@
+//! T1 — per-API latency and throughput of the Table 1 surface.
+//!
+//! Regenerates the operational content of the paper's Table 1: each API
+//! measured over real HTTP against a warm server at several client
+//! concurrencies, with a 500-trial TPE history behind `ask` (the regime
+//! of a §4 campaign in progress).
+//!
+//! Run: `cargo bench --bench api_latency`
+
+use hopaas::bench::{fmt_duration, Samples};
+use hopaas::coordinator::service::{HopaasConfig, HopaasServer};
+use hopaas::http::Client;
+use hopaas::json::{parse, Value};
+use std::sync::{Arc, Mutex};
+
+fn ask_body() -> Value {
+    parse(
+        r#"{
+        "study_name": "bench",
+        "properties": {
+            "lr": {"low": 1e-5, "high": 1e-1, "type": "loguniform"},
+            "x": {"low": 0.0, "high": 1.0},
+            "opt": ["adam", "rmsprop"]
+        },
+        "sampler": {"name": "tpe"},
+        "pruner": {"name": "median"}
+    }"#,
+    )
+    .unwrap()
+}
+
+fn row(api: &str, conc: usize, s: &Samples, wall: f64) {
+    println!(
+        "{:<14} {:>5} {:>10} {:>10} {:>10} {:>12.0}",
+        api,
+        conc,
+        fmt_duration(s.quantile(0.5)),
+        fmt_duration(s.quantile(0.95)),
+        fmt_duration(s.quantile(0.99)),
+        s.len() as f64 / wall
+    );
+}
+
+/// Run `per_thread` iterations on `conc` threads (own client + scratch).
+fn run<F>(addr: std::net::SocketAddr, conc: usize, per_thread: usize, f: F) -> (Samples, f64)
+where
+    F: Fn(&mut Client, &mut Vec<u64>) + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..conc)
+        .map(|_| {
+            let f = f.clone();
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                // Generous socket timeout: under heavy oversubscription on
+                // small hosts the tail can exceed the 30s default.
+                c.set_timeout(std::time::Duration::from_secs(300));
+                let mut scratch: Vec<u64> = Vec::new();
+                let mut s = Samples::new();
+                for _ in 0..per_thread {
+                    s.time(|| f(&mut c, &mut scratch));
+                }
+                s
+            })
+        })
+        .collect();
+    let mut all = Samples::new();
+    for h in handles {
+        all.merge(&h.join().unwrap());
+    }
+    (all, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let server = HopaasServer::start(
+        "127.0.0.1:0",
+        HopaasConfig { auth_required: true, ..Default::default() },
+    )
+    .unwrap();
+    let tok = Arc::new(server.bootstrap_token.clone());
+    let addr = server.addr();
+
+    // Seed 500 completed trials.
+    {
+        let mut c = Client::connect(addr).unwrap();
+        for i in 0..500 {
+            let ask = c
+                .post_json(&format!("/api/ask/{tok}"), &ask_body())
+                .unwrap()
+                .json_body()
+                .unwrap();
+            let id = ask.get("trial_id").as_u64().unwrap();
+            let mut rep = Value::obj();
+            rep.set("trial_id", id).set("step", 1u64).set("value", (i % 17) as f64);
+            c.post_json(&format!("/api/should_prune/{tok}"), &Value::Obj(rep)).unwrap();
+            let mut tell = Value::obj();
+            tell.set("trial_id", id).set("value", (i % 17) as f64);
+            c.post_json(&format!("/api/tell/{tok}"), &Value::Obj(tell)).unwrap();
+        }
+    }
+
+    println!("\nT1: API latency/throughput (warm server, 500-trial TPE history)\n");
+    println!(
+        "{:<14} {:>5} {:>10} {:>10} {:>10} {:>12}",
+        "api", "conc", "p50", "p95", "p99", "req/s"
+    );
+    println!("{}", "-".repeat(66));
+
+    for conc in [1usize, 8, 32, 64] {
+        // version: GET probe.
+        let (s, w) = run(addr, conc, 400, |c, _| {
+            assert_eq!(c.get("/api/version").unwrap().status, 200);
+        });
+        row("version", conc, &s, w);
+
+        // ask: study join + TPE suggest.
+        let (s, w) = run(addr, conc, 120, {
+            let tok = tok.clone();
+            move |c, _| {
+                let r = c.post_json(&format!("/api/ask/{tok}"), &ask_body()).unwrap();
+                assert_eq!(r.status, 200);
+            }
+        });
+        row("ask", conc, &s, w);
+
+        // should_prune: one running trial per thread, increasing steps.
+        let (s, w) = run(addr, conc, 120, {
+            let tok = tok.clone();
+            move |c, state| {
+                if state.is_empty() {
+                    // One untimed ask per thread to get a trial id; the
+                    // timed region is the prune call only (first call
+                    // includes this setup — amortized over 120 iters).
+                    let ask = c
+                        .post_json(&format!("/api/ask/{tok}"), &ask_body())
+                        .unwrap()
+                        .json_body()
+                        .unwrap();
+                    state.push(ask.get("trial_id").as_u64().unwrap());
+                    state.push(0); // step counter
+                }
+                state[1] += 1;
+                let mut rep = Value::obj();
+                rep.set("trial_id", state[0]).set("step", state[1]).set("value", 1.0);
+                let r = c
+                    .post_json(&format!("/api/should_prune/{tok}"), &Value::Obj(rep))
+                    .unwrap();
+                assert_eq!(r.status, 200);
+            }
+        });
+        row("should_prune", conc, &s, w);
+
+        // tell: pre-created trials, timed region is the tell only.
+        let ids: Vec<u64> = {
+            let mut c = Client::connect(addr).unwrap();
+            (0..conc * 120)
+                .map(|_| {
+                    c.post_json(&format!("/api/ask/{tok}"), &ask_body())
+                        .unwrap()
+                        .json_body()
+                        .unwrap()
+                        .get("trial_id")
+                        .as_u64()
+                        .unwrap()
+                })
+                .collect()
+        };
+        let ids = Arc::new(Mutex::new(ids));
+        let (s, w) = run(addr, conc, 120, {
+            let tok = tok.clone();
+            let ids = ids.clone();
+            move |c, _| {
+                let id = ids.lock().unwrap().pop().unwrap();
+                let mut tell = Value::obj();
+                tell.set("trial_id", id).set("value", 2.0);
+                let r = c.post_json(&format!("/api/tell/{tok}"), &Value::Obj(tell)).unwrap();
+                assert_eq!(r.status, 200);
+            }
+        });
+        row("tell", conc, &s, w);
+        println!();
+    }
+
+    // Auth-rejection fast path (the 401 the paper's token scheme must
+    // serve cheaply under junk traffic).
+    let (s, w) = run(addr, 8, 300, |c, _| {
+        assert_eq!(c.post_json("/api/ask/garbage", &ask_body()).unwrap().status, 401);
+    });
+    row("ask(401)", 8, &s, w);
+
+    server.stop();
+}

@@ -1,0 +1,101 @@
+//! E3 — the §4 campaign claims: "dozens of optimization studies with
+//! hundreds of trials on each study from more than twenty concurrent and
+//! diverse computing nodes".
+//!
+//! 24 studies × 100+ trials from 24 nodes across 4 site profiles run
+//! against one server; reports per-study completion, site attribution,
+//! aggregate throughput, and server API latency percentiles under the
+//! full campaign load.
+//!
+//! Run: `cargo bench --bench campaign`
+
+use hopaas::bench::fmt_duration;
+use hopaas::coordinator::service::{HopaasConfig, HopaasServer};
+use hopaas::objectives::{Objective, ALL};
+use hopaas::worker::Campaign;
+
+fn main() {
+    let server = HopaasServer::start(
+        "127.0.0.1:0",
+        HopaasConfig { auth_required: false, ..Default::default() },
+    )
+    .unwrap();
+    let addr = server.addr();
+
+    let n_studies = 24usize;
+    let trials_per_study = 100u64;
+    let nodes_per_study = 24usize;
+
+    println!(
+        "\nE3: {n_studies} studies × {trials_per_study} trials × {nodes_per_study} nodes (4 site profiles)\n"
+    );
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..n_studies)
+        .map(|i| {
+            let objective: Objective = ALL[i % ALL.len()];
+            std::thread::spawn(move || {
+                let mut c = Campaign::new(addr, "x".into(), objective);
+                c.study_name = format!("e3-{i}-{}", objective.name());
+                c.n_nodes = nodes_per_study;
+                c.max_trials = trials_per_study;
+                c.steps_per_trial = 10;
+                c.step_cost_us = 100;
+                c.seed = i as u64;
+                c.run().unwrap()
+            })
+        })
+        .collect();
+
+    let mut total = (0u64, 0u64, 0u64); // completed, pruned, preempted
+    let mut by_site: Vec<(String, u64)> = Vec::new();
+    for h in handles {
+        let r = h.join().unwrap();
+        total.0 += r.completed;
+        total.1 += r.pruned;
+        total.2 += r.preempted;
+        for (site, n) in r.by_site {
+            match by_site.iter_mut().find(|(s, _)| *s == site) {
+                Some((_, t)) => *t += n,
+                None => by_site.push((site, n)),
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let trials = total.0 + total.1 + total.2;
+
+    println!("studies:      {n_studies}");
+    println!("trials:       {trials} ({} completed, {} pruned, {} preempted)", total.0, total.1, total.2);
+    println!("wall:         {wall:.1}s  ->  {:.0} trials/s aggregate", trials as f64 / wall);
+    println!("\nper-site completions (diverse concurrent nodes):");
+    by_site.sort();
+    for (site, n) in &by_site {
+        println!("  {site:>16}: {n}");
+    }
+
+    // Server-side view + API latency under campaign load.
+    let studies = server.engine.studies_json();
+    println!("\nserver sees {} studies", studies.as_arr().unwrap().len());
+    let m = &server.engine.metrics;
+    println!(
+        "server API latency under load: ask p50/p95/p99 = {} / {} / {}",
+        fmt_duration(m.ask_latency.quantile(0.5)),
+        fmt_duration(m.ask_latency.quantile(0.95)),
+        fmt_duration(m.ask_latency.quantile(0.99)),
+    );
+    println!(
+        "                              tell p50/p99 = {} / {}",
+        fmt_duration(m.tell_latency.quantile(0.5)),
+        fmt_duration(m.tell_latency.quantile(0.99)),
+    );
+    println!(
+        "asks={} tells={} prunes(decided)={}",
+        m.ask_total.get(),
+        m.tell_total.get(),
+        m.prune_decisions.get()
+    );
+    assert!(
+        studies.as_arr().unwrap().len() == n_studies,
+        "every study definition mapped to exactly one study"
+    );
+    server.stop();
+}

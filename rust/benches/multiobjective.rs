@@ -1,0 +1,95 @@
+//! E9 — multi-objective optimization (the paper's §5 future work,
+//! implemented here): NSGA-II vs random on the ZDT suite, measured by
+//! dominated hypervolume of the Pareto front (higher = better), through
+//! the real engine.
+//!
+//! Run: `cargo bench --bench multiobjective`
+
+use hopaas::bench::mean_std;
+use hopaas::coordinator::engine::{Engine, EngineConfig};
+use hopaas::coordinator::mo::hypervolume;
+use hopaas::json::Value;
+use hopaas::objectives::multi::{MoProblem, ALL_MO};
+
+const TRIALS: usize = 200;
+const SEEDS: u64 = 5;
+
+fn ask_body(problem: MoProblem, sampler: &str, seed: u64) -> Value {
+    let mut o = Value::obj();
+    o.set("study_name", format!("{}-{sampler}-{seed}", problem.name()))
+        .set("properties", problem.properties())
+        .set(
+            "direction",
+            Value::Arr(vec![Value::Str("minimize".into()), Value::Str("minimize".into())]),
+        )
+        .set("sampler", {
+            let mut s = Value::obj();
+            s.set("name", sampler);
+            Value::Obj(s)
+        });
+    Value::Obj(o)
+}
+
+fn run(problem: MoProblem, sampler: &str, seed: u64) -> (f64, usize) {
+    let engine = Engine::in_memory(EngineConfig { seed: 500 + seed, ..Default::default() });
+    let body = ask_body(problem, sampler, seed);
+    let mut points: Vec<Vec<f64>> = Vec::new();
+    let mut study_id = 0;
+    for _ in 0..TRIALS {
+        let reply = engine.ask(&body).unwrap();
+        study_id = reply.study_id;
+        let [f1, f2] = problem.eval_params(&reply.params);
+        engine.tell_values(reply.trial_id, vec![f1, f2]).unwrap();
+        points.push(vec![f1, f2]);
+    }
+    let r = problem.hv_reference();
+    let hv = hypervolume(&points, &r, 0);
+    let front_size = engine
+        .pareto_json(study_id)
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .len();
+    (hv, front_size)
+}
+
+fn main() {
+    println!(
+        "\nE9: multi-objective (NSGA-II vs random), {TRIALS} trials, {SEEDS} seeds, hypervolume ↑\n"
+    );
+    println!(
+        "{:<8} {:<8} {:>16} {:>12}",
+        "problem", "sampler", "hypervolume", "front size"
+    );
+    println!("{}", "-".repeat(48));
+    for problem in ALL_MO {
+        let mut results: Vec<(String, f64)> = Vec::new();
+        for sampler in ["random", "nsga2"] {
+            let mut hvs = Vec::new();
+            let mut fronts = Vec::new();
+            for seed in 0..SEEDS {
+                let (hv, fs) = run(problem, sampler, seed);
+                hvs.push(hv);
+                fronts.push(fs as f64);
+            }
+            let (mhv, shv) = mean_std(&hvs);
+            let (mf, _) = mean_std(&fronts);
+            println!(
+                "{:<8} {:<8} {:>10.3}±{:<5.3} {:>12.1}",
+                problem.name(),
+                sampler,
+                mhv,
+                shv,
+                mf
+            );
+            results.push((sampler.to_string(), mhv));
+        }
+        let random = results.iter().find(|(s, _)| s == "random").unwrap().1;
+        let nsga2 = results.iter().find(|(s, _)| s == "nsga2").unwrap().1;
+        println!(
+            "  -> nsga2 {nsga2:.3} vs random {random:.3}  {}",
+            if nsga2 > random { "[OK: NSGA-II wins]" } else { "[!! random won]" }
+        );
+        println!();
+    }
+}

@@ -1,0 +1,164 @@
+//! E8 — scalability of the suggestion path and the HTTP layer.
+//!
+//! Two questions the paper's "scalable set of Uvicorn instances" design
+//! answers operationally:
+//!   1. how does the TPE/GP suggest cost grow with the study history
+//!      (the server re-fits the surrogate per ask)?
+//!   2. how does end-to-end ask throughput scale with server worker
+//!      threads?
+//!
+//! Run: `cargo bench --bench tpe_scaling`
+
+use hopaas::bench::{bench, fmt_duration};
+use hopaas::coordinator::samplers::{make_sampler, Obs};
+use hopaas::coordinator::space::{Direction, Space};
+use hopaas::coordinator::study::AlgoConfig;
+use hopaas::coordinator::service::{build_router, HopaasConfig, HopaasServer};
+use hopaas::http::{Client, Server, ServerConfig};
+use hopaas::json::parse;
+use hopaas::rng::Rng;
+use std::sync::Arc;
+
+fn space() -> Space {
+    Space::from_json(
+        &parse(
+            r#"{
+            "lr": {"low": 1e-5, "high": 1e-1, "type": "loguniform"},
+            "x": {"low": 0.0, "high": 1.0},
+            "y": {"low": 0.0, "high": 1.0},
+            "k": {"low": 1, "high": 16, "type": "int"},
+            "opt": ["adam", "rmsprop", "sgd"]
+        }"#,
+        )
+        .unwrap(),
+    )
+    .unwrap()
+}
+
+fn history(space: &Space, n: usize, rng: &mut Rng) -> Vec<Obs> {
+    (0..n)
+        .map(|i| Obs { params: space.sample(rng), value: (i % 31) as f64 })
+        .collect()
+}
+
+fn main() {
+    let space = space();
+    let mut rng = Rng::new(1);
+
+    println!("\nE8a: sampler suggest cost vs history size (5-dim space)\n");
+    println!(
+        "{:<8} {:>8} {:>12} {:>12}",
+        "sampler", "history", "mean", "p99"
+    );
+    println!("{}", "-".repeat(44));
+    for sampler_name in ["tpe", "gp", "cmaes", "random"] {
+        let sampler = make_sampler(&AlgoConfig::new(sampler_name)).unwrap();
+        for n in [100usize, 400, 800, 1600, 3200] {
+            if sampler_name == "gp" && n > 800 {
+                continue; // GP caps its conditioning set at 256 anyway
+            }
+            let obs = history(&space, n, &mut rng);
+            let mut r2 = Rng::new(9);
+            let s = bench(3, 30, || {
+                let _ = sampler.suggest(&space, &obs, Direction::Minimize, n as u64, &mut r2);
+            });
+            println!(
+                "{:<8} {:>8} {:>12} {:>12}",
+                sampler_name,
+                n,
+                fmt_duration(s.mean()),
+                fmt_duration(s.quantile(0.99))
+            );
+        }
+    }
+
+    // E8b: in-process router dispatch cost (no TCP) — isolates the HTTP
+    // parse/dispatch overhead from socket costs.
+    println!("\nE8b: in-process dispatch (no TCP) vs full HTTP round-trip\n");
+    {
+        let engine = Arc::new(hopaas::coordinator::engine::Engine::in_memory(
+            Default::default(),
+        ));
+        let tokens = Arc::new(hopaas::coordinator::auth::TokenService::new(b"s"));
+        let router = build_router(engine, tokens, false);
+        let req = hopaas::http::Request {
+            method: hopaas::http::Method::Get,
+            path: "/api/version".into(),
+            query: String::new(),
+            headers: hopaas::http::Headers::new(),
+            body: Vec::new(),
+        };
+        let s = bench(100, 5000, || {
+            let resp = router.dispatch(&req);
+            assert_eq!(resp.status, 200);
+        });
+        println!("router dispatch (version): mean {}", fmt_duration(s.mean()));
+    }
+    {
+        let server = HopaasServer::start(
+            "127.0.0.1:0",
+            HopaasConfig { auth_required: false, ..Default::default() },
+        )
+        .unwrap();
+        let mut c = Client::connect(server.addr()).unwrap();
+        let s = bench(50, 2000, || {
+            assert_eq!(c.get("/api/version").unwrap().status, 200);
+        });
+        println!("full HTTP round-trip:      mean {}", fmt_duration(s.mean()));
+        server.stop();
+    }
+
+    // E8c: ask throughput vs server worker threads.
+    println!("\nE8c: ask throughput vs server worker threads (16 clients)\n");
+    println!("{:<10} {:>12} {:>12}", "workers", "req/s", "p99");
+    println!("{}", "-".repeat(36));
+    for workers in [1usize, 2, 4, 8, 16] {
+        let server = HopaasServer::start(
+            "127.0.0.1:0",
+            HopaasConfig {
+                auth_required: false,
+                http: ServerConfig { workers, ..Default::default() },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let addr = server.addr();
+        let body = parse(
+            r#"{"study_name": "t", "properties": {"x": {"low": 0.0, "high": 1.0}},
+             "sampler": {"name": "random"}}"#,
+        )
+        .unwrap();
+        let t0 = std::time::Instant::now();
+        let handles: Vec<_> = (0..16)
+            .map(|_| {
+                let body = body.clone();
+                std::thread::spawn(move || {
+                    let mut c = Client::connect(addr).unwrap();
+                    let mut s = hopaas::bench::Samples::new();
+                    for _ in 0..100 {
+                        s.time(|| {
+                            let r = c.post_json("/api/ask/x", &body).unwrap();
+                            assert_eq!(r.status, 200);
+                        });
+                    }
+                    s
+                })
+            })
+            .collect();
+        let mut all = hopaas::bench::Samples::new();
+        for h in handles {
+            all.merge(&h.join().unwrap());
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "{:<10} {:>12.0} {:>12}",
+            workers,
+            all.len() as f64 / wall,
+            fmt_duration(all.quantile(0.99))
+        );
+        server.stop();
+    }
+
+    // Keep Server linked (suppress unused warnings in minimal builds).
+    let _ = Server::bind("127.0.0.1:0", Default::default(), ServerConfig::default());
+}

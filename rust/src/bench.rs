@@ -1,0 +1,174 @@
+//! Benchmark harness utilities (criterion is unavailable offline — see
+//! DESIGN.md §3). Provides warmup + repeat timing with exact quantiles
+//! and aligned table output; every `rust/benches/*.rs` binary
+//! (`harness = false`) builds on this.
+
+use std::time::{Duration, Instant};
+
+/// Latency sample set with exact quantiles.
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    xs: Vec<f64>,
+}
+
+impl Samples {
+    pub fn new() -> Samples {
+        Samples::default()
+    }
+
+    pub fn push(&mut self, seconds: f64) {
+        self.xs.push(seconds);
+    }
+
+    /// Time one call and record it.
+    pub fn time<T>(&mut self, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.push(t0.elapsed().as_secs_f64());
+        out
+    }
+
+    pub fn merge(&mut self, other: &Samples) {
+        self.xs.extend_from_slice(&other.xs);
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        self.xs.iter().sum::<f64>() / self.xs.len() as f64
+    }
+
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.xs.is_empty() {
+            return 0.0;
+        }
+        let mut s = self.xs.clone();
+        s.sort_by(f64::total_cmp);
+        s[((s.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize]
+    }
+
+    pub fn total(&self) -> f64 {
+        self.xs.iter().sum()
+    }
+
+    /// "p50/p95/p99" formatted in adaptive units.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} / {} / {}",
+            fmt_duration(self.quantile(0.5)),
+            fmt_duration(self.quantile(0.95)),
+            fmt_duration(self.quantile(0.99)),
+        )
+    }
+}
+
+/// Human duration formatting with µs/ms/s autoscaling.
+pub fn fmt_duration(seconds: f64) -> String {
+    if seconds < 1e-3 {
+        format!("{:.1}µs", seconds * 1e6)
+    } else if seconds < 1.0 {
+        format!("{:.2}ms", seconds * 1e3)
+    } else {
+        format!("{:.2}s", seconds)
+    }
+}
+
+/// Run `f` for `warmup` unrecorded and `iters` recorded iterations.
+pub fn bench(warmup: usize, iters: usize, mut f: impl FnMut()) -> Samples {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut s = Samples::new();
+    for _ in 0..iters {
+        s.time(&mut f);
+    }
+    s
+}
+
+/// Mean ± std over a set of scalar outcomes (e.g. best-so-far values).
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let m = xs.iter().sum::<f64>() / xs.len() as f64;
+    let v = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64;
+    (m, v.sqrt())
+}
+
+/// Simple fixed-width table printer for bench output.
+pub struct Table {
+    widths: Vec<usize>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str], widths: &[usize]) -> Table {
+        let t = Table { widths: widths.to_vec() };
+        t.row(headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + widths.len()));
+        t
+    }
+
+    pub fn row(&self, cells: &[&str]) {
+        let line: Vec<String> = cells
+            .iter()
+            .zip(&self.widths)
+            .map(|(c, w)| format!("{c:>w$}", w = w))
+            .collect();
+        println!("{}", line.join(" "));
+    }
+}
+
+/// Wall-clock a closure.
+pub fn wall<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_exact() {
+        let mut s = Samples::new();
+        for i in 1..=100 {
+            s.push(i as f64);
+        }
+        assert_eq!(s.quantile(0.0), 1.0);
+        assert_eq!(s.quantile(1.0), 100.0);
+        assert!((s.quantile(0.5) - 50.0).abs() <= 1.0);
+        assert!((s.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_duration(5e-6).ends_with("µs"));
+        assert!(fmt_duration(5e-3).ends_with("ms"));
+        assert!(fmt_duration(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn bench_counts() {
+        let mut n = 0;
+        let s = bench(2, 10, || n += 1);
+        assert_eq!(n, 12);
+        assert_eq!(s.len(), 10);
+    }
+
+    #[test]
+    fn mean_std_basic() {
+        let (m, sd) = mean_std(&[1.0, 3.0]);
+        assert_eq!(m, 2.0);
+        assert_eq!(sd, 1.0);
+    }
+}

@@ -1,0 +1,226 @@
+//! Configuration files and CLI argument parsing.
+//!
+//! The paper's deployment is a docker-compose stack; the knobs that
+//! configuration exposes (bind address, worker count, storage path,
+//! secret, auth mode) live in a JSON config file and/or CLI flags here.
+//! A tiny flag parser is implemented locally (`clap` is unavailable
+//! offline), with `--key value` / `--key=value` / boolean flags.
+
+use crate::coordinator::engine::EngineConfig;
+use crate::coordinator::service::HopaasConfig;
+use crate::http::ServerConfig;
+use crate::json::Value;
+use std::time::Duration;
+
+/// Parsed command line: subcommand + flags.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: Vec<(String, String)>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse(args: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = args.into_iter().peekable();
+        if let Some(cmd) = it.peek() {
+            if !cmd.starts_with('-') {
+                out.command = it.next().unwrap();
+            }
+        }
+        // Flags that never take a value (`--flag value` would otherwise
+        // swallow a following positional).
+        const BOOLEAN: [&str; 4] = ["no-auth", "help", "verbose", "quiet"];
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.push((k.to_string(), v.to_string()));
+                } else if BOOLEAN.contains(&stripped) {
+                    out.flags.push((stripped.to_string(), "true".to_string()));
+                } else {
+                    // `--flag value` or trailing boolean `--flag`.
+                    match it.peek() {
+                        Some(v) if !v.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.push((stripped.to_string(), v));
+                        }
+                        _ => out.flags.push((stripped.to_string(), "true".to_string())),
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Server configuration assembled from (optional) JSON file + CLI
+/// overrides. File keys mirror the flag names.
+pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
+    // Defaults.
+    let mut addr = "127.0.0.1:8021".to_string();
+    let mut workers = 128u64;
+    let mut auth = true;
+    let mut secret = "hopaas-dev-secret".to_string();
+    let mut data_dir: Option<String> = None;
+    let mut compact_after = 50_000u64;
+    let mut reap_after = 3600.0f64;
+    let mut seed = 0x4f50_5441_4153u64;
+
+    // Layer 1: config file.
+    if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("config {path}: {e}"))?;
+        let v = crate::json::parse(&text).map_err(|e| format!("config {path}: {e}"))?;
+        let s = |key: &str, out: &mut String| {
+            if let Some(x) = v.get(key).as_str() {
+                *out = x.to_string();
+            }
+        };
+        s("addr", &mut addr);
+        s("secret", &mut secret);
+        if let Some(x) = v.get("workers").as_u64() {
+            workers = x;
+        }
+        if let Value::Bool(b) = v.get("auth") {
+            auth = *b;
+        }
+        if let Some(x) = v.get("data_dir").as_str() {
+            data_dir = Some(x.to_string());
+        }
+        if let Some(x) = v.get("compact_after").as_u64() {
+            compact_after = x;
+        }
+        if let Some(x) = v.get("reap_after").as_f64() {
+            reap_after = x;
+        }
+        if let Some(x) = v.get("seed").as_u64() {
+            seed = x;
+        }
+    }
+
+    // Layer 2: CLI overrides.
+    if let Some(a) = args.get("addr") {
+        addr = a.to_string();
+    }
+    workers = args.get_u64("workers", workers);
+    if args.get("no-auth").is_some() {
+        auth = false;
+    }
+    if let Some(s) = args.get("secret") {
+        secret = s.to_string();
+    }
+    if let Some(d) = args.get("data-dir") {
+        data_dir = Some(d.to_string());
+    }
+    compact_after = args.get_u64("compact-after", compact_after);
+    reap_after = args.get_f64("reap-after", reap_after);
+    seed = args.get_u64("seed", seed);
+
+    let config = HopaasConfig {
+        engine: EngineConfig {
+            seed,
+            compact_after,
+            reap_after: if reap_after > 0.0 { Some(reap_after) } else { None },
+            history_snapshot: args.get_u64("history-snapshot", 2048) as usize,
+        },
+        http: ServerConfig {
+            workers: workers as usize,
+            read_timeout: Duration::from_secs(args.get_u64("read-timeout", 30)),
+            backlog: 1024,
+        },
+        auth_required: auth,
+        secret: secret.into_bytes(),
+        data_dir: data_dir.map(Into::into),
+    };
+    Ok((addr, config))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::TempDir;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parse_forms() {
+        let a = args("serve --addr 0.0.0.0:9000 --workers=4 --no-auth pos1");
+        assert_eq!(a.command, "serve");
+        assert_eq!(a.get("addr"), Some("0.0.0.0:9000"));
+        assert_eq!(a.get_u64("workers", 0), 4);
+        assert!(a.get_bool("no-auth"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn last_flag_wins() {
+        let a = args("x --seed 1 --seed 2");
+        assert_eq!(a.get_u64("seed", 0), 2);
+    }
+
+    #[test]
+    fn defaults_without_file() {
+        let a = args("serve");
+        let (addr, cfg) = server_config(&a).unwrap();
+        assert_eq!(addr, "127.0.0.1:8021");
+        assert!(cfg.auth_required);
+        assert_eq!(cfg.http.workers, 128);
+        assert!(cfg.data_dir.is_none());
+    }
+
+    #[test]
+    fn file_and_cli_layering() {
+        let d = TempDir::new("config");
+        let p = d.path().join("hopaas.json");
+        std::fs::write(
+            &p,
+            r#"{"addr": "1.2.3.4:1", "workers": 2, "auth": false, "reap_after": 10.0}"#,
+        )
+        .unwrap();
+        let a = args(&format!("serve --config {} --workers 16", p.display()));
+        let (addr, cfg) = server_config(&a).unwrap();
+        assert_eq!(addr, "1.2.3.4:1");
+        assert_eq!(cfg.http.workers, 16, "CLI overrides file");
+        assert!(!cfg.auth_required);
+        assert_eq!(cfg.engine.reap_after, Some(10.0));
+    }
+
+    #[test]
+    fn bad_config_file_errors() {
+        let a = args("serve --config /nope/nope.json");
+        assert!(server_config(&a).is_err());
+    }
+}

@@ -1,0 +1,232 @@
+//! API-token authentication.
+//!
+//! The paper's service authenticates the Table 1 APIs with an API token
+//! carried in the request path (`/api/ask/{token}`); tokens are issued
+//! through the web UI after an OAuth2 login, each with "a validity period
+//! defined at generation" and revocable at any time (paper §3). The
+//! client-visible contract is exactly reproduced here with self-contained
+//! HMAC-SHA256 tokens:
+//!
+//! ```text
+//! token := hex(payload-json) "." hex(HMAC-SHA256(secret, payload-json))
+//! payload := {"uid": ..., "user": ..., "iat": ..., "exp": ...}
+//! ```
+//!
+//! Validation checks the signature, the expiry against the server clock,
+//! and a revocation list keyed by token id. No identity provider is
+//! needed on the validation path — matching how NGINX+FastAPI only ever
+//! see the bearer token, not the IAM handshake.
+
+use crate::json::Value;
+use hmac::{Hmac, Mac};
+use sha2::Sha256;
+use std::collections::HashSet;
+use std::sync::Mutex;
+
+type HmacSha256 = Hmac<Sha256>;
+
+/// Why a token was rejected.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum AuthError {
+    #[error("malformed token")]
+    Malformed,
+    #[error("bad signature")]
+    BadSignature,
+    #[error("token expired")]
+    Expired,
+    #[error("token revoked")]
+    Revoked,
+}
+
+/// A validated token's claims.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Claims {
+    pub uid: u64,
+    pub user: String,
+    pub issued_at: f64,
+    pub expires_at: f64,
+}
+
+/// Token issuer + validator.
+pub struct TokenService {
+    secret: Vec<u8>,
+    revoked: Mutex<HashSet<u64>>,
+    next_uid: Mutex<u64>,
+}
+
+fn hex_encode(b: &[u8]) -> String {
+    b.iter().map(|x| format!("{x:02x}")).collect()
+}
+
+fn hex_decode(s: &str) -> Option<Vec<u8>> {
+    if s.len() % 2 != 0 {
+        return None;
+    }
+    (0..s.len())
+        .step_by(2)
+        .map(|i| u8::from_str_radix(&s[i..i + 2], 16).ok())
+        .collect()
+}
+
+impl TokenService {
+    pub fn new(secret: &[u8]) -> TokenService {
+        TokenService {
+            secret: secret.to_vec(),
+            revoked: Mutex::new(HashSet::new()),
+            next_uid: Mutex::new(1),
+        }
+    }
+
+    fn sign(&self, payload: &[u8]) -> String {
+        let mut mac = HmacSha256::new_from_slice(&self.secret).expect("hmac key");
+        mac.update(payload);
+        hex_encode(&mac.finalize().into_bytes())
+    }
+
+    /// Issue a token for `user` valid for `ttl` seconds from `now`
+    /// (server-relative seconds, as everywhere in the coordinator).
+    pub fn issue(&self, user: &str, now: f64, ttl: f64) -> String {
+        let uid = {
+            let mut g = self.next_uid.lock().unwrap();
+            let u = *g;
+            *g += 1;
+            u
+        };
+        let mut o = Value::obj();
+        o.set("uid", uid)
+            .set("user", user)
+            .set("iat", now)
+            .set("exp", now + ttl.max(0.0));
+        let payload = Value::Obj(o).to_string().into_bytes();
+        format!("{}.{}", hex_encode(&payload), self.sign(&payload))
+    }
+
+    /// Validate a token string at time `now`.
+    pub fn validate(&self, token: &str, now: f64) -> Result<Claims, AuthError> {
+        let (payload_hex, sig_hex) = token.split_once('.').ok_or(AuthError::Malformed)?;
+        let payload = hex_decode(payload_hex).ok_or(AuthError::Malformed)?;
+        // Constant-time-ish compare via re-HMAC of both sides.
+        let expect = self.sign(&payload);
+        if !constant_time_eq(expect.as_bytes(), sig_hex.as_bytes()) {
+            return Err(AuthError::BadSignature);
+        }
+        let text = std::str::from_utf8(&payload).map_err(|_| AuthError::Malformed)?;
+        let v = crate::json::parse(text).map_err(|_| AuthError::Malformed)?;
+        let claims = Claims {
+            uid: v.get("uid").as_u64().ok_or(AuthError::Malformed)?,
+            user: v.get("user").as_str().unwrap_or("").to_string(),
+            issued_at: v.get("iat").as_f64().unwrap_or(0.0),
+            expires_at: v.get("exp").as_f64().ok_or(AuthError::Malformed)?,
+        };
+        if now > claims.expires_at {
+            return Err(AuthError::Expired);
+        }
+        if self.revoked.lock().unwrap().contains(&claims.uid) {
+            return Err(AuthError::Revoked);
+        }
+        Ok(claims)
+    }
+
+    /// Revoke a token by id ("can be revoked at any time", §3).
+    pub fn revoke(&self, uid: u64) {
+        self.revoked.lock().unwrap().insert(uid);
+    }
+
+    /// Number of revoked tokens (metrics).
+    pub fn revoked_count(&self) -> usize {
+        self.revoked.lock().unwrap().len()
+    }
+}
+
+fn constant_time_eq(a: &[u8], b: &[u8]) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    let mut diff = 0u8;
+    for (x, y) in a.iter().zip(b) {
+        diff |= x ^ y;
+    }
+    diff == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn svc() -> TokenService {
+        TokenService::new(b"test-secret")
+    }
+
+    #[test]
+    fn issue_validate_roundtrip() {
+        let s = svc();
+        let tok = s.issue("alice", 100.0, 3600.0);
+        let c = s.validate(&tok, 200.0).unwrap();
+        assert_eq!(c.user, "alice");
+        assert_eq!(c.issued_at, 100.0);
+        assert_eq!(c.expires_at, 3700.0);
+    }
+
+    #[test]
+    fn expired_rejected() {
+        let s = svc();
+        let tok = s.issue("bob", 0.0, 10.0);
+        assert_eq!(s.validate(&tok, 5.0).map(|c| c.user).unwrap(), "bob");
+        assert_eq!(s.validate(&tok, 11.0), Err(AuthError::Expired));
+    }
+
+    #[test]
+    fn revoked_rejected() {
+        let s = svc();
+        let tok = s.issue("carol", 0.0, 1e6);
+        let c = s.validate(&tok, 1.0).unwrap();
+        s.revoke(c.uid);
+        assert_eq!(s.validate(&tok, 2.0), Err(AuthError::Revoked));
+        assert_eq!(s.revoked_count(), 1);
+    }
+
+    #[test]
+    fn tampered_rejected() {
+        let s = svc();
+        let tok = s.issue("dave", 0.0, 1e6);
+        // Flip one hex char of the payload.
+        let mut chars: Vec<char> = tok.chars().collect();
+        chars[0] = if chars[0] == 'a' { 'b' } else { 'a' };
+        let bad: String = chars.into_iter().collect();
+        assert!(matches!(
+            s.validate(&bad, 1.0),
+            Err(AuthError::BadSignature) | Err(AuthError::Malformed)
+        ));
+    }
+
+    #[test]
+    fn wrong_secret_rejected() {
+        let s1 = TokenService::new(b"one");
+        let s2 = TokenService::new(b"two");
+        let tok = s1.issue("eve", 0.0, 1e6);
+        assert_eq!(s2.validate(&tok, 1.0), Err(AuthError::BadSignature));
+    }
+
+    #[test]
+    fn malformed_rejected() {
+        let s = svc();
+        for bad in ["", "nodot", "zz.zz", "abc.def", "0g00.ffff"] {
+            assert!(s.validate(bad, 0.0).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn tokens_are_path_safe() {
+        let s = svc();
+        let tok = s.issue("x", 0.0, 1.0);
+        assert!(tok.chars().all(|c| c.is_ascii_hexdigit() || c == '.'));
+    }
+
+    #[test]
+    fn uids_unique() {
+        let s = svc();
+        let c1 = s.validate(&s.issue("u", 0.0, 10.0), 0.0).unwrap();
+        let c2 = s.validate(&s.issue("u", 0.0, 10.0), 0.0).unwrap();
+        assert_ne!(c1.uid, c2.uid);
+    }
+}

@@ -1,0 +1,1013 @@
+//! The coordination engine: the transactional core behind the REST APIs.
+//!
+//! The engine owns the study registry and applies the three HOPAAS
+//! mutations (`ask`, `tell`, `should_prune`) under one lock, persisting
+//! each accepted mutation to the WAL *before* acknowledging it — so a
+//! crash never loses a told trial (paper's campaigns run for days on
+//! opportunistic resources; E7 tests this).
+//!
+//! Determinism: sampler draws are seeded from
+//! `mix(study_key_hash, trial_number)`, so recovery replay or a second
+//! server instance reading the same WAL produces the same suggestion
+//! stream — the property PostgreSQL gives the paper's "scalable set of
+//! Uvicorn instances".
+
+use super::samplers::{make_sampler, Obs};
+use super::space::assignment_to_json;
+use super::study::{parse_ask_body, Study, StudyDef};
+use super::trial::{Trial, TrialState};
+use super::{metrics::Metrics, pruners::make_pruner};
+use crate::json::Value;
+use crate::rng::{mix, Rng};
+use crate::store::{Record, Storage};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// API-level error → HTTP status mapping happens in the service layer.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum ApiError {
+    #[error("{0}")]
+    BadRequest(String),
+    #[error("{0}")]
+    NotFound(String),
+    #[error("{0}")]
+    Conflict(String),
+    #[error("storage failure: {0}")]
+    Storage(String),
+}
+
+/// Engine tuning.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Base seed for the deterministic sampler streams.
+    pub seed: u64,
+    /// Compact the WAL into a snapshot after this many records.
+    pub compact_after: u64,
+    /// Mark a running trial failed if silent for this many seconds
+    /// (opportunistic nodes vanish without a goodbye). `None` disables.
+    pub reap_after: Option<f64>,
+    /// §Perf: clone at most this many (most recent) scored observations
+    /// into the per-ask sampler snapshot. Every model-based sampler
+    /// windows its history anyway (TPE 1024, GP 256, CMA-ES λ·gens), so
+    /// cloning the full multi-thousand-trial history per ask is pure
+    /// waste.
+    pub history_snapshot: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            seed: 0x4f50_5441_4153,
+            compact_after: 50_000,
+            reap_after: Some(3600.0),
+            history_snapshot: 2048,
+        }
+    }
+}
+
+/// Response of a successful `ask`.
+#[derive(Clone, Debug)]
+pub struct AskReply {
+    pub trial_id: u64,
+    pub trial_number: u64,
+    pub study_id: u64,
+    pub study_key: String,
+    pub params: Value,
+}
+
+struct Inner {
+    studies: Vec<Study>,
+    by_key: HashMap<String, usize>,
+    /// trial id → (study index, trial index)
+    trial_index: HashMap<u64, (usize, usize)>,
+    next_trial_id: u64,
+    storage: Option<Storage>,
+    wal_records: u64,
+    /// trial id → last report wall time (not persisted; reaping is a
+    /// liveness heuristic, not state).
+    last_seen: HashMap<u64, f64>,
+}
+
+/// The coordination engine. Thread-safe; the HTTP layer shares it.
+pub struct Engine {
+    inner: Mutex<Inner>,
+    config: EngineConfig,
+    start: Instant,
+    pub metrics: Arc<Metrics>,
+    /// Total asks served (for quick health output).
+    asks: AtomicU64,
+}
+
+impl Engine {
+    /// In-memory engine (tests, benches).
+    pub fn in_memory(config: EngineConfig) -> Engine {
+        Engine {
+            inner: Mutex::new(Inner {
+                studies: Vec::new(),
+                by_key: HashMap::new(),
+                trial_index: HashMap::new(),
+                next_trial_id: 1,
+                storage: None,
+                wal_records: 0,
+                last_seen: HashMap::new(),
+            }),
+            config,
+            start: Instant::now(),
+            metrics: Arc::new(Metrics::default()),
+            asks: AtomicU64::new(0),
+        }
+    }
+
+    /// Durable engine: replays snapshot + WAL from `dir`.
+    pub fn open(dir: impl AsRef<std::path::Path>, config: EngineConfig) -> Result<Engine, ApiError> {
+        let mut storage =
+            Storage::open(dir).map_err(|e| ApiError::Storage(e.to_string()))?;
+        let (snapshot, events) =
+            storage.load().map_err(|e| ApiError::Storage(e.to_string()))?;
+        let engine = Engine::in_memory(config);
+        {
+            let mut inner = engine.inner.lock().unwrap();
+            if let Some(snap) = snapshot {
+                Self::apply_snapshot(&mut inner, &snap)?;
+            }
+            for ev in &events {
+                Self::apply_event(&mut inner, ev);
+            }
+            inner.wal_records = events.len() as u64;
+            inner.storage = Some(storage);
+        }
+        Ok(engine)
+    }
+
+    /// Seconds since engine start — the time base used across the
+    /// coordinator.
+    pub fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    // ------------------------------------------------------------------
+    // Table 1 APIs
+    // ------------------------------------------------------------------
+
+    /// `ask`: create a trial in the study defined by `body`; returns the
+    /// suggested hyperparameters.
+    ///
+    /// Locking (§Perf): the surrogate refit (TPE KDE / GP Cholesky) is
+    /// the expensive part of an ask, so it runs on a *snapshot* of the
+    /// study history taken under the lock, with the lock released. A
+    /// concurrent ask may therefore suggest from history that is one or
+    /// two tells stale — the same semantics Optuna has in distributed
+    /// mode, and irrelevant statistically (the history grows by whole
+    /// trials, the surrogate by one observation). The lock is re-taken
+    /// only to insert the trial record.
+    pub fn ask(&self, body: &Value) -> Result<AskReply, ApiError> {
+        let (def, node) = parse_ask_body(body).map_err(ApiError::BadRequest)?;
+        let now = self.now();
+        let key = def.key();
+        if def.is_mo() {
+            return self.ask_mo(def, node, now, key);
+        }
+        let sampler = make_sampler(&def.sampler).map_err(ApiError::BadRequest)?;
+
+        // --- critical section 1: find/create study, snapshot history ---
+        let (study_idx, trial_number, scored, space, direction) = {
+            let mut inner = self.inner.lock().unwrap();
+            let inner = &mut *inner;
+            let study_idx = Self::find_or_create_study(inner, &def, now, &key, &self.metrics)?;
+            let study = &inner.studies[study_idx];
+            let trial_number = study.trials.len() as u64;
+            let all = study.scored();
+            let skip = all.len().saturating_sub(self.config.history_snapshot.max(1));
+            let scored: Vec<Obs> = all
+                .into_iter()
+                .skip(skip)
+                .map(|(t, v)| Obs { params: t.params.clone(), value: v })
+                .collect();
+            (
+                study_idx,
+                trial_number,
+                scored,
+                study.def.space.clone(),
+                study.def.direction,
+            )
+        };
+
+        // --- suggest OUTSIDE the lock (deterministic per study+number) ---
+        let key_hash = {
+            let mut h: u64 = 0xcbf29ce484222325;
+            for b in key.as_bytes() {
+                h = (h ^ *b as u64).wrapping_mul(0x100000001b3);
+            }
+            h
+        };
+        let mut rng = Rng::new(mix(mix(self.config.seed, key_hash), trial_number));
+        let params = sampler.suggest(&space, &scored, direction, trial_number, &mut rng);
+
+        // --- critical section 2: insert the trial ---
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        // trial_number may have advanced while we sampled; re-read it so
+        // `number` stays the creation-order index.
+        let trial_number = inner.studies[study_idx].trials.len() as u64;
+        let trial_id = inner.next_trial_id;
+        inner.next_trial_id += 1;
+        let trial = Trial::new(trial_id, trial_number, params.clone(), now, node);
+        let ev = {
+            let mut o = Value::obj();
+            o.set("study_id", inner.studies[study_idx].id)
+                .set("trial", trial.to_json());
+            Value::Obj(o)
+        };
+        let trial_idx = inner.studies[study_idx].trials.len();
+        inner.studies[study_idx].trials.push(trial);
+        inner.trial_index.insert(trial_id, (study_idx, trial_idx));
+        inner.last_seen.insert(trial_id, now);
+        Self::persist(inner, Record::new("trial_new", ev))?;
+
+        self.metrics.trials_created.inc();
+        self.metrics.ask_total.inc();
+        self.asks.fetch_add(1, Ordering::Relaxed);
+        self.maybe_compact(inner);
+
+        let study = &inner.studies[study_idx];
+        Ok(AskReply {
+            trial_id,
+            trial_number,
+            study_id: study.id,
+            study_key: study.key.clone(),
+            params: assignment_to_json(&study.trials[trial_idx].params),
+        })
+    }
+
+    /// `ask` for a multi-objective study (paper §5 future work): same
+    /// protocol, but the suggestion comes from NSGA-II over the study's
+    /// objective *vectors*. Default sampler name "tpe" (the protocol
+    /// default) is interpreted as "nsga2" for MO studies; random/grid/
+    /// qmc work as-is; gp/cmaes are single-objective only.
+    fn ask_mo(
+        &self,
+        def: super::study::StudyDef,
+        node: Option<String>,
+        now: f64,
+        key: String,
+    ) -> Result<AskReply, ApiError> {
+        use super::samplers::nsga2::{MoObs, Nsga2Sampler};
+        let directions = def.directions.clone().expect("mo study");
+        enum MoWhich {
+            Nsga2(Nsga2Sampler),
+            Plain(Box<dyn super::samplers::Sampler>),
+        }
+        let which = match def.sampler.name.as_str() {
+            "nsga2" | "tpe" => MoWhich::Nsga2(Nsga2Sampler::from_config(&def.sampler)),
+            "random" | "grid" | "qmc" | "sobol" => {
+                MoWhich::Plain(make_sampler(&def.sampler).map_err(ApiError::BadRequest)?)
+            }
+            other => {
+                return Err(ApiError::BadRequest(format!(
+                    "sampler '{other}' does not support multi-objective studies"
+                )))
+            }
+        };
+
+        // --- critical section 1: find/create study + snapshot ---
+        let (study_idx, trial_number, mo_obs, space) = {
+            let mut inner = self.inner.lock().unwrap();
+            let inner = &mut *inner;
+            let study_idx = Self::find_or_create_study(inner, &def, now, &key, &self.metrics)?;
+            let study = &inner.studies[study_idx];
+            let trial_number = study.trials.len() as u64;
+            let skip = study
+                .mo_scored()
+                .len()
+                .saturating_sub(self.config.history_snapshot.max(1));
+            let mo_obs: Vec<MoObs> = study
+                .mo_scored()
+                .into_iter()
+                .skip(skip)
+                .map(|(t, v)| MoObs { params: t.params.clone(), values: v.clone() })
+                .collect();
+            (study_idx, trial_number, mo_obs, study.def.space.clone())
+        };
+
+        // --- suggest outside the lock ---
+        let key_hash = {
+            let mut h: u64 = 0xcbf29ce484222325;
+            for b in key.as_bytes() {
+                h = (h ^ *b as u64).wrapping_mul(0x100000001b3);
+            }
+            h
+        };
+        let mut rng = Rng::new(mix(mix(self.config.seed, key_hash), trial_number));
+        let params = match which {
+            MoWhich::Nsga2(s) => s.suggest_mo(&space, &mo_obs, &directions, &mut rng),
+            MoWhich::Plain(s) => {
+                s.suggest(&space, &[], super::space::Direction::Minimize, trial_number, &mut rng)
+            }
+        };
+
+        // --- critical section 2: insert the trial ---
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        let trial_number = inner.studies[study_idx].trials.len() as u64;
+        let trial_id = inner.next_trial_id;
+        inner.next_trial_id += 1;
+        let trial = Trial::new(trial_id, trial_number, params, now, node);
+        let ev = {
+            let mut o = Value::obj();
+            o.set("study_id", inner.studies[study_idx].id)
+                .set("trial", trial.to_json());
+            Value::Obj(o)
+        };
+        let trial_idx = inner.studies[study_idx].trials.len();
+        inner.studies[study_idx].trials.push(trial);
+        inner.trial_index.insert(trial_id, (study_idx, trial_idx));
+        inner.last_seen.insert(trial_id, now);
+        Self::persist(inner, Record::new("trial_new", ev))?;
+        self.metrics.trials_created.inc();
+        self.metrics.ask_total.inc();
+        self.asks.fetch_add(1, Ordering::Relaxed);
+        self.maybe_compact(inner);
+        let study = &inner.studies[study_idx];
+        Ok(AskReply {
+            trial_id,
+            trial_number,
+            study_id: study.id,
+            study_key: study.key.clone(),
+            params: assignment_to_json(&study.trials[trial_idx].params),
+        })
+    }
+
+    /// `tell` with an objective vector (multi-objective studies).
+    /// Returns `(study_id, on_pareto_front)`.
+    pub fn tell_values(&self, trial_id: u64, values: Vec<f64>) -> Result<(u64, bool), ApiError> {
+        let now = self.now();
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        let (si, ti) = *inner
+            .trial_index
+            .get(&trial_id)
+            .ok_or_else(|| ApiError::NotFound(format!("unknown trial {trial_id}")))?;
+        let Some(directions) = inner.studies[si].def.directions.clone() else {
+            return Err(ApiError::BadRequest(
+                "'values' array sent to a single-objective study".into(),
+            ));
+        };
+        if values.len() != directions.len() {
+            return Err(ApiError::BadRequest(format!(
+                "expected {} objective values, got {}",
+                directions.len(),
+                values.len()
+            )));
+        }
+        inner.studies[si].trials[ti]
+            .complete_mo(values.clone(), now)
+            .map_err(|e| ApiError::Conflict(e.to_string()))?;
+        let ev = {
+            let mut o = Value::obj();
+            o.set("trial_id", trial_id)
+                .set(
+                    "values",
+                    Value::Arr(values.iter().map(|&v| Value::Num(v)).collect()),
+                )
+                .set("at", now);
+            Value::Obj(o)
+        };
+        Self::persist(inner, Record::new("trial_tell_mo", ev))?;
+        inner.last_seen.remove(&trial_id);
+        self.metrics.tell_total.inc();
+        self.metrics.trials_completed.inc();
+        self.maybe_compact(inner);
+        let on_front = inner.studies[si]
+            .pareto()
+            .iter()
+            .any(|t| t.id == trial_id);
+        Ok((inner.studies[si].id, on_front))
+    }
+
+    /// Pareto front of a multi-objective study (dashboard/client API).
+    pub fn pareto_json(&self, study_id: u64) -> Option<Value> {
+        let inner = self.inner.lock().unwrap();
+        let study = inner.studies.iter().find(|s| s.id == study_id)?;
+        Some(Value::Arr(
+            study.pareto().into_iter().map(|t| t.to_json()).collect(),
+        ))
+    }
+
+    /// `tell`: finalize a trial with its objective value.
+    /// Returns `(study_id, is_best)`.
+    pub fn tell(&self, trial_id: u64, value: f64) -> Result<(u64, bool), ApiError> {
+        let now = self.now();
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        let (si, ti) = *inner
+            .trial_index
+            .get(&trial_id)
+            .ok_or_else(|| ApiError::NotFound(format!("unknown trial {trial_id}")))?;
+        let direction = inner.studies[si].def.direction;
+        let prev_best = inner.studies[si].best().and_then(|t| t.value);
+        inner.studies[si].trials[ti]
+            .complete(value, now)
+            .map_err(|e| ApiError::Conflict(e.to_string()))?;
+        let ev = {
+            let mut o = Value::obj();
+            o.set("trial_id", trial_id).set("value", value).set("at", now);
+            Value::Obj(o)
+        };
+        Self::persist(inner, Record::new("trial_tell", ev))?;
+        inner.last_seen.remove(&trial_id);
+        self.metrics.tell_total.inc();
+        self.metrics.trials_completed.inc();
+        self.maybe_compact(inner);
+        let is_best = match prev_best {
+            None => true,
+            Some(b) => direction.better(value, b),
+        };
+        Ok((inner.studies[si].id, is_best))
+    }
+
+    /// `should_prune`: record an intermediate value; returns whether the
+    /// client should abort the trial. A `true` response transitions the
+    /// trial to Pruned server-side (the client contract is to stop).
+    pub fn should_prune(&self, trial_id: u64, step: u64, value: f64) -> Result<bool, ApiError> {
+        let now = self.now();
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        let (si, ti) = *inner
+            .trial_index
+            .get(&trial_id)
+            .ok_or_else(|| ApiError::NotFound(format!("unknown trial {trial_id}")))?;
+
+        inner.studies[si].trials[ti]
+            .report(step, value)
+            .map_err(|e| ApiError::Conflict(e.to_string()))?;
+        inner.last_seen.insert(trial_id, now);
+        let ev = {
+            let mut o = Value::obj();
+            o.set("trial_id", trial_id).set("step", step).set("value", value);
+            Value::Obj(o)
+        };
+        Self::persist(inner, Record::new("trial_report", ev))?;
+        self.metrics.should_prune_total.inc();
+
+        let study = &inner.studies[si];
+        let prune = match &study.def.pruner {
+            None => false,
+            Some(cfg) => {
+                let pruner = make_pruner(cfg).map_err(ApiError::BadRequest)?;
+                let trial = &study.trials[ti];
+                let history: Vec<&Trial> = study
+                    .trials
+                    .iter()
+                    .filter(|t| t.id != trial_id)
+                    .collect();
+                pruner.should_prune(trial, step, value, &history, study.def.direction)
+            }
+        };
+        if prune {
+            inner.studies[si].trials[ti]
+                .prune(now)
+                .map_err(|e| ApiError::Conflict(e.to_string()))?;
+            let ev = {
+                let mut o = Value::obj();
+                o.set("trial_id", trial_id).set("at", now);
+                Value::Obj(o)
+            };
+            Self::persist(inner, Record::new("trial_prune", ev))?;
+            inner.last_seen.remove(&trial_id);
+            self.metrics.prune_decisions.inc();
+            self.metrics.trials_pruned.inc();
+        }
+        self.maybe_compact(inner);
+        Ok(prune)
+    }
+
+    /// Client-reported failure (e.g. OOM) — frees the trial slot.
+    pub fn fail(&self, trial_id: u64) -> Result<(), ApiError> {
+        let now = self.now();
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        let (si, ti) = *inner
+            .trial_index
+            .get(&trial_id)
+            .ok_or_else(|| ApiError::NotFound(format!("unknown trial {trial_id}")))?;
+        inner.studies[si].trials[ti]
+            .fail(now)
+            .map_err(|e| ApiError::Conflict(e.to_string()))?;
+        let ev = {
+            let mut o = Value::obj();
+            o.set("trial_id", trial_id).set("at", now);
+            Value::Obj(o)
+        };
+        Self::persist(inner, Record::new("trial_fail", ev))?;
+        inner.last_seen.remove(&trial_id);
+        self.metrics.trials_failed.inc();
+        Ok(())
+    }
+
+    /// Reap running trials whose node has been silent past the deadline
+    /// (called periodically by the server loop).
+    pub fn reap_stale(&self) -> usize {
+        let Some(deadline) = self.config.reap_after else { return 0 };
+        let now = self.now();
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        let stale: Vec<u64> = inner
+            .last_seen
+            .iter()
+            .filter(|(_, &t)| now - t > deadline)
+            .map(|(&id, _)| id)
+            .collect();
+        let mut reaped = 0;
+        for id in stale {
+            if let Some(&(si, ti)) = inner.trial_index.get(&id) {
+                if inner.studies[si].trials[ti].fail(now).is_ok() {
+                    let ev = {
+                        let mut o = Value::obj();
+                        o.set("trial_id", id).set("at", now);
+                        Value::Obj(o)
+                    };
+                    let _ = Self::persist(inner, Record::new("trial_fail", ev));
+                    self.metrics.trials_failed.inc();
+                    reaped += 1;
+                }
+            }
+            inner.last_seen.remove(&id);
+        }
+        reaped
+    }
+
+    // ------------------------------------------------------------------
+    // Read APIs (dashboard / web data)
+    // ------------------------------------------------------------------
+
+    /// Summaries of all studies.
+    pub fn studies_json(&self) -> Value {
+        let inner = self.inner.lock().unwrap();
+        Value::Arr(inner.studies.iter().map(|s| s.summary_json()).collect())
+    }
+
+    /// One study's summary.
+    pub fn study_json(&self, study_id: u64) -> Option<Value> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .studies
+            .iter()
+            .find(|s| s.id == study_id)
+            .map(|s| s.summary_json())
+    }
+
+    /// A study's full trial list.
+    pub fn trials_json(&self, study_id: u64) -> Option<Value> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .studies
+            .iter()
+            .find(|s| s.id == study_id)
+            .map(|s| Value::Arr(s.trials.iter().map(|t| t.to_json()).collect()))
+    }
+
+    /// Loss-curve series for the dashboard plots (paper: Chartist plots
+    /// of "the evolution of the loss reported by different studies and
+    /// trials").
+    pub fn series_json(&self, study_id: u64) -> Option<Value> {
+        let inner = self.inner.lock().unwrap();
+        let study = inner.studies.iter().find(|s| s.id == study_id)?;
+        let mut arr = Vec::new();
+        for t in &study.trials {
+            let mut o = Value::obj();
+            o.set("trial", t.id)
+                .set("state", t.state.as_str())
+                .set(
+                    "points",
+                    Value::Arr(
+                        t.intermediate
+                            .iter()
+                            .map(|(s, v)| Value::Arr(vec![Value::Num(*s as f64), Value::Num(*v)]))
+                            .collect(),
+                    ),
+                )
+                .set("final", t.value);
+            arr.push(Value::Obj(o));
+        }
+        Some(Value::Arr(arr))
+    }
+
+    /// Best-so-far curve of a study: (trial number, best value after it).
+    pub fn best_curve(&self, study_id: u64) -> Option<Vec<(u64, f64)>> {
+        let inner = self.inner.lock().unwrap();
+        let study = inner.studies.iter().find(|s| s.id == study_id)?;
+        let mut best: Option<f64> = None;
+        let mut curve = Vec::new();
+        for t in &study.trials {
+            if let (TrialState::Completed, Some(v)) = (t.state, t.value) {
+                best = Some(match best {
+                    None => v,
+                    Some(b) if study.def.direction.better(v, b) => v,
+                    Some(b) => b,
+                });
+                curve.push((t.number, best.unwrap()));
+            }
+        }
+        Some(curve)
+    }
+
+    /// Number of studies.
+    pub fn n_studies(&self) -> usize {
+        self.inner.lock().unwrap().studies.len()
+    }
+
+    /// Look up a study id by definition key.
+    pub fn study_id_by_key(&self, key: &str) -> Option<u64> {
+        let inner = self.inner.lock().unwrap();
+        inner.by_key.get(key).map(|&i| inner.studies[i].id)
+    }
+
+    /// Force a snapshot + WAL truncation.
+    pub fn compact(&self) -> Result<(), ApiError> {
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        Self::compact_inner(inner)
+    }
+
+    // ------------------------------------------------------------------
+    // Persistence plumbing
+    // ------------------------------------------------------------------
+
+    /// Locate the study for `key`, creating (and persisting) it if new.
+    fn find_or_create_study(
+        inner: &mut Inner,
+        def: &StudyDef,
+        now: f64,
+        key: &str,
+        metrics: &Metrics,
+    ) -> Result<usize, ApiError> {
+        match inner.by_key.get(key) {
+            Some(&i) => Ok(i),
+            None => {
+                let id = inner.studies.len() as u64 + 1;
+                let ev_payload = {
+                    let mut o = Value::obj();
+                    o.set("id", id).set("def", def.canonical_json());
+                    Value::Obj(o)
+                };
+                let study = Study::new(id, def.clone(), now);
+                inner.studies.push(study);
+                let idx = inner.studies.len() - 1;
+                inner.by_key.insert(key.to_string(), idx);
+                metrics.studies_created.inc();
+                Self::persist(inner, Record::new("study_new", ev_payload))?;
+                Ok(idx)
+            }
+        }
+    }
+
+    fn persist(inner: &mut Inner, record: Record) -> Result<(), ApiError> {
+        if let Some(storage) = inner.storage.as_mut() {
+            storage
+                .append(&record)
+                .map_err(|e| ApiError::Storage(e.to_string()))?;
+            inner.wal_records += 1;
+        }
+        Ok(())
+    }
+
+    fn maybe_compact(&self, inner: &mut Inner) {
+        if inner.storage.is_some() && inner.wal_records >= self.config.compact_after {
+            let _ = Self::compact_inner(inner);
+        }
+    }
+
+    fn compact_inner(inner: &mut Inner) -> Result<(), ApiError> {
+        if inner.storage.is_none() {
+            return Ok(());
+        }
+        let snap = Self::snapshot_value(inner);
+        let storage = inner.storage.as_mut().unwrap();
+        storage
+            .compact(&snap)
+            .map_err(|e| ApiError::Storage(e.to_string()))?;
+        inner.wal_records = 0;
+        Ok(())
+    }
+
+    fn snapshot_value(inner: &Inner) -> Value {
+        let mut studies = Vec::new();
+        for s in &inner.studies {
+            let mut o = Value::obj();
+            o.set("id", s.id)
+                .set("def", s.def.canonical_json())
+                .set("created_at", s.created_at)
+                .set(
+                    "trials",
+                    Value::Arr(s.trials.iter().map(|t| t.to_json()).collect()),
+                );
+            studies.push(Value::Obj(o));
+        }
+        let mut o = Value::obj();
+        o.set("studies", Value::Arr(studies))
+            .set("next_trial_id", inner.next_trial_id);
+        Value::Obj(o)
+    }
+
+    fn apply_snapshot(inner: &mut Inner, snap: &Value) -> Result<(), ApiError> {
+        for sv in snap.get("studies").as_arr().unwrap_or(&[]) {
+            let (def, _) = parse_ask_body(sv.get("def"))
+                .map_err(|e| ApiError::Storage(format!("snapshot study def: {e}")))?;
+            let def = StudyDef {
+                // canonical_json stores name/sampler/pruner explicitly.
+                name: sv.get("def").get("name").as_str().unwrap_or("default").into(),
+                ..def
+            };
+            let id = sv.get("id").as_u64().unwrap_or(0);
+            let mut study = Study::new(id, def, sv.get("created_at").as_f64().unwrap_or(0.0));
+            for tv in sv.get("trials").as_arr().unwrap_or(&[]) {
+                if let Some(t) = Trial::from_json(tv) {
+                    study.trials.push(t);
+                }
+            }
+            let idx = inner.studies.len();
+            inner.by_key.insert(study.key.clone(), idx);
+            for (ti, t) in study.trials.iter().enumerate() {
+                inner.trial_index.insert(t.id, (idx, ti));
+            }
+            inner.studies.push(study);
+        }
+        inner.next_trial_id = snap.get("next_trial_id").as_u64().unwrap_or(1);
+        Ok(())
+    }
+
+    fn apply_event(inner: &mut Inner, record: &Record) {
+        match record.tag.as_str() {
+            "study_new" => {
+                let v = &record.payload;
+                if let Ok((def, _)) = parse_ask_body(v.get("def")) {
+                    let def = StudyDef {
+                        name: v.get("def").get("name").as_str().unwrap_or("default").into(),
+                        ..def
+                    };
+                    let id = v.get("id").as_u64().unwrap_or(0);
+                    let study = Study::new(id, def, 0.0);
+                    let idx = inner.studies.len();
+                    inner.by_key.insert(study.key.clone(), idx);
+                    inner.studies.push(study);
+                }
+            }
+            "trial_new" => {
+                let v = &record.payload;
+                let study_id = v.get("study_id").as_u64().unwrap_or(0);
+                if let Some(t) = Trial::from_json(v.get("trial")) {
+                    if let Some(si) =
+                        inner.studies.iter().position(|s| s.id == study_id)
+                    {
+                        inner.next_trial_id = inner.next_trial_id.max(t.id + 1);
+                        let ti = inner.studies[si].trials.len();
+                        inner.trial_index.insert(t.id, (si, ti));
+                        inner.studies[si].trials.push(t);
+                    }
+                }
+            }
+            "trial_tell" => {
+                let v = &record.payload;
+                if let (Some(id), Some(val)) =
+                    (v.get("trial_id").as_u64(), v.get("value").as_f64())
+                {
+                    if let Some(&(si, ti)) = inner.trial_index.get(&id) {
+                        let _ = inner.studies[si].trials[ti]
+                            .complete(val, v.get("at").as_f64().unwrap_or(0.0));
+                    }
+                }
+            }
+            "trial_tell_mo" => {
+                let v = &record.payload;
+                if let (Some(id), Some(vals)) =
+                    (v.get("trial_id").as_u64(), v.get("values").as_arr())
+                {
+                    let values: Vec<f64> = vals.iter().filter_map(Value::as_f64).collect();
+                    if let Some(&(si, ti)) = inner.trial_index.get(&id) {
+                        let _ = inner.studies[si].trials[ti]
+                            .complete_mo(values, v.get("at").as_f64().unwrap_or(0.0));
+                    }
+                }
+            }
+            "trial_report" => {
+                let v = &record.payload;
+                if let (Some(id), Some(step), Some(val)) = (
+                    v.get("trial_id").as_u64(),
+                    v.get("step").as_u64(),
+                    v.get("value").as_f64(),
+                ) {
+                    if let Some(&(si, ti)) = inner.trial_index.get(&id) {
+                        let _ = inner.studies[si].trials[ti].report(step, val);
+                    }
+                }
+            }
+            "trial_prune" => {
+                let v = &record.payload;
+                if let Some(id) = v.get("trial_id").as_u64() {
+                    if let Some(&(si, ti)) = inner.trial_index.get(&id) {
+                        let _ = inner.studies[si].trials[ti]
+                            .prune(v.get("at").as_f64().unwrap_or(0.0));
+                    }
+                }
+            }
+            "trial_fail" => {
+                let v = &record.payload;
+                if let Some(id) = v.get("trial_id").as_u64() {
+                    if let Some(&(si, ti)) = inner.trial_index.get(&id) {
+                        let _ = inner.studies[si].trials[ti]
+                            .fail(v.get("at").as_f64().unwrap_or(0.0));
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::parse;
+    use crate::testutil::TempDir;
+
+    fn ask_body(study: &str) -> Value {
+        parse(&format!(
+            r#"{{
+            "study_name": "{study}",
+            "properties": {{"x": {{"low": 0.0, "high": 1.0}}}},
+            "direction": "minimize",
+            "sampler": {{"name": "random"}},
+            "pruner": {{"name": "median", "min_trials": 2}}
+        }}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn ask_creates_study_then_joins_it() {
+        let e = Engine::in_memory(EngineConfig::default());
+        let r1 = e.ask(&ask_body("s")).unwrap();
+        let r2 = e.ask(&ask_body("s")).unwrap();
+        assert_eq!(r1.study_id, r2.study_id);
+        assert_ne!(r1.trial_id, r2.trial_id);
+        assert_eq!(r1.trial_number, 0);
+        assert_eq!(r2.trial_number, 1);
+        assert_eq!(e.n_studies(), 1);
+        // Different definition → different study.
+        let r3 = e.ask(&ask_body("other")).unwrap();
+        assert_ne!(r3.study_id, r1.study_id);
+        assert_eq!(e.n_studies(), 2);
+    }
+
+    #[test]
+    fn ask_returns_in_domain_params() {
+        let e = Engine::in_memory(EngineConfig::default());
+        let r = e.ask(&ask_body("s")).unwrap();
+        let x = r.params.get("x").as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&x));
+    }
+
+    #[test]
+    fn tell_finalizes_and_flags_best() {
+        let e = Engine::in_memory(EngineConfig::default());
+        let r1 = e.ask(&ask_body("s")).unwrap();
+        let (sid, best1) = e.tell(r1.trial_id, 5.0).unwrap();
+        assert_eq!(sid, r1.study_id);
+        assert!(best1, "first completed is best");
+        let r2 = e.ask(&ask_body("s")).unwrap();
+        let (_, best2) = e.tell(r2.trial_id, 9.0).unwrap();
+        assert!(!best2);
+        let r3 = e.ask(&ask_body("s")).unwrap();
+        let (_, best3) = e.tell(r3.trial_id, 1.0).unwrap();
+        assert!(best3);
+    }
+
+    #[test]
+    fn tell_twice_conflicts() {
+        let e = Engine::in_memory(EngineConfig::default());
+        let r = e.ask(&ask_body("s")).unwrap();
+        e.tell(r.trial_id, 1.0).unwrap();
+        assert!(matches!(e.tell(r.trial_id, 2.0), Err(ApiError::Conflict(_))));
+    }
+
+    #[test]
+    fn tell_unknown_trial_not_found() {
+        let e = Engine::in_memory(EngineConfig::default());
+        assert!(matches!(e.tell(999, 1.0), Err(ApiError::NotFound(_))));
+    }
+
+    #[test]
+    fn should_prune_records_and_decides() {
+        let e = Engine::in_memory(EngineConfig::default());
+        // Build a history of completed trials with loss 1.0 at step 1.
+        for _ in 0..4 {
+            let r = e.ask(&ask_body("s")).unwrap();
+            e.should_prune(r.trial_id, 1, 1.0).unwrap();
+            e.tell(r.trial_id, 1.0).unwrap();
+        }
+        // A terrible trial gets pruned.
+        let bad = e.ask(&ask_body("s")).unwrap();
+        let pruned = e.should_prune(bad.trial_id, 1, 100.0).unwrap();
+        assert!(pruned);
+        // Pruned trial can't be told.
+        assert!(matches!(e.tell(bad.trial_id, 1.0), Err(ApiError::Conflict(_))));
+        // A good trial survives.
+        let good = e.ask(&ask_body("s")).unwrap();
+        assert!(!e.should_prune(good.trial_id, 1, 0.5).unwrap());
+    }
+
+    #[test]
+    fn deterministic_suggestions_per_seed() {
+        let e1 = Engine::in_memory(EngineConfig::default());
+        let e2 = Engine::in_memory(EngineConfig::default());
+        for _ in 0..5 {
+            let a = e1.ask(&ask_body("s")).unwrap();
+            let b = e2.ask(&ask_body("s")).unwrap();
+            assert_eq!(a.params.to_string(), b.params.to_string());
+            e1.tell(a.trial_id, 1.0).unwrap();
+            e2.tell(b.trial_id, 1.0).unwrap();
+        }
+    }
+
+    #[test]
+    fn durable_recovery_exact() {
+        let d = TempDir::new("engine-recover");
+        let (study_id, told, running_id);
+        {
+            let e = Engine::open(d.path(), EngineConfig::default()).unwrap();
+            let r1 = e.ask(&ask_body("s")).unwrap();
+            study_id = r1.study_id;
+            e.should_prune(r1.trial_id, 1, 0.9).unwrap();
+            e.tell(r1.trial_id, 0.42).unwrap();
+            told = r1.trial_id;
+            let r2 = e.ask(&ask_body("s")).unwrap();
+            running_id = r2.trial_id;
+        }
+        let e = Engine::open(d.path(), EngineConfig::default()).unwrap();
+        assert_eq!(e.n_studies(), 1);
+        let trials = e.trials_json(study_id).unwrap();
+        let arr = trials.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        let t0 = arr.iter().find(|t| t.get("id").as_u64() == Some(told)).unwrap();
+        assert_eq!(t0.get("state").as_str(), Some("completed"));
+        assert_eq!(t0.get("value").as_f64(), Some(0.42));
+        let t1 = arr.iter().find(|t| t.get("id").as_u64() == Some(running_id)).unwrap();
+        assert_eq!(t1.get("state").as_str(), Some("running"));
+        // New trials continue the id sequence without collision.
+        let r3 = e.ask(&ask_body("s")).unwrap();
+        assert!(r3.trial_id > running_id);
+    }
+
+    #[test]
+    fn recovery_after_compaction() {
+        let d = TempDir::new("engine-compact");
+        {
+            let e = Engine::open(d.path(), EngineConfig::default()).unwrap();
+            for i in 0..6 {
+                let r = e.ask(&ask_body("s")).unwrap();
+                e.tell(r.trial_id, i as f64).unwrap();
+            }
+            e.compact().unwrap();
+            let r = e.ask(&ask_body("s")).unwrap();
+            e.tell(r.trial_id, -1.0).unwrap();
+        }
+        let e = Engine::open(d.path(), EngineConfig::default()).unwrap();
+        let sid = e.study_id_by_key(
+            &parse_ask_body(&ask_body("s")).unwrap().0.key(),
+        );
+        let sid = sid.unwrap();
+        let trials = e.trials_json(sid).unwrap();
+        assert_eq!(trials.as_arr().unwrap().len(), 7);
+        let best = e.best_curve(sid).unwrap();
+        assert_eq!(best.last().unwrap().1, -1.0);
+    }
+
+    #[test]
+    fn reap_marks_stale_failed() {
+        let mut cfg = EngineConfig::default();
+        cfg.reap_after = Some(0.0); // everything is instantly stale
+        let e = Engine::in_memory(cfg);
+        let r = e.ask(&ask_body("s")).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert_eq!(e.reap_stale(), 1);
+        assert!(matches!(e.tell(r.trial_id, 1.0), Err(ApiError::Conflict(_))));
+    }
+
+    #[test]
+    fn series_and_study_json() {
+        let e = Engine::in_memory(EngineConfig::default());
+        let r = e.ask(&ask_body("s")).unwrap();
+        e.should_prune(r.trial_id, 1, 3.0).unwrap();
+        e.should_prune(r.trial_id, 2, 2.0).unwrap();
+        e.tell(r.trial_id, 2.0).unwrap();
+        let series = e.series_json(r.study_id).unwrap();
+        let pts = series.at(0).get("points");
+        assert_eq!(pts.at(0).at(1).as_f64(), Some(3.0));
+        assert_eq!(series.at(0).get("final").as_f64(), Some(2.0));
+        let sj = e.study_json(r.study_id).unwrap();
+        assert_eq!(sj.get("n_completed").as_i64(), Some(1));
+        assert!(e.study_json(999).is_none());
+    }
+}

@@ -1,0 +1,271 @@
+//! Service metrics: counters, gauges and latency histograms with a
+//! Prometheus text-format endpoint (`/metrics`).
+//!
+//! The paper's web interface polls "specialized APIs at regular
+//! intervals" for monitoring; operationally the same information must be
+//! scrapeable, so the registry renders the standard exposition format.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Monotone counter.
+#[derive(Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Gauge (set to arbitrary values).
+#[derive(Default)]
+pub struct Gauge {
+    /// Stored as f64 bits.
+    v: AtomicU64,
+}
+
+impl Gauge {
+    pub fn set(&self, x: f64) {
+        self.v.store(x.to_bits(), Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.v.load(Ordering::Relaxed))
+    }
+}
+
+/// Latency histogram with fixed log-spaced bucket bounds (seconds).
+pub struct Histogram {
+    bounds: Vec<f64>,
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// Sum of observations in microseconds (atomic integer to avoid a
+    /// mutex on the hot path).
+    sum_us: AtomicU64,
+    /// Recent raw samples for exact quantiles in benches/tests (bounded).
+    samples: Mutex<Vec<f64>>,
+}
+
+/// Default API-latency bucket bounds: 50 µs … 10 s, log-spaced.
+pub fn default_latency_bounds() -> Vec<f64> {
+    let mut b = Vec::new();
+    let mut x = 50e-6;
+    while x < 10.0 {
+        b.push(x);
+        x *= 2.0;
+    }
+    b
+}
+
+const MAX_SAMPLES: usize = 100_000;
+
+impl Histogram {
+    pub fn new(bounds: Vec<f64>) -> Histogram {
+        let n = bounds.len();
+        Histogram {
+            bounds,
+            buckets: (0..=n).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            samples: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Record an observation in seconds.
+    pub fn observe(&self, x: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| x <= b)
+            .unwrap_or(self.bounds.len());
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us
+            .fetch_add((x * 1e6).max(0.0) as u64, Ordering::Relaxed);
+        let mut s = self.samples.lock().unwrap();
+        if s.len() < MAX_SAMPLES {
+            s.push(x);
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    pub fn mean(&self) -> f64 {
+        let c = self.count();
+        if c == 0 {
+            0.0
+        } else {
+            self.sum() / c as f64
+        }
+    }
+
+    /// Exact quantile over retained samples (q in [0,1]).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let mut s = self.samples.lock().unwrap().clone();
+        if s.is_empty() {
+            return 0.0;
+        }
+        s.sort_by(f64::total_cmp);
+        let idx = ((s.len() - 1) as f64 * q.clamp(0.0, 1.0)).round() as usize;
+        s[idx]
+    }
+
+    /// Clear retained samples (benches reuse histograms between phases).
+    pub fn reset_samples(&self) {
+        self.samples.lock().unwrap().clear();
+    }
+}
+
+/// All service metrics, named after the API surface.
+pub struct Metrics {
+    pub ask_total: Counter,
+    pub tell_total: Counter,
+    pub should_prune_total: Counter,
+    pub prune_decisions: Counter,
+    pub auth_failures: Counter,
+    pub http_errors: Counter,
+    pub studies_created: Counter,
+    pub trials_created: Counter,
+    pub trials_completed: Counter,
+    pub trials_pruned: Counter,
+    pub trials_failed: Counter,
+    pub wal_records: Gauge,
+    pub ask_latency: Histogram,
+    pub tell_latency: Histogram,
+    pub should_prune_latency: Histogram,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            ask_total: Counter::default(),
+            tell_total: Counter::default(),
+            should_prune_total: Counter::default(),
+            prune_decisions: Counter::default(),
+            auth_failures: Counter::default(),
+            http_errors: Counter::default(),
+            studies_created: Counter::default(),
+            trials_created: Counter::default(),
+            trials_completed: Counter::default(),
+            trials_pruned: Counter::default(),
+            trials_failed: Counter::default(),
+            wal_records: Gauge::default(),
+            ask_latency: Histogram::new(default_latency_bounds()),
+            tell_latency: Histogram::new(default_latency_bounds()),
+            should_prune_latency: Histogram::new(default_latency_bounds()),
+        }
+    }
+}
+
+impl Metrics {
+    /// Render Prometheus text exposition format.
+    pub fn render(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        let counters: [(&str, &Counter); 11] = [
+            ("hopaas_ask_total", &self.ask_total),
+            ("hopaas_tell_total", &self.tell_total),
+            ("hopaas_should_prune_total", &self.should_prune_total),
+            ("hopaas_prune_decisions_total", &self.prune_decisions),
+            ("hopaas_auth_failures_total", &self.auth_failures),
+            ("hopaas_http_errors_total", &self.http_errors),
+            ("hopaas_studies_created_total", &self.studies_created),
+            ("hopaas_trials_created_total", &self.trials_created),
+            ("hopaas_trials_completed_total", &self.trials_completed),
+            ("hopaas_trials_pruned_total", &self.trials_pruned),
+            ("hopaas_trials_failed_total", &self.trials_failed),
+        ];
+        for (name, c) in counters {
+            out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
+        }
+        out.push_str(&format!(
+            "# TYPE hopaas_wal_records gauge\nhopaas_wal_records {}\n",
+            self.wal_records.get()
+        ));
+        for (name, h) in [
+            ("hopaas_ask_latency_seconds", &self.ask_latency),
+            ("hopaas_tell_latency_seconds", &self.tell_latency),
+            ("hopaas_should_prune_latency_seconds", &self.should_prune_latency),
+        ] {
+            out.push_str(&format!("# TYPE {name} histogram\n"));
+            let mut cum = 0u64;
+            for (i, b) in h.bounds.iter().enumerate() {
+                cum += h.buckets[i].load(Ordering::Relaxed);
+                out.push_str(&format!("{name}_bucket{{le=\"{b}\"}} {cum}\n"));
+            }
+            out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {}\n", h.count()));
+            out.push_str(&format!("{name}_sum {}\n", h.sum()));
+            out.push_str(&format!("{name}_count {}\n", h.count()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge() {
+        let c = Counter::default();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::default();
+        g.set(2.5);
+        assert_eq!(g.get(), 2.5);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let h = Histogram::new(default_latency_bounds());
+        for i in 1..=100 {
+            h.observe(i as f64 / 1000.0); // 1..100 ms
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.quantile(0.5) - 0.05).abs() < 0.005);
+        assert!((h.quantile(0.99) - 0.1).abs() < 0.005);
+        assert!((h.mean() - 0.0505).abs() < 0.001);
+    }
+
+    #[test]
+    fn render_contains_series() {
+        let m = Metrics::default();
+        m.ask_total.inc();
+        m.ask_latency.observe(0.001);
+        let text = m.render();
+        assert!(text.contains("hopaas_ask_total 1"));
+        assert!(text.contains("hopaas_ask_latency_seconds_count 1"));
+        assert!(text.contains("le=\"+Inf\"} 1"));
+        // Buckets are cumulative.
+        let inf_line = text.lines().find(|l| l.contains("ask") && l.contains("+Inf")).unwrap();
+        assert!(inf_line.ends_with('1'));
+    }
+
+    #[test]
+    fn histogram_bucket_monotone() {
+        let h = Histogram::new(vec![0.001, 0.01, 0.1]);
+        for x in [0.0005, 0.005, 0.05, 0.5] {
+            h.observe(x);
+        }
+        let counts: Vec<u64> = h.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect();
+        assert_eq!(counts, vec![1, 1, 1, 1]);
+        assert_eq!(h.count(), 4);
+    }
+}

@@ -1,0 +1,284 @@
+//! Multi-objective optimization support — the paper's §5 future work
+//! ("introduce support to multi-objective optimizations"), implemented
+//! as a first-class feature.
+//!
+//! A multi-objective study declares `"direction": ["minimize",
+//! "maximize", ...]`; `tell` carries `"values": [v0, v1, ...]`. This
+//! module provides the machinery: Pareto dominance, fast non-dominated
+//! sorting (Deb et al. 2002), crowding distance, Pareto-front
+//! extraction, and hypervolume (exact 2-D sweep, Monte-Carlo for ≥3
+//! objectives) — the standard quality indicator the MO benches report.
+//!
+//! All routines operate on minimization-oriented vectors; callers flip
+//! maximize objectives (see [`orient`]).
+
+use super::space::Direction;
+
+/// Orient a raw objective vector so every component is minimized.
+pub fn orient(values: &[f64], directions: &[Direction]) -> Vec<f64> {
+    values
+        .iter()
+        .zip(directions)
+        .map(|(&v, d)| match d {
+            Direction::Minimize => v,
+            Direction::Maximize => -v,
+        })
+        .collect()
+}
+
+/// `a` Pareto-dominates `b` (minimization): no worse everywhere,
+/// strictly better somewhere.
+pub fn dominates(a: &[f64], b: &[f64]) -> bool {
+    debug_assert_eq!(a.len(), b.len());
+    let mut strictly = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strictly = true;
+        }
+    }
+    strictly
+}
+
+/// Fast non-dominated sort: returns fronts as index lists, best first.
+pub fn non_dominated_sort(points: &[Vec<f64>]) -> Vec<Vec<usize>> {
+    let n = points.len();
+    let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n]; // i dominates these
+    let mut domination_count = vec![0usize; n];
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            if dominates(&points[i], &points[j]) {
+                dominated_by[i].push(j);
+            } else if dominates(&points[j], &points[i]) {
+                domination_count[i] += 1;
+            }
+        }
+    }
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    let mut current: Vec<usize> = (0..n).filter(|&i| domination_count[i] == 0).collect();
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            for &j in &dominated_by[i] {
+                domination_count[j] -= 1;
+                if domination_count[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        fronts.push(std::mem::take(&mut current));
+        current = next;
+    }
+    fronts
+}
+
+/// Crowding distance of each point within one front (Deb et al. 2002).
+/// Boundary points get `f64::INFINITY`.
+pub fn crowding_distance(points: &[Vec<f64>], front: &[usize]) -> Vec<f64> {
+    let m = points.first().map_or(0, |p| p.len());
+    let k = front.len();
+    let mut dist = vec![0.0f64; k];
+    if k <= 2 {
+        return vec![f64::INFINITY; k];
+    }
+    for obj in 0..m {
+        let mut order: Vec<usize> = (0..k).collect();
+        order.sort_by(|&a, &b| points[front[a]][obj].total_cmp(&points[front[b]][obj]));
+        let lo = points[front[order[0]]][obj];
+        let hi = points[front[order[k - 1]]][obj];
+        let span = (hi - lo).max(1e-300);
+        dist[order[0]] = f64::INFINITY;
+        dist[order[k - 1]] = f64::INFINITY;
+        for w in 1..k - 1 {
+            let prev = points[front[order[w - 1]]][obj];
+            let next = points[front[order[w + 1]]][obj];
+            dist[order[w]] += (next - prev) / span;
+        }
+    }
+    dist
+}
+
+/// Indices of the Pareto-optimal points (first front).
+pub fn pareto_front(points: &[Vec<f64>]) -> Vec<usize> {
+    if points.is_empty() {
+        return Vec::new();
+    }
+    non_dominated_sort(points).remove(0)
+}
+
+/// Hypervolume dominated by `points` against `reference` (minimization;
+/// every point must weakly dominate the reference to contribute).
+/// Exact sweep for 2-D; Monte-Carlo with `mc_samples` for ≥3-D.
+pub fn hypervolume(points: &[Vec<f64>], reference: &[f64], mc_samples: usize) -> f64 {
+    let pts: Vec<&Vec<f64>> = points
+        .iter()
+        .filter(|p| p.iter().zip(reference).all(|(x, r)| x <= r))
+        .collect();
+    if pts.is_empty() {
+        return 0.0;
+    }
+    match reference.len() {
+        1 => {
+            let best = pts.iter().map(|p| p[0]).fold(f64::INFINITY, f64::min);
+            (reference[0] - best).max(0.0)
+        }
+        2 => {
+            // Sort by first objective; sweep.
+            let front = pareto_front(&pts.iter().map(|p| (*p).clone()).collect::<Vec<_>>());
+            let mut fp: Vec<&Vec<f64>> = front.iter().map(|&i| pts[i]).collect();
+            fp.sort_by(|a, b| a[0].total_cmp(&b[0]));
+            let mut hv = 0.0;
+            let mut prev_y = reference[1];
+            for p in fp {
+                hv += (reference[0] - p[0]) * (prev_y - p[1]);
+                prev_y = p[1];
+            }
+            hv
+        }
+        m => {
+            // Monte-Carlo over the box [ideal, reference].
+            let mut ideal = vec![f64::INFINITY; m];
+            for p in &pts {
+                for (i, &x) in p.iter().enumerate() {
+                    ideal[i] = ideal[i].min(x);
+                }
+            }
+            let volume: f64 = ideal
+                .iter()
+                .zip(reference)
+                .map(|(&a, &r)| (r - a).max(0.0))
+                .product();
+            if volume == 0.0 {
+                return 0.0;
+            }
+            let mut rng = crate::rng::Rng::new(0xFACE);
+            let mut hits = 0usize;
+            let samples = mc_samples.max(1000);
+            for _ in 0..samples {
+                let x: Vec<f64> = ideal
+                    .iter()
+                    .zip(reference)
+                    .map(|(&a, &r)| rng.uniform(a, r))
+                    .collect();
+                if pts.iter().any(|p| p.iter().zip(&x).all(|(a, b)| a <= b)) {
+                    hits += 1;
+                }
+            }
+            volume * hits as f64 / samples as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop;
+
+    #[test]
+    fn dominance_basics() {
+        assert!(dominates(&[1.0, 1.0], &[2.0, 2.0]));
+        assert!(dominates(&[1.0, 2.0], &[1.0, 3.0]));
+        assert!(!dominates(&[1.0, 3.0], &[2.0, 2.0]), "incomparable");
+        assert!(!dominates(&[1.0, 1.0], &[1.0, 1.0]), "equal not strict");
+    }
+
+    #[test]
+    fn nds_fronts_ordered() {
+        let pts = vec![
+            vec![1.0, 4.0], // front 0
+            vec![2.0, 2.0], // front 0
+            vec![4.0, 1.0], // front 0
+            vec![3.0, 3.0], // front 1 (dominated by [2,2])
+            vec![5.0, 5.0], // front 2
+        ];
+        let fronts = non_dominated_sort(&pts);
+        assert_eq!(fronts.len(), 3);
+        let mut f0 = fronts[0].clone();
+        f0.sort();
+        assert_eq!(f0, vec![0, 1, 2]);
+        assert_eq!(fronts[1], vec![3]);
+        assert_eq!(fronts[2], vec![4]);
+    }
+
+    #[test]
+    fn prop_first_front_is_mutually_nondominated() {
+        prop::check(100, |g| {
+            let n = g.usize(1, 20);
+            let pts: Vec<Vec<f64>> =
+                (0..n).map(|_| vec![g.f64(0.0, 1.0), g.f64(0.0, 1.0)]).collect();
+            let front = pareto_front(&pts);
+            for &i in &front {
+                for &j in &front {
+                    if i != j && dominates(&pts[i], &pts[j]) {
+                        return Err(format!("{i} dominates {j} within front"));
+                    }
+                }
+                // And nothing outside dominates a front member.
+                for (k, p) in pts.iter().enumerate() {
+                    if !front.contains(&k) && dominates(p, &pts[i]) {
+                        return Err(format!("outsider {k} dominates front member {i}"));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn crowding_boundaries_infinite() {
+        let pts = vec![vec![0.0, 3.0], vec![1.0, 2.0], vec![2.0, 1.0], vec![3.0, 0.0]];
+        let front: Vec<usize> = vec![0, 1, 2, 3];
+        let d = crowding_distance(&pts, &front);
+        assert!(d[0].is_infinite() && d[3].is_infinite());
+        assert!(d[1].is_finite() && d[1] > 0.0);
+    }
+
+    #[test]
+    fn hypervolume_2d_exact() {
+        // Single point (1,1) vs ref (2,2): hv = 1.
+        assert!((hypervolume(&[vec![1.0, 1.0]], &[2.0, 2.0], 0) - 1.0).abs() < 1e-12);
+        // Two points forming a staircase.
+        let hv = hypervolume(&[vec![1.0, 2.0], vec![2.0, 1.0]], &[3.0, 3.0], 0);
+        // (3-1)(3-2) + (3-2)(2-1) = 2 + 1 = 3.
+        assert!((hv - 3.0).abs() < 1e-12, "hv={hv}");
+        // Dominated point adds nothing.
+        let hv2 = hypervolume(
+            &[vec![1.0, 2.0], vec![2.0, 1.0], vec![2.5, 2.5]],
+            &[3.0, 3.0],
+            0,
+        );
+        assert!((hv2 - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hypervolume_monotone_in_points() {
+        prop::check(50, |g| {
+            let pts: Vec<Vec<f64>> = (0..g.usize(1, 8))
+                .map(|_| vec![g.f64(0.0, 1.0), g.f64(0.0, 1.0)])
+                .collect();
+            let hv1 = hypervolume(&pts, &[1.5, 1.5], 0);
+            let mut more = pts.clone();
+            more.push(vec![g.f64(0.0, 1.0), g.f64(0.0, 1.0)]);
+            let hv2 = hypervolume(&more, &[1.5, 1.5], 0);
+            prop::assert_holds(hv2 >= hv1 - 1e-12, format!("{hv2} < {hv1}"))
+        });
+    }
+
+    #[test]
+    fn hypervolume_3d_mc_close_to_exact_box() {
+        // One point at origin vs ref (1,1,1): exact hv = 1.
+        let hv = hypervolume(&[vec![0.0, 0.0, 0.0]], &[1.0, 1.0, 1.0], 20_000);
+        assert!((hv - 1.0).abs() < 0.05, "hv={hv}");
+    }
+
+    #[test]
+    fn orient_flips_maximize() {
+        let v = orient(&[1.0, 2.0], &[Direction::Minimize, Direction::Maximize]);
+        assert_eq!(v, vec![1.0, -2.0]);
+    }
+}

@@ -1,0 +1,39 @@
+//! The HOPAAS coordination service — the paper's contribution.
+//!
+//! A central server orchestrates hyperparameter-optimization *studies*
+//! across any number of heterogeneous client nodes through three POST
+//! APIs (`ask`, `tell`, `should_prune`) plus a `version` probe (paper
+//! Table 1). Studies are defined *by the clients*: the `ask` body carries
+//! the full study definition (search space, direction, sampler, pruner),
+//! and the server attaches the new trial to an existing study with the
+//! same canonical definition or creates one — this is what lets nodes
+//! from different sites join a campaign dynamically with no registration
+//! step.
+//!
+//! Module map:
+//! * [`space`] — search-space model (uniform / log-uniform / int /
+//!   categorical) and parameter values;
+//! * [`study`]/[`trial`] — state machines and the study registry;
+//! * [`samplers`] — TPE (Optuna-default reproduction), GP-EI, CMA-ES,
+//!   random, grid, Sobol;
+//! * [`pruners`] — median, percentile, successive-halving (ASHA),
+//!   hyperband, threshold, patient;
+//! * [`auth`] — HMAC-signed API tokens with expiry + revocation;
+//! * [`engine`] — the lock-disciplined core that the HTTP layer calls;
+//! * [`service`] — HTTP handlers (Table 1 APIs + web/data APIs + the
+//!   embedded dashboard);
+//! * [`metrics`] — counters/histograms and the Prometheus endpoint.
+
+pub mod auth;
+pub mod engine;
+pub mod metrics;
+pub mod mo;
+pub mod pruners;
+pub mod samplers;
+pub mod service;
+pub mod space;
+pub mod study;
+pub mod trial;
+
+pub use engine::{Engine, EngineConfig};
+pub use service::HopaasServer;

@@ -1,0 +1,517 @@
+//! Trial pruners.
+//!
+//! `should_prune` (paper §2) reports an intermediate `(step, value)` and
+//! asks whether the trial is "sufficiently likely to result in an
+//! improvement over the previous tests". Each pruner answers from the
+//! intermediate histories of the study's other trials:
+//!
+//! | name          | rule |
+//! |---------------|------|
+//! | `none`        | never prune |
+//! | `median`      | prune if the value is worse than the median of completed trials' values at the same step (Optuna's `MedianPruner`, with warmup) |
+//! | `percentile`  | generalization: worse than the q-th percentile |
+//! | `sha`         | asynchronous successive halving: at each rung `min_resource·η^k`, survive only if in the top 1/η of values seen at that rung |
+//! | `hyperband`   | SHA with the bracket chosen per-trial (round-robin by trial id), covering multiple `min_resource` regimes |
+//! | `threshold`   | prune on crossing an absolute bound (diverged loss) |
+//! | `patient`     | prune if no improvement over the trial's own best for `patience` steps |
+//!
+//! All pruners are pure functions of `(trial, study history)` so the
+//! decision is reproducible on WAL replay.
+
+use super::space::Direction;
+use super::study::AlgoConfig;
+use super::trial::{Trial, TrialState};
+
+/// Pruner interface. `history` is every other trial of the study
+/// (any state); `trial` has already recorded the step being judged.
+pub trait Pruner: Send {
+    fn name(&self) -> &'static str;
+
+    fn should_prune(
+        &self,
+        trial: &Trial,
+        step: u64,
+        value: f64,
+        history: &[&Trial],
+        direction: Direction,
+    ) -> bool;
+}
+
+/// Instantiate from study configuration.
+pub fn make_pruner(cfg: &AlgoConfig) -> Result<Box<dyn Pruner>, String> {
+    match cfg.name.as_str() {
+        "none" => Ok(Box::new(NonePruner)),
+        "median" => Ok(Box::new(PercentilePruner {
+            percentile: 50.0,
+            warmup_steps: cfg.u64_opt("warmup_steps", 0),
+            min_trials: cfg.u64_opt("min_trials", 4) as usize,
+        })),
+        "percentile" => Ok(Box::new(PercentilePruner {
+            percentile: cfg.f64_opt("percentile", 25.0),
+            warmup_steps: cfg.u64_opt("warmup_steps", 0),
+            min_trials: cfg.u64_opt("min_trials", 4) as usize,
+        })),
+        "sha" | "successive_halving" => Ok(Box::new(ShaPruner {
+            min_resource: cfg.u64_opt("min_resource", 1).max(1),
+            reduction_factor: cfg.u64_opt("reduction_factor", 3).max(2),
+            bracket_offset: 0,
+        })),
+        "hyperband" => Ok(Box::new(HyperbandPruner {
+            min_resource: cfg.u64_opt("min_resource", 1).max(1),
+            max_resource: cfg.u64_opt("max_resource", 81).max(2),
+            reduction_factor: cfg.u64_opt("reduction_factor", 3).max(2),
+        })),
+        "threshold" => Ok(Box::new(ThresholdPruner {
+            upper: cfg.options.get("upper").as_f64(),
+            lower: cfg.options.get("lower").as_f64(),
+        })),
+        "patient" => Ok(Box::new(PatientPruner {
+            patience: cfg.u64_opt("patience", 5),
+            min_delta: cfg.f64_opt("min_delta", 0.0),
+        })),
+        other => Err(format!("unknown pruner '{other}'")),
+    }
+}
+
+/// Never prunes.
+pub struct NonePruner;
+
+impl Pruner for NonePruner {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn should_prune(&self, _: &Trial, _: u64, _: f64, _: &[&Trial], _: Direction) -> bool {
+        false
+    }
+}
+
+/// Median/percentile pruner (Optuna `MedianPruner`/`PercentilePruner`).
+pub struct PercentilePruner {
+    /// Keep the trial if it is within the best `percentile`% at this step.
+    pub percentile: f64,
+    /// Never prune at steps below this.
+    pub warmup_steps: u64,
+    /// Need at least this many reference trials with a value at the step.
+    pub min_trials: usize,
+}
+
+impl PercentilePruner {
+    /// Reference values: other trials' intermediate value at `step`
+    /// (completed or terminal trials only — running peers may be ahead or
+    /// behind nondeterministically, matching Optuna which uses completed
+    /// trials).
+    fn reference_values(&self, step: u64, history: &[&Trial]) -> Vec<f64> {
+        history
+            .iter()
+            .filter(|t| t.state == TrialState::Completed || t.state == TrialState::Pruned)
+            .filter_map(|t| {
+                // Value at the exact step, or the last report before it
+                // (trials report on their own cadence).
+                t.intermediate
+                    .iter()
+                    .take_while(|(s, _)| *s <= step)
+                    .last()
+                    .map(|(_, v)| *v)
+            })
+            .filter(|v| v.is_finite())
+            .collect()
+    }
+}
+
+impl Pruner for PercentilePruner {
+    fn name(&self) -> &'static str {
+        "percentile"
+    }
+
+    fn should_prune(
+        &self,
+        _trial: &Trial,
+        step: u64,
+        value: f64,
+        history: &[&Trial],
+        direction: Direction,
+    ) -> bool {
+        if step < self.warmup_steps {
+            return false;
+        }
+        if !value.is_finite() {
+            return true;
+        }
+        let mut refs = self.reference_values(step, history);
+        if refs.len() < self.min_trials {
+            return false;
+        }
+        refs.sort_by(f64::total_cmp);
+        // Cutoff: the value must be at least as good as the q-th
+        // percentile of references (q measured from the *best* side).
+        let q = (self.percentile / 100.0).clamp(0.0, 1.0);
+        let idx = ((refs.len() - 1) as f64 * q).round() as usize;
+        let cutoff = match direction {
+            Direction::Minimize => refs[idx],
+            Direction::Maximize => refs[refs.len() - 1 - idx],
+        };
+        match direction {
+            Direction::Minimize => value > cutoff,
+            Direction::Maximize => value < cutoff,
+        }
+    }
+}
+
+/// Asynchronous successive halving (ASHA).
+pub struct ShaPruner {
+    pub min_resource: u64,
+    pub reduction_factor: u64,
+    /// Bracket shift (used by Hyperband).
+    pub bracket_offset: u32,
+}
+
+impl ShaPruner {
+    /// Rungs: min_resource · η^(offset + k).
+    fn rung_steps(&self, up_to: u64) -> Vec<u64> {
+        let mut rungs = Vec::new();
+        let mut r = self
+            .min_resource
+            .saturating_mul(self.reduction_factor.pow(self.bracket_offset));
+        while r <= up_to && rungs.len() < 32 {
+            rungs.push(r);
+            r = r.saturating_mul(self.reduction_factor);
+        }
+        rungs
+    }
+
+    /// Values competitors recorded at (or before, most recent) `rung`.
+    fn rung_values(rung: u64, history: &[&Trial]) -> Vec<f64> {
+        history
+            .iter()
+            .filter_map(|t| {
+                t.intermediate
+                    .iter()
+                    .take_while(|(s, _)| *s <= rung)
+                    .last()
+                    .map(|(_, v)| *v)
+            })
+            .filter(|v| v.is_finite())
+            .collect()
+    }
+}
+
+impl Pruner for ShaPruner {
+    fn name(&self) -> &'static str {
+        "sha"
+    }
+
+    fn should_prune(
+        &self,
+        trial: &Trial,
+        step: u64,
+        value: f64,
+        history: &[&Trial],
+        direction: Direction,
+    ) -> bool {
+        if !value.is_finite() {
+            return true;
+        }
+        // Judge only at rung boundaries (the latest rung ≤ step).
+        let rungs = self.rung_steps(step);
+        let Some(&rung) = rungs.last() else { return false };
+        // The trial's own value at the rung: latest report ≤ rung.
+        let own = trial
+            .intermediate
+            .iter()
+            .take_while(|(s, _)| *s <= rung)
+            .last()
+            .map(|(_, v)| *v)
+            .unwrap_or(value);
+        let mut vals = Self::rung_values(rung, history);
+        vals.push(own);
+        let n = vals.len();
+        // Need a meaningful cohort before halving.
+        if n < self.reduction_factor as usize {
+            return false;
+        }
+        vals.sort_by(f64::total_cmp);
+        let keep = (n as u64 / self.reduction_factor).max(1) as usize;
+        let survives = match direction {
+            Direction::Minimize => own <= vals[keep - 1],
+            Direction::Maximize => own >= vals[n - keep],
+        };
+        !survives
+    }
+}
+
+/// Hyperband: a set of SHA brackets with different minimum resources;
+/// each trial is assigned a bracket round-robin by id, so aggressive and
+/// conservative halving regimes coexist (Li et al. 2018, as in Optuna).
+pub struct HyperbandPruner {
+    pub min_resource: u64,
+    pub max_resource: u64,
+    pub reduction_factor: u64,
+}
+
+impl HyperbandPruner {
+    fn n_brackets(&self) -> u32 {
+        let mut n = 1u32;
+        let mut r = self.min_resource.max(1);
+        while r * self.reduction_factor <= self.max_resource && n < 8 {
+            r *= self.reduction_factor;
+            n += 1;
+        }
+        n
+    }
+}
+
+impl Pruner for HyperbandPruner {
+    fn name(&self) -> &'static str {
+        "hyperband"
+    }
+
+    fn should_prune(
+        &self,
+        trial: &Trial,
+        step: u64,
+        value: f64,
+        history: &[&Trial],
+        direction: Direction,
+    ) -> bool {
+        let bracket = (trial.id % self.n_brackets() as u64) as u32;
+        let sha = ShaPruner {
+            min_resource: self.min_resource,
+            reduction_factor: self.reduction_factor,
+            bracket_offset: bracket,
+        };
+        sha.should_prune(trial, step, value, history, direction)
+    }
+}
+
+/// Absolute-bound pruner (catches diverged losses immediately).
+pub struct ThresholdPruner {
+    pub upper: Option<f64>,
+    pub lower: Option<f64>,
+}
+
+impl Pruner for ThresholdPruner {
+    fn name(&self) -> &'static str {
+        "threshold"
+    }
+
+    fn should_prune(&self, _: &Trial, _: u64, value: f64, _: &[&Trial], _: Direction) -> bool {
+        if !value.is_finite() {
+            return true;
+        }
+        if let Some(u) = self.upper {
+            if value > u {
+                return true;
+            }
+        }
+        if let Some(l) = self.lower {
+            if value < l {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+/// Prune when the trial stops improving on itself (early stopping).
+pub struct PatientPruner {
+    pub patience: u64,
+    pub min_delta: f64,
+}
+
+impl Pruner for PatientPruner {
+    fn name(&self) -> &'static str {
+        "patient"
+    }
+
+    fn should_prune(
+        &self,
+        trial: &Trial,
+        _step: u64,
+        value: f64,
+        _history: &[&Trial],
+        direction: Direction,
+    ) -> bool {
+        if !value.is_finite() {
+            return true;
+        }
+        let series = &trial.intermediate;
+        if series.len() <= self.patience as usize {
+            return false;
+        }
+        // Best value before the patience window must beat everything in
+        // the window (including the current value) by min_delta.
+        let cut = series.len() - self.patience as usize;
+        let best_before = series[..cut]
+            .iter()
+            .map(|(_, v)| *v)
+            .fold(match direction {
+                Direction::Minimize => f64::INFINITY,
+                Direction::Maximize => f64::NEG_INFINITY,
+            }, |a, b| match direction {
+                Direction::Minimize => a.min(b),
+                Direction::Maximize => a.max(b),
+            });
+        let best_in_window = series[cut..]
+            .iter()
+            .map(|(_, v)| *v)
+            .chain(std::iter::once(value))
+            .fold(match direction {
+                Direction::Minimize => f64::INFINITY,
+                Direction::Maximize => f64::NEG_INFINITY,
+            }, |a, b| match direction {
+                Direction::Minimize => a.min(b),
+                Direction::Maximize => a.max(b),
+            });
+        match direction {
+            Direction::Minimize => best_in_window > best_before - self.min_delta,
+            Direction::Maximize => best_in_window < best_before + self.min_delta,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::Value;
+
+    fn trial_with(id: u64, series: &[(u64, f64)], state: TrialState) -> Trial {
+        let mut t = Trial::new(id, id, vec![("x".into(), Value::Num(0.5))], 0.0, None);
+        for &(s, v) in series {
+            t.report(s, v).unwrap();
+        }
+        match state {
+            TrialState::Completed => t.complete(series.last().map(|x| x.1).unwrap_or(0.0), 1.0).unwrap(),
+            TrialState::Pruned => t.prune(1.0).unwrap(),
+            TrialState::Failed => t.fail(1.0).unwrap(),
+            TrialState::Running => {}
+        }
+        t
+    }
+
+    #[test]
+    fn median_prunes_bad_trial() {
+        // Four completed trials with loss 1.0 at step 5; candidate at 10.0.
+        let hist: Vec<Trial> = (0..4)
+            .map(|i| trial_with(i, &[(5, 1.0 + i as f64 * 0.01)], TrialState::Completed))
+            .collect();
+        let refs: Vec<&Trial> = hist.iter().collect();
+        let p = PercentilePruner { percentile: 50.0, warmup_steps: 0, min_trials: 4 };
+        let cand = trial_with(99, &[(5, 10.0)], TrialState::Running);
+        assert!(p.should_prune(&cand, 5, 10.0, &refs, Direction::Minimize));
+        let good = trial_with(98, &[(5, 0.5)], TrialState::Running);
+        assert!(!p.should_prune(&good, 5, 0.5, &refs, Direction::Minimize));
+    }
+
+    #[test]
+    fn median_respects_warmup_and_min_trials() {
+        let hist: Vec<Trial> =
+            (0..2).map(|i| trial_with(i, &[(5, 1.0)], TrialState::Completed)).collect();
+        let refs: Vec<&Trial> = hist.iter().collect();
+        let p = PercentilePruner { percentile: 50.0, warmup_steps: 10, min_trials: 4 };
+        let cand = trial_with(99, &[(5, 100.0)], TrialState::Running);
+        // Below warmup.
+        assert!(!p.should_prune(&cand, 5, 100.0, &refs, Direction::Minimize));
+        // Past warmup but too few reference trials.
+        let p2 = PercentilePruner { percentile: 50.0, warmup_steps: 0, min_trials: 4 };
+        assert!(!p2.should_prune(&cand, 5, 100.0, &refs, Direction::Minimize));
+    }
+
+    #[test]
+    fn median_direction_maximize() {
+        let hist: Vec<Trial> = (0..4)
+            .map(|i| trial_with(i, &[(3, 0.8 + 0.01 * i as f64)], TrialState::Completed))
+            .collect();
+        let refs: Vec<&Trial> = hist.iter().collect();
+        let p = PercentilePruner { percentile: 50.0, warmup_steps: 0, min_trials: 4 };
+        let bad = trial_with(99, &[(3, 0.1)], TrialState::Running);
+        assert!(p.should_prune(&bad, 3, 0.1, &refs, Direction::Maximize));
+        let good = trial_with(98, &[(3, 0.95)], TrialState::Running);
+        assert!(!p.should_prune(&good, 3, 0.95, &refs, Direction::Maximize));
+    }
+
+    #[test]
+    fn nonfinite_always_pruned() {
+        let p = PercentilePruner { percentile: 50.0, warmup_steps: 0, min_trials: 4 };
+        let cand = trial_with(1, &[], TrialState::Running);
+        assert!(p.should_prune(&cand, 1, f64::NAN, &[], Direction::Minimize));
+        let t = ThresholdPruner { upper: None, lower: None };
+        assert!(t.should_prune(&cand, 1, f64::INFINITY, &[], Direction::Minimize));
+    }
+
+    #[test]
+    fn sha_halves_at_rungs() {
+        // 9 competitors at rung 1 with values 1..9; η=3 keeps top 3.
+        let hist: Vec<Trial> = (0..9)
+            .map(|i| trial_with(i, &[(1, (i + 1) as f64)], TrialState::Running))
+            .collect();
+        let refs: Vec<&Trial> = hist.iter().collect();
+        let sha = ShaPruner { min_resource: 1, reduction_factor: 3, bracket_offset: 0 };
+        let good = trial_with(90, &[(1, 0.5)], TrialState::Running);
+        assert!(!sha.should_prune(&good, 1, 0.5, &refs, Direction::Minimize));
+        let bad = trial_with(91, &[(1, 8.5)], TrialState::Running);
+        assert!(sha.should_prune(&bad, 1, 8.5, &refs, Direction::Minimize));
+    }
+
+    #[test]
+    fn sha_no_decision_off_rung_with_min_resource() {
+        let sha = ShaPruner { min_resource: 4, reduction_factor: 2, bracket_offset: 0 };
+        let cand = trial_with(1, &[(2, 100.0)], TrialState::Running);
+        // Step 2 < min_resource 4: no rung reached yet.
+        assert!(!sha.should_prune(&cand, 2, 100.0, &[], Direction::Minimize));
+    }
+
+    #[test]
+    fn sha_small_cohort_not_pruned() {
+        let sha = ShaPruner { min_resource: 1, reduction_factor: 3, bracket_offset: 0 };
+        let hist = vec![trial_with(0, &[(1, 0.1)], TrialState::Running)];
+        let refs: Vec<&Trial> = hist.iter().collect();
+        let cand = trial_with(1, &[(1, 5.0)], TrialState::Running);
+        // Cohort of 2 < η=3: survive.
+        assert!(!sha.should_prune(&cand, 1, 5.0, &refs, Direction::Minimize));
+    }
+
+    #[test]
+    fn hyperband_brackets_differ_by_trial_id() {
+        let hb = HyperbandPruner { min_resource: 1, max_resource: 81, reduction_factor: 3 };
+        assert!(hb.n_brackets() >= 4);
+        // A trial in bracket 0 is judged at step 1; a trial in a later
+        // bracket is not (its first rung is higher).
+        let hist: Vec<Trial> = (0..9)
+            .map(|i| trial_with(100 + i, &[(1, (i + 1) as f64)], TrialState::Running))
+            .collect();
+        let refs: Vec<&Trial> = hist.iter().collect();
+        let b0 = trial_with(hb.n_brackets() as u64 * 10, &[(1, 50.0)], TrialState::Running); // id % n == 0
+        assert!(hb.should_prune(&b0, 1, 50.0, &refs, Direction::Minimize));
+        let b1 = trial_with(hb.n_brackets() as u64 * 10 + 1, &[(1, 50.0)], TrialState::Running);
+        assert!(!hb.should_prune(&b1, 1, 50.0, &refs, Direction::Minimize), "bracket 1 first rung is 3");
+    }
+
+    #[test]
+    fn threshold_bounds() {
+        let t = ThresholdPruner { upper: Some(10.0), lower: Some(-1.0) };
+        let cand = trial_with(1, &[], TrialState::Running);
+        assert!(t.should_prune(&cand, 1, 11.0, &[], Direction::Minimize));
+        assert!(t.should_prune(&cand, 1, -2.0, &[], Direction::Minimize));
+        assert!(!t.should_prune(&cand, 1, 5.0, &[], Direction::Minimize));
+    }
+
+    #[test]
+    fn patient_prunes_stagnation() {
+        let p = PatientPruner { patience: 3, min_delta: 0.0 };
+        // Improving: 5,4,3,2 → no prune.
+        let improving = trial_with(1, &[(1, 5.0), (2, 4.0), (3, 3.0), (4, 2.0)], TrialState::Running);
+        assert!(!p.should_prune(&improving, 5, 1.5, &[], Direction::Minimize));
+        // Stagnant after step 1: 1, 2, 2, 2 → prune.
+        let stagnant = trial_with(2, &[(1, 1.0), (2, 2.0), (3, 2.0), (4, 2.0)], TrialState::Running);
+        assert!(p.should_prune(&stagnant, 5, 2.0, &[], Direction::Minimize));
+    }
+
+    #[test]
+    fn factory_dispatch() {
+        for name in ["none", "median", "percentile", "sha", "hyperband", "threshold", "patient"] {
+            assert!(make_pruner(&AlgoConfig::new(name)).is_ok(), "{name}");
+        }
+        assert!(make_pruner(&AlgoConfig::new("wat")).is_err());
+    }
+}

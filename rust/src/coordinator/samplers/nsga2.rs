@@ -1,0 +1,226 @@
+//! NSGA-II-style multi-objective sampler (Deb et al. 2002), adapted to
+//! HOPAAS's asynchronous ask/tell protocol: instead of lock-step
+//! generations, each suggestion re-derives the parent population from
+//! the most recent window of completed trials — the same
+//! stateless-from-history design as the other samplers, so recovery and
+//! multi-node campaigns need no sampler state.
+//!
+//! Per suggestion:
+//! 1. window = last `2·pop_size` multi-valued observations (unit cube);
+//! 2. rank by fast non-dominated sort + crowding distance;
+//! 3. two parents by binary tournament (rank, then crowding);
+//! 4. SBX crossover (η_c = 15, p = 0.9) + polynomial mutation
+//!    (η_m = 20, p = 1/d) per dimension;
+//! 5. clamp to the cube and map back to the search space.
+
+use super::super::mo::{crowding_distance, non_dominated_sort, orient};
+use super::super::space::{Assignment, Direction, Space};
+use super::super::study::AlgoConfig;
+use crate::rng::Rng;
+
+/// A multi-objective observation.
+#[derive(Clone, Debug)]
+pub struct MoObs {
+    pub params: Assignment,
+    pub values: Vec<f64>,
+}
+
+/// NSGA-II sampler configuration.
+pub struct Nsga2Sampler {
+    pub pop_size: usize,
+    pub crossover_eta: f64,
+    pub crossover_prob: f64,
+    pub mutation_eta: f64,
+}
+
+impl Nsga2Sampler {
+    pub fn from_config(cfg: &AlgoConfig) -> Nsga2Sampler {
+        Nsga2Sampler {
+            pop_size: cfg.u64_opt("pop_size", 24) as usize,
+            crossover_eta: cfg.f64_opt("crossover_eta", 15.0),
+            crossover_prob: cfg.f64_opt("crossover_prob", 0.9),
+            mutation_eta: cfg.f64_opt("mutation_eta", 20.0),
+        }
+    }
+
+    /// Suggest the next point for a multi-objective study.
+    pub fn suggest_mo(
+        &self,
+        space: &Space,
+        obs: &[MoObs],
+        directions: &[Direction],
+        rng: &mut Rng,
+    ) -> Assignment {
+        let usable: Vec<&MoObs> = obs
+            .iter()
+            .filter(|o| {
+                o.values.len() == directions.len() && o.values.iter().all(|v| v.is_finite())
+            })
+            .collect();
+        if usable.len() < self.pop_size.max(4) {
+            return space.sample(rng);
+        }
+        // Window of the most recent 2·pop.
+        let window = (2 * self.pop_size).min(usable.len());
+        let pop = &usable[usable.len() - window..];
+
+        let xs: Vec<Vec<f64>> = pop
+            .iter()
+            .filter_map(|o| space.to_unit(&o.params))
+            .collect();
+        if xs.len() < 4 {
+            return space.sample(rng);
+        }
+        let ys: Vec<Vec<f64>> = pop.iter().map(|o| orient(&o.values, directions)).collect();
+
+        // Rank + crowding over the window.
+        let fronts = non_dominated_sort(&ys);
+        let mut rank = vec![usize::MAX; ys.len()];
+        let mut crowd = vec![0.0f64; ys.len()];
+        for (r, front) in fronts.iter().enumerate() {
+            let d = crowding_distance(&ys, front);
+            for (&i, &di) in front.iter().zip(&d) {
+                rank[i] = r;
+                crowd[i] = di;
+            }
+        }
+
+        let tournament = |rng: &mut Rng| -> usize {
+            let a = rng.below(xs.len() as u64) as usize;
+            let b = rng.below(xs.len() as u64) as usize;
+            if rank[a] < rank[b] || (rank[a] == rank[b] && crowd[a] > crowd[b]) {
+                a
+            } else {
+                b
+            }
+        };
+        let p1 = &xs[tournament(rng)];
+        let p2 = &xs[tournament(rng)];
+
+        let d = space.len();
+        let mut child = Vec::with_capacity(d);
+        let do_crossover = rng.chance(self.crossover_prob);
+        for k in 0..d {
+            let (x1, x2) = (p1[k], p2[k]);
+            // SBX crossover.
+            let mut c = if do_crossover {
+                let u = rng.f64();
+                let beta = if u <= 0.5 {
+                    (2.0 * u).powf(1.0 / (self.crossover_eta + 1.0))
+                } else {
+                    (1.0 / (2.0 * (1.0 - u))).powf(1.0 / (self.crossover_eta + 1.0))
+                };
+                if rng.chance(0.5) {
+                    0.5 * ((1.0 + beta) * x1 + (1.0 - beta) * x2)
+                } else {
+                    0.5 * ((1.0 - beta) * x1 + (1.0 + beta) * x2)
+                }
+            } else {
+                x1
+            };
+            // Polynomial mutation with probability 1/d.
+            if rng.chance(1.0 / d as f64) {
+                let u = rng.f64();
+                let delta = if u < 0.5 {
+                    (2.0 * u).powf(1.0 / (self.mutation_eta + 1.0)) - 1.0
+                } else {
+                    1.0 - (2.0 * (1.0 - u)).powf(1.0 / (self.mutation_eta + 1.0))
+                };
+                c += delta;
+            }
+            child.push(c.clamp(0.0, 1.0 - 1e-12));
+        }
+        space.from_unit(&child)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::parse;
+
+    fn space2d() -> Space {
+        Space::from_json(
+            &parse(r#"{"x": {"low": 0.0, "high": 1.0}, "y": {"low": 0.0, "high": 1.0}}"#).unwrap(),
+        )
+        .unwrap()
+    }
+
+    fn sampler() -> Nsga2Sampler {
+        Nsga2Sampler::from_config(&AlgoConfig::new("nsga2"))
+    }
+
+    /// Simple bi-objective: f1 = x, f2 = 1 - x + y (trade-off along x,
+    /// y should go to 0).
+    fn eval(asg: &Assignment) -> Vec<f64> {
+        let x = asg[0].1.as_f64().unwrap();
+        let y = asg[1].1.as_f64().unwrap();
+        vec![x, 1.0 - x + y]
+    }
+
+    #[test]
+    fn random_until_population() {
+        let s = sampler();
+        let sp = space2d();
+        let mut rng = Rng::new(1);
+        let a = s.suggest_mo(&sp, &[], &[Direction::Minimize, Direction::Minimize], &mut rng);
+        assert!(sp.contains("x", &a[0].1));
+    }
+
+    #[test]
+    fn drives_y_to_zero() {
+        // On f = (x, 1-x+y), all Pareto-optimal points have y = 0. After
+        // a few "generations" NSGA-II should propose low y far more often
+        // than uniform.
+        let s = sampler();
+        let sp = space2d();
+        let mut rng = Rng::new(7);
+        let dirs = [Direction::Minimize, Direction::Minimize];
+        let mut obs: Vec<MoObs> = Vec::new();
+        // Seed random, then iterate suggest→evaluate.
+        for _ in 0..30 {
+            let a = sp.sample(&mut rng);
+            let v = eval(&a);
+            obs.push(MoObs { params: a, values: v });
+        }
+        for _ in 0..120 {
+            let a = s.suggest_mo(&sp, &obs, &dirs, &mut rng);
+            let v = eval(&a);
+            obs.push(MoObs { params: a, values: v });
+        }
+        let last50: Vec<f64> = obs[obs.len() - 50..]
+            .iter()
+            .map(|o| o.params[1].1.as_f64().unwrap())
+            .collect();
+        let mean_y = last50.iter().sum::<f64>() / last50.len() as f64;
+        assert!(mean_y < 0.25, "mean y of late proposals = {mean_y} (uniform would be 0.5)");
+    }
+
+    #[test]
+    fn domain_respected_and_handles_bad_values() {
+        let s = sampler();
+        let sp = space2d();
+        crate::testutil::prop::check(50, |g| {
+            let dirs = [Direction::Minimize, Direction::Maximize];
+            let mut obs = Vec::new();
+            for i in 0..g.usize(0, 60) {
+                let a = sp.sample(g.rng());
+                let values = if i % 7 == 0 {
+                    vec![f64::NAN, 1.0] // rejected
+                } else if i % 11 == 0 {
+                    vec![1.0] // wrong arity, rejected
+                } else {
+                    vec![g.f64(0.0, 1.0), g.f64(0.0, 1.0)]
+                };
+                obs.push(MoObs { params: a, values });
+            }
+            let a = s.suggest_mo(&sp, &obs, &dirs, g.rng());
+            for (n, v) in &a {
+                if !sp.contains(n, v) {
+                    return Err(format!("{n}={v}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

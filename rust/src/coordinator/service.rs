@@ -1,0 +1,600 @@
+//! HTTP service layer: the paper's Table 1 API surface plus the
+//! web/monitoring APIs and the embedded dashboard.
+//!
+//! | API            | Method | Path                        |
+//! |----------------|--------|-----------------------------|
+//! | version        | GET    | `/api/version`              |
+//! | ask            | POST   | `/api/ask/{token}`          |
+//! | tell           | POST   | `/api/tell/{token}`         |
+//! | should_prune   | POST   | `/api/should_prune/{token}` |
+//! | fail           | POST   | `/api/fail/{token}`         |
+//! | token issue    | POST   | `/api/token`                |
+//! | token revoke   | POST   | `/api/revoke/{token}`       |
+//! | studies        | GET    | `/api/studies`              |
+//! | study          | GET    | `/api/studies/{id}`         |
+//! | trials         | GET    | `/api/studies/{id}/trials`  |
+//! | series         | GET    | `/api/studies/{id}/series`  |
+//! | metrics        | GET    | `/metrics`                  |
+//! | health         | GET    | `/healthz`                  |
+//! | dashboard      | GET    | `/`                         |
+//!
+//! Error envelope is FastAPI's `{"detail": ...}`; auth failures are 401,
+//! unknown trials 404, state conflicts 409, malformed bodies 400/422 —
+//! the mapping HOPAAS clients are written against.
+
+use super::auth::TokenService;
+use super::engine::{ApiError, Engine, EngineConfig};
+use crate::http::{PathParams, Request, Response, Router, Server, ServerConfig, ServerHandle};
+use crate::json::Value;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Server assembly options.
+pub struct HopaasConfig {
+    pub engine: EngineConfig,
+    pub http: ServerConfig,
+    /// Require valid tokens on the Table 1 APIs. Benches may disable.
+    pub auth_required: bool,
+    /// HMAC secret for tokens.
+    pub secret: Vec<u8>,
+    /// Storage directory; `None` = in-memory.
+    pub data_dir: Option<std::path::PathBuf>,
+}
+
+impl Default for HopaasConfig {
+    fn default() -> Self {
+        HopaasConfig {
+            engine: EngineConfig::default(),
+            http: ServerConfig::default(),
+            auth_required: true,
+            secret: b"hopaas-dev-secret".to_vec(),
+            data_dir: None,
+        }
+    }
+}
+
+/// A running HOPAAS service.
+pub struct HopaasServer {
+    pub engine: Arc<Engine>,
+    pub tokens: Arc<TokenService>,
+    handle: ServerHandle,
+    /// A token issued at startup so single-user setups work immediately
+    /// (printed by the CLI; the web flow of the paper is out of scope).
+    pub bootstrap_token: String,
+}
+
+impl HopaasServer {
+    /// Build the engine, router and HTTP server, and start serving.
+    pub fn start(addr: &str, config: HopaasConfig) -> anyhow::Result<HopaasServer> {
+        let engine = Arc::new(match &config.data_dir {
+            Some(dir) => Engine::open(dir, config.engine.clone())
+                .map_err(|e| anyhow::anyhow!(e.to_string()))?,
+            None => Engine::in_memory(config.engine.clone()),
+        });
+        let tokens = Arc::new(TokenService::new(&config.secret));
+        let bootstrap_token = tokens.issue("bootstrap", engine.now(), 365.0 * 86400.0);
+        let router = build_router(engine.clone(), tokens.clone(), config.auth_required);
+        let server = Server::bind(addr, router, config.http.clone())?;
+        let handle = server.start();
+        Ok(HopaasServer { engine, tokens, handle, bootstrap_token })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.handle.addr()
+    }
+
+    pub fn stop(self) {
+        self.handle.stop();
+    }
+}
+
+fn err_response(e: &ApiError) -> Response {
+    match e {
+        ApiError::BadRequest(m) => Response::error(422, m),
+        ApiError::NotFound(m) => Response::error(404, m),
+        ApiError::Conflict(m) => Response::error(409, m),
+        ApiError::Storage(m) => Response::error(500, m),
+    }
+}
+
+/// Parse a request body as JSON or produce the 400 envelope.
+fn body_json(req: &Request) -> Result<Value, Response> {
+    let text = req
+        .body_str()
+        .ok_or_else(|| Response::error(400, "body must be utf-8"))?;
+    crate::json::parse(text).map_err(|e| Response::error(400, &format!("invalid json: {e}")))
+}
+
+/// Assemble the full router. Exposed for in-process benches (no TCP).
+pub fn build_router(
+    engine: Arc<Engine>,
+    tokens: Arc<TokenService>,
+    auth_required: bool,
+) -> Router {
+    let mut router = Router::new();
+
+    // --- version -------------------------------------------------------
+    router.get("/api/version", |_, _| {
+        let mut o = Value::obj();
+        o.set("version", crate::VERSION).set("service", "hopaas");
+        Response::json(&Value::Obj(o))
+    });
+
+    router.get("/healthz", |_, _| Response::text("ok"));
+
+    // --- auth helper ----------------------------------------------------
+    let check = {
+        let tokens = tokens.clone();
+        let engine = engine.clone();
+        move |params: &PathParams| -> Option<Response> {
+            if !auth_required {
+                return None;
+            }
+            let tok = params.get("token").unwrap_or("");
+            match tokens.validate(tok, engine.now()) {
+                Ok(_) => None,
+                Err(e) => {
+                    engine.metrics.auth_failures.inc();
+                    Some(Response::error(401, &e.to_string()))
+                }
+            }
+        }
+    };
+
+    // --- ask -------------------------------------------------------------
+    {
+        let engine = engine.clone();
+        let check = check.clone();
+        router.post("/api/ask/{token}", move |req, params| {
+            if let Some(resp) = check(params) {
+                return resp;
+            }
+            let t0 = Instant::now();
+            let body = match body_json(req) {
+                Ok(b) => b,
+                Err(r) => return r,
+            };
+            let result = engine.ask(&body);
+            engine
+                .metrics
+                .ask_latency
+                .observe(t0.elapsed().as_secs_f64());
+            match result {
+                Ok(reply) => {
+                    let mut o = Value::obj();
+                    o.set("trial_id", reply.trial_id)
+                        .set("trial_number", reply.trial_number)
+                        .set("study_id", reply.study_id)
+                        .set("study_key", reply.study_key.as_str())
+                        .set("params", reply.params);
+                    Response::json(&Value::Obj(o))
+                }
+                Err(e) => err_response(&e),
+            }
+        });
+    }
+
+    // --- tell --------------------------------------------------------------
+    {
+        let engine = engine.clone();
+        let check = check.clone();
+        router.post("/api/tell/{token}", move |req, params| {
+            if let Some(resp) = check(params) {
+                return resp;
+            }
+            let t0 = Instant::now();
+            let body = match body_json(req) {
+                Ok(b) => b,
+                Err(r) => return r,
+            };
+            let Some(trial_id) = body.get("trial_id").as_u64() else {
+                return Response::error(422, "missing 'trial_id'");
+            };
+            // Multi-objective: "values" array (paper §5 future work).
+            if let Some(vals) = body.get("values").as_arr() {
+                let values: Vec<f64> = vals.iter().filter_map(Value::as_f64).collect();
+                if values.len() != vals.len() {
+                    return Response::error(422, "'values' must be numeric");
+                }
+                let result = engine.tell_values(trial_id, values);
+                engine
+                    .metrics
+                    .tell_latency
+                    .observe(t0.elapsed().as_secs_f64());
+                return match result {
+                    Ok((study_id, on_front)) => {
+                        let mut o = Value::obj();
+                        o.set("trial_id", trial_id)
+                            .set("study_id", study_id)
+                            .set("state", "completed")
+                            .set("on_pareto_front", on_front);
+                        Response::json(&Value::Obj(o))
+                    }
+                    Err(e) => err_response(&e),
+                };
+            }
+            // Accept "value", "score" or "loss" — client dialects.
+            let value = body
+                .get("value")
+                .as_f64()
+                .or_else(|| body.get("score").as_f64())
+                .or_else(|| body.get("loss").as_f64());
+            let Some(value) = value else {
+                return Response::error(422, "missing numeric 'value'");
+            };
+            let result = engine.tell(trial_id, value);
+            engine
+                .metrics
+                .tell_latency
+                .observe(t0.elapsed().as_secs_f64());
+            match result {
+                Ok((study_id, is_best)) => {
+                    let mut o = Value::obj();
+                    o.set("trial_id", trial_id)
+                        .set("study_id", study_id)
+                        .set("state", "completed")
+                        .set("is_best", is_best);
+                    Response::json(&Value::Obj(o))
+                }
+                Err(e) => err_response(&e),
+            }
+        });
+    }
+
+    // --- should_prune ---------------------------------------------------
+    {
+        let engine = engine.clone();
+        let check = check.clone();
+        router.post("/api/should_prune/{token}", move |req, params| {
+            if let Some(resp) = check(params) {
+                return resp;
+            }
+            let t0 = Instant::now();
+            let body = match body_json(req) {
+                Ok(b) => b,
+                Err(r) => return r,
+            };
+            let (Some(trial_id), Some(step), Some(value)) = (
+                body.get("trial_id").as_u64(),
+                body.get("step").as_u64(),
+                body.get("value")
+                    .as_f64()
+                    .or_else(|| body.get("loss").as_f64()),
+            ) else {
+                return Response::error(422, "need 'trial_id', 'step', numeric 'value'");
+            };
+            let result = engine.should_prune(trial_id, step, value);
+            engine
+                .metrics
+                .should_prune_latency
+                .observe(t0.elapsed().as_secs_f64());
+            match result {
+                Ok(prune) => {
+                    let mut o = Value::obj();
+                    o.set("trial_id", trial_id).set("should_prune", prune);
+                    Response::json(&Value::Obj(o))
+                }
+                Err(e) => err_response(&e),
+            }
+        });
+    }
+
+    // --- fail -------------------------------------------------------------
+    {
+        let engine = engine.clone();
+        let check = check.clone();
+        router.post("/api/fail/{token}", move |req, params| {
+            if let Some(resp) = check(params) {
+                return resp;
+            }
+            let body = match body_json(req) {
+                Ok(b) => b,
+                Err(r) => return r,
+            };
+            let Some(trial_id) = body.get("trial_id").as_u64() else {
+                return Response::error(422, "missing 'trial_id'");
+            };
+            match engine.fail(trial_id) {
+                Ok(()) => {
+                    let mut o = Value::obj();
+                    o.set("trial_id", trial_id).set("state", "failed");
+                    Response::json(&Value::Obj(o))
+                }
+                Err(e) => err_response(&e),
+            }
+        });
+    }
+
+    // --- token management -------------------------------------------------
+    {
+        let tokens = tokens.clone();
+        let engine = engine.clone();
+        router.post("/api/token", move |req, _| {
+            let body = match body_json(req) {
+                Ok(b) => b,
+                Err(r) => return r,
+            };
+            let user = body.get("user").as_str().unwrap_or("anonymous");
+            let ttl = body.get("ttl").as_f64().unwrap_or(86400.0);
+            let tok = tokens.issue(user, engine.now(), ttl);
+            let mut o = Value::obj();
+            o.set("token", tok).set("user", user).set("ttl", ttl);
+            Response::json(&Value::Obj(o))
+        });
+    }
+    {
+        let tokens = tokens.clone();
+        let engine = engine.clone();
+        router.post("/api/revoke/{token}", move |_, params| {
+            let tok = params.get("token").unwrap_or("");
+            match tokens.validate(tok, engine.now()) {
+                Ok(claims) => {
+                    tokens.revoke(claims.uid);
+                    let mut o = Value::obj();
+                    o.set("revoked", claims.uid);
+                    Response::json(&Value::Obj(o))
+                }
+                Err(e) => Response::error(401, &e.to_string()),
+            }
+        });
+    }
+
+    // --- web data APIs (dashboard feeds, paper §3) -------------------------
+    {
+        let engine = engine.clone();
+        router.get("/api/studies", move |_, _| Response::json(&engine.studies_json()));
+    }
+    {
+        let engine = engine.clone();
+        router.get("/api/studies/{id}", move |_, params| {
+            match params.get("id").and_then(|s| s.parse().ok()).and_then(|id| engine.study_json(id)) {
+                Some(v) => Response::json(&v),
+                None => Response::error(404, "unknown study"),
+            }
+        });
+    }
+    {
+        let engine = engine.clone();
+        router.get("/api/studies/{id}/trials", move |_, params| {
+            match params.get("id").and_then(|s| s.parse().ok()).and_then(|id| engine.trials_json(id)) {
+                Some(v) => Response::json(&v),
+                None => Response::error(404, "unknown study"),
+            }
+        });
+    }
+    {
+        let engine = engine.clone();
+        router.get("/api/studies/{id}/pareto", move |_, params| {
+            match params.get("id").and_then(|s| s.parse().ok()).and_then(|id| engine.pareto_json(id)) {
+                Some(v) => Response::json(&v),
+                None => Response::error(404, "unknown study"),
+            }
+        });
+    }
+    {
+        let engine = engine.clone();
+        router.get("/api/studies/{id}/series", move |_, params| {
+            match params.get("id").and_then(|s| s.parse().ok()).and_then(|id| engine.series_json(id)) {
+                Some(v) => Response::json(&v),
+                None => Response::error(404, "unknown study"),
+            }
+        });
+    }
+
+    // --- metrics + dashboard ----------------------------------------------
+    {
+        let engine = engine.clone();
+        router.get("/metrics", move |_, _| Response::text(&engine.metrics.render()));
+    }
+    router.get("/", |_, _| Response::html(DASHBOARD_HTML));
+
+    router
+}
+
+/// Minimal single-page dashboard: fetches the web data APIs at regular
+/// intervals and renders study tables + loss curves on a canvas — the
+/// role Chartist plays in the paper's web UI.
+const DASHBOARD_HTML: &str = r#"<!DOCTYPE html>
+<html><head><meta charset="utf-8"><title>HOPAAS</title>
+<style>
+body{font-family:system-ui,sans-serif;margin:2rem;background:#10141a;color:#dde}
+h1{font-size:1.4rem} h2{font-size:1.1rem;margin-top:1.5rem}
+table{border-collapse:collapse;width:100%;font-size:0.9rem}
+td,th{border-bottom:1px solid #334;padding:0.3rem 0.6rem;text-align:left}
+tr:hover{background:#1a2030} .best{color:#7f7} .state-pruned{color:#fa5}
+.state-running{color:#7af} .state-failed{color:#f66}
+canvas{background:#0a0d12;border:1px solid #334;margin-top:0.5rem}
+</style></head><body>
+<h1>HOPAAS &mdash; Hyperparameter Optimization As A Service</h1>
+<div id="studies"></div>
+<h2>Loss curves <span id="which"></span></h2>
+<canvas id="chart" width="900" height="300"></canvas>
+<script>
+let current = null;
+async function refresh() {
+  const studies = await (await fetch('/api/studies')).json();
+  const el = document.getElementById('studies');
+  el.innerHTML = '<table><tr><th>id</th><th>name</th><th>direction</th>'+
+    '<th>sampler</th><th>trials</th><th>running</th><th>completed</th>'+
+    '<th>pruned</th><th>best</th></tr>' + studies.map(s =>
+    `<tr onclick="current=${s.id};refresh()"><td>${s.id}</td><td>${s.name}</td>`+
+    `<td>${s.direction}</td><td>${s.sampler.name}</td><td>${s.n_trials}</td>`+
+    `<td>${s.n_running}</td><td>${s.n_completed}</td><td>${s.n_pruned}</td>`+
+    `<td class="best">${s.best_value==null?'—':s.best_value.toPrecision(5)}</td></tr>`
+  ).join('') + '</table>';
+  if (current==null && studies.length) current = studies[0].id;
+  if (current!=null) drawSeries(current);
+}
+async function drawSeries(id) {
+  document.getElementById('which').textContent = '(study '+id+')';
+  const series = await (await fetch('/api/studies/'+id+'/series')).json();
+  const c = document.getElementById('chart'), g = c.getContext('2d');
+  g.clearRect(0,0,c.width,c.height);
+  let xs=[], ys=[];
+  for (const t of series) for (const p of t.points) { xs.push(p[0]); ys.push(p[1]); }
+  if (!xs.length) return;
+  const xmax=Math.max(...xs), ymin=Math.min(...ys), ymax=Math.max(...ys);
+  const X=x=>20+(c.width-40)*x/Math.max(xmax,1);
+  const Y=y=>c.height-20-(c.height-40)*(y-ymin)/Math.max(ymax-ymin,1e-12);
+  const colors=['#7af','#7f7','#fa5','#f6f','#ff6','#6ff','#f66','#aaf'];
+  series.forEach((t,i)=>{ if(!t.points.length) return;
+    g.strokeStyle=colors[i%colors.length]; g.beginPath();
+    t.points.forEach((p,j)=>{ j?g.lineTo(X(p[0]),Y(p[1])):g.moveTo(X(p[0]),Y(p[1])); });
+    g.stroke(); });
+}
+refresh(); setInterval(refresh, 2000);
+</script></body></html>"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::http::Client;
+    use crate::json::parse;
+
+    fn server(auth: bool) -> HopaasServer {
+        let config = HopaasConfig { auth_required: auth, ..Default::default() };
+        HopaasServer::start("127.0.0.1:0", config).unwrap()
+    }
+
+    fn ask_body() -> Value {
+        parse(
+            r#"{"study_name": "t", "properties": {"x": {"low": 0.0, "high": 1.0}},
+             "sampler": {"name": "random"}}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn version_endpoint() {
+        let s = server(false);
+        let mut c = Client::connect(s.addr()).unwrap();
+        let v = c.get("/api/version").unwrap().json_body().unwrap();
+        assert_eq!(v.get("version").as_str(), Some(crate::VERSION));
+        s.stop();
+    }
+
+    #[test]
+    fn full_workflow_over_http() {
+        let s = server(true);
+        let tok = s.bootstrap_token.clone();
+        let mut c = Client::connect(s.addr()).unwrap();
+
+        let r = c
+            .post_json(&format!("/api/ask/{tok}"), &ask_body())
+            .unwrap();
+        assert_eq!(r.status, 200, "{:?}", String::from_utf8_lossy(&r.body));
+        let ask = r.json_body().unwrap();
+        let trial_id = ask.get("trial_id").as_u64().unwrap();
+        assert!(ask.get("params").get("x").as_f64().is_some());
+
+        let mut rep = Value::obj();
+        rep.set("trial_id", trial_id).set("step", 1u64).set("value", 0.5);
+        let pr = c
+            .post_json(&format!("/api/should_prune/{tok}"), &Value::Obj(rep))
+            .unwrap()
+            .json_body()
+            .unwrap();
+        assert_eq!(pr.get("should_prune").as_bool(), Some(false));
+
+        let mut tell = Value::obj();
+        tell.set("trial_id", trial_id).set("value", 0.3);
+        let tr = c
+            .post_json(&format!("/api/tell/{tok}"), &Value::Obj(tell))
+            .unwrap()
+            .json_body()
+            .unwrap();
+        assert_eq!(tr.get("state").as_str(), Some("completed"));
+        assert_eq!(tr.get("is_best").as_bool(), Some(true));
+        s.stop();
+    }
+
+    #[test]
+    fn auth_rejected_without_valid_token() {
+        let s = server(true);
+        let mut c = Client::connect(s.addr()).unwrap();
+        let r = c.post_json("/api/ask/garbage", &ask_body()).unwrap();
+        assert_eq!(r.status, 401);
+        // Issue a token via the API, then it works.
+        let mut req = Value::obj();
+        req.set("user", "u1").set("ttl", 60.0);
+        let tok = c
+            .post_json("/api/token", &Value::Obj(req))
+            .unwrap()
+            .json_body()
+            .unwrap();
+        let tok = tok.get("token").as_str().unwrap().to_string();
+        let r2 = c.post_json(&format!("/api/ask/{tok}"), &ask_body()).unwrap();
+        assert_eq!(r2.status, 200);
+        s.stop();
+    }
+
+    #[test]
+    fn revoked_token_stops_working() {
+        let s = server(true);
+        let tok = s.bootstrap_token.clone();
+        let mut c = Client::connect(s.addr()).unwrap();
+        let r = c.post_json(&format!("/api/ask/{tok}"), &ask_body()).unwrap();
+        assert_eq!(r.status, 200);
+        let rv = c.post(&format!("/api/revoke/{tok}"), b"{}").unwrap();
+        assert_eq!(rv.status, 200);
+        let r2 = c.post_json(&format!("/api/ask/{tok}"), &ask_body()).unwrap();
+        assert_eq!(r2.status, 401);
+        s.stop();
+    }
+
+    #[test]
+    fn error_mapping() {
+        let s = server(false);
+        let mut c = Client::connect(s.addr()).unwrap();
+        // 400: bad json
+        let r = c.post("/api/ask/x", b"{not json").unwrap();
+        assert_eq!(r.status, 400);
+        // 422: missing fields
+        let r = c.post("/api/tell/x", b"{}").unwrap();
+        assert_eq!(r.status, 422);
+        // 404: unknown trial
+        let mut tell = Value::obj();
+        tell.set("trial_id", 12345u64).set("value", 1.0);
+        let r = c.post_json("/api/tell/x", &Value::Obj(tell)).unwrap();
+        assert_eq!(r.status, 404);
+        // 409: double tell
+        let ask = c.post_json("/api/ask/x", &ask_body()).unwrap().json_body().unwrap();
+        let id = ask.get("trial_id").as_u64().unwrap();
+        let mut tell = Value::obj();
+        tell.set("trial_id", id).set("value", 1.0);
+        assert_eq!(c.post_json("/api/tell/x", &Value::Obj(tell.clone())).unwrap().status, 200);
+        assert_eq!(c.post_json("/api/tell/x", &Value::Obj(tell)).unwrap().status, 409);
+        // 404: unknown route; 405: wrong method
+        assert_eq!(c.get("/api/nope").unwrap().status, 404);
+        assert_eq!(c.get("/api/ask/x").unwrap().status, 405);
+        s.stop();
+    }
+
+    #[test]
+    fn web_data_apis() {
+        let s = server(false);
+        let mut c = Client::connect(s.addr()).unwrap();
+        let ask = c.post_json("/api/ask/x", &ask_body()).unwrap().json_body().unwrap();
+        let sid = ask.get("study_id").as_u64().unwrap();
+        let id = ask.get("trial_id").as_u64().unwrap();
+        let mut rep = Value::obj();
+        rep.set("trial_id", id).set("step", 1u64).set("value", 2.0);
+        c.post_json("/api/should_prune/x", &Value::Obj(rep)).unwrap();
+
+        let studies = c.get("/api/studies").unwrap().json_body().unwrap();
+        assert_eq!(studies.at(0).get("id").as_u64(), Some(sid));
+        let trials = c.get(&format!("/api/studies/{sid}/trials")).unwrap().json_body().unwrap();
+        assert_eq!(trials.as_arr().unwrap().len(), 1);
+        let series = c.get(&format!("/api/studies/{sid}/series")).unwrap().json_body().unwrap();
+        assert_eq!(series.at(0).get("points").at(0).at(1).as_f64(), Some(2.0));
+        assert_eq!(c.get("/api/studies/99").unwrap().status, 404);
+
+        let metrics = c.get("/metrics").unwrap();
+        let text = String::from_utf8(metrics.body).unwrap();
+        assert!(text.contains("hopaas_ask_total 1"));
+        let dash = c.get("/").unwrap();
+        assert_eq!(dash.status, 200);
+        assert!(String::from_utf8(dash.body).unwrap().contains("HOPAAS"));
+        s.stop();
+    }
+}

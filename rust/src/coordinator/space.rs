@@ -1,0 +1,499 @@
+//! Search-space model.
+//!
+//! A study's search space is an ordered set of named parameter
+//! distributions, mirroring Optuna's `suggest_*` families (the paper's
+//! backend): continuous uniform, log-uniform, (log-)integer, and
+//! categorical. The wire form follows the HOPAAS Python client's
+//! `properties` convention: each parameter is either a `[low, high]`
+//! range object with an optional type, or a list of categorical choices.
+
+use crate::json::Value;
+use crate::rng::Rng;
+use std::fmt;
+
+/// One parameter's distribution.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Dist {
+    /// Continuous uniform on `[low, high]`.
+    Uniform { low: f64, high: f64 },
+    /// Log-uniform on `[low, high]`, `low > 0`.
+    LogUniform { low: f64, high: f64 },
+    /// Integer-uniform on `[low, high]` inclusive.
+    Int { low: i64, high: i64 },
+    /// Categorical over explicit choices.
+    Cat { choices: Vec<Value> },
+}
+
+/// A named parameter.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Param {
+    pub name: String,
+    pub dist: Dist,
+}
+
+/// An ordered search space.
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct Space {
+    pub params: Vec<Param>,
+}
+
+/// A concrete assignment of values to every parameter, in space order.
+pub type Assignment = Vec<(String, Value)>;
+
+/// Optimization direction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    Minimize,
+    Maximize,
+}
+
+impl Direction {
+    pub fn from_str(s: &str) -> Option<Direction> {
+        match s {
+            "minimize" => Some(Direction::Minimize),
+            "maximize" => Some(Direction::Maximize),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Direction::Minimize => "minimize",
+            Direction::Maximize => "maximize",
+        }
+    }
+
+    /// `true` if `a` is a better score than `b` in this direction.
+    pub fn better(&self, a: f64, b: f64) -> bool {
+        match self {
+            Direction::Minimize => a < b,
+            Direction::Maximize => a > b,
+        }
+    }
+}
+
+/// Space validation / wire-format errors.
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum SpaceError {
+    #[error("parameter '{0}': {1}")]
+    Invalid(String, String),
+    #[error("malformed search space: {0}")]
+    Malformed(String),
+}
+
+impl Space {
+    /// Parse the `properties` object of an `ask` body.
+    ///
+    /// Accepted parameter forms:
+    /// * `{"low": 0.1, "high": 1.0}` — uniform
+    /// * `{"low": 1e-5, "high": 1e-1, "type": "loguniform"}`
+    /// * `{"low": 1, "high": 8, "type": "int"}`
+    /// * `["adam", "rmsprop"]` or `{"choices": [...]}` — categorical
+    /// * a bare scalar — fixed (categorical with one choice)
+    pub fn from_json(props: &Value) -> Result<Space, SpaceError> {
+        let obj = props
+            .as_obj()
+            .ok_or_else(|| SpaceError::Malformed("properties must be an object".into()))?;
+        let mut params = Vec::new();
+        for (name, spec) in obj.iter() {
+            let dist = Self::dist_from_json(name, spec)?;
+            params.push(Param { name: name.to_string(), dist });
+        }
+        if params.is_empty() {
+            return Err(SpaceError::Malformed("empty search space".into()));
+        }
+        Ok(Space { params })
+    }
+
+    fn dist_from_json(name: &str, spec: &Value) -> Result<Dist, SpaceError> {
+        let err = |m: &str| SpaceError::Invalid(name.to_string(), m.to_string());
+        match spec {
+            Value::Arr(choices) => {
+                if choices.is_empty() {
+                    return Err(err("empty categorical choices"));
+                }
+                Ok(Dist::Cat { choices: choices.clone() })
+            }
+            Value::Obj(o) => {
+                if let Some(ch) = o.get("choices") {
+                    let choices = ch
+                        .as_arr()
+                        .ok_or_else(|| err("'choices' must be an array"))?;
+                    if choices.is_empty() {
+                        return Err(err("empty categorical choices"));
+                    }
+                    return Ok(Dist::Cat { choices: choices.to_vec() });
+                }
+                let low = o
+                    .get("low")
+                    .and_then(Value::as_f64)
+                    .ok_or_else(|| err("missing numeric 'low'"))?;
+                let high = o
+                    .get("high")
+                    .and_then(Value::as_f64)
+                    .ok_or_else(|| err("missing numeric 'high'"))?;
+                if !(low < high) {
+                    return Err(err("'low' must be < 'high'"));
+                }
+                let ty = o.get("type").and_then(Value::as_str).unwrap_or("uniform");
+                match ty {
+                    "uniform" | "float" => Ok(Dist::Uniform { low, high }),
+                    "loguniform" | "log" => {
+                        if low <= 0.0 {
+                            return Err(err("loguniform requires low > 0"));
+                        }
+                        Ok(Dist::LogUniform { low, high })
+                    }
+                    "int" | "integer" => {
+                        if low.fract() != 0.0 || high.fract() != 0.0 {
+                            return Err(err("int bounds must be integers"));
+                        }
+                        Ok(Dist::Int { low: low as i64, high: high as i64 })
+                    }
+                    other => Err(err(&format!("unknown type '{other}'"))),
+                }
+            }
+            // A bare scalar pins the parameter.
+            v @ (Value::Num(_) | Value::Str(_) | Value::Bool(_)) => {
+                Ok(Dist::Cat { choices: vec![v.clone()] })
+            }
+            _ => Err(err("unsupported parameter spec")),
+        }
+    }
+
+    /// Serialize back to the wire form (canonical: used for study hashing).
+    pub fn to_json(&self) -> Value {
+        let mut o = Value::obj();
+        for p in &self.params {
+            let spec = match &p.dist {
+                Dist::Uniform { low, high } => {
+                    let mut s = Value::obj();
+                    s.set("low", *low).set("high", *high).set("type", "uniform");
+                    Value::Obj(s)
+                }
+                Dist::LogUniform { low, high } => {
+                    let mut s = Value::obj();
+                    s.set("low", *low).set("high", *high).set("type", "loguniform");
+                    Value::Obj(s)
+                }
+                Dist::Int { low, high } => {
+                    let mut s = Value::obj();
+                    s.set("low", *low).set("high", *high).set("type", "int");
+                    Value::Obj(s)
+                }
+                Dist::Cat { choices } => Value::Arr(choices.clone()),
+            };
+            o.set(p.name.as_str(), spec);
+        }
+        Value::Obj(o)
+    }
+
+    /// Number of parameters.
+    pub fn len(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.params.is_empty()
+    }
+
+    /// Uniform random assignment (the base sampler and TPE's startup).
+    pub fn sample(&self, rng: &mut Rng) -> Assignment {
+        self.params
+            .iter()
+            .map(|p| (p.name.clone(), p.dist.sample(rng)))
+            .collect()
+    }
+
+    /// Check a value lies in a parameter's domain.
+    pub fn contains(&self, name: &str, value: &Value) -> bool {
+        self.params
+            .iter()
+            .find(|p| p.name == name)
+            .map(|p| p.dist.contains(value))
+            .unwrap_or(false)
+    }
+
+    /// Map an assignment into the unit hypercube for numeric params
+    /// (used by TPE/GP). Categorical params map to their choice index
+    /// scaled to [0,1). Returns None if the assignment is incomplete.
+    pub fn to_unit(&self, asg: &Assignment) -> Option<Vec<f64>> {
+        let mut out = Vec::with_capacity(self.params.len());
+        for p in &self.params {
+            let v = asg.iter().find(|(n, _)| n == &p.name).map(|(_, v)| v)?;
+            out.push(p.dist.to_unit(v)?);
+        }
+        Some(out)
+    }
+
+    /// Inverse of [`Space::to_unit`].
+    pub fn from_unit(&self, u: &[f64]) -> Assignment {
+        self.params
+            .iter()
+            .zip(u)
+            .map(|(p, &x)| (p.name.clone(), p.dist.from_unit(x.clamp(0.0, 1.0 - 1e-12))))
+            .collect()
+    }
+}
+
+impl Dist {
+    /// Uniform draw from this distribution.
+    pub fn sample(&self, rng: &mut Rng) -> Value {
+        match self {
+            Dist::Uniform { low, high } => Value::Num(rng.uniform(*low, *high)),
+            Dist::LogUniform { low, high } => {
+                Value::Num((rng.uniform(low.ln(), high.ln())).exp())
+            }
+            Dist::Int { low, high } => Value::Num(rng.int_range(*low, *high) as f64),
+            Dist::Cat { choices } => choices[rng.below(choices.len() as u64) as usize].clone(),
+        }
+    }
+
+    /// Domain membership.
+    pub fn contains(&self, v: &Value) -> bool {
+        match self {
+            Dist::Uniform { low, high } | Dist::LogUniform { low, high } => v
+                .as_f64()
+                .map(|x| x >= *low && x <= *high)
+                .unwrap_or(false),
+            Dist::Int { low, high } => v
+                .as_i64()
+                .map(|x| x >= *low && x <= *high)
+                .unwrap_or(false),
+            Dist::Cat { choices } => choices.contains(v),
+        }
+    }
+
+    /// Map a value to [0, 1).
+    pub fn to_unit(&self, v: &Value) -> Option<f64> {
+        match self {
+            Dist::Uniform { low, high } => {
+                let x = v.as_f64()?;
+                Some(((x - low) / (high - low)).clamp(0.0, 1.0))
+            }
+            Dist::LogUniform { low, high } => {
+                let x = v.as_f64()?;
+                if x <= 0.0 {
+                    return None;
+                }
+                Some(((x.ln() - low.ln()) / (high.ln() - low.ln())).clamp(0.0, 1.0))
+            }
+            Dist::Int { low, high } => {
+                let x = v.as_i64()? as f64;
+                let span = (*high - *low) as f64 + 1.0;
+                Some(((x - *low as f64 + 0.5) / span).clamp(0.0, 1.0))
+            }
+            Dist::Cat { choices } => {
+                let idx = choices.iter().position(|c| c == v)? as f64;
+                Some((idx + 0.5) / choices.len() as f64)
+            }
+        }
+    }
+
+    /// Map a unit value back into the domain.
+    pub fn from_unit(&self, u: f64) -> Value {
+        match self {
+            Dist::Uniform { low, high } => Value::Num(low + u * (high - low)),
+            Dist::LogUniform { low, high } => {
+                Value::Num((low.ln() + u * (high.ln() - low.ln())).exp())
+            }
+            Dist::Int { low, high } => {
+                let span = (*high - *low) as f64 + 1.0;
+                let x = (*low as f64 + u * span).floor();
+                Value::Num(x.clamp(*low as f64, *high as f64))
+            }
+            Dist::Cat { choices } => {
+                let idx = ((u * choices.len() as f64).floor() as usize).min(choices.len() - 1);
+                choices[idx].clone()
+            }
+        }
+    }
+
+    /// Number of categories, if categorical.
+    pub fn n_choices(&self) -> Option<usize> {
+        match self {
+            Dist::Cat { choices } => Some(choices.len()),
+            _ => None,
+        }
+    }
+}
+
+/// Serialize an assignment as a JSON object (in space order).
+pub fn assignment_to_json(asg: &Assignment) -> Value {
+    let mut o = Value::obj();
+    for (k, v) in asg {
+        o.set(k.as_str(), v.clone());
+    }
+    Value::Obj(o)
+}
+
+impl fmt::Display for Dist {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Dist::Uniform { low, high } => write!(f, "uniform[{low}, {high}]"),
+            Dist::LogUniform { low, high } => write!(f, "loguniform[{low}, {high}]"),
+            Dist::Int { low, high } => write!(f, "int[{low}, {high}]"),
+            Dist::Cat { choices } => write!(f, "cat({} choices)", choices.len()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::parse;
+    use crate::testutil::prop;
+
+    fn space() -> Space {
+        Space::from_json(
+            &parse(
+                r#"{
+                "lr": {"low": 1e-5, "high": 1e-1, "type": "loguniform"},
+                "dropout": {"low": 0.0, "high": 0.5},
+                "layers": {"low": 1, "high": 8, "type": "int"},
+                "opt": ["adam", "rmsprop", "sgd"]
+            }"#,
+            )
+            .unwrap(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parse_all_kinds() {
+        let s = space();
+        assert_eq!(s.len(), 4);
+        assert!(matches!(s.params[0].dist, Dist::LogUniform { .. }));
+        assert!(matches!(s.params[1].dist, Dist::Uniform { .. }));
+        assert!(matches!(s.params[2].dist, Dist::Int { low: 1, high: 8 }));
+        assert!(matches!(s.params[3].dist, Dist::Cat { .. }));
+    }
+
+    #[test]
+    fn parse_errors() {
+        for bad in [
+            r#"{"x": {"low": 2, "high": 1}}"#,
+            r#"{"x": {"low": 0, "high": 1, "type": "loguniform"}}"#,
+            r#"{"x": {"low": 0.5, "high": 1.5, "type": "int"}}"#,
+            r#"{"x": []}"#,
+            r#"{"x": {"high": 1}}"#,
+            r#"{"x": {"low": 0, "high": 1, "type": "wat"}}"#,
+            r#"{}"#,
+            r#"[1,2]"#,
+        ] {
+            assert!(
+                Space::from_json(&parse(bad).unwrap()).is_err(),
+                "should reject {bad}"
+            );
+        }
+    }
+
+    #[test]
+    fn scalar_pins_parameter() {
+        let s = Space::from_json(&parse(r#"{"batch": 256}"#).unwrap()).unwrap();
+        let mut rng = Rng::new(1);
+        let asg = s.sample(&mut rng);
+        assert_eq!(asg[0].1.as_i64(), Some(256));
+    }
+
+    #[test]
+    fn samples_in_domain() {
+        let s = space();
+        prop::check(200, |g| {
+            let asg = s.sample(g.rng());
+            for (name, v) in &asg {
+                if !s.contains(name, v) {
+                    return Err(format!("{name}={v} out of domain"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn loguniform_spans_decades() {
+        let s = space();
+        let mut rng = Rng::new(5);
+        let mut low_decade = 0;
+        let mut high_decade = 0;
+        for _ in 0..2000 {
+            let asg = s.sample(&mut rng);
+            let lr = asg[0].1.as_f64().unwrap();
+            if lr < 1e-4 {
+                low_decade += 1;
+            }
+            if lr > 1e-2 {
+                high_decade += 1;
+            }
+        }
+        // Log-uniform: each decade ≈ 25% of mass.
+        assert!(low_decade > 300, "low decade {low_decade}");
+        assert!(high_decade > 300, "high decade {high_decade}");
+    }
+
+    #[test]
+    fn unit_roundtrip() {
+        let s = space();
+        prop::check(200, |g| {
+            let asg = s.sample(g.rng());
+            let u = s.to_unit(&asg).ok_or("to_unit failed")?;
+            let back = s.from_unit(&u);
+            for ((n1, v1), (n2, v2)) in asg.iter().zip(&back) {
+                if n1 != n2 {
+                    return Err("name order changed".into());
+                }
+                match (v1.as_f64(), v2.as_f64()) {
+                    (Some(a), Some(b)) => {
+                        let rel = (a - b).abs() / a.abs().max(1e-12);
+                        if rel > 1e-9 && (a - b).abs() > 1e-9 {
+                            return Err(format!("{n1}: {a} vs {b}"));
+                        }
+                    }
+                    _ => {
+                        if v1 != v2 {
+                            return Err(format!("{n1}: {v1} vs {v2}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn canonical_json_stable() {
+        let s = space();
+        let j1 = s.to_json().to_string();
+        let s2 = Space::from_json(&parse(&j1).unwrap()).unwrap();
+        assert_eq!(s, s2);
+        assert_eq!(j1, s2.to_json().to_string());
+    }
+
+    #[test]
+    fn direction_better() {
+        assert!(Direction::Minimize.better(1.0, 2.0));
+        assert!(Direction::Maximize.better(2.0, 1.0));
+        assert!(!Direction::Minimize.better(2.0, 1.0));
+    }
+
+    #[test]
+    fn int_to_unit_from_unit_consistent() {
+        let d = Dist::Int { low: -2, high: 2 };
+        for v in -2..=2 {
+            let u = d.to_unit(&Value::Num(v as f64)).unwrap();
+            assert_eq!(d.from_unit(u).as_i64(), Some(v));
+        }
+    }
+
+    #[test]
+    fn cat_to_unit_from_unit_consistent() {
+        let d = Dist::Cat {
+            choices: vec![Value::Str("a".into()), Value::Str("b".into()), Value::Str("c".into())],
+        };
+        for c in ["a", "b", "c"] {
+            let v = Value::Str(c.into());
+            let u = d.to_unit(&v).unwrap();
+            assert_eq!(d.from_unit(u), v);
+        }
+    }
+}

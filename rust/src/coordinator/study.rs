@@ -1,0 +1,412 @@
+//! Study model and canonical study identity.
+//!
+//! A *study* is an optimization session: a search space, a direction, a
+//! sampler and an optional pruner, plus the collection of trials run so
+//! far (paper §2). HOPAAS has no study-registration API — the `ask` body
+//! carries the whole definition, and the server routes the request to the
+//! study with the same *canonical key* (or creates it). The key is the
+//! SHA-256 of the canonical JSON of every field that defines the study
+//! unambiguously: name, search space, direction, sampler and pruner
+//! configuration.
+
+use super::space::{Direction, Space};
+use super::trial::{Trial, TrialState};
+use crate::json::Value;
+use sha2::{Digest, Sha256};
+
+/// Sampler/pruner configuration: algorithm name + free-form options.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AlgoConfig {
+    pub name: String,
+    pub options: Value,
+}
+
+impl AlgoConfig {
+    pub fn new(name: &str) -> AlgoConfig {
+        AlgoConfig { name: name.to_string(), options: Value::Obj(crate::json::Value::obj()) }
+    }
+
+    /// Parse from either `"tpe"` or `{"name": "tpe", ...opts}`.
+    pub fn from_json(v: &Value, default_name: &str) -> AlgoConfig {
+        match v {
+            Value::Str(s) => AlgoConfig::new(s),
+            Value::Obj(o) => {
+                let name = o
+                    .get("name")
+                    .and_then(Value::as_str)
+                    .unwrap_or(default_name)
+                    .to_string();
+                let mut options = crate::json::Value::obj();
+                for (k, val) in o.iter() {
+                    if k != "name" {
+                        options.set(k, val.clone());
+                    }
+                }
+                AlgoConfig { name, options: Value::Obj(options) }
+            }
+            _ => AlgoConfig::new(default_name),
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        let mut o = crate::json::Value::obj();
+        o.set("name", self.name.as_str());
+        if let Some(opts) = self.options.as_obj() {
+            for (k, v) in opts.iter() {
+                o.set(k, v.clone());
+            }
+        }
+        Value::Obj(o)
+    }
+
+    /// Numeric option accessor.
+    pub fn f64_opt(&self, key: &str, default: f64) -> f64 {
+        self.options.get(key).as_f64().unwrap_or(default)
+    }
+
+    pub fn u64_opt(&self, key: &str, default: u64) -> u64 {
+        self.options.get(key).as_u64().unwrap_or(default)
+    }
+}
+
+/// Immutable study definition (what the canonical key hashes).
+#[derive(Clone, Debug, PartialEq)]
+pub struct StudyDef {
+    pub name: String,
+    pub space: Space,
+    pub direction: Direction,
+    /// Multi-objective studies (paper §5 future work): per-objective
+    /// directions. `None` = classic single-objective (`direction`).
+    pub directions: Option<Vec<Direction>>,
+    pub sampler: AlgoConfig,
+    pub pruner: Option<AlgoConfig>,
+}
+
+impl StudyDef {
+    /// Is this a multi-objective study?
+    pub fn is_mo(&self) -> bool {
+        self.directions.is_some()
+    }
+}
+
+impl StudyDef {
+    /// Canonical JSON — field order fixed, space in client key order.
+    pub fn canonical_json(&self) -> Value {
+        let mut o = crate::json::Value::obj();
+        o.set("name", self.name.as_str())
+            .set("properties", self.space.to_json())
+            .set(
+                "direction",
+                match &self.directions {
+                    None => Value::Str(self.direction.as_str().to_string()),
+                    Some(ds) => Value::Arr(
+                        ds.iter().map(|d| Value::Str(d.as_str().to_string())).collect(),
+                    ),
+                },
+            )
+            .set("sampler", self.sampler.to_json())
+            .set(
+                "pruner",
+                self.pruner.as_ref().map(|p| p.to_json()).unwrap_or(Value::Null),
+            );
+        Value::Obj(o)
+    }
+
+    /// Canonical study key (hex SHA-256).
+    pub fn key(&self) -> String {
+        let mut h = Sha256::new();
+        h.update(self.canonical_json().to_string().as_bytes());
+        let digest = h.finalize();
+        digest.iter().map(|b| format!("{b:02x}")).collect()
+    }
+}
+
+/// A study and its trials.
+pub struct Study {
+    /// Short server-assigned id (ordinal), used in URLs.
+    pub id: u64,
+    pub def: StudyDef,
+    pub key: String,
+    pub trials: Vec<Trial>,
+    pub created_at: f64,
+}
+
+impl Study {
+    pub fn new(id: u64, def: StudyDef, now: f64) -> Study {
+        let key = def.key();
+        Study { id, def, key, trials: Vec::new(), created_at: now }
+    }
+
+    /// Completed trials (have a final value).
+    pub fn completed(&self) -> impl Iterator<Item = &Trial> {
+        self.trials
+            .iter()
+            .filter(|t| t.state == TrialState::Completed)
+    }
+
+    /// Trials that terminated with a usable objective estimate:
+    /// completed trials at their final value, pruned trials at their last
+    /// intermediate (Optuna's TPE does the same, so pruned trials still
+    /// inform the surrogate).
+    pub fn scored(&self) -> Vec<(&Trial, f64)> {
+        self.trials
+            .iter()
+            .filter_map(|t| match t.state {
+                TrialState::Completed => Some((t, t.value.unwrap())),
+                TrialState::Pruned => t.last_intermediate().map(|(_, v)| (t, v)),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Number of trials in a given state.
+    pub fn count(&self, state: TrialState) -> usize {
+        self.trials.iter().filter(|t| t.state == state).count()
+    }
+
+    /// Completed multi-objective trials with their objective vectors.
+    pub fn mo_scored(&self) -> Vec<(&Trial, &Vec<f64>)> {
+        self.trials
+            .iter()
+            .filter(|t| t.state == TrialState::Completed)
+            .filter_map(|t| t.values.as_ref().map(|v| (t, v)))
+            .collect()
+    }
+
+    /// Pareto-optimal completed trials of a multi-objective study.
+    pub fn pareto(&self) -> Vec<&Trial> {
+        let Some(directions) = &self.def.directions else { return Vec::new() };
+        let scored = self.mo_scored();
+        let oriented: Vec<Vec<f64>> = scored
+            .iter()
+            .filter(|(_, v)| v.len() == directions.len())
+            .map(|(_, v)| super::mo::orient(v, directions))
+            .collect();
+        let usable: Vec<&Trial> = scored
+            .iter()
+            .filter(|(_, v)| v.len() == directions.len())
+            .map(|(t, _)| *t)
+            .collect();
+        super::mo::pareto_front(&oriented)
+            .into_iter()
+            .map(|i| usable[i])
+            .collect()
+    }
+
+    /// Best completed trial under the study direction (single-objective
+    /// trials only — multi-objective trials carry `values`, not `value`,
+    /// and are ranked by Pareto dominance instead; see [`Study::pareto`]).
+    pub fn best(&self) -> Option<&Trial> {
+        self.completed()
+            .filter(|t| t.value.is_some())
+            .reduce(|best, t| {
+                if self
+                    .def
+                    .direction
+                    .better(t.value.unwrap(), best.value.unwrap())
+                {
+                    t
+                } else {
+                    best
+                }
+            })
+    }
+
+    /// Dashboard summary JSON.
+    pub fn summary_json(&self) -> Value {
+        let mut o = crate::json::Value::obj();
+        o.set("id", self.id)
+            .set("key", self.key.as_str())
+            .set("name", self.def.name.as_str())
+            .set("direction", self.def.direction.as_str())
+            .set("sampler", self.def.sampler.to_json())
+            .set(
+                "pruner",
+                self.def.pruner.as_ref().map(|p| p.to_json()).unwrap_or(Value::Null),
+            )
+            .set("properties", self.def.space.to_json())
+            .set("n_trials", self.trials.len())
+            .set("n_running", self.count(TrialState::Running))
+            .set("n_completed", self.count(TrialState::Completed))
+            .set("n_pruned", self.count(TrialState::Pruned))
+            .set("n_failed", self.count(TrialState::Failed))
+            .set("created_at", self.created_at)
+            .set(
+                "best_value",
+                self.best().and_then(|t| t.value).map(Value::Num).unwrap_or(Value::Null),
+            )
+            .set(
+                "best_trial",
+                self.best().map(|t| Value::Num(t.id as f64)).unwrap_or(Value::Null),
+            );
+        if let Some(ds) = &self.def.directions {
+            o.set(
+                "directions",
+                Value::Arr(ds.iter().map(|d| Value::Str(d.as_str().into())).collect()),
+            )
+            .set("pareto_size", self.pareto().len());
+        }
+        Value::Obj(o)
+    }
+}
+
+/// Parse a `StudyDef` from an `ask` request body.
+///
+/// Expected body shape (the HOPAAS Python client's convention):
+/// ```json
+/// {
+///   "study_name": "GanPid-v1",
+///   "properties": { ... search space ... },
+///   "direction": "minimize",
+///   "sampler": {"name": "tpe"},
+///   "pruner": {"name": "median", "warmup_steps": 5},
+///   "node": "marconi100-gpu-07"
+/// }
+/// ```
+pub fn parse_ask_body(body: &Value) -> Result<(StudyDef, Option<String>), String> {
+    let name = body
+        .get("study_name")
+        .as_str()
+        .or_else(|| body.get("name").as_str())
+        .unwrap_or("default")
+        .to_string();
+    let space = Space::from_json(body.get("properties")).map_err(|e| e.to_string())?;
+    // "direction" is a string for single-objective studies or an array of
+    // strings for multi-objective ones (paper §5 future work).
+    let (direction, directions) = match body.get("direction") {
+        Value::Null => (Direction::Minimize, None),
+        Value::Arr(arr) => {
+            if arr.len() < 2 {
+                return Err("multi-objective 'direction' needs ≥ 2 entries".to_string());
+            }
+            let ds: Result<Vec<Direction>, String> = arr
+                .iter()
+                .map(|v| {
+                    Direction::from_str(v.as_str().unwrap_or(""))
+                        .ok_or_else(|| "direction entries must be 'minimize'/'maximize'".into())
+                })
+                .collect();
+            let ds = ds?;
+            (ds[0], Some(ds))
+        }
+        v => (
+            Direction::from_str(v.as_str().unwrap_or(""))
+                .ok_or_else(|| "direction must be 'minimize' or 'maximize'".to_string())?,
+            None,
+        ),
+    };
+    let sampler = match body.get("sampler") {
+        Value::Null => AlgoConfig::new("tpe"),
+        v => AlgoConfig::from_json(v, "tpe"),
+    };
+    let pruner = match body.get("pruner") {
+        Value::Null => None,
+        v => Some(AlgoConfig::from_json(v, "median")),
+    };
+    let node = body.get("node").as_str().map(|s| s.to_string());
+    Ok((StudyDef { name, space, direction, directions, sampler, pruner }, node))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::json::parse;
+
+    fn def() -> StudyDef {
+        let body = parse(
+            r#"{
+            "study_name": "s1",
+            "properties": {"x": {"low": 0.0, "high": 1.0}},
+            "direction": "minimize",
+            "sampler": {"name": "tpe", "n_startup_trials": 5}
+        }"#,
+        )
+        .unwrap();
+        parse_ask_body(&body).unwrap().0
+    }
+
+    #[test]
+    fn key_deterministic_and_sensitive() {
+        let d1 = def();
+        let d2 = def();
+        assert_eq!(d1.key(), d2.key());
+        let mut d3 = def();
+        d3.name = "other".into();
+        assert_ne!(d1.key(), d3.key());
+        let mut d4 = def();
+        d4.direction = Direction::Maximize;
+        assert_ne!(d1.key(), d4.key());
+        let mut d5 = def();
+        d5.sampler = AlgoConfig::new("random");
+        assert_ne!(d1.key(), d5.key());
+    }
+
+    #[test]
+    fn key_is_hex_sha256() {
+        let k = def().key();
+        assert_eq!(k.len(), 64);
+        assert!(k.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn parse_ask_defaults() {
+        let body = parse(r#"{"properties": {"x": {"low": 0.0, "high": 1.0}}}"#).unwrap();
+        let (d, node) = parse_ask_body(&body).unwrap();
+        assert_eq!(d.name, "default");
+        assert_eq!(d.direction, Direction::Minimize);
+        assert_eq!(d.sampler.name, "tpe");
+        assert!(d.pruner.is_none());
+        assert!(node.is_none());
+    }
+
+    #[test]
+    fn parse_ask_rejects_bad() {
+        for bad in [
+            r#"{}"#,
+            r#"{"properties": {"x": {"low": 1, "high": 0}}}"#,
+            r#"{"properties": {"x": {"low": 0, "high": 1}}, "direction": "sideways"}"#,
+        ] {
+            assert!(parse_ask_body(&parse(bad).unwrap()).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn best_tracks_direction() {
+        let mut s = Study::new(1, def(), 0.0);
+        for (i, v) in [(0u64, 3.0), (1, 1.0), (2, 2.0)] {
+            let mut t = Trial::new(i, i, vec![("x".into(), Value::Num(0.5))], 0.0, None);
+            t.complete(v, 1.0).unwrap();
+            s.trials.push(t);
+        }
+        assert_eq!(s.best().unwrap().id, 1);
+        s.def.direction = Direction::Maximize;
+        assert_eq!(s.best().unwrap().id, 0);
+    }
+
+    #[test]
+    fn scored_includes_pruned_at_last_intermediate() {
+        let mut s = Study::new(1, def(), 0.0);
+        let mut t0 = Trial::new(0, 0, vec![("x".into(), Value::Num(0.5))], 0.0, None);
+        t0.complete(1.0, 1.0).unwrap();
+        let mut t1 = Trial::new(1, 1, vec![("x".into(), Value::Num(0.6))], 0.0, None);
+        t1.report(3, 9.0).unwrap();
+        t1.prune(1.0).unwrap();
+        let t2 = Trial::new(2, 2, vec![("x".into(), Value::Num(0.7))], 0.0, None);
+        s.trials.extend([t0, t1, t2]);
+        let scored = s.scored();
+        assert_eq!(scored.len(), 2);
+        assert_eq!(scored[1].1, 9.0);
+    }
+
+    #[test]
+    fn summary_counts() {
+        let mut s = Study::new(4, def(), 0.0);
+        let t = Trial::new(0, 0, vec![("x".into(), Value::Num(0.5))], 0.0, None);
+        s.trials.push(t);
+        let j = s.summary_json();
+        assert_eq!(j.get("n_trials").as_i64(), Some(1));
+        assert_eq!(j.get("n_running").as_i64(), Some(1));
+        assert_eq!(j.get("n_completed").as_i64(), Some(0));
+        assert!(j.get("best_value").is_null());
+    }
+}

@@ -1,0 +1,319 @@
+//! Trial state machine.
+//!
+//! A *trial* is a single training attempt with a specific hyperparameter
+//! assignment (paper §2). The server creates it on `ask`, receives
+//! intermediate `(step, value)` reports via `should_prune`, and finalizes
+//! it via `tell` — or marks it pruned/failed. Terminal states are
+//! absorbing: a `tell` for a pruned trial is a client error, not a state
+//! change.
+
+use super::space::{assignment_to_json, Assignment};
+use crate::json::Value;
+
+/// Trial lifecycle states.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TrialState {
+    /// Hyperparameters handed out; awaiting reports.
+    Running,
+    /// Finalized with an objective value via `tell`.
+    Completed,
+    /// Aborted by the pruner (client confirmed via prune response).
+    Pruned,
+    /// Reported failed by the client, or reaped by the server after its
+    /// node went silent (opportunistic resources disappear).
+    Failed,
+}
+
+impl TrialState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TrialState::Running => "running",
+            TrialState::Completed => "completed",
+            TrialState::Pruned => "pruned",
+            TrialState::Failed => "failed",
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        !matches!(self, TrialState::Running)
+    }
+}
+
+/// Error for invalid state transitions (mapped to HTTP 409 upstream).
+#[derive(Debug, thiserror::Error, PartialEq)]
+#[error("trial {id} is {state:?}: {action} not allowed")]
+pub struct StateError {
+    pub id: u64,
+    pub state: TrialState,
+    pub action: &'static str,
+}
+
+/// A single trial.
+#[derive(Clone, Debug)]
+pub struct Trial {
+    /// Server-wide unique id (the paper's "unique identifier" returned by
+    /// `ask` and echoed by `tell`/`should_prune`).
+    pub id: u64,
+    /// Index within its study (0-based, creation order).
+    pub number: u64,
+    pub state: TrialState,
+    pub params: Assignment,
+    /// Final objective value (set on completion; single-objective).
+    pub value: Option<f64>,
+    /// Final objective vector (multi-objective studies).
+    pub values: Option<Vec<f64>>,
+    /// Intermediate reports, strictly ordered by step.
+    pub intermediate: Vec<(u64, f64)>,
+    /// Wall-clock bookkeeping (seconds since server start).
+    pub started_at: f64,
+    pub finished_at: Option<f64>,
+    /// Client-supplied node label (site attribution in the dashboard).
+    pub node: Option<String>,
+}
+
+impl Trial {
+    pub fn new(id: u64, number: u64, params: Assignment, now: f64, node: Option<String>) -> Trial {
+        Trial {
+            id,
+            number,
+            state: TrialState::Running,
+            params,
+            value: None,
+            values: None,
+            intermediate: Vec::new(),
+            started_at: now,
+            finished_at: None,
+            node,
+        }
+    }
+
+    fn ensure_running(&self, action: &'static str) -> Result<(), StateError> {
+        if self.state != TrialState::Running {
+            return Err(StateError { id: self.id, state: self.state, action });
+        }
+        Ok(())
+    }
+
+    /// Finalize with an objective value (`tell`).
+    pub fn complete(&mut self, value: f64, now: f64) -> Result<(), StateError> {
+        self.ensure_running("tell")?;
+        self.state = TrialState::Completed;
+        self.value = Some(value);
+        self.finished_at = Some(now);
+        Ok(())
+    }
+
+    /// Finalize a multi-objective trial (`tell` with `values`).
+    pub fn complete_mo(&mut self, values: Vec<f64>, now: f64) -> Result<(), StateError> {
+        self.ensure_running("tell")?;
+        self.state = TrialState::Completed;
+        self.values = Some(values);
+        self.finished_at = Some(now);
+        Ok(())
+    }
+
+    /// Record an intermediate report (`should_prune`). Steps must be
+    /// non-decreasing; an equal step overwrites (client retry).
+    pub fn report(&mut self, step: u64, value: f64) -> Result<(), StateError> {
+        self.ensure_running("should_prune")?;
+        if let Some(&(last, _)) = self.intermediate.last() {
+            if step < last {
+                return Err(StateError { id: self.id, state: self.state, action: "report-regress" });
+            }
+            if step == last {
+                self.intermediate.pop();
+            }
+        }
+        self.intermediate.push((step, value));
+        Ok(())
+    }
+
+    /// Mark pruned.
+    pub fn prune(&mut self, now: f64) -> Result<(), StateError> {
+        self.ensure_running("prune")?;
+        self.state = TrialState::Pruned;
+        self.finished_at = Some(now);
+        Ok(())
+    }
+
+    /// Mark failed.
+    pub fn fail(&mut self, now: f64) -> Result<(), StateError> {
+        self.ensure_running("fail")?;
+        self.state = TrialState::Failed;
+        self.finished_at = Some(now);
+        Ok(())
+    }
+
+    /// Last intermediate value, if any.
+    pub fn last_intermediate(&self) -> Option<(u64, f64)> {
+        self.intermediate.last().copied()
+    }
+
+    /// Intermediate value at an exact step.
+    pub fn intermediate_at(&self, step: u64) -> Option<f64> {
+        self.intermediate
+            .iter()
+            .find(|(s, _)| *s == step)
+            .map(|(_, v)| *v)
+    }
+
+    /// JSON for dashboards / persistence.
+    pub fn to_json(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("id", self.id)
+            .set("number", self.number)
+            .set("state", self.state.as_str())
+            .set("params", assignment_to_json(&self.params))
+            .set("value", self.value)
+            .set(
+                "values",
+                self.values
+                    .as_ref()
+                    .map(|vs| Value::Arr(vs.iter().map(|&v| Value::Num(v)).collect()))
+                    .unwrap_or(Value::Null),
+            )
+            .set(
+                "intermediate",
+                Value::Arr(
+                    self.intermediate
+                        .iter()
+                        .map(|(s, v)| Value::Arr(vec![Value::Num(*s as f64), Value::Num(*v)]))
+                        .collect(),
+                ),
+            )
+            .set("started_at", self.started_at)
+            .set("finished_at", self.finished_at)
+            .set("node", self.node.clone().map(Value::Str).unwrap_or(Value::Null));
+        Value::Obj(o)
+    }
+
+    /// Rebuild from the JSON produced by [`Trial::to_json`] (recovery).
+    pub fn from_json(v: &Value) -> Option<Trial> {
+        let state = match v.get("state").as_str()? {
+            "running" => TrialState::Running,
+            "completed" => TrialState::Completed,
+            "pruned" => TrialState::Pruned,
+            "failed" => TrialState::Failed,
+            _ => return None,
+        };
+        let params: Assignment = v
+            .get("params")
+            .as_obj()?
+            .iter()
+            .map(|(k, val)| (k.to_string(), val.clone()))
+            .collect();
+        let intermediate = v
+            .get("intermediate")
+            .as_arr()?
+            .iter()
+            .filter_map(|p| Some((p.at(0).as_u64()?, p.at(1).as_f64()?)))
+            .collect();
+        Some(Trial {
+            id: v.get("id").as_u64()?,
+            number: v.get("number").as_u64()?,
+            state,
+            params,
+            value: v.get("value").as_f64(),
+            values: v
+                .get("values")
+                .as_arr()
+                .map(|a| a.iter().filter_map(Value::as_f64).collect()),
+            intermediate,
+            started_at: v.get("started_at").as_f64().unwrap_or(0.0),
+            finished_at: v.get("finished_at").as_f64(),
+            node: v.get("node").as_str().map(|s| s.to_string()),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop;
+
+    fn trial() -> Trial {
+        Trial::new(7, 0, vec![("x".into(), Value::Num(1.5))], 10.0, Some("n1".into()))
+    }
+
+    #[test]
+    fn lifecycle_complete() {
+        let mut t = trial();
+        assert_eq!(t.state, TrialState::Running);
+        t.report(1, 0.9).unwrap();
+        t.report(2, 0.5).unwrap();
+        t.complete(0.4, 20.0).unwrap();
+        assert_eq!(t.state, TrialState::Completed);
+        assert_eq!(t.value, Some(0.4));
+        assert_eq!(t.finished_at, Some(20.0));
+    }
+
+    #[test]
+    fn terminal_states_absorbing() {
+        let mut t = trial();
+        t.prune(11.0).unwrap();
+        assert!(t.complete(1.0, 12.0).is_err());
+        assert!(t.report(3, 1.0).is_err());
+        assert!(t.fail(12.0).is_err());
+        assert_eq!(t.state, TrialState::Pruned);
+    }
+
+    #[test]
+    fn report_step_monotonic() {
+        let mut t = trial();
+        t.report(5, 1.0).unwrap();
+        assert!(t.report(3, 0.9).is_err());
+        // Same step overwrites (idempotent client retry).
+        t.report(5, 0.8).unwrap();
+        assert_eq!(t.intermediate, vec![(5, 0.8)]);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut t = trial();
+        t.report(1, 2.0).unwrap();
+        t.complete(1.5, 30.0).unwrap();
+        let j = t.to_json();
+        let back = Trial::from_json(&j).unwrap();
+        assert_eq!(back.id, t.id);
+        assert_eq!(back.state, t.state);
+        assert_eq!(back.value, t.value);
+        assert_eq!(back.intermediate, t.intermediate);
+        assert_eq!(back.params.len(), 1);
+        assert_eq!(back.node.as_deref(), Some("n1"));
+    }
+
+    #[test]
+    fn prop_state_machine_no_terminal_escape() {
+        // Random action sequences never escape a terminal state and
+        // `value` is set iff completed.
+        prop::check(200, |g| {
+            let mut t = trial();
+            let mut step = 0u64;
+            for _ in 0..g.usize(1, 20) {
+                match g.rng().below(4) {
+                    0 => {
+                        step += 1;
+                        let _ = t.report(step, g.f64(-1.0, 1.0));
+                    }
+                    1 => {
+                        let _ = t.complete(g.f64(-1.0, 1.0), 1.0);
+                    }
+                    2 => {
+                        let _ = t.prune(1.0);
+                    }
+                    _ => {
+                        let _ = t.fail(1.0);
+                    }
+                }
+                let value_ok = (t.value.is_some()) == (t.state == TrialState::Completed);
+                if !value_ok {
+                    return Err(format!("value/state mismatch: {:?}", t.state));
+                }
+                if t.state.is_terminal() && t.finished_at.is_none() {
+                    return Err("terminal without finished_at".into());
+                }
+            }
+            Ok(())
+        });
+    }
+}

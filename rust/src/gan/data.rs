@@ -1,0 +1,107 @@
+//! Synthetic conditional "detector response" data — the Rust twin of
+//! `python/compile/model.py::synthetic_batch` (same formulas; see
+//! DESIGN.md §3 for why this substitution preserves the paper's
+//! behaviour). Conditions mimic normalized kinematics (p, η, nTracks);
+//! responses are correlated, heteroscedastic, and condition-dependent.
+
+use crate::rng::Rng;
+
+/// Condition dimensionality (must match the manifest).
+pub const COND_DIM: usize = 3;
+/// Response dimensionality.
+pub const FEAT_DIM: usize = 4;
+
+/// Draw a batch: returns `(cond, real)` as row-major flat vecs of shape
+/// `(batch, COND_DIM)` and `(batch, FEAT_DIM)`.
+pub fn batch(rng: &mut Rng, batch: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut cond = vec![0f32; batch * COND_DIM];
+    let mut real = vec![0f32; batch * FEAT_DIM];
+    rng.fill_uniform_f32(&mut cond, 0.0, 1.0);
+    for i in 0..batch {
+        let p = cond[i * COND_DIM] as f64;
+        let eta = cond[i * COND_DIM + 1] as f64;
+        let ntr = cond[i * COND_DIM + 2] as f64;
+        let s = 0.1 + 0.2 * ntr;
+        let e0 = rng.normal();
+        let e1 = rng.normal();
+        let e2 = rng.normal();
+        let e3 = rng.normal();
+        let mu0 = 2.0 * p - 1.0 + 0.5 * (3.0 * eta).sin();
+        let mu1 = p * eta;
+        let mu2 = 0.5 * (3.0 * p).cos() + 0.3 * ntr;
+        let mu3 = 0.5 * mu0 + mu1;
+        real[i * FEAT_DIM] = (mu0 + s * e0) as f32;
+        real[i * FEAT_DIM + 1] = (mu1 + s * e1) as f32;
+        real[i * FEAT_DIM + 2] = (mu2 + s * e2) as f32;
+        real[i * FEAT_DIM + 3] = (mu3 + s * e3 + 0.3 * s * e0) as f32;
+    }
+    (cond, real)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_ranges() {
+        let mut rng = Rng::new(1);
+        let (cond, real) = batch(&mut rng, 512);
+        assert_eq!(cond.len(), 512 * COND_DIM);
+        assert_eq!(real.len(), 512 * FEAT_DIM);
+        assert!(cond.iter().all(|&c| (0.0..=1.0).contains(&c)));
+        assert!(real.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn condition_dependence() {
+        // mu0 ≈ 2p-1: high-p rows must have larger feature 0.
+        let mut rng = Rng::new(2);
+        let (cond, real) = batch(&mut rng, 8192);
+        let (mut lo, mut hi, mut nlo, mut nhi) = (0.0f64, 0.0f64, 0, 0);
+        for i in 0..8192 {
+            let p = cond[i * COND_DIM];
+            let y0 = real[i * FEAT_DIM] as f64;
+            if p < 0.3 {
+                lo += y0;
+                nlo += 1;
+            } else if p > 0.7 {
+                hi += y0;
+                nhi += 1;
+            }
+        }
+        assert!(hi / nhi as f64 - lo / nlo as f64 > 0.5);
+    }
+
+    #[test]
+    fn correlated_features() {
+        // y3 shares e0 noise and mu0: corr(y0, y3) > 0.3.
+        let mut rng = Rng::new(3);
+        let (_, real) = batch(&mut rng, 8192);
+        let n = 8192;
+        let (mut m0, mut m3) = (0.0f64, 0.0f64);
+        for i in 0..n {
+            m0 += real[i * FEAT_DIM] as f64;
+            m3 += real[i * FEAT_DIM + 3] as f64;
+        }
+        m0 /= n as f64;
+        m3 /= n as f64;
+        let (mut c, mut v0, mut v3) = (0.0f64, 0.0f64, 0.0f64);
+        for i in 0..n {
+            let a = real[i * FEAT_DIM] as f64 - m0;
+            let b = real[i * FEAT_DIM + 3] as f64 - m3;
+            c += a * b;
+            v0 += a * a;
+            v3 += b * b;
+        }
+        let r = c / (v0.sqrt() * v3.sqrt());
+        assert!(r > 0.3, "corr={r}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let (c1, r1) = batch(&mut Rng::new(9), 64);
+        let (c2, r2) = batch(&mut Rng::new(9), 64);
+        assert_eq!(c1, c2);
+        assert_eq!(r1, r2);
+    }
+}

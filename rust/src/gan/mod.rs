@@ -1,0 +1,204 @@
+//! The §4 workload: GAN training trials executed through PJRT.
+//!
+//! [`data`] synthesizes the conditional "detector response" ground truth
+//! (the stand-in for LHCb simulation data — same formulas as
+//! `python/compile/model.py::synthetic_batch`); [`GanTrainer`] drives a
+//! full trial: initialize parameters from the manifest, run train-step
+//! executions with HOPAAS-suggested hyperparameters, report intermediate
+//! Wasserstein distances for pruning, and return the final objective.
+
+pub mod data;
+
+use crate::rng::Rng;
+use crate::runtime::{literal_f32, literal_scalar, Runtime, RuntimeError, Variant};
+use std::sync::Arc;
+
+/// Continuous hyperparameters of one trial (suggested by HOPAAS).
+#[derive(Clone, Copy, Debug)]
+pub struct GanHyper {
+    pub lr_g: f32,
+    pub lr_d: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub leak: f32,
+}
+
+impl Default for GanHyper {
+    /// The "previous results" baseline configuration (E6 compares the
+    /// campaign's best against this).
+    fn default() -> Self {
+        GanHyper { lr_g: 1e-3, lr_d: 1e-3, beta1: 0.9, beta2: 0.999, leak: 0.01 }
+    }
+}
+
+/// A GAN training trial bound to one compiled architecture variant.
+pub struct GanTrainer {
+    runtime: Arc<Runtime>,
+    variant: Variant,
+    /// Flat train state (params + adam m + v + t) as literals.
+    state: Vec<xla::Literal>,
+    rng: Rng,
+    pub steps_done: u64,
+}
+
+impl GanTrainer {
+    /// Initialize with He-init weights from `seed` (deterministic per
+    /// trial, so a preempted trial can be re-run bit-identically).
+    pub fn new(
+        runtime: Arc<Runtime>,
+        width: u64,
+        depth: u64,
+        seed: u64,
+    ) -> Result<GanTrainer, RuntimeError> {
+        let variant = runtime
+            .manifest
+            .variant(width, depth)
+            .ok_or_else(|| {
+                RuntimeError::Manifest(format!("no compiled variant {width}x{depth}"))
+            })?
+            .clone();
+        let mut rng = Rng::new(seed);
+        let mut state = Vec::with_capacity(variant.n_state);
+        // Params: He init for matrices, zeros for biases.
+        for shape in &variant.param_shapes {
+            let n: usize = shape.iter().product();
+            let mut buf = vec![0f32; n];
+            if shape.len() == 2 {
+                let std = (2.0 / shape[0] as f64).sqrt() as f32;
+                rng.fill_normal_f32(&mut buf);
+                for v in buf.iter_mut() {
+                    *v *= std;
+                }
+            }
+            state.push(literal_f32(shape, &buf)?);
+        }
+        // Adam m and v: zeros.
+        for _ in 0..2 {
+            for shape in &variant.param_shapes {
+                let n: usize = shape.iter().product();
+                state.push(literal_f32(shape, &vec![0f32; n])?);
+            }
+        }
+        // t.
+        state.push(literal_f32(&[], &[0.0])?);
+        debug_assert_eq!(state.len(), variant.n_state);
+        Ok(GanTrainer { runtime, variant, state, rng, steps_done: 0 })
+    }
+
+    /// Variant descriptor.
+    pub fn variant(&self) -> &Variant {
+        &self.variant
+    }
+
+    /// Run `n` adversarial steps; returns the last (loss_d, loss_g).
+    pub fn train(&mut self, n: u64, hp: &GanHyper) -> Result<(f32, f32), RuntimeError> {
+        let exe = self.runtime.load(&self.variant.train_file)?;
+        let m = &self.runtime.manifest;
+        let mut last = (f32::NAN, f32::NAN);
+        for _ in 0..n {
+            let (cond, real) = data::batch(&mut self.rng, m.batch);
+            let mut noise = vec![0f32; m.batch * m.latent_dim];
+            self.rng.fill_normal_f32(&mut noise);
+
+            let mut inputs: Vec<xla::Literal> = Vec::with_capacity(self.variant.n_state + 8);
+            // State moves in; it is replaced by the outputs below.
+            inputs.append(&mut self.state);
+            inputs.push(literal_f32(&[m.batch, m.cond_dim], &cond)?);
+            inputs.push(literal_f32(&[m.batch, m.feat_dim], &real)?);
+            inputs.push(literal_f32(&[m.batch, m.latent_dim], &noise)?);
+            for s in [hp.lr_g, hp.lr_d, hp.beta1, hp.beta2, hp.leak] {
+                inputs.push(literal_f32(&[], &[s])?);
+            }
+            let mut out = self.runtime.execute(&exe, &inputs)?;
+            let loss_g = literal_scalar(&out.pop().unwrap())?;
+            let loss_d = literal_scalar(&out.pop().unwrap())?;
+            self.state = out;
+            last = (loss_d, loss_g);
+            self.steps_done += 1;
+        }
+        Ok(last)
+    }
+
+    /// Evaluate with the default slope (tests/smoke use only — real
+    /// trials must pass the slope they trained with).
+    pub fn evaluate(&mut self) -> Result<f32, RuntimeError> {
+        self.evaluate_with_leak(0.1)
+    }
+
+    /// Evaluate the current generator: mean per-feature Wasserstein-1
+    /// against a fresh reference batch — the objective HOPAAS minimizes.
+    /// `leak` must match the slope the trial trained with.
+    pub fn evaluate_with_leak(&mut self, leak: f32) -> Result<f32, RuntimeError> {
+        let exe = self.runtime.load(&self.variant.eval_file)?;
+        let m = &self.runtime.manifest;
+        let (cond, real) = data::batch(&mut self.rng, m.eval_batch);
+        let mut noise = vec![0f32; m.eval_batch * m.latent_dim];
+        self.rng.fill_normal_f32(&mut noise);
+        let mut inputs: Vec<xla::Literal> =
+            Vec::with_capacity(self.variant.n_gen_arrays + 4);
+        for (i, lit) in self.state[..self.variant.n_gen_arrays].iter().enumerate() {
+            let shape = &self.variant.param_shapes[i];
+            inputs.push(literal_f32(shape, &crate::runtime::literal_to_vec(lit)?)?);
+        }
+        inputs.push(literal_f32(&[m.eval_batch, m.cond_dim], &cond)?);
+        inputs.push(literal_f32(&[m.eval_batch, m.feat_dim], &real)?);
+        inputs.push(literal_f32(&[m.eval_batch, m.latent_dim], &noise)?);
+        inputs.push(literal_f32(&[], &[leak])?);
+        let out = self.runtime.execute(&exe, &inputs)?;
+        Ok(literal_scalar(&out[0])?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Arc<Runtime>> {
+        let dir = Runtime::default_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts/ not built");
+            return None;
+        }
+        Some(Arc::new(Runtime::open(dir).unwrap()))
+    }
+
+    #[test]
+    fn trainer_initializes_state() {
+        let Some(rt) = runtime() else { return };
+        let t = GanTrainer::new(rt, 32, 2, 7).unwrap();
+        assert_eq!(t.state.len(), t.variant.n_state);
+    }
+
+    #[test]
+    fn unknown_variant_rejected() {
+        let Some(rt) = runtime() else { return };
+        assert!(GanTrainer::new(rt, 999, 9, 0).is_err());
+    }
+
+    #[test]
+    fn training_reduces_wasserstein() {
+        let Some(rt) = runtime() else { return };
+        let mut t = GanTrainer::new(rt, 32, 2, 42).unwrap();
+        let hp = GanHyper { lr_g: 2e-3, lr_d: 2e-3, beta1: 0.5, beta2: 0.9, leak: 0.1 };
+        let before = t.evaluate_with_leak(hp.leak).unwrap();
+        let (loss_d, loss_g) = t.train(40, &hp).unwrap();
+        assert!(loss_d.is_finite() && loss_g.is_finite());
+        let after = t.evaluate_with_leak(hp.leak).unwrap();
+        assert!(
+            after < before,
+            "W1 should improve: before={before} after={after}"
+        );
+        assert_eq!(t.steps_done, 40);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let Some(rt) = runtime() else { return };
+        let hp = GanHyper::default();
+        let mut a = GanTrainer::new(rt.clone(), 32, 2, 5).unwrap();
+        let mut b = GanTrainer::new(rt, 32, 2, 5).unwrap();
+        let la = a.train(3, &hp).unwrap();
+        let lb = b.train(3, &hp).unwrap();
+        assert_eq!(la, lb);
+    }
+}

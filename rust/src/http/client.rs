@@ -1,0 +1,228 @@
+//! Minimal blocking HTTP/1.1 client with keep-alive and auto-reconnect.
+//!
+//! Used by the Rust HOPAAS worker fleet (the analog of the paper's Python
+//! client package [12]) and by tests/benches.
+
+use super::{Headers, Response};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// Client error type.
+#[derive(Debug, thiserror::Error)]
+pub enum ClientError {
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("protocol error: {0}")]
+    Protocol(String),
+}
+
+/// A keep-alive connection to one server.
+pub struct Client {
+    addr: SocketAddr,
+    stream: Option<BufReader<TcpStream>>,
+    timeout: Duration,
+}
+
+impl Client {
+    /// Connect (lazily re-connects on broken connections).
+    pub fn connect(addr: SocketAddr) -> Result<Self, ClientError> {
+        let mut c = Client { addr, stream: None, timeout: Duration::from_secs(30) };
+        c.ensure_connected()?;
+        Ok(c)
+    }
+
+    /// Set per-operation socket timeout.
+    pub fn set_timeout(&mut self, timeout: Duration) {
+        self.timeout = timeout;
+        if let Some(s) = &self.stream {
+            let _ = s.get_ref().set_read_timeout(Some(timeout));
+            let _ = s.get_ref().set_write_timeout(Some(timeout));
+        }
+    }
+
+    fn ensure_connected(&mut self) -> Result<(), ClientError> {
+        if self.stream.is_none() {
+            let s = TcpStream::connect_timeout(&self.addr, self.timeout)?;
+            s.set_nodelay(true)?;
+            s.set_read_timeout(Some(self.timeout))?;
+            s.set_write_timeout(Some(self.timeout))?;
+            self.stream = Some(BufReader::new(s));
+        }
+        Ok(())
+    }
+
+    /// GET `path`.
+    pub fn get(&mut self, path: &str) -> Result<Response, ClientError> {
+        self.request("GET", path, &[], None)
+    }
+
+    /// POST raw bytes.
+    pub fn post(&mut self, path: &str, body: &[u8]) -> Result<Response, ClientError> {
+        self.request("POST", path, &[("content-type", "application/octet-stream")], Some(body))
+    }
+
+    /// POST a JSON value.
+    pub fn post_json(
+        &mut self,
+        path: &str,
+        value: &crate::json::Value,
+    ) -> Result<Response, ClientError> {
+        let body = value.to_string().into_bytes();
+        self.request("POST", path, &[("content-type", "application/json")], Some(&body))
+    }
+
+    /// Issue a request; one transparent retry on a stale keep-alive
+    /// connection (server closed between requests).
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: Option<&[u8]>,
+    ) -> Result<Response, ClientError> {
+        match self.try_request(method, path, headers, body) {
+            Ok(r) => Ok(r),
+            Err(ClientError::Io(e))
+                if matches!(
+                    e.kind(),
+                    ErrorKind::BrokenPipe
+                        | ErrorKind::ConnectionReset
+                        | ErrorKind::UnexpectedEof
+                        | ErrorKind::ConnectionAborted
+                ) =>
+            {
+                self.stream = None;
+                self.try_request(method, path, headers, body)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    fn try_request(
+        &mut self,
+        method: &str,
+        path: &str,
+        headers: &[(&str, &str)],
+        body: Option<&[u8]>,
+    ) -> Result<Response, ClientError> {
+        self.ensure_connected()?;
+        let reader = self.stream.as_mut().unwrap();
+        let stream = reader.get_mut();
+
+        let mut head = format!("{method} {path} HTTP/1.1\r\nhost: hopaas\r\n");
+        for (k, v) in headers {
+            head.push_str(&format!("{k}: {v}\r\n"));
+        }
+        head.push_str(&format!("content-length: {}\r\n\r\n", body.map_or(0, |b| b.len())));
+        let mut msg = head.into_bytes();
+        if let Some(b) = body {
+            msg.extend_from_slice(b);
+        }
+        let write_res = stream.write_all(&msg);
+        if let Err(e) = write_res {
+            return Err(ClientError::Io(e));
+        }
+
+        read_response(reader)
+    }
+}
+
+/// Read one HTTP/1.1 response (status line, headers, Content-Length body).
+fn read_response(reader: &mut BufReader<TcpStream>) -> Result<Response, ClientError> {
+    let mut status_line = String::new();
+    let n = reader.read_line(&mut status_line)?;
+    if n == 0 {
+        return Err(ClientError::Io(std::io::Error::new(
+            ErrorKind::UnexpectedEof,
+            "connection closed before status line",
+        )));
+    }
+    let status_line = status_line.trim_end();
+    let mut parts = status_line.splitn(3, ' ');
+    let version = parts.next().unwrap_or("");
+    if !version.starts_with("HTTP/1.") {
+        return Err(ClientError::Protocol(format!("bad status line: {status_line}")));
+    }
+    let status: u16 = parts
+        .next()
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| ClientError::Protocol("missing status code".into()))?;
+
+    let mut headers = Headers::new();
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let line = line.trim_end();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            headers.set(k.trim(), v.trim().to_string());
+        }
+    }
+
+    let len: usize = headers
+        .get("content-length")
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok(Response { status, headers, body })
+}
+
+impl Response {
+    /// Parse the body as JSON.
+    pub fn json_body(&self) -> Result<crate::json::Value, ClientError> {
+        let s = std::str::from_utf8(&self.body)
+            .map_err(|_| ClientError::Protocol("non-utf8 body".into()))?;
+        crate::json::parse(s).map_err(|e| ClientError::Protocol(e.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::http::{Router, Server, ServerConfig};
+
+    #[test]
+    fn reconnects_after_server_side_close() {
+        let mut router = Router::new();
+        router.get("/once", |_, _| {
+            let mut r = Response::text("only");
+            // Ask the server to close after this response.
+            r.headers.set("connection", "close");
+            r
+        });
+        router.get("/ok", |_, _| Response::text("ok"));
+        let h = Server::bind("127.0.0.1:0", router, ServerConfig::default())
+            .unwrap()
+            .start();
+        let mut c = Client::connect(h.addr()).unwrap();
+        // Note: our server keeps the connection according to the REQUEST's
+        // connection header, so simulate staleness by dropping the stream.
+        let r = c.get("/ok").unwrap();
+        assert_eq!(r.status, 200);
+        c.stream = None; // simulate stale / reset connection
+        let r2 = c.get("/ok").unwrap();
+        assert_eq!(r2.status, 200);
+        h.stop();
+    }
+
+    #[test]
+    fn json_body_parse() {
+        let mut router = Router::new();
+        router.get("/j", |_, _| {
+            let mut o = crate::json::Value::obj();
+            o.set("x", 1.5);
+            Response::json(&crate::json::Value::Obj(o))
+        });
+        let h = Server::bind("127.0.0.1:0", router, ServerConfig::default())
+            .unwrap()
+            .start();
+        let mut c = Client::connect(h.addr()).unwrap();
+        let v = c.get("/j").unwrap().json_body().unwrap();
+        assert_eq!(v.get("x").as_f64(), Some(1.5));
+        h.stop();
+    }
+}

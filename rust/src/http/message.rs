@@ -1,0 +1,470 @@
+//! HTTP request/response types and an incremental request parser.
+
+use std::collections::HashMap;
+use std::io::{self, Read};
+
+/// Request method. Only the verbs the HOPAAS API surface uses are
+/// first-class; anything else is preserved as `Other` so the router can
+/// 405 it deliberately.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Method {
+    Get,
+    Post,
+    Head,
+    Put,
+    Delete,
+    Options,
+    Other(String),
+}
+
+impl Method {
+    pub fn from_str(s: &str) -> Method {
+        match s {
+            "GET" => Method::Get,
+            "POST" => Method::Post,
+            "HEAD" => Method::Head,
+            "PUT" => Method::Put,
+            "DELETE" => Method::Delete,
+            "OPTIONS" => Method::Options,
+            other => Method::Other(other.to_string()),
+        }
+    }
+
+    pub fn as_str(&self) -> &str {
+        match self {
+            Method::Get => "GET",
+            Method::Post => "POST",
+            Method::Head => "HEAD",
+            Method::Put => "PUT",
+            Method::Delete => "DELETE",
+            Method::Options => "OPTIONS",
+            Method::Other(s) => s,
+        }
+    }
+}
+
+/// Case-insensitive header multimap (stores the last value per name,
+/// which is what the service semantics need).
+#[derive(Clone, Debug, Default)]
+pub struct Headers {
+    map: HashMap<String, String>,
+}
+
+impl Headers {
+    pub fn new() -> Self {
+        Headers::default()
+    }
+
+    pub fn set(&mut self, name: &str, value: impl Into<String>) {
+        self.map.insert(name.to_ascii_lowercase(), value.into());
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.map.get(&name.to_ascii_lowercase()).map(|s| s.as_str())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &str)> {
+        self.map.iter().map(|(k, v)| (k.as_str(), v.as_str()))
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
+/// A parsed HTTP request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub method: Method,
+    /// Path component only (no query string).
+    pub path: String,
+    /// Raw query string (without '?'), empty if none.
+    pub query: String,
+    pub headers: Headers,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// Parse the query string into key/value pairs (percent-decoding the
+    /// limited set the dashboard APIs use).
+    pub fn query_params(&self) -> Vec<(String, String)> {
+        self.query
+            .split('&')
+            .filter(|s| !s.is_empty())
+            .map(|kv| {
+                let (k, v) = kv.split_once('=').unwrap_or((kv, ""));
+                (percent_decode(k), percent_decode(v))
+            })
+            .collect()
+    }
+
+    /// First query parameter with the given key.
+    pub fn query_param(&self, key: &str) -> Option<String> {
+        self.query_params().into_iter().find(|(k, _)| k == key).map(|(_, v)| v)
+    }
+
+    /// Body interpreted as UTF-8.
+    pub fn body_str(&self) -> Option<&str> {
+        std::str::from_utf8(&self.body).ok()
+    }
+}
+
+fn percent_decode(s: &str) -> String {
+    fn hex(c: u8) -> Option<u8> {
+        match c {
+            b'0'..=b'9' => Some(c - b'0'),
+            b'a'..=b'f' => Some(c - b'a' + 10),
+            b'A'..=b'F' => Some(c - b'A' + 10),
+            _ => None,
+        }
+    }
+    let b = s.as_bytes();
+    let mut out = Vec::with_capacity(b.len());
+    let mut i = 0;
+    while i < b.len() {
+        match b[i] {
+            b'%' if i + 2 < b.len() => {
+                if let (Some(h), Some(l)) = (hex(b[i + 1]), hex(b[i + 2])) {
+                    out.push(h * 16 + l);
+                    i += 3;
+                } else {
+                    out.push(b'%');
+                    i += 1;
+                }
+            }
+            b'+' => {
+                out.push(b' ');
+                i += 1;
+            }
+            c => {
+                out.push(c);
+                i += 1;
+            }
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// An HTTP response under construction.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Headers,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn new(status: u16) -> Self {
+        Response { status, headers: Headers::new(), body: Vec::new() }
+    }
+
+    /// 200 with a JSON body.
+    pub fn json(value: &crate::json::Value) -> Self {
+        Self::json_status(200, value)
+    }
+
+    /// Arbitrary status with a JSON body.
+    pub fn json_status(status: u16, value: &crate::json::Value) -> Self {
+        let mut r = Response::new(status);
+        r.headers.set("content-type", "application/json");
+        r.body = value.to_string().into_bytes();
+        r
+    }
+
+    /// JSON error envelope `{"detail": msg}` (FastAPI's error shape,
+    /// which the paper's clients would see).
+    pub fn error(status: u16, msg: &str) -> Self {
+        let mut o = crate::json::Value::obj();
+        o.set("detail", msg);
+        Self::json_status(status, &crate::json::Value::Obj(o))
+    }
+
+    /// 200 text/html.
+    pub fn html(body: &str) -> Self {
+        let mut r = Response::new(200);
+        r.headers.set("content-type", "text/html; charset=utf-8");
+        r.body = body.as_bytes().to_vec();
+        r
+    }
+
+    /// 200 text/plain.
+    pub fn text(body: &str) -> Self {
+        let mut r = Response::new(200);
+        r.headers.set("content-type", "text/plain; charset=utf-8");
+        r.body = body.as_bytes().to_vec();
+        r
+    }
+
+    /// Serialize head+body for the wire. `head_only` elides the body
+    /// (HEAD requests) while keeping Content-Length.
+    pub fn encode(&self, keep_alive: bool, head_only: bool) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.body.len() + 128);
+        out.extend_from_slice(
+            format!("HTTP/1.1 {} {}\r\n", self.status, super::reason(self.status)).as_bytes(),
+        );
+        for (k, v) in self.headers.iter() {
+            out.extend_from_slice(format!("{k}: {v}\r\n").as_bytes());
+        }
+        out.extend_from_slice(format!("content-length: {}\r\n", self.body.len()).as_bytes());
+        out.extend_from_slice(if keep_alive {
+            b"connection: keep-alive\r\n"
+        } else {
+            b"connection: close\r\n"
+        });
+        out.extend_from_slice(b"\r\n");
+        if !head_only {
+            out.extend_from_slice(&self.body);
+        }
+        out
+    }
+}
+
+/// Limits applied while reading a request.
+pub const MAX_HEAD_BYTES: usize = 16 * 1024;
+pub const MAX_BODY_BYTES: usize = 8 * 1024 * 1024;
+
+/// Result of a parse attempt over a buffered prefix.
+pub enum ParseState {
+    /// Need more bytes.
+    Partial,
+    /// Parsed a full request consuming `used` bytes of the buffer.
+    Done { request: Request, used: usize },
+    /// Protocol error — the connection should be answered with `status`
+    /// and closed.
+    Bad { status: u16, msg: &'static str },
+}
+
+/// Try to parse one request from `buf`.
+pub fn parse_request(buf: &[u8]) -> ParseState {
+    // Find end of head.
+    let head_end = match find_subslice(buf, b"\r\n\r\n") {
+        Some(i) => i,
+        None => {
+            if buf.len() > MAX_HEAD_BYTES {
+                return ParseState::Bad { status: 431, msg: "header block too large" };
+            }
+            return ParseState::Partial;
+        }
+    };
+    if head_end > MAX_HEAD_BYTES {
+        return ParseState::Bad { status: 431, msg: "header block too large" };
+    }
+    let head = match std::str::from_utf8(&buf[..head_end]) {
+        Ok(h) => h,
+        Err(_) => return ParseState::Bad { status: 400, msg: "non-utf8 header block" },
+    };
+    let mut lines = head.split("\r\n");
+    let request_line = match lines.next() {
+        Some(l) if !l.is_empty() => l,
+        _ => return ParseState::Bad { status: 400, msg: "empty request line" },
+    };
+    let mut parts = request_line.split(' ');
+    let (m, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(t), Some(v), None) => (m, t, v),
+        _ => return ParseState::Bad { status: 400, msg: "malformed request line" },
+    };
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return ParseState::Bad { status: 400, msg: "unsupported http version" };
+    }
+    let method = Method::from_str(m);
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+    if !path.starts_with('/') {
+        return ParseState::Bad { status: 400, msg: "target must be origin-form" };
+    }
+
+    let mut headers = Headers::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (name, value) = match line.split_once(':') {
+            Some((n, v)) => (n.trim(), v.trim()),
+            None => return ParseState::Bad { status: 400, msg: "malformed header" },
+        };
+        if name.is_empty() {
+            return ParseState::Bad { status: 400, msg: "empty header name" };
+        }
+        headers.set(name, value);
+    }
+
+    // Transfer-Encoding is not supported (the protocol never streams).
+    if headers.get("transfer-encoding").is_some() {
+        return ParseState::Bad { status: 400, msg: "transfer-encoding unsupported" };
+    }
+
+    let content_len = match headers.get("content-length") {
+        None => 0usize,
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) => n,
+            Err(_) => return ParseState::Bad { status: 400, msg: "bad content-length" },
+        },
+    };
+    if content_len > MAX_BODY_BYTES {
+        return ParseState::Bad { status: 413, msg: "body too large" };
+    }
+    let body_start = head_end + 4;
+    if buf.len() < body_start + content_len {
+        return ParseState::Partial;
+    }
+    let body = buf[body_start..body_start + content_len].to_vec();
+    ParseState::Done {
+        request: Request { method, path, query, headers, body },
+        used: body_start + content_len,
+    }
+}
+
+/// Blocking read of exactly one request from a stream (client-side and
+/// test use; the server uses the incremental path).
+pub fn read_request(stream: &mut impl Read) -> io::Result<Option<Request>> {
+    let mut buf = Vec::with_capacity(1024);
+    let mut chunk = [0u8; 4096];
+    loop {
+        match parse_request(&buf) {
+            ParseState::Done { request, .. } => return Ok(Some(request)),
+            ParseState::Bad { msg, .. } => {
+                return Err(io::Error::new(io::ErrorKind::InvalidData, msg))
+            }
+            ParseState::Partial => {}
+        }
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            if buf.is_empty() {
+                return Ok(None);
+            }
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "truncated request"));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    }
+}
+
+pub(crate) fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_ok(raw: &str) -> Request {
+        match parse_request(raw.as_bytes()) {
+            ParseState::Done { request, used } => {
+                assert_eq!(used, raw.len());
+                request
+            }
+            _ => panic!("expected full parse"),
+        }
+    }
+
+    #[test]
+    fn parses_get() {
+        let r = parse_ok("GET /api/version HTTP/1.1\r\nhost: x\r\n\r\n");
+        assert_eq!(r.method, Method::Get);
+        assert_eq!(r.path, "/api/version");
+        assert_eq!(r.query, "");
+        assert_eq!(r.headers.get("Host"), Some("x"));
+        assert!(r.body.is_empty());
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let body = r#"{"a":1}"#;
+        let raw = format!(
+            "POST /api/ask/tok HTTP/1.1\r\ncontent-length: {}\r\ncontent-type: application/json\r\n\r\n{}",
+            body.len(),
+            body
+        );
+        let r = parse_ok(&raw);
+        assert_eq!(r.method, Method::Post);
+        assert_eq!(r.body_str(), Some(body));
+    }
+
+    #[test]
+    fn query_string_split_and_decoded() {
+        let r = parse_ok("GET /api/studies?limit=10&name=a%20b+c HTTP/1.1\r\n\r\n");
+        assert_eq!(r.path, "/api/studies");
+        assert_eq!(r.query_param("limit").as_deref(), Some("10"));
+        assert_eq!(r.query_param("name").as_deref(), Some("a b c"));
+        assert_eq!(r.query_param("missing"), None);
+    }
+
+    #[test]
+    fn partial_until_body_complete() {
+        let raw = "POST /x HTTP/1.1\r\ncontent-length: 5\r\n\r\nab";
+        assert!(matches!(parse_request(raw.as_bytes()), ParseState::Partial));
+        let raw2 = format!("{raw}cde");
+        assert!(matches!(parse_request(raw2.as_bytes()), ParseState::Done { .. }));
+    }
+
+    #[test]
+    fn pipelined_requests_report_used() {
+        let one = "GET /a HTTP/1.1\r\n\r\n";
+        let two = format!("{one}GET /b HTTP/1.1\r\n\r\n");
+        match parse_request(two.as_bytes()) {
+            ParseState::Done { request, used } => {
+                assert_eq!(request.path, "/a");
+                assert_eq!(used, one.len());
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        for raw in [
+            "BROKEN\r\n\r\n",
+            "GET /x HTTP/2\r\n\r\n",
+            "GET x HTTP/1.1\r\n\r\n",
+            "GET /x HTTP/1.1\r\nbad header\r\n\r\n",
+            "POST /x HTTP/1.1\r\ncontent-length: nope\r\n\r\n",
+            "POST /x HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n",
+        ] {
+            assert!(
+                matches!(parse_request(raw.as_bytes()), ParseState::Bad { .. }),
+                "should reject {raw:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn oversized_body_rejected() {
+        let raw = format!("POST /x HTTP/1.1\r\ncontent-length: {}\r\n\r\n", MAX_BODY_BYTES + 1);
+        assert!(matches!(parse_request(raw.as_bytes()), ParseState::Bad { status: 413, .. }));
+    }
+
+    #[test]
+    fn response_encode_roundtrip_fields() {
+        let mut v = crate::json::Value::obj();
+        v.set("ok", true);
+        let resp = Response::json(&crate::json::Value::Obj(v));
+        let bytes = resp.encode(true, false);
+        let text = String::from_utf8(bytes).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.to_lowercase().contains("content-length: 11"));
+        assert!(text.contains("keep-alive"));
+        assert!(text.ends_with(r#"{"ok":true}"#));
+    }
+
+    #[test]
+    fn head_only_elides_body() {
+        let resp = Response::text("hello");
+        let bytes = resp.encode(false, true);
+        let text = String::from_utf8(bytes).unwrap();
+        assert!(text.to_lowercase().contains("content-length: 5"));
+        assert!(text.ends_with("\r\n\r\n"));
+    }
+
+    #[test]
+    fn headers_case_insensitive() {
+        let mut h = Headers::new();
+        h.set("Content-Type", "application/json");
+        assert_eq!(h.get("content-type"), Some("application/json"));
+        assert_eq!(h.get("CONTENT-TYPE"), Some("application/json"));
+    }
+}

@@ -1,0 +1,45 @@
+//! HTTP/1.1 substrate.
+//!
+//! The paper's deployment stack is Uvicorn (ASGI workers) behind an NGINX
+//! reverse proxy. Offline, we implement the part of that stack the
+//! HOPAAS protocol actually needs: a correct, concurrent HTTP/1.1 server
+//! with keep-alive and a thread-pool accept loop (the analog of "a
+//! scalable set of Uvicorn instances"), plus a blocking client used by
+//! the Rust HOPAAS worker fleet and the test/bench harnesses.
+//!
+//! Scope: `Content-Length` bodies (the HOPAAS APIs never stream),
+//! request-size limits, per-connection read timeouts, `HEAD` handling,
+//! and graceful shutdown. TLS is out of scope (the paper terminates HTTPS
+//! at NGINX, i.e. outside the application) — see DESIGN.md §3.
+
+mod client;
+mod message;
+mod router;
+mod server;
+
+pub use client::{Client, ClientError};
+pub use message::{parse_request, read_request, Headers, Method, ParseState, Request, Response};
+pub use router::{PathParams, Router};
+pub use server::{Server, ServerConfig, ServerHandle};
+
+/// Canonical reason phrases for the status codes the service emits.
+pub fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        204 => "No Content",
+        400 => "Bad Request",
+        401 => "Unauthorized",
+        403 => "Forbidden",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}

@@ -1,0 +1,210 @@
+//! Method+path router with `{param}` captures.
+//!
+//! Routes are matched segment-wise; `{name}` captures one segment. On a
+//! path match with the wrong method the router answers 405 (with an
+//! `allow` header), otherwise 404 — matching FastAPI behaviour, which is
+//! what the paper's clients are written against.
+
+use super::{Method, Request, Response};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Captured path parameters.
+#[derive(Clone, Debug, Default)]
+pub struct PathParams {
+    map: HashMap<String, String>,
+}
+
+impl PathParams {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.map.get(name).map(|s| s.as_str())
+    }
+}
+
+type Handler = dyn Fn(&Request, &PathParams) -> Response + Send + Sync;
+
+struct Route {
+    method: Method,
+    segments: Vec<Seg>,
+    handler: Arc<Handler>,
+}
+
+enum Seg {
+    Lit(String),
+    Param(String),
+}
+
+/// The router. Cheap to clone via `Arc` at the server layer.
+#[derive(Default)]
+pub struct Router {
+    routes: Vec<Route>,
+}
+
+impl Router {
+    pub fn new() -> Self {
+        Router::default()
+    }
+
+    /// Register a route, e.g. `route(Method::Post, "/api/ask/{token}", h)`.
+    pub fn route(
+        &mut self,
+        method: Method,
+        pattern: &str,
+        handler: impl Fn(&Request, &PathParams) -> Response + Send + Sync + 'static,
+    ) -> &mut Self {
+        let segments = pattern
+            .split('/')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                if s.starts_with('{') && s.ends_with('}') {
+                    Seg::Param(s[1..s.len() - 1].to_string())
+                } else {
+                    Seg::Lit(s.to_string())
+                }
+            })
+            .collect();
+        self.routes.push(Route { method, segments, handler: Arc::new(handler) });
+        self
+    }
+
+    pub fn get(
+        &mut self,
+        pattern: &str,
+        handler: impl Fn(&Request, &PathParams) -> Response + Send + Sync + 'static,
+    ) -> &mut Self {
+        self.route(Method::Get, pattern, handler)
+    }
+
+    pub fn post(
+        &mut self,
+        pattern: &str,
+        handler: impl Fn(&Request, &PathParams) -> Response + Send + Sync + 'static,
+    ) -> &mut Self {
+        self.route(Method::Post, pattern, handler)
+    }
+
+    /// Dispatch a request.
+    pub fn dispatch(&self, req: &Request) -> Response {
+        let path_segs: Vec<&str> = req.path.split('/').filter(|s| !s.is_empty()).collect();
+        let mut allowed: Vec<&str> = Vec::new();
+        for route in &self.routes {
+            if let Some(params) = match_segments(&route.segments, &path_segs) {
+                // HEAD is served by the GET handler; the server elides
+                // the body at encode time.
+                let method_matches = route.method == req.method
+                    || (req.method == Method::Head && route.method == Method::Get);
+                if method_matches {
+                    return (route.handler)(req, &params);
+                }
+                allowed.push(route.method.as_str());
+            }
+        }
+        if !allowed.is_empty() {
+            allowed.sort();
+            allowed.dedup();
+            let mut resp = Response::error(405, "method not allowed");
+            resp.headers.set("allow", allowed.join(", "));
+            return resp;
+        }
+        Response::error(404, "not found")
+    }
+}
+
+fn match_segments(pattern: &[Seg], path: &[&str]) -> Option<PathParams> {
+    if pattern.len() != path.len() {
+        return None;
+    }
+    let mut params = PathParams::default();
+    for (seg, part) in pattern.iter().zip(path) {
+        match seg {
+            Seg::Lit(lit) if lit == part => {}
+            Seg::Lit(_) => return None,
+            Seg::Param(name) => {
+                params.map.insert(name.clone(), part.to_string());
+            }
+        }
+    }
+    Some(params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::http::Headers;
+
+    fn req(method: Method, path: &str) -> Request {
+        Request {
+            method,
+            path: path.to_string(),
+            query: String::new(),
+            headers: Headers::new(),
+            body: Vec::new(),
+        }
+    }
+
+    fn router() -> Router {
+        let mut r = Router::new();
+        r.get("/api/version", |_, _| Response::text("v"));
+        r.post("/api/ask/{token}", |_, p| {
+            Response::text(&format!("ask:{}", p.get("token").unwrap()))
+        });
+        r.get("/api/studies/{id}/trials/{tid}", |_, p| {
+            Response::text(&format!("{}:{}", p.get("id").unwrap(), p.get("tid").unwrap()))
+        });
+        r
+    }
+
+    #[test]
+    fn literal_match() {
+        let r = router();
+        let resp = r.dispatch(&req(Method::Get, "/api/version"));
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body, b"v");
+    }
+
+    #[test]
+    fn param_capture() {
+        let r = router();
+        let resp = r.dispatch(&req(Method::Post, "/api/ask/abc123"));
+        assert_eq!(resp.body, b"ask:abc123");
+    }
+
+    #[test]
+    fn multi_param_capture() {
+        let r = router();
+        let resp = r.dispatch(&req(Method::Get, "/api/studies/s1/trials/t9"));
+        assert_eq!(resp.body, b"s1:t9");
+    }
+
+    #[test]
+    fn not_found() {
+        let r = router();
+        assert_eq!(r.dispatch(&req(Method::Get, "/nope")).status, 404);
+        assert_eq!(r.dispatch(&req(Method::Get, "/api/ask")).status, 404);
+        // Too many segments.
+        assert_eq!(r.dispatch(&req(Method::Post, "/api/ask/a/b")).status, 404);
+    }
+
+    #[test]
+    fn wrong_method_is_405_with_allow() {
+        let r = router();
+        let resp = r.dispatch(&req(Method::Get, "/api/ask/tok"));
+        assert_eq!(resp.status, 405);
+        assert_eq!(resp.headers.get("allow"), Some("POST"));
+    }
+
+    #[test]
+    fn head_served_by_get() {
+        let r = router();
+        let resp = r.dispatch(&req(Method::Head, "/api/version"));
+        assert_eq!(resp.status, 200);
+    }
+
+    #[test]
+    fn trailing_slash_equivalent() {
+        // Segment-wise matching ignores empty segments, so a trailing
+        // slash resolves to the same route.
+        let r = router();
+        assert_eq!(r.dispatch(&req(Method::Get, "/api/version/")).status, 200);
+    }
+}

@@ -1,0 +1,316 @@
+//! JSON codec substrate.
+//!
+//! The HOPAAS wire protocol is JSON over HTTP (the paper's stack is
+//! FastAPI/pydantic). `serde_json` is unavailable in this offline build,
+//! so this module provides a complete RFC 8259 implementation: a
+//! [`Value`] model, a recursive-descent [`parse`] with depth limiting,
+//! and a serializer with escaping. Object key order is preserved
+//! (insertion order) so canonical study hashing is deterministic.
+
+mod parse;
+mod write;
+
+pub use parse::{parse, ParseError};
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A JSON value. Objects preserve insertion order via a parallel index,
+/// which keeps serialization stable for canonical hashing.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Value>),
+    Obj(Obj),
+}
+
+/// Insertion-ordered string→Value map.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Obj {
+    keys: Vec<String>,
+    map: BTreeMap<String, Value>,
+}
+
+impl Obj {
+    pub fn new() -> Self {
+        Obj::default()
+    }
+
+    /// Insert or replace; preserves the original position on replace.
+    pub fn set(&mut self, key: impl Into<String>, value: impl Into<Value>) -> &mut Self {
+        let key = key.into();
+        if !self.map.contains_key(&key) {
+            self.keys.push(key.clone());
+        }
+        self.map.insert(key, value.into());
+        self
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn remove(&mut self, key: &str) -> Option<Value> {
+        if let Some(v) = self.map.remove(key) {
+            self.keys.retain(|k| k != key);
+            Some(v)
+        } else {
+            None
+        }
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.map.contains_key(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// Iterate in insertion order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Value)> {
+        self.keys.iter().map(move |k| (k.as_str(), &self.map[k]))
+    }
+
+    /// Keys in insertion order.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.keys.iter().map(|k| k.as_str())
+    }
+}
+
+impl Value {
+    /// Build an object value fluently: `Value::obj().set("a", 1)`.
+    pub fn obj() -> Obj {
+        Obj::new()
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Num(n) if n.fract() == 0.0 && n.abs() < 9.0e18 => Some(*n as i64),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_i64().and_then(|v| u64::try_from(v).ok())
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Value]> {
+        match self {
+            Value::Arr(a) => Some(a),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&Obj> {
+        match self {
+            Value::Obj(o) => Some(o),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, Value::Null)
+    }
+
+    /// `value["key"]`-style access returning Null on miss.
+    pub fn get(&self, key: &str) -> &Value {
+        static NULL: Value = Value::Null;
+        match self {
+            Value::Obj(o) => o.get(key).unwrap_or(&NULL),
+            _ => &NULL,
+        }
+    }
+
+    /// Array index access returning Null on miss.
+    pub fn at(&self, idx: usize) -> &Value {
+        static NULL: Value = Value::Null;
+        match self {
+            Value::Arr(a) => a.get(idx).unwrap_or(&NULL),
+            _ => &NULL,
+        }
+    }
+
+    /// Serialize compactly.
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        write::write(self, &mut s);
+        s
+    }
+
+    /// Serialize with 2-space indentation (dashboard/debug output).
+    pub fn to_pretty(&self) -> String {
+        let mut s = String::new();
+        write::write_pretty(self, &mut s, 0);
+        s
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.to_string())
+    }
+}
+
+impl From<Obj> for Value {
+    fn from(o: Obj) -> Self {
+        Value::Obj(o)
+    }
+}
+impl From<bool> for Value {
+    fn from(b: bool) -> Self {
+        Value::Bool(b)
+    }
+}
+impl From<f64> for Value {
+    fn from(n: f64) -> Self {
+        Value::Num(n)
+    }
+}
+impl From<i64> for Value {
+    fn from(n: i64) -> Self {
+        Value::Num(n as f64)
+    }
+}
+impl From<i32> for Value {
+    fn from(n: i32) -> Self {
+        Value::Num(n as f64)
+    }
+}
+impl From<u64> for Value {
+    fn from(n: u64) -> Self {
+        Value::Num(n as f64)
+    }
+}
+impl From<usize> for Value {
+    fn from(n: usize) -> Self {
+        Value::Num(n as f64)
+    }
+}
+impl From<u32> for Value {
+    fn from(n: u32) -> Self {
+        Value::Num(n as f64)
+    }
+}
+impl From<&str> for Value {
+    fn from(s: &str) -> Self {
+        Value::Str(s.to_string())
+    }
+}
+impl From<String> for Value {
+    fn from(s: String) -> Self {
+        Value::Str(s)
+    }
+}
+impl<T: Into<Value>> From<Vec<T>> for Value {
+    fn from(v: Vec<T>) -> Self {
+        Value::Arr(v.into_iter().map(Into::into).collect())
+    }
+}
+impl<T: Into<Value>> From<Option<T>> for Value {
+    fn from(v: Option<T>) -> Self {
+        match v {
+            Some(x) => x.into(),
+            None => Value::Null,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop;
+
+    #[test]
+    fn obj_preserves_insertion_order() {
+        let mut o = Obj::new();
+        o.set("z", 1).set("a", 2).set("m", 3);
+        let keys: Vec<_> = o.keys().collect();
+        assert_eq!(keys, vec!["z", "a", "m"]);
+        assert_eq!(o.to_owned().len(), 3);
+    }
+
+    #[test]
+    fn obj_replace_keeps_position() {
+        let mut o = Obj::new();
+        o.set("a", 1).set("b", 2).set("a", 9);
+        let keys: Vec<_> = o.keys().collect();
+        assert_eq!(keys, vec!["a", "b"]);
+        assert_eq!(o.get("a").unwrap().as_i64(), Some(9));
+    }
+
+    #[test]
+    fn accessors() {
+        let v = parse(r#"{"a": [1, "two", true, null], "b": {"c": 2.5}}"#).unwrap();
+        assert_eq!(v.get("a").at(0).as_i64(), Some(1));
+        assert_eq!(v.get("a").at(1).as_str(), Some("two"));
+        assert_eq!(v.get("a").at(2).as_bool(), Some(true));
+        assert!(v.get("a").at(3).is_null());
+        assert_eq!(v.get("b").get("c").as_f64(), Some(2.5));
+        assert!(v.get("missing").is_null());
+        assert!(v.at(0).is_null());
+    }
+
+    #[test]
+    fn roundtrip_property() {
+        fn gen_value(g: &mut prop::Gen, depth: usize) -> Value {
+            let choices = if depth == 0 { 4 } else { 6 };
+            match g.rng().below(choices) {
+                0 => Value::Null,
+                1 => Value::Bool(g.bool()),
+                2 => Value::Num((g.f64_any() * 1e6).round() / 1e6),
+                3 => Value::Str(g.string(12)),
+                4 => Value::Arr(g.vec(0..=4, |g| gen_value(g, depth - 1))),
+                _ => {
+                    let mut o = Obj::new();
+                    for _ in 0..g.usize(0, 4) {
+                        o.set(g.ident(8), gen_value(g, depth - 1));
+                    }
+                    Value::Obj(o)
+                }
+            }
+        }
+        prop::check(300, |g| {
+            let v = gen_value(g, 3);
+            let s = v.to_string();
+            let back = parse(&s).map_err(|e| format!("parse failed on {s}: {e}"))?;
+            prop::assert_holds(back == v, format!("roundtrip mismatch: {s}"))
+        });
+    }
+
+    #[test]
+    fn pretty_parses_back() {
+        let v = parse(r#"{"a":[1,2,{"b":null}],"c":"x"}"#).unwrap();
+        let p = v.to_pretty();
+        assert_eq!(parse(&p).unwrap(), v);
+        assert!(p.contains('\n'));
+    }
+}

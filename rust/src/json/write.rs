@@ -1,0 +1,160 @@
+//! JSON serialization with full string escaping.
+
+use super::Value;
+
+/// Serialize compactly into `out`.
+pub fn write(v: &Value, out: &mut String) {
+    match v {
+        Value::Null => out.push_str("null"),
+        Value::Bool(true) => out.push_str("true"),
+        Value::Bool(false) => out.push_str("false"),
+        Value::Num(n) => write_num(*n, out),
+        Value::Str(s) => write_str(s, out),
+        Value::Arr(a) => {
+            out.push('[');
+            for (i, x) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write(x, out);
+            }
+            out.push(']');
+        }
+        Value::Obj(o) => {
+            out.push('{');
+            for (i, (k, x)) in o.iter().enumerate() {
+                if i > 0 {
+                    out.push(',');
+                }
+                write_str(k, out);
+                out.push(':');
+                write(x, out);
+            }
+            out.push('}');
+        }
+    }
+}
+
+/// Serialize with 2-space indentation.
+pub fn write_pretty(v: &Value, out: &mut String, indent: usize) {
+    match v {
+        Value::Arr(a) if !a.is_empty() => {
+            out.push_str("[\n");
+            for (i, x) in a.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(",\n");
+                }
+                push_indent(out, indent + 1);
+                write_pretty(x, out, indent + 1);
+            }
+            out.push('\n');
+            push_indent(out, indent);
+            out.push(']');
+        }
+        Value::Obj(o) if !o.is_empty() => {
+            out.push_str("{\n");
+            for (i, (k, x)) in o.iter().enumerate() {
+                if i > 0 {
+                    out.push_str(",\n");
+                }
+                push_indent(out, indent + 1);
+                write_str(k, out);
+                out.push_str(": ");
+                write_pretty(x, out, indent + 1);
+            }
+            out.push('\n');
+            push_indent(out, indent);
+            out.push('}');
+        }
+        other => write(other, out),
+    }
+}
+
+fn push_indent(out: &mut String, n: usize) {
+    for _ in 0..n {
+        out.push_str("  ");
+    }
+}
+
+/// JSON numbers cannot be NaN/Inf; encode those as null (matching the
+/// common python `json` practice the paper's stack would hit via
+/// `allow_nan=False` handling — we choose null rather than erroring so a
+/// diverged trial loss remains reportable).
+fn write_num(n: f64, out: &mut String) {
+    if !n.is_finite() {
+        out.push_str("null");
+        return;
+    }
+    if n == n.trunc() && n.abs() < 1e15 {
+        // Integral: print without the trailing ".0" so ids serialize
+        // as integers.
+        let i = n as i64;
+        out.push_str(&i.to_string());
+    } else {
+        // Shortest roundtrip formatting from the std float printer.
+        let s = format!("{n}");
+        // `{}` on f64 never prints NaN/inf here (checked) and always
+        // round-trips.
+        out.push_str(&s);
+    }
+}
+
+fn write_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            '\u{0008}' => out.push_str("\\b"),
+            '\u{000C}' => out.push_str("\\f"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::json::{parse, Value};
+
+    #[test]
+    fn integers_without_decimal_point() {
+        assert_eq!(Value::Num(42.0).to_string(), "42");
+        assert_eq!(Value::Num(-3.0).to_string(), "-3");
+        assert_eq!(Value::Num(0.0).to_string(), "0");
+    }
+
+    #[test]
+    fn floats_roundtrip() {
+        for x in [0.1, -2.5e-8, 1.0 / 3.0, 1e100, f64::MIN_POSITIVE] {
+            let s = Value::Num(x).to_string();
+            assert_eq!(parse(&s).unwrap().as_f64(), Some(x), "s={s}");
+        }
+    }
+
+    #[test]
+    fn nan_inf_to_null() {
+        assert_eq!(Value::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Value::Num(f64::INFINITY).to_string(), "null");
+    }
+
+    #[test]
+    fn control_chars_escaped() {
+        let s = Value::Str("\u{0001}\n\"x\\".into()).to_string();
+        assert_eq!(s, "\"\\u0001\\n\\\"x\\\\\"");
+        assert_eq!(parse(&s).unwrap().as_str(), Some("\u{0001}\n\"x\\"));
+    }
+
+    #[test]
+    fn nested_compact() {
+        let mut o = Value::obj();
+        o.set("a", vec![1i64, 2]).set("b", "x");
+        assert_eq!(Value::Obj(o).to_string(), r#"{"a":[1,2],"b":"x"}"#);
+    }
+}

@@ -1,0 +1,47 @@
+//! # hopaas-rs
+//!
+//! A production-grade Rust reproduction of **HOPAAS** — *Hyperparameter
+//! Optimization as a Service on INFN Cloud* (Barbetti & Anderlini, 2023).
+//!
+//! HOPAAS coordinates distributed hyperparameter-optimization campaigns
+//! across heterogeneous, opportunistic compute nodes through a minimal set
+//! of REST APIs (`ask`, `tell`, `should_prune`, `version`). This crate
+//! implements:
+//!
+//! * the **coordination service** (`coordinator`): study/trial management,
+//!   Bayesian and evolutionary samplers, pruners, token auth, metrics, and
+//!   the HTTP API surface of the paper's Table 1;
+//! * every **substrate** the service needs, from scratch: an HTTP/1.1
+//!   server and client (`http`), a JSON codec (`json`), a durable
+//!   WAL+snapshot store standing in for PostgreSQL (`store`), dense linear
+//!   algebra for the GP sampler (`linalg`), and a deterministic PRNG
+//!   (`rng`);
+//! * the **workload** of the paper's §4 campaign: a Lamarr-like
+//!   conditional GAN whose training step is AOT-compiled from JAX+Pallas
+//!   to HLO and executed from Rust via PJRT (`runtime`, `gan`);
+//! * the **client fleet** (`worker`): a Rust HOPAAS client wrapping the
+//!   REST APIs plus a multi-site node simulator (speed, availability,
+//!   preemption) reproducing the paper's INFN/CERN/CINECA setup;
+//! * synthetic **benchmark objectives** (`objectives`) used by the sampler
+//!   and pruner studies.
+//!
+//! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
+//! request path is pure Rust.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod gan;
+pub mod http;
+pub mod json;
+pub mod linalg;
+pub mod objectives;
+pub mod rng;
+pub mod runtime;
+pub mod store;
+pub mod worker;
+
+pub mod testutil;
+
+/// Version string reported by the `/api/version` endpoint.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

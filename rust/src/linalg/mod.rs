@@ -1,0 +1,261 @@
+//! Small dense linear-algebra substrate for the GP sampler.
+//!
+//! The Gaussian-process sampler needs: symmetric positive-definite
+//! factorization (Cholesky), triangular solves, and log-determinants, for
+//! matrices up to a few hundred rows (the trial history of one study).
+//! A tight, allocation-conscious column-major implementation is plenty.
+
+/// Dense row-major matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_rows(rows: Vec<Vec<f64>>) -> Mat {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |x| x.len());
+        assert!(rows.iter().all(|x| x.len() == c), "ragged rows");
+        Mat { rows: r, cols: c, data: rows.into_iter().flatten().collect() }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    pub fn identity(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            *m.at_mut(i, i) = 1.0;
+        }
+        m
+    }
+
+    /// Matrix-vector product.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(self.cols, x.len());
+        let mut y = vec![0.0; self.rows];
+        for r in 0..self.rows {
+            let row = &self.data[r * self.cols..(r + 1) * self.cols];
+            y[r] = row.iter().zip(x).map(|(a, b)| a * b).sum();
+        }
+        y
+    }
+}
+
+/// Lower-triangular Cholesky factor of an SPD matrix.
+pub struct Chol {
+    /// Lower factor, row-major n×n (upper part zero).
+    pub l: Mat,
+}
+
+/// Error for non-SPD input.
+#[derive(Debug, thiserror::Error)]
+#[error("matrix not positive definite at pivot {pivot} (value {value})")]
+pub struct NotSpd {
+    pub pivot: usize,
+    pub value: f64,
+}
+
+/// Cholesky factorization `A = L Lᵀ`. `A` must be symmetric; only the
+/// lower triangle is read.
+pub fn cholesky(a: &Mat) -> Result<Chol, NotSpd> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a.at(i, j);
+            for k in 0..j {
+                sum -= l.at(i, k) * l.at(j, k);
+            }
+            if i == j {
+                if sum <= 0.0 || !sum.is_finite() {
+                    return Err(NotSpd { pivot: i, value: sum });
+                }
+                *l.at_mut(i, j) = sum.sqrt();
+            } else {
+                *l.at_mut(i, j) = sum / l.at(j, j);
+            }
+        }
+    }
+    Ok(Chol { l })
+}
+
+impl Chol {
+    /// Solve `A x = b` via forward+back substitution.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows;
+        assert_eq!(b.len(), n);
+        // Forward: L y = b
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self.l.at(i, k) * y[k];
+            }
+            y[i] = s / self.l.at(i, i);
+        }
+        // Back: Lᵀ x = y
+        let mut x = vec![0.0; n];
+        for i in (0..n).rev() {
+            let mut s = y[i];
+            for k in i + 1..n {
+                s -= self.l.at(k, i) * x[k];
+            }
+            x[i] = s / self.l.at(i, i);
+        }
+        x
+    }
+
+    /// Solve `L v = b` only (forward substitution) — used for the GP
+    /// predictive variance.
+    pub fn forward(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.l.rows;
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            let mut s = b[i];
+            for k in 0..i {
+                s -= self.l.at(i, k) * y[k];
+            }
+            y[i] = s / self.l.at(i, i);
+        }
+        y
+    }
+
+    /// `log det A = 2 Σ log L_ii`.
+    pub fn log_det(&self) -> f64 {
+        (0..self.l.rows).map(|i| self.l.at(i, i).ln()).sum::<f64>() * 2.0
+    }
+}
+
+/// Standard-normal PDF.
+#[inline]
+pub fn norm_pdf(z: f64) -> f64 {
+    (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt()
+}
+
+/// Standard-normal CDF via erf (Abramowitz-Stegun 7.1.26, |err| < 1.5e-7
+/// — far below the noise floor of any acquisition decision).
+pub fn norm_cdf(z: f64) -> f64 {
+    0.5 * (1.0 + erf(z / std::f64::consts::SQRT_2))
+}
+
+/// Error function approximation.
+pub fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop;
+
+    #[test]
+    fn cholesky_known() {
+        // A = [[4,2],[2,3]] -> L = [[2,0],[1,sqrt(2)]]
+        let a = Mat::from_rows(vec![vec![4.0, 2.0], vec![2.0, 3.0]]);
+        let c = cholesky(&a).unwrap();
+        assert!((c.l.at(0, 0) - 2.0).abs() < 1e-12);
+        assert!((c.l.at(1, 0) - 1.0).abs() < 1e-12);
+        assert!((c.l.at(1, 1) - 2f64.sqrt()).abs() < 1e-12);
+        assert_eq!(c.l.at(0, 1), 0.0);
+    }
+
+    #[test]
+    fn solve_recovers_x() {
+        let a = Mat::from_rows(vec![
+            vec![6.0, 2.0, 1.0],
+            vec![2.0, 5.0, 2.0],
+            vec![1.0, 2.0, 4.0],
+        ]);
+        let c = cholesky(&a).unwrap();
+        let x_true = vec![1.0, -2.0, 3.0];
+        let b = a.matvec(&x_true);
+        let x = c.solve(&b);
+        for (xi, ti) in x.iter().zip(&x_true) {
+            assert!((xi - ti).abs() < 1e-10, "{x:?}");
+        }
+    }
+
+    #[test]
+    fn non_spd_rejected() {
+        let a = Mat::from_rows(vec![vec![1.0, 2.0], vec![2.0, 1.0]]); // eigenvalues 3, -1
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn log_det_matches() {
+        let a = Mat::from_rows(vec![vec![4.0, 0.0], vec![0.0, 9.0]]);
+        let c = cholesky(&a).unwrap();
+        assert!((c.log_det() - (36f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_solve_random_spd() {
+        prop::check(60, |g| {
+            let n = g.usize(1, 8);
+            // Build SPD as B Bᵀ + n·I.
+            let mut b = Mat::zeros(n, n);
+            for v in b.data.iter_mut() {
+                *v = g.f64(-1.0, 1.0);
+            }
+            let mut a = Mat::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = 0.0;
+                    for k in 0..n {
+                        s += b.at(i, k) * b.at(j, k);
+                    }
+                    *a.at_mut(i, j) = s + if i == j { n as f64 } else { 0.0 };
+                }
+            }
+            let x_true: Vec<f64> = (0..n).map(|_| g.f64(-3.0, 3.0)).collect();
+            let rhs = a.matvec(&x_true);
+            let c = cholesky(&a).map_err(|e| e.to_string())?;
+            let x = c.solve(&rhs);
+            let err: f64 = x
+                .iter()
+                .zip(&x_true)
+                .map(|(a, b)| (a - b).abs())
+                .fold(0.0, f64::max);
+            prop::assert_holds(err < 1e-8, format!("max err {err}"))
+        });
+    }
+
+    #[test]
+    fn norm_cdf_values() {
+        assert!((norm_cdf(0.0) - 0.5).abs() < 1e-7);
+        assert!((norm_cdf(1.96) - 0.975).abs() < 1e-3);
+        assert!((norm_cdf(-1.96) - 0.025).abs() < 1e-3);
+        assert!(norm_cdf(8.0) > 0.999999);
+    }
+
+    #[test]
+    fn erf_symmetry() {
+        prop::check(100, |g| {
+            let x = g.f64(-4.0, 4.0);
+            prop::assert_holds((erf(x) + erf(-x)).abs() < 1e-12, format!("x={x}"))
+        });
+    }
+}

@@ -1,0 +1,292 @@
+//! `hopaas` — the HOPAAS service launcher and utility CLI.
+//!
+//! Subcommands:
+//!   serve      run the coordination server (Table 1 APIs + dashboard)
+//!   token      issue an API token against a secret (offline)
+//!   campaign   run a simulated multi-site optimization campaign
+//!   demo       one-node end-to-end demo against an in-process server
+//!   bench-objective   evaluate a benchmark objective at a point
+//!
+//! Examples:
+//!   hopaas serve --addr 0.0.0.0:8021 --data-dir ./hopaas-data
+//!   hopaas serve --no-auth --workers 16
+//!   hopaas token --secret hopaas-dev-secret --user alice --ttl 86400
+//!   hopaas campaign --nodes 24 --trials 200 --objective rastrigin
+
+use hopaas::config::{server_config, Args};
+use hopaas::coordinator::auth::TokenService;
+use hopaas::coordinator::service::{HopaasConfig, HopaasServer};
+use hopaas::objectives::Objective;
+use hopaas::worker::Campaign;
+
+fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let code = match args.command.as_str() {
+        "serve" => cmd_serve(&args),
+        "token" => cmd_token(&args),
+        "campaign" => cmd_campaign(&args),
+        "demo" => cmd_demo(&args),
+        "export" => cmd_export(&args),
+        "bench-objective" => cmd_bench_objective(&args),
+        "" | "help" | "--help" => {
+            print!("{}", HELP);
+            0
+        }
+        other => {
+            eprintln!("unknown command '{other}'\n{HELP}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+const HELP: &str = "\
+hopaas — Hyperparameter Optimization as a Service (rust reproduction)
+
+USAGE: hopaas <command> [flags]
+
+COMMANDS:
+  serve             run the HOPAAS server
+                    --addr HOST:PORT   (default 127.0.0.1:8021)
+                    --workers N        HTTP worker threads (default 8)
+                    --data-dir PATH    durable WAL+snapshot storage
+                    --no-auth          disable token auth (dev only)
+                    --secret S         HMAC token secret
+                    --config FILE      JSON config (flags override)
+  token             mint an API token offline
+                    --secret S --user NAME --ttl SECONDS
+  campaign          simulated multi-site campaign against a fresh server
+                    --nodes N --trials N --objective NAME --sampler NAME
+                    --pruner NAME|none --steps N
+  demo              quick end-to-end demo (ask/should_prune/tell loop)
+  export            dump a durable server's trials as CSV (offline)
+                    --data-dir PATH [--study ID]
+  bench-objective   --objective NAME --at x0,x1,...
+";
+
+fn cmd_serve(args: &Args) -> i32 {
+    let (addr, config) = match server_config(args) {
+        Ok(x) => x,
+        Err(e) => {
+            eprintln!("config error: {e}");
+            return 2;
+        }
+    };
+    let reap_every = config
+        .engine
+        .reap_after
+        .map(|_| std::time::Duration::from_secs(30));
+    match HopaasServer::start(&addr, config) {
+        Ok(server) => {
+            println!("hopaas {} serving on http://{}", hopaas::VERSION, server.addr());
+            println!("dashboard: http://{}/", server.addr());
+            println!("bootstrap token: {}", server.bootstrap_token);
+            // Periodic reaper for trials from vanished nodes.
+            loop {
+                std::thread::sleep(
+                    reap_every.unwrap_or(std::time::Duration::from_secs(3600)),
+                );
+                let reaped = server.engine.reap_stale();
+                if reaped > 0 {
+                    println!("reaped {reaped} stale trial(s)");
+                }
+            }
+        }
+        Err(e) => {
+            eprintln!("failed to start: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_token(args: &Args) -> i32 {
+    let secret = args.get_or("secret", "hopaas-dev-secret");
+    let user = args.get_or("user", "anonymous");
+    let ttl = args.get_f64("ttl", 86400.0);
+    let svc = TokenService::new(secret.as_bytes());
+    println!("{}", svc.issue(user, 0.0, ttl));
+    0
+}
+
+fn cmd_campaign(args: &Args) -> i32 {
+    let objective = match Objective::by_name(args.get_or("objective", "rastrigin")) {
+        Some(o) => o,
+        None => {
+            eprintln!(
+                "unknown objective; options: {:?}",
+                hopaas::objectives::ALL.map(|o| o.name())
+            );
+            return 2;
+        }
+    };
+    let server = match HopaasServer::start(
+        "127.0.0.1:0",
+        HopaasConfig { auth_required: false, ..Default::default() },
+    ) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("server: {e}");
+            return 1;
+        }
+    };
+    let mut campaign = Campaign::new(server.addr(), "x".into(), objective);
+    campaign.n_nodes = args.get_u64("nodes", 24) as usize;
+    campaign.max_trials = args.get_u64("trials", 200);
+    campaign.steps_per_trial = args.get_u64("steps", 20);
+    campaign.sampler = match args.get_or("sampler", "tpe") {
+        "random" => "random",
+        "gp" => "gp",
+        "cmaes" => "cmaes",
+        "qmc" => "qmc",
+        "grid" => "grid",
+        _ => "tpe",
+    };
+    campaign.pruner = match args.get_or("pruner", "median") {
+        "none" => None,
+        "sha" => Some("sha"),
+        "hyperband" => Some("hyperband"),
+        "percentile" => Some("percentile"),
+        _ => Some("median"),
+    };
+    println!(
+        "campaign: {} nodes, {} trials, sampler={}, pruner={:?}, objective={}",
+        campaign.n_nodes,
+        campaign.max_trials,
+        campaign.sampler,
+        campaign.pruner,
+        objective.name()
+    );
+    match campaign.run() {
+        Ok(report) => {
+            println!(
+                "completed={} pruned={} preempted={} steps={} best={:.5} wall={:.2}s ({:.1} trials/s)",
+                report.completed,
+                report.pruned,
+                report.preempted,
+                report.steps_executed,
+                report.best.unwrap_or(f64::NAN),
+                report.wall.as_secs_f64(),
+                report.throughput()
+            );
+            for (site, n) in &report.by_site {
+                println!("  {site:>16}: {n} completed");
+            }
+            server.stop();
+            0
+        }
+        Err(e) => {
+            eprintln!("campaign failed: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_demo(_args: &Args) -> i32 {
+    let server = HopaasServer::start(
+        "127.0.0.1:0",
+        HopaasConfig { auth_required: false, ..Default::default() },
+    )
+    .expect("server");
+    println!("demo server on {}", server.addr());
+    let mut client =
+        hopaas::worker::HopaasClient::connect(server.addr(), "demo".into()).expect("client");
+    let spec = hopaas::worker::StudySpec::new("demo-branin")
+        .properties_json(Objective::Branin.properties())
+        .sampler("tpe")
+        .pruner("median");
+    let mut best = f64::INFINITY;
+    for i in 0..50 {
+        let trial = client.ask(&spec).expect("ask");
+        let v = Objective::Branin.eval_params(&trial.params);
+        let mut pruned = false;
+        for step in 1..=5 {
+            let interim = v * (1.0 + 2.0 / step as f64);
+            if client
+                .should_prune(&trial, step, interim)
+                .expect("should_prune")
+            {
+                pruned = true;
+                break;
+            }
+        }
+        if !pruned {
+            client.tell(&trial, v).expect("tell");
+            if v < best {
+                best = v;
+                println!("trial {i:>3}: new best {best:.5}");
+            }
+        }
+    }
+    println!("best after 50 trials: {best:.5} (f* = 0.39789)");
+    server.stop();
+    0
+}
+
+/// Offline CSV export of a durable server's trials — the analysis path
+/// a campaign owner uses after the fact (no server required).
+fn cmd_export(args: &Args) -> i32 {
+    let Some(dir) = args.get("data-dir") else {
+        eprintln!("export requires --data-dir");
+        return 2;
+    };
+    let engine = match hopaas::coordinator::engine::Engine::open(
+        dir,
+        hopaas::coordinator::engine::EngineConfig::default(),
+    ) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("open {dir}: {e}");
+            return 1;
+        }
+    };
+    let studies = engine.studies_json();
+    let filter: Option<u64> = args.get("study").and_then(|s| s.parse().ok());
+    println!("study_id,study_name,trial_id,number,state,value,values,node,params");
+    for s in studies.as_arr().unwrap_or(&[]) {
+        let sid = s.get("id").as_u64().unwrap_or(0);
+        if filter.is_some_and(|f| f != sid) {
+            continue;
+        }
+        let name = s.get("name").as_str().unwrap_or("");
+        if let Some(trials) = engine.trials_json(sid) {
+            for t in trials.as_arr().unwrap_or(&[]) {
+                let csv_quote = |v: &hopaas::json::Value| {
+                    format!("\"{}\"", v.to_string().replace('"', "\"\""))
+                };
+                println!(
+                    "{sid},{name},{},{},{},{},{},{},{}",
+                    t.get("id"),
+                    t.get("number"),
+                    t.get("state").as_str().unwrap_or(""),
+                    t.get("value"),
+                    csv_quote(t.get("values")),
+                    t.get("node").as_str().unwrap_or(""),
+                    csv_quote(t.get("params")),
+                );
+            }
+        }
+    }
+    0
+}
+
+fn cmd_bench_objective(args: &Args) -> i32 {
+    let objective = match Objective::by_name(args.get_or("objective", "sphere")) {
+        Some(o) => o,
+        None => {
+            eprintln!("unknown objective");
+            return 2;
+        }
+    };
+    let x: Vec<f64> = args
+        .get_or("at", "")
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .filter_map(|s| s.parse().ok())
+        .collect();
+    if x.len() != objective.dim() {
+        eprintln!("--at needs {} comma-separated values", objective.dim());
+        return 2;
+    }
+    println!("{}({:?}) = {}", objective.name(), x, objective.eval(&x));
+    0
+}

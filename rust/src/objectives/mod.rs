@@ -1,0 +1,321 @@
+//! Synthetic benchmark objectives for the sampler (E4) and pruner (E5)
+//! studies — the standard black-box optimization test functions, plus
+//! parameterized learning-curve simulators that let pruner experiments
+//! run thousands of "trainings" without touching the GAN.
+
+pub mod multi;
+
+use crate::json::Value;
+use crate::rng::Rng;
+
+/// A black-box objective over a fixed-dimension continuous domain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    /// Σ x² — unimodal sanity check. Domain [-5, 5]^d, min 0 at origin.
+    Sphere,
+    /// Branin-Hoo (2-D), three global minima, f* ≈ 0.397887.
+    Branin,
+    /// Rosenbrock valley. Domain [-2, 2]^d, min 0 at (1, ..., 1).
+    Rosenbrock,
+    /// Ackley — deceptive flat outer region. Domain [-5, 5]^d, min 0.
+    Ackley,
+    /// Rastrigin — highly multimodal. Domain [-5.12, 5.12]^d, min 0.
+    Rastrigin,
+    /// Styblinski-Tang. Domain [-5, 5]^d, min ≈ -39.166·d.
+    StyblinskiTang,
+    /// Hartmann 6-D, min ≈ -3.32237.
+    Hartmann6,
+}
+
+pub const ALL: [Objective; 7] = [
+    Objective::Sphere,
+    Objective::Branin,
+    Objective::Rosenbrock,
+    Objective::Ackley,
+    Objective::Rastrigin,
+    Objective::StyblinskiTang,
+    Objective::Hartmann6,
+];
+
+impl Objective {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::Sphere => "sphere",
+            Objective::Branin => "branin",
+            Objective::Rosenbrock => "rosenbrock",
+            Objective::Ackley => "ackley",
+            Objective::Rastrigin => "rastrigin",
+            Objective::StyblinskiTang => "styblinski_tang",
+            Objective::Hartmann6 => "hartmann6",
+        }
+    }
+
+    /// Natural dimensionality (fixed for Branin/Hartmann; default for
+    /// the scalable ones).
+    pub fn dim(&self) -> usize {
+        match self {
+            Objective::Branin => 2,
+            Objective::Hartmann6 => 6,
+            _ => 4,
+        }
+    }
+
+    /// Domain per dimension.
+    pub fn bounds(&self) -> (f64, f64) {
+        match self {
+            Objective::Branin => (-5.0, 15.0), // x1 ∈ [-5,10], x2 ∈ [0,15]: superset box
+            Objective::Rosenbrock => (-2.0, 2.0),
+            Objective::Rastrigin => (-5.12, 5.12),
+            Objective::Hartmann6 => (0.0, 1.0),
+            _ => (-5.0, 5.0),
+        }
+    }
+
+    /// Known global minimum value (for regret computation).
+    pub fn f_star(&self) -> f64 {
+        match self {
+            Objective::Branin => 0.397887,
+            Objective::StyblinskiTang => -39.16599 * self.dim() as f64,
+            Objective::Hartmann6 => -3.32237,
+            _ => 0.0,
+        }
+    }
+
+    /// Evaluate at `x` (length = `dim()`).
+    pub fn eval(&self, x: &[f64]) -> f64 {
+        match self {
+            Objective::Sphere => x.iter().map(|v| v * v).sum(),
+            Objective::Branin => {
+                let (x1, x2) = (x[0], x[1]);
+                let a = 1.0;
+                let b = 5.1 / (4.0 * std::f64::consts::PI.powi(2));
+                let c = 5.0 / std::f64::consts::PI;
+                let r = 6.0;
+                let s = 10.0;
+                let t = 1.0 / (8.0 * std::f64::consts::PI);
+                a * (x2 - b * x1 * x1 + c * x1 - r).powi(2)
+                    + s * (1.0 - t) * x1.cos()
+                    + s
+            }
+            Objective::Rosenbrock => x
+                .windows(2)
+                .map(|w| 100.0 * (w[1] - w[0] * w[0]).powi(2) + (1.0 - w[0]).powi(2))
+                .sum(),
+            Objective::Ackley => {
+                let d = x.len() as f64;
+                let s1: f64 = x.iter().map(|v| v * v).sum::<f64>() / d;
+                let s2: f64 = x
+                    .iter()
+                    .map(|v| (2.0 * std::f64::consts::PI * v).cos())
+                    .sum::<f64>()
+                    / d;
+                -20.0 * (-0.2 * s1.sqrt()).exp() - s2.exp() + 20.0 + std::f64::consts::E
+            }
+            Objective::Rastrigin => {
+                10.0 * x.len() as f64
+                    + x.iter()
+                        .map(|v| v * v - 10.0 * (2.0 * std::f64::consts::PI * v).cos())
+                        .sum::<f64>()
+            }
+            Objective::StyblinskiTang => {
+                0.5 * x
+                    .iter()
+                    .map(|v| v.powi(4) - 16.0 * v * v + 5.0 * v)
+                    .sum::<f64>()
+            }
+            Objective::Hartmann6 => {
+                const A: [[f64; 6]; 4] = [
+                    [10.0, 3.0, 17.0, 3.5, 1.7, 8.0],
+                    [0.05, 10.0, 17.0, 0.1, 8.0, 14.0],
+                    [3.0, 3.5, 1.7, 10.0, 17.0, 8.0],
+                    [17.0, 8.0, 0.05, 10.0, 0.1, 14.0],
+                ];
+                const P: [[f64; 6]; 4] = [
+                    [0.1312, 0.1696, 0.5569, 0.0124, 0.8283, 0.5886],
+                    [0.2329, 0.4135, 0.8307, 0.3736, 0.1004, 0.9991],
+                    [0.2348, 0.1451, 0.3522, 0.2883, 0.3047, 0.6650],
+                    [0.4047, 0.8828, 0.8732, 0.5743, 0.1091, 0.0381],
+                ];
+                const ALPHA: [f64; 4] = [1.0, 1.2, 3.0, 3.2];
+                -(0..4)
+                    .map(|i| {
+                        let inner: f64 = (0..6)
+                            .map(|j| A[i][j] * (x[j] - P[i][j]).powi(2))
+                            .sum();
+                        ALPHA[i] * (-inner).exp()
+                    })
+                    .sum::<f64>()
+            }
+        }
+    }
+
+    /// The HOPAAS `properties` object for this objective's search space.
+    pub fn properties(&self) -> Value {
+        let (lo, hi) = self.bounds();
+        let mut o = Value::obj();
+        for i in 0..self.dim() {
+            let mut spec = Value::obj();
+            spec.set("low", lo).set("high", hi);
+            o.set(format!("x{i}"), Value::Obj(spec));
+        }
+        Value::Obj(o)
+    }
+
+    /// Evaluate from a HOPAAS params object.
+    pub fn eval_params(&self, params: &Value) -> f64 {
+        let x: Vec<f64> = (0..self.dim())
+            .map(|i| params.get(&format!("x{i}")).as_f64().unwrap_or(0.0))
+            .collect();
+        self.eval(&x)
+    }
+
+    /// Parse by name.
+    pub fn by_name(name: &str) -> Option<Objective> {
+        ALL.iter().copied().find(|o| o.name() == name)
+    }
+}
+
+/// Additive-Gaussian-noise wrapper: the "noisy loss function" setting the
+/// paper motivates BO with (§1).
+pub struct Noisy {
+    pub inner: Objective,
+    pub sigma: f64,
+}
+
+impl Noisy {
+    pub fn eval(&self, x: &[f64], rng: &mut Rng) -> f64 {
+        self.inner.eval(x) + rng.normal() * self.sigma
+    }
+}
+
+/// A simulated training curve for pruner studies (E5): loss decays
+/// exponentially from `start` to an asymptote determined by the trial's
+/// hyperparameter quality, with observation noise. Good hyperparameters
+/// → low asymptote; the pruner's job is to kill high-asymptote curves
+/// early.
+#[derive(Clone, Debug)]
+pub struct LearningCurve {
+    pub asymptote: f64,
+    pub start: f64,
+    pub rate: f64,
+    pub noise: f64,
+}
+
+impl LearningCurve {
+    /// Build from a quality score in [0, 1] (0 = best hyperparameters).
+    pub fn from_quality(quality: f64, rng: &mut Rng) -> LearningCurve {
+        LearningCurve {
+            asymptote: 0.1 + 2.0 * quality,
+            start: 3.0 + rng.f64(),
+            rate: 0.05 + 0.1 * rng.f64(),
+            noise: 0.02,
+        }
+    }
+
+    /// Loss at integer step `t ≥ 1`.
+    pub fn at(&self, t: u64, rng: &mut Rng) -> f64 {
+        let decay = (-self.rate * t as f64).exp();
+        self.asymptote + (self.start - self.asymptote) * decay + rng.normal() * self.noise
+    }
+
+    /// Final converged loss (expected value, no noise).
+    pub fn final_loss(&self) -> f64 {
+        self.asymptote
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::prop;
+
+    #[test]
+    fn known_minima() {
+        assert_eq!(Objective::Sphere.eval(&[0.0; 4]), 0.0);
+        assert!((Objective::Rosenbrock.eval(&[1.0; 4])).abs() < 1e-12);
+        assert!(Objective::Ackley.eval(&[0.0; 4]).abs() < 1e-9);
+        assert_eq!(Objective::Rastrigin.eval(&[0.0; 4]), 0.0);
+        // Branin at one of its minima.
+        let v = Objective::Branin.eval(&[std::f64::consts::PI, 2.275]);
+        assert!((v - 0.397887).abs() < 1e-4, "branin={v}");
+        // Hartmann6 optimum.
+        let v = Objective::Hartmann6.eval(&[0.20169, 0.150011, 0.476874, 0.275332, 0.311652, 0.6573]);
+        assert!((v + 3.32237).abs() < 1e-3, "hartmann={v}");
+        // Styblinski-Tang per-dim optimum at -2.903534.
+        let v = Objective::StyblinskiTang.eval(&[-2.903534; 4]);
+        assert!((v - Objective::StyblinskiTang.f_star()).abs() < 1e-2);
+    }
+
+    #[test]
+    fn minima_are_local_minima() {
+        // Perturbing the known optimum must not improve any objective.
+        let cases: Vec<(Objective, Vec<f64>)> = vec![
+            (Objective::Sphere, vec![0.0; 4]),
+            (Objective::Rosenbrock, vec![1.0; 4]),
+            (Objective::Ackley, vec![0.0; 4]),
+            (Objective::Rastrigin, vec![0.0; 4]),
+        ];
+        prop::check(100, |g| {
+            let (obj, xstar) = &cases[g.rng().below(cases.len() as u64) as usize];
+            let mut x = xstar.clone();
+            let i = g.rng().below(x.len() as u64) as usize;
+            x[i] += g.f64(-0.01, 0.01);
+            prop::assert_holds(
+                obj.eval(&x) >= obj.eval(xstar) - 1e-9,
+                format!("{:?} improved off-optimum", obj.name()),
+            )
+        });
+    }
+
+    #[test]
+    fn properties_roundtrip_to_space() {
+        for obj in ALL {
+            let space =
+                crate::coordinator::space::Space::from_json(&obj.properties()).unwrap();
+            assert_eq!(space.len(), obj.dim());
+            let mut rng = Rng::new(4);
+            let asg = space.sample(&mut rng);
+            let params = crate::coordinator::space::assignment_to_json(&asg);
+            let v = obj.eval_params(&params);
+            assert!(v.is_finite(), "{}: {v}", obj.name());
+        }
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        for obj in ALL {
+            assert_eq!(Objective::by_name(obj.name()), Some(obj));
+        }
+        assert_eq!(Objective::by_name("nope"), None);
+    }
+
+    #[test]
+    fn noisy_wrapper_centers_on_truth() {
+        let noisy = Noisy { inner: Objective::Sphere, sigma: 0.5 };
+        let mut rng = Rng::new(8);
+        let n = 5000;
+        let mean: f64 =
+            (0..n).map(|_| noisy.eval(&[1.0, 0.0, 0.0, 0.0], &mut rng)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn learning_curve_monotone_expectation() {
+        let mut rng = Rng::new(1);
+        let c = LearningCurve::from_quality(0.2, &mut rng);
+        // Expected loss decreases with t (check noiseless backbone).
+        let noiseless =
+            |t: u64| c.asymptote + (c.start - c.asymptote) * (-c.rate * t as f64).exp();
+        assert!(noiseless(1) > noiseless(10));
+        assert!(noiseless(10) > noiseless(100));
+        assert!((noiseless(10_000) - c.final_loss()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn curve_quality_orders_final_loss() {
+        let mut rng = Rng::new(2);
+        let good = LearningCurve::from_quality(0.05, &mut rng);
+        let bad = LearningCurve::from_quality(0.9, &mut rng);
+        assert!(good.final_loss() < bad.final_loss());
+    }
+}

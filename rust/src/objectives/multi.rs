@@ -1,0 +1,135 @@
+//! Multi-objective benchmark problems (ZDT suite, Zitzler et al. 2000)
+//! for the MO extension (paper §5 future work). All are bi-objective
+//! minimization over `[0, 1]^d` with known Pareto fronts, which makes
+//! hypervolume-based comparisons exact.
+
+use crate::json::Value;
+
+/// A bi-objective test problem.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MoProblem {
+    /// Convex front: f2 = 1 − √f1.
+    Zdt1,
+    /// Concave front: f2 = 1 − f1².
+    Zdt2,
+    /// Disconnected front.
+    Zdt3,
+}
+
+pub const ALL_MO: [MoProblem; 3] = [MoProblem::Zdt1, MoProblem::Zdt2, MoProblem::Zdt3];
+
+impl MoProblem {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MoProblem::Zdt1 => "zdt1",
+            MoProblem::Zdt2 => "zdt2",
+            MoProblem::Zdt3 => "zdt3",
+        }
+    }
+
+    /// Decision-space dimensionality (standard is 30; 8 keeps bench
+    /// budgets small while preserving the front geometry).
+    pub fn dim(&self) -> usize {
+        8
+    }
+
+    /// Evaluate both objectives at `x ∈ [0,1]^d`.
+    pub fn eval(&self, x: &[f64]) -> [f64; 2] {
+        let f1 = x[0];
+        let g = 1.0 + 9.0 * x[1..].iter().sum::<f64>() / (x.len() - 1) as f64;
+        let h = match self {
+            MoProblem::Zdt1 => 1.0 - (f1 / g).sqrt(),
+            MoProblem::Zdt2 => 1.0 - (f1 / g) * (f1 / g),
+            MoProblem::Zdt3 => {
+                1.0 - (f1 / g).sqrt() - (f1 / g) * (10.0 * std::f64::consts::PI * f1).sin()
+            }
+        };
+        [f1, g * h]
+    }
+
+    /// HOPAAS `properties` for the decision space.
+    pub fn properties(&self) -> Value {
+        let mut o = Value::obj();
+        for i in 0..self.dim() {
+            let mut spec = Value::obj();
+            spec.set("low", 0.0).set("high", 1.0);
+            o.set(format!("x{i}"), Value::Obj(spec));
+        }
+        Value::Obj(o)
+    }
+
+    /// Evaluate from a HOPAAS params object.
+    pub fn eval_params(&self, params: &Value) -> [f64; 2] {
+        let x: Vec<f64> = (0..self.dim())
+            .map(|i| params.get(&format!("x{i}")).as_f64().unwrap_or(0.0))
+            .collect();
+        self.eval(&x)
+    }
+
+    /// Reference point for hypervolume (all fronts fit under it).
+    pub fn hv_reference(&self) -> [f64; 2] {
+        [1.1, 11.0]
+    }
+
+    pub fn by_name(name: &str) -> Option<MoProblem> {
+        ALL_MO.iter().copied().find(|p| p.name() == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pareto_front_at_g_one() {
+        // On the true front, all tail variables are 0 (g = 1).
+        let mut x = vec![0.0; 8];
+        x[0] = 0.25;
+        let [f1, f2] = MoProblem::Zdt1.eval(&x);
+        assert_eq!(f1, 0.25);
+        assert!((f2 - (1.0 - 0.25f64.sqrt())).abs() < 1e-12);
+        let [_, f2b] = MoProblem::Zdt2.eval(&x);
+        assert!((f2b - (1.0 - 0.0625)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn off_front_dominated() {
+        // Raising a tail variable worsens f2 at the same f1.
+        let mut on = vec![0.0; 8];
+        on[0] = 0.5;
+        let mut off = on.clone();
+        off[3] = 0.8;
+        for p in ALL_MO {
+            let a = p.eval(&on);
+            let b = p.eval(&off);
+            assert_eq!(a[0], b[0]);
+            assert!(a[1] < b[1], "{}: {} !< {}", p.name(), a[1], b[1]);
+        }
+    }
+
+    #[test]
+    fn zdt2_front_concave_zdt1_convex() {
+        // Midpoint test: convex front lies below the line between
+        // endpoints, concave above.
+        let front = |p: MoProblem, f1: f64| {
+            let mut x = vec![0.0; 8];
+            x[0] = f1;
+            p.eval(&x)[1]
+        };
+        let mid1 = front(MoProblem::Zdt1, 0.5);
+        let mid2 = front(MoProblem::Zdt2, 0.5);
+        assert!(mid1 < 0.5, "zdt1 convex: {mid1}");
+        assert!(mid2 > 0.5, "zdt2 concave: {mid2}");
+    }
+
+    #[test]
+    fn properties_parse() {
+        for p in ALL_MO {
+            let space =
+                crate::coordinator::space::Space::from_json(&p.properties()).unwrap();
+            assert_eq!(space.len(), p.dim());
+        }
+        assert_eq!(MoProblem::by_name("zdt2"), Some(MoProblem::Zdt2));
+        assert_eq!(MoProblem::by_name("x"), None);
+    }
+}

@@ -1,0 +1,171 @@
+//! `artifacts/manifest.json` — the contract between aot.py and the Rust
+//! runtime: per-variant file names, the positional input signature, and
+//! the flat-state layout.
+
+use super::RuntimeError;
+use crate::json::Value;
+use std::path::Path;
+
+/// One compiled (width, depth) architecture variant.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub width: u64,
+    pub depth: u64,
+    pub train_file: String,
+    pub eval_file: String,
+    /// Shapes of the trainable arrays (params only, in order).
+    pub param_shapes: Vec<Vec<usize>>,
+    /// Leading arrays of the param block belonging to the generator.
+    pub n_gen_arrays: usize,
+    /// Full train-state length (params + m + v + t).
+    pub n_state: usize,
+    /// Positional input shapes of the train artifact.
+    pub train_inputs: Vec<Vec<usize>>,
+    /// Positional input shapes of the eval artifact.
+    pub eval_inputs: Vec<Vec<usize>>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub cond_dim: usize,
+    pub feat_dim: usize,
+    pub latent_dim: usize,
+    pub batch: usize,
+    pub eval_batch: usize,
+    pub variants: Vec<Variant>,
+}
+
+fn shapes(v: &Value) -> Result<Vec<Vec<usize>>, RuntimeError> {
+    v.as_arr()
+        .ok_or_else(|| RuntimeError::Manifest("expected shape array".into()))?
+        .iter()
+        .map(|s| {
+            s.as_arr()
+                .ok_or_else(|| RuntimeError::Manifest("expected shape".into()))?
+                .iter()
+                .map(|d| {
+                    d.as_u64()
+                        .map(|x| x as usize)
+                        .ok_or_else(|| RuntimeError::Manifest("bad dim".into()))
+                })
+                .collect()
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load and validate.
+    pub fn load(path: &Path) -> Result<Manifest, RuntimeError> {
+        let text = std::fs::read_to_string(path)?;
+        let v = crate::json::parse(&text)
+            .map_err(|e| RuntimeError::Manifest(e.to_string()))?;
+        let dim = |k: &str| -> Result<usize, RuntimeError> {
+            v.get(k)
+                .as_u64()
+                .map(|x| x as usize)
+                .ok_or_else(|| RuntimeError::Manifest(format!("missing '{k}'")))
+        };
+        let mut variants = Vec::new();
+        for vv in v.get("variants").as_arr().unwrap_or(&[]) {
+            let variant = Variant {
+                width: vv.get("width").as_u64().unwrap_or(0),
+                depth: vv.get("depth").as_u64().unwrap_or(0),
+                train_file: vv
+                    .get("train_file")
+                    .as_str()
+                    .ok_or_else(|| RuntimeError::Manifest("missing train_file".into()))?
+                    .to_string(),
+                eval_file: vv
+                    .get("eval_file")
+                    .as_str()
+                    .ok_or_else(|| RuntimeError::Manifest("missing eval_file".into()))?
+                    .to_string(),
+                param_shapes: shapes(vv.get("param_shapes"))?,
+                n_gen_arrays: vv.get("n_gen_arrays").as_u64().unwrap_or(0) as usize,
+                n_state: vv.get("n_state").as_u64().unwrap_or(0) as usize,
+                train_inputs: shapes(vv.get("train_inputs"))?,
+                eval_inputs: shapes(vv.get("eval_inputs"))?,
+            };
+            // Internal consistency: state = 3·params + 1.
+            if variant.n_state != 3 * variant.param_shapes.len() + 1 {
+                return Err(RuntimeError::Manifest(format!(
+                    "variant {}x{}: n_state {} != 3·{}+1",
+                    variant.width,
+                    variant.depth,
+                    variant.n_state,
+                    variant.param_shapes.len()
+                )));
+            }
+            variants.push(variant);
+        }
+        if variants.is_empty() {
+            return Err(RuntimeError::Manifest("no variants".into()));
+        }
+        Ok(Manifest {
+            cond_dim: dim("cond_dim")?,
+            feat_dim: dim("feat_dim")?,
+            latent_dim: dim("latent_dim")?,
+            batch: dim("batch")?,
+            eval_batch: dim("eval_batch")?,
+            variants,
+        })
+    }
+
+    /// Find a variant by (width, depth).
+    pub fn variant(&self, width: u64, depth: u64) -> Option<&Variant> {
+        self.variants
+            .iter()
+            .find(|v| v.width == width && v.depth == depth)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::TempDir;
+
+    const SAMPLE: &str = r#"{
+        "cond_dim": 3, "feat_dim": 4, "latent_dim": 8,
+        "batch": 256, "eval_batch": 512,
+        "variants": [{
+            "width": 32, "depth": 2,
+            "train_file": "t.hlo.txt", "eval_file": "e.hlo.txt",
+            "param_shapes": [[11,32],[32],[32,32],[32],[32,4],[4],
+                             [7,32],[32],[32,32],[32],[32,1],[1]],
+            "n_gen_arrays": 6, "n_state": 37,
+            "train_inputs": [[11,32]],
+            "eval_inputs": [[11,32]]
+        }]
+    }"#;
+
+    #[test]
+    fn loads_sample() {
+        let d = TempDir::new("manifest");
+        let p = d.path().join("manifest.json");
+        std::fs::write(&p, SAMPLE).unwrap();
+        let m = Manifest::load(&p).unwrap();
+        assert_eq!(m.batch, 256);
+        assert_eq!(m.variants.len(), 1);
+        let v = m.variant(32, 2).unwrap();
+        assert_eq!(v.param_shapes.len(), 12);
+        assert_eq!(v.param_shapes[1], vec![32]);
+        assert!(m.variant(64, 2).is_none());
+    }
+
+    #[test]
+    fn rejects_inconsistent_state() {
+        let d = TempDir::new("manifest-bad");
+        let p = d.path().join("manifest.json");
+        std::fs::write(&p, SAMPLE.replace("\"n_state\": 37", "\"n_state\": 12")).unwrap();
+        assert!(Manifest::load(&p).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        let d = TempDir::new("manifest-miss");
+        let p = d.path().join("manifest.json");
+        std::fs::write(&p, r#"{"cond_dim": 3}"#).unwrap();
+        assert!(Manifest::load(&p).is_err());
+    }
+}

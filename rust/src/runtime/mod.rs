@@ -1,0 +1,196 @@
+//! PJRT runtime: load and execute the AOT-compiled HLO artifacts.
+//!
+//! This is the only place the `xla` crate is touched. The compile path
+//! (`make artifacts`) leaves HLO **text** plus a `manifest.json` in
+//! `artifacts/`; at startup the runtime creates one PJRT CPU client,
+//! compiles each referenced module once, and caches the executables.
+//! Python never runs on this path.
+
+mod manifest;
+
+pub use manifest::{Manifest, Variant};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// Runtime errors.
+#[derive(Debug, thiserror::Error)]
+pub enum RuntimeError {
+    #[error("artifacts not found at {0} — run `make artifacts`")]
+    ArtifactsMissing(PathBuf),
+    #[error("manifest: {0}")]
+    Manifest(String),
+    #[error("xla: {0}")]
+    Xla(String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for RuntimeError {
+    fn from(e: xla::Error) -> Self {
+        RuntimeError::Xla(e.to_string())
+    }
+}
+
+/// A compiled-executable cache over one PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+// The PJRT client handle is internally synchronized; executions are
+// thread-safe per PJRT semantics (the C API allows concurrent Execute).
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Open the artifact directory (expects `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime, RuntimeError> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        if !manifest_path.exists() {
+            return Err(RuntimeError::ArtifactsMissing(dir));
+        }
+        let manifest = Manifest::load(&manifest_path)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, dir, manifest, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Default artifact location relative to the repo root.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("HOPAAS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    /// Platform string (for logs).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile (cached) an HLO text file in the artifact dir.
+    pub fn load(
+        &self,
+        file: &str,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>, RuntimeError> {
+        {
+            let cache = self.cache.lock().unwrap();
+            if let Some(exe) = cache.get(file) {
+                return Ok(exe.clone());
+            }
+        }
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| RuntimeError::Manifest("bad path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(file.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute a compiled module on literal inputs; unpacks the
+    /// `return_tuple=True` convention into a flat vector.
+    pub fn execute(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>, RuntimeError> {
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let literal = result[0][0].to_literal_sync()?;
+        Ok(literal.to_tuple()?)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cached(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+/// Build an f32 literal of the given shape from a slice.
+pub fn literal_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal, RuntimeError> {
+    debug_assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+    if shape.is_empty() {
+        return Ok(xla::Literal::from(data[0]));
+    }
+    let flat = xla::Literal::vec1(data);
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(flat.reshape(&dims)?)
+}
+
+/// Read an f32 literal back into a Vec.
+pub fn literal_to_vec(lit: &xla::Literal) -> Result<Vec<f32>, RuntimeError> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Read a scalar f32.
+pub fn literal_scalar(lit: &xla::Literal) -> Result<f32, RuntimeError> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_available() -> bool {
+        Runtime::default_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let lit = literal_f32(&[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        assert_eq!(literal_to_vec(&lit).unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let s = literal_f32(&[], &[2.5]).unwrap();
+        assert_eq!(literal_scalar(&s).unwrap(), 2.5);
+    }
+
+    #[test]
+    fn open_missing_dir_fails_cleanly() {
+        match Runtime::open("/definitely/not/here") {
+            Err(RuntimeError::ArtifactsMissing(_)) => {}
+            Err(e) => panic!("wrong error: {e}"),
+            Ok(_) => panic!("should not open"),
+        }
+    }
+
+    #[test]
+    fn loads_and_caches_eval_artifact() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        }
+        let rt = Runtime::open(Runtime::default_dir()).unwrap();
+        let v = rt.manifest.variants[0].clone();
+        let e1 = rt.load(&v.eval_file).unwrap();
+        let e2 = rt.load(&v.eval_file).unwrap();
+        assert!(std::sync::Arc::ptr_eq(&e1, &e2), "second load hits cache");
+        assert_eq!(rt.cached(), 1);
+    }
+
+    #[test]
+    fn eval_artifact_executes() {
+        if !artifacts_available() {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        }
+        let rt = Runtime::open(Runtime::default_dir()).unwrap();
+        let v = rt.manifest.variants[0].clone();
+        let exe = rt.load(&v.eval_file).unwrap();
+        // Zero generator + zero noise → W1 against real data is finite.
+        let mut inputs = Vec::new();
+        for shape in &v.eval_inputs {
+            let n: usize = shape.iter().product::<usize>().max(1);
+            inputs.push(literal_f32(shape, &vec![0.1; n]).unwrap());
+        }
+        let out = rt.execute(&exe, &inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        let w1 = literal_scalar(&out[0]).unwrap();
+        assert!(w1.is_finite() && w1 >= 0.0, "w1={w1}");
+    }
+}

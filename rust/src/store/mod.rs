@@ -1,0 +1,180 @@
+//! Durable storage substrate — the PostgreSQL stand-in.
+//!
+//! The paper uses a PostgreSQL instance inside the docker-compose stack
+//! to give the (scalable set of) backend workers shared, durable state.
+//! What the HOPAAS semantics actually require from that component is:
+//!
+//! 1. every accepted `ask`/`tell`/`should_prune` mutation survives a
+//!    server crash/restart (campaigns run for days on opportunistic
+//!    resources — losing told trials wastes real GPU-hours);
+//! 2. recovery reconstructs exactly the prefix of acknowledged events.
+//!
+//! [`Wal`] provides this with a crc32-framed, length-prefixed,
+//! append-only log of JSON records plus an optional snapshot + truncate
+//! cycle (compaction). A torn/corrupt tail (crash mid-write) is detected
+//! by checksum and cleanly discarded; corruption in the *middle* of the
+//! log stops recovery at the last valid record, which is the same
+//! guarantee a write-ahead log gives.
+
+mod wal;
+
+pub use wal::{Wal, WalError, WalStats};
+
+use crate::json::Value;
+use std::path::Path;
+
+/// A record in the event log: a tagged JSON payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Record {
+    /// Event tag, e.g. `"study"`, `"trial_new"`, `"trial_tell"`.
+    pub tag: String,
+    pub payload: Value,
+}
+
+impl Record {
+    pub fn new(tag: impl Into<String>, payload: Value) -> Self {
+        Record { tag: tag.into(), payload }
+    }
+
+    /// Wire form: `{"t": tag, "p": payload}`.
+    pub fn to_value(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("t", self.tag.as_str());
+        o.set("p", self.payload.clone());
+        Value::Obj(o)
+    }
+
+    pub fn from_value(v: &Value) -> Option<Record> {
+        let tag = v.get("t").as_str()?.to_string();
+        let payload = v.get("p").clone();
+        Some(Record { tag, payload })
+    }
+}
+
+/// Persistence engine: snapshot file + WAL, atomically compacted.
+///
+/// Layout under `dir/`:
+/// * `snapshot.json` — full-state snapshot (optional)
+/// * `wal.log`       — events since the snapshot
+pub struct Storage {
+    dir: std::path::PathBuf,
+    wal: Wal,
+}
+
+impl Storage {
+    /// Open (or create) storage in `dir`.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Storage, WalError> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        let wal = Wal::open(dir.join("wal.log"))?;
+        Ok(Storage { dir, wal })
+    }
+
+    /// Load `(snapshot, events-since-snapshot)`.
+    pub fn load(&mut self) -> Result<(Option<Value>, Vec<Record>), WalError> {
+        let snap_path = self.dir.join("snapshot.json");
+        let snapshot = match std::fs::read_to_string(&snap_path) {
+            Ok(s) => Some(
+                crate::json::parse(&s)
+                    .map_err(|e| WalError::Corrupt(format!("snapshot: {e}")))?,
+            ),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => None,
+            Err(e) => return Err(WalError::Io(e)),
+        };
+        let events = self
+            .wal
+            .replay()?
+            .iter()
+            .filter_map(Record::from_value)
+            .collect();
+        Ok((snapshot, events))
+    }
+
+    /// Append one event durably (fsync'd before return).
+    pub fn append(&mut self, record: &Record) -> Result<(), WalError> {
+        self.wal.append(&record.to_value())
+    }
+
+    /// Write a snapshot of full state and truncate the WAL atomically
+    /// (snapshot is written to a temp file, fsync'd, renamed; only then
+    /// is the WAL reset).
+    pub fn compact(&mut self, state: &Value) -> Result<(), WalError> {
+        let snap_path = self.dir.join("snapshot.json");
+        let tmp_path = self.dir.join("snapshot.json.tmp");
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp_path)?;
+            f.write_all(state.to_string().as_bytes())?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp_path, &snap_path)?;
+        self.wal.reset()?;
+        Ok(())
+    }
+
+    /// WAL statistics (for metrics / compaction policy).
+    pub fn wal_stats(&self) -> WalStats {
+        self.wal.stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::TempDir;
+
+    fn rec(tag: &str, n: i64) -> Record {
+        let mut o = Value::obj();
+        o.set("n", n);
+        Record::new(tag, Value::Obj(o))
+    }
+
+    #[test]
+    fn empty_storage_loads_empty() {
+        let d = TempDir::new("store-empty");
+        let mut s = Storage::open(d.path()).unwrap();
+        let (snap, events) = s.load().unwrap();
+        assert!(snap.is_none());
+        assert!(events.is_empty());
+    }
+
+    #[test]
+    fn append_and_reload() {
+        let d = TempDir::new("store-append");
+        {
+            let mut s = Storage::open(d.path()).unwrap();
+            for i in 0..10 {
+                s.append(&rec("e", i)).unwrap();
+            }
+        }
+        let mut s = Storage::open(d.path()).unwrap();
+        let (_, events) = s.load().unwrap();
+        assert_eq!(events.len(), 10);
+        assert_eq!(events[3], rec("e", 3));
+    }
+
+    #[test]
+    fn compact_then_more_events() {
+        let d = TempDir::new("store-compact");
+        {
+            let mut s = Storage::open(d.path()).unwrap();
+            for i in 0..5 {
+                s.append(&rec("pre", i)).unwrap();
+            }
+            let mut state = Value::obj();
+            state.set("count", 5);
+            s.compact(&Value::Obj(state)).unwrap();
+            s.append(&rec("post", 100)).unwrap();
+        }
+        let mut s = Storage::open(d.path()).unwrap();
+        let (snap, events) = s.load().unwrap();
+        assert_eq!(snap.unwrap().get("count").as_i64(), Some(5));
+        assert_eq!(events, vec![rec("post", 100)]);
+    }
+
+    #[test]
+    fn record_roundtrip() {
+        let r = rec("trial_tell", 42);
+        assert_eq!(Record::from_value(&r.to_value()), Some(r));
+    }
+}

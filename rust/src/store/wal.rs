@@ -1,0 +1,265 @@
+//! crc32-framed append-only write-ahead log.
+//!
+//! Frame format (little-endian):
+//! ```text
+//! [u32 len][u32 crc32(payload)][payload: len bytes of JSON utf-8]
+//! ```
+//! A torn tail (partial frame or checksum mismatch) is truncated on
+//! replay; everything before it is recovered.
+
+use crate::json::Value;
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+
+/// Maximum single-record size — a guard against a corrupt length prefix
+/// making replay allocate gigabytes.
+const MAX_RECORD: u32 = 64 * 1024 * 1024;
+
+/// WAL error type.
+#[derive(Debug, thiserror::Error)]
+pub enum WalError {
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+    #[error("corrupt: {0}")]
+    Corrupt(String),
+}
+
+/// Counters for metrics and compaction policy.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WalStats {
+    pub records: u64,
+    pub bytes: u64,
+    /// Torn/corrupt bytes discarded at the last replay.
+    pub truncated_bytes: u64,
+}
+
+/// Append-only log handle.
+pub struct Wal {
+    path: PathBuf,
+    file: File,
+    stats: WalStats,
+}
+
+impl Wal {
+    /// Open or create the log at `path`.
+    pub fn open(path: PathBuf) -> Result<Wal, WalError> {
+        let file = OpenOptions::new()
+            .create(true)
+            .read(true)
+            .append(true)
+            .open(&path)?;
+        let bytes = file.metadata()?.len();
+        Ok(Wal { path, file, stats: WalStats { records: 0, bytes, truncated_bytes: 0 } })
+    }
+
+    /// Append one JSON record; fsync before returning so an acknowledged
+    /// API mutation is durable.
+    pub fn append(&mut self, value: &Value) -> Result<(), WalError> {
+        let payload = value.to_string().into_bytes();
+        let len = payload.len() as u32;
+        if len > MAX_RECORD {
+            return Err(WalError::Corrupt("record too large".into()));
+        }
+        let crc = crc32fast::hash(&payload);
+        let mut frame = Vec::with_capacity(payload.len() + 8);
+        frame.extend_from_slice(&len.to_le_bytes());
+        frame.extend_from_slice(&crc.to_le_bytes());
+        frame.extend_from_slice(&payload);
+        self.file.write_all(&frame)?;
+        self.file.sync_data()?;
+        self.stats.records += 1;
+        self.stats.bytes += frame.len() as u64;
+        Ok(())
+    }
+
+    /// Replay all valid records from the start; truncates a torn tail.
+    pub fn replay(&mut self) -> Result<Vec<Value>, WalError> {
+        let mut buf = Vec::new();
+        self.file.seek(SeekFrom::Start(0))?;
+        self.file.read_to_end(&mut buf)?;
+
+        let mut records = Vec::new();
+        let mut off = 0usize;
+        let mut valid_end = 0usize;
+        while off + 8 <= buf.len() {
+            let len = u32::from_le_bytes(buf[off..off + 4].try_into().unwrap());
+            let crc = u32::from_le_bytes(buf[off + 4..off + 8].try_into().unwrap());
+            if len > MAX_RECORD {
+                break; // corrupt length: stop at last valid frame
+            }
+            let start = off + 8;
+            let end = start + len as usize;
+            if end > buf.len() {
+                break; // torn tail
+            }
+            let payload = &buf[start..end];
+            if crc32fast::hash(payload) != crc {
+                break; // bit rot / torn write
+            }
+            let text = match std::str::from_utf8(payload) {
+                Ok(t) => t,
+                Err(_) => break,
+            };
+            let value = match crate::json::parse(text) {
+                Ok(v) => v,
+                Err(_) => break,
+            };
+            records.push(value);
+            off = end;
+            valid_end = end;
+        }
+
+        if valid_end < buf.len() {
+            // Discard the invalid tail so future appends start clean.
+            self.stats.truncated_bytes = (buf.len() - valid_end) as u64;
+            self.file.set_len(valid_end as u64)?;
+            self.file.sync_data()?;
+        }
+        self.file.seek(SeekFrom::End(0))?;
+        self.stats.records = records.len() as u64;
+        self.stats.bytes = valid_end as u64;
+        Ok(records)
+    }
+
+    /// Truncate the log (after a snapshot has been durably written).
+    pub fn reset(&mut self) -> Result<(), WalError> {
+        self.file.set_len(0)?;
+        self.file.sync_data()?;
+        self.file.seek(SeekFrom::Start(0))?;
+        self.stats = WalStats::default();
+        Ok(())
+    }
+
+    pub fn stats(&self) -> WalStats {
+        self.stats
+    }
+
+    /// Path of the log file.
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{prop, TempDir};
+
+    fn val(i: i64) -> Value {
+        let mut o = Value::obj();
+        o.set("i", i);
+        Value::Obj(o)
+    }
+
+    #[test]
+    fn append_replay_roundtrip() {
+        let d = TempDir::new("wal-rt");
+        let mut w = Wal::open(d.path().join("w.log")).unwrap();
+        for i in 0..20 {
+            w.append(&val(i)).unwrap();
+        }
+        let rec = w.replay().unwrap();
+        assert_eq!(rec.len(), 20);
+        assert_eq!(rec[7], val(7));
+    }
+
+    #[test]
+    fn reopen_preserves_records() {
+        let d = TempDir::new("wal-reopen");
+        let p = d.path().join("w.log");
+        {
+            let mut w = Wal::open(p.clone()).unwrap();
+            w.append(&val(1)).unwrap();
+            w.append(&val(2)).unwrap();
+        }
+        let mut w = Wal::open(p).unwrap();
+        assert_eq!(w.replay().unwrap().len(), 2);
+        // Appending after replay continues the log.
+        w.append(&val(3)).unwrap();
+        assert_eq!(w.replay().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn torn_tail_truncated() {
+        let d = TempDir::new("wal-torn");
+        let p = d.path().join("w.log");
+        {
+            let mut w = Wal::open(p.clone()).unwrap();
+            w.append(&val(1)).unwrap();
+            w.append(&val(2)).unwrap();
+        }
+        // Simulate a crash mid-write: append garbage half-frame.
+        {
+            let mut f = OpenOptions::new().append(true).open(&p).unwrap();
+            f.write_all(&[42u8, 0, 0]).unwrap();
+        }
+        let mut w = Wal::open(p.clone()).unwrap();
+        let rec = w.replay().unwrap();
+        assert_eq!(rec.len(), 2);
+        assert!(w.stats().truncated_bytes > 0);
+        // Log is clean again: append works and replays fully.
+        w.append(&val(3)).unwrap();
+        assert_eq!(w.replay().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn corrupt_crc_stops_replay() {
+        let d = TempDir::new("wal-crc");
+        let p = d.path().join("w.log");
+        {
+            let mut w = Wal::open(p.clone()).unwrap();
+            for i in 0..3 {
+                w.append(&val(i)).unwrap();
+            }
+        }
+        // Flip a byte in the middle record's payload.
+        let mut bytes = std::fs::read(&p).unwrap();
+        let frame0 = 8 + u32::from_le_bytes(bytes[0..4].try_into().unwrap()) as usize;
+        bytes[frame0 + 10] ^= 0xFF;
+        std::fs::write(&p, &bytes).unwrap();
+
+        let mut w = Wal::open(p).unwrap();
+        let rec = w.replay().unwrap();
+        assert_eq!(rec.len(), 1, "replay stops at last valid record");
+    }
+
+    #[test]
+    fn reset_empties() {
+        let d = TempDir::new("wal-reset");
+        let mut w = Wal::open(d.path().join("w.log")).unwrap();
+        w.append(&val(1)).unwrap();
+        w.reset().unwrap();
+        assert!(w.replay().unwrap().is_empty());
+        w.append(&val(2)).unwrap();
+        assert_eq!(w.replay().unwrap(), vec![val(2)]);
+    }
+
+    #[test]
+    fn prop_recovery_is_prefix() {
+        // Property: for any sequence of appended records and any byte
+        // truncation point, replay yields a prefix of the appended
+        // sequence.
+        prop::check(40, |g| {
+            let d = TempDir::new("wal-prop");
+            let p = d.path().join("w.log");
+            let n = g.usize(1, 12);
+            let vals: Vec<Value> = (0..n as i64).map(val).collect();
+            {
+                let mut w = Wal::open(p.clone()).unwrap();
+                for v in &vals {
+                    w.append(v).unwrap();
+                }
+            }
+            let full = std::fs::read(&p).unwrap();
+            let cut = g.usize(0, full.len());
+            std::fs::write(&p, &full[..cut]).unwrap();
+            let mut w = Wal::open(p).unwrap();
+            let rec = w.replay().unwrap();
+            prop::assert_holds(
+                rec.len() <= vals.len() && rec[..] == vals[..rec.len()],
+                format!("not a prefix: {} of {} (cut {cut})", rec.len(), vals.len()),
+            )
+        });
+    }
+}

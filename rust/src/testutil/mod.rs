@@ -1,0 +1,73 @@
+//! Test utilities, including a miniature property-testing harness.
+//!
+//! `proptest` is not available in this offline build, so `prop` provides
+//! the same methodological role: seeded random generators, a configurable
+//! number of cases, and greedy shrinking on failure. Coordinator
+//! invariants (routing, batching, state machines) are exercised through
+//! it — see the `proptest` substitution note in DESIGN.md §3.
+
+pub mod prop;
+
+use std::net::TcpListener;
+
+/// Find a free localhost port by binding port 0 and dropping the listener.
+/// Subject to a benign race, acceptable in tests.
+pub fn free_port() -> u16 {
+    TcpListener::bind("127.0.0.1:0")
+        .expect("bind 127.0.0.1:0")
+        .local_addr()
+        .expect("local_addr")
+        .port()
+}
+
+/// A scratch directory deleted on drop.
+pub struct TempDir {
+    path: std::path::PathBuf,
+}
+
+impl TempDir {
+    /// Create a fresh temp dir under the system temp root.
+    pub fn new(tag: &str) -> Self {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        static N: AtomicU64 = AtomicU64::new(0);
+        let n = N.fetch_add(1, Ordering::Relaxed);
+        let path = std::env::temp_dir().join(format!(
+            "hopaas-test-{tag}-{}-{n}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&path).expect("create temp dir");
+        TempDir { path }
+    }
+
+    /// Path of the directory.
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.path);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tempdir_created_and_removed() {
+        let p;
+        {
+            let d = TempDir::new("t");
+            p = d.path().to_path_buf();
+            assert!(p.exists());
+        }
+        assert!(!p.exists());
+    }
+
+    #[test]
+    fn free_port_nonzero() {
+        assert_ne!(free_port(), 0);
+    }
+}

@@ -1,0 +1,191 @@
+//! Minimal property-based testing harness with shrinking.
+//!
+//! Usage:
+//! ```ignore
+//! prop::check(256, |g| {
+//!     let xs = g.vec(0..=32, |g| g.i64(-100, 100));
+//!     let mut sorted = xs.clone();
+//!     sorted.sort();
+//!     prop::assert_holds(sorted.len() == xs.len(), format!("len {:?}", xs))
+//! });
+//! ```
+//!
+//! On failure the harness re-runs the property with progressively simpler
+//! "sizes" (the generator scales collection lengths and magnitudes by the
+//! current size), reporting the smallest failing seed it finds. Shrinking
+//! is stochastic rather than structural — simpler than proptest but
+//! sufficient to reduce most failures to small cases, and fully
+//! deterministic from the printed seed.
+
+use crate::rng::Rng;
+
+/// Generator handle passed to properties.
+pub struct Gen {
+    rng: Rng,
+    /// Size scaling in (0, 1]; shrinking lowers this.
+    pub size: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, size: f64) -> Self {
+        Gen { rng: Rng::new(seed), size }
+    }
+
+    /// Raw RNG access.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    /// Integer in `[lo, hi]`, magnitude scaled by current size.
+    pub fn i64(&mut self, lo: i64, hi: i64) -> i64 {
+        let span = ((hi - lo) as f64 * self.size).ceil().max(1.0) as i64;
+        let hi2 = (lo + span).min(hi);
+        self.rng.int_range(lo, hi2)
+    }
+
+    /// usize in `[lo, hi]`, scaled by size.
+    pub fn usize(&mut self, lo: usize, hi: usize) -> usize {
+        self.i64(lo as i64, hi as i64) as usize
+    }
+
+    /// f64 in `[lo, hi)`.
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform(lo, hi)
+    }
+
+    /// Finite f64 covering positives, negatives, zeros and extremes
+    /// (bounded by size).
+    pub fn f64_any(&mut self) -> f64 {
+        let mag = 10f64.powf(self.rng.uniform(-6.0, 6.0 * self.size));
+        let sign = if self.rng.chance(0.5) { 1.0 } else { -1.0 };
+        if self.rng.chance(0.05) {
+            0.0
+        } else {
+            sign * mag
+        }
+    }
+
+    /// Boolean.
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    /// Vector with length in `len` range, elements from `f`.
+    pub fn vec<T>(&mut self, len: std::ops::RangeInclusive<usize>, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize(*len.start(), *len.end());
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+
+    /// ASCII identifier-ish string (for names, keys).
+    pub fn ident(&mut self, max_len: usize) -> String {
+        const CHARS: &[u8] = b"abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789_-";
+        let n = self.usize(1, max_len.max(1));
+        (0..n)
+            .map(|_| CHARS[self.rng.below(CHARS.len() as u64) as usize] as char)
+            .collect()
+    }
+
+    /// Arbitrary unicode-ish string including escapes-relevant chars.
+    pub fn string(&mut self, max_len: usize) -> String {
+        let n = self.usize(0, max_len);
+        (0..n)
+            .map(|_| {
+                match self.rng.below(8) {
+                    0 => '"',
+                    1 => '\\',
+                    2 => '\n',
+                    3 => '\u{1F600}',
+                    4 => 'é',
+                    5 => '\t',
+                    _ => (b'a' + self.rng.below(26) as u8) as char,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Outcome of one property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Convenience: turn a boolean + message into a `PropResult`.
+pub fn assert_holds(ok: bool, msg: impl Into<String>) -> PropResult {
+    if ok {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics with the seed and (shrunk)
+/// message on failure. Seed base is derived from the property's code
+/// location via `#[track_caller]` so different call sites explore
+/// different streams but each is reproducible.
+#[track_caller]
+pub fn check(cases: u64, prop: impl Fn(&mut Gen) -> PropResult) {
+    let loc = std::panic::Location::caller();
+    let base = crate::rng::mix(loc.line() as u64, loc.file().len() as u64);
+    check_seeded(base, cases, prop)
+}
+
+/// As [`check`] but with an explicit seed base.
+pub fn check_seeded(base: u64, cases: u64, prop: impl Fn(&mut Gen) -> PropResult) {
+    for case in 0..cases {
+        let seed = crate::rng::mix(base, case);
+        let mut g = Gen::new(seed, 1.0);
+        if let Err(msg) = prop(&mut g) {
+            // Shrink: retry with smaller sizes / derived seeds, keep the
+            // failure with the smallest size.
+            let mut best: (f64, u64, String) = (1.0, seed, msg);
+            for shrink_round in 0..200u64 {
+                let size = 0.02 + 0.98 * (shrink_round as f64 % 10.0) / 10.0;
+                if size >= best.0 {
+                    continue;
+                }
+                let s2 = crate::rng::mix(seed, 1000 + shrink_round);
+                let mut g2 = Gen::new(s2, size);
+                if let Err(m2) = prop(&mut g2) {
+                    best = (size, s2, m2);
+                }
+            }
+            panic!(
+                "property failed (seed={:#x}, size={:.2}): {}",
+                best.1, best.0, best.2
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(64, |g| {
+            let v = g.vec(0..=16, |g| g.i64(-5, 5));
+            assert_holds(v.len() <= 16, "len bound")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check(64, |g| {
+            let x = g.i64(0, 100);
+            assert_holds(x < 90, format!("x={x}"))
+        });
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        check(128, |g| {
+            let x = g.i64(-3, 9);
+            assert_holds((-3..=9).contains(&x), format!("x={x}"))
+        });
+    }
+}

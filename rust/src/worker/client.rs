@@ -1,0 +1,372 @@
+//! Rust HOPAAS client — wraps the Table 1 REST APIs, mirroring the
+//! ergonomics of the paper's Python client: build a `StudySpec`, `ask`
+//! for a `TrialHandle`, stream intermediate values through
+//! `should_prune`, finish with `tell`.
+//!
+//! ```no_run
+//! use hopaas::worker::{HopaasClient, StudySpec};
+//! let mut client = HopaasClient::connect("127.0.0.1:8021".parse().unwrap(),
+//!                                        "TOKEN".into()).unwrap();
+//! let spec = StudySpec::new("demo")
+//!     .uniform("x", -5.0, 5.0)
+//!     .loguniform("lr", 1e-5, 1e-1)
+//!     .sampler("tpe");
+//! let trial = client.ask(&spec).unwrap();
+//! let x = trial.params.get("x").as_f64().unwrap();
+//! client.tell(&trial, x * x).unwrap();
+//! ```
+
+use crate::http::{Client, ClientError};
+use crate::json::Value;
+use std::net::SocketAddr;
+
+/// Client-side errors, including HTTP error envelopes.
+#[derive(Debug, thiserror::Error)]
+pub enum WorkerError {
+    #[error("transport: {0}")]
+    Transport(#[from] ClientError),
+    #[error("server returned {status}: {detail}")]
+    Api { status: u16, detail: String },
+}
+
+/// Declarative study definition (what the `ask` body carries).
+#[derive(Clone, Debug)]
+pub struct StudySpec {
+    pub name: String,
+    pub direction: &'static str,
+    /// Multi-objective directions (overrides `direction` when set).
+    mo_directions: Option<Vec<String>>,
+    properties: Value,
+    sampler: Option<Value>,
+    pruner: Option<Value>,
+    pub node: Option<String>,
+}
+
+impl StudySpec {
+    pub fn new(name: &str) -> StudySpec {
+        StudySpec {
+            name: name.to_string(),
+            direction: "minimize",
+            mo_directions: None,
+            properties: Value::Obj(crate::json::Value::obj()),
+            sampler: None,
+            pruner: None,
+            node: None,
+        }
+    }
+
+    fn prop(mut self, key: &str, spec: Value) -> Self {
+        if let Value::Obj(o) = &mut self.properties {
+            o.set(key, spec);
+        }
+        self
+    }
+
+    /// Continuous uniform parameter.
+    pub fn uniform(self, key: &str, low: f64, high: f64) -> Self {
+        let mut s = Value::obj();
+        s.set("low", low).set("high", high);
+        self.prop(key, Value::Obj(s))
+    }
+
+    /// Log-uniform parameter.
+    pub fn loguniform(self, key: &str, low: f64, high: f64) -> Self {
+        let mut s = Value::obj();
+        s.set("low", low).set("high", high).set("type", "loguniform");
+        self.prop(key, Value::Obj(s))
+    }
+
+    /// Integer parameter.
+    pub fn int(self, key: &str, low: i64, high: i64) -> Self {
+        let mut s = Value::obj();
+        s.set("low", low).set("high", high).set("type", "int");
+        self.prop(key, Value::Obj(s))
+    }
+
+    /// Categorical parameter.
+    pub fn categorical(self, key: &str, choices: Vec<Value>) -> Self {
+        self.prop(key, Value::Arr(choices))
+    }
+
+    /// Raw properties object (e.g. from `Objective::properties`).
+    pub fn properties_json(mut self, props: Value) -> Self {
+        self.properties = props;
+        self
+    }
+
+    pub fn maximize(mut self) -> Self {
+        self.direction = "maximize";
+        self
+    }
+
+    /// Multi-objective study: per-objective directions (≥ 2). The
+    /// sampler defaults to NSGA-II; `tell` must use [`HopaasClient::
+    /// tell_values`].
+    pub fn directions(mut self, dirs: &[&str]) -> Self {
+        self.mo_directions = Some(dirs.iter().map(|d| d.to_string()).collect());
+        self
+    }
+
+    /// Sampler by name.
+    pub fn sampler(mut self, name: &str) -> Self {
+        let mut s = Value::obj();
+        s.set("name", name);
+        self.sampler = Some(Value::Obj(s));
+        self
+    }
+
+    /// Sampler with options.
+    pub fn sampler_json(mut self, cfg: Value) -> Self {
+        self.sampler = Some(cfg);
+        self
+    }
+
+    /// Pruner by name.
+    pub fn pruner(mut self, name: &str) -> Self {
+        let mut s = Value::obj();
+        s.set("name", name);
+        self.pruner = Some(Value::Obj(s));
+        self
+    }
+
+    /// Pruner with options.
+    pub fn pruner_json(mut self, cfg: Value) -> Self {
+        self.pruner = Some(cfg);
+        self
+    }
+
+    /// Node label for dashboard attribution.
+    pub fn from_node(mut self, node: &str) -> Self {
+        self.node = Some(node.to_string());
+        self
+    }
+
+    /// The `ask` request body.
+    pub fn to_body(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("study_name", self.name.as_str())
+            .set("properties", self.properties.clone());
+        match &self.mo_directions {
+            Some(ds) => o.set(
+                "direction",
+                Value::Arr(ds.iter().map(|d| Value::Str(d.clone())).collect()),
+            ),
+            None => o.set("direction", self.direction),
+        };
+        if let Some(s) = &self.sampler {
+            o.set("sampler", s.clone());
+        }
+        if let Some(p) = &self.pruner {
+            o.set("pruner", p.clone());
+        }
+        if let Some(n) = &self.node {
+            o.set("node", n.as_str());
+        }
+        Value::Obj(o)
+    }
+}
+
+/// A live trial returned by `ask`.
+#[derive(Clone, Debug)]
+pub struct TrialHandle {
+    pub trial_id: u64,
+    pub trial_number: u64,
+    pub study_id: u64,
+    pub params: Value,
+}
+
+/// Blocking HOPAAS client over one keep-alive connection.
+pub struct HopaasClient {
+    http: Client,
+    token: String,
+}
+
+impl HopaasClient {
+    pub fn connect(addr: SocketAddr, token: String) -> Result<HopaasClient, WorkerError> {
+        Ok(HopaasClient { http: Client::connect(addr)?, token })
+    }
+
+    fn check(resp: crate::http::Response) -> Result<Value, WorkerError> {
+        let body = resp.json_body().unwrap_or(Value::Null);
+        if resp.status != 200 {
+            return Err(WorkerError::Api {
+                status: resp.status,
+                detail: body.get("detail").as_str().unwrap_or("?").to_string(),
+            });
+        }
+        Ok(body)
+    }
+
+    /// Server version string.
+    pub fn version(&mut self) -> Result<String, WorkerError> {
+        let v = Self::check(self.http.get("/api/version")?)?;
+        Ok(v.get("version").as_str().unwrap_or("").to_string())
+    }
+
+    /// `ask`: join/create the study, receive a trial.
+    pub fn ask(&mut self, spec: &StudySpec) -> Result<TrialHandle, WorkerError> {
+        let path = format!("/api/ask/{}", self.token);
+        let v = Self::check(self.http.post_json(&path, &spec.to_body())?)?;
+        Ok(TrialHandle {
+            trial_id: v.get("trial_id").as_u64().unwrap_or(0),
+            trial_number: v.get("trial_number").as_u64().unwrap_or(0),
+            study_id: v.get("study_id").as_u64().unwrap_or(0),
+            params: v.get("params").clone(),
+        })
+    }
+
+    /// `tell`: finalize with the objective value. Returns `is_best`.
+    pub fn tell(&mut self, trial: &TrialHandle, value: f64) -> Result<bool, WorkerError> {
+        let path = format!("/api/tell/{}", self.token);
+        let mut o = Value::obj();
+        o.set("trial_id", trial.trial_id).set("value", value);
+        let v = Self::check(self.http.post_json(&path, &Value::Obj(o))?)?;
+        Ok(v.get("is_best").as_bool().unwrap_or(false))
+    }
+
+    /// `tell` for multi-objective studies. Returns `on_pareto_front`.
+    pub fn tell_values(
+        &mut self,
+        trial: &TrialHandle,
+        values: &[f64],
+    ) -> Result<bool, WorkerError> {
+        let path = format!("/api/tell/{}", self.token);
+        let mut o = Value::obj();
+        o.set("trial_id", trial.trial_id).set(
+            "values",
+            Value::Arr(values.iter().map(|&v| Value::Num(v)).collect()),
+        );
+        let v = Self::check(self.http.post_json(&path, &Value::Obj(o))?)?;
+        Ok(v.get("on_pareto_front").as_bool().unwrap_or(false))
+    }
+
+    /// Pareto front of a multi-objective study.
+    pub fn pareto(&mut self, study_id: u64) -> Result<Value, WorkerError> {
+        Self::check(self.http.get(&format!("/api/studies/{study_id}/pareto"))?)
+    }
+
+    /// `should_prune`: report (step, value); true = abort the trial.
+    pub fn should_prune(
+        &mut self,
+        trial: &TrialHandle,
+        step: u64,
+        value: f64,
+    ) -> Result<bool, WorkerError> {
+        let path = format!("/api/should_prune/{}", self.token);
+        let mut o = Value::obj();
+        o.set("trial_id", trial.trial_id)
+            .set("step", step)
+            .set("value", value);
+        let v = Self::check(self.http.post_json(&path, &Value::Obj(o))?)?;
+        Ok(v.get("should_prune").as_bool().unwrap_or(false))
+    }
+
+    /// Report a client-side failure.
+    pub fn fail(&mut self, trial: &TrialHandle) -> Result<(), WorkerError> {
+        let path = format!("/api/fail/{}", self.token);
+        let mut o = Value::obj();
+        o.set("trial_id", trial.trial_id);
+        Self::check(self.http.post_json(&path, &Value::Obj(o))?)?;
+        Ok(())
+    }
+
+    /// Study summaries (dashboard API).
+    pub fn studies(&mut self) -> Result<Value, WorkerError> {
+        Self::check(self.http.get("/api/studies")?)
+    }
+
+    /// One study's best value, if any.
+    pub fn best_value(&mut self, study_id: u64) -> Result<Option<f64>, WorkerError> {
+        let v = Self::check(self.http.get(&format!("/api/studies/{study_id}"))?)?;
+        Ok(v.get("best_value").as_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::{HopaasConfig, HopaasServer};
+
+    fn server() -> HopaasServer {
+        HopaasServer::start(
+            "127.0.0.1:0",
+            HopaasConfig { auth_required: true, ..Default::default() },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn spec_builder_body_shape() {
+        let spec = StudySpec::new("s")
+            .uniform("x", 0.0, 1.0)
+            .loguniform("lr", 1e-5, 1e-1)
+            .int("k", 1, 8)
+            .categorical("opt", vec![Value::Str("adam".into())])
+            .sampler("tpe")
+            .pruner("median")
+            .from_node("n1")
+            .maximize();
+        let b = spec.to_body();
+        assert_eq!(b.get("direction").as_str(), Some("maximize"));
+        assert_eq!(b.get("properties").get("lr").get("type").as_str(), Some("loguniform"));
+        assert_eq!(b.get("sampler").get("name").as_str(), Some("tpe"));
+        assert_eq!(b.get("node").as_str(), Some("n1"));
+    }
+
+    #[test]
+    fn end_to_end_optimize_sphere() {
+        let s = server();
+        let mut c = HopaasClient::connect(s.addr(), s.bootstrap_token.clone()).unwrap();
+        assert_eq!(c.version().unwrap(), crate::VERSION);
+        let spec = StudySpec::new("sphere")
+            .uniform("x", -5.0, 5.0)
+            .sampler("tpe");
+        let mut best = f64::INFINITY;
+        let mut study_id = 0;
+        for _ in 0..30 {
+            let t = c.ask(&spec).unwrap();
+            study_id = t.study_id;
+            let x = t.params.get("x").as_f64().unwrap();
+            let v = x * x;
+            best = best.min(v);
+            c.tell(&t, v).unwrap();
+        }
+        assert_eq!(c.best_value(study_id).unwrap(), Some(best));
+        assert!(best < 2.0, "TPE on 1-D sphere after 30 trials: {best}");
+        s.stop();
+    }
+
+    #[test]
+    fn api_error_surfaces() {
+        let s = server();
+        let mut c = HopaasClient::connect(s.addr(), "bogus".into()).unwrap();
+        let spec = StudySpec::new("x").uniform("x", 0.0, 1.0);
+        match c.ask(&spec) {
+            Err(WorkerError::Api { status: 401, .. }) => {}
+            other => panic!("expected 401, got {other:?}"),
+        }
+        s.stop();
+    }
+
+    #[test]
+    fn prune_flow() {
+        let s = server();
+        let mut c = HopaasClient::connect(s.addr(), s.bootstrap_token.clone()).unwrap();
+        let spec = StudySpec::new("p")
+            .uniform("x", 0.0, 1.0)
+            .pruner_json({
+                let mut p = Value::obj();
+                p.set("name", "threshold").set("upper", 10.0);
+                Value::Obj(p)
+            });
+        let t = c.ask(&spec).unwrap();
+        assert!(!c.should_prune(&t, 1, 1.0).unwrap());
+        assert!(c.should_prune(&t, 2, 100.0).unwrap(), "over threshold");
+        // After pruning, tell conflicts.
+        match c.tell(&t, 1.0) {
+            Err(WorkerError::Api { status: 409, .. }) => {}
+            other => panic!("expected 409, got {other:?}"),
+        }
+        s.stop();
+    }
+}

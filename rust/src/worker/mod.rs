@@ -1,0 +1,11 @@
+//! The client side: a Rust HOPAAS client wrapping the REST APIs (the
+//! analog of the paper's Python frontend [12]) and a multi-site node
+//! simulator reproducing the paper's §4 fleet — INFN Cloud, CINECA
+//! MARCONI 100, private and commercial nodes with different speeds,
+//! availability windows and preemption behaviour.
+
+pub mod client;
+pub mod sim;
+
+pub use client::{HopaasClient, StudySpec, TrialHandle, WorkerError};
+pub use sim::{Campaign, CampaignReport, NodeProfile, Site, SITES};

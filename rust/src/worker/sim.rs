@@ -1,0 +1,368 @@
+//! Multi-site node simulator — the stand-in for the paper's fleet.
+//!
+//! §4 of the paper: "HOPAAS was able to coordinate dozens of optimization
+//! studies with hundreds of trials on each study from more than twenty
+//! concurrent and diverse computing nodes" spanning CINECA MARCONI 100,
+//! INFN Cloud, private machines and commercial clouds. We cannot rent
+//! MARCONI 100 (repro band 0), but the coordination behaviour under test
+//! depends only on the *timing envelope* of the nodes: how fast they
+//! iterate, how often they vanish mid-trial (opportunistic preemption),
+//! and how jittery their network is. [`Site`] profiles encode exactly
+//! that, and [`Campaign`] runs a fleet of worker threads against a real
+//! HOPAAS server over real HTTP.
+//!
+//! Each simulated node runs the Figure 1 loop: `ask` → (train step,
+//! `should_prune`)* → `tell`, evaluating a synthetic objective whose
+//! learning curve reflects the quality of the suggested hyperparameters
+//! — so samplers and pruners face the same statistical problem a GAN
+//! campaign poses, thousands of times faster.
+
+use super::client::{HopaasClient, StudySpec, WorkerError};
+use crate::objectives::{LearningCurve, Objective};
+use crate::rng::{mix, Rng};
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// A resource-provider profile (speed × reliability × latency).
+#[derive(Clone, Copy, Debug)]
+pub struct Site {
+    pub name: &'static str,
+    /// Relative step speed (1.0 = reference GPU).
+    pub speed: f64,
+    /// Probability that a trial is preempted before finishing.
+    pub preempt: f64,
+    /// Simulated per-request network latency (µs).
+    pub net_latency_us: u64,
+}
+
+/// The paper's §4 mix: HPC, institutional cloud, private boxes,
+/// commercial spot instances.
+pub const SITES: [Site; 4] = [
+    Site { name: "marconi100", speed: 2.0, preempt: 0.02, net_latency_us: 800 },
+    Site { name: "infn-cloud", speed: 1.0, preempt: 0.01, net_latency_us: 300 },
+    Site { name: "private", speed: 0.5, preempt: 0.00, net_latency_us: 100 },
+    Site { name: "commercial-spot", speed: 1.5, preempt: 0.15, net_latency_us: 1200 },
+];
+
+/// One simulated node.
+#[derive(Clone, Debug)]
+pub struct NodeProfile {
+    pub site: Site,
+    pub node_id: usize,
+}
+
+impl NodeProfile {
+    pub fn label(&self) -> String {
+        format!("{}-{:02}", self.site.name, self.node_id)
+    }
+}
+
+/// Campaign configuration.
+#[derive(Clone)]
+pub struct Campaign {
+    pub server: SocketAddr,
+    pub token: String,
+    pub study_name: String,
+    pub objective: Objective,
+    pub sampler: &'static str,
+    /// Pruner name, or None.
+    pub pruner: Option<&'static str>,
+    /// Nodes per site (cycled through SITES).
+    pub n_nodes: usize,
+    /// Stop once this many trials have been *started* campaign-wide.
+    pub max_trials: u64,
+    /// Steps per (unpruned) trial.
+    pub steps_per_trial: u64,
+    /// Simulated work per step at speed 1.0 (µs). 0 = as fast as possible.
+    pub step_cost_us: u64,
+    pub seed: u64,
+}
+
+impl Campaign {
+    pub fn new(server: SocketAddr, token: String, objective: Objective) -> Campaign {
+        Campaign {
+            server,
+            token,
+            study_name: format!("campaign-{}", objective.name()),
+            objective,
+            sampler: "tpe",
+            pruner: Some("median"),
+            n_nodes: 24,
+            max_trials: 200,
+            steps_per_trial: 20,
+            step_cost_us: 200,
+            seed: 1,
+        }
+    }
+
+    fn spec(&self, node: &NodeProfile) -> StudySpec {
+        let mut spec = StudySpec::new(&self.study_name)
+            .properties_json(self.objective.properties())
+            .sampler(self.sampler)
+            .from_node(&node.label());
+        if let Some(p) = self.pruner {
+            spec = spec.pruner(p);
+        }
+        spec
+    }
+
+    /// Run the fleet over the default §4 site mix; blocks until
+    /// `max_trials` have been started and all in-flight trials finished.
+    pub fn run(&self) -> Result<CampaignReport, WorkerError> {
+        self.run_with_sites(&SITES)
+    }
+
+    /// Run the fleet over a custom site table (ablations: uniform fleets,
+    /// controlled preemption rates — see the churn bench).
+    pub fn run_with_sites(&self, sites: &[Site]) -> Result<CampaignReport, WorkerError> {
+        let started = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let t0 = std::time::Instant::now();
+        let mut handles = Vec::new();
+        for i in 0..self.n_nodes {
+            let node = NodeProfile { site: sites[i % sites.len()], node_id: i };
+            let campaign = self.clone();
+            let started = started.clone();
+            let stop = stop.clone();
+            handles.push(std::thread::spawn(move || {
+                node_loop(&campaign, &node, &started, &stop)
+            }));
+        }
+        let mut report = CampaignReport::default();
+        for h in handles {
+            let node_report = h.join().expect("node thread")?;
+            report.merge(&node_report);
+        }
+        report.wall = t0.elapsed();
+        Ok(report)
+    }
+}
+
+/// Per-node / aggregated campaign outcome.
+#[derive(Clone, Debug, Default)]
+pub struct CampaignReport {
+    pub completed: u64,
+    pub pruned: u64,
+    pub preempted: u64,
+    pub steps_executed: u64,
+    pub best: Option<f64>,
+    pub wall: Duration,
+    /// (site name, completed trials) attribution.
+    pub by_site: Vec<(String, u64)>,
+}
+
+impl CampaignReport {
+    fn merge(&mut self, other: &CampaignReport) {
+        self.completed += other.completed;
+        self.pruned += other.pruned;
+        self.preempted += other.preempted;
+        self.steps_executed += other.steps_executed;
+        self.best = match (self.best, other.best) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        for (site, n) in &other.by_site {
+            match self.by_site.iter_mut().find(|(s, _)| s == site) {
+                Some((_, total)) => *total += n,
+                None => self.by_site.push((site.clone(), *n)),
+            }
+        }
+    }
+
+    /// Trials finished per second of wall time.
+    pub fn throughput(&self) -> f64 {
+        let total = (self.completed + self.pruned + self.preempted) as f64;
+        total / self.wall.as_secs_f64().max(1e-9)
+    }
+}
+
+fn node_loop(
+    campaign: &Campaign,
+    node: &NodeProfile,
+    started: &AtomicU64,
+    stop: &AtomicBool,
+) -> Result<CampaignReport, WorkerError> {
+    let mut rng = Rng::new(mix(campaign.seed, node.node_id as u64));
+    let mut client = HopaasClient::connect(campaign.server, campaign.token.clone())?;
+    let spec = campaign.spec(node);
+    let mut report = CampaignReport::default();
+    let mut site_completed = 0u64;
+
+    loop {
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+        let n = started.fetch_add(1, Ordering::Relaxed);
+        if n >= campaign.max_trials {
+            stop.store(true, Ordering::Relaxed);
+            break;
+        }
+        net_delay(node, &mut rng);
+        let trial = client.ask(&spec)?;
+
+        // The simulated training converges to the objective value at the
+        // suggested point: bad hyperparameters → high asymptote, which is
+        // what gives the pruner something to act on, and keeps final
+        // values in objective units (comparable to f*).
+        let value = campaign.objective.eval_params(&trial.params);
+        let curve = LearningCurve {
+            asymptote: value,
+            start: value + 3.0 * (1.0 + rng.f64()),
+            rate: 0.05 + 0.1 * rng.f64(),
+            noise: 0.02,
+        };
+
+        // Does this trial get preempted partway? (opportunistic resources)
+        let preempt_at = if rng.chance(node.site.preempt) {
+            Some(1 + rng.below(campaign.steps_per_trial.max(1)))
+        } else {
+            None
+        };
+
+        let mut pruned = false;
+        let mut preempted = false;
+        for step in 1..=campaign.steps_per_trial {
+            if let Some(p) = preempt_at {
+                if step >= p {
+                    // Node vanishes mid-trial: no fail report, exactly like
+                    // a killed spot instance. The server's reaper handles it.
+                    preempted = true;
+                    break;
+                }
+            }
+            work_delay(campaign, node, &mut rng);
+            report.steps_executed += 1;
+            let loss = curve.at(step, &mut rng);
+            net_delay(node, &mut rng);
+            if client.should_prune(&trial, step, loss)? {
+                pruned = true;
+                break;
+            }
+        }
+
+        if preempted {
+            report.preempted += 1;
+        } else if pruned {
+            report.pruned += 1;
+        } else {
+            // Final objective: the converged value (+ observation noise —
+            // the "noisy loss function" setting of the paper's §1).
+            let final_loss = curve.final_loss() + rng.normal() * 0.005;
+            net_delay(node, &mut rng);
+            client.tell(&trial, final_loss)?;
+            report.completed += 1;
+            site_completed += 1;
+            report.best = Some(match report.best {
+                None => final_loss,
+                Some(b) => b.min(final_loss),
+            });
+        }
+    }
+    report.by_site.push((node.site.name.to_string(), site_completed));
+    Ok(report)
+}
+
+fn net_delay(node: &NodeProfile, rng: &mut Rng) {
+    if node.site.net_latency_us == 0 {
+        return;
+    }
+    let jitter = 0.5 + rng.f64();
+    std::thread::sleep(Duration::from_micros(
+        (node.site.net_latency_us as f64 * jitter) as u64,
+    ));
+}
+
+fn work_delay(campaign: &Campaign, node: &NodeProfile, rng: &mut Rng) {
+    if campaign.step_cost_us == 0 {
+        return;
+    }
+    let us = campaign.step_cost_us as f64 / node.site.speed * (0.8 + 0.4 * rng.f64());
+    std::thread::sleep(Duration::from_micros(us as u64));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::service::{HopaasConfig, HopaasServer};
+
+    fn server() -> HopaasServer {
+        HopaasServer::start(
+            "127.0.0.1:0",
+            HopaasConfig { auth_required: false, ..Default::default() },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn small_campaign_completes() {
+        let s = server();
+        let mut c = Campaign::new(s.addr(), "t".into(), Objective::Sphere);
+        c.n_nodes = 6;
+        c.max_trials = 30;
+        c.steps_per_trial = 5;
+        c.step_cost_us = 50;
+        let report = c.run().unwrap();
+        let total = report.completed + report.pruned + report.preempted;
+        assert!(total >= 25, "most started trials resolve: {report:?}");
+        assert!(report.best.is_some());
+        assert!(report.steps_executed > 0);
+        // All 4 site kinds participated (6 nodes over 4 sites).
+        assert!(report.by_site.len() >= 3, "{:?}", report.by_site);
+        s.stop();
+    }
+
+    #[test]
+    fn campaign_report_merge() {
+        let mut a = CampaignReport {
+            completed: 2,
+            pruned: 1,
+            preempted: 0,
+            steps_executed: 10,
+            best: Some(1.0),
+            wall: Duration::ZERO,
+            by_site: vec![("x".into(), 2)],
+        };
+        let b = CampaignReport {
+            completed: 3,
+            pruned: 0,
+            preempted: 1,
+            steps_executed: 20,
+            best: Some(0.5),
+            wall: Duration::ZERO,
+            by_site: vec![("x".into(), 1), ("y".into(), 2)],
+        };
+        a.merge(&b);
+        assert_eq!(a.completed, 5);
+        assert_eq!(a.best, Some(0.5));
+        assert_eq!(a.by_site, vec![("x".to_string(), 3), ("y".to_string(), 2)]);
+    }
+
+    #[test]
+    fn preempted_trials_are_reaped_not_lost() {
+        // High preemption site: the server should still converge because
+        // preempted (silent) trials get reaped, not counted as completed.
+        let config = HopaasConfig {
+            auth_required: false,
+            engine: crate::coordinator::engine::EngineConfig {
+                reap_after: Some(0.05),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let s = HopaasServer::start("127.0.0.1:0", config).unwrap();
+        let mut c = Campaign::new(s.addr(), "t".into(), Objective::Sphere);
+        c.n_nodes = 4;
+        c.max_trials = 20;
+        c.steps_per_trial = 4;
+        c.step_cost_us = 100;
+        c.seed = 3;
+        let report = c.run().unwrap();
+        std::thread::sleep(Duration::from_millis(80));
+        let reaped = s.engine.reap_stale();
+        // All preempted trials are eventually reaped.
+        assert!(reaped as u64 <= report.preempted + 1);
+        s.stop();
+    }
+}

@@ -1,0 +1,260 @@
+//! T1 — Table 1 API conformance over real HTTP.
+//!
+//! Verifies the exact public contract of the paper's Table 1: methods,
+//! request paths, token auth in the path, body schemas, and the error
+//! envelope, plus the web data APIs of §3.
+
+use hopaas::coordinator::service::{HopaasConfig, HopaasServer};
+use hopaas::http::Client;
+use hopaas::json::{parse, Value};
+
+fn server(auth: bool) -> HopaasServer {
+    HopaasServer::start(
+        "127.0.0.1:0",
+        HopaasConfig { auth_required: auth, ..Default::default() },
+    )
+    .unwrap()
+}
+
+fn ask_body() -> Value {
+    parse(
+        r#"{
+        "study_name": "conformance",
+        "properties": {
+            "lr": {"low": 1e-5, "high": 1e-1, "type": "loguniform"},
+            "layers": {"low": 1, "high": 4, "type": "int"},
+            "opt": ["adam", "rmsprop"]
+        },
+        "direction": "minimize",
+        "sampler": {"name": "tpe"},
+        "pruner": {"name": "median", "min_trials": 2},
+        "node": "conformance-node"
+    }"#,
+    )
+    .unwrap()
+}
+
+#[test]
+fn table1_version_is_get() {
+    let s = server(false);
+    let mut c = Client::connect(s.addr()).unwrap();
+    let r = c.get("/api/version").unwrap();
+    assert_eq!(r.status, 200);
+    let v = r.json_body().unwrap();
+    assert!(v.get("version").as_str().is_some());
+    // POST on version is 405.
+    assert_eq!(c.post("/api/version", b"{}").unwrap().status, 405);
+    s.stop();
+}
+
+#[test]
+fn table1_ask_is_post_with_token_path() {
+    let s = server(true);
+    let tok = s.bootstrap_token.clone();
+    let mut c = Client::connect(s.addr()).unwrap();
+    // GET is 405 on a valid path shape.
+    assert_eq!(c.get(&format!("/api/ask/{tok}")).unwrap().status, 405);
+    // POST with valid token returns the paper's contract: trial id +
+    // hyperparameters to test.
+    let r = c.post_json(&format!("/api/ask/{tok}"), &ask_body()).unwrap();
+    assert_eq!(r.status, 200);
+    let v = r.json_body().unwrap();
+    assert!(v.get("trial_id").as_u64().is_some());
+    let params = v.get("params");
+    let lr = params.get("lr").as_f64().unwrap();
+    assert!((1e-5..=1e-1).contains(&lr));
+    let layers = params.get("layers").as_i64().unwrap();
+    assert!((1..=4).contains(&layers));
+    let opt = params.get("opt").as_str().unwrap();
+    assert!(opt == "adam" || opt == "rmsprop");
+    s.stop();
+}
+
+#[test]
+fn table1_tell_finalizes() {
+    let s = server(true);
+    let tok = s.bootstrap_token.clone();
+    let mut c = Client::connect(s.addr()).unwrap();
+    let ask = c
+        .post_json(&format!("/api/ask/{tok}"), &ask_body())
+        .unwrap()
+        .json_body()
+        .unwrap();
+    let id = ask.get("trial_id").as_u64().unwrap();
+    let mut body = Value::obj();
+    body.set("trial_id", id).set("value", 0.25);
+    let r = c
+        .post_json(&format!("/api/tell/{tok}"), &Value::Obj(body))
+        .unwrap();
+    assert_eq!(r.status, 200);
+    let v = r.json_body().unwrap();
+    assert_eq!(v.get("state").as_str(), Some("completed"));
+    assert_eq!(v.get("is_best").as_bool(), Some(true));
+    s.stop();
+}
+
+#[test]
+fn table1_should_prune_boolean_response() {
+    let s = server(true);
+    let tok = s.bootstrap_token.clone();
+    let mut c = Client::connect(s.addr()).unwrap();
+    // Build history of 2 completed trials so the median pruner engages.
+    for _ in 0..2 {
+        let ask = c
+            .post_json(&format!("/api/ask/{tok}"), &ask_body())
+            .unwrap()
+            .json_body()
+            .unwrap();
+        let id = ask.get("trial_id").as_u64().unwrap();
+        let mut rep = Value::obj();
+        rep.set("trial_id", id).set("step", 1u64).set("value", 1.0);
+        c.post_json(&format!("/api/should_prune/{tok}"), &Value::Obj(rep))
+            .unwrap();
+        let mut body = Value::obj();
+        body.set("trial_id", id).set("value", 1.0);
+        c.post_json(&format!("/api/tell/{tok}"), &Value::Obj(body))
+            .unwrap();
+    }
+    // A terrible trial must receive should_prune=true...
+    let ask = c
+        .post_json(&format!("/api/ask/{tok}"), &ask_body())
+        .unwrap()
+        .json_body()
+        .unwrap();
+    let id = ask.get("trial_id").as_u64().unwrap();
+    let mut rep = Value::obj();
+    rep.set("trial_id", id).set("step", 1u64).set("value", 50.0);
+    let v = c
+        .post_json(&format!("/api/should_prune/{tok}"), &Value::Obj(rep))
+        .unwrap()
+        .json_body()
+        .unwrap();
+    assert_eq!(v.get("should_prune").as_bool(), Some(true));
+    // ...and a good one should_prune=false.
+    let ask = c
+        .post_json(&format!("/api/ask/{tok}"), &ask_body())
+        .unwrap()
+        .json_body()
+        .unwrap();
+    let id = ask.get("trial_id").as_u64().unwrap();
+    let mut rep = Value::obj();
+    rep.set("trial_id", id).set("step", 1u64).set("value", 0.1);
+    let v = c
+        .post_json(&format!("/api/should_prune/{tok}"), &Value::Obj(rep))
+        .unwrap()
+        .json_body()
+        .unwrap();
+    assert_eq!(v.get("should_prune").as_bool(), Some(false));
+    s.stop();
+}
+
+#[test]
+fn auth_all_three_apis_reject_bad_tokens() {
+    let s = server(true);
+    let mut c = Client::connect(s.addr()).unwrap();
+    for path in ["/api/ask/bad", "/api/tell/bad", "/api/should_prune/bad"] {
+        let r = c.post_json(path, &ask_body()).unwrap();
+        assert_eq!(r.status, 401, "{path}");
+        let v = r.json_body().unwrap();
+        assert!(v.get("detail").as_str().is_some(), "error envelope");
+    }
+    s.stop();
+}
+
+#[test]
+fn token_expiry_honored() {
+    let s = server(true);
+    let mut c = Client::connect(s.addr()).unwrap();
+    // Issue a token that expires immediately.
+    let mut req = Value::obj();
+    req.set("user", "short").set("ttl", 0.0);
+    let tok = c
+        .post_json("/api/token", &Value::Obj(req))
+        .unwrap()
+        .json_body()
+        .unwrap();
+    let tok = tok.get("token").as_str().unwrap().to_string();
+    std::thread::sleep(std::time::Duration::from_millis(30));
+    let r = c.post_json(&format!("/api/ask/{tok}"), &ask_body()).unwrap();
+    assert_eq!(r.status, 401);
+    s.stop();
+}
+
+#[test]
+fn same_definition_joins_same_study_different_definition_does_not() {
+    let s = server(false);
+    let mut c = Client::connect(s.addr()).unwrap();
+    let a1 = c.post_json("/api/ask/x", &ask_body()).unwrap().json_body().unwrap();
+    let a2 = c.post_json("/api/ask/x", &ask_body()).unwrap().json_body().unwrap();
+    assert_eq!(
+        a1.get("study_id").as_u64(),
+        a2.get("study_id").as_u64(),
+        "identical definitions → same study"
+    );
+    assert_eq!(a1.get("study_key").as_str(), a2.get("study_key").as_str());
+    let mut other = ask_body();
+    if let Value::Obj(o) = &mut other {
+        o.set("direction", "maximize");
+    }
+    let a3 = c.post_json("/api/ask/x", &other).unwrap().json_body().unwrap();
+    assert_ne!(a1.get("study_id").as_u64(), a3.get("study_id").as_u64());
+    s.stop();
+}
+
+#[test]
+fn concurrent_asks_get_unique_trials() {
+    let s = server(false);
+    let addr = s.addr();
+    let handles: Vec<_> = (0..8)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let mut c = Client::connect(addr).unwrap();
+                (0..10)
+                    .map(|_| {
+                        c.post_json("/api/ask/x", &ask_body())
+                            .unwrap()
+                            .json_body()
+                            .unwrap()
+                            .get("trial_id")
+                            .as_u64()
+                            .unwrap()
+                    })
+                    .collect::<Vec<u64>>()
+            })
+        })
+        .collect();
+    let mut all: Vec<u64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    let n = all.len();
+    all.sort();
+    all.dedup();
+    assert_eq!(all.len(), n, "all trial ids unique under concurrency");
+    s.stop();
+}
+
+#[test]
+fn web_data_apis_schema() {
+    let s = server(false);
+    let mut c = Client::connect(s.addr()).unwrap();
+    let ask = c.post_json("/api/ask/x", &ask_body()).unwrap().json_body().unwrap();
+    let sid = ask.get("study_id").as_u64().unwrap();
+
+    let study = c.get(&format!("/api/studies/{sid}")).unwrap().json_body().unwrap();
+    for key in [
+        "id", "key", "name", "direction", "sampler", "properties",
+        "n_trials", "n_running", "n_completed", "n_pruned", "n_failed",
+    ] {
+        assert!(!study.get(key).is_null() || key == "best_value", "missing {key}");
+    }
+    let trials = c
+        .get(&format!("/api/studies/{sid}/trials"))
+        .unwrap()
+        .json_body()
+        .unwrap();
+    let t = trials.at(0);
+    assert_eq!(t.get("state").as_str(), Some("running"));
+    assert_eq!(t.get("node").as_str(), Some("conformance-node"));
+    // Prometheus metrics.
+    let m = c.get("/metrics").unwrap();
+    assert!(String::from_utf8(m.body).unwrap().contains("hopaas_ask_total"));
+    s.stop();
+}

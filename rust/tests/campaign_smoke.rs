@@ -1,0 +1,146 @@
+//! E3 smoke — a >20-node multi-site campaign over real HTTP, checking
+//! the §4 coordination claims end to end: concurrent diverse nodes, one
+//! shared study, optimizer progress, dashboard series consistency.
+
+use hopaas::coordinator::service::{HopaasConfig, HopaasServer};
+use hopaas::objectives::Objective;
+use hopaas::worker::{Campaign, HopaasClient};
+
+#[test]
+fn twenty_four_nodes_share_one_study() {
+    let server = HopaasServer::start(
+        "127.0.0.1:0",
+        HopaasConfig { auth_required: false, ..Default::default() },
+    )
+    .unwrap();
+
+    let mut campaign = Campaign::new(server.addr(), "x".into(), Objective::Sphere);
+    campaign.n_nodes = 24; // "more than twenty concurrent and diverse nodes"
+    campaign.max_trials = 150;
+    campaign.steps_per_trial = 8;
+    campaign.step_cost_us = 100;
+    let report = campaign.run().unwrap();
+
+    // One study only, despite 24 independent clients defining it.
+    let studies = server.engine.studies_json();
+    assert_eq!(studies.as_arr().unwrap().len(), 1, "all asks joined one study");
+    let sid = studies.at(0).get("id").as_u64().unwrap();
+
+    // Server-side and client-side accounting agree.
+    let n_completed = studies.at(0).get("n_completed").as_i64().unwrap() as u64;
+    assert_eq!(n_completed, report.completed);
+    let n_pruned = studies.at(0).get("n_pruned").as_i64().unwrap() as u64;
+    assert_eq!(n_pruned, report.pruned);
+
+    // All four site profiles contributed completions.
+    let sites: Vec<&str> = report.by_site.iter().map(|(s, _)| s.as_str()).collect();
+    for site in ["marconi100", "infn-cloud", "private", "commercial-spot"] {
+        assert!(sites.contains(&site), "missing site {site}");
+    }
+
+    // TPE made progress: best well below the random-expectation (~8 for
+    // a 4-D sphere over [-5,5]^4 ≈ E[Σx²] = 4·25/3 ≈ 33; best of 100+
+    // trials should be far smaller).
+    let best = report.best.unwrap();
+    assert!(best < 15.0, "best={best}");
+
+    // Dashboard series: every trial's points are step-monotone.
+    let series = server.engine.series_json(sid).unwrap();
+    for t in series.as_arr().unwrap() {
+        let pts = t.get("points").as_arr().unwrap();
+        for w in pts.windows(2) {
+            assert!(
+                w[0].at(0).as_f64().unwrap() < w[1].at(0).as_f64().unwrap(),
+                "steps strictly increasing"
+            );
+        }
+    }
+    server.stop();
+}
+
+#[test]
+fn dozens_of_studies_concurrently() {
+    let server = HopaasServer::start(
+        "127.0.0.1:0",
+        HopaasConfig { auth_required: false, ..Default::default() },
+    )
+    .unwrap();
+    let addr = server.addr();
+
+    // 12 distinct studies (name differs) driven by 4 nodes each, all at
+    // once — 48 concurrent clients against one server.
+    let handles: Vec<_> = (0..12)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let mut c = Campaign::new(addr, "x".into(), Objective::Branin);
+                c.study_name = format!("multi-{i}");
+                c.n_nodes = 4;
+                c.max_trials = 16;
+                c.steps_per_trial = 4;
+                c.step_cost_us = 50;
+                c.seed = i as u64;
+                c.run().unwrap()
+            })
+        })
+        .collect();
+    for h in handles {
+        let r = h.join().unwrap();
+        assert!(r.completed + r.pruned + r.preempted >= 12);
+    }
+    assert_eq!(server.engine.n_studies(), 12);
+    server.stop();
+}
+
+#[test]
+fn samplers_all_work_over_http() {
+    let server = HopaasServer::start(
+        "127.0.0.1:0",
+        HopaasConfig { auth_required: false, ..Default::default() },
+    )
+    .unwrap();
+    for sampler in ["random", "grid", "qmc", "tpe", "gp", "cmaes"] {
+        let mut campaign = Campaign::new(server.addr(), "x".into(), Objective::Branin);
+        campaign.study_name = format!("sampler-{sampler}");
+        campaign.sampler = match sampler {
+            "random" => "random",
+            "grid" => "grid",
+            "qmc" => "qmc",
+            "gp" => "gp",
+            "cmaes" => "cmaes",
+            _ => "tpe",
+        };
+        campaign.pruner = None;
+        campaign.n_nodes = 4;
+        campaign.max_trials = 24;
+        campaign.steps_per_trial = 2;
+        campaign.step_cost_us = 0;
+        let report = campaign.run().unwrap();
+        assert!(
+            report.completed >= 20,
+            "{sampler}: completed {}",
+            report.completed
+        );
+        assert!(report.best.unwrap().is_finite(), "{sampler}");
+    }
+    server.stop();
+}
+
+#[test]
+fn unknown_sampler_is_client_error_not_crash() {
+    let server = HopaasServer::start(
+        "127.0.0.1:0",
+        HopaasConfig { auth_required: false, ..Default::default() },
+    )
+    .unwrap();
+    let mut c = HopaasClient::connect(server.addr(), "x".into()).unwrap();
+    let spec = hopaas::worker::StudySpec::new("bad")
+        .uniform("x", 0.0, 1.0)
+        .sampler("not-a-sampler");
+    match c.ask(&spec) {
+        Err(hopaas::worker::WorkerError::Api { status: 422, .. }) => {}
+        other => panic!("expected 422, got {other:?}"),
+    }
+    // Server still healthy.
+    assert!(c.version().is_ok());
+    server.stop();
+}

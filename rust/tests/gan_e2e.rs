@@ -1,0 +1,102 @@
+//! E6 smoke — the full three-layer stack in one test: HOPAAS over HTTP
+//! orchestrating real PJRT GAN trials (Pallas kernels inside the HLO).
+//! Skipped when `make artifacts` has not run.
+
+use hopaas::coordinator::service::{HopaasConfig, HopaasServer};
+use hopaas::gan::{GanHyper, GanTrainer};
+use hopaas::json::Value;
+use hopaas::runtime::Runtime;
+use hopaas::worker::{HopaasClient, StudySpec};
+use std::sync::Arc;
+
+fn runtime() -> Option<Arc<Runtime>> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Arc::new(Runtime::open(dir).unwrap()))
+}
+
+#[test]
+fn hopaas_drives_real_gan_trials() {
+    let Some(runtime) = runtime() else { return };
+    let server = HopaasServer::start(
+        "127.0.0.1:0",
+        HopaasConfig { auth_required: false, ..Default::default() },
+    )
+    .unwrap();
+    let mut client = HopaasClient::connect(server.addr(), "x".into()).unwrap();
+
+    let spec = StudySpec::new("gan-e2e")
+        .categorical("width", vec![Value::Num(32.0)])
+        .categorical("depth", vec![Value::Num(2.0)])
+        .loguniform("lr_g", 5e-4, 5e-3)
+        .loguniform("lr_d", 5e-4, 5e-3)
+        .uniform("leak", 0.05, 0.3)
+        .sampler("tpe");
+
+    let mut values = Vec::new();
+    for _ in 0..3 {
+        let trial = client.ask(&spec).unwrap();
+        let p = &trial.params;
+        let hp = GanHyper {
+            lr_g: p.get("lr_g").as_f64().unwrap() as f32,
+            lr_d: p.get("lr_d").as_f64().unwrap() as f32,
+            beta1: 0.5,
+            beta2: 0.9,
+            leak: p.get("leak").as_f64().unwrap() as f32,
+        };
+        let mut trainer = GanTrainer::new(runtime.clone(), 32, 2, trial.trial_id).unwrap();
+        trainer.train(60, &hp).unwrap();
+        let w1 = trainer.evaluate_with_leak(hp.leak).unwrap() as f64;
+        assert!(w1.is_finite() && w1 > 0.0);
+        client.tell(&trial, w1).unwrap();
+        values.push(w1);
+    }
+
+    // Server recorded all three with matching best.
+    let studies = server.engine.studies_json();
+    assert_eq!(studies.at(0).get("n_completed").as_i64(), Some(3));
+    let best = studies.at(0).get("best_value").as_f64().unwrap();
+    let min = values.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!((best - min).abs() < 1e-12);
+    // Training at reasonable hyperparameters beats an untrained model.
+    let mut untrained = GanTrainer::new(runtime, 32, 2, 12345).unwrap();
+    let untrained_w1 = untrained.evaluate().unwrap() as f64;
+    assert!(
+        min < untrained_w1,
+        "trained {min} should beat untrained {untrained_w1}"
+    );
+    server.stop();
+}
+
+#[test]
+fn pruning_a_gan_trial_mid_training_works() {
+    let Some(runtime) = runtime() else { return };
+    let server = HopaasServer::start(
+        "127.0.0.1:0",
+        HopaasConfig { auth_required: false, ..Default::default() },
+    )
+    .unwrap();
+    let mut client = HopaasClient::connect(server.addr(), "x".into()).unwrap();
+    let spec = StudySpec::new("gan-prune")
+        .uniform("leak", 0.05, 0.3)
+        .pruner_json({
+            let mut p = Value::obj();
+            p.set("name", "threshold").set("upper", 0.2);
+            Value::Obj(p)
+        });
+
+    let trial = client.ask(&spec).unwrap();
+    let mut trainer = GanTrainer::new(runtime, 32, 2, trial.trial_id).unwrap();
+    trainer.train(2, &GanHyper::default()).unwrap();
+    let w1 = trainer.evaluate().unwrap() as f64;
+    // 2 steps in, W1 is still above the tight threshold → pruner fires.
+    assert!(w1 > 0.2, "near-untrained W1 should exceed 0.2, got {w1}");
+    let pruned = client.should_prune(&trial, 1, w1).unwrap();
+    assert!(pruned);
+    let studies = server.engine.studies_json();
+    assert_eq!(studies.at(0).get("n_pruned").as_i64(), Some(1));
+    server.stop();
+}

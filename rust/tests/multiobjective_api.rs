@@ -1,0 +1,144 @@
+//! E9 integration — the multi-objective protocol over real HTTP:
+//! array `direction`, vector `tell`, Pareto endpoint, recovery.
+
+use hopaas::coordinator::service::{HopaasConfig, HopaasServer};
+use hopaas::objectives::multi::MoProblem;
+use hopaas::worker::{HopaasClient, StudySpec, WorkerError};
+
+fn server() -> HopaasServer {
+    HopaasServer::start(
+        "127.0.0.1:0",
+        HopaasConfig { auth_required: false, ..Default::default() },
+    )
+    .unwrap()
+}
+
+fn mo_spec(name: &str) -> StudySpec {
+    StudySpec::new(name)
+        .properties_json(MoProblem::Zdt1.properties())
+        .directions(&["minimize", "minimize"])
+        .sampler("nsga2")
+}
+
+#[test]
+fn mo_workflow_over_http() {
+    let s = server();
+    let mut c = HopaasClient::connect(s.addr(), "x".into()).unwrap();
+    let spec = mo_spec("mo-wf");
+    let mut study_id = 0;
+    for _ in 0..20 {
+        let t = c.ask(&spec).unwrap();
+        study_id = t.study_id;
+        let [f1, f2] = MoProblem::Zdt1.eval_params(&t.params);
+        c.tell_values(&t, &[f1, f2]).unwrap();
+    }
+    // Pareto endpoint returns a mutually non-dominated set.
+    let front = c.pareto(study_id).unwrap();
+    let pts: Vec<(f64, f64)> = front
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| {
+            let v = t.get("values");
+            (v.at(0).as_f64().unwrap(), v.at(1).as_f64().unwrap())
+        })
+        .collect();
+    assert!(!pts.is_empty());
+    for (i, a) in pts.iter().enumerate() {
+        for (j, b) in pts.iter().enumerate() {
+            if i != j {
+                let dominates = a.0 <= b.0 && a.1 <= b.1 && (a.0 < b.0 || a.1 < b.1);
+                assert!(!dominates, "front not mutually non-dominated: {a:?} vs {b:?}");
+            }
+        }
+    }
+    // Summary carries MO fields.
+    let study = s.engine.study_json(study_id).unwrap();
+    assert_eq!(study.get("directions").at(0).as_str(), Some("minimize"));
+    assert_eq!(study.get("pareto_size").as_u64(), Some(pts.len() as u64));
+    s.stop();
+}
+
+#[test]
+fn mo_arity_and_type_errors() {
+    let s = server();
+    let mut c = HopaasClient::connect(s.addr(), "x".into()).unwrap();
+    let t = c.ask(&mo_spec("mo-err")).unwrap();
+    // Wrong arity -> 422.
+    match c.tell_values(&t, &[1.0]) {
+        Err(WorkerError::Api { status: 422, .. }) => {}
+        other => panic!("expected 422, got {other:?}"),
+    }
+    // Scalar tell into an MO study is tolerated (completes with a single
+    // value) or rejected — either way it must not wedge the server.
+    let _ = c.tell(&t, 1.0);
+    // values into a single-objective study -> 422.
+    let so = StudySpec::new("so").uniform("x", 0.0, 1.0).sampler("random");
+    let t2 = c.ask(&so).unwrap();
+    match c.tell_values(&t2, &[1.0, 2.0]) {
+        Err(WorkerError::Api { status: 422, .. }) => {}
+        other => panic!("expected 422, got {other:?}"),
+    }
+    // Unsupported sampler for MO -> 422.
+    let bad = StudySpec::new("mo-bad")
+        .properties_json(MoProblem::Zdt1.properties())
+        .directions(&["minimize", "minimize"])
+        .sampler("gp");
+    match c.ask(&bad) {
+        Err(WorkerError::Api { status: 422, .. }) => {}
+        other => panic!("expected 422, got {other:?}"),
+    }
+    s.stop();
+}
+
+#[test]
+fn mo_survives_restart() {
+    let dir = std::env::temp_dir().join(format!("hopaas-mo-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let config = || HopaasConfig {
+        auth_required: false,
+        data_dir: Some(dir.clone()),
+        ..Default::default()
+    };
+    let n_front;
+    let study_id;
+    {
+        let s = HopaasServer::start("127.0.0.1:0", config()).unwrap();
+        let mut c = HopaasClient::connect(s.addr(), "x".into()).unwrap();
+        let spec = mo_spec("mo-dur");
+        let mut sid = 0;
+        for _ in 0..12 {
+            let t = c.ask(&spec).unwrap();
+            sid = t.study_id;
+            let [f1, f2] = MoProblem::Zdt1.eval_params(&t.params);
+            c.tell_values(&t, &[f1, f2]).unwrap();
+        }
+        study_id = sid;
+        n_front = s.engine.pareto_json(sid).unwrap().as_arr().unwrap().len();
+        assert!(n_front > 0);
+        s.stop();
+    }
+    let s = HopaasServer::start("127.0.0.1:0", config()).unwrap();
+    let recovered = s.engine.pareto_json(study_id).unwrap();
+    assert_eq!(recovered.as_arr().unwrap().len(), n_front, "pareto front recovered");
+    let study = s.engine.study_json(study_id).unwrap();
+    assert_eq!(study.get("n_completed").as_i64(), Some(12));
+    s.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn mo_and_so_studies_coexist() {
+    let s = server();
+    let mut c = HopaasClient::connect(s.addr(), "x".into()).unwrap();
+    let mo = c.ask(&mo_spec("coexist-mo")).unwrap();
+    let so = c
+        .ask(&StudySpec::new("coexist-so").uniform("x", 0.0, 1.0).sampler("tpe"))
+        .unwrap();
+    assert_ne!(mo.study_id, so.study_id);
+    c.tell_values(&mo, &[0.5, 0.5]).unwrap();
+    c.tell(&so, 0.1).unwrap();
+    let studies = c.studies().unwrap();
+    assert_eq!(studies.as_arr().unwrap().len(), 2);
+    s.stop();
+}
