@@ -1,0 +1,111 @@
+//! Shard-contention benchmark: multi-threaded, multi-study ask/tell
+//! throughput at 1 / 4 / 16 shards.
+//!
+//! The seed engine serialized every mutation on one global mutex; the
+//! sharded engine routes each study to `fnv1a(key) % N` shards with
+//! independent locks. With T threads driving T distinct studies, the
+//! 1-shard row is the single-lock baseline and the speedup at ≥4
+//! shards is the contention the refactor removed. TPE is used so each
+//! ask carries a real surrogate refit plus a lock-held history
+//! snapshot — the regime of a §4 campaign in progress.
+//!
+//! Run: `cargo bench --bench contention`
+
+use hopaas::bench::{fmt_duration, Table};
+use hopaas::coordinator::engine::{Engine, EngineConfig};
+use hopaas::json::{parse, Value};
+use std::sync::Arc;
+
+const N_THREADS: usize = 8;
+const TRIALS_PER_THREAD: usize = 200;
+/// Pre-seeded history per study, so TPE is past its startup phase and
+/// every ask pays for a KDE refit over real observations.
+const WARM_TRIALS: usize = 64;
+
+fn ask_body(study: usize) -> Value {
+    parse(&format!(
+        r#"{{
+        "study_name": "contention-{study}",
+        "properties": {{
+            "lr": {{"low": 1e-5, "high": 1e-1, "type": "loguniform"}},
+            "x": {{"low": 0.0, "high": 1.0}},
+            "y": {{"low": 0.0, "high": 1.0}}
+        }},
+        "direction": "minimize",
+        "sampler": {{"name": "tpe"}}
+    }}"#
+    ))
+    .unwrap()
+}
+
+fn objective(study: usize, number: u64) -> f64 {
+    ((study as f64 + 1.0) * 0.61 + number as f64 * 0.17).sin().abs()
+}
+
+/// Run the workload on an engine with `n_shards`; returns aggregate
+/// (ask+tell) operations per second.
+fn run(n_shards: usize) -> f64 {
+    let engine = Arc::new(Engine::in_memory(EngineConfig {
+        n_shards,
+        ..Default::default()
+    }));
+    // Warm every study sequentially (identical across shard counts).
+    for t in 0..N_THREADS {
+        let body = ask_body(t);
+        for _ in 0..WARM_TRIALS {
+            let r = engine.ask(&body).unwrap();
+            engine.tell(r.trial_id, objective(t, r.trial_number)).unwrap();
+        }
+    }
+
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..N_THREADS)
+        .map(|t| {
+            let engine = engine.clone();
+            std::thread::spawn(move || {
+                let body = ask_body(t);
+                for _ in 0..TRIALS_PER_THREAD {
+                    let r = engine.ask(&body).unwrap();
+                    engine
+                        .tell(r.trial_id, objective(t, r.trial_number))
+                        .unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let ops = (N_THREADS * TRIALS_PER_THREAD * 2) as f64;
+    ops / wall
+}
+
+fn main() {
+    println!(
+        "\ncontention: {N_THREADS} threads × {N_THREADS} studies × {TRIALS_PER_THREAD} trials (ask+tell, TPE, warm history {WARM_TRIALS})\n"
+    );
+    let table = Table::new(
+        &["shards", "ops/s", "mean op", "speedup vs 1 shard"],
+        &[8, 12, 12, 20],
+    );
+    let mut baseline = 0.0;
+    let mut best_speedup: f64 = 0.0;
+    for &shards in &[1usize, 4, 16] {
+        let ops = run(shards);
+        if shards == 1 {
+            baseline = ops;
+        }
+        let speedup = ops / baseline;
+        best_speedup = best_speedup.max(speedup);
+        table.row(&[
+            &shards.to_string(),
+            &format!("{ops:.0}"),
+            &fmt_duration(1.0 / ops),
+            &format!("{speedup:.2}x"),
+        ]);
+    }
+    println!(
+        "\nmax multi-study speedup over the single-lock baseline: {best_speedup:.2}x"
+    );
+}

@@ -97,6 +97,8 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
     let mut compact_after = 50_000u64;
     let mut reap_after = 3600.0f64;
     let mut seed = 0x4f50_5441_4153u64;
+    let mut n_shards = 8u64;
+    let mut wal_batch_max = 256u64;
 
     // Layer 1: config file.
     if let Some(path) = args.get("config") {
@@ -127,6 +129,12 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
         if let Some(x) = v.get("seed").as_u64() {
             seed = x;
         }
+        if let Some(x) = v.get("shards").as_u64() {
+            n_shards = x;
+        }
+        if let Some(x) = v.get("wal_batch").as_u64() {
+            wal_batch_max = x;
+        }
     }
 
     // Layer 2: CLI overrides.
@@ -146,6 +154,8 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
     compact_after = args.get_u64("compact-after", compact_after);
     reap_after = args.get_f64("reap-after", reap_after);
     seed = args.get_u64("seed", seed);
+    n_shards = args.get_u64("shards", n_shards).max(1);
+    wal_batch_max = args.get_u64("wal-batch", wal_batch_max).max(1);
 
     let config = HopaasConfig {
         engine: EngineConfig {
@@ -153,6 +163,8 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
             compact_after,
             reap_after: if reap_after > 0.0 { Some(reap_after) } else { None },
             history_snapshot: args.get_u64("history-snapshot", 2048) as usize,
+            n_shards: n_shards as usize,
+            wal_batch_max: wal_batch_max as usize,
         },
         http: ServerConfig {
             workers: workers as usize,
@@ -216,6 +228,23 @@ mod tests {
         assert_eq!(cfg.http.workers, 16, "CLI overrides file");
         assert!(!cfg.auth_required);
         assert_eq!(cfg.engine.reap_after, Some(10.0));
+    }
+
+    #[test]
+    fn shard_flags_layer_into_engine_config() {
+        let a = args("serve");
+        let (_, cfg) = server_config(&a).unwrap();
+        assert_eq!(cfg.engine.n_shards, 8);
+        assert_eq!(cfg.engine.wal_batch_max, 256);
+        let a = args("serve --shards 4 --wal-batch 64");
+        let (_, cfg) = server_config(&a).unwrap();
+        assert_eq!(cfg.engine.n_shards, 4);
+        assert_eq!(cfg.engine.wal_batch_max, 64);
+        // Degenerate values clamp to 1 rather than panicking the engine.
+        let a = args("serve --shards 0 --wal-batch 0");
+        let (_, cfg) = server_config(&a).unwrap();
+        assert_eq!(cfg.engine.n_shards, 1);
+        assert_eq!(cfg.engine.wal_batch_max, 1);
     }
 
     #[test]

@@ -1,28 +1,48 @@
 //! The coordination engine: the transactional core behind the REST APIs.
 //!
-//! The engine owns the study registry and applies the three HOPAAS
-//! mutations (`ask`, `tell`, `should_prune`) under one lock, persisting
-//! each accepted mutation to the WAL *before* acknowledging it — so a
-//! crash never loses a told trial (paper's campaigns run for days on
-//! opportunistic resources; E7 tests this).
+//! ## Sharded layout
+//!
+//! The seed engine funneled every study, trial and WAL append through a
+//! single global `Mutex<Inner>`, so multi-study, multi-site campaigns —
+//! the whole point of the paper's "scalable set of Uvicorn instances" —
+//! contended on one lock and one fsync. The engine is now three layers:
+//!
+//! * **registry** (`registry.rs`): a `RwLock` study directory for the
+//!   cross-study read APIs plus a lock-striped `trial_id → shard`
+//!   router. Placement is stable: `shard = fnv1a(study_key) % N`.
+//! * **shards**: N independent [`Shard`]s, each owning its studies'
+//!   trials, sampler history and `last_seen` reaping state under its own
+//!   lock. Asks/tells on different studies never contend.
+//! * **group-commit WAL** (`store::GroupWal`): mutations from all shards
+//!   are appended in arrival order by one writer thread, fsynced once
+//!   per batch, and only then acknowledged — "acknowledged ⇒ durable"
+//!   is preserved (E7 tests it) while N concurrent fsyncs collapse into
+//!   one.
+//!
+//! Lock ordering: shard → {directory, router stripe}; the directory and
+//! router are leaf locks, readers copy out of them before taking a shard
+//! lock, and no path ever holds two shard locks except compaction, which
+//! takes all of them in index order.
 //!
 //! Determinism: sampler draws are seeded from
-//! `mix(study_key_hash, trial_number)`, so recovery replay or a second
-//! server instance reading the same WAL produces the same suggestion
-//! stream — the property PostgreSQL gives the paper's "scalable set of
-//! Uvicorn instances".
+//! `mix(mix(seed, fnv1a(study_key)), trial_number)` — a pure function of
+//! the study definition, untouched by sharding — so recovery replay, a
+//! second server instance, or the same campaign on a different shard
+//! count produces the same suggestion stream (the property PostgreSQL
+//! gives the paper's backends).
 
+use super::registry::{fnv1a, DirEntry, Directory, TrialRouter};
 use super::samplers::{make_sampler, Obs};
-use super::space::assignment_to_json;
+use super::space::{assignment_to_json, Assignment};
 use super::study::{parse_ask_body, Study, StudyDef};
 use super::trial::{Trial, TrialState};
 use super::{metrics::Metrics, pruners::make_pruner};
 use crate::json::Value;
 use crate::rng::{mix, Rng};
-use crate::store::{Record, Storage};
+use crate::store::{GroupWal, GroupWalConfig, Record, Storage};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock};
 use std::time::Instant;
 
 /// API-level error → HTTP status mapping happens in the service layer.
@@ -54,6 +74,13 @@ pub struct EngineConfig {
     /// cloning the full multi-thousand-trial history per ask is pure
     /// waste.
     pub history_snapshot: usize,
+    /// Number of engine shards. Studies hash-place onto shards, so
+    /// mutations on different studies contend only within a shard.
+    /// 1 reproduces the seed's single-lock behavior exactly.
+    pub n_shards: usize,
+    /// Largest number of WAL records flushed under one fsync by the
+    /// group-commit writer.
+    pub wal_batch_max: usize,
 }
 
 impl Default for EngineConfig {
@@ -63,6 +90,8 @@ impl Default for EngineConfig {
             compact_after: 50_000,
             reap_after: Some(3600.0),
             history_snapshot: 2048,
+            n_shards: 8,
+            wal_batch_max: 256,
         }
     }
 }
@@ -77,22 +106,54 @@ pub struct AskReply {
     pub params: Value,
 }
 
-struct Inner {
+/// State owned by one shard, guarded by the shard's lock.
+struct ShardState {
     studies: Vec<Study>,
+    /// study key → slot, for the keys this shard owns.
     by_key: HashMap<String, usize>,
-    /// trial id → (study index, trial index)
+    /// trial id → (slot, trial index) for trials on this shard.
     trial_index: HashMap<u64, (usize, usize)>,
-    next_trial_id: u64,
-    storage: Option<Storage>,
-    wal_records: u64,
     /// trial id → last report wall time (not persisted; reaping is a
-    /// liveness heuristic, not state).
+    /// liveness heuristic, not state). Entries are removed when the
+    /// trial reaches a terminal state, so long campaigns don't leak.
     last_seen: HashMap<u64, f64>,
+}
+
+struct Shard {
+    state: Mutex<ShardState>,
+}
+
+impl Shard {
+    fn new() -> Shard {
+        Shard {
+            state: Mutex::new(ShardState {
+                studies: Vec::new(),
+                by_key: HashMap::new(),
+                trial_index: HashMap::new(),
+                last_seen: HashMap::new(),
+            }),
+        }
+    }
 }
 
 /// The coordination engine. Thread-safe; the HTTP layer shares it.
 pub struct Engine {
-    inner: Mutex<Inner>,
+    shards: Vec<Shard>,
+    directory: RwLock<Directory>,
+    router: TrialRouter,
+    next_trial_id: AtomicU64,
+    next_study_id: AtomicU64,
+    /// Group-commit writer; `None` for in-memory engines.
+    wal: Option<GroupWal>,
+    /// Records appended since the last compaction (compaction policy).
+    wal_records: AtomicU64,
+    /// `wal_records` threshold at which auto-compaction next fires.
+    /// Normally `config.compact_after`; raised after a failed attempt so
+    /// a persistently failing snapshot (e.g. disk full) doesn't turn
+    /// every mutation into a stop-the-world retry.
+    compact_threshold: AtomicU64,
+    /// Guard against concurrent compaction stampedes.
+    compacting: AtomicBool,
     config: EngineConfig,
     start: Instant,
     pub metrics: Arc<Metrics>,
@@ -103,41 +164,48 @@ pub struct Engine {
 impl Engine {
     /// In-memory engine (tests, benches).
     pub fn in_memory(config: EngineConfig) -> Engine {
+        let n = config.n_shards.max(1);
         Engine {
-            inner: Mutex::new(Inner {
-                studies: Vec::new(),
-                by_key: HashMap::new(),
-                trial_index: HashMap::new(),
-                next_trial_id: 1,
-                storage: None,
-                wal_records: 0,
-                last_seen: HashMap::new(),
-            }),
+            shards: (0..n).map(|_| Shard::new()).collect(),
+            directory: RwLock::new(Directory::default()),
+            router: TrialRouter::default(),
+            next_trial_id: AtomicU64::new(1),
+            next_study_id: AtomicU64::new(1),
+            wal: None,
+            wal_records: AtomicU64::new(0),
+            compact_threshold: AtomicU64::new(config.compact_after),
+            compacting: AtomicBool::new(false),
             config,
             start: Instant::now(),
-            metrics: Arc::new(Metrics::default()),
+            metrics: Arc::new(Metrics::with_shards(n)),
             asks: AtomicU64::new(0),
         }
     }
 
-    /// Durable engine: replays snapshot + WAL from `dir`.
+    /// Durable engine: replays snapshot + WAL from `dir`, then starts
+    /// the group-commit writer over the same storage.
     pub fn open(dir: impl AsRef<std::path::Path>, config: EngineConfig) -> Result<Engine, ApiError> {
         let mut storage =
             Storage::open(dir).map_err(|e| ApiError::Storage(e.to_string()))?;
         let (snapshot, events) =
             storage.load().map_err(|e| ApiError::Storage(e.to_string()))?;
-        let engine = Engine::in_memory(config);
-        {
-            let mut inner = engine.inner.lock().unwrap();
-            if let Some(snap) = snapshot {
-                Self::apply_snapshot(&mut inner, &snap)?;
-            }
-            for ev in &events {
-                Self::apply_event(&mut inner, ev);
-            }
-            inner.wal_records = events.len() as u64;
-            inner.storage = Some(storage);
+        let mut engine = Engine::in_memory(config);
+        if let Some(snap) = snapshot {
+            engine.apply_snapshot(&snap)?;
         }
+        // Replay in file order == commit order. Per shard this is each
+        // shard's mutation order (records were appended under the shard
+        // lock), so the recovered state matches what was acknowledged.
+        for ev in &events {
+            engine.apply_event(ev);
+        }
+        engine.wal_records.store(events.len() as u64, Ordering::Relaxed);
+        let next_seq = events.iter().map(|r| r.seq + 1).max().unwrap_or(0);
+        let wal_config = GroupWalConfig {
+            batch_max: engine.config.wal_batch_max.max(1),
+            ..GroupWalConfig::default()
+        };
+        engine.wal = Some(GroupWal::start(storage, wal_config, next_seq));
         Ok(engine)
     }
 
@@ -145,6 +213,27 @@ impl Engine {
     /// coordinator.
     pub fn now(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
+    }
+
+    /// Number of shards (diagnostics).
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard owning a study key: stable hash placement.
+    fn shard_of(&self, key: &str) -> usize {
+        (fnv1a(key) % self.shards.len() as u64) as usize
+    }
+
+    fn lock_shard(&self, idx: usize) -> MutexGuard<'_, ShardState> {
+        self.shards[idx].state.lock().unwrap()
+    }
+
+    /// Route a trial id to its shard or produce the API error.
+    fn route(&self, trial_id: u64) -> Result<usize, ApiError> {
+        self.router
+            .get(trial_id)
+            .ok_or_else(|| ApiError::NotFound(format!("unknown trial {trial_id}")))
     }
 
     // ------------------------------------------------------------------
@@ -156,12 +245,12 @@ impl Engine {
     ///
     /// Locking (§Perf): the surrogate refit (TPE KDE / GP Cholesky) is
     /// the expensive part of an ask, so it runs on a *snapshot* of the
-    /// study history taken under the lock, with the lock released. A
-    /// concurrent ask may therefore suggest from history that is one or
-    /// two tells stale — the same semantics Optuna has in distributed
+    /// study history taken under the shard lock, with the lock released.
+    /// A concurrent ask may therefore suggest from history that is one
+    /// or two tells stale — the same semantics Optuna has in distributed
     /// mode, and irrelevant statistically (the history grows by whole
-    /// trials, the surrogate by one observation). The lock is re-taken
-    /// only to insert the trial record.
+    /// trials, the surrogate by one observation). The shard lock is
+    /// re-taken only to insert the trial record.
     pub fn ask(&self, body: &Value) -> Result<AskReply, ApiError> {
         let (def, node) = parse_ask_body(body).map_err(ApiError::BadRequest)?;
         let now = self.now();
@@ -170,13 +259,14 @@ impl Engine {
             return self.ask_mo(def, node, now, key);
         }
         let sampler = make_sampler(&def.sampler).map_err(ApiError::BadRequest)?;
+        let shard_idx = self.shard_of(&key);
 
         // --- critical section 1: find/create study, snapshot history ---
-        let (study_idx, trial_number, scored, space, direction) = {
-            let mut inner = self.inner.lock().unwrap();
-            let inner = &mut *inner;
-            let study_idx = Self::find_or_create_study(inner, &def, now, &key, &self.metrics)?;
-            let study = &inner.studies[study_idx];
+        let (slot, trial_number, scored, space, direction) = {
+            let mut guard = self.lock_shard(shard_idx);
+            let state = &mut *guard;
+            let slot = self.find_or_create_study(state, shard_idx, &def, now, &key)?;
+            let study = &state.studies[slot];
             let trial_number = study.trials.len() as u64;
             let all = study.scored();
             let skip = all.len().saturating_sub(self.config.history_snapshot.max(1));
@@ -186,7 +276,7 @@ impl Engine {
                 .map(|(t, v)| Obs { params: t.params.clone(), value: v })
                 .collect();
             (
-                study_idx,
+                slot,
                 trial_number,
                 scored,
                 study.def.space.clone(),
@@ -195,50 +285,21 @@ impl Engine {
         };
 
         // --- suggest OUTSIDE the lock (deterministic per study+number) ---
-        let key_hash = {
-            let mut h: u64 = 0xcbf29ce484222325;
-            for b in key.as_bytes() {
-                h = (h ^ *b as u64).wrapping_mul(0x100000001b3);
-            }
-            h
-        };
+        let key_hash = fnv1a(&key);
         let mut rng = Rng::new(mix(mix(self.config.seed, key_hash), trial_number));
         let params = sampler.suggest(&space, &scored, direction, trial_number, &mut rng);
 
         // --- critical section 2: insert the trial ---
-        let mut inner = self.inner.lock().unwrap();
-        let inner = &mut *inner;
-        // trial_number may have advanced while we sampled; re-read it so
-        // `number` stays the creation-order index.
-        let trial_number = inner.studies[study_idx].trials.len() as u64;
-        let trial_id = inner.next_trial_id;
-        inner.next_trial_id += 1;
-        let trial = Trial::new(trial_id, trial_number, params.clone(), now, node);
-        let ev = {
-            let mut o = Value::obj();
-            o.set("study_id", inner.studies[study_idx].id)
-                .set("trial", trial.to_json());
-            Value::Obj(o)
+        let reply = {
+            let mut guard = self.lock_shard(shard_idx);
+            self.insert_trial(&mut guard, shard_idx, slot, params, now, node)?
         };
-        let trial_idx = inner.studies[study_idx].trials.len();
-        inner.studies[study_idx].trials.push(trial);
-        inner.trial_index.insert(trial_id, (study_idx, trial_idx));
-        inner.last_seen.insert(trial_id, now);
-        Self::persist(inner, Record::new("trial_new", ev))?;
 
         self.metrics.trials_created.inc();
         self.metrics.ask_total.inc();
         self.asks.fetch_add(1, Ordering::Relaxed);
-        self.maybe_compact(inner);
-
-        let study = &inner.studies[study_idx];
-        Ok(AskReply {
-            trial_id,
-            trial_number,
-            study_id: study.id,
-            study_key: study.key.clone(),
-            params: assignment_to_json(&study.trials[trial_idx].params),
-        })
+        self.maybe_compact();
+        Ok(reply)
     }
 
     /// `ask` for a multi-objective study (paper §5 future work): same
@@ -248,7 +309,7 @@ impl Engine {
     /// qmc work as-is; gp/cmaes are single-objective only.
     fn ask_mo(
         &self,
-        def: super::study::StudyDef,
+        def: StudyDef,
         node: Option<String>,
         now: f64,
         key: String,
@@ -270,13 +331,14 @@ impl Engine {
                 )))
             }
         };
+        let shard_idx = self.shard_of(&key);
 
         // --- critical section 1: find/create study + snapshot ---
-        let (study_idx, trial_number, mo_obs, space) = {
-            let mut inner = self.inner.lock().unwrap();
-            let inner = &mut *inner;
-            let study_idx = Self::find_or_create_study(inner, &def, now, &key, &self.metrics)?;
-            let study = &inner.studies[study_idx];
+        let (slot, trial_number, mo_obs, space) = {
+            let mut guard = self.lock_shard(shard_idx);
+            let state = &mut *guard;
+            let slot = self.find_or_create_study(state, shard_idx, &def, now, &key)?;
+            let study = &state.studies[slot];
             let trial_number = study.trials.len() as u64;
             let skip = study
                 .mo_scored()
@@ -288,17 +350,11 @@ impl Engine {
                 .skip(skip)
                 .map(|(t, v)| MoObs { params: t.params.clone(), values: v.clone() })
                 .collect();
-            (study_idx, trial_number, mo_obs, study.def.space.clone())
+            (slot, trial_number, mo_obs, study.def.space.clone())
         };
 
         // --- suggest outside the lock ---
-        let key_hash = {
-            let mut h: u64 = 0xcbf29ce484222325;
-            for b in key.as_bytes() {
-                h = (h ^ *b as u64).wrapping_mul(0x100000001b3);
-            }
-            h
-        };
+        let key_hash = fnv1a(&key);
         let mut rng = Rng::new(mix(mix(self.config.seed, key_hash), trial_number));
         let params = match which {
             MoWhich::Nsga2(s) => s.suggest_mo(&space, &mo_obs, &directions, &mut rng),
@@ -308,32 +364,55 @@ impl Engine {
         };
 
         // --- critical section 2: insert the trial ---
-        let mut inner = self.inner.lock().unwrap();
-        let inner = &mut *inner;
-        let trial_number = inner.studies[study_idx].trials.len() as u64;
-        let trial_id = inner.next_trial_id;
-        inner.next_trial_id += 1;
-        let trial = Trial::new(trial_id, trial_number, params, now, node);
-        let ev = {
-            let mut o = Value::obj();
-            o.set("study_id", inner.studies[study_idx].id)
-                .set("trial", trial.to_json());
-            Value::Obj(o)
+        let reply = {
+            let mut guard = self.lock_shard(shard_idx);
+            self.insert_trial(&mut guard, shard_idx, slot, params, now, node)?
         };
-        let trial_idx = inner.studies[study_idx].trials.len();
-        inner.studies[study_idx].trials.push(trial);
-        inner.trial_index.insert(trial_id, (study_idx, trial_idx));
-        inner.last_seen.insert(trial_id, now);
-        Self::persist(inner, Record::new("trial_new", ev))?;
         self.metrics.trials_created.inc();
         self.metrics.ask_total.inc();
         self.asks.fetch_add(1, Ordering::Relaxed);
-        self.maybe_compact(inner);
-        let study = &inner.studies[study_idx];
+        self.maybe_compact();
+        Ok(reply)
+    }
+
+    /// Critical section 2 of an ask (shared by single- and
+    /// multi-objective paths): allocate the trial id, insert the trial
+    /// on its shard, persist `trial_new`, and build the reply. Called
+    /// with the shard lock held. The trial number is re-read here — it
+    /// may have advanced while the caller sampled outside the lock — so
+    /// `number` stays the creation-order index.
+    fn insert_trial(
+        &self,
+        state: &mut ShardState,
+        shard_idx: usize,
+        slot: usize,
+        params: Assignment,
+        now: f64,
+        node: Option<String>,
+    ) -> Result<AskReply, ApiError> {
+        let trial_number = state.studies[slot].trials.len() as u64;
+        let trial_id = self.next_trial_id.fetch_add(1, Ordering::Relaxed);
+        let trial = Trial::new(trial_id, trial_number, params, now, node);
+        let study_id = state.studies[slot].id;
+        let ev = {
+            let mut o = Value::obj();
+            o.set("study_id", study_id).set("trial", trial.to_json());
+            Value::Obj(o)
+        };
+        // Persist first: a failed append returns 500 with no in-memory
+        // trace, so memory never diverges from the log.
+        self.persist(Record::new("trial_new", ev).with_shard(shard_idx as u32))?;
+        let trial_idx = state.studies[slot].trials.len();
+        state.studies[slot].trials.push(trial);
+        state.trial_index.insert(trial_id, (slot, trial_idx));
+        state.last_seen.insert(trial_id, now);
+        self.router.insert(trial_id, shard_idx);
+        self.shard_metrics_update(shard_idx, state);
+        let study = &state.studies[slot];
         Ok(AskReply {
             trial_id,
             trial_number,
-            study_id: study.id,
+            study_id,
             study_key: study.key.clone(),
             params: assignment_to_json(&study.trials[trial_idx].params),
         })
@@ -343,88 +422,106 @@ impl Engine {
     /// Returns `(study_id, on_pareto_front)`.
     pub fn tell_values(&self, trial_id: u64, values: Vec<f64>) -> Result<(u64, bool), ApiError> {
         let now = self.now();
-        let mut inner = self.inner.lock().unwrap();
-        let inner = &mut *inner;
-        let (si, ti) = *inner
-            .trial_index
-            .get(&trial_id)
-            .ok_or_else(|| ApiError::NotFound(format!("unknown trial {trial_id}")))?;
-        let Some(directions) = inner.studies[si].def.directions.clone() else {
-            return Err(ApiError::BadRequest(
-                "'values' array sent to a single-objective study".into(),
-            ));
+        let shard_idx = self.route(trial_id)?;
+        let result = {
+            let mut guard = self.lock_shard(shard_idx);
+            let state = &mut *guard;
+            let (si, ti) = *state
+                .trial_index
+                .get(&trial_id)
+                .ok_or_else(|| ApiError::NotFound(format!("unknown trial {trial_id}")))?;
+            let Some(directions) = state.studies[si].def.directions.clone() else {
+                return Err(ApiError::BadRequest(
+                    "'values' array sent to a single-objective study".into(),
+                ));
+            };
+            if values.len() != directions.len() {
+                return Err(ApiError::BadRequest(format!(
+                    "expected {} objective values, got {}",
+                    directions.len(),
+                    values.len()
+                )));
+            }
+            // Validate, persist, then apply (see `tell`).
+            state.studies[si].trials[ti]
+                .validate_transition("tell")
+                .map_err(|e| ApiError::Conflict(e.to_string()))?;
+            let ev = {
+                let mut o = Value::obj();
+                o.set("trial_id", trial_id)
+                    .set(
+                        "values",
+                        Value::Arr(values.iter().map(|&v| Value::Num(v)).collect()),
+                    )
+                    .set("at", now);
+                Value::Obj(o)
+            };
+            self.persist(Record::new("trial_tell_mo", ev).with_shard(shard_idx as u32))?;
+            state.studies[si].trials[ti]
+                .complete_mo(values, now)
+                .map_err(|e| ApiError::Conflict(e.to_string()))?;
+            state.last_seen.remove(&trial_id);
+            self.shard_metrics_update(shard_idx, state);
+            let on_front = state.studies[si]
+                .pareto()
+                .iter()
+                .any(|t| t.id == trial_id);
+            (state.studies[si].id, on_front)
         };
-        if values.len() != directions.len() {
-            return Err(ApiError::BadRequest(format!(
-                "expected {} objective values, got {}",
-                directions.len(),
-                values.len()
-            )));
-        }
-        inner.studies[si].trials[ti]
-            .complete_mo(values.clone(), now)
-            .map_err(|e| ApiError::Conflict(e.to_string()))?;
-        let ev = {
-            let mut o = Value::obj();
-            o.set("trial_id", trial_id)
-                .set(
-                    "values",
-                    Value::Arr(values.iter().map(|&v| Value::Num(v)).collect()),
-                )
-                .set("at", now);
-            Value::Obj(o)
-        };
-        Self::persist(inner, Record::new("trial_tell_mo", ev))?;
-        inner.last_seen.remove(&trial_id);
         self.metrics.tell_total.inc();
         self.metrics.trials_completed.inc();
-        self.maybe_compact(inner);
-        let on_front = inner.studies[si]
-            .pareto()
-            .iter()
-            .any(|t| t.id == trial_id);
-        Ok((inner.studies[si].id, on_front))
+        self.maybe_compact();
+        Ok(result)
     }
 
     /// Pareto front of a multi-objective study (dashboard/client API).
     pub fn pareto_json(&self, study_id: u64) -> Option<Value> {
-        let inner = self.inner.lock().unwrap();
-        let study = inner.studies.iter().find(|s| s.id == study_id)?;
-        Some(Value::Arr(
-            study.pareto().into_iter().map(|t| t.to_json()).collect(),
-        ))
+        self.with_study(study_id, |study| {
+            Value::Arr(study.pareto().into_iter().map(|t| t.to_json()).collect())
+        })
     }
 
     /// `tell`: finalize a trial with its objective value.
     /// Returns `(study_id, is_best)`.
     pub fn tell(&self, trial_id: u64, value: f64) -> Result<(u64, bool), ApiError> {
         let now = self.now();
-        let mut inner = self.inner.lock().unwrap();
-        let inner = &mut *inner;
-        let (si, ti) = *inner
-            .trial_index
-            .get(&trial_id)
-            .ok_or_else(|| ApiError::NotFound(format!("unknown trial {trial_id}")))?;
-        let direction = inner.studies[si].def.direction;
-        let prev_best = inner.studies[si].best().and_then(|t| t.value);
-        inner.studies[si].trials[ti]
-            .complete(value, now)
-            .map_err(|e| ApiError::Conflict(e.to_string()))?;
-        let ev = {
-            let mut o = Value::obj();
-            o.set("trial_id", trial_id).set("value", value).set("at", now);
-            Value::Obj(o)
+        let shard_idx = self.route(trial_id)?;
+        let result = {
+            let mut guard = self.lock_shard(shard_idx);
+            let state = &mut *guard;
+            let (si, ti) = *state
+                .trial_index
+                .get(&trial_id)
+                .ok_or_else(|| ApiError::NotFound(format!("unknown trial {trial_id}")))?;
+            let direction = state.studies[si].def.direction;
+            let prev_best = state.studies[si].best().and_then(|t| t.value);
+            // Validate the transition, persist, then apply: a failed
+            // append returns 500 with the trial still Running, so the
+            // client's retry can succeed instead of hitting 409.
+            state.studies[si].trials[ti]
+                .validate_transition("tell")
+                .map_err(|e| ApiError::Conflict(e.to_string()))?;
+            let ev = {
+                let mut o = Value::obj();
+                o.set("trial_id", trial_id).set("value", value).set("at", now);
+                Value::Obj(o)
+            };
+            self.persist(Record::new("trial_tell", ev).with_shard(shard_idx as u32))?;
+            state.studies[si].trials[ti]
+                .complete(value, now)
+                .map_err(|e| ApiError::Conflict(e.to_string()))?;
+            state.last_seen.remove(&trial_id);
+            self.shard_metrics_update(shard_idx, state);
+            let is_best = match prev_best {
+                None => true,
+                Some(b) => direction.better(value, b),
+            };
+            (state.studies[si].id, is_best)
         };
-        Self::persist(inner, Record::new("trial_tell", ev))?;
-        inner.last_seen.remove(&trial_id);
         self.metrics.tell_total.inc();
         self.metrics.trials_completed.inc();
-        self.maybe_compact(inner);
-        let is_best = match prev_best {
-            None => true,
-            Some(b) => direction.better(value, b),
-        };
-        Ok((inner.studies[si].id, is_best))
+        self.maybe_compact();
+        Ok(result)
     }
 
     /// `should_prune`: record an intermediate value; returns whether the
@@ -432,108 +529,150 @@ impl Engine {
     /// trial to Pruned server-side (the client contract is to stop).
     pub fn should_prune(&self, trial_id: u64, step: u64, value: f64) -> Result<bool, ApiError> {
         let now = self.now();
-        let mut inner = self.inner.lock().unwrap();
-        let inner = &mut *inner;
-        let (si, ti) = *inner
-            .trial_index
-            .get(&trial_id)
-            .ok_or_else(|| ApiError::NotFound(format!("unknown trial {trial_id}")))?;
+        let shard_idx = self.route(trial_id)?;
+        let prune = {
+            let mut guard = self.lock_shard(shard_idx);
+            let state = &mut *guard;
+            let (si, ti) = *state
+                .trial_index
+                .get(&trial_id)
+                .ok_or_else(|| ApiError::NotFound(format!("unknown trial {trial_id}")))?;
 
-        inner.studies[si].trials[ti]
-            .report(step, value)
-            .map_err(|e| ApiError::Conflict(e.to_string()))?;
-        inner.last_seen.insert(trial_id, now);
-        let ev = {
-            let mut o = Value::obj();
-            o.set("trial_id", trial_id).set("step", step).set("value", value);
-            Value::Obj(o)
-        };
-        Self::persist(inner, Record::new("trial_report", ev))?;
-        self.metrics.should_prune_total.inc();
-
-        let study = &inner.studies[si];
-        let prune = match &study.def.pruner {
-            None => false,
-            Some(cfg) => {
-                let pruner = make_pruner(cfg).map_err(ApiError::BadRequest)?;
-                let trial = &study.trials[ti];
-                let history: Vec<&Trial> = study
-                    .trials
-                    .iter()
-                    .filter(|t| t.id != trial_id)
-                    .collect();
-                pruner.should_prune(trial, step, value, &history, study.def.direction)
-            }
-        };
-        if prune {
-            inner.studies[si].trials[ti]
-                .prune(now)
+            // Validate, persist, then apply (see `tell`). `report` runs
+            // the same validation internally, so the two cannot drift.
+            state.studies[si].trials[ti]
+                .validate_report(step)
                 .map_err(|e| ApiError::Conflict(e.to_string()))?;
             let ev = {
                 let mut o = Value::obj();
-                o.set("trial_id", trial_id).set("at", now);
+                o.set("trial_id", trial_id).set("step", step).set("value", value);
                 Value::Obj(o)
             };
-            Self::persist(inner, Record::new("trial_prune", ev))?;
-            inner.last_seen.remove(&trial_id);
-            self.metrics.prune_decisions.inc();
-            self.metrics.trials_pruned.inc();
-        }
-        self.maybe_compact(inner);
+            self.persist(Record::new("trial_report", ev).with_shard(shard_idx as u32))?;
+            state.studies[si].trials[ti]
+                .report(step, value)
+                .map_err(|e| ApiError::Conflict(e.to_string()))?;
+            state.last_seen.insert(trial_id, now);
+            self.metrics.should_prune_total.inc();
+
+            let study = &state.studies[si];
+            let prune = match &study.def.pruner {
+                None => false,
+                Some(cfg) => {
+                    let pruner = make_pruner(cfg).map_err(ApiError::BadRequest)?;
+                    let trial = &study.trials[ti];
+                    let history: Vec<&Trial> = study
+                        .trials
+                        .iter()
+                        .filter(|t| t.id != trial_id)
+                        .collect();
+                    pruner.should_prune(trial, step, value, &history, study.def.direction)
+                }
+            };
+            if prune {
+                // The trial is Running (the report above succeeded and
+                // the lock is held), so persist-then-apply cannot 409.
+                let ev = {
+                    let mut o = Value::obj();
+                    o.set("trial_id", trial_id).set("at", now);
+                    Value::Obj(o)
+                };
+                self.persist(Record::new("trial_prune", ev).with_shard(shard_idx as u32))?;
+                state.studies[si].trials[ti]
+                    .prune(now)
+                    .map_err(|e| ApiError::Conflict(e.to_string()))?;
+                state.last_seen.remove(&trial_id);
+                self.metrics.prune_decisions.inc();
+                self.metrics.trials_pruned.inc();
+            }
+            self.shard_metrics_update(shard_idx, state);
+            prune
+        };
+        self.maybe_compact();
         Ok(prune)
     }
 
     /// Client-reported failure (e.g. OOM) — frees the trial slot.
     pub fn fail(&self, trial_id: u64) -> Result<(), ApiError> {
         let now = self.now();
-        let mut inner = self.inner.lock().unwrap();
-        let inner = &mut *inner;
-        let (si, ti) = *inner
+        let shard_idx = self.route(trial_id)?;
+        let mut guard = self.lock_shard(shard_idx);
+        let state = &mut *guard;
+        let (si, ti) = *state
             .trial_index
             .get(&trial_id)
             .ok_or_else(|| ApiError::NotFound(format!("unknown trial {trial_id}")))?;
-        inner.studies[si].trials[ti]
-            .fail(now)
+        // Validate, persist, then apply (see `tell`).
+        state.studies[si].trials[ti]
+            .validate_transition("fail")
             .map_err(|e| ApiError::Conflict(e.to_string()))?;
         let ev = {
             let mut o = Value::obj();
             o.set("trial_id", trial_id).set("at", now);
             Value::Obj(o)
         };
-        Self::persist(inner, Record::new("trial_fail", ev))?;
-        inner.last_seen.remove(&trial_id);
+        self.persist(Record::new("trial_fail", ev).with_shard(shard_idx as u32))?;
+        state.studies[si].trials[ti]
+            .fail(now)
+            .map_err(|e| ApiError::Conflict(e.to_string()))?;
+        state.last_seen.remove(&trial_id);
+        self.shard_metrics_update(shard_idx, state);
         self.metrics.trials_failed.inc();
         Ok(())
     }
 
     /// Reap running trials whose node has been silent past the deadline
-    /// (called periodically by the server loop).
+    /// (called periodically by the server loop). Shards are swept one at
+    /// a time, so reaping never blocks the whole engine.
     pub fn reap_stale(&self) -> usize {
         let Some(deadline) = self.config.reap_after else { return 0 };
         let now = self.now();
-        let mut inner = self.inner.lock().unwrap();
-        let inner = &mut *inner;
-        let stale: Vec<u64> = inner
-            .last_seen
-            .iter()
-            .filter(|(_, &t)| now - t > deadline)
-            .map(|(&id, _)| id)
-            .collect();
         let mut reaped = 0;
-        for id in stale {
-            if let Some(&(si, ti)) = inner.trial_index.get(&id) {
-                if inner.studies[si].trials[ti].fail(now).is_ok() {
-                    let ev = {
-                        let mut o = Value::obj();
-                        o.set("trial_id", id).set("at", now);
-                        Value::Obj(o)
-                    };
-                    let _ = Self::persist(inner, Record::new("trial_fail", ev));
-                    self.metrics.trials_failed.inc();
-                    reaped += 1;
+        for (shard_idx, shard) in self.shards.iter().enumerate() {
+            let mut guard = shard.state.lock().unwrap();
+            let state = &mut *guard;
+            let stale: Vec<u64> = state
+                .last_seen
+                .iter()
+                .filter(|(_, &t)| now - t > deadline)
+                .map(|(&id, _)| id)
+                .collect();
+            // Build every trial_fail record first and commit them in one
+            // group-commit roundtrip: a vanished site can expire
+            // thousands of trials at once, and per-trial roundtrips
+            // would serialize that many fsync waits under the shard
+            // lock.
+            let mut to_fail: Vec<u64> = Vec::new();
+            let mut records: Vec<Record> = Vec::new();
+            for &id in &stale {
+                if let Some(&(si, ti)) = state.trial_index.get(&id) {
+                    if state.studies[si].trials[ti].validate_transition("fail").is_ok() {
+                        let ev = {
+                            let mut o = Value::obj();
+                            o.set("trial_id", id).set("at", now);
+                            Value::Obj(o)
+                        };
+                        records.push(Record::new("trial_fail", ev).with_shard(shard_idx as u32));
+                        to_fail.push(id);
+                    }
                 }
             }
-            inner.last_seen.remove(&id);
+            if self.persist_many(records).is_ok() {
+                for id in to_fail {
+                    if let Some(&(si, ti)) = state.trial_index.get(&id) {
+                        let _ = state.studies[si].trials[ti].fail(now);
+                        self.metrics.trials_failed.inc();
+                        reaped += 1;
+                    }
+                }
+                for id in stale {
+                    state.last_seen.remove(&id);
+                }
+            }
+            // Gauge only: an idle sweep is not a shard mutation.
+            if let Some(sm) = self.metrics.shards.get(shard_idx) {
+                sm.tracked_running.set(state.last_seen.len() as f64);
+            }
         }
         reaped
     }
@@ -542,176 +681,350 @@ impl Engine {
     // Read APIs (dashboard / web data)
     // ------------------------------------------------------------------
 
-    /// Summaries of all studies.
+    /// Run `f` on the study with `study_id`, wherever it lives. The
+    /// directory guard is released before the shard lock is taken (leaf
+    /// lock discipline).
+    fn with_study<T>(&self, study_id: u64, f: impl FnOnce(&Study) -> T) -> Option<T> {
+        let entry = self.directory.read().unwrap().lookup(study_id)?;
+        let guard = self.lock_shard(entry.shard);
+        Some(f(&guard.studies[entry.slot]))
+    }
+
+    /// Summaries of all studies, in id (creation) order.
     pub fn studies_json(&self) -> Value {
-        let inner = self.inner.lock().unwrap();
-        Value::Arr(inner.studies.iter().map(|s| s.summary_json()).collect())
+        let entries = self.directory.read().unwrap().sorted();
+        let mut out: Vec<Value> = Vec::with_capacity(entries.len());
+        let mut i = 0;
+        while i < entries.len() {
+            // One shard lock per run of same-shard entries.
+            let shard = entries[i].shard;
+            let guard = self.lock_shard(shard);
+            while i < entries.len() && entries[i].shard == shard {
+                out.push(guard.studies[entries[i].slot].summary_json());
+                i += 1;
+            }
+        }
+        Value::Arr(out)
     }
 
     /// One study's summary.
     pub fn study_json(&self, study_id: u64) -> Option<Value> {
-        let inner = self.inner.lock().unwrap();
-        inner
-            .studies
-            .iter()
-            .find(|s| s.id == study_id)
-            .map(|s| s.summary_json())
+        self.with_study(study_id, |s| s.summary_json())
     }
 
     /// A study's full trial list.
     pub fn trials_json(&self, study_id: u64) -> Option<Value> {
-        let inner = self.inner.lock().unwrap();
-        inner
-            .studies
-            .iter()
-            .find(|s| s.id == study_id)
-            .map(|s| Value::Arr(s.trials.iter().map(|t| t.to_json()).collect()))
+        self.with_study(study_id, |s| {
+            Value::Arr(s.trials.iter().map(|t| t.to_json()).collect())
+        })
     }
 
     /// Loss-curve series for the dashboard plots (paper: Chartist plots
     /// of "the evolution of the loss reported by different studies and
     /// trials").
     pub fn series_json(&self, study_id: u64) -> Option<Value> {
-        let inner = self.inner.lock().unwrap();
-        let study = inner.studies.iter().find(|s| s.id == study_id)?;
-        let mut arr = Vec::new();
-        for t in &study.trials {
-            let mut o = Value::obj();
-            o.set("trial", t.id)
-                .set("state", t.state.as_str())
-                .set(
-                    "points",
-                    Value::Arr(
-                        t.intermediate
-                            .iter()
-                            .map(|(s, v)| Value::Arr(vec![Value::Num(*s as f64), Value::Num(*v)]))
-                            .collect(),
-                    ),
-                )
-                .set("final", t.value);
-            arr.push(Value::Obj(o));
-        }
-        Some(Value::Arr(arr))
+        self.with_study(study_id, |study| {
+            let mut arr = Vec::new();
+            for t in &study.trials {
+                let mut o = Value::obj();
+                o.set("trial", t.id)
+                    .set("state", t.state.as_str())
+                    .set(
+                        "points",
+                        Value::Arr(
+                            t.intermediate
+                                .iter()
+                                .map(|(s, v)| {
+                                    Value::Arr(vec![Value::Num(*s as f64), Value::Num(*v)])
+                                })
+                                .collect(),
+                        ),
+                    )
+                    .set("final", t.value);
+                arr.push(Value::Obj(o));
+            }
+            Value::Arr(arr)
+        })
     }
 
     /// Best-so-far curve of a study: (trial number, best value after it).
     pub fn best_curve(&self, study_id: u64) -> Option<Vec<(u64, f64)>> {
-        let inner = self.inner.lock().unwrap();
-        let study = inner.studies.iter().find(|s| s.id == study_id)?;
-        let mut best: Option<f64> = None;
-        let mut curve = Vec::new();
-        for t in &study.trials {
-            if let (TrialState::Completed, Some(v)) = (t.state, t.value) {
-                best = Some(match best {
-                    None => v,
-                    Some(b) if study.def.direction.better(v, b) => v,
-                    Some(b) => b,
-                });
-                curve.push((t.number, best.unwrap()));
+        self.with_study(study_id, |study| {
+            let mut best: Option<f64> = None;
+            let mut curve = Vec::new();
+            for t in &study.trials {
+                if let (TrialState::Completed, Some(v)) = (t.state, t.value) {
+                    best = Some(match best {
+                        None => v,
+                        Some(b) if study.def.direction.better(v, b) => v,
+                        Some(b) => b,
+                    });
+                    curve.push((t.number, best.unwrap()));
+                }
             }
-        }
-        Some(curve)
+            curve
+        })
     }
 
     /// Number of studies.
     pub fn n_studies(&self) -> usize {
-        self.inner.lock().unwrap().studies.len()
+        self.directory.read().unwrap().len()
     }
 
     /// Look up a study id by definition key.
     pub fn study_id_by_key(&self, key: &str) -> Option<u64> {
-        let inner = self.inner.lock().unwrap();
-        inner.by_key.get(key).map(|&i| inner.studies[i].id)
+        let guard = self.lock_shard(self.shard_of(key));
+        guard.by_key.get(key).map(|&slot| guard.studies[slot].id)
     }
 
-    /// Force a snapshot + WAL truncation.
+    /// Live `last_seen` entries across all shards — the set of running
+    /// trials tracked for reaping. Returns to 0 when every trial has
+    /// reached a terminal state (leak regression surface).
+    pub fn tracked_running(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.state.lock().unwrap().last_seen.len())
+            .sum()
+    }
+
+    /// Engine-level statistics (the `/api/stats` endpoint).
+    pub fn stats_json(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("shards", self.shards.len())
+            .set("studies", self.n_studies())
+            .set("asks", self.asks.load(Ordering::Relaxed))
+            .set("tracked_running", self.tracked_running())
+            .set("wal_records", self.wal_records.load(Ordering::Relaxed))
+            .set("durable", self.wal.is_some());
+        if let Some(wal) = &self.wal {
+            let (batches, records, last, max) = wal.stats().snapshot();
+            let mut w = Value::obj();
+            w.set("batches", batches)
+                .set("records", records)
+                .set("last_batch", last)
+                .set("max_batch", max)
+                .set(
+                    "failed_batches",
+                    wal.stats().failed_batches.load(Ordering::Relaxed),
+                );
+            o.set("wal_commit", Value::Obj(w));
+        }
+        Value::Obj(o)
+    }
+
+    /// Force a snapshot + WAL truncation. Stop-the-world: takes every
+    /// shard lock (in index order) so the snapshot is a consistent cut —
+    /// every acknowledged record is either in the snapshot or will be
+    /// re-appended after the reset, never both.
     pub fn compact(&self) -> Result<(), ApiError> {
-        let mut inner = self.inner.lock().unwrap();
-        let inner = &mut *inner;
-        Self::compact_inner(inner)
+        let Some(wal) = &self.wal else { return Ok(()) };
+        let guards: Vec<MutexGuard<'_, ShardState>> =
+            self.shards.iter().map(|s| s.state.lock().unwrap()).collect();
+        // All in-flight mutations have been acknowledged (they held a
+        // shard lock across their append), so the WAL queue is drained
+        // of anything reflected in `guards`.
+        let snap = self.snapshot_value(&guards);
+        wal.compact(snap).map_err(ApiError::Storage)?;
+        self.wal_records.store(0, Ordering::Relaxed);
+        self.metrics.wal_records.set(0.0);
+        drop(guards);
+        Ok(())
     }
 
     // ------------------------------------------------------------------
     // Persistence plumbing
     // ------------------------------------------------------------------
 
-    /// Locate the study for `key`, creating (and persisting) it if new.
+    /// Locate the study for `key` on `shard_idx`, creating (and
+    /// persisting) it if new. Called with the shard lock held; the
+    /// shard's `by_key` is authoritative for its keys, so creation
+    /// races cannot duplicate a study.
     fn find_or_create_study(
-        inner: &mut Inner,
+        &self,
+        state: &mut ShardState,
+        shard_idx: usize,
         def: &StudyDef,
         now: f64,
         key: &str,
-        metrics: &Metrics,
     ) -> Result<usize, ApiError> {
-        match inner.by_key.get(key) {
-            Some(&i) => Ok(i),
+        match state.by_key.get(key) {
+            Some(&slot) => Ok(slot),
             None => {
-                let id = inner.studies.len() as u64 + 1;
+                let id = self.next_study_id.fetch_add(1, Ordering::Relaxed);
                 let ev_payload = {
                     let mut o = Value::obj();
                     o.set("id", id).set("def", def.canonical_json());
                     Value::Obj(o)
                 };
+                // Persist first (see `insert_trial`): a failed append
+                // must not leave a study the log doesn't know about.
+                self.persist(Record::new("study_new", ev_payload).with_shard(shard_idx as u32))?;
                 let study = Study::new(id, def.clone(), now);
-                inner.studies.push(study);
-                let idx = inner.studies.len() - 1;
-                inner.by_key.insert(key.to_string(), idx);
-                metrics.studies_created.inc();
-                Self::persist(inner, Record::new("study_new", ev_payload))?;
-                Ok(idx)
+                state.studies.push(study);
+                let slot = state.studies.len() - 1;
+                state.by_key.insert(key.to_string(), slot);
+                self.directory
+                    .write()
+                    .unwrap()
+                    .push(DirEntry { id, shard: shard_idx, slot });
+                self.metrics.studies_created.inc();
+                if let Some(sm) = self.metrics.shards.get(shard_idx) {
+                    sm.studies.set(state.studies.len() as f64);
+                }
+                Ok(slot)
             }
         }
     }
 
-    fn persist(inner: &mut Inner, record: Record) -> Result<(), ApiError> {
-        if let Some(storage) = inner.storage.as_mut() {
-            storage
-                .append(&record)
-                .map_err(|e| ApiError::Storage(e.to_string()))?;
-            inner.wal_records += 1;
+    /// Durably append one record through the group-commit writer.
+    /// Blocks until the record's batch is fsynced; callers hold their
+    /// shard lock across this call, so per-shard WAL order equals
+    /// per-shard mutation order and the compaction cut stays consistent.
+    fn persist(&self, record: Record) -> Result<(), ApiError> {
+        if let Some(wal) = &self.wal {
+            wal.append(record).map_err(ApiError::Storage)?;
+            self.wal_records.fetch_add(1, Ordering::Relaxed);
         }
         Ok(())
     }
 
-    fn maybe_compact(&self, inner: &mut Inner) {
-        if inner.storage.is_some() && inner.wal_records >= self.config.compact_after {
-            let _ = Self::compact_inner(inner);
-        }
-    }
-
-    fn compact_inner(inner: &mut Inner) -> Result<(), ApiError> {
-        if inner.storage.is_none() {
+    /// Durably append a batch of records in one writer roundtrip (one
+    /// shared fsync) — for bulk paths like reaping.
+    fn persist_many(&self, records: Vec<Record>) -> Result<(), ApiError> {
+        if records.is_empty() {
             return Ok(());
         }
-        let snap = Self::snapshot_value(inner);
-        let storage = inner.storage.as_mut().unwrap();
-        storage
-            .compact(&snap)
-            .map_err(|e| ApiError::Storage(e.to_string()))?;
-        inner.wal_records = 0;
+        if let Some(wal) = &self.wal {
+            let n = records.len() as u64;
+            wal.append_many(records).map_err(ApiError::Storage)?;
+            self.wal_records.fetch_add(n, Ordering::Relaxed);
+        }
         Ok(())
     }
 
-    fn snapshot_value(inner: &Inner) -> Value {
-        let mut studies = Vec::new();
-        for s in &inner.studies {
-            let mut o = Value::obj();
-            o.set("id", s.id)
-                .set("def", s.def.canonical_json())
-                .set("created_at", s.created_at)
-                .set(
-                    "trials",
-                    Value::Arr(s.trials.iter().map(|t| t.to_json()).collect()),
-                );
-            studies.push(Value::Obj(o));
+    /// Mirror the WAL counters into the metrics gauges. Called by the
+    /// `/metrics` handler at scrape time — not on the mutation hot path.
+    pub fn refresh_storage_metrics(&self) {
+        self.metrics
+            .wal_records
+            .set(self.wal_records.load(Ordering::Relaxed) as f64);
+        if let Some(wal) = &self.wal {
+            let (batches, records, last, max) = wal.stats().snapshot();
+            self.metrics.wal_commit_batches.set(batches as f64);
+            self.metrics.wal_commit_records.set(records as f64);
+            self.metrics.wal_commit_last_batch.set(last as f64);
+            self.metrics.wal_commit_max_batch.set(max as f64);
         }
+    }
+
+    /// Refresh the per-shard gauges from the shard state (cheap; called
+    /// under the shard lock).
+    fn shard_metrics_update(&self, shard_idx: usize, state: &ShardState) {
+        if let Some(sm) = self.metrics.shards.get(shard_idx) {
+            sm.ops.inc();
+            sm.tracked_running.set(state.last_seen.len() as f64);
+        }
+    }
+
+    /// Compact opportunistically once the WAL outgrows the policy. Must
+    /// be called with **no** shard lock held (compaction takes all of
+    /// them).
+    fn maybe_compact(&self) {
+        if self.wal.is_none() {
+            return;
+        }
+        let records = self.wal_records.load(Ordering::Relaxed);
+        if records < self.compact_threshold.load(Ordering::Relaxed) {
+            return;
+        }
+        if self
+            .compacting
+            .compare_exchange(false, true, Ordering::Acquire, Ordering::Relaxed)
+            .is_err()
+        {
+            return;
+        }
+        match self.compact() {
+            Ok(()) => {
+                self.compact_threshold
+                    .store(self.config.compact_after, Ordering::Relaxed);
+            }
+            Err(e) => {
+                // Surface the failure and back off by a quarter policy
+                // worth of records before retrying — compaction takes
+                // every shard lock, so tight failure loops would stall
+                // the whole engine.
+                eprintln!("hopaas: auto-compaction failed: {e}");
+                self.metrics.compact_failures.inc();
+                let step = (self.config.compact_after / 4).max(1);
+                self.compact_threshold
+                    .store(records.saturating_add(step), Ordering::Relaxed);
+            }
+        }
+        self.compacting.store(false, Ordering::Release);
+    }
+
+    /// Serialize the full engine state (all shards, studies in id
+    /// order) — the compaction snapshot.
+    fn snapshot_value(&self, guards: &[MutexGuard<'_, ShardState>]) -> Value {
+        let mut with_ids: Vec<(u64, Value)> = Vec::new();
+        for guard in guards {
+            for s in &guard.studies {
+                let mut o = Value::obj();
+                o.set("id", s.id)
+                    .set("def", s.def.canonical_json())
+                    .set("created_at", s.created_at)
+                    .set(
+                        "trials",
+                        Value::Arr(s.trials.iter().map(|t| t.to_json()).collect()),
+                    );
+                with_ids.push((s.id, Value::Obj(o)));
+            }
+        }
+        with_ids.sort_by_key(|(id, _)| *id);
         let mut o = Value::obj();
-        o.set("studies", Value::Arr(studies))
-            .set("next_trial_id", inner.next_trial_id);
+        o.set(
+            "studies",
+            Value::Arr(with_ids.into_iter().map(|(_, v)| v).collect()),
+        )
+        .set("next_trial_id", self.next_trial_id.load(Ordering::Relaxed));
         Value::Obj(o)
     }
 
-    fn apply_snapshot(inner: &mut Inner, snap: &Value) -> Result<(), ApiError> {
+    /// Insert a recovered study (snapshot or `study_new` event) into its
+    /// shard and the directory. Single-threaded (recovery only).
+    fn recover_study(&self, study: Study) {
+        let id = study.id;
+        let shard_idx = self.shard_of(&study.key);
+        let mut guard = self.lock_shard(shard_idx);
+        let state = &mut *guard;
+        if state.by_key.contains_key(&study.key) {
+            // Replay idempotence: a crash between the snapshot rename
+            // and the WAL reset in `Storage::compact` leaves `study_new`
+            // records the snapshot already covers — skip the duplicate.
+            self.next_study_id.fetch_max(id + 1, Ordering::Relaxed);
+            return;
+        }
+        let slot = state.studies.len();
+        state.by_key.insert(study.key.clone(), slot);
+        for (ti, t) in study.trials.iter().enumerate() {
+            state.trial_index.insert(t.id, (slot, ti));
+            self.router.insert(t.id, shard_idx);
+            self.next_trial_id.fetch_max(t.id + 1, Ordering::Relaxed);
+        }
+        state.studies.push(study);
+        if let Some(sm) = self.metrics.shards.get(shard_idx) {
+            sm.studies.set(state.studies.len() as f64);
+        }
+        drop(guard);
+        self.directory
+            .write()
+            .unwrap()
+            .push(DirEntry { id, shard: shard_idx, slot });
+        self.next_study_id.fetch_max(id + 1, Ordering::Relaxed);
+    }
+
+    fn apply_snapshot(&self, snap: &Value) -> Result<(), ApiError> {
         for sv in snap.get("studies").as_arr().unwrap_or(&[]) {
             let (def, _) = parse_ask_body(sv.get("def"))
                 .map_err(|e| ApiError::Storage(format!("snapshot study def: {e}")))?;
@@ -727,18 +1040,16 @@ impl Engine {
                     study.trials.push(t);
                 }
             }
-            let idx = inner.studies.len();
-            inner.by_key.insert(study.key.clone(), idx);
-            for (ti, t) in study.trials.iter().enumerate() {
-                inner.trial_index.insert(t.id, (idx, ti));
-            }
-            inner.studies.push(study);
+            self.recover_study(study);
         }
-        inner.next_trial_id = snap.get("next_trial_id").as_u64().unwrap_or(1);
+        self.next_trial_id.fetch_max(
+            snap.get("next_trial_id").as_u64().unwrap_or(1),
+            Ordering::Relaxed,
+        );
         Ok(())
     }
 
-    fn apply_event(inner: &mut Inner, record: &Record) {
+    fn apply_event(&self, record: &Record) {
         match record.tag.as_str() {
             "study_new" => {
                 let v = &record.payload;
@@ -748,23 +1059,27 @@ impl Engine {
                         ..def
                     };
                     let id = v.get("id").as_u64().unwrap_or(0);
-                    let study = Study::new(id, def, 0.0);
-                    let idx = inner.studies.len();
-                    inner.by_key.insert(study.key.clone(), idx);
-                    inner.studies.push(study);
+                    self.recover_study(Study::new(id, def, 0.0));
                 }
             }
             "trial_new" => {
                 let v = &record.payload;
                 let study_id = v.get("study_id").as_u64().unwrap_or(0);
                 if let Some(t) = Trial::from_json(v.get("trial")) {
-                    if let Some(si) =
-                        inner.studies.iter().position(|s| s.id == study_id)
-                    {
-                        inner.next_trial_id = inner.next_trial_id.max(t.id + 1);
-                        let ti = inner.studies[si].trials.len();
-                        inner.trial_index.insert(t.id, (si, ti));
-                        inner.studies[si].trials.push(t);
+                    let entry = self.directory.read().unwrap().lookup(study_id);
+                    if let Some(DirEntry { shard, slot, .. }) = entry {
+                        let mut guard = self.lock_shard(shard);
+                        let state = &mut *guard;
+                        self.next_trial_id.fetch_max(t.id + 1, Ordering::Relaxed);
+                        if state.trial_index.contains_key(&t.id) {
+                            // Already covered by the snapshot (crash in
+                            // the compaction window) — skip the replay.
+                            return;
+                        }
+                        let ti = state.studies[slot].trials.len();
+                        state.trial_index.insert(t.id, (slot, ti));
+                        self.router.insert(t.id, shard);
+                        state.studies[slot].trials.push(t);
                     }
                 }
             }
@@ -773,10 +1088,9 @@ impl Engine {
                 if let (Some(id), Some(val)) =
                     (v.get("trial_id").as_u64(), v.get("value").as_f64())
                 {
-                    if let Some(&(si, ti)) = inner.trial_index.get(&id) {
-                        let _ = inner.studies[si].trials[ti]
-                            .complete(val, v.get("at").as_f64().unwrap_or(0.0));
-                    }
+                    self.replay_trial_mut(id, |trial| {
+                        let _ = trial.complete(val, v.get("at").as_f64().unwrap_or(0.0));
+                    });
                 }
             }
             "trial_tell_mo" => {
@@ -785,10 +1099,9 @@ impl Engine {
                     (v.get("trial_id").as_u64(), v.get("values").as_arr())
                 {
                     let values: Vec<f64> = vals.iter().filter_map(Value::as_f64).collect();
-                    if let Some(&(si, ti)) = inner.trial_index.get(&id) {
-                        let _ = inner.studies[si].trials[ti]
-                            .complete_mo(values, v.get("at").as_f64().unwrap_or(0.0));
-                    }
+                    self.replay_trial_mut(id, |trial| {
+                        let _ = trial.complete_mo(values, v.get("at").as_f64().unwrap_or(0.0));
+                    });
                 }
             }
             "trial_report" => {
@@ -798,30 +1111,39 @@ impl Engine {
                     v.get("step").as_u64(),
                     v.get("value").as_f64(),
                 ) {
-                    if let Some(&(si, ti)) = inner.trial_index.get(&id) {
-                        let _ = inner.studies[si].trials[ti].report(step, val);
-                    }
+                    self.replay_trial_mut(id, |trial| {
+                        let _ = trial.report(step, val);
+                    });
                 }
             }
             "trial_prune" => {
                 let v = &record.payload;
                 if let Some(id) = v.get("trial_id").as_u64() {
-                    if let Some(&(si, ti)) = inner.trial_index.get(&id) {
-                        let _ = inner.studies[si].trials[ti]
-                            .prune(v.get("at").as_f64().unwrap_or(0.0));
-                    }
+                    self.replay_trial_mut(id, |trial| {
+                        let _ = trial.prune(v.get("at").as_f64().unwrap_or(0.0));
+                    });
                 }
             }
             "trial_fail" => {
                 let v = &record.payload;
                 if let Some(id) = v.get("trial_id").as_u64() {
-                    if let Some(&(si, ti)) = inner.trial_index.get(&id) {
-                        let _ = inner.studies[si].trials[ti]
-                            .fail(v.get("at").as_f64().unwrap_or(0.0));
-                    }
+                    self.replay_trial_mut(id, |trial| {
+                        let _ = trial.fail(v.get("at").as_f64().unwrap_or(0.0));
+                    });
                 }
             }
             _ => {}
+        }
+    }
+
+    /// Replay helper: mutate a trial by id, ignoring unknown ids (a
+    /// torn-tail WAL can reference trials whose `trial_new` was lost).
+    fn replay_trial_mut(&self, trial_id: u64, f: impl FnOnce(&mut Trial)) {
+        let Some(shard_idx) = self.router.get(trial_id) else { return };
+        let mut guard = self.lock_shard(shard_idx);
+        let state = &mut *guard;
+        if let Some(&(si, ti)) = state.trial_index.get(&trial_id) {
+            f(&mut state.studies[si].trials[ti]);
         }
     }
 }
@@ -932,6 +1254,73 @@ mod tests {
     }
 
     #[test]
+    fn suggestion_stream_identical_across_shard_counts() {
+        // The sharding refactor must not perturb the per-study
+        // suggestion stream: 1 shard (the seed's single-lock layout) and
+        // 8 shards draw byte-identical parameter sequences.
+        for sampler_rich_study in ["alpha", "beta", "gamma"] {
+            let e1 = Engine::in_memory(EngineConfig { n_shards: 1, ..Default::default() });
+            let e8 = Engine::in_memory(EngineConfig { n_shards: 8, ..Default::default() });
+            for i in 0..6 {
+                let a = e1.ask(&ask_body(sampler_rich_study)).unwrap();
+                let b = e8.ask(&ask_body(sampler_rich_study)).unwrap();
+                assert_eq!(
+                    a.params.to_string(),
+                    b.params.to_string(),
+                    "study {sampler_rich_study} trial {i}"
+                );
+                e1.tell(a.trial_id, i as f64).unwrap();
+                e8.tell(b.trial_id, i as f64).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn studies_spread_across_shards() {
+        let e = Engine::in_memory(EngineConfig { n_shards: 8, ..Default::default() });
+        for i in 0..32 {
+            e.ask(&ask_body(&format!("spread-{i}"))).unwrap();
+        }
+        assert_eq!(e.n_studies(), 32);
+        let occupied = e
+            .metrics
+            .shards
+            .iter()
+            .filter(|s| s.studies.get() > 0.0)
+            .count();
+        assert!(occupied >= 4, "32 studies landed on only {occupied}/8 shards");
+        // Read APIs see all studies in id order.
+        let ids: Vec<u64> = e
+            .studies_json()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|s| s.get("id").as_u64().unwrap())
+            .collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(ids, sorted);
+        assert_eq!(ids.len(), 32);
+    }
+
+    #[test]
+    fn last_seen_cleaned_up_on_terminal_states() {
+        let e = Engine::in_memory(EngineConfig::default());
+        let told = e.ask(&ask_body("s")).unwrap();
+        let failed = e.ask(&ask_body("s")).unwrap();
+        let reported = e.ask(&ask_body("s")).unwrap();
+        assert_eq!(e.tracked_running(), 3);
+        e.should_prune(reported.trial_id, 1, 0.5).unwrap();
+        assert_eq!(e.tracked_running(), 3, "report keeps the trial tracked");
+        e.tell(told.trial_id, 1.0).unwrap();
+        assert_eq!(e.tracked_running(), 2, "tell releases tracking");
+        e.fail(failed.trial_id).unwrap();
+        assert_eq!(e.tracked_running(), 1, "fail releases tracking");
+        e.tell(reported.trial_id, 2.0).unwrap();
+        assert_eq!(e.tracked_running(), 0, "no leak once all trials finish");
+    }
+
+    #[test]
     fn durable_recovery_exact() {
         let d = TempDir::new("engine-recover");
         let (study_id, told, running_id);
@@ -985,6 +1374,64 @@ mod tests {
     }
 
     #[test]
+    fn crash_between_snapshot_and_wal_reset_recovers_once() {
+        // Storage::compact renames the snapshot into place and then
+        // truncates the WAL; a crash between those two steps leaves a
+        // snapshot *plus* the full pre-compaction log. Replay must be
+        // idempotent — no duplicated studies or trials.
+        let d = TempDir::new("engine-compact-crash");
+        let wal_path = d.path().join("wal.log");
+        let pre_wal;
+        {
+            let e = Engine::open(d.path(), EngineConfig::default()).unwrap();
+            for s in 0..3 {
+                for i in 0..2 {
+                    let r = e.ask(&ask_body(&format!("cw-{s}"))).unwrap();
+                    e.tell(r.trial_id, i as f64).unwrap();
+                }
+            }
+            pre_wal = std::fs::read(&wal_path).unwrap();
+            e.compact().unwrap();
+        }
+        // Simulate the crash window: snapshot in place, WAL never reset.
+        std::fs::write(&wal_path, &pre_wal).unwrap();
+        let e = Engine::open(d.path(), EngineConfig::default()).unwrap();
+        assert_eq!(e.n_studies(), 3, "studies must not be duplicated");
+        for s in e.studies_json().as_arr().unwrap() {
+            assert_eq!(s.get("n_trials").as_i64(), Some(2));
+            assert_eq!(s.get("n_completed").as_i64(), Some(2));
+        }
+        // Still serves new trials with correct numbering.
+        let r = e.ask(&ask_body("cw-0")).unwrap();
+        assert_eq!(r.trial_number, 2);
+    }
+
+    #[test]
+    fn recovery_identical_across_shard_counts() {
+        // A WAL written by an 8-shard engine recovers exactly on a
+        // 2-shard engine: routing is derived from study keys, not from
+        // the writing engine's layout.
+        let d = TempDir::new("engine-reshard");
+        {
+            let e = Engine::open(d.path(), EngineConfig { n_shards: 8, ..Default::default() })
+                .unwrap();
+            for s in 0..4 {
+                for i in 0..3 {
+                    let r = e.ask(&ask_body(&format!("re-{s}"))).unwrap();
+                    e.tell(r.trial_id, (s * 10 + i) as f64).unwrap();
+                }
+            }
+        }
+        let e = Engine::open(d.path(), EngineConfig { n_shards: 2, ..Default::default() })
+            .unwrap();
+        assert_eq!(e.n_studies(), 4);
+        let studies = e.studies_json();
+        for sv in studies.as_arr().unwrap() {
+            assert_eq!(sv.get("n_completed").as_i64(), Some(3));
+        }
+    }
+
+    #[test]
     fn reap_marks_stale_failed() {
         let mut cfg = EngineConfig::default();
         cfg.reap_after = Some(0.0); // everything is instantly stale
@@ -993,6 +1440,7 @@ mod tests {
         std::thread::sleep(std::time::Duration::from_millis(10));
         assert_eq!(e.reap_stale(), 1);
         assert!(matches!(e.tell(r.trial_id, 1.0), Err(ApiError::Conflict(_))));
+        assert_eq!(e.tracked_running(), 0);
     }
 
     #[test]
@@ -1009,5 +1457,23 @@ mod tests {
         let sj = e.study_json(r.study_id).unwrap();
         assert_eq!(sj.get("n_completed").as_i64(), Some(1));
         assert!(e.study_json(999).is_none());
+    }
+
+    #[test]
+    fn stats_json_shape() {
+        let d = TempDir::new("engine-stats");
+        let e = Engine::open(d.path(), EngineConfig::default()).unwrap();
+        let r = e.ask(&ask_body("s")).unwrap();
+        e.tell(r.trial_id, 1.0).unwrap();
+        let stats = e.stats_json();
+        assert_eq!(stats.get("shards").as_u64(), Some(8));
+        assert_eq!(stats.get("studies").as_u64(), Some(1));
+        assert_eq!(stats.get("asks").as_u64(), Some(1));
+        assert_eq!(stats.get("tracked_running").as_u64(), Some(0));
+        assert_eq!(stats.get("durable").as_bool(), Some(true));
+        let wal = stats.get("wal_commit");
+        // study_new + trial_new + trial_tell committed.
+        assert_eq!(wal.get("records").as_u64(), Some(3));
+        assert!(wal.get("batches").as_u64().unwrap() >= 1);
     }
 }

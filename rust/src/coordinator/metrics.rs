@@ -133,6 +133,19 @@ impl Histogram {
     }
 }
 
+/// Per-shard series of the sharded engine (rendered with a
+/// `shard="i"` label).
+#[derive(Default)]
+pub struct ShardMetrics {
+    /// Mutations (ask/tell/should_prune/fail/reap) applied on the shard.
+    pub ops: Counter,
+    /// Studies owned by the shard.
+    pub studies: Gauge,
+    /// Live `last_seen` entries — running trials tracked for reaping.
+    /// Must return to ~0 when campaigns finish (leak regression).
+    pub tracked_running: Gauge,
+}
+
 /// All service metrics, named after the API surface.
 pub struct Metrics {
     pub ask_total: Counter,
@@ -146,14 +159,34 @@ pub struct Metrics {
     pub trials_completed: Counter,
     pub trials_pruned: Counter,
     pub trials_failed: Counter,
+    /// Failed auto-compaction attempts (snapshot write errors).
+    pub compact_failures: Counter,
     pub wal_records: Gauge,
+    /// Group-commit batches flushed (== fsync count under load).
+    pub wal_commit_batches: Gauge,
+    /// Records committed through the group-commit writer.
+    pub wal_commit_records: Gauge,
+    /// Size of the most recent commit batch.
+    pub wal_commit_last_batch: Gauge,
+    /// Largest commit batch observed.
+    pub wal_commit_max_batch: Gauge,
     pub ask_latency: Histogram,
     pub tell_latency: Histogram,
     pub should_prune_latency: Histogram,
+    /// One entry per engine shard; empty outside the engine (e.g. bare
+    /// `Metrics::default()` in unit tests).
+    pub shards: Vec<ShardMetrics>,
 }
 
 impl Default for Metrics {
     fn default() -> Self {
+        Metrics::with_shards(0)
+    }
+}
+
+impl Metrics {
+    /// Registry sized for an engine with `n` shards.
+    pub fn with_shards(n: usize) -> Metrics {
         Metrics {
             ask_total: Counter::default(),
             tell_total: Counter::default(),
@@ -166,19 +199,23 @@ impl Default for Metrics {
             trials_completed: Counter::default(),
             trials_pruned: Counter::default(),
             trials_failed: Counter::default(),
+            compact_failures: Counter::default(),
             wal_records: Gauge::default(),
+            wal_commit_batches: Gauge::default(),
+            wal_commit_records: Gauge::default(),
+            wal_commit_last_batch: Gauge::default(),
+            wal_commit_max_batch: Gauge::default(),
             ask_latency: Histogram::new(default_latency_bounds()),
             tell_latency: Histogram::new(default_latency_bounds()),
             should_prune_latency: Histogram::new(default_latency_bounds()),
+            shards: (0..n).map(|_| ShardMetrics::default()).collect(),
         }
     }
-}
 
-impl Metrics {
     /// Render Prometheus text exposition format.
     pub fn render(&self) -> String {
         let mut out = String::with_capacity(4096);
-        let counters: [(&str, &Counter); 11] = [
+        let counters: [(&str, &Counter); 12] = [
             ("hopaas_ask_total", &self.ask_total),
             ("hopaas_tell_total", &self.tell_total),
             ("hopaas_should_prune_total", &self.should_prune_total),
@@ -190,6 +227,7 @@ impl Metrics {
             ("hopaas_trials_completed_total", &self.trials_completed),
             ("hopaas_trials_pruned_total", &self.trials_pruned),
             ("hopaas_trials_failed_total", &self.trials_failed),
+            ("hopaas_compact_failures_total", &self.compact_failures),
         ];
         for (name, c) in counters {
             out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
@@ -198,6 +236,41 @@ impl Metrics {
             "# TYPE hopaas_wal_records gauge\nhopaas_wal_records {}\n",
             self.wal_records.get()
         ));
+        for (name, g) in [
+            ("hopaas_wal_commit_batches", &self.wal_commit_batches),
+            ("hopaas_wal_commit_records", &self.wal_commit_records),
+            ("hopaas_wal_commit_last_batch", &self.wal_commit_last_batch),
+            ("hopaas_wal_commit_max_batch", &self.wal_commit_max_batch),
+        ] {
+            out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", g.get()));
+        }
+        if !self.shards.is_empty() {
+            out.push_str(&format!(
+                "# TYPE hopaas_engine_shards gauge\nhopaas_engine_shards {}\n",
+                self.shards.len()
+            ));
+            out.push_str("# TYPE hopaas_shard_ops_total counter\n");
+            for (i, s) in self.shards.iter().enumerate() {
+                out.push_str(&format!(
+                    "hopaas_shard_ops_total{{shard=\"{i}\"}} {}\n",
+                    s.ops.get()
+                ));
+            }
+            out.push_str("# TYPE hopaas_shard_studies gauge\n");
+            for (i, s) in self.shards.iter().enumerate() {
+                out.push_str(&format!(
+                    "hopaas_shard_studies{{shard=\"{i}\"}} {}\n",
+                    s.studies.get()
+                ));
+            }
+            out.push_str("# TYPE hopaas_shard_tracked_running gauge\n");
+            for (i, s) in self.shards.iter().enumerate() {
+                out.push_str(&format!(
+                    "hopaas_shard_tracked_running{{shard=\"{i}\"}} {}\n",
+                    s.tracked_running.get()
+                ));
+            }
+        }
         for (name, h) in [
             ("hopaas_ask_latency_seconds", &self.ask_latency),
             ("hopaas_tell_latency_seconds", &self.tell_latency),
@@ -256,6 +329,23 @@ mod tests {
         // Buckets are cumulative.
         let inf_line = text.lines().find(|l| l.contains("ask") && l.contains("+Inf")).unwrap();
         assert!(inf_line.ends_with('1'));
+    }
+
+    #[test]
+    fn shard_series_rendered_with_labels() {
+        let m = Metrics::with_shards(2);
+        m.shards[0].ops.add(3);
+        m.shards[1].studies.set(4.0);
+        m.shards[1].tracked_running.set(2.0);
+        m.wal_commit_batches.set(5.0);
+        let text = m.render();
+        assert!(text.contains("hopaas_engine_shards 2"));
+        assert!(text.contains("hopaas_shard_ops_total{shard=\"0\"} 3"));
+        assert!(text.contains("hopaas_shard_studies{shard=\"1\"} 4"));
+        assert!(text.contains("hopaas_shard_tracked_running{shard=\"1\"} 2"));
+        assert!(text.contains("hopaas_wal_commit_batches 5"));
+        // No shard series when the registry has no shards.
+        assert!(!Metrics::default().render().contains("hopaas_shard_ops_total"));
     }
 
     #[test]

@@ -19,16 +19,22 @@
 //! * [`pruners`] — median, percentile, successive-halving (ASHA),
 //!   hyperband, threshold, patient;
 //! * [`auth`] — HMAC-signed API tokens with expiry + revocation;
-//! * [`engine`] — the lock-disciplined core that the HTTP layer calls;
+//! * [`registry`] — the study directory and trial→shard router of the
+//!   sharded engine (who lives where);
+//! * [`engine`] — the sharded, lock-disciplined core that the HTTP
+//!   layer calls: N independent shards over a group-commit WAL (see
+//!   `ARCHITECTURE.md` for the layer diagram and durability contract);
 //! * [`service`] — HTTP handlers (Table 1 APIs + web/data APIs + the
 //!   embedded dashboard);
-//! * [`metrics`] — counters/histograms and the Prometheus endpoint.
+//! * [`metrics`] — counters/histograms and the Prometheus endpoint,
+//!   including per-shard and commit-batch series.
 
 pub mod auth;
 pub mod engine;
 pub mod metrics;
 pub mod mo;
 pub mod pruners;
+pub mod registry;
 pub mod samplers;
 pub mod service;
 pub mod space;

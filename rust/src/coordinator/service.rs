@@ -14,6 +14,8 @@
 //! | study          | GET    | `/api/studies/{id}`         |
 //! | trials         | GET    | `/api/studies/{id}/trials`  |
 //! | series         | GET    | `/api/studies/{id}/series`  |
+//! | pareto         | GET    | `/api/studies/{id}/pareto`  |
+//! | engine stats   | GET    | `/api/stats`                |
 //! | metrics        | GET    | `/metrics`                  |
 //! | health         | GET    | `/healthz`                  |
 //! | dashboard      | GET    | `/`                         |
@@ -381,10 +383,19 @@ pub fn build_router(
         });
     }
 
+    // --- engine statistics (shards, group-commit batching) ----------------
+    {
+        let engine = engine.clone();
+        router.get("/api/stats", move |_, _| Response::json(&engine.stats_json()));
+    }
+
     // --- metrics + dashboard ----------------------------------------------
     {
         let engine = engine.clone();
-        router.get("/metrics", move |_, _| Response::text(&engine.metrics.render()));
+        router.get("/metrics", move |_, _| {
+            engine.refresh_storage_metrics();
+            Response::text(&engine.metrics.render())
+        });
     }
     router.get("/", |_, _| Response::html(DASHBOARD_HTML));
 
@@ -589,9 +600,16 @@ mod tests {
         assert_eq!(series.at(0).get("points").at(0).at(1).as_f64(), Some(2.0));
         assert_eq!(c.get("/api/studies/99").unwrap().status, 404);
 
+        let stats = c.get("/api/stats").unwrap().json_body().unwrap();
+        assert_eq!(stats.get("shards").as_u64(), Some(8));
+        assert_eq!(stats.get("studies").as_u64(), Some(1));
+        assert_eq!(stats.get("durable").as_bool(), Some(false));
+
         let metrics = c.get("/metrics").unwrap();
         let text = String::from_utf8(metrics.body).unwrap();
         assert!(text.contains("hopaas_ask_total 1"));
+        assert!(text.contains("hopaas_engine_shards 8"));
+        assert!(text.contains("hopaas_shard_ops_total{shard=\"0\"}"));
         let dash = c.get("/").unwrap();
         assert_eq!(dash.status, 200);
         assert!(String::from_utf8(dash.body).unwrap().contains("HOPAAS"));

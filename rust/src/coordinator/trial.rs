@@ -94,6 +94,32 @@ impl Trial {
         Ok(())
     }
 
+    /// Would a terminal transition (`tell`/`prune`/`fail`) be accepted
+    /// right now? The engine persists the WAL record between this check
+    /// and the apply, so the two must agree — which they do by
+    /// construction: every transition's only precondition is
+    /// `ensure_running`.
+    pub fn validate_transition(&self, action: &'static str) -> Result<(), StateError> {
+        self.ensure_running(action)
+    }
+
+    /// Would `report(step, _)` be accepted? Running and non-regressing.
+    /// [`Trial::report`] calls this itself, so engine-side
+    /// validate-persist-apply cannot drift from the state machine.
+    pub fn validate_report(&self, step: u64) -> Result<(), StateError> {
+        self.ensure_running("should_prune")?;
+        if let Some(&(last, _)) = self.intermediate.last() {
+            if step < last {
+                return Err(StateError {
+                    id: self.id,
+                    state: self.state,
+                    action: "report-regress",
+                });
+            }
+        }
+        Ok(())
+    }
+
     /// Finalize with an objective value (`tell`).
     pub fn complete(&mut self, value: f64, now: f64) -> Result<(), StateError> {
         self.ensure_running("tell")?;
@@ -115,11 +141,8 @@ impl Trial {
     /// Record an intermediate report (`should_prune`). Steps must be
     /// non-decreasing; an equal step overwrites (client retry).
     pub fn report(&mut self, step: u64, value: f64) -> Result<(), StateError> {
-        self.ensure_running("should_prune")?;
+        self.validate_report(step)?;
         if let Some(&(last, _)) = self.intermediate.last() {
-            if step < last {
-                return Err(StateError { id: self.id, state: self.state, action: "report-regress" });
-            }
             if step == last {
                 self.intermediate.pop();
             }
@@ -233,6 +256,21 @@ mod tests {
 
     fn trial() -> Trial {
         Trial::new(7, 0, vec![("x".into(), Value::Num(1.5))], 10.0, Some("n1".into()))
+    }
+
+    #[test]
+    fn validators_agree_with_transitions() {
+        // The engine persists a WAL record between validate and apply;
+        // these assertions pin the two to the same predicates.
+        let mut t = trial();
+        assert!(t.validate_transition("tell").is_ok());
+        assert!(t.validate_report(1).is_ok());
+        t.report(3, 1.0).unwrap();
+        assert!(t.validate_report(2).is_err(), "regressing step rejected");
+        assert!(t.validate_report(3).is_ok(), "equal step (retry) accepted");
+        t.complete(1.0, 1.0).unwrap();
+        assert!(t.validate_transition("tell").is_err());
+        assert!(t.validate_report(4).is_err());
     }
 
     #[test]

@@ -52,6 +52,8 @@ COMMANDS:
                     --data-dir PATH    durable WAL+snapshot storage
                     --no-auth          disable token auth (dev only)
                     --secret S         HMAC token secret
+                    --shards N         engine shards (default 8)
+                    --wal-batch N      target records per group-commit fsync
                     --config FILE      JSON config (flags override)
   token             mint an API token offline
                     --secret S --user NAME --ttl SECONDS

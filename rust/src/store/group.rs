@@ -1,0 +1,408 @@
+//! Group-commit WAL writer.
+//!
+//! The seed engine fsync'd once per mutation while holding the global
+//! engine lock, so a 1000-tell burst paid 1000 serialized disk flushes.
+//! [`GroupWal`] moves all file I/O onto one dedicated writer thread fed
+//! by a bounded channel:
+//!
+//! 1. engine shards enqueue a [`Record`] plus a completion handle and
+//!    block until the handle fires;
+//! 2. the writer drains whatever has accumulated (up to
+//!    [`GroupWalConfig::batch_max`]), appends every frame unsynced in
+//!    arrival order, stamps each record with a global commit `seq`,
+//!    issues **one** fsync for the whole batch, then acknowledges every
+//!    sender.
+//!
+//! A mutation is therefore acknowledged only after its record is on
+//! stable storage — the crash contract `fault_tolerance.rs` tests is
+//! unchanged — but N shards committing concurrently share a flush
+//! instead of queueing N of them.
+//!
+//! Compaction also runs on the writer thread (snapshot tmp-file → fsync
+//! → rename → WAL reset), so no other thread ever touches the log file
+//! and no file lock is needed.
+
+use super::{Record, Storage};
+use crate::json::Value;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, SyncSender, TryRecvError};
+use std::sync::Arc;
+
+/// Tuning for the writer thread.
+#[derive(Clone, Copy, Debug)]
+pub struct GroupWalConfig {
+    /// Soft cap on records flushed under one fsync: the drain loop
+    /// stops admitting further jobs once a batch reaches this size.
+    /// It can be exceeded by one job's worth of records — a job
+    /// (notably a bulk [`GroupWal::append_many`]) is committed and
+    /// acknowledged atomically, never split across fsyncs.
+    pub batch_max: usize,
+    /// Bound on queued-but-unwritten jobs (backpressure).
+    pub queue_depth: usize,
+}
+
+impl Default for GroupWalConfig {
+    fn default() -> Self {
+        GroupWalConfig { batch_max: 256, queue_depth: 1024 }
+    }
+}
+
+/// Commit statistics, shared with the engine for `/metrics`. Only
+/// *successful* (durable, acknowledged) batches count here; a failed
+/// batch is rolled back and recorded in `failed_batches` instead.
+#[derive(Debug, Default)]
+pub struct GroupWalStats {
+    /// Batches flushed durably (successful fsync count).
+    pub batches: AtomicU64,
+    /// Records committed through the writer.
+    pub records: AtomicU64,
+    /// Size of the most recent committed batch.
+    pub last_batch: AtomicU64,
+    /// Largest committed batch observed.
+    pub max_batch: AtomicU64,
+    /// Batches that failed (write or fsync error) and were rolled back.
+    pub failed_batches: AtomicU64,
+}
+
+impl GroupWalStats {
+    /// `(batches, records, last_batch, max_batch)` snapshot.
+    pub fn snapshot(&self) -> (u64, u64, u64, u64) {
+        (
+            self.batches.load(Ordering::Relaxed),
+            self.records.load(Ordering::Relaxed),
+            self.last_batch.load(Ordering::Relaxed),
+            self.max_batch.load(Ordering::Relaxed),
+        )
+    }
+}
+
+type Ack = SyncSender<Result<(), String>>;
+
+enum Cmd {
+    /// One or more records committed (and acknowledged) together.
+    Append(Vec<Record>, Ack),
+    Compact(Value, Ack),
+}
+
+/// Handle to the writer thread. Cloneable-by-`Arc` at the engine level;
+/// dropping the last handle shuts the writer down after draining.
+pub struct GroupWal {
+    tx: Option<SyncSender<Cmd>>,
+    stats: Arc<GroupWalStats>,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl GroupWal {
+    /// Take ownership of `storage` and start the writer thread.
+    /// `next_seq` continues the commit sequence recovered from replay.
+    pub fn start(storage: Storage, config: GroupWalConfig, next_seq: u64) -> GroupWal {
+        let (tx, rx) = std::sync::mpsc::sync_channel(config.queue_depth.max(1));
+        let stats = Arc::new(GroupWalStats::default());
+        let thread_stats = stats.clone();
+        let batch_max = config.batch_max.max(1);
+        let handle = std::thread::Builder::new()
+            .name("hopaas-wal".into())
+            .spawn(move || writer_loop(storage, rx, batch_max, next_seq, thread_stats))
+            .expect("spawn wal writer");
+        GroupWal { tx: Some(tx), stats, handle: Some(handle) }
+    }
+
+    /// Durably append one record: blocks until the record's batch has
+    /// been fsynced. Errors if the write or flush failed — the caller
+    /// must not acknowledge the mutation in that case.
+    pub fn append(&self, record: Record) -> Result<(), String> {
+        self.roundtrip(|ack| Cmd::Append(vec![record], ack))
+    }
+
+    /// Durably append several records in one roundtrip: all of them
+    /// share (at most) one fsync and one channel wait. Used by bulk
+    /// paths like reaping, where per-record roundtrips would serialize
+    /// K fsync latencies under a shard lock.
+    pub fn append_many(&self, records: Vec<Record>) -> Result<(), String> {
+        if records.is_empty() {
+            return Ok(());
+        }
+        self.roundtrip(|ack| Cmd::Append(records, ack))
+    }
+
+    /// Write `state` as the new snapshot and truncate the log. The
+    /// caller is responsible for quiescing mutations first (the engine
+    /// holds every shard lock), so the queue is empty of appends whose
+    /// effects are inside `state`.
+    pub fn compact(&self, state: Value) -> Result<(), String> {
+        self.roundtrip(|ack| Cmd::Compact(state, ack))
+    }
+
+    /// Commit statistics for metrics export.
+    pub fn stats(&self) -> &GroupWalStats {
+        &self.stats
+    }
+
+    fn roundtrip(&self, make: impl FnOnce(Ack) -> Cmd) -> Result<(), String> {
+        let tx = self.tx.as_ref().expect("wal writer running");
+        let (ack_tx, ack_rx) = std::sync::mpsc::sync_channel(1);
+        tx.send(make(ack_tx))
+            .map_err(|_| "wal writer stopped".to_string())?;
+        ack_rx
+            .recv()
+            .map_err(|_| "wal writer stopped".to_string())?
+    }
+}
+
+impl Drop for GroupWal {
+    fn drop(&mut self) {
+        // Closing the channel lets the writer drain the queue and exit;
+        // joining guarantees every acknowledged record hit the disk
+        // before the storage directory can be reopened.
+        drop(self.tx.take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn writer_loop(
+    mut storage: Storage,
+    rx: Receiver<Cmd>,
+    batch_max: usize,
+    mut next_seq: u64,
+    stats: Arc<GroupWalStats>,
+) {
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Compact(state, ack) => {
+                let _ = ack.send(storage.compact(&state).map_err(|e| e.to_string()));
+            }
+            Cmd::Append(records, ack) => {
+                let mut total = records.len();
+                let mut jobs: Vec<(Vec<Record>, Ack)> = vec![(records, ack)];
+                // Greedy drain: everything already queued joins this
+                // commit, which is what collapses per-mutation fsyncs
+                // under load while adding zero latency when idle.
+                let mut deferred = None;
+                while total < batch_max {
+                    match rx.try_recv() {
+                        Ok(Cmd::Append(r, a)) => {
+                            total += r.len();
+                            jobs.push((r, a));
+                        }
+                        Ok(other) => {
+                            deferred = Some(other);
+                            break;
+                        }
+                        Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+                    }
+                }
+
+                let mark = storage.wal_stats();
+                let seq_mark = next_seq;
+                let mut result: Result<(), String> = Ok(());
+                for (recs, _) in jobs.iter_mut() {
+                    for rec in recs.iter_mut() {
+                        rec.seq = next_seq;
+                        next_seq += 1;
+                        if result.is_ok() {
+                            if let Err(e) = storage.append_nosync(rec) {
+                                result = Err(e.to_string());
+                            }
+                        }
+                    }
+                }
+                if result.is_ok() {
+                    if let Err(e) = storage.sync() {
+                        result = Err(e.to_string());
+                    }
+                }
+                if result.is_err() {
+                    // Every job in this batch is NACKed, so none of its
+                    // frames may survive: a later successful fsync would
+                    // otherwise make a rejected mutation durable and
+                    // replay would resurrect state the engine never
+                    // acknowledged. Roll the file back to the batch
+                    // start (best effort — a failing truncate is
+                    // reported alongside the original error).
+                    next_seq = seq_mark;
+                    if let Err(e) = storage.rollback(mark) {
+                        result = result
+                            .map_err(|orig| format!("{orig}; rollback failed: {e}"));
+                    }
+                }
+
+                match &result {
+                    Ok(()) => {
+                        let n = total as u64;
+                        stats.batches.fetch_add(1, Ordering::Relaxed);
+                        stats.records.fetch_add(n, Ordering::Relaxed);
+                        stats.last_batch.store(n, Ordering::Relaxed);
+                        stats.max_batch.fetch_max(n, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        stats.failed_batches.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                for (_, ack) in jobs {
+                    let _ = ack.send(result.clone());
+                }
+                if let Some(Cmd::Compact(state, ack)) = deferred {
+                    let _ = ack.send(storage.compact(&state).map_err(|e| e.to_string()));
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::TempDir;
+
+    fn rec(i: i64) -> Record {
+        let mut o = Value::obj();
+        o.set("i", i);
+        Record::new("e", Value::Obj(o))
+    }
+
+    fn reload(dir: &std::path::Path) -> Vec<Record> {
+        let mut s = Storage::open(dir).unwrap();
+        s.load().unwrap().1
+    }
+
+    #[test]
+    fn appends_are_durable_when_acknowledged() {
+        let d = TempDir::new("group-ack");
+        {
+            let storage = Storage::open(d.path()).unwrap();
+            let w = GroupWal::start(storage, GroupWalConfig::default(), 0);
+            for i in 0..10 {
+                w.append(rec(i)).unwrap();
+            }
+            // Dropping joins the writer; but every append above was
+            // already acknowledged, hence already fsynced.
+        }
+        let events = reload(d.path());
+        assert_eq!(events.len(), 10);
+        assert_eq!(events[4], rec(4));
+    }
+
+    #[test]
+    fn seq_is_stamped_in_commit_order() {
+        let d = TempDir::new("group-seq");
+        {
+            let storage = Storage::open(d.path()).unwrap();
+            let w = GroupWal::start(storage, GroupWalConfig::default(), 7);
+            for i in 0..5 {
+                w.append(rec(i)).unwrap();
+            }
+        }
+        let events = reload(d.path());
+        let seqs: Vec<u64> = events.iter().map(|r| r.seq).collect();
+        assert_eq!(seqs, vec![7, 8, 9, 10, 11]);
+    }
+
+    #[test]
+    fn concurrent_appends_share_fsyncs() {
+        let d = TempDir::new("group-batch");
+        let n_threads = 8;
+        let per_thread = 25;
+        let stats;
+        {
+            let storage = Storage::open(d.path()).unwrap();
+            let w = Arc::new(GroupWal::start(storage, GroupWalConfig::default(), 0));
+            let handles: Vec<_> = (0..n_threads)
+                .map(|t| {
+                    let w = w.clone();
+                    std::thread::spawn(move || {
+                        for i in 0..per_thread {
+                            w.append(rec((t * 1000 + i) as i64)).unwrap();
+                        }
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+            stats = w.stats().snapshot();
+        }
+        let total = (n_threads * per_thread) as u64;
+        let (batches, records, _, max_batch) = stats;
+        assert_eq!(records, total);
+        assert!(batches <= total, "batches ({batches}) never exceed records");
+        assert!(max_batch >= 1);
+        // Every record survived, exactly once, whatever the batching.
+        let events = reload(d.path());
+        assert_eq!(events.len(), total as usize);
+        let mut seqs: Vec<u64> = events.iter().map(|r| r.seq).collect();
+        let sorted = {
+            let mut s = seqs.clone();
+            s.sort_unstable();
+            s
+        };
+        assert_eq!(seqs, sorted, "file order == commit order");
+        seqs.dedup();
+        assert_eq!(seqs.len(), total as usize, "seq unique");
+    }
+
+    #[test]
+    fn append_many_is_one_roundtrip_for_all_records() {
+        let d = TempDir::new("group-many");
+        {
+            let storage = Storage::open(d.path()).unwrap();
+            let w = GroupWal::start(storage, GroupWalConfig::default(), 0);
+            w.append_many((0..50).map(rec).collect()).unwrap();
+            w.append_many(Vec::new()).unwrap(); // no-op, no batch
+            let (batches, records, last, _) = w.stats().snapshot();
+            assert_eq!(batches, 1, "bulk append shares one flush");
+            assert_eq!(records, 50);
+            assert_eq!(last, 50);
+        }
+        let events = reload(d.path());
+        assert_eq!(events.len(), 50);
+        assert_eq!(events[49], rec(49));
+    }
+
+    #[test]
+    fn failed_batch_leaves_no_phantom_frames() {
+        let d = TempDir::new("group-rollback");
+        {
+            let storage = Storage::open(d.path()).unwrap();
+            let w = GroupWal::start(storage, GroupWalConfig::default(), 0);
+            w.append(rec(1)).unwrap();
+            // A record above MAX_RECORD fails its append mid-batch; the
+            // good record sharing the batch is NACKed and must not
+            // survive on disk either — a later fsync would otherwise
+            // make a rejected mutation durable.
+            let huge = Record::new("e", Value::Str("x".repeat(65 * 1024 * 1024)));
+            assert!(w.append_many(vec![rec(2), huge]).is_err());
+            // Writer stays usable; seq continues from the rollback point.
+            w.append(rec(3)).unwrap();
+            // Only the two durable batches count as committed.
+            let (batches, records, _, _) = w.stats().snapshot();
+            assert_eq!(batches, 2);
+            assert_eq!(records, 2);
+            assert_eq!(w.stats().failed_batches.load(Ordering::Relaxed), 1);
+        }
+        let events = reload(d.path());
+        assert_eq!(events, vec![rec(1), rec(3)]);
+        assert_eq!(events[1].seq, 1, "seq rolled back with the frames");
+    }
+
+    #[test]
+    fn compact_truncates_and_later_appends_survive() {
+        let d = TempDir::new("group-compact");
+        {
+            let storage = Storage::open(d.path()).unwrap();
+            let w = GroupWal::start(storage, GroupWalConfig::default(), 0);
+            for i in 0..6 {
+                w.append(rec(i)).unwrap();
+            }
+            let mut snap = Value::obj();
+            snap.set("count", 6);
+            w.compact(Value::Obj(snap)).unwrap();
+            w.append(rec(100)).unwrap();
+        }
+        let mut s = Storage::open(d.path()).unwrap();
+        let (snap, events) = s.load().unwrap();
+        assert_eq!(snap.unwrap().get("count").as_i64(), Some(6));
+        assert_eq!(events, vec![rec(100)]);
+    }
+}

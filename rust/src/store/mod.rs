@@ -15,39 +15,74 @@
 //! by checksum and cleanly discarded; corruption in the *middle* of the
 //! log stops recovery at the last valid record, which is the same
 //! guarantee a write-ahead log gives.
+//!
+//! [`GroupWal`] layers *group commit* on top: a dedicated writer thread
+//! drains a bounded channel of records from all engine shards, frames
+//! them in arrival order, fsyncs once per batch, and only then
+//! acknowledges each sender — so "acknowledged ⇒ durable" is preserved
+//! while N concurrent mutations cost one disk flush instead of N.
 
+mod group;
 mod wal;
 
+pub use group::{GroupWal, GroupWalConfig, GroupWalStats};
 pub use wal::{Wal, WalError, WalStats};
 
 use crate::json::Value;
 use std::path::Path;
 
-/// A record in the event log: a tagged JSON payload.
-#[derive(Clone, Debug, PartialEq)]
+/// A record in the event log: a tagged JSON payload plus commit
+/// metadata stamped by the WAL writer.
+#[derive(Clone, Debug)]
 pub struct Record {
     /// Event tag, e.g. `"study"`, `"trial_new"`, `"trial_tell"`.
     pub tag: String,
     pub payload: Value,
+    /// Global commit sequence number, stamped by the (single) WAL writer
+    /// in file order. 0 until committed; records recovered from logs
+    /// written before group commit also read back as 0. Within one shard
+    /// `seq` is strictly increasing — the shard-stable replay order.
+    pub seq: u64,
+    /// Originating engine shard (observability + future parallel replay).
+    pub shard: u32,
 }
 
 impl Record {
     pub fn new(tag: impl Into<String>, payload: Value) -> Self {
-        Record { tag: tag.into(), payload }
+        Record { tag: tag.into(), payload, seq: 0, shard: 0 }
     }
 
-    /// Wire form: `{"t": tag, "p": payload}`.
+    /// Attach the originating shard index.
+    pub fn with_shard(mut self, shard: u32) -> Self {
+        self.shard = shard;
+        self
+    }
+
+    /// Wire form: `{"t": tag, "p": payload, "s": seq, "h": shard}`.
     pub fn to_value(&self) -> Value {
         let mut o = Value::obj();
         o.set("t", self.tag.as_str());
         o.set("p", self.payload.clone());
+        o.set("s", self.seq);
+        o.set("h", self.shard);
         Value::Obj(o)
     }
 
     pub fn from_value(v: &Value) -> Option<Record> {
         let tag = v.get("t").as_str()?.to_string();
         let payload = v.get("p").clone();
-        Some(Record { tag, payload })
+        let seq = v.get("s").as_u64().unwrap_or(0);
+        let shard = v.get("h").as_u64().unwrap_or(0) as u32;
+        Some(Record { tag, payload, seq, shard })
+    }
+}
+
+/// Commit metadata (`seq`, `shard`) is bookkeeping, not identity: two
+/// records are the same event if tag and payload match, whichever batch
+/// they were flushed in.
+impl PartialEq for Record {
+    fn eq(&self, other: &Self) -> bool {
+        self.tag == other.tag && self.payload == other.payload
     }
 }
 
@@ -93,6 +128,24 @@ impl Storage {
     /// Append one event durably (fsync'd before return).
     pub fn append(&mut self, record: &Record) -> Result<(), WalError> {
         self.wal.append(&record.to_value())
+    }
+
+    /// Append one event without flushing; durable only after
+    /// [`Storage::sync`]. The group-commit writer frames a whole batch
+    /// this way and pays for a single fsync.
+    pub fn append_nosync(&mut self, record: &Record) -> Result<(), WalError> {
+        self.wal.append_nosync(&record.to_value())
+    }
+
+    /// Flush all appended events to stable storage.
+    pub fn sync(&mut self) -> Result<(), WalError> {
+        self.wal.sync()
+    }
+
+    /// Roll the log back to a previously captured [`Storage::wal_stats`]
+    /// mark, discarding partially written (never acknowledged) frames.
+    pub fn rollback(&mut self, mark: WalStats) -> Result<(), WalError> {
+        self.wal.truncate_to(mark)
     }
 
     /// Write a snapshot of full state and truncate the WAL atomically
@@ -176,5 +229,23 @@ mod tests {
     fn record_roundtrip() {
         let r = rec("trial_tell", 42);
         assert_eq!(Record::from_value(&r.to_value()), Some(r));
+    }
+
+    #[test]
+    fn record_commit_metadata_roundtrips_but_is_not_identity() {
+        let mut r = rec("trial_tell", 7).with_shard(3);
+        r.seq = 99;
+        let back = Record::from_value(&r.to_value()).unwrap();
+        assert_eq!(back.seq, 99);
+        assert_eq!(back.shard, 3);
+        // Equality ignores commit metadata.
+        assert_eq!(back, rec("trial_tell", 7));
+        // Pre-group-commit wire form (no "s"/"h") defaults to 0.
+        let legacy = rec("trial_tell", 7);
+        let mut v = Value::obj();
+        v.set("t", "trial_tell").set("p", legacy.payload.clone());
+        let parsed = Record::from_value(&Value::Obj(v)).unwrap();
+        assert_eq!(parsed.seq, 0);
+        assert_eq!(parsed.shard, 0);
     }
 }

@@ -56,6 +56,14 @@ impl Wal {
     /// Append one JSON record; fsync before returning so an acknowledged
     /// API mutation is durable.
     pub fn append(&mut self, value: &Value) -> Result<(), WalError> {
+        self.append_nosync(value)?;
+        self.sync()
+    }
+
+    /// Append one JSON record *without* flushing. The record is durable
+    /// only after a subsequent [`Wal::sync`]. Group commit uses this to
+    /// frame a whole batch of records and pay for one fsync.
+    pub fn append_nosync(&mut self, value: &Value) -> Result<(), WalError> {
         let payload = value.to_string().into_bytes();
         let len = payload.len() as u32;
         if len > MAX_RECORD {
@@ -67,9 +75,27 @@ impl Wal {
         frame.extend_from_slice(&crc.to_le_bytes());
         frame.extend_from_slice(&payload);
         self.file.write_all(&frame)?;
-        self.file.sync_data()?;
         self.stats.records += 1;
         self.stats.bytes += frame.len() as u64;
+        Ok(())
+    }
+
+    /// Flush everything appended so far to stable storage.
+    pub fn sync(&mut self) -> Result<(), WalError> {
+        self.file.sync_data()?;
+        Ok(())
+    }
+
+    /// Roll the log back to a previously captured [`Wal::stats`] mark,
+    /// discarding frames appended (but not yet acknowledged) since.
+    /// Group commit uses this when a batch write fails, so a NACKed
+    /// mutation can never be resurrected by a later fsync + replay.
+    pub fn truncate_to(&mut self, mark: WalStats) -> Result<(), WalError> {
+        self.file.set_len(mark.bytes)?;
+        self.file.sync_data()?;
+        self.file.seek(SeekFrom::End(0))?;
+        self.stats.bytes = mark.bytes;
+        self.stats.records = mark.records;
         Ok(())
     }
 
@@ -222,6 +248,19 @@ mod tests {
         let mut w = Wal::open(p).unwrap();
         let rec = w.replay().unwrap();
         assert_eq!(rec.len(), 1, "replay stops at last valid record");
+    }
+
+    #[test]
+    fn nosync_batch_then_sync_replays_all() {
+        let d = TempDir::new("wal-batch");
+        let mut w = Wal::open(d.path().join("w.log")).unwrap();
+        for i in 0..5 {
+            w.append_nosync(&val(i)).unwrap();
+        }
+        w.sync().unwrap();
+        let rec = w.replay().unwrap();
+        assert_eq!(rec.len(), 5);
+        assert_eq!(rec[4], val(4));
     }
 
     #[test]

@@ -232,6 +232,76 @@ fn concurrent_asks_get_unique_trials() {
 }
 
 #[test]
+fn pareto_endpoint_is_get_with_schema() {
+    let s = server(false);
+    let mut c = Client::connect(s.addr()).unwrap();
+    // Unknown study → 404 with the error envelope.
+    let r = c.get("/api/studies/99/pareto").unwrap();
+    assert_eq!(r.status, 404);
+    assert!(r.json_body().unwrap().get("detail").as_str().is_some());
+
+    // A multi-objective study: ask twice, tell vector values.
+    let mo_body = parse(
+        r#"{
+        "study_name": "pareto-conf",
+        "properties": {"x": {"low": 0.0, "high": 1.0}},
+        "direction": ["minimize", "minimize"],
+        "sampler": {"name": "random"}
+    }"#,
+    )
+    .unwrap();
+    let mut sid = 0;
+    let mut front_ids = Vec::new();
+    for values in [[0.1, 0.9], [0.9, 0.1]] {
+        let ask = c.post_json("/api/ask/x", &mo_body).unwrap().json_body().unwrap();
+        sid = ask.get("study_id").as_u64().unwrap();
+        let id = ask.get("trial_id").as_u64().unwrap();
+        front_ids.push(id);
+        let mut tell = Value::obj();
+        tell.set("trial_id", id)
+            .set("values", Value::Arr(values.iter().map(|&v| Value::Num(v)).collect()));
+        let r = c.post_json("/api/tell/x", &Value::Obj(tell)).unwrap();
+        assert_eq!(r.status, 200);
+    }
+
+    let r = c.get(&format!("/api/studies/{sid}/pareto")).unwrap();
+    assert_eq!(r.status, 200);
+    let front = r.json_body().unwrap();
+    let arr = front.as_arr().unwrap();
+    // Both points are mutually non-dominated → both on the front, each
+    // with full trial schema (id, state, values).
+    assert_eq!(arr.len(), 2);
+    for t in arr {
+        assert!(front_ids.contains(&t.get("id").as_u64().unwrap()));
+        assert_eq!(t.get("state").as_str(), Some("completed"));
+        assert_eq!(t.get("values").as_arr().unwrap().len(), 2);
+    }
+    // POST on the read endpoint is 405.
+    assert_eq!(c.post(&format!("/api/studies/{sid}/pareto"), b"{}").unwrap().status, 405);
+    // A single-objective study has an empty (but valid) front.
+    let ask = c.post_json("/api/ask/x", &ask_body()).unwrap().json_body().unwrap();
+    let so_sid = ask.get("study_id").as_u64().unwrap();
+    let r = c.get(&format!("/api/studies/{so_sid}/pareto")).unwrap();
+    assert_eq!(r.status, 200);
+    assert_eq!(r.json_body().unwrap().as_arr().unwrap().len(), 0);
+    s.stop();
+}
+
+#[test]
+fn engine_stats_api() {
+    let s = server(false);
+    let mut c = Client::connect(s.addr()).unwrap();
+    c.post_json("/api/ask/x", &ask_body()).unwrap();
+    let stats = c.get("/api/stats").unwrap().json_body().unwrap();
+    assert_eq!(stats.get("shards").as_u64(), Some(8));
+    assert_eq!(stats.get("studies").as_u64(), Some(1));
+    assert_eq!(stats.get("asks").as_u64(), Some(1));
+    assert_eq!(stats.get("tracked_running").as_u64(), Some(1));
+    assert_eq!(stats.get("durable").as_bool(), Some(false));
+    s.stop();
+}
+
+#[test]
 fn web_data_apis_schema() {
     let s = server(false);
     let mut c = Client::connect(s.addr()).unwrap();

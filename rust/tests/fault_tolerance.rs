@@ -182,6 +182,60 @@ fn churny_campaign_under_durable_server_loses_nothing() {
 }
 
 #[test]
+fn concurrent_told_trials_survive_restart_under_group_commit() {
+    // Many clients tell concurrently, so the WAL writer actually batches
+    // (several records per fsync); the invariant is unchanged — every
+    // tell that returned 200 must be present after restart.
+    let dir = TempDir::new("group-commit");
+    let told: Vec<(u64, f64)>;
+    {
+        let server = HopaasServer::start("127.0.0.1:0", durable_config(&dir.0)).unwrap();
+        let addr = server.addr();
+        let handles: Vec<_> = (0..6u64)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    let spec = StudySpec::new(&format!("gc-{t}"))
+                        .uniform("x", 0.0, 1.0)
+                        .sampler("random");
+                    let mut c = HopaasClient::connect(addr, "x".into()).unwrap();
+                    let mut acked = Vec::new();
+                    for i in 0..10u64 {
+                        let tr = c.ask(&spec).unwrap();
+                        let v = (t * 100 + i) as f64;
+                        c.tell(&tr, v).unwrap();
+                        acked.push((tr.trial_id, v));
+                    }
+                    acked
+                })
+            })
+            .collect();
+        told = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        let stats = server.engine.stats_json();
+        let commit = stats.get("wal_commit");
+        // 6 studies × (1 study_new + 10 trial_new + 10 trial_tell).
+        assert_eq!(commit.get("records").as_u64(), Some(126));
+        assert!(commit.get("batches").as_u64().unwrap() >= 1);
+        server.stop();
+    }
+    let server = HopaasServer::start("127.0.0.1:0", durable_config(&dir.0)).unwrap();
+    let studies = server.engine.studies_json();
+    assert_eq!(studies.as_arr().unwrap().len(), 6);
+    let mut recovered = std::collections::HashMap::new();
+    for s in studies.as_arr().unwrap() {
+        let sid = s.get("id").as_u64().unwrap();
+        for t in server.engine.trials_json(sid).unwrap().as_arr().unwrap() {
+            if let (Some(id), Some(v)) = (t.get("id").as_u64(), t.get("value").as_f64()) {
+                recovered.insert(id, v);
+            }
+        }
+    }
+    for (id, v) in &told {
+        assert_eq!(recovered.get(id), Some(v), "acknowledged tell {id} lost");
+    }
+    server.stop();
+}
+
+#[test]
 fn wal_torn_tail_tolerated_on_restart() {
     let dir = TempDir::new("torn");
     let spec = StudySpec::new("torn").uniform("x", 0.0, 1.0).sampler("random");
