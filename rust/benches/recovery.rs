@@ -1,0 +1,160 @@
+//! Recovery benchmark: replay wall-clock of a large WAL at 1 / 4 / 8 /
+//! 16 shards.
+//!
+//! Recovery partitions the log by study and replays each partition on
+//! its own thread (one per shard by default), so wall-clock should
+//! scale *down* as the shard count grows — the 1-shard row is the
+//! sequential-replay baseline. Results are printed as a table and
+//! written to `BENCH_recovery.json` at the repository root so CI can
+//! archive the trajectory.
+//!
+//! Run: `cargo bench --bench recovery [-- --records N]`
+//! (default 120_000 records ≈ 60k ask+tell pairs across 16 studies).
+
+use hopaas::bench::{fmt_duration, Table};
+use hopaas::coordinator::engine::{Engine, EngineConfig};
+use hopaas::json::{parse, Value};
+use std::sync::Arc;
+use std::time::Instant;
+
+const N_STUDIES: usize = 16;
+const BUILD_THREADS: usize = 8;
+
+fn ask_body(study: usize) -> Value {
+    parse(&format!(
+        r#"{{
+        "study_name": "recovery-{study}",
+        "properties": {{
+            "x": {{"low": 0.0, "high": 1.0}},
+            "y": {{"low": 1e-4, "high": 1.0, "type": "loguniform"}}
+        }},
+        "direction": "minimize",
+        "sampler": {{"name": "random"}}
+    }}"#
+    ))
+    .unwrap()
+}
+
+/// Scratch directory (not auto-deleted on panic; best-effort cleanup).
+struct Scratch(std::path::PathBuf);
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let records: u64 = args
+        .iter()
+        .position(|a| a == "--records")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(120_000);
+    // Each told trial costs 2 records (trial_new + trial_tell).
+    let trials_total = (records / 2).max(N_STUDIES as u64);
+    let per_thread = trials_total / BUILD_THREADS as u64;
+
+    let dir = Scratch(std::env::temp_dir().join(format!(
+        "hopaas-bench-recovery-{}",
+        std::process::id()
+    )));
+    let _ = std::fs::remove_dir_all(&dir.0);
+    std::fs::create_dir_all(&dir.0).unwrap();
+
+    println!("\nrecovery: building a ~{records}-record log ({trials_total} told trials, {N_STUDIES} studies)\n");
+    let t0 = Instant::now();
+    {
+        let engine = Arc::new(
+            Engine::open(
+                &dir.0,
+                EngineConfig {
+                    n_shards: 16,
+                    // Never compact while building: the point is a big log.
+                    compact_after: u64::MAX,
+                    ..Default::default()
+                },
+            )
+            .unwrap(),
+        );
+        let handles: Vec<_> = (0..BUILD_THREADS)
+            .map(|t| {
+                let engine = engine.clone();
+                std::thread::spawn(move || {
+                    for i in 0..per_thread {
+                        let study = (t + (i as usize % 2) * BUILD_THREADS) % N_STUDIES;
+                        let r = engine.ask(&ask_body(study)).unwrap();
+                        engine.tell(r.trial_id, (i % 100) as f64).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+    let build_wall = t0.elapsed().as_secs_f64();
+    let log_bytes = std::fs::metadata(dir.0.join("wal.log")).map(|m| m.len()).unwrap_or(0);
+    println!(
+        "built in {} ({:.1} MiB)\n",
+        fmt_duration(build_wall),
+        log_bytes as f64 / (1024.0 * 1024.0)
+    );
+
+    let table = Table::new(
+        &["shards", "replay wall", "records/s", "speedup vs 1 shard"],
+        &[8, 14, 12, 20],
+    );
+    let mut rows: Vec<Value> = Vec::new();
+    let mut baseline = 0.0f64;
+    for &shards in &[1usize, 4, 8, 16] {
+        // Two replays per shard count, keeping the better one (first
+        // run also warms the page cache for every row after the 1-shard
+        // baseline, so run one throwaway warmup first).
+        if shards == 1 {
+            let warm = Engine::open(&dir.0, EngineConfig { n_shards: 1, ..Default::default() })
+                .unwrap();
+            drop(warm);
+        }
+        let mut best = f64::INFINITY;
+        let mut recovered = 0u64;
+        for _ in 0..2 {
+            let t0 = Instant::now();
+            let engine =
+                Engine::open(&dir.0, EngineConfig { n_shards: shards, ..Default::default() })
+                    .unwrap();
+            let wall = t0.elapsed().as_secs_f64();
+            recovered = engine.recovery_stats().recovered_records;
+            best = best.min(wall);
+        }
+        if shards == 1 {
+            baseline = best;
+        }
+        let speedup = baseline / best;
+        table.row(&[
+            &shards.to_string(),
+            &fmt_duration(best),
+            &format!("{:.0}", recovered as f64 / best),
+            &format!("{speedup:.2}x"),
+        ]);
+        let mut row = Value::obj();
+        row.set("shards", shards)
+            .set("replay_wall_s", best)
+            .set("records_per_s", recovered as f64 / best)
+            .set("speedup_vs_1_shard", speedup);
+        rows.push(Value::Obj(row));
+    }
+
+    let mut out = Value::obj();
+    out.set("bench", "recovery")
+        .set("records", records)
+        .set("log_bytes", log_bytes)
+        .set("build_wall_s", build_wall)
+        .set("rows", Value::Arr(rows));
+    let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_recovery.json");
+    std::fs::write(&json_path, Value::Obj(out).to_pretty()).unwrap();
+    println!("\nwrote {}", json_path.display());
+}

@@ -99,6 +99,7 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
     let mut seed = 0x4f50_5441_4153u64;
     let mut n_shards = 8u64;
     let mut wal_batch_max = 256u64;
+    let mut replay_threads = 0u64;
 
     // Layer 1: config file.
     if let Some(path) = args.get("config") {
@@ -135,6 +136,9 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
         if let Some(x) = v.get("wal_batch").as_u64() {
             wal_batch_max = x;
         }
+        if let Some(x) = v.get("replay_threads").as_u64() {
+            replay_threads = x;
+        }
     }
 
     // Layer 2: CLI overrides.
@@ -156,6 +160,7 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
     seed = args.get_u64("seed", seed);
     n_shards = args.get_u64("shards", n_shards).max(1);
     wal_batch_max = args.get_u64("wal-batch", wal_batch_max).max(1);
+    replay_threads = args.get_u64("replay-threads", replay_threads);
 
     let config = HopaasConfig {
         engine: EngineConfig {
@@ -165,6 +170,7 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
             history_snapshot: args.get_u64("history-snapshot", 2048) as usize,
             n_shards: n_shards as usize,
             wal_batch_max: wal_batch_max as usize,
+            replay_threads: replay_threads as usize,
         },
         http: ServerConfig {
             workers: workers as usize,
@@ -236,10 +242,12 @@ mod tests {
         let (_, cfg) = server_config(&a).unwrap();
         assert_eq!(cfg.engine.n_shards, 8);
         assert_eq!(cfg.engine.wal_batch_max, 256);
-        let a = args("serve --shards 4 --wal-batch 64");
+        assert_eq!(cfg.engine.replay_threads, 0, "0 = one replay thread per shard");
+        let a = args("serve --shards 4 --wal-batch 64 --replay-threads 2");
         let (_, cfg) = server_config(&a).unwrap();
         assert_eq!(cfg.engine.n_shards, 4);
         assert_eq!(cfg.engine.wal_batch_max, 64);
+        assert_eq!(cfg.engine.replay_threads, 2);
         // Degenerate values clamp to 1 rather than panicking the engine.
         let a = args("serve --shards 0 --wal-batch 0");
         let (_, cfg) = server_config(&a).unwrap();

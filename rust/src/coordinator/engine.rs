@@ -21,17 +21,25 @@
 //!
 //! Lock ordering: shard → {directory, router stripe}; the directory and
 //! router are leaf locks, readers copy out of them before taking a shard
-//! lock, and no path ever holds two shard locks except compaction, which
-//! takes all of them in index order.
+//! lock, and no path ever holds two shard locks — including compaction,
+//! which cuts one per-shard snapshot segment at a time, pausing only the
+//! shard being cut (see [`Engine::compact`]).
+//!
+//! Recovery is parallel: the log is partitioned by *study* (stable
+//! `place(study_key, P)` buckets, so a study's records stay together
+//! whatever shard count wrote them) and each partition replays on its
+//! own thread — see [`Engine::open_with_storage`].
 //!
 //! Determinism: sampler draws are seeded from
 //! `mix(mix(seed, fnv1a(study_key)), trial_number)` — a pure function of
-//! the study definition, untouched by sharding — so recovery replay, a
+//! the study definition, untouched by sharding — and the trial number is
+//! *reserved under the shard lock before sampling*, so concurrent asks
+//! (even on the same study) draw distinct numbers. Recovery replay, a
 //! second server instance, or the same campaign on a different shard
 //! count produces the same suggestion stream (the property PostgreSQL
 //! gives the paper's backends).
 
-use super::registry::{fnv1a, DirEntry, Directory, TrialRouter};
+use super::registry::{fnv1a, place, DirEntry, Directory, TrialRouter};
 use super::samplers::{make_sampler, Obs};
 use super::space::{assignment_to_json, Assignment};
 use super::study::{parse_ask_body, Study, StudyDef};
@@ -39,7 +47,7 @@ use super::trial::{Trial, TrialState};
 use super::{metrics::Metrics, pruners::make_pruner};
 use crate::json::Value;
 use crate::rng::{mix, Rng};
-use crate::store::{GroupWal, GroupWalConfig, Record, Storage};
+use crate::store::{GroupWal, GroupWalConfig, LoadedState, Record, RecoveryStats, Storage};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, RwLock};
@@ -81,6 +89,11 @@ pub struct EngineConfig {
     /// Largest number of WAL records flushed under one fsync by the
     /// group-commit writer.
     pub wal_batch_max: usize,
+    /// Replay partitions (= threads) used for parallel recovery.
+    /// 0 (the default) means "one per shard". Partitioning is by study
+    /// key, so any value is correct; more partitions than CPU cores
+    /// just wastes spawns.
+    pub replay_threads: usize,
 }
 
 impl Default for EngineConfig {
@@ -92,6 +105,7 @@ impl Default for EngineConfig {
             history_snapshot: 2048,
             n_shards: 8,
             wal_batch_max: 256,
+            replay_threads: 0,
         }
     }
 }
@@ -123,6 +137,15 @@ struct Shard {
     state: Mutex<ShardState>,
 }
 
+/// One unit of parallel recovery: the studies and events of a
+/// study-disjoint slice of the recovered state, in file order. Built by
+/// `Engine::plan_replay`, applied by one thread in
+/// `Engine::apply_partitions`.
+struct ReplayPartition {
+    studies: Vec<Study>,
+    events: Vec<Record>,
+}
+
 impl Shard {
     fn new() -> Shard {
         Shard {
@@ -150,10 +173,16 @@ pub struct Engine {
     /// `wal_records` threshold at which auto-compaction next fires.
     /// Normally `config.compact_after`; raised after a failed attempt so
     /// a persistently failing snapshot (e.g. disk full) doesn't turn
-    /// every mutation into a stop-the-world retry.
+    /// every mutation into a retry storm.
     compact_threshold: AtomicU64,
     /// Guard against concurrent compaction stampedes.
     compacting: AtomicBool,
+    /// Serializes whole compactions: the begin/cut-per-shard/finish
+    /// phases of two drivers must never interleave on the writer thread.
+    compact_lock: Mutex<()>,
+    /// What the last recovery pass observed (zeros for in-memory
+    /// engines); surfaced via `/api/stats` and `/metrics`.
+    recovery: RecoveryStats,
     config: EngineConfig,
     start: Instant,
     pub metrics: Arc<Metrics>,
@@ -175,6 +204,8 @@ impl Engine {
             wal_records: AtomicU64::new(0),
             compact_threshold: AtomicU64::new(config.compact_after),
             compacting: AtomicBool::new(false),
+            compact_lock: Mutex::new(()),
+            recovery: RecoveryStats::default(),
             config,
             start: Instant::now(),
             metrics: Arc::new(Metrics::with_shards(n)),
@@ -182,31 +213,79 @@ impl Engine {
         }
     }
 
-    /// Durable engine: replays snapshot + WAL from `dir`, then starts
-    /// the group-commit writer over the same storage.
+    /// Durable engine: replays segments + WAL from `dir` (in parallel,
+    /// partitioned by study), then starts the group-commit writer over
+    /// the same storage.
     pub fn open(dir: impl AsRef<std::path::Path>, config: EngineConfig) -> Result<Engine, ApiError> {
-        let mut storage =
-            Storage::open(dir).map_err(|e| ApiError::Storage(e.to_string()))?;
-        let (snapshot, events) =
-            storage.load().map_err(|e| ApiError::Storage(e.to_string()))?;
+        let storage = Storage::open(dir).map_err(|e| ApiError::Storage(e.to_string()))?;
+        Engine::open_with_storage(storage, config)
+    }
+
+    /// As [`Engine::open`] over an already-opened [`Storage`] — the seam
+    /// the crash-injection harness uses to plant fault hooks.
+    ///
+    /// Recovery runs in three steps:
+    /// 1. `storage.load()` reads the manifest/segments (or the legacy v1
+    ///    snapshot) and replays every surviving log in epoch order,
+    ///    filtering out records the manifest proves are covered;
+    /// 2. the planner partitions segment studies *and* events by study
+    ///    key — records of one study always land in one partition, in
+    ///    file order, whatever shard count wrote them — and each
+    ///    partition replays on its own thread;
+    /// 3. the global commit `seq` order is verified during load, and the
+    ///    writer resumes from `max(manifest.next_seq, max(seq)+1)`.
+    pub fn open_with_storage(
+        mut storage: Storage,
+        config: EngineConfig,
+    ) -> Result<Engine, ApiError> {
+        let loaded = storage.load().map_err(|e| ApiError::Storage(e.to_string()))?;
         let mut engine = Engine::in_memory(config);
-        if let Some(snap) = snapshot {
-            engine.apply_snapshot(&snap)?;
+
+        // Resume id/seq allocation. `fetch_max` per recovered study and
+        // trial also runs during replay; the manifest and legacy
+        // snapshot carry explicit high-water marks on top.
+        if let Some(m) = &loaded.manifest {
+            engine
+                .next_trial_id
+                .fetch_max(m.get("next_trial_id").as_u64().unwrap_or(1), Ordering::Relaxed);
+            engine
+                .next_study_id
+                .fetch_max(m.get("next_study_id").as_u64().unwrap_or(1), Ordering::Relaxed);
         }
-        // Replay in file order == commit order. Per shard this is each
-        // shard's mutation order (records were appended under the shard
-        // lock), so the recovered state matches what was acknowledged.
-        for ev in &events {
-            engine.apply_event(ev);
+        if let Some(snap) = &loaded.snapshot {
+            engine
+                .next_trial_id
+                .fetch_max(snap.get("next_trial_id").as_u64().unwrap_or(1), Ordering::Relaxed);
         }
-        engine.wal_records.store(events.len() as u64, Ordering::Relaxed);
-        let next_seq = events.iter().map(|r| r.seq + 1).max().unwrap_or(0);
+        let manifest_next_seq = loaded
+            .manifest
+            .as_ref()
+            .map(|m| m.get("next_seq").as_u64().unwrap_or(0))
+            .unwrap_or(0);
+        let event_next_seq = loaded.events.iter().map(|r| r.seq + 1).max().unwrap_or(0);
+        let next_seq = manifest_next_seq.max(event_next_seq);
+
+        let mut recovery = loaded.stats;
+        let parts = engine.plan_replay(loaded, &mut recovery)?;
+        engine.apply_partitions(parts);
+        engine.recovery = recovery;
+        engine
+            .wal_records
+            .store(recovery.recovered_records, Ordering::Relaxed);
+        engine.refresh_storage_metrics();
+
         let wal_config = GroupWalConfig {
             batch_max: engine.config.wal_batch_max.max(1),
             ..GroupWalConfig::default()
         };
         engine.wal = Some(GroupWal::start(storage, wal_config, next_seq));
         Ok(engine)
+    }
+
+    /// Recovery statistics of the last [`Engine::open`] (zeros for
+    /// in-memory engines).
+    pub fn recovery_stats(&self) -> RecoveryStats {
+        self.recovery
     }
 
     /// Seconds since engine start — the time base used across the
@@ -222,7 +301,7 @@ impl Engine {
 
     /// Shard owning a study key: stable hash placement.
     fn shard_of(&self, key: &str) -> usize {
-        (fnv1a(key) % self.shards.len() as u64) as usize
+        place(key, self.shards.len())
     }
 
     fn lock_shard(&self, idx: usize) -> MutexGuard<'_, ShardState> {
@@ -249,8 +328,11 @@ impl Engine {
     /// A concurrent ask may therefore suggest from history that is one
     /// or two tells stale — the same semantics Optuna has in distributed
     /// mode, and irrelevant statistically (the history grows by whole
-    /// trials, the surrogate by one observation). The shard lock is
-    /// re-taken only to insert the trial record.
+    /// trials, the surrogate by one observation). The trial *number*,
+    /// however, is reserved inside the first critical section: it seeds
+    /// the suggestion RNG, so two asks racing on the same study must
+    /// draw distinct numbers or they would draw identical suggestions.
+    /// The shard lock is re-taken only to insert the trial record.
     pub fn ask(&self, body: &Value) -> Result<AskReply, ApiError> {
         let (def, node) = parse_ask_body(body).map_err(ApiError::BadRequest)?;
         let now = self.now();
@@ -261,13 +343,14 @@ impl Engine {
         let sampler = make_sampler(&def.sampler).map_err(ApiError::BadRequest)?;
         let shard_idx = self.shard_of(&key);
 
-        // --- critical section 1: find/create study, snapshot history ---
+        // --- critical section 1: find/create study, reserve the trial
+        // number, snapshot history ---
         let (slot, trial_number, scored, space, direction) = {
             let mut guard = self.lock_shard(shard_idx);
             let state = &mut *guard;
             let slot = self.find_or_create_study(state, shard_idx, &def, now, &key)?;
-            let study = &state.studies[slot];
-            let trial_number = study.trials.len() as u64;
+            let study = &mut state.studies[slot];
+            let trial_number = study.reserve_number();
             let all = study.scored();
             let skip = all.len().saturating_sub(self.config.history_snapshot.max(1));
             let scored: Vec<Obs> = all
@@ -292,7 +375,7 @@ impl Engine {
         // --- critical section 2: insert the trial ---
         let reply = {
             let mut guard = self.lock_shard(shard_idx);
-            self.insert_trial(&mut guard, shard_idx, slot, params, now, node)?
+            self.insert_trial(&mut guard, shard_idx, slot, trial_number, params, now, node)?
         };
 
         self.metrics.trials_created.inc();
@@ -333,13 +416,14 @@ impl Engine {
         };
         let shard_idx = self.shard_of(&key);
 
-        // --- critical section 1: find/create study + snapshot ---
+        // --- critical section 1: find/create study, reserve the trial
+        // number, snapshot history ---
         let (slot, trial_number, mo_obs, space) = {
             let mut guard = self.lock_shard(shard_idx);
             let state = &mut *guard;
             let slot = self.find_or_create_study(state, shard_idx, &def, now, &key)?;
-            let study = &state.studies[slot];
-            let trial_number = study.trials.len() as u64;
+            let study = &mut state.studies[slot];
+            let trial_number = study.reserve_number();
             let skip = study
                 .mo_scored()
                 .len()
@@ -366,7 +450,7 @@ impl Engine {
         // --- critical section 2: insert the trial ---
         let reply = {
             let mut guard = self.lock_shard(shard_idx);
-            self.insert_trial(&mut guard, shard_idx, slot, params, now, node)?
+            self.insert_trial(&mut guard, shard_idx, slot, trial_number, params, now, node)?
         };
         self.metrics.trials_created.inc();
         self.metrics.ask_total.inc();
@@ -378,19 +462,21 @@ impl Engine {
     /// Critical section 2 of an ask (shared by single- and
     /// multi-objective paths): allocate the trial id, insert the trial
     /// on its shard, persist `trial_new`, and build the reply. Called
-    /// with the shard lock held. The trial number is re-read here — it
-    /// may have advanced while the caller sampled outside the lock — so
-    /// `number` stays the creation-order index.
+    /// with the shard lock held. `trial_number` was reserved in critical
+    /// section 1 (it seeded the suggestion), so it is used as-is; if the
+    /// persist below fails the number is consumed without a trial — a
+    /// gap in the study's numbering, never a duplicate.
+    #[allow(clippy::too_many_arguments)]
     fn insert_trial(
         &self,
         state: &mut ShardState,
         shard_idx: usize,
         slot: usize,
+        trial_number: u64,
         params: Assignment,
         now: f64,
         node: Option<String>,
     ) -> Result<AskReply, ApiError> {
-        let trial_number = state.studies[slot].trials.len() as u64;
         let trial_id = self.next_trial_id.fetch_add(1, Ordering::Relaxed);
         let trial = Trial::new(trial_id, trial_number, params, now, node);
         let study_id = state.studies[slot].id;
@@ -809,25 +895,59 @@ impl Engine {
                 );
             o.set("wal_commit", Value::Obj(w));
         }
+        // What the last recovery pass observed (zeros in-memory) — the
+        // torn-tail surface operators check after a crashy restart.
+        let rec = self.recovery;
+        let mut r = Value::obj();
+        r.set("recovered_records", rec.recovered_records)
+            .set("filtered_records", rec.filtered_records)
+            .set("truncated_records", rec.truncated_records)
+            .set("truncated_bytes", rec.truncated_bytes)
+            .set("segments", rec.segments)
+            .set("orphan_records", rec.orphan_records)
+            .set("seq_order_violations", rec.seq_order_violations);
+        o.set("wal_recovery", Value::Obj(r));
         Value::Obj(o)
     }
 
-    /// Force a snapshot + WAL truncation. Stop-the-world: takes every
-    /// shard lock (in index order) so the snapshot is a consistent cut —
-    /// every acknowledged record is either in the snapshot or will be
-    /// re-appended after the reset, never both.
+    /// Incremental compaction: rotate the log, then cut one snapshot
+    /// segment per shard — pausing only the shard being cut — and commit
+    /// the segment set with a manifest. Never takes two shard locks at
+    /// once; every other shard keeps serving mutations throughout.
+    ///
+    /// Why the per-shard cut is consistent: a shard's mutations hold its
+    /// lock across their WAL append, so while we hold that lock here no
+    /// record of the shard can be in flight; the writer thread stamps
+    /// the segment with the shard's exact high-water `seq`. Records a
+    /// shard commits *after* its cut are replayed on top of its segment
+    /// at recovery — the manifest's per-shard `next_seq` filter makes
+    /// the split exact.
     pub fn compact(&self) -> Result<(), ApiError> {
         let Some(wal) = &self.wal else { return Ok(()) };
-        let guards: Vec<MutexGuard<'_, ShardState>> =
-            self.shards.iter().map(|s| s.state.lock().unwrap()).collect();
-        // All in-flight mutations have been acknowledged (they held a
-        // shard lock across their append), so the WAL queue is drained
-        // of anything reflected in `guards`.
-        let snap = self.snapshot_value(&guards);
-        wal.compact(snap).map_err(ApiError::Storage)?;
-        self.wal_records.store(0, Ordering::Relaxed);
-        self.metrics.wal_records.set(0.0);
-        drop(guards);
+        // One compaction at a time: the begin/cut/finish phases of two
+        // drivers must not interleave on the writer thread.
+        let _serial = self.compact_lock.lock().unwrap();
+        wal.begin_compact().map_err(ApiError::Storage)?;
+        for (idx, shard) in self.shards.iter().enumerate() {
+            let guard = shard.state.lock().unwrap();
+            let studies = Self::shard_studies_value(&guard);
+            wal.compact_shard(idx as u32, studies).map_err(ApiError::Storage)?;
+            drop(guard);
+        }
+        let carried = wal
+            .finish_compact(
+                self.next_trial_id.load(Ordering::Relaxed),
+                self.next_study_id.load(Ordering::Relaxed),
+            )
+            .map_err(ApiError::Storage)?;
+        // Records appended during the compaction live in the new epoch's
+        // log and still count against the next compaction threshold.
+        // `carried` races with concurrent `persist` increments, so the
+        // counter can drift by the handful of in-flight mutations —
+        // acceptable for a compaction *policy* input, never consulted
+        // for correctness.
+        self.wal_records.store(carried, Ordering::Relaxed);
+        self.metrics.wal_records.set(carried as f64);
         Ok(())
     }
 
@@ -915,6 +1035,11 @@ impl Engine {
             self.metrics.wal_commit_last_batch.set(last as f64);
             self.metrics.wal_commit_max_batch.set(max as f64);
         }
+        let rec = self.recovery;
+        self.metrics.wal_recovered_records.set(rec.recovered_records as f64);
+        self.metrics.wal_truncated_records.set(rec.truncated_records as f64);
+        self.metrics.wal_truncated_bytes.set(rec.truncated_bytes as f64);
+        self.metrics.wal_filtered_records.set(rec.filtered_records as f64);
     }
 
     /// Refresh the per-shard gauges from the shard state (cheap; called
@@ -927,8 +1052,8 @@ impl Engine {
     }
 
     /// Compact opportunistically once the WAL outgrows the policy. Must
-    /// be called with **no** shard lock held (compaction takes all of
-    /// them).
+    /// be called with **no** shard lock held (compaction takes each of
+    /// them in turn).
     fn maybe_compact(&self) {
         if self.wal.is_none() {
             return;
@@ -951,9 +1076,8 @@ impl Engine {
             }
             Err(e) => {
                 // Surface the failure and back off by a quarter policy
-                // worth of records before retrying — compaction takes
-                // every shard lock, so tight failure loops would stall
-                // the whole engine.
+                // worth of records before retrying — tight failure loops
+                // would stall mutations behind useless segment writes.
                 eprintln!("hopaas: auto-compaction failed: {e}");
                 self.metrics.compact_failures.inc();
                 let step = (self.config.compact_after / 4).max(1);
@@ -964,12 +1088,13 @@ impl Engine {
         self.compacting.store(false, Ordering::Release);
     }
 
-    /// Serialize the full engine state (all shards, studies in id
-    /// order) — the compaction snapshot.
-    fn snapshot_value(&self, guards: &[MutexGuard<'_, ShardState>]) -> Value {
-        let mut with_ids: Vec<(u64, Value)> = Vec::new();
-        for guard in guards {
-            for s in &guard.studies {
+    /// Serialize one shard's studies (in id order) — the body of that
+    /// shard's compaction segment. Called with the shard lock held.
+    fn shard_studies_value(state: &ShardState) -> Value {
+        let mut with_ids: Vec<(u64, Value)> = state
+            .studies
+            .iter()
+            .map(|s| {
                 let mut o = Value::obj();
                 o.set("id", s.id)
                     .set("def", s.def.canonical_json())
@@ -978,30 +1103,30 @@ impl Engine {
                         "trials",
                         Value::Arr(s.trials.iter().map(|t| t.to_json()).collect()),
                     );
-                with_ids.push((s.id, Value::Obj(o)));
-            }
-        }
+                (s.id, Value::Obj(o))
+            })
+            .collect();
         with_ids.sort_by_key(|(id, _)| *id);
-        let mut o = Value::obj();
-        o.set(
-            "studies",
-            Value::Arr(with_ids.into_iter().map(|(_, v)| v).collect()),
-        )
-        .set("next_trial_id", self.next_trial_id.load(Ordering::Relaxed));
-        Value::Obj(o)
+        Value::Arr(with_ids.into_iter().map(|(_, v)| v).collect())
     }
 
-    /// Insert a recovered study (snapshot or `study_new` event) into its
-    /// shard and the directory. Single-threaded (recovery only).
-    fn recover_study(&self, study: Study) {
+    /// Insert a recovered study (segment, legacy snapshot, or
+    /// `study_new` event) into its shard and the directory. Called from
+    /// replay-partition threads: safe because every structure it touches
+    /// is locked, and the study's *own* records are confined to one
+    /// partition (so no two threads ever race on the same study).
+    fn recover_study(&self, mut study: Study) {
         let id = study.id;
+        if let Some(max_number) = study.trials.iter().map(|t| t.number).max() {
+            study.note_trial_number(max_number);
+        }
         let shard_idx = self.shard_of(&study.key);
         let mut guard = self.lock_shard(shard_idx);
         let state = &mut *guard;
         if state.by_key.contains_key(&study.key) {
-            // Replay idempotence: a crash between the snapshot rename
-            // and the WAL reset in `Storage::compact` leaves `study_new`
-            // records the snapshot already covers — skip the duplicate.
+            // Replay idempotence: a crash inside the compaction window
+            // leaves `study_new` records a segment already covers — skip
+            // the duplicate.
             self.next_study_id.fetch_max(id + 1, Ordering::Relaxed);
             return;
         }
@@ -1024,29 +1149,143 @@ impl Engine {
         self.next_study_id.fetch_max(id + 1, Ordering::Relaxed);
     }
 
-    fn apply_snapshot(&self, snap: &Value) -> Result<(), ApiError> {
-        for sv in snap.get("studies").as_arr().unwrap_or(&[]) {
-            let (def, _) = parse_ask_body(sv.get("def"))
-                .map_err(|e| ApiError::Storage(format!("snapshot study def: {e}")))?;
-            let def = StudyDef {
-                // canonical_json stores name/sampler/pruner explicitly.
-                name: sv.get("def").get("name").as_str().unwrap_or("default").into(),
-                ..def
-            };
-            let id = sv.get("id").as_u64().unwrap_or(0);
-            let mut study = Study::new(id, def, sv.get("created_at").as_f64().unwrap_or(0.0));
-            for tv in sv.get("trials").as_arr().unwrap_or(&[]) {
-                if let Some(t) = Trial::from_json(tv) {
-                    study.trials.push(t);
-                }
+    /// Rebuild a [`Study`] from its snapshot JSON (segment or legacy v1
+    /// snapshot entry).
+    fn study_from_json(sv: &Value) -> Result<Study, ApiError> {
+        let (def, _) = parse_ask_body(sv.get("def"))
+            .map_err(|e| ApiError::Storage(format!("snapshot study def: {e}")))?;
+        let def = StudyDef {
+            // canonical_json stores name/sampler/pruner explicitly.
+            name: sv.get("def").get("name").as_str().unwrap_or("default").into(),
+            ..def
+        };
+        let id = sv.get("id").as_u64().unwrap_or(0);
+        let mut study = Study::new(id, def, sv.get("created_at").as_f64().unwrap_or(0.0));
+        for tv in sv.get("trials").as_arr().unwrap_or(&[]) {
+            if let Some(t) = Trial::from_json(tv) {
+                study.trials.push(t);
             }
+        }
+        Ok(study)
+    }
+
+    /// Partition recovered state for parallel replay. Studies (from
+    /// segments or the legacy snapshot) and events alike are bucketed by
+    /// `place(study_key, P)`: a pure function of the study definition,
+    /// so one study's records always share a partition — and stay in
+    /// file order within it — no matter which shard layout wrote them.
+    /// Events whose parent study/trial record was lost (torn tail) are
+    /// counted into `recovery.orphan_records` and dropped, exactly as
+    /// the sequential replay ignored them.
+    fn plan_replay(
+        &self,
+        loaded: LoadedState,
+        recovery: &mut RecoveryStats,
+    ) -> Result<Vec<ReplayPartition>, ApiError> {
+        let p_count = if self.config.replay_threads > 0 {
+            self.config.replay_threads
+        } else {
+            self.shards.len()
+        }
+        .max(1);
+        let mut parts: Vec<ReplayPartition> = (0..p_count)
+            .map(|_| ReplayPartition { studies: Vec::new(), events: Vec::new() })
+            .collect();
+        let mut study_part: HashMap<u64, usize> = HashMap::new();
+        let mut trial_part: HashMap<u64, usize> = HashMap::new();
+
+        let mut snapshot_studies: Vec<&Value> = Vec::new();
+        for seg in &loaded.segments {
+            snapshot_studies.extend(seg.get("studies").as_arr().unwrap_or(&[]));
+        }
+        if let Some(snap) = &loaded.snapshot {
+            snapshot_studies.extend(snap.get("studies").as_arr().unwrap_or(&[]));
+        }
+        for sv in snapshot_studies {
+            let study = Self::study_from_json(sv)?;
+            let p = place(&study.key, p_count);
+            study_part.insert(study.id, p);
+            for t in &study.trials {
+                trial_part.insert(t.id, p);
+            }
+            parts[p].studies.push(study);
+        }
+
+        for rec in loaded.events {
+            let p = match rec.tag.as_str() {
+                "study_new" => match parse_ask_body(rec.payload.get("def")) {
+                    Ok((def, _)) => {
+                        let def = StudyDef {
+                            name: rec
+                                .payload
+                                .get("def")
+                                .get("name")
+                                .as_str()
+                                .unwrap_or("default")
+                                .into(),
+                            ..def
+                        };
+                        let p = place(&def.key(), p_count);
+                        let id = rec.payload.get("id").as_u64().unwrap_or(0);
+                        study_part.insert(id, p);
+                        Some(p)
+                    }
+                    Err(_) => None,
+                },
+                "trial_new" => {
+                    let sid = rec.payload.get("study_id").as_u64().unwrap_or(0);
+                    match study_part.get(&sid).copied() {
+                        Some(p) => {
+                            if let Some(tid) = rec.payload.get("trial").get("id").as_u64() {
+                                trial_part.insert(tid, p);
+                            }
+                            Some(p)
+                        }
+                        None => None,
+                    }
+                }
+                _ => rec
+                    .payload
+                    .get("trial_id")
+                    .as_u64()
+                    .and_then(|tid| trial_part.get(&tid).copied()),
+            };
+            match p {
+                Some(p) => parts[p].events.push(rec),
+                None => recovery.orphan_records += 1,
+            }
+        }
+        Ok(parts)
+    }
+
+    /// Replay partitions — on one thread each when there is real
+    /// parallelism to exploit, inline otherwise.
+    fn apply_partitions(&self, parts: Vec<ReplayPartition>) {
+        let work: Vec<ReplayPartition> = parts
+            .into_iter()
+            .filter(|p| !p.studies.is_empty() || !p.events.is_empty())
+            .collect();
+        if work.len() <= 1 {
+            for part in work {
+                self.apply_partition(part);
+            }
+            return;
+        }
+        std::thread::scope(|scope| {
+            for part in work {
+                let engine = &*self;
+                scope.spawn(move || engine.apply_partition(part));
+            }
+        });
+    }
+
+    fn apply_partition(&self, part: ReplayPartition) {
+        for study in part.studies {
             self.recover_study(study);
         }
-        self.next_trial_id.fetch_max(
-            snap.get("next_trial_id").as_u64().unwrap_or(1),
-            Ordering::Relaxed,
-        );
-        Ok(())
+        for ev in &part.events {
+            self.apply_event(ev);
+        }
     }
 
     fn apply_event(&self, record: &Record) {
@@ -1077,9 +1316,12 @@ impl Engine {
                             return;
                         }
                         let ti = state.studies[slot].trials.len();
+                        let number = t.number;
                         state.trial_index.insert(t.id, (slot, ti));
                         self.router.insert(t.id, shard);
                         state.studies[slot].trials.push(t);
+                        // Keep number reservation ahead of replayed trials.
+                        state.studies[slot].note_trial_number(number);
                     }
                 }
             }
@@ -1374,11 +1616,11 @@ mod tests {
     }
 
     #[test]
-    fn crash_between_snapshot_and_wal_reset_recovers_once() {
-        // Storage::compact renames the snapshot into place and then
-        // truncates the WAL; a crash between those two steps leaves a
-        // snapshot *plus* the full pre-compaction log. Replay must be
-        // idempotent — no duplicated studies or trials.
+    fn crash_between_manifest_and_log_gc_recovers_once() {
+        // Incremental compaction commits the manifest and then deletes
+        // the sealed pre-rotation log; a crash between those two steps
+        // leaves segments *plus* the full pre-compaction log. Replay
+        // must be idempotent — no duplicated studies or trials.
         let d = TempDir::new("engine-compact-crash");
         let wal_path = d.path().join("wal.log");
         let pre_wal;
@@ -1393,7 +1635,8 @@ mod tests {
             pre_wal = std::fs::read(&wal_path).unwrap();
             e.compact().unwrap();
         }
-        // Simulate the crash window: snapshot in place, WAL never reset.
+        // Simulate the crash window: manifest + segments in place, the
+        // sealed epoch-0 log never garbage-collected.
         std::fs::write(&wal_path, &pre_wal).unwrap();
         let e = Engine::open(d.path(), EngineConfig::default()).unwrap();
         assert_eq!(e.n_studies(), 3, "studies must not be duplicated");
@@ -1401,9 +1644,145 @@ mod tests {
             assert_eq!(s.get("n_trials").as_i64(), Some(2));
             assert_eq!(s.get("n_completed").as_i64(), Some(2));
         }
+        // All 15 covered records (3 × study_new + 6 × trial_new +
+        // 6 × trial_tell) were skipped, not re-applied.
+        assert_eq!(e.recovery_stats().filtered_records, 15);
+        assert_eq!(e.recovery_stats().segments as usize, e.n_shards());
         // Still serves new trials with correct numbering.
         let r = e.ask(&ask_body("cw-0")).unwrap();
         assert_eq!(r.trial_number, 2);
+    }
+
+    #[test]
+    fn recovery_with_mixed_shard_history() {
+        // The same log can carry records stamped under different shard
+        // layouts (server restarted with a new --shards). The replay
+        // partitioner groups by *study*, not by recorded shard index,
+        // so such logs recover exactly.
+        let d = TempDir::new("engine-mixed");
+        let told;
+        {
+            let e = Engine::open(d.path(), EngineConfig { n_shards: 8, ..Default::default() })
+                .unwrap();
+            let r = e.ask(&ask_body("mixed")).unwrap();
+            e.tell(r.trial_id, 1.0).unwrap();
+            told = r.trial_id;
+        }
+        {
+            // Reopen with 2 shards: the same study's new records carry
+            // 2-shard indices into the same epoch-0 log.
+            let e = Engine::open(d.path(), EngineConfig { n_shards: 2, ..Default::default() })
+                .unwrap();
+            let r = e.ask(&ask_body("mixed")).unwrap();
+            e.tell(r.trial_id, 2.0).unwrap();
+        }
+        let e = Engine::open(d.path(), EngineConfig { n_shards: 4, ..Default::default() })
+            .unwrap();
+        assert_eq!(e.n_studies(), 1);
+        let sid = e.studies_json().at(0).get("id").as_u64().unwrap();
+        let trials = e.trials_json(sid).unwrap();
+        assert_eq!(trials.as_arr().unwrap().len(), 2);
+        let t0 = trials
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|t| t.get("id").as_u64() == Some(told))
+            .unwrap();
+        assert_eq!(t0.get("value").as_f64(), Some(1.0));
+        assert_eq!(e.recovery_stats().orphan_records, 0);
+        assert_eq!(e.recovery_stats().seq_order_violations, 0);
+        // Numbering continues without collision.
+        let r = e.ask(&ask_body("mixed")).unwrap();
+        assert_eq!(r.trial_number, 2);
+    }
+
+    #[test]
+    fn concurrent_same_study_asks_reserve_distinct_numbers() {
+        // The trial number seeds the suggestion RNG, so two asks racing
+        // on one study must never share it (the seed engine's documented
+        // duplicate-suggestion race). 8 threads × 10 asks on one study:
+        // numbers are exactly 0..80, and each number's params match the
+        // pure function of (seed, key, number) a sequential engine draws.
+        let e = Arc::new(Engine::in_memory(EngineConfig::default()));
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let e = e.clone();
+                std::thread::spawn(move || {
+                    (0..10)
+                        .map(|_| {
+                            let r = e.ask(&ask_body("hot")).unwrap();
+                            (r.trial_number, r.params.to_string())
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        let mut got: Vec<(u64, String)> =
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        got.sort();
+        let numbers: Vec<u64> = got.iter().map(|(n, _)| *n).collect();
+        assert_eq!(numbers, (0..80).collect::<Vec<u64>>(), "numbers unique + contiguous");
+        let seq = Engine::in_memory(EngineConfig::default());
+        for (n, params) in &got {
+            let r = seq.ask(&ask_body("hot")).unwrap();
+            assert_eq!(r.trial_number, *n);
+            assert_eq!(&r.params.to_string(), params, "trial {n} diverged");
+        }
+    }
+
+    #[test]
+    fn compaction_runs_concurrently_with_mutations() {
+        // Incremental compaction pauses one shard at a time; traffic on
+        // every study keeps flowing while it runs, and nothing is lost
+        // or doubled across the recovery that follows.
+        let d = TempDir::new("engine-live-compact");
+        let acked: Vec<(u64, f64)>;
+        {
+            let e = Arc::new(Engine::open(d.path(), EngineConfig::default()).unwrap());
+            let stop = Arc::new(AtomicBool::new(false));
+            let workers: Vec<_> = (0..4)
+                .map(|t| {
+                    let e = e.clone();
+                    let stop = stop.clone();
+                    std::thread::spawn(move || {
+                        let body = ask_body(&format!("live-{t}"));
+                        let mut acked = Vec::new();
+                        let mut i = 0u64;
+                        while !stop.load(Ordering::Relaxed) || i < 5 {
+                            let r = e.ask(&body).unwrap();
+                            let v = (t * 1000 + i) as f64;
+                            e.tell(r.trial_id, v).unwrap();
+                            acked.push((r.trial_id, v));
+                            i += 1;
+                            if i >= 200 {
+                                break;
+                            }
+                        }
+                        acked
+                    })
+                })
+                .collect();
+            for _ in 0..3 {
+                e.compact().unwrap();
+            }
+            stop.store(true, Ordering::Relaxed);
+            acked = workers.into_iter().flat_map(|h| h.join().unwrap()).collect();
+            e.compact().unwrap();
+        }
+        let e = Engine::open(d.path(), EngineConfig::default()).unwrap();
+        let mut recovered = std::collections::HashMap::new();
+        for s in e.studies_json().as_arr().unwrap() {
+            let sid = s.get("id").as_u64().unwrap();
+            for t in e.trials_json(sid).unwrap().as_arr().unwrap() {
+                if let (Some(id), Some(v)) = (t.get("id").as_u64(), t.get("value").as_f64()) {
+                    assert!(recovered.insert(id, v).is_none(), "trial {id} duplicated");
+                }
+            }
+        }
+        assert_eq!(recovered.len(), acked.len());
+        for (id, v) in &acked {
+            assert_eq!(recovered.get(id), Some(v), "acknowledged tell {id} lost");
+        }
     }
 
     #[test]
@@ -1475,5 +1854,18 @@ mod tests {
         // study_new + trial_new + trial_tell committed.
         assert_eq!(wal.get("records").as_u64(), Some(3));
         assert!(wal.get("batches").as_u64().unwrap() >= 1);
+        // Recovery block is always present; this engine started from an
+        // empty directory.
+        let rec = stats.get("wal_recovery");
+        assert_eq!(rec.get("recovered_records").as_u64(), Some(0));
+        assert_eq!(rec.get("truncated_records").as_u64(), Some(0));
+        drop(e);
+        // Reopen: the three records replay and show up in the stats.
+        let e = Engine::open(d.path(), EngineConfig::default()).unwrap();
+        let rec = e.stats_json();
+        let rec = rec.get("wal_recovery");
+        assert_eq!(rec.get("recovered_records").as_u64(), Some(3));
+        assert_eq!(rec.get("filtered_records").as_u64(), Some(0));
+        assert_eq!(rec.get("orphan_records").as_u64(), Some(0));
     }
 }

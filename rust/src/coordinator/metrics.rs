@@ -170,6 +170,15 @@ pub struct Metrics {
     pub wal_commit_last_batch: Gauge,
     /// Largest commit batch observed.
     pub wal_commit_max_batch: Gauge,
+    /// Records replayed at the last recovery (startup).
+    pub wal_recovered_records: Gauge,
+    /// Torn-tail truncation incidents observed at the last recovery.
+    pub wal_truncated_records: Gauge,
+    /// Bytes discarded with those torn tails.
+    pub wal_truncated_bytes: Gauge,
+    /// Records skipped at recovery because a snapshot segment covers
+    /// them (crash inside a compaction window).
+    pub wal_filtered_records: Gauge,
     pub ask_latency: Histogram,
     pub tell_latency: Histogram,
     pub should_prune_latency: Histogram,
@@ -205,6 +214,10 @@ impl Metrics {
             wal_commit_records: Gauge::default(),
             wal_commit_last_batch: Gauge::default(),
             wal_commit_max_batch: Gauge::default(),
+            wal_recovered_records: Gauge::default(),
+            wal_truncated_records: Gauge::default(),
+            wal_truncated_bytes: Gauge::default(),
+            wal_filtered_records: Gauge::default(),
             ask_latency: Histogram::new(default_latency_bounds()),
             tell_latency: Histogram::new(default_latency_bounds()),
             should_prune_latency: Histogram::new(default_latency_bounds()),
@@ -241,6 +254,10 @@ impl Metrics {
             ("hopaas_wal_commit_records", &self.wal_commit_records),
             ("hopaas_wal_commit_last_batch", &self.wal_commit_last_batch),
             ("hopaas_wal_commit_max_batch", &self.wal_commit_max_batch),
+            ("hopaas_wal_recovered_records", &self.wal_recovered_records),
+            ("hopaas_wal_truncated_records", &self.wal_truncated_records),
+            ("hopaas_wal_truncated_bytes", &self.wal_truncated_bytes),
+            ("hopaas_wal_filtered_records", &self.wal_filtered_records),
         ] {
             out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", g.get()));
         }
@@ -338,7 +355,11 @@ mod tests {
         m.shards[1].studies.set(4.0);
         m.shards[1].tracked_running.set(2.0);
         m.wal_commit_batches.set(5.0);
+        m.wal_recovered_records.set(123.0);
+        m.wal_truncated_records.set(1.0);
         let text = m.render();
+        assert!(text.contains("hopaas_wal_recovered_records 123"));
+        assert!(text.contains("hopaas_wal_truncated_records 1"));
         assert!(text.contains("hopaas_engine_shards 2"));
         assert!(text.contains("hopaas_shard_ops_total{shard=\"0\"} 3"));
         assert!(text.contains("hopaas_shard_studies{shard=\"1\"} 4"));

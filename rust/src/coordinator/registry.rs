@@ -36,6 +36,14 @@ pub fn fnv1a(s: &str) -> u64 {
     h
 }
 
+/// Stable placement of a study key into one of `n` buckets. Used for
+/// both live shard routing and the parallel-replay partitioner, so a
+/// study's records always replay on the thread that owns its state —
+/// whatever shard count wrote them.
+pub fn place(key: &str, n: usize) -> usize {
+    (fnv1a(key) % n.max(1) as u64) as usize
+}
+
 /// One study's location: which shard owns it and at which slot.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct DirEntry {
@@ -147,6 +155,17 @@ mod tests {
             }
             h
         });
+    }
+
+    #[test]
+    fn place_is_stable_and_in_range() {
+        for key in ["", "a", "hopaas", "study-42"] {
+            assert_eq!(place(key, 8), (fnv1a(key) % 8) as usize);
+            assert!(place(key, 3) < 3);
+            assert_eq!(place(key, 1), 0);
+            // Degenerate bucket count clamps instead of dividing by 0.
+            assert_eq!(place(key, 0), 0);
+        }
     }
 
     #[test]

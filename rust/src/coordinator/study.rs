@@ -129,12 +129,32 @@ pub struct Study {
     pub key: String,
     pub trials: Vec<Trial>,
     pub created_at: f64,
+    /// Next trial number to hand out. Reserved under the shard lock
+    /// *before* sampling (see `Engine::ask`), so concurrent asks on the
+    /// same study draw distinct numbers — and therefore distinct,
+    /// deterministic suggestion seeds — instead of racing to the same
+    /// `trials.len()`. May run ahead of `trials.len()` while a reserved
+    /// ask is still sampling outside the lock.
+    next_number: u64,
 }
 
 impl Study {
     pub fn new(id: u64, def: StudyDef, now: f64) -> Study {
         let key = def.key();
-        Study { id, def, key, trials: Vec::new(), created_at: now }
+        Study { id, def, key, trials: Vec::new(), created_at: now, next_number: 0 }
+    }
+
+    /// Reserve the next trial number (call with the shard lock held).
+    pub fn reserve_number(&mut self) -> u64 {
+        let n = self.next_number;
+        self.next_number += 1;
+        n
+    }
+
+    /// Note a trial number seen during recovery, keeping the reservation
+    /// counter ahead of every recovered trial.
+    pub fn note_trial_number(&mut self, number: u64) {
+        self.next_number = self.next_number.max(number + 1);
     }
 
     /// Completed trials (have a final value).
@@ -396,6 +416,19 @@ mod tests {
         let scored = s.scored();
         assert_eq!(scored.len(), 2);
         assert_eq!(scored[1].1, 9.0);
+    }
+
+    #[test]
+    fn number_reservation_is_contiguous_and_recovery_aware() {
+        let mut s = Study::new(1, def(), 0.0);
+        assert_eq!(s.reserve_number(), 0);
+        assert_eq!(s.reserve_number(), 1);
+        // Recovery replays a trial with a higher number (e.g. a gap from
+        // a failed persist): the counter stays ahead.
+        s.note_trial_number(7);
+        assert_eq!(s.reserve_number(), 8);
+        s.note_trial_number(3); // lower numbers never move it back
+        assert_eq!(s.reserve_number(), 9);
     }
 
     #[test]

@@ -54,6 +54,7 @@ COMMANDS:
                     --secret S         HMAC token secret
                     --shards N         engine shards (default 8)
                     --wal-batch N      target records per group-commit fsync
+                    --replay-threads N parallel recovery partitions (0 = per shard)
                     --config FILE      JSON config (flags override)
   token             mint an API token offline
                     --secret S --user NAME --ttl SECONDS
@@ -81,6 +82,13 @@ fn cmd_serve(args: &Args) -> i32 {
     match HopaasServer::start(&addr, config) {
         Ok(server) => {
             println!("hopaas {} serving on http://{}", hopaas::VERSION, server.addr());
+            let rec = server.engine.recovery_stats();
+            if rec.recovered_records > 0 || rec.segments > 0 || rec.truncated_records > 0 {
+                println!(
+                    "recovery: {} record(s) replayed over {} segment(s), {} torn tail(s) truncated ({} bytes)",
+                    rec.recovered_records, rec.segments, rec.truncated_records, rec.truncated_bytes
+                );
+            }
             println!("dashboard: http://{}/", server.addr());
             println!("bootstrap token: {}", server.bootstrap_token);
             // Periodic reaper for trials from vanished nodes.

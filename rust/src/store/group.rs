@@ -18,12 +18,19 @@
 //! unchanged — but N shards committing concurrently share a flush
 //! instead of queueing N of them.
 //!
-//! Compaction also runs on the writer thread (snapshot tmp-file → fsync
-//! → rename → WAL reset), so no other thread ever touches the log file
-//! and no file lock is needed.
+//! Compaction also runs on the writer thread, in three phases that the
+//! engine drives ([`GroupWal::begin_compact`] /
+//! [`GroupWal::compact_shard`] / [`GroupWal::finish_compact`]): rotate
+//! the log to a new epoch, cut one snapshot segment per shard, commit
+//! the manifest and GC sealed logs. Because every shard's appends and
+//! its segment cut serialize through this one thread — and the engine
+//! holds that shard's lock across both — the per-shard `next_seq` cut
+//! the writer records is exact: a segment covers precisely the records
+//! the writer stamped for that shard before the cut command arrived.
 
 use super::{Record, Storage};
 use crate::json::Value;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender, TryRecvError};
 use std::sync::Arc;
@@ -77,11 +84,19 @@ impl GroupWalStats {
 }
 
 type Ack = SyncSender<Result<(), String>>;
+type CountAck = SyncSender<Result<u64, String>>;
 
 enum Cmd {
     /// One or more records committed (and acknowledged) together.
     Append(Vec<Record>, Ack),
-    Compact(Value, Ack),
+    /// Compaction phase 1: rotate the log to a new epoch.
+    BeginCompact(Ack),
+    /// Compaction phase 2: cut one shard's snapshot segment. The engine
+    /// holds that shard's lock across the roundtrip.
+    CompactShard(u32, Value, Ack),
+    /// Compaction phase 3: commit the manifest, GC sealed logs. Replies
+    /// with the record count carried over in the active log.
+    FinishCompact(u64, u64, CountAck),
 }
 
 /// Handle to the writer thread. Cloneable-by-`Arc` at the engine level;
@@ -102,7 +117,7 @@ impl GroupWal {
         let batch_max = config.batch_max.max(1);
         let handle = std::thread::Builder::new()
             .name("hopaas-wal".into())
-            .spawn(move || writer_loop(storage, rx, batch_max, next_seq, thread_stats))
+            .spawn(move || Writer::new(storage, batch_max, next_seq, thread_stats).run(rx))
             .expect("spawn wal writer");
         GroupWal { tx: Some(tx), stats, handle: Some(handle) }
     }
@@ -125,12 +140,29 @@ impl GroupWal {
         self.roundtrip(|ack| Cmd::Append(records, ack))
     }
 
-    /// Write `state` as the new snapshot and truncate the log. The
-    /// caller is responsible for quiescing mutations first (the engine
-    /// holds every shard lock), so the queue is empty of appends whose
-    /// effects are inside `state`.
-    pub fn compact(&self, state: Value) -> Result<(), String> {
-        self.roundtrip(|ack| Cmd::Compact(state, ack))
+    /// Compaction phase 1: rotate the log to a fresh epoch. No shard
+    /// lock is required — appends racing with the rotation land on one
+    /// side of it or the other, and both sides replay correctly.
+    pub fn begin_compact(&self) -> Result<(), String> {
+        self.roundtrip(Cmd::BeginCompact)
+    }
+
+    /// Compaction phase 2: durably write shard `shard`'s snapshot
+    /// segment. The caller must hold that shard's lock (and only that
+    /// one) so the segment is a consistent cut of the shard's history.
+    pub fn compact_shard(&self, shard: u32, studies: Value) -> Result<(), String> {
+        self.roundtrip(|ack| Cmd::CompactShard(shard, studies, ack))
+    }
+
+    /// Compaction phase 3: commit the manifest and GC sealed logs.
+    /// Returns the number of records carried over in the active log
+    /// (the engine's new `wal_records` counter value).
+    pub fn finish_compact(&self, next_trial_id: u64, next_study_id: u64) -> Result<u64, String> {
+        let tx = self.tx.as_ref().expect("wal writer running");
+        let (ack_tx, ack_rx) = std::sync::mpsc::sync_channel(1);
+        tx.send(Cmd::FinishCompact(next_trial_id, next_study_id, ack_tx))
+            .map_err(|_| "wal writer stopped".to_string())?;
+        ack_rx.recv().map_err(|_| "wal writer stopped".to_string())?
     }
 
     /// Commit statistics for metrics export.
@@ -161,93 +193,162 @@ impl Drop for GroupWal {
     }
 }
 
-fn writer_loop(
-    mut storage: Storage,
-    rx: Receiver<Cmd>,
+/// Writer-thread state.
+struct Writer {
+    storage: Storage,
     batch_max: usize,
-    mut next_seq: u64,
+    /// Next global commit seq to stamp.
+    next_seq: u64,
+    /// Per-shard cut positions (`last stamped seq + 1`) for records in
+    /// the *current epoch's* log. Cleared on rotation: sealed logs are
+    /// covered wholesale by the manifest epoch, so only post-rotation
+    /// records need a per-shard cut.
+    shard_next: HashMap<u32, u64>,
+    /// Segments written since the last rotation: `(shard, file, cut)`.
+    segments: Vec<(u32, String, u64)>,
     stats: Arc<GroupWalStats>,
-) {
-    while let Ok(cmd) = rx.recv() {
-        match cmd {
-            Cmd::Compact(state, ack) => {
-                let _ = ack.send(storage.compact(&state).map_err(|e| e.to_string()));
-            }
-            Cmd::Append(records, ack) => {
-                let mut total = records.len();
-                let mut jobs: Vec<(Vec<Record>, Ack)> = vec![(records, ack)];
-                // Greedy drain: everything already queued joins this
-                // commit, which is what collapses per-mutation fsyncs
-                // under load while adding zero latency when idle.
-                let mut deferred = None;
-                while total < batch_max {
-                    match rx.try_recv() {
-                        Ok(Cmd::Append(r, a)) => {
-                            total += r.len();
-                            jobs.push((r, a));
-                        }
-                        Ok(other) => {
-                            deferred = Some(other);
-                            break;
-                        }
-                        Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
-                    }
-                }
+}
 
-                let mark = storage.wal_stats();
-                let seq_mark = next_seq;
-                let mut result: Result<(), String> = Ok(());
-                for (recs, _) in jobs.iter_mut() {
-                    for rec in recs.iter_mut() {
-                        rec.seq = next_seq;
-                        next_seq += 1;
-                        if result.is_ok() {
-                            if let Err(e) = storage.append_nosync(rec) {
-                                result = Err(e.to_string());
-                            }
-                        }
-                    }
-                }
-                if result.is_ok() {
-                    if let Err(e) = storage.sync() {
-                        result = Err(e.to_string());
-                    }
-                }
-                if result.is_err() {
-                    // Every job in this batch is NACKed, so none of its
-                    // frames may survive: a later successful fsync would
-                    // otherwise make a rejected mutation durable and
-                    // replay would resurrect state the engine never
-                    // acknowledged. Roll the file back to the batch
-                    // start (best effort — a failing truncate is
-                    // reported alongside the original error).
-                    next_seq = seq_mark;
-                    if let Err(e) = storage.rollback(mark) {
-                        result = result
-                            .map_err(|orig| format!("{orig}; rollback failed: {e}"));
-                    }
-                }
+impl Writer {
+    fn new(storage: Storage, batch_max: usize, next_seq: u64, stats: Arc<GroupWalStats>) -> Writer {
+        Writer {
+            storage,
+            batch_max,
+            next_seq,
+            shard_next: HashMap::new(),
+            segments: Vec::new(),
+            stats,
+        }
+    }
 
-                match &result {
-                    Ok(()) => {
-                        let n = total as u64;
-                        stats.batches.fetch_add(1, Ordering::Relaxed);
-                        stats.records.fetch_add(n, Ordering::Relaxed);
-                        stats.last_batch.store(n, Ordering::Relaxed);
-                        stats.max_batch.fetch_max(n, Ordering::Relaxed);
+    fn run(mut self, rx: Receiver<Cmd>) {
+        let mut pending: Option<Cmd> = None;
+        loop {
+            let cmd = match pending.take() {
+                Some(c) => c,
+                None => match rx.recv() {
+                    Ok(c) => c,
+                    Err(_) => break,
+                },
+            };
+            match cmd {
+                Cmd::Append(records, ack) => pending = self.commit_batch(records, ack, &rx),
+                Cmd::BeginCompact(ack) => {
+                    let result = self.storage.begin_compact().map_err(|e| e.to_string());
+                    if result.is_ok() {
+                        self.shard_next.clear();
+                        self.segments.clear();
                     }
-                    Err(_) => {
-                        stats.failed_batches.fetch_add(1, Ordering::Relaxed);
-                    }
+                    let _ = ack.send(result);
                 }
-                for (_, ack) in jobs {
-                    let _ = ack.send(result.clone());
+                Cmd::CompactShard(shard, studies, ack) => {
+                    let cut = self.shard_next.get(&shard).copied().unwrap_or(0);
+                    let result = match self.storage.write_segment(shard, cut, &studies) {
+                        Ok(file) => {
+                            self.segments.push((shard, file, cut));
+                            Ok(())
+                        }
+                        Err(e) => Err(e.to_string()),
+                    };
+                    let _ = ack.send(result);
                 }
-                if let Some(Cmd::Compact(state, ack)) = deferred {
-                    let _ = ack.send(storage.compact(&state).map_err(|e| e.to_string()));
+                Cmd::FinishCompact(next_trial_id, next_study_id, ack) => {
+                    let result = match self.storage.finish_compact(
+                        &self.segments,
+                        self.next_seq,
+                        next_trial_id,
+                        next_study_id,
+                    ) {
+                        Ok(()) => Ok(self.storage.wal_stats().records),
+                        Err(e) => Err(e.to_string()),
+                    };
+                    let _ = ack.send(result);
                 }
             }
         }
+    }
+
+    /// Commit one append batch (greedily drained from the queue) under
+    /// a single fsync. Returns a deferred non-append command if the
+    /// drain hit one.
+    fn commit_batch(
+        &mut self,
+        records: Vec<Record>,
+        ack: Ack,
+        rx: &Receiver<Cmd>,
+    ) -> Option<Cmd> {
+        let mut total = records.len();
+        let mut jobs: Vec<(Vec<Record>, Ack)> = vec![(records, ack)];
+        // Greedy drain: everything already queued joins this commit,
+        // which is what collapses per-mutation fsyncs under load while
+        // adding zero latency when idle.
+        let mut deferred = None;
+        while total < self.batch_max {
+            match rx.try_recv() {
+                Ok(Cmd::Append(r, a)) => {
+                    total += r.len();
+                    jobs.push((r, a));
+                }
+                Ok(other) => {
+                    deferred = Some(other);
+                    break;
+                }
+                Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+            }
+        }
+
+        let mark = self.storage.wal_stats();
+        let seq_mark = self.next_seq;
+        let shard_mark = self.shard_next.clone();
+        let mut result: Result<(), String> = Ok(());
+        for (recs, _) in jobs.iter_mut() {
+            for rec in recs.iter_mut() {
+                rec.seq = self.next_seq;
+                self.next_seq += 1;
+                self.shard_next.insert(rec.shard, rec.seq + 1);
+                if result.is_ok() {
+                    if let Err(e) = self.storage.append_nosync(rec) {
+                        result = Err(e.to_string());
+                    }
+                }
+            }
+        }
+        if result.is_ok() {
+            if let Err(e) = self.storage.sync() {
+                result = Err(e.to_string());
+            }
+        }
+        if result.is_err() {
+            // Every job in this batch is NACKed, so none of its frames
+            // may survive: a later successful fsync would otherwise make
+            // a rejected mutation durable and replay would resurrect
+            // state the engine never acknowledged. Roll the file — and
+            // the seq counters — back to the batch start (best effort;
+            // a failing truncate is reported alongside the original
+            // error).
+            self.next_seq = seq_mark;
+            self.shard_next = shard_mark;
+            if let Err(e) = self.storage.rollback(mark) {
+                result = result.map_err(|orig| format!("{orig}; rollback failed: {e}"));
+            }
+        }
+
+        match &result {
+            Ok(()) => {
+                let n = total as u64;
+                self.stats.batches.fetch_add(1, Ordering::Relaxed);
+                self.stats.records.fetch_add(n, Ordering::Relaxed);
+                self.stats.last_batch.store(n, Ordering::Relaxed);
+                self.stats.max_batch.fetch_max(n, Ordering::Relaxed);
+            }
+            Err(_) => {
+                self.stats.failed_batches.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        for (_, ack) in jobs {
+            let _ = ack.send(result.clone());
+        }
+        deferred
     }
 }
 
@@ -264,7 +365,7 @@ mod tests {
 
     fn reload(dir: &std::path::Path) -> Vec<Record> {
         let mut s = Storage::open(dir).unwrap();
-        s.load().unwrap().1
+        s.load().unwrap().events
     }
 
     #[test]
@@ -387,7 +488,7 @@ mod tests {
     }
 
     #[test]
-    fn compact_truncates_and_later_appends_survive() {
+    fn incremental_compact_covers_and_carries() {
         let d = TempDir::new("group-compact");
         {
             let storage = Storage::open(d.path()).unwrap();
@@ -395,14 +496,49 @@ mod tests {
             for i in 0..6 {
                 w.append(rec(i)).unwrap();
             }
+            w.begin_compact().unwrap();
             let mut snap = Value::obj();
             snap.set("count", 6);
-            w.compact(Value::Obj(snap)).unwrap();
+            w.compact_shard(0, Value::Obj(snap)).unwrap();
+            let carried = w.finish_compact(7, 2).unwrap();
+            assert_eq!(carried, 0, "no records appended since rotation");
             w.append(rec(100)).unwrap();
         }
         let mut s = Storage::open(d.path()).unwrap();
-        let (snap, events) = s.load().unwrap();
-        assert_eq!(snap.unwrap().get("count").as_i64(), Some(6));
-        assert_eq!(events, vec![rec(100)]);
+        let loaded = s.load().unwrap();
+        let m = loaded.manifest.unwrap();
+        assert_eq!(m.get("version").as_u64(), Some(super::super::FORMAT_VERSION));
+        assert_eq!(m.get("next_trial_id").as_u64(), Some(7));
+        assert_eq!(loaded.segments.len(), 1);
+        assert_eq!(
+            loaded.segments[0].get("studies").get("count").as_i64(),
+            Some(6)
+        );
+        assert_eq!(loaded.events, vec![rec(100)]);
+    }
+
+    #[test]
+    fn compact_cut_splits_around_segment() {
+        // Records committed after rotation but before the shard's cut
+        // are covered by the segment; records after the cut replay.
+        let d = TempDir::new("group-cut");
+        {
+            let storage = Storage::open(d.path()).unwrap();
+            let w = GroupWal::start(storage, GroupWalConfig::default(), 0);
+            w.append(rec(0)).unwrap();
+            w.begin_compact().unwrap();
+            w.append(rec(1)).unwrap(); // pre-cut: covered
+            let mut snap = Value::obj();
+            snap.set("upto", 1);
+            w.compact_shard(0, Value::Obj(snap)).unwrap();
+            w.append(rec(2)).unwrap(); // post-cut: replays
+            w.finish_compact(1, 1).unwrap();
+        }
+        let mut s = Storage::open(d.path()).unwrap();
+        let loaded = s.load().unwrap();
+        assert_eq!(loaded.events, vec![rec(2)]);
+        // The sealed epoch-0 log was GC'd; the pre-cut record in the
+        // active log is covered by the segment.
+        assert_eq!(loaded.stats.filtered_records, 1);
     }
 }

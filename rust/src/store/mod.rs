@@ -10,17 +10,44 @@
 //! 2. recovery reconstructs exactly the prefix of acknowledged events.
 //!
 //! [`Wal`] provides this with a crc32-framed, length-prefixed,
-//! append-only log of JSON records plus an optional snapshot + truncate
-//! cycle (compaction). A torn/corrupt tail (crash mid-write) is detected
-//! by checksum and cleanly discarded; corruption in the *middle* of the
-//! log stops recovery at the last valid record, which is the same
-//! guarantee a write-ahead log gives.
+//! append-only log of JSON records. A torn/corrupt tail (crash
+//! mid-write) is detected by checksum and cleanly discarded; corruption
+//! in the *middle* of the log stops recovery at the last valid record,
+//! which is the same guarantee a write-ahead log gives.
 //!
 //! [`GroupWal`] layers *group commit* on top: a dedicated writer thread
 //! drains a bounded channel of records from all engine shards, frames
 //! them in arrival order, fsyncs once per batch, and only then
 //! acknowledges each sender — so "acknowledged ⇒ durable" is preserved
 //! while N concurrent mutations cost one disk flush instead of N.
+//!
+//! ## On-disk format v2
+//!
+//! Layout under the data directory:
+//!
+//! * `wal.log`, `wal.<E>.log` — epoch-numbered logs. All appends go to
+//!   the highest epoch (the *active* log); lower epochs are *sealed*
+//!   and only survive a crash inside a compaction window.
+//! * `snapshot.shard-<K>.json` — per-shard snapshot segments, each
+//!   covering one shard's state up to a per-shard `next_seq` cut.
+//! * `MANIFEST.json` — the compaction commit point: format version, the
+//!   epoch whose log the segment cuts refer to, the segment list, and
+//!   the global `next_seq` at commit time. Its atomic rename is what
+//!   makes the segment-set + log-tail cut crash-consistent.
+//! * `snapshot.json` — the legacy v1 full-state snapshot. Read (and
+//!   honored) only when no manifest exists; deleted by the first v2
+//!   compaction.
+//!
+//! Incremental compaction rotates the log **first** (new epoch), then
+//! cuts one segment per shard — each shard paused only for its own cut
+//! — and finally commits the manifest and garbage-collects sealed logs.
+//! Replay applies manifest segments, then every surviving log in epoch
+//! order, skipping records the manifest proves are covered: whole logs
+//! with `epoch < manifest.epoch`, and records of the manifest epoch
+//! with `seq` below both the global and their shard's `next_seq` cut.
+//! A crash at *any* point between those steps leaves a directory that
+//! replays to exactly the acknowledged state (see
+//! `tests/crash_injection.rs`, which drives every kill-point).
 
 mod group;
 mod wal;
@@ -29,7 +56,21 @@ pub use group::{GroupWal, GroupWalConfig, GroupWalStats};
 pub use wal::{Wal, WalError, WalStats};
 
 use crate::json::Value;
-use std::path::Path;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// On-disk format version written into the manifest.
+pub const FORMAT_VERSION: u64 = 2;
+
+const MANIFEST_FILE: &str = "MANIFEST.json";
+const LEGACY_SNAPSHOT_FILE: &str = "snapshot.json";
+
+/// Fault-injection hook for the crash test harness: called with a named
+/// kill-point (`"segment.rename"`, `"gc"`, …) before the corresponding
+/// I/O step. Returning `true` "kills" the storage — the current
+/// operation fails and every later one errors too, which is how an
+/// in-process test simulates a power cut at that exact point.
+pub type FaultHook = Arc<dyn Fn(&str) -> bool + Send + Sync>;
 
 /// A record in the event log: a tagged JSON payload plus commit
 /// metadata stamped by the WAL writer.
@@ -43,7 +84,8 @@ pub struct Record {
     /// written before group commit also read back as 0. Within one shard
     /// `seq` is strictly increasing — the shard-stable replay order.
     pub seq: u64,
-    /// Originating engine shard (observability + future parallel replay).
+    /// Originating engine shard (observability + parallel replay
+    /// partitioning + the per-shard compaction cut).
     pub shard: u32,
 }
 
@@ -86,88 +128,414 @@ impl PartialEq for Record {
     }
 }
 
-/// Persistence engine: snapshot file + WAL, atomically compacted.
-///
-/// Layout under `dir/`:
-/// * `snapshot.json` — full-state snapshot (optional)
-/// * `wal.log`       — events since the snapshot
+/// What one recovery pass observed. Mirrored into `/api/stats` and the
+/// `hopaas_wal_recovered_records` / `hopaas_wal_truncated_records`
+/// metric gauges so operators can see whether a restart lost a tail.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RecoveryStats {
+    /// Records replayed into the engine (survived the manifest filter).
+    pub recovered_records: u64,
+    /// Records skipped because the manifest proves a segment covers them.
+    pub filtered_records: u64,
+    /// Torn-tail incidents across all logs (≤ 1 per log file).
+    pub truncated_records: u64,
+    /// Bytes discarded with those torn tails.
+    pub truncated_bytes: u64,
+    /// Snapshot segments applied.
+    pub segments: u64,
+    /// Replayed records that referenced an unknown study/trial (their
+    /// parent record was lost in a torn tail) and were dropped.
+    pub orphan_records: u64,
+    /// Nonzero commit `seq`s that went backwards in file order — should
+    /// be 0; anything else indicates log corruption past the CRC layer.
+    pub seq_order_violations: u64,
+}
+
+/// Everything recovery needs, produced by [`Storage::load`].
+pub struct LoadedState {
+    /// Parsed `MANIFEST.json`, when the directory is format v2.
+    pub manifest: Option<Value>,
+    /// Parsed segment files, in manifest order.
+    pub segments: Vec<Value>,
+    /// Legacy v1 snapshot (only when no manifest exists).
+    pub snapshot: Option<Value>,
+    /// Events to replay, in global file (= commit) order, already
+    /// filtered down to the ones the segments do *not* cover.
+    pub events: Vec<Record>,
+    pub stats: RecoveryStats,
+}
+
+/// Persistence engine: epoch logs + per-shard snapshot segments, with a
+/// manifest as the compaction commit point. See the module docs for the
+/// on-disk layout and replay rules.
 pub struct Storage {
-    dir: std::path::PathBuf,
+    dir: PathBuf,
+    /// Active (highest-epoch) log; all appends land here.
     wal: Wal,
+    epoch: u64,
+    /// Lower-epoch logs not yet garbage-collected, in epoch order.
+    sealed: Vec<(u64, PathBuf)>,
+    hook: Option<FaultHook>,
+    /// Set when a fault hook fired: the storage behaves like a crashed
+    /// process — every further operation fails.
+    killed: bool,
+}
+
+/// Path of the log with `epoch` under `dir`. Epoch 0 keeps the v1 name
+/// so pre-manifest directories open unchanged.
+fn log_path(dir: &Path, epoch: u64) -> PathBuf {
+    if epoch == 0 {
+        dir.join("wal.log")
+    } else {
+        dir.join(format!("wal.{epoch}.log"))
+    }
+}
+
+/// Parse a log file name back to its epoch.
+fn log_epoch(name: &str) -> Option<u64> {
+    if name == "wal.log" {
+        return Some(0);
+    }
+    let rest = name.strip_prefix("wal.")?.strip_suffix(".log")?;
+    rest.parse().ok()
+}
+
+fn segment_file(shard: u32) -> String {
+    format!("snapshot.shard-{shard}.json")
 }
 
 impl Storage {
     /// Open (or create) storage in `dir`.
     pub fn open(dir: impl AsRef<Path>) -> Result<Storage, WalError> {
-        let dir = dir.as_ref().to_path_buf();
-        std::fs::create_dir_all(&dir)?;
-        let wal = Wal::open(dir.join("wal.log"))?;
-        Ok(Storage { dir, wal })
+        Storage::open_with_hook(dir, None)
     }
 
-    /// Load `(snapshot, events-since-snapshot)`.
-    pub fn load(&mut self) -> Result<(Option<Value>, Vec<Record>), WalError> {
-        let snap_path = self.dir.join("snapshot.json");
-        let snapshot = match std::fs::read_to_string(&snap_path) {
+    /// As [`Storage::open`], with a fault-injection hook consulted at
+    /// every named kill-point (crash test harness; `None` in production).
+    pub fn open_with_hook(
+        dir: impl AsRef<Path>,
+        hook: Option<FaultHook>,
+    ) -> Result<Storage, WalError> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir)?;
+        let mut epochs: Vec<u64> = Vec::new();
+        for entry in std::fs::read_dir(&dir)? {
+            let entry = entry?;
+            if let Some(e) = entry.file_name().to_str().and_then(log_epoch) {
+                epochs.push(e);
+            }
+        }
+        epochs.sort_unstable();
+        let active = epochs.last().copied().unwrap_or(0);
+        let sealed = epochs
+            .iter()
+            .filter(|&&e| e != active)
+            .map(|&e| (e, log_path(&dir, e)))
+            .collect();
+        let wal = Wal::open(log_path(&dir, active))?;
+        Ok(Storage { dir, wal, epoch: active, sealed, hook, killed: false })
+    }
+
+    /// fsync the data directory itself. POSIX gives renames and unlinks
+    /// no durability ordering without this: a power cut could otherwise
+    /// persist the `MANIFEST.json` rename but not a segment rename it
+    /// depends on, leaving a manifest that references missing files —
+    /// an unrecoverable startup instead of a clean replay. (No-op on
+    /// non-unix targets, which cannot sync a directory handle.)
+    fn sync_dir(&self) -> Result<(), WalError> {
+        #[cfg(unix)]
+        std::fs::File::open(&self.dir)?.sync_all()?;
+        Ok(())
+    }
+
+    /// Consult the fault hook at a named kill-point.
+    fn fault(&mut self, point: &str) -> Result<(), WalError> {
+        if self.killed {
+            return Err(WalError::Corrupt("storage killed by fault injection".into()));
+        }
+        if let Some(hook) = &self.hook {
+            if hook(point) {
+                self.killed = true;
+                return Err(WalError::Corrupt(format!("fault injected at {point}")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Load segments / legacy snapshot / filtered events. Replays every
+    /// surviving log in epoch order; see the module docs for the
+    /// coverage rules the manifest establishes.
+    pub fn load(&mut self) -> Result<LoadedState, WalError> {
+        let mut stats = RecoveryStats::default();
+
+        // Manifest (v2) — its presence supersedes the legacy snapshot.
+        let manifest = match std::fs::read_to_string(self.dir.join(MANIFEST_FILE)) {
             Ok(s) => Some(
                 crate::json::parse(&s)
-                    .map_err(|e| WalError::Corrupt(format!("snapshot: {e}")))?,
+                    .map_err(|e| WalError::Corrupt(format!("manifest: {e}")))?,
             ),
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => None,
             Err(e) => return Err(WalError::Io(e)),
         };
-        let events = self
-            .wal
-            .replay()?
-            .iter()
-            .filter_map(Record::from_value)
-            .collect();
-        Ok((snapshot, events))
+
+        let mut segments = Vec::new();
+        let mut manifest_epoch = 0u64;
+        let mut manifest_next_seq = 0u64;
+        // Per-shard `next_seq` cuts, indexed by recorded shard id.
+        let mut shard_cut: std::collections::HashMap<u32, u64> =
+            std::collections::HashMap::new();
+        if let Some(m) = &manifest {
+            manifest_epoch = m.get("epoch").as_u64().unwrap_or(0);
+            manifest_next_seq = m.get("next_seq").as_u64().unwrap_or(0);
+            for seg in m.get("segments").as_arr().unwrap_or(&[]) {
+                let file = seg
+                    .get("file")
+                    .as_str()
+                    .ok_or_else(|| WalError::Corrupt("manifest segment without file".into()))?;
+                let text = std::fs::read_to_string(self.dir.join(file))
+                    .map_err(|e| WalError::Corrupt(format!("segment {file}: {e}")))?;
+                let value = crate::json::parse(&text)
+                    .map_err(|e| WalError::Corrupt(format!("segment {file}: {e}")))?;
+                let shard = seg.get("shard").as_u64().unwrap_or(0) as u32;
+                shard_cut.insert(shard, seg.get("next_seq").as_u64().unwrap_or(0));
+                segments.push(value);
+                stats.segments += 1;
+            }
+        }
+
+        // Legacy v1 snapshot: only authoritative while no manifest exists.
+        let snapshot = if manifest.is_some() {
+            None
+        } else {
+            match std::fs::read_to_string(self.dir.join(LEGACY_SNAPSHOT_FILE)) {
+                Ok(s) => Some(
+                    crate::json::parse(&s)
+                        .map_err(|e| WalError::Corrupt(format!("snapshot: {e}")))?,
+                ),
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => None,
+                Err(e) => return Err(WalError::Io(e)),
+            }
+        };
+
+        // Replay sealed logs (epoch order), then the active log.
+        let mut events = Vec::new();
+        let mut absorb = |epoch: u64, values: Vec<Value>, wal_stats: WalStats| {
+            stats.truncated_bytes += wal_stats.truncated_bytes;
+            stats.truncated_records += wal_stats.truncations;
+            for v in values {
+                let Some(rec) = Record::from_value(&v) else { continue };
+                let covered = manifest.is_some()
+                    && (epoch < manifest_epoch
+                        || (epoch == manifest_epoch
+                            && rec.seq < manifest_next_seq
+                            && rec.seq < shard_cut.get(&rec.shard).copied().unwrap_or(0)));
+                if covered {
+                    stats.filtered_records += 1;
+                } else {
+                    stats.recovered_records += 1;
+                    events.push(rec);
+                }
+            }
+        };
+        for (epoch, path) in &self.sealed {
+            let mut sealed_wal = Wal::open(path.clone())?;
+            let values = sealed_wal.replay()?;
+            absorb(*epoch, values, sealed_wal.stats());
+        }
+        let values = self.wal.replay()?;
+        absorb(self.epoch, values, self.wal.stats());
+
+        // Verify the global commit order (nonzero seqs must not go
+        // backwards across the epoch-ordered concatenation).
+        let mut last_seq = 0u64;
+        for rec in &events {
+            if rec.seq > 0 {
+                if rec.seq < last_seq {
+                    stats.seq_order_violations += 1;
+                }
+                last_seq = last_seq.max(rec.seq);
+            }
+        }
+
+        Ok(LoadedState { manifest, segments, snapshot, events, stats })
     }
 
     /// Append one event durably (fsync'd before return).
     pub fn append(&mut self, record: &Record) -> Result<(), WalError> {
-        self.wal.append(&record.to_value())
+        self.append_nosync(record)?;
+        self.sync()
     }
 
     /// Append one event without flushing; durable only after
     /// [`Storage::sync`]. The group-commit writer frames a whole batch
     /// this way and pays for a single fsync.
     pub fn append_nosync(&mut self, record: &Record) -> Result<(), WalError> {
+        self.fault("append")?;
         self.wal.append_nosync(&record.to_value())
     }
 
     /// Flush all appended events to stable storage.
     pub fn sync(&mut self) -> Result<(), WalError> {
+        self.fault("sync")?;
         self.wal.sync()
     }
 
     /// Roll the log back to a previously captured [`Storage::wal_stats`]
     /// mark, discarding partially written (never acknowledged) frames.
     pub fn rollback(&mut self, mark: WalStats) -> Result<(), WalError> {
+        self.fault("rollback")?;
         self.wal.truncate_to(mark)
     }
 
-    /// Write a snapshot of full state and truncate the WAL atomically
-    /// (snapshot is written to a temp file, fsync'd, renamed; only then
-    /// is the WAL reset).
-    pub fn compact(&mut self, state: &Value) -> Result<(), WalError> {
-        let snap_path = self.dir.join("snapshot.json");
-        let tmp_path = self.dir.join("snapshot.json.tmp");
-        {
-            use std::io::Write;
-            let mut f = std::fs::File::create(&tmp_path)?;
-            f.write_all(state.to_string().as_bytes())?;
-            f.sync_all()?;
-        }
-        std::fs::rename(&tmp_path, &snap_path)?;
-        self.wal.reset()?;
+    /// Phase 1 of incremental compaction: seal the active log and start
+    /// a new epoch. Every record appended from here on lands in the new
+    /// log, so the per-shard cuts taken in phase 2 fully cover the
+    /// sealed logs — which is what lets phase 3 delete them.
+    pub fn begin_compact(&mut self) -> Result<(), WalError> {
+        self.fault("rotate")?;
+        let next_epoch = self.epoch + 1;
+        let new_wal = Wal::open(log_path(&self.dir, next_epoch))?;
+        // Make the new log's directory entry durable before anything is
+        // acknowledged out of it.
+        self.sync_dir()?;
+        let old_wal = std::mem::replace(&mut self.wal, new_wal);
+        self.sealed.push((self.epoch, old_wal.path().to_path_buf()));
+        self.epoch = next_epoch;
         Ok(())
     }
 
-    /// WAL statistics (for metrics / compaction policy).
+    /// Phase 2, once per shard: durably write `snapshot.shard-<K>.json`
+    /// covering that shard's state up to `next_seq` (tmp file → fsync →
+    /// rename). Returns the file name for the manifest.
+    pub fn write_segment(
+        &mut self,
+        shard: u32,
+        next_seq: u64,
+        studies: &Value,
+    ) -> Result<String, WalError> {
+        self.fault("segment.write")?;
+        let name = segment_file(shard);
+        let tmp = self.dir.join(format!("{name}.tmp"));
+        let mut o = Value::obj();
+        o.set("shard", shard).set("next_seq", next_seq).set("studies", studies.clone());
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(Value::Obj(o).to_string().as_bytes())?;
+            self.fault("segment.sync")?;
+            f.sync_all()?;
+        }
+        self.fault("segment.rename")?;
+        std::fs::rename(&tmp, self.dir.join(&name))?;
+        // The manifest will reference this file; its rename must be
+        // durable before the manifest's is.
+        self.sync_dir()?;
+        Ok(name)
+    }
+
+    /// Phase 3: commit the compaction by atomically renaming the
+    /// manifest into place, then garbage-collect the sealed logs and
+    /// the legacy v1 snapshot. A crash after the rename loses nothing —
+    /// replay skips the covered records the GC would have deleted.
+    pub fn finish_compact(
+        &mut self,
+        segments: &[(u32, String, u64)],
+        next_seq: u64,
+        next_trial_id: u64,
+        next_study_id: u64,
+    ) -> Result<(), WalError> {
+        self.fault("manifest.write")?;
+        let mut m = Value::obj();
+        m.set("version", FORMAT_VERSION)
+            .set("epoch", self.epoch)
+            .set("next_seq", next_seq)
+            .set("next_trial_id", next_trial_id)
+            .set("next_study_id", next_study_id)
+            .set(
+                "segments",
+                Value::Arr(
+                    segments
+                        .iter()
+                        .map(|(shard, file, cut)| {
+                            let mut s = Value::obj();
+                            s.set("shard", *shard)
+                                .set("file", file.as_str())
+                                .set("next_seq", *cut);
+                            Value::Obj(s)
+                        })
+                        .collect(),
+                ),
+            );
+        let tmp = self.dir.join(format!("{MANIFEST_FILE}.tmp"));
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(Value::Obj(m).to_string().as_bytes())?;
+            f.sync_all()?;
+        }
+        self.fault("manifest.rename")?;
+        std::fs::rename(&tmp, self.dir.join(MANIFEST_FILE))?;
+        // The rename is the commit point — fsync the directory so power
+        // loss cannot roll it back; everything below is GC.
+        self.sync_dir()?;
+        self.fault("gc")?;
+        match std::fs::remove_file(self.dir.join(LEGACY_SNAPSHOT_FILE)) {
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => return Err(WalError::Io(e)),
+        }
+        // Segment files the new manifest no longer references — shards
+        // dropped by a smaller --shards, or .tmp leftovers of a crashed
+        // cut — are litter; clear them so the directory always reflects
+        // exactly the live state.
+        let live: std::collections::HashSet<&str> =
+            segments.iter().map(|(_, file, _)| file.as_str()).collect();
+        for entry in std::fs::read_dir(&self.dir)? {
+            let entry = entry?;
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            let stale = name.starts_with("snapshot.shard-")
+                && (name.ends_with(".json.tmp")
+                    || (name.ends_with(".json") && !live.contains(name)));
+            if stale {
+                match std::fs::remove_file(entry.path()) {
+                    Ok(()) => {}
+                    Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                    Err(e) => return Err(WalError::Io(e)),
+                }
+            }
+        }
+        while let Some((epoch, path)) = self.sealed.pop() {
+            match std::fs::remove_file(&path) {
+                Ok(()) => {}
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(e) => {
+                    // Keep tracking the log we failed to delete; the GC
+                    // retries at the next compaction, and replay skips
+                    // its covered records either way.
+                    self.sealed.push((epoch, path));
+                    return Err(WalError::Io(e));
+                }
+            }
+        }
+        // Unlink durability is best-effort-by-ordering only: a sealed
+        // log resurrected by power loss is skipped at replay anyway.
+        self.sync_dir()
+    }
+
+    /// Statistics of the *active* log (for metrics / compaction policy).
     pub fn wal_stats(&self) -> WalStats {
         self.wal.stats()
+    }
+
+    /// Current log epoch (diagnostics / tests).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Data directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
     }
 }
 
@@ -182,13 +550,22 @@ mod tests {
         Record::new(tag, Value::Obj(o))
     }
 
+    /// A sequenced record, as the group-commit writer would stamp it.
+    fn srec(tag: &str, n: i64, seq: u64, shard: u32) -> Record {
+        let mut r = rec(tag, n).with_shard(shard);
+        r.seq = seq;
+        r
+    }
+
     #[test]
     fn empty_storage_loads_empty() {
         let d = TempDir::new("store-empty");
         let mut s = Storage::open(d.path()).unwrap();
-        let (snap, events) = s.load().unwrap();
-        assert!(snap.is_none());
-        assert!(events.is_empty());
+        let loaded = s.load().unwrap();
+        assert!(loaded.snapshot.is_none());
+        assert!(loaded.manifest.is_none());
+        assert!(loaded.events.is_empty());
+        assert_eq!(loaded.stats.recovered_records, 0);
     }
 
     #[test]
@@ -201,28 +578,166 @@ mod tests {
             }
         }
         let mut s = Storage::open(d.path()).unwrap();
-        let (_, events) = s.load().unwrap();
-        assert_eq!(events.len(), 10);
-        assert_eq!(events[3], rec("e", 3));
+        let loaded = s.load().unwrap();
+        assert_eq!(loaded.events.len(), 10);
+        assert_eq!(loaded.events[3], rec("e", 3));
+        assert_eq!(loaded.stats.recovered_records, 10);
     }
 
     #[test]
-    fn compact_then_more_events() {
-        let d = TempDir::new("store-compact");
+    fn legacy_v1_snapshot_honored_without_manifest() {
+        let d = TempDir::new("store-v1");
         {
-            let mut s = Storage::open(d.path()).unwrap();
-            for i in 0..5 {
-                s.append(&rec("pre", i)).unwrap();
-            }
             let mut state = Value::obj();
             state.set("count", 5);
-            s.compact(&Value::Obj(state)).unwrap();
+            std::fs::write(
+                d.path().join(LEGACY_SNAPSHOT_FILE),
+                Value::Obj(state).to_string(),
+            )
+            .unwrap();
+            let mut s = Storage::open(d.path()).unwrap();
             s.append(&rec("post", 100)).unwrap();
         }
         let mut s = Storage::open(d.path()).unwrap();
-        let (snap, events) = s.load().unwrap();
-        assert_eq!(snap.unwrap().get("count").as_i64(), Some(5));
-        assert_eq!(events, vec![rec("post", 100)]);
+        let loaded = s.load().unwrap();
+        assert_eq!(loaded.snapshot.unwrap().get("count").as_i64(), Some(5));
+        assert_eq!(loaded.events, vec![rec("post", 100)]);
+    }
+
+    #[test]
+    fn incremental_compact_cut_is_exact() {
+        let d = TempDir::new("store-inc");
+        {
+            let mut s = Storage::open(d.path()).unwrap();
+            // Two shards committed records 0..4.
+            for i in 0..5u64 {
+                s.append(&srec("e", i as i64, i, (i % 2) as u32)).unwrap();
+            }
+            s.begin_compact().unwrap();
+            // Shard 0 commits one more record *after* rotation, before
+            // its own cut: covered by its segment.
+            s.append(&srec("e", 100, 5, 0)).unwrap();
+            let mut seg0 = Value::obj();
+            seg0.set("marker", 0);
+            let f0 = s.write_segment(0, 6, &Value::Obj(seg0)).unwrap();
+            // Shard 1 commits after its cut: must replay.
+            let mut seg1 = Value::obj();
+            seg1.set("marker", 1);
+            let f1 = s.write_segment(1, 5, &Value::Obj(seg1)).unwrap();
+            s.append(&srec("e", 200, 6, 1)).unwrap();
+            s.finish_compact(&[(0, f0, 6), (1, f1, 5)], 7, 1, 1).unwrap();
+        }
+        let mut s = Storage::open(d.path()).unwrap();
+        let loaded = s.load().unwrap();
+        assert_eq!(loaded.segments.len(), 2);
+        assert_eq!(loaded.events, vec![srec("e", 200, 6, 1)]);
+        // The sealed log was GC'd; of the two post-rotation records,
+        // shard 0's pre-cut one is covered by its segment.
+        assert_eq!(loaded.stats.filtered_records, 1);
+        assert_eq!(loaded.stats.recovered_records, 1);
+        // Sealed epoch-0 log was garbage-collected.
+        assert!(!d.path().join("wal.log").exists());
+        assert!(d.path().join("wal.1.log").exists());
+    }
+
+    #[test]
+    fn crash_before_gc_replays_without_duplicates() {
+        let d = TempDir::new("store-crash-gc");
+        let killed = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        {
+            let k = killed.clone();
+            let hook: FaultHook = Arc::new(move |point: &str| {
+                if point == "gc" {
+                    k.store(true, std::sync::atomic::Ordering::Relaxed);
+                    true
+                } else {
+                    false
+                }
+            });
+            let mut s = Storage::open_with_hook(d.path(), Some(hook)).unwrap();
+            for i in 0..4u64 {
+                s.append(&srec("e", i as i64, i, 0)).unwrap();
+            }
+            s.begin_compact().unwrap();
+            let mut seg = Value::obj();
+            seg.set("marker", 0);
+            let f = s.write_segment(0, 4, &Value::Obj(seg)).unwrap();
+            // Dies at the GC step: manifest committed, old log remains.
+            assert!(s.finish_compact(&[(0, f, 4)], 4, 1, 1).is_err());
+            assert!(killed.load(std::sync::atomic::Ordering::Relaxed));
+            // A killed storage refuses everything, like a dead process.
+            assert!(s.append(&rec("e", 9)).is_err());
+        }
+        assert!(d.path().join("wal.log").exists(), "GC never ran");
+        let mut s = Storage::open(d.path()).unwrap();
+        let loaded = s.load().unwrap();
+        // The sealed log's records are all covered by the manifest.
+        assert!(loaded.events.is_empty());
+        assert_eq!(loaded.stats.filtered_records, 4);
+        assert_eq!(loaded.segments.len(), 1);
+        // The next compaction GCs the leftover.
+        s.begin_compact().unwrap();
+        let mut seg = Value::obj();
+        seg.set("marker", 0);
+        let f = s.write_segment(0, 4, &Value::Obj(seg)).unwrap();
+        s.finish_compact(&[(0, f, 4)], 4, 1, 1).unwrap();
+        assert!(!d.path().join("wal.log").exists());
+        assert!(!d.path().join("wal.1.log").exists());
+        assert!(d.path().join("wal.2.log").exists());
+    }
+
+    #[test]
+    fn shrinking_shard_count_gcs_stale_segments() {
+        let d = TempDir::new("store-shrink");
+        let mut s = Storage::open(d.path()).unwrap();
+        s.append(&srec("e", 0, 0, 0)).unwrap();
+        // First compaction under a 4-shard layout.
+        s.begin_compact().unwrap();
+        let mut segs = Vec::new();
+        for shard in 0..4u32 {
+            let f = s.write_segment(shard, 1, &Value::Obj(Value::obj())).unwrap();
+            segs.push((shard, f, 1));
+        }
+        s.finish_compact(&segs, 1, 1, 1).unwrap();
+        for shard in 0..4 {
+            assert!(d.path().join(segment_file(shard)).exists());
+        }
+        // Second compaction after shrinking to 2 shards: the manifest
+        // references only shards 0–1, and the stale 2–3 files go away.
+        s.begin_compact().unwrap();
+        let mut segs = Vec::new();
+        for shard in 0..2u32 {
+            let f = s.write_segment(shard, 1, &Value::Obj(Value::obj())).unwrap();
+            segs.push((shard, f, 1));
+        }
+        s.finish_compact(&segs, 1, 1, 1).unwrap();
+        assert!(d.path().join(segment_file(0)).exists());
+        assert!(d.path().join(segment_file(1)).exists());
+        assert!(!d.path().join(segment_file(2)).exists());
+        assert!(!d.path().join(segment_file(3)).exists());
+    }
+
+    #[test]
+    fn crash_before_manifest_keeps_full_log() {
+        let d = TempDir::new("store-crash-pre-manifest");
+        {
+            let hook: FaultHook = Arc::new(|point: &str| point == "manifest.rename");
+            let mut s = Storage::open_with_hook(d.path(), Some(hook)).unwrap();
+            for i in 0..4u64 {
+                s.append(&srec("e", i as i64, i, 0)).unwrap();
+            }
+            s.begin_compact().unwrap();
+            let mut seg = Value::obj();
+            seg.set("marker", 0);
+            let f = s.write_segment(0, 4, &Value::Obj(seg)).unwrap();
+            assert!(s.finish_compact(&[(0, f, 4)], 4, 1, 1).is_err());
+        }
+        // No manifest → the orphan segment is ignored, the log is whole.
+        let mut s = Storage::open(d.path()).unwrap();
+        let loaded = s.load().unwrap();
+        assert!(loaded.manifest.is_none());
+        assert_eq!(loaded.events.len(), 4);
+        assert_eq!(loaded.stats.filtered_records, 0);
     }
 
     #[test]
@@ -247,5 +762,31 @@ mod tests {
         let parsed = Record::from_value(&Value::Obj(v)).unwrap();
         assert_eq!(parsed.seq, 0);
         assert_eq!(parsed.shard, 0);
+    }
+
+    #[test]
+    fn seq_order_violation_detected() {
+        let d = TempDir::new("store-seq");
+        {
+            let mut s = Storage::open(d.path()).unwrap();
+            s.append(&srec("e", 0, 5, 0)).unwrap();
+            s.append(&srec("e", 1, 3, 0)).unwrap(); // goes backwards
+        }
+        let mut s = Storage::open(d.path()).unwrap();
+        let loaded = s.load().unwrap();
+        assert_eq!(loaded.stats.seq_order_violations, 1);
+        assert_eq!(loaded.events.len(), 2, "records still recovered");
+    }
+
+    #[test]
+    fn log_epoch_naming() {
+        assert_eq!(log_epoch("wal.log"), Some(0));
+        assert_eq!(log_epoch("wal.7.log"), Some(7));
+        assert_eq!(log_epoch("wal.12.log"), Some(12));
+        assert_eq!(log_epoch("snapshot.json"), None);
+        assert_eq!(log_epoch("wal.x.log"), None);
+        let d = std::path::Path::new("/tmp");
+        assert_eq!(log_path(d, 0), d.join("wal.log"));
+        assert_eq!(log_path(d, 3), d.join("wal.3.log"));
     }
 }

@@ -32,6 +32,10 @@ pub struct WalStats {
     pub bytes: u64,
     /// Torn/corrupt bytes discarded at the last replay.
     pub truncated_bytes: u64,
+    /// Torn-tail incidents detected at replay (0 or 1 per log file —
+    /// replay stops at the first invalid frame, so anything past it is
+    /// unparseable and counts as one truncation, not per-record).
+    pub truncations: u64,
 }
 
 /// Append-only log handle.
@@ -50,7 +54,11 @@ impl Wal {
             .append(true)
             .open(&path)?;
         let bytes = file.metadata()?.len();
-        Ok(Wal { path, file, stats: WalStats { records: 0, bytes, truncated_bytes: 0 } })
+        Ok(Wal {
+            path,
+            file,
+            stats: WalStats { records: 0, bytes, truncated_bytes: 0, truncations: 0 },
+        })
     }
 
     /// Append one JSON record; fsync before returning so an acknowledged
@@ -139,6 +147,7 @@ impl Wal {
         if valid_end < buf.len() {
             // Discard the invalid tail so future appends start clean.
             self.stats.truncated_bytes = (buf.len() - valid_end) as u64;
+            self.stats.truncations += 1;
             self.file.set_len(valid_end as u64)?;
             self.file.sync_data()?;
         }
@@ -224,6 +233,7 @@ mod tests {
         let rec = w.replay().unwrap();
         assert_eq!(rec.len(), 2);
         assert!(w.stats().truncated_bytes > 0);
+        assert_eq!(w.stats().truncations, 1, "one torn-tail incident counted");
         // Log is clean again: append works and replays fully.
         w.append(&val(3)).unwrap();
         assert_eq!(w.replay().unwrap().len(), 3);

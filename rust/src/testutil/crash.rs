@@ -1,0 +1,125 @@
+//! Deterministic crash-injection harness.
+//!
+//! The store consults a [`FaultHook`](crate::store::FaultHook) at named
+//! kill-points (`"rotate"`, `"segment.write"`, `"manifest.rename"`,
+//! `"gc"`, …). [`KillSwitch`] implements that hook for tests: arm it at
+//! a point (optionally "the Nth time the point is reached"), run the
+//! workload, and the storage dies at exactly that instant — the current
+//! operation fails and every later one errors, which is what a power
+//! cut leaves behind. The test then reopens the directory with a fresh,
+//! unhooked engine and asserts the two crash invariants:
+//!
+//! * **acknowledged ⇒ durable** — every mutation acknowledged before
+//!   the kill is present after recovery;
+//! * **replay idempotence** — nothing is applied twice, whatever
+//!   half-finished compaction artifacts the kill left on disk.
+//!
+//! `tests/crash_injection.rs` drives every compaction kill-point
+//! through this harness.
+
+use crate::store::FaultHook;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// One armed kill-point. Create with [`KillSwitch::new`], convert with
+/// [`KillSwitch::hook`], hand the hook to
+/// [`Storage::open_with_hook`](crate::store::Storage::open_with_hook).
+pub struct KillSwitch {
+    /// `(point, skip)`: fire when `point` is hit for the `skip+1`-th time.
+    target: Mutex<Option<(String, usize)>>,
+    hits: AtomicUsize,
+    fired: AtomicBool,
+}
+
+impl KillSwitch {
+    /// A disarmed switch (hook passes every point through).
+    pub fn new() -> Arc<KillSwitch> {
+        Arc::new(KillSwitch {
+            target: Mutex::new(None),
+            hits: AtomicUsize::new(0),
+            fired: AtomicBool::new(false),
+        })
+    }
+
+    /// Arm at the first occurrence of `point`.
+    pub fn arm(self: &Arc<Self>, point: &str) -> Arc<Self> {
+        self.arm_nth(point, 0)
+    }
+
+    /// Arm at the `(skip+1)`-th occurrence of `point` — e.g.
+    /// `arm_nth("segment.write", 2)` kills while the third shard's
+    /// segment is being cut.
+    pub fn arm_nth(self: &Arc<Self>, point: &str, skip: usize) -> Arc<Self> {
+        *self.target.lock().unwrap() = Some((point.to_string(), skip));
+        self.hits.store(0, Ordering::SeqCst);
+        self.fired.store(false, Ordering::SeqCst);
+        self.clone()
+    }
+
+    /// Did the armed kill-point fire? Tests assert this to prove the
+    /// workload actually reached the point they meant to crash at.
+    pub fn fired(&self) -> bool {
+        self.fired.load(Ordering::SeqCst)
+    }
+
+    /// The [`FaultHook`] to plant into a `Storage`.
+    pub fn hook(self: &Arc<Self>) -> FaultHook {
+        let this = self.clone();
+        Arc::new(move |point: &str| {
+            let guard = this.target.lock().unwrap();
+            let Some((target, skip)) = guard.as_ref() else { return false };
+            if target != point {
+                return false;
+            }
+            let hit = this.hits.fetch_add(1, Ordering::SeqCst);
+            if hit == *skip {
+                this.fired.store(true, Ordering::SeqCst);
+                true
+            } else {
+                false
+            }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fires_on_nth_occurrence_only() {
+        let ks = KillSwitch::new();
+        let hook = ks.arm_nth("segment.write", 2).hook();
+        assert!(!hook("rotate"));
+        assert!(!hook("segment.write"), "first hit skipped");
+        assert!(!hook("segment.write"), "second hit skipped");
+        assert!(!ks.fired());
+        assert!(hook("segment.write"), "third hit fires");
+        assert!(ks.fired());
+        // Past occurrences don't re-fire (the storage is dead anyway).
+        assert!(!hook("segment.write"));
+    }
+
+    #[test]
+    fn disarmed_switch_passes_everything() {
+        let ks = KillSwitch::new();
+        let hook = ks.hook();
+        for p in ["append", "sync", "manifest.rename", "gc"] {
+            assert!(!hook(p));
+        }
+        assert!(!ks.fired());
+    }
+
+    #[test]
+    fn rearming_resets_counters() {
+        let ks = KillSwitch::new();
+        let hook = ks.arm("gc").hook();
+        assert!(hook("gc"));
+        assert!(ks.fired());
+        ks.arm_nth("rotate", 1);
+        assert!(!ks.fired(), "rearm clears fired");
+        assert!(!hook("rotate"));
+        assert!(hook("rotate"));
+        assert!(ks.fired());
+    }
+}

@@ -1,11 +1,15 @@
-//! Test utilities, including a miniature property-testing harness.
+//! Test utilities, including a miniature property-testing harness and a
+//! deterministic crash-injection harness.
 //!
 //! `proptest` is not available in this offline build, so `prop` provides
 //! the same methodological role: seeded random generators, a configurable
 //! number of cases, and greedy shrinking on failure. Coordinator
 //! invariants (routing, batching, state machines) are exercised through
-//! it — see the `proptest` substitution note in DESIGN.md §3.
+//! it — see the `proptest` substitution note in DESIGN.md §3. `crash`
+//! arms named kill-points inside the store so recovery can be driven
+//! through every step of the compaction protocol.
 
+pub mod crash;
 pub mod prop;
 
 use std::net::TcpListener;

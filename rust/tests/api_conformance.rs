@@ -298,6 +298,27 @@ fn engine_stats_api() {
     assert_eq!(stats.get("asks").as_u64(), Some(1));
     assert_eq!(stats.get("tracked_running").as_u64(), Some(1));
     assert_eq!(stats.get("durable").as_bool(), Some(false));
+    // Recovery block: always present, zeroed for an in-memory engine.
+    let recovery = stats.get("wal_recovery");
+    for key in [
+        "recovered_records",
+        "filtered_records",
+        "truncated_records",
+        "truncated_bytes",
+        "segments",
+        "orphan_records",
+        "seq_order_violations",
+    ] {
+        assert_eq!(recovery.get(key).as_u64(), Some(0), "wal_recovery.{key}");
+    }
+    // The same surface is exported as Prometheus gauges.
+    let m = c.get("/metrics").unwrap();
+    let text = String::from_utf8(m.body).unwrap();
+    assert!(text.contains("# TYPE hopaas_wal_recovered_records gauge"));
+    assert!(text.contains("hopaas_wal_recovered_records 0"));
+    assert!(text.contains("# TYPE hopaas_wal_truncated_records gauge"));
+    assert!(text.contains("hopaas_wal_truncated_records 0"));
+    assert!(text.contains("hopaas_wal_filtered_records 0"));
     s.stop();
 }
 

@@ -1,0 +1,234 @@
+//! Crash-injection suite: drive recovery through every kill-point of
+//! the incremental compaction protocol (log rotation → per-shard
+//! segment cuts → manifest commit → sealed-log GC), plus torn batch
+//! tails, asserting at each point:
+//!
+//! * **acknowledged ⇒ durable** — every mutation acknowledged before
+//!   the crash is present after recovery;
+//! * **replay idempotence** — nothing is applied twice, whatever
+//!   half-finished artifacts (orphan segments, un-GC'd logs, tmp files)
+//!   the crash left behind.
+//!
+//! The harness is `testutil::crash::KillSwitch`: the store consults it
+//! at named points, and when it fires the storage behaves like a dead
+//! process — the current operation and all later ones fail.
+
+use hopaas::coordinator::engine::{Engine, EngineConfig};
+use hopaas::json::{parse, Value};
+use hopaas::store::Storage;
+use hopaas::testutil::crash::KillSwitch;
+use hopaas::testutil::TempDir;
+use std::collections::HashMap;
+
+const N_SHARDS: usize = 4;
+
+fn config() -> EngineConfig {
+    EngineConfig { n_shards: N_SHARDS, ..Default::default() }
+}
+
+fn ask_body(study: &str) -> Value {
+    parse(&format!(
+        r#"{{
+        "study_name": "{study}",
+        "properties": {{"x": {{"low": 0.0, "high": 1.0}}}},
+        "direction": "minimize",
+        "sampler": {{"name": "random"}}
+    }}"#
+    ))
+    .unwrap()
+}
+
+/// Deterministic workload: 6 studies (spread over the 4 shards) × 4
+/// told trials each. Returns every acknowledged `(trial_id, value)`.
+fn run_workload(engine: &Engine) -> Vec<(u64, f64)> {
+    let mut acked = Vec::new();
+    for s in 0..6u64 {
+        for i in 0..4u64 {
+            let r = engine.ask(&ask_body(&format!("ci-{s}"))).unwrap();
+            let v = (s * 10 + i) as f64;
+            engine.tell(r.trial_id, v).unwrap();
+            acked.push((r.trial_id, v));
+        }
+    }
+    acked
+}
+
+/// All completed trials after recovery, keyed by trial id. Panics on a
+/// duplicate id — the replay-idempotence half of the contract.
+fn recovered_tells(engine: &Engine) -> HashMap<u64, f64> {
+    let mut out = HashMap::new();
+    for s in engine.studies_json().as_arr().unwrap() {
+        let sid = s.get("id").as_u64().unwrap();
+        for t in engine.trials_json(sid).unwrap().as_arr().unwrap() {
+            let id = t.get("id").as_u64().unwrap();
+            if let Some(v) = t.get("value").as_f64() {
+                assert!(out.insert(id, v).is_none(), "trial {id} applied twice");
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn every_compaction_kill_point_preserves_acknowledged_state() {
+    // (point, skip): skip=k fires on the k+1-th time the point is hit,
+    // which is how the mid-segment cases pick a specific shard.
+    let kill_points: &[(&str, usize)] = &[
+        ("rotate", 0),
+        ("segment.write", 0),              // first shard, before the tmp write
+        ("segment.sync", 1),               // second shard, tmp written, not fsynced
+        ("segment.rename", 2),             // third shard, fsynced, not renamed
+        ("segment.write", N_SHARDS - 1),   // last shard mid-cut
+        ("manifest.write", 0),
+        ("manifest.rename", 0),            // segments durable, manifest not committed
+        ("gc", 0),                         // manifest committed, sealed logs remain
+    ];
+    for &(point, skip) in kill_points {
+        let label = format!("{point}[{skip}]");
+        let dir = TempDir::new(&format!("ci-{point}-{skip}"));
+        let ks = KillSwitch::new();
+        let storage =
+            Storage::open_with_hook(dir.path(), Some(ks.arm_nth(point, skip).hook())).unwrap();
+        let engine = Engine::open_with_storage(storage, config()).unwrap();
+        let acked = run_workload(&engine);
+        assert!(
+            engine.compact().is_err(),
+            "{label}: compaction must die at the kill-point"
+        );
+        assert!(ks.fired(), "{label}: workload never reached the kill-point");
+        drop(engine); // "power comes back": reopen clean
+
+        let engine = Engine::open(dir.path(), config()).unwrap();
+        let recovered = recovered_tells(&engine);
+        assert_eq!(
+            recovered.len(),
+            acked.len(),
+            "{label}: completed-trial count diverged"
+        );
+        for (id, v) in &acked {
+            assert_eq!(
+                recovered.get(id),
+                Some(v),
+                "{label}: acknowledged tell for trial {id} lost"
+            );
+        }
+        assert_eq!(engine.recovery_stats().seq_order_violations, 0, "{label}");
+
+        // The recovered engine keeps serving, and a full compaction now
+        // succeeds and round-trips once more.
+        let r = engine.ask(&ask_body("ci-0")).unwrap();
+        engine.tell(r.trial_id, 99.0).unwrap();
+        engine.compact().unwrap();
+        drop(engine);
+        let engine = Engine::open(dir.path(), config()).unwrap();
+        let recovered = recovered_tells(&engine);
+        assert_eq!(recovered.len(), acked.len() + 1, "{label}: post-recovery tell lost");
+        assert_eq!(recovered.get(&r.trial_id), Some(&99.0), "{label}");
+    }
+}
+
+#[test]
+fn kill_point_inside_second_compaction_respects_first_manifest() {
+    // First compaction commits cleanly; the second dies before its
+    // manifest. Recovery must fall back to the *first* manifest and the
+    // epoch-1 + epoch-2 logs.
+    let dir = TempDir::new("ci-second-compact");
+    let ks = KillSwitch::new();
+    let acked;
+    let late;
+    {
+        let storage =
+            Storage::open_with_hook(dir.path(), Some(ks.hook())).unwrap();
+        let engine = Engine::open_with_storage(storage, config()).unwrap();
+        acked = run_workload(&engine);
+        engine.compact().unwrap(); // epoch 0 → 1, manifest #1
+        let r = engine.ask(&ask_body("ci-1")).unwrap();
+        engine.tell(r.trial_id, 123.0).unwrap();
+        late = r.trial_id;
+        ks.arm_nth("segment.rename", 1);
+        assert!(engine.compact().is_err());
+        assert!(ks.fired());
+    }
+    let engine = Engine::open(dir.path(), config()).unwrap();
+    let recovered = recovered_tells(&engine);
+    assert_eq!(recovered.len(), acked.len() + 1);
+    for (id, v) in &acked {
+        assert_eq!(recovered.get(id), Some(v));
+    }
+    assert_eq!(recovered.get(&late), Some(&123.0));
+}
+
+#[test]
+fn torn_batch_tail_loses_only_the_unacknowledged_suffix() {
+    let dir = TempDir::new("ci-torn");
+    let acked;
+    {
+        let engine = Engine::open(dir.path(), config()).unwrap();
+        acked = run_workload(&engine);
+    }
+    // A power cut mid-batch leaves a half-written frame at the tail.
+    {
+        use std::io::Write;
+        let mut f = std::fs::OpenOptions::new()
+            .append(true)
+            .open(dir.path().join("wal.log"))
+            .unwrap();
+        f.write_all(&[0x13, 0x37, 0x00]).unwrap();
+    }
+    let engine = Engine::open(dir.path(), config()).unwrap();
+    let recovered = recovered_tells(&engine);
+    for (id, v) in &acked {
+        assert_eq!(recovered.get(id), Some(v), "acknowledged tell {id} lost");
+    }
+    // The torn tail is surfaced to operators.
+    let stats = engine.recovery_stats();
+    assert_eq!(stats.truncated_records, 1);
+    assert!(stats.truncated_bytes >= 3);
+    let json = engine.stats_json();
+    assert_eq!(json.get("wal_recovery").get("truncated_records").as_u64(), Some(1));
+}
+
+#[test]
+fn kill_during_group_commit_never_loses_an_acknowledged_tell() {
+    // The fsync of some mid-workload batch fails; the in-flight
+    // mutation is NACKed (the engine returns 500), and everything
+    // acknowledged before it survives recovery.
+    let dir = TempDir::new("ci-sync");
+    let ks = KillSwitch::new();
+    let mut acked: Vec<(u64, f64)> = Vec::new();
+    {
+        let storage = Storage::open_with_hook(dir.path(), Some(ks.hook())).unwrap();
+        let engine = Engine::open_with_storage(storage, config()).unwrap();
+        // Each told trial costs 2–3 synced batches; die somewhere in the
+        // middle of the workload.
+        ks.arm_nth("sync", 17);
+        let mut died = false;
+        'outer: for s in 0..6u64 {
+            for i in 0..4u64 {
+                let r = match engine.ask(&ask_body(&format!("cs-{s}"))) {
+                    Ok(r) => r,
+                    Err(_) => {
+                        died = true;
+                        break 'outer;
+                    }
+                };
+                let v = (s * 10 + i) as f64;
+                match engine.tell(r.trial_id, v) {
+                    Ok(_) => acked.push((r.trial_id, v)),
+                    Err(_) => {
+                        died = true;
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        assert!(died, "kill-point never fired");
+        assert!(ks.fired());
+    }
+    let engine = Engine::open(dir.path(), config()).unwrap();
+    let recovered = recovered_tells(&engine);
+    for (id, v) in &acked {
+        assert_eq!(recovered.get(id), Some(v), "acknowledged tell {id} lost");
+    }
+    assert_eq!(engine.recovery_stats().seq_order_violations, 0);
+}

@@ -261,6 +261,17 @@ fn wal_torn_tail_tolerated_on_restart() {
     // The torn record (the last tell) is lost; everything before survives.
     let completed = studies.at(0).get("n_completed").as_i64().unwrap();
     assert!(completed >= 3, "prefix preserved, got {completed}");
+    // The truncation is surfaced to operators: /api/stats and the
+    // recovery gauges both report the torn tail.
+    let stats = server.engine.stats_json();
+    let recovery = stats.get("wal_recovery");
+    assert_eq!(recovery.get("truncated_records").as_u64(), Some(1));
+    assert!(recovery.get("truncated_bytes").as_u64().unwrap() >= 2);
+    assert!(recovery.get("recovered_records").as_u64().unwrap() >= 7);
+    server.engine.refresh_storage_metrics();
+    let text = server.engine.metrics.render();
+    assert!(text.contains("hopaas_wal_truncated_records 1"));
+    assert!(text.contains("hopaas_wal_recovered_records"));
     server.stop();
 }
 
