@@ -1,0 +1,165 @@
+//! Fleet scheduling benchmark: worker-bound ask/tell throughput (lease
+//! bind + quota admission on every ask) and the lease-expiry requeue
+//! rate, at 1 / 4 / 8 shards.
+//!
+//! The lease layer sits on the hot path of every worker-bound ask: an
+//! admission check + slot reservation before sampling, and a
+//! `lease_bind` record committed in the same group-commit batch as
+//! `trial_new`. This bench tracks what that costs relative to the bare
+//! ask path and how fast a mass-preemption (a vanished site) is
+//! requeued. Results go to `BENCH_fleet.json` at the repository root so
+//! CI can archive the trajectory next to the recovery bench.
+//!
+//! Run: `cargo bench --bench fleet [-- --trials N]` (default 20_000).
+
+use hopaas::bench::{fmt_duration, Table};
+use hopaas::coordinator::engine::{ApiError, Engine, EngineConfig};
+use hopaas::json::{parse, Value};
+use std::sync::Arc;
+use std::time::Instant;
+
+const N_STUDIES: usize = 8;
+const N_WORKER_THREADS: usize = 8;
+
+fn ask_body(study: usize, worker: Option<u64>) -> Value {
+    let mut v = parse(&format!(
+        r#"{{
+        "study_name": "fleet-{study}",
+        "properties": {{"x": {{"low": 0.0, "high": 1.0}}}},
+        "direction": "minimize",
+        "sampler": {{"name": "random"}}
+    }}"#
+    ))
+    .unwrap();
+    if let (Some(w), Value::Obj(o)) = (worker, &mut v) {
+        o.set("worker", w);
+    }
+    v
+}
+
+/// Multi-threaded ask+tell loop; `fleet` = worker-bound with leases.
+fn campaign(engine: &Arc<Engine>, trials: u64, fleet: bool) -> f64 {
+    let per_thread = trials / N_WORKER_THREADS as u64;
+    let t0 = Instant::now();
+    std::thread::scope(|scope| {
+        for t in 0..N_WORKER_THREADS {
+            let engine = engine.clone();
+            scope.spawn(move || {
+                let worker = fleet.then(|| {
+                    let site = if t % 2 == 0 { "site-a" } else { "site-b" };
+                    engine
+                        .register_worker(&format!("bench-{t}"), site, "gpu")
+                        .unwrap()
+                        .0
+                });
+                for i in 0..per_thread {
+                    let study = (t + i as usize) % N_STUDIES;
+                    let r = loop {
+                        match engine.ask(&ask_body(study, worker)) {
+                            Ok(r) => break r,
+                            Err(ApiError::Quota(_)) => std::thread::yield_now(),
+                            Err(e) => panic!("ask: {e}"),
+                        }
+                    };
+                    engine.tell(r.trial_id, i as f64).unwrap();
+                }
+            });
+        }
+    });
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let trials: u64 = args
+        .iter()
+        .position(|a| a == "--trials")
+        .and_then(|i| args.get(i + 1))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(20_000);
+
+    println!(
+        "\nfleet scheduling: {trials} told trials, {N_WORKER_THREADS} workers, {N_STUDIES} studies\n"
+    );
+    let table = Table::new(
+        &["shards", "mode", "wall", "trials/s", "vs bare"],
+        &[8, 10, 12, 12, 10],
+    );
+    let mut rows: Vec<Value> = Vec::new();
+    for &shards in &[1usize, 4, 8] {
+        let mut bare_rate = 0.0f64;
+        for fleet in [false, true] {
+            let engine = Arc::new(Engine::in_memory(EngineConfig {
+                n_shards: shards,
+                // Quotas on, generously sized: the admission check runs
+                // without the denial/backoff path dominating.
+                site_quota: if fleet { 64 } else { 0 },
+                lease_timeout: Some(3600.0),
+                ..Default::default()
+            }));
+            let wall = campaign(&engine, trials, fleet);
+            let rate = trials as f64 / wall;
+            if !fleet {
+                bare_rate = rate;
+            }
+            let relative = rate / bare_rate.max(1e-9);
+            table.row(&[
+                &shards.to_string(),
+                if fleet { "leased" } else { "bare" },
+                &fmt_duration(wall),
+                &format!("{rate:.0}"),
+                &format!("{relative:.2}x"),
+            ]);
+            let mut row = Value::obj();
+            row.set("shards", shards)
+                .set("mode", if fleet { "leased" } else { "bare" })
+                .set("wall_s", wall)
+                .set("trials_per_s", rate)
+                .set("relative_to_bare", relative);
+            rows.push(Value::Obj(row));
+        }
+    }
+
+    // Mass-preemption requeue rate: one worker holds K leases, its
+    // lease expires, and every trial must be requeued durably… here
+    // in-memory, so the number isolates the engine-side sweep cost.
+    let k = (trials / 4).max(1);
+    let engine = Engine::in_memory(EngineConfig {
+        lease_timeout: Some(0.001),
+        requeue_max: 2,
+        ..Default::default()
+    });
+    let (w, _) = engine.register_worker("doomed", "spot", "gpu").unwrap();
+    for i in 0..k {
+        engine.ask(&ask_body(i as usize % N_STUDIES, Some(w))).unwrap();
+    }
+    std::thread::sleep(std::time::Duration::from_millis(5));
+    let t0 = Instant::now();
+    let requeued = engine.expire_leases();
+    let expire_wall = t0.elapsed().as_secs_f64();
+    assert_eq!(requeued as u64, k);
+    println!(
+        "\nmass preemption: {k} leases requeued in {} ({:.0} trials/s)",
+        fmt_duration(expire_wall),
+        k as f64 / expire_wall
+    );
+
+    let mut out = Value::obj();
+    out.set("bench", "fleet")
+        .set("trials", trials)
+        .set("workers", N_WORKER_THREADS)
+        .set("studies", N_STUDIES)
+        .set("rows", Value::Arr(rows))
+        .set("requeue", {
+            let mut r = Value::obj();
+            r.set("leases", k)
+                .set("wall_s", expire_wall)
+                .set("requeues_per_s", k as f64 / expire_wall);
+            Value::Obj(r)
+        });
+    let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_fleet.json");
+    std::fs::write(&json_path, Value::Obj(out).to_pretty()).unwrap();
+    println!("wrote {}", json_path.display());
+}

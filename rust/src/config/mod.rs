@@ -32,7 +32,8 @@ impl Args {
         }
         // Flags that never take a value (`--flag value` would otherwise
         // swallow a following positional).
-        const BOOLEAN: [&str; 4] = ["no-auth", "help", "verbose", "quiet"];
+        const BOOLEAN: [&str; 6] =
+            ["no-auth", "help", "verbose", "quiet", "wal-batch-adaptive", "fleet"];
         while let Some(a) = it.next() {
             if let Some(stripped) = a.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
@@ -99,7 +100,13 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
     let mut seed = 0x4f50_5441_4153u64;
     let mut n_shards = 8u64;
     let mut wal_batch_max = 256u64;
+    // Adaptive unless a fixed --wal-batch / "wal_batch" is given.
+    let mut wal_batch_adaptive = true;
     let mut replay_threads = 0u64;
+    let mut lease_timeout = 60.0f64;
+    let mut site_quota = 0u64;
+    let mut study_quota = 0u64;
+    let mut requeue_max = 3u64;
 
     // Layer 1: config file.
     if let Some(path) = args.get("config") {
@@ -135,9 +142,25 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
         }
         if let Some(x) = v.get("wal_batch").as_u64() {
             wal_batch_max = x;
+            wal_batch_adaptive = false;
+        }
+        if let Value::Bool(b) = v.get("wal_batch_adaptive") {
+            wal_batch_adaptive = *b;
         }
         if let Some(x) = v.get("replay_threads").as_u64() {
             replay_threads = x;
+        }
+        if let Some(x) = v.get("lease_timeout").as_f64() {
+            lease_timeout = x;
+        }
+        if let Some(x) = v.get("site_quota").as_u64() {
+            site_quota = x;
+        }
+        if let Some(x) = v.get("study_quota").as_u64() {
+            study_quota = x;
+        }
+        if let Some(x) = v.get("requeue_max").as_u64() {
+            requeue_max = x;
         }
     }
 
@@ -159,8 +182,20 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
     reap_after = args.get_f64("reap-after", reap_after);
     seed = args.get_u64("seed", seed);
     n_shards = args.get_u64("shards", n_shards).max(1);
-    wal_batch_max = args.get_u64("wal-batch", wal_batch_max).max(1);
+    if args.get("wal-batch").is_some() {
+        // A fixed batch size is an override of the adaptive default…
+        wal_batch_max = args.get_u64("wal-batch", wal_batch_max).max(1);
+        wal_batch_adaptive = false;
+    }
+    if args.get("wal-batch-adaptive").is_some() {
+        // …unless adaptation is re-enabled explicitly (then N is the cap).
+        wal_batch_adaptive = args.get_bool("wal-batch-adaptive");
+    }
     replay_threads = args.get_u64("replay-threads", replay_threads);
+    lease_timeout = args.get_f64("lease-timeout", lease_timeout);
+    site_quota = args.get_u64("site-quota", site_quota);
+    study_quota = args.get_u64("study-quota", study_quota);
+    requeue_max = args.get_u64("requeue-max", requeue_max);
 
     let config = HopaasConfig {
         engine: EngineConfig {
@@ -169,8 +204,13 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
             reap_after: if reap_after > 0.0 { Some(reap_after) } else { None },
             history_snapshot: args.get_u64("history-snapshot", 2048) as usize,
             n_shards: n_shards as usize,
-            wal_batch_max: wal_batch_max as usize,
+            wal_batch_max: wal_batch_max.max(1) as usize,
             replay_threads: replay_threads as usize,
+            wal_batch_adaptive,
+            lease_timeout: if lease_timeout > 0.0 { Some(lease_timeout) } else { None },
+            site_quota: site_quota as u32,
+            study_quota: study_quota as u32,
+            requeue_max: requeue_max as u32,
         },
         http: ServerConfig {
             workers: workers as usize,
@@ -253,6 +293,54 @@ mod tests {
         let (_, cfg) = server_config(&a).unwrap();
         assert_eq!(cfg.engine.n_shards, 1);
         assert_eq!(cfg.engine.wal_batch_max, 1);
+    }
+
+    #[test]
+    fn fleet_and_adaptive_batch_flags() {
+        let a = args("serve");
+        let (_, cfg) = server_config(&a).unwrap();
+        assert!(cfg.engine.wal_batch_adaptive, "adaptive batching is the default");
+        assert_eq!(cfg.engine.lease_timeout, Some(60.0));
+        assert_eq!(cfg.engine.site_quota, 0);
+        assert_eq!(cfg.engine.study_quota, 0);
+        assert_eq!(cfg.engine.requeue_max, 3);
+        // A fixed --wal-batch is an override that disables adaptation.
+        let a = args("serve --wal-batch 64");
+        let (_, cfg) = server_config(&a).unwrap();
+        assert!(!cfg.engine.wal_batch_adaptive);
+        assert_eq!(cfg.engine.wal_batch_max, 64);
+        // …unless adaptation is re-enabled (N then acts as the cap).
+        let a = args("serve --wal-batch 512 --wal-batch-adaptive");
+        let (_, cfg) = server_config(&a).unwrap();
+        assert!(cfg.engine.wal_batch_adaptive);
+        assert_eq!(cfg.engine.wal_batch_max, 512);
+        // Fleet knobs layer through; lease-timeout 0 disables expiry.
+        let a = args("serve --lease-timeout 5 --site-quota 8 --study-quota 4 --requeue-max 1");
+        let (_, cfg) = server_config(&a).unwrap();
+        assert_eq!(cfg.engine.lease_timeout, Some(5.0));
+        assert_eq!(cfg.engine.site_quota, 8);
+        assert_eq!(cfg.engine.study_quota, 4);
+        assert_eq!(cfg.engine.requeue_max, 1);
+        let a = args("serve --lease-timeout 0");
+        let (_, cfg) = server_config(&a).unwrap();
+        assert_eq!(cfg.engine.lease_timeout, None);
+    }
+
+    #[test]
+    fn fleet_config_file_keys() {
+        let d = TempDir::new("config-fleet");
+        let p = d.path().join("hopaas.json");
+        std::fs::write(
+            &p,
+            r#"{"lease_timeout": 12.5, "site_quota": 6, "wal_batch": 32}"#,
+        )
+        .unwrap();
+        let a = args(&format!("serve --config {}", p.display()));
+        let (_, cfg) = server_config(&a).unwrap();
+        assert_eq!(cfg.engine.lease_timeout, Some(12.5));
+        assert_eq!(cfg.engine.site_quota, 6);
+        assert_eq!(cfg.engine.wal_batch_max, 32);
+        assert!(!cfg.engine.wal_batch_adaptive, "file wal_batch fixes the size");
     }
 
     #[test]

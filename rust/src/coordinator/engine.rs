@@ -45,10 +45,13 @@ use super::space::{assignment_to_json, Assignment};
 use super::study::{parse_ask_body, Study, StudyDef};
 use super::trial::{Trial, TrialState};
 use super::{metrics::Metrics, pruners::make_pruner};
+use crate::fleet::{Fleet, FleetConfig};
 use crate::json::Value;
 use crate::rng::{mix, Rng};
-use crate::store::{GroupWal, GroupWalConfig, LoadedState, Record, RecoveryStats, Storage};
-use std::collections::HashMap;
+use crate::store::{
+    GroupWal, GroupWalConfig, LoadedState, Record, RecoveryStats, Storage, FLEET_SHARD,
+};
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, RwLock};
 use std::time::Instant;
@@ -62,6 +65,9 @@ pub enum ApiError {
     NotFound(String),
     #[error("{0}")]
     Conflict(String),
+    /// Site/study concurrency quota denial (HTTP 429: back off, retry).
+    #[error("{0}")]
+    Quota(String),
     #[error("storage failure: {0}")]
     Storage(String),
 }
@@ -94,6 +100,21 @@ pub struct EngineConfig {
     /// key, so any value is correct; more partitions than CPU cores
     /// just wastes spawns.
     pub replay_threads: usize,
+    /// Adapt the group-commit batch limit to the observed queue depth
+    /// (grow under bursts up to `wal_batch_max`, decay when idle).
+    /// `--wal-batch N` turns this off and fixes the limit at N.
+    pub wal_batch_adaptive: bool,
+    /// Fleet worker-lease duration in seconds: heartbeats renew it, and
+    /// a worker silent past it is lost — its running trials requeue.
+    /// `None` disables lease expiry.
+    pub lease_timeout: Option<f64>,
+    /// Max concurrently leased trials per site (0 = unlimited).
+    pub site_quota: u32,
+    /// Max concurrently leased trials per study (0 = unlimited).
+    pub study_quota: u32,
+    /// Times a trial may lose its worker and be requeued before the
+    /// engine fails it for good.
+    pub requeue_max: u32,
 }
 
 impl Default for EngineConfig {
@@ -106,6 +127,11 @@ impl Default for EngineConfig {
             n_shards: 8,
             wal_batch_max: 256,
             replay_threads: 0,
+            wal_batch_adaptive: true,
+            lease_timeout: Some(60.0),
+            site_quota: 0,
+            study_quota: 0,
+            requeue_max: 3,
         }
     }
 }
@@ -118,6 +144,9 @@ pub struct AskReply {
     pub study_id: u64,
     pub study_key: String,
     pub params: Value,
+    /// True when this is a previously issued trial re-homed after its
+    /// worker was lost (same id/number/params as the original handout).
+    pub requeued: bool,
 }
 
 /// State owned by one shard, guarded by the shard's lock.
@@ -183,6 +212,31 @@ pub struct Engine {
     /// What the last recovery pass observed (zeros for in-memory
     /// engines); surfaced via `/api/stats` and `/metrics`.
     recovery: RecoveryStats,
+    /// The fleet tables: worker registry, lease table, site scheduler.
+    /// A leaf lock — may be taken under a shard lock, never the reverse.
+    fleet: Fleet,
+    /// Set once any fleet state exists (a registration, or recovered
+    /// workers/leases). Until then the tell/fail/prune hot paths skip
+    /// the global fleet mutex entirely, so a worker-less deployment
+    /// keeps the sharded engine free of cross-shard serialization.
+    /// Never reset: one registration makes the fleet live for good.
+    fleet_active: AtomicBool,
+    /// Guards lease handouts against the fleet segment cut. Binds ride
+    /// the *shard* lock (so they batch with their `trial_new`) rather
+    /// than the fleet lock — this gate is what makes the fleet cut
+    /// exact anyway: every handout holds a read lock from before its
+    /// requeue-queue pop (or WAL append) through its in-memory apply,
+    /// and compaction holds the write lock across snapshot + cut, so
+    /// the cut can never observe a trial mid-handout nor cover a bind
+    /// the snapshot lacks. Ordering: bind gate → shard lock → fleet
+    /// lock (the gate is always outermost).
+    fleet_bind_gate: RwLock<()>,
+    /// Records appended per shard since that shard's last segment cut.
+    /// Compaction skips re-cutting a shard whose counter is 0 (the
+    /// previous segment still covers it exactly).
+    shard_dirty: Vec<AtomicU64>,
+    /// Same, for the fleet's [`FLEET_SHARD`] records.
+    fleet_dirty: AtomicU64,
     config: EngineConfig,
     start: Instant,
     pub metrics: Arc<Metrics>,
@@ -194,6 +248,12 @@ impl Engine {
     /// In-memory engine (tests, benches).
     pub fn in_memory(config: EngineConfig) -> Engine {
         let n = config.n_shards.max(1);
+        let fleet_config = FleetConfig {
+            lease_timeout: config.lease_timeout,
+            site_quota: config.site_quota,
+            study_quota: config.study_quota,
+            requeue_max: config.requeue_max,
+        };
         Engine {
             shards: (0..n).map(|_| Shard::new()).collect(),
             directory: RwLock::new(Directory::default()),
@@ -206,6 +266,11 @@ impl Engine {
             compacting: AtomicBool::new(false),
             compact_lock: Mutex::new(()),
             recovery: RecoveryStats::default(),
+            fleet: Fleet::new(fleet_config),
+            fleet_active: AtomicBool::new(false),
+            fleet_bind_gate: RwLock::new(()),
+            shard_dirty: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            fleet_dirty: AtomicU64::new(0),
             config,
             start: Instant::now(),
             metrics: Arc::new(Metrics::with_shards(n)),
@@ -265,21 +330,161 @@ impl Engine {
         let event_next_seq = loaded.events.iter().map(|r| r.seq + 1).max().unwrap_or(0);
         let next_seq = manifest_next_seq.max(event_next_seq);
 
+        // Seed the clean-shard reuse table from the manifest — but only
+        // when its segment set matches the current layout exactly (one
+        // segment per live shard): placement is `fnv1a(key) % n`, so a
+        // different shard count re-homes studies and every old segment
+        // becomes unusable as-is. The fleet segment is layout-free and
+        // always reusable.
+        let mut prev_segments: HashMap<u32, (String, u64)> = HashMap::new();
+        if let Some(m) = &loaded.manifest {
+            let segs = m.get("segments").as_arr().unwrap_or(&[]).to_vec();
+            let mut by_shard: HashMap<u32, (String, u64)> = HashMap::new();
+            for seg in &segs {
+                if let (Some(shard), Some(file)) =
+                    (seg.get("shard").as_u64(), seg.get("file").as_str())
+                {
+                    by_shard.insert(
+                        shard as u32,
+                        (file.to_string(), seg.get("next_seq").as_u64().unwrap_or(0)),
+                    );
+                }
+            }
+            let study_shards: Vec<u32> =
+                by_shard.keys().copied().filter(|&s| s != FLEET_SHARD).collect();
+            let layout_matches = study_shards.len() == engine.shards.len()
+                && study_shards.iter().all(|&s| (s as usize) < engine.shards.len());
+            if layout_matches {
+                prev_segments = by_shard;
+            } else if let Some(fleet_seg) = by_shard.remove(&FLEET_SHARD) {
+                prev_segments.insert(FLEET_SHARD, fleet_seg);
+            }
+        }
+
+        // Fleet segment (engine-global; not partitioned by study).
+        let fleet_snapshot: Option<Value> = loaded
+            .segments
+            .iter()
+            .find(|s| s.get("shard").as_u64() == Some(FLEET_SHARD as u64))
+            .map(|s| s.get("studies").clone());
+
         let mut recovery = loaded.stats;
-        let parts = engine.plan_replay(loaded, &mut recovery)?;
+        let (parts, fleet_events) = engine.plan_replay(loaded, &mut recovery)?;
         engine.apply_partitions(parts);
+        if let Some(snap) = &fleet_snapshot {
+            engine.fleet.lock().load_snapshot(snap);
+        }
+        for rec in &fleet_events {
+            engine.apply_fleet_event(rec);
+        }
+        engine.finish_fleet_recovery();
         engine.recovery = recovery;
         engine
             .wal_records
             .store(recovery.recovered_records, Ordering::Relaxed);
+        // Any recovered log record makes every shard (and the fleet)
+        // dirty for reuse purposes: the previous segments no longer
+        // cover the live state, so the first compaction cuts in full.
+        if recovery.recovered_records > 0 {
+            for d in &engine.shard_dirty {
+                d.store(recovery.recovered_records, Ordering::Relaxed);
+            }
+        }
+        if !fleet_events.is_empty() {
+            engine
+                .fleet_dirty
+                .store(fleet_events.len() as u64, Ordering::Relaxed);
+        }
         engine.refresh_storage_metrics();
 
         let wal_config = GroupWalConfig {
             batch_max: engine.config.wal_batch_max.max(1),
+            adaptive: engine.config.wal_batch_adaptive,
             ..GroupWalConfig::default()
         };
-        engine.wal = Some(GroupWal::start(storage, wal_config, next_seq));
+        engine.wal = Some(GroupWal::start(storage, wal_config, next_seq, prev_segments));
         Ok(engine)
+    }
+
+    /// Post-replay fleet pass: drop leases and queue entries whose
+    /// trial is no longer running (its terminal record replayed after
+    /// the bind), rebuild the scheduler counts, and grant every alive
+    /// worker a fresh lease window — deadlines are liveness, not state,
+    /// so a recovering server gives live workers one heartbeat interval
+    /// before expiry requeues their trials.
+    fn finish_fleet_recovery(&self) {
+        let tracked: Vec<u64> = {
+            let fl = self.fleet.lock();
+            if fl.registry.is_empty() && fl.leases.is_empty() {
+                return;
+            }
+            self.fleet_active.store(true, Ordering::Relaxed);
+            fl.leases.all_tracked().into_iter().map(|(tid, _)| tid).collect()
+        };
+        let mut running: HashSet<u64> = HashSet::new();
+        for tid in tracked {
+            let Some(shard_idx) = self.router.get(tid) else { continue };
+            let guard = self.lock_shard(shard_idx);
+            if let Some(&(si, ti)) = guard.trial_index.get(&tid) {
+                if guard.studies[si].trials[ti].state == TrialState::Running {
+                    running.insert(tid);
+                }
+            }
+        }
+        let now = self.now();
+        let ttl = self.fleet.ttl();
+        let mut fl = self.fleet.lock();
+        fl.scrub(&running);
+        fl.registry.reset_deadlines(now, ttl);
+    }
+
+    /// Replay one fleet record (worker registry / lease events). These
+    /// are applied sequentially after the study partitions finish: they
+    /// are engine-global, cheap, and their relative order matters.
+    fn apply_fleet_event(&self, rec: &Record) {
+        let v = &rec.payload;
+        let mut fl = self.fleet.lock();
+        match rec.tag.as_str() {
+            "worker_register" => {
+                if let Some(id) = v.get("id").as_u64() {
+                    fl.registry.apply_register(
+                        id,
+                        v.get("name").as_str().unwrap_or(""),
+                        v.get("site").as_str().unwrap_or(""),
+                        v.get("gpu").as_str().unwrap_or(""),
+                        v.get("at").as_f64().unwrap_or(0.0),
+                        0.0,
+                    );
+                }
+            }
+            "worker_lost" => {
+                if let Some(id) = v.get("worker_id").as_u64() {
+                    fl.registry.mark_lost(id, v.get("at").as_f64().unwrap_or(0.0));
+                }
+            }
+            "worker_deregister" => {
+                if let Some(id) = v.get("worker_id").as_u64() {
+                    fl.registry.mark_deregistered(id);
+                }
+            }
+            "lease_bind" => {
+                if let (Some(tid), Some(wid), Some(key)) = (
+                    v.get("trial_id").as_u64(),
+                    v.get("worker_id").as_u64(),
+                    v.get("study_key").as_str(),
+                ) {
+                    fl.apply_bind(tid, wid, key, v.get("at").as_f64().unwrap_or(0.0));
+                }
+            }
+            "trial_requeue" => {
+                if let (Some(tid), Some(key)) =
+                    (v.get("trial_id").as_u64(), v.get("study_key").as_str())
+                {
+                    fl.apply_requeue(tid, key);
+                }
+            }
+            _ => {}
+        }
     }
 
     /// Recovery statistics of the last [`Engine::open`] (zeros for
@@ -335,10 +540,52 @@ impl Engine {
     /// The shard lock is re-taken only to insert the trial record.
     pub fn ask(&self, body: &Value) -> Result<AskReply, ApiError> {
         let (def, node) = parse_ask_body(body).map_err(ApiError::BadRequest)?;
+        let worker = body.get("worker").as_u64();
         let now = self.now();
         let key = def.key();
+        // Fleet admission: a worker-bound ask reserves a scheduling slot
+        // (site + study quotas, fair share) before any sampling work.
+        // The slot becomes a lease on success and is returned on error.
+        if let Some(wid) = worker {
+            match self.fleet.lock().admit(wid, &key, now, &self.fleet.config) {
+                Ok(()) => {}
+                Err(e) => {
+                    if matches!(e, ApiError::Quota(_)) {
+                        self.metrics.fleet_quota_denials.inc();
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        let result = self.ask_admitted(def, node, now, &key, worker);
+        if result.is_err() {
+            if let Some(wid) = worker {
+                self.fleet.lock().cancel_admission(wid, &key);
+            }
+        }
+        result
+    }
+
+    /// The ask body once admission (if any) has been granted. Hands out
+    /// a requeued trial of the study when one is waiting — re-homing it
+    /// with its original id, number and parameters — and samples a new
+    /// trial otherwise.
+    fn ask_admitted(
+        &self,
+        def: StudyDef,
+        node: Option<String>,
+        now: f64,
+        key: &str,
+        worker: Option<u64>,
+    ) -> Result<AskReply, ApiError> {
+        if let Some(wid) = worker {
+            if let Some(reply) = self.assign_requeued(key, wid, now)? {
+                return Ok(reply);
+            }
+        }
+        let key = key.to_string();
         if def.is_mo() {
-            return self.ask_mo(def, node, now, key);
+            return self.ask_mo(def, node, now, key, worker);
         }
         let sampler = make_sampler(&def.sampler).map_err(ApiError::BadRequest)?;
         let shard_idx = self.shard_of(&key);
@@ -374,8 +621,11 @@ impl Engine {
 
         // --- critical section 2: insert the trial ---
         let reply = {
+            // Bind-gate before shard lock (the engine-wide order is
+            // gate → shard → fleet); held only for worker-bound asks.
+            let _bind_gate = worker.map(|_| self.fleet_bind_gate.read().unwrap());
             let mut guard = self.lock_shard(shard_idx);
-            self.insert_trial(&mut guard, shard_idx, slot, trial_number, params, now, node)?
+            self.insert_trial(&mut guard, shard_idx, slot, trial_number, params, now, node, worker)?
         };
 
         self.metrics.trials_created.inc();
@@ -396,6 +646,7 @@ impl Engine {
         node: Option<String>,
         now: f64,
         key: String,
+        worker: Option<u64>,
     ) -> Result<AskReply, ApiError> {
         use super::samplers::nsga2::{MoObs, Nsga2Sampler};
         let directions = def.directions.clone().expect("mo study");
@@ -449,8 +700,9 @@ impl Engine {
 
         // --- critical section 2: insert the trial ---
         let reply = {
+            let _bind_gate = worker.map(|_| self.fleet_bind_gate.read().unwrap());
             let mut guard = self.lock_shard(shard_idx);
-            self.insert_trial(&mut guard, shard_idx, slot, trial_number, params, now, node)?
+            self.insert_trial(&mut guard, shard_idx, slot, trial_number, params, now, node, worker)?
         };
         self.metrics.trials_created.inc();
         self.metrics.ask_total.inc();
@@ -476,32 +728,128 @@ impl Engine {
         params: Assignment,
         now: f64,
         node: Option<String>,
+        worker: Option<u64>,
     ) -> Result<AskReply, ApiError> {
         let trial_id = self.next_trial_id.fetch_add(1, Ordering::Relaxed);
         let trial = Trial::new(trial_id, trial_number, params, now, node);
         let study_id = state.studies[slot].id;
+        let study_key = state.studies[slot].key.clone();
         let ev = {
             let mut o = Value::obj();
             o.set("study_id", study_id).set("trial", trial.to_json());
             Value::Obj(o)
         };
         // Persist first: a failed append returns 500 with no in-memory
-        // trace, so memory never diverges from the log.
-        self.persist(Record::new("trial_new", ev).with_shard(shard_idx as u32))?;
+        // trace, so memory never diverges from the log. A worker-bound
+        // ask journals the lease in the same commit batch (one fsync);
+        // the caller holds the bind gate across this whole critical
+        // section so a concurrent fleet segment cut can never cover a
+        // bind it did not snapshot.
+        let mut records = vec![Record::new("trial_new", ev).with_shard(shard_idx as u32)];
+        if let Some(wid) = worker {
+            records.push(
+                Record::new("lease_bind", Self::lease_bind_payload(trial_id, wid, &study_key, now))
+                    .with_shard(FLEET_SHARD),
+            );
+        }
+        self.persist_many(records)?;
         let trial_idx = state.studies[slot].trials.len();
         state.studies[slot].trials.push(trial);
         state.trial_index.insert(trial_id, (slot, trial_idx));
         state.last_seen.insert(trial_id, now);
         self.router.insert(trial_id, shard_idx);
+        if let Some(wid) = worker {
+            // Shard lock is held; the fleet lock is a leaf below it.
+            self.fleet.lock().bind(trial_id, wid, &study_key, now);
+        }
         self.shard_metrics_update(shard_idx, state);
         let study = &state.studies[slot];
         Ok(AskReply {
             trial_id,
             trial_number,
             study_id,
-            study_key: study.key.clone(),
+            study_key,
             params: assignment_to_json(&study.trials[trial_idx].params),
+            requeued: false,
         })
+    }
+
+    /// Payload of a `lease_bind` record.
+    fn lease_bind_payload(trial_id: u64, worker_id: u64, study_key: &str, now: f64) -> Value {
+        let mut o = Value::obj();
+        o.set("trial_id", trial_id)
+            .set("worker_id", worker_id)
+            .set("study_key", study_key)
+            .set("at", now);
+        Value::Obj(o)
+    }
+
+    /// Hand a requeued trial of `study_key` (one whose worker was lost)
+    /// to `worker`, if any is waiting. The trial keeps its original id,
+    /// number and parameters — the suggestion stream is untouched. The
+    /// caller has already admitted the worker; the admission slot
+    /// becomes the new lease.
+    fn assign_requeued(
+        &self,
+        study_key: &str,
+        worker: u64,
+        now: f64,
+    ) -> Result<Option<AskReply>, ApiError> {
+        loop {
+            // The bind gate covers the whole pop → persist → bind (or
+            // push-back) window: a fleet segment cut (the gate's write
+            // side) can therefore never observe the trial mid-handout —
+            // it sees it either still queued or already leased, and the
+            // records this section appends sort after the cut.
+            let _bind_gate = self.fleet_bind_gate.read().unwrap();
+            let Some(trial_id) = self.fleet.lock().leases.pop_front(study_key) else {
+                return Ok(None);
+            };
+            let Some(shard_idx) = self.router.get(trial_id) else {
+                // Phantom queue entry (torn log): drop every trace.
+                self.fleet.lock().finish_trial(trial_id, study_key);
+                continue;
+            };
+            let mut guard = self.lock_shard(shard_idx);
+            let state = &mut *guard;
+            let Some(&(si, ti)) = state.trial_index.get(&trial_id) else {
+                drop(guard);
+                self.fleet.lock().finish_trial(trial_id, study_key);
+                continue;
+            };
+            if state.studies[si].trials[ti].state != TrialState::Running {
+                // A straggler tell from the lost worker finished it
+                // while it sat in the queue — drop it and keep looking.
+                self.fleet.lock().finish_trial(trial_id, study_key);
+                continue;
+            }
+            let record = Record::new(
+                "lease_bind",
+                Self::lease_bind_payload(trial_id, worker, study_key, now),
+            )
+            .with_shard(FLEET_SHARD);
+            if let Err(e) = self.persist(record) {
+                // Not handed out: back to the head of the queue.
+                self.fleet.lock().leases.push_front(study_key, trial_id);
+                return Err(e);
+            }
+            state.last_seen.insert(trial_id, now);
+            self.fleet.lock().bind(trial_id, worker, study_key, now);
+            let study = &state.studies[si];
+            let trial = &study.trials[ti];
+            let reply = AskReply {
+                trial_id,
+                trial_number: trial.number,
+                study_id: study.id,
+                study_key: study.key.clone(),
+                params: assignment_to_json(&trial.params),
+                requeued: true,
+            };
+            self.metrics.fleet_trials_reassigned.inc();
+            self.metrics.ask_total.inc();
+            self.asks.fetch_add(1, Ordering::Relaxed);
+            return Ok(Some(reply));
+        }
     }
 
     /// `tell` with an objective vector (multi-objective studies).
@@ -547,6 +895,9 @@ impl Engine {
                 .complete_mo(values, now)
                 .map_err(|e| ApiError::Conflict(e.to_string()))?;
             state.last_seen.remove(&trial_id);
+            if self.fleet_active.load(Ordering::Relaxed) {
+                self.fleet.lock().finish_trial(trial_id, &state.studies[si].key);
+            }
             self.shard_metrics_update(shard_idx, state);
             let on_front = state.studies[si]
                 .pareto()
@@ -597,6 +948,9 @@ impl Engine {
                 .complete(value, now)
                 .map_err(|e| ApiError::Conflict(e.to_string()))?;
             state.last_seen.remove(&trial_id);
+            if self.fleet_active.load(Ordering::Relaxed) {
+                self.fleet.lock().finish_trial(trial_id, &state.studies[si].key);
+            }
             self.shard_metrics_update(shard_idx, state);
             let is_best = match prev_best {
                 None => true,
@@ -668,6 +1022,9 @@ impl Engine {
                     .prune(now)
                     .map_err(|e| ApiError::Conflict(e.to_string()))?;
                 state.last_seen.remove(&trial_id);
+                if self.fleet_active.load(Ordering::Relaxed) {
+                    self.fleet.lock().finish_trial(trial_id, &state.studies[si].key);
+                }
                 self.metrics.prune_decisions.inc();
                 self.metrics.trials_pruned.inc();
             }
@@ -702,6 +1059,9 @@ impl Engine {
             .fail(now)
             .map_err(|e| ApiError::Conflict(e.to_string()))?;
         state.last_seen.remove(&trial_id);
+        if self.fleet_active.load(Ordering::Relaxed) {
+            self.fleet.lock().finish_trial(trial_id, &state.studies[si].key);
+        }
         self.shard_metrics_update(shard_idx, state);
         self.metrics.trials_failed.inc();
         Ok(())
@@ -710,9 +1070,31 @@ impl Engine {
     /// Reap running trials whose node has been silent past the deadline
     /// (called periodically by the server loop). Shards are swept one at
     /// a time, so reaping never blocks the whole engine.
+    ///
+    /// Leased trials are exempt: their fate belongs to the worker's
+    /// heartbeat deadline ([`Engine::expire_leases`] requeues them
+    /// deterministically instead of failing them). The exemption only
+    /// applies while lease expiry is on — with `--lease-timeout 0` a
+    /// vanished worker's leases would otherwise never be released.
+    /// *Requeued* trials are not exempt: a requeue refreshes
+    /// `last_seen`, so a queued trial gets one full `reap_after` window
+    /// to find a new worker, after which the reaper fails it (and
+    /// scrubs its fleet entries) — the pre-fleet guarantee that every
+    /// silent Running trial is eventually bounded by `reap_after`
+    /// still holds.
     pub fn reap_stale(&self) -> usize {
         let Some(deadline) = self.config.reap_after else { return 0 };
         let now = self.now();
+        // Collected before any shard lock is taken (fleet is a leaf
+        // lock; the set may be momentarily stale, which only delays a
+        // reap by one sweep).
+        let leased: HashSet<u64> = if self.fleet_active.load(Ordering::Relaxed)
+            && self.config.lease_timeout.is_some()
+        {
+            self.fleet.lock().leases.leased_ids().into_iter().collect()
+        } else {
+            HashSet::new()
+        };
         let mut reaped = 0;
         for (shard_idx, shard) in self.shards.iter().enumerate() {
             let mut guard = shard.state.lock().unwrap();
@@ -722,6 +1104,7 @@ impl Engine {
                 .iter()
                 .filter(|(_, &t)| now - t > deadline)
                 .map(|(&id, _)| id)
+                .filter(|id| !leased.contains(id))
                 .collect();
             // Build every trial_fail record first and commit them in one
             // group-commit roundtrip: a vanished site can expire
@@ -747,6 +1130,12 @@ impl Engine {
                 for id in to_fail {
                     if let Some(&(si, ti)) = state.trial_index.get(&id) {
                         let _ = state.studies[si].trials[ti].fail(now);
+                        // A reaped trial may still carry fleet state
+                        // (a lease under --lease-timeout 0): scrub it
+                        // so quota slots and queues cannot leak.
+                        if self.fleet_active.load(Ordering::Relaxed) {
+                            self.fleet.lock().finish_trial(id, &state.studies[si].key);
+                        }
                         self.metrics.trials_failed.inc();
                         reaped += 1;
                     }
@@ -761,6 +1150,239 @@ impl Engine {
             }
         }
         reaped
+    }
+
+    // ------------------------------------------------------------------
+    // Fleet APIs (worker registry, heartbeat leases, lease expiry)
+    // ------------------------------------------------------------------
+
+    /// Register a fleet worker (`POST /api/workers/register`). Returns
+    /// `(worker_id, lease_timeout)`; the worker must heartbeat within
+    /// the lease window or its trials are requeued.
+    pub fn register_worker(
+        &self,
+        name: &str,
+        site: &str,
+        gpu: &str,
+    ) -> Result<(u64, Option<f64>), ApiError> {
+        let now = self.now();
+        let ttl = self.fleet.ttl();
+        let mut fl = self.fleet.lock();
+        let id = fl.registry.next_id();
+        let ev = {
+            let mut o = Value::obj();
+            o.set("id", id)
+                .set("name", name)
+                .set("site", site)
+                .set("gpu", gpu)
+                .set("at", now);
+            Value::Obj(o)
+        };
+        // Persist-then-apply, like every other mutation: the fleet lock
+        // is held across the append so the fleet segment cut is exact.
+        self.persist(Record::new("worker_register", ev).with_shard(FLEET_SHARD))?;
+        fl.registry.apply_register(id, name, site, gpu, now, now + ttl);
+        self.fleet_active.store(true, Ordering::Relaxed);
+        self.metrics.fleet_workers_registered.inc();
+        Ok((id, self.config.lease_timeout))
+    }
+
+    /// Renew a worker's lease (`POST /api/workers/heartbeat`). Returns
+    /// the number of trials the renewed lease covers. 404 for unknown
+    /// workers; 409 once the worker has been marked lost (its trials
+    /// are gone to other workers — it must re-register).
+    pub fn worker_heartbeat(&self, worker_id: u64) -> Result<usize, ApiError> {
+        let now = self.now();
+        let ttl = self.fleet.ttl();
+        let mut fl = self.fleet.lock();
+        if fl.registry.get(worker_id).is_none() {
+            return Err(ApiError::NotFound(format!("unknown worker {worker_id}")));
+        }
+        match fl.registry.heartbeat(worker_id, now, ttl) {
+            Ok(w) => Ok(w.leases.len()),
+            Err(msg) => Err(ApiError::Conflict(msg)),
+        }
+    }
+
+    /// Graceful worker shutdown (`POST /api/workers/deregister`): the
+    /// worker's running trials are requeued immediately — no lease
+    /// expiry wait — and the worker id is retired. Returns how many
+    /// trials were handed back.
+    pub fn deregister_worker(&self, worker_id: u64) -> Result<usize, ApiError> {
+        let now = self.now();
+        let trials: Vec<u64> = {
+            let mut fl = self.fleet.lock();
+            let Some(w) = fl.registry.get(worker_id) else {
+                return Err(ApiError::NotFound(format!("unknown worker {worker_id}")));
+            };
+            if w.state != crate::fleet::WorkerState::Alive {
+                // Mirror heartbeat: a lost worker's trials are already
+                // gone to others; there is nothing left to hand back.
+                return Err(ApiError::Conflict(format!(
+                    "worker {worker_id} is {}: nothing to deregister",
+                    w.state.as_str()
+                )));
+            }
+            let mut trials: Vec<u64> = w.leases.iter().copied().collect();
+            trials.sort_unstable();
+            let ev = {
+                let mut o = Value::obj();
+                o.set("worker_id", worker_id).set("at", now);
+                Value::Obj(o)
+            };
+            self.persist(Record::new("worker_deregister", ev).with_shard(FLEET_SHARD))?;
+            fl.registry.mark_deregistered(worker_id);
+            trials
+        };
+        let mut handed_back = 0;
+        for tid in trials {
+            // Only actual requeues count as "handed back" — a trial
+            // whose budget is spent is failed, not resumed elsewhere.
+            if self.requeue_or_fail(tid, worker_id, now) == Some(true) {
+                handed_back += 1;
+            }
+        }
+        Ok(handed_back)
+    }
+
+    /// Expire worker leases whose heartbeat deadline has passed: mark
+    /// the worker lost and requeue (or, once the requeue budget is
+    /// spent, fail) each of its running trials — durably, one record
+    /// per decision, so a crash mid-expiry resumes exactly where it
+    /// stopped. Called periodically by the server loop; the replacement
+    /// for `reap_stale` on worker-bound trials. Returns the number of
+    /// trials requeued or failed.
+    pub fn expire_leases(&self) -> usize {
+        // With expiry disabled (`--lease-timeout 0`) deadlines sit at
+        // infinity and never pass, but the sweep still runs: it heals
+        // orphaned leases of lost/deregistered workers (a crash between
+        // `worker_lost` and the per-trial requeues) and hosts the fleet
+        // GC. Only a fleet that was never used skips it entirely.
+        if !self.fleet_active.load(Ordering::Relaxed) {
+            return 0;
+        }
+        let now = self.now();
+        let expired = self.fleet.lock().expired_workers(now);
+        let mut handled = 0;
+        for (wid, was_alive, trials) in expired {
+            {
+                let mut fl = self.fleet.lock();
+                // Re-check under the lock: a heartbeat may have revived
+                // the worker between collection and processing.
+                if !fl.registry.is_expiry_candidate(wid, now) {
+                    continue;
+                }
+                if was_alive {
+                    let ev = {
+                        let mut o = Value::obj();
+                        o.set("worker_id", wid).set("at", now);
+                        Value::Obj(o)
+                    };
+                    if self
+                        .persist(Record::new("worker_lost", ev).with_shard(FLEET_SHARD))
+                        .is_err()
+                    {
+                        continue;
+                    }
+                    fl.registry.mark_lost(wid, now);
+                    self.metrics.fleet_workers_lost.inc();
+                }
+            }
+            for tid in trials {
+                if self.requeue_or_fail(tid, wid, now).is_some() {
+                    handled += 1;
+                }
+            }
+        }
+        // Bound the fleet tables: spot-heavy fleets register a fresh id
+        // per respawn and sites are client-supplied strings — dead
+        // workers and long-idle sites would otherwise accumulate
+        // forever in memory, the fleet segment and this very sweep.
+        const DEAD_WORKER_RETENTION: usize = 1024;
+        const IDLE_SITE_RETENTION_SECS: f64 = 3600.0;
+        {
+            let mut fl = self.fleet.lock();
+            fl.registry.gc_dead(DEAD_WORKER_RETENTION);
+            fl.sched.gc_idle(now, IDLE_SITE_RETENTION_SECS);
+        }
+        handled
+    }
+
+    /// One trial of a lost/deregistered worker: requeue it when budget
+    /// remains (`Some(true)`), fail it durably otherwise
+    /// (`Some(false)`). `None` = nothing to do — the lease was already
+    /// gone: a straggler tell beat us, or a previous partially-crashed
+    /// expiry already handled it.
+    fn requeue_or_fail(&self, trial_id: u64, expected_worker: u64, now: f64) -> Option<bool> {
+        let shard_idx = self.route(trial_id).ok()?;
+        let mut guard = self.lock_shard(shard_idx);
+        let state = &mut *guard;
+        let Some(&(si, ti)) = state.trial_index.get(&trial_id) else { return None };
+        if state.studies[si].trials[ti].validate_transition("fail").is_err() {
+            // Already terminal: the lease (if any) is stale bookkeeping.
+            let study_key = state.studies[si].key.clone();
+            self.fleet.lock().finish_trial(trial_id, &study_key);
+            return None;
+        }
+        let study_key = state.studies[si].key.clone();
+        let mut fl = self.fleet.lock();
+        let info = fl.leases.get(trial_id)?;
+        if info.worker != expected_worker {
+            return None; // re-homed already
+        }
+        if fl.leases.requeues(trial_id) < self.config.requeue_max {
+            let ev = {
+                let mut o = Value::obj();
+                o.set("trial_id", trial_id)
+                    .set("study_key", study_key.as_str())
+                    .set("at", now);
+                Value::Obj(o)
+            };
+            if self
+                .persist(Record::new("trial_requeue", ev).with_shard(FLEET_SHARD))
+                .is_err()
+            {
+                return None;
+            }
+            let requeued = fl.requeue(trial_id, expected_worker);
+            debug_assert!(requeued, "lease checked under this lock");
+            // Give the queued trial a fresh reap window: it is waiting
+            // for a worker, not abandoned.
+            state.last_seen.insert(trial_id, now);
+            self.metrics.fleet_trials_requeued.inc();
+            Some(true)
+        } else {
+            // Budget spent: fail the trial for good (shard-stamped
+            // record — this *is* a trial state transition).
+            let ev = {
+                let mut o = Value::obj();
+                o.set("trial_id", trial_id).set("at", now);
+                Value::Obj(o)
+            };
+            if self
+                .persist(Record::new("trial_fail", ev).with_shard(shard_idx as u32))
+                .is_err()
+            {
+                return None;
+            }
+            let _ = state.studies[si].trials[ti].fail(now);
+            state.last_seen.remove(&trial_id);
+            fl.finish_trial(trial_id, &study_key);
+            drop(fl);
+            self.shard_metrics_update(shard_idx, state);
+            self.metrics.trials_failed.inc();
+            Some(false)
+        }
+    }
+
+    /// Fleet worker listing (`GET /api/workers`).
+    pub fn workers_json(&self) -> Value {
+        self.fleet.lock().registry.to_json()
+    }
+
+    /// Fleet tables (tests and the stats/metrics paths).
+    pub fn fleet(&self) -> &Fleet {
+        &self.fleet
     }
 
     // ------------------------------------------------------------------
@@ -892,9 +1514,20 @@ impl Engine {
                 .set(
                     "failed_batches",
                     wal.stats().failed_batches.load(Ordering::Relaxed),
+                )
+                .set(
+                    "batch_limit",
+                    wal.stats().batch_limit.load(Ordering::Relaxed),
+                )
+                .set("adaptive", self.config.wal_batch_adaptive)
+                .set(
+                    "segments_reused",
+                    wal.stats().segments_reused.load(Ordering::Relaxed),
                 );
             o.set("wal_commit", Value::Obj(w));
         }
+        // Fleet block: worker registry + lease + scheduler state.
+        o.set("fleet", self.fleet.lock().stats_json(&self.fleet.config));
         // What the last recovery pass observed (zeros in-memory) — the
         // torn-tail surface operators check after a crashy restart.
         let rec = self.recovery;
@@ -927,28 +1560,86 @@ impl Engine {
         // One compaction at a time: the begin/cut/finish phases of two
         // drivers must not interleave on the writer thread.
         let _serial = self.compact_lock.lock().unwrap();
+        let mut cut_resets: Vec<(usize, u64)> = Vec::new();
+        let mut fleet_cut: Option<u64> = None;
+        match self.compact_phases(wal, &mut cut_resets, &mut fleet_cut) {
+            Ok(carried) => {
+                // Records appended during the compaction live in the new
+                // epoch's log and still count against the next compaction
+                // threshold. `carried` races with concurrent `persist`
+                // increments, so the counter can drift by the handful of
+                // in-flight mutations — acceptable for a compaction
+                // *policy* input, never consulted for correctness.
+                self.wal_records.store(carried, Ordering::Relaxed);
+                self.metrics.wal_records.set(carried as f64);
+                Ok(())
+            }
+            Err(e) => {
+                // The manifest never committed, so the segments cut so
+                // far are orphans: the records they covered must count
+                // as dirty again, or a later clean-shard reuse of the
+                // *previous* manifest's segment would drop them.
+                for (idx, captured) in cut_resets {
+                    self.shard_dirty[idx].fetch_add(captured, Ordering::Relaxed);
+                }
+                if let Some(captured) = fleet_cut {
+                    self.fleet_dirty.fetch_add(captured, Ordering::Relaxed);
+                }
+                Err(e)
+            }
+        }
+    }
+
+    /// The rotate → cut/reuse per shard → cut fleet → commit sequence
+    /// of one compaction. Each successful cut records the dirty count
+    /// it consumed in `cut_resets` / `fleet_cut` so [`Engine::compact`]
+    /// can restore the counters if a later phase fails.
+    fn compact_phases(
+        &self,
+        wal: &GroupWal,
+        cut_resets: &mut Vec<(usize, u64)>,
+        fleet_cut: &mut Option<u64>,
+    ) -> Result<u64, ApiError> {
         wal.begin_compact().map_err(ApiError::Storage)?;
         for (idx, shard) in self.shards.iter().enumerate() {
             let guard = shard.state.lock().unwrap();
+            // Clean-shard skip: no records since this shard's previous
+            // segment (the dirty counter is only ever touched under
+            // this shard's lock) means that segment still covers the
+            // shard exactly — reference it in the new manifest instead
+            // of serializing an identical snapshot.
+            if self.shard_dirty[idx].load(Ordering::Relaxed) == 0
+                && wal.reuse_segment(idx as u32).map_err(ApiError::Storage)?
+            {
+                drop(guard);
+                continue;
+            }
             let studies = Self::shard_studies_value(&guard);
             wal.compact_shard(idx as u32, studies).map_err(ApiError::Storage)?;
+            cut_resets.push((idx, self.shard_dirty[idx].swap(0, Ordering::Relaxed)));
             drop(guard);
         }
-        let carried = wal
-            .finish_compact(
-                self.next_trial_id.load(Ordering::Relaxed),
-                self.next_study_id.load(Ordering::Relaxed),
-            )
-            .map_err(ApiError::Storage)?;
-        // Records appended during the compaction live in the new epoch's
-        // log and still count against the next compaction threshold.
-        // `carried` races with concurrent `persist` increments, so the
-        // counter can drift by the handful of in-flight mutations —
-        // acceptable for a compaction *policy* input, never consulted
-        // for correctness.
-        self.wal_records.store(carried, Ordering::Relaxed);
-        self.metrics.wal_records.set(carried as f64);
-        Ok(())
+        // Fleet segment: cut under the bind gate's write half (no
+        // lease_bind may straddle the cut) plus the fleet lock (every
+        // other fleet record is appended under it), mirroring the
+        // per-shard exact-cut argument. Skipped entirely while the
+        // fleet was never used, reused while clean, re-cut once dirty.
+        {
+            let _gate = self.fleet_bind_gate.write().unwrap();
+            let fl = self.fleet.lock();
+            let clean = self.fleet_dirty.load(Ordering::Relaxed) == 0;
+            let reused = clean && wal.reuse_segment(FLEET_SHARD).map_err(ApiError::Storage)?;
+            if !reused && (!clean || !fl.registry.is_empty() || !fl.leases.is_empty()) {
+                let snapshot = fl.snapshot_json();
+                wal.compact_shard(FLEET_SHARD, snapshot).map_err(ApiError::Storage)?;
+                *fleet_cut = Some(self.fleet_dirty.swap(0, Ordering::Relaxed));
+            }
+        }
+        wal.finish_compact(
+            self.next_trial_id.load(Ordering::Relaxed),
+            self.next_study_id.load(Ordering::Relaxed),
+        )
+        .map_err(ApiError::Storage)
     }
 
     // ------------------------------------------------------------------
@@ -1002,8 +1693,10 @@ impl Engine {
     /// per-shard mutation order and the compaction cut stays consistent.
     fn persist(&self, record: Record) -> Result<(), ApiError> {
         if let Some(wal) = &self.wal {
+            let shard = record.shard;
             wal.append(record).map_err(ApiError::Storage)?;
             self.wal_records.fetch_add(1, Ordering::Relaxed);
+            self.note_dirty(shard, 1);
         }
         Ok(())
     }
@@ -1016,10 +1709,26 @@ impl Engine {
         }
         if let Some(wal) = &self.wal {
             let n = records.len() as u64;
+            let shards: Vec<u32> = records.iter().map(|r| r.shard).collect();
             wal.append_many(records).map_err(ApiError::Storage)?;
             self.wal_records.fetch_add(n, Ordering::Relaxed);
+            for shard in shards {
+                self.note_dirty(shard, 1);
+            }
         }
         Ok(())
+    }
+
+    /// Count a durably appended record against its shard's (or the
+    /// fleet's) compaction dirty counter. Callers hold the matching
+    /// lock across the append, so the counter agrees exactly with the
+    /// segment cuts taken under the same lock.
+    fn note_dirty(&self, shard: u32, n: u64) {
+        if shard == FLEET_SHARD {
+            self.fleet_dirty.fetch_add(n, Ordering::Relaxed);
+        } else if let Some(d) = self.shard_dirty.get(shard as usize) {
+            d.fetch_add(n, Ordering::Relaxed);
+        }
     }
 
     /// Mirror the WAL counters into the metrics gauges. Called by the
@@ -1034,12 +1743,36 @@ impl Engine {
             self.metrics.wal_commit_records.set(records as f64);
             self.metrics.wal_commit_last_batch.set(last as f64);
             self.metrics.wal_commit_max_batch.set(max as f64);
+            self.metrics
+                .wal_commit_batch_limit
+                .set(wal.stats().batch_limit.load(Ordering::Relaxed) as f64);
+            self.metrics
+                .compact_segments_reused
+                .set(wal.stats().segments_reused.load(Ordering::Relaxed) as f64);
         }
         let rec = self.recovery;
         self.metrics.wal_recovered_records.set(rec.recovered_records as f64);
         self.metrics.wal_truncated_records.set(rec.truncated_records as f64);
         self.metrics.wal_truncated_bytes.set(rec.truncated_bytes as f64);
         self.metrics.wal_filtered_records.set(rec.filtered_records as f64);
+        // Fleet gauges (scrape-time snapshot of the fleet tables).
+        {
+            let fl = self.fleet.lock();
+            self.metrics
+                .fleet_workers_alive
+                .set(fl.registry.count(crate::fleet::WorkerState::Alive) as f64);
+            self.metrics.fleet_leases.set(fl.leases.len() as f64);
+            self.metrics
+                .fleet_requeue_depth
+                .set(fl.leases.queue_depth() as f64);
+            let loads: Vec<(String, f64)> = fl
+                .sched
+                .site_loads()
+                .into_iter()
+                .map(|(site, n)| (site, n as f64))
+                .collect();
+            *self.metrics.site_leases.lock().unwrap() = loads;
+        }
     }
 
     /// Refresh the per-shard gauges from the shard state (cheap; called
@@ -1177,11 +1910,21 @@ impl Engine {
     /// Events whose parent study/trial record was lost (torn tail) are
     /// counted into `recovery.orphan_records` and dropped, exactly as
     /// the sequential replay ignored them.
+    /// Fleet record tags (engine-global; replayed sequentially after
+    /// the study partitions, not inside them).
+    fn is_fleet_tag(tag: &str) -> bool {
+        matches!(
+            tag,
+            "worker_register" | "worker_lost" | "worker_deregister" | "lease_bind"
+                | "trial_requeue"
+        )
+    }
+
     fn plan_replay(
         &self,
         loaded: LoadedState,
         recovery: &mut RecoveryStats,
-    ) -> Result<Vec<ReplayPartition>, ApiError> {
+    ) -> Result<(Vec<ReplayPartition>, Vec<Record>), ApiError> {
         let p_count = if self.config.replay_threads > 0 {
             self.config.replay_threads
         } else {
@@ -1211,7 +1954,12 @@ impl Engine {
             parts[p].studies.push(study);
         }
 
+        let mut fleet_events: Vec<Record> = Vec::new();
         for rec in loaded.events {
+            if Self::is_fleet_tag(&rec.tag) {
+                fleet_events.push(rec);
+                continue;
+            }
             let p = match rec.tag.as_str() {
                 "study_new" => match parse_ask_body(rec.payload.get("def")) {
                     Ok((def, _)) => {
@@ -1255,7 +2003,7 @@ impl Engine {
                 None => recovery.orphan_records += 1,
             }
         }
-        Ok(parts)
+        Ok((parts, fleet_events))
     }
 
     /// Replay partitions — on one thread each when there is real
@@ -1808,6 +2556,230 @@ mod tests {
         for sv in studies.as_arr().unwrap() {
             assert_eq!(sv.get("n_completed").as_i64(), Some(3));
         }
+    }
+
+    fn ask_body_worker(study: &str, worker: u64) -> Value {
+        let mut v = ask_body(study);
+        if let Value::Obj(o) = &mut v {
+            o.set("worker", worker);
+        }
+        v
+    }
+
+    #[test]
+    fn lease_expiry_requeues_preempted_trials_deterministically() {
+        let cfg = EngineConfig { lease_timeout: Some(0.01), ..Default::default() };
+        let e = Engine::in_memory(cfg);
+        let (w1, ttl) = e.register_worker("n1", "spot", "gpu").unwrap();
+        assert_eq!(ttl, Some(0.01));
+        let r1 = e.ask(&ask_body_worker("s", w1)).unwrap();
+        let r2 = e.ask(&ask_body_worker("s", w1)).unwrap();
+        assert!(!r1.requeued && !r2.requeued);
+        // The worker vanishes: no heartbeat past the deadline.
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(e.expire_leases(), 2);
+        assert_eq!(e.expire_leases(), 0, "expiry is exactly-once");
+        assert!(matches!(e.worker_heartbeat(w1), Err(ApiError::Conflict(_))));
+        // A replacement worker receives both trials back — identical
+        // id, number and parameters (FIFO by creation order).
+        let (w2, _) = e.register_worker("n2", "spot", "gpu").unwrap();
+        let q1 = e.ask(&ask_body_worker("s", w2)).unwrap();
+        let q2 = e.ask(&ask_body_worker("s", w2)).unwrap();
+        assert!(q1.requeued && q2.requeued);
+        assert_eq!(
+            (q1.trial_id, q1.trial_number, q1.params.to_string()),
+            (r1.trial_id, r1.trial_number, r1.params.to_string())
+        );
+        assert_eq!(q2.trial_id, r2.trial_id);
+        // The next fresh ask continues the number sequence: preemption
+        // never perturbs the deterministic suggestion stream.
+        let q3 = e.ask(&ask_body_worker("s", w2)).unwrap();
+        assert!(!q3.requeued);
+        assert_eq!(q3.trial_number, 2);
+        let clean = Engine::in_memory(EngineConfig::default());
+        for expected in [&r1, &r2, &q3] {
+            let c = clean.ask(&ask_body("s")).unwrap();
+            assert_eq!(c.trial_number, expected.trial_number);
+            assert_eq!(c.params.to_string(), expected.params.to_string());
+        }
+        e.tell(q1.trial_id, 1.0).unwrap();
+        e.tell(q2.trial_id, 2.0).unwrap();
+        e.tell(q3.trial_id, 3.0).unwrap();
+        assert_eq!(e.fleet().lock().leases.len(), 0, "tells released every lease");
+        assert_eq!(e.fleet().lock().leases.queue_depth(), 0);
+    }
+
+    #[test]
+    fn requeue_budget_exhaustion_fails_the_trial() {
+        let cfg = EngineConfig {
+            lease_timeout: Some(0.01),
+            requeue_max: 1,
+            ..Default::default()
+        };
+        let e = Engine::in_memory(cfg);
+        let (w1, _) = e.register_worker("n1", "spot", "gpu").unwrap();
+        let r = e.ask(&ask_body_worker("s", w1)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(e.expire_leases(), 1, "first loss: requeued");
+        let (w2, _) = e.register_worker("n2", "spot", "gpu").unwrap();
+        let q = e.ask(&ask_body_worker("s", w2)).unwrap();
+        assert!(q.requeued);
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(e.expire_leases(), 1, "second loss: budget spent, failed");
+        assert!(matches!(e.tell(r.trial_id, 1.0), Err(ApiError::Conflict(_))));
+        let fl = e.fleet().lock();
+        assert_eq!(fl.leases.queue_depth(), 0);
+        assert_eq!(fl.leases.len(), 0);
+    }
+
+    #[test]
+    fn graceful_deregister_requeues_immediately() {
+        let e = Engine::in_memory(EngineConfig::default());
+        let (w1, _) = e.register_worker("n1", "cloud", "gpu").unwrap();
+        let r = e.ask(&ask_body_worker("s", w1)).unwrap();
+        // No lease-timeout wait: deregistration hands the trial back.
+        assert_eq!(e.deregister_worker(w1).unwrap(), 1);
+        let (w2, _) = e.register_worker("n2", "cloud", "gpu").unwrap();
+        let q = e.ask(&ask_body_worker("s", w2)).unwrap();
+        assert!(q.requeued);
+        assert_eq!(q.trial_id, r.trial_id);
+        e.tell(q.trial_id, 1.0).unwrap();
+    }
+
+    #[test]
+    fn fleet_state_survives_recovery_and_compaction() {
+        let d = TempDir::new("engine-fleet-recover");
+        let (w1, r1_id, r2_id);
+        {
+            let e = Engine::open(d.path(), EngineConfig::default()).unwrap();
+            let (w, _) = e.register_worker("n1", "infn-cloud", "a100").unwrap();
+            w1 = w;
+            let r1 = e.ask(&ask_body_worker("s", w)).unwrap();
+            let r2 = e.ask(&ask_body_worker("s", w)).unwrap();
+            r1_id = r1.trial_id;
+            r2_id = r2.trial_id;
+            e.tell(r2.trial_id, 1.0).unwrap();
+        }
+        // Reopen: the worker and its one live lease survive; the lease
+        // released by the tell stays released.
+        let e = Engine::open(d.path(), EngineConfig::default()).unwrap();
+        {
+            let fl = e.fleet().lock();
+            assert_eq!(fl.registry.len(), 1);
+            assert_eq!(fl.registry.get(w1).unwrap().site, "infn-cloud");
+            assert_eq!(fl.leases.len(), 1);
+            assert!(fl.leases.is_leased(r1_id));
+            assert!(!fl.leases.is_leased(r2_id));
+        }
+        // Deadlines were reset: the surviving worker can heartbeat.
+        assert_eq!(e.worker_heartbeat(w1).unwrap(), 1);
+        // Compaction writes the fleet segment; a reopen that reads no
+        // log records at all still reconstructs the fleet.
+        e.compact().unwrap();
+        drop(e);
+        let e = Engine::open(d.path(), EngineConfig::default()).unwrap();
+        assert_eq!(e.recovery_stats().recovered_records, 0, "state came from segments");
+        {
+            let fl = e.fleet().lock();
+            assert_eq!(fl.registry.len(), 1);
+            assert!(fl.leases.is_leased(r1_id));
+        }
+        e.tell(r1_id, 0.5).unwrap();
+        assert_eq!(e.fleet().lock().leases.len(), 0);
+    }
+
+    #[test]
+    fn second_compaction_skips_clean_shards() {
+        let d = TempDir::new("engine-clean-skip");
+        let cfg = EngineConfig { n_shards: 4, ..Default::default() };
+        let e = Engine::open(d.path(), cfg.clone()).unwrap();
+        for s in 0..8 {
+            let r = e.ask(&ask_body(&format!("skip-{s}"))).unwrap();
+            e.tell(r.trial_id, s as f64).unwrap();
+        }
+        e.compact().unwrap();
+        let stats = e.stats_json();
+        assert_eq!(
+            stats.get("wal_commit").get("segments_reused").as_u64(),
+            Some(0),
+            "first compaction cuts everything"
+        );
+        // Touch exactly one study → exactly one dirty shard.
+        let r = e.ask(&ask_body("skip-0")).unwrap();
+        e.tell(r.trial_id, 9.0).unwrap();
+        e.compact().unwrap();
+        let stats = e.stats_json();
+        assert_eq!(
+            stats.get("wal_commit").get("segments_reused").as_u64(),
+            Some(3),
+            "three clean shards reused their segments"
+        );
+        // Nothing new at all: every shard reuses.
+        e.compact().unwrap();
+        let stats = e.stats_json();
+        assert_eq!(stats.get("wal_commit").get("segments_reused").as_u64(), Some(7));
+        drop(e);
+        // Recovery over the reused-segment manifest is exact.
+        let e = Engine::open(d.path(), cfg).unwrap();
+        assert_eq!(e.n_studies(), 8);
+        assert_eq!(e.recovery_stats().segments, 4);
+        let total: i64 = e
+            .studies_json()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|s| s.get("n_completed").as_i64().unwrap())
+            .sum();
+        assert_eq!(total, 9, "every acknowledged tell recovered");
+        // Reuse works across a restart too: the loaded manifest seeds
+        // the reuse table (the layout matched), and nothing is dirty.
+        e.compact().unwrap();
+        let stats = e.stats_json();
+        assert_eq!(stats.get("wal_commit").get("segments_reused").as_u64(), Some(4));
+    }
+
+    #[test]
+    fn reap_skips_leased_trials() {
+        let cfg = EngineConfig {
+            reap_after: Some(0.0),
+            lease_timeout: Some(60.0),
+            ..Default::default()
+        };
+        let e = Engine::in_memory(cfg);
+        let (w, _) = e.register_worker("n1", "cloud", "gpu").unwrap();
+        let leased = e.ask(&ask_body_worker("s", w)).unwrap();
+        let legacy = e.ask(&ask_body("s")).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert_eq!(e.reap_stale(), 1, "only the worker-less trial is reaped");
+        assert!(matches!(e.tell(legacy.trial_id, 1.0), Err(ApiError::Conflict(_))));
+        e.tell(leased.trial_id, 1.0).unwrap();
+    }
+
+    #[test]
+    fn reaper_bounds_queued_trial_wait() {
+        // A requeued trial gets one full reap window to find a new
+        // worker (the requeue refreshed `last_seen`); if none arrives,
+        // the reaper fails it and scrubs its fleet entries — the
+        // pre-fleet "every silent trial is bounded by reap_after"
+        // guarantee holds for queued trials too.
+        let cfg = EngineConfig {
+            reap_after: Some(0.05),
+            lease_timeout: Some(0.01),
+            ..Default::default()
+        };
+        let e = Engine::in_memory(cfg);
+        let (w, _) = e.register_worker("n1", "spot", "gpu").unwrap();
+        let r = e.ask(&ask_body_worker("s", w)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(e.expire_leases(), 1);
+        // Within the window the queued trial is left alone…
+        assert_eq!(e.reap_stale(), 0, "queue gets its full reap window");
+        assert_eq!(e.fleet().lock().leases.queue_depth(), 1);
+        // …but once it has waited a full reap_after unclaimed, it goes.
+        std::thread::sleep(std::time::Duration::from_millis(70));
+        assert_eq!(e.reap_stale(), 1);
+        assert_eq!(e.fleet().lock().leases.queue_depth(), 0, "fleet entries scrubbed");
+        assert!(matches!(e.tell(r.trial_id, 1.0), Err(ApiError::Conflict(_))));
     }
 
     #[test]

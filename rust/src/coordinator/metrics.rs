@@ -57,6 +57,12 @@ pub struct Histogram {
     samples: Mutex<Vec<f64>>,
 }
 
+/// Escape a label value for the Prometheus exposition format
+/// (backslash, double quote and newline must be backslash-escaped).
+fn escape_label(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
 /// Default API-latency bucket bounds: 50 µs … 10 s, log-spaced.
 pub fn default_latency_bounds() -> Vec<f64> {
     let mut b = Vec::new();
@@ -161,6 +167,13 @@ pub struct Metrics {
     pub trials_failed: Counter,
     /// Failed auto-compaction attempts (snapshot write errors).
     pub compact_failures: Counter,
+    /// Fleet counters: registrations, lost workers, lease-expiry
+    /// requeues, requeued-trial re-assignments, quota denials (429s).
+    pub fleet_workers_registered: Counter,
+    pub fleet_workers_lost: Counter,
+    pub fleet_trials_requeued: Counter,
+    pub fleet_trials_reassigned: Counter,
+    pub fleet_quota_denials: Counter,
     pub wal_records: Gauge,
     /// Group-commit batches flushed (== fsync count under load).
     pub wal_commit_batches: Gauge,
@@ -179,6 +192,17 @@ pub struct Metrics {
     /// Records skipped at recovery because a snapshot segment covers
     /// them (crash inside a compaction window).
     pub wal_filtered_records: Gauge,
+    /// Live group-commit batch limit (adaptive batching).
+    pub wal_commit_batch_limit: Gauge,
+    /// Segment cuts skipped by clean-shard reuse (lifetime total).
+    pub compact_segments_reused: Gauge,
+    /// Fleet gauges, refreshed at scrape time.
+    pub fleet_workers_alive: Gauge,
+    pub fleet_leases: Gauge,
+    pub fleet_requeue_depth: Gauge,
+    /// Per-site active lease counts (labeled series; sites are dynamic
+    /// strings, so a scrape-time snapshot replaces the whole vector).
+    pub site_leases: Mutex<Vec<(String, f64)>>,
     pub ask_latency: Histogram,
     pub tell_latency: Histogram,
     pub should_prune_latency: Histogram,
@@ -209,6 +233,11 @@ impl Metrics {
             trials_pruned: Counter::default(),
             trials_failed: Counter::default(),
             compact_failures: Counter::default(),
+            fleet_workers_registered: Counter::default(),
+            fleet_workers_lost: Counter::default(),
+            fleet_trials_requeued: Counter::default(),
+            fleet_trials_reassigned: Counter::default(),
+            fleet_quota_denials: Counter::default(),
             wal_records: Gauge::default(),
             wal_commit_batches: Gauge::default(),
             wal_commit_records: Gauge::default(),
@@ -218,6 +247,12 @@ impl Metrics {
             wal_truncated_records: Gauge::default(),
             wal_truncated_bytes: Gauge::default(),
             wal_filtered_records: Gauge::default(),
+            wal_commit_batch_limit: Gauge::default(),
+            compact_segments_reused: Gauge::default(),
+            fleet_workers_alive: Gauge::default(),
+            fleet_leases: Gauge::default(),
+            fleet_requeue_depth: Gauge::default(),
+            site_leases: Mutex::new(Vec::new()),
             ask_latency: Histogram::new(default_latency_bounds()),
             tell_latency: Histogram::new(default_latency_bounds()),
             should_prune_latency: Histogram::new(default_latency_bounds()),
@@ -228,7 +263,7 @@ impl Metrics {
     /// Render Prometheus text exposition format.
     pub fn render(&self) -> String {
         let mut out = String::with_capacity(4096);
-        let counters: [(&str, &Counter); 12] = [
+        let counters: [(&str, &Counter); 17] = [
             ("hopaas_ask_total", &self.ask_total),
             ("hopaas_tell_total", &self.tell_total),
             ("hopaas_should_prune_total", &self.should_prune_total),
@@ -241,6 +276,11 @@ impl Metrics {
             ("hopaas_trials_pruned_total", &self.trials_pruned),
             ("hopaas_trials_failed_total", &self.trials_failed),
             ("hopaas_compact_failures_total", &self.compact_failures),
+            ("hopaas_fleet_workers_registered_total", &self.fleet_workers_registered),
+            ("hopaas_fleet_workers_lost_total", &self.fleet_workers_lost),
+            ("hopaas_fleet_trials_requeued_total", &self.fleet_trials_requeued),
+            ("hopaas_fleet_trials_reassigned_total", &self.fleet_trials_reassigned),
+            ("hopaas_fleet_quota_denials_total", &self.fleet_quota_denials),
         ];
         for (name, c) in counters {
             out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
@@ -258,8 +298,26 @@ impl Metrics {
             ("hopaas_wal_truncated_records", &self.wal_truncated_records),
             ("hopaas_wal_truncated_bytes", &self.wal_truncated_bytes),
             ("hopaas_wal_filtered_records", &self.wal_filtered_records),
+            ("hopaas_wal_commit_batch_limit", &self.wal_commit_batch_limit),
+            ("hopaas_compact_segments_reused", &self.compact_segments_reused),
+            ("hopaas_fleet_workers_alive", &self.fleet_workers_alive),
+            ("hopaas_fleet_leases", &self.fleet_leases),
+            ("hopaas_fleet_requeue_depth", &self.fleet_requeue_depth),
         ] {
             out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", g.get()));
+        }
+        {
+            let sites = self.site_leases.lock().unwrap();
+            if !sites.is_empty() {
+                out.push_str("# TYPE hopaas_site_leases gauge\n");
+                for (site, n) in sites.iter() {
+                    // Site names are client-supplied: escape them per the
+                    // exposition format or one register with a quote in
+                    // it would corrupt the whole scrape.
+                    let site = escape_label(site);
+                    out.push_str(&format!("hopaas_site_leases{{site=\"{site}\"}} {n}\n"));
+                }
+            }
         }
         if !self.shards.is_empty() {
             out.push_str(&format!(
@@ -367,6 +425,27 @@ mod tests {
         assert!(text.contains("hopaas_wal_commit_batches 5"));
         // No shard series when the registry has no shards.
         assert!(!Metrics::default().render().contains("hopaas_shard_ops_total"));
+    }
+
+    #[test]
+    fn fleet_series_rendered() {
+        let m = Metrics::default();
+        m.fleet_workers_registered.inc();
+        m.fleet_quota_denials.add(2);
+        m.fleet_leases.set(3.0);
+        m.wal_commit_batch_limit.set(64.0);
+        *m.site_leases.lock().unwrap() =
+            vec![("infn-cloud".into(), 2.0), ("a\"b\nc\\d".into(), 1.0)];
+        let text = m.render();
+        assert!(text.contains("hopaas_fleet_workers_registered_total 1"));
+        assert!(text.contains("hopaas_fleet_quota_denials_total 2"));
+        assert!(text.contains("hopaas_fleet_leases 3"));
+        assert!(text.contains("hopaas_wal_commit_batch_limit 64"));
+        assert!(text.contains("hopaas_site_leases{site=\"infn-cloud\"} 2"));
+        // Hostile site names are escaped, not emitted raw.
+        assert!(text.contains("hopaas_site_leases{site=\"a\\\"b\\nc\\\\d\"} 1"));
+        // No site series while the fleet is empty.
+        assert!(!Metrics::default().render().contains("hopaas_site_leases"));
     }
 
     #[test]

@@ -10,6 +10,10 @@
 //! | fail           | POST   | `/api/fail/{token}`         |
 //! | token issue    | POST   | `/api/token`                |
 //! | token revoke   | POST   | `/api/revoke/{token}`       |
+//! | worker join    | POST   | `/api/workers/register/{token}`   |
+//! | heartbeat      | POST   | `/api/workers/heartbeat/{token}`  |
+//! | worker leave   | POST   | `/api/workers/deregister/{token}` |
+//! | workers        | GET    | `/api/workers`              |
 //! | studies        | GET    | `/api/studies`              |
 //! | study          | GET    | `/api/studies/{id}`         |
 //! | trials         | GET    | `/api/studies/{id}/trials`  |
@@ -95,6 +99,8 @@ fn err_response(e: &ApiError) -> Response {
         ApiError::BadRequest(m) => Response::error(422, m),
         ApiError::NotFound(m) => Response::error(404, m),
         ApiError::Conflict(m) => Response::error(409, m),
+        // Quota/fair-share denial: back off and retry.
+        ApiError::Quota(m) => Response::error(429, m),
         ApiError::Storage(m) => Response::error(500, m),
     }
 }
@@ -168,7 +174,8 @@ pub fn build_router(
                         .set("trial_number", reply.trial_number)
                         .set("study_id", reply.study_id)
                         .set("study_key", reply.study_key.as_str())
-                        .set("params", reply.params);
+                        .set("params", reply.params)
+                        .set("requeued", reply.requeued);
                     Response::json(&Value::Obj(o))
                 }
                 Err(e) => err_response(&e),
@@ -305,6 +312,88 @@ pub fn build_router(
                 Err(e) => err_response(&e),
             }
         });
+    }
+
+    // --- fleet: worker registry + heartbeat leases -------------------------
+    {
+        let engine = engine.clone();
+        let check = check.clone();
+        router.post("/api/workers/register/{token}", move |req, params| {
+            if let Some(resp) = check(params) {
+                return resp;
+            }
+            let body = match body_json(req) {
+                Ok(b) => b,
+                Err(r) => return r,
+            };
+            let name = body.get("name").as_str().unwrap_or("anonymous");
+            let site = body.get("site").as_str().unwrap_or("default");
+            let gpu = body.get("gpu").as_str().unwrap_or("");
+            match engine.register_worker(name, site, gpu) {
+                Ok((worker_id, lease_timeout)) => {
+                    let mut o = Value::obj();
+                    o.set("worker_id", worker_id)
+                        .set("lease_timeout", lease_timeout)
+                        // Heartbeat at a third of the lease so two
+                        // missed beats still keep the lease alive.
+                        .set("heartbeat_every", lease_timeout.map(|t| t / 3.0));
+                    Response::json(&Value::Obj(o))
+                }
+                Err(e) => err_response(&e),
+            }
+        });
+    }
+    {
+        let engine = engine.clone();
+        let check = check.clone();
+        router.post("/api/workers/heartbeat/{token}", move |req, params| {
+            if let Some(resp) = check(params) {
+                return resp;
+            }
+            let body = match body_json(req) {
+                Ok(b) => b,
+                Err(r) => return r,
+            };
+            let Some(worker_id) = body.get("worker_id").as_u64() else {
+                return Response::error(422, "missing 'worker_id'");
+            };
+            match engine.worker_heartbeat(worker_id) {
+                Ok(leases) => {
+                    let mut o = Value::obj();
+                    o.set("worker_id", worker_id).set("leases", leases);
+                    Response::json(&Value::Obj(o))
+                }
+                Err(e) => err_response(&e),
+            }
+        });
+    }
+    {
+        let engine = engine.clone();
+        let check = check.clone();
+        router.post("/api/workers/deregister/{token}", move |req, params| {
+            if let Some(resp) = check(params) {
+                return resp;
+            }
+            let body = match body_json(req) {
+                Ok(b) => b,
+                Err(r) => return r,
+            };
+            let Some(worker_id) = body.get("worker_id").as_u64() else {
+                return Response::error(422, "missing 'worker_id'");
+            };
+            match engine.deregister_worker(worker_id) {
+                Ok(requeued) => {
+                    let mut o = Value::obj();
+                    o.set("worker_id", worker_id).set("requeued", requeued);
+                    Response::json(&Value::Obj(o))
+                }
+                Err(e) => err_response(&e),
+            }
+        });
+    }
+    {
+        let engine = engine.clone();
+        router.get("/api/workers", move |_, _| Response::json(&engine.workers_json()));
     }
 
     // --- token management -------------------------------------------------
@@ -578,6 +667,91 @@ mod tests {
         // 404: unknown route; 405: wrong method
         assert_eq!(c.get("/api/nope").unwrap().status, 404);
         assert_eq!(c.get("/api/ask/x").unwrap().status, 405);
+        s.stop();
+    }
+
+    #[test]
+    fn fleet_worker_endpoints() {
+        let s = server(false);
+        let mut c = Client::connect(s.addr()).unwrap();
+        let mut reg = Value::obj();
+        reg.set("name", "node-1").set("site", "infn-cloud").set("gpu", "a100");
+        let r = c
+            .post_json("/api/workers/register/x", &Value::Obj(reg))
+            .unwrap()
+            .json_body()
+            .unwrap();
+        let wid = r.get("worker_id").as_u64().unwrap();
+        assert!(r.get("lease_timeout").as_f64().is_some());
+        let hb = r.get("heartbeat_every").as_f64().unwrap();
+        assert!(hb < r.get("lease_timeout").as_f64().unwrap());
+
+        // A worker-bound ask binds a lease; the reply carries `requeued`.
+        let mut body = ask_body();
+        if let Value::Obj(o) = &mut body {
+            o.set("worker", wid);
+        }
+        let ask = c.post_json("/api/ask/x", &body).unwrap().json_body().unwrap();
+        assert_eq!(ask.get("requeued").as_bool(), Some(false));
+        let trial_id = ask.get("trial_id").as_u64().unwrap();
+
+        let mut hb = Value::obj();
+        hb.set("worker_id", wid);
+        let h = c
+            .post_json("/api/workers/heartbeat/x", &Value::Obj(hb.clone()))
+            .unwrap()
+            .json_body()
+            .unwrap();
+        assert_eq!(h.get("leases").as_u64(), Some(1));
+
+        let workers = c.get("/api/workers").unwrap().json_body().unwrap();
+        assert_eq!(workers.at(0).get("site").as_str(), Some("infn-cloud"));
+        assert_eq!(workers.at(0).get("state").as_str(), Some("alive"));
+
+        let stats = c.get("/api/stats").unwrap().json_body().unwrap();
+        assert_eq!(stats.get("fleet").get("leases").as_u64(), Some(1));
+        assert_eq!(stats.get("fleet").get("workers_alive").as_u64(), Some(1));
+
+        // Telling the trial releases the lease.
+        let mut tell = Value::obj();
+        tell.set("trial_id", trial_id).set("value", 0.5);
+        assert_eq!(c.post_json("/api/tell/x", &Value::Obj(tell)).unwrap().status, 200);
+        let h2 = c
+            .post_json("/api/workers/heartbeat/x", &Value::Obj(hb))
+            .unwrap()
+            .json_body()
+            .unwrap();
+        assert_eq!(h2.get("leases").as_u64(), Some(0));
+
+        // Unknown worker ids: 404 on heartbeat/deregister; asks bound
+        // to them are rejected before any trial is created.
+        let mut bogus = Value::obj();
+        bogus.set("worker_id", 999u64);
+        let resp = c
+            .post_json("/api/workers/heartbeat/x", &Value::Obj(bogus.clone()))
+            .unwrap();
+        assert_eq!(resp.status, 404);
+        assert_eq!(
+            c.post_json("/api/workers/deregister/x", &Value::Obj(bogus)).unwrap().status,
+            404
+        );
+        let mut body = ask_body();
+        if let Value::Obj(o) = &mut body {
+            o.set("worker", 999u64);
+        }
+        assert_eq!(c.post_json("/api/ask/x", &body).unwrap().status, 404);
+
+        // Graceful deregister; the metrics render the fleet series.
+        let mut dereg = Value::obj();
+        dereg.set("worker_id", wid);
+        let d = c
+            .post_json("/api/workers/deregister/x", &Value::Obj(dereg))
+            .unwrap()
+            .json_body()
+            .unwrap();
+        assert_eq!(d.get("requeued").as_u64(), Some(0));
+        let metrics = String::from_utf8(c.get("/metrics").unwrap().body).unwrap();
+        assert!(metrics.contains("hopaas_fleet_workers_registered_total 1"));
         s.stop();
     }
 

@@ -1,0 +1,291 @@
+//! Lease table: which worker holds which trial, and the requeue queues
+//! that re-home trials whose worker vanished.
+//!
+//! A *lease* binds a running trial to a worker; it lives exactly as
+//! long as the worker's heartbeat lease does (there is no per-trial
+//! deadline — renewing the worker renews all of its trials at once).
+//! When a worker is lost, each of its leased trials moves to its
+//! study's *requeue queue*: a FIFO of fully-formed trials (id, number
+//! and parameters already fixed) waiting for the next eligible `ask` of
+//! the same study. Handing out a requeued trial does not touch the
+//! study's trial-number reservation or sampler history, which is why
+//! preemption cannot perturb the deterministic suggestion stream.
+
+use crate::json::Value;
+use std::collections::{HashMap, HashSet, VecDeque};
+
+/// One live lease.
+#[derive(Clone, Debug)]
+pub struct LeaseInfo {
+    pub worker: u64,
+    pub study_key: String,
+    pub bound_at: f64,
+}
+
+/// Lease table + per-study requeue queues. Part of `FleetState`.
+#[derive(Default)]
+pub struct LeaseTable {
+    /// trial id → holder.
+    leases: HashMap<u64, LeaseInfo>,
+    /// study key → trials waiting for a new worker (FIFO).
+    queues: HashMap<String, VecDeque<u64>>,
+    /// Every trial in some queue — O(1) membership so a mass
+    /// preemption (thousands of requeues under the fleet lock) does
+    /// not degrade into per-push linear queue scans.
+    queued: HashSet<u64>,
+    /// trial id → times it has been requeued (budget tracking).
+    requeues: HashMap<u64, u32>,
+}
+
+impl LeaseTable {
+    pub fn bind(&mut self, trial_id: u64, worker: u64, study_key: &str, now: f64) {
+        self.leases.insert(
+            trial_id,
+            LeaseInfo { worker, study_key: study_key.to_string(), bound_at: now },
+        );
+    }
+
+    pub fn get(&self, trial_id: u64) -> Option<&LeaseInfo> {
+        self.leases.get(&trial_id)
+    }
+
+    pub fn is_leased(&self, trial_id: u64) -> bool {
+        self.leases.contains_key(&trial_id)
+    }
+
+    pub fn release(&mut self, trial_id: u64) -> Option<LeaseInfo> {
+        self.leases.remove(&trial_id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.leases.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.leases.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&u64, &LeaseInfo)> {
+        self.leases.iter()
+    }
+
+    /// Trial ids of every live lease (reap-skip set).
+    pub fn leased_ids(&self) -> Vec<u64> {
+        self.leases.keys().copied().collect()
+    }
+
+    /// Trial ids currently waiting in a requeue queue (reap-skip set:
+    /// a queued trial is fleet-owned, not abandoned).
+    pub fn queued_ids(&self) -> Vec<u64> {
+        self.queued.iter().copied().collect()
+    }
+
+    /// Every trial the table knows about — leased or queued — with its
+    /// study key (scrub input).
+    pub fn all_tracked(&self) -> Vec<(u64, String)> {
+        let mut out: Vec<(u64, String)> = self
+            .leases
+            .iter()
+            .map(|(tid, info)| (*tid, info.study_key.clone()))
+            .collect();
+        for (key, q) in &self.queues {
+            for tid in q {
+                out.push((*tid, key.clone()));
+            }
+        }
+        out
+    }
+
+    // --- requeue queues --------------------------------------------------
+
+    /// Append to the study's requeue queue and charge the budget. Never
+    /// double-queues a trial (replay idempotence).
+    pub fn push_back(&mut self, study_key: &str, trial_id: u64) {
+        if self.queued.insert(trial_id) {
+            self.queues.entry(study_key.to_string()).or_default().push_back(trial_id);
+            *self.requeues.entry(trial_id).or_insert(0) += 1;
+        }
+    }
+
+    /// Return a popped trial to the head of its queue (a failed handout
+    /// must not lose it, nor re-charge its budget). The id may still be
+    /// in `queued` (pop leaves it there), so the queue re-insert is
+    /// gated on the queue itself — O(n), but only on this error path.
+    pub fn push_front(&mut self, study_key: &str, trial_id: u64) {
+        self.queued.insert(trial_id);
+        let q = self.queues.entry(study_key.to_string()).or_default();
+        if !q.contains(&trial_id) {
+            q.push_front(trial_id);
+        }
+    }
+
+    /// Pop the next waiting trial. Deliberately leaves the id in
+    /// `queued`: between this pop and the eventual bind the trial is
+    /// *in flight*, and the reaper's fleet-owned snapshot must keep
+    /// covering it or it could be failed out from under the handout.
+    /// [`LeaseTable::finish_handout`] (via bind) or a forget clears it.
+    pub fn pop_front(&mut self, study_key: &str) -> Option<u64> {
+        self.queues.get_mut(study_key)?.pop_front()
+    }
+
+    /// The popped trial reached its new lease: drop the in-flight mark.
+    pub fn finish_handout(&mut self, trial_id: u64) {
+        self.queued.remove(&trial_id);
+    }
+
+    pub fn remove_from_queue(&mut self, study_key: &str, trial_id: u64) {
+        if self.queued.remove(&trial_id) {
+            if let Some(q) = self.queues.get_mut(study_key) {
+                q.retain(|&t| t != trial_id);
+            }
+        }
+    }
+
+    pub fn is_queued(&self, trial_id: u64) -> bool {
+        self.queued.contains(&trial_id)
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queued.len()
+    }
+
+    pub fn requeues(&self, trial_id: u64) -> u32 {
+        self.requeues.get(&trial_id).copied().unwrap_or(0)
+    }
+
+    pub fn clear_requeues(&mut self, trial_id: u64) {
+        self.requeues.remove(&trial_id);
+    }
+
+    // --- segment (de)serialization --------------------------------------
+
+    pub fn leases_json(&self) -> Value {
+        let mut ids: Vec<u64> = self.leases.keys().copied().collect();
+        ids.sort_unstable();
+        Value::Arr(
+            ids.iter()
+                .map(|tid| {
+                    let info = &self.leases[tid];
+                    let mut o = Value::obj();
+                    o.set("trial", *tid)
+                        .set("worker", info.worker)
+                        .set("study", info.study_key.as_str())
+                        .set("at", info.bound_at);
+                    Value::Obj(o)
+                })
+                .collect(),
+        )
+    }
+
+    pub fn queues_json(&self) -> Value {
+        let mut keys: Vec<&String> = self.queues.keys().collect();
+        keys.sort();
+        Value::Arr(
+            keys.iter()
+                .filter(|k| !self.queues[**k].is_empty())
+                .map(|k| {
+                    let mut o = Value::obj();
+                    o.set("study", k.as_str()).set(
+                        "trials",
+                        Value::Arr(self.queues[*k].iter().map(|&t| Value::from(t)).collect()),
+                    );
+                    Value::Obj(o)
+                })
+                .collect(),
+        )
+    }
+
+    pub fn requeue_counts_json(&self) -> Value {
+        let mut ids: Vec<u64> = self.requeues.keys().copied().collect();
+        ids.sort_unstable();
+        Value::Arr(
+            ids.iter()
+                .map(|tid| {
+                    Value::Arr(vec![Value::from(*tid), Value::from(self.requeues[tid])])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn load_json(&mut self, leases: &Value, queues: &Value, counts: &Value) {
+        self.leases.clear();
+        self.queues.clear();
+        self.queued.clear();
+        self.requeues.clear();
+        for lv in leases.as_arr().unwrap_or(&[]) {
+            if let (Some(tid), Some(wid), Some(study)) = (
+                lv.get("trial").as_u64(),
+                lv.get("worker").as_u64(),
+                lv.get("study").as_str(),
+            ) {
+                self.bind(tid, wid, study, lv.get("at").as_f64().unwrap_or(0.0));
+            }
+        }
+        for qv in queues.as_arr().unwrap_or(&[]) {
+            let Some(study) = qv.get("study").as_str() else { continue };
+            for tv in qv.get("trials").as_arr().unwrap_or(&[]) {
+                if let Some(tid) = tv.as_u64() {
+                    // Budgets come from `counts` below, not push_back.
+                    if self.queued.insert(tid) {
+                        self.queues.entry(study.to_string()).or_default().push_back(tid);
+                    }
+                }
+            }
+        }
+        for cv in counts.as_arr().unwrap_or(&[]) {
+            if let (Some(tid), Some(n)) = (cv.at(0).as_u64(), cv.at(1).as_u64()) {
+                self.requeues.insert(tid, n as u32);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn queue_fifo_and_budget() {
+        let mut t = LeaseTable::default();
+        t.push_back("s", 1);
+        t.push_back("s", 2);
+        t.push_back("s", 1); // double-queue ignored, budget not re-charged
+        assert_eq!(t.queue_depth(), 2);
+        assert_eq!(t.requeues(1), 1);
+        assert_eq!(t.pop_front("s"), Some(1));
+        t.push_front("s", 1); // failed handout goes back to the head
+        assert_eq!(t.requeues(1), 1, "push_front never charges the budget");
+        assert_eq!(t.pop_front("s"), Some(1));
+        assert_eq!(t.pop_front("s"), Some(2));
+        assert_eq!(t.pop_front("s"), None);
+        assert_eq!(t.pop_front("other"), None);
+    }
+
+    #[test]
+    fn lease_bind_release() {
+        let mut t = LeaseTable::default();
+        t.bind(5, 1, "s", 2.0);
+        assert!(t.is_leased(5));
+        assert_eq!(t.get(5).unwrap().worker, 1);
+        let info = t.release(5).unwrap();
+        assert_eq!(info.study_key, "s");
+        assert!(t.release(5).is_none());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut t = LeaseTable::default();
+        t.bind(5, 1, "a", 2.0);
+        t.bind(6, 2, "b", 3.0);
+        t.push_back("b", 9);
+        t.push_back("b", 10);
+        let (l, q, c) = (t.leases_json(), t.queues_json(), t.requeue_counts_json());
+        let mut back = LeaseTable::default();
+        back.load_json(&l, &q, &c);
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.get(6).unwrap().study_key, "b");
+        assert_eq!(back.queue_depth(), 2);
+        assert_eq!(back.pop_front("b"), Some(9));
+        assert_eq!(back.requeues(10), 1);
+    }
+}

@@ -1,0 +1,436 @@
+//! Fleet subsystem: worker registry, heartbeat leases and site-aware
+//! trial scheduling.
+//!
+//! The paper's §4 deployment coordinates "more than twenty concurrent
+//! and diverse computing nodes" — CINECA MARCONI 100, INFN Cloud,
+//! private boxes, commercial spot instances — but the seed server had no
+//! notion of a *worker*: trials were handed to anonymous `ask` calls and
+//! a vanished node was only noticed by the passive `reap_stale` sweep,
+//! hours later. This module makes the fleet first-class:
+//!
+//! * **registry** ([`registry`]): workers announce themselves
+//!   (`POST /api/workers/register`) with a site / GPU profile and renew
+//!   a *worker lease* with heartbeats. A worker whose deadline passes is
+//!   marked lost.
+//! * **leases** ([`lease`]): every worker-bound `ask` binds the trial to
+//!   its worker's lease. Heartbeats renew all of a worker's trial leases
+//!   at once; when the worker is lost, each of its running trials is
+//!   deterministically *requeued* (handed, with its original id, number
+//!   and parameters, to the next eligible `ask` of the same study) or
+//!   failed once its requeue budget is spent — no reaper involved.
+//! * **scheduler** ([`scheduler`]): per-site and per-study concurrency
+//!   quotas with fair-share admission, so one greedy campaign cannot
+//!   starve the others off a shared site.
+//!
+//! ## Lease state machine
+//!
+//! ```text
+//!       ask(worker=w)                 heartbeat(w)
+//!   ──────────────────▶  LEASED(w) ◀───────────────┐ (deadline renewed)
+//!                           │  │                   │
+//!      tell/fail/prune      │  │ w's deadline passes
+//!   ◀───────(released)──────┘  ▼
+//!                           REQUEUED ──ask(worker=w')──▶ LEASED(w')
+//!                              │
+//!                              │ requeue budget spent
+//!                              ▼
+//!                           FAILED (durable trial_fail)
+//! ```
+//!
+//! ## Durability
+//!
+//! Lease *structure* is journaled through the engine's WAL
+//! (`worker_register`, `lease_bind`, `trial_requeue`, `worker_lost`,
+//! `worker_deregister` records, stamped with the reserved
+//! [`FLEET_SHARD`](crate::store::FLEET_SHARD) id) and snapshotted into
+//! `snapshot.fleet.json` at compaction, so the fleet survives recovery
+//! exactly like trials do. Lease *deadlines* are deliberately not
+//! persisted — they are liveness, not state: recovery resets every
+//! surviving worker's deadline to `now + lease_timeout`, giving live
+//! workers one heartbeat interval to reclaim their leases before expiry
+//! requeues their trials.
+
+pub mod lease;
+pub mod registry;
+pub mod scheduler;
+
+pub use registry::{WorkerInfo, WorkerState};
+
+use crate::coordinator::engine::ApiError;
+use crate::json::Value;
+use lease::LeaseTable;
+use registry::WorkerRegistry;
+use scheduler::Scheduler;
+use std::collections::HashSet;
+use std::sync::{Mutex, MutexGuard};
+
+/// Fleet tuning, derived from the engine config.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Worker lease duration in seconds; heartbeats renew it. `None`
+    /// disables expiry (leases then only release on tell/fail/prune).
+    pub lease_timeout: Option<f64>,
+    /// Max concurrently leased trials per site (0 = unlimited).
+    pub site_quota: u32,
+    /// Max concurrently leased trials per study (0 = unlimited).
+    pub study_quota: u32,
+    /// How many times a trial may be requeued after losing its worker
+    /// before it is failed for good.
+    pub requeue_max: u32,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            lease_timeout: Some(60.0),
+            site_quota: 0,
+            study_quota: 0,
+            requeue_max: 3,
+        }
+    }
+}
+
+/// The fleet tables, engine-global (workers span studies on every
+/// shard). One mutex guards all three parts because every operation
+/// touches at least two of them; the lock is a *leaf* in the engine's
+/// ordering — it may be taken while holding a shard lock, never the
+/// reverse — so no cycle with the shard/directory/router locks exists.
+pub struct Fleet {
+    state: Mutex<FleetState>,
+    pub config: FleetConfig,
+}
+
+/// Everything behind the fleet lock.
+#[derive(Default)]
+pub struct FleetState {
+    pub registry: WorkerRegistry,
+    pub leases: LeaseTable,
+    pub sched: Scheduler,
+}
+
+impl Fleet {
+    pub fn new(config: FleetConfig) -> Fleet {
+        Fleet { state: Mutex::new(FleetState::default()), config }
+    }
+
+    /// Lock the fleet tables (leaf lock; see type docs).
+    pub fn lock(&self) -> MutexGuard<'_, FleetState> {
+        self.state.lock().unwrap()
+    }
+
+    /// Effective lease duration (infinite when expiry is disabled).
+    pub fn ttl(&self) -> f64 {
+        self.config.lease_timeout.unwrap_or(f64::INFINITY)
+    }
+}
+
+impl FleetState {
+    /// Quota/fair-share admission for a worker-bound ask. Reserves one
+    /// scheduling slot on success; the caller must later convert it with
+    /// [`FleetState::bind`] or return it with
+    /// [`FleetState::cancel_admission`].
+    pub fn admit(
+        &mut self,
+        worker_id: u64,
+        study_key: &str,
+        now: f64,
+        config: &FleetConfig,
+    ) -> Result<(), ApiError> {
+        let worker = self
+            .registry
+            .get(worker_id)
+            .ok_or_else(|| ApiError::NotFound(format!("unknown worker {worker_id}")))?;
+        if worker.state != WorkerState::Alive {
+            return Err(ApiError::Conflict(format!(
+                "worker {worker_id} is {}: re-register before asking",
+                worker.state.as_str()
+            )));
+        }
+        let site = worker.site.clone();
+        self.sched.admit(&site, study_key, now, config)
+    }
+
+    /// Return an admission slot that never became a lease.
+    pub fn cancel_admission(&mut self, worker_id: u64, study_key: &str) {
+        if let Some(w) = self.registry.get(worker_id) {
+            let site = w.site.clone();
+            self.sched.release(&site, study_key);
+        }
+    }
+
+    /// Convert an admission slot into a live lease (ask success path).
+    pub fn bind(&mut self, trial_id: u64, worker_id: u64, study_key: &str, now: f64) {
+        // A requeued handout is in flight (popped, still marked
+        // queued): the lease supersedes the mark.
+        self.leases.finish_handout(trial_id);
+        self.leases.bind(trial_id, worker_id, study_key, now);
+        self.registry.attach(worker_id, trial_id);
+        // The scheduler slot was already counted at admission.
+    }
+
+    /// Replay a `lease_bind` record: insert the lease (and pull the
+    /// trial out of the requeue queue if it was waiting there) without
+    /// admission bookkeeping — counts are rebuilt by
+    /// [`FleetState::rebuild_counts`] at the end of recovery.
+    pub fn apply_bind(&mut self, trial_id: u64, worker_id: u64, study_key: &str, at: f64) {
+        self.leases.remove_from_queue(study_key, trial_id);
+        self.leases.bind(trial_id, worker_id, study_key, at);
+        self.registry.attach(worker_id, trial_id);
+    }
+
+    /// Release a trial's lease (tell/fail/prune or scrub). Returns the
+    /// worker that held it, if any.
+    pub fn release(&mut self, trial_id: u64) -> Option<u64> {
+        let info = self.leases.release(trial_id)?;
+        self.registry.detach(info.worker, trial_id);
+        self.sched
+            .release(self.registry.site_of(info.worker).unwrap_or(""), &info.study_key);
+        // The trial is terminal: its requeue-budget entry (if any) is
+        // dead bookkeeping — drop it or the table grows forever.
+        self.leases.clear_requeues(trial_id);
+        Some(info.worker)
+    }
+
+    /// Drop every trace of a trial: its lease if held, and its
+    /// queue/budget entries if any. Used by every path that retires a
+    /// trial from the fleet's point of view — terminal transitions
+    /// (tell/fail/prune, including straggler tells on queued trials),
+    /// requeue-budget exhaustion, reaping, and the lazy discard of
+    /// terminal trials found in the requeue queue.
+    pub fn finish_trial(&mut self, trial_id: u64, study_key: &str) {
+        self.release(trial_id);
+        self.leases.remove_from_queue(study_key, trial_id);
+        self.leases.clear_requeues(trial_id);
+    }
+
+    /// Requeue a leased trial after its worker was lost. Returns `false`
+    /// if the trial is no longer leased to `expected_worker` (a
+    /// concurrent tell or a racing expiry already handled it), which is
+    /// what makes requeueing exactly-once.
+    pub fn requeue(&mut self, trial_id: u64, expected_worker: u64) -> bool {
+        let Some(info) = self.leases.get(trial_id) else { return false };
+        if info.worker != expected_worker {
+            return false;
+        }
+        let info = self.leases.release(trial_id).expect("lease checked above");
+        self.registry.detach(info.worker, trial_id);
+        self.sched
+            .release(self.registry.site_of(info.worker).unwrap_or(""), &info.study_key);
+        self.leases.push_back(&info.study_key, trial_id);
+        true
+    }
+
+    /// Replay a `trial_requeue` record.
+    pub fn apply_requeue(&mut self, trial_id: u64, study_key: &str) {
+        if let Some(info) = self.leases.release(trial_id) {
+            self.registry.detach(info.worker, trial_id);
+        }
+        self.leases.push_back(study_key, trial_id);
+    }
+
+    /// Workers whose trials must be recovered: alive workers past their
+    /// deadline, plus lost/deregistered workers still holding leases
+    /// (a crash can land between `worker_lost` and the per-trial
+    /// requeue records).
+    pub fn expired_workers(&self, now: f64) -> Vec<(u64, bool, Vec<u64>)> {
+        self.registry
+            .iter()
+            .filter_map(|w| {
+                let expired_alive = w.state == WorkerState::Alive && w.deadline < now;
+                let orphaned = w.state != WorkerState::Alive && !w.leases.is_empty();
+                if expired_alive || orphaned {
+                    let mut trials: Vec<u64> = w.leases.iter().copied().collect();
+                    trials.sort_unstable();
+                    Some((w.id, expired_alive, trials))
+                } else {
+                    None
+                }
+            })
+            .collect()
+    }
+
+    /// Scrub after recovery: drop leases and queue entries whose trial
+    /// is no longer running, then rebuild the scheduler counts from the
+    /// surviving leases.
+    pub fn scrub(&mut self, running: &HashSet<u64>) {
+        for (tid, study_key) in self.leases.all_tracked() {
+            if !running.contains(&tid) {
+                if let Some(info) = self.leases.release(tid) {
+                    self.registry.detach(info.worker, tid);
+                }
+                self.leases.remove_from_queue(&study_key, tid);
+                self.leases.clear_requeues(tid);
+            }
+        }
+        self.rebuild_counts();
+    }
+
+    /// Recompute the scheduler's usage counters from the lease table
+    /// (recovery; counts are otherwise maintained incrementally).
+    pub fn rebuild_counts(&mut self) {
+        self.sched.clear_counts();
+        let entries: Vec<(u64, String)> = self
+            .leases
+            .iter()
+            .map(|(_, info)| (info.worker, info.study_key.clone()))
+            .collect();
+        for (worker, study_key) in entries {
+            let site = self.registry.site_of(worker).unwrap_or("").to_string();
+            self.sched.count_existing(&site, &study_key);
+        }
+    }
+
+    /// Serialize the whole fleet for the compaction segment.
+    pub fn snapshot_json(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("next_worker_id", self.registry.next_id())
+            .set("workers", self.registry.to_json())
+            .set("leases", self.leases.leases_json())
+            .set("requeue", self.leases.queues_json())
+            .set("requeue_count", self.leases.requeue_counts_json());
+        Value::Obj(o)
+    }
+
+    /// Load the fleet from a compaction segment (recovery, before the
+    /// fleet events of the surviving logs replay on top).
+    pub fn load_snapshot(&mut self, v: &Value) {
+        self.registry.load_json(v.get("workers"), v.get("next_worker_id").as_u64().unwrap_or(1));
+        self.leases.load_json(v.get("leases"), v.get("requeue"), v.get("requeue_count"));
+        for (tid, info) in self.leases.iter() {
+            self.registry.attach(info.worker, *tid);
+        }
+        self.rebuild_counts();
+    }
+
+    /// The `/api/stats` fleet block.
+    pub fn stats_json(&self, config: &FleetConfig) -> Value {
+        let mut o = Value::obj();
+        o.set("workers_alive", self.registry.count(WorkerState::Alive))
+            .set("workers_lost", self.registry.count(WorkerState::Lost))
+            .set("workers_total", self.registry.len())
+            .set("leases", self.leases.len())
+            .set("requeue_depth", self.leases.queue_depth())
+            .set("lease_timeout", config.lease_timeout)
+            .set("site_quota", config.site_quota)
+            .set("study_quota", config.study_quota)
+            .set("sites", self.sched.sites_json());
+        Value::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn make_fleet(site_quota: u32, study_quota: u32) -> (Fleet, FleetConfig) {
+        let config = FleetConfig {
+            lease_timeout: Some(10.0),
+            site_quota,
+            study_quota,
+            requeue_max: 2,
+        };
+        (Fleet::new(config.clone()), config)
+    }
+
+    fn register(st: &mut FleetState, name: &str, site: &str, now: f64) -> u64 {
+        let id = st.registry.next_id();
+        st.registry.apply_register(id, name, site, "gpu", now, now + 10.0);
+        id
+    }
+
+    #[test]
+    fn admission_bind_release_roundtrip() {
+        let (fleet, cfg) = make_fleet(2, 0);
+        let mut st = fleet.lock();
+        let w = register(&mut st, "n1", "cloud", 0.0);
+        st.admit(w, "s", 0.0, &cfg).unwrap();
+        st.bind(1, w, "s", 0.0);
+        assert_eq!(st.leases.len(), 1);
+        st.admit(w, "s", 0.0, &cfg).unwrap();
+        st.bind(2, w, "s", 0.0);
+        // Site full.
+        assert!(matches!(st.admit(w, "s", 0.0, &cfg), Err(ApiError::Quota(_))));
+        assert_eq!(st.release(1), Some(w));
+        st.admit(w, "s", 1.0, &cfg).unwrap();
+        st.cancel_admission(w, "s");
+        assert_eq!(st.leases.len(), 1);
+    }
+
+    #[test]
+    fn unknown_or_lost_worker_rejected() {
+        let (fleet, cfg) = make_fleet(0, 0);
+        let mut st = fleet.lock();
+        assert!(matches!(st.admit(99, "s", 0.0, &cfg), Err(ApiError::NotFound(_))));
+        let w = register(&mut st, "n1", "cloud", 0.0);
+        st.registry.mark_lost(w, 5.0);
+        assert!(matches!(st.admit(w, "s", 5.0, &cfg), Err(ApiError::Conflict(_))));
+    }
+
+    #[test]
+    fn expiry_collects_and_requeues_exactly_once() {
+        let (fleet, cfg) = make_fleet(0, 0);
+        let mut st = fleet.lock();
+        let w = register(&mut st, "n1", "spot", 0.0);
+        st.admit(w, "s", 0.0, &cfg).unwrap();
+        st.bind(7, w, "s", 0.0);
+        assert!(st.expired_workers(5.0).is_empty(), "deadline not passed");
+        let expired = st.expired_workers(11.0);
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].0, w);
+        assert!(expired[0].1, "was alive");
+        assert_eq!(expired[0].2, vec![7]);
+        st.registry.mark_lost(w, 11.0);
+        assert!(st.requeue(7, w));
+        assert!(!st.requeue(7, w), "second requeue is a no-op");
+        assert_eq!(st.leases.queue_depth(), 1);
+        assert_eq!(st.leases.pop_front("s"), Some(7));
+        assert_eq!(st.leases.pop_front("s"), None);
+        // A lost worker with no leases left is not re-collected.
+        assert!(st.expired_workers(20.0).is_empty());
+    }
+
+    #[test]
+    fn snapshot_roundtrips() {
+        let (fleet, cfg) = make_fleet(4, 0);
+        let snap = {
+            let mut st = fleet.lock();
+            let w1 = register(&mut st, "n1", "cloud", 1.0);
+            let w2 = register(&mut st, "n2", "spot", 2.0);
+            st.admit(w1, "a", 2.0, &cfg).unwrap();
+            st.bind(10, w1, "a", 2.0);
+            st.admit(w2, "b", 2.0, &cfg).unwrap();
+            st.bind(11, w2, "b", 2.0);
+            st.registry.mark_lost(w2, 3.0);
+            assert!(st.requeue(11, w2));
+            st.snapshot_json()
+        };
+        let (fleet2, _) = make_fleet(4, 0);
+        let mut st = fleet2.lock();
+        st.load_snapshot(&snap);
+        assert_eq!(st.registry.len(), 2);
+        assert_eq!(st.leases.len(), 1);
+        assert_eq!(st.leases.queue_depth(), 1);
+        assert_eq!(st.leases.pop_front("b"), Some(11));
+        assert_eq!(st.registry.next_id(), 3);
+        assert_eq!(st.registry.count(WorkerState::Lost), 1);
+    }
+
+    #[test]
+    fn scrub_drops_dead_trials_and_rebuilds_counts() {
+        let (fleet, cfg) = make_fleet(8, 0);
+        let mut st = fleet.lock();
+        let w = register(&mut st, "n1", "cloud", 0.0);
+        for tid in [1u64, 2, 3] {
+            st.admit(w, "s", 0.0, &cfg).unwrap();
+            st.bind(tid, w, "s", 0.0);
+        }
+        st.registry.mark_lost(w, 1.0);
+        assert!(st.requeue(3, w));
+        // Only trial 1 is still running after "recovery".
+        let running: HashSet<u64> = [1u64].into_iter().collect();
+        st.scrub(&running);
+        assert_eq!(st.leases.len(), 1);
+        assert_eq!(st.leases.queue_depth(), 0, "queued terminal trial dropped");
+        assert_eq!(st.sched.site_active("cloud"), 1);
+    }
+}

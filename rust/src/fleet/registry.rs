@@ -1,0 +1,355 @@
+//! Worker registry: who is in the fleet, where they run, and whether
+//! their heartbeat lease is current.
+//!
+//! A worker is one training process on one node (the paper's
+//! "computing instance"). It registers once with its site and GPU
+//! profile, heartbeats to renew its lease deadline, and either
+//! deregisters gracefully or vanishes — in which case expiry marks it
+//! [`WorkerState::Lost`] and its trials are requeued (see
+//! `fleet::lease`). Worker ids are allocated by the registry and
+//! journaled in the `worker_register` record, so recovery reassigns the
+//! same ids.
+
+use crate::json::Value;
+use std::collections::{HashMap, HashSet};
+
+/// Worker lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkerState {
+    /// Registered and heartbeating (or within its first lease window).
+    Alive,
+    /// Lease expired without a goodbye; its trials were requeued.
+    Lost,
+    /// Graceful shutdown via the deregister API.
+    Deregistered,
+}
+
+impl WorkerState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            WorkerState::Alive => "alive",
+            WorkerState::Lost => "lost",
+            WorkerState::Deregistered => "deregistered",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<WorkerState> {
+        match s {
+            "alive" => Some(WorkerState::Alive),
+            "lost" => Some(WorkerState::Lost),
+            "deregistered" => Some(WorkerState::Deregistered),
+            _ => None,
+        }
+    }
+}
+
+/// One fleet worker.
+#[derive(Clone, Debug)]
+pub struct WorkerInfo {
+    pub id: u64,
+    /// Client-chosen label, e.g. `"marconi100-07"`. Not unique — a
+    /// respawned spot instance registers again under the same label and
+    /// gets a fresh id.
+    pub name: String,
+    /// Resource-provider site (quota / fair-share domain).
+    pub site: String,
+    /// Free-form GPU/profile string for the dashboard.
+    pub gpu: String,
+    pub state: WorkerState,
+    pub registered_at: f64,
+    pub last_heartbeat: f64,
+    /// Lease deadline: heartbeats push it forward; expiry fires when it
+    /// passes. Liveness only — never persisted, reset after recovery.
+    pub deadline: f64,
+    /// Trials currently leased to this worker.
+    pub leases: HashSet<u64>,
+}
+
+impl WorkerInfo {
+    fn to_json(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("id", self.id)
+            .set("name", self.name.as_str())
+            .set("site", self.site.as_str())
+            .set("gpu", self.gpu.as_str())
+            .set("state", self.state.as_str())
+            .set("registered_at", self.registered_at)
+            .set("last_heartbeat", self.last_heartbeat)
+            .set("leases", self.leases.len());
+        Value::Obj(o)
+    }
+}
+
+/// The registry table. Part of `FleetState`, guarded by the fleet lock.
+#[derive(Default)]
+pub struct WorkerRegistry {
+    workers: HashMap<u64, WorkerInfo>,
+    next_id: u64,
+}
+
+impl WorkerRegistry {
+    /// Next id to assign (persisted in the `worker_register` payload
+    /// before [`WorkerRegistry::apply_register`] consumes it).
+    pub fn next_id(&self) -> u64 {
+        self.next_id.max(1)
+    }
+
+    /// Insert a worker with a pre-allocated id (live path and replay
+    /// share this). Keeps the id counter ahead of every applied id.
+    pub fn apply_register(
+        &mut self,
+        id: u64,
+        name: &str,
+        site: &str,
+        gpu: &str,
+        now: f64,
+        deadline: f64,
+    ) {
+        self.workers.insert(
+            id,
+            WorkerInfo {
+                id,
+                name: name.to_string(),
+                site: site.to_string(),
+                gpu: gpu.to_string(),
+                state: WorkerState::Alive,
+                registered_at: now,
+                last_heartbeat: now,
+                deadline,
+                leases: HashSet::new(),
+            },
+        );
+        self.next_id = self.next_id.max(id + 1);
+    }
+
+    pub fn get(&self, id: u64) -> Option<&WorkerInfo> {
+        self.workers.get(&id)
+    }
+
+    pub fn get_mut(&mut self, id: u64) -> Option<&mut WorkerInfo> {
+        self.workers.get_mut(&id)
+    }
+
+    pub fn site_of(&self, id: u64) -> Option<&str> {
+        self.workers.get(&id).map(|w| w.site.as_str())
+    }
+
+    /// Renew a worker's lease. Errors if the worker is unknown or no
+    /// longer alive (the caller maps these to 404 / 409).
+    pub fn heartbeat(&mut self, id: u64, now: f64, ttl: f64) -> Result<&WorkerInfo, String> {
+        let w = self
+            .workers
+            .get_mut(&id)
+            .ok_or_else(|| format!("unknown worker {id}"))?;
+        if w.state != WorkerState::Alive {
+            return Err(format!(
+                "worker {id} is {}: its lease expired, re-register",
+                w.state.as_str()
+            ));
+        }
+        w.last_heartbeat = now;
+        w.deadline = now + ttl;
+        Ok(&*w)
+    }
+
+    pub fn mark_lost(&mut self, id: u64, now: f64) {
+        if let Some(w) = self.workers.get_mut(&id) {
+            if w.state == WorkerState::Alive {
+                w.state = WorkerState::Lost;
+                w.deadline = now;
+            }
+        }
+    }
+
+    pub fn mark_deregistered(&mut self, id: u64) {
+        if let Some(w) = self.workers.get_mut(&id) {
+            w.state = WorkerState::Deregistered;
+        }
+    }
+
+    /// Attach/detach a trial lease to a worker's set.
+    pub fn attach(&mut self, id: u64, trial_id: u64) {
+        if let Some(w) = self.workers.get_mut(&id) {
+            w.leases.insert(trial_id);
+        }
+    }
+
+    pub fn detach(&mut self, id: u64, trial_id: u64) {
+        if let Some(w) = self.workers.get_mut(&id) {
+            w.leases.remove(&trial_id);
+        }
+    }
+
+    /// Is this worker currently collectible by expiry? (re-check under
+    /// the lock after the lock-free collection pass)
+    pub fn is_expiry_candidate(&self, id: u64, now: f64) -> bool {
+        match self.workers.get(&id) {
+            Some(w) => {
+                (w.state == WorkerState::Alive && w.deadline < now)
+                    || (w.state != WorkerState::Alive && !w.leases.is_empty())
+            }
+            None => false,
+        }
+    }
+
+    /// Drop retired (lost/deregistered, lease-free) workers beyond
+    /// `max_dead`, oldest heartbeat first. Recent dead entries are kept
+    /// so a straggler heartbeat still gets the informative 409, but the
+    /// registry — and with it the fleet segment, `GET /api/workers` and
+    /// the expiry sweep — stays bounded on spot-heavy fleets where
+    /// every respawn registers a fresh id. Returns how many were
+    /// removed. In-memory only: purged ids resurrected by log replay
+    /// are re-trimmed by the first sweep, and the next compaction's
+    /// segment drops them durably.
+    pub fn gc_dead(&mut self, max_dead: usize) -> usize {
+        let mut dead: Vec<(f64, u64)> = self
+            .workers
+            .values()
+            .filter(|w| w.state != WorkerState::Alive && w.leases.is_empty())
+            .map(|w| (w.last_heartbeat, w.id))
+            .collect();
+        if dead.len() <= max_dead {
+            return 0;
+        }
+        dead.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let excess = dead.len() - max_dead;
+        for (_, id) in dead.into_iter().take(excess) {
+            self.workers.remove(&id);
+        }
+        excess
+    }
+
+    /// Push every alive worker's deadline to `now + ttl` (recovery
+    /// grace: deadlines are liveness, not persisted state).
+    pub fn reset_deadlines(&mut self, now: f64, ttl: f64) {
+        for w in self.workers.values_mut() {
+            if w.state == WorkerState::Alive {
+                w.deadline = now + ttl;
+                w.last_heartbeat = now;
+            }
+        }
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &WorkerInfo> {
+        self.workers.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.workers.is_empty()
+    }
+
+    pub fn count(&self, state: WorkerState) -> usize {
+        self.workers.values().filter(|w| w.state == state).count()
+    }
+
+    /// Workers as a JSON array, in id order (API + fleet segment).
+    pub fn to_json(&self) -> Value {
+        let mut ids: Vec<u64> = self.workers.keys().copied().collect();
+        ids.sort_unstable();
+        Value::Arr(ids.iter().map(|id| self.workers[id].to_json()).collect())
+    }
+
+    /// Rebuild from segment JSON. Lease sets are reattached by the
+    /// caller from the lease table; deadlines are reset afterwards.
+    pub fn load_json(&mut self, workers: &Value, next_id: u64) {
+        self.workers.clear();
+        self.next_id = next_id.max(1);
+        for wv in workers.as_arr().unwrap_or(&[]) {
+            let Some(id) = wv.get("id").as_u64() else { continue };
+            let state = WorkerState::from_str(wv.get("state").as_str().unwrap_or("alive"))
+                .unwrap_or(WorkerState::Alive);
+            self.workers.insert(
+                id,
+                WorkerInfo {
+                    id,
+                    name: wv.get("name").as_str().unwrap_or("").to_string(),
+                    site: wv.get("site").as_str().unwrap_or("").to_string(),
+                    gpu: wv.get("gpu").as_str().unwrap_or("").to_string(),
+                    state,
+                    registered_at: wv.get("registered_at").as_f64().unwrap_or(0.0),
+                    last_heartbeat: wv.get("last_heartbeat").as_f64().unwrap_or(0.0),
+                    deadline: 0.0,
+                    leases: HashSet::new(),
+                },
+            );
+            self.next_id = self.next_id.max(id + 1);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn register_heartbeat_lifecycle() {
+        let mut r = WorkerRegistry::default();
+        assert_eq!(r.next_id(), 1);
+        let id = r.next_id();
+        r.apply_register(id, "n1", "cloud", "a100", 0.0, 10.0);
+        assert_eq!(r.next_id(), 2);
+        assert_eq!(r.get(id).unwrap().state, WorkerState::Alive);
+        let w = r.heartbeat(id, 5.0, 10.0).unwrap();
+        assert_eq!(w.deadline, 15.0);
+        r.mark_lost(id, 20.0);
+        assert!(r.heartbeat(id, 21.0, 10.0).is_err(), "lost workers must re-register");
+        assert!(r.heartbeat(99, 0.0, 10.0).is_err());
+    }
+
+    #[test]
+    fn expiry_candidates() {
+        let mut r = WorkerRegistry::default();
+        r.apply_register(1, "n", "s", "g", 0.0, 10.0);
+        assert!(!r.is_expiry_candidate(1, 5.0));
+        assert!(r.is_expiry_candidate(1, 11.0));
+        r.mark_lost(1, 11.0);
+        assert!(!r.is_expiry_candidate(1, 12.0), "lost without leases");
+        r.attach(1, 42);
+        assert!(r.is_expiry_candidate(1, 12.0), "lost with orphan lease");
+        r.detach(1, 42);
+        assert!(!r.is_expiry_candidate(1, 12.0));
+    }
+
+    #[test]
+    fn gc_dead_bounds_retired_workers() {
+        let mut r = WorkerRegistry::default();
+        for i in 1..=6u64 {
+            r.apply_register(i, "n", "s", "g", i as f64, i as f64 + 10.0);
+        }
+        for i in 1..=4u64 {
+            r.mark_lost(i, 20.0);
+        }
+        r.attach(4, 99); // lost but still holding a lease: not collectible
+        assert_eq!(r.gc_dead(3), 0, "within the retention cap");
+        assert_eq!(r.gc_dead(2), 1, "oldest lease-free dead worker dropped");
+        assert!(r.get(1).is_none());
+        assert!(r.get(2).is_some() && r.get(3).is_some());
+        assert!(r.get(4).is_some(), "leased worker survives");
+        assert_eq!(r.count(WorkerState::Alive), 2);
+        // Ids keep resuming past purged workers.
+        assert_eq!(r.next_id(), 7);
+    }
+
+    #[test]
+    fn json_roundtrip_and_id_resume() {
+        let mut r = WorkerRegistry::default();
+        r.apply_register(3, "n3", "spot", "t4", 1.0, 11.0);
+        r.apply_register(5, "n5", "hpc", "v100", 2.0, 12.0);
+        r.mark_deregistered(3);
+        let j = r.to_json();
+        let mut back = WorkerRegistry::default();
+        back.load_json(&j, r.next_id());
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.next_id(), 6);
+        assert_eq!(back.get(3).unwrap().state, WorkerState::Deregistered);
+        assert_eq!(back.get(5).unwrap().site, "hpc");
+        // Deadlines come back unset until reset_deadlines.
+        assert_eq!(back.get(5).unwrap().deadline, 0.0);
+        back.reset_deadlines(100.0, 30.0);
+        assert_eq!(back.get(5).unwrap().deadline, 130.0);
+    }
+}

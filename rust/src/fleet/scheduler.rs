@@ -1,0 +1,313 @@
+//! Site-aware admission: per-site / per-study concurrency quotas with
+//! fair-share ordering.
+//!
+//! The scheduler answers one question at `ask` time: *may this worker
+//! take one more trial of this study right now?* Three rules apply, in
+//! order:
+//!
+//! 1. **study quota** — a study may hold at most `study_quota` leases
+//!    across the whole fleet (0 = unlimited);
+//! 2. **site quota** — a site may hold at most `site_quota` leases
+//!    (0 = unlimited);
+//! 3. **fair share** — when another study has recently been turned away
+//!    from this site, a study already holding at least
+//!    `⌈site_quota / claimants⌉` of the site's slots is denied even if
+//!    slots are free, leaving them for the waiter.
+//!
+//! Rule 3 is what stops a greedy campaign from starving others: without
+//! it, a study that filled the site first would keep every slot forever
+//! (its finished trials are immediately replaced by its own next ask,
+//! and the pull-based protocol gives the server no queue to reorder).
+//! "Recently turned away" is a decaying *waiting* mark — a denied study
+//! is remembered for one lease-timeout window; studies that stop asking
+//! stop counting against the share.
+//!
+//! Denials map to HTTP 429 so clients back off and retry; they are
+//! counted in `hopaas_fleet_quota_denials_total`.
+
+use super::FleetConfig;
+use crate::coordinator::engine::ApiError;
+use crate::json::Value;
+use std::collections::HashMap;
+
+/// Per-site admission state.
+#[derive(Default)]
+pub struct SiteState {
+    /// Leases (plus in-flight admissions) per study on this site.
+    counts: HashMap<String, u32>,
+    /// Studies recently denied here → time of the last denial.
+    waiting: HashMap<String, f64>,
+    /// High-water mark of concurrently held slots (tests assert this
+    /// never exceeds the quota).
+    pub peak: u32,
+    /// Last admission attempt — idle-site GC input. Site names are
+    /// client-supplied strings, so the map must not grow forever.
+    last_active: f64,
+}
+
+impl SiteState {
+    fn total(&self) -> u32 {
+        self.counts.values().sum()
+    }
+}
+
+/// Admission counters for every site, plus the per-study totals.
+#[derive(Default)]
+pub struct Scheduler {
+    sites: HashMap<String, SiteState>,
+    /// Leases (plus in-flight admissions) per study, fleet-wide.
+    study_active: HashMap<String, u32>,
+}
+
+impl Scheduler {
+    /// Reserve one slot for `(site, study)` or say why not. The caller
+    /// pairs every `Ok` with a later [`Scheduler::release`].
+    pub fn admit(
+        &mut self,
+        site: &str,
+        study: &str,
+        now: f64,
+        config: &FleetConfig,
+    ) -> Result<(), ApiError> {
+        if config.study_quota > 0
+            && self.study_active.get(study).copied().unwrap_or(0) >= config.study_quota
+        {
+            return Err(ApiError::Quota(format!(
+                "study quota reached ({} concurrent trials)",
+                config.study_quota
+            )));
+        }
+        let state = self.sites.entry(site.to_string()).or_default();
+        state.last_active = now;
+        if config.site_quota > 0 {
+            // Waiting marks decay after one lease window: a study that
+            // stopped asking no longer claims a share.
+            let window = config.lease_timeout.unwrap_or(30.0).max(1.0);
+            state.waiting.retain(|_, t| now - *t < window);
+            let total = state.total();
+            let mine = state.counts.get(study).copied().unwrap_or(0);
+            if total >= config.site_quota {
+                state.waiting.insert(study.to_string(), now);
+                return Err(ApiError::Quota(format!(
+                    "site '{site}' at capacity ({} concurrent trials)",
+                    config.site_quota
+                )));
+            }
+            let others_waiting = state.waiting.keys().any(|k| k != study);
+            if others_waiting {
+                let mut claimants: std::collections::HashSet<&str> = state
+                    .counts
+                    .iter()
+                    .filter(|(_, &c)| c > 0)
+                    .map(|(k, _)| k.as_str())
+                    .collect();
+                claimants.extend(state.waiting.keys().map(|k| k.as_str()));
+                claimants.insert(study);
+                let n = claimants.len() as u32;
+                let share = config.site_quota.div_ceil(n);
+                if mine >= share {
+                    state.waiting.insert(study.to_string(), now);
+                    return Err(ApiError::Quota(format!(
+                        "fair share on site '{site}' reached \
+                         ({mine}/{share} slots, {n} campaigns competing)"
+                    )));
+                }
+            }
+            state.waiting.remove(study);
+        }
+        *state.counts.entry(study.to_string()).or_insert(0) += 1;
+        state.peak = state.peak.max(state.total());
+        *self.study_active.entry(study.to_string()).or_insert(0) += 1;
+        Ok(())
+    }
+
+    /// Return one `(site, study)` slot (lease released, admission
+    /// cancelled, or trial requeued).
+    pub fn release(&mut self, site: &str, study: &str) {
+        if let Some(state) = self.sites.get_mut(site) {
+            if let Some(c) = state.counts.get_mut(study) {
+                *c = c.saturating_sub(1);
+                if *c == 0 {
+                    state.counts.remove(study);
+                }
+            }
+        }
+        if let Some(c) = self.study_active.get_mut(study) {
+            *c = c.saturating_sub(1);
+            if *c == 0 {
+                self.study_active.remove(study);
+            }
+        }
+    }
+
+    /// Count a pre-existing lease without quota checks (recovery
+    /// rebuild; quotas were enforced when the lease was granted).
+    pub fn count_existing(&mut self, site: &str, study: &str) {
+        let state = self.sites.entry(site.to_string()).or_default();
+        *state.counts.entry(study.to_string()).or_insert(0) += 1;
+        state.peak = state.peak.max(state.total());
+        *self.study_active.entry(study.to_string()).or_insert(0) += 1;
+    }
+
+    /// Drop all usage counters (recovery rebuild); peaks survive.
+    pub fn clear_counts(&mut self) {
+        for state in self.sites.values_mut() {
+            state.counts.clear();
+        }
+        self.study_active.clear();
+    }
+
+    /// Evict sites with no slots, no fresh waiters, and no admission
+    /// attempt within `retention` seconds. Site names come from
+    /// clients, so without this the map (and the `/api/stats` sites
+    /// array and `hopaas_site_leases` label set) would grow one entry
+    /// per distinct string ever seen. Returns how many were dropped.
+    pub fn gc_idle(&mut self, now: f64, retention: f64) -> usize {
+        let before = self.sites.len();
+        self.sites.retain(|_, s| {
+            s.waiting.retain(|_, t| now - *t < retention);
+            s.total() > 0 || !s.waiting.is_empty() || now - s.last_active <= retention
+        });
+        before - self.sites.len()
+    }
+
+    /// Active slots on one site (tests/metrics).
+    pub fn site_active(&self, site: &str) -> u32 {
+        self.sites.get(site).map(|s| s.total()).unwrap_or(0)
+    }
+
+    /// `(site, active)` pairs for the labeled metrics gauge.
+    pub fn site_loads(&self) -> Vec<(String, u32)> {
+        let mut out: Vec<(String, u32)> = self
+            .sites
+            .iter()
+            .map(|(k, s)| (k.clone(), s.total()))
+            .collect();
+        out.sort();
+        out
+    }
+
+    /// Per-site stats block for `/api/stats`.
+    pub fn sites_json(&self) -> Value {
+        let mut keys: Vec<&String> = self.sites.keys().collect();
+        keys.sort();
+        Value::Arr(
+            keys.iter()
+                .map(|k| {
+                    let s = &self.sites[*k];
+                    let mut o = Value::obj();
+                    o.set("site", k.as_str())
+                        .set("active", s.total())
+                        .set("peak", s.peak)
+                        .set("studies", s.counts.len())
+                        .set("waiting", s.waiting.len());
+                    Value::Obj(o)
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(site_quota: u32, study_quota: u32) -> FleetConfig {
+        FleetConfig {
+            lease_timeout: Some(30.0),
+            site_quota,
+            study_quota,
+            requeue_max: 3,
+        }
+    }
+
+    #[test]
+    fn site_quota_enforced() {
+        let mut s = Scheduler::default();
+        let c = cfg(2, 0);
+        s.admit("gpu", "a", 0.0, &c).unwrap();
+        s.admit("gpu", "a", 0.0, &c).unwrap();
+        assert!(matches!(s.admit("gpu", "a", 0.0, &c), Err(ApiError::Quota(_))));
+        // A different site is unaffected.
+        s.admit("cpu", "a", 0.0, &c).unwrap();
+        s.release("gpu", "a");
+        s.admit("gpu", "a", 1.0, &c).unwrap();
+        assert_eq!(s.site_active("gpu"), 2);
+        assert_eq!(s.sites.get("gpu").unwrap().peak, 2, "peak never exceeded quota");
+    }
+
+    #[test]
+    fn study_quota_spans_sites() {
+        let mut s = Scheduler::default();
+        let c = cfg(0, 2);
+        s.admit("gpu", "a", 0.0, &c).unwrap();
+        s.admit("cpu", "a", 0.0, &c).unwrap();
+        assert!(matches!(s.admit("hpc", "a", 0.0, &c), Err(ApiError::Quota(_))));
+        s.admit("hpc", "b", 0.0, &c).unwrap();
+    }
+
+    #[test]
+    fn fair_share_yields_to_waiting_study() {
+        let mut s = Scheduler::default();
+        let c = cfg(4, 0);
+        // Greedy study A fills the site.
+        for _ in 0..4 {
+            s.admit("gpu", "a", 0.0, &c).unwrap();
+        }
+        // B is turned away (site full) and marked waiting.
+        assert!(s.admit("gpu", "b", 1.0, &c).is_err());
+        // One of A's trials finishes; A asks again first, but its share
+        // with B waiting is ceil(4/2) = 2 and it holds 3 → denied.
+        s.release("gpu", "a");
+        assert!(s.admit("gpu", "a", 2.0, &c).is_err());
+        // B takes the free slot.
+        s.admit("gpu", "b", 3.0, &c).unwrap();
+        // Converges to 2/2: A drains to 2, then both hold their share.
+        s.release("gpu", "a");
+        s.admit("gpu", "b", 4.0, &c).unwrap();
+        assert_eq!(s.site_active("gpu"), 4);
+        assert!(s.admit("gpu", "a", 5.0, &c).is_err(), "A at share while B waits");
+        // Once B stops waiting (decay window passes), A can grow again.
+        s.release("gpu", "b");
+        s.admit("gpu", "a", 100.0, &c).unwrap();
+    }
+
+    #[test]
+    fn single_study_uses_full_site() {
+        // No competitors → no fair-share clamp.
+        let mut s = Scheduler::default();
+        let c = cfg(4, 0);
+        for _ in 0..4 {
+            s.admit("gpu", "a", 0.0, &c).unwrap();
+        }
+        assert_eq!(s.site_active("gpu"), 4);
+    }
+
+    #[test]
+    fn gc_idle_evicts_stale_sites_only() {
+        let mut s = Scheduler::default();
+        let c = cfg(0, 0);
+        s.admit("busy", "a", 0.0, &c).unwrap();
+        s.admit("idle", "a", 0.0, &c).unwrap();
+        s.release("idle", "a");
+        // "idle" has no slots but was active recently: kept.
+        assert_eq!(s.gc_idle(10.0, 3600.0), 0);
+        // Past the retention window it goes; "busy" still holds a slot.
+        assert_eq!(s.gc_idle(10_000.0, 3600.0), 1);
+        assert_eq!(s.site_loads(), vec![("busy".to_string(), 1)]);
+    }
+
+    #[test]
+    fn rebuild_counts_path() {
+        let mut s = Scheduler::default();
+        let c = cfg(2, 0);
+        s.admit("gpu", "a", 0.0, &c).unwrap();
+        s.clear_counts();
+        assert_eq!(s.site_active("gpu"), 0);
+        s.count_existing("gpu", "a");
+        s.count_existing("gpu", "a");
+        assert_eq!(s.site_active("gpu"), 2);
+        let loads = s.site_loads();
+        assert_eq!(loads, vec![("gpu".to_string(), 2)]);
+    }
+}

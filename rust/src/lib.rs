@@ -19,6 +19,10 @@
 //! * the **workload** of the paper's §4 campaign: a Lamarr-like
 //!   conditional GAN whose training step is AOT-compiled from JAX+Pallas
 //!   to HLO and executed from Rust via PJRT (`runtime`, `gan`);
+//! * the **fleet subsystem** (`fleet`): a worker registry with
+//!   heartbeat leases, deterministic requeue of preempted trials, and a
+//!   site-aware scheduler enforcing per-site/per-study quotas with
+//!   fair-share admission;
 //! * the **client fleet** (`worker`): a Rust HOPAAS client wrapping the
 //!   REST APIs plus a multi-site node simulator (speed, availability,
 //!   preemption) reproducing the paper's INFN/CERN/CINECA setup;
@@ -31,6 +35,7 @@
 pub mod bench;
 pub mod config;
 pub mod coordinator;
+pub mod fleet;
 pub mod gan;
 pub mod http;
 pub mod json;

@@ -53,14 +53,22 @@ COMMANDS:
                     --no-auth          disable token auth (dev only)
                     --secret S         HMAC token secret
                     --shards N         engine shards (default 8)
-                    --wal-batch N      target records per group-commit fsync
+                    --wal-batch N      fixed records per group-commit fsync
+                                       (overrides the adaptive default)
+                    --wal-batch-adaptive  adapt batch size up to the cap
                     --replay-threads N parallel recovery partitions (0 = per shard)
+                    --lease-timeout S  worker heartbeat lease seconds
+                                       (default 60; 0 disables leases)
+                    --site-quota N     max concurrent trials per site (0 = off)
+                    --study-quota N    max concurrent trials per study (0 = off)
+                    --requeue-max N    requeues before a preempted trial fails
                     --config FILE      JSON config (flags override)
   token             mint an API token offline
                     --secret S --user NAME --ttl SECONDS
   campaign          simulated multi-site campaign against a fresh server
                     --nodes N --trials N --objective NAME --sampler NAME
                     --pruner NAME|none --steps N
+                    --fleet            register workers + heartbeat leases
   demo              quick end-to-end demo (ask/should_prune/tell loop)
   export            dump a durable server's trials as CSV (offline)
                     --data-dir PATH [--study ID]
@@ -91,14 +99,25 @@ fn cmd_serve(args: &Args) -> i32 {
             }
             println!("dashboard: http://{}/", server.addr());
             println!("bootstrap token: {}", server.bootstrap_token);
-            // Periodic reaper for trials from vanished nodes.
+            // Maintenance loop: lease expiry every tick (workers of
+            // vanished nodes requeue their trials within seconds), the
+            // legacy reaper every `reap_every` for worker-less clients.
+            let tick = std::time::Duration::from_secs(5);
+            let reap_every = reap_every.unwrap_or(std::time::Duration::from_secs(3600));
+            let mut since_reap = std::time::Duration::ZERO;
             loop {
-                std::thread::sleep(
-                    reap_every.unwrap_or(std::time::Duration::from_secs(3600)),
-                );
-                let reaped = server.engine.reap_stale();
-                if reaped > 0 {
-                    println!("reaped {reaped} stale trial(s)");
+                std::thread::sleep(tick);
+                let requeued = server.engine.expire_leases();
+                if requeued > 0 {
+                    println!("lease expiry requeued {requeued} trial(s)");
+                }
+                since_reap += tick;
+                if since_reap >= reap_every {
+                    since_reap = std::time::Duration::ZERO;
+                    let reaped = server.engine.reap_stale();
+                    if reaped > 0 {
+                        println!("reaped {reaped} stale trial(s)");
+                    }
                 }
             }
         }
@@ -143,6 +162,22 @@ fn cmd_campaign(args: &Args) -> i32 {
     campaign.n_nodes = args.get_u64("nodes", 24) as usize;
     campaign.max_trials = args.get_u64("trials", 200);
     campaign.steps_per_trial = args.get_u64("steps", 20);
+    campaign.fleet = args.get_bool("fleet");
+    // With the fleet protocol on, drive lease expiry while the
+    // campaign runs (the role the serve loop plays in production).
+    let pump_stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let pump = if campaign.fleet {
+        let engine = server.engine.clone();
+        let stop = pump_stop.clone();
+        Some(std::thread::spawn(move || {
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                engine.expire_leases();
+                std::thread::sleep(std::time::Duration::from_millis(200));
+            }
+        }))
+    } else {
+        None
+    };
     campaign.sampler = match args.get_or("sampler", "tpe") {
         "random" => "random",
         "gp" => "gp",
@@ -166,13 +201,19 @@ fn cmd_campaign(args: &Args) -> i32 {
         campaign.pruner,
         objective.name()
     );
-    match campaign.run() {
+    let result = campaign.run();
+    pump_stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    if let Some(h) = pump {
+        let _ = h.join();
+    }
+    match result {
         Ok(report) => {
             println!(
-                "completed={} pruned={} preempted={} steps={} best={:.5} wall={:.2}s ({:.1} trials/s)",
+                "completed={} pruned={} preempted={} requeued_taken={} steps={} best={:.5} wall={:.2}s ({:.1} trials/s)",
                 report.completed,
                 report.pruned,
                 report.preempted,
+                report.requeued_taken,
                 report.steps_executed,
                 report.best.unwrap_or(f64::NAN),
                 report.wall.as_secs_f64(),

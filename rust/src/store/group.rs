@@ -42,15 +42,27 @@ pub struct GroupWalConfig {
     /// stops admitting further jobs once a batch reaches this size.
     /// It can be exceeded by one job's worth of records — a job
     /// (notably a bulk [`GroupWal::append_many`]) is committed and
-    /// acknowledged atomically, never split across fsyncs.
+    /// acknowledged atomically, never split across fsyncs. With
+    /// `adaptive` set this is the *ceiling* the live limit grows toward.
     pub batch_max: usize,
     /// Bound on queued-but-unwritten jobs (backpressure).
     pub queue_depth: usize,
+    /// Adapt the live batch limit to the observed queue depth: each
+    /// commit that fills the current limit doubles it (up to
+    /// `batch_max`), each commit at a quarter of it or less halves it
+    /// (down to `batch_min`). Under a burst the limit climbs within a
+    /// few batches so thousands of mutations share single-digit fsyncs;
+    /// when the burst passes it decays back, keeping the tail-latency
+    /// cost of a huge half-empty drain window low. Off = the fixed
+    /// `batch_max` behavior (the `--wal-batch N` override).
+    pub adaptive: bool,
+    /// Floor of the adaptive limit.
+    pub batch_min: usize,
 }
 
 impl Default for GroupWalConfig {
     fn default() -> Self {
-        GroupWalConfig { batch_max: 256, queue_depth: 1024 }
+        GroupWalConfig { batch_max: 256, queue_depth: 1024, adaptive: false, batch_min: 16 }
     }
 }
 
@@ -69,6 +81,12 @@ pub struct GroupWalStats {
     pub max_batch: AtomicU64,
     /// Batches that failed (write or fsync error) and were rolled back.
     pub failed_batches: AtomicU64,
+    /// Live batch limit of the adaptive group-commit (equals the fixed
+    /// `batch_max` when adaptation is off).
+    pub batch_limit: AtomicU64,
+    /// Segment cuts skipped by compaction because the shard had no new
+    /// records since its previous segment (clean-shard reuse).
+    pub segments_reused: AtomicU64,
 }
 
 impl GroupWalStats {
@@ -94,6 +112,11 @@ enum Cmd {
     /// Compaction phase 2: cut one shard's snapshot segment. The engine
     /// holds that shard's lock across the roundtrip.
     CompactShard(u32, Value, Ack),
+    /// Compaction phase 2, clean-shard fast path: carry the shard's
+    /// previous segment (file + cut) into the new manifest without
+    /// rewriting it. Replies `false` when no previous segment is known,
+    /// in which case the engine falls back to a full cut.
+    ReuseSegment(u32, SyncSender<Result<bool, String>>),
     /// Compaction phase 3: commit the manifest, GC sealed logs. Replies
     /// with the record count carried over in the active log.
     FinishCompact(u64, u64, CountAck),
@@ -109,15 +132,25 @@ pub struct GroupWal {
 
 impl GroupWal {
     /// Take ownership of `storage` and start the writer thread.
-    /// `next_seq` continues the commit sequence recovered from replay.
-    pub fn start(storage: Storage, config: GroupWalConfig, next_seq: u64) -> GroupWal {
+    /// `next_seq` continues the commit sequence recovered from replay;
+    /// `prev_segments` seeds the clean-shard reuse table with the
+    /// segments of the manifest the recovery just loaded (empty when
+    /// the layout changed or no manifest existed — every shard is then
+    /// cut in full at the first compaction).
+    pub fn start(
+        storage: Storage,
+        config: GroupWalConfig,
+        next_seq: u64,
+        prev_segments: HashMap<u32, (String, u64)>,
+    ) -> GroupWal {
         let (tx, rx) = std::sync::mpsc::sync_channel(config.queue_depth.max(1));
         let stats = Arc::new(GroupWalStats::default());
         let thread_stats = stats.clone();
-        let batch_max = config.batch_max.max(1);
         let handle = std::thread::Builder::new()
             .name("hopaas-wal".into())
-            .spawn(move || Writer::new(storage, batch_max, next_seq, thread_stats).run(rx))
+            .spawn(move || {
+                Writer::new(storage, config, next_seq, prev_segments, thread_stats).run(rx)
+            })
             .expect("spawn wal writer");
         GroupWal { tx: Some(tx), stats, handle: Some(handle) }
     }
@@ -152,6 +185,21 @@ impl GroupWal {
     /// one) so the segment is a consistent cut of the shard's history.
     pub fn compact_shard(&self, shard: u32, studies: Value) -> Result<(), String> {
         self.roundtrip(|ack| Cmd::CompactShard(shard, studies, ack))
+    }
+
+    /// Compaction phase 2, clean-shard fast path: reference the shard's
+    /// previous segment in the upcoming manifest instead of cutting a
+    /// new one. Only valid when the shard has appended **no** records
+    /// since that segment was cut (the engine's per-shard dirty counter
+    /// proves this; the caller holds the shard's lock). Returns `false`
+    /// when the writer has no previous segment for the shard — the
+    /// caller must then cut in full.
+    pub fn reuse_segment(&self, shard: u32) -> Result<bool, String> {
+        let tx = self.tx.as_ref().expect("wal writer running");
+        let (ack_tx, ack_rx) = std::sync::mpsc::sync_channel(1);
+        tx.send(Cmd::ReuseSegment(shard, ack_tx))
+            .map_err(|_| "wal writer stopped".to_string())?;
+        ack_rx.recv().map_err(|_| "wal writer stopped".to_string())?
     }
 
     /// Compaction phase 3: commit the manifest and GC sealed logs.
@@ -196,7 +244,9 @@ impl Drop for GroupWal {
 /// Writer-thread state.
 struct Writer {
     storage: Storage,
-    batch_max: usize,
+    config: GroupWalConfig,
+    /// Live batch limit: fixed at `config.batch_max` unless adaptive.
+    limit: usize,
     /// Next global commit seq to stamp.
     next_seq: u64,
     /// Per-shard cut positions (`last stamped seq + 1`) for records in
@@ -206,17 +256,35 @@ struct Writer {
     shard_next: HashMap<u32, u64>,
     /// Segments written since the last rotation: `(shard, file, cut)`.
     segments: Vec<(u32, String, u64)>,
+    /// Segments of the last committed manifest, by shard — the
+    /// clean-shard reuse table.
+    prev_segments: HashMap<u32, (String, u64)>,
     stats: Arc<GroupWalStats>,
 }
 
 impl Writer {
-    fn new(storage: Storage, batch_max: usize, next_seq: u64, stats: Arc<GroupWalStats>) -> Writer {
+    fn new(
+        storage: Storage,
+        config: GroupWalConfig,
+        next_seq: u64,
+        prev_segments: HashMap<u32, (String, u64)>,
+        stats: Arc<GroupWalStats>,
+    ) -> Writer {
+        let config = GroupWalConfig {
+            batch_max: config.batch_max.max(1),
+            batch_min: config.batch_min.clamp(1, config.batch_max.max(1)),
+            ..config
+        };
+        let limit = if config.adaptive { config.batch_min } else { config.batch_max };
+        stats.batch_limit.store(limit as u64, Ordering::Relaxed);
         Writer {
             storage,
-            batch_max,
+            config,
+            limit,
             next_seq,
             shard_next: HashMap::new(),
             segments: Vec::new(),
+            prev_segments,
             stats,
         }
     }
@@ -252,6 +320,17 @@ impl Writer {
                     };
                     let _ = ack.send(result);
                 }
+                Cmd::ReuseSegment(shard, ack) => {
+                    let result = match self.prev_segments.get(&shard) {
+                        Some((file, cut)) => {
+                            self.segments.push((shard, file.clone(), *cut));
+                            self.stats.segments_reused.fetch_add(1, Ordering::Relaxed);
+                            Ok(true)
+                        }
+                        None => Ok(false),
+                    };
+                    let _ = ack.send(result);
+                }
                 Cmd::FinishCompact(next_trial_id, next_study_id, ack) => {
                     let result = match self.storage.finish_compact(
                         &self.segments,
@@ -259,7 +338,14 @@ impl Writer {
                         next_trial_id,
                         next_study_id,
                     ) {
-                        Ok(()) => Ok(self.storage.wal_stats().records),
+                        Ok(()) => {
+                            self.prev_segments = self
+                                .segments
+                                .iter()
+                                .map(|(shard, file, cut)| (*shard, (file.clone(), *cut)))
+                                .collect();
+                            Ok(self.storage.wal_stats().records)
+                        }
                         Err(e) => Err(e.to_string()),
                     };
                     let _ = ack.send(result);
@@ -283,7 +369,7 @@ impl Writer {
         // which is what collapses per-mutation fsyncs under load while
         // adding zero latency when idle.
         let mut deferred = None;
-        while total < self.batch_max {
+        while total < self.limit {
             match rx.try_recv() {
                 Ok(Cmd::Append(r, a)) => {
                     total += r.len();
@@ -340,6 +426,17 @@ impl Writer {
                 self.stats.records.fetch_add(n, Ordering::Relaxed);
                 self.stats.last_batch.store(n, Ordering::Relaxed);
                 self.stats.max_batch.fetch_max(n, Ordering::Relaxed);
+                // Adapt the limit to the observed queue depth: a full
+                // drain means the queue outran the window (grow), a
+                // near-empty one means the burst passed (shrink).
+                if self.config.adaptive {
+                    if total >= self.limit {
+                        self.limit = (self.limit * 2).min(self.config.batch_max);
+                    } else if total * 4 <= self.limit {
+                        self.limit = (self.limit / 2).max(self.config.batch_min);
+                    }
+                    self.stats.batch_limit.store(self.limit as u64, Ordering::Relaxed);
+                }
             }
             Err(_) => {
                 self.stats.failed_batches.fetch_add(1, Ordering::Relaxed);
@@ -373,7 +470,7 @@ mod tests {
         let d = TempDir::new("group-ack");
         {
             let storage = Storage::open(d.path()).unwrap();
-            let w = GroupWal::start(storage, GroupWalConfig::default(), 0);
+            let w = GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new());
             for i in 0..10 {
                 w.append(rec(i)).unwrap();
             }
@@ -390,7 +487,7 @@ mod tests {
         let d = TempDir::new("group-seq");
         {
             let storage = Storage::open(d.path()).unwrap();
-            let w = GroupWal::start(storage, GroupWalConfig::default(), 7);
+            let w = GroupWal::start(storage, GroupWalConfig::default(), 7, HashMap::new());
             for i in 0..5 {
                 w.append(rec(i)).unwrap();
             }
@@ -408,7 +505,8 @@ mod tests {
         let stats;
         {
             let storage = Storage::open(d.path()).unwrap();
-            let w = Arc::new(GroupWal::start(storage, GroupWalConfig::default(), 0));
+            let w =
+                Arc::new(GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new()));
             let handles: Vec<_> = (0..n_threads)
                 .map(|t| {
                     let w = w.clone();
@@ -448,7 +546,7 @@ mod tests {
         let d = TempDir::new("group-many");
         {
             let storage = Storage::open(d.path()).unwrap();
-            let w = GroupWal::start(storage, GroupWalConfig::default(), 0);
+            let w = GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new());
             w.append_many((0..50).map(rec).collect()).unwrap();
             w.append_many(Vec::new()).unwrap(); // no-op, no batch
             let (batches, records, last, _) = w.stats().snapshot();
@@ -466,7 +564,7 @@ mod tests {
         let d = TempDir::new("group-rollback");
         {
             let storage = Storage::open(d.path()).unwrap();
-            let w = GroupWal::start(storage, GroupWalConfig::default(), 0);
+            let w = GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new());
             w.append(rec(1)).unwrap();
             // A record above MAX_RECORD fails its append mid-batch; the
             // good record sharing the batch is NACKed and must not
@@ -488,11 +586,68 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_batch_limit_grows_and_decays() {
+        let d = TempDir::new("group-adaptive");
+        {
+            let storage = Storage::open(d.path()).unwrap();
+            let config = GroupWalConfig {
+                batch_max: 64,
+                batch_min: 4,
+                adaptive: true,
+                ..Default::default()
+            };
+            let w = GroupWal::start(storage, config, 0, HashMap::new());
+            assert_eq!(w.stats().batch_limit.load(Ordering::Relaxed), 4);
+            // A commit that fills the live limit doubles it.
+            w.append_many((0..64).map(rec).collect()).unwrap();
+            assert_eq!(w.stats().batch_limit.load(Ordering::Relaxed), 8);
+            w.append_many((0..64).map(rec).collect()).unwrap();
+            assert_eq!(w.stats().batch_limit.load(Ordering::Relaxed), 16);
+            // Idle single appends decay it back to the floor.
+            for i in 0..20 {
+                w.append(rec(i)).unwrap();
+            }
+            assert_eq!(w.stats().batch_limit.load(Ordering::Relaxed), 4);
+        }
+        // Fixed mode pins the limit at batch_max.
+        let storage = Storage::open(d.path()).unwrap();
+        let w = GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new());
+        w.append(rec(1)).unwrap();
+        assert_eq!(w.stats().batch_limit.load(Ordering::Relaxed), 256);
+    }
+
+    #[test]
+    fn reuse_segment_carries_previous_manifest_entry() {
+        let d = TempDir::new("group-reuse");
+        {
+            let storage = Storage::open(d.path()).unwrap();
+            let w = GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new());
+            w.append(rec(0)).unwrap();
+            assert!(!w.reuse_segment(0).unwrap(), "no previous manifest yet");
+            w.begin_compact().unwrap();
+            let mut snap = Value::obj();
+            snap.set("gen", 1);
+            w.compact_shard(0, Value::Obj(snap)).unwrap();
+            w.finish_compact(1, 1).unwrap();
+            // The second compaction reuses shard 0's segment as-is.
+            w.begin_compact().unwrap();
+            assert!(w.reuse_segment(0).unwrap());
+            w.finish_compact(1, 1).unwrap();
+            assert_eq!(w.stats().segments_reused.load(Ordering::Relaxed), 1);
+        }
+        let mut s = Storage::open(d.path()).unwrap();
+        let loaded = s.load().unwrap();
+        assert_eq!(loaded.segments.len(), 1);
+        assert_eq!(loaded.segments[0].get("studies").get("gen").as_i64(), Some(1));
+        assert!(loaded.events.is_empty());
+    }
+
+    #[test]
     fn incremental_compact_covers_and_carries() {
         let d = TempDir::new("group-compact");
         {
             let storage = Storage::open(d.path()).unwrap();
-            let w = GroupWal::start(storage, GroupWalConfig::default(), 0);
+            let w = GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new());
             for i in 0..6 {
                 w.append(rec(i)).unwrap();
             }
@@ -524,7 +679,7 @@ mod tests {
         let d = TempDir::new("group-cut");
         {
             let storage = Storage::open(d.path()).unwrap();
-            let w = GroupWal::start(storage, GroupWalConfig::default(), 0);
+            let w = GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new());
             w.append(rec(0)).unwrap();
             w.begin_compact().unwrap();
             w.append(rec(1)).unwrap(); // pre-cut: covered

@@ -62,8 +62,16 @@ use std::sync::Arc;
 /// On-disk format version written into the manifest.
 pub const FORMAT_VERSION: u64 = 2;
 
+/// Reserved shard id stamped on fleet records (worker registry / lease
+/// events). Fleet state is engine-global, not owned by any study shard;
+/// at compaction it is covered by its own `snapshot.fleet.json` segment
+/// whose manifest entry carries this id, so the normal per-shard
+/// coverage rules apply to fleet records unchanged.
+pub const FLEET_SHARD: u32 = u32::MAX;
+
 const MANIFEST_FILE: &str = "MANIFEST.json";
 const LEGACY_SNAPSHOT_FILE: &str = "snapshot.json";
+const FLEET_SEGMENT_FILE: &str = "snapshot.fleet.json";
 
 /// Fault-injection hook for the crash test harness: called with a named
 /// kill-point (`"segment.rename"`, `"gc"`, …) before the corresponding
@@ -201,7 +209,11 @@ fn log_epoch(name: &str) -> Option<u64> {
 }
 
 fn segment_file(shard: u32) -> String {
-    format!("snapshot.shard-{shard}.json")
+    if shard == FLEET_SHARD {
+        FLEET_SEGMENT_FILE.to_string()
+    } else {
+        format!("snapshot.shard-{shard}.json")
+    }
 }
 
 impl Storage {
@@ -494,7 +506,8 @@ impl Storage {
             let entry = entry?;
             let name = entry.file_name();
             let Some(name) = name.to_str() else { continue };
-            let stale = name.starts_with("snapshot.shard-")
+            let stale = (name.starts_with("snapshot.shard-")
+                || name.starts_with(FLEET_SEGMENT_FILE))
                 && (name.ends_with(".json.tmp")
                     || (name.ends_with(".json") && !live.contains(name)));
             if stale {

@@ -173,17 +173,23 @@ pub struct TrialHandle {
     pub trial_number: u64,
     pub study_id: u64,
     pub params: Value,
+    /// True when this trial was originally handed to a worker that was
+    /// lost and has been re-assigned to us via its lease expiry.
+    pub requeued: bool,
 }
 
 /// Blocking HOPAAS client over one keep-alive connection.
 pub struct HopaasClient {
     http: Client,
     token: String,
+    /// Fleet worker identity, set by [`HopaasClient::register_worker`];
+    /// when present every `ask` is lease-bound to it.
+    worker_id: Option<u64>,
 }
 
 impl HopaasClient {
     pub fn connect(addr: SocketAddr, token: String) -> Result<HopaasClient, WorkerError> {
-        Ok(HopaasClient { http: Client::connect(addr)?, token })
+        Ok(HopaasClient { http: Client::connect(addr)?, token, worker_id: None })
     }
 
     fn check(resp: crate::http::Response) -> Result<Value, WorkerError> {
@@ -203,15 +209,91 @@ impl HopaasClient {
         Ok(v.get("version").as_str().unwrap_or("").to_string())
     }
 
-    /// `ask`: join/create the study, receive a trial.
+    /// Register this client as a fleet worker: every subsequent `ask`
+    /// binds its trial to the worker's heartbeat lease. Returns the
+    /// worker id; `heartbeat` must be called within the server's lease
+    /// timeout or the worker's trials are requeued to others.
+    pub fn register_worker(
+        &mut self,
+        name: &str,
+        site: &str,
+        gpu: &str,
+    ) -> Result<u64, WorkerError> {
+        let path = format!("/api/workers/register/{}", self.token);
+        let mut o = Value::obj();
+        o.set("name", name).set("site", site).set("gpu", gpu);
+        let v = Self::check(self.http.post_json(&path, &Value::Obj(o))?)?;
+        let id = v.get("worker_id").as_u64().unwrap_or(0);
+        self.worker_id = Some(id);
+        Ok(id)
+    }
+
+    /// Renew this worker's lease; returns how many trials it covers.
+    pub fn heartbeat(&mut self) -> Result<u64, WorkerError> {
+        let Some(wid) = self.worker_id else {
+            return Err(WorkerError::Api {
+                status: 0,
+                detail: "not registered as a worker".into(),
+            });
+        };
+        let path = format!("/api/workers/heartbeat/{}", self.token);
+        let mut o = Value::obj();
+        o.set("worker_id", wid);
+        let v = Self::check(self.http.post_json(&path, &Value::Obj(o))?)?;
+        Ok(v.get("leases").as_u64().unwrap_or(0))
+    }
+
+    /// Graceful shutdown: hand running trials back for reassignment.
+    /// The worker identity is only dropped once the server has answered
+    /// — a transport error leaves it in place so the call can be
+    /// retried. A 404/409 (unknown, or already declared lost) also
+    /// clears it: that identity is no longer usable either way.
+    pub fn deregister_worker(&mut self) -> Result<u64, WorkerError> {
+        let Some(wid) = self.worker_id else { return Ok(0) };
+        let path = format!("/api/workers/deregister/{}", self.token);
+        let mut o = Value::obj();
+        o.set("worker_id", wid);
+        let resp = self.http.post_json(&path, &Value::Obj(o))?;
+        match Self::check(resp) {
+            Ok(v) => {
+                self.worker_id = None;
+                Ok(v.get("requeued").as_u64().unwrap_or(0))
+            }
+            Err(WorkerError::Api { status: 404 | 409, .. }) => {
+                self.worker_id = None;
+                Ok(0)
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Worker identity, if registered.
+    pub fn worker_id(&self) -> Option<u64> {
+        self.worker_id
+    }
+
+    /// Drop the worker identity client-side (simulating a vanished spot
+    /// instance: no deregister, no goodbye — the server's lease expiry
+    /// must notice).
+    pub fn abandon_worker(&mut self) {
+        self.worker_id = None;
+    }
+
+    /// `ask`: join/create the study, receive a trial (a fresh one, or a
+    /// requeued trial whose previous worker was lost).
     pub fn ask(&mut self, spec: &StudySpec) -> Result<TrialHandle, WorkerError> {
         let path = format!("/api/ask/{}", self.token);
-        let v = Self::check(self.http.post_json(&path, &spec.to_body())?)?;
+        let mut body = spec.to_body();
+        if let (Some(wid), Value::Obj(o)) = (self.worker_id, &mut body) {
+            o.set("worker", wid);
+        }
+        let v = Self::check(self.http.post_json(&path, &body)?)?;
         Ok(TrialHandle {
             trial_id: v.get("trial_id").as_u64().unwrap_or(0),
             trial_number: v.get("trial_number").as_u64().unwrap_or(0),
             study_id: v.get("study_id").as_u64().unwrap_or(0),
             params: v.get("params").clone(),
+            requeued: v.get("requeued").as_bool().unwrap_or(false),
         })
     }
 
@@ -345,6 +427,23 @@ mod tests {
             Err(WorkerError::Api { status: 401, .. }) => {}
             other => panic!("expected 401, got {other:?}"),
         }
+        s.stop();
+    }
+
+    #[test]
+    fn worker_lease_flow() {
+        let s = server();
+        let mut c = HopaasClient::connect(s.addr(), s.bootstrap_token.clone()).unwrap();
+        let wid = c.register_worker("n1", "infn-cloud", "a100").unwrap();
+        assert_eq!(c.worker_id(), Some(wid));
+        let spec = StudySpec::new("lease").uniform("x", 0.0, 1.0).sampler("random");
+        let t = c.ask(&spec).unwrap();
+        assert!(!t.requeued);
+        assert_eq!(c.heartbeat().unwrap(), 1, "ask bound one lease");
+        c.tell(&t, 1.0).unwrap();
+        assert_eq!(c.heartbeat().unwrap(), 0, "tell released it");
+        assert_eq!(c.deregister_worker().unwrap(), 0);
+        assert_eq!(c.worker_id(), None);
         s.stop();
     }
 

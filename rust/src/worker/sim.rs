@@ -78,6 +78,13 @@ pub struct Campaign {
     /// Simulated work per step at speed 1.0 (µs). 0 = as fast as possible.
     pub step_cost_us: u64,
     pub seed: u64,
+    /// Use the fleet protocol: nodes register as workers, heartbeat
+    /// every step, and vanish without a goodbye on preemption — their
+    /// trials come back via server-side lease expiry, not the reaper.
+    /// A preempted node re-registers as a fresh worker (a respawned
+    /// spot instance). The caller must drive `Engine::expire_leases`
+    /// (the serve loop does in production).
+    pub fleet: bool,
 }
 
 impl Campaign {
@@ -94,6 +101,7 @@ impl Campaign {
             steps_per_trial: 20,
             step_cost_us: 200,
             seed: 1,
+            fleet: false,
         }
     }
 
@@ -146,6 +154,9 @@ pub struct CampaignReport {
     pub completed: u64,
     pub pruned: u64,
     pub preempted: u64,
+    /// Trials received via requeue (another worker's preempted trial,
+    /// re-assigned through lease expiry). Fleet mode only.
+    pub requeued_taken: u64,
     pub steps_executed: u64,
     pub best: Option<f64>,
     pub wall: Duration,
@@ -158,6 +169,7 @@ impl CampaignReport {
         self.completed += other.completed;
         self.pruned += other.pruned;
         self.preempted += other.preempted;
+        self.requeued_taken += other.requeued_taken;
         self.steps_executed += other.steps_executed;
         self.best = match (self.best, other.best) {
             (Some(a), Some(b)) => Some(a.min(b)),
@@ -186,9 +198,13 @@ fn node_loop(
 ) -> Result<CampaignReport, WorkerError> {
     let mut rng = Rng::new(mix(campaign.seed, node.node_id as u64));
     let mut client = HopaasClient::connect(campaign.server, campaign.token.clone())?;
+    if campaign.fleet {
+        client.register_worker(&node.label(), node.site.name, "sim-gpu")?;
+    }
     let spec = campaign.spec(node);
     let mut report = CampaignReport::default();
     let mut site_completed = 0u64;
+    let mut incarnation = 0u64;
 
     loop {
         if stop.load(Ordering::Relaxed) {
@@ -200,7 +216,34 @@ fn node_loop(
             break;
         }
         net_delay(node, &mut rng);
-        let trial = client.ask(&spec)?;
+        let trial = match client.ask(&spec) {
+            Ok(t) => t,
+            // Quota / fair-share denial: the slot was not consumed —
+            // back off briefly and retry.
+            Err(WorkerError::Api { status: 429, .. }) => {
+                started.fetch_sub(1, Ordering::Relaxed);
+                std::thread::sleep(Duration::from_millis(2));
+                continue;
+            }
+            // Fleet mode: this worker was declared lost (a heartbeat
+            // gap on a loaded machine). Its trials are already queued
+            // for others — re-register as a fresh instance and go on.
+            Err(WorkerError::Api { status: 409, .. }) if campaign.fleet => {
+                started.fetch_sub(1, Ordering::Relaxed);
+                incarnation += 1;
+                client.abandon_worker();
+                client.register_worker(
+                    &format!("{}-x{incarnation}", node.label()),
+                    node.site.name,
+                    "sim-gpu",
+                )?;
+                continue;
+            }
+            Err(e) => return Err(e),
+        };
+        if trial.requeued {
+            report.requeued_taken += 1;
+        }
 
         // The simulated training converges to the objective value at the
         // suggested point: bad hyperparameters → high asymptote, which is
@@ -223,11 +266,13 @@ fn node_loop(
 
         let mut pruned = false;
         let mut preempted = false;
+        let mut stolen = false;
         for step in 1..=campaign.steps_per_trial {
             if let Some(p) = preempt_at {
                 if step >= p {
                     // Node vanishes mid-trial: no fail report, exactly like
-                    // a killed spot instance. The server's reaper handles it.
+                    // a killed spot instance. The server's reaper handles it
+                    // (or, in fleet mode, lease expiry requeues the trial).
                     preempted = true;
                     break;
                 }
@@ -236,14 +281,44 @@ fn node_loop(
             report.steps_executed += 1;
             let loss = curve.at(step, &mut rng);
             net_delay(node, &mut rng);
-            if client.should_prune(&trial, step, loss)? {
-                pruned = true;
-                break;
+            match client.should_prune(&trial, step, loss) {
+                Ok(true) => {
+                    pruned = true;
+                    break;
+                }
+                Ok(false) => {}
+                // Fleet mode: our lease expired mid-trial and the trial
+                // was re-homed — it is not ours to report on anymore.
+                Err(WorkerError::Api { status: 409, .. }) if campaign.fleet => {
+                    stolen = true;
+                    break;
+                }
+                Err(e) => return Err(e),
+            }
+            if campaign.fleet {
+                // Renew the worker lease alongside the progress report.
+                let _ = client.heartbeat();
             }
         }
 
-        if preempted {
+        if stolen {
+            // Nothing to record: the trial's new holder reports it.
+        } else if preempted {
             report.preempted += 1;
+            if campaign.fleet {
+                // The instance is gone: no fail report, no deregister,
+                // no further heartbeats — exactly like a killed spot
+                // node. The server's lease expiry requeues the trial.
+                // The thread then plays the *replacement* instance,
+                // registering as a fresh worker.
+                client.abandon_worker();
+                incarnation += 1;
+                client.register_worker(
+                    &format!("{}-r{incarnation}", node.label()),
+                    node.site.name,
+                    "sim-gpu",
+                )?;
+            }
         } else if pruned {
             report.pruned += 1;
         } else {
@@ -251,14 +326,24 @@ fn node_loop(
             // the "noisy loss function" setting of the paper's §1).
             let final_loss = curve.final_loss() + rng.normal() * 0.005;
             net_delay(node, &mut rng);
-            client.tell(&trial, final_loss)?;
-            report.completed += 1;
-            site_completed += 1;
-            report.best = Some(match report.best {
-                None => final_loss,
-                Some(b) => b.min(final_loss),
-            });
+            match client.tell(&trial, final_loss) {
+                Ok(_) => {
+                    report.completed += 1;
+                    site_completed += 1;
+                    report.best = Some(match report.best {
+                        None => final_loss,
+                        Some(b) => b.min(final_loss),
+                    });
+                }
+                // Fleet mode: a straggler tell after our lease expired
+                // and the re-homed trial finished elsewhere.
+                Err(WorkerError::Api { status: 409, .. }) if campaign.fleet => {}
+                Err(e) => return Err(e),
+            }
         }
+    }
+    if campaign.fleet {
+        let _ = client.deregister_worker();
     }
     report.by_site.push((node.site.name.to_string(), site_completed));
     Ok(report)
@@ -319,6 +404,7 @@ mod tests {
             completed: 2,
             pruned: 1,
             preempted: 0,
+            requeued_taken: 0,
             steps_executed: 10,
             best: Some(1.0),
             wall: Duration::ZERO,
@@ -328,6 +414,7 @@ mod tests {
             completed: 3,
             pruned: 0,
             preempted: 1,
+            requeued_taken: 2,
             steps_executed: 20,
             best: Some(0.5),
             wall: Duration::ZERO,
@@ -335,8 +422,97 @@ mod tests {
         };
         a.merge(&b);
         assert_eq!(a.completed, 5);
+        assert_eq!(a.requeued_taken, 2);
         assert_eq!(a.best, Some(0.5));
         assert_eq!(a.by_site, vec![("x".to_string(), 3), ("y".to_string(), 2)]);
+    }
+
+    #[test]
+    fn fleet_campaign_requeues_preempted_trials() {
+        // Fleet protocol: preempted nodes vanish mid-trial without a
+        // goodbye; a short lease timeout plus an expiry pump re-homes
+        // their trials onto surviving workers — no reap_stale involved.
+        let config = HopaasConfig {
+            auth_required: false,
+            engine: crate::coordinator::engine::EngineConfig {
+                lease_timeout: Some(0.05),
+                // A trial may be preempted repeatedly (its new worker
+                // can die too); keep the budget above any plausible
+                // chain so the preempted == re-assigned ledger balances.
+                requeue_max: 1000,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let s = HopaasServer::start("127.0.0.1:0", config).unwrap();
+        let engine = s.engine.clone();
+        let stop = Arc::new(AtomicBool::new(false));
+        let pump = {
+            let stop = stop.clone();
+            let engine = engine.clone();
+            std::thread::spawn(move || {
+                while !stop.load(Ordering::Relaxed) {
+                    engine.expire_leases();
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+            })
+        };
+        let mut c = Campaign::new(s.addr(), "t".into(), Objective::Sphere);
+        c.fleet = true;
+        c.n_nodes = 4;
+        c.max_trials = 30;
+        c.steps_per_trial = 4;
+        c.step_cost_us = 100;
+        c.pruner = None;
+        // Every node on one high-preemption site.
+        let sites = [Site { name: "spot", speed: 1.0, preempt: 0.4, net_latency_us: 50 }];
+        let report = c.run_with_sites(&sites).unwrap();
+        // Give the pump time to expire the last abandoned leases, then
+        // drain the requeue queue with a fresh worker.
+        std::thread::sleep(Duration::from_millis(120));
+        engine.expire_leases();
+        let mut drained = 0u64;
+        {
+            let mut client = HopaasClient::connect(s.addr(), "t".into()).unwrap();
+            client.register_worker("drain", "spot", "sim").unwrap();
+            let spec = StudySpec::new(&c.study_name)
+                .properties_json(c.objective.properties())
+                .sampler(c.sampler);
+            loop {
+                // Keep the drain worker's own lease alive while the
+                // pump is still expiring in the background.
+                let _ = client.heartbeat();
+                let t = client.ask(&spec).unwrap();
+                if !t.requeued {
+                    // A fresh trial — finish it and stop draining.
+                    client.tell(&t, 1.0).unwrap();
+                    break;
+                }
+                if client.tell(&t, 1.0).is_ok() {
+                    drained += 1;
+                }
+            }
+        }
+        stop.store(true, Ordering::Relaxed);
+        pump.join().unwrap();
+        assert!(report.preempted > 0, "preemption never triggered: {report:?}");
+        // Every preempted trial was either re-assigned during the
+        // campaign or drained above — none left queued, none failed by
+        // a reaper (reap_stale was never called), none still running.
+        // (`>=` because a heartbeat gap on a loaded machine can expire
+        // a live worker too — that requeue has no preempt event.)
+        let stats = engine.stats_json();
+        let fleet = stats.get("fleet");
+        assert_eq!(fleet.get("requeue_depth").as_u64(), Some(0), "{stats}");
+        assert!(
+            report.requeued_taken + drained >= report.preempted,
+            "preempted trials unaccounted for: {report:?} drained={drained}"
+        );
+        for sv in engine.studies_json().as_arr().unwrap() {
+            assert_eq!(sv.get("n_running").as_i64(), Some(0), "{sv}");
+            assert_eq!(sv.get("n_failed").as_i64(), Some(0), "{sv}");
+        }
+        s.stop();
     }
 
     #[test]

@@ -189,6 +189,70 @@ fn torn_batch_tail_loses_only_the_unacknowledged_suffix() {
 }
 
 #[test]
+fn kill_point_inside_lease_requeue_is_exactly_once() {
+    // A worker with three leased trials dies; the lease-expiry sweep
+    // persists `worker_lost`, then one `trial_requeue` per trial — and
+    // the storage is killed on the fsync of the *second* requeue.
+    // After recovery the worker must still be lost, the one durable
+    // requeue must not be applied twice, and the remaining trials must
+    // be requeued by the next sweep: each of the three trials is
+    // re-assigned exactly once, with its original id/number/params.
+    fn ask_body_worker(study: &str, worker: u64) -> Value {
+        let mut v = ask_body(study);
+        if let Value::Obj(o) = &mut v {
+            o.set("worker", worker);
+        }
+        v
+    }
+    let fleet_config = EngineConfig {
+        n_shards: N_SHARDS,
+        lease_timeout: Some(0.02),
+        requeue_max: 5,
+        ..Default::default()
+    };
+    let dir = TempDir::new("ci-lease-requeue");
+    let ks = KillSwitch::new();
+    let mut issued: Vec<(u64, u64, String)> = Vec::new();
+    {
+        let storage = Storage::open_with_hook(dir.path(), Some(ks.hook())).unwrap();
+        let engine = Engine::open_with_storage(storage, fleet_config.clone()).unwrap();
+        let (w1, _) = engine.register_worker("w1", "spot", "gpu").unwrap();
+        for _ in 0..3 {
+            let r = engine.ask(&ask_body_worker("lq", w1)).unwrap();
+            issued.push((r.trial_id, r.trial_number, r.params.to_string()));
+        }
+        std::thread::sleep(std::time::Duration::from_millis(40));
+        // Syncs after arming: worker_lost (skip 0), requeue #1 (skip 1),
+        // requeue #2 (skip 2 → fires).
+        ks.arm_nth("sync", 2);
+        let handled = engine.expire_leases();
+        assert!(ks.fired(), "workload never reached the kill-point");
+        assert_eq!(handled, 1, "exactly one requeue became durable before the crash");
+    }
+    let engine = Engine::open(dir.path(), fleet_config).unwrap();
+    // The worker is durably lost and still holds the two un-requeued
+    // leases; the next sweep picks them up with no deadline wait.
+    engine.expire_leases();
+    let (w2, _) = engine.register_worker("w2", "spot", "gpu").unwrap();
+    let mut got: Vec<(u64, u64, String)> = Vec::new();
+    for _ in 0..3 {
+        let q = engine.ask(&ask_body_worker("lq", w2)).unwrap();
+        assert!(q.requeued, "expected a re-assigned trial");
+        got.push((q.trial_id, q.trial_number, q.params.to_string()));
+        engine.tell(q.trial_id, 1.0).unwrap();
+    }
+    got.sort();
+    let mut want = issued.clone();
+    want.sort();
+    assert_eq!(got, want, "each lost trial re-assigned exactly once");
+    // The fourth ask is fresh: the queue is empty and numbering
+    // continues where the original handouts stopped.
+    let f = engine.ask(&ask_body_worker("lq", w2)).unwrap();
+    assert!(!f.requeued);
+    assert_eq!(f.trial_number, 3);
+}
+
+#[test]
 fn kill_during_group_commit_never_loses_an_acknowledged_tell() {
     // The fsync of some mid-workload batch fails; the in-flight
     // mutation is NACKed (the engine returns 500), and everything

@@ -87,6 +87,7 @@ fn restart_preserves_all_told_trials() {
             trial_number: 10,
             study_id: sid,
             params: Value::Null,
+            requeued: false,
         };
         c.tell(&t, 0.001).unwrap();
         // Best over {0.0, 0.1, ..., 0.9, 0.001} is still the told 0.0.
@@ -292,6 +293,7 @@ fn engine_rejects_writes_on_unknown_trials_after_recovery() {
         trial_number: 0,
         study_id: 1,
         params: parse("{}").unwrap(),
+        requeued: false,
     };
     match c.tell(&ghost, 1.0) {
         Err(hopaas::worker::WorkerError::Api { status: 404, .. }) => {}

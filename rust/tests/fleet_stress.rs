@@ -1,0 +1,426 @@
+//! Fleet stress suite — the acceptance surface of the fleet subsystem.
+//!
+//! * a multi-site campaign with forced worker preemption completes with
+//!   **zero permanently lost trials**: every preempted trial comes back
+//!   via lease expiry (`Engine::expire_leases`; `reap_stale` is never
+//!   called) and is re-assigned to a surviving worker;
+//! * per-site concurrency quotas are **never exceeded** (the scheduler
+//!   records a per-site high-water mark, asserted against the quota);
+//! * requeueing never perturbs the **deterministic suggestion stream**:
+//!   trial numbers stay unique and contiguous, and every (number →
+//!   params) pair matches a sequential, preemption-free engine;
+//! * a property test drives random issue/tell/expire schedules and
+//!   checks that a lost worker's trials are re-assigned **exactly
+//!   once**, in creation order, with the stream intact.
+
+use hopaas::coordinator::engine::{ApiError, Engine, EngineConfig};
+use hopaas::json::{parse, Value};
+use hopaas::rng::{mix, Rng};
+use hopaas::testutil::prop;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+fn ask_body(study: &str) -> Value {
+    parse(&format!(
+        r#"{{
+        "study_name": "{study}",
+        "properties": {{"x": {{"low": 0.0, "high": 1.0}},
+                        "lr": {{"low": 1e-5, "high": 1e-1, "type": "loguniform"}}}},
+        "direction": "minimize",
+        "sampler": {{"name": "random"}}
+    }}"#
+    ))
+    .unwrap()
+}
+
+fn ask_body_worker(study: &str, worker: u64) -> Value {
+    let mut v = ask_body(study);
+    if let Value::Obj(o) = &mut v {
+        o.set("worker", worker);
+    }
+    v
+}
+
+const SITE_QUOTA: u32 = 3;
+const TARGET_TRIALS: u64 = 60;
+const STUDIES: [&str; 2] = ["fleet-a", "fleet-b"];
+
+/// The flagship scenario: two campaigns across two sites, eight workers
+/// with a 30% chance of vanishing (spot-instance style) after any ask,
+/// a lease-expiry pump instead of a reaper, and hard assertions on
+/// completeness, quota ceilings and suggestion determinism.
+#[test]
+fn preempted_multi_site_campaign_loses_nothing() {
+    let config = EngineConfig {
+        n_shards: 4,
+        lease_timeout: Some(0.15),
+        site_quota: SITE_QUOTA,
+        requeue_max: 10_000,
+        ..Default::default()
+    };
+    let engine = Arc::new(Engine::in_memory(config));
+    // trial id → (study, number, params) for every trial ever issued.
+    let issued: Arc<Mutex<HashMap<u64, (String, u64, String)>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+    let completed: Arc<Mutex<HashSet<u64>>> = Arc::new(Mutex::new(HashSet::new()));
+    let started = Arc::new(AtomicU64::new(0));
+    let preempt_events = Arc::new(AtomicU64::new(0));
+    let stop_pump = Arc::new(AtomicBool::new(false));
+
+    // Lease-expiry pump: the role the serve loop plays in production.
+    // `reap_stale` is deliberately never called anywhere in this test.
+    let pump = {
+        let engine = engine.clone();
+        let stop = stop_pump.clone();
+        std::thread::spawn(move || {
+            while !stop.load(Ordering::Relaxed) {
+                engine.expire_leases();
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        })
+    };
+
+    let workers: Vec<_> = (0..8u64)
+        .map(|wi| {
+            let engine = engine.clone();
+            let issued = issued.clone();
+            let completed = completed.clone();
+            let started = started.clone();
+            let preempt_events = preempt_events.clone();
+            std::thread::spawn(move || {
+                let study = STUDIES[(wi % 2) as usize];
+                let site = if wi < 4 { "spot" } else { "cloud" };
+                let mut rng = Rng::new(mix(0xF1EE7, wi));
+                let mut respawns = 0u64;
+                let (mut wid, _) = engine
+                    .register_worker(&format!("w{wi}"), site, "sim-gpu")
+                    .unwrap();
+                loop {
+                    if started.load(Ordering::Relaxed) >= TARGET_TRIALS {
+                        break;
+                    }
+                    // Keep the lease alive: this instance is healthy.
+                    let _ = engine.worker_heartbeat(wid);
+                    let t = match engine.ask(&ask_body_worker(study, wid)) {
+                        Ok(t) => t,
+                        Err(ApiError::Quota(_)) => {
+                            std::thread::sleep(Duration::from_micros(500));
+                            continue;
+                        }
+                        Err(ApiError::Conflict(_)) => {
+                            // This instance was descheduled long enough
+                            // for the pump to declare it lost. Its trial
+                            // is already queued for someone else; carry
+                            // on as a fresh instance.
+                            respawns += 1;
+                            let (nwid, _) = engine
+                                .register_worker(&format!("w{wi}-l{respawns}"), site, "sim-gpu")
+                                .unwrap();
+                            wid = nwid;
+                            continue;
+                        }
+                        Err(e) => panic!("ask failed: {e}"),
+                    };
+                    if t.requeued {
+                        // Re-assigned trial: must have been issued before,
+                        // with identical number and parameters.
+                        let map = issued.lock().unwrap();
+                        let (s0, n0, p0) = map.get(&t.trial_id).expect("requeued unknown trial");
+                        assert_eq!(s0, study);
+                        assert_eq!(*n0, t.trial_number, "requeue changed the trial number");
+                        assert_eq!(p0, &t.params.to_string(), "requeue changed the params");
+                    } else {
+                        started.fetch_add(1, Ordering::Relaxed);
+                        let prev = issued.lock().unwrap().insert(
+                            t.trial_id,
+                            (study.to_string(), t.trial_number, t.params.to_string()),
+                        );
+                        assert!(prev.is_none(), "trial {} issued twice", t.trial_id);
+                    }
+                    if rng.chance(0.3) {
+                        // Preempted: the instance vanishes mid-trial — no
+                        // tell, no fail, no deregister. A replacement
+                        // instance registers and carries on.
+                        preempt_events.fetch_add(1, Ordering::Relaxed);
+                        respawns += 1;
+                        let (nwid, _) = engine
+                            .register_worker(&format!("w{wi}-r{respawns}"), site, "sim-gpu")
+                            .unwrap();
+                        wid = nwid;
+                    } else {
+                        // A straggler race is possible by design: if this
+                        // worker's lease expired mid-trial, the trial may
+                        // already be re-assigned and told by its new
+                        // holder — then this tell 409s, which is fine.
+                        if engine.tell(t.trial_id, t.trial_number as f64).is_ok() {
+                            completed.lock().unwrap().insert(t.trial_id);
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+    for h in workers {
+        h.join().unwrap();
+    }
+
+    // Drain: let the abandoned leases expire, then hand every queued
+    // trial to a dedicated drain worker until nothing is left.
+    let (mut dw, _) = engine.register_worker("drain", "spot", "sim-gpu").unwrap();
+    let mut spins = 0;
+    loop {
+        engine.expire_leases();
+        if engine.worker_heartbeat(dw).is_err() {
+            let (ndw, _) = engine.register_worker("drain-r", "spot", "sim-gpu").unwrap();
+            dw = ndw;
+        }
+        if engine.fleet().lock().leases.queue_depth() > 0 {
+            for study in STUDIES {
+                loop {
+                    let t = match engine.ask(&ask_body_worker(study, dw)) {
+                        Ok(t) => t,
+                        Err(ApiError::Quota(_)) | Err(ApiError::Conflict(_)) => break,
+                        Err(e) => panic!("drain ask failed: {e}"),
+                    };
+                    if !t.requeued {
+                        // Fresh trial (this study's queue is empty):
+                        // record it, finish it, move on.
+                        issued.lock().unwrap().insert(
+                            t.trial_id,
+                            (study.to_string(), t.trial_number, t.params.to_string()),
+                        );
+                        if engine.tell(t.trial_id, 0.5).is_ok() {
+                            completed.lock().unwrap().insert(t.trial_id);
+                        }
+                        break;
+                    }
+                    if engine.tell(t.trial_id, 0.5).is_ok() {
+                        completed.lock().unwrap().insert(t.trial_id);
+                    }
+                }
+            }
+        }
+        let (depth, live) = {
+            let fl = engine.fleet().lock();
+            (fl.leases.queue_depth(), fl.leases.len())
+        };
+        if depth == 0 && live == 0 {
+            break;
+        }
+        spins += 1;
+        assert!(spins < 2000, "drain never converged: depth={depth} live={live}");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    stop_pump.store(true, Ordering::Relaxed);
+    pump.join().unwrap();
+
+    // --- zero permanently lost trials ------------------------------------
+    let issued = issued.lock().unwrap();
+    let completed = completed.lock().unwrap();
+    assert!(preempt_events.load(Ordering::Relaxed) > 0, "preemption never exercised");
+    assert!(
+        engine.metrics.fleet_trials_requeued.get() > 0,
+        "no lease-expiry requeue happened"
+    );
+    for (tid, (study, number, _)) in issued.iter() {
+        assert!(
+            completed.contains(tid),
+            "trial {tid} (study {study}, number {number}) was permanently lost"
+        );
+    }
+    // Nothing still running, nothing failed, nothing queued.
+    for sv in engine.studies_json().as_arr().unwrap() {
+        assert_eq!(sv.get("n_running").as_i64(), Some(0), "{sv}");
+        assert_eq!(sv.get("n_failed").as_i64(), Some(0), "{sv}");
+    }
+
+    // --- per-site quota never exceeded ------------------------------------
+    let stats = engine.stats_json();
+    let sites = stats.get("fleet").get("sites");
+    let mut seen_sites = 0;
+    for sv in sites.as_arr().unwrap() {
+        seen_sites += 1;
+        let peak = sv.get("peak").as_u64().unwrap();
+        assert!(
+            peak <= SITE_QUOTA as u64,
+            "site {} peaked at {peak} > quota {SITE_QUOTA}",
+            sv.get("site")
+        );
+    }
+    assert_eq!(seen_sites, 2, "{stats}");
+
+    // --- suggestion streams deterministic ---------------------------------
+    // Numbers are unique and contiguous per study, and each (number →
+    // params) pair matches a sequential engine that never saw a worker,
+    // a lease or a preemption.
+    for study in STUDIES {
+        let mut by_number: Vec<(u64, String)> = issued
+            .values()
+            .filter(|(s, _, _)| s == study)
+            .map(|(_, n, p)| (*n, p.clone()))
+            .collect();
+        by_number.sort();
+        let numbers: Vec<u64> = by_number.iter().map(|(n, _)| *n).collect();
+        assert_eq!(
+            numbers,
+            (0..by_number.len() as u64).collect::<Vec<_>>(),
+            "study {study}: numbers not contiguous"
+        );
+        let clean = Engine::in_memory(EngineConfig::default());
+        for (n, params) in &by_number {
+            let c = clean.ask(&ask_body(study)).unwrap();
+            assert_eq!(c.trial_number, *n);
+            assert_eq!(
+                &c.params.to_string(),
+                params,
+                "study {study} trial {n}: stream diverged from sequential run"
+            );
+        }
+    }
+}
+
+/// Fair share under contention: a greedy campaign that filled a site
+/// must yield slots to a newly arriving campaign as its trials finish.
+#[test]
+fn greedy_campaign_cannot_starve_a_site() {
+    let config = EngineConfig {
+        lease_timeout: Some(30.0),
+        site_quota: 4,
+        ..Default::default()
+    };
+    let e = Engine::in_memory(config);
+    let (w, _) = e.register_worker("w", "gpu-site", "a100").unwrap();
+    // Greedy campaign A fills the site.
+    let mut a_trials = Vec::new();
+    for _ in 0..4 {
+        a_trials.push(e.ask(&ask_body_worker("greedy", w)).unwrap());
+    }
+    assert!(matches!(
+        e.ask(&ask_body_worker("greedy", w)),
+        Err(ApiError::Quota(_))
+    ));
+    // Campaign B arrives: denied while the site is full, but now marked
+    // waiting.
+    assert!(matches!(
+        e.ask(&ask_body_worker("modest", w)),
+        Err(ApiError::Quota(_))
+    ));
+    // One greedy trial finishes. Greedy asks first — and is refused in
+    // favor of the waiter (fair share = ceil(4/2) = 2, greedy holds 3).
+    e.tell(a_trials.pop().unwrap().trial_id, 1.0).unwrap();
+    assert!(matches!(
+        e.ask(&ask_body_worker("greedy", w)),
+        Err(ApiError::Quota(_))
+    ));
+    let b = e.ask(&ask_body_worker("modest", w)).unwrap();
+    assert!(!b.requeued);
+    // The high-water mark never crossed the quota.
+    let stats = e.stats_json();
+    let peak = stats.get("fleet").get("sites").at(0).get("peak").as_u64().unwrap();
+    assert!(peak <= 4, "{stats}");
+    assert!(e.metrics.fleet_quota_denials.get() >= 3);
+}
+
+/// Property: whatever the issue/tell split, a lost worker's running
+/// trials are requeued exactly once, re-assigned in creation order with
+/// identical ids/numbers/params, and the study's suggestion stream is
+/// indistinguishable from a preemption-free sequential engine.
+#[test]
+fn prop_lost_workers_trials_reassigned_exactly_once() {
+    prop::check(10, |g| {
+        let shards = *g.choose(&[1usize, 4]);
+        let e = Engine::in_memory(EngineConfig {
+            n_shards: shards,
+            lease_timeout: Some(0.001),
+            requeue_max: 10,
+            ..Default::default()
+        });
+        let clean = Engine::in_memory(EngineConfig::default());
+        let n_trials = g.usize(1, 6);
+        let told = g.usize(0, n_trials);
+        let (w1, _) = e.register_worker("w1", "site", "gpu").map_err(|e| e.to_string())?;
+        let mut handles = Vec::new();
+        for _ in 0..n_trials {
+            handles.push(e.ask(&ask_body_worker("p", w1)).map_err(|e| e.to_string())?);
+        }
+        for (i, h) in handles.iter().take(told).enumerate() {
+            e.tell(h.trial_id, i as f64).map_err(|e| e.to_string())?;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+        let expired = e.expire_leases();
+        prop::assert_holds(
+            expired == n_trials - told,
+            format!("expired {expired}, expected {}", n_trials - told),
+        )?;
+        prop::assert_holds(e.expire_leases() == 0, "second expiry must be a no-op")?;
+        let (w2, _) = e.register_worker("w2", "site", "gpu").map_err(|e| e.to_string())?;
+        for h in handles.iter().skip(told) {
+            let q = e.ask(&ask_body_worker("p", w2)).map_err(|e| e.to_string())?;
+            prop::assert_holds(q.requeued, "expected a requeued trial")?;
+            prop::assert_holds(
+                q.trial_id == h.trial_id && q.trial_number == h.trial_number,
+                format!("re-assignment out of order: got {} want {}", q.trial_id, h.trial_id),
+            )?;
+            prop::assert_holds(
+                q.params.to_string() == h.params.to_string(),
+                "requeue changed the params",
+            )?;
+            e.tell(q.trial_id, 0.0).map_err(|e| e.to_string())?;
+        }
+        // The next ask is fresh and continues the number sequence.
+        let f = e.ask(&ask_body_worker("p", w2)).map_err(|e| e.to_string())?;
+        prop::assert_holds(
+            !f.requeued && f.trial_number == n_trials as u64,
+            format!("fresh trial got number {}", f.trial_number),
+        )?;
+        // Stream identical to a worker-less sequential engine.
+        for k in 0..=n_trials {
+            let c = clean.ask(&ask_body("p")).map_err(|e| e.to_string())?;
+            let want = if k < n_trials {
+                handles[k].params.to_string()
+            } else {
+                f.params.to_string()
+            };
+            prop::assert_holds(
+                c.params.to_string() == want,
+                format!("stream diverged at trial {k}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Requeued trials survive a server restart: the queue itself is
+/// durable (journaled `trial_requeue` records + the fleet segment).
+#[test]
+fn requeue_queue_survives_restart() {
+    use hopaas::testutil::TempDir;
+    let d = TempDir::new("fleet-requeue-restart");
+    let issued;
+    {
+        let e = Engine::open(
+            d.path(),
+            EngineConfig { lease_timeout: Some(0.01), ..Default::default() },
+        )
+        .unwrap();
+        let (w1, _) = e.register_worker("w1", "spot", "gpu").unwrap();
+        let r = e.ask(&ask_body_worker("rq", w1)).unwrap();
+        issued = (r.trial_id, r.trial_number, r.params.to_string());
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(e.expire_leases(), 1);
+        assert_eq!(e.fleet().lock().leases.queue_depth(), 1);
+    }
+    let e = Engine::open(
+        d.path(),
+        EngineConfig { lease_timeout: Some(60.0), ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(e.fleet().lock().leases.queue_depth(), 1, "queue lost in recovery");
+    let (w2, _) = e.register_worker("w2", "spot", "gpu").unwrap();
+    let q = e.ask(&ask_body_worker("rq", w2)).unwrap();
+    assert!(q.requeued);
+    assert_eq!((q.trial_id, q.trial_number, q.params.to_string()), issued);
+    e.tell(q.trial_id, 1.0).unwrap();
+}
