@@ -8,8 +8,10 @@
 
 use crate::coordinator::engine::EngineConfig;
 use crate::coordinator::service::HopaasConfig;
+use crate::fleet::QuotaPolicy;
 use crate::http::ServerConfig;
 use crate::json::Value;
+use std::collections::HashMap;
 use std::time::Duration;
 
 /// Parsed command line: subcommand + flags.
@@ -32,8 +34,8 @@ impl Args {
         }
         // Flags that never take a value (`--flag value` would otherwise
         // swallow a following positional).
-        const BOOLEAN: [&str; 6] =
-            ["no-auth", "help", "verbose", "quiet", "wal-batch-adaptive", "fleet"];
+        const BOOLEAN: [&str; 7] =
+            ["no-auth", "help", "verbose", "quiet", "wal-batch-adaptive", "fleet", "site-affinity"];
         while let Some(a) = it.next() {
             if let Some(stripped) = a.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
@@ -105,8 +107,16 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
     let mut replay_threads = 0u64;
     let mut lease_timeout = 60.0f64;
     let mut site_quota = 0u64;
+    let mut site_quota_map: HashMap<String, u32> = HashMap::new();
     let mut study_quota = 0u64;
+    let mut tenant_quota = 0u64;
+    let mut tenant_quota_map: HashMap<String, u32> = HashMap::new();
+    let mut fairness_horizon = 30.0f64;
+    let mut site_affinity = false;
     let mut requeue_max = 3u64;
+    let mut dead_worker_keep = 1024u64;
+    let mut site_idle_retention = 3600.0f64;
+    let mut backlog = 1024u64;
 
     // Layer 1: config file.
     if let Some(path) = args.get("config") {
@@ -156,11 +166,45 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
         if let Some(x) = v.get("site_quota").as_u64() {
             site_quota = x;
         }
+        if !v.get("site_quotas").is_null() {
+            site_quota_map = QuotaPolicy::map_from_json(v.get("site_quotas"))
+                .map_err(|e| format!("config {path}: site_quotas: {e}"))?;
+        }
         if let Some(x) = v.get("study_quota").as_u64() {
             study_quota = x;
         }
+        if let Some(x) = v.get("tenant_quota").as_u64() {
+            tenant_quota = x;
+        }
+        if !v.get("tenant_quotas").is_null() {
+            tenant_quota_map = QuotaPolicy::map_from_json(v.get("tenant_quotas"))
+                .map_err(|e| format!("config {path}: tenant_quotas: {e}"))?;
+        }
+        if let Some(x) = v.get("fairness_horizon").as_f64() {
+            fairness_horizon = x;
+        }
+        if let Value::Bool(b) = v.get("site_affinity") {
+            site_affinity = *b;
+        }
         if let Some(x) = v.get("requeue_max").as_u64() {
             requeue_max = x;
+        }
+        if let Some(x) = v.get("dead_worker_keep").as_u64() {
+            dead_worker_keep = x;
+        }
+        if let Some(x) = v.get("site_idle_retention").as_f64() {
+            site_idle_retention = x;
+        }
+        if let Some(x) = v.get("backlog").as_u64() {
+            backlog = x;
+        }
+        // File keys mirror the flag names: accept the http_-prefixed
+        // spellings too ("workers"/"backlog" stay as legacy keys).
+        if let Some(x) = v.get("http_workers").as_u64() {
+            workers = x;
+        }
+        if let Some(x) = v.get("http_backlog").as_u64() {
+            backlog = x;
         }
     }
 
@@ -194,8 +238,27 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
     replay_threads = args.get_u64("replay-threads", replay_threads);
     lease_timeout = args.get_f64("lease-timeout", lease_timeout);
     site_quota = args.get_u64("site-quota", site_quota);
+    if let Some(spec) = args.get("site-quota-map") {
+        site_quota_map =
+            QuotaPolicy::parse_map(spec).map_err(|e| format!("--site-quota-map: {e}"))?;
+    }
     study_quota = args.get_u64("study-quota", study_quota);
+    tenant_quota = args.get_u64("tenant-quota", tenant_quota);
+    if let Some(spec) = args.get("tenant-quota-map") {
+        tenant_quota_map =
+            QuotaPolicy::parse_map(spec).map_err(|e| format!("--tenant-quota-map: {e}"))?;
+    }
+    fairness_horizon = args.get_f64("fairness-horizon", fairness_horizon);
+    if args.get("site-affinity").is_some() {
+        site_affinity = args.get_bool("site-affinity");
+    }
     requeue_max = args.get_u64("requeue-max", requeue_max);
+    dead_worker_keep = args.get_u64("dead-worker-keep", dead_worker_keep);
+    site_idle_retention = args.get_f64("site-idle-retention", site_idle_retention);
+    // `--http-workers` is the explicit name for the connection-pool
+    // size; `--workers` stays as the historical alias.
+    workers = args.get_u64("http-workers", workers);
+    backlog = args.get_u64("http-backlog", backlog);
 
     let config = HopaasConfig {
         engine: EngineConfig {
@@ -209,13 +272,20 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
             wal_batch_adaptive,
             lease_timeout: if lease_timeout > 0.0 { Some(lease_timeout) } else { None },
             site_quota: site_quota as u32,
+            site_quota_map,
             study_quota: study_quota as u32,
+            tenant_quota: tenant_quota as u32,
+            tenant_quota_map,
+            fairness_horizon: fairness_horizon.max(1.0),
+            site_affinity,
             requeue_max: requeue_max as u32,
+            dead_worker_keep: dead_worker_keep as usize,
+            site_idle_retention: site_idle_retention.max(1.0),
         },
         http: ServerConfig {
             workers: workers as usize,
             read_timeout: Duration::from_secs(args.get_u64("read-timeout", 30)),
-            backlog: 1024,
+            backlog: backlog.max(1) as usize,
         },
         auth_required: auth,
         secret: secret.into_bytes(),
@@ -347,5 +417,106 @@ mod tests {
     fn bad_config_file_errors() {
         let a = args("serve --config /nope/nope.json");
         assert!(server_config(&a).is_err());
+    }
+
+    #[test]
+    fn quota_policy_flags_layer_into_engine_config() {
+        let a = args("serve");
+        let (_, cfg) = server_config(&a).unwrap();
+        assert!(cfg.engine.site_quota_map.is_empty());
+        assert_eq!(cfg.engine.tenant_quota, 0);
+        assert_eq!(cfg.engine.fairness_horizon, 30.0);
+        assert!(!cfg.engine.site_affinity);
+        assert_eq!(cfg.engine.dead_worker_keep, 1024);
+        assert_eq!(cfg.engine.site_idle_retention, 3600.0);
+        let a = args(
+            "serve --site-quota 2 --site-quota-map marconi100=64,private=1 \
+             --tenant-quota 4 --tenant-quota-map alice=8 --fairness-horizon 5 \
+             --site-affinity --dead-worker-keep 64 --site-idle-retention 120",
+        );
+        let (_, cfg) = server_config(&a).unwrap();
+        assert_eq!(cfg.engine.site_quota, 2);
+        assert_eq!(cfg.engine.site_quota_map.get("marconi100"), Some(&64));
+        assert_eq!(cfg.engine.site_quota_map.get("private"), Some(&1));
+        assert_eq!(cfg.engine.tenant_quota, 4);
+        assert_eq!(cfg.engine.tenant_quota_map.get("alice"), Some(&8));
+        assert_eq!(cfg.engine.fairness_horizon, 5.0);
+        assert!(cfg.engine.site_affinity);
+        assert_eq!(cfg.engine.dead_worker_keep, 64);
+        assert_eq!(cfg.engine.site_idle_retention, 120.0);
+        // Malformed maps are a config error, not a silent policy hole.
+        let a = args("serve --site-quota-map marconi100");
+        assert!(server_config(&a).is_err());
+        let a = args("serve --tenant-quota-map alice=lots");
+        assert!(server_config(&a).is_err());
+    }
+
+    #[test]
+    fn quota_policy_config_file_keys() {
+        let d = TempDir::new("config-policy");
+        let p = d.path().join("hopaas.json");
+        std::fs::write(
+            &p,
+            r#"{"site_quota": 2, "site_quotas": {"hpc": 64}, "tenant_quota": 3,
+                "tenant_quotas": {"alice": 9}, "fairness_horizon": 12.5,
+                "site_affinity": true, "dead_worker_keep": 10,
+                "site_idle_retention": 60.0, "backlog": 16}"#,
+        )
+        .unwrap();
+        let a = args(&format!("serve --config {}", p.display()));
+        let (_, cfg) = server_config(&a).unwrap();
+        assert_eq!(cfg.engine.site_quota, 2);
+        assert_eq!(cfg.engine.site_quota_map.get("hpc"), Some(&64));
+        assert_eq!(cfg.engine.tenant_quota, 3);
+        assert_eq!(cfg.engine.tenant_quota_map.get("alice"), Some(&9));
+        assert_eq!(cfg.engine.fairness_horizon, 12.5);
+        assert!(cfg.engine.site_affinity);
+        assert_eq!(cfg.engine.dead_worker_keep, 10);
+        assert_eq!(cfg.engine.site_idle_retention, 60.0);
+        assert_eq!(cfg.http.backlog, 16);
+        // CLI overrides the file, map flags replace file maps wholesale.
+        let a = args(&format!(
+            "serve --config {} --tenant-quota 5 --site-quota-map hpc=1",
+            p.display()
+        ));
+        let (_, cfg) = server_config(&a).unwrap();
+        assert_eq!(cfg.engine.tenant_quota, 5);
+        assert_eq!(cfg.engine.site_quota_map.get("hpc"), Some(&1));
+        // A malformed file map is a config error, mirroring the flags.
+        let bad = d.path().join("bad.json");
+        std::fs::write(&bad, r#"{"site_quotas": {"hpc": "lots"}}"#).unwrap();
+        let a = args(&format!("serve --config {}", bad.display()));
+        assert!(server_config(&a).is_err());
+        // The http_-prefixed file keys mirror the flags; legacy
+        // workers/backlog keys still work (tested above).
+        let http = d.path().join("http.json");
+        std::fs::write(&http, r#"{"http_workers": 6, "http_backlog": 12}"#).unwrap();
+        let a = args(&format!("serve --config {}", http.display()));
+        let (_, cfg) = server_config(&a).unwrap();
+        assert_eq!(cfg.http.workers, 6);
+        assert_eq!(cfg.http.backlog, 12);
+    }
+
+    #[test]
+    fn http_pool_flags() {
+        let a = args("serve");
+        let (_, cfg) = server_config(&a).unwrap();
+        assert_eq!(cfg.http.workers, 128);
+        assert_eq!(cfg.http.backlog, 1024);
+        // --http-workers is the explicit spelling; --workers still works
+        // and --http-workers wins when both are given.
+        let a = args("serve --http-workers 4 --http-backlog 8");
+        let (_, cfg) = server_config(&a).unwrap();
+        assert_eq!(cfg.http.workers, 4);
+        assert_eq!(cfg.http.backlog, 8);
+        let a = args("serve --workers 16 --http-workers 2");
+        let (_, cfg) = server_config(&a).unwrap();
+        assert_eq!(cfg.http.workers, 2);
+        // Degenerate backlog clamps to 1 (a 0-capacity rendezvous queue
+        // would shed every connection that arrives while all workers
+        // are mid-request).
+        let a = args("serve --http-backlog 0");
+        let (_, cfg) = server_config(&a).unwrap();
+        assert_eq!(cfg.http.backlog, 1);
     }
 }

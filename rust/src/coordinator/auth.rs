@@ -47,6 +47,32 @@ pub struct Claims {
     pub expires_at: f64,
 }
 
+impl Claims {
+    /// The tenant identity behind this token — the quota-policy key for
+    /// per-tenant admission limits. Tokens are per-user ("issued through
+    /// the web UI after an OAuth2 login", §3), so the `user` claim *is*
+    /// the tenant: every token carrying the same user shares one budget,
+    /// and the per-token `uid` is deliberately not used (re-minting a
+    /// token for the same user cannot reset headroom). Empty-user tokens
+    /// map to no tenant and are never tenant-limited.
+    ///
+    /// Tenant isolation is exactly as strong as the *issuance* policy:
+    /// this reproduction's `POST /api/token` mints tokens for any
+    /// requested user with no credential (the paper's OAuth2 web flow is
+    /// out of scope), so a caller who can reach the token endpoint can
+    /// mint fresh identities and sidestep per-tenant caps. Production
+    /// deployments must front token issuance with real authentication
+    /// for tenant quotas to be an enforcement boundary rather than an
+    /// accounting convention.
+    pub fn tenant(&self) -> Option<&str> {
+        if self.user.is_empty() {
+            None
+        } else {
+            Some(&self.user)
+        }
+    }
+}
+
 /// Token issuer + validator.
 pub struct TokenService {
     secret: Vec<u8>,
@@ -220,6 +246,19 @@ mod tests {
         let s = svc();
         let tok = s.issue("x", 0.0, 1.0);
         assert!(tok.chars().all(|c| c.is_ascii_hexdigit() || c == '.'));
+    }
+
+    #[test]
+    fn tenant_is_the_user_claim_across_tokens() {
+        let s = svc();
+        let c1 = s.validate(&s.issue("alice", 0.0, 10.0), 0.0).unwrap();
+        let c2 = s.validate(&s.issue("alice", 0.0, 10.0), 0.0).unwrap();
+        // Two distinct tokens (distinct uids) share one tenant budget.
+        assert_ne!(c1.uid, c2.uid);
+        assert_eq!(c1.tenant(), Some("alice"));
+        assert_eq!(c1.tenant(), c2.tenant());
+        let anon = s.validate(&s.issue("", 0.0, 10.0), 0.0).unwrap();
+        assert_eq!(anon.tenant(), None, "empty user is tenant-less");
     }
 
     #[test]

@@ -108,13 +108,34 @@ pub struct EngineConfig {
     /// a worker silent past it is lost — its running trials requeue.
     /// `None` disables lease expiry.
     pub lease_timeout: Option<f64>,
-    /// Max concurrently leased trials per site (0 = unlimited).
+    /// Default max concurrently leased trials per site (0 = unlimited).
     pub site_quota: u32,
+    /// Per-site quota overrides (`site → quota`; explicit 0 = unlimited
+    /// for that site), beating `site_quota`.
+    pub site_quota_map: HashMap<String, u32>,
     /// Max concurrently leased trials per study (0 = unlimited).
     pub study_quota: u32,
+    /// Default max concurrently leased trials per tenant — the identity
+    /// behind the auth token on the ask (0 = unlimited).
+    pub tenant_quota: u32,
+    /// Per-tenant quota overrides (`tenant → quota`).
+    pub tenant_quota_map: HashMap<String, u32>,
+    /// Seconds a fair-share *waiting* mark lives: an abandoned denied
+    /// campaign stops deflating other studies' share after this long.
+    /// Also the grace before site affinity stops deferring a queued
+    /// trial to healthier sites.
+    pub fairness_horizon: f64,
+    /// Prefer healthier sites when handing out requeued trials.
+    pub site_affinity: bool,
     /// Times a trial may lose its worker and be requeued before the
     /// engine fails it for good.
     pub requeue_max: u32,
+    /// Retired workers kept for attribution before the fleet GC drops
+    /// them (`--dead-worker-keep`).
+    pub dead_worker_keep: usize,
+    /// Idle-site eviction window for the fleet GC, seconds
+    /// (`--site-idle-retention`).
+    pub site_idle_retention: f64,
 }
 
 impl Default for EngineConfig {
@@ -130,8 +151,15 @@ impl Default for EngineConfig {
             wal_batch_adaptive: true,
             lease_timeout: Some(60.0),
             site_quota: 0,
+            site_quota_map: HashMap::new(),
             study_quota: 0,
+            tenant_quota: 0,
+            tenant_quota_map: HashMap::new(),
+            fairness_horizon: 30.0,
+            site_affinity: false,
             requeue_max: 3,
+            dead_worker_keep: 1024,
+            site_idle_retention: 3600.0,
         }
     }
 }
@@ -250,9 +278,18 @@ impl Engine {
         let n = config.n_shards.max(1);
         let fleet_config = FleetConfig {
             lease_timeout: config.lease_timeout,
-            site_quota: config.site_quota,
-            study_quota: config.study_quota,
             requeue_max: config.requeue_max,
+            dead_worker_keep: config.dead_worker_keep,
+            site_idle_retention: config.site_idle_retention,
+            policy: crate::fleet::QuotaPolicy {
+                site_quota: config.site_quota,
+                site_quotas: config.site_quota_map.clone(),
+                study_quota: config.study_quota,
+                tenant_quota: config.tenant_quota,
+                tenant_quotas: config.tenant_quota_map.clone(),
+                fairness_horizon: config.fairness_horizon,
+                site_affinity: config.site_affinity,
+            },
         };
         Engine {
             shards: (0..n).map(|_| Shard::new()).collect(),
@@ -473,7 +510,14 @@ impl Engine {
                     v.get("worker_id").as_u64(),
                     v.get("study_key").as_str(),
                 ) {
-                    fl.apply_bind(tid, wid, key, v.get("at").as_f64().unwrap_or(0.0));
+                    fl.apply_bind(
+                        tid,
+                        wid,
+                        key,
+                        v.get("site").as_str().unwrap_or(""),
+                        v.get("tenant").as_str(),
+                        v.get("at").as_f64().unwrap_or(0.0),
+                    );
                 }
             }
             "trial_requeue" => {
@@ -539,28 +583,50 @@ impl Engine {
     /// draw distinct numbers or they would draw identical suggestions.
     /// The shard lock is re-taken only to insert the trial record.
     pub fn ask(&self, body: &Value) -> Result<AskReply, ApiError> {
+        self.ask_as(body, None)
+    }
+
+    /// `ask` with the caller's tenant identity (the `user` claim of the
+    /// auth token presented on the request; `None` for unauthenticated
+    /// or legacy callers). Tenant quotas bind leases, so they apply to
+    /// worker-bound asks — the only ones that hold fleet slots.
+    pub fn ask_as(&self, body: &Value, tenant: Option<&str>) -> Result<AskReply, ApiError> {
         let (def, node) = parse_ask_body(body).map_err(ApiError::BadRequest)?;
         let worker = body.get("worker").as_u64();
         let now = self.now();
         let key = def.key();
         // Fleet admission: a worker-bound ask reserves a scheduling slot
-        // (site + study quotas, fair share) before any sampling work.
-        // The slot becomes a lease on success and is returned on error.
+        // (site + study + tenant quotas, fair share) before any sampling
+        // work. The slot becomes a lease on success and is returned on
+        // error. `admit` hands back the site the slot was counted under;
+        // it is threaded through to the bind (or the cancel) so the
+        // ledger stays exact even if the worker is GC'd mid-ask.
+        let mut admitted_site: Option<String> = None;
         if let Some(wid) = worker {
-            match self.fleet.lock().admit(wid, &key, now, &self.fleet.config) {
-                Ok(()) => {}
+            match self.fleet.lock().admit(wid, &key, tenant, now, &self.fleet.config) {
+                Ok(site) => admitted_site = Some(site),
                 Err(e) => {
                     if matches!(e, ApiError::Quota(_)) {
                         self.metrics.fleet_quota_denials.inc();
+                        // Only tenant-*rule* denials feed the per-tenant
+                        // series: a tenanted ask refused on site capacity
+                        // is site back-pressure, not a tenant budget
+                        // problem.
+                        if let Some(t) = tenant {
+                            if crate::fleet::scheduler::is_tenant_denial(&e) {
+                                self.metrics.inc_tenant_denial(t);
+                            }
+                        }
                     }
                     return Err(e);
                 }
             }
         }
-        let result = self.ask_admitted(def, node, now, &key, worker);
+        let result =
+            self.ask_admitted(def, node, now, &key, worker, tenant, admitted_site.as_deref());
         if result.is_err() {
-            if let Some(wid) = worker {
-                self.fleet.lock().cancel_admission(wid, &key);
+            if let Some(site) = &admitted_site {
+                self.fleet.lock().cancel_admission(site, &key, tenant);
             }
         }
         result
@@ -570,6 +636,7 @@ impl Engine {
     /// a requeued trial of the study when one is waiting — re-homing it
     /// with its original id, number and parameters — and samples a new
     /// trial otherwise.
+    #[allow(clippy::too_many_arguments)]
     fn ask_admitted(
         &self,
         def: StudyDef,
@@ -577,15 +644,19 @@ impl Engine {
         now: f64,
         key: &str,
         worker: Option<u64>,
+        tenant: Option<&str>,
+        site: Option<&str>,
     ) -> Result<AskReply, ApiError> {
         if let Some(wid) = worker {
-            if let Some(reply) = self.assign_requeued(key, wid, now)? {
+            if let Some(reply) =
+                self.assign_requeued(key, wid, tenant, site.unwrap_or(""), now)?
+            {
                 return Ok(reply);
             }
         }
         let key = key.to_string();
         if def.is_mo() {
-            return self.ask_mo(def, node, now, key, worker);
+            return self.ask_mo(def, node, now, key, worker, tenant, site);
         }
         let sampler = make_sampler(&def.sampler).map_err(ApiError::BadRequest)?;
         let shard_idx = self.shard_of(&key);
@@ -625,7 +696,10 @@ impl Engine {
             // gate → shard → fleet); held only for worker-bound asks.
             let _bind_gate = worker.map(|_| self.fleet_bind_gate.read().unwrap());
             let mut guard = self.lock_shard(shard_idx);
-            self.insert_trial(&mut guard, shard_idx, slot, trial_number, params, now, node, worker)?
+            self.insert_trial(
+                &mut guard, shard_idx, slot, trial_number, params, now, node, worker, tenant,
+                site,
+            )?
         };
 
         self.metrics.trials_created.inc();
@@ -640,6 +714,7 @@ impl Engine {
     /// objective *vectors*. Default sampler name "tpe" (the protocol
     /// default) is interpreted as "nsga2" for MO studies; random/grid/
     /// qmc work as-is; gp/cmaes are single-objective only.
+    #[allow(clippy::too_many_arguments)]
     fn ask_mo(
         &self,
         def: StudyDef,
@@ -647,6 +722,8 @@ impl Engine {
         now: f64,
         key: String,
         worker: Option<u64>,
+        tenant: Option<&str>,
+        site: Option<&str>,
     ) -> Result<AskReply, ApiError> {
         use super::samplers::nsga2::{MoObs, Nsga2Sampler};
         let directions = def.directions.clone().expect("mo study");
@@ -702,7 +779,10 @@ impl Engine {
         let reply = {
             let _bind_gate = worker.map(|_| self.fleet_bind_gate.read().unwrap());
             let mut guard = self.lock_shard(shard_idx);
-            self.insert_trial(&mut guard, shard_idx, slot, trial_number, params, now, node, worker)?
+            self.insert_trial(
+                &mut guard, shard_idx, slot, trial_number, params, now, node, worker, tenant,
+                site,
+            )?
         };
         self.metrics.trials_created.inc();
         self.metrics.ask_total.inc();
@@ -729,6 +809,8 @@ impl Engine {
         now: f64,
         node: Option<String>,
         worker: Option<u64>,
+        tenant: Option<&str>,
+        site: Option<&str>,
     ) -> Result<AskReply, ApiError> {
         let trial_id = self.next_trial_id.fetch_add(1, Ordering::Relaxed);
         let trial = Trial::new(trial_id, trial_number, params, now, node);
@@ -747,9 +829,16 @@ impl Engine {
         // bind it did not snapshot.
         let mut records = vec![Record::new("trial_new", ev).with_shard(shard_idx as u32)];
         if let Some(wid) = worker {
+            // The admission keys (the site `admit` counted, the tenant)
+            // ride the record so recovery rebuilds per-site/per-tenant
+            // counters exactly as live.
+            let site = site.unwrap_or("");
             records.push(
-                Record::new("lease_bind", Self::lease_bind_payload(trial_id, wid, &study_key, now))
-                    .with_shard(FLEET_SHARD),
+                Record::new(
+                    "lease_bind",
+                    Self::lease_bind_payload(trial_id, wid, &study_key, site, tenant, now),
+                )
+                .with_shard(FLEET_SHARD),
             );
         }
         self.persist_many(records)?;
@@ -760,7 +849,9 @@ impl Engine {
         self.router.insert(trial_id, shard_idx);
         if let Some(wid) = worker {
             // Shard lock is held; the fleet lock is a leaf below it.
-            self.fleet.lock().bind(trial_id, wid, &study_key, now);
+            self.fleet
+                .lock()
+                .bind(trial_id, wid, &study_key, site.unwrap_or(""), tenant, now);
         }
         self.shard_metrics_update(shard_idx, state);
         let study = &state.studies[slot];
@@ -774,12 +865,22 @@ impl Engine {
         })
     }
 
-    /// Payload of a `lease_bind` record.
-    fn lease_bind_payload(trial_id: u64, worker_id: u64, study_key: &str, now: f64) -> Value {
+    /// Payload of a `lease_bind` record. Carries the admission keys
+    /// (site, tenant) so recovery rebuilds quota counters exactly.
+    fn lease_bind_payload(
+        trial_id: u64,
+        worker_id: u64,
+        study_key: &str,
+        site: &str,
+        tenant: Option<&str>,
+        now: f64,
+    ) -> Value {
         let mut o = Value::obj();
         o.set("trial_id", trial_id)
             .set("worker_id", worker_id)
             .set("study_key", study_key)
+            .set("site", site)
+            .set("tenant", tenant.map(str::to_string))
             .set("at", now);
         Value::Obj(o)
     }
@@ -789,12 +890,35 @@ impl Engine {
     /// number and parameters — the suggestion stream is untouched. The
     /// caller has already admitted the worker; the admission slot
     /// becomes the new lease.
+    ///
+    /// With site affinity enabled, a worker on a site whose preemption
+    /// rate is above the fleet mean is *deferred*: it gets a fresh trial
+    /// instead of the queue head, leaving the old trial for a healthier
+    /// site — until the head has waited a full fairness horizon, after
+    /// which any site may take it (affinity is a preference, never a
+    /// starvation). Because the handed-out trial keeps its identity and
+    /// fresh trials draw from the untouched number reservation, the
+    /// suggestion stream is byte-identical with affinity on or off.
     fn assign_requeued(
         &self,
         study_key: &str,
         worker: u64,
+        tenant: Option<&str>,
+        site: &str,
         now: f64,
     ) -> Result<Option<AskReply>, ApiError> {
+        if self.fleet.config.policy.site_affinity {
+            let fl = self.fleet.lock();
+            if !fl.sched.site_preferred(site) {
+                let grace = self.fleet.config.policy.fairness_horizon.max(0.0);
+                if let Some(wait) = fl.leases.head_wait(study_key, now) {
+                    if wait < grace {
+                        self.metrics.fleet_affinity_deferrals.inc();
+                        return Ok(None);
+                    }
+                }
+            }
+        }
         loop {
             // The bind gate covers the whole pop → persist → bind (or
             // push-back) window: a fleet segment cut (the gate's write
@@ -825,16 +949,16 @@ impl Engine {
             }
             let record = Record::new(
                 "lease_bind",
-                Self::lease_bind_payload(trial_id, worker, study_key, now),
+                Self::lease_bind_payload(trial_id, worker, study_key, site, tenant, now),
             )
             .with_shard(FLEET_SHARD);
             if let Err(e) = self.persist(record) {
                 // Not handed out: back to the head of the queue.
-                self.fleet.lock().leases.push_front(study_key, trial_id);
+                self.fleet.lock().leases.push_front(study_key, trial_id, now);
                 return Err(e);
             }
             state.last_seen.insert(trial_id, now);
-            self.fleet.lock().bind(trial_id, worker, study_key, now);
+            self.fleet.lock().bind(trial_id, worker, study_key, site, tenant, now);
             let study = &state.studies[si];
             let trial = &study.trials[ti];
             let reply = AskReply {
@@ -1298,12 +1422,15 @@ impl Engine {
         // per respawn and sites are client-supplied strings — dead
         // workers and long-idle sites would otherwise accumulate
         // forever in memory, the fleet segment and this very sweep.
-        const DEAD_WORKER_RETENTION: usize = 1024;
-        const IDLE_SITE_RETENTION_SECS: f64 = 3600.0;
+        // Both retentions are operator knobs (`--dead-worker-keep`,
+        // `--site-idle-retention`); waiting marks expire on the much
+        // shorter fairness horizon, the same clock admission uses.
         {
+            let cfg = &self.fleet.config;
             let mut fl = self.fleet.lock();
-            fl.registry.gc_dead(DEAD_WORKER_RETENTION);
-            fl.sched.gc_idle(now, IDLE_SITE_RETENTION_SECS);
+            fl.registry.gc_dead(cfg.dead_worker_keep);
+            fl.sched
+                .gc_idle(now, cfg.site_idle_retention, cfg.policy.fairness_horizon.max(1.0));
         }
         handled
     }
@@ -1330,6 +1457,7 @@ impl Engine {
         if info.worker != expected_worker {
             return None; // re-homed already
         }
+        let lease_site = info.site.clone();
         if fl.leases.requeues(trial_id) < self.config.requeue_max {
             let ev = {
                 let mut o = Value::obj();
@@ -1344,7 +1472,7 @@ impl Engine {
             {
                 return None;
             }
-            let requeued = fl.requeue(trial_id, expected_worker);
+            let requeued = fl.requeue(trial_id, expected_worker, now);
             debug_assert!(requeued, "lease checked under this lock");
             // Give the queued trial a fresh reap window: it is waiting
             // for a worker, not abandoned.
@@ -1367,6 +1495,10 @@ impl Engine {
             }
             let _ = state.studies[si].trials[ti].fail(now);
             state.last_seen.remove(&trial_id);
+            // The budget-exhausting loss still counts against the
+            // site's health ledger (with `--requeue-max 0` it is the
+            // *only* loss signal affinity would ever see).
+            fl.sched.note_loss(&lease_site);
             fl.finish_trial(trial_id, &study_key);
             drop(fl);
             self.shard_metrics_update(shard_idx, state);
@@ -1772,6 +1904,13 @@ impl Engine {
                 .map(|(site, n)| (site, n as f64))
                 .collect();
             *self.metrics.site_leases.lock().unwrap() = loads;
+            let tenants: Vec<(String, f64)> = fl
+                .sched
+                .tenant_loads()
+                .into_iter()
+                .map(|(tenant, n)| (tenant, n as f64))
+                .collect();
+            *self.metrics.tenant_leases.lock().unwrap() = tenants;
         }
     }
 

@@ -168,12 +168,18 @@ pub struct Metrics {
     /// Failed auto-compaction attempts (snapshot write errors).
     pub compact_failures: Counter,
     /// Fleet counters: registrations, lost workers, lease-expiry
-    /// requeues, requeued-trial re-assignments, quota denials (429s).
+    /// requeues, requeued-trial re-assignments, quota denials (429s),
+    /// affinity deferrals (requeued handouts held back for a healthier
+    /// site).
     pub fleet_workers_registered: Counter,
     pub fleet_workers_lost: Counter,
     pub fleet_trials_requeued: Counter,
     pub fleet_trials_reassigned: Counter,
     pub fleet_quota_denials: Counter,
+    pub fleet_affinity_deferrals: Counter,
+    /// Per-tenant 429 attribution (labeled counter; tenants are dynamic
+    /// strings from token claims, so the series set grows with use).
+    pub tenant_denials: Mutex<std::collections::BTreeMap<String, u64>>,
     pub wal_records: Gauge,
     /// Group-commit batches flushed (== fsync count under load).
     pub wal_commit_batches: Gauge,
@@ -203,6 +209,9 @@ pub struct Metrics {
     /// Per-site active lease counts (labeled series; sites are dynamic
     /// strings, so a scrape-time snapshot replaces the whole vector).
     pub site_leases: Mutex<Vec<(String, f64)>>,
+    /// Per-tenant active lease counts (`hopaas_tenant_leases`), same
+    /// scrape-time snapshot discipline as `site_leases`.
+    pub tenant_leases: Mutex<Vec<(String, f64)>>,
     pub ask_latency: Histogram,
     pub tell_latency: Histogram,
     pub should_prune_latency: Histogram,
@@ -238,6 +247,8 @@ impl Metrics {
             fleet_trials_requeued: Counter::default(),
             fleet_trials_reassigned: Counter::default(),
             fleet_quota_denials: Counter::default(),
+            fleet_affinity_deferrals: Counter::default(),
+            tenant_denials: Mutex::new(std::collections::BTreeMap::new()),
             wal_records: Gauge::default(),
             wal_commit_batches: Gauge::default(),
             wal_commit_records: Gauge::default(),
@@ -253,6 +264,7 @@ impl Metrics {
             fleet_leases: Gauge::default(),
             fleet_requeue_depth: Gauge::default(),
             site_leases: Mutex::new(Vec::new()),
+            tenant_leases: Mutex::new(Vec::new()),
             ask_latency: Histogram::new(default_latency_bounds()),
             tell_latency: Histogram::new(default_latency_bounds()),
             should_prune_latency: Histogram::new(default_latency_bounds()),
@@ -260,10 +272,25 @@ impl Metrics {
         }
     }
 
+    /// Count a tenant-attributed quota denial (labeled 429 series).
+    /// Tenant names are client-influenced (token claims, or the body
+    /// field on `--no-auth` servers), so the series set is bounded:
+    /// past the cap, new tenants aggregate into an `_other` bucket
+    /// instead of growing memory and scrape cardinality forever.
+    pub fn inc_tenant_denial(&self, tenant: &str) {
+        const MAX_TENANT_SERIES: usize = 1024;
+        let mut m = self.tenant_denials.lock().unwrap();
+        if m.len() >= MAX_TENANT_SERIES && !m.contains_key(tenant) {
+            *m.entry("_other".to_string()).or_insert(0) += 1;
+            return;
+        }
+        *m.entry(tenant.to_string()).or_insert(0) += 1;
+    }
+
     /// Render Prometheus text exposition format.
     pub fn render(&self) -> String {
         let mut out = String::with_capacity(4096);
-        let counters: [(&str, &Counter); 17] = [
+        let counters: [(&str, &Counter); 18] = [
             ("hopaas_ask_total", &self.ask_total),
             ("hopaas_tell_total", &self.tell_total),
             ("hopaas_should_prune_total", &self.should_prune_total),
@@ -281,9 +308,22 @@ impl Metrics {
             ("hopaas_fleet_trials_requeued_total", &self.fleet_trials_requeued),
             ("hopaas_fleet_trials_reassigned_total", &self.fleet_trials_reassigned),
             ("hopaas_fleet_quota_denials_total", &self.fleet_quota_denials),
+            ("hopaas_fleet_affinity_deferrals_total", &self.fleet_affinity_deferrals),
         ];
         for (name, c) in counters {
             out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
+        }
+        {
+            let tenants = self.tenant_denials.lock().unwrap();
+            if !tenants.is_empty() {
+                out.push_str("# TYPE hopaas_tenant_quota_denials_total counter\n");
+                for (tenant, n) in tenants.iter() {
+                    let tenant = escape_label(tenant);
+                    out.push_str(&format!(
+                        "hopaas_tenant_quota_denials_total{{tenant=\"{tenant}\"}} {n}\n"
+                    ));
+                }
+            }
         }
         out.push_str(&format!(
             "# TYPE hopaas_wal_records gauge\nhopaas_wal_records {}\n",
@@ -316,6 +356,18 @@ impl Metrics {
                     // it would corrupt the whole scrape.
                     let site = escape_label(site);
                     out.push_str(&format!("hopaas_site_leases{{site=\"{site}\"}} {n}\n"));
+                }
+            }
+        }
+        {
+            let tenants = self.tenant_leases.lock().unwrap();
+            if !tenants.is_empty() {
+                out.push_str("# TYPE hopaas_tenant_leases gauge\n");
+                for (tenant, n) in tenants.iter() {
+                    // Tenant names come from token claims: escape them
+                    // like site labels.
+                    let tenant = escape_label(tenant);
+                    out.push_str(&format!("hopaas_tenant_leases{{tenant=\"{tenant}\"}} {n}\n"));
                 }
             }
         }
@@ -446,6 +498,46 @@ mod tests {
         assert!(text.contains("hopaas_site_leases{site=\"a\\\"b\\nc\\\\d\"} 1"));
         // No site series while the fleet is empty.
         assert!(!Metrics::default().render().contains("hopaas_site_leases"));
+    }
+
+    #[test]
+    fn tenant_series_rendered() {
+        let m = Metrics::default();
+        m.inc_tenant_denial("alice");
+        m.inc_tenant_denial("alice");
+        m.inc_tenant_denial("b\"ob");
+        m.fleet_affinity_deferrals.inc();
+        *m.tenant_leases.lock().unwrap() = vec![("alice".into(), 3.0)];
+        let text = m.render();
+        assert!(text.contains("hopaas_tenant_quota_denials_total{tenant=\"alice\"} 2"));
+        assert!(text.contains("hopaas_tenant_quota_denials_total{tenant=\"b\\\"ob\"} 1"));
+        assert!(text.contains("hopaas_tenant_leases{tenant=\"alice\"} 3"));
+        assert!(text.contains("hopaas_fleet_affinity_deferrals_total 1"));
+        // No tenant series while nothing tenant-scoped happened.
+        let empty = Metrics::default().render();
+        assert!(!empty.contains("hopaas_tenant_quota_denials_total{"));
+        assert!(!empty.contains("hopaas_tenant_leases{"));
+    }
+
+    #[test]
+    fn tenant_denial_series_bounded() {
+        let m = Metrics::default();
+        // Fill the series cap, then overflow: hostile/unique tenant
+        // names past the cap land in the `_other` bucket.
+        for i in 0..1024 {
+            m.inc_tenant_denial(&format!("t{i}"));
+        }
+        m.inc_tenant_denial("fresh-1");
+        m.inc_tenant_denial("fresh-2");
+        m.inc_tenant_denial("t0"); // existing keys still count normally
+        {
+            let map = m.tenant_denials.lock().unwrap();
+            assert_eq!(map.get("_other"), Some(&2));
+            assert_eq!(map.get("t0"), Some(&2));
+            assert!(map.get("fresh-1").is_none());
+            assert!(map.len() <= 1025, "bounded at cap + overflow bucket");
+        }
+        assert!(m.render().contains("hopaas_tenant_quota_denials_total{tenant=\"_other\"} 2"));
     }
 
     #[test]

@@ -28,7 +28,7 @@
 //! unknown trials 404, state conflicts 409, malformed bodies 400/422 —
 //! the mapping HOPAAS clients are written against.
 
-use super::auth::TokenService;
+use super::auth::{Claims, TokenService};
 use super::engine::{ApiError, Engine, EngineConfig};
 use crate::http::{PathParams, Request, Response, Router, Server, ServerConfig, ServerHandle};
 use crate::json::Value;
@@ -130,39 +130,56 @@ pub fn build_router(
 
     router.get("/healthz", |_, _| Response::text("ok"));
 
-    // --- auth helper ----------------------------------------------------
-    let check = {
+    // --- auth helpers ---------------------------------------------------
+    // One validation path for every route: `authenticate` yields the
+    // caller's claims (None with auth disabled) or the 401; `check` is
+    // the validity-only view most routes use.
+    let authenticate = {
         let tokens = tokens.clone();
         let engine = engine.clone();
-        move |params: &PathParams| -> Option<Response> {
+        move |params: &PathParams| -> Result<Option<Claims>, Response> {
             if !auth_required {
-                return None;
+                return Ok(None);
             }
             let tok = params.get("token").unwrap_or("");
             match tokens.validate(tok, engine.now()) {
-                Ok(_) => None,
+                Ok(claims) => Ok(Some(claims)),
                 Err(e) => {
                     engine.metrics.auth_failures.inc();
-                    Some(Response::error(401, &e.to_string()))
+                    Err(Response::error(401, &e.to_string()))
                 }
             }
         }
+    };
+    let check = {
+        let authenticate = authenticate.clone();
+        move |params: &PathParams| -> Option<Response> { authenticate(params).err() }
     };
 
     // --- ask -------------------------------------------------------------
     {
         let engine = engine.clone();
-        let check = check.clone();
+        let authenticate = authenticate.clone();
         router.post("/api/ask/{token}", move |req, params| {
-            if let Some(resp) = check(params) {
-                return resp;
-            }
+            // The ask is the one API that needs the caller's *identity*,
+            // not just validity: per-tenant quotas key on the token's
+            // user claim. With auth disabled (dev/benches) an explicit
+            // "tenant" body field stands in; with auth on, the token is
+            // authoritative and the body field is ignored.
+            let claims = match authenticate(params) {
+                Ok(c) => c,
+                Err(resp) => return resp,
+            };
             let t0 = Instant::now();
             let body = match body_json(req) {
                 Ok(b) => b,
                 Err(r) => return r,
             };
-            let result = engine.ask(&body);
+            let tenant: Option<String> = match &claims {
+                Some(c) => c.tenant().map(str::to_string),
+                None => body.get("tenant").as_str().map(str::to_string),
+            };
+            let result = engine.ask_as(&body, tenant.as_deref());
             engine
                 .metrics
                 .ask_latency
@@ -752,6 +769,74 @@ mod tests {
         assert_eq!(d.get("requeued").as_u64(), Some(0));
         let metrics = String::from_utf8(c.get("/metrics").unwrap().body).unwrap();
         assert!(metrics.contains("hopaas_fleet_workers_registered_total 1"));
+        s.stop();
+    }
+
+    #[test]
+    fn tenant_quota_denial_carries_attribution_over_http() {
+        let config = HopaasConfig {
+            auth_required: true,
+            engine: EngineConfig { tenant_quota: 1, ..Default::default() },
+            ..Default::default()
+        };
+        let s = HopaasServer::start("127.0.0.1:0", config).unwrap();
+        let mut c = Client::connect(s.addr()).unwrap();
+        // Mint a token for alice: its user claim is the tenant key.
+        let mut req = Value::obj();
+        req.set("user", "alice").set("ttl", 3600.0);
+        let tok = c
+            .post_json("/api/token", &Value::Obj(req))
+            .unwrap()
+            .json_body()
+            .unwrap();
+        let tok = tok.get("token").as_str().unwrap().to_string();
+        let mut reg = Value::obj();
+        reg.set("name", "n1").set("site", "cloud").set("gpu", "a100");
+        let r = c
+            .post_json(&format!("/api/workers/register/{tok}"), &Value::Obj(reg))
+            .unwrap()
+            .json_body()
+            .unwrap();
+        let wid = r.get("worker_id").as_u64().unwrap();
+        let mut body = ask_body();
+        if let Value::Obj(o) = &mut body {
+            o.set("worker", wid);
+        }
+        let ok = c.post_json(&format!("/api/ask/{tok}"), &body).unwrap();
+        assert_eq!(ok.status, 200, "{:?}", String::from_utf8_lossy(&ok.body));
+        let trial_id = ok.json_body().unwrap().get("trial_id").as_u64().unwrap();
+        // One lease held, tenant quota 1: the next ask is denied with
+        // the tenant named in the 429 detail.
+        let denied = c.post_json(&format!("/api/ask/{tok}"), &body).unwrap();
+        assert_eq!(denied.status, 429);
+        let detail = denied
+            .json_body()
+            .unwrap()
+            .get("detail")
+            .as_str()
+            .unwrap()
+            .to_string();
+        assert!(detail.contains("tenant 'alice'"), "{detail}");
+        // The stats tenants block and the labeled metrics agree.
+        let stats = c.get("/api/stats").unwrap().json_body().unwrap();
+        let tenants = stats.get("fleet").get("tenants");
+        assert_eq!(tenants.at(0).get("tenant").as_str(), Some("alice"));
+        assert_eq!(tenants.at(0).get("active").as_u64(), Some(1));
+        assert_eq!(tenants.at(0).get("quota").as_u64(), Some(1));
+        let metrics = String::from_utf8(c.get("/metrics").unwrap().body).unwrap();
+        assert!(
+            metrics.contains("hopaas_tenant_quota_denials_total{tenant=\"alice\"} 1"),
+            "{metrics}"
+        );
+        assert!(metrics.contains("hopaas_tenant_leases{tenant=\"alice\"} 1"), "{metrics}");
+        // Finishing the trial frees the tenant's budget.
+        let mut tell = Value::obj();
+        tell.set("trial_id", trial_id).set("value", 1.0);
+        assert_eq!(
+            c.post_json(&format!("/api/tell/{tok}"), &Value::Obj(tell)).unwrap().status,
+            200
+        );
+        assert_eq!(c.post_json(&format!("/api/ask/{tok}"), &body).unwrap().status, 200);
         s.stop();
     }
 

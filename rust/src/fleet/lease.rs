@@ -14,11 +14,18 @@
 use crate::json::Value;
 use std::collections::{HashMap, HashSet, VecDeque};
 
-/// One live lease.
+/// One live lease. Carries the admission keys (site, tenant) the
+/// scheduler counted when the slot was reserved, so the release path
+/// returns exactly the slot that was taken — independent of later
+/// registry mutations (a worker GC must never corrupt quota headroom).
 #[derive(Clone, Debug)]
 pub struct LeaseInfo {
     pub worker: u64,
     pub study_key: String,
+    /// Site of the worker at bind time (the quota key).
+    pub site: String,
+    /// Tenant behind the ask's auth token, if any (the quota key).
+    pub tenant: Option<String>,
     pub bound_at: f64,
 }
 
@@ -33,15 +40,34 @@ pub struct LeaseTable {
     /// preemption (thousands of requeues under the fleet lock) does
     /// not degrade into per-push linear queue scans.
     queued: HashSet<u64>,
+    /// trial id → when it entered its queue. Affinity input only (how
+    /// long has the head waited?); engine-relative seconds, so it is
+    /// not persisted — recovered queue entries read as "waited forever"
+    /// and are immediately eligible for any site.
+    queued_at: HashMap<u64, f64>,
     /// trial id → times it has been requeued (budget tracking).
     requeues: HashMap<u64, u32>,
 }
 
 impl LeaseTable {
-    pub fn bind(&mut self, trial_id: u64, worker: u64, study_key: &str, now: f64) {
+    pub fn bind(
+        &mut self,
+        trial_id: u64,
+        worker: u64,
+        study_key: &str,
+        site: &str,
+        tenant: Option<&str>,
+        now: f64,
+    ) {
         self.leases.insert(
             trial_id,
-            LeaseInfo { worker, study_key: study_key.to_string(), bound_at: now },
+            LeaseInfo {
+                worker,
+                study_key: study_key.to_string(),
+                site: site.to_string(),
+                tenant: tenant.map(str::to_string),
+                bound_at: now,
+            },
         );
     }
 
@@ -100,19 +126,22 @@ impl LeaseTable {
 
     /// Append to the study's requeue queue and charge the budget. Never
     /// double-queues a trial (replay idempotence).
-    pub fn push_back(&mut self, study_key: &str, trial_id: u64) {
+    pub fn push_back(&mut self, study_key: &str, trial_id: u64, now: f64) {
         if self.queued.insert(trial_id) {
             self.queues.entry(study_key.to_string()).or_default().push_back(trial_id);
+            self.queued_at.entry(trial_id).or_insert(now);
             *self.requeues.entry(trial_id).or_insert(0) += 1;
         }
     }
 
     /// Return a popped trial to the head of its queue (a failed handout
-    /// must not lose it, nor re-charge its budget). The id may still be
-    /// in `queued` (pop leaves it there), so the queue re-insert is
-    /// gated on the queue itself — O(n), but only on this error path.
-    pub fn push_front(&mut self, study_key: &str, trial_id: u64) {
+    /// must not lose it, nor re-charge its budget — nor reset its wait
+    /// clock). The id may still be in `queued` (pop leaves it there), so
+    /// the queue re-insert is gated on the queue itself — O(n), but only
+    /// on this error path.
+    pub fn push_front(&mut self, study_key: &str, trial_id: u64, now: f64) {
         self.queued.insert(trial_id);
+        self.queued_at.entry(trial_id).or_insert(now);
         let q = self.queues.entry(study_key.to_string()).or_default();
         if !q.contains(&trial_id) {
             q.push_front(trial_id);
@@ -128,13 +157,23 @@ impl LeaseTable {
         self.queues.get_mut(study_key)?.pop_front()
     }
 
+    /// How long the head of `study_key`'s queue has been waiting, if
+    /// any trial is queued. The affinity preference defers handouts to
+    /// unhealthy sites only while this is under the fairness horizon.
+    pub fn head_wait(&self, study_key: &str, now: f64) -> Option<f64> {
+        let head = *self.queues.get(study_key)?.front()?;
+        Some(now - self.queued_at.get(&head).copied().unwrap_or(0.0))
+    }
+
     /// The popped trial reached its new lease: drop the in-flight mark.
     pub fn finish_handout(&mut self, trial_id: u64) {
         self.queued.remove(&trial_id);
+        self.queued_at.remove(&trial_id);
     }
 
     pub fn remove_from_queue(&mut self, study_key: &str, trial_id: u64) {
         if self.queued.remove(&trial_id) {
+            self.queued_at.remove(&trial_id);
             if let Some(q) = self.queues.get_mut(study_key) {
                 q.retain(|&t| t != trial_id);
             }
@@ -159,6 +198,14 @@ impl LeaseTable {
 
     // --- segment (de)serialization --------------------------------------
 
+    /// Backfill the admission site of a lease loaded from an old-format
+    /// snapshot (pre-policy segments carried no `site` field).
+    pub fn set_site(&mut self, trial_id: u64, site: &str) {
+        if let Some(info) = self.leases.get_mut(&trial_id) {
+            info.site = site.to_string();
+        }
+    }
+
     pub fn leases_json(&self) -> Value {
         let mut ids: Vec<u64> = self.leases.keys().copied().collect();
         ids.sort_unstable();
@@ -170,6 +217,8 @@ impl LeaseTable {
                     o.set("trial", *tid)
                         .set("worker", info.worker)
                         .set("study", info.study_key.as_str())
+                        .set("site", info.site.as_str())
+                        .set("tenant", info.tenant.clone())
                         .set("at", info.bound_at);
                     Value::Obj(o)
                 })
@@ -211,6 +260,7 @@ impl LeaseTable {
         self.leases.clear();
         self.queues.clear();
         self.queued.clear();
+        self.queued_at.clear();
         self.requeues.clear();
         for lv in leases.as_arr().unwrap_or(&[]) {
             if let (Some(tid), Some(wid), Some(study)) = (
@@ -218,7 +268,14 @@ impl LeaseTable {
                 lv.get("worker").as_u64(),
                 lv.get("study").as_str(),
             ) {
-                self.bind(tid, wid, study, lv.get("at").as_f64().unwrap_or(0.0));
+                self.bind(
+                    tid,
+                    wid,
+                    study,
+                    lv.get("site").as_str().unwrap_or(""),
+                    lv.get("tenant").as_str(),
+                    lv.get("at").as_f64().unwrap_or(0.0),
+                );
             }
         }
         for qv in queues.as_arr().unwrap_or(&[]) {
@@ -226,8 +283,12 @@ impl LeaseTable {
             for tv in qv.get("trials").as_arr().unwrap_or(&[]) {
                 if let Some(tid) = tv.as_u64() {
                     // Budgets come from `counts` below, not push_back.
+                    // Wait clocks restart at "forever ago" (time bases
+                    // don't survive a restart): recovered queue heads
+                    // are never affinity-deferred.
                     if self.queued.insert(tid) {
                         self.queues.entry(study.to_string()).or_default().push_back(tid);
+                        self.queued_at.insert(tid, f64::NEG_INFINITY);
                     }
                 }
             }
@@ -247,26 +308,31 @@ mod tests {
     #[test]
     fn queue_fifo_and_budget() {
         let mut t = LeaseTable::default();
-        t.push_back("s", 1);
-        t.push_back("s", 2);
-        t.push_back("s", 1); // double-queue ignored, budget not re-charged
+        t.push_back("s", 1, 0.0);
+        t.push_back("s", 2, 1.0);
+        t.push_back("s", 1, 2.0); // double-queue ignored, budget not re-charged
         assert_eq!(t.queue_depth(), 2);
         assert_eq!(t.requeues(1), 1);
+        assert_eq!(t.head_wait("s", 5.0), Some(5.0), "head queued at t=0");
         assert_eq!(t.pop_front("s"), Some(1));
-        t.push_front("s", 1); // failed handout goes back to the head
+        t.push_front("s", 1, 9.0); // failed handout goes back to the head
         assert_eq!(t.requeues(1), 1, "push_front never charges the budget");
+        assert_eq!(t.head_wait("s", 9.0), Some(9.0), "wait clock not reset");
         assert_eq!(t.pop_front("s"), Some(1));
         assert_eq!(t.pop_front("s"), Some(2));
         assert_eq!(t.pop_front("s"), None);
         assert_eq!(t.pop_front("other"), None);
+        assert_eq!(t.head_wait("s", 9.0), None, "empty queue has no head");
     }
 
     #[test]
     fn lease_bind_release() {
         let mut t = LeaseTable::default();
-        t.bind(5, 1, "s", 2.0);
+        t.bind(5, 1, "s", "spot", Some("alice"), 2.0);
         assert!(t.is_leased(5));
         assert_eq!(t.get(5).unwrap().worker, 1);
+        assert_eq!(t.get(5).unwrap().site, "spot");
+        assert_eq!(t.get(5).unwrap().tenant.as_deref(), Some("alice"));
         let info = t.release(5).unwrap();
         assert_eq!(info.study_key, "s");
         assert!(t.release(5).is_none());
@@ -275,16 +341,21 @@ mod tests {
     #[test]
     fn json_roundtrip() {
         let mut t = LeaseTable::default();
-        t.bind(5, 1, "a", 2.0);
-        t.bind(6, 2, "b", 3.0);
-        t.push_back("b", 9);
-        t.push_back("b", 10);
+        t.bind(5, 1, "a", "cloud", None, 2.0);
+        t.bind(6, 2, "b", "spot", Some("alice"), 3.0);
+        t.push_back("b", 9, 1.0);
+        t.push_back("b", 10, 2.0);
         let (l, q, c) = (t.leases_json(), t.queues_json(), t.requeue_counts_json());
         let mut back = LeaseTable::default();
         back.load_json(&l, &q, &c);
         assert_eq!(back.len(), 2);
         assert_eq!(back.get(6).unwrap().study_key, "b");
+        assert_eq!(back.get(6).unwrap().site, "spot", "site survives the segment");
+        assert_eq!(back.get(6).unwrap().tenant.as_deref(), Some("alice"));
+        assert_eq!(back.get(5).unwrap().tenant, None);
         assert_eq!(back.queue_depth(), 2);
+        // Recovered queue entries read as waited-forever: never deferred.
+        assert_eq!(back.head_wait("b", 0.0), Some(f64::INFINITY));
         assert_eq!(back.pop_front("b"), Some(9));
         assert_eq!(back.requeues(10), 1);
     }

@@ -1,5 +1,5 @@
-//! Fleet subsystem: worker registry, heartbeat leases and site-aware
-//! trial scheduling.
+//! Fleet subsystem: worker registry, heartbeat leases, site-aware
+//! trial scheduling and the tenant-aware quota policy.
 //!
 //! The paper's §4 deployment coordinates "more than twenty concurrent
 //! and diverse computing nodes" — CINECA MARCONI 100, INFN Cloud,
@@ -18,9 +18,14 @@
 //!   deterministically *requeued* (handed, with its original id, number
 //!   and parameters, to the next eligible `ask` of the same study) or
 //!   failed once its requeue budget is spent — no reaper involved.
-//! * **scheduler** ([`scheduler`]): per-site and per-study concurrency
-//!   quotas with fair-share admission, so one greedy campaign cannot
-//!   starve the others off a shared site.
+//! * **scheduler** ([`scheduler`]): per-site, per-study and per-tenant
+//!   concurrency quotas with fair-share admission, so one greedy
+//!   campaign — or one greedy user — cannot starve the others off a
+//!   shared site.
+//! * **policy** ([`policy`]): the quota table the scheduler resolves per
+//!   admission — per-site overrides, tenant quotas keyed by the auth
+//!   token's identity, the fair-share fairness horizon and the
+//!   site-affinity requeue preference.
 //!
 //! ## Lease state machine
 //!
@@ -44,16 +49,22 @@
 //! `worker_deregister` records, stamped with the reserved
 //! [`FLEET_SHARD`](crate::store::FLEET_SHARD) id) and snapshotted into
 //! `snapshot.fleet.json` at compaction, so the fleet survives recovery
-//! exactly like trials do. Lease *deadlines* are deliberately not
-//! persisted — they are liveness, not state: recovery resets every
-//! surviving worker's deadline to `now + lease_timeout`, giving live
-//! workers one heartbeat interval to reclaim their leases before expiry
-//! requeues their trials.
+//! exactly like trials do. The `lease_bind` payload carries the
+//! admission keys (site, tenant), so recovery rebuilds the scheduler's
+//! per-site and per-tenant counters exactly as live admission counted
+//! them. Lease *deadlines* are deliberately not persisted — they are
+//! liveness, not state: recovery resets every surviving worker's
+//! deadline to `now + lease_timeout`, giving live workers one heartbeat
+//! interval to reclaim their leases before expiry requeues their trials.
+//! The site *health ledger* behind the affinity preference is likewise
+//! liveness and restarts at zero.
 
 pub mod lease;
+pub mod policy;
 pub mod registry;
 pub mod scheduler;
 
+pub use policy::QuotaPolicy;
 pub use registry::{WorkerInfo, WorkerState};
 
 use crate::coordinator::engine::ApiError;
@@ -70,22 +81,28 @@ pub struct FleetConfig {
     /// Worker lease duration in seconds; heartbeats renew it. `None`
     /// disables expiry (leases then only release on tell/fail/prune).
     pub lease_timeout: Option<f64>,
-    /// Max concurrently leased trials per site (0 = unlimited).
-    pub site_quota: u32,
-    /// Max concurrently leased trials per study (0 = unlimited).
-    pub study_quota: u32,
     /// How many times a trial may be requeued after losing its worker
     /// before it is failed for good.
     pub requeue_max: u32,
+    /// Retired (lost/deregistered, lease-free) workers kept for
+    /// attribution before the fleet GC drops them.
+    pub dead_worker_keep: usize,
+    /// Seconds a site may sit idle (no slots, no waiters, no admission
+    /// attempts) before the fleet GC evicts its scheduler entry.
+    pub site_idle_retention: f64,
+    /// The admission quota table (site/study/tenant quotas, fairness
+    /// horizon, site affinity).
+    pub policy: QuotaPolicy,
 }
 
 impl Default for FleetConfig {
     fn default() -> Self {
         FleetConfig {
             lease_timeout: Some(60.0),
-            site_quota: 0,
-            study_quota: 0,
             requeue_max: 3,
+            dead_worker_keep: 1024,
+            site_idle_retention: 3600.0,
+            policy: QuotaPolicy::default(),
         }
     }
 }
@@ -126,16 +143,22 @@ impl Fleet {
 
 impl FleetState {
     /// Quota/fair-share admission for a worker-bound ask. Reserves one
-    /// scheduling slot on success; the caller must later convert it with
-    /// [`FleetState::bind`] or return it with
-    /// [`FleetState::cancel_admission`].
+    /// scheduling slot and returns the **admission site** — the key the
+    /// slot was counted under. The caller must later convert the slot
+    /// with [`FleetState::bind`] or return it with
+    /// [`FleetState::cancel_admission`], passing that same site back —
+    /// exactly one of the two, exactly once, or the quota counters
+    /// drift. Threading the site through (instead of re-reading the
+    /// registry at bind/cancel time) is what keeps the ledger exact
+    /// even if the worker is marked lost or GC'd mid-ask.
     pub fn admit(
         &mut self,
         worker_id: u64,
         study_key: &str,
+        tenant: Option<&str>,
         now: f64,
         config: &FleetConfig,
-    ) -> Result<(), ApiError> {
+    ) -> Result<String, ApiError> {
         let worker = self
             .registry
             .get(worker_id)
@@ -147,44 +170,76 @@ impl FleetState {
             )));
         }
         let site = worker.site.clone();
-        self.sched.admit(&site, study_key, now, config)
+        self.sched.admit(&site, study_key, tenant, now, config)?;
+        Ok(site)
     }
 
-    /// Return an admission slot that never became a lease.
-    pub fn cancel_admission(&mut self, worker_id: u64, study_key: &str) {
-        if let Some(w) = self.registry.get(worker_id) {
-            let site = w.site.clone();
-            self.sched.release(&site, study_key);
-        }
+    /// Return an admission slot that never became a lease. `site` is
+    /// the key [`FleetState::admit`] returned; the release is
+    /// unconditional — the worker may have vanished from the registry
+    /// meanwhile, but the counted slot must come back regardless.
+    pub fn cancel_admission(&mut self, site: &str, study_key: &str, tenant: Option<&str>) {
+        self.sched.release(site, study_key, tenant);
     }
 
     /// Convert an admission slot into a live lease (ask success path).
-    pub fn bind(&mut self, trial_id: u64, worker_id: u64, study_key: &str, now: f64) {
+    /// The lease records the admission keys (`site` as returned by
+    /// [`FleetState::admit`], plus the tenant) so the eventual release
+    /// returns exactly the slot admission took.
+    pub fn bind(
+        &mut self,
+        trial_id: u64,
+        worker_id: u64,
+        study_key: &str,
+        site: &str,
+        tenant: Option<&str>,
+        now: f64,
+    ) {
         // A requeued handout is in flight (popped, still marked
         // queued): the lease supersedes the mark.
         self.leases.finish_handout(trial_id);
-        self.leases.bind(trial_id, worker_id, study_key, now);
+        self.leases.bind(trial_id, worker_id, study_key, site, tenant, now);
         self.registry.attach(worker_id, trial_id);
+        self.sched.note_handout(site);
         // The scheduler slot was already counted at admission.
     }
 
     /// Replay a `lease_bind` record: insert the lease (and pull the
     /// trial out of the requeue queue if it was waiting there) without
     /// admission bookkeeping — counts are rebuilt by
-    /// [`FleetState::rebuild_counts`] at the end of recovery.
-    pub fn apply_bind(&mut self, trial_id: u64, worker_id: u64, study_key: &str, at: f64) {
+    /// [`FleetState::rebuild_counts`] at the end of recovery. `site`
+    /// comes from the record; pre-policy records carried none, so fall
+    /// back to the registry (the worker's `worker_register` replayed
+    /// earlier in log order).
+    pub fn apply_bind(
+        &mut self,
+        trial_id: u64,
+        worker_id: u64,
+        study_key: &str,
+        site: &str,
+        tenant: Option<&str>,
+        at: f64,
+    ) {
+        let site = if site.is_empty() {
+            self.registry.site_of(worker_id).unwrap_or("").to_string()
+        } else {
+            site.to_string()
+        };
         self.leases.remove_from_queue(study_key, trial_id);
-        self.leases.bind(trial_id, worker_id, study_key, at);
+        self.leases.bind(trial_id, worker_id, study_key, &site, tenant, at);
         self.registry.attach(worker_id, trial_id);
     }
 
     /// Release a trial's lease (tell/fail/prune or scrub). Returns the
-    /// worker that held it, if any.
+    /// worker that held it, if any. The scheduler slot is returned under
+    /// the lease's own admission keys — gating on the lease is what
+    /// makes the release exactly-once even when a lease expiry races a
+    /// deregister for the same trial.
     pub fn release(&mut self, trial_id: u64) -> Option<u64> {
         let info = self.leases.release(trial_id)?;
         self.registry.detach(info.worker, trial_id);
         self.sched
-            .release(self.registry.site_of(info.worker).unwrap_or(""), &info.study_key);
+            .release(&info.site, &info.study_key, info.tenant.as_deref());
         // The trial is terminal: its requeue-budget entry (if any) is
         // dead bookkeeping — drop it or the table grows forever.
         self.leases.clear_requeues(trial_id);
@@ -206,8 +261,9 @@ impl FleetState {
     /// Requeue a leased trial after its worker was lost. Returns `false`
     /// if the trial is no longer leased to `expected_worker` (a
     /// concurrent tell or a racing expiry already handled it), which is
-    /// what makes requeueing exactly-once.
-    pub fn requeue(&mut self, trial_id: u64, expected_worker: u64) -> bool {
+    /// what makes requeueing exactly-once. Charges the loss to the
+    /// site's health ledger (affinity input).
+    pub fn requeue(&mut self, trial_id: u64, expected_worker: u64, now: f64) -> bool {
         let Some(info) = self.leases.get(trial_id) else { return false };
         if info.worker != expected_worker {
             return false;
@@ -215,17 +271,19 @@ impl FleetState {
         let info = self.leases.release(trial_id).expect("lease checked above");
         self.registry.detach(info.worker, trial_id);
         self.sched
-            .release(self.registry.site_of(info.worker).unwrap_or(""), &info.study_key);
-        self.leases.push_back(&info.study_key, trial_id);
+            .release(&info.site, &info.study_key, info.tenant.as_deref());
+        self.sched.note_loss(&info.site);
+        self.leases.push_back(&info.study_key, trial_id, now);
         true
     }
 
-    /// Replay a `trial_requeue` record.
+    /// Replay a `trial_requeue` record. Replayed queue entries read as
+    /// waited-forever, so the affinity preference never defers them.
     pub fn apply_requeue(&mut self, trial_id: u64, study_key: &str) {
         if let Some(info) = self.leases.release(trial_id) {
             self.registry.detach(info.worker, trial_id);
         }
-        self.leases.push_back(study_key, trial_id);
+        self.leases.push_back(study_key, trial_id, f64::NEG_INFINITY);
     }
 
     /// Workers whose trials must be recovered: alive workers past their
@@ -266,17 +324,18 @@ impl FleetState {
     }
 
     /// Recompute the scheduler's usage counters from the lease table
-    /// (recovery; counts are otherwise maintained incrementally).
+    /// (recovery; counts are otherwise maintained incrementally). Every
+    /// lease carries its admission keys, so site and tenant counters
+    /// come back exactly as live admission counted them.
     pub fn rebuild_counts(&mut self) {
         self.sched.clear_counts();
-        let entries: Vec<(u64, String)> = self
+        let entries: Vec<(String, String, Option<String>)> = self
             .leases
             .iter()
-            .map(|(_, info)| (info.worker, info.study_key.clone()))
+            .map(|(_, info)| (info.site.clone(), info.study_key.clone(), info.tenant.clone()))
             .collect();
-        for (worker, study_key) in entries {
-            let site = self.registry.site_of(worker).unwrap_or("").to_string();
-            self.sched.count_existing(&site, &study_key);
+        for (site, study_key, tenant) in entries {
+            self.sched.count_existing(&site, &study_key, tenant.as_deref());
         }
     }
 
@@ -296,6 +355,19 @@ impl FleetState {
     pub fn load_snapshot(&mut self, v: &Value) {
         self.registry.load_json(v.get("workers"), v.get("next_worker_id").as_u64().unwrap_or(1));
         self.leases.load_json(v.get("leases"), v.get("requeue"), v.get("requeue_count"));
+        // Pre-policy segments carried no per-lease site: backfill from
+        // the registry so rebuilt counters land on the right site.
+        let fixups: Vec<(u64, String)> = self
+            .leases
+            .iter()
+            .filter(|(_, info)| info.site.is_empty())
+            .map(|(tid, info)| {
+                (*tid, self.registry.site_of(info.worker).unwrap_or("").to_string())
+            })
+            .collect();
+        for (tid, site) in fixups {
+            self.leases.set_site(tid, &site);
+        }
         for (tid, info) in self.leases.iter() {
             self.registry.attach(info.worker, *tid);
         }
@@ -311,9 +383,11 @@ impl FleetState {
             .set("leases", self.leases.len())
             .set("requeue_depth", self.leases.queue_depth())
             .set("lease_timeout", config.lease_timeout)
-            .set("site_quota", config.site_quota)
-            .set("study_quota", config.study_quota)
-            .set("sites", self.sched.sites_json());
+            .set("site_quota", config.policy.site_quota)
+            .set("study_quota", config.policy.study_quota)
+            .set("policy", config.policy.to_json())
+            .set("sites", self.sched.sites_json(&config.policy))
+            .set("tenants", self.sched.tenants_json(&config.policy));
         Value::Obj(o)
     }
 }
@@ -325,9 +399,9 @@ mod tests {
     fn make_fleet(site_quota: u32, study_quota: u32) -> (Fleet, FleetConfig) {
         let config = FleetConfig {
             lease_timeout: Some(10.0),
-            site_quota,
-            study_quota,
             requeue_max: 2,
+            policy: QuotaPolicy { site_quota, study_quota, ..Default::default() },
+            ..Default::default()
         };
         (Fleet::new(config.clone()), config)
     }
@@ -343,27 +417,54 @@ mod tests {
         let (fleet, cfg) = make_fleet(2, 0);
         let mut st = fleet.lock();
         let w = register(&mut st, "n1", "cloud", 0.0);
-        st.admit(w, "s", 0.0, &cfg).unwrap();
-        st.bind(1, w, "s", 0.0);
+        let site = st.admit(w, "s", None, 0.0, &cfg).unwrap();
+        assert_eq!(site, "cloud", "admit returns the counted site");
+        st.bind(1, w, "s", &site, None, 0.0);
         assert_eq!(st.leases.len(), 1);
-        st.admit(w, "s", 0.0, &cfg).unwrap();
-        st.bind(2, w, "s", 0.0);
+        st.admit(w, "s", None, 0.0, &cfg).unwrap();
+        st.bind(2, w, "s", &site, None, 0.0);
         // Site full.
-        assert!(matches!(st.admit(w, "s", 0.0, &cfg), Err(ApiError::Quota(_))));
+        assert!(matches!(st.admit(w, "s", None, 0.0, &cfg), Err(ApiError::Quota(_))));
         assert_eq!(st.release(1), Some(w));
-        st.admit(w, "s", 1.0, &cfg).unwrap();
-        st.cancel_admission(w, "s");
+        st.admit(w, "s", None, 1.0, &cfg).unwrap();
+        st.cancel_admission("cloud", "s", None);
         assert_eq!(st.leases.len(), 1);
+    }
+
+    #[test]
+    fn tenant_slots_follow_the_lease() {
+        let (fleet, cfg) = {
+            let config = FleetConfig {
+                lease_timeout: Some(10.0),
+                policy: QuotaPolicy { tenant_quota: 1, ..Default::default() },
+                ..Default::default()
+            };
+            (Fleet::new(config.clone()), config)
+        };
+        let mut st = fleet.lock();
+        let w = register(&mut st, "n1", "cloud", 0.0);
+        let site = st.admit(w, "s", Some("alice"), 0.0, &cfg).unwrap();
+        st.bind(1, w, "s", &site, Some("alice"), 0.0);
+        assert_eq!(st.sched.tenant_active("alice"), 1);
+        let err = st.admit(w, "s", Some("alice"), 0.0, &cfg).unwrap_err();
+        assert!(err.to_string().contains("tenant 'alice'"), "{err}");
+        // Releasing via the lease returns alice's slot (the lease
+        // remembered the tenant; nothing depends on the caller).
+        assert_eq!(st.release(1), Some(w));
+        assert_eq!(st.sched.tenant_active("alice"), 0);
+        let site = st.admit(w, "s", Some("alice"), 1.0, &cfg).unwrap();
+        st.cancel_admission(&site, "s", Some("alice"));
+        assert_eq!(st.sched.tenant_active("alice"), 0);
     }
 
     #[test]
     fn unknown_or_lost_worker_rejected() {
         let (fleet, cfg) = make_fleet(0, 0);
         let mut st = fleet.lock();
-        assert!(matches!(st.admit(99, "s", 0.0, &cfg), Err(ApiError::NotFound(_))));
+        assert!(matches!(st.admit(99, "s", None, 0.0, &cfg), Err(ApiError::NotFound(_))));
         let w = register(&mut st, "n1", "cloud", 0.0);
         st.registry.mark_lost(w, 5.0);
-        assert!(matches!(st.admit(w, "s", 5.0, &cfg), Err(ApiError::Conflict(_))));
+        assert!(matches!(st.admit(w, "s", None, 5.0, &cfg), Err(ApiError::Conflict(_))));
     }
 
     #[test]
@@ -371,8 +472,8 @@ mod tests {
         let (fleet, cfg) = make_fleet(0, 0);
         let mut st = fleet.lock();
         let w = register(&mut st, "n1", "spot", 0.0);
-        st.admit(w, "s", 0.0, &cfg).unwrap();
-        st.bind(7, w, "s", 0.0);
+        let site = st.admit(w, "s", None, 0.0, &cfg).unwrap();
+        st.bind(7, w, "s", &site, None, 0.0);
         assert!(st.expired_workers(5.0).is_empty(), "deadline not passed");
         let expired = st.expired_workers(11.0);
         assert_eq!(expired.len(), 1);
@@ -380,8 +481,8 @@ mod tests {
         assert!(expired[0].1, "was alive");
         assert_eq!(expired[0].2, vec![7]);
         st.registry.mark_lost(w, 11.0);
-        assert!(st.requeue(7, w));
-        assert!(!st.requeue(7, w), "second requeue is a no-op");
+        assert!(st.requeue(7, w, 11.0));
+        assert!(!st.requeue(7, w, 11.0), "second requeue is a no-op");
         assert_eq!(st.leases.queue_depth(), 1);
         assert_eq!(st.leases.pop_front("s"), Some(7));
         assert_eq!(st.leases.pop_front("s"), None);
@@ -396,12 +497,12 @@ mod tests {
             let mut st = fleet.lock();
             let w1 = register(&mut st, "n1", "cloud", 1.0);
             let w2 = register(&mut st, "n2", "spot", 2.0);
-            st.admit(w1, "a", 2.0, &cfg).unwrap();
-            st.bind(10, w1, "a", 2.0);
-            st.admit(w2, "b", 2.0, &cfg).unwrap();
-            st.bind(11, w2, "b", 2.0);
+            let s1 = st.admit(w1, "a", Some("alice"), 2.0, &cfg).unwrap();
+            st.bind(10, w1, "a", &s1, Some("alice"), 2.0);
+            let s2 = st.admit(w2, "b", None, 2.0, &cfg).unwrap();
+            st.bind(11, w2, "b", &s2, None, 2.0);
             st.registry.mark_lost(w2, 3.0);
-            assert!(st.requeue(11, w2));
+            assert!(st.requeue(11, w2, 3.0));
             st.snapshot_json()
         };
         let (fleet2, _) = make_fleet(4, 0);
@@ -413,6 +514,9 @@ mod tests {
         assert_eq!(st.leases.pop_front("b"), Some(11));
         assert_eq!(st.registry.next_id(), 3);
         assert_eq!(st.registry.count(WorkerState::Lost), 1);
+        // Tenant counters rebuilt from the lease's admission keys.
+        assert_eq!(st.sched.tenant_active("alice"), 1);
+        assert_eq!(st.sched.site_active("cloud"), 1);
     }
 
     #[test]
@@ -421,16 +525,17 @@ mod tests {
         let mut st = fleet.lock();
         let w = register(&mut st, "n1", "cloud", 0.0);
         for tid in [1u64, 2, 3] {
-            st.admit(w, "s", 0.0, &cfg).unwrap();
-            st.bind(tid, w, "s", 0.0);
+            let site = st.admit(w, "s", Some("t"), 0.0, &cfg).unwrap();
+            st.bind(tid, w, "s", &site, Some("t"), 0.0);
         }
         st.registry.mark_lost(w, 1.0);
-        assert!(st.requeue(3, w));
+        assert!(st.requeue(3, w, 1.0));
         // Only trial 1 is still running after "recovery".
         let running: HashSet<u64> = [1u64].into_iter().collect();
         st.scrub(&running);
         assert_eq!(st.leases.len(), 1);
         assert_eq!(st.leases.queue_depth(), 0, "queued terminal trial dropped");
         assert_eq!(st.sched.site_active("cloud"), 1);
+        assert_eq!(st.sched.tenant_active("t"), 1);
     }
 }

@@ -1,0 +1,203 @@
+//! Quota policy: who may hold how many concurrent trial slots, resolved
+//! per admission.
+//!
+//! PR 3 shipped two uniform knobs (`--site-quota`, `--study-quota`).
+//! A shared instance coordinating campaigns from private boxes, INFN
+//! Cloud and CINECA needs more than that (paper §4): MARCONI 100 can
+//! absorb ten times the concurrency of a private box, and one user's
+//! runaway campaign must not eat another user's admission budget. The
+//! policy table therefore resolves, per admission:
+//!
+//! * **site quota** — a per-site override map (`site → quota`) over the
+//!   uniform default; `0` means unlimited for that site;
+//! * **tenant quota** — a per-tenant cap keyed by the identity behind
+//!   the auth token presented on the ask (the token's `user` claim),
+//!   with a per-tenant override map over a uniform default;
+//! * **study quota** — unchanged from PR 3;
+//! * **fairness horizon** — how long a denied study's *waiting* mark
+//!   keeps claiming a fair share of a site. Seconds, not hours: an
+//!   abandoned campaign must stop deflating everyone else's share as
+//!   soon as it stops asking (see `scheduler`);
+//! * **site affinity** — when enabled, requeued (preempted) trials are
+//!   preferentially handed to workers on healthier sites: a worker on a
+//!   site with an above-average loss rate is served a *fresh* trial
+//!   instead of the queue head until the head has waited a full
+//!   fairness horizon. Trial identity (id/number/params) is never
+//!   touched, so suggestion streams stay byte-identical whether
+//!   affinity is on or off.
+//!
+//! Policy denials map to HTTP 429 with the denied scope named in the
+//! detail (`site '…'`, `tenant '…'`, `study quota`), so clients and
+//! dashboards can attribute back-pressure.
+
+use crate::json::Value;
+use std::collections::HashMap;
+
+/// The resolved admission policy. Part of [`super::FleetConfig`].
+#[derive(Clone, Debug)]
+pub struct QuotaPolicy {
+    /// Default max concurrently leased trials per site (0 = unlimited).
+    pub site_quota: u32,
+    /// Per-site overrides (`site → quota`); an explicit 0 lifts the
+    /// default for that site.
+    pub site_quotas: HashMap<String, u32>,
+    /// Max concurrently leased trials per study (0 = unlimited).
+    pub study_quota: u32,
+    /// Default max concurrently leased trials per tenant (0 = unlimited).
+    pub tenant_quota: u32,
+    /// Per-tenant overrides (`tenant → quota`).
+    pub tenant_quotas: HashMap<String, u32>,
+    /// Waiting-mark lifetime for fair-share admission, seconds. Also the
+    /// grace after which site affinity stops deferring a queued trial.
+    pub fairness_horizon: f64,
+    /// Prefer healthier sites when handing out requeued trials.
+    pub site_affinity: bool,
+}
+
+impl Default for QuotaPolicy {
+    fn default() -> Self {
+        QuotaPolicy {
+            site_quota: 0,
+            site_quotas: HashMap::new(),
+            study_quota: 0,
+            tenant_quota: 0,
+            tenant_quotas: HashMap::new(),
+            fairness_horizon: 30.0,
+            site_affinity: false,
+        }
+    }
+}
+
+impl QuotaPolicy {
+    /// Effective quota for `site`: override first, default otherwise.
+    pub fn site_quota_for(&self, site: &str) -> u32 {
+        self.site_quotas.get(site).copied().unwrap_or(self.site_quota)
+    }
+
+    /// Effective quota for `tenant`: override first, default otherwise.
+    pub fn tenant_quota_for(&self, tenant: &str) -> u32 {
+        self.tenant_quotas
+            .get(tenant)
+            .copied()
+            .unwrap_or(self.tenant_quota)
+    }
+
+    /// Parse a `key=value,key=value` CLI override list (`--site-quota-map
+    /// marconi100=64,private=2`). Malformed entries are reported, not
+    /// silently dropped — a typo'd quota map is a policy hole.
+    pub fn parse_map(spec: &str) -> Result<HashMap<String, u32>, String> {
+        let mut out = HashMap::new();
+        for pair in spec.split(',').filter(|p| !p.is_empty()) {
+            let (key, v) = pair
+                .split_once('=')
+                .ok_or_else(|| format!("quota map entry '{pair}' is not key=value"))?;
+            let n: u32 = v
+                .parse()
+                .map_err(|_| format!("quota map entry '{pair}': '{v}' is not a u32"))?;
+            out.insert(key.trim().to_string(), n);
+        }
+        Ok(out)
+    }
+
+    /// Read an override map from a JSON config object (`{"site": 4}`).
+    /// Malformed entries error, like [`QuotaPolicy::parse_map`] does on
+    /// the CLI — a dropped override would silently fall back to the
+    /// default quota (a policy hole, not a recoverable typo).
+    pub fn map_from_json(v: &Value) -> Result<HashMap<String, u32>, String> {
+        let mut out = HashMap::new();
+        match v {
+            Value::Obj(o) => {
+                for (k, val) in o.iter() {
+                    match val.as_u64() {
+                        Some(n) if n <= u32::MAX as u64 => {
+                            out.insert(k.to_string(), n as u32);
+                        }
+                        _ => {
+                            return Err(format!("quota map entry '{k}': {val} is not a u32"))
+                        }
+                    }
+                }
+            }
+            Value::Null => {}
+            other => return Err(format!("quota map must be an object, got {other}")),
+        }
+        Ok(out)
+    }
+
+    /// Policy block for `/api/stats` (operators audit what is enforced).
+    pub fn to_json(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("site_quota", self.site_quota)
+            .set("site_overrides", map_json(&self.site_quotas))
+            .set("study_quota", self.study_quota)
+            .set("tenant_quota", self.tenant_quota)
+            .set("tenant_overrides", map_json(&self.tenant_quotas))
+            .set("fairness_horizon", self.fairness_horizon)
+            .set("site_affinity", self.site_affinity);
+        Value::Obj(o)
+    }
+}
+
+fn map_json(m: &HashMap<String, u32>) -> Value {
+    let mut keys: Vec<&String> = m.keys().collect();
+    keys.sort();
+    let mut o = Value::obj();
+    for k in keys {
+        o.set(k.as_str(), m[k]);
+    }
+    Value::Obj(o)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn override_beats_default() {
+        let mut p = QuotaPolicy { site_quota: 4, tenant_quota: 2, ..Default::default() };
+        p.site_quotas.insert("marconi100".into(), 64);
+        p.site_quotas.insert("private".into(), 0);
+        p.tenant_quotas.insert("alice".into(), 8);
+        assert_eq!(p.site_quota_for("marconi100"), 64);
+        assert_eq!(p.site_quota_for("infn-cloud"), 4, "default applies");
+        assert_eq!(p.site_quota_for("private"), 0, "explicit 0 lifts the cap");
+        assert_eq!(p.tenant_quota_for("alice"), 8);
+        assert_eq!(p.tenant_quota_for("bob"), 2);
+    }
+
+    #[test]
+    fn parse_map_forms() {
+        let m = QuotaPolicy::parse_map("a=1,b=2").unwrap();
+        assert_eq!(m.get("a"), Some(&1));
+        assert_eq!(m.get("b"), Some(&2));
+        assert!(QuotaPolicy::parse_map("").unwrap().is_empty());
+        assert!(QuotaPolicy::parse_map("a").is_err(), "missing =");
+        assert!(QuotaPolicy::parse_map("a=x").is_err(), "non-numeric");
+    }
+
+    #[test]
+    fn map_from_json_object() {
+        let v = crate::json::parse(r#"{"gpu": 4, "cpu": 8}"#).unwrap();
+        let m = QuotaPolicy::map_from_json(&v).unwrap();
+        assert_eq!(m.get("gpu"), Some(&4));
+        assert_eq!(m.get("cpu"), Some(&8));
+        assert!(QuotaPolicy::map_from_json(&Value::Null).unwrap().is_empty());
+        // Malformed entries are errors, not silent fallbacks to the
+        // default quota.
+        let bad = crate::json::parse(r#"{"gpu": "4"}"#).unwrap();
+        assert!(QuotaPolicy::map_from_json(&bad).is_err(), "string value");
+        let bad = crate::json::parse(r#"{"gpu": -1}"#).unwrap();
+        assert!(QuotaPolicy::map_from_json(&bad).is_err(), "negative value");
+        assert!(QuotaPolicy::map_from_json(&Value::Num(3.0)).is_err(), "non-object");
+    }
+
+    #[test]
+    fn stats_json_shape() {
+        let mut p = QuotaPolicy { site_quota: 4, ..Default::default() };
+        p.site_quotas.insert("hpc".into(), 64);
+        let j = p.to_json();
+        assert_eq!(j.get("site_quota").as_u64(), Some(4));
+        assert_eq!(j.get("site_overrides").get("hpc").as_u64(), Some(64));
+        assert_eq!(j.get("site_affinity").as_bool(), Some(false));
+    }
+}

@@ -1,34 +1,71 @@
-//! Site-aware admission: per-site / per-study concurrency quotas with
-//! fair-share ordering.
+//! Site-aware admission: per-site / per-study / per-tenant concurrency
+//! quotas with fair-share ordering, resolved through the
+//! [`QuotaPolicy`](super::policy::QuotaPolicy) table.
 //!
 //! The scheduler answers one question at `ask` time: *may this worker
-//! take one more trial of this study right now?* Three rules apply, in
+//! take one more trial of this study right now?* Four rules apply, in
 //! order:
 //!
 //! 1. **study quota** — a study may hold at most `study_quota` leases
 //!    across the whole fleet (0 = unlimited);
-//! 2. **site quota** — a site may hold at most `site_quota` leases
-//!    (0 = unlimited);
-//! 3. **fair share** — when another study has recently been turned away
+//! 2. **tenant quota** — the identity behind the auth token may hold at
+//!    most its resolved tenant quota of leases, fleet-wide;
+//! 3. **site quota** — a site may hold at most its resolved quota of
+//!    leases (per-site override, then the uniform default; 0 = unlimited);
+//! 4. **fair share** — when another study has recently been turned away
 //!    from this site, a study already holding at least
 //!    `⌈site_quota / claimants⌉` of the site's slots is denied even if
 //!    slots are free, leaving them for the waiter.
 //!
-//! Rule 3 is what stops a greedy campaign from starving others: without
+//! Rule 4 is what stops a greedy campaign from starving others: without
 //! it, a study that filled the site first would keep every slot forever
 //! (its finished trials are immediately replaced by its own next ask,
 //! and the pull-based protocol gives the server no queue to reorder).
-//! "Recently turned away" is a decaying *waiting* mark — a denied study
-//! is remembered for one lease-timeout window; studies that stop asking
-//! stop counting against the share.
+//! "Recently turned away" is a decaying *waiting* mark, retired on the
+//! **fairness horizon** (`--fairness-horizon`, seconds): a study that
+//! stops asking stops counting against the share within seconds, not
+//! the fleet GC's hour-scale retention — an abandoned campaign must not
+//! deflate everyone else's `div_ceil(n)` share until `gc_idle` finally
+//! notices it.
+//!
+//! The scheduler also keeps a per-site *health ledger* (trials handed
+//! out vs. trials lost to worker preemption) that the site-affinity
+//! requeue preference consults: see [`Scheduler::site_preferred`].
 //!
 //! Denials map to HTTP 429 so clients back off and retry; they are
-//! counted in `hopaas_fleet_quota_denials_total`.
+//! counted in `hopaas_fleet_quota_denials_total` and, per tenant, in
+//! `hopaas_tenant_quota_denials_total`.
 
 use super::FleetConfig;
 use crate::coordinator::engine::ApiError;
 use crate::json::Value;
 use std::collections::HashMap;
+
+/// Was this quota denial produced by the **tenant rule** (as opposed to
+/// site/study capacity or fair share)? The engine keys the per-tenant
+/// 429 metric on this, so a tenanted ask refused on site capacity is
+/// charged to the site, not the tenant. Lives in this file, next to the
+/// message construction in [`Scheduler::admit`], so the prefix and its
+/// classifier cannot drift apart (see `tenant_denials_classified`).
+pub fn is_tenant_denial(e: &ApiError) -> bool {
+    matches!(e, ApiError::Quota(msg) if msg.starts_with("tenant '"))
+}
+
+/// Checked slot decrement shared by the three release ledgers: take one
+/// from `key` (dropping the entry at zero) and report whether there was
+/// a slot to take.
+fn dec_slot(map: &mut HashMap<String, u32>, key: &str) -> bool {
+    match map.get_mut(key) {
+        Some(c) if *c > 0 => {
+            *c -= 1;
+            if *c == 0 {
+                map.remove(key);
+            }
+            true
+        }
+        _ => false,
+    }
+}
 
 /// Per-site admission state.
 #[derive(Default)]
@@ -43,54 +80,87 @@ pub struct SiteState {
     /// Last admission attempt — idle-site GC input. Site names are
     /// client-supplied strings, so the map must not grow forever.
     last_active: f64,
+    /// Health ledger: trials bound to workers of this site…
+    handed: u64,
+    /// …and trials lost here (worker vanished, trial requeued). Not
+    /// persisted — health is liveness, and a restart resets the ledger
+    /// like it resets lease deadlines.
+    lost: u64,
 }
 
 impl SiteState {
     fn total(&self) -> u32 {
         self.counts.values().sum()
     }
+
+    /// Fraction of this site's handouts that ended in a preemption.
+    fn loss_rate(&self) -> f64 {
+        let total = self.handed + self.lost;
+        if total == 0 {
+            0.0
+        } else {
+            self.lost as f64 / total as f64
+        }
+    }
 }
 
-/// Admission counters for every site, plus the per-study totals.
+/// Admission counters for every site, plus per-study and per-tenant
+/// totals (both fleet-wide).
 #[derive(Default)]
 pub struct Scheduler {
     sites: HashMap<String, SiteState>,
     /// Leases (plus in-flight admissions) per study, fleet-wide.
     study_active: HashMap<String, u32>,
+    /// Leases (plus in-flight admissions) per tenant, fleet-wide.
+    tenant_active: HashMap<String, u32>,
 }
 
 impl Scheduler {
-    /// Reserve one slot for `(site, study)` or say why not. The caller
-    /// pairs every `Ok` with a later [`Scheduler::release`].
+    /// Reserve one slot for `(site, study, tenant)` or say why not. The
+    /// caller pairs every `Ok` with exactly one later
+    /// [`Scheduler::release`] carrying the same keys.
     pub fn admit(
         &mut self,
         site: &str,
         study: &str,
+        tenant: Option<&str>,
         now: f64,
         config: &FleetConfig,
     ) -> Result<(), ApiError> {
-        if config.study_quota > 0
-            && self.study_active.get(study).copied().unwrap_or(0) >= config.study_quota
+        let policy = &config.policy;
+        if policy.study_quota > 0
+            && self.study_active.get(study).copied().unwrap_or(0) >= policy.study_quota
         {
             return Err(ApiError::Quota(format!(
                 "study quota reached ({} concurrent trials)",
-                config.study_quota
+                policy.study_quota
             )));
         }
+        if let Some(tenant) = tenant {
+            let tq = policy.tenant_quota_for(tenant);
+            if tq > 0 && self.tenant_active.get(tenant).copied().unwrap_or(0) >= tq {
+                // The `tenant '` prefix is what `is_tenant_denial`
+                // classifies on — keep the two in sync.
+                return Err(ApiError::Quota(format!(
+                    "tenant '{tenant}' quota reached ({tq} concurrent trials)"
+                )));
+            }
+        }
+        let site_quota = policy.site_quota_for(site);
         let state = self.sites.entry(site.to_string()).or_default();
         state.last_active = now;
-        if config.site_quota > 0 {
-            // Waiting marks decay after one lease window: a study that
-            // stopped asking no longer claims a share.
-            let window = config.lease_timeout.unwrap_or(30.0).max(1.0);
-            state.waiting.retain(|_, t| now - *t < window);
+        if site_quota > 0 {
+            // Waiting marks expire on the fairness horizon: a study that
+            // stopped asking no longer claims a share (re-checked here,
+            // at admission time, not just by the hour-scale fleet GC).
+            let horizon = policy.fairness_horizon.max(1.0);
+            state.waiting.retain(|_, t| now - *t < horizon);
             let total = state.total();
             let mine = state.counts.get(study).copied().unwrap_or(0);
-            if total >= config.site_quota {
+            if total >= site_quota {
                 state.waiting.insert(study.to_string(), now);
                 return Err(ApiError::Quota(format!(
-                    "site '{site}' at capacity ({} concurrent trials)",
-                    config.site_quota
+                    "site '{site}' at capacity ({site_quota} concurrent trials)"
                 )));
             }
             let others_waiting = state.waiting.keys().any(|k| k != study);
@@ -104,7 +174,7 @@ impl Scheduler {
                 claimants.extend(state.waiting.keys().map(|k| k.as_str()));
                 claimants.insert(study);
                 let n = claimants.len() as u32;
-                let share = config.site_quota.div_ceil(n);
+                let share = site_quota.div_ceil(n);
                 if mine >= share {
                     state.waiting.insert(study.to_string(), now);
                     return Err(ApiError::Quota(format!(
@@ -118,62 +188,128 @@ impl Scheduler {
         *state.counts.entry(study.to_string()).or_insert(0) += 1;
         state.peak = state.peak.max(state.total());
         *self.study_active.entry(study.to_string()).or_insert(0) += 1;
+        if let Some(tenant) = tenant {
+            *self.tenant_active.entry(tenant.to_string()).or_insert(0) += 1;
+        }
         Ok(())
     }
 
-    /// Return one `(site, study)` slot (lease released, admission
-    /// cancelled, or trial requeued).
-    pub fn release(&mut self, site: &str, study: &str) {
-        if let Some(state) = self.sites.get_mut(site) {
-            if let Some(c) = state.counts.get_mut(study) {
-                *c = c.saturating_sub(1);
-                if *c == 0 {
-                    state.counts.remove(study);
-                }
-            }
+    /// Return one `(site, study, tenant)` slot (lease released, admission
+    /// cancelled, or trial requeued). Returns `false` — and fails a debug
+    /// assertion — if any of the three counters had no slot to return:
+    /// a double release would silently corrupt quota headroom, so the
+    /// engine's paths must release **exactly once** per admission (they
+    /// gate every release on the lease table's single `release`).
+    /// Counters never go below zero in release builds either way.
+    pub fn release(&mut self, site: &str, study: &str, tenant: Option<&str>) -> bool {
+        let mut balanced = match self.sites.get_mut(site) {
+            Some(state) => dec_slot(&mut state.counts, study),
+            None => false,
+        };
+        balanced &= dec_slot(&mut self.study_active, study);
+        if let Some(tenant) = tenant {
+            balanced &= dec_slot(&mut self.tenant_active, tenant);
         }
-        if let Some(c) = self.study_active.get_mut(study) {
-            *c = c.saturating_sub(1);
-            if *c == 0 {
-                self.study_active.remove(study);
-            }
-        }
+        debug_assert!(
+            balanced,
+            "slot released twice for site '{site}' study '{study}' tenant {tenant:?}"
+        );
+        balanced
     }
 
     /// Count a pre-existing lease without quota checks (recovery
     /// rebuild; quotas were enforced when the lease was granted).
-    pub fn count_existing(&mut self, site: &str, study: &str) {
+    pub fn count_existing(&mut self, site: &str, study: &str, tenant: Option<&str>) {
         let state = self.sites.entry(site.to_string()).or_default();
         *state.counts.entry(study.to_string()).or_insert(0) += 1;
         state.peak = state.peak.max(state.total());
         *self.study_active.entry(study.to_string()).or_insert(0) += 1;
+        if let Some(tenant) = tenant {
+            *self.tenant_active.entry(tenant.to_string()).or_insert(0) += 1;
+        }
     }
 
-    /// Drop all usage counters (recovery rebuild); peaks survive.
+    /// Drop all usage counters (recovery rebuild); peaks and the health
+    /// ledger survive.
     pub fn clear_counts(&mut self) {
         for state in self.sites.values_mut() {
             state.counts.clear();
         }
         self.study_active.clear();
+        self.tenant_active.clear();
+    }
+
+    // --- site health (affinity input) ------------------------------------
+
+    /// Record a trial bound to a worker of `site`.
+    pub fn note_handout(&mut self, site: &str) {
+        self.sites.entry(site.to_string()).or_default().handed += 1;
+    }
+
+    /// Record a trial lost on `site` (worker vanished, trial requeued).
+    pub fn note_loss(&mut self, site: &str) {
+        self.sites.entry(site.to_string()).or_default().lost += 1;
+    }
+
+    /// Is `site` healthy enough to be handed a requeued trial under the
+    /// affinity preference? A site qualifies when its preemption rate is
+    /// no worse than the fleet-wide mean — so in a uniform fleet every
+    /// site qualifies, and a lone site always qualifies, but a spot pool
+    /// bleeding workers defers to stabler sites (until the queue head
+    /// has waited out the fairness horizon; the engine enforces that
+    /// grace so affinity can never strand a trial).
+    pub fn site_preferred(&self, site: &str) -> bool {
+        let Some(me) = self.sites.get(site) else { return true };
+        if self.sites.len() <= 1 {
+            return true;
+        }
+        let mean = self.sites.values().map(SiteState::loss_rate).sum::<f64>()
+            / self.sites.len() as f64;
+        me.loss_rate() <= mean + 1e-9
     }
 
     /// Evict sites with no slots, no fresh waiters, and no admission
-    /// attempt within `retention` seconds. Site names come from
-    /// clients, so without this the map (and the `/api/stats` sites
-    /// array and `hopaas_site_leases` label set) would grow one entry
-    /// per distinct string ever seen. Returns how many were dropped.
-    pub fn gc_idle(&mut self, now: f64, retention: f64) -> usize {
+    /// attempt within `retention` seconds. Waiting marks expire on the
+    /// (much shorter) fairness `horizon`, the same clock admission uses.
+    /// Site names come from clients, so without this the map (and the
+    /// `/api/stats` sites array and `hopaas_site_leases` label set)
+    /// would grow one entry per distinct string ever seen. Returns how
+    /// many were dropped.
+    pub fn gc_idle(&mut self, now: f64, retention: f64, horizon: f64) -> usize {
         let before = self.sites.len();
         self.sites.retain(|_, s| {
-            s.waiting.retain(|_, t| now - *t < retention);
+            s.waiting.retain(|_, t| now - *t < horizon);
             s.total() > 0 || !s.waiting.is_empty() || now - s.last_active <= retention
         });
         before - self.sites.len()
     }
 
+    // --- accessors (tests, metrics, invariants) ---------------------------
+
     /// Active slots on one site (tests/metrics).
     pub fn site_active(&self, site: &str) -> u32 {
         self.sites.get(site).map(|s| s.total()).unwrap_or(0)
+    }
+
+    /// Active slots across every site — must equal the live lease count
+    /// whenever no admission is in flight (the prop-test invariant).
+    pub fn total_active(&self) -> u64 {
+        self.sites.values().map(|s| s.total() as u64).sum()
+    }
+
+    /// Sum of the per-study counters (same invariant, second ledger).
+    pub fn study_active_total(&self) -> u64 {
+        self.study_active.values().map(|&c| c as u64).sum()
+    }
+
+    /// Active slots held by one tenant.
+    pub fn tenant_active(&self, tenant: &str) -> u32 {
+        self.tenant_active.get(tenant).copied().unwrap_or(0)
+    }
+
+    /// Sum of the per-tenant counters (tenant-carrying leases only).
+    pub fn tenant_active_total(&self) -> u64 {
+        self.tenant_active.values().map(|&c| c as u64).sum()
     }
 
     /// `(site, active)` pairs for the labeled metrics gauge.
@@ -187,8 +323,20 @@ impl Scheduler {
         out
     }
 
-    /// Per-site stats block for `/api/stats`.
-    pub fn sites_json(&self) -> Value {
+    /// `(tenant, active)` pairs for the `hopaas_tenant_leases` gauge.
+    pub fn tenant_loads(&self) -> Vec<(String, u32)> {
+        let mut out: Vec<(String, u32)> = self
+            .tenant_active
+            .iter()
+            .map(|(k, &c)| (k.clone(), c))
+            .collect();
+        out.sort();
+        out
+    }
+
+    /// Per-site stats block for `/api/stats`, with the resolved quota
+    /// and the health ledger.
+    pub fn sites_json(&self, policy: &super::policy::QuotaPolicy) -> Value {
         let mut keys: Vec<&String> = self.sites.keys().collect();
         keys.sort();
         Value::Arr(
@@ -200,7 +348,27 @@ impl Scheduler {
                         .set("active", s.total())
                         .set("peak", s.peak)
                         .set("studies", s.counts.len())
-                        .set("waiting", s.waiting.len());
+                        .set("waiting", s.waiting.len())
+                        .set("quota", policy.site_quota_for(k))
+                        .set("handed", s.handed)
+                        .set("lost", s.lost);
+                    Value::Obj(o)
+                })
+                .collect(),
+        )
+    }
+
+    /// Per-tenant stats block for `/api/stats`.
+    pub fn tenants_json(&self, policy: &super::policy::QuotaPolicy) -> Value {
+        let mut keys: Vec<&String> = self.tenant_active.keys().collect();
+        keys.sort();
+        Value::Arr(
+            keys.iter()
+                .map(|t| {
+                    let mut o = Value::obj();
+                    o.set("tenant", t.as_str())
+                        .set("active", self.tenant_active[*t])
+                        .set("quota", policy.tenant_quota_for(t));
                     Value::Obj(o)
                 })
                 .collect(),
@@ -210,14 +378,20 @@ impl Scheduler {
 
 #[cfg(test)]
 mod tests {
+    use super::super::policy::QuotaPolicy;
     use super::*;
 
     fn cfg(site_quota: u32, study_quota: u32) -> FleetConfig {
         FleetConfig {
             lease_timeout: Some(30.0),
-            site_quota,
-            study_quota,
             requeue_max: 3,
+            policy: QuotaPolicy {
+                site_quota,
+                study_quota,
+                fairness_horizon: 30.0,
+                ..Default::default()
+            },
+            ..Default::default()
         }
     }
 
@@ -225,25 +399,93 @@ mod tests {
     fn site_quota_enforced() {
         let mut s = Scheduler::default();
         let c = cfg(2, 0);
-        s.admit("gpu", "a", 0.0, &c).unwrap();
-        s.admit("gpu", "a", 0.0, &c).unwrap();
-        assert!(matches!(s.admit("gpu", "a", 0.0, &c), Err(ApiError::Quota(_))));
+        s.admit("gpu", "a", None, 0.0, &c).unwrap();
+        s.admit("gpu", "a", None, 0.0, &c).unwrap();
+        assert!(matches!(s.admit("gpu", "a", None, 0.0, &c), Err(ApiError::Quota(_))));
         // A different site is unaffected.
-        s.admit("cpu", "a", 0.0, &c).unwrap();
-        s.release("gpu", "a");
-        s.admit("gpu", "a", 1.0, &c).unwrap();
+        s.admit("cpu", "a", None, 0.0, &c).unwrap();
+        assert!(s.release("gpu", "a", None));
+        s.admit("gpu", "a", None, 1.0, &c).unwrap();
         assert_eq!(s.site_active("gpu"), 2);
         assert_eq!(s.sites.get("gpu").unwrap().peak, 2, "peak never exceeded quota");
+    }
+
+    #[test]
+    fn per_site_override_beats_default() {
+        let mut s = Scheduler::default();
+        let mut c = cfg(1, 0);
+        c.policy.site_quotas.insert("hpc".into(), 3);
+        c.policy.site_quotas.insert("open".into(), 0);
+        // Default site: capped at 1.
+        s.admit("cloud", "a", None, 0.0, &c).unwrap();
+        let err = s.admit("cloud", "a", None, 0.0, &c).unwrap_err();
+        assert!(err.to_string().contains("site 'cloud'"), "{err}");
+        // Overridden site: capped at 3.
+        for _ in 0..3 {
+            s.admit("hpc", "a", None, 0.0, &c).unwrap();
+        }
+        assert!(matches!(s.admit("hpc", "a", None, 0.0, &c), Err(ApiError::Quota(_))));
+        // Explicit 0 override lifts the cap entirely.
+        for _ in 0..8 {
+            s.admit("open", "a", None, 0.0, &c).unwrap();
+        }
+        assert_eq!(s.site_active("open"), 8);
+    }
+
+    #[test]
+    fn tenant_quota_enforced_with_attribution() {
+        let mut s = Scheduler::default();
+        let mut c = cfg(0, 0);
+        c.policy.tenant_quota = 2;
+        c.policy.tenant_quotas.insert("vip".into(), 3);
+        s.admit("gpu", "a", Some("alice"), 0.0, &c).unwrap();
+        s.admit("cpu", "b", Some("alice"), 0.0, &c).unwrap();
+        // Tenant quota spans sites and studies; the denial names the
+        // tenant so 429s are attributable.
+        let err = s.admit("hpc", "c", Some("alice"), 0.0, &c).unwrap_err();
+        assert!(matches!(err, ApiError::Quota(_)));
+        assert!(err.to_string().contains("tenant 'alice'"), "{err}");
+        // Another tenant is unaffected; the override beats the default.
+        s.admit("gpu", "a", Some("bob"), 0.0, &c).unwrap();
+        for _ in 0..3 {
+            s.admit("gpu", "a", Some("vip"), 0.0, &c).unwrap();
+        }
+        assert!(s.admit("gpu", "a", Some("vip"), 0.0, &c).is_err());
+        // Tenant-less asks are never tenant-limited.
+        s.admit("gpu", "a", None, 0.0, &c).unwrap();
+        // Release frees tenant headroom.
+        assert!(s.release("gpu", "a", Some("alice")));
+        s.admit("gpu", "a", Some("alice"), 1.0, &c).unwrap();
+        assert_eq!(s.tenant_active("alice"), 2);
+        assert_eq!(s.tenant_active("vip"), 3);
+    }
+
+    #[test]
+    fn tenant_denials_classified() {
+        // The classifier and the message construction live in this
+        // file; this pins their agreement so a rewording cannot
+        // silently break the per-tenant 429 metric.
+        let mut s = Scheduler::default();
+        let mut c = cfg(1, 1);
+        c.policy.tenant_quota = 1;
+        s.admit("gpu", "a", Some("t"), 0.0, &c).unwrap();
+        let tenant_err = s.admit("cpu", "b", Some("t"), 0.0, &c).unwrap_err();
+        assert!(is_tenant_denial(&tenant_err), "{tenant_err}");
+        let study_err = s.admit("cpu", "a", Some("u"), 0.0, &c).unwrap_err();
+        assert!(!is_tenant_denial(&study_err), "{study_err}");
+        let site_err = s.admit("gpu", "b", Some("u"), 0.0, &c).unwrap_err();
+        assert!(!is_tenant_denial(&site_err), "{site_err}");
+        assert!(!is_tenant_denial(&ApiError::NotFound("tenant 'x'".into())));
     }
 
     #[test]
     fn study_quota_spans_sites() {
         let mut s = Scheduler::default();
         let c = cfg(0, 2);
-        s.admit("gpu", "a", 0.0, &c).unwrap();
-        s.admit("cpu", "a", 0.0, &c).unwrap();
-        assert!(matches!(s.admit("hpc", "a", 0.0, &c), Err(ApiError::Quota(_))));
-        s.admit("hpc", "b", 0.0, &c).unwrap();
+        s.admit("gpu", "a", None, 0.0, &c).unwrap();
+        s.admit("cpu", "a", None, 0.0, &c).unwrap();
+        assert!(matches!(s.admit("hpc", "a", None, 0.0, &c), Err(ApiError::Quota(_))));
+        s.admit("hpc", "b", None, 0.0, &c).unwrap();
     }
 
     #[test]
@@ -252,24 +494,49 @@ mod tests {
         let c = cfg(4, 0);
         // Greedy study A fills the site.
         for _ in 0..4 {
-            s.admit("gpu", "a", 0.0, &c).unwrap();
+            s.admit("gpu", "a", None, 0.0, &c).unwrap();
         }
         // B is turned away (site full) and marked waiting.
-        assert!(s.admit("gpu", "b", 1.0, &c).is_err());
+        assert!(s.admit("gpu", "b", None, 1.0, &c).is_err());
         // One of A's trials finishes; A asks again first, but its share
         // with B waiting is ceil(4/2) = 2 and it holds 3 → denied.
-        s.release("gpu", "a");
-        assert!(s.admit("gpu", "a", 2.0, &c).is_err());
+        assert!(s.release("gpu", "a", None));
+        assert!(s.admit("gpu", "a", None, 2.0, &c).is_err());
         // B takes the free slot.
-        s.admit("gpu", "b", 3.0, &c).unwrap();
+        s.admit("gpu", "b", None, 3.0, &c).unwrap();
         // Converges to 2/2: A drains to 2, then both hold their share.
-        s.release("gpu", "a");
-        s.admit("gpu", "b", 4.0, &c).unwrap();
+        assert!(s.release("gpu", "a", None));
+        s.admit("gpu", "b", None, 4.0, &c).unwrap();
         assert_eq!(s.site_active("gpu"), 4);
-        assert!(s.admit("gpu", "a", 5.0, &c).is_err(), "A at share while B waits");
-        // Once B stops waiting (decay window passes), A can grow again.
-        s.release("gpu", "b");
-        s.admit("gpu", "a", 100.0, &c).unwrap();
+        assert!(s.admit("gpu", "a", None, 5.0, &c).is_err(), "A at share while B waits");
+        // Once B stops waiting (horizon passes), A can grow again.
+        assert!(s.release("gpu", "b", None));
+        s.admit("gpu", "a", None, 100.0, &c).unwrap();
+    }
+
+    /// Regression (fair-share deflation): an abandoned campaign's
+    /// waiting mark must stop deflating other studies' share after the
+    /// fairness horizon — not after the hour-scale `gc_idle` retention.
+    #[test]
+    fn abandoned_waiter_expires_on_fairness_horizon() {
+        let mut s = Scheduler::default();
+        let mut c = cfg(4, 0);
+        c.policy.fairness_horizon = 5.0;
+        // A fills the site; B is denied once and then abandons the
+        // campaign (never asks again).
+        for _ in 0..4 {
+            s.admit("gpu", "a", None, 0.0, &c).unwrap();
+        }
+        assert!(s.admit("gpu", "b", None, 1.0, &c).is_err());
+        // Within the horizon the ghost of B still claims its share: A
+        // may not re-grow past ceil(4/2)=2.
+        assert!(s.release("gpu", "a", None));
+        assert!(s.admit("gpu", "a", None, 2.0, &c).is_err(), "B's share held");
+        // Past the horizon — but *far* before the 1 h GC retention, and
+        // with no gc_idle call at all — A gets the full site back.
+        s.admit("gpu", "a", None, 6.5, &c).unwrap();
+        s.admit("gpu", "a", None, 6.5, &c).unwrap();
+        assert_eq!(s.site_active("gpu"), 4, "abandoned waiter released the share");
     }
 
     #[test]
@@ -278,22 +545,72 @@ mod tests {
         let mut s = Scheduler::default();
         let c = cfg(4, 0);
         for _ in 0..4 {
-            s.admit("gpu", "a", 0.0, &c).unwrap();
+            s.admit("gpu", "a", None, 0.0, &c).unwrap();
         }
         assert_eq!(s.site_active("gpu"), 4);
+    }
+
+    #[test]
+    fn release_is_exactly_once() {
+        let mut s = Scheduler::default();
+        let c = cfg(0, 0);
+        s.admit("gpu", "a", Some("t"), 0.0, &c).unwrap();
+        assert!(s.release("gpu", "a", Some("t")), "first release balances");
+        assert_eq!(s.total_active(), 0);
+        assert_eq!(s.study_active_total(), 0);
+        assert_eq!(s.tenant_active_total(), 0);
+        // A second release must not mint headroom — counters stay at 0.
+        // (In debug builds the engine paths would trip the assertion;
+        // here we exercise the release-build behavior via the flag.)
+        if cfg!(not(debug_assertions)) {
+            assert!(!s.release("gpu", "a", Some("t")), "double release detected");
+            assert_eq!(s.total_active(), 0);
+            assert_eq!(s.tenant_active_total(), 0);
+        }
+    }
+
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "slot released twice")]
+    fn double_release_asserts_in_debug() {
+        let mut s = Scheduler::default();
+        let c = cfg(0, 0);
+        s.admit("gpu", "a", None, 0.0, &c).unwrap();
+        assert!(s.release("gpu", "a", None));
+        s.release("gpu", "a", None); // panics: nothing left to release
+    }
+
+    #[test]
+    fn site_health_drives_affinity_preference() {
+        let mut s = Scheduler::default();
+        // One site: always preferred (nobody to defer to).
+        s.note_handout("spot");
+        s.note_loss("spot");
+        assert!(s.site_preferred("spot"));
+        // A stable site appears: spot's loss rate (0.5) is now above the
+        // mean (0.25) while stable's (0.0) is below it.
+        s.note_handout("stable");
+        assert!(!s.site_preferred("spot"));
+        assert!(s.site_preferred("stable"));
+        assert!(s.site_preferred("never-seen"), "unknown sites are not penalized");
+        // Uniform fleets: everyone at the mean, everyone preferred.
+        let mut u = Scheduler::default();
+        u.note_handout("a");
+        u.note_handout("b");
+        assert!(u.site_preferred("a") && u.site_preferred("b"));
     }
 
     #[test]
     fn gc_idle_evicts_stale_sites_only() {
         let mut s = Scheduler::default();
         let c = cfg(0, 0);
-        s.admit("busy", "a", 0.0, &c).unwrap();
-        s.admit("idle", "a", 0.0, &c).unwrap();
-        s.release("idle", "a");
+        s.admit("busy", "a", None, 0.0, &c).unwrap();
+        s.admit("idle", "a", None, 0.0, &c).unwrap();
+        assert!(s.release("idle", "a", None));
         // "idle" has no slots but was active recently: kept.
-        assert_eq!(s.gc_idle(10.0, 3600.0), 0);
+        assert_eq!(s.gc_idle(10.0, 3600.0, 30.0), 0);
         // Past the retention window it goes; "busy" still holds a slot.
-        assert_eq!(s.gc_idle(10_000.0, 3600.0), 1);
+        assert_eq!(s.gc_idle(10_000.0, 3600.0, 30.0), 1);
         assert_eq!(s.site_loads(), vec![("busy".to_string(), 1)]);
     }
 
@@ -301,13 +618,32 @@ mod tests {
     fn rebuild_counts_path() {
         let mut s = Scheduler::default();
         let c = cfg(2, 0);
-        s.admit("gpu", "a", 0.0, &c).unwrap();
+        s.admit("gpu", "a", Some("t1"), 0.0, &c).unwrap();
         s.clear_counts();
         assert_eq!(s.site_active("gpu"), 0);
-        s.count_existing("gpu", "a");
-        s.count_existing("gpu", "a");
+        assert_eq!(s.tenant_active("t1"), 0);
+        s.count_existing("gpu", "a", Some("t1"));
+        s.count_existing("gpu", "a", None);
         assert_eq!(s.site_active("gpu"), 2);
+        assert_eq!(s.tenant_active("t1"), 1);
         let loads = s.site_loads();
         assert_eq!(loads, vec![("gpu".to_string(), 2)]);
+        assert_eq!(s.tenant_loads(), vec![("t1".to_string(), 1)]);
+    }
+
+    #[test]
+    fn stats_json_carry_quota_and_tenants() {
+        let mut s = Scheduler::default();
+        let mut c = cfg(4, 0);
+        c.policy.site_quotas.insert("hpc".into(), 64);
+        c.policy.tenant_quota = 2;
+        s.admit("hpc", "a", Some("alice"), 0.0, &c).unwrap();
+        let sites = s.sites_json(&c.policy);
+        assert_eq!(sites.at(0).get("site").as_str(), Some("hpc"));
+        assert_eq!(sites.at(0).get("quota").as_u64(), Some(64), "resolved quota");
+        let tenants = s.tenants_json(&c.policy);
+        assert_eq!(tenants.at(0).get("tenant").as_str(), Some("alice"));
+        assert_eq!(tenants.at(0).get("active").as_u64(), Some(1));
+        assert_eq!(tenants.at(0).get("quota").as_u64(), Some(2));
     }
 }

@@ -9,7 +9,7 @@
 use super::message::{parse_request, ParseState, MAX_HEAD_BYTES};
 use super::{Method, Response, Router};
 use std::io::{ErrorKind, Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::Duration;
@@ -17,12 +17,17 @@ use std::time::Duration;
 /// Server tuning knobs.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
-    /// Worker threads handling connections.
+    /// Worker threads handling connections (`--http-workers`).
     pub workers: usize,
     /// Per-read socket timeout; a keep-alive connection idling longer is
     /// closed.
     pub read_timeout: Duration,
-    /// Upper bound on queued (accepted but unhandled) connections.
+    /// Upper bound on queued (accepted but unhandled) connections
+    /// (`--http-backlog`). **Enforced by shedding**: when every worker
+    /// owns a connection and the queue is full, new connections receive
+    /// `503 Connection: close` immediately instead of waiting
+    /// unboundedly behind a saturated pool — a fleet burst beyond
+    /// capacity gets an explicit back-off signal, not a hung socket.
     pub backlog: usize,
 }
 
@@ -48,6 +53,9 @@ pub struct ServerStats {
     pub connections: AtomicU64,
     pub requests: AtomicU64,
     pub protocol_errors: AtomicU64,
+    /// Connections shed with 503 because the worker pool and its
+    /// backlog were both full.
+    pub shed: AtomicU64,
 }
 
 /// A running server.
@@ -124,8 +132,11 @@ impl Server {
         let stats = self.stats.clone();
         let addr = self.addr;
 
-        // Connection queue feeding the worker pool.
-        let (tx, rx) = mpsc::sync_channel::<TcpStream>(self.config.backlog);
+        // Connection queue feeding the worker pool. Capacity is the
+        // enforced backlog: `try_send` below sheds (503) instead of
+        // blocking the accept loop, so a burst beyond the pool cannot
+        // queue unboundedly in the kernel behind a stalled accept.
+        let (tx, rx) = mpsc::sync_channel::<TcpStream>(self.config.backlog.max(1));
         let rx = Arc::new(Mutex::new(rx));
 
         for _ in 0..self.config.workers.max(1) {
@@ -151,6 +162,7 @@ impl Server {
 
         let listener = self.listener;
         let shutdown2 = self.shutdown.clone();
+        let stats2 = self.stats.clone();
         let accept_thread = std::thread::spawn(move || {
             for stream in listener.incoming() {
                 if shutdown2.load(Ordering::SeqCst) {
@@ -160,8 +172,42 @@ impl Server {
                     Ok(s) => {
                         // Nagle off: responses are small and latency-bound.
                         let _ = s.set_nodelay(true);
-                        if tx.send(s).is_err() {
-                            break;
+                        match tx.try_send(s) {
+                            Ok(()) => {}
+                            Err(mpsc::TrySendError::Full(mut s)) => {
+                                // Pool + backlog saturated: shed with an
+                                // explicit 503 so the client backs off,
+                                // instead of parking the accept loop and
+                                // letting connections pile up unbounded.
+                                stats2.shed.fetch_add(1, Ordering::Relaxed);
+                                let resp = Response::error(
+                                    503,
+                                    "server overloaded: connection backlog full",
+                                );
+                                let _ = s.write_all(&resp.encode(false, false));
+                                // Drain the request before closing:
+                                // dropping a socket with unread data
+                                // makes the OS send RST, which can
+                                // destroy the 503 before the client
+                                // reads it. A short read timeout also
+                                // catches bytes still in flight from a
+                                // remote client, while bounding how
+                                // long one shed connection can stall
+                                // the accept loop (~2×25 ms worst
+                                // case for a trickling sender).
+                                let _ = s.shutdown(Shutdown::Write);
+                                let _ = s.set_read_timeout(Some(
+                                    Duration::from_millis(25),
+                                ));
+                                let mut scratch = [0u8; 4096];
+                                for _ in 0..2 {
+                                    match s.read(&mut scratch) {
+                                        Ok(n) if n > 0 => continue,
+                                        _ => break,
+                                    }
+                                }
+                            }
+                            Err(mpsc::TrySendError::Disconnected(_)) => break,
                         }
                     }
                     Err(_) => continue,
@@ -332,6 +378,41 @@ mod tests {
         // Connection still usable afterwards.
         let r2 = c.get("/ping").unwrap();
         assert_eq!(r2.status, 200);
+        h.stop();
+    }
+
+    #[test]
+    fn backlog_overflow_sheds_with_503() {
+        // One worker, one backlog slot: the third concurrent connection
+        // must be shed with 503 instead of queueing unboundedly.
+        let mut router = Router::new();
+        router.get("/ping", |_, _| Response::text("pong"));
+        let cfg = ServerConfig { workers: 1, backlog: 1, ..Default::default() };
+        let h = Server::bind("127.0.0.1:0", router, cfg).unwrap().start();
+
+        // c1: served a request, so the lone worker now owns it.
+        let mut c1 = Client::connect(h.addr()).unwrap();
+        assert_eq!(c1.get("/ping").unwrap().status, 200);
+        // c2: accepted into the single backlog slot.
+        let c2 = TcpStream::connect(h.addr()).unwrap();
+        // Give the accept loop a beat to queue c2.
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        // c3: pool busy + backlog full → immediate 503, connection closed.
+        let mut c3 = TcpStream::connect(h.addr()).unwrap();
+        let mut out = String::new();
+        c3.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 503"), "got: {out}");
+        assert!(out.contains("overloaded"), "got: {out}");
+        assert!(h.stats().shed.load(Ordering::Relaxed) >= 1);
+
+        // Draining c1 frees the worker: the queued c2 is then served.
+        drop(c1);
+        let mut c2 = c2;
+        c2.write_all(b"GET /ping HTTP/1.1\r\nhost: t\r\nconnection: close\r\n\r\n")
+            .unwrap();
+        let mut out = String::new();
+        c2.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 200"), "queued connection served: {out}");
         h.stop();
     }
 

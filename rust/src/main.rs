@@ -48,7 +48,9 @@ USAGE: hopaas <command> [flags]
 COMMANDS:
   serve             run the HOPAAS server
                     --addr HOST:PORT   (default 127.0.0.1:8021)
-                    --workers N        HTTP worker threads (default 8)
+                    --http-workers N   HTTP worker threads (default 128;
+                                       --workers is the legacy alias)
+                    --http-backlog N   queued connections before shedding 503
                     --data-dir PATH    durable WAL+snapshot storage
                     --no-auth          disable token auth (dev only)
                     --secret S         HMAC token secret
@@ -59,9 +61,18 @@ COMMANDS:
                     --replay-threads N parallel recovery partitions (0 = per shard)
                     --lease-timeout S  worker heartbeat lease seconds
                                        (default 60; 0 disables leases)
-                    --site-quota N     max concurrent trials per site (0 = off)
+                    --site-quota N     default max concurrent trials per site
+                    --site-quota-map site=N,...  per-site overrides (0 = off)
                     --study-quota N    max concurrent trials per study (0 = off)
+                    --tenant-quota N   default max concurrent trials per tenant
+                                       (the auth token's user; 0 = off)
+                    --tenant-quota-map user=N,...  per-tenant overrides
+                    --fairness-horizon S  fair-share waiting-mark lifetime /
+                                       affinity grace (default 30)
+                    --site-affinity    hand requeued trials to healthier sites
                     --requeue-max N    requeues before a preempted trial fails
+                    --dead-worker-keep N  retired workers kept by the fleet GC
+                    --site-idle-retention S  idle-site eviction window
                     --config FILE      JSON config (flags override)
   token             mint an API token offline
                     --secret S --user NAME --ttl SECONDS

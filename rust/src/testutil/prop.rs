@@ -324,6 +324,141 @@ mod tests {
         });
     }
 
+    /// Fuzz the fleet's slot accounting: a random schedule of
+    /// admit+bind / finish / requeue / re-handout operations over
+    /// random sites, studies, tenants and quotas must keep the
+    /// scheduler's three counter ledgers (per-site, per-study,
+    /// per-tenant) exactly equal to the live lease table — the
+    /// "sum of per-site counts == live lease count" invariant that a
+    /// masked double-release (the old `saturating_sub`) would silently
+    /// violate.
+    #[test]
+    fn prop_fleet_slot_accounting_matches_live_leases() {
+        use crate::fleet::{Fleet, FleetConfig, FleetState, QuotaPolicy};
+
+        fn check_invariant(st: &FleetState) -> PropResult {
+            let live = st.leases.len() as u64;
+            let with_tenant =
+                st.leases.iter().filter(|(_, info)| info.tenant.is_some()).count() as u64;
+            assert_holds(
+                st.sched.total_active() == live,
+                format!("site slots {} != live leases {live}", st.sched.total_active()),
+            )?;
+            assert_holds(
+                st.sched.study_active_total() == live,
+                format!("study slots {} != live leases {live}", st.sched.study_active_total()),
+            )?;
+            assert_holds(
+                st.sched.tenant_active_total() == with_tenant,
+                format!(
+                    "tenant slots {} != tenant leases {with_tenant}",
+                    st.sched.tenant_active_total()
+                ),
+            )
+        }
+
+        check(48, |g| {
+            let sites = ["cloud", "spot", "hpc"];
+            let tenants: [Option<&str>; 3] = [None, Some("alice"), Some("bob")];
+            let config = FleetConfig {
+                lease_timeout: Some(1e9),
+                policy: QuotaPolicy {
+                    site_quota: g.usize(0, 3) as u32,
+                    study_quota: g.usize(0, 3) as u32,
+                    tenant_quota: g.usize(0, 2) as u32,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let fleet = Fleet::new(config);
+            let mut st = fleet.lock();
+            let mut workers = Vec::new();
+            for i in 0..g.usize(1, 4) {
+                let id = st.registry.next_id();
+                let site = *g.choose(&sites);
+                st.registry
+                    .apply_register(id, &format!("w{i}"), site, "gpu", 0.0, 1e9);
+                workers.push(id);
+            }
+            let mut next_tid = 1u64;
+            // (trial, study) of live leases / queued requeues we drive.
+            let mut live: Vec<(u64, String)> = Vec::new();
+            let mut queued: Vec<String> = Vec::new();
+            for _ in 0..g.usize(1, 48) {
+                match g.usize(0, 3) {
+                    // Fresh admission: admit + bind (or nothing on 429).
+                    0 => {
+                        let w = *g.choose(&workers);
+                        let study = format!("s{}", g.usize(0, 2));
+                        let tenant = *g.choose(&tenants);
+                        if let Ok(site) = st.admit(w, &study, tenant, 0.0, &fleet.config) {
+                            st.bind(next_tid, w, &study, &site, tenant, 0.0);
+                            live.push((next_tid, study));
+                            next_tid += 1;
+                        }
+                    }
+                    // Terminal transition: the lease-gated single release.
+                    1 => {
+                        if !live.is_empty() {
+                            let (tid, study) = live.swap_remove(g.usize(0, live.len() - 1));
+                            st.finish_trial(tid, &study);
+                            // A second finish must be a no-op, not an
+                            // underflow (lease already gone).
+                            st.finish_trial(tid, &study);
+                        }
+                    }
+                    // Worker loss: requeue exactly once.
+                    2 => {
+                        if !live.is_empty() {
+                            let (tid, study) = live.swap_remove(g.usize(0, live.len() - 1));
+                            let w = st.leases.get(tid).expect("live lease").worker;
+                            assert_holds(st.requeue(tid, w, 0.0), "requeue of live lease")?;
+                            assert_holds(!st.requeue(tid, w, 0.0), "second requeue is a no-op")?;
+                            queued.push(study);
+                        }
+                    }
+                    // Re-handout of a queued trial (the engine's
+                    // pop → admit → bind-or-push-front path).
+                    _ => {
+                        if !queued.is_empty() {
+                            let study = queued.swap_remove(g.usize(0, queued.len() - 1));
+                            let Some(tid) = st.leases.pop_front(&study) else {
+                                return Err(format!("queue for {study} unexpectedly empty"));
+                            };
+                            let w = *g.choose(&workers);
+                            let tenant = *g.choose(&tenants);
+                            match st.admit(w, &study, tenant, 0.0, &fleet.config) {
+                                Ok(site) => {
+                                    st.bind(tid, w, &study, &site, tenant, 0.0);
+                                    live.push((tid, study));
+                                }
+                                Err(_) => {
+                                    st.leases.push_front(&study, tid, 0.0);
+                                    queued.push(study);
+                                }
+                            }
+                        }
+                    }
+                }
+                check_invariant(&st)?;
+            }
+            // Drain: finish every live lease and drop every queued
+            // trial; all three ledgers must return to exactly zero.
+            for (tid, study) in live.drain(..) {
+                st.finish_trial(tid, &study);
+            }
+            for study in queued.drain(..) {
+                if let Some(tid) = st.leases.pop_front(&study) {
+                    st.finish_trial(tid, &study);
+                }
+            }
+            check_invariant(&st)?;
+            assert_holds(st.sched.total_active() == 0, "site ledger drained")?;
+            assert_holds(st.sched.tenant_active_total() == 0, "tenant ledger drained")?;
+            assert_holds(st.leases.queue_depth() == 0, "queue drained")
+        });
+    }
+
     #[test]
     fn passing_property_passes() {
         check(64, |g| {

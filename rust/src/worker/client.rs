@@ -185,11 +185,29 @@ pub struct HopaasClient {
     /// Fleet worker identity, set by [`HopaasClient::register_worker`];
     /// when present every `ask` is lease-bound to it.
     worker_id: Option<u64>,
+    /// Declared tenant identity for `--no-auth` servers (dev, benches,
+    /// the campaign simulator). Against an authenticated server the
+    /// token's user claim is the tenant and this field is ignored
+    /// server-side — it cannot be used to spoof another tenant.
+    tenant: Option<String>,
 }
 
 impl HopaasClient {
     pub fn connect(addr: SocketAddr, token: String) -> Result<HopaasClient, WorkerError> {
-        Ok(HopaasClient { http: Client::connect(addr)?, token, worker_id: None })
+        Ok(HopaasClient { http: Client::connect(addr)?, token, worker_id: None, tenant: None })
+    }
+
+    /// Declare a tenant identity on asks (effective only against
+    /// `--no-auth` servers; see the `tenant` field docs).
+    pub fn as_tenant(mut self, tenant: &str) -> Self {
+        self.tenant = Some(tenant.to_string());
+        self
+    }
+
+    /// Set the declared tenant in place (simulator nodes switch
+    /// identities without rebuilding the connection).
+    pub fn set_tenant(&mut self, tenant: Option<String>) {
+        self.tenant = tenant;
     }
 
     fn check(resp: crate::http::Response) -> Result<Value, WorkerError> {
@@ -286,6 +304,9 @@ impl HopaasClient {
         let mut body = spec.to_body();
         if let (Some(wid), Value::Obj(o)) = (self.worker_id, &mut body) {
             o.set("worker", wid);
+        }
+        if let (Some(t), Value::Obj(o)) = (&self.tenant, &mut body) {
+            o.set("tenant", t.as_str());
         }
         let v = Self::check(self.http.post_json(&path, &body)?)?;
         Ok(TrialHandle {
@@ -444,6 +465,36 @@ mod tests {
         assert_eq!(c.heartbeat().unwrap(), 0, "tell released it");
         assert_eq!(c.deregister_worker().unwrap(), 0);
         assert_eq!(c.worker_id(), None);
+        s.stop();
+    }
+
+    #[test]
+    fn tenant_identity_on_no_auth_servers() {
+        let config = HopaasConfig {
+            auth_required: false,
+            engine: crate::coordinator::engine::EngineConfig {
+                tenant_quota: 1,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let s = HopaasServer::start("127.0.0.1:0", config).unwrap();
+        let mut c = HopaasClient::connect(s.addr(), "t".into())
+            .unwrap()
+            .as_tenant("alice");
+        c.register_worker("n1", "cloud", "gpu").unwrap();
+        let spec = StudySpec::new("tq").uniform("x", 0.0, 1.0).sampler("random");
+        let t1 = c.ask(&spec).unwrap();
+        // One lease held, tenant quota 1: the denial names the tenant.
+        match c.ask(&spec) {
+            Err(WorkerError::Api { status: 429, detail }) => {
+                assert!(detail.contains("alice"), "{detail}");
+            }
+            other => panic!("expected tenant 429, got {other:?}"),
+        }
+        c.tell(&t1, 1.0).unwrap();
+        let t2 = c.ask(&spec).unwrap();
+        c.tell(&t2, 2.0).unwrap();
         s.stop();
     }
 

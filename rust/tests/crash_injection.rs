@@ -253,6 +253,89 @@ fn kill_point_inside_lease_requeue_is_exactly_once() {
 }
 
 #[test]
+fn kill_point_during_tenant_bind_rebuilds_tenant_counters() {
+    // A tenant-attributed ask dies on the fsync of its trial_new +
+    // lease_bind batch. The ask is NACKed (500) and its admission slot
+    // returned in memory — but the dead process cannot roll the
+    // unsynced frames back off disk (rollback is itself a kill-point),
+    // so recovery replays *both* binds. The contract under test: the
+    // tenant ledger always equals the lease table exactly — the torn
+    // ask's slot is either absent (frame lost) or fully present (frame
+    // survived), never half-counted — and quota headroom is computed
+    // from that exact ledger.
+    fn ask_body_worker(study: &str, worker: u64) -> Value {
+        let mut v = ask_body(study);
+        if let Value::Obj(o) = &mut v {
+            o.set("worker", worker);
+        }
+        v
+    }
+    let fleet_config = EngineConfig {
+        n_shards: N_SHARDS,
+        lease_timeout: Some(60.0),
+        tenant_quota: 2,
+        ..Default::default()
+    };
+    let dir = TempDir::new("ci-tenant-bind");
+    let ks = KillSwitch::new();
+    let first;
+    {
+        let storage = Storage::open_with_hook(dir.path(), Some(ks.hook())).unwrap();
+        let engine = Engine::open_with_storage(storage, fleet_config.clone()).unwrap();
+        let (w, _) = engine.register_worker("w1", "cloud", "gpu").unwrap();
+        let r1 = engine
+            .ask_as(&ask_body_worker("tb", w), Some("alice"))
+            .unwrap();
+        first = r1.trial_id;
+        assert_eq!(engine.fleet().lock().sched.tenant_active("alice"), 1);
+        // Next fsync dies: the second ask's batch is never acknowledged.
+        ks.arm_nth("sync", 0);
+        assert!(
+            engine.ask_as(&ask_body_worker("tb", w), Some("alice")).is_err(),
+            "ask must fail when its batch cannot be made durable"
+        );
+        assert!(ks.fired());
+        // The failed admission was returned: no phantom slot in memory.
+        assert_eq!(engine.fleet().lock().sched.tenant_active("alice"), 1);
+    }
+    let engine = Engine::open(dir.path(), fleet_config).unwrap();
+    let alice_leases = {
+        let fl = engine.fleet().lock();
+        let alice_leases = fl
+            .leases
+            .iter()
+            .filter(|(_, info)| info.tenant.as_deref() == Some("alice"))
+            .count() as u32;
+        assert!(
+            (1..=2).contains(&alice_leases),
+            "acknowledged bind must survive; torn bind may: {alice_leases}"
+        );
+        assert_eq!(
+            fl.sched.tenant_active("alice"),
+            alice_leases,
+            "tenant ledger rebuilt exactly from the surviving leases"
+        );
+        alice_leases
+    };
+    // Quota 2: exactly the remaining headroom fits, then the denial
+    // still names the tenant.
+    let (w2, _) = engine.register_worker("w2", "cloud", "gpu").unwrap();
+    for _ in alice_leases..2 {
+        let r = engine.ask_as(&ask_body_worker("tb", w2), Some("alice")).unwrap();
+        assert!(!r.requeued);
+    }
+    let err = engine
+        .ask_as(&ask_body_worker("tb", w2), Some("alice"))
+        .unwrap_err();
+    assert!(err.to_string().contains("tenant 'alice'"), "{err}");
+    // The surviving lease releases its slot on tell, reopening headroom.
+    engine.tell(first, 1.0).unwrap();
+    assert_eq!(engine.fleet().lock().sched.tenant_active("alice"), 1);
+    let r = engine.ask_as(&ask_body_worker("tb", w2), Some("alice")).unwrap();
+    assert!(!r.requeued);
+}
+
+#[test]
 fn kill_during_group_commit_never_loses_an_acknowledged_tell() {
     // The fsync of some mid-workload batch fails; the in-flight
     // mutation is NACKed (the engine returns 500), and everything

@@ -392,6 +392,175 @@ fn prop_lost_workers_trials_reassigned_exactly_once() {
     });
 }
 
+/// Per-site quota overrides beat the uniform default, and denials name
+/// the site they protect.
+#[test]
+fn per_site_override_beats_default_quota() {
+    let mut site_quota_map = HashMap::new();
+    site_quota_map.insert("marconi100".to_string(), 3u32);
+    let e = Engine::in_memory(EngineConfig {
+        lease_timeout: Some(30.0),
+        site_quota: 1,
+        site_quota_map,
+        ..Default::default()
+    });
+    let (w_small, _) = e.register_worker("w1", "private", "gtx").unwrap();
+    let (w_big, _) = e.register_worker("w2", "marconi100", "v100").unwrap();
+    // Default site: one slot.
+    e.ask(&ask_body_worker("q", w_small)).unwrap();
+    let err = e.ask(&ask_body_worker("q", w_small)).unwrap_err();
+    assert!(matches!(err, ApiError::Quota(_)));
+    assert!(err.to_string().contains("site 'private'"), "{err}");
+    // Overridden site: three slots, independent of the default.
+    for _ in 0..3 {
+        e.ask(&ask_body_worker("q", w_big)).unwrap();
+    }
+    let err = e.ask(&ask_body_worker("q", w_big)).unwrap_err();
+    assert!(err.to_string().contains("site 'marconi100'"), "{err}");
+    // The stats block reports the resolved quota per site.
+    let stats = e.stats_json();
+    for sv in stats.get("fleet").get("sites").as_arr().unwrap() {
+        let want = match sv.get("site").as_str().unwrap() {
+            "marconi100" => 3,
+            _ => 1,
+        };
+        assert_eq!(sv.get("quota").as_u64(), Some(want), "{sv}");
+    }
+}
+
+/// Per-tenant quotas: 429s carry the tenant, counters follow leases
+/// across tell/requeue, and recovery (log replay *and* compaction
+/// segments) rebuilds the tenant ledger exactly as live admission
+/// counted it.
+#[test]
+fn tenant_quota_survives_recovery_with_attribution() {
+    use hopaas::testutil::TempDir;
+    let d = TempDir::new("fleet-tenant-recovery");
+    let config = EngineConfig { tenant_quota: 2, ..Default::default() };
+    let first_trial;
+    {
+        let e = Engine::open(d.path(), config.clone()).unwrap();
+        let (w, _) = e.register_worker("w1", "cloud", "gpu").unwrap();
+        let r1 = e.ask_as(&ask_body_worker("tq", w), Some("alice")).unwrap();
+        first_trial = r1.trial_id;
+        e.ask_as(&ask_body_worker("tq", w), Some("alice")).unwrap();
+        // Budget of two spent: the third ask names the tenant.
+        let err = e.ask_as(&ask_body_worker("tq", w), Some("alice")).unwrap_err();
+        assert!(matches!(err, ApiError::Quota(_)));
+        assert!(err.to_string().contains("tenant 'alice'"), "{err}");
+        // Another tenant is unaffected (and releases on tell).
+        let rb = e.ask_as(&ask_body_worker("tq", w), Some("bob")).unwrap();
+        e.tell(rb.trial_id, 1.0).unwrap();
+        assert_eq!(e.fleet().lock().sched.tenant_active("bob"), 0);
+    }
+    // Reopen from the log: the two live leases rebuild alice's ledger.
+    {
+        let e = Engine::open(d.path(), config.clone()).unwrap();
+        assert_eq!(e.fleet().lock().sched.tenant_active("alice"), 2);
+        let (w2, _) = e.register_worker("w2", "cloud", "gpu").unwrap();
+        let err = e.ask_as(&ask_body_worker("tq", w2), Some("alice")).unwrap_err();
+        assert!(err.to_string().contains("tenant 'alice'"), "{err}");
+        // Compact so the fleet segment (not the log) carries the leases.
+        e.compact().unwrap();
+    }
+    // Reopen from the segment: same ledger, and headroom returns once a
+    // lease is released.
+    let e = Engine::open(d.path(), config).unwrap();
+    assert_eq!(e.recovery_stats().recovered_records, 0, "state came from segments");
+    assert_eq!(e.fleet().lock().sched.tenant_active("alice"), 2);
+    let (w3, _) = e.register_worker("w3", "cloud", "gpu").unwrap();
+    assert!(e.ask_as(&ask_body_worker("tq", w3), Some("alice")).is_err());
+    e.tell(first_trial, 0.5).unwrap();
+    assert_eq!(e.fleet().lock().sched.tenant_active("alice"), 1);
+    let r = e.ask_as(&ask_body_worker("tq", w3), Some("alice")).unwrap();
+    assert!(!r.requeued);
+}
+
+/// Site affinity: a site bleeding workers is deferred when a requeued
+/// trial waits — the healthier site gets it, with the trial's id,
+/// number and params untouched — and the suggestion stream stays
+/// byte-identical to a sequential engine (the acceptance criterion for
+/// affinity on vs. off).
+#[test]
+fn affinity_requeue_prefers_healthy_site_and_preserves_identity() {
+    let config = EngineConfig {
+        lease_timeout: Some(0.01),
+        site_affinity: true,
+        fairness_horizon: 60.0,
+        ..Default::default()
+    };
+    let e = Engine::in_memory(config);
+    let mut issued: Vec<(u64, u64, String)> = Vec::new();
+    // A stable site does one clean trial (healthy ledger entry).
+    let (w_stable, _) = e.register_worker("st1", "stable", "gpu").unwrap();
+    let r = e.ask(&ask_body_worker("aff", w_stable)).unwrap();
+    issued.push((r.trial_id, r.trial_number, r.params.to_string()));
+    e.tell(r.trial_id, 0.1).unwrap();
+    // A spot worker takes a trial and vanishes: spot's loss rate rises
+    // above the fleet mean.
+    let (w_spot, _) = e.register_worker("sp1", "spot", "gpu").unwrap();
+    let lost = e.ask(&ask_body_worker("aff", w_spot)).unwrap();
+    issued.push((lost.trial_id, lost.trial_number, lost.params.to_string()));
+    std::thread::sleep(Duration::from_millis(30));
+    // Both workers' deadlines passed during the sleep; only the spot
+    // worker held a lease, so exactly one trial is requeued. The site
+    // health ledger outlives the workers.
+    assert_eq!(e.expire_leases(), 1, "spot worker lost, trial requeued");
+    // A replacement spot worker asks: the queued trial is *deferred*
+    // (held for a healthier site) and the worker gets a fresh trial.
+    let (w_spot2, _) = e.register_worker("sp2", "spot", "gpu").unwrap();
+    let fresh = e.ask(&ask_body_worker("aff", w_spot2)).unwrap();
+    assert!(!fresh.requeued, "unhealthy site deferred within the grace window");
+    issued.push((fresh.trial_id, fresh.trial_number, fresh.params.to_string()));
+    assert!(e.metrics.fleet_affinity_deferrals.get() >= 1);
+    assert_eq!(e.fleet().lock().leases.queue_depth(), 1, "trial still waiting");
+    // A stable-site worker takes it: identical id, number and params.
+    let (w_stable2, _) = e.register_worker("st2", "stable", "gpu").unwrap();
+    let q = e.ask(&ask_body_worker("aff", w_stable2)).unwrap();
+    assert!(q.requeued, "healthy site is served the queued trial");
+    assert_eq!(
+        (q.trial_id, q.trial_number, q.params.to_string()),
+        (lost.trial_id, lost.trial_number, lost.params.to_string())
+    );
+    // Suggestion stream byte-identical to a sequential, affinity-free,
+    // preemption-free engine.
+    let clean = Engine::in_memory(EngineConfig::default());
+    issued.sort_by_key(|(_, n, _)| *n);
+    for (_, n, params) in &issued {
+        let c = clean.ask(&ask_body("aff")).unwrap();
+        assert_eq!(c.trial_number, *n);
+        assert_eq!(&c.params.to_string(), params, "stream diverged at {n}");
+    }
+}
+
+/// Affinity is a preference, not a starvation: once the queue head has
+/// waited out the fairness horizon, even an unhealthy site takes it.
+#[test]
+fn affinity_grace_prevents_starvation() {
+    let e = Engine::in_memory(EngineConfig {
+        lease_timeout: Some(0.01),
+        site_affinity: true,
+        // The serve path clamps the horizon to ≥ 1 s; the engine takes
+        // it as-is, which keeps this test fast.
+        fairness_horizon: 0.05,
+        ..Default::default()
+    });
+    let (w_stable, _) = e.register_worker("st1", "stable", "gpu").unwrap();
+    let ok = e.ask(&ask_body_worker("g", w_stable)).unwrap();
+    e.tell(ok.trial_id, 0.1).unwrap();
+    let (w_spot, _) = e.register_worker("sp1", "spot", "gpu").unwrap();
+    let lost = e.ask(&ask_body_worker("g", w_spot)).unwrap();
+    std::thread::sleep(Duration::from_millis(30));
+    assert_eq!(e.expire_leases(), 1);
+    // Wait out the grace, then the unhealthy site is allowed the trial.
+    std::thread::sleep(Duration::from_millis(80));
+    let (w_spot2, _) = e.register_worker("sp2", "spot", "gpu").unwrap();
+    let q = e.ask(&ask_body_worker("g", w_spot2)).unwrap();
+    assert!(q.requeued, "grace expired: no starvation");
+    assert_eq!(q.trial_id, lost.trial_id);
+    e.tell(q.trial_id, 1.0).unwrap();
+}
+
 /// Requeued trials survive a server restart: the queue itself is
 /// durable (journaled `trial_requeue` records + the fleet segment).
 #[test]
