@@ -1,12 +1,16 @@
 //! Recovery benchmark: replay wall-clock of a large WAL at 1 / 4 / 8 /
-//! 16 shards.
+//! 16 shards, plus a compaction-latency phase at 1 / 4 / 16 shards ×
+//! 1 / 4 segment-cut threads.
 //!
 //! Recovery partitions the log by study and replays each partition on
 //! its own thread (one per shard by default), so wall-clock should
 //! scale *down* as the shard count grows — the 1-shard row is the
-//! sequential-replay baseline. Results are printed as a table and
-//! written to `BENCH_recovery.json` at the repository root so CI can
-//! archive the trajectory.
+//! sequential-replay baseline. The compaction phase measures
+//! `Engine::compact` wall time: segment cuts fan out on the
+//! `--compact-threads` side pool, so on a multi-shard store the
+//! 4-thread rows should beat the 1-thread (sequential-cut) baseline.
+//! Results are printed as tables and written to `BENCH_recovery.json`
+//! at the repository root so CI can archive both trajectories.
 //!
 //! Run: `cargo bench --bench recovery [-- --records N]`
 //! (default 120_000 records ≈ 60k ask+tell pairs across 16 studies).
@@ -146,12 +150,70 @@ fn main() {
         rows.push(Value::Obj(row));
     }
 
+    // Phase 2: compaction latency — total wall of `Engine::compact` at
+    // 1/4/16 shards × 1/4 cut threads. Each cell builds its own fresh
+    // store (a compacted store has nothing left to cut), smaller than
+    // the replay log so the phase stays cheap in CI.
+    let compact_trials = ((records / 8).max(N_STUDIES as u64)).min(10_000);
+    println!("\ncompaction: {compact_trials} told trials per cell, {N_STUDIES} studies\n");
+    let ctable = Table::new(
+        &["shards", "threads", "compact wall", "speedup vs 1 thread"],
+        &[8, 9, 14, 20],
+    );
+    let mut compact_rows: Vec<Value> = Vec::new();
+    for &shards in &[1usize, 4, 16] {
+        let mut thread1 = 0.0f64;
+        for &threads in &[1usize, 4] {
+            let cdir = Scratch(std::env::temp_dir().join(format!(
+                "hopaas-bench-compact-{}-{shards}-{threads}",
+                std::process::id()
+            )));
+            let _ = std::fs::remove_dir_all(&cdir.0);
+            std::fs::create_dir_all(&cdir.0).unwrap();
+            let engine = Engine::open(
+                &cdir.0,
+                EngineConfig {
+                    n_shards: shards,
+                    compact_threads: threads,
+                    compact_after: u64::MAX,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            for i in 0..compact_trials {
+                let study = (i % N_STUDIES as u64) as usize;
+                let r = engine.ask(&ask_body(study)).unwrap();
+                engine.tell(r.trial_id, (i % 100) as f64).unwrap();
+            }
+            let t0 = Instant::now();
+            engine.compact().unwrap();
+            let wall = t0.elapsed().as_secs_f64();
+            if threads == 1 {
+                thread1 = wall;
+            }
+            let speedup = thread1 / wall;
+            ctable.row(&[
+                &shards.to_string(),
+                &threads.to_string(),
+                &fmt_duration(wall),
+                &format!("{speedup:.2}x"),
+            ]);
+            let mut row = Value::obj();
+            row.set("shards", shards)
+                .set("compact_threads", threads)
+                .set("compact_wall_s", wall)
+                .set("speedup_vs_1_thread", speedup);
+            compact_rows.push(Value::Obj(row));
+        }
+    }
+
     let mut out = Value::obj();
     out.set("bench", "recovery")
         .set("records", records)
         .set("log_bytes", log_bytes)
         .set("build_wall_s", build_wall)
-        .set("rows", Value::Arr(rows));
+        .set("rows", Value::Arr(rows))
+        .set("compaction", Value::Arr(compact_rows));
     let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .join("..")
         .join("BENCH_recovery.json");

@@ -98,6 +98,7 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
     let mut secret = "hopaas-dev-secret".to_string();
     let mut data_dir: Option<String> = None;
     let mut compact_after = 50_000u64;
+    let mut compact_threads = 0u64;
     let mut reap_after = 3600.0f64;
     let mut seed = 0x4f50_5441_4153u64;
     let mut n_shards = 8u64;
@@ -111,6 +112,8 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
     let mut study_quota = 0u64;
     let mut tenant_quota = 0u64;
     let mut tenant_quota_map: HashMap<String, u32> = HashMap::new();
+    let mut tenant_ask_rate = 0u64;
+    let mut tenant_ask_window = 60.0f64;
     let mut fairness_horizon = 30.0f64;
     let mut site_affinity = false;
     let mut requeue_max = 3u64;
@@ -140,6 +143,9 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
         }
         if let Some(x) = v.get("compact_after").as_u64() {
             compact_after = x;
+        }
+        if let Some(x) = v.get("compact_threads").as_u64() {
+            compact_threads = x;
         }
         if let Some(x) = v.get("reap_after").as_f64() {
             reap_after = x;
@@ -179,6 +185,12 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
         if !v.get("tenant_quotas").is_null() {
             tenant_quota_map = QuotaPolicy::map_from_json(v.get("tenant_quotas"))
                 .map_err(|e| format!("config {path}: tenant_quotas: {e}"))?;
+        }
+        if let Some(x) = v.get("tenant_ask_rate").as_u64() {
+            tenant_ask_rate = x;
+        }
+        if let Some(x) = v.get("tenant_ask_window").as_f64() {
+            tenant_ask_window = x;
         }
         if let Some(x) = v.get("fairness_horizon").as_f64() {
             fairness_horizon = x;
@@ -223,6 +235,7 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
         data_dir = Some(d.to_string());
     }
     compact_after = args.get_u64("compact-after", compact_after);
+    compact_threads = args.get_u64("compact-threads", compact_threads);
     reap_after = args.get_f64("reap-after", reap_after);
     seed = args.get_u64("seed", seed);
     n_shards = args.get_u64("shards", n_shards).max(1);
@@ -248,6 +261,8 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
         tenant_quota_map =
             QuotaPolicy::parse_map(spec).map_err(|e| format!("--tenant-quota-map: {e}"))?;
     }
+    tenant_ask_rate = args.get_u64("tenant-ask-rate", tenant_ask_rate);
+    tenant_ask_window = args.get_f64("tenant-ask-window", tenant_ask_window);
     fairness_horizon = args.get_f64("fairness-horizon", fairness_horizon);
     if args.get("site-affinity").is_some() {
         site_affinity = args.get_bool("site-affinity");
@@ -264,6 +279,7 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
         engine: EngineConfig {
             seed,
             compact_after,
+            compact_threads: compact_threads as usize,
             reap_after: if reap_after > 0.0 { Some(reap_after) } else { None },
             history_snapshot: args.get_u64("history-snapshot", 2048) as usize,
             n_shards: n_shards as usize,
@@ -276,6 +292,8 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
             study_quota: study_quota as u32,
             tenant_quota: tenant_quota as u32,
             tenant_quota_map,
+            tenant_ask_rate: tenant_ask_rate as u32,
+            tenant_ask_window: tenant_ask_window.max(1.0),
             fairness_horizon: fairness_horizon.max(1.0),
             site_affinity,
             requeue_max: requeue_max as u32,
@@ -417,6 +435,38 @@ mod tests {
     fn bad_config_file_errors() {
         let a = args("serve --config /nope/nope.json");
         assert!(server_config(&a).is_err());
+    }
+
+    #[test]
+    fn compaction_and_ask_rate_flags_layer_into_engine_config() {
+        let a = args("serve");
+        let (_, cfg) = server_config(&a).unwrap();
+        assert_eq!(cfg.engine.compact_threads, 0, "0 = min(shards, cores)");
+        assert_eq!(cfg.engine.tenant_ask_rate, 0, "rate limiting off by default");
+        assert_eq!(cfg.engine.tenant_ask_window, 60.0);
+        let a = args("serve --compact-threads 4 --tenant-ask-rate 30 --tenant-ask-window 10");
+        let (_, cfg) = server_config(&a).unwrap();
+        assert_eq!(cfg.engine.compact_threads, 4);
+        assert_eq!(cfg.engine.tenant_ask_rate, 30);
+        assert_eq!(cfg.engine.tenant_ask_window, 10.0);
+        // A degenerate window clamps to a second instead of dividing by
+        // (almost) zero in the ledger.
+        let a = args("serve --tenant-ask-window 0");
+        let (_, cfg) = server_config(&a).unwrap();
+        assert_eq!(cfg.engine.tenant_ask_window, 1.0);
+        // File keys mirror the flags.
+        let d = TempDir::new("config-compact");
+        let p = d.path().join("hopaas.json");
+        std::fs::write(
+            &p,
+            r#"{"compact_threads": 2, "tenant_ask_rate": 5, "tenant_ask_window": 30.0}"#,
+        )
+        .unwrap();
+        let a = args(&format!("serve --config {}", p.display()));
+        let (_, cfg) = server_config(&a).unwrap();
+        assert_eq!(cfg.engine.compact_threads, 2);
+        assert_eq!(cfg.engine.tenant_ask_rate, 5);
+        assert_eq!(cfg.engine.tenant_ask_window, 30.0);
     }
 
     #[test]

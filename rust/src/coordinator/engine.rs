@@ -79,6 +79,12 @@ pub struct EngineConfig {
     pub seed: u64,
     /// Compact the WAL into a snapshot after this many records.
     pub compact_after: u64,
+    /// Side threads cutting snapshot segments during a compaction.
+    /// 0 (the default) means `min(n_shards, cores)`; 1 reproduces the
+    /// sequential one-segment-at-a-time layout byte for byte. Whatever
+    /// the pool size, the manifest commit stays serialized through the
+    /// WAL writer thread.
+    pub compact_threads: usize,
     /// Mark a running trial failed if silent for this many seconds
     /// (opportunistic nodes vanish without a goodbye). `None` disables.
     pub reap_after: Option<f64>,
@@ -120,6 +126,13 @@ pub struct EngineConfig {
     pub tenant_quota: u32,
     /// Per-tenant quota overrides (`tenant → quota`).
     pub tenant_quota_map: HashMap<String, u32>,
+    /// Max worker-less (legacy, lease-less) asks per tenant within the
+    /// sliding ask-rate window (0 = unlimited). Lease quotas cannot
+    /// bound clients that never hold a lease; this ledger closes that
+    /// bypass.
+    pub tenant_ask_rate: u32,
+    /// Sliding window of the worker-less ask-rate ledger, seconds.
+    pub tenant_ask_window: f64,
     /// Seconds a fair-share *waiting* mark lives: an abandoned denied
     /// campaign stops deflating other studies' share after this long.
     /// Also the grace before site affinity stops deferring a queued
@@ -143,6 +156,7 @@ impl Default for EngineConfig {
         EngineConfig {
             seed: 0x4f50_5441_4153,
             compact_after: 50_000,
+            compact_threads: 0,
             reap_after: Some(3600.0),
             history_snapshot: 2048,
             n_shards: 8,
@@ -155,6 +169,8 @@ impl Default for EngineConfig {
             study_quota: 0,
             tenant_quota: 0,
             tenant_quota_map: HashMap::new(),
+            tenant_ask_rate: 0,
+            tenant_ask_window: 60.0,
             fairness_horizon: 30.0,
             site_affinity: false,
             requeue_max: 3,
@@ -287,6 +303,8 @@ impl Engine {
                 study_quota: config.study_quota,
                 tenant_quota: config.tenant_quota,
                 tenant_quotas: config.tenant_quota_map.clone(),
+                tenant_ask_rate: config.tenant_ask_rate,
+                tenant_ask_window: config.tenant_ask_window,
                 fairness_horizon: config.fairness_horizon,
                 site_affinity: config.site_affinity,
             },
@@ -527,6 +545,14 @@ impl Engine {
                     fl.apply_requeue(tid, key);
                 }
             }
+            "site_loss" => {
+                // A requeue-budget exhaustion charged the site's health
+                // ledger without a trial_requeue record (the trial was
+                // failed, not queued) — replay the charge.
+                if let Some(site) = v.get("site").as_str() {
+                    fl.sched.note_loss(site);
+                }
+            }
             _ => {}
         }
     }
@@ -595,6 +621,20 @@ impl Engine {
         let worker = body.get("worker").as_u64();
         let now = self.now();
         let key = def.key();
+        // Worker-less (legacy) asks never hold a lease, so the lease
+        // quotas cannot bound them — the sliding per-tenant ask-rate
+        // ledger does, checked before any sampling work.
+        if worker.is_none() {
+            if let Some(t) = tenant {
+                if let Err(e) = self.fleet.note_legacy_ask(t, now) {
+                    self.metrics.fleet_quota_denials.inc();
+                    if crate::fleet::scheduler::is_tenant_denial(&e) {
+                        self.metrics.inc_tenant_denial(t);
+                    }
+                    return Err(e);
+                }
+            }
+        }
         // Fleet admission: a worker-bound ask reserves a scheduling slot
         // (site + study + tenant quotas, fair share) before any sampling
         // work. The slot becomes a lease on success and is returned on
@@ -1381,11 +1421,14 @@ impl Engine {
         // infinity and never pass, but the sweep still runs: it heals
         // orphaned leases of lost/deregistered workers (a crash between
         // `worker_lost` and the per-trial requeues) and hosts the fleet
-        // GC. Only a fleet that was never used skips it entirely.
+        // GC. Only a fleet that was never used skips it entirely — but
+        // the worker-less ask-rate ledger is swept regardless, because
+        // purely legacy deployments never activate the fleet at all.
+        let now = self.now();
+        self.fleet.gc_ask_rates(now);
         if !self.fleet_active.load(Ordering::Relaxed) {
             return 0;
         }
-        let now = self.now();
         let expired = self.fleet.lock().expired_workers(now);
         let mut handled = 0;
         for (wid, was_alive, trials) in expired {
@@ -1481,14 +1524,26 @@ impl Engine {
             Some(true)
         } else {
             // Budget spent: fail the trial for good (shard-stamped
-            // record — this *is* a trial state transition).
+            // record — this *is* a trial state transition). The loss is
+            // journaled alongside as a fleet `site_loss` record so the
+            // persisted health ledger replays it: with `--requeue-max 0`
+            // this is the *only* loss signal affinity ever sees, and it
+            // must survive a restart like the requeue-path losses do.
             let ev = {
                 let mut o = Value::obj();
                 o.set("trial_id", trial_id).set("at", now);
                 Value::Obj(o)
             };
+            let loss = {
+                let mut o = Value::obj();
+                o.set("site", lease_site.as_str()).set("at", now);
+                Value::Obj(o)
+            };
             if self
-                .persist(Record::new("trial_fail", ev).with_shard(shard_idx as u32))
+                .persist_many(vec![
+                    Record::new("trial_fail", ev).with_shard(shard_idx as u32),
+                    Record::new("site_loss", loss).with_shard(FLEET_SHARD),
+                ])
                 .is_err()
             {
                 return None;
@@ -1722,10 +1777,24 @@ impl Engine {
         }
     }
 
-    /// The rotate → cut/reuse per shard → cut fleet → commit sequence
-    /// of one compaction. Each successful cut records the dirty count
-    /// it consumed in `cut_resets` / `fleet_cut` so [`Engine::compact`]
-    /// can restore the counters if a later phase fails.
+    /// The rotate → spec per shard → cut segments on the side pool →
+    /// commit sequence of one compaction. Each cut spec records the
+    /// dirty count it consumed in `cut_resets` / `fleet_cut` so
+    /// [`Engine::compact`] can restore the counters if any phase fails.
+    ///
+    /// Ownership inversion (vs. the PR 1–3 layout): the WAL writer
+    /// thread no longer performs segment I/O. Under each shard's lock
+    /// the engine only captures an exact *spec* — the shard's `next_seq`
+    /// cut (a cheap writer roundtrip) plus its serialized snapshot —
+    /// and the write→fsync→rename of every segment then runs on a
+    /// bounded side pool (`compact_threads`), concurrently across
+    /// shards, with all shard locks released and commit acks still
+    /// flowing. Records a shard commits after its spec simply replay on
+    /// top of its segment. The **manifest commit remains the single
+    /// serialization point**: [`GroupWal::finish_compact`] runs on the
+    /// writer thread only after every segment cut durably completed, so
+    /// a crash between segment renames and the manifest rename still
+    /// recovers from the previous manifest + log tail.
     fn compact_phases(
         &self,
         wal: &GroupWal,
@@ -1733,45 +1802,183 @@ impl Engine {
         fleet_cut: &mut Option<u64>,
     ) -> Result<u64, ApiError> {
         wal.begin_compact().map_err(ApiError::Storage)?;
-        for (idx, shard) in self.shards.iter().enumerate() {
-            let guard = shard.state.lock().unwrap();
+        // One work item per study shard, plus the fleet pseudo-shard.
+        // Each item captures its (spec + snapshot) lazily, right before
+        // cutting, so at most pool-size snapshots are ever resident —
+        // the sequential design's memory profile times the configured
+        // parallelism, never times the shard count.
+        let mut work: Vec<u32> = (0..self.shards.len() as u32).collect();
+        work.push(FLEET_SHARD);
+        let cutter = wal.segment_writer();
+        let pool = self.compact_pool_size(work.len());
+        self.metrics.compact_pool_threads.set(pool as f64);
+        // Dirty counts consumed by cut specs, keyed by shard — the
+        // caller restores them if any phase of the compaction fails.
+        let consumed: Mutex<Vec<(u32, u64)>> = Mutex::new(Vec::new());
+        // Fan out the cuts, join, aggregate every error: one failed cut
+        // aborts the whole compaction, never a half-specified manifest.
+        // The abort flag keeps the fail-fast of the sequential design —
+        // after a real I/O error (disk full, say) the remaining shards
+        // skip their segment I/O instead of billing a doomed manifest.
+        let aborted = AtomicBool::new(false);
+        let cut = |shard: u32| -> Result<Option<(u32, String, u64)>, String> {
+            let result = self.compact_cut(wal, &cutter, shard, &consumed);
+            if result.is_err() {
+                aborted.store(true, Ordering::Relaxed);
+            }
+            result
+        };
+        let results: Vec<Result<Option<(u32, String, u64)>, String>> = if pool <= 1 {
+            let mut out = Vec::new();
+            for shard in work {
+                if aborted.load(Ordering::Relaxed) {
+                    break;
+                }
+                out.push(cut(shard));
+            }
+            out
+        } else {
+            let queue = Mutex::new(work.into_iter());
+            let out = Mutex::new(Vec::new());
+            std::thread::scope(|scope| {
+                for _ in 0..pool {
+                    scope.spawn(|| loop {
+                        if aborted.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        // Take the next shard with the queue lock
+                        // already released before the (slow) cut runs.
+                        let shard = queue.lock().unwrap().next();
+                        let Some(shard) = shard else { break };
+                        let result = cut(shard);
+                        out.lock().unwrap().push(result);
+                    });
+                }
+            });
+            out.into_inner().unwrap()
+        };
+        for (shard, n) in consumed.into_inner().unwrap() {
+            if shard == FLEET_SHARD {
+                *fleet_cut = Some(n);
+            } else {
+                cut_resets.push((shard as usize, n));
+            }
+        }
+        let mut segments: Vec<(u32, String, u64)> = Vec::new();
+        let mut errors: Vec<String> = Vec::new();
+        for result in results {
+            match result {
+                Ok(Some(entry)) => segments.push(entry),
+                Ok(None) => {}
+                Err(e) => errors.push(e),
+            }
+        }
+        if !errors.is_empty() {
+            return Err(ApiError::Storage(errors.join("; ")));
+        }
+        // Manifest order is layout, not timing: shard index order with
+        // the fleet segment last (`FLEET_SHARD` = `u32::MAX`), whatever
+        // order the pool finished in — `--compact-threads 1` therefore
+        // reproduces the sequential manifest byte for byte.
+        segments.sort_by_key(|(shard, _, _)| *shard);
+        wal.finish_compact(
+            segments,
+            self.next_trial_id.load(Ordering::Relaxed),
+            self.next_study_id.load(Ordering::Relaxed),
+        )
+        .map_err(ApiError::Storage)
+    }
+
+    /// One compaction work item, safe to run from any pool thread:
+    /// under the shard's lock (the bind gate's write half plus the
+    /// fleet lock for [`FLEET_SHARD`]), either reference the previous
+    /// segment (clean-shard reuse) or capture the exact cut spec —
+    /// `next_seq` from the writer plus the serialized snapshot — then
+    /// release the lock and write the segment through `cutter`. Returns
+    /// the manifest entry, `None` when the fleet segment is skipped
+    /// (fleet never used). Dirty counts consumed by a cut spec are
+    /// pushed to `consumed` under the same lock, so the caller can
+    /// restore them if the compaction fails.
+    fn compact_cut(
+        &self,
+        wal: &GroupWal,
+        cutter: &crate::store::SegmentWriter,
+        shard: u32,
+        consumed: &Mutex<Vec<(u32, u64)>>,
+    ) -> Result<Option<(u32, String, u64)>, String> {
+        let (cut, snapshot) = if shard == FLEET_SHARD {
+            // Fleet spec: the bind gate's write half (no lease_bind may
+            // straddle the cut) plus the fleet lock (every other fleet
+            // record is appended under it) mirror the per-shard
+            // exact-spec argument. Skipped entirely while the fleet was
+            // never used, reused while clean, re-cut once dirty.
+            let _gate = self.fleet_bind_gate.write().unwrap();
+            let fl = self.fleet.lock();
+            let clean = self.fleet_dirty.load(Ordering::Relaxed) == 0;
+            if clean {
+                if let Some((file, prev)) = wal.reuse_segment(shard)? {
+                    return Ok(Some((shard, file, prev)));
+                }
+                if fl.registry.is_empty() && fl.leases.is_empty() {
+                    return Ok(None);
+                }
+            }
+            let cut = wal.shard_cut(shard)?;
+            let snapshot = fl.snapshot_json();
+            consumed
+                .lock()
+                .unwrap()
+                .push((shard, self.fleet_dirty.swap(0, Ordering::Relaxed)));
+            (cut, snapshot)
+        } else {
+            let idx = shard as usize;
+            let guard = self.lock_shard(idx);
             // Clean-shard skip: no records since this shard's previous
             // segment (the dirty counter is only ever touched under
             // this shard's lock) means that segment still covers the
             // shard exactly — reference it in the new manifest instead
             // of serializing an identical snapshot.
-            if self.shard_dirty[idx].load(Ordering::Relaxed) == 0
-                && wal.reuse_segment(idx as u32).map_err(ApiError::Storage)?
-            {
-                drop(guard);
-                continue;
+            if self.shard_dirty[idx].load(Ordering::Relaxed) == 0 {
+                if let Some((file, prev)) = wal.reuse_segment(shard)? {
+                    return Ok(Some((shard, file, prev)));
+                }
             }
-            let studies = Self::shard_studies_value(&guard);
-            wal.compact_shard(idx as u32, studies).map_err(ApiError::Storage)?;
-            cut_resets.push((idx, self.shard_dirty[idx].swap(0, Ordering::Relaxed)));
-            drop(guard);
-        }
-        // Fleet segment: cut under the bind gate's write half (no
-        // lease_bind may straddle the cut) plus the fleet lock (every
-        // other fleet record is appended under it), mirroring the
-        // per-shard exact-cut argument. Skipped entirely while the
-        // fleet was never used, reused while clean, re-cut once dirty.
-        {
-            let _gate = self.fleet_bind_gate.write().unwrap();
-            let fl = self.fleet.lock();
-            let clean = self.fleet_dirty.load(Ordering::Relaxed) == 0;
-            let reused = clean && wal.reuse_segment(FLEET_SHARD).map_err(ApiError::Storage)?;
-            if !reused && (!clean || !fl.registry.is_empty() || !fl.leases.is_empty()) {
-                let snapshot = fl.snapshot_json();
-                wal.compact_shard(FLEET_SHARD, snapshot).map_err(ApiError::Storage)?;
-                *fleet_cut = Some(self.fleet_dirty.swap(0, Ordering::Relaxed));
-            }
-        }
-        wal.finish_compact(
-            self.next_trial_id.load(Ordering::Relaxed),
-            self.next_study_id.load(Ordering::Relaxed),
-        )
-        .map_err(ApiError::Storage)
+            let cut = wal.shard_cut(shard)?;
+            let snapshot = Self::shard_studies_value(&guard);
+            consumed
+                .lock()
+                .unwrap()
+                .push((shard, self.shard_dirty[idx].swap(0, Ordering::Relaxed)));
+            (cut, snapshot)
+        };
+        // Locks released: the slow write → fsync → rename runs while
+        // the shard (and the fleet) keep serving; records committed
+        // from here on have `seq >= cut` and replay on top.
+        let t0 = Instant::now();
+        let result = cutter
+            .write_segment(shard, cut, &snapshot)
+            .map(|file| Some((shard, file, cut)))
+            .map_err(|e| format!("segment cut (shard {shard}): {e}"));
+        self.metrics
+            .compact_segment_seconds
+            .observe(t0.elapsed().as_secs_f64());
+        result
+    }
+
+    /// Size of the compaction side pool: the configured
+    /// `compact_threads`, or `min(n_shards, cores)` when 0, never more
+    /// threads than cut jobs.
+    fn compact_pool_size(&self, jobs: usize) -> usize {
+        let auto = self
+            .shards
+            .len()
+            .min(std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1));
+        let configured = if self.config.compact_threads == 0 {
+            auto
+        } else {
+            self.config.compact_threads
+        };
+        configured.max(1).min(jobs.max(1))
     }
 
     // ------------------------------------------------------------------
@@ -2055,7 +2262,7 @@ impl Engine {
         matches!(
             tag,
             "worker_register" | "worker_lost" | "worker_deregister" | "lease_bind"
-                | "trial_requeue"
+                | "trial_requeue" | "site_loss"
         )
     }
 
@@ -2670,6 +2877,87 @@ mod tests {
         for (id, v) in &acked {
             assert_eq!(recovered.get(id), Some(v), "acknowledged tell {id} lost");
         }
+    }
+
+    #[test]
+    fn parallel_compaction_reproduces_sequential_layout() {
+        // `--compact-threads 1` must keep today's byte-identical on-disk
+        // layout, and a 4-thread pool must commit the *same manifest*
+        // (layout is sorted by shard, not by pool completion order) and
+        // recover exactly. The manifest carries no timestamps, so the
+        // two runs' MANIFEST.json bytes are comparable directly.
+        fn run(dir: &std::path::Path, threads: usize) {
+            let e = Engine::open(
+                dir,
+                EngineConfig { n_shards: 4, compact_threads: threads, ..Default::default() },
+            )
+            .unwrap();
+            for s in 0..6 {
+                for i in 0..3 {
+                    let r = e.ask(&ask_body(&format!("pc-{s}"))).unwrap();
+                    e.tell(r.trial_id, i as f64).unwrap();
+                }
+            }
+            e.compact().unwrap();
+        }
+        fn listing(dir: &std::path::Path) -> Vec<String> {
+            let mut names: Vec<String> = std::fs::read_dir(dir)
+                .unwrap()
+                .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+                .collect();
+            names.sort();
+            names
+        }
+        let seq = TempDir::new("engine-pc-seq");
+        let par = TempDir::new("engine-pc-par");
+        run(seq.path(), 1);
+        run(par.path(), 4);
+        assert_eq!(
+            std::fs::read_to_string(seq.path().join("MANIFEST.json")).unwrap(),
+            std::fs::read_to_string(par.path().join("MANIFEST.json")).unwrap(),
+            "manifest is layout, not pool timing"
+        );
+        assert_eq!(listing(seq.path()), listing(par.path()), "same file set on disk");
+        // The parallel-compacted directory recovers exactly.
+        let e = Engine::open(par.path(), EngineConfig { n_shards: 4, ..Default::default() })
+            .unwrap();
+        assert_eq!(e.n_studies(), 6);
+        for sv in e.studies_json().as_arr().unwrap() {
+            assert_eq!(sv.get("n_completed").as_i64(), Some(3));
+        }
+        assert_eq!(e.recovery_stats().recovered_records, 0, "everything in segments");
+    }
+
+    #[test]
+    fn worker_less_ask_rate_bounds_legacy_tenants() {
+        let e = Engine::in_memory(EngineConfig {
+            tenant_ask_rate: 2,
+            tenant_ask_window: 3600.0,
+            ..Default::default()
+        });
+        // Two asks fit the window; the third is denied with the tenant
+        // named and the per-tenant 429 series incremented.
+        e.ask_as(&ask_body("rate"), Some("alice")).unwrap();
+        e.ask_as(&ask_body("rate"), Some("alice")).unwrap();
+        let err = e.ask_as(&ask_body("rate"), Some("alice")).unwrap_err();
+        assert!(matches!(err, ApiError::Quota(_)), "{err}");
+        assert!(err.to_string().contains("tenant 'alice'"), "{err}");
+        assert_eq!(e.metrics.fleet_quota_denials.get(), 1);
+        assert_eq!(
+            e.metrics.tenant_denials.lock().unwrap().get("alice").copied(),
+            Some(1)
+        );
+        // Other tenants and tenant-less legacy asks are unaffected.
+        e.ask_as(&ask_body("rate"), Some("bob")).unwrap();
+        e.ask_as(&ask_body("rate"), None).unwrap();
+        // Worker-bound asks are bounded by lease quotas, not the rate
+        // ledger — alice's worker keeps asking.
+        let (w, _) = e.register_worker("n1", "cloud", "gpu").unwrap();
+        let mut body = ask_body("rate");
+        if let Value::Obj(o) = &mut body {
+            o.set("worker", w);
+        }
+        e.ask_as(&body, Some("alice")).unwrap();
     }
 
     #[test]

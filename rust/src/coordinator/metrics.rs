@@ -202,6 +202,8 @@ pub struct Metrics {
     pub wal_commit_batch_limit: Gauge,
     /// Segment cuts skipped by clean-shard reuse (lifetime total).
     pub compact_segments_reused: Gauge,
+    /// Side threads the last compaction used to cut segments.
+    pub compact_pool_threads: Gauge,
     /// Fleet gauges, refreshed at scrape time.
     pub fleet_workers_alive: Gauge,
     pub fleet_leases: Gauge,
@@ -215,6 +217,9 @@ pub struct Metrics {
     pub ask_latency: Histogram,
     pub tell_latency: Histogram,
     pub should_prune_latency: Histogram,
+    /// Wall time of individual segment cuts (write → fsync → rename),
+    /// wherever they run — the compaction pool's unit of work.
+    pub compact_segment_seconds: Histogram,
     /// One entry per engine shard; empty outside the engine (e.g. bare
     /// `Metrics::default()` in unit tests).
     pub shards: Vec<ShardMetrics>,
@@ -260,6 +265,7 @@ impl Metrics {
             wal_filtered_records: Gauge::default(),
             wal_commit_batch_limit: Gauge::default(),
             compact_segments_reused: Gauge::default(),
+            compact_pool_threads: Gauge::default(),
             fleet_workers_alive: Gauge::default(),
             fleet_leases: Gauge::default(),
             fleet_requeue_depth: Gauge::default(),
@@ -268,6 +274,7 @@ impl Metrics {
             ask_latency: Histogram::new(default_latency_bounds()),
             tell_latency: Histogram::new(default_latency_bounds()),
             should_prune_latency: Histogram::new(default_latency_bounds()),
+            compact_segment_seconds: Histogram::new(default_latency_bounds()),
             shards: (0..n).map(|_| ShardMetrics::default()).collect(),
         }
     }
@@ -340,6 +347,7 @@ impl Metrics {
             ("hopaas_wal_filtered_records", &self.wal_filtered_records),
             ("hopaas_wal_commit_batch_limit", &self.wal_commit_batch_limit),
             ("hopaas_compact_segments_reused", &self.compact_segments_reused),
+            ("hopaas_compact_pool_threads", &self.compact_pool_threads),
             ("hopaas_fleet_workers_alive", &self.fleet_workers_alive),
             ("hopaas_fleet_leases", &self.fleet_leases),
             ("hopaas_fleet_requeue_depth", &self.fleet_requeue_depth),
@@ -402,6 +410,7 @@ impl Metrics {
             ("hopaas_ask_latency_seconds", &self.ask_latency),
             ("hopaas_tell_latency_seconds", &self.tell_latency),
             ("hopaas_should_prune_latency_seconds", &self.should_prune_latency),
+            ("hopaas_compact_segment_seconds", &self.compact_segment_seconds),
         ] {
             out.push_str(&format!("# TYPE {name} histogram\n"));
             let mut cum = 0u64;

@@ -841,6 +841,53 @@ mod tests {
     }
 
     #[test]
+    fn worker_less_ask_rate_denial_over_http() {
+        // Legacy (worker-less) clients never hold leases, so only the
+        // sliding ask-rate ledger bounds them. On a --no-auth server the
+        // body "tenant" field stands in for the token claim.
+        let config = HopaasConfig {
+            auth_required: false,
+            engine: EngineConfig {
+                tenant_ask_rate: 1,
+                tenant_ask_window: 3600.0,
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let s = HopaasServer::start("127.0.0.1:0", config).unwrap();
+        let mut c = Client::connect(s.addr()).unwrap();
+        let mut body = ask_body();
+        if let Value::Obj(o) = &mut body {
+            o.set("tenant", "alice");
+        }
+        assert_eq!(c.post_json("/api/ask/x", &body).unwrap().status, 200);
+        let denied = c.post_json("/api/ask/x", &body).unwrap();
+        assert_eq!(denied.status, 429);
+        let detail = denied
+            .json_body()
+            .unwrap()
+            .get("detail")
+            .as_str()
+            .unwrap()
+            .to_string();
+        assert!(detail.contains("tenant 'alice'"), "{detail}");
+        assert!(detail.contains("ask rate"), "{detail}");
+        // Tenant-less legacy asks stay unlimited.
+        assert_eq!(c.post_json("/api/ask/x", &ask_body()).unwrap().status, 200);
+        let metrics = String::from_utf8(c.get("/metrics").unwrap().body).unwrap();
+        assert!(
+            metrics.contains("hopaas_tenant_quota_denials_total{tenant=\"alice\"} 1"),
+            "{metrics}"
+        );
+        // The stats policy block reports the knobs being enforced.
+        let stats = c.get("/api/stats").unwrap().json_body().unwrap();
+        let policy = stats.get("fleet").get("policy");
+        assert_eq!(policy.get("tenant_ask_rate").as_u64(), Some(1));
+        assert_eq!(policy.get("tenant_ask_window").as_f64(), Some(3600.0));
+        s.stop();
+    }
+
+    #[test]
     fn web_data_apis() {
         let s = server(false);
         let mut c = Client::connect(s.addr()).unwrap();

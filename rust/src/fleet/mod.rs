@@ -56,8 +56,12 @@
 //! liveness, not state: recovery resets every surviving worker's
 //! deadline to `now + lease_timeout`, giving live workers one heartbeat
 //! interval to reclaim their leases before expiry requeues their trials.
-//! The site *health ledger* behind the affinity preference is likewise
-//! liveness and restarts at zero.
+//! The site *health ledger* behind the affinity preference (`handed` /
+//! `lost` per site) **is** persisted: the fleet segment carries it, and
+//! replayed `lease_bind` / `trial_requeue` / `site_loss` records rebuild
+//! the post-cut tail — so `--site-affinity` keeps deferring to a lossy
+//! site across a restart instead of silently resetting to "everyone is
+//! healthy" for the first minutes of a resumed campaign.
 
 pub mod lease;
 pub mod policy;
@@ -70,6 +74,7 @@ pub use registry::{WorkerInfo, WorkerState};
 use crate::coordinator::engine::ApiError;
 use crate::json::Value;
 use lease::LeaseTable;
+use policy::TenantRateLedger;
 use registry::WorkerRegistry;
 use scheduler::Scheduler;
 use std::collections::HashSet;
@@ -114,6 +119,11 @@ impl Default for FleetConfig {
 /// reverse — so no cycle with the shard/directory/router locks exists.
 pub struct Fleet {
     state: Mutex<FleetState>,
+    /// Worker-less ask-rate ledger. Its own (leaf) mutex, separate from
+    /// the fleet tables: legacy asks must not serialize on the fleet
+    /// lock just to be rate-checked, and a fleet that was never used
+    /// still rate-limits.
+    ask_rates: Mutex<TenantRateLedger>,
     pub config: FleetConfig,
 }
 
@@ -127,7 +137,11 @@ pub struct FleetState {
 
 impl Fleet {
     pub fn new(config: FleetConfig) -> Fleet {
-        Fleet { state: Mutex::new(FleetState::default()), config }
+        Fleet {
+            state: Mutex::new(FleetState::default()),
+            ask_rates: Mutex::new(TenantRateLedger::default()),
+            config,
+        }
     }
 
     /// Lock the fleet tables (leaf lock; see type docs).
@@ -138,6 +152,31 @@ impl Fleet {
     /// Effective lease duration (infinite when expiry is disabled).
     pub fn ttl(&self) -> f64 {
         self.config.lease_timeout.unwrap_or(f64::INFINITY)
+    }
+
+    /// Windowed ask-rate admission for a *worker-less* (lease-less) ask
+    /// by `tenant`: records the ask and returns `Ok`, or denies with a
+    /// tenant-attributed 429. Worker-bound asks are bounded by the
+    /// lease quotas instead and never consult this ledger.
+    pub fn note_legacy_ask(&self, tenant: &str, now: f64) -> Result<(), ApiError> {
+        let policy = &self.config.policy;
+        if policy.tenant_ask_rate == 0 {
+            return Ok(());
+        }
+        self.ask_rates.lock().unwrap().note_ask(
+            tenant,
+            now,
+            policy.tenant_ask_rate,
+            policy.tenant_ask_window,
+        )
+    }
+
+    /// Sweep expired tenants out of the ask-rate ledger (tenant names
+    /// are client-influenced strings; the map must not grow forever).
+    pub fn gc_ask_rates(&self, now: f64) {
+        if self.config.policy.tenant_ask_rate > 0 {
+            self.ask_rates.lock().unwrap().gc(now, self.config.policy.tenant_ask_window);
+        }
     }
 }
 
@@ -228,6 +267,11 @@ impl FleetState {
         self.leases.remove_from_queue(study_key, trial_id);
         self.leases.bind(trial_id, worker_id, study_key, &site, tenant, at);
         self.registry.attach(worker_id, trial_id);
+        // Replay parity with the live bind: the handout counts toward
+        // the site's health ledger. Binds covered by the fleet segment
+        // never reach here — their handouts are already inside the
+        // segment's persisted ledger.
+        self.sched.note_handout(&site);
     }
 
     /// Release a trial's lease (tell/fail/prune or scrub). Returns the
@@ -279,9 +323,12 @@ impl FleetState {
 
     /// Replay a `trial_requeue` record. Replayed queue entries read as
     /// waited-forever, so the affinity preference never defers them.
+    /// The loss is charged to the releasing lease's site, mirroring the
+    /// live [`FleetState::requeue`] path.
     pub fn apply_requeue(&mut self, trial_id: u64, study_key: &str) {
         if let Some(info) = self.leases.release(trial_id) {
             self.registry.detach(info.worker, trial_id);
+            self.sched.note_loss(&info.site);
         }
         self.leases.push_back(study_key, trial_id, f64::NEG_INFINITY);
     }
@@ -328,7 +375,7 @@ impl FleetState {
     /// lease carries its admission keys, so site and tenant counters
     /// come back exactly as live admission counted them.
     pub fn rebuild_counts(&mut self) {
-        self.sched.clear_counts();
+        self.sched.reset_usage();
         let entries: Vec<(String, String, Option<String>)> = self
             .leases
             .iter()
@@ -339,14 +386,17 @@ impl FleetState {
         }
     }
 
-    /// Serialize the whole fleet for the compaction segment.
+    /// Serialize the whole fleet for the compaction segment. The
+    /// `sites` block is the persisted health ledger (`handed`/`lost`
+    /// per site) — affinity continuity across restarts.
     pub fn snapshot_json(&self) -> Value {
         let mut o = Value::obj();
         o.set("next_worker_id", self.registry.next_id())
             .set("workers", self.registry.to_json())
             .set("leases", self.leases.leases_json())
             .set("requeue", self.leases.queues_json())
-            .set("requeue_count", self.leases.requeue_counts_json());
+            .set("requeue_count", self.leases.requeue_counts_json())
+            .set("sites", self.sched.health_json());
         Value::Obj(o)
     }
 
@@ -355,6 +405,11 @@ impl FleetState {
     pub fn load_snapshot(&mut self, v: &Value) {
         self.registry.load_json(v.get("workers"), v.get("next_worker_id").as_u64().unwrap_or(1));
         self.leases.load_json(v.get("leases"), v.get("requeue"), v.get("requeue_count"));
+        // Health ledger first: rebuild_counts resets usage but keeps
+        // (and the replayed fleet tail then adds to) handed/lost.
+        // Pre-ledger segments simply carry no "sites" block — the
+        // ledger then restarts at zero, the old behavior.
+        self.sched.load_health(v.get("sites"));
         // Pre-policy segments carried no per-lease site: backfill from
         // the registry so rebuilt counters land on the right site.
         let fixups: Vec<(u64, String)> = self
@@ -517,6 +572,11 @@ mod tests {
         // Tenant counters rebuilt from the lease's admission keys.
         assert_eq!(st.sched.tenant_active("alice"), 1);
         assert_eq!(st.sched.site_active("cloud"), 1);
+        // The health ledger rode the segment: spot's loss record (one
+        // handout, one preemption) survives, so affinity keeps
+        // deferring to it after a restart.
+        assert!(!st.sched.site_preferred("spot"));
+        assert!(st.sched.site_preferred("cloud"));
     }
 
     #[test]

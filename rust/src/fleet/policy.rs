@@ -14,6 +14,12 @@
 //!   the auth token presented on the ask (the token's `user` claim),
 //!   with a per-tenant override map over a uniform default;
 //! * **study quota** — unchanged from PR 3;
+//! * **tenant ask rate** — a sliding-window cap on *worker-less*
+//!   (legacy) asks per tenant. Lease quotas bound only asks that hold
+//!   scheduler slots; a legacy client that never names a worker used to
+//!   bypass tenant admission entirely. The [`TenantRateLedger`] closes
+//!   that hole: past the rate, worker-less asks 429 with the tenant
+//!   named, exactly like lease-quota denials;
 //! * **fairness horizon** — how long a denied study's *waiting* mark
 //!   keeps claiming a fair share of a site. Seconds, not hours: an
 //!   abandoned campaign must stop deflating everyone else's share as
@@ -30,8 +36,9 @@
 //! detail (`site '…'`, `tenant '…'`, `study quota`), so clients and
 //! dashboards can attribute back-pressure.
 
+use crate::coordinator::engine::ApiError;
 use crate::json::Value;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 /// The resolved admission policy. Part of [`super::FleetConfig`].
 #[derive(Clone, Debug)]
@@ -47,6 +54,12 @@ pub struct QuotaPolicy {
     pub tenant_quota: u32,
     /// Per-tenant overrides (`tenant → quota`).
     pub tenant_quotas: HashMap<String, u32>,
+    /// Max worker-less asks per tenant within the sliding
+    /// `tenant_ask_window` (0 = unlimited). Bounds legacy clients that
+    /// never hold a lease and therefore never hit the lease quotas.
+    pub tenant_ask_rate: u32,
+    /// Sliding window of the worker-less ask-rate ledger, seconds.
+    pub tenant_ask_window: f64,
     /// Waiting-mark lifetime for fair-share admission, seconds. Also the
     /// grace after which site affinity stops deferring a queued trial.
     pub fairness_horizon: f64,
@@ -62,6 +75,8 @@ impl Default for QuotaPolicy {
             study_quota: 0,
             tenant_quota: 0,
             tenant_quotas: HashMap::new(),
+            tenant_ask_rate: 0,
+            tenant_ask_window: 60.0,
             fairness_horizon: 30.0,
             site_affinity: false,
         }
@@ -132,9 +147,76 @@ impl QuotaPolicy {
             .set("study_quota", self.study_quota)
             .set("tenant_quota", self.tenant_quota)
             .set("tenant_overrides", map_json(&self.tenant_quotas))
+            .set("tenant_ask_rate", self.tenant_ask_rate)
+            .set("tenant_ask_window", self.tenant_ask_window)
             .set("fairness_horizon", self.fairness_horizon)
             .set("site_affinity", self.site_affinity);
         Value::Obj(o)
+    }
+}
+
+/// Sliding-window per-tenant ask-rate ledger for worker-less asks.
+///
+/// A tenant's recent worker-less asks are kept as a deque of
+/// timestamps, pruned to the window on every touch, so each entry is
+/// bounded by the rate limit and the map holds only tenants seen
+/// within the window (plus whatever [`TenantRateLedger::gc`] hasn't
+/// swept yet — tenant names are client-influenced strings and must not
+/// accumulate forever).
+#[derive(Default)]
+pub struct TenantRateLedger {
+    asks: HashMap<String, VecDeque<f64>>,
+}
+
+impl TenantRateLedger {
+    /// Admit (and record) one worker-less ask by `tenant` at `now`, or
+    /// deny with the tenant named in the 429 detail. The `tenant '`
+    /// prefix is what [`super::scheduler::is_tenant_denial`] classifies
+    /// on — keep the two in sync.
+    pub fn note_ask(
+        &mut self,
+        tenant: &str,
+        now: f64,
+        limit: u32,
+        window: f64,
+    ) -> Result<(), ApiError> {
+        if limit == 0 {
+            return Ok(());
+        }
+        let window = window.max(1e-9);
+        let q = self.asks.entry(tenant.to_string()).or_default();
+        while q.front().is_some_and(|&t| now - t >= window) {
+            q.pop_front();
+        }
+        if q.len() >= limit as usize {
+            return Err(ApiError::Quota(format!(
+                "tenant '{tenant}' ask rate reached ({limit} asks per {window}s)"
+            )));
+        }
+        q.push_back(now);
+        Ok(())
+    }
+
+    /// Asks by `tenant` still inside the window (tests/diagnostics).
+    pub fn recent(&self, tenant: &str, now: f64, window: f64) -> usize {
+        self.asks
+            .get(tenant)
+            .map(|q| q.iter().filter(|&&t| now - t < window.max(1e-9)).count())
+            .unwrap_or(0)
+    }
+
+    /// Drop tenants whose whole window has expired. Returns how many
+    /// entries were evicted.
+    pub fn gc(&mut self, now: f64, window: f64) -> usize {
+        let window = window.max(1e-9);
+        let before = self.asks.len();
+        self.asks.retain(|_, q| {
+            while q.front().is_some_and(|&t| now - t >= window) {
+                q.pop_front();
+            }
+            !q.is_empty()
+        });
+        before - self.asks.len()
     }
 }
 
@@ -193,11 +275,49 @@ mod tests {
 
     #[test]
     fn stats_json_shape() {
-        let mut p = QuotaPolicy { site_quota: 4, ..Default::default() };
+        let mut p = QuotaPolicy { site_quota: 4, tenant_ask_rate: 10, ..Default::default() };
         p.site_quotas.insert("hpc".into(), 64);
         let j = p.to_json();
         assert_eq!(j.get("site_quota").as_u64(), Some(4));
         assert_eq!(j.get("site_overrides").get("hpc").as_u64(), Some(64));
         assert_eq!(j.get("site_affinity").as_bool(), Some(false));
+        assert_eq!(j.get("tenant_ask_rate").as_u64(), Some(10));
+        assert_eq!(j.get("tenant_ask_window").as_f64(), Some(60.0));
+    }
+
+    #[test]
+    fn ask_rate_window_slides() {
+        let mut l = TenantRateLedger::default();
+        // Limit 2 per 10 s.
+        assert!(l.note_ask("alice", 0.0, 2, 10.0).is_ok());
+        assert!(l.note_ask("alice", 1.0, 2, 10.0).is_ok());
+        let err = l.note_ask("alice", 2.0, 2, 10.0).unwrap_err();
+        assert!(err.to_string().contains("tenant 'alice'"), "{err}");
+        assert!(super::super::scheduler::is_tenant_denial(&err), "classified as tenant 429");
+        // Other tenants have their own window.
+        assert!(l.note_ask("bob", 2.0, 2, 10.0).is_ok());
+        // The window slides: at t=10 the t=0 ask has aged out…
+        assert!(l.note_ask("alice", 10.0, 2, 10.0).is_ok());
+        // …but the t=1 and t=10 asks still fill the window at t=10.5.
+        assert!(l.note_ask("alice", 10.5, 2, 10.0).is_err());
+        assert_eq!(l.recent("alice", 10.5, 10.0), 2);
+        // Limit 0 disables the ledger entirely (nothing recorded).
+        let mut off = TenantRateLedger::default();
+        for i in 0..50 {
+            assert!(off.note_ask("alice", i as f64, 0, 10.0).is_ok());
+        }
+        assert_eq!(off.recent("alice", 50.0, 10.0), 0);
+    }
+
+    #[test]
+    fn ask_rate_ledger_gc_drops_expired_tenants() {
+        let mut l = TenantRateLedger::default();
+        l.note_ask("alice", 0.0, 4, 10.0).unwrap();
+        l.note_ask("bob", 5.0, 4, 10.0).unwrap();
+        assert_eq!(l.gc(9.0, 10.0), 0, "both windows still live");
+        assert_eq!(l.gc(12.0, 10.0), 1, "alice aged out");
+        assert_eq!(l.recent("bob", 12.0, 10.0), 1);
+        assert_eq!(l.gc(20.0, 10.0), 1, "bob aged out");
+        assert_eq!(l.recent("alice", 20.0, 10.0), 0);
     }
 }

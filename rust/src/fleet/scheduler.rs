@@ -82,9 +82,10 @@ pub struct SiteState {
     last_active: f64,
     /// Health ledger: trials bound to workers of this site…
     handed: u64,
-    /// …and trials lost here (worker vanished, trial requeued). Not
-    /// persisted — health is liveness, and a restart resets the ledger
-    /// like it resets lease deadlines.
+    /// …and trials lost here (worker vanished, trial requeued or failed
+    /// out of budget). Persisted in the fleet segment and rebuilt from
+    /// replayed fleet records, so `--site-affinity` decisions survive a
+    /// restart instead of resetting to "everyone is healthy".
     lost: u64,
 }
 
@@ -230,10 +231,14 @@ impl Scheduler {
     }
 
     /// Drop all usage counters (recovery rebuild); peaks and the health
-    /// ledger survive.
-    pub fn clear_counts(&mut self) {
+    /// ledger survive. Fair-share *waiting* marks are dropped too: they
+    /// are timestamps on the pre-restart clock, and the engine's time
+    /// base restarts at zero — a stale mark would otherwise deflate
+    /// every study's share until the ghost waiter aged out.
+    pub fn reset_usage(&mut self) {
         for state in self.sites.values_mut() {
             state.counts.clear();
+            state.waiting.clear();
         }
         self.study_active.clear();
         self.tenant_active.clear();
@@ -249,6 +254,41 @@ impl Scheduler {
     /// Record a trial lost on `site` (worker vanished, trial requeued).
     pub fn note_loss(&mut self, site: &str) {
         self.sites.entry(site.to_string()).or_default().lost += 1;
+    }
+
+    /// The persisted health ledger: `(site, handed, lost)` for every
+    /// site with any history, sorted (deterministic segment bytes).
+    pub fn health_json(&self) -> Value {
+        let mut keys: Vec<&String> = self
+            .sites
+            .iter()
+            .filter(|(_, s)| s.handed > 0 || s.lost > 0)
+            .map(|(k, _)| k)
+            .collect();
+        keys.sort();
+        Value::Arr(
+            keys.iter()
+                .map(|k| {
+                    let s = &self.sites[*k];
+                    let mut o = Value::obj();
+                    o.set("site", k.as_str()).set("handed", s.handed).set("lost", s.lost);
+                    Value::Obj(o)
+                })
+                .collect(),
+        )
+    }
+
+    /// Restore the health ledger from a fleet segment (recovery; `Null`
+    /// for pre-ledger segments is a no-op). Overwrites, never adds: the
+    /// segment is the authoritative state at its cut, and the replayed
+    /// record tail re-applies only post-cut handouts/losses.
+    pub fn load_health(&mut self, v: &Value) {
+        for entry in v.as_arr().unwrap_or(&[]) {
+            let Some(site) = entry.get("site").as_str() else { continue };
+            let state = self.sites.entry(site.to_string()).or_default();
+            state.handed = entry.get("handed").as_u64().unwrap_or(0);
+            state.lost = entry.get("lost").as_u64().unwrap_or(0);
+        }
     }
 
     /// Is `site` healthy enough to be handed a requeued trial under the
@@ -312,11 +352,18 @@ impl Scheduler {
         self.tenant_active.values().map(|&c| c as u64).sum()
     }
 
-    /// `(site, active)` pairs for the labeled metrics gauge.
+    /// `(site, active)` pairs for the labeled metrics gauge. Sites with
+    /// no active slot are skipped: after a restart the persisted health
+    /// ledger resurrects site entries no live lease re-established, and
+    /// `/metrics` must not report that ghost occupancy (the `/api/stats`
+    /// sites block still lists them, with their health). Dropping the
+    /// series is also the live behavior the wholesale scrape-time
+    /// snapshot gives once a site's last lease releases.
     pub fn site_loads(&self) -> Vec<(String, u32)> {
         let mut out: Vec<(String, u32)> = self
             .sites
             .iter()
+            .filter(|(_, s)| s.total() > 0)
             .map(|(k, s)| (k.clone(), s.total()))
             .collect();
         out.sort();
@@ -619,7 +666,7 @@ mod tests {
         let mut s = Scheduler::default();
         let c = cfg(2, 0);
         s.admit("gpu", "a", Some("t1"), 0.0, &c).unwrap();
-        s.clear_counts();
+        s.reset_usage();
         assert_eq!(s.site_active("gpu"), 0);
         assert_eq!(s.tenant_active("t1"), 0);
         s.count_existing("gpu", "a", Some("t1"));
@@ -629,6 +676,68 @@ mod tests {
         let loads = s.site_loads();
         assert_eq!(loads, vec![("gpu".to_string(), 2)]);
         assert_eq!(s.tenant_loads(), vec![("t1".to_string(), 1)]);
+    }
+
+    #[test]
+    fn health_ledger_roundtrips_and_usage_reset_keeps_it() {
+        let mut s = Scheduler::default();
+        let c = cfg(4, 0);
+        s.admit("spot", "a", Some("t"), 0.0, &c).unwrap();
+        s.note_handout("spot");
+        s.note_handout("spot");
+        s.note_loss("spot");
+        s.note_handout("stable");
+        // A denied study leaves a waiting mark on the full site.
+        for _ in 0..3 {
+            s.admit("spot", "a", None, 0.0, &c).unwrap();
+        }
+        assert!(s.admit("spot", "b", None, 1.0, &c).is_err());
+        let health = s.health_json();
+        // Sorted, only sites with history, exact counters.
+        assert_eq!(health.at(0).get("site").as_str(), Some("spot"));
+        assert_eq!(health.at(0).get("handed").as_u64(), Some(2));
+        assert_eq!(health.at(0).get("lost").as_u64(), Some(1));
+        assert_eq!(health.at(1).get("site").as_str(), Some("stable"));
+        assert_eq!(health.as_arr().unwrap().len(), 2);
+        // reset_usage (the recovery rebuild) drops slots AND stale
+        // waiting marks, but the health ledger survives it.
+        s.reset_usage();
+        assert_eq!(s.site_active("spot"), 0);
+        s.admit("spot", "a", None, 0.5, &c).unwrap();
+        s.admit("spot", "a", None, 0.5, &c).unwrap();
+        s.admit("spot", "a", None, 0.5, &c).unwrap();
+        assert_eq!(s.site_active("spot"), 3, "ghost waiter gone after reset");
+        assert_eq!(s.health_json().at(0).get("handed").as_u64(), Some(2));
+        // Round-trip into a fresh scheduler: preference is identical.
+        let mut back = Scheduler::default();
+        back.load_health(&health);
+        assert!(!back.site_preferred("spot"), "loss rate above the mean survives");
+        assert!(back.site_preferred("stable"));
+        // Pre-ledger segments (no "sites" block) are a clean no-op.
+        back.load_health(&Value::Null);
+        assert!(!back.site_preferred("spot"));
+    }
+
+    /// Regression (ghost occupancy): a site entry resurrected only by
+    /// the persisted health ledger — no live lease — must not export a
+    /// `hopaas_site_leases` series, while `/api/stats` keeps reporting
+    /// its health.
+    #[test]
+    fn metrics_gauge_skips_sites_without_active_slots() {
+        let mut s = Scheduler::default();
+        let c = cfg(0, 0);
+        let mut ghost = Scheduler::default();
+        ghost.note_handout("vanished");
+        ghost.note_loss("vanished");
+        s.load_health(&ghost.health_json());
+        s.admit("live", "a", None, 0.0, &c).unwrap();
+        assert_eq!(s.site_loads(), vec![("live".to_string(), 1)]);
+        let stats = s.sites_json(&c.policy);
+        assert_eq!(stats.as_arr().unwrap().len(), 2, "stats still list the ghost");
+        // Releasing the live slot drops its series too (wholesale
+        // scrape-time snapshot semantics).
+        assert!(s.release("live", "a", None));
+        assert!(s.site_loads().is_empty());
     }
 
     #[test]

@@ -67,6 +67,11 @@ COMMANDS:
                     --tenant-quota N   default max concurrent trials per tenant
                                        (the auth token's user; 0 = off)
                     --tenant-quota-map user=N,...  per-tenant overrides
+                    --tenant-ask-rate N  worker-less asks per tenant inside the
+                                       sliding window (0 = off)
+                    --tenant-ask-window S  ask-rate window seconds (default 60)
+                    --compact-threads N  segment-cut side threads
+                                       (0 = min(shards, cores); 1 = sequential)
                     --fairness-horizon S  fair-share waiting-mark lifetime /
                                        affinity grace (default 30)
                     --site-affinity    hand requeued trials to healthier sites

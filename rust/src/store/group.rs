@@ -18,18 +18,26 @@
 //! unchanged — but N shards committing concurrently share a flush
 //! instead of queueing N of them.
 //!
-//! Compaction also runs on the writer thread, in three phases that the
-//! engine drives ([`GroupWal::begin_compact`] /
-//! [`GroupWal::compact_shard`] / [`GroupWal::finish_compact`]): rotate
-//! the log to a new epoch, cut one snapshot segment per shard, commit
-//! the manifest and GC sealed logs. Because every shard's appends and
-//! its segment cut serialize through this one thread — and the engine
-//! holds that shard's lock across both — the per-shard `next_seq` cut
-//! the writer records is exact: a segment covers precisely the records
-//! the writer stamped for that shard before the cut command arrived.
+//! Compaction is driven by the engine in three phases
+//! ([`GroupWal::begin_compact`] / per-shard cut specs /
+//! [`GroupWal::finish_compact`]): rotate the log to a new epoch, cut
+//! one snapshot segment per shard, commit the manifest and GC sealed
+//! logs. The writer thread no longer performs the segment I/O itself —
+//! it only answers [`GroupWal::shard_cut`] (the shard's exact
+//! `next_seq` high-water mark) and [`GroupWal::reuse_segment`]
+//! roundtrips, both cheap map reads, while the actual
+//! write→fsync→rename of each segment runs on the engine's compaction
+//! pool through [`SegmentWriter`] handles. Because the engine holds a
+//! shard's lock across both its appends and its `shard_cut` roundtrip,
+//! the cut is exact: a segment covers precisely the records the writer
+//! stamped for that shard before the cut command arrived. Commit acks
+//! keep flowing between those roundtrips, so a compaction of N shards
+//! no longer stalls the commit path for the sum of all segment I/O —
+//! only [`GroupWal::finish_compact`] (manifest rename + GC, the single
+//! serialization point of the crash-consistency contract) still runs
+//! on the writer.
 
-use super::{Record, Storage};
-use crate::json::Value;
+use super::{Record, SegmentWriter, Storage};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender, TryRecvError};
@@ -109,17 +117,20 @@ enum Cmd {
     Append(Vec<Record>, Ack),
     /// Compaction phase 1: rotate the log to a new epoch.
     BeginCompact(Ack),
-    /// Compaction phase 2: cut one shard's snapshot segment. The engine
-    /// holds that shard's lock across the roundtrip.
-    CompactShard(u32, Value, Ack),
-    /// Compaction phase 2, clean-shard fast path: carry the shard's
-    /// previous segment (file + cut) into the new manifest without
-    /// rewriting it. Replies `false` when no previous segment is known,
-    /// in which case the engine falls back to a full cut.
-    ReuseSegment(u32, SyncSender<Result<bool, String>>),
-    /// Compaction phase 3: commit the manifest, GC sealed logs. Replies
-    /// with the record count carried over in the active log.
-    FinishCompact(u64, u64, CountAck),
+    /// Compaction phase 2 (spec): report the shard's exact cut — the
+    /// seq after its last stamped record in the active epoch (0 when it
+    /// has none). The engine holds that shard's lock across the
+    /// roundtrip; the segment itself is cut on a pool thread.
+    ShardCut(u32, SyncSender<Result<u64, String>>),
+    /// Compaction phase 2, clean-shard fast path: the shard's previous
+    /// manifest entry (file + cut), to be carried into the new manifest
+    /// without rewriting the segment. Replies `None` when no previous
+    /// segment is known — the engine then cuts in full.
+    ReuseSegment(u32, SyncSender<Result<Option<(String, u64)>, String>>),
+    /// Compaction phase 3: commit the given segment set with a manifest
+    /// rename, GC sealed logs. Replies with the record count carried
+    /// over in the active log.
+    FinishCompact(Vec<(u32, String, u64)>, u64, u64, CountAck),
 }
 
 /// Handle to the writer thread. Cloneable-by-`Arc` at the engine level;
@@ -127,6 +138,9 @@ enum Cmd {
 pub struct GroupWal {
     tx: Option<SyncSender<Cmd>>,
     stats: Arc<GroupWalStats>,
+    /// Segment-cutting handle over the writer's storage, cloned out to
+    /// compaction-pool threads (shares the fault hook + killed flag).
+    cutter: SegmentWriter,
     handle: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -146,13 +160,14 @@ impl GroupWal {
         let (tx, rx) = std::sync::mpsc::sync_channel(config.queue_depth.max(1));
         let stats = Arc::new(GroupWalStats::default());
         let thread_stats = stats.clone();
+        let cutter = storage.segment_writer();
         let handle = std::thread::Builder::new()
             .name("hopaas-wal".into())
             .spawn(move || {
                 Writer::new(storage, config, next_seq, prev_segments, thread_stats).run(rx)
             })
             .expect("spawn wal writer");
-        GroupWal { tx: Some(tx), stats, handle: Some(handle) }
+        GroupWal { tx: Some(tx), stats, cutter, handle: Some(handle) }
     }
 
     /// Durably append one record: blocks until the record's batch has
@@ -180,21 +195,31 @@ impl GroupWal {
         self.roundtrip(Cmd::BeginCompact)
     }
 
-    /// Compaction phase 2: durably write shard `shard`'s snapshot
-    /// segment. The caller must hold that shard's lock (and only that
-    /// one) so the segment is a consistent cut of the shard's history.
-    pub fn compact_shard(&self, shard: u32, studies: Value) -> Result<(), String> {
-        self.roundtrip(|ack| Cmd::CompactShard(shard, studies, ack))
+    /// Compaction phase 2 (spec): the shard's exact segment cut — the
+    /// seq one past its last record stamped into the active epoch (0
+    /// when it has none). The caller must hold that shard's lock (and
+    /// only that one) across the roundtrip so no record of the shard is
+    /// in flight; the segment covering `[.., cut)` is then written on a
+    /// pool thread via [`GroupWal::segment_writer`], with the lock
+    /// already released — records committed after the cut simply replay
+    /// on top of the segment at recovery.
+    pub fn shard_cut(&self, shard: u32) -> Result<u64, String> {
+        let tx = self.tx.as_ref().expect("wal writer running");
+        let (ack_tx, ack_rx) = std::sync::mpsc::sync_channel(1);
+        tx.send(Cmd::ShardCut(shard, ack_tx))
+            .map_err(|_| "wal writer stopped".to_string())?;
+        ack_rx.recv().map_err(|_| "wal writer stopped".to_string())?
     }
 
-    /// Compaction phase 2, clean-shard fast path: reference the shard's
-    /// previous segment in the upcoming manifest instead of cutting a
-    /// new one. Only valid when the shard has appended **no** records
-    /// since that segment was cut (the engine's per-shard dirty counter
-    /// proves this; the caller holds the shard's lock). Returns `false`
-    /// when the writer has no previous segment for the shard — the
-    /// caller must then cut in full.
-    pub fn reuse_segment(&self, shard: u32) -> Result<bool, String> {
+    /// Compaction phase 2, clean-shard fast path: the shard's previous
+    /// manifest entry `(file, cut)`, to reference in the upcoming
+    /// manifest instead of cutting a new segment. Only valid when the
+    /// shard has appended **no** records since that segment was cut
+    /// (the engine's per-shard dirty counter proves this; the caller
+    /// holds the shard's lock). Returns `None` when the writer has no
+    /// previous segment for the shard — the caller must then cut in
+    /// full.
+    pub fn reuse_segment(&self, shard: u32) -> Result<Option<(String, u64)>, String> {
         let tx = self.tx.as_ref().expect("wal writer running");
         let (ack_tx, ack_rx) = std::sync::mpsc::sync_channel(1);
         tx.send(Cmd::ReuseSegment(shard, ack_tx))
@@ -202,13 +227,26 @@ impl GroupWal {
         ack_rx.recv().map_err(|_| "wal writer stopped".to_string())?
     }
 
-    /// Compaction phase 3: commit the manifest and GC sealed logs.
-    /// Returns the number of records carried over in the active log
-    /// (the engine's new `wal_records` counter value).
-    pub fn finish_compact(&self, next_trial_id: u64, next_study_id: u64) -> Result<u64, String> {
+    /// The handle pool threads use to cut segments concurrently. Shares
+    /// the storage's fault hook and killed flag, so a kill-point firing
+    /// mid-cut also fails the writer thread — one simulated power cut.
+    pub fn segment_writer(&self) -> SegmentWriter {
+        self.cutter.clone()
+    }
+
+    /// Compaction phase 3: commit `segments` (every entry durably
+    /// renamed into place, in any order) with the manifest rename, then
+    /// GC sealed logs. Returns the number of records carried over in
+    /// the active log (the engine's new `wal_records` counter value).
+    pub fn finish_compact(
+        &self,
+        segments: Vec<(u32, String, u64)>,
+        next_trial_id: u64,
+        next_study_id: u64,
+    ) -> Result<u64, String> {
         let tx = self.tx.as_ref().expect("wal writer running");
         let (ack_tx, ack_rx) = std::sync::mpsc::sync_channel(1);
-        tx.send(Cmd::FinishCompact(next_trial_id, next_study_id, ack_tx))
+        tx.send(Cmd::FinishCompact(segments, next_trial_id, next_study_id, ack_tx))
             .map_err(|_| "wal writer stopped".to_string())?;
         ack_rx.recv().map_err(|_| "wal writer stopped".to_string())?
     }
@@ -254,8 +292,6 @@ struct Writer {
     /// covered wholesale by the manifest epoch, so only post-rotation
     /// records need a per-shard cut.
     shard_next: HashMap<u32, u64>,
-    /// Segments written since the last rotation: `(shard, file, cut)`.
-    segments: Vec<(u32, String, u64)>,
     /// Segments of the last committed manifest, by shard — the
     /// clean-shard reuse table.
     prev_segments: HashMap<u32, (String, u64)>,
@@ -283,7 +319,6 @@ impl Writer {
             limit,
             next_seq,
             shard_next: HashMap::new(),
-            segments: Vec::new(),
             prev_segments,
             stats,
         }
@@ -305,42 +340,32 @@ impl Writer {
                     let result = self.storage.begin_compact().map_err(|e| e.to_string());
                     if result.is_ok() {
                         self.shard_next.clear();
-                        self.segments.clear();
                     }
                     let _ = ack.send(result);
                 }
-                Cmd::CompactShard(shard, studies, ack) => {
+                Cmd::ShardCut(shard, ack) => {
+                    // A cheap map read — commit acks between cut specs
+                    // keep flowing while pool threads do the segment
+                    // I/O this thread used to serialize.
                     let cut = self.shard_next.get(&shard).copied().unwrap_or(0);
-                    let result = match self.storage.write_segment(shard, cut, &studies) {
-                        Ok(file) => {
-                            self.segments.push((shard, file, cut));
-                            Ok(())
-                        }
-                        Err(e) => Err(e.to_string()),
-                    };
-                    let _ = ack.send(result);
+                    let _ = ack.send(Ok(cut));
                 }
                 Cmd::ReuseSegment(shard, ack) => {
-                    let result = match self.prev_segments.get(&shard) {
-                        Some((file, cut)) => {
-                            self.segments.push((shard, file.clone(), *cut));
-                            self.stats.segments_reused.fetch_add(1, Ordering::Relaxed);
-                            Ok(true)
-                        }
-                        None => Ok(false),
-                    };
-                    let _ = ack.send(result);
+                    let entry = self.prev_segments.get(&shard).map(|(file, cut)| {
+                        self.stats.segments_reused.fetch_add(1, Ordering::Relaxed);
+                        (file.clone(), *cut)
+                    });
+                    let _ = ack.send(Ok(entry));
                 }
-                Cmd::FinishCompact(next_trial_id, next_study_id, ack) => {
+                Cmd::FinishCompact(segments, next_trial_id, next_study_id, ack) => {
                     let result = match self.storage.finish_compact(
-                        &self.segments,
+                        &segments,
                         self.next_seq,
                         next_trial_id,
                         next_study_id,
                     ) {
                         Ok(()) => {
-                            self.prev_segments = self
-                                .segments
+                            self.prev_segments = segments
                                 .iter()
                                 .map(|(shard, file, cut)| (*shard, (file.clone(), *cut)))
                                 .collect();
@@ -452,6 +477,7 @@ impl Writer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::json::Value;
     use crate::testutil::TempDir;
 
     fn rec(i: i64) -> Record {
@@ -616,6 +642,15 @@ mod tests {
         assert_eq!(w.stats().batch_limit.load(Ordering::Relaxed), 256);
     }
 
+    /// Cut one segment for `shard` the way the engine's compaction pool
+    /// does: cut spec from the writer, segment I/O through a
+    /// [`SegmentWriter`] handle.
+    fn cut(w: &GroupWal, shard: u32, snap: Value) -> (u32, String, u64) {
+        let cut = w.shard_cut(shard).unwrap();
+        let file = w.segment_writer().write_segment(shard, cut, &snap).unwrap();
+        (shard, file, cut)
+    }
+
     #[test]
     fn reuse_segment_carries_previous_manifest_entry() {
         let d = TempDir::new("group-reuse");
@@ -623,16 +658,16 @@ mod tests {
             let storage = Storage::open(d.path()).unwrap();
             let w = GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new());
             w.append(rec(0)).unwrap();
-            assert!(!w.reuse_segment(0).unwrap(), "no previous manifest yet");
+            assert!(w.reuse_segment(0).unwrap().is_none(), "no previous manifest yet");
             w.begin_compact().unwrap();
             let mut snap = Value::obj();
             snap.set("gen", 1);
-            w.compact_shard(0, Value::Obj(snap)).unwrap();
-            w.finish_compact(1, 1).unwrap();
+            let seg = cut(&w, 0, Value::Obj(snap));
+            w.finish_compact(vec![seg], 1, 1).unwrap();
             // The second compaction reuses shard 0's segment as-is.
             w.begin_compact().unwrap();
-            assert!(w.reuse_segment(0).unwrap());
-            w.finish_compact(1, 1).unwrap();
+            let (file, prev_cut) = w.reuse_segment(0).unwrap().expect("previous entry");
+            w.finish_compact(vec![(0, file, prev_cut)], 1, 1).unwrap();
             assert_eq!(w.stats().segments_reused.load(Ordering::Relaxed), 1);
         }
         let mut s = Storage::open(d.path()).unwrap();
@@ -654,8 +689,8 @@ mod tests {
             w.begin_compact().unwrap();
             let mut snap = Value::obj();
             snap.set("count", 6);
-            w.compact_shard(0, Value::Obj(snap)).unwrap();
-            let carried = w.finish_compact(7, 2).unwrap();
+            let seg = cut(&w, 0, Value::Obj(snap));
+            let carried = w.finish_compact(vec![seg], 7, 2).unwrap();
             assert_eq!(carried, 0, "no records appended since rotation");
             w.append(rec(100)).unwrap();
         }
@@ -675,7 +710,10 @@ mod tests {
     #[test]
     fn compact_cut_splits_around_segment() {
         // Records committed after rotation but before the shard's cut
-        // are covered by the segment; records after the cut replay.
+        // are covered by the segment; records after the cut replay —
+        // including records committed while the segment file itself is
+        // being written (the cut spec, not the file write, is the
+        // coverage boundary).
         let d = TempDir::new("group-cut");
         {
             let storage = Storage::open(d.path()).unwrap();
@@ -683,15 +721,20 @@ mod tests {
             w.append(rec(0)).unwrap();
             w.begin_compact().unwrap();
             w.append(rec(1)).unwrap(); // pre-cut: covered
+            let shard_cut = w.shard_cut(0).unwrap();
+            w.append(rec(2)).unwrap(); // post-cut, pre-write: replays
             let mut snap = Value::obj();
             snap.set("upto", 1);
-            w.compact_shard(0, Value::Obj(snap)).unwrap();
-            w.append(rec(2)).unwrap(); // post-cut: replays
-            w.finish_compact(1, 1).unwrap();
+            let file = w
+                .segment_writer()
+                .write_segment(0, shard_cut, &Value::Obj(snap))
+                .unwrap();
+            w.append(rec(3)).unwrap(); // post-cut: replays
+            w.finish_compact(vec![(0, file, shard_cut)], 1, 1).unwrap();
         }
         let mut s = Storage::open(d.path()).unwrap();
         let loaded = s.load().unwrap();
-        assert_eq!(loaded.events, vec![rec(2)]);
+        assert_eq!(loaded.events, vec![rec(2), rec(3)]);
         // The sealed epoch-0 log was GC'd; the pre-cut record in the
         // active log is covered by the segment.
         assert_eq!(loaded.stats.filtered_records, 1);

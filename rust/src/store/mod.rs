@@ -39,8 +39,13 @@
 //!   compaction.
 //!
 //! Incremental compaction rotates the log **first** (new epoch), then
-//! cuts one segment per shard — each shard paused only for its own cut
-//! — and finally commits the manifest and garbage-collects sealed logs.
+//! cuts one segment per shard — each shard paused only for its own cut;
+//! the cuts themselves may run concurrently on a side thread pool via
+//! [`SegmentWriter`] handles — and finally commits the manifest and
+//! garbage-collects sealed logs. The manifest rename stays the single
+//! serialization point: it happens only after every segment cut has
+//! durably completed, so a crash anywhere in the window still recovers
+//! from the previous manifest plus the log tail.
 //! Replay applies manifest segments, then every surviving log in epoch
 //! order, skipping records the manifest proves are covered: whole logs
 //! with `epoch < manifest.epoch`, and records of the manifest epoch
@@ -57,6 +62,7 @@ pub use wal::{Wal, WalError, WalStats};
 
 use crate::json::Value;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 /// On-disk format version written into the manifest.
@@ -173,20 +179,109 @@ pub struct LoadedState {
     pub stats: RecoveryStats,
 }
 
+/// State shared between the [`Storage`] owner (normally the WAL writer
+/// thread) and the [`SegmentWriter`] handles cutting snapshot segments
+/// on compaction-pool threads: the data directory, the fault-injection
+/// hook, and the killed flag. The flag is atomic so a kill-point firing
+/// on *any* thread also fails every later operation on every other
+/// handle — one process, one simulated power cut.
+struct StorageShared {
+    dir: PathBuf,
+    hook: Option<FaultHook>,
+    /// Set when a fault hook fired: the storage behaves like a crashed
+    /// process — every further operation fails.
+    killed: AtomicBool,
+}
+
+impl StorageShared {
+    /// Consult the fault hook at a named kill-point (thread-safe).
+    fn fault(&self, point: &str) -> Result<(), WalError> {
+        if self.killed.load(Ordering::Relaxed) {
+            return Err(WalError::Corrupt("storage killed by fault injection".into()));
+        }
+        if let Some(hook) = &self.hook {
+            if hook(point) {
+                self.killed.store(true, Ordering::Relaxed);
+                return Err(WalError::Corrupt(format!("fault injected at {point}")));
+            }
+        }
+        Ok(())
+    }
+
+    /// fsync the data directory itself. POSIX gives renames and unlinks
+    /// no durability ordering without this: a power cut could otherwise
+    /// persist the `MANIFEST.json` rename but not a segment rename it
+    /// depends on, leaving a manifest that references missing files —
+    /// an unrecoverable startup instead of a clean replay. (No-op on
+    /// non-unix targets, which cannot sync a directory handle.)
+    fn sync_dir(&self) -> Result<(), WalError> {
+        #[cfg(unix)]
+        std::fs::File::open(&self.dir)?.sync_all()?;
+        Ok(())
+    }
+
+    /// Durably write one snapshot segment (tmp file → fsync → rename →
+    /// directory fsync). Safe from any thread: segment files are
+    /// per-shard, so concurrent cuts of *different* shards never touch
+    /// the same path.
+    fn write_segment(
+        &self,
+        shard: u32,
+        next_seq: u64,
+        studies: &Value,
+    ) -> Result<String, WalError> {
+        self.fault("segment.write")?;
+        let name = segment_file(shard);
+        let tmp = self.dir.join(format!("{name}.tmp"));
+        let mut o = Value::obj();
+        o.set("shard", shard).set("next_seq", next_seq).set("studies", studies.clone());
+        {
+            use std::io::Write;
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(Value::Obj(o).to_string().as_bytes())?;
+            self.fault("segment.sync")?;
+            f.sync_all()?;
+        }
+        self.fault("segment.rename")?;
+        std::fs::rename(&tmp, self.dir.join(&name))?;
+        // The manifest will reference this file; its rename must be
+        // durable before the manifest's is.
+        self.sync_dir()?;
+        Ok(name)
+    }
+}
+
+/// A cloneable handle that can cut snapshot segments from any thread —
+/// the seam the parallel compaction pipeline uses to move segment I/O
+/// off the WAL writer thread while the manifest commit stays behind it.
+#[derive(Clone)]
+pub struct SegmentWriter {
+    shared: Arc<StorageShared>,
+}
+
+impl SegmentWriter {
+    /// As [`Storage::write_segment`], callable concurrently for
+    /// distinct shards.
+    pub fn write_segment(
+        &self,
+        shard: u32,
+        next_seq: u64,
+        studies: &Value,
+    ) -> Result<String, WalError> {
+        self.shared.write_segment(shard, next_seq, studies)
+    }
+}
+
 /// Persistence engine: epoch logs + per-shard snapshot segments, with a
 /// manifest as the compaction commit point. See the module docs for the
 /// on-disk layout and replay rules.
 pub struct Storage {
-    dir: PathBuf,
+    shared: Arc<StorageShared>,
     /// Active (highest-epoch) log; all appends land here.
     wal: Wal,
     epoch: u64,
     /// Lower-epoch logs not yet garbage-collected, in epoch order.
     sealed: Vec<(u64, PathBuf)>,
-    hook: Option<FaultHook>,
-    /// Set when a fault hook fired: the storage behaves like a crashed
-    /// process — every further operation fails.
-    killed: bool,
 }
 
 /// Path of the log with `epoch` under `dir`. Epoch 0 keeps the v1 name
@@ -245,33 +340,23 @@ impl Storage {
             .map(|&e| (e, log_path(&dir, e)))
             .collect();
         let wal = Wal::open(log_path(&dir, active))?;
-        Ok(Storage { dir, wal, epoch: active, sealed, hook, killed: false })
+        let shared = Arc::new(StorageShared { dir, hook, killed: AtomicBool::new(false) });
+        Ok(Storage { shared, wal, epoch: active, sealed })
     }
 
-    /// fsync the data directory itself. POSIX gives renames and unlinks
-    /// no durability ordering without this: a power cut could otherwise
-    /// persist the `MANIFEST.json` rename but not a segment rename it
-    /// depends on, leaving a manifest that references missing files —
-    /// an unrecoverable startup instead of a clean replay. (No-op on
-    /// non-unix targets, which cannot sync a directory handle.)
+    /// A handle that cuts snapshot segments from any thread (the
+    /// parallel compaction pipeline's side pool).
+    pub fn segment_writer(&self) -> SegmentWriter {
+        SegmentWriter { shared: self.shared.clone() }
+    }
+
     fn sync_dir(&self) -> Result<(), WalError> {
-        #[cfg(unix)]
-        std::fs::File::open(&self.dir)?.sync_all()?;
-        Ok(())
+        self.shared.sync_dir()
     }
 
     /// Consult the fault hook at a named kill-point.
-    fn fault(&mut self, point: &str) -> Result<(), WalError> {
-        if self.killed {
-            return Err(WalError::Corrupt("storage killed by fault injection".into()));
-        }
-        if let Some(hook) = &self.hook {
-            if hook(point) {
-                self.killed = true;
-                return Err(WalError::Corrupt(format!("fault injected at {point}")));
-            }
-        }
-        Ok(())
+    fn fault(&self, point: &str) -> Result<(), WalError> {
+        self.shared.fault(point)
     }
 
     /// Load segments / legacy snapshot / filtered events. Replays every
@@ -281,7 +366,7 @@ impl Storage {
         let mut stats = RecoveryStats::default();
 
         // Manifest (v2) — its presence supersedes the legacy snapshot.
-        let manifest = match std::fs::read_to_string(self.dir.join(MANIFEST_FILE)) {
+        let manifest = match std::fs::read_to_string(self.shared.dir.join(MANIFEST_FILE)) {
             Ok(s) => Some(
                 crate::json::parse(&s)
                     .map_err(|e| WalError::Corrupt(format!("manifest: {e}")))?,
@@ -304,7 +389,7 @@ impl Storage {
                     .get("file")
                     .as_str()
                     .ok_or_else(|| WalError::Corrupt("manifest segment without file".into()))?;
-                let text = std::fs::read_to_string(self.dir.join(file))
+                let text = std::fs::read_to_string(self.shared.dir.join(file))
                     .map_err(|e| WalError::Corrupt(format!("segment {file}: {e}")))?;
                 let value = crate::json::parse(&text)
                     .map_err(|e| WalError::Corrupt(format!("segment {file}: {e}")))?;
@@ -319,7 +404,7 @@ impl Storage {
         let snapshot = if manifest.is_some() {
             None
         } else {
-            match std::fs::read_to_string(self.dir.join(LEGACY_SNAPSHOT_FILE)) {
+            match std::fs::read_to_string(self.shared.dir.join(LEGACY_SNAPSHOT_FILE)) {
                 Ok(s) => Some(
                     crate::json::parse(&s)
                         .map_err(|e| WalError::Corrupt(format!("snapshot: {e}")))?,
@@ -406,7 +491,7 @@ impl Storage {
     pub fn begin_compact(&mut self) -> Result<(), WalError> {
         self.fault("rotate")?;
         let next_epoch = self.epoch + 1;
-        let new_wal = Wal::open(log_path(&self.dir, next_epoch))?;
+        let new_wal = Wal::open(log_path(&self.shared.dir, next_epoch))?;
         // Make the new log's directory entry durable before anything is
         // acknowledged out of it.
         self.sync_dir()?;
@@ -418,31 +503,16 @@ impl Storage {
 
     /// Phase 2, once per shard: durably write `snapshot.shard-<K>.json`
     /// covering that shard's state up to `next_seq` (tmp file → fsync →
-    /// rename). Returns the file name for the manifest.
+    /// rename). Returns the file name for the manifest. Also available
+    /// through [`Storage::segment_writer`] handles, which let the
+    /// compaction pipeline cut several shards' segments concurrently.
     pub fn write_segment(
         &mut self,
         shard: u32,
         next_seq: u64,
         studies: &Value,
     ) -> Result<String, WalError> {
-        self.fault("segment.write")?;
-        let name = segment_file(shard);
-        let tmp = self.dir.join(format!("{name}.tmp"));
-        let mut o = Value::obj();
-        o.set("shard", shard).set("next_seq", next_seq).set("studies", studies.clone());
-        {
-            use std::io::Write;
-            let mut f = std::fs::File::create(&tmp)?;
-            f.write_all(Value::Obj(o).to_string().as_bytes())?;
-            self.fault("segment.sync")?;
-            f.sync_all()?;
-        }
-        self.fault("segment.rename")?;
-        std::fs::rename(&tmp, self.dir.join(&name))?;
-        // The manifest will reference this file; its rename must be
-        // durable before the manifest's is.
-        self.sync_dir()?;
-        Ok(name)
+        self.shared.write_segment(shard, next_seq, studies)
     }
 
     /// Phase 3: commit the compaction by atomically renaming the
@@ -478,7 +548,7 @@ impl Storage {
                         .collect(),
                 ),
             );
-        let tmp = self.dir.join(format!("{MANIFEST_FILE}.tmp"));
+        let tmp = self.shared.dir.join(format!("{MANIFEST_FILE}.tmp"));
         {
             use std::io::Write;
             let mut f = std::fs::File::create(&tmp)?;
@@ -486,12 +556,12 @@ impl Storage {
             f.sync_all()?;
         }
         self.fault("manifest.rename")?;
-        std::fs::rename(&tmp, self.dir.join(MANIFEST_FILE))?;
+        std::fs::rename(&tmp, self.shared.dir.join(MANIFEST_FILE))?;
         // The rename is the commit point — fsync the directory so power
         // loss cannot roll it back; everything below is GC.
         self.sync_dir()?;
         self.fault("gc")?;
-        match std::fs::remove_file(self.dir.join(LEGACY_SNAPSHOT_FILE)) {
+        match std::fs::remove_file(self.shared.dir.join(LEGACY_SNAPSHOT_FILE)) {
             Ok(()) => {}
             Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
             Err(e) => return Err(WalError::Io(e)),
@@ -502,7 +572,7 @@ impl Storage {
         // exactly the live state.
         let live: std::collections::HashSet<&str> =
             segments.iter().map(|(_, file, _)| file.as_str()).collect();
-        for entry in std::fs::read_dir(&self.dir)? {
+        for entry in std::fs::read_dir(&self.shared.dir)? {
             let entry = entry?;
             let name = entry.file_name();
             let Some(name) = name.to_str() else { continue };
@@ -548,7 +618,7 @@ impl Storage {
 
     /// Data directory.
     pub fn dir(&self) -> &Path {
-        &self.dir
+        &self.shared.dir
     }
 }
 
@@ -751,6 +821,50 @@ mod tests {
         assert!(loaded.manifest.is_none());
         assert_eq!(loaded.events.len(), 4);
         assert_eq!(loaded.stats.filtered_records, 0);
+    }
+
+    #[test]
+    fn segment_writer_cuts_concurrently_and_shares_the_kill_flag() {
+        let d = TempDir::new("store-segwriter");
+        {
+            let mut s = Storage::open(d.path()).unwrap();
+            for i in 0..4u64 {
+                s.append(&srec("e", i as i64, i, (i % 4) as u32)).unwrap();
+            }
+            s.begin_compact().unwrap();
+            let writer = s.segment_writer();
+            // Four shards cut on four threads at once.
+            let files: Vec<(u32, String, u64)> = std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..4u32)
+                    .map(|shard| {
+                        let w = writer.clone();
+                        scope.spawn(move || {
+                            let mut seg = Value::obj();
+                            seg.set("marker", shard);
+                            let f = w.write_segment(shard, 4, &Value::Obj(seg)).unwrap();
+                            (shard, f, 4u64)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            s.finish_compact(&files, 4, 1, 1).unwrap();
+        }
+        let mut s = Storage::open(d.path()).unwrap();
+        let loaded = s.load().unwrap();
+        assert_eq!(loaded.segments.len(), 4);
+        assert!(loaded.events.is_empty(), "all records covered by the cuts");
+
+        // A kill-point firing on a pool-thread handle fails the owning
+        // Storage too — one process, one power cut.
+        let d2 = TempDir::new("store-segwriter-kill");
+        let hook: FaultHook = Arc::new(|point: &str| point == "segment.rename");
+        let mut s = Storage::open_with_hook(d2.path(), Some(hook)).unwrap();
+        s.append(&srec("e", 0, 0, 0)).unwrap();
+        s.begin_compact().unwrap();
+        let w = s.segment_writer();
+        assert!(w.write_segment(0, 1, &Value::Obj(Value::obj())).is_err());
+        assert!(s.append(&srec("e", 1, 1, 0)).is_err(), "owner shares the kill");
     }
 
     #[test]

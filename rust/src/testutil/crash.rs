@@ -6,8 +6,13 @@
 //! a point (optionally "the Nth time the point is reached"), run the
 //! workload, and the storage dies at exactly that instant — the current
 //! operation fails and every later one errors, which is what a power
-//! cut leaves behind. The test then reopens the directory with a fresh,
-//! unhooked engine and asserts the two crash invariants:
+//! cut leaves behind. The hook and its hit counters are fully
+//! thread-safe: with parallel compaction the `segment.*` points fire on
+//! *pool* threads, racing each other, and the first firing kills every
+//! storage handle at once (the shared `killed` flag), exactly like one
+//! power cut takes out every thread of a real process. The test then
+//! reopens the directory with a fresh, unhooked engine and asserts the
+//! two crash invariants:
 //!
 //! * **acknowledged ⇒ durable** — every mutation acknowledged before
 //!   the kill is present after recovery;

@@ -324,6 +324,189 @@ mod tests {
         });
     }
 
+    /// Fuzz recovery across *parallel* compactions: a random
+    /// ask/tell interleaving with `compact()` calls sprinkled in, the
+    /// segment cuts running on a multi-thread pool
+    /// (`compact_threads > 1`), then an optional torn tail on the
+    /// active (highest-epoch) log, then recovery on a possibly
+    /// different shard count. Invariants:
+    ///
+    /// * prefix — op survival is monotone in commit order (no
+    ///   resurrection past a gap);
+    /// * compaction durability — every op acknowledged before the last
+    ///   successful `compact()` is covered by segments and must
+    ///   survive any damage to the active log;
+    /// * no phantoms — every recovered trial/value was acknowledged.
+    #[test]
+    fn prop_recovery_with_parallel_compaction_is_prefix_consistent() {
+        use crate::coordinator::engine::{Engine, EngineConfig};
+        use crate::json::{parse, Value};
+        use crate::testutil::TempDir;
+
+        #[derive(Debug)]
+        enum Op {
+            /// (trial_id, acked before the last compaction?)
+            Ask(u64, bool),
+            /// (trial_id, value, acked before the last compaction?)
+            Tell(u64, f64, bool),
+        }
+
+        fn ask_body(study: usize) -> Value {
+            parse(&format!(
+                r#"{{
+                "study_name": "pcfuzz-{study}",
+                "properties": {{"x": {{"low": 0.0, "high": 1.0}}}},
+                "direction": "minimize",
+                "sampler": {{"name": "random"}}
+            }}"#
+            ))
+            .unwrap()
+        }
+
+        /// The active (highest-epoch) log in `dir`.
+        fn active_log(dir: &std::path::Path) -> Option<std::path::PathBuf> {
+            let mut best: Option<(u64, std::path::PathBuf)> = None;
+            for entry in std::fs::read_dir(dir).ok()? {
+                let entry = entry.ok()?;
+                let name = entry.file_name();
+                let name = name.to_str()?;
+                let epoch = if name == "wal.log" {
+                    Some(0)
+                } else {
+                    name.strip_prefix("wal.")
+                        .and_then(|r| r.strip_suffix(".log"))
+                        .and_then(|e| e.parse::<u64>().ok())
+                };
+                if let Some(e) = epoch {
+                    if best.as_ref().map(|(b, _)| e > *b).unwrap_or(true) {
+                        best = Some((e, entry.path()));
+                    }
+                }
+            }
+            best.map(|(_, p)| p)
+        }
+
+        check(16, |g| {
+            let shard_counts = [1usize, 4, 8];
+            let writer_shards = *g.choose(&shard_counts);
+            let reader_shards = *g.choose(&shard_counts);
+            let compact_threads = g.usize(2, 4);
+            let d = TempDir::new("prop-pc-recovery");
+            let n_studies = g.usize(1, 3);
+            let n_ops = g.usize(4, 28);
+
+            let mut ops: Vec<Op> = Vec::new();
+            let mut told: std::collections::HashMap<u64, f64> =
+                std::collections::HashMap::new();
+            let mut compactions = 0usize;
+            {
+                let engine = Engine::open(
+                    d.path(),
+                    EngineConfig {
+                        n_shards: writer_shards,
+                        compact_threads,
+                        ..Default::default()
+                    },
+                )
+                .unwrap();
+                let mut running: Vec<u64> = Vec::new();
+                for i in 0..n_ops {
+                    if g.rng().chance(0.2) {
+                        engine.compact().unwrap();
+                        compactions += 1;
+                        // Everything acked so far is now segment-covered.
+                        for op in ops.iter_mut() {
+                            match op {
+                                Op::Ask(_, covered) | Op::Tell(_, _, covered) => *covered = true,
+                            }
+                        }
+                    }
+                    if running.is_empty() || g.bool() {
+                        let study = g.usize(0, n_studies - 1);
+                        let r = engine.ask(&ask_body(study)).unwrap();
+                        running.push(r.trial_id);
+                        ops.push(Op::Ask(r.trial_id, false));
+                    } else {
+                        let idx = g.usize(0, running.len() - 1);
+                        let id = running.swap_remove(idx);
+                        let v = i as f64;
+                        if engine.tell(id, v).is_ok() {
+                            told.insert(id, v);
+                            ops.push(Op::Tell(id, v, false));
+                        }
+                    }
+                }
+            }
+
+            // Torn tail on the active log only — segments and sealed
+            // history must carry everything compaction covered.
+            if g.bool() {
+                if let Some(log) = active_log(d.path()) {
+                    let bytes = std::fs::read(&log).unwrap_or_default();
+                    if !bytes.is_empty() {
+                        let cut = g.usize(0, bytes.len());
+                        std::fs::write(&log, &bytes[..cut]).unwrap();
+                    }
+                }
+            }
+
+            let engine = Engine::open(
+                d.path(),
+                EngineConfig { n_shards: reader_shards, ..Default::default() },
+            )
+            .unwrap();
+            let mut trials: std::collections::HashMap<u64, Option<f64>> =
+                std::collections::HashMap::new();
+            for s in engine.studies_json().as_arr().unwrap() {
+                let sid = s.get("id").as_u64().unwrap();
+                for t in engine.trials_json(sid).unwrap().as_arr().unwrap() {
+                    trials.insert(t.get("id").as_u64().unwrap(), t.get("value").as_f64());
+                }
+            }
+
+            // No phantoms.
+            for (&id, &value) in &trials {
+                if !ops.iter().any(|op| matches!(op, Op::Ask(a, _) if *a == id)) {
+                    return Err(format!("phantom trial {id} recovered"));
+                }
+                if let Some(v) = value {
+                    if told.get(&id) != Some(&v) {
+                        return Err(format!("phantom value {v} on trial {id}"));
+                    }
+                }
+            }
+
+            // Compaction durability + monotone prefix.
+            let mut gap = false;
+            for (i, op) in ops.iter().enumerate() {
+                let (present, covered) = match op {
+                    Op::Ask(id, covered) => (trials.contains_key(id), *covered),
+                    Op::Tell(id, v, covered) => {
+                        (trials.get(id).copied().flatten() == Some(*v), *covered)
+                    }
+                };
+                if covered && !present {
+                    return Err(format!(
+                        "op {i} ({op:?}) was covered by a compaction ({compactions} total) \
+                         but lost ({writer_shards}→{reader_shards} shards, \
+                         {compact_threads} cut threads)"
+                    ));
+                }
+                if gap && present {
+                    return Err(format!(
+                        "op {i} ({op:?}) survived after an earlier op was lost \
+                         ({writer_shards}→{reader_shards} shards, \
+                         {compact_threads} cut threads)"
+                    ));
+                }
+                if !present {
+                    gap = true;
+                }
+            }
+            Ok(())
+        });
+    }
+
     /// Fuzz the fleet's slot accounting: a random schedule of
     /// admit+bind / finish / requeue / re-handout operations over
     /// random sites, studies, tenants and quotas must keep the

@@ -128,6 +128,111 @@ fn every_compaction_kill_point_preserves_acknowledged_state() {
 }
 
 #[test]
+fn concurrent_cut_kill_points_preserve_acknowledged_state() {
+    // Same contract as the sequential sweep above, but with the
+    // segment cuts fanned out on a 4-thread compaction pool: the
+    // `segment.*` kill-points now fire on *pool* threads (the shared
+    // killed flag then fails the WAL writer too), and `manifest.write`
+    // fires in the window between the last segment rename and the
+    // manifest rename — every segment durably in place, commit point
+    // never reached, so recovery must fall back to the log alone.
+    let kill_points: &[(&str, usize)] = &[
+        ("segment.write", 0),            // one cut dies before its tmp write
+        ("segment.sync", 1),             // another cut's tmp written, not fsynced
+        ("segment.rename", 2),           // third rename attempt dies
+        ("segment.rename", N_SHARDS - 1), // last rename attempt dies
+        ("manifest.write", 0),           // all renames durable, manifest not
+    ];
+    for &(point, skip) in kill_points {
+        let label = format!("pool:{point}[{skip}]");
+        let dir = TempDir::new(&format!("ci-pool-{point}-{skip}"));
+        let ks = KillSwitch::new();
+        let storage =
+            Storage::open_with_hook(dir.path(), Some(ks.arm_nth(point, skip).hook())).unwrap();
+        let pool_config = EngineConfig { compact_threads: 4, ..config() };
+        let engine = Engine::open_with_storage(storage, pool_config.clone()).unwrap();
+        let acked = run_workload(&engine);
+        assert!(
+            engine.compact().is_err(),
+            "{label}: compaction must die at the kill-point"
+        );
+        assert!(ks.fired(), "{label}: workload never reached the kill-point");
+        drop(engine);
+
+        let engine = Engine::open(dir.path(), pool_config.clone()).unwrap();
+        let recovered = recovered_tells(&engine);
+        assert_eq!(recovered.len(), acked.len(), "{label}: completed-trial count diverged");
+        for (id, v) in &acked {
+            assert_eq!(
+                recovered.get(id),
+                Some(v),
+                "{label}: acknowledged tell for trial {id} lost"
+            );
+        }
+        assert_eq!(engine.recovery_stats().seq_order_violations, 0, "{label}");
+
+        // The recovered engine keeps serving; a full parallel
+        // compaction now succeeds and round-trips once more.
+        let r = engine.ask(&ask_body("ci-0")).unwrap();
+        engine.tell(r.trial_id, 99.0).unwrap();
+        engine.compact().unwrap();
+        drop(engine);
+        let engine = Engine::open(dir.path(), pool_config).unwrap();
+        let recovered = recovered_tells(&engine);
+        assert_eq!(recovered.len(), acked.len() + 1, "{label}: post-recovery tell lost");
+        assert_eq!(recovered.get(&r.trial_id), Some(&99.0), "{label}");
+    }
+}
+
+#[test]
+fn commit_acks_flow_while_segments_are_cut() {
+    // The ownership inversion's point: while pool threads cut
+    // segments, the WAL writer must keep committing batches. A shard's
+    // tell issued *during* the compaction (from another thread) must be
+    // acknowledged and durable even if the compaction then dies between
+    // the cuts and the manifest — the record landed in the new epoch's
+    // log, which recovery replays in full when no new manifest
+    // committed.
+    let dir = TempDir::new("ci-acks-during-compact");
+    let ks = KillSwitch::new();
+    let acked;
+    let during;
+    {
+        let storage = Storage::open_with_hook(dir.path(), Some(ks.hook())).unwrap();
+        let pool_config = EngineConfig { compact_threads: 4, ..config() };
+        let engine =
+            std::sync::Arc::new(Engine::open_with_storage(storage, pool_config).unwrap());
+        acked = run_workload(&engine);
+        // Die at the manifest write: every segment cut completes, the
+        // commit point is never reached.
+        ks.arm_nth("manifest.write", 0);
+        let worker = {
+            let engine = engine.clone();
+            std::thread::spawn(move || {
+                // Commits racing with the concurrent cuts; every Ok ack
+                // must survive the crashed compaction.
+                let mut acked = Vec::new();
+                for i in 0..20u64 {
+                    let Ok(r) = engine.ask(&ask_body("ci-during")) else { break };
+                    if engine.tell(r.trial_id, 1000.0 + i as f64).is_ok() {
+                        acked.push((r.trial_id, 1000.0 + i as f64));
+                    }
+                }
+                acked
+            })
+        };
+        assert!(engine.compact().is_err(), "compaction must die at manifest.write");
+        assert!(ks.fired());
+        during = worker.join().unwrap();
+    }
+    let engine = Engine::open(dir.path(), config()).unwrap();
+    let recovered = recovered_tells(&engine);
+    for (id, v) in acked.iter().chain(&during) {
+        assert_eq!(recovered.get(id), Some(v), "acknowledged tell {id} lost");
+    }
+}
+
+#[test]
 fn kill_point_inside_second_compaction_respects_first_manifest() {
     // First compaction commits cleanly; the second dies before its
     // manifest. Recovery must fall back to the *first* manifest and the

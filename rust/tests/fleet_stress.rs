@@ -593,3 +593,114 @@ fn requeue_queue_survives_restart() {
     assert_eq!((q.trial_id, q.trial_number, q.params.to_string()), issued);
     e.tell(q.trial_id, 1.0).unwrap();
 }
+
+/// Regression (affinity amnesia): the site health ledger is persisted
+/// in the fleet segment and rebuilt from replayed fleet records, so a
+/// restarted server defers requeued trials away from a historically
+/// lossy site exactly as the pre-restart ledger would — instead of
+/// resetting to "everyone is healthy" and handing the queue head right
+/// back to the spot pool that keeps dropping it.
+#[test]
+fn site_health_ledger_survives_restart_and_drives_affinity() {
+    use hopaas::testutil::TempDir;
+    let d = TempDir::new("fleet-health-restart");
+    let config = EngineConfig {
+        lease_timeout: Some(0.01),
+        site_affinity: true,
+        fairness_horizon: 60.0,
+        ..Default::default()
+    };
+    {
+        let e = Engine::open(d.path(), config.clone()).unwrap();
+        // Stable site: one clean trial. Spot: takes one and vanishes.
+        let (w_stable, _) = e.register_worker("st1", "stable", "gpu").unwrap();
+        let ok = e.ask(&ask_body_worker("hl", w_stable)).unwrap();
+        e.tell(ok.trial_id, 0.1).unwrap();
+        let (w_spot, _) = e.register_worker("sp1", "spot", "gpu").unwrap();
+        let lost = e.ask(&ask_body_worker("hl", w_spot)).unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(e.expire_leases(), 1, "spot trial requeued");
+        // Drain the queue before the restart — a stable worker finishes
+        // the trial — so afterwards only the *ledger* remembers spot's
+        // record, not a leftover queue entry.
+        let (w_stable2, _) = e.register_worker("st2", "stable", "gpu").unwrap();
+        let q = e.ask(&ask_body_worker("hl", w_stable2)).unwrap();
+        assert!(q.requeued);
+        assert_eq!(q.trial_id, lost.trial_id);
+        e.tell(q.trial_id, 0.2).unwrap();
+        assert!(!e.fleet().lock().sched.site_preferred("spot"));
+        // Cut the fleet segment (ledger included) and "power-cycle".
+        e.compact().unwrap();
+    }
+    let e = Engine::open(d.path(), config).unwrap();
+    {
+        let fl = e.fleet().lock();
+        assert!(!fl.sched.site_preferred("spot"), "ledger reset to blank on restart");
+        assert!(fl.sched.site_preferred("stable"));
+    }
+    // A fresh preemption after the restart: the persisted ledger must
+    // shape the handout exactly as the pre-restart one would — the spot
+    // replacement is deferred (fresh trial), the stable worker gets the
+    // requeued trial with its identity intact.
+    let (w_spot2, _) = e.register_worker("sp2", "spot", "gpu").unwrap();
+    let lost2 = e.ask(&ask_body_worker("hl", w_spot2)).unwrap();
+    std::thread::sleep(Duration::from_millis(30));
+    assert!(e.expire_leases() >= 1, "post-restart preemption requeued");
+    // The stats block reports the merged (persisted + post-restart)
+    // ledger: spot handed 2 / lost 2 across the restart.
+    {
+        let stats = e.stats_json();
+        let sites = stats.get("fleet").get("sites");
+        let spot = sites
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|s| s.get("site").as_str() == Some("spot"))
+            .expect("spot site reported");
+        assert_eq!(spot.get("handed").as_u64(), Some(2));
+        assert_eq!(spot.get("lost").as_u64(), Some(2));
+    }
+    let (w_spot3, _) = e.register_worker("sp3", "spot", "gpu").unwrap();
+    let fresh = e.ask(&ask_body_worker("hl", w_spot3)).unwrap();
+    assert!(!fresh.requeued, "persisted lossy ledger defers the spot site");
+    assert!(e.metrics.fleet_affinity_deferrals.get() >= 1);
+    let (w_stable3, _) = e.register_worker("st3", "stable", "gpu").unwrap();
+    let q2 = e.ask(&ask_body_worker("hl", w_stable3)).unwrap();
+    assert!(q2.requeued, "healthy site serves the queue head");
+    assert_eq!(
+        (q2.trial_id, q2.trial_number, q2.params.to_string()),
+        (lost2.trial_id, lost2.trial_number, lost2.params.to_string())
+    );
+}
+
+/// Regression (quota bypass): a worker-less (legacy) ask never holds a
+/// lease, so tenant lease-quotas cannot bound it — the sliding
+/// ask-rate ledger must.
+#[test]
+fn worker_less_asks_rate_limited_per_tenant() {
+    let e = Engine::in_memory(EngineConfig {
+        tenant_ask_rate: 3,
+        tenant_ask_window: 3600.0,
+        // A lease quota alone must NOT stop worker-less asks (that is
+        // the bypass): prove the ledger is what denies.
+        tenant_quota: 1,
+        ..Default::default()
+    });
+    for _ in 0..3 {
+        e.ask_as(&ask_body("wl"), Some("alice")).unwrap();
+    }
+    let err = e.ask_as(&ask_body("wl"), Some("alice")).unwrap_err();
+    assert!(matches!(err, ApiError::Quota(_)), "{err}");
+    assert!(err.to_string().contains("tenant 'alice'"), "{err}");
+    assert!(err.to_string().contains("ask rate"), "{err}");
+    assert_eq!(
+        e.metrics.tenant_denials.lock().unwrap().get("alice").copied(),
+        Some(1),
+        "denial attributed to the tenant"
+    );
+    // Another tenant has its own window; tenant-less asks are unbounded.
+    e.ask_as(&ask_body("wl"), Some("bob")).unwrap();
+    for _ in 0..8 {
+        e.ask_as(&ask_body("wl"), None).unwrap();
+    }
+}
