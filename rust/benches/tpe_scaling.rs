@@ -1,11 +1,15 @@
 //! E8 — scalability of the suggestion path and the HTTP layer.
 //!
-//! Two questions the paper's "scalable set of Uvicorn instances" design
+//! Questions the paper's "scalable set of Uvicorn instances" design
 //! answers operationally:
-//!   1. how does the TPE/GP suggest cost grow with the study history
-//!      (the server re-fits the surrogate per ask)?
+//!   1. what does an ask cost cold (refit the sampler from the study
+//!      history) vs cached (reuse the fit, as the engine does between
+//!      tells), as the history grows?
 //!   2. how does end-to-end ask throughput scale with server worker
 //!      threads?
+//!
+//! E8a results are written to `BENCH_samplers.json` at the repository
+//! root (the `bench-samplers` CI job uploads it as an artifact).
 //!
 //! Run: `cargo bench --bench tpe_scaling`
 
@@ -15,7 +19,7 @@ use hopaas::coordinator::space::{Direction, Space};
 use hopaas::coordinator::study::AlgoConfig;
 use hopaas::coordinator::service::{build_router, HopaasConfig, HopaasServer};
 use hopaas::http::{Client, Server, ServerConfig};
-use hopaas::json::parse;
+use hopaas::json::{parse, Value};
 use hopaas::rng::Rng;
 use std::sync::Arc;
 
@@ -45,32 +49,68 @@ fn main() {
     let space = space();
     let mut rng = Rng::new(1);
 
-    println!("\nE8a: sampler suggest cost vs history size (5-dim space)\n");
+    println!("\nE8a: ask cost, cold fit vs cached fit, by history size (5-dim space)\n");
     println!(
-        "{:<8} {:>8} {:>12} {:>12}",
-        "sampler", "history", "mean", "p99"
+        "{:<8} {:>8} {:>12} {:>12} {:>9}",
+        "sampler", "history", "cold", "cached", "speedup"
     );
-    println!("{}", "-".repeat(44));
+    println!("{}", "-".repeat(54));
+    let mut rows = Vec::new();
     for sampler_name in ["tpe", "gp", "cmaes", "random"] {
         let sampler = make_sampler(&AlgoConfig::new(sampler_name)).unwrap();
-        for n in [100usize, 400, 800, 1600, 3200] {
-            if sampler_name == "gp" && n > 800 {
-                continue; // GP caps its conditioning set at 256 anyway
+        for n in [100usize, 1_000, 10_000, 100_000] {
+            if sampler_name == "gp" && n > 1_000 {
+                // GP caps its conditioning set at 256; larger histories
+                // only grow the (identical) pre-cap scan.
+                continue;
             }
             let obs = history(&space, n, &mut rng);
+            let iters = match n {
+                100_000 => 3,
+                10_000 => 10,
+                _ => 30,
+            };
+            // Cold: what every ask paid before the fit cache — refit
+            // from the history window, then draw.
             let mut r2 = Rng::new(9);
-            let s = bench(3, 30, || {
-                let _ = sampler.suggest(&space, &obs, Direction::Minimize, n as u64, &mut r2);
+            let cold = bench(3, iters, || {
+                let fit = sampler.fit(&space, &obs, Direction::Minimize);
+                let _ =
+                    sampler.suggest_fitted(&space, fit.as_ref(), n as u64, &mut r2);
             });
+            // Cached: what an ask pays while no tell has landed — the
+            // engine reuses the study's fit and only draws.
+            let fit = sampler.fit(&space, &obs, Direction::Minimize);
+            let mut r3 = Rng::new(9);
+            let cached = bench(3, iters.max(30), || {
+                let _ =
+                    sampler.suggest_fitted(&space, fit.as_ref(), n as u64, &mut r3);
+            });
+            let speedup = cold.mean() / cached.mean().max(1e-12);
             println!(
-                "{:<8} {:>8} {:>12} {:>12}",
+                "{:<8} {:>8} {:>12} {:>12} {:>8.1}x",
                 sampler_name,
                 n,
-                fmt_duration(s.mean()),
-                fmt_duration(s.quantile(0.99))
+                fmt_duration(cold.mean()),
+                fmt_duration(cached.mean()),
+                speedup
             );
+            let mut row = Value::obj();
+            row.set("sampler", sampler_name)
+                .set("history", n as u64)
+                .set("cold_fit_mean_s", cold.mean())
+                .set("cached_ask_mean_s", cached.mean())
+                .set("speedup", speedup);
+            rows.push(Value::Obj(row));
         }
     }
+    let mut out = Value::obj();
+    out.set("bench", "samplers").set("space_dims", 5u64).set("rows", Value::Arr(rows));
+    let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_samplers.json");
+    std::fs::write(&json_path, Value::Obj(out).to_pretty()).unwrap();
+    println!("\nwrote {}", json_path.display());
 
     // E8b: in-process router dispatch cost (no TCP) — isolates the HTTP
     // parse/dispatch overhead from socket costs.

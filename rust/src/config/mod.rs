@@ -120,6 +120,7 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
     let mut dead_worker_keep = 1024u64;
     let mut site_idle_retention = 3600.0f64;
     let mut backlog = 1024u64;
+    let mut sampler_cache = true;
 
     // Layer 1: config file.
     if let Some(path) = args.get("config") {
@@ -210,6 +211,9 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
         if let Some(x) = v.get("backlog").as_u64() {
             backlog = x;
         }
+        if let Value::Bool(b) = v.get("sampler_cache") {
+            sampler_cache = *b;
+        }
         // File keys mirror the flag names: accept the http_-prefixed
         // spellings too ("workers"/"backlog" stay as legacy keys).
         if let Some(x) = v.get("http_workers").as_u64() {
@@ -274,6 +278,16 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
     // size; `--workers` stays as the historical alias.
     workers = args.get_u64("http-workers", workers);
     backlog = args.get_u64("http-backlog", backlog);
+    // Escape hatch for the sampler fit cache: `off` refits on every ask
+    // (the pre-cache behavior). Suggestions are byte-identical either
+    // way; the knob only exists to rule the cache out when debugging.
+    if let Some(x) = args.get("sampler-cache") {
+        sampler_cache = match x {
+            "on" | "true" | "1" => true,
+            "off" | "false" | "0" => false,
+            other => return Err(format!("--sampler-cache: expected on|off, got '{other}'")),
+        };
+    }
 
     let config = HopaasConfig {
         engine: EngineConfig {
@@ -299,6 +313,7 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
             requeue_max: requeue_max as u32,
             dead_worker_keep: dead_worker_keep as usize,
             site_idle_retention: site_idle_retention.max(1.0),
+            sampler_cache,
         },
         http: ServerConfig {
             workers: workers as usize,
@@ -545,6 +560,32 @@ mod tests {
         let (_, cfg) = server_config(&a).unwrap();
         assert_eq!(cfg.http.workers, 6);
         assert_eq!(cfg.http.backlog, 12);
+    }
+
+    #[test]
+    fn sampler_cache_flag_and_file_key() {
+        let a = args("serve");
+        let (_, cfg) = server_config(&a).unwrap();
+        assert!(cfg.engine.sampler_cache, "fit cache is on by default");
+        let a = args("serve --sampler-cache off");
+        let (_, cfg) = server_config(&a).unwrap();
+        assert!(!cfg.engine.sampler_cache);
+        let a = args("serve --sampler-cache on");
+        let (_, cfg) = server_config(&a).unwrap();
+        assert!(cfg.engine.sampler_cache);
+        // Anything other than on/off is a config error, not a silent on.
+        let a = args("serve --sampler-cache maybe");
+        assert!(server_config(&a).is_err());
+        // The file key mirrors the flag; the flag overrides the file.
+        let d = TempDir::new("config-sampler-cache");
+        let p = d.path().join("hopaas.json");
+        std::fs::write(&p, r#"{"sampler_cache": false}"#).unwrap();
+        let a = args(&format!("serve --config {}", p.display()));
+        let (_, cfg) = server_config(&a).unwrap();
+        assert!(!cfg.engine.sampler_cache);
+        let a = args(&format!("serve --config {} --sampler-cache on", p.display()));
+        let (_, cfg) = server_config(&a).unwrap();
+        assert!(cfg.engine.sampler_cache);
     }
 
     #[test]

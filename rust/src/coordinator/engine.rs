@@ -40,7 +40,7 @@
 //! gives the paper's backends).
 
 use super::registry::{fnv1a, place, DirEntry, Directory, TrialRouter};
-use super::samplers::{make_sampler, Obs};
+use super::samplers::{is_known_sampler, make_sampler, FitState, Obs, Sampler};
 use super::space::{assignment_to_json, Assignment};
 use super::study::{parse_ask_body, Study, StudyDef};
 use super::trial::{Trial, TrialState};
@@ -149,6 +149,11 @@ pub struct EngineConfig {
     /// Idle-site eviction window for the fleet GC, seconds
     /// (`--site-idle-retention`).
     pub site_idle_retention: f64,
+    /// Reuse a study's cached sampler fit across asks while no tell has
+    /// landed (`--sampler-cache off` disables reuse — every ask refits
+    /// from the history window, the pre-cache behavior; the suggestion
+    /// stream is byte-identical either way, see `Sampler::suggest`).
+    pub sampler_cache: bool,
 }
 
 impl Default for EngineConfig {
@@ -176,9 +181,13 @@ impl Default for EngineConfig {
             requeue_max: 3,
             dead_worker_keep: 1024,
             site_idle_retention: 3600.0,
+            sampler_cache: true,
         }
     }
 }
+
+/// Largest `n` accepted by a batched ask (`{"n": k}` in the body).
+pub const MAX_ASK_BATCH: usize = 64;
 
 /// Response of a successful `ask`.
 #[derive(Clone, Debug)]
@@ -617,67 +626,121 @@ impl Engine {
     /// or legacy callers). Tenant quotas bind leases, so they apply to
     /// worker-bound asks — the only ones that hold fleet slots.
     pub fn ask_as(&self, body: &Value, tenant: Option<&str>) -> Result<AskReply, ApiError> {
+        self.ask_n_as(body, 1, tenant).map(|mut v| v.remove(0))
+    }
+
+    /// Batched `ask`: reserve `n` trials of the study in one request.
+    /// One shard-lock acquisition reserves all `n` numbers and one
+    /// sampler fit amortizes over the whole batch, but each suggestion
+    /// still draws from its own trial-number-seeded RNG — the reply
+    /// stream is byte-identical to `n` sequential single asks.
+    ///
+    /// Error contract: `Err` means *zero* trials were created. When the
+    /// batch partially succeeds (e.g. requeued trials were handed out
+    /// before a storage error), the created prefix is returned as `Ok`
+    /// with fewer than `n` entries — the caller sees exactly which
+    /// trials exist.
+    pub fn ask_n_as(
+        &self,
+        body: &Value,
+        n: usize,
+        tenant: Option<&str>,
+    ) -> Result<Vec<AskReply>, ApiError> {
+        if n == 0 || n > MAX_ASK_BATCH {
+            return Err(ApiError::BadRequest(format!(
+                "'n' must be between 1 and {MAX_ASK_BATCH}, got {n}"
+            )));
+        }
         let (def, node) = parse_ask_body(body).map_err(ApiError::BadRequest)?;
+        // Reject unknown sampler names before any side effects: the
+        // study (and its quota slots) must not be created for an ask
+        // that can never suggest. MO studies resolve names differently
+        // (`ask_mo` validates nsga2 + the plain subset itself).
+        if !def.is_mo() && !is_known_sampler(&def.sampler.name) {
+            return Err(ApiError::BadRequest(format!(
+                "unknown sampler '{}'",
+                def.sampler.name
+            )));
+        }
         let worker = body.get("worker").as_u64();
         let now = self.now();
         let key = def.key();
+        self.metrics.ask_batch_size.observe(n as f64);
         // Worker-less (legacy) asks never hold a lease, so the lease
         // quotas cannot bound them — the sliding per-tenant ask-rate
-        // ledger does, checked before any sampling work.
+        // ledger does, checked before any sampling work. Each trial of
+        // the batch costs one ledger slot, same as `n` sequential asks.
         if worker.is_none() {
             if let Some(t) = tenant {
-                if let Err(e) = self.fleet.note_legacy_ask(t, now) {
-                    self.metrics.fleet_quota_denials.inc();
-                    if crate::fleet::scheduler::is_tenant_denial(&e) {
-                        self.metrics.inc_tenant_denial(t);
+                for _ in 0..n {
+                    if let Err(e) = self.fleet.note_legacy_ask(t, now) {
+                        self.metrics.fleet_quota_denials.inc();
+                        if crate::fleet::scheduler::is_tenant_denial(&e) {
+                            self.metrics.inc_tenant_denial(t);
+                        }
+                        return Err(e);
                     }
-                    return Err(e);
                 }
             }
         }
-        // Fleet admission: a worker-bound ask reserves a scheduling slot
-        // (site + study + tenant quotas, fair share) before any sampling
-        // work. The slot becomes a lease on success and is returned on
-        // error. `admit` hands back the site the slot was counted under;
-        // it is threaded through to the bind (or the cancel) so the
-        // ledger stays exact even if the worker is GC'd mid-ask.
-        let mut admitted_site: Option<String> = None;
+        // Fleet admission: a worker-bound ask reserves one scheduling
+        // slot per trial (site + study + tenant quotas, fair share)
+        // before any sampling work. Slots become leases on success and
+        // are all returned on error — a batch is admitted whole or not
+        // at all. `admit` hands back the site each slot was counted
+        // under; it is threaded through to the bind (or the cancel) so
+        // the ledger stays exact even if the worker is GC'd mid-ask.
+        let mut admitted: Vec<String> = Vec::new();
         if let Some(wid) = worker {
-            match self.fleet.lock().admit(wid, &key, tenant, now, &self.fleet.config) {
-                Ok(site) => admitted_site = Some(site),
-                Err(e) => {
-                    if matches!(e, ApiError::Quota(_)) {
-                        self.metrics.fleet_quota_denials.inc();
-                        // Only tenant-*rule* denials feed the per-tenant
-                        // series: a tenanted ask refused on site capacity
-                        // is site back-pressure, not a tenant budget
-                        // problem.
-                        if let Some(t) = tenant {
-                            if crate::fleet::scheduler::is_tenant_denial(&e) {
-                                self.metrics.inc_tenant_denial(t);
+            for _ in 0..n {
+                match self.fleet.lock().admit(wid, &key, tenant, now, &self.fleet.config) {
+                    Ok(site) => admitted.push(site),
+                    Err(e) => {
+                        if matches!(e, ApiError::Quota(_)) {
+                            self.metrics.fleet_quota_denials.inc();
+                            // Only tenant-*rule* denials feed the
+                            // per-tenant series: a tenanted ask refused
+                            // on site capacity is site back-pressure,
+                            // not a tenant budget problem.
+                            if let Some(t) = tenant {
+                                if crate::fleet::scheduler::is_tenant_denial(&e) {
+                                    self.metrics.inc_tenant_denial(t);
+                                }
                             }
                         }
+                        for site in &admitted {
+                            self.fleet.lock().cancel_admission(site, &key, tenant);
+                        }
+                        return Err(e);
                     }
-                    return Err(e);
                 }
             }
         }
-        let result =
-            self.ask_admitted(def, node, now, &key, worker, tenant, admitted_site.as_deref());
-        if result.is_err() {
-            if let Some(site) = &admitted_site {
-                self.fleet.lock().cancel_admission(site, &key, tenant);
+        let result = self.ask_admitted_n(def, node, now, &key, worker, tenant, &admitted, n);
+        // Return every admission slot the batch did not consume: all of
+        // them on `Err` (zero trials created), the unused tail on a
+        // partial `Ok` (each reply — requeued or fresh — consumed one).
+        match &result {
+            Ok(replies) => {
+                for site in admitted.iter().skip(replies.len()) {
+                    self.fleet.lock().cancel_admission(site, &key, tenant);
+                }
+            }
+            Err(_) => {
+                for site in &admitted {
+                    self.fleet.lock().cancel_admission(site, &key, tenant);
+                }
             }
         }
         result
     }
 
-    /// The ask body once admission (if any) has been granted. Hands out
-    /// a requeued trial of the study when one is waiting — re-homing it
-    /// with its original id, number and parameters — and samples a new
-    /// trial otherwise.
+    /// The ask body once admission (if any) has been granted. Drains
+    /// waiting requeued trials of the study first — re-homing them with
+    /// their original ids, numbers and parameters — and samples fresh
+    /// trials for the remainder of the batch.
     #[allow(clippy::too_many_arguments)]
-    fn ask_admitted(
+    fn ask_admitted_n(
         &self,
         def: StudyDef,
         node: Option<String>,
@@ -685,68 +748,174 @@ impl Engine {
         key: &str,
         worker: Option<u64>,
         tenant: Option<&str>,
-        site: Option<&str>,
-    ) -> Result<AskReply, ApiError> {
+        sites: &[String],
+        n: usize,
+    ) -> Result<Vec<AskReply>, ApiError> {
+        let mut replies: Vec<AskReply> = Vec::with_capacity(n);
         if let Some(wid) = worker {
-            if let Some(reply) =
-                self.assign_requeued(key, wid, tenant, site.unwrap_or(""), now)?
-            {
-                return Ok(reply);
+            while replies.len() < n {
+                let site = sites[replies.len()].as_str();
+                match self.assign_requeued(key, wid, tenant, site, now) {
+                    Ok(Some(reply)) => replies.push(reply),
+                    Ok(None) => break,
+                    // Partial-batch contract: `Err` only when nothing
+                    // was handed out; otherwise the created prefix is
+                    // the response and the caller returns unused slots.
+                    Err(e) if replies.is_empty() => return Err(e),
+                    Err(_) => return Ok(replies),
+                }
+            }
+            if replies.len() == n {
+                return Ok(replies);
             }
         }
+        let fresh = n - replies.len();
         let key = key.to_string();
         if def.is_mo() {
-            return self.ask_mo(def, node, now, key, worker, tenant, site);
+            // MO asks refit NSGA-II per suggestion (its selection depends
+            // on the whole objective-vector front, not a scalar window);
+            // a batch is the sequential loop.
+            for _ in 0..fresh {
+                let site = worker.map(|_| sites[replies.len()].as_str());
+                match self.ask_mo(def.clone(), node.clone(), now, key.clone(), worker, tenant, site)
+                {
+                    Ok(r) => replies.push(r),
+                    Err(e) if replies.is_empty() => return Err(e),
+                    Err(_) => return Ok(replies),
+                }
+            }
+            return Ok(replies);
         }
-        let sampler = make_sampler(&def.sampler).map_err(ApiError::BadRequest)?;
-        let shard_idx = self.shard_of(&key);
+        let done = replies.len();
+        match self.ask_fresh_batch(&def, node, now, &key, worker, tenant, &sites[done..], fresh) {
+            Ok(mut batch) => {
+                replies.append(&mut batch);
+                Ok(replies)
+            }
+            Err(e) if replies.is_empty() => Err(e),
+            Err(_) => Ok(replies),
+        }
+    }
+
+    /// Sample and insert `r` fresh single-objective trials in one pass:
+    /// one critical section reserves the numbers and resolves the fit
+    /// cache, one (possibly cached) fit serves every draw, and one
+    /// critical section inserts all `r` trials under a single
+    /// group-commit roundtrip.
+    #[allow(clippy::too_many_arguments)]
+    fn ask_fresh_batch(
+        &self,
+        def: &StudyDef,
+        node: Option<String>,
+        now: f64,
+        key: &str,
+        worker: Option<u64>,
+        tenant: Option<&str>,
+        sites: &[String],
+        r: usize,
+    ) -> Result<Vec<AskReply>, ApiError> {
+        let shard_idx = self.shard_of(key);
+
+        /// What critical section 1 resolved the history question to:
+        /// nothing (the sampler never reads it), a cached fit (epoch
+        /// unchanged since it was built), or an `Arc`-shared observation
+        /// window to refit from outside the lock.
+        enum HistoryArm {
+            None,
+            Fit(Arc<dyn FitState>),
+            Snap(u64, Arc<Vec<Obs>>),
+        }
 
         // --- critical section 1: find/create study, reserve the trial
-        // number, snapshot history ---
-        let (slot, trial_number, scored, space, direction) = {
+        // numbers, resolve sampler + history ---
+        let (slot, numbers, sampler, arm, space, direction) = {
             let mut guard = self.lock_shard(shard_idx);
             let state = &mut *guard;
-            let slot = self.find_or_create_study(state, shard_idx, &def, now, &key)?;
+            let slot = self.find_or_create_study(state, shard_idx, def, now, key)?;
             let study = &mut state.studies[slot];
-            let trial_number = study.reserve_number();
-            let all = study.scored();
-            let skip = all.len().saturating_sub(self.config.history_snapshot.max(1));
-            let scored: Vec<Obs> = all
-                .into_iter()
-                .skip(skip)
-                .map(|(t, v)| Obs { params: t.params.clone(), value: v })
-                .collect();
-            (
-                slot,
-                trial_number,
-                scored,
-                study.def.space.clone(),
-                study.def.direction,
-            )
+            let numbers: Vec<u64> = (0..r).map(|_| study.reserve_number()).collect();
+            // The sampler is built once per study slot and shared across
+            // asks (it is pure configuration; all mutable state lives in
+            // the FitState).
+            let sampler: Arc<dyn Sampler> = match &study.runtime.sampler {
+                Some(s) => Arc::clone(s),
+                None => {
+                    let s: Arc<dyn Sampler> =
+                        Arc::from(make_sampler(&def.sampler).map_err(ApiError::BadRequest)?);
+                    study.runtime.sampler = Some(Arc::clone(&s));
+                    s
+                }
+            };
+            let arm = if !sampler.needs_history() {
+                HistoryArm::None
+            } else {
+                let epoch = study.runtime.epoch;
+                match &study.runtime.fit {
+                    Some((e, f)) if self.config.sampler_cache && *e == epoch => {
+                        self.metrics.sampler_cache_hits.inc();
+                        HistoryArm::Fit(Arc::clone(f))
+                    }
+                    _ => {
+                        self.metrics.sampler_cache_misses.inc();
+                        HistoryArm::Snap(epoch, study.obs_window(self.config.history_snapshot))
+                    }
+                }
+            };
+            (slot, numbers, sampler, arm, study.def.space.clone(), study.def.direction)
         };
 
-        // --- suggest OUTSIDE the lock (deterministic per study+number) ---
-        let key_hash = fnv1a(&key);
-        let mut rng = Rng::new(mix(mix(self.config.seed, key_hash), trial_number));
-        let params = sampler.suggest(&space, &scored, direction, trial_number, &mut rng);
+        // --- fit OUTSIDE the lock (pure function of the history window,
+        // no RNG — see the Sampler trait contract) ---
+        let (fit, fit_epoch): (Arc<dyn FitState>, Option<u64>) = match arm {
+            HistoryArm::None => (Arc::from(sampler.fit(&space, &[], direction)), None),
+            HistoryArm::Fit(f) => (f, None),
+            HistoryArm::Snap(epoch, obs) => {
+                let t0 = Instant::now();
+                let f: Arc<dyn FitState> = Arc::from(sampler.fit(&space, &obs, direction));
+                self.metrics.sampler_fit_seconds.observe(t0.elapsed().as_secs_f64());
+                (f, Some(epoch))
+            }
+        };
 
-        // --- critical section 2: insert the trial ---
-        let reply = {
+        // --- draw one suggestion per reserved number, each from its own
+        // number-seeded RNG: byte-identical to r sequential asks ---
+        let key_hash = fnv1a(key);
+        let batch: Vec<(u64, Assignment)> = numbers
+            .into_iter()
+            .map(|number| {
+                let mut rng = Rng::new(mix(mix(self.config.seed, key_hash), number));
+                (number, sampler.suggest_fitted(&space, fit.as_ref(), number, &mut rng))
+            })
+            .collect();
+
+        // --- critical section 2: insert the trials ---
+        let replies = {
             // Bind-gate before shard lock (the engine-wide order is
             // gate → shard → fleet); held only for worker-bound asks.
             let _bind_gate = worker.map(|_| self.fleet_bind_gate.read().unwrap());
             let mut guard = self.lock_shard(shard_idx);
-            self.insert_trial(
-                &mut guard, shard_idx, slot, trial_number, params, now, node, worker, tenant,
-                site,
-            )?
+            let replies = self.insert_trials(
+                &mut guard, shard_idx, slot, batch, now, node, worker, tenant, sites,
+            )?;
+            // Write the fit back under the same lock, and only if no
+            // tell landed while we were fitting — a stale fit must
+            // never shadow the newer history.
+            if self.config.sampler_cache {
+                if let Some(epoch) = fit_epoch {
+                    let rt = &mut guard.studies[slot].runtime;
+                    if rt.epoch == epoch {
+                        rt.fit = Some((epoch, fit));
+                    }
+                }
+            }
+            replies
         };
 
-        self.metrics.trials_created.inc();
-        self.metrics.ask_total.inc();
-        self.asks.fetch_add(1, Ordering::Relaxed);
+        self.metrics.trials_created.add(r as u64);
+        self.metrics.ask_total.add(r as u64);
+        self.asks.fetch_add(r as u64, Ordering::Relaxed);
         self.maybe_compact();
-        Ok(reply)
+        Ok(replies)
     }
 
     /// `ask` for a multi-objective study (paper §5 future work): same
@@ -819,10 +988,19 @@ impl Engine {
         let reply = {
             let _bind_gate = worker.map(|_| self.fleet_bind_gate.read().unwrap());
             let mut guard = self.lock_shard(shard_idx);
-            self.insert_trial(
-                &mut guard, shard_idx, slot, trial_number, params, now, node, worker, tenant,
-                site,
+            let sites: Vec<String> = site.map(|s| vec![s.to_string()]).unwrap_or_default();
+            self.insert_trials(
+                &mut guard,
+                shard_idx,
+                slot,
+                vec![(trial_number, params)],
+                now,
+                node,
+                worker,
+                tenant,
+                &sites,
             )?
+            .remove(0)
         };
         self.metrics.trials_created.inc();
         self.metrics.ask_total.inc();
@@ -832,77 +1010,92 @@ impl Engine {
     }
 
     /// Critical section 2 of an ask (shared by single- and
-    /// multi-objective paths): allocate the trial id, insert the trial
-    /// on its shard, persist `trial_new`, and build the reply. Called
-    /// with the shard lock held. `trial_number` was reserved in critical
-    /// section 1 (it seeded the suggestion), so it is used as-is; if the
-    /// persist below fails the number is consumed without a trial — a
-    /// gap in the study's numbering, never a duplicate.
+    /// multi-objective paths): allocate the trial ids, insert the batch
+    /// on its shard, persist every `trial_new` (with its `lease_bind`
+    /// interleaved right after it, for worker-bound asks) in ONE
+    /// group-commit roundtrip, and build the replies. Called with the
+    /// shard lock held. The trial numbers were reserved in critical
+    /// section 1 (they seeded the suggestions), so they are used as-is;
+    /// if the persist below fails every number of the batch is consumed
+    /// without a trial — gaps in the study's numbering, never
+    /// duplicates. The record interleave `[trial_new_0, lease_bind_0,
+    /// trial_new_1, …]` matches what the same trials committed one ask
+    /// at a time would write, so recovery replay cannot tell a batch
+    /// from a sequential burst.
     #[allow(clippy::too_many_arguments)]
-    fn insert_trial(
+    fn insert_trials(
         &self,
         state: &mut ShardState,
         shard_idx: usize,
         slot: usize,
-        trial_number: u64,
-        params: Assignment,
+        batch: Vec<(u64, Assignment)>,
         now: f64,
         node: Option<String>,
         worker: Option<u64>,
         tenant: Option<&str>,
-        site: Option<&str>,
-    ) -> Result<AskReply, ApiError> {
-        let trial_id = self.next_trial_id.fetch_add(1, Ordering::Relaxed);
-        let trial = Trial::new(trial_id, trial_number, params, now, node);
+        sites: &[String],
+    ) -> Result<Vec<AskReply>, ApiError> {
         let study_id = state.studies[slot].id;
         let study_key = state.studies[slot].key.clone();
-        let ev = {
-            let mut o = Value::obj();
-            o.set("study_id", study_id).set("trial", trial.to_json());
-            Value::Obj(o)
-        };
-        // Persist first: a failed append returns 500 with no in-memory
-        // trace, so memory never diverges from the log. A worker-bound
-        // ask journals the lease in the same commit batch (one fsync);
-        // the caller holds the bind gate across this whole critical
-        // section so a concurrent fleet segment cut can never cover a
-        // bind it did not snapshot.
-        let mut records = vec![Record::new("trial_new", ev).with_shard(shard_idx as u32)];
-        if let Some(wid) = worker {
-            // The admission keys (the site `admit` counted, the tenant)
-            // ride the record so recovery rebuilds per-site/per-tenant
-            // counters exactly as live.
-            let site = site.unwrap_or("");
-            records.push(
-                Record::new(
-                    "lease_bind",
-                    Self::lease_bind_payload(trial_id, wid, &study_key, site, tenant, now),
-                )
-                .with_shard(FLEET_SHARD),
-            );
+        let mut trials: Vec<Trial> = Vec::with_capacity(batch.len());
+        let mut records: Vec<Record> = Vec::with_capacity(batch.len() * 2);
+        for (i, (trial_number, params)) in batch.into_iter().enumerate() {
+            let trial_id = self.next_trial_id.fetch_add(1, Ordering::Relaxed);
+            let trial = Trial::new(trial_id, trial_number, params, now, node.clone());
+            let ev = {
+                let mut o = Value::obj();
+                o.set("study_id", study_id).set("trial", trial.to_json());
+                Value::Obj(o)
+            };
+            // Persist first: a failed append returns 500 with no
+            // in-memory trace, so memory never diverges from the log. A
+            // worker-bound ask journals each lease in the same commit
+            // batch (one fsync); the caller holds the bind gate across
+            // this whole critical section so a concurrent fleet segment
+            // cut can never cover a bind it did not snapshot.
+            records.push(Record::new("trial_new", ev).with_shard(shard_idx as u32));
+            if let Some(wid) = worker {
+                // The admission keys (the site `admit` counted, the
+                // tenant) ride the record so recovery rebuilds
+                // per-site/per-tenant counters exactly as live.
+                let site = sites.get(i).map(String::as_str).unwrap_or("");
+                records.push(
+                    Record::new(
+                        "lease_bind",
+                        Self::lease_bind_payload(trial_id, wid, &study_key, site, tenant, now),
+                    )
+                    .with_shard(FLEET_SHARD),
+                );
+            }
+            trials.push(trial);
         }
         self.persist_many(records)?;
-        let trial_idx = state.studies[slot].trials.len();
-        state.studies[slot].trials.push(trial);
-        state.trial_index.insert(trial_id, (slot, trial_idx));
-        state.last_seen.insert(trial_id, now);
-        self.router.insert(trial_id, shard_idx);
-        if let Some(wid) = worker {
-            // Shard lock is held; the fleet lock is a leaf below it.
-            self.fleet
-                .lock()
-                .bind(trial_id, wid, &study_key, site.unwrap_or(""), tenant, now);
+        let mut replies = Vec::with_capacity(trials.len());
+        for (i, trial) in trials.into_iter().enumerate() {
+            let trial_id = trial.id;
+            let trial_number = trial.number;
+            let params = assignment_to_json(&trial.params);
+            let trial_idx = state.studies[slot].trials.len();
+            state.studies[slot].trials.push(trial);
+            state.trial_index.insert(trial_id, (slot, trial_idx));
+            state.last_seen.insert(trial_id, now);
+            self.router.insert(trial_id, shard_idx);
+            if let Some(wid) = worker {
+                // Shard lock is held; the fleet lock is a leaf below it.
+                let site = sites.get(i).map(String::as_str).unwrap_or("");
+                self.fleet.lock().bind(trial_id, wid, &study_key, site, tenant, now);
+            }
+            replies.push(AskReply {
+                trial_id,
+                trial_number,
+                study_id,
+                study_key: study_key.clone(),
+                params,
+                requeued: false,
+            });
         }
         self.shard_metrics_update(shard_idx, state);
-        let study = &state.studies[slot];
-        Ok(AskReply {
-            trial_id,
-            trial_number,
-            study_id,
-            study_key,
-            params: assignment_to_json(&study.trials[trial_idx].params),
-            requeued: false,
-        })
+        Ok(replies)
     }
 
     /// Payload of a `lease_bind` record. Carries the admission keys
@@ -1111,6 +1304,9 @@ impl Engine {
             state.studies[si].trials[ti]
                 .complete(value, now)
                 .map_err(|e| ApiError::Conflict(e.to_string()))?;
+            // The scored history changed: bump the study's tell-epoch so
+            // the next ask refits instead of reusing the cached fit.
+            state.studies[si].note_scored(ti, self.config.history_snapshot);
             state.last_seen.remove(&trial_id);
             if self.fleet_active.load(Ordering::Relaxed) {
                 self.fleet.lock().finish_trial(trial_id, &state.studies[si].key);
@@ -1185,6 +1381,9 @@ impl Engine {
                 state.studies[si].trials[ti]
                     .prune(now)
                     .map_err(|e| ApiError::Conflict(e.to_string()))?;
+                // A pruned trial scores at its last intermediate (the
+                // report above), so the scored history changed too.
+                state.studies[si].note_scored(ti, self.config.history_snapshot);
                 state.last_seen.remove(&trial_id);
                 if self.fleet_active.load(Ordering::Relaxed) {
                     self.fleet.lock().finish_trial(trial_id, &state.studies[si].key);
@@ -1712,6 +1911,18 @@ impl Engine {
                     wal.stats().segments_reused.load(Ordering::Relaxed),
                 );
             o.set("wal_commit", Value::Obj(w));
+        }
+        // Sampler hot path: fit-cache effectiveness and batch sizes.
+        {
+            let mut s = Value::obj();
+            s.set("cache", self.config.sampler_cache)
+                .set("cache_hits", self.metrics.sampler_cache_hits.get())
+                .set("cache_misses", self.metrics.sampler_cache_misses.get())
+                .set("fits", self.metrics.sampler_fit_seconds.count())
+                .set("fit_mean_seconds", self.metrics.sampler_fit_seconds.mean())
+                .set("ask_batches", self.metrics.ask_batch_size.count())
+                .set("ask_batch_mean", self.metrics.ask_batch_size.mean());
+            o.set("sampler", Value::Obj(s));
         }
         // Fleet block: worker registry + lease + scheduler state.
         o.set("fleet", self.fleet.lock().stats_json(&self.fleet.config));
@@ -3266,5 +3477,211 @@ mod tests {
         assert_eq!(rec.get("recovered_records").as_u64(), Some(3));
         assert_eq!(rec.get("filtered_records").as_u64(), Some(0));
         assert_eq!(rec.get("orphan_records").as_u64(), Some(0));
+    }
+
+    /// TPE body with a low startup so the model (and therefore the fit
+    /// cache) is exercised after a handful of tells.
+    fn ask_body_tpe(study: &str) -> Value {
+        parse(&format!(
+            r#"{{
+            "study_name": "{study}",
+            "properties": {{
+                "x": {{"low": 0.0, "high": 1.0}},
+                "lr": {{"low": 1e-4, "high": 1.0, "type": "loguniform"}}
+            }},
+            "direction": "minimize",
+            "sampler": {{"name": "tpe", "n_startup_trials": 4}}
+        }}"#
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn batched_ask_rejects_bad_n_without_side_effects() {
+        let e = Engine::in_memory(EngineConfig::default());
+        assert!(matches!(
+            e.ask_n_as(&ask_body("s"), 0, None),
+            Err(ApiError::BadRequest(_))
+        ));
+        assert!(matches!(
+            e.ask_n_as(&ask_body("s"), MAX_ASK_BATCH + 1, None),
+            Err(ApiError::BadRequest(_))
+        ));
+        // Unknown sampler names are rejected before the study (or any
+        // trial of the batch) exists.
+        let mut bad = ask_body("s");
+        if let Value::Obj(o) = &mut bad {
+            o.set("sampler", Value::Str("annealing".into()));
+        }
+        assert!(matches!(e.ask_n_as(&bad, 2, None), Err(ApiError::BadRequest(_))));
+        assert_eq!(e.n_studies(), 0, "rejected asks must leave no trace");
+        assert_eq!(e.metrics.trials_created.get(), 0);
+    }
+
+    #[test]
+    fn batched_ask_byte_identical_to_sequential() {
+        // One n=6 batch must draw exactly what 6 sequential asks draw
+        // (no tells in between on either engine: both fit from the same
+        // frozen history), on every shard layout.
+        for shards in [1usize, 4, 8] {
+            let seq = Engine::in_memory(EngineConfig { n_shards: shards, ..Default::default() });
+            let bat = Engine::in_memory(EngineConfig { n_shards: shards, ..Default::default() });
+            // Identical scored history past TPE startup on both engines.
+            for i in 0..8 {
+                let a = seq.ask(&ask_body_tpe("b")).unwrap();
+                let b = bat.ask(&ask_body_tpe("b")).unwrap();
+                assert_eq!(a.params.to_string(), b.params.to_string());
+                let v = (i as f64 * 0.7).sin();
+                seq.tell(a.trial_id, v).unwrap();
+                bat.tell(b.trial_id, v).unwrap();
+            }
+            let singles: Vec<AskReply> =
+                (0..6).map(|_| seq.ask(&ask_body_tpe("b")).unwrap()).collect();
+            let batch = bat.ask_n_as(&ask_body_tpe("b"), 6, None).unwrap();
+            assert_eq!(batch.len(), 6);
+            for (a, b) in singles.iter().zip(&batch) {
+                assert_eq!(a.trial_number, b.trial_number, "shards={shards}");
+                assert_eq!(
+                    a.params.to_string(),
+                    b.params.to_string(),
+                    "shards={shards} trial {}",
+                    a.trial_number
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fit_cache_transparent_and_counted() {
+        let on = Engine::in_memory(EngineConfig::default());
+        let off = Engine::in_memory(EngineConfig { sampler_cache: false, ..Default::default() });
+        // Interleaved traffic: within a round the 2nd/3rd asks reuse the
+        // fit on the cached engine and refit on the uncached one; the
+        // suggestion streams must stay byte-identical regardless.
+        for round in 0..6u64 {
+            let mut ids = Vec::new();
+            for _ in 0..3 {
+                let a = on.ask(&ask_body_tpe("c")).unwrap();
+                let b = off.ask(&ask_body_tpe("c")).unwrap();
+                assert_eq!(a.params.to_string(), b.params.to_string(), "round {round}");
+                ids.push((a.trial_id, b.trial_id));
+            }
+            for (k, (ia, ib)) in ids.into_iter().enumerate() {
+                let v = (round * 3 + k as u64) as f64 * 0.31;
+                on.tell(ia, v).unwrap();
+                off.tell(ib, v).unwrap();
+            }
+        }
+        // 3 asks per round share one fit with the cache on…
+        assert_eq!(on.metrics.sampler_cache_misses.get(), 6);
+        assert_eq!(on.metrics.sampler_cache_hits.get(), 12);
+        // …and every ask refits with it off.
+        assert_eq!(off.metrics.sampler_cache_hits.get(), 0);
+        assert_eq!(off.metrics.sampler_cache_misses.get(), 18);
+        // The cache decisions surface in /api/stats.
+        let stats = on.stats_json();
+        assert_eq!(stats.get("sampler").get("cache").as_bool(), Some(true));
+        assert_eq!(stats.get("sampler").get("cache_hits").as_u64(), Some(12));
+        let stats = off.stats_json();
+        assert_eq!(stats.get("sampler").get("cache").as_bool(), Some(false));
+    }
+
+    #[test]
+    fn historyless_samplers_skip_snapshot_and_cache() {
+        // random never reads the history: no cache decision, no fit
+        // timing, and asks stay cheap at any history size.
+        let e = Engine::in_memory(EngineConfig::default());
+        for i in 0..5 {
+            let r = e.ask(&ask_body("plain")).unwrap();
+            e.tell(r.trial_id, i as f64).unwrap();
+        }
+        assert_eq!(e.metrics.sampler_cache_hits.get(), 0);
+        assert_eq!(e.metrics.sampler_cache_misses.get(), 0);
+        assert_eq!(e.metrics.sampler_fit_seconds.count(), 0);
+    }
+
+    #[test]
+    fn fit_cache_invalidation_survives_recovery() {
+        // A restarted server must refit from the replayed history — no
+        // cache state survives in the WAL — and its post-restart
+        // suggestion stream must match an engine that never restarted.
+        let d = TempDir::new("engine-fit-cache-recovery");
+        let cont = Engine::in_memory(EngineConfig::default());
+        {
+            let e = Engine::open(d.path(), EngineConfig::default()).unwrap();
+            for i in 0..7 {
+                let a = e.ask(&ask_body_tpe("r")).unwrap();
+                let c = cont.ask(&ask_body_tpe("r")).unwrap();
+                assert_eq!(a.params.to_string(), c.params.to_string());
+                let v = (i as f64).cos();
+                e.tell(a.trial_id, v).unwrap();
+                cont.tell(c.trial_id, v).unwrap();
+            }
+            // Warm the fit cache right before the "crash" (this trial
+            // stays running across the restart).
+            let warm = e.ask(&ask_body_tpe("r")).unwrap();
+            let cwarm = cont.ask(&ask_body_tpe("r")).unwrap();
+            assert_eq!(warm.params.to_string(), cwarm.params.to_string());
+        }
+        let e = Engine::open(d.path(), EngineConfig::default()).unwrap();
+        for i in 0..5 {
+            let a = e.ask(&ask_body_tpe("r")).unwrap();
+            let c = cont.ask(&ask_body_tpe("r")).unwrap();
+            assert_eq!(a.trial_number, c.trial_number);
+            assert_eq!(
+                a.params.to_string(),
+                c.params.to_string(),
+                "post-restart trial {i} diverged"
+            );
+            let v = i as f64 * 0.2;
+            e.tell(a.trial_id, v).unwrap();
+            cont.tell(c.trial_id, v).unwrap();
+        }
+    }
+
+    #[test]
+    fn batched_ask_drains_requeued_first() {
+        let cfg = EngineConfig { lease_timeout: Some(0.01), ..Default::default() };
+        let e = Engine::in_memory(cfg);
+        let (w1, _) = e.register_worker("n1", "spot", "gpu").unwrap();
+        let first = e.ask_n_as(&ask_body_worker("s", w1), 2, None).unwrap();
+        assert_eq!(first.len(), 2);
+        // The worker vanishes; both trials requeue.
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        assert_eq!(e.expire_leases(), 2);
+        // A 3-trial batch on a fresh worker re-homes both queued trials
+        // (original ids and params) and samples one fresh trial.
+        let (w2, _) = e.register_worker("n2", "spot", "gpu").unwrap();
+        let batch = e.ask_n_as(&ask_body_worker("s", w2), 3, None).unwrap();
+        assert_eq!(batch.len(), 3);
+        assert!(batch[0].requeued && batch[1].requeued && !batch[2].requeued);
+        assert_eq!(batch[0].trial_id, first[0].trial_id);
+        assert_eq!(batch[1].trial_id, first[1].trial_id);
+        assert_eq!(batch[2].trial_number, 2);
+        // Every handout holds exactly one lease slot.
+        assert_eq!(e.fleet().lock().leases.len(), 3);
+        for r in &batch {
+            e.tell(r.trial_id, 1.0).unwrap();
+        }
+        assert_eq!(e.fleet().lock().leases.len(), 0);
+    }
+
+    #[test]
+    fn batched_ask_multi_objective() {
+        let e = Engine::in_memory(EngineConfig::default());
+        let body = parse(
+            r#"{
+            "study_name": "mo-batch",
+            "properties": {"x": {"low": 0.0, "high": 1.0}},
+            "direction": ["minimize", "minimize"]
+        }"#,
+        )
+        .unwrap();
+        let batch = e.ask_n_as(&body, 3, None).unwrap();
+        let numbers: Vec<u64> = batch.iter().map(|r| r.trial_number).collect();
+        assert_eq!(numbers, vec![0, 1, 2]);
+        for (i, r) in batch.iter().enumerate() {
+            e.tell_values(r.trial_id, vec![i as f64, -(i as f64)]).unwrap();
+        }
     }
 }

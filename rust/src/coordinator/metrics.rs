@@ -74,6 +74,12 @@ pub fn default_latency_bounds() -> Vec<f64> {
     b
 }
 
+/// Bucket bounds for `hopaas_ask_batch_size` (a count histogram, not a
+/// latency one): powers of two up to the engine's batch cap.
+pub fn ask_batch_bounds() -> Vec<f64> {
+    vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0]
+}
+
 const MAX_SAMPLES: usize = 100_000;
 
 impl Histogram {
@@ -177,6 +183,9 @@ pub struct Metrics {
     pub fleet_trials_reassigned: Counter,
     pub fleet_quota_denials: Counter,
     pub fleet_affinity_deferrals: Counter,
+    /// Sampler fit cache: asks served from a cached fit vs refits.
+    pub sampler_cache_hits: Counter,
+    pub sampler_cache_misses: Counter,
     /// Per-tenant 429 attribution (labeled counter; tenants are dynamic
     /// strings from token claims, so the series set grows with use).
     pub tenant_denials: Mutex<std::collections::BTreeMap<String, u64>>,
@@ -220,6 +229,10 @@ pub struct Metrics {
     /// Wall time of individual segment cuts (write → fsync → rename),
     /// wherever they run — the compaction pool's unit of work.
     pub compact_segment_seconds: Histogram,
+    /// Wall time of sampler refits (`Sampler::fit`) on the ask path.
+    pub sampler_fit_seconds: Histogram,
+    /// Requested batch size per ask request (`n`, 1 for legacy asks).
+    pub ask_batch_size: Histogram,
     /// One entry per engine shard; empty outside the engine (e.g. bare
     /// `Metrics::default()` in unit tests).
     pub shards: Vec<ShardMetrics>,
@@ -253,6 +266,8 @@ impl Metrics {
             fleet_trials_reassigned: Counter::default(),
             fleet_quota_denials: Counter::default(),
             fleet_affinity_deferrals: Counter::default(),
+            sampler_cache_hits: Counter::default(),
+            sampler_cache_misses: Counter::default(),
             tenant_denials: Mutex::new(std::collections::BTreeMap::new()),
             wal_records: Gauge::default(),
             wal_commit_batches: Gauge::default(),
@@ -275,6 +290,8 @@ impl Metrics {
             tell_latency: Histogram::new(default_latency_bounds()),
             should_prune_latency: Histogram::new(default_latency_bounds()),
             compact_segment_seconds: Histogram::new(default_latency_bounds()),
+            sampler_fit_seconds: Histogram::new(default_latency_bounds()),
+            ask_batch_size: Histogram::new(ask_batch_bounds()),
             shards: (0..n).map(|_| ShardMetrics::default()).collect(),
         }
     }
@@ -297,7 +314,7 @@ impl Metrics {
     /// Render Prometheus text exposition format.
     pub fn render(&self) -> String {
         let mut out = String::with_capacity(4096);
-        let counters: [(&str, &Counter); 18] = [
+        let counters: [(&str, &Counter); 20] = [
             ("hopaas_ask_total", &self.ask_total),
             ("hopaas_tell_total", &self.tell_total),
             ("hopaas_should_prune_total", &self.should_prune_total),
@@ -316,6 +333,8 @@ impl Metrics {
             ("hopaas_fleet_trials_reassigned_total", &self.fleet_trials_reassigned),
             ("hopaas_fleet_quota_denials_total", &self.fleet_quota_denials),
             ("hopaas_fleet_affinity_deferrals_total", &self.fleet_affinity_deferrals),
+            ("hopaas_sampler_cache_hits_total", &self.sampler_cache_hits),
+            ("hopaas_sampler_cache_misses_total", &self.sampler_cache_misses),
         ];
         for (name, c) in counters {
             out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
@@ -411,6 +430,8 @@ impl Metrics {
             ("hopaas_tell_latency_seconds", &self.tell_latency),
             ("hopaas_should_prune_latency_seconds", &self.should_prune_latency),
             ("hopaas_compact_segment_seconds", &self.compact_segment_seconds),
+            ("hopaas_sampler_fit_seconds", &self.sampler_fit_seconds),
+            ("hopaas_ask_batch_size", &self.ask_batch_size),
         ] {
             out.push_str(&format!("# TYPE {name} histogram\n"));
             let mut cum = 0u64;
@@ -547,6 +568,24 @@ mod tests {
             assert!(map.len() <= 1025, "bounded at cap + overflow bucket");
         }
         assert!(m.render().contains("hopaas_tenant_quota_denials_total{tenant=\"_other\"} 2"));
+    }
+
+    #[test]
+    fn sampler_series_rendered() {
+        let m = Metrics::default();
+        m.sampler_cache_hits.add(7);
+        m.sampler_cache_misses.inc();
+        m.sampler_fit_seconds.observe(0.002);
+        m.ask_batch_size.observe(8.0);
+        let text = m.render();
+        assert!(text.contains("hopaas_sampler_cache_hits_total 7"));
+        assert!(text.contains("hopaas_sampler_cache_misses_total 1"));
+        assert!(text.contains("hopaas_sampler_fit_seconds_count 1"));
+        assert!(text.contains("hopaas_ask_batch_size_count 1"));
+        // Batch-size buckets are counts, not latencies: an 8-trial ask
+        // lands in the le="8" bucket.
+        assert!(text.contains("hopaas_ask_batch_size_bucket{le=\"8\"} 1"));
+        assert!((m.ask_batch_size.mean() - 8.0).abs() < 1e-9);
     }
 
     #[test]

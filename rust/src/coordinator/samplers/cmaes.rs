@@ -23,7 +23,7 @@
 
 use super::super::space::{Assignment, Direction, Space};
 use super::super::study::AlgoConfig;
-use super::{unit_history, Obs, Sampler};
+use super::{unit_history, FitState, Obs, Sampler};
 use crate::rng::Rng;
 
 /// Separable CMA-ES-style sampler.
@@ -54,24 +54,37 @@ impl CmaEsSampler {
     }
 }
 
+/// Fitted CMA-ES distribution state: recombination mean, per-dimension
+/// variance, and the decayed global step size. RNG-free derivation.
+pub struct CmaFit {
+    startup: bool,
+    mean: Vec<f64>,
+    var: Vec<f64>,
+    sigma: f64,
+}
+
+impl FitState for CmaFit {
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
 impl Sampler for CmaEsSampler {
     fn name(&self) -> &'static str {
         "cmaes"
     }
 
-    fn suggest(
-        &self,
-        space: &Space,
-        obs: &[Obs],
-        direction: Direction,
-        _n_started: u64,
-        rng: &mut Rng,
-    ) -> Assignment {
+    fn fit(&self, space: &Space, obs: &[Obs], direction: Direction) -> Box<dyn FitState> {
         let d = space.len();
         let lambda = self.lambda_for(d);
         let (xs, ys) = unit_history(space, obs, direction);
         if xs.len() < lambda {
-            return space.sample(rng);
+            return Box::new(CmaFit {
+                startup: true,
+                mean: Vec::new(),
+                var: Vec::new(),
+                sigma: self.sigma0,
+            });
         }
 
         // Window: the most recent λ·window observations.
@@ -108,14 +121,31 @@ impl Sampler for CmaEsSampler {
             }
         }
 
-        // Step size decays with generation-equivalents.
+        // Step size decays with generation-equivalents (keyed on the raw
+        // history length, matching the pre-fit-cache behaviour).
         let gens = (obs.len() / lambda) as i32;
         let sigma = (self.sigma0 * self.sigma_decay.powi(gens)).max(self.sigma_min);
+        Box::new(CmaFit { startup: false, mean, var, sigma })
+    }
 
+    fn suggest_fitted(
+        &self,
+        space: &Space,
+        fit: &dyn FitState,
+        _n_started: u64,
+        rng: &mut Rng,
+    ) -> Assignment {
+        let Some(f) = fit.as_any().downcast_ref::<CmaFit>() else {
+            return space.sample(rng);
+        };
+        if f.startup {
+            return space.sample(rng);
+        }
+        let d = space.len();
         let u: Vec<f64> = (0..d)
             .map(|k| {
-                let sd = (var[k].sqrt()).max(0.05) * sigma / self.sigma0;
-                (mean[k] + rng.normal() * sd.max(self.sigma_min)).clamp(0.0, 1.0 - 1e-12)
+                let sd = (f.var[k].sqrt()).max(0.05) * f.sigma / self.sigma0;
+                (f.mean[k] + rng.normal() * sd.max(self.sigma_min)).clamp(0.0, 1.0 - 1e-12)
             })
             .collect();
         space.from_unit(&u)

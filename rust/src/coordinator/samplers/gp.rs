@@ -19,7 +19,7 @@
 
 use super::super::space::{Assignment, Direction, Space};
 use super::super::study::AlgoConfig;
-use super::{unit_history, Obs, Sampler};
+use super::{unit_history, FitState, Obs, Sampler};
 use crate::linalg::{cholesky, norm_cdf, norm_pdf, Mat};
 use crate::rng::Rng;
 
@@ -120,22 +120,36 @@ fn expected_improvement(mean: f64, std: f64, incumbent: f64) -> f64 {
     (incumbent - mean) * norm_cdf(z) + std * norm_pdf(z)
 }
 
+/// Fitted GP state: the conditioning-set factorization (Cholesky of the
+/// kernel matrix + dual weights) plus the incumbent. RNG-free — the
+/// length-scale/noise grid search is deterministic in the history.
+pub struct GpFit {
+    startup: bool,
+    post: Option<Posterior>,
+    incumbent: f64,
+    inc_x: Vec<f64>,
+}
+
+impl FitState for GpFit {
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
 impl Sampler for GpSampler {
     fn name(&self) -> &'static str {
         "gp"
     }
 
-    fn suggest(
-        &self,
-        space: &Space,
-        obs: &[Obs],
-        direction: Direction,
-        _n_started: u64,
-        rng: &mut Rng,
-    ) -> Assignment {
+    fn fit(&self, space: &Space, obs: &[Obs], direction: Direction) -> Box<dyn FitState> {
         let (mut xs, mut ys) = unit_history(space, obs, direction);
         if (xs.len() as u64) < self.n_startup_trials {
-            return space.sample(rng);
+            return Box::new(GpFit {
+                startup: true,
+                post: None,
+                incumbent: f64::INFINITY,
+                inc_x: Vec::new(),
+            });
         }
         // Cap conditioning set: keep the most recent points.
         if xs.len() > self.max_obs {
@@ -144,7 +158,12 @@ impl Sampler for GpSampler {
             ys.drain(..skip);
         }
         let Some(post) = Posterior::fit(xs, &ys) else {
-            return space.sample(rng);
+            return Box::new(GpFit {
+                startup: false,
+                post: None,
+                incumbent: f64::INFINITY,
+                inc_x: Vec::new(),
+            });
         };
         let incumbent = ys.iter().copied().fold(f64::INFINITY, f64::min);
         let (inc_idx, _) = ys
@@ -153,6 +172,25 @@ impl Sampler for GpSampler {
             .min_by(|a, b| a.1.total_cmp(b.1))
             .unwrap();
         let inc_x = post.xs[inc_idx].clone();
+        Box::new(GpFit { startup: false, post: Some(post), incumbent, inc_x })
+    }
+
+    fn suggest_fitted(
+        &self,
+        space: &Space,
+        fit: &dyn FitState,
+        _n_started: u64,
+        rng: &mut Rng,
+    ) -> Assignment {
+        let Some(f) = fit.as_any().downcast_ref::<GpFit>() else {
+            return space.sample(rng);
+        };
+        if f.startup {
+            return space.sample(rng);
+        }
+        let Some(post) = &f.post else {
+            return space.sample(rng);
+        };
         let d = space.len();
 
         let mut best: Option<(f64, Vec<f64>)> = None;
@@ -163,13 +201,13 @@ impl Sampler for GpSampler {
                 (0..d).map(|_| rng.f64()).collect()
             } else {
                 // Local perturbations of the incumbent.
-                inc_x
+                f.inc_x
                     .iter()
                     .map(|&x| (x + rng.normal() * 0.05).clamp(0.0, 1.0 - 1e-12))
                     .collect()
             };
             let (m, s) = post.predict(&cand);
-            let ei = expected_improvement(m, s, incumbent);
+            let ei = expected_improvement(m, s, f.incumbent);
             if best.as_ref().map_or(true, |(b, _)| ei > *b) {
                 best = Some((ei, cand));
             }

@@ -34,10 +34,55 @@ pub struct Obs {
     pub value: f64,
 }
 
+/// Opaque fitted-model state produced by [`Sampler::fit`] and consumed by
+/// [`Sampler::suggest_fitted`]. The engine caches one per study keyed by
+/// the tell-epoch, so the concrete type must be shareable across asks
+/// (`Send + Sync`) and downcastable by its own sampler (`as_any`).
+pub trait FitState: Send + Sync {
+    fn as_any(&self) -> &dyn std::any::Any;
+}
+
+/// Trivial fit for samplers that never read the history.
+pub struct NoFit;
+
+impl FitState for NoFit {
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
 /// Sampler interface. `n_started` counts all asks so far in the study
 /// (running included) — sequence-based samplers (grid/qmc) key on it.
-pub trait Sampler: Send {
+///
+/// The interface is split into a *fit* phase (pure function of the
+/// history, no RNG) and a *draw* phase (consumes the per-trial RNG).
+/// `suggest` is the provided composition of the two, which guarantees
+/// that a cached fit reused across asks produces byte-identical
+/// suggestions to a cold fit-per-ask: both paths run the exact same
+/// code, the cache only skips recomputing an identical `FitState`.
+pub trait Sampler: Send + Sync {
     fn name(&self) -> &'static str;
+
+    /// Whether `fit` reads the observation history. When false the engine
+    /// skips building the history snapshot entirely (random/grid/qmc).
+    fn needs_history(&self) -> bool {
+        true
+    }
+
+    /// Digest the history into sufficient statistics for drawing. Must
+    /// not consume RNG — determinism of the suggestion stream relies on
+    /// the draw phase being the only RNG consumer.
+    fn fit(&self, space: &Space, obs: &[Obs], direction: Direction) -> Box<dyn FitState>;
+
+    /// Draw one suggestion from a fitted state. Implementations fall back
+    /// to `space.sample(rng)` if handed a foreign `FitState` type.
+    fn suggest_fitted(
+        &self,
+        space: &Space,
+        fit: &dyn FitState,
+        n_started: u64,
+        rng: &mut Rng,
+    ) -> Assignment;
 
     fn suggest(
         &self,
@@ -46,7 +91,19 @@ pub trait Sampler: Send {
         direction: Direction,
         n_started: u64,
         rng: &mut Rng,
-    ) -> Assignment;
+    ) -> Assignment {
+        self.suggest_fitted(space, self.fit(space, obs, direction).as_ref(), n_started, rng)
+    }
+}
+
+/// Whether `name` is a sampler [`make_sampler`] can instantiate. Lets the
+/// engine reject bad names *before* any side effects (study creation is
+/// persisted ahead of sampler construction).
+pub fn is_known_sampler(name: &str) -> bool {
+    matches!(
+        name,
+        "random" | "grid" | "qmc" | "sobol" | "tpe" | "gp" | "cmaes"
+    )
 }
 
 /// Instantiate a sampler from its study configuration.
@@ -72,11 +129,18 @@ impl Sampler for RandomSampler {
         "random"
     }
 
-    fn suggest(
+    fn needs_history(&self) -> bool {
+        false
+    }
+
+    fn fit(&self, _space: &Space, _obs: &[Obs], _direction: Direction) -> Box<dyn FitState> {
+        Box::new(NoFit)
+    }
+
+    fn suggest_fitted(
         &self,
         space: &Space,
-        _obs: &[Obs],
-        _direction: Direction,
+        _fit: &dyn FitState,
         _n_started: u64,
         rng: &mut Rng,
     ) -> Assignment {
@@ -113,11 +177,18 @@ impl Sampler for GridSampler {
         "grid"
     }
 
-    fn suggest(
+    fn needs_history(&self) -> bool {
+        false
+    }
+
+    fn fit(&self, _space: &Space, _obs: &[Obs], _direction: Direction) -> Box<dyn FitState> {
+        Box::new(NoFit)
+    }
+
+    fn suggest_fitted(
         &self,
         space: &Space,
-        _obs: &[Obs],
-        _direction: Direction,
+        _fit: &dyn FitState,
         n_started: u64,
         _rng: &mut Rng,
     ) -> Assignment {
@@ -164,11 +235,18 @@ impl Sampler for QmcSampler {
         "qmc"
     }
 
-    fn suggest(
+    fn needs_history(&self) -> bool {
+        false
+    }
+
+    fn fit(&self, _space: &Space, _obs: &[Obs], _direction: Direction) -> Box<dyn FitState> {
+        Box::new(NoFit)
+    }
+
+    fn suggest_fitted(
         &self,
         space: &Space,
-        _obs: &[Obs],
-        _direction: Direction,
+        _fit: &dyn FitState,
         n_started: u64,
         rng: &mut Rng,
     ) -> Assignment {
@@ -289,6 +367,71 @@ mod tests {
             assert!(make_sampler(&AlgoConfig::new(name)).is_ok(), "{name}");
         }
         assert!(make_sampler(&AlgoConfig::new("nope")).is_err());
+    }
+
+    #[test]
+    fn needs_history_flags() {
+        for (name, expect) in [
+            ("random", false),
+            ("grid", false),
+            ("qmc", false),
+            ("sobol", false),
+            ("tpe", true),
+            ("gp", true),
+            ("cmaes", true),
+        ] {
+            let s = make_sampler(&AlgoConfig::new(name)).unwrap();
+            assert_eq!(s.needs_history(), expect, "{name}");
+        }
+    }
+
+    #[test]
+    fn is_known_sampler_matches_factory() {
+        for name in ["random", "grid", "qmc", "sobol", "tpe", "gp", "cmaes", "nope", ""] {
+            assert_eq!(
+                is_known_sampler(name),
+                make_sampler(&AlgoConfig::new(name)).is_ok(),
+                "{name}"
+            );
+        }
+    }
+
+    #[test]
+    fn suggest_equals_fit_then_draw() {
+        // The provided `suggest` must be exactly fit → suggest_fitted for
+        // every sampler: this is the determinism argument for the fit
+        // cache (same epoch → same FitState → same draw).
+        let s = space();
+        let mut rng = Rng::new(41);
+        let obs: Vec<Obs> = (0..30)
+            .map(|i| Obs { params: s.sample(&mut rng), value: (i as f64 * 0.37).sin() })
+            .collect();
+        for name in ["random", "grid", "qmc", "tpe", "gp", "cmaes"] {
+            let smp = make_sampler(&AlgoConfig::new(name)).unwrap();
+            let fit = smp.fit(&s, &obs, Direction::Minimize);
+            for n_started in [0u64, 7, 31] {
+                let mut r1 = Rng::new(1000 + n_started);
+                let mut r2 = r1.clone();
+                let a = smp.suggest(&s, &obs, Direction::Minimize, n_started, &mut r1);
+                let b = smp.suggest_fitted(&s, fit.as_ref(), n_started, &mut r2);
+                assert_eq!(
+                    format!("{a:?}"),
+                    format!("{b:?}"),
+                    "{name} n_started={n_started}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn foreign_fit_state_falls_back_to_uniform() {
+        let s = space();
+        let tpe = make_sampler(&AlgoConfig::new("tpe")).unwrap();
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        let a = tpe.suggest_fitted(&s, &NoFit, 3, &mut r1);
+        let b = s.sample(&mut r2);
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
     }
 
     #[test]

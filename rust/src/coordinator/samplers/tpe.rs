@@ -23,9 +23,15 @@
 
 use super::super::space::{Assignment, Direction, Dist, Space};
 use super::super::study::AlgoConfig;
-use super::{Obs, Sampler};
-use crate::linalg::norm_cdf;
+use super::{FitState, Obs, Sampler};
+use crate::linalg::{norm_cdf, trunc_mixture_log_pdf, DensityGrid};
 use crate::rng::Rng;
+
+/// Tabulate the bad-mixture log-density on a grid once the component
+/// count makes exact per-candidate evaluation the dominant cost. Below
+/// this the exact flat loop is both faster and bit-identical to the
+/// historical behaviour.
+const BAD_GRID_MIN_OBS: usize = 64;
 
 /// TPE with Optuna-default settings.
 pub struct TpeSampler {
@@ -62,17 +68,10 @@ impl Sampler for TpeSampler {
         "tpe"
     }
 
-    fn suggest(
-        &self,
-        space: &Space,
-        obs: &[Obs],
-        direction: Direction,
-        _n_started: u64,
-        rng: &mut Rng,
-    ) -> Assignment {
+    fn fit(&self, space: &Space, obs: &[Obs], direction: Direction) -> Box<dyn FitState> {
         let mut finite: Vec<&Obs> = obs.iter().filter(|o| o.value.is_finite()).collect();
         if (finite.len() as u64) < self.n_startup_trials {
-            return space.sample(rng);
+            return Box::new(TpeFit { startup: true, estimators: Vec::new() });
         }
         // History window (§Perf): keep only the most recent max_obs.
         if finite.len() > self.max_obs.max(1) {
@@ -92,18 +91,32 @@ impl Sampler for TpeSampler {
         let n_good = self.n_good(sorted.len());
         let (good, bad) = sorted.split_at(n_good);
 
-        // Per-parameter estimators.
-        let mut best: Option<(f64, Assignment)> = None;
         let estimators: Vec<ParamEstimator> = space
             .params
             .iter()
             .map(|p| ParamEstimator::fit(&p.dist, p, good, bad))
             .collect();
+        Box::new(TpeFit { startup: false, estimators })
+    }
 
+    fn suggest_fitted(
+        &self,
+        space: &Space,
+        fit: &dyn FitState,
+        _n_started: u64,
+        rng: &mut Rng,
+    ) -> Assignment {
+        let Some(f) = fit.as_any().downcast_ref::<TpeFit>() else {
+            return space.sample(rng);
+        };
+        if f.startup {
+            return space.sample(rng);
+        }
+        let mut best: Option<(f64, Assignment)> = None;
         for _ in 0..self.n_ei_candidates.max(1) {
             let mut cand: Assignment = Vec::with_capacity(space.len());
             let mut score = 0.0;
-            for (p, est) in space.params.iter().zip(&estimators) {
+            for (p, est) in space.params.iter().zip(&f.estimators) {
                 let (v, s) = est.sample_and_score(&p.dist, rng);
                 score += s;
                 cand.push((p.name.clone(), v));
@@ -116,10 +129,35 @@ impl Sampler for TpeSampler {
     }
 }
 
+/// Sufficient statistics of one TPE fit: the per-parameter l/g Parzen
+/// estimators (plus the tabulated bad-mixture grid at large histories).
+/// Pure function of (space, windowed history, direction) — no RNG — so
+/// the engine can cache it per tell-epoch without perturbing the
+/// suggestion stream.
+pub struct TpeFit {
+    startup: bool,
+    estimators: Vec<ParamEstimator>,
+}
+
+impl FitState for TpeFit {
+    fn as_any(&self) -> &dyn std::any::Any {
+        self
+    }
+}
+
 /// Fitted l/g estimators for one parameter.
 enum ParamEstimator {
-    Numeric { good: Parzen, bad: Parzen },
-    Cat { good: Vec<f64>, bad: Vec<f64> },
+    Numeric {
+        good: Parzen,
+        bad: Parzen,
+        /// Grid-tabulated `log g(x)` when the bad set is large; the good
+        /// mixture stays exact (≤ `gamma_cap` + 1 components).
+        bad_grid: Option<DensityGrid>,
+    },
+    Cat {
+        good: Vec<f64>,
+        bad: Vec<f64>,
+    },
 }
 
 impl ParamEstimator {
@@ -158,19 +196,25 @@ impl ParamEstimator {
                 };
                 ParamEstimator::Cat { good: hist(good), bad: hist(bad) }
             }
-            _ => ParamEstimator::Numeric {
-                good: Parzen::fit(&values(good)),
-                bad: Parzen::fit(&values(bad)),
-            },
+            _ => {
+                let bad = Parzen::fit(&values(bad));
+                let bad_grid = (bad.len() >= BAD_GRID_MIN_OBS)
+                    .then(|| bad.density_grid(DensityGrid::DEFAULT_BINS));
+                ParamEstimator::Numeric { good: Parzen::fit(&values(good)), bad, bad_grid }
+            }
         }
     }
 
     /// Draw from the good model; return (value, log l − log g).
     fn sample_and_score(&self, dist: &Dist, rng: &mut Rng) -> (crate::json::Value, f64) {
         match self {
-            ParamEstimator::Numeric { good, bad } => {
+            ParamEstimator::Numeric { good, bad, bad_grid } => {
                 let u = good.sample(rng);
-                let s = good.log_pdf(u) - bad.log_pdf(u);
+                let log_g = match bad_grid {
+                    Some(grid) => grid.log_pdf(u),
+                    None => bad.log_pdf(u),
+                };
+                let s = good.log_pdf(u) - log_g;
                 (dist.from_unit(u), s)
             }
             ParamEstimator::Cat { good, bad } => {
@@ -223,16 +267,23 @@ impl Parzen {
         Parzen { mus, sigmas, norms, w }
     }
 
-    /// Mixture log-density at `x ∈ [0,1]`.
+    /// Number of Gaussian components (observations behind this mixture).
+    pub fn len(&self) -> usize {
+        self.mus.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mus.is_empty()
+    }
+
+    /// Mixture log-density at `x ∈ [0,1]` — exact flat-slice evaluation.
     pub fn log_pdf(&self, x: f64) -> f64 {
-        // Uniform prior component: density 1 on [0,1].
-        let mut acc = self.w;
-        for ((&m, &s), &z) in self.mus.iter().zip(&self.sigmas).zip(&self.norms) {
-            let t = (x - m) / s;
-            let pdf = (-0.5 * t * t).exp() / (s * (2.0 * std::f64::consts::PI).sqrt());
-            acc += self.w * pdf / z;
-        }
-        acc.max(1e-300).ln()
+        trunc_mixture_log_pdf(x, &self.mus, &self.sigmas, &self.norms, self.w)
+    }
+
+    /// Tabulate the mixture log-density for O(1) interpolated lookups.
+    pub fn density_grid(&self, bins: usize) -> DensityGrid {
+        DensityGrid::from_trunc_mixture(&self.mus, &self.sigmas, &self.norms, self.w, bins)
     }
 
     /// Draw one point from the mixture.

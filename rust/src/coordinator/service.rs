@@ -29,7 +29,7 @@
 //! the mapping HOPAAS clients are written against.
 
 use super::auth::{Claims, TokenService};
-use super::engine::{ApiError, Engine, EngineConfig};
+use super::engine::{ApiError, AskReply, Engine, EngineConfig};
 use crate::http::{PathParams, Request, Response, Router, Server, ServerConfig, ServerHandle};
 use crate::json::Value;
 use std::sync::Arc;
@@ -113,6 +113,19 @@ fn body_json(req: &Request) -> Result<Value, Response> {
     crate::json::parse(text).map_err(|e| Response::error(400, &format!("invalid json: {e}")))
 }
 
+/// The wire shape of one suggested trial (shared by the single-ask reply
+/// and each element of a batched `{"trials": [...]}` reply).
+fn ask_reply_json(reply: AskReply) -> Value {
+    let mut o = Value::obj();
+    o.set("trial_id", reply.trial_id)
+        .set("trial_number", reply.trial_number)
+        .set("study_id", reply.study_id)
+        .set("study_key", reply.study_key.as_str())
+        .set("params", reply.params)
+        .set("requeued", reply.requeued);
+    Value::Obj(o)
+}
+
 /// Assemble the full router. Exposed for in-process benches (no TCP).
 pub fn build_router(
     engine: Arc<Engine>,
@@ -179,22 +192,36 @@ pub fn build_router(
                 Some(c) => c.tenant().map(str::to_string),
                 None => body.get("tenant").as_str().map(str::to_string),
             };
-            let result = engine.ask_as(&body, tenant.as_deref());
+            // Batched ask: `"n": k` in the body reserves k trials in one
+            // call (one admission pass, one sampler fit). The reply is
+            // `{"trials": [...]}` iff the request carried "n" — bare
+            // asks keep the legacy single-object shape.
+            let n = match body.get("n") {
+                Value::Null => None,
+                v => match v.as_u64() {
+                    Some(k) => Some(k as usize),
+                    None => return Response::error(422, "'n' must be a positive integer"),
+                },
+            };
+            let result = engine.ask_n_as(&body, n.unwrap_or(1), tenant.as_deref());
             engine
                 .metrics
                 .ask_latency
                 .observe(t0.elapsed().as_secs_f64());
             match result {
-                Ok(reply) => {
-                    let mut o = Value::obj();
-                    o.set("trial_id", reply.trial_id)
-                        .set("trial_number", reply.trial_number)
-                        .set("study_id", reply.study_id)
-                        .set("study_key", reply.study_key.as_str())
-                        .set("params", reply.params)
-                        .set("requeued", reply.requeued);
-                    Response::json(&Value::Obj(o))
-                }
+                Ok(replies) => match n {
+                    Some(_) => {
+                        let trials: Vec<Value> =
+                            replies.into_iter().map(ask_reply_json).collect();
+                        let mut o = Value::obj();
+                        o.set("trials", Value::Arr(trials));
+                        Response::json(&Value::Obj(o))
+                    }
+                    None => {
+                        let reply = replies.into_iter().next().expect("n=1 yields one reply");
+                        Response::json(&ask_reply_json(reply))
+                    }
+                },
                 Err(e) => err_response(&e),
             }
         });
@@ -919,6 +946,46 @@ mod tests {
         let dash = c.get("/").unwrap();
         assert_eq!(dash.status, 200);
         assert!(String::from_utf8(dash.body).unwrap().contains("HOPAAS"));
+        s.stop();
+    }
+
+    #[test]
+    fn batched_ask_over_http() {
+        let s = server(false);
+        let mut c = Client::connect(s.addr()).unwrap();
+        // "n" in the body switches the reply to the {"trials": [...]}
+        // shape, one element per suggestion.
+        let mut body = ask_body();
+        if let Value::Obj(o) = &mut body {
+            o.set("n", 3u64);
+        }
+        let r = c.post_json("/api/ask/x", &body).unwrap();
+        assert_eq!(r.status, 200, "{:?}", String::from_utf8_lossy(&r.body));
+        let batch = r.json_body().unwrap();
+        let trials = batch.get("trials").as_arr().unwrap();
+        assert_eq!(trials.len(), 3);
+        for (i, t) in trials.iter().enumerate() {
+            assert_eq!(t.get("trial_number").as_u64(), Some(i as u64));
+            assert!(t.get("params").get("x").as_f64().is_some());
+        }
+        // Each suggested trial is individually tellable.
+        for t in trials {
+            let mut tell = Value::obj();
+            tell.set("trial_id", t.get("trial_id").as_u64().unwrap()).set("value", 0.1);
+            assert_eq!(c.post_json("/api/tell/x", &Value::Obj(tell)).unwrap().status, 200);
+        }
+        // Bare asks (no "n") keep the legacy single-object shape.
+        let single = c.post_json("/api/ask/x", &ask_body()).unwrap().json_body().unwrap();
+        assert!(single.get("trials").is_null());
+        assert_eq!(single.get("trial_number").as_u64(), Some(3));
+        // Invalid n: zero, too large, or non-integer are 422s.
+        for bad in [Value::Num(0.0), Value::Num(1e6), Value::Num(1.5), Value::Str("x".into())] {
+            let mut body = ask_body();
+            if let Value::Obj(o) = &mut body {
+                o.set("n", bad);
+            }
+            assert_eq!(c.post_json("/api/ask/x", &body).unwrap().status, 422);
+        }
         s.stop();
     }
 }

@@ -9,10 +9,12 @@
 //! unambiguously: name, search space, direction, sampler and pruner
 //! configuration.
 
+use super::samplers::{FitState, Obs, Sampler};
 use super::space::{Direction, Space};
 use super::trial::{Trial, TrialState};
 use crate::json::Value;
 use sha2::{Digest, Sha256};
+use std::sync::Arc;
 
 /// Sampler/pruner configuration: algorithm name + free-form options.
 #[derive(Clone, Debug, PartialEq)]
@@ -121,6 +123,34 @@ impl StudyDef {
     }
 }
 
+/// Non-persisted per-study runtime caches for the ask hot path: the
+/// sampler instance (built once per study slot), the tell-epoch, the
+/// `Arc`-shared windowed observation snapshot, and the cached sampler
+/// fit. None of this is serialized — recovery builds a fresh `Study`
+/// (epoch 0, empty caches), so WAL replay invalidates everything by
+/// construction and the first post-recovery ask rebuilds from `trials`.
+#[derive(Default)]
+pub struct StudyRuntime {
+    /// Tell-epoch: bumped whenever `scored()` content changes (a tell or
+    /// a prune-with-intermediate). Keys both caches below.
+    pub epoch: u64,
+    /// Sampler constructed once per study and reused across asks.
+    pub sampler: Option<Arc<dyn Sampler>>,
+    /// Cached fit and the epoch it was built from; valid while the epoch
+    /// still matches [`StudyRuntime::epoch`].
+    pub fit: Option<(u64, Arc<dyn FitState>)>,
+    obs: Option<ObsSnap>,
+}
+
+/// Windowed scored-observation snapshot in trial-insert order (exactly
+/// the `scored()` + skip semantics the ask path historically used).
+struct ObsSnap {
+    epoch: u64,
+    /// Index into `trials` of the last observation included, or -1.
+    last_idx: i64,
+    window: Arc<Vec<Obs>>,
+}
+
 /// A study and its trials.
 pub struct Study {
     /// Short server-assigned id (ordinal), used in URLs.
@@ -129,6 +159,8 @@ pub struct Study {
     pub key: String,
     pub trials: Vec<Trial>,
     pub created_at: f64,
+    /// Runtime-only caches (never persisted or compared).
+    pub runtime: StudyRuntime,
     /// Next trial number to hand out. Reserved under the shard lock
     /// *before* sampling (see `Engine::ask`), so concurrent asks on the
     /// same study draw distinct numbers — and therefore distinct,
@@ -141,7 +173,15 @@ pub struct Study {
 impl Study {
     pub fn new(id: u64, def: StudyDef, now: f64) -> Study {
         let key = def.key();
-        Study { id, def, key, trials: Vec::new(), created_at: now, next_number: 0 }
+        Study {
+            id,
+            def,
+            key,
+            trials: Vec::new(),
+            created_at: now,
+            runtime: StudyRuntime::default(),
+            next_number: 0,
+        }
     }
 
     /// Reserve the next trial number (call with the shard lock held).
@@ -177,6 +217,82 @@ impl Study {
                 _ => None,
             })
             .collect()
+    }
+
+    /// `Arc`-shared windowed observation snapshot: the most recent `cap`
+    /// entries of `scored()` in trial-insert order. Returns the cached
+    /// copy (a cheap `Arc` clone, zero per-trial work) while the epoch is
+    /// unchanged; rebuilds lazily otherwise.
+    pub fn obs_window(&mut self, cap: usize) -> Arc<Vec<Obs>> {
+        let epoch = self.runtime.epoch;
+        if let Some(snap) = &self.runtime.obs {
+            if snap.epoch == epoch {
+                return snap.window.clone();
+            }
+        }
+        let mut scored: Vec<(usize, f64)> = Vec::new();
+        for (i, t) in self.trials.iter().enumerate() {
+            match t.state {
+                TrialState::Completed => scored.push((i, t.value.unwrap())),
+                TrialState::Pruned => {
+                    if let Some((_, v)) = t.last_intermediate() {
+                        scored.push((i, v));
+                    }
+                }
+                _ => {}
+            }
+        }
+        let skip = scored.len().saturating_sub(cap.max(1));
+        let last_idx = scored.last().map_or(-1, |&(i, _)| i as i64);
+        let window: Vec<Obs> = scored[skip..]
+            .iter()
+            .map(|&(i, v)| Obs { params: self.trials[i].params.clone(), value: v })
+            .collect();
+        let window = Arc::new(window);
+        self.runtime.obs = Some(ObsSnap { epoch, last_idx, window: window.clone() });
+        window
+    }
+
+    /// Record that `trials[trial_idx]` just gained a score (tell or
+    /// prune-with-intermediate): bumps the tell-epoch, and extends the
+    /// cached window in place when the score arrived in insert order (the
+    /// common case — append via `Arc::make_mut` is copy-on-write only if
+    /// an in-flight ask still holds the snapshot). Out-of-order scores
+    /// drop the snapshot for a lazy rebuild on the next ask.
+    pub fn note_scored(&mut self, trial_idx: usize, cap: usize) {
+        self.runtime.epoch += 1;
+        if self.runtime.obs.is_none() {
+            return;
+        }
+        let in_order = self
+            .runtime
+            .obs
+            .as_ref()
+            .is_some_and(|s| (trial_idx as i64) > s.last_idx);
+        let obs = {
+            let t = &self.trials[trial_idx];
+            let value = match t.state {
+                TrialState::Completed => t.value,
+                TrialState::Pruned => t.last_intermediate().map(|(_, v)| v),
+                _ => None,
+            };
+            value.map(|v| Obs { params: t.params.clone(), value: v })
+        };
+        match (in_order, obs) {
+            (true, Some(obs)) => {
+                let snap = self.runtime.obs.as_mut().unwrap();
+                let w = Arc::make_mut(&mut snap.window);
+                w.push(obs);
+                let cap = cap.max(1);
+                if w.len() > cap {
+                    let excess = w.len() - cap;
+                    w.drain(..excess);
+                }
+                snap.last_idx = trial_idx as i64;
+                snap.epoch = self.runtime.epoch;
+            }
+            _ => self.runtime.obs = None,
+        }
     }
 
     /// Number of trials in a given state.
@@ -429,6 +545,106 @@ mod tests {
         assert_eq!(s.reserve_number(), 8);
         s.note_trial_number(3); // lower numbers never move it back
         assert_eq!(s.reserve_number(), 9);
+    }
+
+    fn window_of(s: &Study, cap: usize) -> Vec<(String, f64)> {
+        let all = s.scored();
+        let skip = all.len().saturating_sub(cap.max(1));
+        all.into_iter()
+            .skip(skip)
+            .map(|(t, v)| (format!("{:?}", t.params), v))
+            .collect()
+    }
+
+    fn snap_of(s: &mut Study, cap: usize) -> Vec<(String, f64)> {
+        s.obs_window(cap)
+            .iter()
+            .map(|o| (format!("{:?}", o.params), o.value))
+            .collect()
+    }
+
+    #[test]
+    fn obs_window_matches_scored_semantics() {
+        let mut s = Study::new(1, def(), 0.0);
+        for i in 0..10u64 {
+            let mut t =
+                Trial::new(i, i, vec![("x".into(), Value::Num(i as f64 / 10.0))], 0.0, None);
+            if i % 3 == 0 {
+                t.complete(i as f64, 1.0).unwrap();
+            } else if i % 3 == 1 {
+                t.report(1, i as f64 * 2.0).unwrap();
+                t.prune(1.0).unwrap();
+            }
+            s.trials.push(t);
+            if i % 3 != 2 {
+                let idx = s.trials.len() - 1;
+                s.note_scored(idx, 4);
+            }
+        }
+        assert_eq!(snap_of(&mut s, 4), window_of(&s, 4), "capped");
+        assert_eq!(snap_of(&mut s, 100), window_of(&s, 100), "uncapped");
+    }
+
+    #[test]
+    fn note_scored_in_order_appends_without_rebuild() {
+        let mut s = Study::new(1, def(), 0.0);
+        let mut t0 = Trial::new(0, 0, vec![("x".into(), Value::Num(0.1))], 0.0, None);
+        t0.complete(1.0, 1.0).unwrap();
+        s.trials.push(t0);
+        s.note_scored(0, 8);
+        let w1 = s.obs_window(8);
+        assert_eq!(w1.len(), 1);
+        let mut t1 = Trial::new(1, 1, vec![("x".into(), Value::Num(0.2))], 0.0, None);
+        t1.complete(2.0, 2.0).unwrap();
+        s.trials.push(t1);
+        s.note_scored(1, 8);
+        // Old snapshot (held by an "in-flight ask") is untouched; the new
+        // one sees the appended observation.
+        assert_eq!(w1.len(), 1);
+        let w2 = s.obs_window(8);
+        assert_eq!(w2.len(), 2);
+        assert_eq!(w2[1].value, 2.0);
+        assert_eq!(snap_of(&mut s, 8), window_of(&s, 8));
+    }
+
+    #[test]
+    fn note_scored_out_of_order_rebuilds_correctly() {
+        let mut s = Study::new(1, def(), 0.0);
+        // Two running trials inserted in order 0, 1.
+        for i in 0..2u64 {
+            s.trials.push(Trial::new(
+                i,
+                i,
+                vec![("x".into(), Value::Num(i as f64))],
+                0.0,
+                None,
+            ));
+        }
+        // Trial 1 completes first, then trial 0: scored order must stay
+        // insert order (0 then 1), matching `scored()`.
+        s.trials[1].complete(10.0, 1.0).unwrap();
+        s.note_scored(1, 8);
+        let _ = s.obs_window(8);
+        s.trials[0].complete(20.0, 2.0).unwrap();
+        s.note_scored(0, 8);
+        let snap = snap_of(&mut s, 8);
+        assert_eq!(snap, window_of(&s, 8));
+        assert_eq!(s.obs_window(8)[0].value, 20.0);
+        assert_eq!(s.obs_window(8)[1].value, 10.0);
+    }
+
+    #[test]
+    fn obs_window_epoch_reuses_arc() {
+        let mut s = Study::new(1, def(), 0.0);
+        let mut t = Trial::new(0, 0, vec![("x".into(), Value::Num(0.5))], 0.0, None);
+        t.complete(1.0, 1.0).unwrap();
+        s.trials.push(t);
+        s.note_scored(0, 8);
+        let a = s.obs_window(8);
+        let b = s.obs_window(8);
+        assert!(Arc::ptr_eq(&a, &b), "same epoch must share the snapshot");
+        s.trials[0].params = vec![("x".into(), Value::Num(0.9))]; // not visible
+        assert_eq!(s.obs_window(8)[0].params[0].1.as_f64(), Some(0.5));
     }
 
     #[test]

@@ -78,6 +78,10 @@ COMMANDS:
                     --requeue-max N    requeues before a preempted trial fails
                     --dead-worker-keep N  retired workers kept by the fleet GC
                     --site-idle-retention S  idle-site eviction window
+                    --sampler-cache on|off  reuse a study's sampler fit across
+                                       asks until a tell lands (default on;
+                                       off refits every ask — same suggestions,
+                                       debugging escape hatch)
                     --config FILE      JSON config (flags override)
   token             mint an API token offline
                     --secret S --user NAME --ttl SECONDS
@@ -85,6 +89,7 @@ COMMANDS:
                     --nodes N --trials N --objective NAME --sampler NAME
                     --pruner NAME|none --steps N
                     --fleet            register workers + heartbeat leases
+                    --ask-batch N      trials fetched per ask round trip
   demo              quick end-to-end demo (ask/should_prune/tell loop)
   export            dump a durable server's trials as CSV (offline)
                     --data-dir PATH [--study ID]
@@ -179,6 +184,7 @@ fn cmd_campaign(args: &Args) -> i32 {
     campaign.max_trials = args.get_u64("trials", 200);
     campaign.steps_per_trial = args.get_u64("steps", 20);
     campaign.fleet = args.get_bool("fleet");
+    campaign.ask_batch = args.get_u64("ask-batch", 1).max(1) as usize;
     // With the fleet protocol on, drive lease expiry while the
     // campaign runs (the role the serve loop plays in production).
     let pump_stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));

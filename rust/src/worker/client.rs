@@ -297,10 +297,9 @@ impl HopaasClient {
         self.worker_id = None;
     }
 
-    /// `ask`: join/create the study, receive a trial (a fresh one, or a
-    /// requeued trial whose previous worker was lost).
-    pub fn ask(&mut self, spec: &StudySpec) -> Result<TrialHandle, WorkerError> {
-        let path = format!("/api/ask/{}", self.token);
+    /// The `ask` body for `spec` with this client's worker/tenant
+    /// identity attached.
+    fn ask_request(&self, spec: &StudySpec) -> Value {
         let mut body = spec.to_body();
         if let (Some(wid), Value::Obj(o)) = (self.worker_id, &mut body) {
             o.set("worker", wid);
@@ -308,14 +307,41 @@ impl HopaasClient {
         if let (Some(t), Value::Obj(o)) = (&self.tenant, &mut body) {
             o.set("tenant", t.as_str());
         }
-        let v = Self::check(self.http.post_json(&path, &body)?)?;
-        Ok(TrialHandle {
+        body
+    }
+
+    fn trial_handle(v: &Value) -> TrialHandle {
+        TrialHandle {
             trial_id: v.get("trial_id").as_u64().unwrap_or(0),
             trial_number: v.get("trial_number").as_u64().unwrap_or(0),
             study_id: v.get("study_id").as_u64().unwrap_or(0),
             params: v.get("params").clone(),
             requeued: v.get("requeued").as_bool().unwrap_or(false),
-        })
+        }
+    }
+
+    /// `ask`: join/create the study, receive a trial (a fresh one, or a
+    /// requeued trial whose previous worker was lost).
+    pub fn ask(&mut self, spec: &StudySpec) -> Result<TrialHandle, WorkerError> {
+        let path = format!("/api/ask/{}", self.token);
+        let body = self.ask_request(spec);
+        let v = Self::check(self.http.post_json(&path, &body)?)?;
+        Ok(Self::trial_handle(&v))
+    }
+
+    /// Batched `ask`: request up to `n` trials in one round trip (one
+    /// admission pass and one sampler fit server-side). The server may
+    /// return fewer than `n` under per-tenant quota pressure; at least
+    /// one trial is returned on success.
+    pub fn ask_n(&mut self, spec: &StudySpec, n: usize) -> Result<Vec<TrialHandle>, WorkerError> {
+        let path = format!("/api/ask/{}", self.token);
+        let mut body = self.ask_request(spec);
+        if let Value::Obj(o) = &mut body {
+            o.set("n", n as u64);
+        }
+        let v = Self::check(self.http.post_json(&path, &body)?)?;
+        let trials = v.get("trials").as_arr().unwrap_or(&[]);
+        Ok(trials.iter().map(Self::trial_handle).collect())
     }
 
     /// `tell`: finalize with the objective value. Returns `is_best`.
@@ -465,6 +491,24 @@ mod tests {
         assert_eq!(c.heartbeat().unwrap(), 0, "tell released it");
         assert_eq!(c.deregister_worker().unwrap(), 0);
         assert_eq!(c.worker_id(), None);
+        s.stop();
+    }
+
+    #[test]
+    fn batched_ask_round_trip() {
+        let s = server();
+        let mut c = HopaasClient::connect(s.addr(), s.bootstrap_token.clone()).unwrap();
+        c.register_worker("n1", "cloud", "gpu").unwrap();
+        let spec = StudySpec::new("batch").uniform("x", 0.0, 1.0).sampler("random");
+        let trials = c.ask_n(&spec, 4).unwrap();
+        assert_eq!(trials.len(), 4);
+        let numbers: Vec<u64> = trials.iter().map(|t| t.trial_number).collect();
+        assert_eq!(numbers, vec![0, 1, 2, 3]);
+        assert_eq!(c.heartbeat().unwrap(), 4, "each batched trial holds a lease");
+        for t in &trials {
+            c.tell(t, t.params.get("x").as_f64().unwrap()).unwrap();
+        }
+        assert_eq!(c.heartbeat().unwrap(), 0);
         s.stop();
     }
 

@@ -92,6 +92,11 @@ pub struct Campaign {
     /// in `token` per campaign instead. Empty = tenant-less (the
     /// pre-policy behavior).
     pub tenants: Vec<String>,
+    /// Trials fetched per `ask` round trip (`"n": k` batched asks).
+    /// 1 = the classic one-ask-one-trial loop; higher values amortize
+    /// the ask round trip and the server-side sampler fit over the
+    /// batch, which a multi-GPU node running k trials at once wants.
+    pub ask_batch: usize,
 }
 
 impl Campaign {
@@ -110,6 +115,7 @@ impl Campaign {
             seed: 1,
             fleet: false,
             tenants: Vec::new(),
+            ask_batch: 1,
         }
     }
 
@@ -229,12 +235,33 @@ fn node_loop(
             break;
         }
         net_delay(node, &mut rng);
-        let trial = match client.ask(&spec) {
-            Ok(t) => t,
-            // Quota / fair-share denial: the slot was not consumed —
-            // back off briefly and retry.
+        // Batched mode claims the extra start slots up front and fetches
+        // the whole batch in one round trip; the server may answer with
+        // fewer under quota pressure, in which case the unused slots are
+        // returned to the pool.
+        let extra = (campaign.ask_batch.max(1) as u64 - 1)
+            .min(campaign.max_trials.saturating_sub(n + 1));
+        if extra > 0 {
+            started.fetch_add(extra, Ordering::Relaxed);
+        }
+        let claimed = 1 + extra;
+        let result = if extra > 0 {
+            client.ask_n(&spec, claimed as usize)
+        } else {
+            client.ask(&spec).map(|t| vec![t])
+        };
+        let trials = match result {
+            Ok(ts) => {
+                let short = claimed - ts.len() as u64;
+                if short > 0 {
+                    started.fetch_sub(short, Ordering::Relaxed);
+                }
+                ts
+            }
+            // Quota / fair-share denial: no slot was consumed — back
+            // off briefly and retry.
             Err(WorkerError::Api { status: 429, .. }) => {
-                started.fetch_sub(1, Ordering::Relaxed);
+                started.fetch_sub(claimed, Ordering::Relaxed);
                 std::thread::sleep(Duration::from_millis(2));
                 continue;
             }
@@ -242,7 +269,7 @@ fn node_loop(
             // gap on a loaded machine). Its trials are already queued
             // for others — re-register as a fresh instance and go on.
             Err(WorkerError::Api { status: 409, .. }) if campaign.fleet => {
-                started.fetch_sub(1, Ordering::Relaxed);
+                started.fetch_sub(claimed, Ordering::Relaxed);
                 incarnation += 1;
                 client.abandon_worker();
                 client.register_worker(
@@ -254,104 +281,110 @@ fn node_loop(
             }
             Err(e) => return Err(e),
         };
-        if trial.requeued {
-            report.requeued_taken += 1;
-        }
+        for trial in trials {
+            if trial.requeued {
+                report.requeued_taken += 1;
+            }
 
-        // The simulated training converges to the objective value at the
-        // suggested point: bad hyperparameters → high asymptote, which is
-        // what gives the pruner something to act on, and keeps final
-        // values in objective units (comparable to f*).
-        let value = campaign.objective.eval_params(&trial.params);
-        let curve = LearningCurve {
-            asymptote: value,
-            start: value + 3.0 * (1.0 + rng.f64()),
-            rate: 0.05 + 0.1 * rng.f64(),
-            noise: 0.02,
-        };
+            // The simulated training converges to the objective value at
+            // the suggested point: bad hyperparameters → high asymptote,
+            // which is what gives the pruner something to act on, and
+            // keeps final values in objective units (comparable to f*).
+            let value = campaign.objective.eval_params(&trial.params);
+            let curve = LearningCurve {
+                asymptote: value,
+                start: value + 3.0 * (1.0 + rng.f64()),
+                rate: 0.05 + 0.1 * rng.f64(),
+                noise: 0.02,
+            };
 
-        // Does this trial get preempted partway? (opportunistic resources)
-        let preempt_at = if rng.chance(node.site.preempt) {
-            Some(1 + rng.below(campaign.steps_per_trial.max(1)))
-        } else {
-            None
-        };
+            // Does this trial get preempted partway? (opportunistic
+            // resources)
+            let preempt_at = if rng.chance(node.site.preempt) {
+                Some(1 + rng.below(campaign.steps_per_trial.max(1)))
+            } else {
+                None
+            };
 
-        let mut pruned = false;
-        let mut preempted = false;
-        let mut stolen = false;
-        for step in 1..=campaign.steps_per_trial {
-            if let Some(p) = preempt_at {
-                if step >= p {
-                    // Node vanishes mid-trial: no fail report, exactly like
-                    // a killed spot instance. The server's reaper handles it
-                    // (or, in fleet mode, lease expiry requeues the trial).
-                    preempted = true;
-                    break;
+            let mut pruned = false;
+            let mut preempted = false;
+            let mut stolen = false;
+            for step in 1..=campaign.steps_per_trial {
+                if let Some(p) = preempt_at {
+                    if step >= p {
+                        // Node vanishes mid-trial: no fail report, exactly
+                        // like a killed spot instance. The server's reaper
+                        // handles it (or, in fleet mode, lease expiry
+                        // requeues the trial).
+                        preempted = true;
+                        break;
+                    }
+                }
+                work_delay(campaign, node, &mut rng);
+                report.steps_executed += 1;
+                let loss = curve.at(step, &mut rng);
+                net_delay(node, &mut rng);
+                match client.should_prune(&trial, step, loss) {
+                    Ok(true) => {
+                        pruned = true;
+                        break;
+                    }
+                    Ok(false) => {}
+                    // Fleet mode: our lease expired mid-trial and the
+                    // trial was re-homed — it is not ours to report on
+                    // anymore.
+                    Err(WorkerError::Api { status: 409, .. }) if campaign.fleet => {
+                        stolen = true;
+                        break;
+                    }
+                    Err(e) => return Err(e),
+                }
+                if campaign.fleet {
+                    // Renew the worker lease alongside the progress report.
+                    let _ = client.heartbeat();
                 }
             }
-            work_delay(campaign, node, &mut rng);
-            report.steps_executed += 1;
-            let loss = curve.at(step, &mut rng);
-            net_delay(node, &mut rng);
-            match client.should_prune(&trial, step, loss) {
-                Ok(true) => {
-                    pruned = true;
-                    break;
-                }
-                Ok(false) => {}
-                // Fleet mode: our lease expired mid-trial and the trial
-                // was re-homed — it is not ours to report on anymore.
-                Err(WorkerError::Api { status: 409, .. }) if campaign.fleet => {
-                    stolen = true;
-                    break;
-                }
-                Err(e) => return Err(e),
-            }
-            if campaign.fleet {
-                // Renew the worker lease alongside the progress report.
-                let _ = client.heartbeat();
-            }
-        }
 
-        if stolen {
-            // Nothing to record: the trial's new holder reports it.
-        } else if preempted {
-            report.preempted += 1;
-            if campaign.fleet {
-                // The instance is gone: no fail report, no deregister,
-                // no further heartbeats — exactly like a killed spot
-                // node. The server's lease expiry requeues the trial.
-                // The thread then plays the *replacement* instance,
-                // registering as a fresh worker.
-                client.abandon_worker();
-                incarnation += 1;
-                client.register_worker(
-                    &format!("{}-r{incarnation}", node.label()),
-                    node.site.name,
-                    "sim-gpu",
-                )?;
-            }
-        } else if pruned {
-            report.pruned += 1;
-        } else {
-            // Final objective: the converged value (+ observation noise —
-            // the "noisy loss function" setting of the paper's §1).
-            let final_loss = curve.final_loss() + rng.normal() * 0.005;
-            net_delay(node, &mut rng);
-            match client.tell(&trial, final_loss) {
-                Ok(_) => {
-                    report.completed += 1;
-                    site_completed += 1;
-                    report.best = Some(match report.best {
-                        None => final_loss,
-                        Some(b) => b.min(final_loss),
-                    });
+            if stolen {
+                // Nothing to record: the trial's new holder reports it.
+            } else if preempted {
+                report.preempted += 1;
+                if campaign.fleet {
+                    // The instance is gone: no fail report, no deregister,
+                    // no further heartbeats — exactly like a killed spot
+                    // node. The server's lease expiry requeues the trial.
+                    // The thread then plays the *replacement* instance,
+                    // registering as a fresh worker.
+                    client.abandon_worker();
+                    incarnation += 1;
+                    client.register_worker(
+                        &format!("{}-r{incarnation}", node.label()),
+                        node.site.name,
+                        "sim-gpu",
+                    )?;
                 }
-                // Fleet mode: a straggler tell after our lease expired
-                // and the re-homed trial finished elsewhere.
-                Err(WorkerError::Api { status: 409, .. }) if campaign.fleet => {}
-                Err(e) => return Err(e),
+            } else if pruned {
+                report.pruned += 1;
+            } else {
+                // Final objective: the converged value (+ observation
+                // noise — the "noisy loss function" setting of the
+                // paper's §1).
+                let final_loss = curve.final_loss() + rng.normal() * 0.005;
+                net_delay(node, &mut rng);
+                match client.tell(&trial, final_loss) {
+                    Ok(_) => {
+                        report.completed += 1;
+                        site_completed += 1;
+                        report.best = Some(match report.best {
+                            None => final_loss,
+                            Some(b) => b.min(final_loss),
+                        });
+                    }
+                    // Fleet mode: a straggler tell after our lease expired
+                    // and the re-homed trial finished elsewhere.
+                    Err(WorkerError::Api { status: 409, .. }) if campaign.fleet => {}
+                    Err(e) => return Err(e),
+                }
             }
         }
     }
@@ -408,6 +441,30 @@ mod tests {
         assert!(report.steps_executed > 0);
         // All 4 site kinds participated (6 nodes over 4 sites).
         assert!(report.by_site.len() >= 3, "{:?}", report.by_site);
+        s.stop();
+    }
+
+    #[test]
+    fn small_campaign_with_batched_asks() {
+        // Nodes fetch 4 trials per round trip; the campaign still
+        // resolves every started trial and respects max_trials.
+        let s = server();
+        let mut c = Campaign::new(s.addr(), "t".into(), Objective::Sphere);
+        c.n_nodes = 3;
+        c.max_trials = 24;
+        c.steps_per_trial = 4;
+        c.step_cost_us = 50;
+        c.ask_batch = 4;
+        c.pruner = None;
+        // Reliable sites only: every fetched trial runs to completion.
+        let sites = [Site { name: "cloud", speed: 1.0, preempt: 0.0, net_latency_us: 50 }];
+        let report = c.run_with_sites(&sites).unwrap();
+        assert!(report.completed >= 24, "{report:?}");
+        assert!(report.best.is_some());
+        // Nothing left running server-side: every batched trial was told.
+        for sv in s.engine.studies_json().as_arr().unwrap() {
+            assert_eq!(sv.get("n_running").as_i64(), Some(0), "{sv}");
+        }
         s.stop();
     }
 
