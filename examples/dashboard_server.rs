@@ -1,16 +1,24 @@
-//! Dashboard server — run a HOPAAS server with live traffic so the web
-//! UI has something to show, then keep serving until the duration ends.
+//! Dashboard server — run a HOPAAS server with live traffic and drive
+//! the read path the way a busy dashboard would: cursor-paginated study
+//! and trial listings, the `/best` incumbent probe, and the long-poll
+//! `/events` trial feed, all served from epoch-stamped materialized
+//! views (no shard locks on any read).
 //!
-//! Open the printed URL in a browser: the study table and loss curves
-//! refresh every 2 s from the same data APIs the paper's Chartist UI
-//! polls.
+//! Open the printed URL in a browser for the classic auto-refreshing
+//! UI; meanwhile this process tails one study's event feed and prints
+//! every completion/prune as it lands, then dumps a paginated read of
+//! the final state before exiting.
 //!
-//! Run: `cargo run --release --example dashboard_server -- --duration 60`
+//! Run: `cargo run --release --example dashboard_server -- --duration 30`
 
 use hopaas::config::Args;
 use hopaas::coordinator::service::{HopaasConfig, HopaasServer};
+use hopaas::http::Client;
 use hopaas::objectives::Objective;
 use hopaas::worker::Campaign;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(std::env::args().skip(1));
@@ -19,14 +27,21 @@ fn main() -> anyhow::Result<()> {
 
     let server = HopaasServer::start(
         &addr,
-        HopaasConfig { auth_required: false, ..Default::default() },
+        HopaasConfig {
+            auth_required: false,
+            // Short poll window so the example's feed tail stays lively.
+            events_poll_timeout: Duration::from_secs(2),
+            ..Default::default()
+        },
     )?;
     println!("dashboard: http://{}/", server.addr());
     println!("metrics:   http://{}/metrics", server.addr());
+    println!("paginated: http://{}/api/studies?limit=10", server.addr());
     println!("serving traffic for {duration}s ...");
 
-    // Background traffic: a slow-ticking campaign per objective.
-    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    // Background traffic: a slow-ticking campaign per objective, each
+    // with a couple of simulated dashboard viewers of its own.
+    let stop = Arc::new(AtomicBool::new(false));
     let mut feeders = Vec::new();
     for (i, objective) in [Objective::Branin, Objective::Ackley, Objective::Rastrigin]
         .into_iter()
@@ -35,22 +50,80 @@ fn main() -> anyhow::Result<()> {
         let addr = server.addr();
         let stop = stop.clone();
         feeders.push(std::thread::spawn(move || {
-            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+            while !stop.load(Ordering::Relaxed) {
                 let mut c = Campaign::new(addr, "x".into(), objective);
                 c.n_nodes = 4;
                 c.max_trials = 16;
                 c.steps_per_trial = 10;
                 c.step_cost_us = 20_000; // visibly live curves
                 c.seed = 42 + i as u64;
+                c.viewers = 2;
                 let _ = c.run();
             }
         }));
     }
 
-    std::thread::sleep(std::time::Duration::from_secs(duration));
-    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    // Foreground: tail the first study's live event feed over the
+    // long-poll API until the duration runs out.
+    let mut client = Client::connect(server.addr())?;
+    client.set_timeout(Duration::from_secs(10));
+    let deadline = Instant::now() + Duration::from_secs(duration);
+    let mut watermark = 0u64;
+    let mut study: Option<u64> = None;
+    while Instant::now() < deadline {
+        let Some(sid) = study else {
+            // Wait for the first study to appear in the paginated list.
+            let page = client.get("/api/studies?limit=1")?.json_body()?;
+            study = page.get("studies").at(0).get("id").as_u64();
+            if study.is_none() {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            continue;
+        };
+        let feed = client
+            .get(&format!("/api/studies/{sid}/events?since={watermark}&timeout=2"))?
+            .json_body()?;
+        if let Some(w) = feed.get("watermark").as_u64() {
+            watermark = w;
+        }
+        for e in feed.get("events").as_arr().unwrap_or(&[]) {
+            println!(
+                "event #{:<4} trial {:<4} {:<9} value={}",
+                e.get("seq"),
+                e.get("trial_id"),
+                e.get("kind").as_str().unwrap_or("?"),
+                e.get("value"),
+            );
+        }
+    }
+    stop.store(true, Ordering::Relaxed);
     for f in feeders {
         let _ = f.join();
+    }
+
+    // Final state via the paginated read path: one page of studies,
+    // each study's incumbent, and a cursor walk over its trials.
+    let list = client.get("/api/studies?limit=10")?.json_body()?;
+    for s in list.get("studies").as_arr().unwrap_or(&[]) {
+        let sid = s.get("id").as_u64().unwrap_or(0);
+        let best = client.get(&format!("/api/studies/{sid}/best"))?.json_body()?;
+        let mut n_trials = 0usize;
+        let mut path = format!("/api/studies/{sid}/trials?limit=50");
+        loop {
+            let page = client.get(&path)?.json_body()?;
+            n_trials += page.get("trials").as_arr().map_or(0, |t| t.len());
+            match page.get("next_cursor").as_str() {
+                Some(c) => path = format!("/api/studies/{sid}/trials?limit=50&cursor={c}"),
+                None => break,
+            }
+        }
+        println!(
+            "study {sid} '{}': {} trials paged, epoch {}, best={}",
+            s.get("name").as_str().unwrap_or("?"),
+            n_trials,
+            s.get("epoch"),
+            best.get("best_value"),
+        );
     }
     println!("done.");
     server.stop();

@@ -5,13 +5,26 @@
 //! concurrencies, with a 500-trial TPE history behind `ask` (the regime
 //! of a §4 campaign in progress).
 //!
-//! Run: `cargo bench --bench api_latency`
+//! A second phase measures the **mixed read/write** regime of the
+//! materialized-view read path: K dashboard viewers (long-polling the
+//! event feed and paging trials) against M fleet writers on a 4-shard
+//! engine, reporting the write-latency regression the viewers cost.
+//! Because views are Arc-swapped snapshots and parked long-polls leave
+//! the worker pool, the regression should be small.
+//!
+//! Results are printed as tables and written to `BENCH_api.json`.
+//!
+//! Run: `cargo bench --bench api_latency [-- --viewers 1000 --writers 8]`
 
 use hopaas::bench::{fmt_duration, Samples};
+use hopaas::config::Args;
+use hopaas::coordinator::engine::EngineConfig;
 use hopaas::coordinator::service::{HopaasConfig, HopaasServer};
 use hopaas::http::Client;
 use hopaas::json::{parse, Value};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 fn ask_body() -> Value {
     parse(
@@ -29,7 +42,8 @@ fn ask_body() -> Value {
     .unwrap()
 }
 
-fn row(api: &str, conc: usize, s: &Samples, wall: f64) {
+/// Print one result row and return it as a JSON record.
+fn row(api: &str, conc: usize, s: &Samples, wall: f64) -> Value {
     println!(
         "{:<14} {:>5} {:>10} {:>10} {:>10} {:>12.0}",
         api,
@@ -39,6 +53,14 @@ fn row(api: &str, conc: usize, s: &Samples, wall: f64) {
         fmt_duration(s.quantile(0.99)),
         s.len() as f64 / wall
     );
+    let mut r = Value::obj();
+    r.set("api", api)
+        .set("conc", conc)
+        .set("p50_s", s.quantile(0.5))
+        .set("p95_s", s.quantile(0.95))
+        .set("p99_s", s.quantile(0.99))
+        .set("req_per_s", s.len() as f64 / wall);
+    Value::Obj(r)
 }
 
 /// Run `per_thread` iterations on `conc` threads (own client + scratch).
@@ -72,7 +94,48 @@ where
     (all, t0.elapsed().as_secs_f64())
 }
 
+/// Seed `n` completed trials through the public API; returns the study id.
+fn seed(addr: std::net::SocketAddr, tok: &str, n: usize) -> u64 {
+    let mut c = Client::connect(addr).unwrap();
+    let mut sid = 0;
+    for i in 0..n {
+        let ask = c
+            .post_json(&format!("/api/ask/{tok}"), &ask_body())
+            .unwrap()
+            .json_body()
+            .unwrap();
+        sid = ask.get("study_id").as_u64().unwrap();
+        let id = ask.get("trial_id").as_u64().unwrap();
+        let mut rep = Value::obj();
+        rep.set("trial_id", id).set("step", 1u64).set("value", (i % 17) as f64);
+        c.post_json(&format!("/api/should_prune/{tok}"), &Value::Obj(rep)).unwrap();
+        let mut tell = Value::obj();
+        tell.set("trial_id", id).set("value", (i % 17) as f64);
+        c.post_json(&format!("/api/tell/{tok}"), &Value::Obj(tell)).unwrap();
+    }
+    sid
+}
+
+/// Pre-create trials so a tell phase times only the tell.
+fn pre_ask(addr: std::net::SocketAddr, tok: &str, n: usize) -> Vec<u64> {
+    let mut c = Client::connect(addr).unwrap();
+    (0..n)
+        .map(|_| {
+            c.post_json(&format!("/api/ask/{tok}"), &ask_body())
+                .unwrap()
+                .json_body()
+                .unwrap()
+                .get("trial_id")
+                .as_u64()
+                .unwrap()
+        })
+        .collect()
+}
+
 fn main() {
+    let args = Args::parse(std::env::args().skip(1));
+    let mut rows: Vec<Value> = Vec::new();
+
     let server = HopaasServer::start(
         "127.0.0.1:0",
         HopaasConfig { auth_required: true, ..Default::default() },
@@ -82,23 +145,7 @@ fn main() {
     let addr = server.addr();
 
     // Seed 500 completed trials.
-    {
-        let mut c = Client::connect(addr).unwrap();
-        for i in 0..500 {
-            let ask = c
-                .post_json(&format!("/api/ask/{tok}"), &ask_body())
-                .unwrap()
-                .json_body()
-                .unwrap();
-            let id = ask.get("trial_id").as_u64().unwrap();
-            let mut rep = Value::obj();
-            rep.set("trial_id", id).set("step", 1u64).set("value", (i % 17) as f64);
-            c.post_json(&format!("/api/should_prune/{tok}"), &Value::Obj(rep)).unwrap();
-            let mut tell = Value::obj();
-            tell.set("trial_id", id).set("value", (i % 17) as f64);
-            c.post_json(&format!("/api/tell/{tok}"), &Value::Obj(tell)).unwrap();
-        }
-    }
+    seed(addr, &tok, 500);
 
     println!("\nT1: API latency/throughput (warm server, 500-trial TPE history)\n");
     println!(
@@ -112,7 +159,7 @@ fn main() {
         let (s, w) = run(addr, conc, 400, |c, _| {
             assert_eq!(c.get("/api/version").unwrap().status, 200);
         });
-        row("version", conc, &s, w);
+        rows.push(row("version", conc, &s, w));
 
         // ask: study join + TPE suggest.
         let (s, w) = run(addr, conc, 120, {
@@ -122,7 +169,7 @@ fn main() {
                 assert_eq!(r.status, 200);
             }
         });
-        row("ask", conc, &s, w);
+        rows.push(row("ask", conc, &s, w));
 
         // should_prune: one running trial per thread, increasing steps.
         let (s, w) = run(addr, conc, 120, {
@@ -149,24 +196,10 @@ fn main() {
                 assert_eq!(r.status, 200);
             }
         });
-        row("should_prune", conc, &s, w);
+        rows.push(row("should_prune", conc, &s, w));
 
         // tell: pre-created trials, timed region is the tell only.
-        let ids: Vec<u64> = {
-            let mut c = Client::connect(addr).unwrap();
-            (0..conc * 120)
-                .map(|_| {
-                    c.post_json(&format!("/api/ask/{tok}"), &ask_body())
-                        .unwrap()
-                        .json_body()
-                        .unwrap()
-                        .get("trial_id")
-                        .as_u64()
-                        .unwrap()
-                })
-                .collect()
-        };
-        let ids = Arc::new(Mutex::new(ids));
+        let ids = Arc::new(Mutex::new(pre_ask(addr, &tok, conc * 120)));
         let (s, w) = run(addr, conc, 120, {
             let tok = tok.clone();
             let ids = ids.clone();
@@ -178,7 +211,7 @@ fn main() {
                 assert_eq!(r.status, 200);
             }
         });
-        row("tell", conc, &s, w);
+        rows.push(row("tell", conc, &s, w));
         println!();
     }
 
@@ -187,7 +220,147 @@ fn main() {
     let (s, w) = run(addr, 8, 300, |c, _| {
         assert_eq!(c.post_json("/api/ask/garbage", &ask_body()).unwrap().status, 401);
     });
-    row("ask(401)", 8, &s, w);
-
+    rows.push(row("ask(401)", 8, &s, w));
     server.stop();
+
+    // ---- Mixed read/write: K viewers vs M writers, 4-shard engine ----
+    //
+    // Dashboard viewers long-poll the event feed (parking on the pump,
+    // not on a worker thread) and page trials/best on wakes, while fleet
+    // writers keep asking/telling. The write p99 is measured with and
+    // without the viewer fleet; the ratio is the read-path's cost.
+    let viewers = args.get_u64("viewers", 1000) as usize;
+    let writers = args.get_u64("writers", 8) as usize;
+    let iters = 60usize;
+
+    let server = HopaasServer::start(
+        "127.0.0.1:0",
+        HopaasConfig {
+            auth_required: false,
+            engine: EngineConfig { n_shards: 4, ..Default::default() },
+            events_poll_timeout: Duration::from_secs(2),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let addr = server.addr();
+    let sid = seed(addr, "x", 500);
+
+    println!("\nmixed read/write: {viewers} viewers + {writers} writers (4 shards)\n");
+    println!(
+        "{:<14} {:>5} {:>10} {:>10} {:>10} {:>12}",
+        "api", "conc", "p50", "p95", "p99", "req/s"
+    );
+    println!("{}", "-".repeat(66));
+
+    let ask_op = |c: &mut Client, _: &mut Vec<u64>| {
+        let r = c.post_json("/api/ask/x", &ask_body()).unwrap();
+        assert_eq!(r.status, 200);
+    };
+
+    // Baseline: writers alone.
+    let (ask_base, w) = run(addr, writers, iters, ask_op);
+    rows.push(row("mixed:ask(0v)", writers, &ask_base, w));
+    let ids = Arc::new(Mutex::new(pre_ask(addr, "x", writers * iters)));
+    let (tell_base, w) = run(addr, writers, iters, {
+        let ids = ids.clone();
+        move |c, _| {
+            let id = ids.lock().unwrap().pop().unwrap();
+            let mut tell = Value::obj();
+            tell.set("trial_id", id).set("value", 2.0);
+            assert_eq!(c.post_json("/api/tell/x", &Value::Obj(tell)).unwrap().status, 200);
+        }
+    });
+    rows.push(row("mixed:tell(0v)", writers, &tell_base, w));
+
+    // Spin up the viewer fleet: each long-polls the bench study's feed
+    // and, every few wakes, reads one trial page plus the incumbent.
+    let stop = Arc::new(AtomicBool::new(false));
+    let pages = Arc::new(AtomicU64::new(0));
+    let viewer_handles: Vec<_> = (0..viewers)
+        .map(|i| {
+            let stop = stop.clone();
+            let pages = pages.clone();
+            std::thread::spawn(move || {
+                // Stagger connects so the accept queue never overflows.
+                std::thread::sleep(Duration::from_millis((i % 256) as u64));
+                let Ok(mut c) = Client::connect(addr) else { return };
+                c.set_timeout(Duration::from_secs(10));
+                let mut watermark = 0u64;
+                let mut wakes = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    let Ok(r) =
+                        c.get(&format!("/api/studies/{sid}/events?since={watermark}&timeout=0.5"))
+                    else {
+                        return;
+                    };
+                    let Ok(v) = r.json_body() else { return };
+                    if let Some(wm) = v.get("watermark").as_u64() {
+                        watermark = wm;
+                    }
+                    pages.fetch_add(1, Ordering::Relaxed);
+                    wakes += 1;
+                    if wakes % 4 == 0 {
+                        if c.get(&format!("/api/studies/{sid}/trials?limit=100")).is_err() {
+                            return;
+                        }
+                        if c.get(&format!("/api/studies/{sid}/best")).is_err() {
+                            return;
+                        }
+                        pages.fetch_add(2, Ordering::Relaxed);
+                    }
+                }
+            })
+        })
+        .collect();
+    // Let the fleet connect and park before measuring.
+    std::thread::sleep(Duration::from_millis(1000));
+
+    let (ask_mixed, w) = run(addr, writers, iters, ask_op);
+    rows.push(row(&format!("mixed:ask({viewers}v)"), writers, &ask_mixed, w));
+    let ids = Arc::new(Mutex::new(pre_ask(addr, "x", writers * iters)));
+    let (tell_mixed, w) = run(addr, writers, iters, {
+        let ids = ids.clone();
+        move |c, _| {
+            let id = ids.lock().unwrap().pop().unwrap();
+            let mut tell = Value::obj();
+            tell.set("trial_id", id).set("value", 2.0);
+            assert_eq!(c.post_json("/api/tell/x", &Value::Obj(tell)).unwrap().status, 200);
+        }
+    });
+    rows.push(row(&format!("mixed:tell({viewers}v)"), writers, &tell_mixed, w));
+
+    stop.store(true, Ordering::Relaxed);
+    for h in viewer_handles {
+        let _ = h.join();
+    }
+    let viewer_pages = pages.load(Ordering::Relaxed);
+    let ask_ratio = ask_mixed.quantile(0.99) / ask_base.quantile(0.99).max(1e-9);
+    let tell_ratio = tell_mixed.quantile(0.99) / tell_base.quantile(0.99).max(1e-9);
+    println!(
+        "\nviewer pages served: {viewer_pages}; p99 regression with viewers: \
+         ask {ask_ratio:.2}x, tell {tell_ratio:.2}x"
+    );
+    server.stop();
+
+    let mut mixed = Value::obj();
+    mixed
+        .set("viewers", viewers)
+        .set("writers", writers)
+        .set("shards", 4)
+        .set("viewer_pages", viewer_pages)
+        .set("ask_p99_base_s", ask_base.quantile(0.99))
+        .set("ask_p99_mixed_s", ask_mixed.quantile(0.99))
+        .set("ask_p99_ratio", ask_ratio)
+        .set("tell_p99_base_s", tell_base.quantile(0.99))
+        .set("tell_p99_mixed_s", tell_mixed.quantile(0.99))
+        .set("tell_p99_ratio", tell_ratio);
+
+    let mut out = Value::obj();
+    out.set("bench", "api").set("rows", Value::Arr(rows)).set("mixed", Value::Obj(mixed));
+    let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_api.json");
+    std::fs::write(&json_path, Value::Obj(out).to_pretty()).unwrap();
+    println!("wrote {}", json_path.display());
 }

@@ -121,6 +121,7 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
     let mut site_idle_retention = 3600.0f64;
     let mut backlog = 1024u64;
     let mut sampler_cache = true;
+    let mut events_poll_timeout = 25.0f64;
 
     // Layer 1: config file.
     if let Some(path) = args.get("config") {
@@ -214,6 +215,9 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
         if let Value::Bool(b) = v.get("sampler_cache") {
             sampler_cache = *b;
         }
+        if let Some(x) = v.get("events_poll_timeout").as_f64() {
+            events_poll_timeout = x;
+        }
         // File keys mirror the flag names: accept the http_-prefixed
         // spellings too ("workers"/"backlog" stay as legacy keys).
         if let Some(x) = v.get("http_workers").as_u64() {
@@ -288,6 +292,9 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
             other => return Err(format!("--sampler-cache: expected on|off, got '{other}'")),
         };
     }
+    // Long-poll window for the events feed; 0 would make every poll an
+    // immediate probe, so clamp to something that still parks readers.
+    events_poll_timeout = args.get_f64("events-poll-timeout", events_poll_timeout).max(0.001);
 
     let config = HopaasConfig {
         engine: EngineConfig {
@@ -323,6 +330,7 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
         auth_required: auth,
         secret: secret.into_bytes(),
         data_dir: data_dir.map(Into::into),
+        events_poll_timeout: Duration::from_secs_f64(events_poll_timeout),
     };
     Ok((addr, config))
 }
@@ -586,6 +594,27 @@ mod tests {
         let a = args(&format!("serve --config {} --sampler-cache on", p.display()));
         let (_, cfg) = server_config(&a).unwrap();
         assert!(cfg.engine.sampler_cache);
+    }
+
+    #[test]
+    fn events_poll_timeout_flag_and_file_key() {
+        let a = args("serve");
+        let (_, cfg) = server_config(&a).unwrap();
+        assert_eq!(cfg.events_poll_timeout, Duration::from_secs(25));
+        let a = args("serve --events-poll-timeout 2.5");
+        let (_, cfg) = server_config(&a).unwrap();
+        assert_eq!(cfg.events_poll_timeout, Duration::from_secs_f64(2.5));
+        let d = TempDir::new("config-events");
+        let p = d.path().join("hopaas.json");
+        std::fs::write(&p, r#"{"events_poll_timeout": 1.5}"#).unwrap();
+        let a = args(&format!("serve --config {}", p.display()));
+        let (_, cfg) = server_config(&a).unwrap();
+        assert_eq!(cfg.events_poll_timeout, Duration::from_secs_f64(1.5));
+        // Zero clamps to a sane floor instead of turning every poll
+        // into an immediate probe.
+        let a = args("serve --events-poll-timeout 0");
+        let (_, cfg) = server_config(&a).unwrap();
+        assert!(cfg.events_poll_timeout > Duration::ZERO);
     }
 
     #[test]

@@ -44,6 +44,7 @@ use super::samplers::{is_known_sampler, make_sampler, FitState, Obs, Sampler};
 use super::space::{assignment_to_json, Assignment};
 use super::study::{parse_ask_body, Study, StudyDef};
 use super::trial::{Trial, TrialState};
+use super::views::{EventKind, ViewRegistry};
 use super::{metrics::Metrics, pruners::make_pruner};
 use crate::fleet::{Fleet, FleetConfig};
 use crate::json::Value;
@@ -293,6 +294,11 @@ pub struct Engine {
     config: EngineConfig,
     start: Instant,
     pub metrics: Arc<Metrics>,
+    /// Materialized read views + the trial feed, published by the
+    /// mutation paths under their shard lock (see `views.rs` for the
+    /// epoch-stamping rule) and read by the HTTP layer without ever
+    /// touching a shard lock.
+    views: Arc<ViewRegistry>,
     /// Total asks served (for quick health output).
     asks: AtomicU64,
 }
@@ -318,6 +324,7 @@ impl Engine {
                 site_affinity: config.site_affinity,
             },
         };
+        let metrics = Arc::new(Metrics::with_shards(n));
         Engine {
             shards: (0..n).map(|_| Shard::new()).collect(),
             directory: RwLock::new(Directory::default()),
@@ -337,9 +344,16 @@ impl Engine {
             fleet_dirty: AtomicU64::new(0),
             config,
             start: Instant::now(),
-            metrics: Arc::new(Metrics::with_shards(n)),
+            views: Arc::new(ViewRegistry::new(metrics.clone())),
+            metrics,
             asks: AtomicU64::new(0),
         }
+    }
+
+    /// The materialized-view registry (the HTTP read path and the
+    /// parked-reader pump wire themselves to it).
+    pub fn views(&self) -> &Arc<ViewRegistry> {
+        &self.views
     }
 
     /// Durable engine: replays segments + WAL from `dir` (in parallel,
@@ -442,6 +456,10 @@ impl Engine {
             engine.apply_fleet_event(rec);
         }
         engine.finish_fleet_recovery();
+        // Recovery replays trials directly into the shards; build the
+        // read views from the recovered state in one deterministic pass
+        // (slot-ordered trials, `(finished_at, id)`-ordered feed).
+        engine.rebuild_views();
         engine.recovery = recovery;
         engine
             .wal_records
@@ -1070,6 +1088,7 @@ impl Engine {
             trials.push(trial);
         }
         self.persist_many(records)?;
+        let start_slot = state.studies[slot].trials.len();
         let mut replies = Vec::with_capacity(trials.len());
         for (i, trial) in trials.into_iter().enumerate() {
             let trial_id = trial.id;
@@ -1094,6 +1113,10 @@ impl Engine {
                 requeued: false,
             });
         }
+        // One view publication for the whole acknowledged batch, still
+        // under the shard lock: a reader never sees a torn mid-batch
+        // trial set.
+        self.views.on_trials_inserted(&state.studies[slot], start_slot);
         self.shard_metrics_update(shard_idx, state);
         Ok(replies)
     }
@@ -1255,6 +1278,7 @@ impl Engine {
             if self.fleet_active.load(Ordering::Relaxed) {
                 self.fleet.lock().finish_trial(trial_id, &state.studies[si].key);
             }
+            self.views.on_trial_updated(&state.studies[si], ti, Some(EventKind::Completed));
             self.shard_metrics_update(shard_idx, state);
             let on_front = state.studies[si]
                 .pareto()
@@ -1311,6 +1335,7 @@ impl Engine {
             if self.fleet_active.load(Ordering::Relaxed) {
                 self.fleet.lock().finish_trial(trial_id, &state.studies[si].key);
             }
+            self.views.on_trial_updated(&state.studies[si], ti, Some(EventKind::Completed));
             self.shard_metrics_update(shard_idx, state);
             let is_best = match prev_best {
                 None => true,
@@ -1391,6 +1416,11 @@ impl Engine {
                 self.metrics.prune_decisions.inc();
                 self.metrics.trials_pruned.inc();
             }
+            self.views.on_trial_updated(
+                &state.studies[si],
+                ti,
+                if prune { Some(EventKind::Pruned) } else { None },
+            );
             self.shard_metrics_update(shard_idx, state);
             prune
         };
@@ -1425,6 +1455,7 @@ impl Engine {
         if self.fleet_active.load(Ordering::Relaxed) {
             self.fleet.lock().finish_trial(trial_id, &state.studies[si].key);
         }
+        self.views.on_trial_updated(&state.studies[si], ti, Some(EventKind::Failed));
         self.shard_metrics_update(shard_idx, state);
         self.metrics.trials_failed.inc();
         Ok(())
@@ -1499,6 +1530,11 @@ impl Engine {
                         if self.fleet_active.load(Ordering::Relaxed) {
                             self.fleet.lock().finish_trial(id, &state.studies[si].key);
                         }
+                        self.views.on_trial_updated(
+                            &state.studies[si],
+                            ti,
+                            Some(EventKind::Failed),
+                        );
                         self.metrics.trials_failed.inc();
                         reaped += 1;
                     }
@@ -1755,6 +1791,7 @@ impl Engine {
             fl.sched.note_loss(&lease_site);
             fl.finish_trial(trial_id, &study_key);
             drop(fl);
+            self.views.on_trial_updated(&state.studies[si], ti, Some(EventKind::Failed));
             self.shard_metrics_update(shard_idx, state);
             self.metrics.trials_failed.inc();
             Some(false)
@@ -2232,6 +2269,9 @@ impl Engine {
                 if let Some(sm) = self.metrics.shards.get(shard_idx) {
                     sm.studies.set(state.studies.len() as f64);
                 }
+                // Publish the (empty) view under the same shard lock the
+                // creation applied under.
+                self.views.on_study_created(&state.studies[slot]);
                 Ok(slot)
             }
         }
@@ -2329,6 +2369,30 @@ impl Engine {
                 .map(|(tenant, n)| (tenant, n as f64))
                 .collect();
             *self.metrics.tenant_leases.lock().unwrap() = tenants;
+        }
+        // Read-path staleness: worst (runtime epoch − published view
+        // epoch) across studies. 0 under synchronous publication; >0
+        // would flag a mutation path missing its view hook.
+        let mut worst_lag = 0u64;
+        for shard in &self.shards {
+            let guard = shard.state.lock().unwrap();
+            for study in &guard.studies {
+                let published = self.views.view_epoch(study.id).unwrap_or(0);
+                worst_lag = worst_lag.max(study.runtime.epoch.saturating_sub(published));
+            }
+        }
+        self.metrics.view_staleness_epochs.set(worst_lag as f64);
+    }
+
+    /// Rebuild every study's materialized view and event log from the
+    /// in-memory state (post-recovery; also the repair path if a view
+    /// were ever found stale).
+    fn rebuild_views(&self) {
+        for shard in &self.shards {
+            let guard = shard.state.lock().unwrap();
+            for study in &guard.studies {
+                self.views.rebuild_from(study);
+            }
         }
     }
 

@@ -223,9 +223,18 @@ pub struct Metrics {
     /// Per-tenant active lease counts (`hopaas_tenant_leases`), same
     /// scrape-time snapshot discipline as `site_leases`.
     pub tenant_leases: Mutex<Vec<(String, f64)>>,
+    /// Read-path gauges: worst view lag across studies (tell-epochs
+    /// between a study's runtime epoch and its published view — 0 under
+    /// synchronous publication; >0 would flag a missed hook) and the
+    /// number of long-poll readers currently parked on `/events`.
+    pub view_staleness_epochs: Gauge,
+    pub events_waiters: Gauge,
     pub ask_latency: Histogram,
     pub tell_latency: Histogram,
     pub should_prune_latency: Histogram,
+    /// Wall time of materialized-view publications (the writer-side cost
+    /// of keeping reader snapshots fresh).
+    pub view_refresh_seconds: Histogram,
     /// Wall time of individual segment cuts (write → fsync → rename),
     /// wherever they run — the compaction pool's unit of work.
     pub compact_segment_seconds: Histogram,
@@ -286,9 +295,12 @@ impl Metrics {
             fleet_requeue_depth: Gauge::default(),
             site_leases: Mutex::new(Vec::new()),
             tenant_leases: Mutex::new(Vec::new()),
+            view_staleness_epochs: Gauge::default(),
+            events_waiters: Gauge::default(),
             ask_latency: Histogram::new(default_latency_bounds()),
             tell_latency: Histogram::new(default_latency_bounds()),
             should_prune_latency: Histogram::new(default_latency_bounds()),
+            view_refresh_seconds: Histogram::new(default_latency_bounds()),
             compact_segment_seconds: Histogram::new(default_latency_bounds()),
             sampler_fit_seconds: Histogram::new(default_latency_bounds()),
             ask_batch_size: Histogram::new(ask_batch_bounds()),
@@ -370,6 +382,8 @@ impl Metrics {
             ("hopaas_fleet_workers_alive", &self.fleet_workers_alive),
             ("hopaas_fleet_leases", &self.fleet_leases),
             ("hopaas_fleet_requeue_depth", &self.fleet_requeue_depth),
+            ("hopaas_view_staleness_epochs", &self.view_staleness_epochs),
+            ("hopaas_events_waiters", &self.events_waiters),
         ] {
             out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", g.get()));
         }
@@ -431,6 +445,7 @@ impl Metrics {
             ("hopaas_should_prune_latency_seconds", &self.should_prune_latency),
             ("hopaas_compact_segment_seconds", &self.compact_segment_seconds),
             ("hopaas_sampler_fit_seconds", &self.sampler_fit_seconds),
+            ("hopaas_view_refresh_seconds", &self.view_refresh_seconds),
             ("hopaas_ask_batch_size", &self.ask_batch_size),
         ] {
             out.push_str(&format!("# TYPE {name} histogram\n"));

@@ -27,7 +27,10 @@
 //! * [`service`] — HTTP handlers (Table 1 APIs + web/data APIs + the
 //!   embedded dashboard);
 //! * [`metrics`] — counters/histograms and the Prometheus endpoint,
-//!   including per-shard and commit-batch series.
+//!   including per-shard and commit-batch series;
+//! * [`views`] — epoch-stamped materialized read views (paginated
+//!   dashboard pages, per-study event feeds) published by writers so
+//!   readers never take shard locks.
 
 pub mod auth;
 pub mod engine;
@@ -40,6 +43,7 @@ pub mod service;
 pub mod space;
 pub mod study;
 pub mod trial;
+pub mod views;
 
 pub use engine::{Engine, EngineConfig};
 pub use service::HopaasServer;

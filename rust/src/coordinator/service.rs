@@ -17,6 +17,8 @@
 //! | studies        | GET    | `/api/studies`              |
 //! | study          | GET    | `/api/studies/{id}`         |
 //! | trials         | GET    | `/api/studies/{id}/trials`  |
+//! | best trial     | GET    | `/api/studies/{id}/best`    |
+//! | event feed     | GET    | `/api/studies/{id}/events`  |
 //! | series         | GET    | `/api/studies/{id}/series`  |
 //! | pareto         | GET    | `/api/studies/{id}/pareto`  |
 //! | engine stats   | GET    | `/api/stats`                |
@@ -30,10 +32,12 @@
 
 use super::auth::{Claims, TokenService};
 use super::engine::{ApiError, AskReply, Engine, EngineConfig};
+use super::trial::TrialState;
+use super::views::{self, Cursor, ViewRegistry};
 use crate::http::{PathParams, Request, Response, Router, Server, ServerConfig, ServerHandle};
 use crate::json::Value;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Server assembly options.
 pub struct HopaasConfig {
@@ -45,6 +49,10 @@ pub struct HopaasConfig {
     pub secret: Vec<u8>,
     /// Storage directory; `None` = in-memory.
     pub data_dir: Option<std::path::PathBuf>,
+    /// Upper bound on how long a `GET .../events` long-poll may park
+    /// before answering with an empty page (clients may ask for less
+    /// via `?timeout=`, never more).
+    pub events_poll_timeout: Duration,
 }
 
 impl Default for HopaasConfig {
@@ -55,6 +63,7 @@ impl Default for HopaasConfig {
             auth_required: true,
             secret: b"hopaas-dev-secret".to_vec(),
             data_dir: None,
+            events_poll_timeout: Duration::from_secs(25),
         }
     }
 }
@@ -79,8 +88,16 @@ impl HopaasServer {
         });
         let tokens = Arc::new(TokenService::new(&config.secret));
         let bootstrap_token = tokens.issue("bootstrap", engine.now(), 365.0 * 86400.0);
-        let router = build_router(engine.clone(), tokens.clone(), config.auth_required);
-        let server = Server::bind(addr, router, config.http.clone())?;
+        let router = build_router_opts(
+            engine.clone(),
+            tokens.clone(),
+            config.auth_required,
+            config.events_poll_timeout,
+        );
+        let mut server = Server::bind(addr, router, config.http.clone())?;
+        // The view registry's feed signal drives the parked-reader pump:
+        // every event append re-polls all parked long-poll connections.
+        server.set_waker(engine.views().signal());
         let handle = server.start();
         Ok(HopaasServer { engine, tokens, handle, bootstrap_token })
     }
@@ -126,11 +143,54 @@ fn ask_reply_json(reply: AskReply) -> Value {
     Value::Obj(o)
 }
 
-/// Assemble the full router. Exposed for in-process benches (no TCP).
+/// Parse an optional `limit` query parameter (default 1000). Zero and
+/// non-numeric values are the caller's 422.
+fn parse_limit(raw: Option<&str>) -> Result<usize, Response> {
+    match raw {
+        None => Ok(1000),
+        Some(s) => match s.parse::<usize>() {
+            Ok(n) if n >= 1 => Ok(n),
+            _ => Err(Response::error(422, "'limit' must be a positive integer")),
+        },
+    }
+}
+
+/// RAII accounting for parked events readers: increments the waiter
+/// gauge when the reader parks, decrements when the deferred poll is
+/// dropped — whether it answered, timed out, or the connection died.
+struct WaiterGuard {
+    views: Arc<ViewRegistry>,
+}
+
+impl WaiterGuard {
+    fn new(views: Arc<ViewRegistry>) -> WaiterGuard {
+        views.waiter_delta(1);
+        WaiterGuard { views }
+    }
+}
+
+impl Drop for WaiterGuard {
+    fn drop(&mut self) {
+        self.views.waiter_delta(-1);
+    }
+}
+
+/// Assemble the full router with default read-path options. Exposed for
+/// in-process benches (no TCP).
 pub fn build_router(
     engine: Arc<Engine>,
     tokens: Arc<TokenService>,
     auth_required: bool,
+) -> Router {
+    build_router_opts(engine, tokens, auth_required, Duration::from_secs(25))
+}
+
+/// Assemble the full router.
+pub fn build_router_opts(
+    engine: Arc<Engine>,
+    tokens: Arc<TokenService>,
+    auth_required: bool,
+    events_poll_timeout: Duration,
 ) -> Router {
     let mut router = Router::new();
 
@@ -475,9 +535,36 @@ pub fn build_router(
     }
 
     // --- web data APIs (dashboard feeds, paper §3) -------------------------
+    //
+    // The list/detail GETs come in two flavors. Paramless calls keep the
+    // legacy bare-array shapes (rendered from engine state, one shard
+    // lock at a time). Calls carrying `limit`/`cursor`/`state` switch to
+    // the materialized-view read path: cursor-paginated envelopes served
+    // from epoch-stamped snapshots, never touching a shard lock.
     {
         let engine = engine.clone();
-        router.get("/api/studies", move |_, _| Response::json(&engine.studies_json()));
+        router.get("/api/studies", move |req, _| {
+            let limit = req.query_param("limit");
+            let cursor = req.query_param("cursor");
+            if limit.is_none() && cursor.is_none() {
+                return Response::json(&engine.studies_json());
+            }
+            let limit = match parse_limit(limit.as_deref()) {
+                Ok(n) => n,
+                Err(r) => return r,
+            };
+            let after_id = match cursor.as_deref() {
+                None => None,
+                Some(s) => match s.parse::<u64>() {
+                    Ok(id) => Some(id),
+                    Err(_) => {
+                        return Response::error(422, &format!("malformed cursor '{s}'"))
+                    }
+                },
+            };
+            let snapshots = engine.views().study_views();
+            Response::json_raw(views::render_studies_page(&snapshots, after_id, limit))
+        });
     }
     {
         let engine = engine.clone();
@@ -490,11 +577,117 @@ pub fn build_router(
     }
     {
         let engine = engine.clone();
-        router.get("/api/studies/{id}/trials", move |_, params| {
-            match params.get("id").and_then(|s| s.parse().ok()).and_then(|id| engine.trials_json(id)) {
-                Some(v) => Response::json(&v),
+        router.get("/api/studies/{id}/trials", move |req, params| {
+            let Some(id) = params.get("id").and_then(|s| s.parse::<u64>().ok()) else {
+                return Response::error(404, "unknown study");
+            };
+            let limit = req.query_param("limit");
+            let cursor = req.query_param("cursor");
+            let state = req.query_param("state");
+            if limit.is_none() && cursor.is_none() && state.is_none() {
+                return match engine.trials_json(id) {
+                    Some(v) => Response::json(&v),
+                    None => Response::error(404, "unknown study"),
+                };
+            }
+            let Some(view) = engine.views().study_view(id) else {
+                return Response::error(404, "unknown study");
+            };
+            let limit = match parse_limit(limit.as_deref()) {
+                Ok(n) => n,
+                Err(r) => return r,
+            };
+            let cursor = match cursor.as_deref() {
+                None => Cursor { epoch: view.epoch, index: 0 },
+                Some(s) => match Cursor::decode(s) {
+                    Ok(c) => c,
+                    Err(m) => return Response::error(422, &m),
+                },
+            };
+            let state = match state.as_deref() {
+                None => None,
+                Some("running") => Some(TrialState::Running),
+                Some("completed") => Some(TrialState::Completed),
+                Some("pruned") => Some(TrialState::Pruned),
+                Some("failed") => Some(TrialState::Failed),
+                Some(s) => return Response::error(422, &format!("unknown state '{s}'")),
+            };
+            Response::json_raw(views::render_trials_page(&view, cursor, limit, state))
+        });
+    }
+    {
+        let engine = engine.clone();
+        router.get("/api/studies/{id}/best", move |_, params| {
+            match params
+                .get("id")
+                .and_then(|s| s.parse().ok())
+                .and_then(|id| engine.views().study_view(id))
+            {
+                Some(view) => Response::json_raw(views::render_best_page(&view)),
                 None => Response::error(404, "unknown study"),
             }
+        });
+    }
+    {
+        // Live trial feed: `?since=N` replays events with seq > N, then
+        // long-polls. When the watermark is already past `since` the
+        // reply is immediate; otherwise the connection parks on the
+        // server's reader pump (no worker thread held) until the feed
+        // signal fires or the poll window closes with an empty page.
+        let engine = engine.clone();
+        router.get("/api/studies/{id}/events", move |req, params| {
+            let Some(id) = params.get("id").and_then(|s| s.parse::<u64>().ok()) else {
+                return Response::error(404, "unknown study");
+            };
+            let since = match req.query_param("since").as_deref() {
+                None => 0u64,
+                Some(s) => match s.parse() {
+                    Ok(n) => n,
+                    Err(_) => {
+                        return Response::error(
+                            422,
+                            "'since' must be a non-negative integer",
+                        )
+                    }
+                },
+            };
+            let limit = match parse_limit(req.query_param("limit").as_deref()) {
+                Ok(n) => n,
+                Err(r) => return r,
+            };
+            let timeout = match req.query_param("timeout").as_deref() {
+                None => events_poll_timeout,
+                Some(s) => match s.parse::<f64>() {
+                    Ok(t) if t.is_finite() && t >= 0.0 => {
+                        Duration::from_secs_f64(t.min(events_poll_timeout.as_secs_f64()))
+                    }
+                    _ => {
+                        return Response::error(
+                            422,
+                            "'timeout' must be a non-negative number",
+                        )
+                    }
+                },
+            };
+            let Some(page) = engine.views().events_after(id, since, limit) else {
+                return Response::error(404, "unknown study");
+            };
+            if page.watermark > since || timeout.is_zero() {
+                return Response::json_raw(views::render_events_page(id, &page));
+            }
+            let registry = engine.views().clone();
+            let guard = WaiterGuard::new(registry.clone());
+            let deadline = Instant::now() + timeout;
+            Response::deferred(deadline, move |due| {
+                let _parked = &guard;
+                match registry.events_after(id, since, limit) {
+                    Some(p) if p.watermark > since || due => {
+                        Some(Response::json_raw(views::render_events_page(id, &p)))
+                    }
+                    None => Some(Response::error(404, "unknown study")),
+                    _ => None,
+                }
+            })
         });
     }
     {

@@ -1,0 +1,933 @@
+//! Materialized read views and the live trial feed.
+//!
+//! The read path the dashboard hits must not contend on the shard locks
+//! the ask/tell hot path needs. This module keeps, per study, an
+//! **epoch-stamped materialized view**: a pre-rendered copy of the study
+//! summary and of every trial's summary fragment, swapped atomically
+//! behind an `RwLock<Arc<..>>` so readers only ever clone an `Arc` —
+//! no shard lock, no JSON tree construction, no per-request allocation
+//! beyond the final page string.
+//!
+//! **Epoch-stamping rule.** A view is published *under the shard lock,
+//! immediately after the in-memory apply of an acknowledged mutation*
+//! (the same critical section that bumps the tell-epoch via
+//! `StudyRuntime::note_scored`). The published view therefore contains
+//! exactly the trials of some acknowledged prefix of the write stream —
+//! never a torn mid-batch state (batched inserts publish once, after the
+//! whole batch applied). The stamp is the study's tell-epoch at publish
+//! time; under synchronous publication the staleness bound is 0 epochs,
+//! and `hopaas_view_staleness_epochs` exports the observed maximum so a
+//! future asynchronous refresher stays honest.
+//!
+//! **Trial feed.** Every terminal transition (tell / prune / fail)
+//! appends a [`StudyEvent`] to a per-study append-only log; the log
+//! length is the study's *watermark*. `GET /events?since=W` returns all
+//! events with `seq > W`, or parks the reader (see the parked-reader
+//! registry in `http::server`) on the engine-global [`Notify`] until the
+//! watermark advances or the poll timeout expires.
+//!
+//! Views rebuild deterministically through recovery replay: the rebuild
+//! walks recovered trials in slot order and reconstructs the event log
+//! from terminal trials ordered by `(finished_at, trial_id)`.
+
+use super::metrics::Metrics;
+use super::space::Direction;
+use super::study::Study;
+use super::trial::{Trial, TrialState};
+use crate::http::Notify;
+use crate::json::write::{write_json_num, write_json_str};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Terminal transition kinds carried by the trial feed.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    Completed,
+    Pruned,
+    Failed,
+}
+
+impl EventKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            EventKind::Completed => "completed",
+            EventKind::Pruned => "pruned",
+            EventKind::Failed => "failed",
+        }
+    }
+}
+
+/// One trial-feed entry. `seq` is 1-based and dense per study; the
+/// study's watermark is the seq of its latest event.
+pub struct StudyEvent {
+    pub seq: u64,
+    pub trial_id: u64,
+    pub number: u64,
+    pub kind: EventKind,
+    pub value: Option<f64>,
+    pub at: f64,
+    /// Pre-rendered JSON fragment (an object, no trailing comma).
+    pub json: Arc<str>,
+}
+
+impl StudyEvent {
+    fn render(seq: u64, trial: &Trial, kind: EventKind) -> StudyEvent {
+        let value = match kind {
+            EventKind::Completed => trial.value.or_else(|| {
+                // Multi-objective completion: no scalar value; the feed
+                // carries the first objective as a progress hint.
+                trial.values.as_ref().and_then(|v| v.first().copied())
+            }),
+            EventKind::Pruned => trial.last_intermediate().map(|(_, v)| v),
+            EventKind::Failed => None,
+        };
+        let at = trial.finished_at.unwrap_or(trial.started_at);
+        let mut s = String::with_capacity(96);
+        s.push_str("{\"seq\":");
+        write_json_num(seq as f64, &mut s);
+        s.push_str(",\"trial_id\":");
+        write_json_num(trial.id as f64, &mut s);
+        s.push_str(",\"number\":");
+        write_json_num(trial.number as f64, &mut s);
+        s.push_str(",\"kind\":");
+        write_json_str(kind.as_str(), &mut s);
+        s.push_str(",\"value\":");
+        match value {
+            Some(v) => write_json_num(v, &mut s),
+            None => s.push_str("null"),
+        }
+        s.push_str(",\"at\":");
+        write_json_num(at, &mut s);
+        s.push('}');
+        StudyEvent { seq, trial_id: trial.id, number: trial.number, kind, value, at, json: s.into() }
+    }
+}
+
+/// Immutable per-trial view entry: the fields pagination filters on,
+/// plus the pre-rendered summary fragment pages concatenate.
+pub struct TrialLite {
+    pub id: u64,
+    pub number: u64,
+    pub state: TrialState,
+    pub value: Option<f64>,
+    /// Pre-rendered JSON summary (id/number/state/params/value/values/
+    /// started_at/finished_at/node/n_steps/last_step/last_value).
+    pub json: Arc<str>,
+}
+
+impl TrialLite {
+    fn render(t: &Trial) -> Arc<TrialLite> {
+        let mut s = String::with_capacity(192);
+        s.push_str("{\"id\":");
+        write_json_num(t.id as f64, &mut s);
+        s.push_str(",\"number\":");
+        write_json_num(t.number as f64, &mut s);
+        s.push_str(",\"state\":");
+        write_json_str(t.state.as_str(), &mut s);
+        s.push_str(",\"params\":{");
+        for (i, (k, v)) in t.params.iter().enumerate() {
+            if i > 0 {
+                s.push(',');
+            }
+            write_json_str(k, &mut s);
+            s.push(':');
+            crate::json::write::write(v, &mut s);
+        }
+        s.push_str("},\"value\":");
+        match t.value {
+            Some(v) => write_json_num(v, &mut s),
+            None => s.push_str("null"),
+        }
+        s.push_str(",\"values\":");
+        match &t.values {
+            Some(vs) => {
+                s.push('[');
+                for (i, v) in vs.iter().enumerate() {
+                    if i > 0 {
+                        s.push(',');
+                    }
+                    write_json_num(*v, &mut s);
+                }
+                s.push(']');
+            }
+            None => s.push_str("null"),
+        }
+        s.push_str(",\"started_at\":");
+        write_json_num(t.started_at, &mut s);
+        s.push_str(",\"finished_at\":");
+        match t.finished_at {
+            Some(v) => write_json_num(v, &mut s),
+            None => s.push_str("null"),
+        }
+        s.push_str(",\"node\":");
+        match &t.node {
+            Some(n) => write_json_str(n, &mut s),
+            None => s.push_str("null"),
+        }
+        s.push_str(",\"n_steps\":");
+        write_json_num(t.intermediate.len() as f64, &mut s);
+        match t.last_intermediate() {
+            Some((step, v)) => {
+                s.push_str(",\"last_step\":");
+                write_json_num(step as f64, &mut s);
+                s.push_str(",\"last_value\":");
+                write_json_num(v, &mut s);
+            }
+            None => s.push_str(",\"last_step\":null,\"last_value\":null"),
+        }
+        s.push('}');
+        Arc::new(TrialLite { id: t.id, number: t.number, state: t.state, value: t.value, json: s.into() })
+    }
+}
+
+/// An immutable, epoch-stamped snapshot of one study. Readers clone the
+/// `Arc` and serve any number of pages from it without further
+/// coordination; the trial vector is append-only across snapshots
+/// (slot `i` always names the same trial), which is what makes cursors
+/// stable across epochs and compactions.
+pub struct StudyView {
+    pub study_id: u64,
+    /// Tell-epoch at publish time.
+    pub epoch: u64,
+    /// Pre-rendered study summary object.
+    pub summary: Arc<str>,
+    /// `(value, trial_id)` of the incumbent (single-objective only).
+    pub best: Option<(f64, u64)>,
+    pub trials: Arc<Vec<Arc<TrialLite>>>,
+}
+
+/// Writer-side incremental state: counts and best are maintained by
+/// delta on each transition, so publishing is O(changed trials), not
+/// O(study size). The trial vector is shared with published snapshots
+/// via `Arc::make_mut` (copy-on-write only while a reader still holds
+/// the previous snapshot).
+struct ViewBuilder {
+    /// `"id":...,"key":...,...` — the immutable definition fields,
+    /// rendered once at study creation (no surrounding braces).
+    static_fields: String,
+    direction: Direction,
+    is_mo: bool,
+    created_at: f64,
+    n_running: usize,
+    n_completed: usize,
+    n_pruned: usize,
+    n_failed: usize,
+    best: Option<(f64, u64)>,
+    trials: Arc<Vec<Arc<TrialLite>>>,
+}
+
+impl ViewBuilder {
+    fn new(study: &Study) -> ViewBuilder {
+        let mut s = String::with_capacity(256);
+        s.push_str("\"id\":");
+        write_json_num(study.id as f64, &mut s);
+        s.push_str(",\"key\":");
+        write_json_str(&study.key, &mut s);
+        s.push_str(",\"name\":");
+        write_json_str(&study.def.name, &mut s);
+        s.push_str(",\"direction\":");
+        write_json_str(study.def.direction.as_str(), &mut s);
+        s.push_str(",\"sampler\":");
+        crate::json::write::write(&study.def.sampler.to_json(), &mut s);
+        s.push_str(",\"pruner\":");
+        match &study.def.pruner {
+            Some(p) => crate::json::write::write(&p.to_json(), &mut s),
+            None => s.push_str("null"),
+        }
+        s.push_str(",\"properties\":");
+        crate::json::write::write(&study.def.space.to_json(), &mut s);
+        if let Some(ds) = &study.def.directions {
+            s.push_str(",\"directions\":[");
+            for (i, d) in ds.iter().enumerate() {
+                if i > 0 {
+                    s.push(',');
+                }
+                write_json_str(d.as_str(), &mut s);
+            }
+            s.push(']');
+        }
+        ViewBuilder {
+            static_fields: s,
+            direction: study.def.direction,
+            is_mo: study.def.is_mo(),
+            created_at: study.created_at,
+            n_running: 0,
+            n_completed: 0,
+            n_pruned: 0,
+            n_failed: 0,
+            best: None,
+            trials: Arc::new(Vec::new()),
+        }
+    }
+
+    fn count_delta(&mut self, state: TrialState, delta: isize) {
+        let slot = match state {
+            TrialState::Running => &mut self.n_running,
+            TrialState::Completed => &mut self.n_completed,
+            TrialState::Pruned => &mut self.n_pruned,
+            TrialState::Failed => &mut self.n_failed,
+        };
+        *slot = slot.saturating_add_signed(delta);
+    }
+
+    fn note_completed(&mut self, trial: &Trial) {
+        if self.is_mo {
+            return; // Pareto ranking is served by the legacy study APIs.
+        }
+        if let Some(v) = trial.value {
+            let better = match self.best {
+                None => true,
+                Some((b, _)) => self.direction.better(v, b),
+            };
+            if better {
+                self.best = Some((v, trial.id));
+            }
+        }
+    }
+
+    fn summary(&self, epoch: u64) -> Arc<str> {
+        let mut s = String::with_capacity(self.static_fields.len() + 192);
+        s.push('{');
+        s.push_str(&self.static_fields);
+        s.push_str(",\"epoch\":");
+        write_json_num(epoch as f64, &mut s);
+        s.push_str(",\"n_trials\":");
+        write_json_num(self.trials.len() as f64, &mut s);
+        s.push_str(",\"n_running\":");
+        write_json_num(self.n_running as f64, &mut s);
+        s.push_str(",\"n_completed\":");
+        write_json_num(self.n_completed as f64, &mut s);
+        s.push_str(",\"n_pruned\":");
+        write_json_num(self.n_pruned as f64, &mut s);
+        s.push_str(",\"n_failed\":");
+        write_json_num(self.n_failed as f64, &mut s);
+        s.push_str(",\"created_at\":");
+        write_json_num(self.created_at, &mut s);
+        s.push_str(",\"best_value\":");
+        match self.best {
+            Some((v, _)) => write_json_num(v, &mut s),
+            None => s.push_str("null"),
+        }
+        s.push_str(",\"best_trial\":");
+        match self.best {
+            Some((_, id)) => write_json_num(id as f64, &mut s),
+            None => s.push_str("null"),
+        }
+        s.push('}');
+        s.into()
+    }
+}
+
+/// Per-study slot: the writer-side builder, the published snapshot, and
+/// the event log.
+struct StudySlot {
+    builder: Mutex<ViewBuilder>,
+    view: RwLock<Arc<StudyView>>,
+    events: Mutex<Vec<Arc<StudyEvent>>>,
+}
+
+/// One page of the trial feed (served by `/api/studies/{id}/events`).
+pub struct EventsPage {
+    /// The study's current watermark (seq of the latest event).
+    pub watermark: u64,
+    pub events: Vec<Arc<StudyEvent>>,
+}
+
+/// The registry of materialized views, shared between the engine (writer
+/// side, called under shard locks) and the HTTP read path.
+pub struct ViewRegistry {
+    slots: RwLock<HashMap<u64, Arc<StudySlot>>>,
+    /// Engine-global feed signal: its generation bumps on every event
+    /// append, waking the parked-reader pump.
+    signal: Arc<Notify>,
+    waiters: AtomicI64,
+    metrics: Arc<Metrics>,
+}
+
+impl ViewRegistry {
+    pub fn new(metrics: Arc<Metrics>) -> ViewRegistry {
+        ViewRegistry {
+            slots: RwLock::new(HashMap::new()),
+            signal: Arc::new(Notify::new()),
+            waiters: AtomicI64::new(0),
+            metrics,
+        }
+    }
+
+    /// The feed signal the HTTP server's parked-reader pump waits on.
+    pub fn signal(&self) -> Arc<Notify> {
+        self.signal.clone()
+    }
+
+    /// Track a parked events reader (+1) or its completion (-1).
+    pub fn waiter_delta(&self, delta: i64) {
+        let now = self.waiters.fetch_add(delta, Ordering::Relaxed) + delta;
+        self.metrics.events_waiters.set(now.max(0) as f64);
+    }
+
+    pub fn waiters(&self) -> i64 {
+        self.waiters.load(Ordering::Relaxed)
+    }
+
+    fn slot(&self, study_id: u64) -> Option<Arc<StudySlot>> {
+        self.slots.read().unwrap().get(&study_id).cloned()
+    }
+
+    // ----- writer side (engine calls, under the owning shard lock) -----
+
+    /// Register a study and publish its (empty) initial view.
+    pub fn on_study_created(&self, study: &Study) {
+        let t0 = std::time::Instant::now();
+        let builder = ViewBuilder::new(study);
+        let view = Arc::new(StudyView {
+            study_id: study.id,
+            epoch: study.runtime.epoch,
+            summary: builder.summary(study.runtime.epoch),
+            best: builder.best,
+            trials: builder.trials.clone(),
+        });
+        let slot = Arc::new(StudySlot {
+            builder: Mutex::new(builder),
+            view: RwLock::new(view),
+            events: Mutex::new(Vec::new()),
+        });
+        self.slots.write().unwrap().insert(study.id, slot);
+        self.metrics.view_refresh_seconds.observe(t0.elapsed().as_secs_f64());
+    }
+
+    /// New trials appended at `start_slot..`. Called once per acknowledged
+    /// insert batch, after the whole batch applied in memory — the view
+    /// never exposes a torn prefix of a batch.
+    pub fn on_trials_inserted(&self, study: &Study, start_slot: usize) {
+        let Some(slot) = self.slot(study.id) else { return };
+        let t0 = std::time::Instant::now();
+        {
+            let mut b = slot.builder.lock().unwrap();
+            for t in &study.trials[start_slot..] {
+                let lite = TrialLite::render(t);
+                b.count_delta(t.state, 1);
+                if t.state == TrialState::Completed {
+                    b.note_completed(t);
+                }
+                Arc::make_mut(&mut b.trials).push(lite);
+            }
+            Self::publish(&slot, &b, study);
+        }
+        self.metrics.view_refresh_seconds.observe(t0.elapsed().as_secs_f64());
+    }
+
+    /// One existing trial changed (report / tell / prune / fail /
+    /// re-assignment). Re-renders that fragment, adjusts counts and best
+    /// by delta, publishes, and (for terminal transitions) appends the
+    /// feed event and wakes parked readers.
+    pub fn on_trial_updated(&self, study: &Study, trial_slot: usize, event: Option<EventKind>) {
+        let Some(slot) = self.slot(study.id) else { return };
+        let t0 = std::time::Instant::now();
+        let trial = &study.trials[trial_slot];
+        {
+            let mut b = slot.builder.lock().unwrap();
+            if trial_slot >= b.trials.len() {
+                // A mutation for a trial the registry never saw
+                // inserted; resync the tail defensively, then re-enter
+                // so the feed event (if any) is still appended.
+                let start = b.trials.len();
+                drop(b);
+                self.on_trials_inserted(study, start);
+                if event.is_some() && trial_slot < study.trials.len() {
+                    return self.on_trial_updated(study, trial_slot, event);
+                }
+                return;
+            }
+            let old_state = b.trials[trial_slot].state;
+            if old_state != trial.state {
+                b.count_delta(old_state, -1);
+                b.count_delta(trial.state, 1);
+            }
+            if trial.state == TrialState::Completed {
+                b.note_completed(trial);
+            }
+            Arc::make_mut(&mut b.trials)[trial_slot] = TrialLite::render(trial);
+            Self::publish(&slot, &b, study);
+        }
+        if let Some(kind) = event {
+            let mut log = slot.events.lock().unwrap();
+            let seq = log.len() as u64 + 1;
+            log.push(Arc::new(StudyEvent::render(seq, trial, kind)));
+            drop(log);
+            self.signal.notify_all();
+        }
+        self.metrics.view_refresh_seconds.observe(t0.elapsed().as_secs_f64());
+    }
+
+    fn publish(slot: &StudySlot, b: &ViewBuilder, study: &Study) {
+        let view = Arc::new(StudyView {
+            study_id: study.id,
+            epoch: study.runtime.epoch,
+            summary: b.summary(study.runtime.epoch),
+            best: b.best,
+            trials: b.trials.clone(),
+        });
+        *slot.view.write().unwrap() = view;
+    }
+
+    /// Rebuild a study's view and event log from recovered state
+    /// (deterministic: trials in slot order; events from terminal trials
+    /// ordered by `(finished_at, trial_id)`).
+    pub fn rebuild_from(&self, study: &Study) {
+        self.on_study_created(study);
+        self.on_trials_inserted(study, 0);
+        let Some(slot) = self.slot(study.id) else { return };
+        let mut terminal: Vec<&Trial> =
+            study.trials.iter().filter(|t| t.state.is_terminal()).collect();
+        terminal.sort_by(|a, b| {
+            let ka = (a.finished_at.unwrap_or(a.started_at), a.id);
+            let kb = (b.finished_at.unwrap_or(b.started_at), b.id);
+            ka.partial_cmp(&kb).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let mut log = slot.events.lock().unwrap();
+        log.clear();
+        for t in terminal {
+            let kind = match t.state {
+                TrialState::Completed => EventKind::Completed,
+                TrialState::Pruned => EventKind::Pruned,
+                TrialState::Failed => EventKind::Failed,
+                TrialState::Running => continue,
+            };
+            let seq = log.len() as u64 + 1;
+            log.push(Arc::new(StudyEvent::render(seq, t, kind)));
+        }
+    }
+
+    // ----- reader side (no shard locks, ever) -----
+
+    /// The current snapshot of one study.
+    pub fn study_view(&self, study_id: u64) -> Option<Arc<StudyView>> {
+        self.slot(study_id).map(|s| s.view.read().unwrap().clone())
+    }
+
+    /// Current snapshots of all studies, ordered by study id.
+    pub fn study_views(&self) -> Vec<Arc<StudyView>> {
+        let slots = self.slots.read().unwrap();
+        let mut ids: Vec<u64> = slots.keys().copied().collect();
+        ids.sort_unstable();
+        ids.iter().map(|id| slots[id].view.read().unwrap().clone()).collect()
+    }
+
+    /// View epoch of one study (staleness probes).
+    pub fn view_epoch(&self, study_id: u64) -> Option<u64> {
+        self.slot(study_id).map(|s| s.view.read().unwrap().epoch)
+    }
+
+    /// The study's current event watermark, or None if unknown.
+    pub fn watermark(&self, study_id: u64) -> Option<u64> {
+        self.slot(study_id).map(|s| s.events.lock().unwrap().len() as u64)
+    }
+
+    /// Events with `seq > since` (bounded by `limit`), plus the current
+    /// watermark. None = unknown study.
+    pub fn events_after(&self, study_id: u64, since: u64, limit: usize) -> Option<EventsPage> {
+        let slot = self.slot(study_id)?;
+        let log = slot.events.lock().unwrap();
+        let watermark = log.len() as u64;
+        let start = (since as usize).min(log.len());
+        let events: Vec<Arc<StudyEvent>> =
+            log[start..].iter().take(limit.max(1)).cloned().collect();
+        Some(EventsPage { watermark, events })
+    }
+
+    /// Number of registered studies.
+    pub fn n_studies(&self) -> usize {
+        self.slots.read().unwrap().len()
+    }
+}
+
+// ----- cursors -----
+
+/// A pagination cursor: `v1.<epoch>.<index>`. The index addresses a slot
+/// in the (append-only) trial vector, so cursors stay valid across
+/// epochs and compactions; the epoch records the snapshot the cursor was
+/// issued from (diagnostics only).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Cursor {
+    pub epoch: u64,
+    pub index: usize,
+}
+
+impl Cursor {
+    pub fn encode(&self) -> String {
+        format!("v1.{}.{}", self.epoch, self.index)
+    }
+
+    /// Parse a client-supplied cursor. `Err` carries a message for the
+    /// 422 the HTTP layer answers with.
+    pub fn decode(s: &str) -> Result<Cursor, String> {
+        let rest = s.strip_prefix("v1.").ok_or_else(|| format!("malformed cursor '{s}'"))?;
+        let (epoch, index) =
+            rest.split_once('.').ok_or_else(|| format!("malformed cursor '{s}'"))?;
+        let epoch: u64 =
+            epoch.parse().map_err(|_| format!("malformed cursor '{s}'"))?;
+        let index: usize =
+            index.parse().map_err(|_| format!("malformed cursor '{s}'"))?;
+        Ok(Cursor { epoch, index })
+    }
+}
+
+// ----- page rendering (string concatenation, no Value trees) -----
+
+/// Render one page of a study's trials from a snapshot: slots
+/// `cursor.index..`, filtered by `state`, at most `limit` entries.
+/// Returns the JSON page body.
+pub fn render_trials_page(
+    view: &StudyView,
+    cursor: Cursor,
+    limit: usize,
+    state: Option<TrialState>,
+) -> String {
+    let limit = limit.clamp(1, 10_000);
+    let trials = view.trials.as_ref();
+    let mut out = String::with_capacity(128 + 160 * limit.min(trials.len()));
+    out.push_str("{\"study_id\":");
+    write_json_num(view.study_id as f64, &mut out);
+    out.push_str(",\"epoch\":");
+    write_json_num(view.epoch as f64, &mut out);
+    out.push_str(",\"total\":");
+    write_json_num(trials.len() as f64, &mut out);
+    out.push_str(",\"trials\":[");
+    let mut taken = 0usize;
+    let mut next = None;
+    let mut i = cursor.index.min(trials.len());
+    while i < trials.len() {
+        let t = &trials[i];
+        i += 1;
+        if let Some(want) = state {
+            if t.state != want {
+                continue;
+            }
+        }
+        if taken == limit {
+            // One past the page: there is more — resume at this slot.
+            next = Some(i - 1);
+            break;
+        }
+        if taken > 0 {
+            out.push(',');
+        }
+        out.push_str(&t.json);
+        taken += 1;
+    }
+    out.push(']');
+    if let Some(idx) = next {
+        out.push_str(",\"next_cursor\":");
+        write_json_str(&Cursor { epoch: view.epoch, index: idx }.encode(), &mut out);
+    }
+    out.push('}');
+    out
+}
+
+/// Render one page of the study list (ordered by id, strictly after
+/// `after_id`), at most `limit` summaries. The cursor is the last
+/// emitted study id.
+pub fn render_studies_page(views: &[Arc<StudyView>], after_id: Option<u64>, limit: usize) -> String {
+    let limit = limit.clamp(1, 10_000);
+    let eligible: Vec<&Arc<StudyView>> = views
+        .iter()
+        .filter(|v| after_id.map_or(true, |a| v.study_id > a))
+        .collect();
+    let page = &eligible[..limit.min(eligible.len())];
+    let mut out = String::with_capacity(64 + 256 * page.len());
+    out.push_str("{\"studies\":[");
+    for (i, v) in page.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&v.summary);
+    }
+    out.push_str("],\"total\":");
+    write_json_num(views.len() as f64, &mut out);
+    if eligible.len() > page.len() {
+        if let Some(last) = page.last() {
+            out.push_str(",\"next_cursor\":");
+            write_json_str(&last.study_id.to_string(), &mut out);
+        }
+    }
+    out.push('}');
+    out
+}
+
+/// Render the incumbent-best page for one study snapshot: the best value
+/// plus the full trial fragment of the incumbent (null for studies with
+/// no completed trial yet, and for multi-objective studies, whose front
+/// is served by the legacy pareto API).
+pub fn render_best_page(view: &StudyView) -> String {
+    let mut out = String::with_capacity(256);
+    out.push_str("{\"study_id\":");
+    write_json_num(view.study_id as f64, &mut out);
+    out.push_str(",\"epoch\":");
+    write_json_num(view.epoch as f64, &mut out);
+    out.push_str(",\"best_value\":");
+    match view.best {
+        Some((v, _)) => write_json_num(v, &mut out),
+        None => out.push_str("null"),
+    }
+    out.push_str(",\"best_trial\":");
+    match view.best.and_then(|(_, id)| view.trials.iter().find(|t| t.id == id)) {
+        Some(t) => out.push_str(&t.json),
+        None => out.push_str("null"),
+    }
+    out.push('}');
+    out
+}
+
+/// Render one events page.
+pub fn render_events_page(study_id: u64, page: &EventsPage) -> String {
+    let mut out = String::with_capacity(64 + 96 * page.events.len());
+    out.push_str("{\"study_id\":");
+    write_json_num(study_id as f64, &mut out);
+    out.push_str(",\"watermark\":");
+    write_json_num(page.watermark as f64, &mut out);
+    out.push_str(",\"events\":[");
+    for (i, e) in page.events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(&e.json);
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::study::{parse_ask_body, Study};
+    use crate::json::parse;
+
+    fn study() -> Study {
+        let body = parse(
+            r#"{
+            "study_name": "v",
+            "properties": {"x": {"low": 0.0, "high": 1.0}},
+            "direction": "minimize",
+            "sampler": {"name": "random"}
+        }"#,
+        )
+        .unwrap();
+        Study::new(3, parse_ask_body(&body).unwrap().0, 0.0)
+    }
+
+    fn registry() -> ViewRegistry {
+        ViewRegistry::new(Arc::new(Metrics::default()))
+    }
+
+    fn push_trial(s: &mut Study, id: u64) {
+        let n = s.reserve_number();
+        s.trials.push(crate::coordinator::trial::Trial::new(
+            id,
+            n,
+            vec![("x".into(), crate::json::Value::Num(0.5))],
+            0.0,
+            None,
+        ));
+    }
+
+    #[test]
+    fn view_tracks_counts_and_best() {
+        let reg = registry();
+        let mut s = study();
+        reg.on_study_created(&s);
+        for id in 0..3 {
+            push_trial(&mut s, id);
+        }
+        reg.on_trials_inserted(&s, 0);
+        let v = reg.study_view(3).unwrap();
+        assert_eq!(v.trials.len(), 3);
+        assert!(v.summary.contains("\"n_running\":3"), "{}", v.summary);
+
+        s.trials[1].complete(0.25, 1.0).unwrap();
+        s.note_scored(1, 8);
+        reg.on_trial_updated(&s, 1, Some(EventKind::Completed));
+        s.trials[0].prune(2.0).unwrap();
+        reg.on_trial_updated(&s, 0, Some(EventKind::Pruned));
+        let v = reg.study_view(3).unwrap();
+        assert_eq!(v.epoch, 1);
+        assert!(v.summary.contains("\"n_completed\":1"), "{}", v.summary);
+        assert!(v.summary.contains("\"n_pruned\":1"), "{}", v.summary);
+        assert!(v.summary.contains("\"best_value\":0.25"), "{}", v.summary);
+        assert!(v.summary.contains("\"best_trial\":1"), "{}", v.summary);
+        assert_eq!(v.trials[1].state, TrialState::Completed);
+
+        // Feed: two events, in transition order.
+        let page = reg.events_after(3, 0, 100).unwrap();
+        assert_eq!(page.watermark, 2);
+        assert_eq!(page.events[0].kind, EventKind::Completed);
+        assert_eq!(page.events[1].kind, EventKind::Pruned);
+        assert_eq!(page.events[0].trial_id, 1);
+        // since=watermark → empty.
+        let page = reg.events_after(3, 2, 100).unwrap();
+        assert!(page.events.is_empty());
+        assert_eq!(page.watermark, 2);
+    }
+
+    #[test]
+    fn snapshots_are_immutable_under_later_writes() {
+        let reg = registry();
+        let mut s = study();
+        reg.on_study_created(&s);
+        push_trial(&mut s, 0);
+        reg.on_trials_inserted(&s, 0);
+        let old = reg.study_view(3).unwrap();
+        assert_eq!(old.trials.len(), 1);
+        push_trial(&mut s, 1);
+        reg.on_trials_inserted(&s, 1);
+        // The held snapshot did not grow; the fresh one did.
+        assert_eq!(old.trials.len(), 1);
+        assert_eq!(reg.study_view(3).unwrap().trials.len(), 2);
+    }
+
+    #[test]
+    fn cursor_roundtrip_and_rejection() {
+        let c = Cursor { epoch: 12, index: 345 };
+        assert_eq!(Cursor::decode(&c.encode()).unwrap(), c);
+        for bad in ["", "v2.1.2", "v1.x.2", "v1.1", "v1.1.x", "garbage", "v1..", "v1.-1.0"] {
+            assert!(Cursor::decode(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn trials_pages_concatenate_to_full_set() {
+        let reg = registry();
+        let mut s = study();
+        reg.on_study_created(&s);
+        for id in 0..25 {
+            push_trial(&mut s, id);
+        }
+        reg.on_trials_inserted(&s, 0);
+        let v = reg.study_view(3).unwrap();
+        let mut seen = Vec::new();
+        let mut cursor = Cursor { epoch: v.epoch, index: 0 };
+        loop {
+            let page = render_trials_page(&v, cursor, 7, None);
+            let parsed = parse(&page).unwrap();
+            for t in parsed.get("trials").as_arr().unwrap() {
+                seen.push(t.get("id").as_u64().unwrap());
+            }
+            match parsed.get("next_cursor").as_str() {
+                Some(c) => cursor = Cursor::decode(c).unwrap(),
+                None => break,
+            }
+        }
+        assert_eq!(seen, (0..25).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn state_filter_pages() {
+        let reg = registry();
+        let mut s = study();
+        reg.on_study_created(&s);
+        for id in 0..10 {
+            push_trial(&mut s, id);
+        }
+        reg.on_trials_inserted(&s, 0);
+        for slot in [1usize, 4, 7] {
+            s.trials[slot].complete(slot as f64, 1.0).unwrap();
+            s.note_scored(slot, 8);
+            reg.on_trial_updated(&s, slot, Some(EventKind::Completed));
+        }
+        let v = reg.study_view(3).unwrap();
+        let page = render_trials_page(
+            &v,
+            Cursor { epoch: v.epoch, index: 0 },
+            2,
+            Some(TrialState::Completed),
+        );
+        let parsed = parse(&page).unwrap();
+        let ids: Vec<u64> = parsed
+            .get("trials")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| t.get("id").as_u64().unwrap())
+            .collect();
+        assert_eq!(ids, vec![1, 4]);
+        let next = Cursor::decode(parsed.get("next_cursor").as_str().unwrap()).unwrap();
+        let page2 = render_trials_page(&v, next, 2, Some(TrialState::Completed));
+        let parsed2 = parse(&page2).unwrap();
+        let ids2: Vec<u64> = parsed2
+            .get("trials")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| t.get("id").as_u64().unwrap())
+            .collect();
+        assert_eq!(ids2, vec![7]);
+        assert!(parsed2.get("next_cursor").is_null());
+    }
+
+    #[test]
+    fn studies_page_cursor_walk() {
+        let reg = registry();
+        for id in [2u64, 5, 9, 11] {
+            let mut s = study();
+            s.id = id;
+            reg.on_study_created(&s);
+        }
+        let views = reg.study_views();
+        assert_eq!(views.iter().map(|v| v.study_id).collect::<Vec<_>>(), vec![2, 5, 9, 11]);
+        let page = render_studies_page(&views, None, 3);
+        let parsed = parse(&page).unwrap();
+        assert_eq!(parsed.get("studies").as_arr().unwrap().len(), 3);
+        assert_eq!(parsed.get("next_cursor").as_str(), Some("9"));
+        let page2 = render_studies_page(&views, Some(9), 3);
+        let parsed2 = parse(&page2).unwrap();
+        assert_eq!(parsed2.get("studies").as_arr().unwrap().len(), 1);
+        assert!(parsed2.get("next_cursor").is_null());
+    }
+
+    #[test]
+    fn rebuild_reconstructs_events_deterministically() {
+        let reg = registry();
+        let mut s = study();
+        for id in 0..4 {
+            push_trial(&mut s, id);
+        }
+        s.trials[2].complete(1.0, 5.0).unwrap();
+        s.trials[0].prune(3.0).unwrap();
+        s.trials[3].fail(5.0).unwrap();
+        reg.rebuild_from(&s);
+        let page = reg.events_after(3, 0, 100).unwrap();
+        // Ordered by (finished_at, id): prune@3 → complete(id 2)@5 → fail(id 3)@5.
+        let kinds: Vec<EventKind> = page.events.iter().map(|e| e.kind).collect();
+        assert_eq!(kinds, vec![EventKind::Pruned, EventKind::Completed, EventKind::Failed]);
+        assert_eq!(page.events[1].trial_id, 2);
+        assert_eq!(page.events[2].trial_id, 3);
+        // Deterministic: a second rebuild produces the same log.
+        let reg2 = registry();
+        reg2.rebuild_from(&s);
+        let page2 = reg2.events_after(3, 0, 100).unwrap();
+        for (a, b) in page.events.iter().zip(page2.events.iter()) {
+            assert_eq!(a.json, b.json);
+        }
+    }
+
+    #[test]
+    fn trial_fragment_is_valid_json() {
+        let mut t = crate::coordinator::trial::Trial::new(
+            9,
+            2,
+            vec![("x".into(), crate::json::Value::Num(0.5))],
+            1.0,
+            Some("node-\"1\"".into()),
+        );
+        t.report(3, 0.75).unwrap();
+        let lite = TrialLite::render(&t);
+        let v = parse(&lite.json).unwrap();
+        assert_eq!(v.get("id").as_u64(), Some(9));
+        assert_eq!(v.get("state").as_str(), Some("running"));
+        assert_eq!(v.get("node").as_str(), Some("node-\"1\""));
+        assert_eq!(v.get("n_steps").as_u64(), Some(1));
+        assert_eq!(v.get("last_step").as_u64(), Some(3));
+        assert_eq!(v.get("last_value").as_f64(), Some(0.75));
+        assert_eq!(v.get("params").get("x").as_f64(), Some(0.5));
+    }
+}

@@ -168,7 +168,7 @@ fn read_response(reader: &mut BufReader<TcpStream>) -> Result<Response, ClientEr
         .unwrap_or(0);
     let mut body = vec![0u8; len];
     reader.read_exact(&mut body)?;
-    Ok(Response { status, headers, body })
+    Ok(Response { status, headers, body, deferred: None })
 }
 
 impl Response {

@@ -149,17 +149,72 @@ fn percent_decode(s: &str) -> String {
     String::from_utf8_lossy(&out).into_owned()
 }
 
+/// A long-poll deferral attached to a [`Response`]: the worker thread
+/// does not write anything — it hands the connection to the server's
+/// parked-reader pump, which re-polls until the closure yields a
+/// response or the deadline passes. This is what lets thousands of idle
+/// `GET /events` readers wait without pinning the fixed worker pool.
+pub struct Deferred {
+    /// Absolute give-up time; at the deadline `poll(true)` is called and
+    /// must produce the timeout response.
+    pub deadline: std::time::Instant,
+    /// `poll(false)` checks for readiness (None = keep waiting);
+    /// `poll(true)` is the deadline call and must return `Some`.
+    pub poll: Box<dyn FnMut(bool) -> Option<Response> + Send>,
+}
+
+impl std::fmt::Debug for Deferred {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Deferred").field("deadline", &self.deadline).finish()
+    }
+}
+
 /// An HTTP response under construction.
-#[derive(Clone, Debug)]
+#[derive(Debug)]
 pub struct Response {
     pub status: u16,
     pub headers: Headers,
     pub body: Vec<u8>,
+    /// When set, the response is not ready: park the connection on the
+    /// deferred poll instead of writing `status`/`body`.
+    pub deferred: Option<Deferred>,
+}
+
+impl Clone for Response {
+    /// Deferred polls are single-owner (they move to the pump); a clone
+    /// is always an immediate response.
+    fn clone(&self) -> Self {
+        Response {
+            status: self.status,
+            headers: self.headers.clone(),
+            body: self.body.clone(),
+            deferred: None,
+        }
+    }
 }
 
 impl Response {
     pub fn new(status: u16) -> Self {
-        Response { status, headers: Headers::new(), body: Vec::new() }
+        Response { status, headers: Headers::new(), body: Vec::new(), deferred: None }
+    }
+
+    /// 200 with a pre-rendered JSON body (materialized-view pages —
+    /// no `Value` tree is ever built).
+    pub fn json_raw(body: String) -> Self {
+        let mut r = Response::new(200);
+        r.headers.set("content-type", "application/json");
+        r.body = body.into_bytes();
+        r
+    }
+
+    /// A deferred (long-poll) response; see [`Deferred`].
+    pub fn deferred(
+        deadline: std::time::Instant,
+        poll: impl FnMut(bool) -> Option<Response> + Send + 'static,
+    ) -> Self {
+        let mut r = Response::new(200);
+        r.deferred = Some(Deferred { deadline, poll: Box::new(poll) });
+        r
     }
 
     /// 200 with a JSON body.

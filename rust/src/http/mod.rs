@@ -18,9 +18,11 @@ mod router;
 mod server;
 
 pub use client::{Client, ClientError};
-pub use message::{parse_request, read_request, Headers, Method, ParseState, Request, Response};
+pub use message::{
+    parse_request, read_request, Deferred, Headers, Method, ParseState, Request, Response,
+};
 pub use router::{PathParams, Router};
-pub use server::{Server, ServerConfig, ServerHandle};
+pub use server::{Notify, Server, ServerConfig, ServerHandle};
 
 /// Canonical reason phrases for the status codes the service emits.
 pub fn reason(status: u16) -> &'static str {

@@ -6,13 +6,73 @@
 //! (keep-alive), parsing pipelined requests incrementally and dispatching
 //! them through the shared [`Router`].
 
-use super::message::{parse_request, ParseState, MAX_HEAD_BYTES};
+use super::message::{parse_request, Deferred, ParseState, MAX_HEAD_BYTES};
 use super::{Method, Response, Router};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Mutex};
-use std::time::Duration;
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// Generation-counting wakeup primitive shared between event producers
+/// (the coordinator's view registry) and the parked-reader pump.
+///
+/// `notify_all` bumps a generation counter and wakes every waiter;
+/// `wait_changed` blocks until the generation moves past a previously
+/// observed value or a timeout elapses. Reading the generation *before*
+/// polling state and then waiting on that snapshot closes the classic
+/// lost-wakeup race: a notification landing between the poll and the
+/// wait changes the generation, so the wait returns immediately.
+pub struct Notify {
+    generation: Mutex<u64>,
+    cond: Condvar,
+}
+
+impl Notify {
+    pub fn new() -> Self {
+        Notify { generation: Mutex::new(0), cond: Condvar::new() }
+    }
+
+    /// Bump the generation and wake all waiters.
+    pub fn notify_all(&self) {
+        let mut g = self.generation.lock().unwrap();
+        *g = g.wrapping_add(1);
+        self.cond.notify_all();
+    }
+
+    /// Current generation; pass to [`Notify::wait_changed`].
+    pub fn generation(&self) -> u64 {
+        *self.generation.lock().unwrap()
+    }
+
+    /// Block until the generation differs from `seen` or `timeout`
+    /// elapses; returns the generation observed on wakeup.
+    pub fn wait_changed(&self, seen: u64, timeout: Duration) -> u64 {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.generation.lock().unwrap();
+        while *g == seen {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _) = self.cond.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+        *g
+    }
+}
+
+impl Default for Notify {
+    fn default() -> Self {
+        Notify::new()
+    }
+}
+
+impl std::fmt::Debug for Notify {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Notify").field("generation", &self.generation()).finish()
+    }
+}
 
 /// Server tuning knobs.
 #[derive(Clone, Debug)]
@@ -66,6 +126,9 @@ pub struct Server {
     config: ServerConfig,
     stats: Arc<ServerStats>,
     shutdown: Arc<AtomicBool>,
+    /// Wakeup source for parked (deferred) responses; see
+    /// [`Server::set_waker`].
+    waker: Option<Arc<Notify>>,
 }
 
 /// Handle used to address and stop a server running on its own threads.
@@ -119,11 +182,22 @@ impl Server {
             config,
             stats: Arc::new(ServerStats::default()),
             shutdown: Arc::new(AtomicBool::new(false)),
+            waker: None,
         })
     }
 
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// Install the wakeup source the parked-reader pump listens on.
+    /// Handlers returning a deferred response (long-poll) are handed to
+    /// the pump, which re-polls them whenever `waker` fires (or on their
+    /// deadline) — parked readers therefore never occupy a worker
+    /// thread. Without a waker, deferred responses still complete, but
+    /// only on the pump's heartbeat and their deadline.
+    pub fn set_waker(&mut self, waker: Arc<Notify>) {
+        self.waker = Some(waker);
     }
 
     /// Start accept + worker threads; returns immediately.
@@ -136,8 +210,27 @@ impl Server {
         // enforced backlog: `try_send` below sheds (503) instead of
         // blocking the accept loop, so a burst beyond the pool cannot
         // queue unboundedly in the kernel behind a stalled accept.
-        let (tx, rx) = mpsc::sync_channel::<TcpStream>(self.config.backlog.max(1));
+        // Each queued element carries the connection plus any bytes
+        // already read but not yet parsed, so the parked-reader pump can
+        // re-enqueue a keep-alive connection without losing pipelined
+        // request data.
+        let (tx, rx) = mpsc::sync_channel::<(TcpStream, Vec<u8>)>(self.config.backlog.max(1));
         let rx = Arc::new(Mutex::new(rx));
+
+        // Parked-reader pump: handlers that return a deferred response
+        // (long-poll) hand their connection here instead of blocking a
+        // worker. One pump thread owns every parked connection and
+        // re-polls them on waker notifications and deadlines.
+        let (pump_tx, pump_rx) = mpsc::channel::<ParkedConn>();
+        {
+            let waker = self.waker.clone().unwrap_or_default();
+            let worker_tx = tx.clone();
+            let stats = self.stats.clone();
+            let shutdown = self.shutdown.clone();
+            std::thread::spawn(move || {
+                run_parked_pump(pump_rx, worker_tx, waker, stats, shutdown)
+            });
+        }
 
         for _ in 0..self.config.workers.max(1) {
             let rx = rx.clone();
@@ -145,20 +238,22 @@ impl Server {
             let stats = self.stats.clone();
             let config = self.config.clone();
             let shutdown = self.shutdown.clone();
+            let pump_tx = pump_tx.clone();
             std::thread::spawn(move || loop {
                 let conn = {
                     let guard = rx.lock().unwrap();
                     guard.recv()
                 };
                 match conn {
-                    Ok(stream) => {
+                    Ok((stream, buf)) => {
                         stats.connections.fetch_add(1, Ordering::Relaxed);
-                        handle_connection(stream, &router, &stats, &config, &shutdown);
+                        handle_connection(stream, buf, &router, &stats, &config, &shutdown, &pump_tx);
                     }
                     Err(_) => return, // sender dropped: shutting down
                 }
             });
         }
+        drop(pump_tx);
 
         let listener = self.listener;
         let shutdown2 = self.shutdown.clone();
@@ -172,9 +267,9 @@ impl Server {
                     Ok(s) => {
                         // Nagle off: responses are small and latency-bound.
                         let _ = s.set_nodelay(true);
-                        match tx.try_send(s) {
+                        match tx.try_send((s, Vec::new())) {
                             Ok(()) => {}
-                            Err(mpsc::TrySendError::Full(mut s)) => {
+                            Err(mpsc::TrySendError::Full((mut s, _))) => {
                                 // Pool + backlog saturated: shed with an
                                 // explicit 503 so the client backs off,
                                 // instead of parking the accept loop and
@@ -220,15 +315,103 @@ impl Server {
     }
 }
 
+/// A connection whose handler returned a deferred (long-poll) response.
+/// Owned by the pump thread until the poll resolves or its deadline
+/// passes; `residual` preserves already-read pipelined bytes so the
+/// connection can be re-enqueued to the worker pool afterwards.
+struct ParkedConn {
+    stream: TcpStream,
+    residual: Vec<u8>,
+    keep_alive: bool,
+    head_only: bool,
+    deferred: Deferred,
+}
+
+/// Pump loop: owns all parked connections. Each iteration drains newly
+/// parked connections, polls every parked one (deadline-forced when
+/// due), writes resolved responses, and re-enqueues live keep-alive
+/// connections to the worker pool. The generation snapshot taken
+/// *before* polling makes the subsequent wait race-free: an event
+/// arriving mid-poll bumps the generation and the wait returns at once.
+fn run_parked_pump(
+    inbox: mpsc::Receiver<ParkedConn>,
+    worker_tx: mpsc::SyncSender<(TcpStream, Vec<u8>)>,
+    waker: Arc<Notify>,
+    stats: Arc<ServerStats>,
+    shutdown: Arc<AtomicBool>,
+) {
+    const HEARTBEAT: Duration = Duration::from_millis(100);
+    let mut parked: Vec<ParkedConn> = Vec::new();
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            // Dropping parked sockets closes them; clients observe EOF.
+            return;
+        }
+        let mut disconnected = false;
+        loop {
+            match inbox.try_recv() {
+                Ok(conn) => parked.push(conn),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    disconnected = true;
+                    break;
+                }
+            }
+        }
+        if disconnected && parked.is_empty() {
+            return; // all workers gone and nothing left to serve
+        }
+
+        let gen = waker.generation();
+        let now = Instant::now();
+        let mut i = 0;
+        while i < parked.len() {
+            let due = now >= parked[i].deferred.deadline;
+            match (parked[i].deferred.poll)(due) {
+                None => {
+                    debug_assert!(!due, "deferred poll must resolve at its deadline");
+                    i += 1;
+                }
+                Some(response) => {
+                    let conn = parked.swap_remove(i);
+                    let ParkedConn { mut stream, residual, keep_alive, head_only, .. } = conn;
+                    let bytes = response.encode(keep_alive, head_only);
+                    if stream.write_all(&bytes).is_err() || !keep_alive {
+                        continue; // drop: peer gone or close requested
+                    }
+                    match worker_tx.try_send((stream, residual)) {
+                        Ok(()) => {}
+                        Err(mpsc::TrySendError::Full(_)) => {
+                            // Worker queue saturated: shed the revived
+                            // connection rather than blocking the pump
+                            // (and with it every other parked reader).
+                            stats.shed.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(mpsc::TrySendError::Disconnected(_)) => {}
+                    }
+                }
+            }
+        }
+
+        let timeout = parked
+            .iter()
+            .map(|c| c.deferred.deadline.saturating_duration_since(now))
+            .min()
+            .map_or(HEARTBEAT, |d| d.min(HEARTBEAT));
+        waker.wait_changed(gen, timeout.max(Duration::from_millis(1)));
+    }
+}
+
 fn handle_connection(
     mut stream: TcpStream,
+    mut buf: Vec<u8>,
     router: &Router,
     stats: &ServerStats,
     config: &ServerConfig,
     shutdown: &AtomicBool,
+    pump_tx: &mpsc::Sender<ParkedConn>,
 ) {
     let _ = stream.set_read_timeout(Some(config.read_timeout));
-    let mut buf: Vec<u8> = Vec::with_capacity(2048);
     let mut chunk = [0u8; 16 * 1024];
 
     loop {
@@ -247,7 +430,42 @@ fn handle_connection(
                         .map(|c| !c.eq_ignore_ascii_case("close"))
                         .unwrap_or(true);
                     let head_only = request.method == Method::Head;
-                    let response = dispatch_safely(router, &request);
+                    let mut response = dispatch_safely(router, &request);
+                    if let Some(mut deferred) = response.deferred.take() {
+                        // Long-poll: park the connection on the pump
+                        // instead of blocking this worker. One
+                        // immediate poll catches events that landed
+                        // between the handler's registration and now.
+                        let resolved = (deferred.poll)(false);
+                        match resolved {
+                            Some(r) => response = r,
+                            None => {
+                                let residual = std::mem::take(&mut buf);
+                                let parked = ParkedConn {
+                                    stream,
+                                    residual,
+                                    keep_alive,
+                                    head_only,
+                                    deferred,
+                                };
+                                match pump_tx.send(parked) {
+                                    Ok(()) => return, // pump owns it now
+                                    Err(mpsc::SendError(p)) => {
+                                        // Pump gone (shutdown): resolve
+                                        // at the deadline semantics.
+                                        let mut d = p.deferred;
+                                        stream = p.stream;
+                                        buf = p.residual;
+                                        response = (d.poll)(true)
+                                            .unwrap_or_else(|| Response::error(
+                                                503,
+                                                "server shutting down",
+                                            ));
+                                    }
+                                }
+                            }
+                        }
+                    }
                     let bytes = response.encode(keep_alive, head_only);
                     if stream.write_all(&bytes).is_err() {
                         return;

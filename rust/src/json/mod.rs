@@ -8,9 +8,10 @@
 //! (insertion order) so canonical study hashing is deterministic.
 
 mod parse;
-mod write;
+pub mod write;
 
 pub use parse::{parse, ParseError};
+pub use write::{write_json_num, write_json_str};
 
 use std::collections::BTreeMap;
 use std::fmt;

@@ -76,6 +76,18 @@ fn push_indent(out: &mut String, n: usize) {
     }
 }
 
+/// Append a JSON number (or `null` for non-finite values) to `out`.
+/// Public so pre-rendered fragments (materialized views, pages) can be
+/// streamed into strings without building `Value` trees.
+pub fn write_json_num(n: f64, out: &mut String) {
+    write_num(n, out)
+}
+
+/// Append a JSON string literal (quoted, escaped) to `out`.
+pub fn write_json_str(s: &str, out: &mut String) {
+    write_str(s, out)
+}
+
 /// JSON numbers cannot be NaN/Inf; encode those as null (matching the
 /// common python `json` practice the paper's stack would hit via
 /// `allow_nan=False` handling — we choose null rather than erroring so a

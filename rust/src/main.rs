@@ -82,6 +82,8 @@ COMMANDS:
                                        asks until a tell lands (default on;
                                        off refits every ask — same suggestions,
                                        debugging escape hatch)
+                    --events-poll-timeout S  max long-poll park time for
+                                       GET /api/studies/{id}/events (default 25)
                     --config FILE      JSON config (flags override)
   token             mint an API token offline
                     --secret S --user NAME --ttl SECONDS
@@ -90,6 +92,9 @@ COMMANDS:
                     --pruner NAME|none --steps N
                     --fleet            register workers + heartbeat leases
                     --ask-batch N      trials fetched per ask round trip
+                    --viewers K        dashboard readers paging studies/trials
+                                       and long-polling the event feed while
+                                       the campaign runs
   demo              quick end-to-end demo (ask/should_prune/tell loop)
   export            dump a durable server's trials as CSV (offline)
                     --data-dir PATH [--study ID]
@@ -185,6 +190,7 @@ fn cmd_campaign(args: &Args) -> i32 {
     campaign.steps_per_trial = args.get_u64("steps", 20);
     campaign.fleet = args.get_bool("fleet");
     campaign.ask_batch = args.get_u64("ask-batch", 1).max(1) as usize;
+    campaign.viewers = args.get_u64("viewers", 0) as usize;
     // With the fleet protocol on, drive lease expiry while the
     // campaign runs (the role the serve loop plays in production).
     let pump_stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
@@ -243,6 +249,9 @@ fn cmd_campaign(args: &Args) -> i32 {
             );
             for (site, n) in &report.by_site {
                 println!("  {site:>16}: {n} completed");
+            }
+            if campaign.viewers > 0 {
+                println!("  viewers read {} page(s)", report.viewer_pages);
             }
             server.stop();
             0

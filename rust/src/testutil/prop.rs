@@ -507,6 +507,286 @@ mod tests {
         });
     }
 
+    /// Fuzz the materialized-view read path under concurrent writers:
+    /// several threads ask (in batches), should_prune, tell and fail
+    /// against one study on a durable engine at 1/4/8 shards while the
+    /// main thread collects view snapshots and pages them through
+    /// random cursors, with a compaction cut mid-pagination. Invariants:
+    ///
+    /// * snapshot ordering — across the collected sequence, epoch and
+    ///   trial count never decrease, slot identity is stable, terminal
+    ///   states are sticky and values immutable once set (every view is
+    ///   *some* acknowledged prefix, never a rollback);
+    /// * no torn batches — every acknowledged ask batch is all-present
+    ///   or all-absent in every snapshot (batch-atomic publication);
+    /// * no phantoms — every completed trial in the final view carries
+    ///   exactly the value a writer's acknowledged tell recorded;
+    /// * page integrity — for any limit, walking a snapshot's cursor
+    ///   chain through JSON serialization reproduces exactly the
+    ///   snapshot's trial ids in slot order, no gaps, no duplicates;
+    /// * recovery — after restart (possibly at a different shard count)
+    ///   the rebuilt view matches the recovered engine state, the event
+    ///   log is dense with watermark == terminal-trial count, and a
+    ///   second replay rebuilds the identical event sequence.
+    #[test]
+    fn prop_view_pages_are_prefix_consistent_under_concurrent_writes() {
+        use crate::coordinator::engine::{Engine, EngineConfig};
+        use crate::coordinator::trial::TrialState;
+        use crate::coordinator::views::{render_trials_page, Cursor};
+        use crate::json::parse;
+        use crate::rng::{mix, Rng};
+        use crate::testutil::TempDir;
+        use std::collections::{HashMap, HashSet};
+        use std::sync::atomic::{AtomicU64, Ordering};
+        use std::sync::{Arc, Mutex};
+
+        fn body() -> crate::json::Value {
+            parse(
+                r#"{
+                "study_name": "rp-fuzz",
+                "properties": {"x": {"low": 0.0, "high": 1.0}},
+                "direction": "minimize",
+                "sampler": {"name": "random"}
+            }"#,
+            )
+            .unwrap()
+        }
+
+        check(8, |g| {
+            let shard_counts = [1usize, 4, 8];
+            let writer_shards = *g.choose(&shard_counts);
+            let reader_shards = *g.choose(&shard_counts);
+            let d = TempDir::new("prop-read-path");
+            let engine = Arc::new(
+                Engine::open(
+                    d.path(),
+                    EngineConfig { n_shards: writer_shards, ..Default::default() },
+                )
+                .unwrap(),
+            );
+            // Seed the study so readers have a stable id from the start.
+            let first = engine.ask(&body()).unwrap();
+            let sid = first.study_id;
+            engine.tell(first.trial_id, 0.5).unwrap();
+
+            let batches: Arc<Mutex<Vec<Vec<u64>>>> = Arc::new(Mutex::new(Vec::new()));
+            let told: Arc<Mutex<HashMap<u64, f64>>> = Arc::new(Mutex::new(HashMap::new()));
+            told.lock().unwrap().insert(first.trial_id, 0.5);
+            let n_writers = g.usize(2, 3);
+            let ops_per_writer = g.usize(4, 10);
+            let case_seed = g.rng().below(1 << 62);
+            let writers_done = Arc::new(AtomicU64::new(0));
+
+            let mut handles = Vec::new();
+            for w in 0..n_writers {
+                let engine = engine.clone();
+                let batches = batches.clone();
+                let told = told.clone();
+                let writers_done = writers_done.clone();
+                let seed = mix(case_seed, w as u64);
+                handles.push(std::thread::spawn(move || {
+                    let mut rng = Rng::new(seed);
+                    let mut seqno = 0u64;
+                    for _ in 0..ops_per_writer {
+                        let k = 1 + rng.below(3) as usize;
+                        let replies = engine.ask_n_as(&body(), k, None).unwrap();
+                        batches
+                            .lock()
+                            .unwrap()
+                            .push(replies.iter().map(|r| r.trial_id).collect());
+                        for r in &replies {
+                            if rng.chance(0.3) {
+                                let _ = engine.should_prune(r.trial_id, 1, 0.5);
+                            }
+                            if rng.chance(0.15) {
+                                let _ = engine.fail(r.trial_id);
+                            } else if rng.chance(0.8) {
+                                // Integer-valued so the WAL roundtrip is
+                                // bit-exact (matches the recovery props).
+                                let v = (w as u64 * 1_000_000 + seqno) as f64;
+                                seqno += 1;
+                                if engine.tell(r.trial_id, v).is_ok() {
+                                    told.lock().unwrap().insert(r.trial_id, v);
+                                }
+                            }
+                            // else: left running (reaped-in-production case).
+                        }
+                    }
+                    writers_done.fetch_add(1, Ordering::Release);
+                }));
+            }
+
+            // Reader: sample the published snapshot while writers run.
+            let mut snapshots = Vec::new();
+            while writers_done.load(Ordering::Acquire) < n_writers as u64 {
+                if let Some(v) = engine.views().study_view(sid) {
+                    snapshots.push(v);
+                }
+                std::thread::sleep(std::time::Duration::from_micros(200));
+            }
+            for h in handles {
+                h.join().expect("writer thread");
+            }
+            snapshots.push(engine.views().study_view(sid).expect("final view"));
+
+            // Snapshot ordering: monotone epoch/count, sticky terminals.
+            for pair in snapshots.windows(2) {
+                let (a, b) = (&pair[0], &pair[1]);
+                assert_holds(
+                    b.epoch >= a.epoch,
+                    format!("epoch rollback {} -> {}", a.epoch, b.epoch),
+                )?;
+                assert_holds(
+                    b.trials.len() >= a.trials.len(),
+                    format!("trial count shrank {} -> {}", a.trials.len(), b.trials.len()),
+                )?;
+                for (i, ta) in a.trials.iter().enumerate() {
+                    let tb = &b.trials[i];
+                    assert_holds(ta.id == tb.id, format!("slot {i} changed identity"))?;
+                    if ta.state != TrialState::Running {
+                        assert_holds(
+                            ta.state == tb.state,
+                            format!("terminal state reverted on trial {}", ta.id),
+                        )?;
+                        if let Some(v) = ta.value {
+                            assert_holds(
+                                tb.value == Some(v),
+                                format!("value changed on trial {}", ta.id),
+                            )?;
+                        }
+                    }
+                }
+            }
+
+            // Batch atomicity: no snapshot shows part of an ask batch.
+            {
+                let batches = batches.lock().unwrap();
+                for snap in &snapshots {
+                    let ids: HashSet<u64> = snap.trials.iter().map(|t| t.id).collect();
+                    for batch in batches.iter() {
+                        let present = batch.iter().filter(|id| ids.contains(id)).count();
+                        assert_holds(
+                            present == 0 || present == batch.len(),
+                            format!("torn batch {batch:?}: {present}/{}", batch.len()),
+                        )?;
+                    }
+                }
+            }
+
+            // No phantoms: completed values are exactly acknowledged tells.
+            {
+                let told = told.lock().unwrap();
+                let last = snapshots.last().unwrap();
+                for t in last.trials.iter() {
+                    if t.state == TrialState::Completed {
+                        assert_holds(
+                            told.get(&t.id) == t.value.as_ref(),
+                            format!("phantom value {:?} on trial {}", t.value, t.id),
+                        )?;
+                    }
+                }
+            }
+
+            // Page integrity over random limits, compacting mid-walk.
+            let n_snaps = snapshots.len();
+            let picks =
+                [0, n_snaps / 2, n_snaps - 1, g.usize(0, n_snaps - 1)];
+            let mut compacted = false;
+            for &p in &picks {
+                let snap = &snapshots[p];
+                let limit = g.usize(1, snap.trials.len().max(1));
+                let mut ids = Vec::new();
+                let mut cursor = Cursor { epoch: snap.epoch, index: 0 };
+                loop {
+                    let page = parse(&render_trials_page(snap, cursor, limit, None))
+                        .map_err(|e| format!("invalid page json: {e}"))?;
+                    for t in page.get("trials").as_arr().ok_or("page missing trials")? {
+                        ids.push(t.get("id").as_u64().ok_or("trial missing id")?);
+                    }
+                    match page.get("next_cursor").as_str() {
+                        Some(c) => {
+                            cursor = Cursor::decode(c)
+                                .map_err(|e| format!("bad next_cursor: {e}"))?;
+                        }
+                        None => break,
+                    }
+                    if !compacted {
+                        // A segment cut mid-pagination must not disturb
+                        // the walk (views never touch storage).
+                        engine.compact().unwrap();
+                        compacted = true;
+                    }
+                }
+                let want: Vec<u64> = snap.trials.iter().map(|t| t.id).collect();
+                assert_holds(
+                    ids == want,
+                    format!("page walk mismatch: {} ids paged, {} in view", ids.len(), want.len()),
+                )?;
+            }
+
+            // Recovery: restart (new shard layout), views rebuilt to
+            // match engine state; event log dense and deterministic.
+            drop(engine);
+            let reopened = Engine::open(
+                d.path(),
+                EngineConfig { n_shards: reader_shards, ..Default::default() },
+            )
+            .unwrap();
+            let view = reopened
+                .views()
+                .study_view(sid)
+                .ok_or("study view missing after recovery")?;
+            let trials = reopened.trials_json(sid).ok_or("study missing after recovery")?;
+            let arr = trials.as_arr().ok_or("trials_json not an array")?;
+            assert_holds(
+                arr.len() == view.trials.len(),
+                format!("recovered view has {} trials, engine {}", view.trials.len(), arr.len()),
+            )?;
+            for (t, lite) in arr.iter().zip(view.trials.iter()) {
+                assert_holds(t.get("id").as_u64() == Some(lite.id), "rebuilt id mismatch")?;
+                assert_holds(
+                    t.get("state").as_str() == Some(lite.state.as_str()),
+                    format!("rebuilt state mismatch on trial {}", lite.id),
+                )?;
+                assert_holds(
+                    t.get("value").as_f64() == lite.value,
+                    format!("rebuilt value mismatch on trial {}", lite.id),
+                )?;
+            }
+            let ev1 = reopened
+                .views()
+                .events_after(sid, 0, usize::MAX)
+                .ok_or("event log missing after recovery")?;
+            for (i, e) in ev1.events.iter().enumerate() {
+                assert_holds(e.seq == i as u64 + 1, "rebuilt event seq not dense")?;
+            }
+            let n_terminal =
+                view.trials.iter().filter(|t| t.state != TrialState::Running).count() as u64;
+            assert_holds(
+                ev1.watermark == n_terminal,
+                format!("watermark {} != {} terminal trials", ev1.watermark, n_terminal),
+            )?;
+            drop(reopened);
+            let again = Engine::open(
+                d.path(),
+                EngineConfig { n_shards: *g.choose(&shard_counts), ..Default::default() },
+            )
+            .unwrap();
+            let ev2 = again
+                .views()
+                .events_after(sid, 0, usize::MAX)
+                .ok_or("event log missing on second replay")?;
+            let k1: Vec<(u64, &str)> =
+                ev1.events.iter().map(|e| (e.trial_id, e.kind.as_str())).collect();
+            let k2: Vec<(u64, &str)> =
+                ev2.events.iter().map(|e| (e.trial_id, e.kind.as_str())).collect();
+            assert_holds(
+                k1 == k2,
+                format!("event replay not deterministic: {} vs {} events", k1.len(), k2.len()),
+            )
+        });
+    }
+
     /// Fuzz the fleet's slot accounting: a random schedule of
     /// admit+bind / finish / requeue / re-handout operations over
     /// random sites, studies, tenants and quotas must keep the

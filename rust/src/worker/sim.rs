@@ -97,6 +97,11 @@ pub struct Campaign {
     /// the ask round trip and the server-side sampler fit over the
     /// batch, which a multi-GPU node running k trials at once wants.
     pub ask_batch: usize,
+    /// Concurrent dashboard readers running alongside the fleet: each
+    /// pages `/api/studies` and every study's trials via cursors, reads
+    /// `/best`, and long-polls the `/events` feed — the read-side load
+    /// the materialized views exist to absorb. 0 = no readers.
+    pub viewers: usize,
 }
 
 impl Campaign {
@@ -116,6 +121,7 @@ impl Campaign {
             fleet: false,
             tenants: Vec::new(),
             ask_batch: 1,
+            viewers: 0,
         }
     }
 
@@ -142,6 +148,15 @@ impl Campaign {
         let started = Arc::new(AtomicU64::new(0));
         let stop = Arc::new(AtomicBool::new(false));
         let t0 = std::time::Instant::now();
+        // Readers first, so they observe the campaign from its first
+        // trial; they stop only after every writer has drained.
+        let viewer_stop = Arc::new(AtomicBool::new(false));
+        let mut viewer_handles = Vec::new();
+        for v in 0..self.viewers {
+            let server = self.server;
+            let stop = viewer_stop.clone();
+            viewer_handles.push(std::thread::spawn(move || viewer_loop(server, v, &stop)));
+        }
         let mut handles = Vec::new();
         for i in 0..self.n_nodes {
             let node = NodeProfile { site: sites[i % sites.len()], node_id: i };
@@ -156,6 +171,10 @@ impl Campaign {
         for h in handles {
             let node_report = h.join().expect("node thread")?;
             report.merge(&node_report);
+        }
+        viewer_stop.store(true, Ordering::Relaxed);
+        for h in viewer_handles {
+            report.viewer_pages += h.join().unwrap_or(0);
         }
         report.wall = t0.elapsed();
         Ok(report)
@@ -176,6 +195,9 @@ pub struct CampaignReport {
     pub wall: Duration,
     /// (site name, completed trials) attribution.
     pub by_site: Vec<(String, u64)>,
+    /// Read-path pages served to the campaign's viewers (campaign-level;
+    /// node reports never carry it).
+    pub viewer_pages: u64,
 }
 
 impl CampaignReport {
@@ -395,6 +417,69 @@ fn node_loop(
     Ok(report)
 }
 
+/// One dashboard reader: walks the paginated studies list, pages every
+/// study's trials to exhaustion through cursors, reads the incumbent,
+/// and long-polls the event feed from its last seen watermark. Returns
+/// the number of pages read. Every request goes through the
+/// materialized-view read path — a viewer never takes a shard lock, so
+/// any K of these run without perturbing ask/tell latency.
+fn viewer_loop(server: SocketAddr, _viewer_id: usize, stop: &AtomicBool) -> u64 {
+    use std::collections::HashMap;
+    let Ok(mut client) = crate::http::Client::connect(server) else {
+        return 0;
+    };
+    client.set_timeout(Duration::from_secs(10));
+    let mut pages = 0u64;
+    let mut watermarks: HashMap<u64, u64> = HashMap::new();
+    while !stop.load(Ordering::Relaxed) {
+        let Ok(resp) = client.get("/api/studies?limit=32") else {
+            break;
+        };
+        let Ok(list) = resp.json_body() else { break };
+        let Some(studies) = list.get("studies").as_arr() else {
+            break;
+        };
+        pages += 1;
+        for s in studies {
+            let Some(sid) = s.get("id").as_u64() else { continue };
+            let mut path = format!("/api/studies/{sid}/trials?limit=64");
+            loop {
+                let Ok(r) = client.get(&path) else { return pages };
+                let Ok(page) = r.json_body() else { return pages };
+                pages += 1;
+                match page.get("next_cursor").as_str() {
+                    Some(c) => {
+                        path = format!("/api/studies/{sid}/trials?limit=64&cursor={c}");
+                    }
+                    None => break,
+                }
+            }
+            if client.get(&format!("/api/studies/{sid}/best")).is_err() {
+                return pages;
+            }
+            pages += 1;
+            // Short poll window: the viewer notices campaign shutdown
+            // within ~50ms instead of parking for the full server cap.
+            let since = watermarks.get(&sid).copied().unwrap_or(0);
+            let Ok(r) =
+                client.get(&format!("/api/studies/{sid}/events?since={since}&timeout=0.05"))
+            else {
+                return pages;
+            };
+            if let Ok(ev) = r.json_body() {
+                if let Some(w) = ev.get("watermark").as_u64() {
+                    watermarks.insert(sid, w);
+                }
+            }
+            pages += 1;
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+        }
+    }
+    pages
+}
+
 fn net_delay(node: &NodeProfile, rng: &mut Rng) {
     if node.site.net_latency_us == 0 {
         return;
@@ -469,6 +554,26 @@ mod tests {
     }
 
     #[test]
+    fn campaign_with_viewers_reads_pages_while_fleet_writes() {
+        // Dashboard readers run for the whole campaign: they page the
+        // studies list, walk every study's trial cursors, read /best and
+        // long-poll /events — all against live writers — and must never
+        // break the fleet (errors surface as an early-returning viewer
+        // with a low page count, and as node_loop failures).
+        let s = server();
+        let mut c = Campaign::new(s.addr(), "t".into(), Objective::Sphere);
+        c.n_nodes = 4;
+        c.max_trials = 20;
+        c.steps_per_trial = 3;
+        c.step_cost_us = 100;
+        c.viewers = 3;
+        let report = c.run().unwrap();
+        assert!(report.viewer_pages > 0, "viewers read nothing: {report:?}");
+        assert!(report.completed + report.pruned + report.preempted > 0);
+        s.stop();
+    }
+
+    #[test]
     fn campaign_report_merge() {
         let mut a = CampaignReport {
             completed: 2,
@@ -479,6 +584,7 @@ mod tests {
             best: Some(1.0),
             wall: Duration::ZERO,
             by_site: vec![("x".into(), 2)],
+            viewer_pages: 0,
         };
         let b = CampaignReport {
             completed: 3,
@@ -489,6 +595,7 @@ mod tests {
             best: Some(0.5),
             wall: Duration::ZERO,
             by_site: vec![("x".into(), 1), ("y".into(), 2)],
+            viewer_pages: 0,
         };
         a.merge(&b);
         assert_eq!(a.completed, 5);
