@@ -132,9 +132,71 @@ fn pre_ask(addr: std::net::SocketAddr, tok: &str, n: usize) -> Vec<u64> {
         .collect()
 }
 
+/// Ask p99 over a warm 500-trial server at the given trace capacity.
+fn ask_p99(trace_capacity: usize, conc: usize, iters: usize) -> (f64, f64) {
+    let server = HopaasServer::start(
+        "127.0.0.1:0",
+        HopaasConfig {
+            auth_required: false,
+            engine: EngineConfig { trace_capacity, ..Default::default() },
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let addr = server.addr();
+    seed(addr, "x", 500);
+    let (s, w) = run(addr, conc, iters, |c, _| {
+        let r = c.post_json("/api/ask/x", &ask_body()).unwrap();
+        assert_eq!(r.status, 200);
+    });
+    server.stop();
+    (s.quantile(0.99), s.len() as f64 / w)
+}
+
+/// Tracing overhead: ask p99 with the tracer at its defaults vs fully
+/// off (`--trace-capacity 0`). The trace subsystem is designed to stay
+/// off the hot path — fixed-capacity striped ring, no allocation on
+/// record — so the acceptance gate is on-p99 within 5% of off-p99
+/// (noise allowing; the JSON carries the raw numbers either way).
+fn obs_overhead() -> Value {
+    let conc = 8usize;
+    let iters = 150usize;
+    let (off_p99, off_rps) = ask_p99(0, conc, iters);
+    let (on_p99, on_rps) = ask_p99(2048, conc, iters);
+    let ratio = on_p99 / off_p99.max(1e-9);
+    println!(
+        "\nobs overhead ({conc} writers): ask p99 tracing-off {} vs tracing-on {} ({ratio:.3}x)",
+        fmt_duration(off_p99),
+        fmt_duration(on_p99),
+    );
+    let mut o = Value::obj();
+    o.set("conc", conc)
+        .set("iters", iters)
+        .set("ask_p99_off_s", off_p99)
+        .set("ask_p99_on_s", on_p99)
+        .set("ask_p99_ratio", ratio)
+        .set("req_per_s_off", off_rps)
+        .set("req_per_s_on", on_rps);
+    Value::Obj(o)
+}
+
 fn main() {
     let args = Args::parse(std::env::args().skip(1));
     let mut rows: Vec<Value> = Vec::new();
+
+    // `--only obs`: just the tracing-overhead phase (the CI
+    // observability job runs this against every push).
+    if args.get("only") == Some("obs") {
+        let obs = obs_overhead();
+        let mut out = Value::obj();
+        out.set("bench", "api").set("obs", obs);
+        let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("..")
+            .join("BENCH_api.json");
+        std::fs::write(&json_path, Value::Obj(out).to_pretty()).unwrap();
+        println!("wrote {}", json_path.display());
+        return;
+    }
 
     let server = HopaasServer::start(
         "127.0.0.1:0",
@@ -356,8 +418,13 @@ fn main() {
         .set("tell_p99_mixed_s", tell_mixed.quantile(0.99))
         .set("tell_p99_ratio", tell_ratio);
 
+    let obs = obs_overhead();
+
     let mut out = Value::obj();
-    out.set("bench", "api").set("rows", Value::Arr(rows)).set("mixed", Value::Obj(mixed));
+    out.set("bench", "api")
+        .set("rows", Value::Arr(rows))
+        .set("mixed", Value::Obj(mixed))
+        .set("obs", obs);
     let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .join("..")
         .join("BENCH_api.json");

@@ -34,8 +34,16 @@ impl Args {
         }
         // Flags that never take a value (`--flag value` would otherwise
         // swallow a following positional).
-        const BOOLEAN: [&str; 7] =
-            ["no-auth", "help", "verbose", "quiet", "wal-batch-adaptive", "fleet", "site-affinity"];
+        const BOOLEAN: [&str; 8] = [
+            "no-auth",
+            "help",
+            "verbose",
+            "quiet",
+            "wal-batch-adaptive",
+            "fleet",
+            "site-affinity",
+            "log-json",
+        ];
         while let Some(a) = it.next() {
             if let Some(stripped) = a.strip_prefix("--") {
                 if let Some((k, v)) = stripped.split_once('=') {
@@ -122,6 +130,10 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
     let mut backlog = 1024u64;
     let mut sampler_cache = true;
     let mut events_poll_timeout = 25.0f64;
+    let mut trace_capacity = 2048u64;
+    let mut trace_sample = 1.0f64;
+    let mut trace_slow_ms = 250u64;
+    let mut log_json = false;
 
     // Layer 1: config file.
     if let Some(path) = args.get("config") {
@@ -218,6 +230,18 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
         if let Some(x) = v.get("events_poll_timeout").as_f64() {
             events_poll_timeout = x;
         }
+        if let Some(x) = v.get("trace_capacity").as_u64() {
+            trace_capacity = x;
+        }
+        if let Some(x) = v.get("trace_sample").as_f64() {
+            trace_sample = x;
+        }
+        if let Some(x) = v.get("trace_slow_ms").as_u64() {
+            trace_slow_ms = x;
+        }
+        if let Value::Bool(b) = v.get("log_json") {
+            log_json = *b;
+        }
         // File keys mirror the flag names: accept the http_-prefixed
         // spellings too ("workers"/"backlog" stay as legacy keys).
         if let Some(x) = v.get("http_workers").as_u64() {
@@ -295,6 +319,14 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
     // Long-poll window for the events feed; 0 would make every poll an
     // immediate probe, so clamp to something that still parks readers.
     events_poll_timeout = args.get_f64("events-poll-timeout", events_poll_timeout).max(0.001);
+    // Request tracing: ring capacity (0 disables the subsystem), head
+    // sampling, slow-op threshold, and structured per-request logging.
+    trace_capacity = args.get_u64("trace-capacity", trace_capacity);
+    trace_sample = args.get_f64("trace-sample", trace_sample).clamp(0.0, 1.0);
+    trace_slow_ms = args.get_u64("trace-slow-ms", trace_slow_ms);
+    if args.get("log-json").is_some() {
+        log_json = args.get_bool("log-json");
+    }
 
     let config = HopaasConfig {
         engine: EngineConfig {
@@ -321,6 +353,10 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
             dead_worker_keep: dead_worker_keep as usize,
             site_idle_retention: site_idle_retention.max(1.0),
             sampler_cache,
+            trace_capacity: trace_capacity as usize,
+            trace_sample,
+            trace_slow_ms,
+            log_json,
         },
         http: ServerConfig {
             workers: workers as usize,
@@ -452,6 +488,43 @@ mod tests {
         assert_eq!(cfg.engine.site_quota, 6);
         assert_eq!(cfg.engine.wal_batch_max, 32);
         assert!(!cfg.engine.wal_batch_adaptive, "file wal_batch fixes the size");
+    }
+
+    #[test]
+    fn trace_flags_layer_into_engine_config() {
+        let a = args("serve");
+        let (_, cfg) = server_config(&a).unwrap();
+        assert_eq!(cfg.engine.trace_capacity, 2048);
+        assert_eq!(cfg.engine.trace_sample, 1.0);
+        assert_eq!(cfg.engine.trace_slow_ms, 250);
+        assert!(!cfg.engine.log_json);
+        // `--log-json` is boolean: a following positional must survive.
+        let a = args("serve --trace-capacity 64 --trace-sample 0.25 --trace-slow-ms 10 --log-json pos");
+        assert_eq!(a.positional(), &["pos".to_string()]);
+        let (_, cfg) = server_config(&a).unwrap();
+        assert_eq!(cfg.engine.trace_capacity, 64);
+        assert_eq!(cfg.engine.trace_sample, 0.25);
+        assert_eq!(cfg.engine.trace_slow_ms, 10);
+        assert!(cfg.engine.log_json);
+        // Out-of-range sampling clamps; capacity 0 disables tracing.
+        let a = args("serve --trace-sample 7 --trace-capacity 0");
+        let (_, cfg) = server_config(&a).unwrap();
+        assert_eq!(cfg.engine.trace_sample, 1.0);
+        assert_eq!(cfg.engine.trace_capacity, 0);
+        // File keys mirror the flag names; CLI still overrides.
+        let d = TempDir::new("config-trace");
+        let p = d.path().join("hopaas.json");
+        std::fs::write(
+            &p,
+            r#"{"trace_capacity": 16, "trace_sample": 0.5, "trace_slow_ms": 99, "log_json": true}"#,
+        )
+        .unwrap();
+        let a = args(&format!("serve --config {} --trace-slow-ms 7", p.display()));
+        let (_, cfg) = server_config(&a).unwrap();
+        assert_eq!(cfg.engine.trace_capacity, 16);
+        assert_eq!(cfg.engine.trace_sample, 0.5);
+        assert_eq!(cfg.engine.trace_slow_ms, 7, "CLI overrides file");
+        assert!(cfg.engine.log_json);
     }
 
     #[test]

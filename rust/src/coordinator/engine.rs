@@ -48,9 +48,11 @@ use super::views::{EventKind, ViewRegistry};
 use super::{metrics::Metrics, pruners::make_pruner};
 use crate::fleet::{Fleet, FleetConfig};
 use crate::json::Value;
+use crate::obs::{self, Stage, Tracer, TracerConfig};
 use crate::rng::{mix, Rng};
 use crate::store::{
-    GroupWal, GroupWalConfig, LoadedState, Record, RecoveryStats, Storage, FLEET_SHARD,
+    GroupWal, GroupWalConfig, LoadedState, Record, RecoveryStats, Storage, WalAckInfo,
+    FLEET_SHARD,
 };
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -155,6 +157,18 @@ pub struct EngineConfig {
     /// from the history window, the pre-cache behavior; the suggestion
     /// stream is byte-identical either way, see `Sampler::suggest`).
     pub sampler_cache: bool,
+    /// Retained-trace ring-buffer slots (`--trace-capacity`; 0 turns
+    /// request tracing off entirely).
+    pub trace_capacity: usize,
+    /// Head-sampling fraction of requests whose trace is retained
+    /// (`--trace-sample`, 0.0–1.0).
+    pub trace_sample: f64,
+    /// Requests at least this slow are always retained, sampling aside
+    /// (`--trace-slow-ms`; 0 disables slow-op capture).
+    pub trace_slow_ms: u64,
+    /// Emit one structured JSON log line per retained request
+    /// (`--log-json`).
+    pub log_json: bool,
 }
 
 impl Default for EngineConfig {
@@ -183,6 +197,10 @@ impl Default for EngineConfig {
             dead_worker_keep: 1024,
             site_idle_retention: 3600.0,
             sampler_cache: true,
+            trace_capacity: 2048,
+            trace_sample: 1.0,
+            trace_slow_ms: 250,
+            log_json: false,
         }
     }
 }
@@ -299,6 +317,10 @@ pub struct Engine {
     /// epoch-stamping rule) and read by the HTTP layer without ever
     /// touching a shard lock.
     views: Arc<ViewRegistry>,
+    /// Request-tracing subsystem: span retention ring, slow-op
+    /// exemplars, structured log. Shared with the HTTP server, which
+    /// opens/closes the spans around router dispatch.
+    tracer: Arc<Tracer>,
     /// Total asks served (for quick health output).
     asks: AtomicU64,
 }
@@ -325,6 +347,12 @@ impl Engine {
             },
         };
         let metrics = Arc::new(Metrics::with_shards(n));
+        let tracer = Arc::new(Tracer::new(TracerConfig {
+            capacity: config.trace_capacity,
+            sample: config.trace_sample.clamp(0.0, 1.0),
+            slow_ms: config.trace_slow_ms,
+            log_json: config.log_json,
+        }));
         Engine {
             shards: (0..n).map(|_| Shard::new()).collect(),
             directory: RwLock::new(Directory::default()),
@@ -345,6 +373,7 @@ impl Engine {
             config,
             start: Instant::now(),
             views: Arc::new(ViewRegistry::new(metrics.clone())),
+            tracer,
             metrics,
             asks: AtomicU64::new(0),
         }
@@ -354,6 +383,12 @@ impl Engine {
     /// parked-reader pump wire themselves to it).
     pub fn views(&self) -> &Arc<ViewRegistry> {
         &self.views
+    }
+
+    /// The request-tracing subsystem (the HTTP server opens spans with
+    /// it; the trace API reads from it).
+    pub fn tracer(&self) -> &Arc<Tracer> {
+        &self.tracer
     }
 
     /// Durable engine: replays segments + WAL from `dir` (in parallel,
@@ -607,7 +642,17 @@ impl Engine {
     }
 
     fn lock_shard(&self, idx: usize) -> MutexGuard<'_, ShardState> {
-        self.shards[idx].state.lock().unwrap()
+        // The lock wait (not the hold) is what a traced request paid to
+        // other requests; record it only when a span is active so the
+        // bare path stays two instructions.
+        if obs::active() {
+            let t0 = Instant::now();
+            let guard = self.shards[idx].state.lock().unwrap();
+            obs::stage(Stage::ShardLock, t0.elapsed());
+            guard
+        } else {
+            self.shards[idx].state.lock().unwrap()
+        }
     }
 
     /// Route a trial id to its shard or produce the API error.
@@ -684,6 +729,17 @@ impl Engine {
         let now = self.now();
         let key = def.key();
         self.metrics.ask_batch_size.observe(n as f64);
+        // Attribute the span before any admission decision so even a
+        // quota-denied ask carries tenant/worker identity in the trace.
+        if obs::active() {
+            if let Some(t) = tenant {
+                obs::set_tenant(t);
+            }
+            if let Some(wid) = worker {
+                obs::set_worker(&wid.to_string());
+            }
+        }
+        let admit_t0 = if obs::active() { Some(Instant::now()) } else { None };
         // Worker-less (legacy) asks never hold a lease, so the lease
         // quotas cannot bound them — the sliding per-tenant ask-rate
         // ledger does, checked before any sampling work. Each trial of
@@ -732,6 +788,12 @@ impl Engine {
                         return Err(e);
                     }
                 }
+            }
+        }
+        if let Some(t0) = admit_t0 {
+            obs::stage(Stage::Admission, t0.elapsed());
+            if let Some(site) = admitted.first() {
+                obs::set_site(site);
             }
         }
         let result = self.ask_admitted_n(def, node, now, &key, worker, tenant, &admitted, n);
@@ -851,6 +913,7 @@ impl Engine {
             let state = &mut *guard;
             let slot = self.find_or_create_study(state, shard_idx, def, now, key)?;
             let study = &mut state.studies[slot];
+            obs::set_study(study.id);
             let numbers: Vec<u64> = (0..r).map(|_| study.reserve_number()).collect();
             // The sampler is built once per study slot and shared across
             // asks (it is pure configuration; all mutable state lives in
@@ -887,10 +950,12 @@ impl Engine {
         let (fit, fit_epoch): (Arc<dyn FitState>, Option<u64>) = match arm {
             HistoryArm::None => (Arc::from(sampler.fit(&space, &[], direction)), None),
             HistoryArm::Fit(f) => (f, None),
-            HistoryArm::Snap(epoch, obs) => {
+            HistoryArm::Snap(epoch, obs_window) => {
                 let t0 = Instant::now();
-                let f: Arc<dyn FitState> = Arc::from(sampler.fit(&space, &obs, direction));
-                self.metrics.sampler_fit_seconds.observe(t0.elapsed().as_secs_f64());
+                let f: Arc<dyn FitState> = Arc::from(sampler.fit(&space, &obs_window, direction));
+                let took = t0.elapsed();
+                self.metrics.sampler_fit_seconds.observe(took.as_secs_f64());
+                obs::stage(Stage::SamplerFit, took);
                 (f, Some(epoch))
             }
         };
@@ -1244,6 +1309,7 @@ impl Engine {
                 .trial_index
                 .get(&trial_id)
                 .ok_or_else(|| ApiError::NotFound(format!("unknown trial {trial_id}")))?;
+            obs::set_study(state.studies[si].id);
             let Some(directions) = state.studies[si].def.directions.clone() else {
                 return Err(ApiError::BadRequest(
                     "'values' array sent to a single-objective study".into(),
@@ -1311,6 +1377,7 @@ impl Engine {
                 .trial_index
                 .get(&trial_id)
                 .ok_or_else(|| ApiError::NotFound(format!("unknown trial {trial_id}")))?;
+            obs::set_study(state.studies[si].id);
             let direction = state.studies[si].def.direction;
             let prev_best = state.studies[si].best().and_then(|t| t.value);
             // Validate the transition, persist, then apply: a failed
@@ -1363,6 +1430,7 @@ impl Engine {
                 .get(&trial_id)
                 .ok_or_else(|| ApiError::NotFound(format!("unknown trial {trial_id}")))?;
 
+            obs::set_study(state.studies[si].id);
             // Validate, persist, then apply (see `tell`). `report` runs
             // the same validation internally, so the two cannot drift.
             state.studies[si].trials[ti]
@@ -1438,6 +1506,7 @@ impl Engine {
             .trial_index
             .get(&trial_id)
             .ok_or_else(|| ApiError::NotFound(format!("unknown trial {trial_id}")))?;
+        obs::set_study(state.studies[si].id);
         // Validate, persist, then apply (see `tell`).
         state.studies[si].trials[ti]
             .validate_transition("fail")
@@ -1926,7 +1995,16 @@ impl Engine {
             .set("asks", self.asks.load(Ordering::Relaxed))
             .set("tracked_running", self.tracked_running())
             .set("wal_records", self.wal_records.load(Ordering::Relaxed))
-            .set("durable", self.wal.is_some());
+            .set("durable", self.wal.is_some())
+            .set("uptime_seconds", self.start.elapsed().as_secs_f64());
+        {
+            let mut b = Value::obj();
+            b.set("version", crate::VERSION)
+                .set("git_hash", crate::GIT_HASH.unwrap_or("unknown"));
+            o.set("build", Value::Obj(b));
+        }
+        // Tracing subsystem counters + slow-trace exemplar ids.
+        o.set("trace", self.tracer.stats_json());
         if let Some(wal) = &self.wal {
             let (batches, records, last, max) = wal.stats().snapshot();
             let mut w = Value::obj();
@@ -1946,7 +2024,8 @@ impl Engine {
                 .set(
                     "segments_reused",
                     wal.stats().segments_reused.load(Ordering::Relaxed),
-                );
+                )
+                .set("recent_batches", wal.ledger_json());
             o.set("wal_commit", Value::Obj(w));
         }
         // Sampler hot path: fit-cache effectiveness and batch sizes.
@@ -2284,7 +2363,9 @@ impl Engine {
     fn persist(&self, record: Record) -> Result<(), ApiError> {
         if let Some(wal) = &self.wal {
             let shard = record.shard;
-            wal.append(record).map_err(ApiError::Storage)?;
+            let t0 = Instant::now();
+            let info = wal.append(record).map_err(ApiError::Storage)?;
+            Self::note_wal_stages(t0, info);
             self.wal_records.fetch_add(1, Ordering::Relaxed);
             self.note_dirty(shard, 1);
         }
@@ -2300,13 +2381,27 @@ impl Engine {
         if let Some(wal) = &self.wal {
             let n = records.len() as u64;
             let shards: Vec<u32> = records.iter().map(|r| r.shard).collect();
-            wal.append_many(records).map_err(ApiError::Storage)?;
+            let t0 = Instant::now();
+            let info = wal.append_many(records).map_err(ApiError::Storage)?;
+            Self::note_wal_stages(t0, info);
             self.wal_records.fetch_add(n, Ordering::Relaxed);
             for shard in shards {
                 self.note_dirty(shard, 1);
             }
         }
         Ok(())
+    }
+
+    /// Attribute a group-commit roundtrip to the active span: the time
+    /// the job queued behind the writer, the shared fsync its batch
+    /// paid, and the full ack round-trip wall time. No-op (three loads)
+    /// when no span is installed.
+    fn note_wal_stages(t0: Instant, info: WalAckInfo) {
+        if obs::active() {
+            obs::stage_us(Stage::WalQueue, info.queue_us);
+            obs::stage_us(Stage::WalFsync, info.fsync_us);
+            obs::stage(Stage::WalAck, t0.elapsed());
+        }
     }
 
     /// Count a durably appended record against its shard's (or the
@@ -2321,9 +2416,21 @@ impl Engine {
         }
     }
 
+    /// The full `/metrics` scrape body: refresh the scrape-time gauges,
+    /// render every registered family, then append the slow-trace
+    /// exemplar gauge so operators can jump from a latency histogram
+    /// straight to `/api/trace/{id}`.
+    pub fn render_metrics(&self) -> String {
+        self.refresh_storage_metrics();
+        let mut out = self.metrics.render();
+        self.tracer.render_exemplars(&mut out);
+        out
+    }
+
     /// Mirror the WAL counters into the metrics gauges. Called by the
     /// `/metrics` handler at scrape time — not on the mutation hot path.
     pub fn refresh_storage_metrics(&self) {
+        self.metrics.uptime_seconds.set(self.start.elapsed().as_secs_f64());
         self.metrics
             .wal_records
             .set(self.wal_records.load(Ordering::Relaxed) as f64);

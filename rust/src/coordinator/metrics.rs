@@ -5,6 +5,7 @@
 //! intervals" for monitoring; operationally the same information must be
 //! scrapeable, so the registry renders the standard exposition format.
 
+use crate::rng;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -53,9 +54,25 @@ pub struct Histogram {
     /// Sum of observations in microseconds (atomic integer to avoid a
     /// mutex on the hot path).
     sum_us: AtomicU64,
-    /// Recent raw samples for exact quantiles in benches/tests (bounded).
-    samples: Mutex<Vec<f64>>,
+    /// Bounded reservoir of raw samples for quantiles in benches/tests.
+    samples: Mutex<Reservoir>,
 }
+
+/// Uniform sample reservoir (Vitter's Algorithm R, with the crate's
+/// deterministic mixer as the randomness source). Below the cap the
+/// quantiles are exact; past it every observation still has a `cap/seen`
+/// chance of being represented, so the quantiles keep tracking the live
+/// distribution while memory stays fixed — a long-running server no
+/// longer grows (or freezes, as the old push-until-full vector did)
+/// its per-histogram sample set.
+struct Reservoir {
+    samples: Vec<f64>,
+    /// Observations offered since the last [`Histogram::reset_samples`].
+    seen: u64,
+}
+
+/// Raw samples retained per histogram (≈32 KiB of f64s).
+const RESERVOIR_CAP: usize = 4096;
 
 /// Escape a label value for the Prometheus exposition format
 /// (backslash, double quote and newline must be backslash-escaped).
@@ -80,8 +97,6 @@ pub fn ask_batch_bounds() -> Vec<f64> {
     vec![1.0, 2.0, 4.0, 8.0, 16.0, 32.0, 64.0]
 }
 
-const MAX_SAMPLES: usize = 100_000;
-
 impl Histogram {
     pub fn new(bounds: Vec<f64>) -> Histogram {
         let n = bounds.len();
@@ -90,7 +105,7 @@ impl Histogram {
             buckets: (0..=n).map(|_| AtomicU64::new(0)).collect(),
             count: AtomicU64::new(0),
             sum_us: AtomicU64::new(0),
-            samples: Mutex::new(Vec::new()),
+            samples: Mutex::new(Reservoir { samples: Vec::new(), seen: 0 }),
         }
     }
 
@@ -105,9 +120,16 @@ impl Histogram {
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum_us
             .fetch_add((x * 1e6).max(0.0) as u64, Ordering::Relaxed);
-        let mut s = self.samples.lock().unwrap();
-        if s.len() < MAX_SAMPLES {
-            s.push(x);
+        let mut r = self.samples.lock().unwrap();
+        r.seen += 1;
+        if r.samples.len() < RESERVOIR_CAP {
+            r.samples.push(x);
+        } else {
+            // Replace a uniformly chosen slot with probability cap/seen.
+            let j = rng::mix(0x7265_7365_7276_6f69, r.seen) % r.seen;
+            if (j as usize) < RESERVOIR_CAP {
+                r.samples[j as usize] = x;
+            }
         }
     }
 
@@ -128,9 +150,10 @@ impl Histogram {
         }
     }
 
-    /// Exact quantile over retained samples (q in [0,1]).
+    /// Quantile over the retained reservoir (q in [0,1]) — exact while
+    /// under [`RESERVOIR_CAP`] observations, a uniform estimate past it.
     pub fn quantile(&self, q: f64) -> f64 {
-        let mut s = self.samples.lock().unwrap().clone();
+        let mut s = self.samples.lock().unwrap().samples.clone();
         if s.is_empty() {
             return 0.0;
         }
@@ -141,7 +164,9 @@ impl Histogram {
 
     /// Clear retained samples (benches reuse histograms between phases).
     pub fn reset_samples(&self) {
-        self.samples.lock().unwrap().clear();
+        let mut r = self.samples.lock().unwrap();
+        r.samples.clear();
+        r.seen = 0;
     }
 }
 
@@ -229,6 +254,9 @@ pub struct Metrics {
     /// number of long-poll readers currently parked on `/events`.
     pub view_staleness_epochs: Gauge,
     pub events_waiters: Gauge,
+    /// Seconds since the engine started — refreshed at scrape time so
+    /// dashboards can correlate deploys/restarts with latency shifts.
+    pub uptime_seconds: Gauge,
     pub ask_latency: Histogram,
     pub tell_latency: Histogram,
     pub should_prune_latency: Histogram,
@@ -297,6 +325,7 @@ impl Metrics {
             tenant_leases: Mutex::new(Vec::new()),
             view_staleness_epochs: Gauge::default(),
             events_waiters: Gauge::default(),
+            uptime_seconds: Gauge::default(),
             ask_latency: Histogram::new(default_latency_bounds()),
             tell_latency: Histogram::new(default_latency_bounds()),
             should_prune_latency: Histogram::new(default_latency_bounds()),
@@ -323,38 +352,106 @@ impl Metrics {
         *m.entry(tenant.to_string()).or_insert(0) += 1;
     }
 
-    /// Render Prometheus text exposition format.
+    /// Render Prometheus text exposition format. Every family emits
+    /// `# HELP` then `# TYPE` exactly once, before any of its samples —
+    /// the whole-scrape conformance contract the lint test enforces.
     pub fn render(&self) -> String {
-        let mut out = String::with_capacity(4096);
-        let counters: [(&str, &Counter); 20] = [
-            ("hopaas_ask_total", &self.ask_total),
-            ("hopaas_tell_total", &self.tell_total),
-            ("hopaas_should_prune_total", &self.should_prune_total),
-            ("hopaas_prune_decisions_total", &self.prune_decisions),
-            ("hopaas_auth_failures_total", &self.auth_failures),
-            ("hopaas_http_errors_total", &self.http_errors),
-            ("hopaas_studies_created_total", &self.studies_created),
-            ("hopaas_trials_created_total", &self.trials_created),
-            ("hopaas_trials_completed_total", &self.trials_completed),
-            ("hopaas_trials_pruned_total", &self.trials_pruned),
-            ("hopaas_trials_failed_total", &self.trials_failed),
-            ("hopaas_compact_failures_total", &self.compact_failures),
-            ("hopaas_fleet_workers_registered_total", &self.fleet_workers_registered),
-            ("hopaas_fleet_workers_lost_total", &self.fleet_workers_lost),
-            ("hopaas_fleet_trials_requeued_total", &self.fleet_trials_requeued),
-            ("hopaas_fleet_trials_reassigned_total", &self.fleet_trials_reassigned),
-            ("hopaas_fleet_quota_denials_total", &self.fleet_quota_denials),
-            ("hopaas_fleet_affinity_deferrals_total", &self.fleet_affinity_deferrals),
-            ("hopaas_sampler_cache_hits_total", &self.sampler_cache_hits),
-            ("hopaas_sampler_cache_misses_total", &self.sampler_cache_misses),
+        fn family(out: &mut String, name: &str, kind: &str, help: &str) {
+            out.push_str(&format!("# HELP {name} {help}\n# TYPE {name} {kind}\n"));
+        }
+        let mut out = String::with_capacity(8192);
+        // Build identity: a constant-1 gauge whose labels carry the
+        // version and git hash, so dashboards can correlate deploys
+        // with latency shifts.
+        family(&mut out, "hopaas_build_info", "gauge", "Build identity (constant 1).");
+        out.push_str(&format!(
+            "hopaas_build_info{{version=\"{}\",git_hash=\"{}\"}} 1\n",
+            escape_label(crate::VERSION),
+            escape_label(crate::GIT_HASH.unwrap_or("unknown")),
+        ));
+        let counters: [(&str, &str, &Counter); 20] = [
+            ("hopaas_ask_total", "Ask requests served.", &self.ask_total),
+            ("hopaas_tell_total", "Tell requests served.", &self.tell_total),
+            (
+                "hopaas_should_prune_total",
+                "Prune queries served.",
+                &self.should_prune_total,
+            ),
+            (
+                "hopaas_prune_decisions_total",
+                "Prune queries answered true.",
+                &self.prune_decisions,
+            ),
+            ("hopaas_auth_failures_total", "Rejected credentials.", &self.auth_failures),
+            ("hopaas_http_errors_total", "Non-2xx API responses.", &self.http_errors),
+            ("hopaas_studies_created_total", "Studies created.", &self.studies_created),
+            ("hopaas_trials_created_total", "Trials created.", &self.trials_created),
+            (
+                "hopaas_trials_completed_total",
+                "Trials completed via tell.",
+                &self.trials_completed,
+            ),
+            ("hopaas_trials_pruned_total", "Trials pruned.", &self.trials_pruned),
+            ("hopaas_trials_failed_total", "Trials failed.", &self.trials_failed),
+            (
+                "hopaas_compact_failures_total",
+                "Failed auto-compaction attempts.",
+                &self.compact_failures,
+            ),
+            (
+                "hopaas_fleet_workers_registered_total",
+                "Worker registrations.",
+                &self.fleet_workers_registered,
+            ),
+            (
+                "hopaas_fleet_workers_lost_total",
+                "Workers lost to lease expiry.",
+                &self.fleet_workers_lost,
+            ),
+            (
+                "hopaas_fleet_trials_requeued_total",
+                "Trials requeued after preemption.",
+                &self.fleet_trials_requeued,
+            ),
+            (
+                "hopaas_fleet_trials_reassigned_total",
+                "Requeued trials re-assigned.",
+                &self.fleet_trials_reassigned,
+            ),
+            (
+                "hopaas_fleet_quota_denials_total",
+                "Asks denied by quota (429).",
+                &self.fleet_quota_denials,
+            ),
+            (
+                "hopaas_fleet_affinity_deferrals_total",
+                "Requeued handouts deferred for a healthier site.",
+                &self.fleet_affinity_deferrals,
+            ),
+            (
+                "hopaas_sampler_cache_hits_total",
+                "Asks served from a cached sampler fit.",
+                &self.sampler_cache_hits,
+            ),
+            (
+                "hopaas_sampler_cache_misses_total",
+                "Asks that refit the sampler.",
+                &self.sampler_cache_misses,
+            ),
         ];
-        for (name, c) in counters {
-            out.push_str(&format!("# TYPE {name} counter\n{name} {}\n", c.get()));
+        for (name, help, c) in counters {
+            family(&mut out, name, "counter", help);
+            out.push_str(&format!("{name} {}\n", c.get()));
         }
         {
             let tenants = self.tenant_denials.lock().unwrap();
             if !tenants.is_empty() {
-                out.push_str("# TYPE hopaas_tenant_quota_denials_total counter\n");
+                family(
+                    &mut out,
+                    "hopaas_tenant_quota_denials_total",
+                    "counter",
+                    "Quota denials (429) by tenant.",
+                );
                 for (tenant, n) in tenants.iter() {
                     let tenant = escape_label(tenant);
                     out.push_str(&format!(
@@ -363,34 +460,97 @@ impl Metrics {
                 }
             }
         }
-        out.push_str(&format!(
-            "# TYPE hopaas_wal_records gauge\nhopaas_wal_records {}\n",
-            self.wal_records.get()
-        ));
-        for (name, g) in [
-            ("hopaas_wal_commit_batches", &self.wal_commit_batches),
-            ("hopaas_wal_commit_records", &self.wal_commit_records),
-            ("hopaas_wal_commit_last_batch", &self.wal_commit_last_batch),
-            ("hopaas_wal_commit_max_batch", &self.wal_commit_max_batch),
-            ("hopaas_wal_recovered_records", &self.wal_recovered_records),
-            ("hopaas_wal_truncated_records", &self.wal_truncated_records),
-            ("hopaas_wal_truncated_bytes", &self.wal_truncated_bytes),
-            ("hopaas_wal_filtered_records", &self.wal_filtered_records),
-            ("hopaas_wal_commit_batch_limit", &self.wal_commit_batch_limit),
-            ("hopaas_compact_segments_reused", &self.compact_segments_reused),
-            ("hopaas_compact_pool_threads", &self.compact_pool_threads),
-            ("hopaas_fleet_workers_alive", &self.fleet_workers_alive),
-            ("hopaas_fleet_leases", &self.fleet_leases),
-            ("hopaas_fleet_requeue_depth", &self.fleet_requeue_depth),
-            ("hopaas_view_staleness_epochs", &self.view_staleness_epochs),
-            ("hopaas_events_waiters", &self.events_waiters),
+        for (name, help, g) in [
+            ("hopaas_wal_records", "Records in the active WAL epoch.", &self.wal_records),
+            (
+                "hopaas_wal_commit_batches",
+                "Group-commit batches flushed (fsync count).",
+                &self.wal_commit_batches,
+            ),
+            (
+                "hopaas_wal_commit_records",
+                "Records committed through the group-commit writer.",
+                &self.wal_commit_records,
+            ),
+            (
+                "hopaas_wal_commit_last_batch",
+                "Size of the most recent commit batch.",
+                &self.wal_commit_last_batch,
+            ),
+            (
+                "hopaas_wal_commit_max_batch",
+                "Largest commit batch observed.",
+                &self.wal_commit_max_batch,
+            ),
+            (
+                "hopaas_wal_recovered_records",
+                "Records replayed at the last recovery.",
+                &self.wal_recovered_records,
+            ),
+            (
+                "hopaas_wal_truncated_records",
+                "Torn-tail truncations at the last recovery.",
+                &self.wal_truncated_records,
+            ),
+            (
+                "hopaas_wal_truncated_bytes",
+                "Bytes discarded with torn tails.",
+                &self.wal_truncated_bytes,
+            ),
+            (
+                "hopaas_wal_filtered_records",
+                "Records skipped at recovery (covered by a segment).",
+                &self.wal_filtered_records,
+            ),
+            (
+                "hopaas_wal_commit_batch_limit",
+                "Live adaptive group-commit batch limit.",
+                &self.wal_commit_batch_limit,
+            ),
+            (
+                "hopaas_compact_segments_reused",
+                "Segment cuts skipped by clean-shard reuse.",
+                &self.compact_segments_reused,
+            ),
+            (
+                "hopaas_compact_pool_threads",
+                "Side threads used by the last compaction.",
+                &self.compact_pool_threads,
+            ),
+            (
+                "hopaas_fleet_workers_alive",
+                "Workers currently alive.",
+                &self.fleet_workers_alive,
+            ),
+            ("hopaas_fleet_leases", "Active trial leases.", &self.fleet_leases),
+            (
+                "hopaas_fleet_requeue_depth",
+                "Preempted trials awaiting re-assignment.",
+                &self.fleet_requeue_depth,
+            ),
+            (
+                "hopaas_view_staleness_epochs",
+                "Worst runtime-vs-published view epoch lag.",
+                &self.view_staleness_epochs,
+            ),
+            (
+                "hopaas_events_waiters",
+                "Long-poll readers parked on /events.",
+                &self.events_waiters,
+            ),
+            (
+                "hopaas_uptime_seconds",
+                "Seconds since the engine started.",
+                &self.uptime_seconds,
+            ),
         ] {
-            out.push_str(&format!("# TYPE {name} gauge\n{name} {}\n", g.get()));
+            family(&mut out, name, "gauge", help);
+            out.push_str(&format!("{name} {}\n", g.get()));
         }
         {
             let sites = self.site_leases.lock().unwrap();
             if !sites.is_empty() {
-                out.push_str("# TYPE hopaas_site_leases gauge\n");
+                family(&mut out, "hopaas_site_leases", "gauge", "Active leases by site.");
                 for (site, n) in sites.iter() {
                     // Site names are client-supplied: escape them per the
                     // exposition format or one register with a quote in
@@ -403,7 +563,7 @@ impl Metrics {
         {
             let tenants = self.tenant_leases.lock().unwrap();
             if !tenants.is_empty() {
-                out.push_str("# TYPE hopaas_tenant_leases gauge\n");
+                family(&mut out, "hopaas_tenant_leases", "gauge", "Active leases by tenant.");
                 for (tenant, n) in tenants.iter() {
                     // Tenant names come from token claims: escape them
                     // like site labels.
@@ -413,25 +573,33 @@ impl Metrics {
             }
         }
         if !self.shards.is_empty() {
-            out.push_str(&format!(
-                "# TYPE hopaas_engine_shards gauge\nhopaas_engine_shards {}\n",
-                self.shards.len()
-            ));
-            out.push_str("# TYPE hopaas_shard_ops_total counter\n");
+            family(&mut out, "hopaas_engine_shards", "gauge", "Engine shard count.");
+            out.push_str(&format!("hopaas_engine_shards {}\n", self.shards.len()));
+            family(
+                &mut out,
+                "hopaas_shard_ops_total",
+                "counter",
+                "Mutations applied, by shard.",
+            );
             for (i, s) in self.shards.iter().enumerate() {
                 out.push_str(&format!(
                     "hopaas_shard_ops_total{{shard=\"{i}\"}} {}\n",
                     s.ops.get()
                 ));
             }
-            out.push_str("# TYPE hopaas_shard_studies gauge\n");
+            family(&mut out, "hopaas_shard_studies", "gauge", "Studies owned, by shard.");
             for (i, s) in self.shards.iter().enumerate() {
                 out.push_str(&format!(
                     "hopaas_shard_studies{{shard=\"{i}\"}} {}\n",
                     s.studies.get()
                 ));
             }
-            out.push_str("# TYPE hopaas_shard_tracked_running gauge\n");
+            family(
+                &mut out,
+                "hopaas_shard_tracked_running",
+                "gauge",
+                "Running trials tracked for reaping, by shard.",
+            );
             for (i, s) in self.shards.iter().enumerate() {
                 out.push_str(&format!(
                     "hopaas_shard_tracked_running{{shard=\"{i}\"}} {}\n",
@@ -439,16 +607,32 @@ impl Metrics {
                 ));
             }
         }
-        for (name, h) in [
-            ("hopaas_ask_latency_seconds", &self.ask_latency),
-            ("hopaas_tell_latency_seconds", &self.tell_latency),
-            ("hopaas_should_prune_latency_seconds", &self.should_prune_latency),
-            ("hopaas_compact_segment_seconds", &self.compact_segment_seconds),
-            ("hopaas_sampler_fit_seconds", &self.sampler_fit_seconds),
-            ("hopaas_view_refresh_seconds", &self.view_refresh_seconds),
-            ("hopaas_ask_batch_size", &self.ask_batch_size),
+        for (name, help, h) in [
+            ("hopaas_ask_latency_seconds", "Ask request latency.", &self.ask_latency),
+            ("hopaas_tell_latency_seconds", "Tell request latency.", &self.tell_latency),
+            (
+                "hopaas_should_prune_latency_seconds",
+                "Prune-query latency.",
+                &self.should_prune_latency,
+            ),
+            (
+                "hopaas_compact_segment_seconds",
+                "Wall time of individual segment cuts.",
+                &self.compact_segment_seconds,
+            ),
+            (
+                "hopaas_sampler_fit_seconds",
+                "Wall time of sampler refits on the ask path.",
+                &self.sampler_fit_seconds,
+            ),
+            (
+                "hopaas_view_refresh_seconds",
+                "Wall time of materialized-view publications.",
+                &self.view_refresh_seconds,
+            ),
+            ("hopaas_ask_batch_size", "Requested batch size per ask.", &self.ask_batch_size),
         ] {
-            out.push_str(&format!("# TYPE {name} histogram\n"));
+            family(&mut out, name, "histogram", help);
             let mut cum = 0u64;
             for (i, b) in h.bounds.iter().enumerate() {
                 cum += h.buckets[i].load(Ordering::Relaxed);
@@ -601,6 +785,67 @@ mod tests {
         // lands in the le="8" bucket.
         assert!(text.contains("hopaas_ask_batch_size_bucket{le=\"8\"} 1"));
         assert!((m.ask_batch_size.mean() - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_reservoir_memory_stable_under_one_million_observes() {
+        let h = Histogram::new(default_latency_bounds());
+        for i in 0..1_000_000u64 {
+            // 0..100 ms, uniform.
+            h.observe((i % 1000) as f64 / 10_000.0);
+        }
+        assert_eq!(h.count(), 1_000_000);
+        {
+            let r = h.samples.lock().unwrap();
+            assert_eq!(r.seen, 1_000_000);
+            assert_eq!(r.samples.len(), RESERVOIR_CAP, "retention bounded at the cap");
+            assert!(
+                r.samples.capacity() <= 2 * RESERVOIR_CAP,
+                "no unbounded growth ({} slots allocated)",
+                r.samples.capacity()
+            );
+        }
+        // Past the cap the quantiles still track the live distribution
+        // (the old push-until-full vector froze on the first 100k).
+        let q50 = h.quantile(0.5);
+        assert!((0.03..=0.07).contains(&q50), "median ≈ 50ms, got {q50}");
+        // Bench reset behavior: a reset reservoir starts exact again.
+        h.reset_samples();
+        assert_eq!(h.quantile(0.5), 0.0);
+        h.observe(0.25);
+        assert_eq!(h.quantile(0.5), 0.25);
+        assert_eq!(h.samples.lock().unwrap().seen, 1);
+    }
+
+    #[test]
+    fn build_info_and_uptime_rendered() {
+        let m = Metrics::default();
+        m.uptime_seconds.set(12.0);
+        let text = m.render();
+        assert!(text.contains("# TYPE hopaas_build_info gauge"));
+        assert!(text.contains(&format!("version=\"{}\"", crate::VERSION)));
+        assert!(text.contains("git_hash="));
+        assert!(text.contains("} 1\n"), "build info value is the constant 1");
+        assert!(text.contains("hopaas_uptime_seconds 12"));
+    }
+
+    #[test]
+    fn every_family_has_help_before_type() {
+        let m = Metrics::with_shards(2);
+        m.inc_tenant_denial("alice");
+        *m.site_leases.lock().unwrap() = vec![("cnaf".into(), 1.0)];
+        *m.tenant_leases.lock().unwrap() = vec![("alice".into(), 1.0)];
+        let text = m.render();
+        let lines: Vec<&str> = text.lines().collect();
+        for (i, line) in lines.iter().enumerate() {
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let name = rest.split_whitespace().next().unwrap();
+                assert!(
+                    i > 0 && lines[i - 1].starts_with(&format!("# HELP {name} ")),
+                    "HELP must immediately precede TYPE for {name}"
+                );
+            }
+        }
     }
 
     #[test]

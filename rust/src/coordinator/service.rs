@@ -98,6 +98,10 @@ impl HopaasServer {
         // The view registry's feed signal drives the parked-reader pump:
         // every event append re-polls all parked long-poll connections.
         server.set_waker(engine.views().signal());
+        // Request tracing: the server opens a span (and echoes the
+        // X-Request-Id) around every dispatch; stages recorded by the
+        // engine underneath land in the same span.
+        server.set_tracer(engine.tracer().clone());
         let handle = server.start();
         Ok(HopaasServer { engine, tokens, handle, bootstrap_token })
     }
@@ -715,13 +719,53 @@ pub fn build_router_opts(
         router.get("/api/stats", move |_, _| Response::json(&engine.stats_json()));
     }
 
+    // --- request traces ----------------------------------------------------
+    // Registered before `/api/trace/{id}`: first match wins, so the
+    // literal `recent` segment is never captured as an id.
+    {
+        let engine = engine.clone();
+        router.get("/api/trace/recent", move |req, _| {
+            let limit = match parse_limit(req.query_param("limit").as_deref()) {
+                Ok(n) => n,
+                Err(r) => return r,
+            };
+            let kind = match req.query_param("kind").as_deref() {
+                None => None,
+                Some(s) => match crate::obs::OpKind::parse(s) {
+                    Some(k) => Some(k),
+                    None => {
+                        return Response::error(
+                            422,
+                            &format!("unknown kind '{s}' (ask|tell|prune|fail|read|other)"),
+                        )
+                    }
+                },
+            };
+            let study = match req.query_param("study").as_deref() {
+                None => None,
+                Some(s) => match s.parse::<u64>() {
+                    Ok(id) => Some(id),
+                    Err(_) => return Response::error(422, "'study' must be an integer id"),
+                },
+            };
+            Response::json(&engine.tracer().recent(limit, kind, study))
+        });
+    }
+    {
+        let engine = engine.clone();
+        router.get("/api/trace/{id}", move |_, params| {
+            let id = params.get("id").unwrap_or("");
+            match engine.tracer().get(id) {
+                Some(v) => Response::json(&v),
+                None => Response::error(404, "unknown or evicted trace id"),
+            }
+        });
+    }
+
     // --- metrics + dashboard ----------------------------------------------
     {
         let engine = engine.clone();
-        router.get("/metrics", move |_, _| {
-            engine.refresh_storage_metrics();
-            Response::text(&engine.metrics.render())
-        });
+        router.get("/metrics", move |_, _| Response::text(&engine.render_metrics()));
     }
     router.get("/", |_, _| Response::html(DASHBOARD_HTML));
 

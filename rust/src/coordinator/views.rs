@@ -36,6 +36,7 @@ use super::study::Study;
 use super::trial::{Trial, TrialState};
 use crate::http::Notify;
 use crate::json::write::{write_json_num, write_json_str};
+use crate::obs::{self, Stage};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicI64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -393,7 +394,9 @@ impl ViewRegistry {
             events: Mutex::new(Vec::new()),
         });
         self.slots.write().unwrap().insert(study.id, slot);
-        self.metrics.view_refresh_seconds.observe(t0.elapsed().as_secs_f64());
+        let took = t0.elapsed();
+        self.metrics.view_refresh_seconds.observe(took.as_secs_f64());
+        obs::stage(Stage::ViewPublish, took);
     }
 
     /// New trials appended at `start_slot..`. Called once per acknowledged
@@ -414,7 +417,9 @@ impl ViewRegistry {
             }
             Self::publish(&slot, &b, study);
         }
-        self.metrics.view_refresh_seconds.observe(t0.elapsed().as_secs_f64());
+        let took = t0.elapsed();
+        self.metrics.view_refresh_seconds.observe(took.as_secs_f64());
+        obs::stage(Stage::ViewPublish, took);
     }
 
     /// One existing trial changed (report / tell / prune / fail /
@@ -457,7 +462,9 @@ impl ViewRegistry {
             drop(log);
             self.signal.notify_all();
         }
-        self.metrics.view_refresh_seconds.observe(t0.elapsed().as_secs_f64());
+        let took = t0.elapsed();
+        self.metrics.view_refresh_seconds.observe(took.as_secs_f64());
+        obs::stage(Stage::ViewPublish, took);
     }
 
     fn publish(slot: &StudySlot, b: &ViewBuilder, study: &Study) {

@@ -8,6 +8,7 @@
 
 use super::message::{parse_request, Deferred, ParseState, MAX_HEAD_BYTES};
 use super::{Method, Response, Router};
+use crate::obs::{self, ReqId, Tracer};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -129,6 +130,8 @@ pub struct Server {
     /// Wakeup source for parked (deferred) responses; see
     /// [`Server::set_waker`].
     waker: Option<Arc<Notify>>,
+    /// Request-tracing subsystem; see [`Server::set_tracer`].
+    tracer: Option<Arc<Tracer>>,
 }
 
 /// Handle used to address and stop a server running on its own threads.
@@ -183,6 +186,7 @@ impl Server {
             stats: Arc::new(ServerStats::default()),
             shutdown: Arc::new(AtomicBool::new(false)),
             waker: None,
+            tracer: None,
         })
     }
 
@@ -198,6 +202,16 @@ impl Server {
     /// only on the pump's heartbeat and their deadline.
     pub fn set_waker(&mut self, waker: Arc<Notify>) {
         self.waker = Some(waker);
+    }
+
+    /// Install the request-tracing subsystem. With a tracer set (and
+    /// enabled), every request gets an `X-Request-Id` — taken from the
+    /// client's header or generated — a [`crate::obs::SpanCtx`]
+    /// installed around dispatch so lower layers can record stages, and
+    /// the id echoed on the response (including long-poll responses
+    /// written by the parked-reader pump).
+    pub fn set_tracer(&mut self, tracer: Arc<Tracer>) {
+        self.tracer = Some(tracer);
     }
 
     /// Start accept + worker threads; returns immediately.
@@ -239,6 +253,7 @@ impl Server {
             let config = self.config.clone();
             let shutdown = self.shutdown.clone();
             let pump_tx = pump_tx.clone();
+            let tracer = self.tracer.clone();
             std::thread::spawn(move || loop {
                 let conn = {
                     let guard = rx.lock().unwrap();
@@ -247,7 +262,9 @@ impl Server {
                 match conn {
                     Ok((stream, buf)) => {
                         stats.connections.fetch_add(1, Ordering::Relaxed);
-                        handle_connection(stream, buf, &router, &stats, &config, &shutdown, &pump_tx);
+                        handle_connection(
+                            stream, buf, &router, &stats, &config, &shutdown, &pump_tx, &tracer,
+                        );
                     }
                     Err(_) => return, // sender dropped: shutting down
                 }
@@ -324,6 +341,10 @@ struct ParkedConn {
     residual: Vec<u8>,
     keep_alive: bool,
     head_only: bool,
+    /// Request id to echo on the resolved response (tracing on). The
+    /// span itself was finished at park time — it cannot follow the
+    /// connection across threads — so the pump only stamps the header.
+    req_id: Option<ReqId>,
     deferred: Deferred,
 }
 
@@ -372,9 +393,13 @@ fn run_parked_pump(
                     debug_assert!(!due, "deferred poll must resolve at its deadline");
                     i += 1;
                 }
-                Some(response) => {
+                Some(mut response) => {
                     let conn = parked.swap_remove(i);
-                    let ParkedConn { mut stream, residual, keep_alive, head_only, .. } = conn;
+                    let ParkedConn { mut stream, residual, keep_alive, head_only, req_id, .. } =
+                        conn;
+                    if let Some(id) = req_id {
+                        response.headers.set("x-request-id", id.as_str());
+                    }
                     let bytes = response.encode(keep_alive, head_only);
                     if stream.write_all(&bytes).is_err() || !keep_alive {
                         continue; // drop: peer gone or close requested
@@ -402,6 +427,7 @@ fn run_parked_pump(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn handle_connection(
     mut stream: TcpStream,
     mut buf: Vec<u8>,
@@ -410,6 +436,7 @@ fn handle_connection(
     config: &ServerConfig,
     shutdown: &AtomicBool,
     pump_tx: &mpsc::Sender<ParkedConn>,
+    tracer: &Option<Arc<Tracer>>,
 ) {
     let _ = stream.set_read_timeout(Some(config.read_timeout));
     let mut chunk = [0u8; 16 * 1024];
@@ -430,6 +457,19 @@ fn handle_connection(
                         .map(|c| !c.eq_ignore_ascii_case("close"))
                         .unwrap_or(true);
                     let head_only = request.method == Method::Head;
+                    // Open a span around dispatch: lower layers record
+                    // stages into it through the thread-local slot, and
+                    // the id is echoed on the response below.
+                    let traced = tracer.as_ref().filter(|t| t.enabled());
+                    let mut req_id: Option<ReqId> = None;
+                    if let Some(t) = traced {
+                        let span = t.begin(
+                            request.headers.get("x-request-id"),
+                            obs::classify(request.method.as_str(), &request.path),
+                        );
+                        req_id = Some(span.id());
+                        obs::install(span);
+                    }
                     let mut response = dispatch_safely(router, &request);
                     if let Some(mut deferred) = response.deferred.take() {
                         // Long-poll: park the connection on the pump
@@ -440,12 +480,21 @@ fn handle_connection(
                         match resolved {
                             Some(r) => response = r,
                             None => {
+                                // The span cannot follow the connection
+                                // to the pump thread: close it over the
+                                // synchronous (registration) part.
+                                if let Some(t) = traced {
+                                    if let Some(span) = obs::take() {
+                                        t.finish(span, response.status);
+                                    }
+                                }
                                 let residual = std::mem::take(&mut buf);
                                 let parked = ParkedConn {
                                     stream,
                                     residual,
                                     keep_alive,
                                     head_only,
+                                    req_id,
                                     deferred,
                                 };
                                 match pump_tx.send(parked) {
@@ -465,6 +514,17 @@ fn handle_connection(
                                 }
                             }
                         }
+                    }
+                    // Finish the span (drains the thread-local slot; a
+                    // no-op when it already closed at park time) and
+                    // echo the request id before encoding.
+                    if let Some(t) = traced {
+                        if let Some(span) = obs::take() {
+                            t.finish(span, response.status);
+                        }
+                    }
+                    if let Some(id) = req_id {
+                        response.headers.set("x-request-id", id.as_str());
                     }
                     let bytes = response.encode(keep_alive, head_only);
                     if stream.write_all(&bytes).is_err() {

@@ -41,6 +41,7 @@ pub mod http;
 pub mod json;
 pub mod linalg;
 pub mod objectives;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod store;
@@ -50,3 +51,8 @@ pub mod testutil;
 
 /// Version string reported by the `/api/version` endpoint.
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Git hash baked in at build time (`HOPAAS_GIT_HASH=$(git rev-parse
+/// --short HEAD) cargo build`); `None` on plain builds — rendered as
+/// `"unknown"` in `hopaas_build_info` and `/api/stats`.
+pub const GIT_HASH: Option<&str> = option_env!("HOPAAS_GIT_HASH");

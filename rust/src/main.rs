@@ -84,6 +84,14 @@ COMMANDS:
                                        debugging escape hatch)
                     --events-poll-timeout S  max long-poll park time for
                                        GET /api/studies/{id}/events (default 25)
+                    --trace-capacity N retained request traces in the ring
+                                       buffer (default 2048; 0 disables tracing)
+                    --trace-sample P   fraction of requests whose trace is
+                                       retained (default 1.0; slow ops always)
+                    --trace-slow-ms MS requests at least this slow are always
+                                       retained + logged (default 250; 0 = off)
+                    --log-json         one structured JSON log line per
+                                       retained request, on stderr
                     --config FILE      JSON config (flags override)
   token             mint an API token offline
                     --secret S --user NAME --ttl SECONDS

@@ -1,0 +1,986 @@
+//! End-to-end request tracing.
+//!
+//! Every API request gets an **`X-Request-Id`** — accepted from the
+//! client when present (so worker retries and requeues keep one id
+//! across attempts), generated otherwise — and a [`SpanCtx`] that
+//! follows the request through the stack: HTTP accept → router →
+//! service → engine (fleet admission, shard lock, sampler fit) →
+//! group-commit WAL (queue wait / shared fsync / ack wait, attributed
+//! per request by the writer's ack) → materialized-view publish. Each
+//! stage records a `(offset, duration)` pair into a fixed array inside
+//! the span — pure stack/TLS writes, no allocation, no locks — and the
+//! span is flushed into the [`Tracer`]'s striped ring buffer only when
+//! the request *finishes*, and only if it was head-sampled
+//! (`--trace-sample`) or slower than the slow-op threshold
+//! (`--trace-slow-ms`, always retained regardless of sampling).
+//!
+//! The ring buffer is fixed-capacity ([`TracerConfig::capacity`],
+//! `--trace-capacity`, 0 disables tracing entirely) and pre-allocated:
+//! a flushed span overwrites the oldest slot of its stripe, every field
+//! is a fixed-size copy (`ReqId`, [`Tag`], the stage array), so the
+//! steady state performs zero heap allocation. Retained traces are
+//! served by `GET /api/trace/recent` and `GET /api/trace/{id}`; the
+//! slowest recent operation per kind is exported as a
+//! `hopaas_slow_trace_seconds{api,trace_id}` exemplar next to the
+//! latency histograms in `/metrics`; and `--log-json` emits one
+//! structured log line per retained request with
+//! tenant/study/worker/site attribution.
+//!
+//! Propagation uses a thread-local current-span slot rather than
+//! threading a context argument through every engine signature: request
+//! handling is synchronous on one server worker thread (the WAL ack and
+//! the sampler fit both return to the calling thread), so
+//! [`install`]/[`take`] around the router dispatch make the span
+//! visible to every layer underneath without touching their APIs.
+
+use crate::json::Value;
+use crate::rng;
+use std::cell::RefCell;
+use std::fmt;
+use std::io::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+/// Stage slots per span. A typical ask touches ~8 (admission, two shard
+/// locks, sampler fit, three WAL stages, view publish); extras (e.g.
+/// batched asks re-locking) spill into the overflow counter rather than
+/// growing the span.
+pub const MAX_STAGES: usize = 16;
+
+/// Bytes kept of a request id (client-supplied ids are truncated to
+/// this; generated ids are 20 bytes).
+const ID_CAP: usize = 48;
+
+/// Bytes kept of a tenant/worker/site attribution tag.
+const TAG_CAP: usize = 24;
+
+// ---------------------------------------------------------------------------
+// ReqId
+// ---------------------------------------------------------------------------
+
+/// A request id: fixed-size, `Copy`, header- and JSON-safe by
+/// construction (sanitized on parse, hex on generation).
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct ReqId {
+    buf: [u8; ID_CAP],
+    len: u8,
+}
+
+impl ReqId {
+    /// Sanitize a client-supplied header value: keep `[A-Za-z0-9._:-]`,
+    /// truncate to [`ID_CAP`]. `None` when nothing survives (the server
+    /// then generates an id instead).
+    pub fn parse(raw: &str) -> Option<ReqId> {
+        let mut buf = [0u8; ID_CAP];
+        let mut len = 0usize;
+        for &b in raw.trim().as_bytes() {
+            if len == ID_CAP {
+                break;
+            }
+            if b.is_ascii_alphanumeric() || matches!(b, b'-' | b'_' | b'.' | b':') {
+                buf[len] = b;
+                len += 1;
+            }
+        }
+        if len == 0 {
+            None
+        } else {
+            Some(ReqId { buf, len: len as u8 })
+        }
+    }
+
+    /// Generate a fresh id (`req-` + 16 hex digits) from the wall clock
+    /// and a process-wide counter — unique enough to stitch logs across
+    /// services without coordination.
+    pub fn generate(counter: u64) -> ReqId {
+        let nanos = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(0);
+        let h = rng::mix(nanos, counter);
+        let mut buf = [0u8; ID_CAP];
+        buf[..4].copy_from_slice(b"req-");
+        const HEX: &[u8; 16] = b"0123456789abcdef";
+        for i in 0..16 {
+            buf[4 + i] = HEX[((h >> (60 - 4 * i)) & 0xf) as usize];
+        }
+        ReqId { buf, len: 20 }
+    }
+
+    pub fn as_str(&self) -> &str {
+        std::str::from_utf8(&self.buf[..self.len as usize]).unwrap_or("")
+    }
+}
+
+impl fmt::Display for ReqId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl fmt::Debug for ReqId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ReqId({})", self.as_str())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tag — fixed-size attribution string (tenant / worker / site)
+// ---------------------------------------------------------------------------
+
+/// Fixed-capacity attribution tag. Copyable so flushing a span into the
+/// ring buffer never allocates.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub struct Tag {
+    buf: [u8; TAG_CAP],
+    len: u8,
+}
+
+impl Tag {
+    pub const EMPTY: Tag = Tag { buf: [0; TAG_CAP], len: 0 };
+
+    pub fn new(s: &str) -> Tag {
+        let mut buf = [0u8; TAG_CAP];
+        let bytes = s.as_bytes();
+        // Truncate on a char boundary so as_str never sees torn UTF-8.
+        let mut take = bytes.len().min(TAG_CAP);
+        while take > 0 && !s.is_char_boundary(take) {
+            take -= 1;
+        }
+        buf[..take].copy_from_slice(&bytes[..take]);
+        Tag { buf, len: take as u8 }
+    }
+
+    pub fn as_str(&self) -> &str {
+        std::str::from_utf8(&self.buf[..self.len as usize]).unwrap_or("")
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// OpKind and Stage
+// ---------------------------------------------------------------------------
+
+/// Operation class of a traced request — the `kind` filter of
+/// `/api/trace/recent` and the exemplar grouping in `/metrics`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum OpKind {
+    Ask,
+    Tell,
+    Prune,
+    Fail,
+    Read,
+    Other,
+}
+
+impl OpKind {
+    pub const ALL: [OpKind; 6] = [
+        OpKind::Ask,
+        OpKind::Tell,
+        OpKind::Prune,
+        OpKind::Fail,
+        OpKind::Read,
+        OpKind::Other,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Ask => "ask",
+            OpKind::Tell => "tell",
+            OpKind::Prune => "prune",
+            OpKind::Fail => "fail",
+            OpKind::Read => "read",
+            OpKind::Other => "other",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<OpKind> {
+        OpKind::ALL.iter().copied().find(|k| k.name() == s)
+    }
+
+    fn index(self) -> usize {
+        match self {
+            OpKind::Ask => 0,
+            OpKind::Tell => 1,
+            OpKind::Prune => 2,
+            OpKind::Fail => 3,
+            OpKind::Read => 4,
+            OpKind::Other => 5,
+        }
+    }
+}
+
+/// Classify a request into an op kind from its method and path. Mutation
+/// endpoints are matched by their terminal segment; everything read-only
+/// is `Read`.
+pub fn classify(method: &str, path: &str) -> OpKind {
+    let path = path.split('?').next().unwrap_or(path);
+    if method == "GET" || method == "HEAD" {
+        return OpKind::Read;
+    }
+    // The op verb is not always terminal: token-suffixed routes like
+    // `/api/ask/{token}` put it mid-path, so scan every segment.
+    for seg in path.split('/') {
+        match seg {
+            "ask" => return OpKind::Ask,
+            "tell" => return OpKind::Tell,
+            "should_prune" | "prune" => return OpKind::Prune,
+            "fail" => return OpKind::Fail,
+            _ => {}
+        }
+    }
+    OpKind::Other
+}
+
+/// A pipeline stage whose wait/work time is attributed to the request.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Stage {
+    /// Fleet admission (quota + fair-share) wait in `ask`.
+    Admission,
+    /// Wait to acquire the study's shard lock.
+    ShardLock,
+    /// Sampler fit (model rebuild) outside the shard lock.
+    SamplerFit,
+    /// WAL: enqueue → the writer starting the commit batch.
+    WalQueue,
+    /// WAL: the shared fsync of the commit batch this request joined.
+    WalFsync,
+    /// WAL: full append roundtrip (enqueue → durable ack received).
+    WalAck,
+    /// Materialized-view publish under the shard lock.
+    ViewPublish,
+}
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Admission => "admission",
+            Stage::ShardLock => "shard_lock",
+            Stage::SamplerFit => "sampler_fit",
+            Stage::WalQueue => "wal_queue",
+            Stage::WalFsync => "wal_fsync",
+            Stage::WalAck => "wal_ack",
+            Stage::ViewPublish => "view_publish",
+        }
+    }
+}
+
+/// One recorded stage: when it happened (µs offset from request start)
+/// and how long it took.
+#[derive(Clone, Copy)]
+pub struct StageRec {
+    stage: Stage,
+    at_us: u32,
+    dur_us: u32,
+}
+
+impl StageRec {
+    const EMPTY: StageRec = StageRec { stage: Stage::Admission, at_us: 0, dur_us: 0 };
+}
+
+// ---------------------------------------------------------------------------
+// SpanCtx + thread-local propagation
+// ---------------------------------------------------------------------------
+
+/// The live trace of one in-flight request. Fully fixed-size: creating,
+/// mutating, and flushing one performs no heap allocation.
+pub struct SpanCtx {
+    id: ReqId,
+    kind: OpKind,
+    start: Instant,
+    start_unix_ms: u64,
+    stages: [StageRec; MAX_STAGES],
+    n_stages: u8,
+    /// Stages dropped because the fixed array filled.
+    overflow: u8,
+    study: u64,
+    tenant: Tag,
+    worker: Tag,
+    site: Tag,
+    sampled: bool,
+}
+
+impl SpanCtx {
+    fn new(id: ReqId, kind: OpKind, sampled: bool) -> SpanCtx {
+        let start_unix_ms = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0);
+        SpanCtx {
+            id,
+            kind,
+            start: Instant::now(),
+            start_unix_ms,
+            stages: [StageRec::EMPTY; MAX_STAGES],
+            n_stages: 0,
+            overflow: 0,
+            study: 0,
+            tenant: Tag::EMPTY,
+            worker: Tag::EMPTY,
+            site: Tag::EMPTY,
+            sampled,
+        }
+    }
+
+    pub fn id(&self) -> ReqId {
+        self.id
+    }
+
+    fn record(&mut self, stage: Stage, dur_us: u64) {
+        let n = self.n_stages as usize;
+        if n == MAX_STAGES {
+            self.overflow = self.overflow.saturating_add(1);
+            return;
+        }
+        let at = self.start.elapsed().as_micros();
+        self.stages[n] = StageRec {
+            stage,
+            at_us: at.min(u32::MAX as u128) as u32,
+            dur_us: dur_us.min(u32::MAX as u64) as u32,
+        };
+        self.n_stages += 1;
+    }
+}
+
+thread_local! {
+    static CURRENT: RefCell<Option<SpanCtx>> = const { RefCell::new(None) };
+}
+
+/// Make `span` the current request on this thread (server worker, right
+/// before router dispatch).
+pub fn install(span: SpanCtx) {
+    CURRENT.with(|c| *c.borrow_mut() = Some(span));
+}
+
+/// Remove and return the current span (server worker, right after
+/// dispatch returns).
+pub fn take() -> Option<SpanCtx> {
+    CURRENT.with(|c| c.borrow_mut().take())
+}
+
+/// Whether a span is being traced on this thread.
+pub fn active() -> bool {
+    CURRENT.with(|c| c.borrow().is_some())
+}
+
+/// The current request id, if a span is active — what the WAL writer
+/// ledger and outgoing log lines attribute to.
+pub fn current_id() -> Option<ReqId> {
+    CURRENT.with(|c| c.borrow().as_ref().map(|s| s.id))
+}
+
+/// Record a stage with a measured duration.
+pub fn stage(stage: Stage, dur: Duration) {
+    stage_us(stage, dur.as_micros().min(u64::MAX as u128) as u64);
+}
+
+/// Record a stage with a duration already in microseconds (WAL ack
+/// attribution arrives this way).
+pub fn stage_us(st: Stage, dur_us: u64) {
+    CURRENT.with(|c| {
+        if let Some(span) = c.borrow_mut().as_mut() {
+            span.record(st, dur_us);
+        }
+    });
+}
+
+/// Attribute the request to a study.
+pub fn set_study(id: u64) {
+    CURRENT.with(|c| {
+        if let Some(span) = c.borrow_mut().as_mut() {
+            span.study = id;
+        }
+    });
+}
+
+/// Attribute the request to a tenant.
+pub fn set_tenant(tenant: &str) {
+    CURRENT.with(|c| {
+        if let Some(span) = c.borrow_mut().as_mut() {
+            span.tenant = Tag::new(tenant);
+        }
+    });
+}
+
+/// Attribute the request to a worker.
+pub fn set_worker(worker: &str) {
+    CURRENT.with(|c| {
+        if let Some(span) = c.borrow_mut().as_mut() {
+            span.worker = Tag::new(worker);
+        }
+    });
+}
+
+/// Attribute the request to a site.
+pub fn set_site(site: &str) {
+    CURRENT.with(|c| {
+        if let Some(span) = c.borrow_mut().as_mut() {
+            span.site = Tag::new(site);
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Tracer — the striped ring buffer + exemplars + structured log
+// ---------------------------------------------------------------------------
+
+/// Tracing configuration (the `--trace-*` / `--log-json` flags).
+#[derive(Clone, Copy, Debug)]
+pub struct TracerConfig {
+    /// Total retained-trace slots across all stripes. 0 disables
+    /// tracing entirely (spans are never created).
+    pub capacity: usize,
+    /// Head-sampling probability in `[0, 1]`: the fraction of requests
+    /// whose trace is retained (and logged) regardless of latency.
+    pub sample: f64,
+    /// Requests at least this slow are always retained and logged, even
+    /// when head sampling skipped them. 0 marks nothing as slow.
+    pub slow_ms: u64,
+    /// Emit one structured JSON log line per retained request.
+    pub log_json: bool,
+}
+
+impl Default for TracerConfig {
+    fn default() -> Self {
+        TracerConfig { capacity: 2048, sample: 1.0, slow_ms: 250, log_json: false }
+    }
+}
+
+/// A retained trace in the ring buffer. Fixed-size and `Copy` — slot
+/// reuse is a plain overwrite.
+#[derive(Clone, Copy)]
+struct TraceRecord {
+    used: bool,
+    seq: u64,
+    id: ReqId,
+    kind: OpKind,
+    status: u16,
+    slow: bool,
+    start_unix_ms: u64,
+    total_us: u64,
+    study: u64,
+    tenant: Tag,
+    worker: Tag,
+    site: Tag,
+    stages: [StageRec; MAX_STAGES],
+    n_stages: u8,
+    overflow: u8,
+}
+
+impl TraceRecord {
+    const EMPTY: TraceRecord = TraceRecord {
+        used: false,
+        seq: 0,
+        id: ReqId { buf: [0; ID_CAP], len: 0 },
+        kind: OpKind::Other,
+        status: 0,
+        slow: false,
+        start_unix_ms: 0,
+        total_us: 0,
+        study: 0,
+        tenant: Tag::EMPTY,
+        worker: Tag::EMPTY,
+        site: Tag::EMPTY,
+        stages: [StageRec::EMPTY; MAX_STAGES],
+        n_stages: 0,
+        overflow: 0,
+    };
+
+    fn render(&self, full: bool) -> Value {
+        let mut o = Value::obj();
+        o.set("id", self.id.as_str())
+            .set("kind", self.kind.name())
+            .set("status", self.status as i64)
+            .set("slow", self.slow)
+            .set("start_unix_ms", self.start_unix_ms)
+            .set("total_us", self.total_us);
+        if self.study != 0 {
+            o.set("study", self.study);
+        }
+        if !self.tenant.is_empty() {
+            o.set("tenant", self.tenant.as_str());
+        }
+        if !self.worker.is_empty() {
+            o.set("worker", self.worker.as_str());
+        }
+        if !self.site.is_empty() {
+            o.set("site", self.site.as_str());
+        }
+        if full {
+            let mut stages = Vec::new();
+            for rec in &self.stages[..self.n_stages as usize] {
+                let mut s = Value::obj();
+                s.set("stage", rec.stage.name())
+                    .set("at_us", rec.at_us as u64)
+                    .set("dur_us", rec.dur_us as u64);
+                stages.push(Value::Obj(s));
+            }
+            o.set("stages", Value::Arr(stages));
+            if self.overflow > 0 {
+                o.set("stages_dropped", self.overflow as u64);
+            }
+        } else {
+            o.set("stages", self.n_stages as u64);
+        }
+        Value::Obj(o)
+    }
+}
+
+struct Stripe {
+    slots: Vec<TraceRecord>,
+    next: usize,
+}
+
+/// Per-kind slow-op exemplar: the slowest request of the current
+/// rolling window, exported next to the latency histograms.
+struct SlowSlot {
+    id: ReqId,
+    seconds: f64,
+    present: bool,
+    /// Finishes seen this window; the slot resets every
+    /// [`EXEMPLAR_WINDOW`] so a one-off spike ages out.
+    window: u32,
+}
+
+const EXEMPLAR_WINDOW: u32 = 4096;
+
+/// Number of ring stripes — bounds flush contention across server
+/// worker threads without per-slot locks.
+const STRIPES: usize = 8;
+
+/// The tracing subsystem: owns the retained-trace ring buffer, the
+/// slow-op exemplars, and the structured-log writer. One per engine,
+/// shared with the HTTP server.
+pub struct Tracer {
+    config: TracerConfig,
+    stripes: Vec<Mutex<Stripe>>,
+    /// Flush sequence — total ordering of retained traces.
+    seq: AtomicU64,
+    /// Id-generation / sampling counter.
+    ids: AtomicU64,
+    /// Requests finished (traced at all, retained or not).
+    finished: AtomicU64,
+    /// Requests whose trace was retained in the ring.
+    retained: AtomicU64,
+    /// Requests that crossed the slow threshold.
+    slow: AtomicU64,
+    exemplars: Vec<Mutex<SlowSlot>>,
+}
+
+impl Tracer {
+    pub fn new(config: TracerConfig) -> Tracer {
+        let capacity = config.capacity;
+        let n_stripes = if capacity == 0 { 0 } else { STRIPES.min(capacity) };
+        let mut stripes = Vec::with_capacity(n_stripes);
+        for i in 0..n_stripes {
+            // Spread the capacity across stripes, remainder to the first.
+            let base = capacity / n_stripes;
+            let extra = usize::from(i < capacity % n_stripes);
+            stripes.push(Mutex::new(Stripe {
+                slots: vec![TraceRecord::EMPTY; base + extra],
+                next: 0,
+            }));
+        }
+        let exemplars = OpKind::ALL
+            .iter()
+            .map(|_| {
+                Mutex::new(SlowSlot {
+                    id: ReqId { buf: [0; ID_CAP], len: 0 },
+                    seconds: 0.0,
+                    present: false,
+                    window: 0,
+                })
+            })
+            .collect();
+        Tracer {
+            config,
+            stripes,
+            seq: AtomicU64::new(0),
+            ids: AtomicU64::new(0),
+            finished: AtomicU64::new(0),
+            retained: AtomicU64::new(0),
+            slow: AtomicU64::new(0),
+            exemplars,
+        }
+    }
+
+    /// Whether tracing is on at all (`--trace-capacity 0` turns the
+    /// whole subsystem off; the server then skips span creation).
+    pub fn enabled(&self) -> bool {
+        self.config.capacity > 0
+    }
+
+    pub fn config(&self) -> &TracerConfig {
+        &self.config
+    }
+
+    /// Start a span for a request: reuse the client's sanitized
+    /// `X-Request-Id` or generate one, and take the head-sampling
+    /// decision (deterministic in the request counter).
+    pub fn begin(&self, incoming: Option<&str>, kind: OpKind) -> SpanCtx {
+        let n = self.ids.fetch_add(1, Ordering::Relaxed);
+        let id = incoming.and_then(ReqId::parse).unwrap_or_else(|| ReqId::generate(n));
+        let sampled = if self.config.sample >= 1.0 {
+            true
+        } else if self.config.sample <= 0.0 {
+            false
+        } else {
+            let roll = rng::mix(0x7472_6163_655f_6964, n) % 1_000_000;
+            (roll as f64) < self.config.sample * 1e6
+        };
+        SpanCtx::new(id, kind, sampled)
+    }
+
+    /// Finish a span: decide retention (sampled ∨ slow), flush into the
+    /// ring, feed the exemplar slot, emit the log line. Runs after the
+    /// response is built — never on the request's critical path stages.
+    pub fn finish(&self, span: SpanCtx, status: u16) {
+        self.finished.fetch_add(1, Ordering::Relaxed);
+        let total_us = span.start.elapsed().as_micros().min(u64::MAX as u128) as u64;
+        let slow = self.config.slow_ms > 0 && total_us >= self.config.slow_ms * 1000;
+        if slow {
+            self.slow.fetch_add(1, Ordering::Relaxed);
+        }
+        self.note_exemplar(span.kind, span.id, total_us, slow);
+        if !(span.sampled || slow) {
+            return;
+        }
+        self.retained.fetch_add(1, Ordering::Relaxed);
+        if !self.stripes.is_empty() {
+            let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+            let stripe = &self.stripes[(seq as usize) % self.stripes.len()];
+            let mut g = stripe.lock().unwrap();
+            let pos = g.next;
+            g.next = (g.next + 1) % g.slots.len().max(1);
+            let slot = &mut g.slots[pos];
+            *slot = TraceRecord {
+                used: true,
+                seq,
+                id: span.id,
+                kind: span.kind,
+                status,
+                slow,
+                start_unix_ms: span.start_unix_ms,
+                total_us,
+                study: span.study,
+                tenant: span.tenant,
+                worker: span.worker,
+                site: span.site,
+                stages: span.stages,
+                n_stages: span.n_stages,
+                overflow: span.overflow,
+            };
+        }
+        if self.config.log_json {
+            self.log_line(&span, status, total_us, slow);
+        }
+    }
+
+    /// Track the slowest request of the rolling window for `kind`. Slow
+    /// requests always displace a faster exemplar; the window reset
+    /// keeps a historic spike from pinning the slot forever.
+    fn note_exemplar(&self, kind: OpKind, id: ReqId, total_us: u64, slow: bool) {
+        let mut slot = self.exemplars[kind.index()].lock().unwrap();
+        slot.window += 1;
+        if slot.window >= EXEMPLAR_WINDOW {
+            slot.window = 0;
+            slot.present = false;
+        }
+        let seconds = total_us as f64 / 1e6;
+        if !slot.present || seconds > slot.seconds || (slow && seconds >= slot.seconds) {
+            slot.id = id;
+            slot.seconds = seconds;
+            slot.present = true;
+        }
+    }
+
+    /// One structured JSON log line per retained request, on stderr.
+    fn log_line(&self, span: &SpanCtx, status: u16, total_us: u64, slow: bool) {
+        let mut o = Value::obj();
+        o.set("ts_unix_ms", span.start_unix_ms)
+            .set("level", if slow { "warn" } else { "info" })
+            .set("request_id", span.id.as_str())
+            .set("kind", span.kind.name())
+            .set("status", status as i64)
+            .set("total_us", total_us)
+            .set("slow", slow);
+        if span.study != 0 {
+            o.set("study", span.study);
+        }
+        if !span.tenant.is_empty() {
+            o.set("tenant", span.tenant.as_str());
+        }
+        if !span.worker.is_empty() {
+            o.set("worker", span.worker.as_str());
+        }
+        if !span.site.is_empty() {
+            o.set("site", span.site.as_str());
+        }
+        let mut stages = Value::obj();
+        for rec in &span.stages[..span.n_stages as usize] {
+            // Repeated stages (e.g. the two shard-lock sections of an
+            // ask) accumulate under one key.
+            let prior = stages
+                .get(rec.stage.name())
+                .and_then(|v| v.as_u64())
+                .unwrap_or(0);
+            stages.set(rec.stage.name(), prior + rec.dur_us as u64);
+        }
+        o.set("stages_us", Value::Obj(stages));
+        let line = Value::Obj(o).to_string();
+        let stderr = std::io::stderr();
+        let mut w = stderr.lock();
+        let _ = writeln!(w, "{line}");
+    }
+
+    /// Full stage timeline of a retained trace, newest match first.
+    pub fn get(&self, id: &str) -> Option<Value> {
+        let mut best: Option<TraceRecord> = None;
+        for stripe in &self.stripes {
+            let g = stripe.lock().unwrap();
+            for rec in &g.slots {
+                if rec.used && rec.id.as_str() == id {
+                    match &best {
+                        Some(b) if b.seq >= rec.seq => {}
+                        _ => best = Some(*rec),
+                    }
+                }
+            }
+        }
+        best.map(|rec| rec.render(true))
+    }
+
+    /// Recent retained traces, newest first, optionally filtered by op
+    /// kind and study id.
+    pub fn recent(&self, limit: usize, kind: Option<OpKind>, study: Option<u64>) -> Value {
+        let mut rows: Vec<TraceRecord> = Vec::new();
+        for stripe in &self.stripes {
+            let g = stripe.lock().unwrap();
+            for rec in &g.slots {
+                if !rec.used {
+                    continue;
+                }
+                if let Some(k) = kind {
+                    if rec.kind != k {
+                        continue;
+                    }
+                }
+                if let Some(s) = study {
+                    if rec.study != s {
+                        continue;
+                    }
+                }
+                rows.push(*rec);
+            }
+        }
+        rows.sort_by(|a, b| b.seq.cmp(&a.seq));
+        rows.truncate(limit);
+        Value::Arr(rows.iter().map(|r| r.render(false)).collect())
+    }
+
+    /// Tracer counters for `/api/stats`.
+    pub fn stats_json(&self) -> Value {
+        let mut o = Value::obj();
+        o.set("enabled", self.enabled())
+            .set("capacity", self.config.capacity as u64)
+            .set("sample", self.config.sample)
+            .set("slow_ms", self.config.slow_ms)
+            .set("finished", self.finished.load(Ordering::Relaxed))
+            .set("retained", self.retained.load(Ordering::Relaxed))
+            .set("slow", self.slow.load(Ordering::Relaxed));
+        Value::Obj(o)
+    }
+
+    /// Append the `hopaas_slow_trace_seconds` exemplar series to a
+    /// `/metrics` scrape: per op kind, the slowest request of the
+    /// current window with its trace id as a label — the bridge from an
+    /// aggregate histogram to one inspectable `/api/trace/{id}`.
+    pub fn render_exemplars(&self, out: &mut String) {
+        out.push_str(
+            "# HELP hopaas_slow_trace_seconds Slowest recent request per op kind; \
+             trace_id resolves via /api/trace/{id}.\n",
+        );
+        out.push_str("# TYPE hopaas_slow_trace_seconds gauge\n");
+        for kind in OpKind::ALL {
+            let slot = self.exemplars[kind.index()].lock().unwrap();
+            if slot.present {
+                out.push_str(&format!(
+                    "hopaas_slow_trace_seconds{{api=\"{}\",trace_id=\"{}\"}} {}\n",
+                    kind.name(),
+                    slot.id.as_str(),
+                    slot.seconds
+                ));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tracer(capacity: usize, sample: f64, slow_ms: u64) -> Tracer {
+        Tracer::new(TracerConfig { capacity, sample, slow_ms, log_json: false })
+    }
+
+    #[test]
+    fn req_id_parse_sanitizes_and_truncates() {
+        assert_eq!(ReqId::parse("abc-123").unwrap().as_str(), "abc-123");
+        assert_eq!(ReqId::parse("  a b\"c\n ").unwrap().as_str(), "abc");
+        assert!(ReqId::parse("\"\n ").is_none());
+        assert!(ReqId::parse("").is_none());
+        let long = "x".repeat(200);
+        assert_eq!(ReqId::parse(&long).unwrap().as_str().len(), ID_CAP);
+    }
+
+    #[test]
+    fn req_id_generate_is_unique_per_counter() {
+        let a = ReqId::generate(1);
+        let b = ReqId::generate(2);
+        assert_ne!(a.as_str(), b.as_str());
+        assert!(a.as_str().starts_with("req-"));
+        assert_eq!(a.as_str().len(), 20);
+    }
+
+    #[test]
+    fn tag_truncates_on_char_boundary() {
+        let t = Tag::new("héllo-wörld-with-a-long-tail");
+        assert!(t.as_str().len() <= TAG_CAP);
+        assert!(t.as_str().starts_with("héllo"));
+    }
+
+    #[test]
+    fn classify_maps_mutations_and_reads() {
+        assert_eq!(classify("POST", "/api/studies/3/ask"), OpKind::Ask);
+        assert_eq!(classify("POST", "/api/studies/3/trials/4/tell"), OpKind::Tell);
+        assert_eq!(
+            classify("POST", "/api/studies/3/trials/4/should_prune"),
+            OpKind::Prune
+        );
+        assert_eq!(classify("POST", "/api/studies/3/trials/4/fail"), OpKind::Fail);
+        // Token-suffixed routes: the verb segment is mid-path.
+        assert_eq!(classify("POST", "/api/ask/SECRET-TOKEN"), OpKind::Ask);
+        assert_eq!(classify("POST", "/api/should_prune/tok"), OpKind::Prune);
+        assert_eq!(classify("GET", "/api/studies?limit=5"), OpKind::Read);
+        assert_eq!(classify("POST", "/api/studies"), OpKind::Other);
+    }
+
+    #[test]
+    fn span_records_stages_and_attribution_through_tls() {
+        let t = tracer(16, 1.0, 0);
+        let span = t.begin(Some("client-id-1"), OpKind::Ask);
+        install(span);
+        assert!(active());
+        assert_eq!(current_id().unwrap().as_str(), "client-id-1");
+        stage_us(Stage::Admission, 5);
+        stage_us(Stage::ShardLock, 7);
+        stage_us(Stage::WalFsync, 1200);
+        set_study(42);
+        set_tenant("atlas");
+        set_worker("w-1");
+        set_site("cnaf");
+        let span = take().unwrap();
+        assert!(!active());
+        t.finish(span, 200);
+        let v = t.get("client-id-1").expect("trace retained");
+        assert_eq!(v.get("kind").as_str(), Some("ask"));
+        assert_eq!(v.get("study").as_u64(), Some(42));
+        assert_eq!(v.get("tenant").as_str(), Some("atlas"));
+        assert_eq!(v.get("worker").as_str(), Some("w-1"));
+        assert_eq!(v.get("site").as_str(), Some("cnaf"));
+        let stages = match v.get("stages") {
+            Value::Arr(a) => a,
+            other => panic!("stages not an array: {other:?}"),
+        };
+        assert_eq!(stages.len(), 3);
+        assert_eq!(stages[0].get("stage").as_str(), Some("admission"));
+        assert_eq!(stages[2].get("stage").as_str(), Some("wal_fsync"));
+        assert_eq!(stages[2].get("dur_us").as_u64(), Some(1200));
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_recent_is_newest_first() {
+        let t = tracer(4, 1.0, 0);
+        for i in 0..10 {
+            let span = t.begin(Some(&format!("id-{i}")), OpKind::Read);
+            t.finish(span, 200);
+        }
+        let recent = match t.recent(10, None, None) {
+            Value::Arr(a) => a,
+            other => panic!("not an array: {other:?}"),
+        };
+        assert_eq!(recent.len(), 4, "capacity bounds retention");
+        assert_eq!(recent[0].get("id").as_str(), Some("id-9"));
+        assert!(t.get("id-0").is_none(), "oldest evicted");
+        assert!(t.get("id-9").is_some());
+    }
+
+    #[test]
+    fn sampling_skips_but_slow_is_always_retained() {
+        let t = tracer(64, 0.0, 1); // sample nothing; slow ≥ 1ms
+        let fast = t.begin(Some("fast-1"), OpKind::Read);
+        t.finish(fast, 200);
+        assert!(t.get("fast-1").is_none(), "unsampled fast op dropped");
+        let slow = t.begin(Some("slow-1"), OpKind::Ask);
+        std::thread::sleep(Duration::from_millis(5));
+        t.finish(slow, 200);
+        let v = t.get("slow-1").expect("slow op retained despite sample=0");
+        assert_eq!(v.get("slow").as_bool(), Some(true));
+        assert_eq!(t.stats_json().get("slow").as_u64(), Some(1));
+    }
+
+    #[test]
+    fn recent_filters_by_kind_and_study() {
+        let t = tracer(32, 1.0, 0);
+        let mut span = t.begin(Some("ask-a"), OpKind::Ask);
+        span.study = 7;
+        t.finish(span, 200);
+        let span = t.begin(Some("read-b"), OpKind::Read);
+        t.finish(span, 200);
+        let asks = match t.recent(10, Some(OpKind::Ask), None) {
+            Value::Arr(a) => a,
+            other => panic!("not an array: {other:?}"),
+        };
+        assert_eq!(asks.len(), 1);
+        assert_eq!(asks[0].get("id").as_str(), Some("ask-a"));
+        let study7 = match t.recent(10, None, Some(7)) {
+            Value::Arr(a) => a,
+            other => panic!("not an array: {other:?}"),
+        };
+        assert_eq!(study7.len(), 1);
+        let none = match t.recent(10, Some(OpKind::Tell), None) {
+            Value::Arr(a) => a,
+            other => panic!("not an array: {other:?}"),
+        };
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn disabled_tracer_retains_nothing() {
+        let t = tracer(0, 1.0, 0);
+        assert!(!t.enabled());
+        let span = t.begin(Some("x"), OpKind::Ask);
+        t.finish(span, 200);
+        assert!(t.get("x").is_none());
+    }
+
+    #[test]
+    fn exemplars_render_for_slowest_request() {
+        let t = tracer(8, 1.0, 0);
+        let span = t.begin(Some("slowest-ask"), OpKind::Ask);
+        std::thread::sleep(Duration::from_millis(2));
+        t.finish(span, 200);
+        let span = t.begin(Some("fast-ask"), OpKind::Ask);
+        t.finish(span, 200);
+        let mut out = String::new();
+        t.render_exemplars(&mut out);
+        assert!(out.contains("# TYPE hopaas_slow_trace_seconds gauge"));
+        assert!(out.contains("api=\"ask\""));
+        assert!(out.contains("trace_id=\"slowest-ask\""));
+        assert!(!out.contains("fast-ask"), "only the slowest is exported");
+    }
+}

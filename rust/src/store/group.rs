@@ -38,10 +38,13 @@
 //! on the writer.
 
 use super::{Record, SegmentWriter, Storage};
-use std::collections::HashMap;
+use crate::json::Value;
+use crate::obs::{self, ReqId};
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender, TryRecvError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 /// Tuning for the writer thread.
 #[derive(Clone, Copy, Debug)]
@@ -109,12 +112,53 @@ impl GroupWalStats {
     }
 }
 
-type Ack = SyncSender<Result<(), String>>;
+/// Per-request commit attribution, returned with every durable append
+/// ack: how long the job waited in the writer queue, the duration of
+/// the *shared* fsync its batch issued, and the batch size. The engine
+/// turns these into `wal_queue`/`wal_fsync` trace stages, so a slow ask
+/// shows whether it paid queue wait or flush time — and how many other
+/// requests amortized that flush.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WalAckInfo {
+    /// Microseconds between enqueue and the batch starting to commit.
+    pub queue_us: u64,
+    /// Microseconds of the batch's single fsync.
+    pub fsync_us: u64,
+    /// Records committed (and acknowledged) by the batch.
+    pub batch_len: u64,
+}
+
+/// One committed batch in the writer's bounded attribution ledger: its
+/// seq range, fsync duration, and **which trace ids it acknowledged** —
+/// the per-request side of "who shared this flush", surfaced under
+/// `wal_commit.recent_batches` in `/api/stats`.
+#[derive(Clone, Debug)]
+pub struct BatchTrace {
+    pub seq_first: u64,
+    pub seq_last: u64,
+    pub records: u64,
+    pub fsync_us: u64,
+    pub traces: Vec<String>,
+}
+
+/// Committed batches kept in the attribution ledger.
+const LEDGER_CAP: usize = 64;
+
+type Ack = SyncSender<Result<WalAckInfo, String>>;
 type CountAck = SyncSender<Result<u64, String>>;
+
+/// An append in flight: records, the requesting trace (if the calling
+/// thread is handling a traced request), enqueue time, completion.
+struct AppendJob {
+    records: Vec<Record>,
+    trace: Option<ReqId>,
+    enqueued: Instant,
+    ack: Ack,
+}
 
 enum Cmd {
     /// One or more records committed (and acknowledged) together.
-    Append(Vec<Record>, Ack),
+    Append(AppendJob),
     /// Compaction phase 1: rotate the log to a new epoch.
     BeginCompact(Ack),
     /// Compaction phase 2 (spec): report the shard's exact cut — the
@@ -138,6 +182,10 @@ enum Cmd {
 pub struct GroupWal {
     tx: Option<SyncSender<Cmd>>,
     stats: Arc<GroupWalStats>,
+    /// Bounded ledger of recent commit batches with the trace ids each
+    /// one acknowledged (written by the writer thread, read at
+    /// `/api/stats` time).
+    ledger: Arc<Mutex<VecDeque<BatchTrace>>>,
     /// Segment-cutting handle over the writer's storage, cloned out to
     /// compaction-pool threads (shares the fault hook + killed flag).
     cutter: SegmentWriter,
@@ -160,39 +208,47 @@ impl GroupWal {
         let (tx, rx) = std::sync::mpsc::sync_channel(config.queue_depth.max(1));
         let stats = Arc::new(GroupWalStats::default());
         let thread_stats = stats.clone();
+        let ledger = Arc::new(Mutex::new(VecDeque::with_capacity(LEDGER_CAP)));
+        let thread_ledger = ledger.clone();
         let cutter = storage.segment_writer();
         let handle = std::thread::Builder::new()
             .name("hopaas-wal".into())
             .spawn(move || {
-                Writer::new(storage, config, next_seq, prev_segments, thread_stats).run(rx)
+                Writer::new(storage, config, next_seq, prev_segments, thread_stats, thread_ledger)
+                    .run(rx)
             })
             .expect("spawn wal writer");
-        GroupWal { tx: Some(tx), stats, cutter, handle: Some(handle) }
+        GroupWal { tx: Some(tx), stats, ledger, cutter, handle: Some(handle) }
     }
 
     /// Durably append one record: blocks until the record's batch has
     /// been fsynced. Errors if the write or flush failed — the caller
-    /// must not acknowledge the mutation in that case.
-    pub fn append(&self, record: Record) -> Result<(), String> {
-        self.roundtrip(|ack| Cmd::Append(vec![record], ack))
+    /// must not acknowledge the mutation in that case. Returns the
+    /// batch attribution ([`WalAckInfo`]) for the request's trace.
+    pub fn append(&self, record: Record) -> Result<WalAckInfo, String> {
+        self.append_many(vec![record])
     }
 
     /// Durably append several records in one roundtrip: all of them
     /// share (at most) one fsync and one channel wait. Used by bulk
     /// paths like reaping, where per-record roundtrips would serialize
     /// K fsync latencies under a shard lock.
-    pub fn append_many(&self, records: Vec<Record>) -> Result<(), String> {
+    pub fn append_many(&self, records: Vec<Record>) -> Result<WalAckInfo, String> {
         if records.is_empty() {
-            return Ok(());
+            return Ok(WalAckInfo::default());
         }
-        self.roundtrip(|ack| Cmd::Append(records, ack))
+        // The calling thread holds the request's span (if any): tag the
+        // job so the commit batch can record which traces it acks.
+        let trace = obs::current_id();
+        let enqueued = Instant::now();
+        self.roundtrip(|ack| Cmd::Append(AppendJob { records, trace, enqueued, ack }))
     }
 
     /// Compaction phase 1: rotate the log to a fresh epoch. No shard
     /// lock is required — appends racing with the rotation land on one
     /// side of it or the other, and both sides replay correctly.
     pub fn begin_compact(&self) -> Result<(), String> {
-        self.roundtrip(Cmd::BeginCompact)
+        self.roundtrip(Cmd::BeginCompact).map(|_| ())
     }
 
     /// Compaction phase 2 (spec): the shard's exact segment cut — the
@@ -256,7 +312,29 @@ impl GroupWal {
         &self.stats
     }
 
-    fn roundtrip(&self, make: impl FnOnce(Ack) -> Cmd) -> Result<(), String> {
+    /// The recent-batch attribution ledger as JSON (newest last): seq
+    /// range, fsync duration, and the trace ids each batch acked.
+    pub fn ledger_json(&self) -> Value {
+        let g = self.ledger.lock().unwrap();
+        Value::Arr(
+            g.iter()
+                .map(|b| {
+                    let mut o = Value::obj();
+                    o.set("seq_first", b.seq_first)
+                        .set("seq_last", b.seq_last)
+                        .set("records", b.records)
+                        .set("fsync_us", b.fsync_us)
+                        .set(
+                            "traces",
+                            b.traces.iter().map(String::as_str).collect::<Vec<_>>(),
+                        );
+                    Value::Obj(o)
+                })
+                .collect(),
+        )
+    }
+
+    fn roundtrip(&self, make: impl FnOnce(Ack) -> Cmd) -> Result<WalAckInfo, String> {
         let tx = self.tx.as_ref().expect("wal writer running");
         let (ack_tx, ack_rx) = std::sync::mpsc::sync_channel(1);
         tx.send(make(ack_tx))
@@ -296,6 +374,7 @@ struct Writer {
     /// clean-shard reuse table.
     prev_segments: HashMap<u32, (String, u64)>,
     stats: Arc<GroupWalStats>,
+    ledger: Arc<Mutex<VecDeque<BatchTrace>>>,
 }
 
 impl Writer {
@@ -305,6 +384,7 @@ impl Writer {
         next_seq: u64,
         prev_segments: HashMap<u32, (String, u64)>,
         stats: Arc<GroupWalStats>,
+        ledger: Arc<Mutex<VecDeque<BatchTrace>>>,
     ) -> Writer {
         let config = GroupWalConfig {
             batch_max: config.batch_max.max(1),
@@ -321,6 +401,7 @@ impl Writer {
             shard_next: HashMap::new(),
             prev_segments,
             stats,
+            ledger,
         }
     }
 
@@ -335,9 +416,13 @@ impl Writer {
                 },
             };
             match cmd {
-                Cmd::Append(records, ack) => pending = self.commit_batch(records, ack, &rx),
+                Cmd::Append(job) => pending = self.commit_batch(job, &rx),
                 Cmd::BeginCompact(ack) => {
-                    let result = self.storage.begin_compact().map_err(|e| e.to_string());
+                    let result = self
+                        .storage
+                        .begin_compact()
+                        .map(|()| WalAckInfo::default())
+                        .map_err(|e| e.to_string());
                     if result.is_ok() {
                         self.shard_next.clear();
                     }
@@ -382,23 +467,18 @@ impl Writer {
     /// Commit one append batch (greedily drained from the queue) under
     /// a single fsync. Returns a deferred non-append command if the
     /// drain hit one.
-    fn commit_batch(
-        &mut self,
-        records: Vec<Record>,
-        ack: Ack,
-        rx: &Receiver<Cmd>,
-    ) -> Option<Cmd> {
-        let mut total = records.len();
-        let mut jobs: Vec<(Vec<Record>, Ack)> = vec![(records, ack)];
+    fn commit_batch(&mut self, job: AppendJob, rx: &Receiver<Cmd>) -> Option<Cmd> {
+        let mut total = job.records.len();
+        let mut jobs: Vec<AppendJob> = vec![job];
         // Greedy drain: everything already queued joins this commit,
         // which is what collapses per-mutation fsyncs under load while
         // adding zero latency when idle.
         let mut deferred = None;
         while total < self.limit {
             match rx.try_recv() {
-                Ok(Cmd::Append(r, a)) => {
-                    total += r.len();
-                    jobs.push((r, a));
+                Ok(Cmd::Append(j)) => {
+                    total += j.records.len();
+                    jobs.push(j);
                 }
                 Ok(other) => {
                     deferred = Some(other);
@@ -407,13 +487,16 @@ impl Writer {
                 Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
             }
         }
+        // Every job enqueued before this instant: the gap to it is the
+        // per-job queue wait reported in its ack.
+        let batch_start = Instant::now();
 
         let mark = self.storage.wal_stats();
         let seq_mark = self.next_seq;
         let shard_mark = self.shard_next.clone();
         let mut result: Result<(), String> = Ok(());
-        for (recs, _) in jobs.iter_mut() {
-            for rec in recs.iter_mut() {
+        for job in jobs.iter_mut() {
+            for rec in job.records.iter_mut() {
                 rec.seq = self.next_seq;
                 self.next_seq += 1;
                 self.shard_next.insert(rec.shard, rec.seq + 1);
@@ -424,10 +507,13 @@ impl Writer {
                 }
             }
         }
+        let mut fsync_us = 0u64;
         if result.is_ok() {
+            let t0 = Instant::now();
             if let Err(e) = self.storage.sync() {
                 result = Err(e.to_string());
             }
+            fsync_us = t0.elapsed().as_micros().min(u64::MAX as u128) as u64;
         }
         if result.is_err() {
             // Every job in this batch is NACKed, so none of its frames
@@ -462,13 +548,33 @@ impl Writer {
                     }
                     self.stats.batch_limit.store(self.limit as u64, Ordering::Relaxed);
                 }
+                // Record the batch — seq range, fsync cost, and the
+                // trace ids it acknowledged — in the bounded ledger.
+                let traces: Vec<String> =
+                    jobs.iter().filter_map(|j| j.trace.map(|t| t.as_str().to_string())).collect();
+                let mut g = self.ledger.lock().unwrap();
+                if g.len() == LEDGER_CAP {
+                    g.pop_front();
+                }
+                g.push_back(BatchTrace {
+                    seq_first: seq_mark,
+                    seq_last: self.next_seq.saturating_sub(1),
+                    records: n,
+                    fsync_us,
+                    traces,
+                });
             }
             Err(_) => {
                 self.stats.failed_batches.fetch_add(1, Ordering::Relaxed);
             }
         }
-        for (_, ack) in jobs {
-            let _ = ack.send(result.clone());
+        for job in jobs {
+            let queue_us = batch_start
+                .saturating_duration_since(job.enqueued)
+                .as_micros()
+                .min(u64::MAX as u128) as u64;
+            let info = WalAckInfo { queue_us, fsync_us, batch_len: total as u64 };
+            let _ = job.ack.send(result.clone().map(|()| info));
         }
         deferred
     }
@@ -609,6 +715,40 @@ mod tests {
         let events = reload(d.path());
         assert_eq!(events, vec![rec(1), rec(3)]);
         assert_eq!(events[1].seq, 1, "seq rolled back with the frames");
+    }
+
+    #[test]
+    fn append_ack_attributes_batch_and_ledger_records_traces() {
+        let d = TempDir::new("group-ledger");
+        let storage = Storage::open(d.path()).unwrap();
+        let w = GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new());
+        // Tag the calling thread with a span: the append must carry the
+        // request's trace id into the commit batch's ledger entry.
+        let tracer = obs::Tracer::new(obs::TracerConfig::default());
+        let span = tracer.begin(Some("trace-append-1"), obs::OpKind::Ask);
+        obs::install(span);
+        let info = w.append(rec(1)).unwrap();
+        let span = obs::take().unwrap();
+        tracer.finish(span, 200);
+        assert_eq!(info.batch_len, 1);
+        // Untraced appends land in the ledger with no trace ids.
+        let info2 = w.append_many(vec![rec(2), rec(3)]).unwrap();
+        assert_eq!(info2.batch_len, 2);
+        let ledger = w.ledger_json();
+        let arr = ledger.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("traces").at(0).as_str(), Some("trace-append-1"));
+        assert_eq!(arr[0].get("seq_first").as_u64(), Some(0));
+        assert_eq!(arr[0].get("seq_last").as_u64(), Some(0));
+        assert_eq!(arr[1].get("records").as_u64(), Some(2));
+        assert_eq!(arr[1].get("seq_last").as_u64(), Some(2));
+        assert!(arr[1].get("traces").as_arr().unwrap().is_empty());
+        // The ledger is bounded: it keeps the most recent batches only.
+        for i in 0..(LEDGER_CAP as i64 + 10) {
+            w.append(rec(100 + i)).unwrap();
+        }
+        let arr_len = w.ledger_json().as_arr().unwrap().len();
+        assert_eq!(arr_len, LEDGER_CAP);
     }
 
     #[test]

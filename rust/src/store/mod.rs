@@ -57,7 +57,7 @@
 mod group;
 mod wal;
 
-pub use group::{GroupWal, GroupWalConfig, GroupWalStats};
+pub use group::{BatchTrace, GroupWal, GroupWalConfig, GroupWalStats, WalAckInfo};
 pub use wal::{Wal, WalError, WalStats};
 
 use crate::json::Value;

@@ -19,15 +19,27 @@
 use crate::http::{Client, ClientError};
 use crate::json::Value;
 use std::net::SocketAddr;
+use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Client-side errors, including HTTP error envelopes.
 #[derive(Debug, thiserror::Error)]
 pub enum WorkerError {
     #[error("transport: {0}")]
     Transport(#[from] ClientError),
-    #[error("server returned {status}: {detail}")]
-    Api { status: u16, detail: String },
+    #[error("server returned {status}: {detail} (request {})", .request_id.as_deref().unwrap_or("-"))]
+    Api {
+        status: u16,
+        detail: String,
+        /// `X-Request-Id` of the failing call — quote it to the server
+        /// operator: `GET /api/trace/{id}` recovers the full per-stage
+        /// timeline of exactly this request.
+        request_id: Option<String>,
+    },
 }
+
+/// Process-wide client instance counter: keeps per-operation request
+/// ids unique across the many clients a campaign spawns in one process.
+static CLIENT_SEQ: AtomicU64 = AtomicU64::new(1);
 
 /// Declarative study definition (what the `ask` body carries).
 #[derive(Clone, Debug)]
@@ -176,6 +188,11 @@ pub struct TrialHandle {
     /// True when this trial was originally handed to a worker that was
     /// lost and has been re-assigned to us via its lease expiry.
     pub requeued: bool,
+    /// `X-Request-Id` of the `ask` that delivered this trial (client-
+    /// generated, echoed by the server). Recoverable server-side via
+    /// `GET /api/trace/{id}`; requeued trials carry the id of the ask
+    /// that re-delivered them, not the original worker's.
+    pub request_id: Option<String>,
 }
 
 /// Blocking HOPAAS client over one keep-alive connection.
@@ -190,11 +207,24 @@ pub struct HopaasClient {
     /// token's user claim is the tenant and this field is ignored
     /// server-side — it cannot be used to spoof another tenant.
     tenant: Option<String>,
+    /// This client's slot in [`CLIENT_SEQ`] plus a per-client counter:
+    /// together with the pid they mint collision-free request ids.
+    nonce: u64,
+    seq: u64,
+    last_request_id: Option<String>,
 }
 
 impl HopaasClient {
     pub fn connect(addr: SocketAddr, token: String) -> Result<HopaasClient, WorkerError> {
-        Ok(HopaasClient { http: Client::connect(addr)?, token, worker_id: None, tenant: None })
+        Ok(HopaasClient {
+            http: Client::connect(addr)?,
+            token,
+            worker_id: None,
+            tenant: None,
+            nonce: CLIENT_SEQ.fetch_add(1, Ordering::Relaxed),
+            seq: 0,
+            last_request_id: None,
+        })
     }
 
     /// Declare a tenant identity on asks (effective only against
@@ -211,14 +241,57 @@ impl HopaasClient {
     }
 
     fn check(resp: crate::http::Response) -> Result<Value, WorkerError> {
+        // GETs don't send an id; the server may still have generated and
+        // echoed one worth surfacing on errors.
+        let request_id = resp.headers.get("x-request-id").map(str::to_string);
+        Self::check_with(resp, request_id)
+    }
+
+    fn check_with(
+        resp: crate::http::Response,
+        request_id: Option<String>,
+    ) -> Result<Value, WorkerError> {
         let body = resp.json_body().unwrap_or(Value::Null);
         if resp.status != 200 {
             return Err(WorkerError::Api {
                 status: resp.status,
                 detail: body.get("detail").as_str().unwrap_or("?").to_string(),
+                request_id,
             });
         }
         Ok(body)
+    }
+
+    /// Mint the `X-Request-Id` for the next operation.
+    fn next_request_id(&mut self) -> String {
+        self.seq += 1;
+        format!("wkr-{}-{}-{}", std::process::id(), self.nonce, self.seq)
+    }
+
+    /// POST with an `X-Request-Id` attached. The transport's transparent
+    /// retry on a stale keep-alive connection re-sends the same header
+    /// set, so one id names one logical operation across retries and the
+    /// server's trace buffer dedupes nothing.
+    fn post_traced(&mut self, path: &str, value: &Value) -> Result<Value, WorkerError> {
+        let rid = self.next_request_id();
+        let body = value.to_string().into_bytes();
+        let resp = self.http.request(
+            "POST",
+            path,
+            &[("content-type", "application/json"), ("x-request-id", &rid)],
+            Some(&body),
+        )?;
+        // Prefer the echoed id (the server sanitizes); keep what we sent
+        // when tracing is disabled server-side.
+        let echoed = resp.headers.get("x-request-id").map(str::to_string);
+        self.last_request_id = Some(echoed.unwrap_or(rid));
+        Self::check_with(resp, self.last_request_id.clone())
+    }
+
+    /// `X-Request-Id` of the most recent traced operation, as echoed by
+    /// the server.
+    pub fn last_request_id(&self) -> Option<&str> {
+        self.last_request_id.as_deref()
     }
 
     /// Server version string.
@@ -240,7 +313,7 @@ impl HopaasClient {
         let path = format!("/api/workers/register/{}", self.token);
         let mut o = Value::obj();
         o.set("name", name).set("site", site).set("gpu", gpu);
-        let v = Self::check(self.http.post_json(&path, &Value::Obj(o))?)?;
+        let v = self.post_traced(&path, &Value::Obj(o))?;
         let id = v.get("worker_id").as_u64().unwrap_or(0);
         self.worker_id = Some(id);
         Ok(id)
@@ -252,12 +325,13 @@ impl HopaasClient {
             return Err(WorkerError::Api {
                 status: 0,
                 detail: "not registered as a worker".into(),
+                request_id: None,
             });
         };
         let path = format!("/api/workers/heartbeat/{}", self.token);
         let mut o = Value::obj();
         o.set("worker_id", wid);
-        let v = Self::check(self.http.post_json(&path, &Value::Obj(o))?)?;
+        let v = self.post_traced(&path, &Value::Obj(o))?;
         Ok(v.get("leases").as_u64().unwrap_or(0))
     }
 
@@ -271,8 +345,7 @@ impl HopaasClient {
         let path = format!("/api/workers/deregister/{}", self.token);
         let mut o = Value::obj();
         o.set("worker_id", wid);
-        let resp = self.http.post_json(&path, &Value::Obj(o))?;
-        match Self::check(resp) {
+        match self.post_traced(&path, &Value::Obj(o)) {
             Ok(v) => {
                 self.worker_id = None;
                 Ok(v.get("requeued").as_u64().unwrap_or(0))
@@ -317,6 +390,7 @@ impl HopaasClient {
             study_id: v.get("study_id").as_u64().unwrap_or(0),
             params: v.get("params").clone(),
             requeued: v.get("requeued").as_bool().unwrap_or(false),
+            request_id: None,
         }
     }
 
@@ -325,8 +399,10 @@ impl HopaasClient {
     pub fn ask(&mut self, spec: &StudySpec) -> Result<TrialHandle, WorkerError> {
         let path = format!("/api/ask/{}", self.token);
         let body = self.ask_request(spec);
-        let v = Self::check(self.http.post_json(&path, &body)?)?;
-        Ok(Self::trial_handle(&v))
+        let v = self.post_traced(&path, &body)?;
+        let mut t = Self::trial_handle(&v);
+        t.request_id = self.last_request_id.clone();
+        Ok(t)
     }
 
     /// Batched `ask`: request up to `n` trials in one round trip (one
@@ -339,9 +415,18 @@ impl HopaasClient {
         if let Value::Obj(o) = &mut body {
             o.set("n", n as u64);
         }
-        let v = Self::check(self.http.post_json(&path, &body)?)?;
+        let v = self.post_traced(&path, &body)?;
         let trials = v.get("trials").as_arr().unwrap_or(&[]);
-        Ok(trials.iter().map(Self::trial_handle).collect())
+        // One round trip, one admission pass, one trace: every trial in
+        // the batch shares the ask's request id.
+        Ok(trials
+            .iter()
+            .map(|tv| {
+                let mut t = Self::trial_handle(tv);
+                t.request_id = self.last_request_id.clone();
+                t
+            })
+            .collect())
     }
 
     /// `tell`: finalize with the objective value. Returns `is_best`.
@@ -349,7 +434,7 @@ impl HopaasClient {
         let path = format!("/api/tell/{}", self.token);
         let mut o = Value::obj();
         o.set("trial_id", trial.trial_id).set("value", value);
-        let v = Self::check(self.http.post_json(&path, &Value::Obj(o))?)?;
+        let v = self.post_traced(&path, &Value::Obj(o))?;
         Ok(v.get("is_best").as_bool().unwrap_or(false))
     }
 
@@ -365,7 +450,7 @@ impl HopaasClient {
             "values",
             Value::Arr(values.iter().map(|&v| Value::Num(v)).collect()),
         );
-        let v = Self::check(self.http.post_json(&path, &Value::Obj(o))?)?;
+        let v = self.post_traced(&path, &Value::Obj(o))?;
         Ok(v.get("on_pareto_front").as_bool().unwrap_or(false))
     }
 
@@ -386,7 +471,7 @@ impl HopaasClient {
         o.set("trial_id", trial.trial_id)
             .set("step", step)
             .set("value", value);
-        let v = Self::check(self.http.post_json(&path, &Value::Obj(o))?)?;
+        let v = self.post_traced(&path, &Value::Obj(o))?;
         Ok(v.get("should_prune").as_bool().unwrap_or(false))
     }
 
@@ -395,7 +480,7 @@ impl HopaasClient {
         let path = format!("/api/fail/{}", self.token);
         let mut o = Value::obj();
         o.set("trial_id", trial.trial_id);
-        Self::check(self.http.post_json(&path, &Value::Obj(o))?)?;
+        self.post_traced(&path, &Value::Obj(o))?;
         Ok(())
     }
 
@@ -471,9 +556,33 @@ mod tests {
         let mut c = HopaasClient::connect(s.addr(), "bogus".into()).unwrap();
         let spec = StudySpec::new("x").uniform("x", 0.0, 1.0);
         match c.ask(&spec) {
-            Err(WorkerError::Api { status: 401, .. }) => {}
-            other => panic!("expected 401, got {other:?}"),
+            Err(WorkerError::Api { status: 401, request_id: Some(rid), .. }) => {
+                // The error carries the id we sent, echoed by the server.
+                assert!(rid.starts_with("wkr-"), "{rid}");
+            }
+            other => panic!("expected 401 with request id, got {other:?}"),
         }
+        s.stop();
+    }
+
+    #[test]
+    fn request_ids_attach_to_trials_and_traces() {
+        let s = server();
+        let mut c = HopaasClient::connect(s.addr(), s.bootstrap_token.clone()).unwrap();
+        let spec = StudySpec::new("rid").uniform("x", 0.0, 1.0).sampler("random");
+        let t = c.ask(&spec).unwrap();
+        let rid = t.request_id.clone().expect("ask carries its request id");
+        assert!(rid.starts_with("wkr-"), "{rid}");
+        assert_eq!(c.last_request_id(), Some(rid.as_str()));
+        // The id names a recoverable server-side trace of exactly that ask.
+        let trace = s.engine.tracer().get(&rid).expect("trace retained");
+        assert_eq!(trace.get("kind").as_str(), Some("ask"));
+        // Each operation mints a fresh id.
+        c.tell(&t, 1.0).unwrap();
+        let tell_rid = c.last_request_id().unwrap().to_string();
+        assert_ne!(tell_rid, rid);
+        let trace = s.engine.tracer().get(&tell_rid).expect("tell trace retained");
+        assert_eq!(trace.get("kind").as_str(), Some("tell"));
         s.stop();
     }
 
@@ -531,7 +640,7 @@ mod tests {
         let t1 = c.ask(&spec).unwrap();
         // One lease held, tenant quota 1: the denial names the tenant.
         match c.ask(&spec) {
-            Err(WorkerError::Api { status: 429, detail }) => {
+            Err(WorkerError::Api { status: 429, detail, .. }) => {
                 assert!(detail.contains("alice"), "{detail}");
             }
             other => panic!("expected tenant 429, got {other:?}"),

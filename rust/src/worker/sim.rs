@@ -226,6 +226,20 @@ impl CampaignReport {
     }
 }
 
+/// Attach fleet context to an API error so campaign failure reports
+/// name the node and the server-side trace id of the failing call —
+/// `GET /api/trace/{id}` on the coordinator recovers its timeline.
+fn attribute(e: WorkerError, node: &NodeProfile, client: &HopaasClient) -> WorkerError {
+    match e {
+        WorkerError::Api { status, detail, request_id } => WorkerError::Api {
+            status,
+            detail: format!("{detail} (node {})", node.label()),
+            request_id: request_id.or_else(|| client.last_request_id().map(str::to_string)),
+        },
+        other => other,
+    }
+}
+
 fn node_loop(
     campaign: &Campaign,
     node: &NodeProfile,
@@ -301,7 +315,7 @@ fn node_loop(
                 )?;
                 continue;
             }
-            Err(e) => return Err(e),
+            Err(e) => return Err(attribute(e, node, &client)),
         };
         for trial in trials {
             if trial.requeued {
@@ -359,7 +373,7 @@ fn node_loop(
                         stolen = true;
                         break;
                     }
-                    Err(e) => return Err(e),
+                    Err(e) => return Err(attribute(e, node, &client)),
                 }
                 if campaign.fleet {
                     // Renew the worker lease alongside the progress report.
@@ -405,7 +419,7 @@ fn node_loop(
                     // Fleet mode: a straggler tell after our lease expired
                     // and the re-homed trial finished elsewhere.
                     Err(WorkerError::Api { status: 409, .. }) if campaign.fleet => {}
-                    Err(e) => return Err(e),
+                    Err(e) => return Err(attribute(e, node, &client)),
                 }
             }
         }
@@ -570,6 +584,34 @@ mod tests {
         let report = c.run().unwrap();
         assert!(report.viewer_pages > 0, "viewers read nothing: {report:?}");
         assert!(report.completed + report.pruned + report.preempted > 0);
+        s.stop();
+    }
+
+    #[test]
+    fn campaign_errors_carry_node_and_request_id() {
+        // A campaign against an authenticated server with a bad token
+        // dies on its first ask; the surfaced error names the failing
+        // node and carries the trace id of the rejected request, which
+        // is recoverable from the coordinator's trace buffer.
+        let s = HopaasServer::start(
+            "127.0.0.1:0",
+            HopaasConfig { auth_required: true, ..Default::default() },
+        )
+        .unwrap();
+        let mut c = Campaign::new(s.addr(), "bogus".into(), Objective::Sphere);
+        c.n_nodes = 1;
+        c.max_trials = 2;
+        match c.run() {
+            Err(WorkerError::Api { status: 401, detail, request_id }) => {
+                assert!(detail.contains("(node marconi100-00)"), "{detail}");
+                let rid = request_id.expect("trace id attached to the error");
+                assert!(
+                    s.engine.tracer().get(&rid).is_some(),
+                    "trace {rid} not recoverable"
+                );
+            }
+            other => panic!("expected attributed 401, got {other:?}"),
+        }
         s.stop();
     }
 

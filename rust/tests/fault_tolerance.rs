@@ -88,6 +88,7 @@ fn restart_preserves_all_told_trials() {
             study_id: sid,
             params: Value::Null,
             requeued: false,
+            request_id: None,
         };
         c.tell(&t, 0.001).unwrap();
         // Best over {0.0, 0.1, ..., 0.9, 0.001} is still the told 0.0.
@@ -294,6 +295,7 @@ fn engine_rejects_writes_on_unknown_trials_after_recovery() {
         study_id: 1,
         params: parse("{}").unwrap(),
         requeued: false,
+        request_id: None,
     };
     match c.tell(&ghost, 1.0) {
         Err(hopaas::worker::WorkerError::Api { status: 404, .. }) => {}

@@ -1,0 +1,361 @@
+//! E8 — end-to-end request tracing: a caller-chosen `X-Request-Id`
+//! submitted on an `ask` is recoverable via `GET /api/trace/{id}` with a
+//! per-stage timeline spanning admission, shard lock, sampler fit, the
+//! WAL commit it joined (queue / shared fsync / ack) and the view
+//! publish; every response echoes its request id; `/api/trace/recent`
+//! filters by kind and study; and the `/metrics` scrape passes a
+//! whole-scrape Prometheus exposition lint (HELP/TYPE ordering, label
+//! escaping, bucket monotonicity and `+Inf` totals).
+
+use hopaas::coordinator::service::{HopaasConfig, HopaasServer};
+use hopaas::http::Client;
+use hopaas::json::{parse, Value};
+use std::collections::HashMap;
+
+struct TempDir(std::path::PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        let p = std::env::temp_dir().join(format!("hopaas-it-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        std::fs::create_dir_all(&p).unwrap();
+        TempDir(p)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn durable_config(dir: &std::path::Path) -> HopaasConfig {
+    HopaasConfig {
+        auth_required: false,
+        data_dir: Some(dir.to_path_buf()),
+        ..Default::default()
+    }
+}
+
+fn ask_body() -> Value {
+    parse(
+        r#"{
+        "study_name": "traced",
+        "properties": {"x": {"low": 0.0, "high": 1.0}},
+        "sampler": {"name": "tpe"}
+    }"#,
+    )
+    .unwrap()
+}
+
+fn tell_body(trial_id: u64, value: f64) -> Value {
+    let mut o = Value::obj();
+    o.set("trial_id", trial_id).set("value", value);
+    Value::Obj(o)
+}
+
+#[test]
+fn custom_request_id_recovers_full_stage_timeline() {
+    let dir = TempDir::new("obs-trace");
+    let server = HopaasServer::start("127.0.0.1:0", durable_config(&dir.0)).unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+
+    // Seed one completed trial first: sampler fits are cached per
+    // tell-epoch, so a tell in between guarantees the traced ask below
+    // performs (and therefore records) a fresh fit.
+    let ask = c.post_json("/api/ask/x", &ask_body()).unwrap().json_body().unwrap();
+    let tid = ask.get("trial_id").as_u64().unwrap();
+    assert_eq!(c.post_json("/api/tell/x", &tell_body(tid, 1.0)).unwrap().status, 200);
+
+    // The traced ask, with a caller-chosen id.
+    let body = ask_body().to_string().into_bytes();
+    let resp = c
+        .request(
+            "POST",
+            "/api/ask/x",
+            &[("content-type", "application/json"), ("x-request-id", "it-ask-0007")],
+            Some(&body),
+        )
+        .unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.headers.get("x-request-id"), Some("it-ask-0007"), "id not echoed");
+
+    let r = c.get("/api/trace/it-ask-0007").unwrap();
+    assert_eq!(r.status, 200);
+    let trace = r.json_body().unwrap();
+    assert_eq!(trace.get("id").as_str(), Some("it-ask-0007"));
+    assert_eq!(trace.get("kind").as_str(), Some("ask"));
+    assert_eq!(trace.get("status").as_u64(), Some(200));
+    assert!(trace.get("total_us").as_u64().is_some());
+    let stages: Vec<String> = trace
+        .get("stages")
+        .as_arr()
+        .expect("full render carries the stage array")
+        .iter()
+        .map(|s| s.get("stage").as_str().unwrap().to_string())
+        .collect();
+    for want in
+        ["admission", "shard_lock", "sampler_fit", "wal_queue", "wal_fsync", "wal_ack", "view_publish"]
+    {
+        assert!(stages.iter().any(|s| s == want), "stage {want} missing from {stages:?}");
+    }
+
+    // The WAL commit ledger attributes the batch to the same id.
+    let stats = c.get("/api/stats").unwrap().json_body().unwrap();
+    let batches = stats.get("wal_commit").get("recent_batches");
+    let attributed = batches.as_arr().unwrap_or(&[]).iter().any(|b| {
+        b.get("traces")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .any(|t| t.as_str() == Some("it-ask-0007"))
+    });
+    assert!(attributed, "traced ask not in wal_commit.recent_batches: {batches}");
+
+    // Unknown or evicted ids are a clean 404.
+    assert_eq!(c.get("/api/trace/no-such-id").unwrap().status, 404);
+    server.stop();
+}
+
+#[test]
+fn generated_ids_echo_and_recent_filters() {
+    let server = HopaasServer::start(
+        "127.0.0.1:0",
+        HopaasConfig { auth_required: false, ..Default::default() },
+    )
+    .unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+
+    // No client id: the server mints one, echoes it, and the trace is
+    // queryable under it.
+    let r = c.get("/api/version").unwrap();
+    let rid = r.headers.get("x-request-id").expect("generated id echoed").to_string();
+    assert!(rid.starts_with("req-"), "{rid}");
+    let tr = c.get(&format!("/api/trace/{rid}")).unwrap();
+    assert_eq!(tr.status, 200);
+    assert_eq!(tr.json_body().unwrap().get("kind").as_str(), Some("read"));
+
+    // Populate the buffer with one ask and one tell.
+    let ask = c.post_json("/api/ask/x", &ask_body()).unwrap().json_body().unwrap();
+    let study_id = ask.get("study_id").as_u64().unwrap();
+    let tid = ask.get("trial_id").as_u64().unwrap();
+    assert_eq!(c.post_json("/api/tell/x", &tell_body(tid, 0.5)).unwrap().status, 200);
+
+    // kind filter: only asks come back.
+    let v = c.get("/api/trace/recent?limit=50&kind=ask").unwrap().json_body().unwrap();
+    let traces = v.as_arr().expect("recent returns an array");
+    assert!(!traces.is_empty());
+    for t in traces {
+        assert_eq!(t.get("kind").as_str(), Some("ask"), "{t}");
+    }
+
+    // study filter: every row belongs to the bench study.
+    let v = c
+        .get(&format!("/api/trace/recent?limit=50&study={study_id}"))
+        .unwrap()
+        .json_body()
+        .unwrap();
+    let traces = v.as_arr().unwrap();
+    assert!(!traces.is_empty());
+    for t in traces {
+        assert_eq!(t.get("study").as_u64(), Some(study_id), "{t}");
+    }
+
+    // Unknown kind names are rejected, not silently ignored.
+    assert_eq!(c.get("/api/trace/recent?kind=bogus").unwrap().status, 422);
+
+    // /api/stats carries tracer counters, build info and uptime.
+    let stats = c.get("/api/stats").unwrap().json_body().unwrap();
+    assert_eq!(stats.get("trace").get("enabled").as_bool(), Some(true));
+    assert!(stats.get("trace").get("retained").as_u64().unwrap() > 0);
+    assert_eq!(stats.get("build").get("version").as_str(), Some(hopaas::VERSION));
+    assert!(stats.get("uptime_seconds").as_f64().is_some());
+    server.stop();
+}
+
+#[test]
+fn metrics_scrape_is_prometheus_conformant() {
+    let server = HopaasServer::start(
+        "127.0.0.1:0",
+        HopaasConfig { auth_required: false, ..Default::default() },
+    )
+    .unwrap();
+    let mut c = Client::connect(server.addr()).unwrap();
+
+    // Exercise ask / prune / tell so the latency histograms have
+    // samples (bucket monotonicity on empty families is vacuous).
+    for i in 0..5 {
+        let ask = c.post_json("/api/ask/x", &ask_body()).unwrap().json_body().unwrap();
+        let tid = ask.get("trial_id").as_u64().unwrap();
+        let mut rep = Value::obj();
+        rep.set("trial_id", tid).set("step", 1u64).set("value", i as f64);
+        assert_eq!(c.post_json("/api/should_prune/x", &Value::Obj(rep)).unwrap().status, 200);
+        assert_eq!(c.post_json("/api/tell/x", &tell_body(tid, i as f64)).unwrap().status, 200);
+    }
+
+    let resp = c.get("/metrics").unwrap();
+    assert_eq!(resp.status, 200);
+    let text = String::from_utf8(resp.body).unwrap();
+    assert!(text.contains("hopaas_build_info{"), "build info gauge missing");
+    assert!(text.contains("hopaas_uptime_seconds"), "uptime gauge missing");
+    assert!(text.contains("hopaas_slow_trace_seconds"), "exemplar family missing");
+    lint_prometheus_scrape(&text);
+    server.stop();
+}
+
+/// Whole-scrape Prometheus exposition lint: every family announces
+/// `# HELP` immediately followed by `# TYPE` exactly once before any of
+/// its samples; label values are well-formed (quoted, only `\\`, `\"`,
+/// `\n` escapes); histogram buckets come in ascending `le` order with
+/// non-decreasing cumulative counts, end at `+Inf`, and the `+Inf`
+/// count equals the family's `_count`.
+fn lint_prometheus_scrape(text: &str) {
+    let mut typed: HashMap<String, String> = HashMap::new();
+    let mut pending_help: Option<String> = None;
+    // (family, non-le labels) -> [(le, cumulative count)] in line order.
+    let mut buckets: HashMap<(String, String), Vec<(f64, f64)>> = HashMap::new();
+    let mut counts: HashMap<(String, String), f64> = HashMap::new();
+
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest.split_whitespace().next().unwrap().to_string();
+            assert!(pending_help.is_none(), "HELP {name} follows a HELP with no TYPE");
+            assert!(!typed.contains_key(&name), "duplicate family {name}");
+            pending_help = Some(name);
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let name = it.next().unwrap().to_string();
+            let ty = it.next().expect("TYPE line without a type").to_string();
+            assert!(
+                matches!(ty.as_str(), "counter" | "gauge" | "histogram" | "summary" | "untyped"),
+                "unknown type {ty} for {name}"
+            );
+            assert_eq!(
+                pending_help.take().as_deref(),
+                Some(name.as_str()),
+                "TYPE {name} not immediately preceded by its HELP"
+            );
+            typed.insert(name, ty);
+            continue;
+        }
+        assert!(!line.starts_with('#'), "unexpected comment line: {line}");
+        let (name, labels, value) = parse_sample(line);
+        let family = family_of(&name, &typed);
+        let ty = typed
+            .get(&family)
+            .unwrap_or_else(|| panic!("sample {name} before HELP/TYPE of {family}"));
+        if ty == "histogram" {
+            if name.ends_with("_bucket") {
+                let le = &labels.iter().find(|(k, _)| k == "le").expect("bucket without le").1;
+                let le = if le == "+Inf" { f64::INFINITY } else { le.parse().unwrap() };
+                buckets.entry((family, labels_key(&labels))).or_default().push((le, value));
+            } else if name.ends_with("_count") {
+                counts.insert((family, labels_key(&labels)), value);
+            }
+        }
+    }
+    assert!(pending_help.is_none(), "dangling HELP without TYPE");
+
+    for ((family, lk), seq) in &buckets {
+        let mut last_le = f64::NEG_INFINITY;
+        let mut last_count = -1.0;
+        for (le, count) in seq {
+            assert!(*le > last_le, "{family}{{{lk}}}: le not strictly ascending");
+            assert!(*count >= last_count, "{family}{{{lk}}}: bucket counts not monotone");
+            last_le = *le;
+            last_count = *count;
+        }
+        assert!(last_le.is_infinite(), "{family}{{{lk}}}: missing +Inf bucket");
+        let total = counts
+            .get(&(family.clone(), lk.clone()))
+            .unwrap_or_else(|| panic!("{family}{{{lk}}}: buckets but no _count"));
+        assert_eq!(last_count, *total, "{family}{{{lk}}}: +Inf bucket != _count");
+    }
+}
+
+/// Histogram/summary samples use suffixed names; map back to the family.
+fn family_of(name: &str, typed: &HashMap<String, String>) -> String {
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = name.strip_suffix(suffix) {
+            if typed.contains_key(base) {
+                return base.to_string();
+            }
+        }
+    }
+    name.to_string()
+}
+
+/// Parse `name{labels} value` or `name value`.
+fn parse_sample(line: &str) -> (String, Vec<(String, String)>, f64) {
+    if let Some(brace) = line.find('{') {
+        let name = line[..brace].to_string();
+        let (labels, used) = parse_labels(&line[brace + 1..]);
+        let value: f64 = line[brace + 1 + used..]
+            .trim()
+            .parse()
+            .unwrap_or_else(|_| panic!("bad sample value: {line}"));
+        (name, labels, value)
+    } else {
+        let mut it = line.split_whitespace();
+        let name = it.next().unwrap().to_string();
+        let value: f64 = it
+            .next()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("bad sample line: {line}"));
+        (name, Vec::new(), value)
+    }
+}
+
+/// Parse `key="value",...}` starting just past the `{`; panics on any
+/// exposition-format violation. Returns the labels and the number of
+/// bytes consumed through the closing brace.
+fn parse_labels(s: &str) -> (Vec<(String, String)>, usize) {
+    let b = s.as_bytes();
+    let mut i = 0;
+    let mut labels = Vec::new();
+    while b[i] != b'}' {
+        let key_start = i;
+        while b[i] != b'=' {
+            i += 1;
+        }
+        let key = s[key_start..i].to_string();
+        i += 1;
+        assert_eq!(b[i], b'"', "unquoted label value in: {s}");
+        i += 1;
+        let mut val = Vec::new();
+        while b[i] != b'"' {
+            if b[i] == b'\\' {
+                i += 1;
+                assert!(
+                    matches!(b[i], b'\\' | b'"' | b'n'),
+                    "invalid escape \\{} in: {s}",
+                    b[i] as char
+                );
+            }
+            val.push(b[i]);
+            i += 1;
+        }
+        i += 1;
+        labels.push((key, String::from_utf8(val).unwrap()));
+        if b[i] == b',' {
+            i += 1;
+        }
+    }
+    (labels, i + 1)
+}
+
+/// Stable key for a label set minus `le` (bucket grouping).
+fn labels_key(labels: &[(String, String)]) -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .filter(|(k, _)| k != "le")
+        .map(|(k, v)| format!("{k}={v}"))
+        .collect();
+    parts.sort();
+    parts.join(",")
+}
