@@ -1,0 +1,223 @@
+//! Replication benchmark: (1) catch-up throughput — drain a pre-built
+//! replication stream into a cold follower, at 1 / 4 / 16 shards; and
+//! (2) steady-state lag — a live applier thread tails the primary
+//! while writers drive ask/tell load, sampling the follower's seq lag
+//! and timing convergence after the writers stop.
+//!
+//! Both phases run in-process over `LocalTransport` (no sockets), so
+//! the numbers isolate the replication machinery itself: fetch
+//! batching, follower WAL append + fsync, and incremental view
+//! rebuild. Results are printed as tables and written to
+//! `BENCH_replication.json` at the repository root.
+//!
+//! Run: `cargo bench --bench replication [-- --trials N --seconds S]`
+
+use hopaas::bench::{fmt_duration, Table};
+use hopaas::coordinator::engine::{Engine, EngineConfig};
+use hopaas::coordinator::replica::{LocalTransport, ReplicaApplier};
+use hopaas::json::{parse, Value};
+use hopaas::store::ReplFetch;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+const N_STUDIES: usize = 8;
+
+fn ask_body(study: usize) -> Value {
+    parse(&format!(
+        r#"{{
+        "study_name": "repl-{study}",
+        "properties": {{"x": {{"low": 0.0, "high": 1.0}}}},
+        "direction": "minimize",
+        "sampler": {{"name": "random"}}
+    }}"#
+    ))
+    .unwrap()
+}
+
+/// Scratch directory (best-effort cleanup).
+struct Scratch(std::path::PathBuf);
+
+impl Scratch {
+    fn new(tag: &str) -> Scratch {
+        let p = std::env::temp_dir()
+            .join(format!("hopaas-bench-repl-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        std::fs::create_dir_all(&p).unwrap();
+        Scratch(p)
+    }
+}
+
+impl Drop for Scratch {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn engine_config(shards: usize, follower: bool) -> EngineConfig {
+    EngineConfig {
+        n_shards: shards,
+        follower,
+        // Never compact: the stream must stay fetchable from seq 0.
+        compact_after: u64::MAX,
+        repl_buffer: 1 << 21,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let arg = |name: &str| {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1))
+            .and_then(|v| v.parse::<u64>().ok())
+    };
+    let trials = arg("--trials").unwrap_or(8_000);
+    let seconds = arg("--seconds").unwrap_or(2);
+
+    // ---- Phase 1: cold-follower catch-up throughput --------------------
+    println!("\ncatch-up: {trials} told trials per shard count, {N_STUDIES} studies\n");
+    let table = Table::new(
+        &["shards", "records", "drain wall", "records/s"],
+        &[8, 10, 12, 12],
+    );
+    let mut catchup_rows: Vec<Value> = Vec::new();
+    for &shards in &[1usize, 4, 16] {
+        let dp = Scratch::new(&format!("cu-p-{shards}"));
+        let df = Scratch::new(&format!("cu-f-{shards}"));
+        let primary = Engine::open(&dp.0, engine_config(shards, false)).unwrap();
+        for i in 0..trials {
+            let r = primary.ask(&ask_body((i % N_STUDIES as u64) as usize)).unwrap();
+            primary.tell(r.trial_id, (i % 100) as f64).unwrap();
+        }
+        let source = primary.repl_source().unwrap();
+        let follower = Engine::open(&df.0, engine_config(shards, true)).unwrap();
+
+        let t0 = Instant::now();
+        loop {
+            match source.fetch(follower.repl_next(), 4096) {
+                ReplFetch::Batches { records, next: _, primary_next } => {
+                    follower.apply_repl_batch(&records, primary_next).unwrap();
+                }
+                ReplFetch::UpToDate { next } => {
+                    follower.apply_repl_batch(&[], next).unwrap();
+                    break;
+                }
+                ReplFetch::TooOld { oldest } => panic!("stream evicted to {oldest}"),
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let records = follower.repl_next();
+        table.row(&[
+            &shards.to_string(),
+            &records.to_string(),
+            &fmt_duration(wall),
+            &format!("{:.0}", records as f64 / wall),
+        ]);
+        let mut row = Value::obj();
+        row.set("shards", shards)
+            .set("records", records)
+            .set("drain_wall_s", wall)
+            .set("records_per_s", records as f64 / wall);
+        catchup_rows.push(Value::Obj(row));
+    }
+
+    // ---- Phase 2: steady-state lag under live write load ---------------
+    println!("\nsteady-state: {seconds}s of 2-thread ask/tell load per shard count\n");
+    let stable = Table::new(
+        &["shards", "acked/s", "lag mean", "lag p99", "lag max", "converge"],
+        &[8, 10, 10, 10, 10, 12],
+    );
+    let mut steady_rows: Vec<Value> = Vec::new();
+    for &shards in &[1usize, 4, 16] {
+        let dp = Scratch::new(&format!("ss-p-{shards}"));
+        let df = Scratch::new(&format!("ss-f-{shards}"));
+        let primary = Arc::new(Engine::open(&dp.0, engine_config(shards, false)).unwrap());
+        let follower = Arc::new(Engine::open(&df.0, engine_config(shards, true)).unwrap());
+        let source = primary.repl_source().unwrap();
+        let applier = ReplicaApplier::start(
+            follower.clone(),
+            Box::new(LocalTransport::new(source.clone(), Some(dp.0.clone()))),
+            Duration::from_millis(20),
+        );
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let writers: Vec<_> = (0..2usize)
+            .map(|w| {
+                let primary = primary.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    let mut acked = 0u64;
+                    let mut i = 0u64;
+                    while !stop.load(Ordering::Relaxed) {
+                        let study = ((i + w as u64) % N_STUDIES as u64) as usize;
+                        let r = primary.ask(&ask_body(study)).unwrap();
+                        primary.tell(r.trial_id, (i % 100) as f64).unwrap();
+                        acked += 1;
+                        i += 1;
+                    }
+                    acked
+                })
+            })
+            .collect();
+
+        // Sample the seq lag while the writers run.
+        let mut lags: Vec<u64> = Vec::new();
+        let t0 = Instant::now();
+        while t0.elapsed() < Duration::from_secs(seconds) {
+            lags.push(source.next_seq().saturating_sub(follower.repl_next()));
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        stop.store(true, Ordering::Relaxed);
+        let acked: u64 = writers.into_iter().map(|h| h.join().unwrap()).sum();
+
+        // Convergence: how long until the follower holds the full tail.
+        let target = source.next_seq();
+        let t1 = Instant::now();
+        while follower.repl_next() < target {
+            assert!(
+                t1.elapsed() < Duration::from_secs(30),
+                "follower never converged ({} of {target})",
+                follower.repl_next()
+            );
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        let converge = t1.elapsed().as_secs_f64();
+        applier.seal();
+
+        lags.sort_unstable();
+        let mean = lags.iter().sum::<u64>() as f64 / lags.len().max(1) as f64;
+        let p99 = if lags.is_empty() { 0 } else { lags[(lags.len() - 1) * 99 / 100] };
+        let max = *lags.last().unwrap_or(&0);
+        let wall = t0.elapsed().as_secs_f64();
+        stable.row(&[
+            &shards.to_string(),
+            &format!("{:.0}", acked as f64 / wall),
+            &format!("{mean:.1}"),
+            &p99.to_string(),
+            &max.to_string(),
+            &fmt_duration(converge),
+        ]);
+        let mut row = Value::obj();
+        row.set("shards", shards)
+            .set("acked_per_s", acked as f64 / wall)
+            .set("lag_seq_mean", mean)
+            .set("lag_seq_p99", p99)
+            .set("lag_seq_max", max)
+            .set("converge_s", converge);
+        steady_rows.push(Value::Obj(row));
+    }
+
+    let mut out = Value::obj();
+    out.set("bench", "replication")
+        .set("trials", trials)
+        .set("seconds", seconds)
+        .set("catchup", Value::Arr(catchup_rows))
+        .set("steady_state", Value::Arr(steady_rows));
+    let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("BENCH_replication.json");
+    std::fs::write(&json_path, Value::Obj(out).to_pretty()).unwrap();
+    println!("\nwrote {}", json_path.display());
+}

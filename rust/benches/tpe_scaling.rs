@@ -104,8 +104,58 @@ fn main() {
             rows.push(Value::Obj(row));
         }
     }
+    // E8a addendum: the cached TPE ask above spends its time in EI
+    // scoring, which now runs through linalg's batched column kernel.
+    // Measure that kernel against the scalar per-point slice directly on
+    // a fitted Parzen mixture, and check the two are bit-identical (the
+    // refactor's contract: same picks, same RNG stream, faster walls).
+    println!("\nE8a+: mixture log-pdf, scalar loop vs batched column pass (24 points)\n");
+    println!("{:<12} {:>12} {:>12} {:>9}", "components", "scalar", "batched", "speedup");
+    println!("{}", "-".repeat(50));
+    let mut mix_rows = Vec::new();
+    for n in [32usize, 256, 1024] {
+        let mut r = Rng::new(7);
+        let fit_pts: Vec<f64> = (0..n).map(|_| r.f64()).collect();
+        let parzen = hopaas::coordinator::samplers::tpe::Parzen::fit(&fit_pts);
+        let points: Vec<f64> = (0..24).map(|_| r.f64()).collect();
+        let mut batched = vec![0.0f64; points.len()];
+        parzen.log_pdf_many(&points, &mut batched);
+        for (x, b) in points.iter().zip(&batched) {
+            assert_eq!(
+                parzen.log_pdf(*x).to_bits(),
+                b.to_bits(),
+                "batched mixture eval diverged from scalar at n={n}"
+            );
+        }
+        let scalar_s = bench(5, 200, || {
+            let s: f64 = points.iter().map(|&x| parzen.log_pdf(x)).sum();
+            assert!(s.is_finite());
+        });
+        let batched_s = bench(5, 200, || {
+            parzen.log_pdf_many(&points, &mut batched);
+            assert!(batched[0].is_finite());
+        });
+        let speedup = scalar_s.mean() / batched_s.mean().max(1e-12);
+        println!(
+            "{:<12} {:>12} {:>12} {:>8.1}x",
+            n,
+            fmt_duration(scalar_s.mean()),
+            fmt_duration(batched_s.mean()),
+            speedup
+        );
+        let mut row = Value::obj();
+        row.set("components", n as u64)
+            .set("scalar_mean_s", scalar_s.mean())
+            .set("batched_mean_s", batched_s.mean())
+            .set("speedup", speedup);
+        mix_rows.push(Value::Obj(row));
+    }
+
     let mut out = Value::obj();
-    out.set("bench", "samplers").set("space_dims", 5u64).set("rows", Value::Arr(rows));
+    out.set("bench", "samplers")
+        .set("space_dims", 5u64)
+        .set("rows", Value::Arr(rows))
+        .set("mixture_eval", Value::Arr(mix_rows));
     let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
         .join("..")
         .join("BENCH_samplers.json");

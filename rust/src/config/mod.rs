@@ -134,6 +134,10 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
     let mut trace_sample = 1.0f64;
     let mut trace_slow_ms = 250u64;
     let mut log_json = false;
+    let mut role = "primary".to_string();
+    let mut primary_url: Option<String> = None;
+    let mut repl_buffer = 65_536u64;
+    let mut repl_poll_timeout = 2.0f64;
 
     // Layer 1: config file.
     if let Some(path) = args.get("config") {
@@ -242,6 +246,16 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
         if let Value::Bool(b) = v.get("log_json") {
             log_json = *b;
         }
+        s("role", &mut role);
+        if let Some(x) = v.get("primary_url").as_str() {
+            primary_url = Some(x.to_string());
+        }
+        if let Some(x) = v.get("repl_buffer").as_u64() {
+            repl_buffer = x;
+        }
+        if let Some(x) = v.get("repl_poll_timeout").as_f64() {
+            repl_poll_timeout = x;
+        }
         // File keys mirror the flag names: accept the http_-prefixed
         // spellings too ("workers"/"backlog" stay as legacy keys).
         if let Some(x) = v.get("http_workers").as_u64() {
@@ -327,6 +341,19 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
     if args.get("log-json").is_some() {
         log_json = args.get_bool("log-json");
     }
+    // Replication role: a follower replays the primary's WAL stream and
+    // serves reads only (until promoted via POST /api/repl/promote).
+    if let Some(r) = args.get("role") {
+        role = r.to_string();
+    }
+    if !matches!(role.as_str(), "primary" | "follower") {
+        return Err(format!("--role: expected primary|follower, got '{role}'"));
+    }
+    if let Some(u) = args.get("primary-url") {
+        primary_url = Some(u.to_string());
+    }
+    repl_buffer = args.get_u64("repl-buffer", repl_buffer);
+    repl_poll_timeout = args.get_f64("repl-poll-timeout", repl_poll_timeout);
 
     let config = HopaasConfig {
         engine: EngineConfig {
@@ -357,6 +384,9 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
             trace_sample,
             trace_slow_ms,
             log_json,
+            follower: role == "follower",
+            primary_url: primary_url.clone(),
+            repl_buffer: repl_buffer.max(1) as usize,
         },
         http: ServerConfig {
             workers: workers as usize,
@@ -367,6 +397,7 @@ pub fn server_config(args: &Args) -> Result<(String, HopaasConfig), String> {
         secret: secret.into_bytes(),
         data_dir: data_dir.map(Into::into),
         events_poll_timeout: Duration::from_secs_f64(events_poll_timeout),
+        repl_poll_timeout: Duration::from_secs_f64(repl_poll_timeout.max(0.001)),
     };
     Ok((addr, config))
 }
@@ -688,6 +719,45 @@ mod tests {
         let a = args("serve --events-poll-timeout 0");
         let (_, cfg) = server_config(&a).unwrap();
         assert!(cfg.events_poll_timeout > Duration::ZERO);
+    }
+
+    #[test]
+    fn replication_flags_and_file_keys() {
+        let a = args("serve");
+        let (_, cfg) = server_config(&a).unwrap();
+        assert!(!cfg.engine.follower, "primary is the default role");
+        assert!(cfg.engine.primary_url.is_none());
+        assert_eq!(cfg.engine.repl_buffer, 65_536);
+        assert_eq!(cfg.repl_poll_timeout, Duration::from_secs_f64(2.0));
+        let a = args(
+            "serve --role follower --primary-url http://10.0.0.1:8021 \
+             --repl-buffer 128 --repl-poll-timeout 0.5",
+        );
+        let (_, cfg) = server_config(&a).unwrap();
+        assert!(cfg.engine.follower);
+        assert_eq!(cfg.engine.primary_url.as_deref(), Some("http://10.0.0.1:8021"));
+        assert_eq!(cfg.engine.repl_buffer, 128);
+        assert_eq!(cfg.repl_poll_timeout, Duration::from_secs_f64(0.5));
+        // Unknown roles are a config error, not a silent primary.
+        let a = args("serve --role observer");
+        assert!(server_config(&a).is_err());
+        // File keys mirror the flags; CLI overrides.
+        let d = TempDir::new("config-repl");
+        let p = d.path().join("hopaas.json");
+        std::fs::write(
+            &p,
+            r#"{"role": "follower", "primary_url": "10.0.0.2:8021",
+                "repl_buffer": 256, "repl_poll_timeout": 1.0}"#,
+        )
+        .unwrap();
+        let a = args(&format!("serve --config {}", p.display()));
+        let (_, cfg) = server_config(&a).unwrap();
+        assert!(cfg.engine.follower);
+        assert_eq!(cfg.engine.primary_url.as_deref(), Some("10.0.0.2:8021"));
+        assert_eq!(cfg.engine.repl_buffer, 256);
+        let a = args(&format!("serve --config {} --role primary", p.display()));
+        let (_, cfg) = server_config(&a).unwrap();
+        assert!(!cfg.engine.follower, "CLI role overrides file");
     }
 
     #[test]

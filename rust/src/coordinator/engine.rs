@@ -51,12 +51,12 @@ use crate::json::Value;
 use crate::obs::{self, Stage, Tracer, TracerConfig};
 use crate::rng::{mix, Rng};
 use crate::store::{
-    GroupWal, GroupWalConfig, LoadedState, Record, RecoveryStats, Storage, WalAckInfo,
-    FLEET_SHARD,
+    GroupWal, GroupWalConfig, LoadedState, Record, RecoveryStats, ReplicationSource, Storage,
+    WalAckInfo, FLEET_SHARD,
 };
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard, RwLock};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, RwLock};
 use std::time::Instant;
 
 /// API-level error → HTTP status mapping happens in the service layer.
@@ -71,6 +71,11 @@ pub enum ApiError {
     /// Site/study concurrency quota denial (HTTP 429: back off, retry).
     #[error("{0}")]
     Quota(String),
+    /// Write rejected: this node is a read-only follower (HTTP 503).
+    /// Carries the primary's URL when configured so clients can
+    /// redirect without operator action.
+    #[error("read-only follower")]
+    ReadOnly(Option<String>),
     #[error("storage failure: {0}")]
     Storage(String),
 }
@@ -169,6 +174,18 @@ pub struct EngineConfig {
     /// Emit one structured JSON log line per retained request
     /// (`--log-json`).
     pub log_json: bool,
+    /// Run as a read-only follower: no group-commit writer is started;
+    /// state arrives through [`Engine::apply_repl_batch`] and every
+    /// mutating API returns [`ApiError::ReadOnly`] until
+    /// [`Engine::promote`] flips the node writable.
+    pub follower: bool,
+    /// Primary URL hint carried inside read-only rejections (follower
+    /// role).
+    pub primary_url: Option<String>,
+    /// Records retained in the primary's in-memory replication buffer.
+    /// A follower that falls further behind than this window gets
+    /// `TooOld` and must re-bootstrap from a snapshot bundle.
+    pub repl_buffer: usize,
 }
 
 impl Default for EngineConfig {
@@ -201,6 +218,9 @@ impl Default for EngineConfig {
             trace_sample: 1.0,
             trace_slow_ms: 250,
             log_json: false,
+            follower: false,
+            primary_url: None,
+            repl_buffer: 65_536,
         }
     }
 }
@@ -267,8 +287,9 @@ pub struct Engine {
     router: TrialRouter,
     next_trial_id: AtomicU64,
     next_study_id: AtomicU64,
-    /// Group-commit writer; `None` for in-memory engines.
-    wal: Option<GroupWal>,
+    /// Group-commit writer; unset for in-memory engines and for
+    /// followers (where [`Engine::promote`] installs it exactly once).
+    wal: OnceLock<GroupWal>,
     /// Records appended since the last compaction (compaction policy).
     wal_records: AtomicU64,
     /// `wal_records` threshold at which auto-compaction next fires.
@@ -323,6 +344,29 @@ pub struct Engine {
     tracer: Arc<Tracer>,
     /// Total asks served (for quick health output).
     asks: AtomicU64,
+    /// False on followers until [`Engine::promote`] flips it; every
+    /// mutating API checks this first.
+    writable: AtomicBool,
+    /// Primary-side replication buffer; set when the group-commit
+    /// writer starts (open, or promote), never on pure followers.
+    repl_source: OnceLock<Arc<ReplicationSource>>,
+    /// Follower-side: the raw storage the applier appends shipped
+    /// records into (with their primary seqs). Taken by `promote`, which
+    /// starts the group-commit writer over it.
+    follower_store: Mutex<Option<Storage>>,
+    /// Follower-side: per-shard manifest cuts from the bootstrap bundle.
+    /// Shipped records below their shard's cut are already covered by
+    /// the installed segments and must not be re-applied or re-appended.
+    repl_cuts: HashMap<u32, u64>,
+    /// Follower-side: next replication seq this node needs.
+    repl_next: AtomicU64,
+    /// Follower-side: the primary's `next_seq` as of the last batch —
+    /// the lag denominator.
+    repl_primary_next: AtomicU64,
+    /// Follower-side: wall-clock ms of the moment we last stopped being
+    /// caught up (0 = currently caught up). Drives
+    /// `hopaas_repl_lag_seconds`.
+    repl_behind_since_ms: AtomicU64,
 }
 
 impl Engine {
@@ -353,13 +397,14 @@ impl Engine {
             slow_ms: config.trace_slow_ms,
             log_json: config.log_json,
         }));
+        let writable = !config.follower;
         Engine {
             shards: (0..n).map(|_| Shard::new()).collect(),
             directory: RwLock::new(Directory::default()),
             router: TrialRouter::default(),
             next_trial_id: AtomicU64::new(1),
             next_study_id: AtomicU64::new(1),
-            wal: None,
+            wal: OnceLock::new(),
             wal_records: AtomicU64::new(0),
             compact_threshold: AtomicU64::new(config.compact_after),
             compacting: AtomicBool::new(false),
@@ -376,6 +421,13 @@ impl Engine {
             tracer,
             metrics,
             asks: AtomicU64::new(0),
+            writable: AtomicBool::new(writable),
+            repl_source: OnceLock::new(),
+            follower_store: Mutex::new(None),
+            repl_cuts: HashMap::new(),
+            repl_next: AtomicU64::new(0),
+            repl_primary_next: AtomicU64::new(0),
+            repl_behind_since_ms: AtomicU64::new(0),
         }
     }
 
@@ -474,6 +526,33 @@ impl Engine {
             }
         }
 
+        // Replication bookkeeping, captured before `plan_replay`
+        // consumes `loaded`:
+        //  - per-shard manifest cuts (a follower's bundle covers every
+        //    record below its shard's cut; shipped records below it are
+        //    skipped, and the primary's log floor starts at the lowest
+        //    cut);
+        //  - the uncovered event tail, which seeds the primary's
+        //    replication buffer so a follower that was only a little
+        //    behind at primary-restart can still tail the log instead
+        //    of re-bootstrapping.
+        let mut repl_cuts: HashMap<u32, u64> = HashMap::new();
+        if let Some(m) = &loaded.manifest {
+            for seg in m.get("segments").as_arr().unwrap_or(&[]) {
+                if let Some(shard) = seg.get("shard").as_u64() {
+                    repl_cuts.insert(shard as u32, seg.get("next_seq").as_u64().unwrap_or(0));
+                }
+            }
+        }
+        let min_cut = repl_cuts.values().copied().min().unwrap_or(0);
+        let repl_tail: Vec<Record> = loaded.events.clone();
+        // The tail only seeds the buffer when it is a contiguous,
+        // strictly increasing seq run below `next_seq` — the legacy-v1
+        // snapshot path can violate that, in which case the log floor
+        // starts at `next_seq` and cold followers must bootstrap.
+        let tail_monotonic = repl_tail.windows(2).all(|w| w[0].seq < w[1].seq)
+            && repl_tail.last().map(|r| r.seq < next_seq).unwrap_or(true);
+
         // Fleet segment (engine-global; not partitioned by study).
         let fleet_snapshot: Option<Value> = loaded
             .segments
@@ -514,13 +593,43 @@ impl Engine {
         }
         engine.refresh_storage_metrics();
 
-        let wal_config = GroupWalConfig {
-            batch_max: engine.config.wal_batch_max.max(1),
-            adaptive: engine.config.wal_batch_adaptive,
-            ..GroupWalConfig::default()
-        };
-        engine.wal = Some(GroupWal::start(storage, wal_config, next_seq, prev_segments));
+        if engine.config.follower {
+            // Followers never start the group-commit writer: shipped
+            // records keep their primary seqs, and the applier appends
+            // them to the raw storage itself. Resume from the last
+            // locally durable record (or the bundle's lowest cut for a
+            // cold install).
+            let resume = if event_next_seq > 0 { event_next_seq } else { min_cut };
+            engine.repl_cuts = repl_cuts;
+            engine.repl_next.store(resume, Ordering::Relaxed);
+            engine.repl_primary_next.store(resume, Ordering::Relaxed);
+            *engine.follower_store.lock().unwrap() = Some(storage);
+        } else {
+            let source = Arc::new(ReplicationSource::new(
+                engine.config.repl_buffer,
+                if tail_monotonic { min_cut } else { next_seq },
+                next_seq,
+                if tail_monotonic { repl_tail } else { Vec::new() },
+                engine.views.signal(),
+            ));
+            let _ = engine.repl_source.set(source.clone());
+            let _ = engine.wal.set(GroupWal::start(
+                storage,
+                engine.wal_config(),
+                next_seq,
+                prev_segments,
+                Some(source),
+            ));
+        }
         Ok(engine)
+    }
+
+    fn wal_config(&self) -> GroupWalConfig {
+        GroupWalConfig {
+            batch_max: self.config.wal_batch_max.max(1),
+            adaptive: self.config.wal_batch_adaptive,
+            ..GroupWalConfig::default()
+        }
     }
 
     /// Post-replay fleet pass: drop leases and queue entries whose
@@ -625,6 +734,200 @@ impl Engine {
         self.recovery
     }
 
+    // ----- replication: primary log, follower apply, promote -----
+
+    /// Whether this node accepts writes (primaries always; followers
+    /// only after [`Engine::promote`]).
+    pub fn is_writable(&self) -> bool {
+        self.writable.load(Ordering::Acquire)
+    }
+
+    fn check_writable(&self) -> Result<(), ApiError> {
+        if self.is_writable() {
+            Ok(())
+        } else {
+            Err(ApiError::ReadOnly(self.config.primary_url.clone()))
+        }
+    }
+
+    /// The primary-side replication buffer (`None` on un-promoted
+    /// followers and in-memory engines).
+    pub fn repl_source(&self) -> Option<Arc<ReplicationSource>> {
+        self.repl_source.get().cloned()
+    }
+
+    /// Follower cursor: the next replication seq this node needs.
+    pub fn repl_next(&self) -> u64 {
+        self.repl_next.load(Ordering::Acquire)
+    }
+
+    /// The primary's `next_seq` as of the last applied batch (the lag
+    /// denominator; equals the cursor when caught up).
+    pub fn repl_primary_next(&self) -> u64 {
+        self.repl_primary_next.load(Ordering::Acquire)
+    }
+
+    /// Follower-side apply: append a run of shipped records (in primary
+    /// seq order) to local storage, replay them through the recovery
+    /// apply path, and rebuild the touched studies' read views + event
+    /// logs. Returns the new cursor (last applied seq + 1).
+    ///
+    /// Idempotent across reconnect overlap: records below the cursor
+    /// are dropped, and records below their shard's bootstrap-bundle
+    /// cut are already covered by the installed segments (the cursor
+    /// advances past them without re-applying).
+    pub fn apply_repl_batch(&self, records: &[Record], primary_next: u64) -> Result<u64, ApiError> {
+        // The store lock doubles as the apply serialization point:
+        // promote holds it while flipping writable, so a batch can
+        // never land half-applied across the promotion boundary.
+        let mut store_guard = self.follower_store.lock().unwrap();
+        if self.is_writable() {
+            return Err(ApiError::Conflict("replication sealed: node is writable".into()));
+        }
+        let t0 = Instant::now();
+        let mut cursor = self.repl_next.load(Ordering::Acquire);
+        let mut studies_touched: HashSet<u64> = HashSet::new();
+        let mut trials_touched: Vec<(u32, u64)> = Vec::new();
+        let mut appended = 0u64;
+        for rec in records {
+            if rec.seq < cursor {
+                continue;
+            }
+            cursor = rec.seq + 1;
+            if rec.seq < self.repl_cuts.get(&rec.shard).copied().unwrap_or(0) {
+                continue;
+            }
+            if let Some(store) = store_guard.as_mut() {
+                store
+                    .append_nosync(rec)
+                    .map_err(|e| ApiError::Storage(e.to_string()))?;
+                appended += 1;
+            }
+            if Self::is_fleet_tag(&rec.tag) {
+                self.apply_fleet_event(rec);
+                self.fleet_active.store(true, Ordering::Relaxed);
+            } else {
+                self.apply_event(rec);
+                let v = &rec.payload;
+                match rec.tag.as_str() {
+                    "study_new" => {
+                        if let Some(id) = v.get("id").as_u64() {
+                            studies_touched.insert(id);
+                        }
+                    }
+                    "trial_new" => {
+                        if let Some(id) = v.get("study_id").as_u64() {
+                            studies_touched.insert(id);
+                        }
+                    }
+                    _ => {
+                        if let Some(tid) = v.get("trial_id").as_u64() {
+                            trials_touched.push((rec.shard, tid));
+                        }
+                    }
+                }
+            }
+            self.wal_records.fetch_add(1, Ordering::Relaxed);
+            self.note_dirty(rec.shard, 1);
+        }
+        if appended > 0 {
+            if let Some(store) = store_guard.as_mut() {
+                store.sync().map_err(|e| ApiError::Storage(e.to_string()))?;
+            }
+        }
+        for (shard, tid) in trials_touched {
+            let idx = shard as usize;
+            if idx >= self.shards.len() {
+                continue;
+            }
+            let guard = self.lock_shard(idx);
+            if let Some(&(si, _)) = guard.trial_index.get(&tid) {
+                studies_touched.insert(guard.studies[si].id);
+            }
+        }
+        let changed = !studies_touched.is_empty();
+        for id in studies_touched {
+            let Some(entry) = ({ self.directory.read().unwrap().lookup(id) }) else {
+                continue;
+            };
+            let guard = self.lock_shard(entry.shard);
+            self.views.rebuild_from(&guard.studies[entry.slot]);
+        }
+        self.repl_next.store(cursor, Ordering::Release);
+        self.repl_primary_next.fetch_max(primary_next.max(cursor), Ordering::AcqRel);
+        if cursor >= self.repl_primary_next.load(Ordering::Acquire) {
+            self.repl_behind_since_ms.store(0, Ordering::Relaxed);
+        } else {
+            let now_ms = (self.now() * 1000.0) as u64;
+            let _ = self.repl_behind_since_ms.compare_exchange(
+                0,
+                now_ms.max(1),
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            );
+        }
+        if changed {
+            // `rebuild_from` publishes silently; wake the parked
+            // events readers ourselves, once per batch.
+            self.views.signal().notify_all();
+        }
+        obs::stage(Stage::ReplApply, t0.elapsed());
+        Ok(cursor)
+    }
+
+    /// Flip a follower writable — exactly once — and start the
+    /// group-commit writer over the locally accumulated log, so new
+    /// writes are durable and shippable to the next generation of
+    /// followers. The previous-segment table starts empty: the first
+    /// compaction after promotion cuts every shard in full.
+    ///
+    /// The caller (the promote route) seals the applier and replays the
+    /// residual tail *before* calling this; any replication batch that
+    /// arrives afterwards is rejected with `Conflict`.
+    pub fn promote(&self) -> Result<u64, ApiError> {
+        let mut store_guard = self.follower_store.lock().unwrap();
+        if self
+            .writable
+            .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
+            .is_err()
+        {
+            return Err(ApiError::Conflict("node is already writable".into()));
+        }
+        let next = self.repl_next.load(Ordering::Acquire);
+        if let Some(storage) = store_guard.take() {
+            let source = Arc::new(ReplicationSource::new(
+                self.config.repl_buffer,
+                next,
+                next,
+                Vec::new(),
+                self.views.signal(),
+            ));
+            let _ = self.repl_source.set(source.clone());
+            let _ = self.wal.set(GroupWal::start(
+                storage,
+                self.wal_config(),
+                next,
+                HashMap::new(),
+                Some(source),
+            ));
+        }
+        self.repl_behind_since_ms.store(0, Ordering::Relaxed);
+        // Mirror `finish_fleet_recovery`: deadlines are liveness, not
+        // state — grant every alive worker one fresh TTL window before
+        // expiry starts requeueing their trials on the new primary.
+        {
+            let now = self.now();
+            let ttl = self.fleet.ttl();
+            let mut fl = self.fleet.lock();
+            if !fl.registry.is_empty() || !fl.leases.is_empty() {
+                self.fleet_active.store(true, Ordering::Relaxed);
+                fl.registry.reset_deadlines(now, ttl);
+            }
+        }
+        self.refresh_storage_metrics();
+        Ok(next)
+    }
+
     /// Seconds since engine start — the time base used across the
     /// coordinator.
     pub fn now(&self) -> f64 {
@@ -709,6 +1012,7 @@ impl Engine {
         n: usize,
         tenant: Option<&str>,
     ) -> Result<Vec<AskReply>, ApiError> {
+        self.check_writable()?;
         if n == 0 || n > MAX_ASK_BATCH {
             return Err(ApiError::BadRequest(format!(
                 "'n' must be between 1 and {MAX_ASK_BATCH}, got {n}"
@@ -1300,6 +1604,7 @@ impl Engine {
     /// `tell` with an objective vector (multi-objective studies).
     /// Returns `(study_id, on_pareto_front)`.
     pub fn tell_values(&self, trial_id: u64, values: Vec<f64>) -> Result<(u64, bool), ApiError> {
+        self.check_writable()?;
         let now = self.now();
         let shard_idx = self.route(trial_id)?;
         let result = {
@@ -1368,6 +1673,7 @@ impl Engine {
     /// `tell`: finalize a trial with its objective value.
     /// Returns `(study_id, is_best)`.
     pub fn tell(&self, trial_id: u64, value: f64) -> Result<(u64, bool), ApiError> {
+        self.check_writable()?;
         let now = self.now();
         let shard_idx = self.route(trial_id)?;
         let result = {
@@ -1420,6 +1726,7 @@ impl Engine {
     /// client should abort the trial. A `true` response transitions the
     /// trial to Pruned server-side (the client contract is to stop).
     pub fn should_prune(&self, trial_id: u64, step: u64, value: f64) -> Result<bool, ApiError> {
+        self.check_writable()?;
         let now = self.now();
         let shard_idx = self.route(trial_id)?;
         let prune = {
@@ -1498,6 +1805,7 @@ impl Engine {
 
     /// Client-reported failure (e.g. OOM) — frees the trial slot.
     pub fn fail(&self, trial_id: u64) -> Result<(), ApiError> {
+        self.check_writable()?;
         let now = self.now();
         let shard_idx = self.route(trial_id)?;
         let mut guard = self.lock_shard(shard_idx);
@@ -1546,6 +1854,9 @@ impl Engine {
     /// silent Running trial is eventually bounded by `reap_after`
     /// still holds.
     pub fn reap_stale(&self) -> usize {
+        if !self.is_writable() {
+            return 0;
+        }
         let Some(deadline) = self.config.reap_after else { return 0 };
         let now = self.now();
         // Collected before any shard lock is taken (fleet is a leaf
@@ -1633,6 +1944,7 @@ impl Engine {
         site: &str,
         gpu: &str,
     ) -> Result<(u64, Option<f64>), ApiError> {
+        self.check_writable()?;
         let now = self.now();
         let ttl = self.fleet.ttl();
         let mut fl = self.fleet.lock();
@@ -1660,6 +1972,7 @@ impl Engine {
     /// workers; 409 once the worker has been marked lost (its trials
     /// are gone to other workers — it must re-register).
     pub fn worker_heartbeat(&self, worker_id: u64) -> Result<usize, ApiError> {
+        self.check_writable()?;
         let now = self.now();
         let ttl = self.fleet.ttl();
         let mut fl = self.fleet.lock();
@@ -1677,6 +1990,7 @@ impl Engine {
     /// expiry wait — and the worker id is retired. Returns how many
     /// trials were handed back.
     pub fn deregister_worker(&self, worker_id: u64) -> Result<usize, ApiError> {
+        self.check_writable()?;
         let now = self.now();
         let trials: Vec<u64> = {
             let mut fl = self.fleet.lock();
@@ -1728,6 +2042,9 @@ impl Engine {
         // GC. Only a fleet that was never used skips it entirely — but
         // the worker-less ask-rate ledger is swept regardless, because
         // purely legacy deployments never activate the fleet at all.
+        if !self.is_writable() {
+            return 0;
+        }
         let now = self.now();
         self.fleet.gc_ask_rates(now);
         if !self.fleet_active.load(Ordering::Relaxed) {
@@ -1995,7 +2312,7 @@ impl Engine {
             .set("asks", self.asks.load(Ordering::Relaxed))
             .set("tracked_running", self.tracked_running())
             .set("wal_records", self.wal_records.load(Ordering::Relaxed))
-            .set("durable", self.wal.is_some())
+            .set("durable", self.wal.get().is_some())
             .set("uptime_seconds", self.start.elapsed().as_secs_f64());
         {
             let mut b = Value::obj();
@@ -2005,7 +2322,7 @@ impl Engine {
         }
         // Tracing subsystem counters + slow-trace exemplar ids.
         o.set("trace", self.tracer.stats_json());
-        if let Some(wal) = &self.wal {
+        if let Some(wal) = self.wal.get() {
             let (batches, records, last, max) = wal.stats().snapshot();
             let mut w = Value::obj();
             w.set("batches", batches)
@@ -2040,6 +2357,27 @@ impl Engine {
                 .set("ask_batch_mean", self.metrics.ask_batch_size.mean());
             o.set("sampler", Value::Obj(s));
         }
+        // Replication block: role, cursor, and lag (follower), plus
+        // the log window being served (primary).
+        {
+            let next = self.repl_next.load(Ordering::Relaxed);
+            let primary_next = self.repl_primary_next.load(Ordering::Relaxed);
+            let mut r = Value::obj();
+            r.set("role", if self.config.follower { "follower" } else { "primary" })
+                .set("writable", self.is_writable())
+                .set("next", next)
+                .set("primary_next", primary_next)
+                .set("lag_seq", primary_next.saturating_sub(next));
+            if let Some(p) = &self.config.primary_url {
+                r.set("primary_url", p.as_str());
+            }
+            if let Some(src) = self.repl_source.get() {
+                r.set("log_floor", src.floor())
+                    .set("log_next", src.next_seq())
+                    .set("log_buffered", src.buffered());
+            }
+            o.set("repl", Value::Obj(r));
+        }
         // Fleet block: worker registry + lease + scheduler state.
         o.set("fleet", self.fleet.lock().stats_json(&self.fleet.config));
         // What the last recovery pass observed (zeros in-memory) — the
@@ -2070,7 +2408,7 @@ impl Engine {
     /// at recovery — the manifest's per-shard `next_seq` filter makes
     /// the split exact.
     pub fn compact(&self) -> Result<(), ApiError> {
-        let Some(wal) = &self.wal else { return Ok(()) };
+        let Some(wal) = self.wal.get() else { return Ok(()) };
         // One compaction at a time: the begin/cut/finish phases of two
         // drivers must not interleave on the writer thread.
         let _serial = self.compact_lock.lock().unwrap();
@@ -2330,7 +2668,10 @@ impl Engine {
                 let id = self.next_study_id.fetch_add(1, Ordering::Relaxed);
                 let ev_payload = {
                     let mut o = Value::obj();
-                    o.set("id", id).set("def", def.canonical_json());
+                    // `at` rides along so a replica's `apply_event`
+                    // reconstructs the same `created_at` the primary
+                    // serves — the study pages must match byte-for-byte.
+                    o.set("id", id).set("def", def.canonical_json()).set("at", now);
                     Value::Obj(o)
                 };
                 // Persist first (see `insert_trial`): a failed append
@@ -2361,7 +2702,7 @@ impl Engine {
     /// shard lock across this call, so per-shard WAL order equals
     /// per-shard mutation order and the compaction cut stays consistent.
     fn persist(&self, record: Record) -> Result<(), ApiError> {
-        if let Some(wal) = &self.wal {
+        if let Some(wal) = self.wal.get() {
             let shard = record.shard;
             let t0 = Instant::now();
             let info = wal.append(record).map_err(ApiError::Storage)?;
@@ -2378,7 +2719,7 @@ impl Engine {
         if records.is_empty() {
             return Ok(());
         }
-        if let Some(wal) = &self.wal {
+        if let Some(wal) = self.wal.get() {
             let n = records.len() as u64;
             let shards: Vec<u32> = records.iter().map(|r| r.shard).collect();
             let t0 = Instant::now();
@@ -2434,7 +2775,7 @@ impl Engine {
         self.metrics
             .wal_records
             .set(self.wal_records.load(Ordering::Relaxed) as f64);
-        if let Some(wal) = &self.wal {
+        if let Some(wal) = self.wal.get() {
             let (batches, records, last, max) = wal.stats().snapshot();
             self.metrics.wal_commit_batches.set(batches as f64);
             self.metrics.wal_commit_records.set(records as f64);
@@ -2452,6 +2793,19 @@ impl Engine {
         self.metrics.wal_truncated_records.set(rec.truncated_records as f64);
         self.metrics.wal_truncated_bytes.set(rec.truncated_bytes as f64);
         self.metrics.wal_filtered_records.set(rec.filtered_records as f64);
+        // Replication lag (follower-side; both read 0 on a primary).
+        {
+            let next = self.repl_next.load(Ordering::Relaxed);
+            let primary_next = self.repl_primary_next.load(Ordering::Relaxed);
+            self.metrics.repl_lag_seq.set(primary_next.saturating_sub(next) as f64);
+            let behind_ms = self.repl_behind_since_ms.load(Ordering::Relaxed);
+            let lag_seconds = if behind_ms == 0 {
+                0.0
+            } else {
+                ((self.now() * 1000.0) as u64).saturating_sub(behind_ms) as f64 / 1000.0
+            };
+            self.metrics.repl_lag_seconds.set(lag_seconds);
+        }
         // Fleet gauges (scrape-time snapshot of the fleet tables).
         {
             let fl = self.fleet.lock();
@@ -2516,7 +2870,7 @@ impl Engine {
     /// be called with **no** shard lock held (compaction takes each of
     /// them in turn).
     fn maybe_compact(&self) {
-        if self.wal.is_none() {
+        if self.wal.get().is_none() {
             return;
         }
         let records = self.wal_records.load(Ordering::Relaxed);
@@ -2774,7 +3128,8 @@ impl Engine {
                         ..def
                     };
                     let id = v.get("id").as_u64().unwrap_or(0);
-                    self.recover_study(Study::new(id, def, 0.0));
+                    let at = v.get("at").as_f64().unwrap_or(0.0);
+                    self.recover_study(Study::new(id, def, at));
                 }
             }
             "trial_new" => {
@@ -3640,6 +3995,13 @@ mod tests {
         let rec = stats.get("wal_recovery");
         assert_eq!(rec.get("recovered_records").as_u64(), Some(0));
         assert_eq!(rec.get("truncated_records").as_u64(), Some(0));
+        // Replication block: a durable default engine is a writable
+        // primary serving a log window that covers its three records.
+        let repl = stats.get("repl");
+        assert_eq!(repl.get("role").as_str(), Some("primary"));
+        assert_eq!(repl.get("writable").as_bool(), Some(true));
+        assert_eq!(repl.get("lag_seq").as_u64(), Some(0));
+        assert_eq!(repl.get("log_next").as_u64(), Some(3));
         drop(e);
         // Reopen: the three records replay and show up in the stats.
         let e = Engine::open(d.path(), EngineConfig::default()).unwrap();

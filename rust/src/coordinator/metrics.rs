@@ -236,6 +236,12 @@ pub struct Metrics {
     pub wal_commit_batch_limit: Gauge,
     /// Segment cuts skipped by clean-shard reuse (lifetime total).
     pub compact_segments_reused: Gauge,
+    /// Replication lag in records (follower: primary next_seq − local
+    /// cursor; 0 on a primary or a caught-up follower).
+    pub repl_lag_seq: Gauge,
+    /// Seconds the follower has continuously been behind the primary
+    /// (0 when caught up).
+    pub repl_lag_seconds: Gauge,
     /// Side threads the last compaction used to cut segments.
     pub compact_pool_threads: Gauge,
     /// Fleet gauges, refreshed at scrape time.
@@ -317,6 +323,8 @@ impl Metrics {
             wal_filtered_records: Gauge::default(),
             wal_commit_batch_limit: Gauge::default(),
             compact_segments_reused: Gauge::default(),
+            repl_lag_seq: Gauge::default(),
+            repl_lag_seconds: Gauge::default(),
             compact_pool_threads: Gauge::default(),
             fleet_workers_alive: Gauge::default(),
             fleet_leases: Gauge::default(),
@@ -506,6 +514,16 @@ impl Metrics {
                 "hopaas_wal_commit_batch_limit",
                 "Live adaptive group-commit batch limit.",
                 &self.wal_commit_batch_limit,
+            ),
+            (
+                "hopaas_repl_lag_seq",
+                "Replication lag in records (0 on primaries).",
+                &self.repl_lag_seq,
+            ),
+            (
+                "hopaas_repl_lag_seconds",
+                "Seconds continuously behind the primary (0 when caught up).",
+                &self.repl_lag_seconds,
             ),
             (
                 "hopaas_compact_segments_reused",

@@ -21,6 +21,9 @@
 //! * [`auth`] — HMAC-signed API tokens with expiry + revocation;
 //! * [`registry`] — the study directory and trial→shard router of the
 //!   sharded engine (who lives where);
+//! * [`replica`] — follower-side replication: transports over the
+//!   primary's WAL stream, snapshot bootstrap, and the applier that
+//!   keeps a read-only replica live until promotion;
 //! * [`engine`] — the sharded, lock-disciplined core that the HTTP
 //!   layer calls: N independent shards over a group-commit WAL (see
 //!   `ARCHITECTURE.md` for the layer diagram and durability contract);
@@ -38,6 +41,7 @@ pub mod metrics;
 pub mod mo;
 pub mod pruners;
 pub mod registry;
+pub mod replica;
 pub mod samplers;
 pub mod service;
 pub mod space;

@@ -1,0 +1,365 @@
+//! Follower-side replication: the transport abstraction over the
+//! primary's replication log, snapshot bootstrap for cold followers,
+//! and the applier thread that feeds fetched batches into a live
+//! [`Engine`].
+//!
+//! The catch-up protocol has three stages, all resumable:
+//!
+//! 1. **Bootstrap** — a follower whose data directory carries no state
+//!    installs the primary's current snapshot bundle (manifest +
+//!    segment files, see [`crate::store::read_snapshot_bundle`]). The
+//!    manifest's per-shard cuts become the stream resume cursor.
+//! 2. **Log tail** — the applier fetches acknowledged batches from the
+//!    primary's in-memory replication buffer starting at the cursor,
+//!    appending each record to the local WAL (with the primary's seq
+//!    stamps preserved) and replaying it through the recovery
+//!    machinery, so views, event logs, and fleet ledgers stay live.
+//! 3. **Live stream** — once caught up, fetches long-poll: the
+//!    primary parks the request until its next group commit.
+//!
+//! A follower restart re-enters at stage 2: the resume cursor is
+//! recomputed from the last locally persisted record (or the manifest
+//! cuts when the local log is empty), so no re-bootstrap is needed.
+//! Only [`ReplFetch::TooOld`] — the primary evicted records the
+//! follower still needs — forces a fresh bootstrap; the applier then
+//! parks itself as *stalled* rather than apply a gapped stream.
+
+use crate::coordinator::engine::Engine;
+use crate::http::Client;
+use crate::json::Value;
+use crate::store::{self, Record, ReplFetch, ReplicationSource};
+use std::net::SocketAddr;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Largest batch a single fetch asks for. Bounds both the HTTP
+/// response size and the per-batch apply latency on the follower.
+const FETCH_MAX: usize = 4096;
+
+/// A source of replication batches. [`HttpTransport`] speaks to a
+/// remote primary over `/api/repl/*`; [`LocalTransport`] reads an
+/// in-process [`ReplicationSource`] directly (tests and benches).
+pub trait ReplTransport: Send {
+    /// Fetch acknowledged records with `seq >= from`, at most `max`.
+    /// `wait` bounds how long the call may block when the source is
+    /// already caught up (long poll); `Duration::ZERO` returns
+    /// immediately. Errors are transient (connection loss) — the
+    /// caller retries with backoff.
+    fn fetch(&mut self, from: u64, max: usize, wait: Duration) -> Result<ReplFetch, String>;
+
+    /// The primary's current snapshot bundle
+    /// (`{"manifest": ..., "files": [...]}`), for cold bootstrap.
+    fn snapshot(&mut self) -> Result<Value, String>;
+}
+
+/// Parse a primary URL or address (`http://host:port`, `host:port`)
+/// down to a socket address. Mirrors the worker client's handling of
+/// the `primary` hint in follower 503 bodies.
+pub fn parse_primary_addr(url: &str) -> Result<SocketAddr, String> {
+    let rest = url
+        .strip_prefix("http://")
+        .or_else(|| url.strip_prefix("https://"))
+        .unwrap_or(url);
+    let host = rest.split('/').next().unwrap_or(rest);
+    host.parse().map_err(|_| format!("unparseable primary address: {url}"))
+}
+
+/// Replication transport over HTTP: `GET /api/repl/log` (long poll)
+/// and `GET /api/repl/snapshot` against the primary. Reconnects lazily
+/// after any transport error.
+pub struct HttpTransport {
+    addr: SocketAddr,
+    conn: Option<Client>,
+}
+
+impl HttpTransport {
+    pub fn new(addr: SocketAddr) -> HttpTransport {
+        HttpTransport { addr, conn: None }
+    }
+
+    pub fn from_url(url: &str) -> Result<HttpTransport, String> {
+        Ok(HttpTransport::new(parse_primary_addr(url)?))
+    }
+
+    fn client(&mut self) -> Result<&mut Client, String> {
+        if self.conn.is_none() {
+            let c = Client::connect(self.addr)
+                .map_err(|e| format!("connect {}: {e}", self.addr))?;
+            self.conn = Some(c);
+        }
+        Ok(self.conn.as_mut().expect("just connected"))
+    }
+}
+
+impl ReplTransport for HttpTransport {
+    fn fetch(&mut self, from: u64, max: usize, wait: Duration) -> Result<ReplFetch, String> {
+        let path =
+            format!("/api/repl/log?from={from}&max={max}&timeout_ms={}", wait.as_millis());
+        let resp = match self.client()?.get(&path) {
+            Ok(r) => r,
+            Err(e) => {
+                self.conn = None;
+                return Err(format!("repl log fetch: {e}"));
+            }
+        };
+        match resp.status {
+            200 => {
+                let body = resp
+                    .json_body()
+                    .map_err(|e| format!("repl log body: {e}"))?;
+                let mut records = Vec::new();
+                for v in body.get("records").as_arr().unwrap_or(&[]) {
+                    let Some(rec) = Record::from_value(v) else {
+                        return Err("repl log: malformed record".into());
+                    };
+                    records.push(rec);
+                }
+                let next = body.get("next").as_u64().unwrap_or(from);
+                let primary_next = body.get("primary_next").as_u64().unwrap_or(next);
+                if records.is_empty() {
+                    // Long-poll timeout with nothing new.
+                    Ok(ReplFetch::UpToDate { next: primary_next })
+                } else {
+                    Ok(ReplFetch::Batches { records, next, primary_next })
+                }
+            }
+            410 => {
+                let oldest = resp
+                    .json_body()
+                    .ok()
+                    .map(|b| b.get("oldest").as_u64().unwrap_or(0))
+                    .unwrap_or(0);
+                Ok(ReplFetch::TooOld { oldest })
+            }
+            s => {
+                self.conn = None;
+                Err(format!("repl log fetch: status {s}"))
+            }
+        }
+    }
+
+    fn snapshot(&mut self) -> Result<Value, String> {
+        let resp = match self.client()?.get("/api/repl/snapshot") {
+            Ok(r) => r,
+            Err(e) => {
+                self.conn = None;
+                return Err(format!("repl snapshot fetch: {e}"));
+            }
+        };
+        if resp.status != 200 {
+            return Err(format!("repl snapshot: status {}", resp.status));
+        }
+        resp.json_body().map_err(|e| format!("repl snapshot body: {e}"))
+    }
+}
+
+/// In-process transport reading a primary engine's
+/// [`ReplicationSource`] directly — the seam tests, the property
+/// harness, and `benches/replication.rs` use to drive a follower
+/// without sockets. `dir` is the primary's data directory (for
+/// snapshot bootstrap); `None` serves an empty bundle.
+pub struct LocalTransport {
+    source: Arc<ReplicationSource>,
+    dir: Option<PathBuf>,
+}
+
+impl LocalTransport {
+    pub fn new(source: Arc<ReplicationSource>, dir: Option<PathBuf>) -> LocalTransport {
+        LocalTransport { source, dir }
+    }
+}
+
+impl ReplTransport for LocalTransport {
+    fn fetch(&mut self, from: u64, max: usize, wait: Duration) -> Result<ReplFetch, String> {
+        let signal = self.source.signal();
+        let seen = signal.generation();
+        match self.source.fetch(from, max) {
+            ReplFetch::UpToDate { .. } if !wait.is_zero() => {
+                signal.wait_changed(seen, wait);
+                Ok(self.source.fetch(from, max))
+            }
+            other => Ok(other),
+        }
+    }
+
+    fn snapshot(&mut self) -> Result<Value, String> {
+        match &self.dir {
+            Some(d) => store::read_snapshot_bundle(d).map_err(|e| e.to_string()),
+            None => {
+                let mut o = Value::obj();
+                o.set("manifest", Value::Null).set("files", Value::Arr(Vec::new()));
+                Ok(Value::Obj(o))
+            }
+        }
+    }
+}
+
+/// Install the primary's snapshot bundle into `dir` unless the
+/// directory already carries state — a manifest from a previous
+/// bootstrap, or locally persisted WAL records (then the recorded
+/// stream cursor is the cheaper resume point, and overlaying a newer
+/// manifest could mark those records covered out of order). Returns
+/// whether a bundle was actually installed.
+pub fn bootstrap(dir: &Path, transport: &mut dyn ReplTransport) -> Result<bool, String> {
+    if dir.join("MANIFEST.json").exists() {
+        return Ok(false);
+    }
+    let has_local_records = std::fs::metadata(dir.join("wal.log"))
+        .map(|m| m.len() > 0)
+        .unwrap_or(false);
+    if has_local_records {
+        return Ok(false);
+    }
+    let bundle = transport.snapshot()?;
+    let installed = !bundle.get("manifest").is_null();
+    store::install_snapshot_bundle(dir, &bundle).map_err(|e| e.to_string())?;
+    Ok(installed)
+}
+
+/// The follower's apply loop: a thread that fetches batches from a
+/// [`ReplTransport`] and feeds them through
+/// [`Engine::apply_repl_batch`] until sealed (promotion), stalled
+/// ([`ReplFetch::TooOld`] / apply failure), or dropped.
+pub struct ReplicaApplier {
+    stop: Arc<AtomicBool>,
+    stalled: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl ReplicaApplier {
+    /// Spawn the apply loop. `poll` is the long-poll budget per fetch
+    /// — it also bounds how long `seal`/drop wait for the thread to
+    /// notice the stop flag.
+    pub fn start(
+        engine: Arc<Engine>,
+        transport: Box<dyn ReplTransport>,
+        poll: Duration,
+    ) -> ReplicaApplier {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stalled = Arc::new(AtomicBool::new(false));
+        let handle = {
+            let stop = stop.clone();
+            let stalled = stalled.clone();
+            std::thread::Builder::new()
+                .name("repl-applier".into())
+                .spawn(move || run(engine, transport, &stop, &stalled, poll))
+                .expect("spawn repl applier thread")
+        };
+        ReplicaApplier { stop, stalled, handle: Some(handle) }
+    }
+
+    /// Whether the stream hit a condition only a re-bootstrap fixes.
+    pub fn stalled(&self) -> bool {
+        self.stalled.load(Ordering::Acquire)
+    }
+
+    /// Seal replication: signal the thread to stop, let it drain the
+    /// residual tail the transport can still deliver (stopping fetches
+    /// use a zero wait, so this is bounded by one in-flight long
+    /// poll), and join. After `seal` returns the engine holds every
+    /// record the transport would hand out — the precondition for
+    /// [`Engine::promote`].
+    pub fn seal(mut self) {
+        self.join_inner();
+    }
+
+    fn join_inner(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ReplicaApplier {
+    fn drop(&mut self) {
+        self.join_inner();
+    }
+}
+
+fn run(
+    engine: Arc<Engine>,
+    mut transport: Box<dyn ReplTransport>,
+    stop: &AtomicBool,
+    stalled: &AtomicBool,
+    poll: Duration,
+) {
+    let mut backoff = Duration::from_millis(10);
+    loop {
+        let stopping = stop.load(Ordering::Acquire);
+        let wait = if stopping { Duration::ZERO } else { poll };
+        let from = engine.repl_next();
+        match transport.fetch(from, FETCH_MAX, wait) {
+            Ok(ReplFetch::Batches { records, next: _, primary_next }) => {
+                backoff = Duration::from_millis(10);
+                if let Err(e) = engine.apply_repl_batch(&records, primary_next) {
+                    // Promoted underneath us, or local storage failed:
+                    // either way this stream is over.
+                    eprintln!("hopaas: replication apply stopped: {e}");
+                    stalled.store(true, Ordering::Release);
+                    return;
+                }
+            }
+            Ok(ReplFetch::UpToDate { next }) => {
+                backoff = Duration::from_millis(10);
+                let _ = engine.apply_repl_batch(&[], next);
+                if stopping {
+                    return;
+                }
+                if poll.is_zero() {
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            }
+            Ok(ReplFetch::TooOld { oldest }) => {
+                eprintln!(
+                    "hopaas: replication stalled: primary evicted up to seq {oldest}, \
+                     follower needs {from}; re-bootstrap from a fresh snapshot"
+                );
+                stalled.store(true, Ordering::Release);
+                return;
+            }
+            Err(e) => {
+                if stopping {
+                    return;
+                }
+                eprintln!("hopaas: replication fetch failed (retrying): {e}");
+                std::thread::sleep(backoff);
+                backoff = (backoff * 2).min(Duration::from_secs(2));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_primary_addr_forms() {
+        let want: SocketAddr = "127.0.0.1:8080".parse().unwrap();
+        assert_eq!(parse_primary_addr("127.0.0.1:8080").unwrap(), want);
+        assert_eq!(parse_primary_addr("http://127.0.0.1:8080").unwrap(), want);
+        assert_eq!(parse_primary_addr("https://127.0.0.1:8080/api").unwrap(), want);
+        assert!(parse_primary_addr("not an address").is_err());
+    }
+
+    #[test]
+    fn bootstrap_skips_dirs_with_state() {
+        let d = crate::testutil::TempDir::new("replica-bootstrap-skip");
+        // Fabricate local WAL records: bootstrap must not overwrite.
+        std::fs::write(d.path().join("wal.log"), b"x").unwrap();
+        struct NoSnapshot;
+        impl ReplTransport for NoSnapshot {
+            fn fetch(&mut self, _: u64, _: usize, _: Duration) -> Result<ReplFetch, String> {
+                Err("unused".into())
+            }
+            fn snapshot(&mut self) -> Result<Value, String> {
+                panic!("bootstrap must not fetch a snapshot over local records");
+            }
+        }
+        assert_eq!(bootstrap(d.path(), &mut NoSnapshot), Ok(false));
+    }
+}

@@ -24,7 +24,8 @@
 use super::super::space::{Assignment, Direction, Dist, Space};
 use super::super::study::AlgoConfig;
 use super::{FitState, Obs, Sampler};
-use crate::linalg::{norm_cdf, trunc_mixture_log_pdf, DensityGrid};
+use crate::json::Value;
+use crate::linalg::{norm_cdf, trunc_mixture_log_pdf, trunc_mixture_log_pdf_many, DensityGrid};
 use crate::rng::Rng;
 
 /// Tabulate the bad-mixture log-density on a grid once the component
@@ -91,10 +92,23 @@ impl Sampler for TpeSampler {
         let n_good = self.n_good(sorted.len());
         let (good, bad) = sorted.split_at(n_good);
 
+        // One-pass column extraction (§Perf): route every observed value
+        // to its parameter's contiguous column through a name→index map,
+        // instead of an O(|params|) scan per (observation, parameter)
+        // pair inside each estimator fit.
+        let index: std::collections::HashMap<&str, usize> = space
+            .params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (p.name.as_str(), i))
+            .collect();
+        let good_cols = param_columns(good, &index, space.params.len());
+        let bad_cols = param_columns(bad, &index, space.params.len());
         let estimators: Vec<ParamEstimator> = space
             .params
             .iter()
-            .map(|p| ParamEstimator::fit(&p.dist, p, good, bad))
+            .enumerate()
+            .map(|(j, p)| ParamEstimator::fit(&p.dist, &good_cols[j], &bad_cols[j]))
             .collect();
         Box::new(TpeFit { startup: false, estimators })
     }
@@ -112,21 +126,112 @@ impl Sampler for TpeSampler {
         if f.startup {
             return space.sample(rng);
         }
-        let mut best: Option<(f64, Assignment)> = None;
-        for _ in 0..self.n_ei_candidates.max(1) {
-            let mut cand: Assignment = Vec::with_capacity(space.len());
-            let mut score = 0.0;
-            for (p, est) in space.params.iter().zip(&f.estimators) {
-                let (v, s) = est.sample_and_score(&p.dist, rng);
-                score += s;
-                cand.push((p.name.clone(), v));
-            }
-            if best.as_ref().map_or(true, |(bs, _)| score > *bs) {
-                best = Some((score, cand));
+        let k = self.n_ei_candidates.max(1);
+        // Draw every candidate first (candidate-outer, parameter-inner —
+        // the historical order, so the RNG stream is unchanged), landing
+        // the draws in contiguous per-parameter columns; then score each
+        // column through the batched mixture evaluation, which streams
+        // the (large) bad-mixture arrays once for all candidates instead
+        // of once per candidate. Scoring consumes no randomness and the
+        // batched kernel is bit-identical to the scalar one, so the
+        // chosen candidate matches the per-candidate loop exactly.
+        let mut cols: Vec<DrawnColumn> = f
+            .estimators
+            .iter()
+            .map(|est| match est {
+                ParamEstimator::Numeric { .. } => DrawnColumn::Num(Vec::with_capacity(k)),
+                ParamEstimator::Cat { .. } => DrawnColumn::Cat(Vec::with_capacity(k)),
+            })
+            .collect();
+        for _ in 0..k {
+            for (est, col) in f.estimators.iter().zip(cols.iter_mut()) {
+                match (est, col) {
+                    (ParamEstimator::Numeric { good, .. }, DrawnColumn::Num(us)) => {
+                        us.push(good.sample(rng));
+                    }
+                    (ParamEstimator::Cat { good, .. }, DrawnColumn::Cat(idxs)) => {
+                        idxs.push(rng.weighted(good));
+                    }
+                    _ => unreachable!("column kind fixed by estimator kind"),
+                }
             }
         }
-        best.map(|(_, c)| c).unwrap_or_else(|| space.sample(rng))
+        let mut scores = vec![0.0f64; k];
+        let mut log_l = vec![0.0f64; k];
+        let mut log_g = vec![0.0f64; k];
+        for (est, col) in f.estimators.iter().zip(&cols) {
+            match (est, col) {
+                (ParamEstimator::Numeric { good, bad, bad_grid }, DrawnColumn::Num(us)) => {
+                    good.log_pdf_many(us, &mut log_l);
+                    match bad_grid {
+                        Some(grid) => grid.log_pdf_many(us, &mut log_g),
+                        None => bad.log_pdf_many(us, &mut log_g),
+                    }
+                    for ((sc, &l), &g) in scores.iter_mut().zip(&log_l).zip(&log_g) {
+                        *sc += l - g;
+                    }
+                }
+                (ParamEstimator::Cat { good, bad }, DrawnColumn::Cat(idxs)) => {
+                    for (sc, &idx) in scores.iter_mut().zip(idxs) {
+                        *sc += good[idx].ln() - bad[idx].ln();
+                    }
+                }
+                _ => unreachable!("column kind fixed by estimator kind"),
+            }
+        }
+        // First strict maximum — the per-candidate loop's tie-breaking.
+        let mut winner = 0usize;
+        for (i, &s) in scores.iter().enumerate().skip(1) {
+            if s > scores[winner] {
+                winner = i;
+            }
+        }
+        space
+            .params
+            .iter()
+            .zip(&cols)
+            .map(|(p, col)| {
+                let v = match col {
+                    DrawnColumn::Num(us) => p.dist.from_unit(us[winner]),
+                    DrawnColumn::Cat(idxs) => {
+                        let n = match &p.dist {
+                            Dist::Cat { choices } => choices.len(),
+                            _ => unreachable!("cat column on non-cat dist"),
+                        };
+                        p.dist.from_unit((idxs[winner] as f64 + 0.5) / n as f64)
+                    }
+                };
+                (p.name.clone(), v)
+            })
+            .collect()
     }
+}
+
+/// Per-parameter candidate draws, stored as one contiguous column per
+/// parameter (unit-interval points for numeric, category indices for
+/// categorical) so the batched scorers stream them in one pass.
+enum DrawnColumn {
+    Num(Vec<f64>),
+    Cat(Vec<usize>),
+}
+
+/// Split a set of observations into per-parameter value columns in one
+/// pass, preserving observation order within each column.
+fn param_columns<'a>(
+    set: &[&'a Obs],
+    index: &std::collections::HashMap<&str, usize>,
+    n_params: usize,
+) -> Vec<Vec<&'a Value>> {
+    let mut cols: Vec<Vec<&'a Value>> =
+        (0..n_params).map(|_| Vec::with_capacity(set.len())).collect();
+    for o in set {
+        for (name, v) in &o.params {
+            if let Some(&j) = index.get(name.as_str()) {
+                cols[j].push(v);
+            }
+        }
+    }
+    cols
 }
 
 /// Sufficient statistics of one TPE fit: the per-parameter l/g Parzen
@@ -161,34 +266,18 @@ enum ParamEstimator {
 }
 
 impl ParamEstimator {
-    fn fit(
-        dist: &Dist,
-        param: &super::super::space::Param,
-        good: &[&Obs],
-        bad: &[&Obs],
-    ) -> ParamEstimator {
-        let values = |set: &[&Obs]| -> Vec<f64> {
-            set.iter()
-                .filter_map(|o| {
-                    o.params
-                        .iter()
-                        .find(|(n, _)| n == &param.name)
-                        .and_then(|(_, v)| dist.to_unit(v))
-                })
-                .collect()
-        };
+    /// Fit from this parameter's contiguous value columns (one slot per
+    /// observation that recorded the parameter, in observation order —
+    /// the same values the old per-observation scan extracted).
+    fn fit(dist: &Dist, good: &[&Value], bad: &[&Value]) -> ParamEstimator {
         match dist {
             Dist::Cat { choices } => {
-                let hist = |set: &[&Obs]| -> Vec<f64> {
+                let hist = |vals: &[&Value]| -> Vec<f64> {
                     // Unit prior on every category (Laplace smoothing).
                     let mut w = vec![1.0; choices.len()];
-                    for o in set {
-                        if let Some((_, v)) =
-                            o.params.iter().find(|(n, _)| n == &param.name)
-                        {
-                            if let Some(i) = choices.iter().position(|c| c == v) {
-                                w[i] += 1.0;
-                            }
+                    for v in vals {
+                        if let Some(i) = choices.iter().position(|c| c == *v) {
+                            w[i] += 1.0;
                         }
                     }
                     let total: f64 = w.iter().sum();
@@ -197,31 +286,13 @@ impl ParamEstimator {
                 ParamEstimator::Cat { good: hist(good), bad: hist(bad) }
             }
             _ => {
-                let bad = Parzen::fit(&values(bad));
+                let unit = |vals: &[&Value]| -> Vec<f64> {
+                    vals.iter().filter_map(|v| dist.to_unit(v)).collect()
+                };
+                let bad = Parzen::fit(&unit(bad));
                 let bad_grid = (bad.len() >= BAD_GRID_MIN_OBS)
                     .then(|| bad.density_grid(DensityGrid::DEFAULT_BINS));
-                ParamEstimator::Numeric { good: Parzen::fit(&values(good)), bad, bad_grid }
-            }
-        }
-    }
-
-    /// Draw from the good model; return (value, log l − log g).
-    fn sample_and_score(&self, dist: &Dist, rng: &mut Rng) -> (crate::json::Value, f64) {
-        match self {
-            ParamEstimator::Numeric { good, bad, bad_grid } => {
-                let u = good.sample(rng);
-                let log_g = match bad_grid {
-                    Some(grid) => grid.log_pdf(u),
-                    None => bad.log_pdf(u),
-                };
-                let s = good.log_pdf(u) - log_g;
-                (dist.from_unit(u), s)
-            }
-            ParamEstimator::Cat { good, bad } => {
-                let idx = rng.weighted(good);
-                let s = good[idx].ln() - bad[idx].ln();
-                let u = (idx as f64 + 0.5) / good.len() as f64;
-                (dist.from_unit(u), s)
+                ParamEstimator::Numeric { good: Parzen::fit(&unit(good)), bad, bad_grid }
             }
         }
     }
@@ -279,6 +350,13 @@ impl Parzen {
     /// Mixture log-density at `x ∈ [0,1]` — exact flat-slice evaluation.
     pub fn log_pdf(&self, x: f64) -> f64 {
         trunc_mixture_log_pdf(x, &self.mus, &self.sigmas, &self.norms, self.w)
+    }
+
+    /// Mixture log-density at many points, streaming the component
+    /// arrays once (component-outer). Bit-identical to `log_pdf` per
+    /// point — see `linalg::trunc_mixture_log_pdf_many`.
+    pub fn log_pdf_many(&self, points: &[f64], out: &mut [f64]) {
+        trunc_mixture_log_pdf_many(points, &self.mus, &self.sigmas, &self.norms, self.w, out)
     }
 
     /// Tabulate the mixture log-density for O(1) interpolated lookups.

@@ -21,6 +21,9 @@
 //! | event feed     | GET    | `/api/studies/{id}/events`  |
 //! | series         | GET    | `/api/studies/{id}/series`  |
 //! | pareto         | GET    | `/api/studies/{id}/pareto`  |
+//! | repl log       | GET    | `/api/repl/log`             |
+//! | repl snapshot  | GET    | `/api/repl/snapshot`        |
+//! | promote        | POST   | `/api/repl/promote`         |
 //! | engine stats   | GET    | `/api/stats`                |
 //! | metrics        | GET    | `/metrics`                  |
 //! | health         | GET    | `/healthz`                  |
@@ -32,11 +35,13 @@
 
 use super::auth::{Claims, TokenService};
 use super::engine::{ApiError, AskReply, Engine, EngineConfig};
+use super::replica::{self, HttpTransport, ReplTransport, ReplicaApplier};
 use super::trial::TrialState;
 use super::views::{self, Cursor, ViewRegistry};
 use crate::http::{PathParams, Request, Response, Router, Server, ServerConfig, ServerHandle};
 use crate::json::Value;
-use std::sync::Arc;
+use crate::store::{Record, ReplFetch};
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 /// Server assembly options.
@@ -53,6 +58,12 @@ pub struct HopaasConfig {
     /// before answering with an empty page (clients may ask for less
     /// via `?timeout=`, never more).
     pub events_poll_timeout: Duration,
+    /// Long-poll budget for replication: the cap a primary enforces on
+    /// parked `GET /api/repl/log` requests, and the poll window a
+    /// follower's applier asks for. New records cut the poll short, so
+    /// this only bounds idle-stream latency (and how long a follower
+    /// shutdown may wait on an in-flight poll).
+    pub repl_poll_timeout: Duration,
 }
 
 impl Default for HopaasConfig {
@@ -64,6 +75,7 @@ impl Default for HopaasConfig {
             secret: b"hopaas-dev-secret".to_vec(),
             data_dir: None,
             events_poll_timeout: Duration::from_secs(25),
+            repl_poll_timeout: Duration::from_secs(2),
         }
     }
 }
@@ -76,11 +88,29 @@ pub struct HopaasServer {
     /// A token issued at startup so single-user setups work immediately
     /// (printed by the CLI; the web flow of the paper is out of scope).
     pub bootstrap_token: String,
+    /// Follower-mode stream applier; shared with the
+    /// `POST /api/repl/promote` route, which seals it. `None` entries
+    /// mean primary mode or an already-promoted follower.
+    applier: Arc<Mutex<Option<ReplicaApplier>>>,
 }
 
 impl HopaasServer {
-    /// Build the engine, router and HTTP server, and start serving.
+    /// Build the engine, router and HTTP server, and start serving. A
+    /// follower (`engine.follower` + `engine.primary_url`) first
+    /// bootstraps a cold data directory from the primary's snapshot,
+    /// then starts the replication applier alongside the HTTP server.
     pub fn start(addr: &str, config: HopaasConfig) -> anyhow::Result<HopaasServer> {
+        let mut transport: Option<Box<dyn ReplTransport>> =
+            match (config.engine.follower, &config.engine.primary_url) {
+                (true, Some(url)) => Some(Box::new(
+                    HttpTransport::from_url(url).map_err(|e| anyhow::anyhow!(e))?,
+                )),
+                _ => None,
+            };
+        if let (Some(t), Some(dir)) = (transport.as_mut(), &config.data_dir) {
+            replica::bootstrap(dir, t.as_mut())
+                .map_err(|e| anyhow::anyhow!("replication bootstrap: {e}"))?;
+        }
         let engine = Arc::new(match &config.data_dir {
             Some(dir) => Engine::open(dir, config.engine.clone())
                 .map_err(|e| anyhow::anyhow!(e.to_string()))?,
@@ -88,29 +118,48 @@ impl HopaasServer {
         });
         let tokens = Arc::new(TokenService::new(&config.secret));
         let bootstrap_token = tokens.issue("bootstrap", engine.now(), 365.0 * 86400.0);
+        let applier = Arc::new(Mutex::new(transport.map(|t| {
+            ReplicaApplier::start(engine.clone(), t, config.repl_poll_timeout)
+        })));
         let router = build_router_opts(
             engine.clone(),
             tokens.clone(),
             config.auth_required,
             config.events_poll_timeout,
+            ReplRouterState {
+                data_dir: config.data_dir.clone(),
+                poll_timeout: config.repl_poll_timeout,
+                applier: applier.clone(),
+            },
         );
         let mut server = Server::bind(addr, router, config.http.clone())?;
         // The view registry's feed signal drives the parked-reader pump:
         // every event append re-polls all parked long-poll connections.
+        // The replication source shares the same signal, so parked
+        // `/api/repl/log` polls wake on each group commit too.
         server.set_waker(engine.views().signal());
         // Request tracing: the server opens a span (and echoes the
         // X-Request-Id) around every dispatch; stages recorded by the
         // engine underneath land in the same span.
         server.set_tracer(engine.tracer().clone());
         let handle = server.start();
-        Ok(HopaasServer { engine, tokens, handle, bootstrap_token })
+        Ok(HopaasServer { engine, tokens, handle, bootstrap_token, applier })
     }
 
     pub fn addr(&self) -> std::net::SocketAddr {
         self.handle.addr()
     }
 
+    /// Whether the replication applier is still running (follower mode,
+    /// not yet promoted or stalled).
+    pub fn replicating(&self) -> bool {
+        self.applier.lock().unwrap().is_some()
+    }
+
     pub fn stop(self) {
+        if let Some(a) = self.applier.lock().unwrap().take() {
+            a.seal();
+        }
         self.handle.stop();
     }
 }
@@ -122,6 +171,16 @@ fn err_response(e: &ApiError) -> Response {
         ApiError::Conflict(m) => Response::error(409, m),
         // Quota/fair-share denial: back off and retry.
         ApiError::Quota(m) => Response::error(429, m),
+        // Follower refusing a mutation; the body carries the primary's
+        // address (when configured) so clients can fail over.
+        ApiError::ReadOnly(primary) => {
+            let mut o = Value::obj();
+            o.set("detail", "read-only follower");
+            if let Some(p) = primary {
+                o.set("primary", p.as_str());
+            }
+            Response::json_status(503, &Value::Obj(o))
+        }
         ApiError::Storage(m) => Response::error(500, m),
     }
 }
@@ -159,6 +218,23 @@ fn parse_limit(raw: Option<&str>) -> Result<usize, Response> {
     }
 }
 
+/// One page of the replication log on the wire.
+fn repl_log_page(records: &[Record], next: u64, primary_next: u64) -> Response {
+    let mut o = Value::obj();
+    o.set("records", Value::Arr(records.iter().map(Record::to_value).collect()))
+        .set("next", next)
+        .set("primary_next", primary_next);
+    Response::json(&Value::Obj(o))
+}
+
+/// 410: the requested cursor fell behind the primary's eviction floor;
+/// only a fresh snapshot bootstrap can resync the follower.
+fn repl_too_old(oldest: u64) -> Response {
+    let mut o = Value::obj();
+    o.set("detail", "too old").set("oldest", oldest);
+    Response::json_status(410, &Value::Obj(o))
+}
+
 /// RAII accounting for parked events readers: increments the waiter
 /// gauge when the reader parks, decrements when the deferred poll is
 /// dropped — whether it answered, timed out, or the connection died.
@@ -179,6 +255,26 @@ impl Drop for WaiterGuard {
     }
 }
 
+/// Replication wiring handed to the router: the data directory served
+/// by `GET /api/repl/snapshot`, the long-poll cap for
+/// `GET /api/repl/log`, and the applier handle that
+/// `POST /api/repl/promote` seals before flipping the engine writable.
+pub struct ReplRouterState {
+    pub data_dir: Option<std::path::PathBuf>,
+    pub poll_timeout: Duration,
+    pub applier: Arc<Mutex<Option<ReplicaApplier>>>,
+}
+
+impl Default for ReplRouterState {
+    fn default() -> Self {
+        ReplRouterState {
+            data_dir: None,
+            poll_timeout: Duration::from_secs(2),
+            applier: Arc::new(Mutex::new(None)),
+        }
+    }
+}
+
 /// Assemble the full router with default read-path options. Exposed for
 /// in-process benches (no TCP).
 pub fn build_router(
@@ -186,7 +282,13 @@ pub fn build_router(
     tokens: Arc<TokenService>,
     auth_required: bool,
 ) -> Router {
-    build_router_opts(engine, tokens, auth_required, Duration::from_secs(25))
+    build_router_opts(
+        engine,
+        tokens,
+        auth_required,
+        Duration::from_secs(25),
+        ReplRouterState::default(),
+    )
 }
 
 /// Assemble the full router.
@@ -195,6 +297,7 @@ pub fn build_router_opts(
     tokens: Arc<TokenService>,
     auth_required: bool,
     events_poll_timeout: Duration,
+    repl: ReplRouterState,
 ) -> Router {
     let mut router = Router::new();
 
@@ -709,6 +812,108 @@ pub fn build_router_opts(
             match params.get("id").and_then(|s| s.parse().ok()).and_then(|id| engine.series_json(id)) {
                 Some(v) => Response::json(&v),
                 None => Response::error(404, "unknown study"),
+            }
+        });
+    }
+
+    // --- replication ------------------------------------------------------
+    {
+        // The primary's acknowledged WAL stream. Followers poll with
+        // their resume cursor; a cursor at the head parks the
+        // connection on the reader pump (the replication source fires
+        // the same signal as the view feeds) until the next group
+        // commit publishes records or the poll window closes with an
+        // empty page.
+        let engine = engine.clone();
+        let poll_cap = repl.poll_timeout;
+        router.get("/api/repl/log", move |req, _| {
+            let from = match req.query_param("from").as_deref() {
+                None => 0u64,
+                Some(s) => match s.parse() {
+                    Ok(n) => n,
+                    Err(_) => {
+                        return Response::error(422, "'from' must be a non-negative integer")
+                    }
+                },
+            };
+            let max = match req.query_param("max").as_deref() {
+                None => 4096usize,
+                Some(s) => match s.parse::<usize>() {
+                    Ok(n) if n >= 1 => n,
+                    _ => return Response::error(422, "'max' must be a positive integer"),
+                },
+            };
+            let timeout = match req.query_param("timeout_ms").as_deref() {
+                None => Duration::ZERO,
+                Some(s) => match s.parse::<u64>() {
+                    Ok(ms) => Duration::from_millis(ms).min(poll_cap),
+                    Err(_) => {
+                        return Response::error(
+                            422,
+                            "'timeout_ms' must be a non-negative integer",
+                        )
+                    }
+                },
+            };
+            let Some(source) = engine.repl_source() else {
+                return Response::error(404, "replication log unavailable on this node");
+            };
+            let t0 = Instant::now();
+            let first = source.fetch(from, max);
+            crate::obs::stage(crate::obs::Stage::ReplFetch, t0.elapsed());
+            match first {
+                ReplFetch::Batches { records, next, primary_next } => {
+                    repl_log_page(&records, next, primary_next)
+                }
+                ReplFetch::TooOld { oldest } => repl_too_old(oldest),
+                ReplFetch::UpToDate { next } if timeout.is_zero() => {
+                    repl_log_page(&[], from, next)
+                }
+                ReplFetch::UpToDate { .. } => {
+                    let deadline = Instant::now() + timeout;
+                    Response::deferred(deadline, move |due| match source.fetch(from, max) {
+                        ReplFetch::Batches { records, next, primary_next } => {
+                            Some(repl_log_page(&records, next, primary_next))
+                        }
+                        ReplFetch::TooOld { oldest } => Some(repl_too_old(oldest)),
+                        ReplFetch::UpToDate { next } if due => {
+                            Some(repl_log_page(&[], from, next))
+                        }
+                        ReplFetch::UpToDate { .. } => None,
+                    })
+                }
+            }
+        });
+    }
+    {
+        // Current snapshot bundle (manifest + segment files) for cold
+        // follower bootstrap.
+        let data_dir = repl.data_dir.clone();
+        router.get("/api/repl/snapshot", move |_, _| match &data_dir {
+            None => Response::error(404, "no durable storage to snapshot"),
+            Some(dir) => match crate::store::read_snapshot_bundle(dir) {
+                Ok(bundle) => Response::json(&bundle),
+                Err(e) => Response::error(500, &e.to_string()),
+            },
+        });
+    }
+    {
+        // Promote this follower: seal the applier (drains the residual
+        // acknowledged tail), then flip the engine writable exactly
+        // once. 409 when the node is already a primary.
+        let engine = engine.clone();
+        let applier = repl.applier.clone();
+        router.post("/api/repl/promote", move |_, _| {
+            if let Some(a) = applier.lock().unwrap().take() {
+                a.seal();
+            }
+            match engine.promote() {
+                Ok(next) => {
+                    let mut o = Value::obj();
+                    o.set("role", "primary").set("writable", true).set("next", next);
+                    Response::json(&Value::Obj(o))
+                }
+                Err(e) => err_response(&e),
             }
         });
     }

@@ -365,7 +365,23 @@ fn run_parked_pump(
     let mut parked: Vec<ParkedConn> = Vec::new();
     loop {
         if shutdown.load(Ordering::SeqCst) {
-            // Dropping parked sockets closes them; clients observe EOF.
+            // Answer every parked long-poll with its deadline semantics
+            // (a final forced poll, normally an empty page) instead of
+            // dropping the socket mid-park: a client that parked before
+            // shutdown gets a clean terminal response, not an EOF it
+            // would surface as a transport error.
+            for conn in parked.drain(..) {
+                let ParkedConn { mut stream, head_only, req_id, mut deferred, .. } = conn;
+                let mut response = (deferred.poll)(true).unwrap_or_else(|| {
+                    Response::error(503, "server shutting down")
+                });
+                if let Some(id) = req_id {
+                    response.headers.set("x-request-id", id.as_str());
+                }
+                // The server is going away: always close.
+                let bytes = response.encode(false, head_only);
+                let _ = stream.write_all(&bytes);
+            }
             return;
         }
         let mut disconnected = false;

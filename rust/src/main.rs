@@ -92,6 +92,15 @@ COMMANDS:
                                        retained + logged (default 250; 0 = off)
                     --log-json         one structured JSON log line per
                                        retained request, on stderr
+                    --role primary|follower  replication role (default
+                                       primary; a follower serves reads
+                                       only until POST /api/repl/promote)
+                    --primary-url URL  the primary a follower bootstraps
+                                       from and streams the WAL of
+                    --repl-buffer N    acknowledged records retained for
+                                       followers to fetch (default 65536)
+                    --repl-poll-timeout S  replication long-poll window
+                                       (default 2)
                     --config FILE      JSON config (flags override)
   token             mint an API token offline
                     --secret S --user NAME --ttl SECONDS
@@ -121,9 +130,15 @@ fn cmd_serve(args: &Args) -> i32 {
         .engine
         .reap_after
         .map(|_| std::time::Duration::from_secs(30));
+    let follower = config.engine.follower;
     match HopaasServer::start(&addr, config) {
         Ok(server) => {
-            println!("hopaas {} serving on http://{}", hopaas::VERSION, server.addr());
+            let role = if follower { "follower (read-only)" } else { "primary" };
+            println!(
+                "hopaas {} serving on http://{} as {role}",
+                hopaas::VERSION,
+                server.addr()
+            );
             let rec = server.engine.recovery_stats();
             if rec.recovered_records > 0 || rec.segments > 0 || rec.truncated_records > 0 {
                 println!(

@@ -253,6 +253,12 @@ pub enum Stage {
     WalAck,
     /// Materialized-view publish under the shard lock.
     ViewPublish,
+    /// Replication: collecting a batch run from the primary's log
+    /// buffer (the `/api/repl/log` read side).
+    ReplFetch,
+    /// Replication: follower-side apply of a shipped batch (local
+    /// append + replay + view rebuild).
+    ReplApply,
 }
 
 impl Stage {
@@ -265,6 +271,8 @@ impl Stage {
             Stage::WalFsync => "wal_fsync",
             Stage::WalAck => "wal_ack",
             Stage::ViewPublish => "view_publish",
+            Stage::ReplFetch => "repl_fetch",
+            Stage::ReplApply => "repl_apply",
         }
     }
 }

@@ -144,6 +144,171 @@ pub struct BatchTrace {
 /// Committed batches kept in the attribution ledger.
 const LEDGER_CAP: usize = 64;
 
+/// Result of a follower's [`ReplicationSource::fetch`].
+#[derive(Clone, Debug)]
+pub enum ReplFetch {
+    /// Acknowledged records with `seq >= from`, in commit order.
+    /// `next` is the cursor to resume from (one past the last record
+    /// returned); `primary_next` is the seq the primary will stamp on
+    /// its next commit — the follower's lag is `primary_next - next`.
+    Batches { records: Vec<Record>, next: u64, primary_next: u64 },
+    /// `from` fell below the buffer's retention floor: the records were
+    /// evicted, and the follower must re-bootstrap from a snapshot
+    /// bundle before resuming at `oldest` or later.
+    TooOld { oldest: u64 },
+    /// Nothing acknowledged past `from` yet; long-poll and retry.
+    UpToDate { next: u64 },
+}
+
+/// Buffered acknowledged batches: the bounded in-memory window of the
+/// replication log a follower can tail without touching the primary's
+/// disk.
+struct ReplBuf {
+    /// `(seq_first, seq_last, records)` per committed batch, oldest
+    /// first. Seqs inside the window need not be contiguous — records
+    /// already covered by a snapshot segment never enter it — but every
+    /// *uncovered* acknowledged record with `seq >= floor` is present.
+    batches: VecDeque<(u64, u64, Vec<Record>)>,
+    /// Total records across `batches` (the eviction unit).
+    records: usize,
+    /// Oldest seq still fetchable; fetches below it get
+    /// [`ReplFetch::TooOld`].
+    floor: u64,
+    /// Seq the next committed record will be stamped with.
+    next_seq: u64,
+}
+
+/// The primary side of WAL shipping, extracted from the group-commit
+/// writer: every batch is published here *after* its fsync and *before*
+/// its senders are acknowledged, so "acknowledged ⇒ durable **and**
+/// shipped to the replication buffer" — promoting a caught-up follower
+/// can therefore never lose an acknowledged mutation. The buffer is
+/// bounded by record count; followers that fall behind the window
+/// re-bootstrap from a snapshot bundle (`TooOld`).
+pub struct ReplicationSource {
+    inner: Mutex<ReplBuf>,
+    /// Shared long-poll waker (the HTTP pump's [`crate::http::Notify`],
+    /// also fired by view publication). Parked `/api/repl/log` polls
+    /// re-check the buffer whenever it fires.
+    signal: Arc<crate::http::Notify>,
+    /// Record-count cap of the buffer.
+    cap: usize,
+}
+
+impl ReplicationSource {
+    /// New source retaining up to `cap` records. `floor`/`next_seq`
+    /// describe the log position at startup; `tail` seeds the buffer
+    /// with the uncovered records recovery just replayed, so a follower
+    /// bootstrapping from the snapshot bundle (which only covers up to
+    /// the segment cuts) can fetch the remainder without raw log
+    /// access. `signal` is the pump waker shared with view publication.
+    pub fn new(
+        cap: usize,
+        floor: u64,
+        next_seq: u64,
+        tail: Vec<Record>,
+        signal: Arc<crate::http::Notify>,
+    ) -> ReplicationSource {
+        let cap = cap.max(1);
+        let mut buf = ReplBuf { batches: VecDeque::new(), records: 0, floor, next_seq };
+        if let (Some(first), Some(last)) = (tail.first(), tail.last()) {
+            let (seq_first, seq_last) = (first.seq, last.seq);
+            buf.records = tail.len();
+            buf.batches.push_back((seq_first, seq_last, tail));
+            buf.next_seq = buf.next_seq.max(seq_last + 1);
+        }
+        let src = ReplicationSource { inner: Mutex::new(buf), signal, cap };
+        src.evict_locked(&mut src.inner.lock().unwrap());
+        src
+    }
+
+    /// Drop whole batches from the front until the record cap holds,
+    /// raising the retention floor past everything evicted.
+    fn evict_locked(&self, g: &mut ReplBuf) {
+        while g.records > self.cap && g.batches.len() > 1 {
+            if let Some((_, last, recs)) = g.batches.pop_front() {
+                g.records -= recs.len();
+                g.floor = g.floor.max(last + 1);
+            }
+        }
+        // A single oversized batch still has to be evictable, or the
+        // buffer would exceed its cap forever.
+        if g.records > self.cap {
+            if let Some((_, last, recs)) = g.batches.pop_front() {
+                g.records -= recs.len();
+                g.floor = g.floor.max(last + 1);
+            }
+        }
+    }
+
+    /// Publish one acknowledged (durably fsynced) batch. Called by the
+    /// WAL writer thread between fsync and ack.
+    pub fn publish(&self, records: Vec<Record>) {
+        let (Some(first), Some(last)) = (records.first(), records.last()) else { return };
+        let (seq_first, seq_last) = (first.seq, last.seq);
+        let mut g = self.inner.lock().unwrap();
+        g.records += records.len();
+        g.batches.push_back((seq_first, seq_last, records));
+        g.next_seq = g.next_seq.max(seq_last + 1);
+        self.evict_locked(&mut g);
+    }
+
+    /// All buffered records with `seq >= from`, capped at `max`.
+    pub fn fetch(&self, from: u64, max: usize) -> ReplFetch {
+        let g = self.inner.lock().unwrap();
+        if from < g.floor {
+            return ReplFetch::TooOld { oldest: g.floor };
+        }
+        let mut out: Vec<Record> = Vec::new();
+        'batches: for (_, seq_last, recs) in &g.batches {
+            if *seq_last < from {
+                continue;
+            }
+            for r in recs {
+                if r.seq >= from {
+                    out.push(r.clone());
+                    if out.len() >= max.max(1) {
+                        break 'batches;
+                    }
+                }
+            }
+        }
+        match out.last() {
+            None => ReplFetch::UpToDate { next: g.next_seq.max(from) },
+            Some(last) => ReplFetch::Batches {
+                next: last.seq + 1,
+                primary_next: g.next_seq,
+                records: out,
+            },
+        }
+    }
+
+    /// Seq the next committed record will carry (the follower's target).
+    pub fn next_seq(&self) -> u64 {
+        self.inner.lock().unwrap().next_seq
+    }
+
+    /// Oldest fetchable seq (diagnostics / `/api/stats`).
+    pub fn floor(&self) -> u64 {
+        self.inner.lock().unwrap().floor
+    }
+
+    /// Buffered record count (diagnostics / `/api/stats`).
+    pub fn buffered(&self) -> usize {
+        self.inner.lock().unwrap().records
+    }
+
+    /// Wake parked followers; fired by the writer after each publish.
+    pub fn notify(&self) {
+        self.signal.notify_all();
+    }
+
+    /// The shared waker, for callers that park on buffer changes.
+    pub fn signal(&self) -> Arc<crate::http::Notify> {
+        self.signal.clone()
+    }
+}
+
 type Ack = SyncSender<Result<WalAckInfo, String>>;
 type CountAck = SyncSender<Result<u64, String>>;
 
@@ -198,12 +363,15 @@ impl GroupWal {
     /// `prev_segments` seeds the clean-shard reuse table with the
     /// segments of the manifest the recovery just loaded (empty when
     /// the layout changed or no manifest existed — every shard is then
-    /// cut in full at the first compaction).
+    /// cut in full at the first compaction). `repl`, when given, has
+    /// every committed batch published to it between fsync and ack —
+    /// the primary side of WAL shipping.
     pub fn start(
         storage: Storage,
         config: GroupWalConfig,
         next_seq: u64,
         prev_segments: HashMap<u32, (String, u64)>,
+        repl: Option<Arc<ReplicationSource>>,
     ) -> GroupWal {
         let (tx, rx) = std::sync::mpsc::sync_channel(config.queue_depth.max(1));
         let stats = Arc::new(GroupWalStats::default());
@@ -214,8 +382,16 @@ impl GroupWal {
         let handle = std::thread::Builder::new()
             .name("hopaas-wal".into())
             .spawn(move || {
-                Writer::new(storage, config, next_seq, prev_segments, thread_stats, thread_ledger)
-                    .run(rx)
+                Writer::new(
+                    storage,
+                    config,
+                    next_seq,
+                    prev_segments,
+                    thread_stats,
+                    thread_ledger,
+                    repl,
+                )
+                .run(rx)
             })
             .expect("spawn wal writer");
         GroupWal { tx: Some(tx), stats, ledger, cutter, handle: Some(handle) }
@@ -375,6 +551,9 @@ struct Writer {
     prev_segments: HashMap<u32, (String, u64)>,
     stats: Arc<GroupWalStats>,
     ledger: Arc<Mutex<VecDeque<BatchTrace>>>,
+    /// Replication buffer committed batches are published to (primary
+    /// role; `None` on standalone nodes).
+    repl: Option<Arc<ReplicationSource>>,
 }
 
 impl Writer {
@@ -385,6 +564,7 @@ impl Writer {
         prev_segments: HashMap<u32, (String, u64)>,
         stats: Arc<GroupWalStats>,
         ledger: Arc<Mutex<VecDeque<BatchTrace>>>,
+        repl: Option<Arc<ReplicationSource>>,
     ) -> Writer {
         let config = GroupWalConfig {
             batch_max: config.batch_max.max(1),
@@ -402,6 +582,7 @@ impl Writer {
             prev_segments,
             stats,
             ledger,
+            repl,
         }
     }
 
@@ -530,6 +711,30 @@ impl Writer {
             }
         }
 
+        // Ship the durable batch to the replication buffer *before*
+        // acknowledging any sender, so "acknowledged ⇒ shipped" holds
+        // and promoting a caught-up follower can never lose an acked
+        // mutation. The `repl.publish` kill-point models a crash after
+        // fsync but before the publish: the batch is durable on disk
+        // (no rollback — a real power cut cannot un-fsync), NACKed, and
+        // never shipped; recovery replays it, followers never saw it.
+        // `repl.ack` crashes after the publish, before the acks: the
+        // batch is durable *and* shipped but unacknowledged.
+        if result.is_ok() {
+            if let Some(src) = &self.repl {
+                if let Err(e) = self.storage.fault_point("repl.publish") {
+                    result = Err(e.to_string());
+                } else {
+                    src.publish(
+                        jobs.iter().flat_map(|j| j.records.iter().cloned()).collect(),
+                    );
+                    if let Err(e) = self.storage.fault_point("repl.ack") {
+                        result = Err(e.to_string());
+                    }
+                }
+            }
+        }
+
         match &result {
             Ok(()) => {
                 let n = total as u64;
@@ -576,6 +781,17 @@ impl Writer {
             let info = WalAckInfo { queue_us, fsync_us, batch_len: total as u64 };
             let _ = job.ack.send(result.clone().map(|()| info));
         }
+        // Wake parked follower polls last: the `repl.wake` kill-point
+        // crashes after the acks — the batch is durable, shipped and
+        // acknowledged, so nothing may be lost; followers merely find
+        // it at their next deadline poll instead of instantly.
+        if result.is_ok() {
+            if let Some(src) = &self.repl {
+                if self.storage.fault_point("repl.wake").is_ok() {
+                    src.notify();
+                }
+            }
+        }
         deferred
     }
 }
@@ -602,7 +818,7 @@ mod tests {
         let d = TempDir::new("group-ack");
         {
             let storage = Storage::open(d.path()).unwrap();
-            let w = GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new());
+            let w = GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new(), None);
             for i in 0..10 {
                 w.append(rec(i)).unwrap();
             }
@@ -619,7 +835,7 @@ mod tests {
         let d = TempDir::new("group-seq");
         {
             let storage = Storage::open(d.path()).unwrap();
-            let w = GroupWal::start(storage, GroupWalConfig::default(), 7, HashMap::new());
+            let w = GroupWal::start(storage, GroupWalConfig::default(), 7, HashMap::new(), None);
             for i in 0..5 {
                 w.append(rec(i)).unwrap();
             }
@@ -638,7 +854,7 @@ mod tests {
         {
             let storage = Storage::open(d.path()).unwrap();
             let w =
-                Arc::new(GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new()));
+                Arc::new(GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new(), None));
             let handles: Vec<_> = (0..n_threads)
                 .map(|t| {
                     let w = w.clone();
@@ -678,7 +894,7 @@ mod tests {
         let d = TempDir::new("group-many");
         {
             let storage = Storage::open(d.path()).unwrap();
-            let w = GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new());
+            let w = GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new(), None);
             w.append_many((0..50).map(rec).collect()).unwrap();
             w.append_many(Vec::new()).unwrap(); // no-op, no batch
             let (batches, records, last, _) = w.stats().snapshot();
@@ -696,7 +912,7 @@ mod tests {
         let d = TempDir::new("group-rollback");
         {
             let storage = Storage::open(d.path()).unwrap();
-            let w = GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new());
+            let w = GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new(), None);
             w.append(rec(1)).unwrap();
             // A record above MAX_RECORD fails its append mid-batch; the
             // good record sharing the batch is NACKed and must not
@@ -721,7 +937,7 @@ mod tests {
     fn append_ack_attributes_batch_and_ledger_records_traces() {
         let d = TempDir::new("group-ledger");
         let storage = Storage::open(d.path()).unwrap();
-        let w = GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new());
+        let w = GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new(), None);
         // Tag the calling thread with a span: the append must carry the
         // request's trace id into the commit batch's ledger entry.
         let tracer = obs::Tracer::new(obs::TracerConfig::default());
@@ -762,7 +978,7 @@ mod tests {
                 adaptive: true,
                 ..Default::default()
             };
-            let w = GroupWal::start(storage, config, 0, HashMap::new());
+            let w = GroupWal::start(storage, config, 0, HashMap::new(), None);
             assert_eq!(w.stats().batch_limit.load(Ordering::Relaxed), 4);
             // A commit that fills the live limit doubles it.
             w.append_many((0..64).map(rec).collect()).unwrap();
@@ -777,7 +993,7 @@ mod tests {
         }
         // Fixed mode pins the limit at batch_max.
         let storage = Storage::open(d.path()).unwrap();
-        let w = GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new());
+        let w = GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new(), None);
         w.append(rec(1)).unwrap();
         assert_eq!(w.stats().batch_limit.load(Ordering::Relaxed), 256);
     }
@@ -796,7 +1012,7 @@ mod tests {
         let d = TempDir::new("group-reuse");
         {
             let storage = Storage::open(d.path()).unwrap();
-            let w = GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new());
+            let w = GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new(), None);
             w.append(rec(0)).unwrap();
             assert!(w.reuse_segment(0).unwrap().is_none(), "no previous manifest yet");
             w.begin_compact().unwrap();
@@ -822,7 +1038,7 @@ mod tests {
         let d = TempDir::new("group-compact");
         {
             let storage = Storage::open(d.path()).unwrap();
-            let w = GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new());
+            let w = GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new(), None);
             for i in 0..6 {
                 w.append(rec(i)).unwrap();
             }
@@ -847,6 +1063,133 @@ mod tests {
         assert_eq!(loaded.events, vec![rec(100)]);
     }
 
+    fn source(cap: usize, floor: u64, next: u64, tail: Vec<Record>) -> Arc<ReplicationSource> {
+        Arc::new(ReplicationSource::new(
+            cap,
+            floor,
+            next,
+            tail,
+            Arc::new(crate::http::Notify::new()),
+        ))
+    }
+
+    #[test]
+    fn replication_source_fetch_evicts_and_seeds() {
+        let src = source(4, 0, 0, Vec::new());
+        match src.fetch(0, 100) {
+            ReplFetch::UpToDate { next } => assert_eq!(next, 0),
+            other => panic!("expected UpToDate, got {other:?}"),
+        }
+        let batch = |seqs: &[u64]| {
+            src.publish(
+                seqs.iter()
+                    .map(|&s| {
+                        let mut r = rec(s as i64);
+                        r.seq = s;
+                        r
+                    })
+                    .collect(),
+            )
+        };
+        batch(&[0, 1]);
+        batch(&[2, 3]);
+        match src.fetch(1, 100) {
+            ReplFetch::Batches { records, next, primary_next } => {
+                assert_eq!(records.iter().map(|r| r.seq).collect::<Vec<_>>(), vec![1, 2, 3]);
+                assert_eq!(next, 4);
+                assert_eq!(primary_next, 4);
+            }
+            other => panic!("expected Batches, got {other:?}"),
+        }
+        // `max` caps the page; the cursor resumes mid-window.
+        match src.fetch(0, 2) {
+            ReplFetch::Batches { records, next, .. } => {
+                assert_eq!(records.len(), 2);
+                assert_eq!(next, 2);
+            }
+            other => panic!("expected Batches, got {other:?}"),
+        }
+        // A third batch overflows the 4-record cap: the oldest batch is
+        // evicted and the floor rises past it.
+        batch(&[4, 5]);
+        assert_eq!(src.floor(), 2);
+        assert_eq!(src.buffered(), 4);
+        match src.fetch(0, 100) {
+            ReplFetch::TooOld { oldest } => assert_eq!(oldest, 2),
+            other => panic!("expected TooOld, got {other:?}"),
+        }
+        // A recovered tail seeds the window (gaps allowed: covered
+        // records never enter it).
+        let tail: Vec<Record> = [3u64, 7, 9]
+            .iter()
+            .map(|&s| {
+                let mut r = rec(s as i64);
+                r.seq = s;
+                r
+            })
+            .collect();
+        let seeded = source(100, 2, 10, tail);
+        match seeded.fetch(4, 100) {
+            ReplFetch::Batches { records, next, primary_next } => {
+                assert_eq!(records.iter().map(|r| r.seq).collect::<Vec<_>>(), vec![7, 9]);
+                assert_eq!(next, 10);
+                assert_eq!(primary_next, 10);
+            }
+            other => panic!("expected Batches, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn acknowledged_batches_are_shipped_before_ack() {
+        let d = TempDir::new("group-repl-ship");
+        let storage = Storage::open(d.path()).unwrap();
+        let src = source(1024, 0, 0, Vec::new());
+        let w = GroupWal::start(
+            storage,
+            GroupWalConfig::default(),
+            0,
+            HashMap::new(),
+            Some(src.clone()),
+        );
+        w.append(rec(1)).unwrap();
+        w.append_many(vec![rec(2), rec(3)]).unwrap();
+        // Every acknowledged record is already in the buffer.
+        match src.fetch(0, 100) {
+            ReplFetch::Batches { records, next, .. } => {
+                assert_eq!(records.len(), 3);
+                assert_eq!(next, 3);
+            }
+            other => panic!("expected Batches, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn repl_publish_killpoint_nacks_durable_unshipped_batch() {
+        // A crash between fsync and publish: the batch is durable on
+        // disk (recovery replays it) but NACKed and never shipped.
+        let d = TempDir::new("group-repl-kill");
+        let hook: super::super::FaultHook =
+            Arc::new(|point: &str| point == "repl.publish");
+        let storage = Storage::open_with_hook(d.path(), Some(hook)).unwrap();
+        let src = source(1024, 0, 0, Vec::new());
+        let w = GroupWal::start(
+            storage,
+            GroupWalConfig::default(),
+            0,
+            HashMap::new(),
+            Some(src.clone()),
+        );
+        assert!(w.append(rec(1)).is_err(), "publish kill-point NACKs the batch");
+        match src.fetch(0, 100) {
+            ReplFetch::UpToDate { .. } => {}
+            other => panic!("record must not have shipped, got {other:?}"),
+        }
+        drop(w);
+        // ...but it *is* durable: a real power cut cannot un-fsync.
+        let events = reload(d.path());
+        assert_eq!(events, vec![rec(1)]);
+    }
+
     #[test]
     fn compact_cut_splits_around_segment() {
         // Records committed after rotation but before the shard's cut
@@ -857,7 +1200,7 @@ mod tests {
         let d = TempDir::new("group-cut");
         {
             let storage = Storage::open(d.path()).unwrap();
-            let w = GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new());
+            let w = GroupWal::start(storage, GroupWalConfig::default(), 0, HashMap::new(), None);
             w.append(rec(0)).unwrap();
             w.begin_compact().unwrap();
             w.append(rec(1)).unwrap(); // pre-cut: covered

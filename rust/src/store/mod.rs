@@ -57,7 +57,9 @@
 mod group;
 mod wal;
 
-pub use group::{BatchTrace, GroupWal, GroupWalConfig, GroupWalStats, WalAckInfo};
+pub use group::{
+    BatchTrace, GroupWal, GroupWalConfig, GroupWalStats, ReplFetch, ReplicationSource, WalAckInfo,
+};
 pub use wal::{Wal, WalError, WalStats};
 
 use crate::json::Value;
@@ -311,6 +313,99 @@ fn segment_file(shard: u32) -> String {
     }
 }
 
+/// Read the current snapshot bundle of `dir` — `MANIFEST.json` plus the
+/// raw text of every segment file it references — for shipping to a
+/// bootstrapping follower: `{"manifest": ..., "files": [{"name", "data"}]}`.
+/// A concurrent compaction can GC a segment between the manifest read
+/// and the file read; the whole read is retried against the (new)
+/// manifest in that case. `{"manifest": null}` when the directory has
+/// never been compacted — the follower then starts from seq 0 and
+/// receives everything over the stream.
+pub fn read_snapshot_bundle(dir: impl AsRef<Path>) -> Result<Value, WalError> {
+    let dir = dir.as_ref();
+    for _ in 0..8 {
+        let text = match std::fs::read_to_string(dir.join(MANIFEST_FILE)) {
+            Ok(s) => s,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                let mut o = Value::obj();
+                o.set("manifest", Value::Null).set("files", Value::Arr(Vec::new()));
+                return Ok(Value::Obj(o));
+            }
+            Err(e) => return Err(WalError::Io(e)),
+        };
+        let manifest = crate::json::parse(&text)
+            .map_err(|e| WalError::Corrupt(format!("manifest: {e}")))?;
+        let mut files = Vec::new();
+        let mut raced = false;
+        for seg in manifest.get("segments").as_arr().unwrap_or(&[]) {
+            let Some(name) = seg.get("file").as_str() else { continue };
+            match std::fs::read_to_string(dir.join(name)) {
+                Ok(data) => {
+                    let mut f = Value::obj();
+                    f.set("name", name).set("data", data);
+                    files.push(Value::Obj(f));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                    raced = true;
+                    break;
+                }
+                Err(e) => return Err(WalError::Io(e)),
+            }
+        }
+        if raced {
+            continue;
+        }
+        let mut o = Value::obj();
+        o.set("manifest", manifest).set("files", Value::Arr(files));
+        return Ok(Value::Obj(o));
+    }
+    Err(WalError::Corrupt("snapshot bundle kept racing compaction".into()))
+}
+
+/// Install a [`read_snapshot_bundle`] payload into an (empty) follower
+/// data directory: segment files first, each fsynced, then the manifest
+/// — the same write-ordering discipline compaction uses, so a crash
+/// mid-install leaves either no manifest (bootstrap restarts cleanly)
+/// or a manifest whose segments are all durable. The manifest's `epoch`
+/// is rewritten to 0: the follower's own log numbering starts fresh,
+/// and an inherited higher epoch would mark every locally appended
+/// record as covered.
+pub fn install_snapshot_bundle(dir: impl AsRef<Path>, bundle: &Value) -> Result<(), WalError> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir)?;
+    for f in bundle.get("files").as_arr().unwrap_or(&[]) {
+        let (Some(name), Some(data)) = (f.get("name").as_str(), f.get("data").as_str()) else {
+            return Err(WalError::Corrupt("bundle file without name/data".into()));
+        };
+        if name.contains('/') || name.contains("..") {
+            return Err(WalError::Corrupt(format!("bundle file name escapes dir: {name}")));
+        }
+        use std::io::Write;
+        let mut file = std::fs::File::create(dir.join(name))?;
+        file.write_all(data.as_bytes())?;
+        file.sync_all()?;
+    }
+    let manifest = bundle.get("manifest");
+    if manifest.is_null() {
+        return Ok(());
+    }
+    let mut m = manifest.clone();
+    if let Value::Obj(o) = &mut m {
+        o.set("epoch", 0u64);
+    }
+    let tmp = dir.join(format!("{MANIFEST_FILE}.tmp"));
+    {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&tmp)?;
+        f.write_all(m.to_string().as_bytes())?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, dir.join(MANIFEST_FILE))?;
+    #[cfg(unix)]
+    std::fs::File::open(dir)?.sync_all()?;
+    Ok(())
+}
+
 impl Storage {
     /// Open (or create) storage in `dir`.
     pub fn open(dir: impl AsRef<Path>) -> Result<Storage, WalError> {
@@ -356,6 +451,16 @@ impl Storage {
 
     /// Consult the fault hook at a named kill-point.
     fn fault(&self, point: &str) -> Result<(), WalError> {
+        self.shared.fault(point)
+    }
+
+    /// Consult the fault hook at a named kill-point from layers above
+    /// raw file I/O — the replication publish/ack/wake points the WAL
+    /// writer fires between fsync and acknowledgement. Public so the
+    /// group-commit writer can model a crash in the replication window
+    /// with the same one-process-one-power-cut semantics as the disk
+    /// kill-points.
+    pub fn fault_point(&self, point: &str) -> Result<(), WalError> {
         self.shared.fault(point)
     }
 

@@ -922,6 +922,185 @@ mod tests {
         });
     }
 
+    /// Fuzz the replication stream: a random ask/tell interleaving on a
+    /// durable primary at 1/4/8 shards, shipped to a durable follower
+    /// through fetches with random page sizes, random stream cuts
+    /// (stop fetching mid-stream, later resume from the follower's
+    /// cursor) and random *overlapped* reconnects (resume from an older
+    /// seq, so the same records are delivered twice). Invariants:
+    ///
+    /// * prefix — at every stream position the follower's tells are a
+    ///   subset of the primary's with identical values (the follower
+    ///   never invents or reorders state);
+    /// * no phantoms — every follower value was an acknowledged tell;
+    /// * duplicate delivery is idempotent — overlapped fetches change
+    ///   nothing;
+    /// * convergence — after a full drain the follower's tells equal
+    ///   the primary's exactly, and promotion accepts new writes.
+    #[test]
+    fn prop_follower_stream_is_prefix_consistent() {
+        use crate::coordinator::engine::{Engine, EngineConfig};
+        use crate::json::{parse, Value};
+        use crate::store::ReplFetch;
+        use crate::testutil::TempDir;
+        use std::collections::HashMap;
+
+        fn ask_body(study: usize) -> Value {
+            parse(&format!(
+                r#"{{
+                "study_name": "repl-fuzz-{study}",
+                "properties": {{"x": {{"low": 0.0, "high": 1.0}}}},
+                "direction": "minimize",
+                "sampler": {{"name": "random"}}
+            }}"#
+            ))
+            .unwrap()
+        }
+
+        fn tells(engine: &Engine) -> HashMap<u64, f64> {
+            let mut out = HashMap::new();
+            for s in engine.studies_json().as_arr().unwrap() {
+                let sid = s.get("id").as_u64().unwrap();
+                for t in engine.trials_json(sid).unwrap().as_arr().unwrap() {
+                    if let Some(v) = t.get("value").as_f64() {
+                        out.insert(t.get("id").as_u64().unwrap(), v);
+                    }
+                }
+            }
+            out
+        }
+
+        fn prefix_ok(
+            primary: &Engine,
+            follower: &Engine,
+            told: &HashMap<u64, f64>,
+        ) -> PropResult {
+            let p = tells(primary);
+            for (id, v) in tells(follower) {
+                assert_holds(
+                    p.get(&id) == Some(&v),
+                    format!("follower tell {id}={v} absent on primary"),
+                )?;
+                assert_holds(
+                    told.get(&id) == Some(&v),
+                    format!("phantom follower value {v} on trial {id}"),
+                )?;
+            }
+            Ok(())
+        }
+
+        check(12, |g| {
+            let shard_counts = [1usize, 4, 8];
+            let shards = *g.choose(&shard_counts);
+            let dp = TempDir::new("prop-repl-p");
+            let df = TempDir::new("prop-repl-f");
+            let primary = Engine::open(
+                dp.path(),
+                EngineConfig { n_shards: shards, ..Default::default() },
+            )
+            .unwrap();
+            let follower = Engine::open(
+                df.path(),
+                EngineConfig { follower: true, n_shards: shards, ..Default::default() },
+            )
+            .unwrap();
+            let source = primary.repl_source().expect("primary replication log");
+
+            let n_studies = g.usize(1, 3);
+            let n_ops = g.usize(4, 32);
+            let mut told: HashMap<u64, f64> = HashMap::new();
+            let mut running: Vec<u64> = Vec::new();
+            for i in 0..n_ops {
+                if running.is_empty() || g.bool() {
+                    let r = primary.ask(&ask_body(g.usize(0, n_studies - 1))).unwrap();
+                    running.push(r.trial_id);
+                } else {
+                    let id = running.swap_remove(g.usize(0, running.len() - 1));
+                    let v = i as f64;
+                    if primary.tell(id, v).is_ok() {
+                        told.insert(id, v);
+                    }
+                }
+                // Ship a random slice of the stream. Stopping after a
+                // bounded number of fetches *is* the stream cut: the
+                // next round reconnects and resumes from the cursor —
+                // sometimes from an older seq (overlapped redelivery).
+                if g.bool() {
+                    let mut budget = g.usize(1, 6);
+                    loop {
+                        let overlap = if g.bool() { g.usize(0, 3) as u64 } else { 0 };
+                        let from = follower.repl_next().saturating_sub(overlap);
+                        match source.fetch(from, g.usize(1, 5)) {
+                            ReplFetch::Batches { records, next: _, primary_next } => {
+                                follower
+                                    .apply_repl_batch(&records, primary_next)
+                                    .map_err(|e| format!("apply: {e}"))?;
+                            }
+                            ReplFetch::UpToDate { next } => {
+                                follower
+                                    .apply_repl_batch(&[], next)
+                                    .map_err(|e| format!("apply(empty): {e}"))?;
+                                break;
+                            }
+                            ReplFetch::TooOld { oldest } => {
+                                return Err(format!("window overrun (oldest {oldest})"));
+                            }
+                        }
+                        budget -= 1;
+                        if budget == 0 {
+                            break;
+                        }
+                    }
+                    prefix_ok(&primary, &follower, &told)?;
+                }
+            }
+
+            // Full drain: the follower must converge to the primary.
+            loop {
+                match source.fetch(follower.repl_next(), 4096) {
+                    ReplFetch::Batches { records, next: _, primary_next } => {
+                        follower
+                            .apply_repl_batch(&records, primary_next)
+                            .map_err(|e| format!("drain apply: {e}"))?;
+                    }
+                    ReplFetch::UpToDate { next } => {
+                        follower
+                            .apply_repl_batch(&[], next)
+                            .map_err(|e| format!("drain apply(empty): {e}"))?;
+                        break;
+                    }
+                    ReplFetch::TooOld { oldest } => {
+                        return Err(format!("drain window overrun (oldest {oldest})"));
+                    }
+                }
+            }
+            let p = tells(&primary);
+            let f = tells(&follower);
+            assert_holds(
+                p == f,
+                format!(
+                    "drained follower diverged: {} tells vs {} on primary ({shards} shards)",
+                    f.len(),
+                    p.len()
+                ),
+            )?;
+            assert_holds(
+                f.len() == told.len(),
+                format!("{} tells on follower, {} acknowledged", f.len(), told.len()),
+            )?;
+
+            // Promotion: the follower flips writable and takes writes.
+            follower.promote().map_err(|e| format!("promote: {e}"))?;
+            let r = follower
+                .ask(&ask_body(0))
+                .map_err(|e| format!("post-promote ask: {e}"))?;
+            follower
+                .tell(r.trial_id, 0.25)
+                .map_err(|e| format!("post-promote tell: {e}"))?;
+            Ok(())
+        });
+    }
+
     #[test]
     fn passing_property_passes() {
         check(64, |g| {

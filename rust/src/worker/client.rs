@@ -41,6 +41,34 @@ pub enum WorkerError {
 /// ids unique across the many clients a campaign spawns in one process.
 static CLIENT_SEQ: AtomicU64 = AtomicU64::new(1);
 
+/// Retry policy for transport failures and 503 rejections: capped
+/// exponential backoff with jitter, so a worker fleet riding through a
+/// primary restart or a follower promotion doesn't stampede the new
+/// primary in lockstep.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    /// Retries before the error surfaces (0 disables failover).
+    pub attempts: u32,
+    /// First backoff delay.
+    pub base_ms: u64,
+    /// Backoff ceiling.
+    pub cap_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy { attempts: 6, base_ms: 50, cap_ms: 2000 }
+    }
+}
+
+/// Extract a connectable address from a `primary` hint (`host:port`,
+/// optionally scheme-prefixed / path-suffixed).
+fn parse_primary_hint(hint: &str) -> Option<SocketAddr> {
+    let hint = hint.strip_prefix("http://").or_else(|| hint.strip_prefix("https://")).unwrap_or(hint);
+    let hint = hint.split('/').next().unwrap_or(hint);
+    hint.parse().ok()
+}
+
 /// Declarative study definition (what the `ask` body carries).
 #[derive(Clone, Debug)]
 pub struct StudySpec {
@@ -198,6 +226,10 @@ pub struct TrialHandle {
 /// Blocking HOPAAS client over one keep-alive connection.
 pub struct HopaasClient {
     http: Client,
+    /// Where the next reconnect goes; updated when a read-only follower
+    /// answers 503 with a `primary` hint.
+    addr: SocketAddr,
+    retry: RetryPolicy,
     token: String,
     /// Fleet worker identity, set by [`HopaasClient::register_worker`];
     /// when present every `ask` is lease-bound to it.
@@ -218,6 +250,8 @@ impl HopaasClient {
     pub fn connect(addr: SocketAddr, token: String) -> Result<HopaasClient, WorkerError> {
         Ok(HopaasClient {
             http: Client::connect(addr)?,
+            addr,
+            retry: RetryPolicy::default(),
             token,
             worker_id: None,
             tenant: None,
@@ -238,6 +272,19 @@ impl HopaasClient {
     /// identities without rebuilding the connection).
     pub fn set_tenant(&mut self, tenant: Option<String>) {
         self.tenant = tenant;
+    }
+
+    /// Override the failover policy (`attempts: 0` surfaces transport
+    /// errors and 503s immediately — what assertion-heavy tests want).
+    pub fn with_retry(mut self, retry: RetryPolicy) -> Self {
+        self.retry = retry;
+        self
+    }
+
+    /// The address operations currently target (follows `primary`
+    /// hints across a promotion).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
     }
 
     fn check(resp: crate::http::Response) -> Result<Value, WorkerError> {
@@ -268,24 +315,77 @@ impl HopaasClient {
         format!("wkr-{}-{}-{}", std::process::id(), self.nonce, self.seq)
     }
 
+    /// Sleep the current backoff step (plus jitter) and double it up to
+    /// the cap.
+    fn backoff(&self, delay_ms: &mut u64) {
+        let jitter = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.subsec_nanos() as u64)
+            .unwrap_or(0)
+            % (*delay_ms / 2 + 1);
+        std::thread::sleep(std::time::Duration::from_millis(*delay_ms + jitter));
+        *delay_ms = (*delay_ms * 2).min(self.retry.cap_ms.max(1));
+    }
+
+    /// Tear down the keep-alive connection and redial `self.addr`. A
+    /// failed dial is left for the next attempt's request to surface.
+    fn reconnect(&mut self) {
+        if let Ok(h) = Client::connect(self.addr) {
+            self.http = h;
+        }
+    }
+
     /// POST with an `X-Request-Id` attached. The transport's transparent
     /// retry on a stale keep-alive connection re-sends the same header
     /// set, so one id names one logical operation across retries and the
     /// server's trace buffer dedupes nothing.
+    ///
+    /// Transport failures and 503 answers (a restarting primary, or a
+    /// read-only follower during a promotion) are retried with capped
+    /// exponential backoff + jitter, re-sending the *same* request id —
+    /// the retries are one logical operation, and the trace a campaign
+    /// operator pulls afterwards names whichever server finally served
+    /// it. A follower's `{"primary": ...}` hint redirects the redial.
     fn post_traced(&mut self, path: &str, value: &Value) -> Result<Value, WorkerError> {
         let rid = self.next_request_id();
         let body = value.to_string().into_bytes();
-        let resp = self.http.request(
-            "POST",
-            path,
-            &[("content-type", "application/json"), ("x-request-id", &rid)],
-            Some(&body),
-        )?;
-        // Prefer the echoed id (the server sanitizes); keep what we sent
-        // when tracing is disabled server-side.
-        let echoed = resp.headers.get("x-request-id").map(str::to_string);
-        self.last_request_id = Some(echoed.unwrap_or(rid));
-        Self::check_with(resp, self.last_request_id.clone())
+        let mut attempt = 0u32;
+        let mut delay_ms = self.retry.base_ms.max(1);
+        loop {
+            let result = self.http.request(
+                "POST",
+                path,
+                &[("content-type", "application/json"), ("x-request-id", &rid)],
+                Some(&body),
+            );
+            let resp = match result {
+                Ok(resp) => resp,
+                Err(_) if attempt < self.retry.attempts => {
+                    attempt += 1;
+                    self.backoff(&mut delay_ms);
+                    self.reconnect();
+                    continue;
+                }
+                Err(e) => return Err(e.into()),
+            };
+            if resp.status == 503 && attempt < self.retry.attempts {
+                let hint_body = resp.json_body().unwrap_or(Value::Null);
+                if let Some(hint) = hint_body.get("primary").as_str() {
+                    if let Some(addr) = parse_primary_hint(hint) {
+                        self.addr = addr;
+                    }
+                }
+                attempt += 1;
+                self.backoff(&mut delay_ms);
+                self.reconnect();
+                continue;
+            }
+            // Prefer the echoed id (the server sanitizes); keep what we
+            // sent when tracing is disabled server-side.
+            let echoed = resp.headers.get("x-request-id").map(str::to_string);
+            self.last_request_id = Some(echoed.unwrap_or_else(|| rid.clone()));
+            return Self::check_with(resp, self.last_request_id.clone());
+        }
     }
 
     /// `X-Request-Id` of the most recent traced operation, as echoed by

@@ -15,7 +15,7 @@
 
 use hopaas::coordinator::engine::{Engine, EngineConfig};
 use hopaas::json::{parse, Value};
-use hopaas::store::Storage;
+use hopaas::store::{ReplFetch, Storage};
 use hopaas::testutil::crash::KillSwitch;
 use hopaas::testutil::TempDir;
 use std::collections::HashMap;
@@ -483,4 +483,123 @@ fn kill_during_group_commit_never_loses_an_acknowledged_tell() {
         assert_eq!(recovered.get(id), Some(v), "acknowledged tell {id} lost");
     }
     assert_eq!(engine.recovery_stats().seq_order_violations, 0);
+}
+
+#[test]
+fn repl_kill_points_promoted_follower_preserves_acknowledged_state() {
+    // (point, skip): where in the per-batch replication hand-off the
+    // primary dies. `repl.publish` = batch durable on disk but never
+    // shipped (and NACKed); `repl.ack` = durable and shipped but the
+    // senders never heard back; `repl.wake` = fully acknowledged, only
+    // the parked-poller wakeup is lost. At every point, promoting a
+    // caught-up follower must preserve each acknowledged tell, and the
+    // follower's state must be a prefix of what the old primary's log
+    // recovers ("shipped ⊆ durable": the publish sits behind the fsync).
+    let kill_points: &[(&str, usize)] = &[
+        ("repl.publish", 5),
+        ("repl.publish", 17),
+        ("repl.ack", 5),
+        ("repl.ack", 17),
+        ("repl.wake", 5),
+        ("repl.wake", 17),
+    ];
+    for &(point, skip) in kill_points {
+        let label = format!("{point}[{skip}]");
+        let dir_p = TempDir::new(&format!("ci-repl-p-{point}-{skip}"));
+        let dir_f = TempDir::new(&format!("ci-repl-f-{point}-{skip}"));
+        let ks = KillSwitch::new();
+        let storage =
+            Storage::open_with_hook(dir_p.path(), Some(ks.arm_nth(point, skip).hook())).unwrap();
+        let primary = Engine::open_with_storage(storage, config()).unwrap();
+        let follower = Engine::open(
+            dir_f.path(),
+            EngineConfig { follower: true, n_shards: N_SHARDS, ..Default::default() },
+        )
+        .unwrap();
+        assert!(!follower.is_writable(), "{label}: follower must start read-only");
+
+        // Drive the workload until the kill-point downs the primary.
+        let mut acked: Vec<(u64, f64)> = Vec::new();
+        let mut died = false;
+        'outer: for s in 0..6u64 {
+            for i in 0..4u64 {
+                let r = match primary.ask(&ask_body(&format!("cr-{s}"))) {
+                    Ok(r) => r,
+                    Err(_) => {
+                        died = true;
+                        break 'outer;
+                    }
+                };
+                let v = (s * 10 + i) as f64;
+                match primary.tell(r.trial_id, v) {
+                    Ok(_) => acked.push((r.trial_id, v)),
+                    Err(_) => {
+                        died = true;
+                        break 'outer;
+                    }
+                }
+            }
+        }
+        assert!(died, "{label}: kill-point never fired");
+        assert!(ks.fired(), "{label}");
+
+        // Drain whatever the primary shipped before dying — the
+        // synchronous equivalent of the follower's applier loop.
+        let source = primary.repl_source().expect("primary exposes a replication log");
+        loop {
+            match source.fetch(follower.repl_next(), 4096) {
+                ReplFetch::Batches { records, next: _, primary_next } => {
+                    follower.apply_repl_batch(&records, primary_next).unwrap();
+                }
+                ReplFetch::UpToDate { next } => {
+                    follower.apply_repl_batch(&[], next).unwrap();
+                    break;
+                }
+                ReplFetch::TooOld { oldest } => {
+                    panic!("{label}: follower fell out of the window (oldest {oldest})")
+                }
+            }
+        }
+        drop(primary); // the primary host is gone
+
+        // Promote the caught-up follower: every acked tell must be there.
+        follower
+            .promote()
+            .unwrap_or_else(|e| panic!("{label}: promote failed: {e}"));
+        assert!(follower.is_writable(), "{label}: promote must flip writable");
+        let on_follower = recovered_tells(&follower);
+        for (id, v) in &acked {
+            assert_eq!(
+                on_follower.get(id),
+                Some(v),
+                "{label}: acknowledged tell for trial {id} lost on promoted follower"
+            );
+        }
+
+        // "Power comes back" on the old primary (as a data autopsy): the
+        // follower's state must be a prefix of what its log recovers —
+        // the follower may lack durable-but-unshipped tails, never hold
+        // records the primary's disk does not.
+        let recovered = Engine::open(dir_p.path(), config()).unwrap();
+        let on_primary = recovered_tells(&recovered);
+        for (id, v) in &on_follower {
+            assert_eq!(
+                on_primary.get(id),
+                Some(v),
+                "{label}: follower holds trial {id} the recovered primary's log lacks"
+            );
+        }
+        for (id, v) in &acked {
+            assert_eq!(
+                on_primary.get(id),
+                Some(v),
+                "{label}: acknowledged tell for trial {id} lost on the recovered primary"
+            );
+        }
+
+        // The promoted follower serves fresh writes with durable acks.
+        let r = follower.ask(&ask_body("cr-0")).unwrap();
+        follower.tell(r.trial_id, 123.0).unwrap();
+        assert_eq!(recovered_tells(&follower).get(&r.trial_id), Some(&123.0), "{label}");
+    }
 }

@@ -1,0 +1,217 @@
+//! Replication e2e: a read-only follower bootstraps from a live
+//! primary over HTTP (snapshot bundle + WAL stream), serves the read
+//! path byte-for-byte, rejects writes with a `primary` hint that the
+//! worker client transparently follows, and — after the primary dies —
+//! promotes in place and takes over writes without losing one
+//! acknowledged tell.
+
+use hopaas::coordinator::engine::EngineConfig;
+use hopaas::coordinator::service::{HopaasConfig, HopaasServer};
+use hopaas::http::Client;
+use hopaas::worker::{HopaasClient, StudySpec};
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+struct TempDir(std::path::PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        let p = std::env::temp_dir().join(format!("hopaas-repl-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        std::fs::create_dir_all(&p).unwrap();
+        TempDir(p)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+fn primary_config(dir: &std::path::Path) -> HopaasConfig {
+    HopaasConfig {
+        auth_required: false,
+        data_dir: Some(dir.to_path_buf()),
+        ..Default::default()
+    }
+}
+
+fn follower_config(dir: &std::path::Path, primary: SocketAddr) -> HopaasConfig {
+    HopaasConfig {
+        auth_required: false,
+        data_dir: Some(dir.to_path_buf()),
+        engine: EngineConfig {
+            follower: true,
+            primary_url: Some(format!("http://{primary}")),
+            ..Default::default()
+        },
+        repl_poll_timeout: Duration::from_millis(200),
+        ..Default::default()
+    }
+}
+
+/// Block until the follower's cursor reaches `target` (a primary
+/// `next_seq` captured after the workload settled).
+fn wait_caught_up(follower: &HopaasServer, target: u64) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while follower.engine.repl_next() < target {
+        assert!(
+            Instant::now() < deadline,
+            "follower stuck at seq {} of {target}",
+            follower.engine.repl_next()
+        );
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+fn spec() -> StudySpec {
+    StudySpec::new("repl-study").uniform("x", 0.0, 1.0).sampler("random")
+}
+
+#[test]
+fn follower_bootstraps_replicates_and_promotes() {
+    let dir_p = TempDir::new("primary");
+    let dir_f = TempDir::new("follower");
+
+    let primary = HopaasServer::start("127.0.0.1:0", primary_config(&dir_p.0)).unwrap();
+    assert!(!primary.replicating(), "a primary runs no applier");
+    let mut c = HopaasClient::connect(primary.addr(), "x".into()).unwrap();
+
+    // Pre-bootstrap history, partly folded into a snapshot so the cold
+    // follower exercises the manifest-bundle path, partly left in the
+    // live log so it exercises the stream tail.
+    let mut told: Vec<(u64, f64)> = Vec::new();
+    for i in 0..6 {
+        let t = c.ask(&spec()).unwrap();
+        c.tell(&t, i as f64).unwrap();
+        told.push((t.trial_id, i as f64));
+    }
+    primary.engine.compact().unwrap();
+    for i in 0..4 {
+        let t = c.ask(&spec()).unwrap();
+        let v = 10.0 + i as f64;
+        c.tell(&t, v).unwrap();
+        told.push((t.trial_id, v));
+    }
+
+    let follower =
+        HopaasServer::start("127.0.0.1:0", follower_config(&dir_f.0, primary.addr())).unwrap();
+    assert!(follower.replicating(), "follower must run the applier");
+    wait_caught_up(&follower, primary.engine.repl_source().unwrap().next_seq());
+
+    // The whole read path is served locally, byte-identical to the
+    // primary at the replicated epoch.
+    let sid = c.studies().unwrap().at(0).get("id").as_u64().unwrap();
+    let mut raw_p = Client::connect(primary.addr()).unwrap();
+    let mut raw_f = Client::connect(follower.addr()).unwrap();
+    for path in ["/api/studies".to_string(), format!("/api/studies/{sid}/trials")] {
+        let a = raw_p.get(&path).unwrap();
+        let b = raw_f.get(&path).unwrap();
+        assert_eq!(a.status, 200, "{path}");
+        assert_eq!(b.status, 200, "{path}");
+        assert_eq!(a.body, b.body, "page {path} diverged between primary and follower");
+    }
+    // Role surfaces in /api/stats on both sides.
+    let stats_f = raw_f.get("/api/stats").unwrap().json_body().unwrap();
+    assert_eq!(stats_f.get("repl").get("role").as_str(), Some("follower"));
+    assert_eq!(stats_f.get("repl").get("writable").as_bool(), Some(false));
+    let stats_p = raw_p.get("/api/stats").unwrap().json_body().unwrap();
+    assert_eq!(stats_p.get("repl").get("role").as_str(), Some("primary"));
+
+    // Direct writes to the follower are refused with the primary hint.
+    let resp = raw_f.post_json("/api/ask/x", &spec().to_body()).unwrap();
+    assert_eq!(resp.status, 503);
+    let body = resp.json_body().unwrap();
+    assert_eq!(body.get("detail").as_str(), Some("read-only follower"));
+    assert_eq!(
+        body.get("primary").as_str(),
+        Some(format!("http://{}", primary.addr()).as_str())
+    );
+
+    // The worker client pointed at the follower follows the hint and
+    // lands the write on the primary (satellite: client failover).
+    let mut via_follower = HopaasClient::connect(follower.addr(), "x".into()).unwrap();
+    let t = via_follower.ask(&spec()).unwrap();
+    via_follower.tell(&t, 42.0).unwrap();
+    told.push((t.trial_id, 42.0));
+    assert_eq!(via_follower.addr(), primary.addr(), "client must have re-dialed the primary");
+
+    // Primary dies; the caught-up follower promotes exactly once.
+    wait_caught_up(&follower, primary.engine.repl_source().unwrap().next_seq());
+    primary.stop();
+    let empty = hopaas::json::parse("{}").unwrap();
+    let resp = raw_f.post_json("/api/repl/promote", &empty).unwrap();
+    assert_eq!(resp.status, 200, "promote failed: {:?}", String::from_utf8_lossy(&resp.body));
+    let body = resp.json_body().unwrap();
+    assert_eq!(body.get("role").as_str(), Some("primary"));
+    assert_eq!(body.get("writable").as_bool(), Some(true));
+    assert!(!follower.replicating(), "promotion must seal the applier");
+    // A second promote is a conflict, not a double flip.
+    let resp = raw_f.post_json("/api/repl/promote", &empty).unwrap();
+    assert_eq!(resp.status, 409);
+
+    // Every acknowledged tell survived the failover, and the promoted
+    // node takes new writes durably.
+    let mut c2 = HopaasClient::connect(follower.addr(), "x".into()).unwrap();
+    let trials = follower.engine.trials_json(sid).unwrap();
+    for (id, v) in &told {
+        let t = trials
+            .as_arr()
+            .unwrap()
+            .iter()
+            .find(|t| t.get("id").as_u64() == Some(*id))
+            .unwrap_or_else(|| panic!("trial {id} lost in failover"));
+        assert_eq!(t.get("value").as_f64(), Some(*v), "value diverged on trial {id}");
+    }
+    let t = c2.ask(&spec()).unwrap();
+    c2.tell(&t, -1.0).unwrap();
+    assert_eq!(c2.best_value(sid).unwrap(), Some(-1.0));
+    follower.stop();
+}
+
+#[test]
+fn follower_long_poll_log_delivers_live_batches() {
+    // A parked `/api/repl/log` poll on the primary must wake when the
+    // next group commit publishes, not at its deadline.
+    let dir_p = TempDir::new("longpoll");
+    let primary = HopaasServer::start("127.0.0.1:0", primary_config(&dir_p.0)).unwrap();
+    let mut c = HopaasClient::connect(primary.addr(), "x".into()).unwrap();
+    let t = c.ask(&spec()).unwrap();
+    c.tell(&t, 1.0).unwrap();
+
+    let from = primary.engine.repl_source().unwrap().next_seq();
+    let addr = primary.addr();
+    let poller = std::thread::spawn(move || {
+        let mut raw = Client::connect(addr).unwrap();
+        let t0 = Instant::now();
+        let resp = raw
+            .get(&format!("/api/repl/log?from={from}&timeout_ms=5000"))
+            .unwrap();
+        (resp, t0.elapsed())
+    });
+    std::thread::sleep(Duration::from_millis(100));
+    let t2 = c.ask(&spec()).unwrap();
+    c.tell(&t2, 2.0).unwrap();
+    let (resp, waited) = poller.join().unwrap();
+    assert_eq!(resp.status, 200);
+    let body = resp.json_body().unwrap();
+    let records = body.get("records").as_arr().unwrap();
+    assert!(!records.is_empty(), "live batch must be delivered");
+    assert!(
+        waited < Duration::from_secs(4),
+        "poll should wake on publish, waited {waited:?}"
+    );
+    assert!(body.get("next").as_u64().unwrap() > from);
+
+    // A cursor below the floor after eviction answers 410 — here the
+    // buffer is intact, so any in-window cursor pages forward instead.
+    let resp = raw_log(&addr, 0);
+    assert_eq!(resp.status, 200);
+    primary.stop();
+}
+
+fn raw_log(addr: &SocketAddr, from: u64) -> hopaas::http::Response {
+    let mut raw = Client::connect(*addr).unwrap();
+    raw.get(&format!("/api/repl/log?from={from}")).unwrap()
+}
