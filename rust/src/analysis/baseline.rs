@@ -1,0 +1,105 @@
+//! Lint baselines: a committed set of known findings that must only
+//! shrink.
+//!
+//! The baseline file is one [`Finding::key`] per line (sorted, `#`
+//! comments and blank lines ignored). Keys are line-number-free, so
+//! unrelated edits to a file don't churn the baseline. `--deny` fails
+//! on any finding not in the baseline AND on any baseline entry that
+//! no longer fires (stale entries must be deleted — that is the
+//! "only shrinks" guarantee).
+
+use super::rules::Finding;
+use std::collections::BTreeSet;
+
+/// Parse baseline text into the set of suppressed keys.
+pub fn parse(text: &str) -> BTreeSet<String> {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .map(str::to_string)
+        .collect()
+}
+
+/// Render findings as baseline text (sorted, deduplicated).
+pub fn render(findings: &[Finding]) -> String {
+    let keys: BTreeSet<String> = findings.iter().map(Finding::key).collect();
+    let mut out = String::from(
+        "# hopaas-lint baseline — pre-existing findings, grandfathered.\n\
+         # This file must only shrink: fix a finding, then delete its line.\n\
+         # Regenerate with `cargo run --bin hopaas-lint -- --write-baseline`.\n",
+    );
+    for k in keys {
+        out.push_str(&k);
+        out.push('\n');
+    }
+    out
+}
+
+/// The comparison `--deny` acts on.
+pub struct Diff<'a> {
+    /// Findings not covered by the baseline (fail).
+    pub new: Vec<&'a Finding>,
+    /// Baseline keys that no longer fire (fail: delete them).
+    pub stale: Vec<String>,
+    /// Count of findings the baseline covers (allowed).
+    pub baselined: usize,
+}
+
+pub fn diff<'a>(findings: &'a [Finding], baseline: &BTreeSet<String>) -> Diff<'a> {
+    let fired: BTreeSet<String> = findings.iter().map(Finding::key).collect();
+    let new: Vec<&Finding> =
+        findings.iter().filter(|f| !baseline.contains(&f.key())).collect();
+    let stale: Vec<String> =
+        baseline.iter().filter(|k| !fired.contains(*k)).cloned().collect();
+    let baselined = findings.len() - new.len();
+    Diff { new, stale, baselined }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(rule: &'static str, file: &str, func: &str, detail: &str) -> Finding {
+        Finding {
+            rule,
+            file: file.into(),
+            func: func.into(),
+            line: 1,
+            detail: detail.into(),
+            message: String::new(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_and_diff() {
+        let f1 = finding("lock_order", "src/a.rs", "A::f", "shard<-registry");
+        let f2 = finding("unwrap_boundary", "src/b.rs", "g", "x.lock-unwrap");
+        let text = render(&[f1.clone(), f2.clone()]);
+        let base = parse(&text);
+        assert_eq!(base.len(), 2);
+
+        // Same findings → nothing new, nothing stale.
+        let all = vec![f1.clone(), f2.clone()];
+        let d = diff(&all, &base);
+        assert!(d.new.is_empty());
+        assert!(d.stale.is_empty());
+        assert_eq!(d.baselined, 2);
+
+        // One fixed → its key is stale; one new → reported new.
+        let f3 = finding("determinism", "src/c.rs", "h", "clock-.now()");
+        let some = vec![f1, f3];
+        let d = diff(&some, &base);
+        assert_eq!(d.new.len(), 1);
+        assert_eq!(d.new[0].rule, "determinism");
+        assert_eq!(d.stale.len(), 1);
+        assert!(d.stale[0].contains("unwrap_boundary"));
+        assert_eq!(d.baselined, 1);
+    }
+
+    #[test]
+    fn parse_ignores_comments_and_blanks() {
+        let base = parse("# header\n\nrule|f|fn|d\n  \n# tail\n");
+        assert_eq!(base.len(), 1);
+        assert!(base.contains("rule|f|fn|d"));
+    }
+}

@@ -1,0 +1,334 @@
+//! A lightweight Rust lexer for `hopaas-lint`.
+//!
+//! In the spirit of the repo's hand-rolled `json`/`http` substrates:
+//! just enough tokenization to reason about lock acquisitions, call
+//! chains and suppression comments — identifiers, punctuation,
+//! literals (contents discarded), lifetimes vs. char literals, and
+//! comments (retained, because `// lint:allow(...)` lives there).
+//! It is not a parser and does not need to be: the lint rules work on
+//! token shapes (`.lock()`, `let g = …;`, brace depth), which this
+//! lexer preserves exactly.
+
+/// Token category. Literal payloads other than comments are discarded:
+/// the rules only ever compare identifier text and punctuation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Punct,
+    Str,
+    Char,
+    Num,
+    Lifetime,
+    Comment,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == s
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct && self.text.len() == c.len_utf8() && self.text.starts_with(c)
+    }
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into tokens. Never fails: unexpected bytes become
+/// single-character `Punct` tokens, and an unterminated literal simply
+/// runs to end of file — good enough for a lint that only reads the
+/// crate's own (compiling) sources and test fixtures.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut out = Vec::with_capacity(n / 4);
+    let mut i = 0usize;
+    let mut line = 1u32;
+
+    let collect = |chars: &[char], a: usize, b: usize| -> String { chars[a..b].iter().collect() };
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Comments.
+        if c == '/' && i + 1 < n {
+            if chars[i + 1] == '/' {
+                let start = i;
+                while i < n && chars[i] != '\n' {
+                    i += 1;
+                }
+                out.push(Tok { kind: TokKind::Comment, text: collect(&chars, start, i), line });
+                continue;
+            }
+            if chars[i + 1] == '*' {
+                let start = i;
+                let start_line = line;
+                i += 2;
+                let mut depth = 1usize;
+                while i < n && depth > 0 {
+                    if chars[i] == '\n' {
+                        line += 1;
+                        i += 1;
+                    } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                        depth += 1;
+                        i += 2;
+                    } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                        depth -= 1;
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                out.push(Tok {
+                    kind: TokKind::Comment,
+                    text: collect(&chars, start, i),
+                    line: start_line,
+                });
+                continue;
+            }
+        }
+        // Raw strings: r"…", r#"…"#, br"…", br#"…"# (any hash count).
+        if c == 'r' || (c == 'b' && i + 1 < n && chars[i + 1] == 'r') {
+            let mut j = i + if c == 'b' { 2 } else { 1 };
+            let mut hashes = 0usize;
+            while j < n && chars[j] == '#' {
+                hashes += 1;
+                j += 1;
+            }
+            if j < n && chars[j] == '"' {
+                j += 1;
+                // Scan for `"` followed by `hashes` hash marks.
+                'raw: while j < n {
+                    if chars[j] == '\n' {
+                        line += 1;
+                        j += 1;
+                        continue;
+                    }
+                    if chars[j] == '"' {
+                        let mut k = j + 1;
+                        let mut seen = 0usize;
+                        while k < n && seen < hashes && chars[k] == '#' {
+                            seen += 1;
+                            k += 1;
+                        }
+                        if seen == hashes {
+                            j = k;
+                            break 'raw;
+                        }
+                    }
+                    j += 1;
+                }
+                out.push(Tok { kind: TokKind::Str, text: String::new(), line });
+                i = j;
+                continue;
+            }
+            // Not a raw string — fall through to identifier lexing.
+        }
+        // Byte strings / byte chars: b"…", b'…'.
+        if c == 'b' && i + 1 < n && (chars[i + 1] == '"' || chars[i + 1] == '\'') {
+            i += 1;
+            // Handled by the string/char branches below on the next pass
+            // of the quote character; emit nothing for the `b` prefix.
+            let q = chars[i];
+            if q == '"' {
+                i += 1;
+                while i < n && chars[i] != '"' {
+                    if chars[i] == '\\' {
+                        i += 1;
+                    }
+                    if i < n && chars[i] == '\n' {
+                        line += 1;
+                    }
+                    i += 1;
+                }
+                i = (i + 1).min(n);
+                out.push(Tok { kind: TokKind::Str, text: String::new(), line });
+            } else {
+                i += 1;
+                if i < n && chars[i] == '\\' {
+                    i += 1;
+                }
+                i += 1;
+                while i < n && chars[i] != '\'' {
+                    i += 1;
+                }
+                i = (i + 1).min(n);
+                out.push(Tok { kind: TokKind::Char, text: String::new(), line });
+            }
+            continue;
+        }
+        // Strings.
+        if c == '"' {
+            i += 1;
+            while i < n && chars[i] != '"' {
+                if chars[i] == '\\' {
+                    i += 1;
+                } else if chars[i] == '\n' {
+                    line += 1;
+                }
+                i += 1;
+            }
+            i = (i + 1).min(n);
+            out.push(Tok { kind: TokKind::Str, text: String::new(), line });
+            continue;
+        }
+        // Char literal vs. lifetime.
+        if c == '\'' {
+            if i + 1 < n && chars[i + 1] == '\\' {
+                // '\n', '\'', '\u{…}' — scan to the closing quote.
+                i += 2;
+                while i < n && chars[i] != '\'' {
+                    i += 1;
+                }
+                i = (i + 1).min(n);
+                out.push(Tok { kind: TokKind::Char, text: String::new(), line });
+                continue;
+            }
+            if i + 2 < n && chars[i + 2] == '\'' {
+                // 'x'
+                i += 3;
+                out.push(Tok { kind: TokKind::Char, text: String::new(), line });
+                continue;
+            }
+            if i + 1 < n && is_ident_start(chars[i + 1]) {
+                // 'a, 'static — a lifetime.
+                let start = i;
+                i += 1;
+                while i < n && is_ident_cont(chars[i]) {
+                    i += 1;
+                }
+                out.push(Tok {
+                    kind: TokKind::Lifetime,
+                    text: collect(&chars, start, i),
+                    line,
+                });
+                continue;
+            }
+            // Bare quote (shouldn't happen in valid Rust) — punct.
+            out.push(Tok { kind: TokKind::Punct, text: "'".into(), line });
+            i += 1;
+            continue;
+        }
+        // Numbers: digits plus alphanumeric continuation (`0x`, `1e9`,
+        // suffixes) and `.` only when followed by a digit, so `0..n`
+        // lexes as Num, Punct('.'), Punct('.'), Ident/Num.
+        if c.is_ascii_digit() {
+            let start = i;
+            i += 1;
+            while i < n {
+                let d = chars[i];
+                if d.is_alphanumeric() || d == '_' {
+                    i += 1;
+                } else if d == '.' && i + 1 < n && chars[i + 1].is_ascii_digit() {
+                    i += 1;
+                } else {
+                    break;
+                }
+            }
+            out.push(Tok { kind: TokKind::Num, text: collect(&chars, start, i), line });
+            continue;
+        }
+        // Identifiers / keywords.
+        if is_ident_start(c) {
+            let start = i;
+            i += 1;
+            while i < n && is_ident_cont(chars[i]) {
+                i += 1;
+            }
+            out.push(Tok { kind: TokKind::Ident, text: collect(&chars, start, i), line });
+            continue;
+        }
+        // Everything else: one punct per char (`::` is two Punct(':')).
+        out.push(Tok { kind: TokKind::Punct, text: c.to_string(), line });
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn idents(src: &str) -> Vec<String> {
+        lex(src)
+            .into_iter()
+            .filter(|t| t.kind == TokKind::Ident)
+            .map(|t| t.text)
+            .collect()
+    }
+
+    #[test]
+    fn lexes_basic_shapes() {
+        let toks = lex("let g = self.state.lock().unwrap();");
+        let texts: Vec<&str> = toks.iter().map(|t| t.text.as_str()).collect();
+        assert_eq!(
+            texts,
+            vec!["let", "g", "=", "self", ".", "state", ".", "lock", "(", ")", ".", "unwrap", "(", ")", ";"]
+        );
+    }
+
+    #[test]
+    fn distinguishes_lifetimes_from_chars() {
+        let toks = lex("fn f<'a>(x: &'a str) { let c = 'x'; let nl = '\\n'; }");
+        let lifetimes: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Lifetime)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(lifetimes, vec!["'a", "'a"]);
+        assert_eq!(toks.iter().filter(|t| t.kind == TokKind::Char).count(), 2);
+    }
+
+    #[test]
+    fn skips_strings_and_nested_comments() {
+        let src = r##"
+            let s = "lock() inside a string";
+            let r = r#"raw "with" quotes and lock()"#;
+            /* outer /* nested */ still comment */
+            call();
+        "##;
+        assert_eq!(idents(src), vec!["let", "s", "let", "r", "call"]);
+    }
+
+    #[test]
+    fn keeps_comments_with_lines() {
+        let src = "x();\n// lint:allow(lock_order): because\ny();";
+        let toks = lex(src);
+        let c = toks.iter().find(|t| t.kind == TokKind::Comment).unwrap();
+        assert_eq!(c.line, 2);
+        assert!(c.text.contains("lint:allow(lock_order)"));
+    }
+
+    #[test]
+    fn numbers_do_not_eat_ranges() {
+        let toks = lex("for i in 0..10 {}");
+        let nums: Vec<&str> = toks
+            .iter()
+            .filter(|t| t.kind == TokKind::Num)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(nums, vec!["0", "10"]);
+    }
+}

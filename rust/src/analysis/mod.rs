@@ -1,0 +1,85 @@
+//! `hopaas-lint`: repo-specific static analysis for concurrency
+//! correctness.
+//!
+//! The coordinator is a dense web of locks — registry, shard CS1/CS2,
+//! view builders, the WAL writer queue, the replication ring, fleet
+//! ledgers — and a single lock-order inversion or a guard held across
+//! an fsync silently caps throughput or deadlocks the fleet. This
+//! module is the static half of the PR-10 concurrency tooling (the
+//! dynamic half is `crate::testutil::sched`, the deterministic
+//! interleaving checker):
+//!
+//! * a hand-rolled Rust [`lexer`] (no new crate deps, in the spirit of
+//!   the repo's `json`/`http`);
+//! * the [`rules`]: the canonical lock [`HIERARCHY`] and the four
+//!   checks (`lock_order`, `guard_blocking`, `determinism`,
+//!   `unwrap_boundary`);
+//! * [`baseline`]s that must only shrink, plus
+//!   `// lint:allow(rule): reason` inline suppressions.
+//!
+//! Run it with `cargo run --bin hopaas-lint` (see `src/bin/`); CI runs
+//! `hopaas-lint --deny` in the `analysis` job.
+
+pub mod baseline;
+pub mod lexer;
+pub mod rules;
+
+pub use rules::{lint_source, lint_sources, Finding, EFFECTS, HIERARCHY, RULES};
+
+use std::path::{Path, PathBuf};
+
+/// Directories under the source root that the lint does not scan:
+/// test scaffolding is exempt from production lock discipline.
+const SKIP_DIRS: &[&str] = &["testutil"];
+
+/// Recursively collect the `.rs` sources under `root` (sorted for
+/// deterministic output), skipping [`SKIP_DIRS`].
+pub fn collect_sources(root: &Path) -> std::io::Result<Vec<(String, String)>> {
+    let mut files: Vec<PathBuf> = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        for entry in std::fs::read_dir(&dir)? {
+            let path = entry?.path();
+            let name = path.file_name().and_then(|n| n.to_str()).unwrap_or("");
+            if path.is_dir() {
+                if !SKIP_DIRS.contains(&name) {
+                    stack.push(path);
+                }
+            } else if name.ends_with(".rs") {
+                files.push(path);
+            }
+        }
+    }
+    files.sort();
+    let mut out = Vec::with_capacity(files.len());
+    for path in files {
+        let rel = path.strip_prefix(root).unwrap_or(&path);
+        // Labels are stable `src/…` paths whatever the invocation cwd.
+        let label = format!("src/{}", rel.display()).replace('\\', "/");
+        out.push((label, std::fs::read_to_string(&path)?));
+    }
+    Ok(out)
+}
+
+/// Lint every production source under `root` (a `src/` directory).
+pub fn lint_tree(root: &Path) -> std::io::Result<Vec<Finding>> {
+    Ok(lint_sources(&collect_sources(root)?))
+}
+
+/// Locate the crate's `src/` from a checkout-relative cwd: works from
+/// the repo root (`rust/src`) and from `rust/` (`src`).
+pub fn default_src_root() -> Option<PathBuf> {
+    for cand in ["rust/src", "src"] {
+        let p = PathBuf::from(cand);
+        if p.join("lib.rs").is_file() {
+            return Some(p);
+        }
+    }
+    None
+}
+
+/// The default baseline path next to a given source root
+/// (`<root>/../lint-baseline.txt`, i.e. `rust/lint-baseline.txt`).
+pub fn default_baseline_path(src_root: &Path) -> PathBuf {
+    src_root.parent().unwrap_or(Path::new(".")).join("lint-baseline.txt")
+}

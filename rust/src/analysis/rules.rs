@@ -1,0 +1,993 @@
+//! The `hopaas-lint` rules: lock hierarchy, guard-across-blocking,
+//! determinism, and unwrap-at-boundary checks over the lexed token
+//! stream.
+//!
+//! ## The canonical lock hierarchy
+//!
+//! [`HIERARCHY`] is the single declared source of truth for the
+//! coordinator's lock order (ARCHITECTURE.md "Lock hierarchy &
+//! concurrency analysis" renders the same table in prose). Locks may
+//! only be acquired in **ascending level order** while other guards
+//! are live. Receiver names (the identifier a
+//! `.lock()`/`.read()`/`.write()` hangs off) map token shapes to
+//! classes; a handful of well-known functions ([`EFFECTS`]) act as
+//! named acquisitions (`lock_shard` returns the shard guard,
+//! `persist`/`persist_many` block on the WAL writer roundtrip, the
+//! view registry entry points take the per-study builder lock).
+//! Receivers the table does not know are exempt from the hierarchy
+//! rule (but still checked by the other rules).
+//!
+//! ## Rules
+//!
+//! * `lock_order` — an acquisition (direct, or via a function whose
+//!   transitive effects include one) at a level ≤ any live guard's
+//!   level. Effects propagate through the crate-local call graph, but
+//!   only for functions whose name is defined exactly once in the
+//!   scanned tree and is not a common std name — a hand-rolled lint
+//!   must not confuse `Directory::push` with `Vec::push`.
+//! * `guard_blocking` — any guard live across an fsync-class or
+//!   blocking-socket call (`sync`, `sync_all`, `write_segment`,
+//!   `connect`, `accept`, …). Deliberately *not* on the list: mpsc
+//!   `recv` (the shard-lock-across-WAL-roundtrip is a core ordering
+//!   guarantee of the engine) and condvar waits (they release the
+//!   guard).
+//! * `determinism` — `Instant::now` / `SystemTime::now` / `.now()` /
+//!   `thread_rng` in replay- and replication-deterministic roots
+//!   (`apply_repl_batch`, `apply_event`, recovery, sampler sources).
+//!   Direct occurrences only, by design: the roots call broad shared
+//!   helpers, and flagging transitively would drown the signal.
+//! * `unwrap_boundary` — `.unwrap()`/`.expect()` directly on a lock
+//!   result (use `lock_safe`/`read_safe`/`write_safe` from
+//!   `crate::sync`) or on a network/parse boundary (`parse`,
+//!   `from_utf8`, `recv`, `accept`, `connect`).
+//!
+//! Suppress a finding with `// lint:allow(<rule>): <reason>` on the
+//! same line or the line above; the reason is part of the idiom.
+//! `#[cfg(test)]` items and `src/testutil/` are not scanned.
+
+use super::lexer::{lex, Tok, TokKind};
+use std::collections::{BTreeMap, HashMap, HashSet};
+
+/// One lock class in the canonical hierarchy.
+pub struct LockClass {
+    pub name: &'static str,
+    /// Acquisition order: while holding a guard of level L, only locks
+    /// with level strictly greater than L may be acquired.
+    pub level: u32,
+    /// Field/receiver identifiers that acquire this class via
+    /// `.lock()` / `.read()` / `.write()` (and the `_safe` variants).
+    pub receivers: &'static [&'static str],
+    pub doc: &'static str,
+}
+
+/// The canonical lock hierarchy: registry → shard → view builder →
+/// WAL queue → metrics/obs, with the auxiliary classes interleaved at
+/// their acquisition points. Declared once, here.
+pub const HIERARCHY: &[LockClass] = &[
+    LockClass {
+        name: "serial",
+        level: 5,
+        receivers: &["compact_lock", "follower_store"],
+        doc: "whole-subsystem serialization points (compaction, follower apply/promote); \
+              taken first, before any other engine lock",
+    },
+    LockClass {
+        name: "registry",
+        level: 10,
+        receivers: &["directory"],
+        doc: "the cross-study directory; readers copy out of it before locking a shard, \
+              writers publish entries only after the owning shard guard is released",
+    },
+    LockClass {
+        name: "bind_gate",
+        level: 15,
+        receivers: &["fleet_bind_gate"],
+        doc: "the fleet segment-cut gate, held (shared) across ask critical sections",
+    },
+    LockClass {
+        name: "shard",
+        level: 20,
+        receivers: &["state"],
+        doc: "a shard's studies/trials/sampler state; the engine's central lock",
+    },
+    LockClass {
+        name: "fleet",
+        level: 25,
+        receivers: &["fleet"],
+        doc: "worker registry, leases and quota ledgers; acquired under a shard guard \
+              on the bind path",
+    },
+    LockClass {
+        name: "view_slots",
+        level: 28,
+        receivers: &["slots"],
+        doc: "the view registry's slot map (study id → per-study slot)",
+    },
+    LockClass {
+        name: "view_builder",
+        level: 30,
+        receivers: &["builder"],
+        doc: "a study's materialized-view builder; serializes rebuild vs incremental update",
+    },
+    LockClass {
+        name: "view_leaf",
+        level: 35,
+        receivers: &["view", "events"],
+        doc: "published view snapshot and event log — leaves of the read path",
+    },
+    LockClass {
+        name: "wal_queue",
+        level: 40,
+        receivers: &["queue"],
+        doc: "the group-commit writer roundtrip; callers hold their shard lock across it \
+              so per-shard WAL order equals per-shard mutation order",
+    },
+    LockClass {
+        name: "wal_ledger",
+        level: 42,
+        receivers: &["ledger"],
+        doc: "the WAL segment/manifest ledger, taken by the writer thread after fsync",
+    },
+    LockClass {
+        name: "repl_ring",
+        level: 44,
+        receivers: &["inner"],
+        doc: "the replication ring buffer (publish/ack/evict floor)",
+    },
+    LockClass {
+        name: "router",
+        level: 45,
+        receivers: &["stripes"],
+        doc: "trial-id → shard router stripes; tiny leaf critical sections",
+    },
+    LockClass {
+        name: "obs",
+        level: 50,
+        receivers: &["site_leases", "sinks", "slow_ops", "spans", "series"],
+        doc: "metrics and observability ledgers — always last",
+    },
+];
+
+/// Functions that acquire a lock class by name: the named-acquisition
+/// half of the hierarchy table. `held` marks functions returning a
+/// guard (the acquisition outlives the call); the rest block inside
+/// the call and release before returning.
+pub struct EffectFn {
+    pub name: &'static str,
+    pub class: &'static str,
+    pub held: bool,
+}
+
+pub const EFFECTS: &[EffectFn] = &[
+    EffectFn { name: "lock_shard", class: "shard", held: true },
+    EffectFn { name: "persist", class: "wal_queue", held: false },
+    EffectFn { name: "persist_many", class: "wal_queue", held: false },
+    EffectFn { name: "on_study_created", class: "view_builder", held: false },
+    EffectFn { name: "on_trials_inserted", class: "view_builder", held: false },
+    EffectFn { name: "on_trial_updated", class: "view_builder", held: false },
+    EffectFn { name: "rebuild_from", class: "view_builder", held: false },
+];
+
+/// Calls a live guard must never span: fsync-class file operations and
+/// blocking socket establishment/IO.
+const BLOCKING_SINKS: &[&str] = &[
+    "sync",
+    "sync_all",
+    "sync_data",
+    "fsync",
+    "write_segment",
+    "connect",
+    "accept",
+    "read_exact",
+    "write_all",
+    "read_to_end",
+];
+
+/// Replay/replication-deterministic roots: function names whose bodies
+/// must not read wall clocks or OS randomness. Checked directly (not
+/// transitively) — see the module docs.
+const DET_ROOTS: &[&str] = &[
+    "apply_repl_batch",
+    "apply_event",
+    "apply_fleet_event",
+    "apply_partition",
+    "apply_partitions",
+    "recover_study",
+    "replay_trial_mut",
+    "plan_replay",
+    "study_from_json",
+];
+
+/// Path substrings whose every function is a deterministic root: the
+/// samplers and the PRNG draw only from seeded streams.
+const DET_ROOT_DIRS: &[&str] = &["coordinator/samplers", "rng.rs"];
+
+/// Boundary calls whose `Result` must be handled, not unwrapped.
+const UNWRAP_BOUNDARY_FNS: &[&str] =
+    &["parse", "from_utf8", "from_str", "recv", "recv_timeout", "accept", "connect"];
+
+/// Callee names excluded from call-graph effect propagation even when
+/// uniquely defined in the tree: common std names a method call could
+/// just as well resolve to.
+const PROPAGATION_DENYLIST: &[&str] = &[
+    "new", "clone", "drop", "default", "len", "is_empty", "push", "pop", "insert", "remove",
+    "get", "get_mut", "take", "set", "send", "recv", "write", "read", "lock", "flush", "sync",
+    "next", "iter", "collect", "contains", "clear", "append", "join", "spawn", "wait",
+    "notify_all", "notify_one", "as_str", "as_ref", "as_mut", "to_string", "from", "into",
+    "cmp", "eq", "hash", "fmt", "min", "max", "abs", "start", "open", "close", "run", "call",
+    "build", "init", "reset", "update", "apply", "handle", "load", "store", "tick", "now",
+];
+
+const ACQUIRE_METHODS: &[&str] = &["lock", "read", "write", "lock_safe", "read_safe", "write_safe"];
+
+/// Rule identifiers, as used in `lint:allow(<rule>)`.
+pub const RULES: &[&str] = &["lock_order", "guard_blocking", "determinism", "unwrap_boundary"];
+
+/// One lint finding. [`Finding::key`] is line-number-free so baselines
+/// survive unrelated edits to the same file.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub file: String,
+    pub func: String,
+    pub line: u32,
+    /// Stable discriminator within (rule, file, func) — e.g. the
+    /// receiver pair for `lock_order` findings.
+    pub detail: String,
+    pub message: String,
+}
+
+impl Finding {
+    pub fn key(&self) -> String {
+        format!("{}|{}|{}|{}", self.rule, self.file, self.func, self.detail)
+    }
+
+    pub fn render(&self) -> String {
+        format!("{}:{}: [{}] {} (in `{}`)", self.file, self.line, self.rule, self.message, self.func)
+    }
+}
+
+fn class_index(name: &str) -> Option<usize> {
+    HIERARCHY.iter().position(|c| c.name == name)
+}
+
+fn class_of_receiver(recv: &str) -> Option<usize> {
+    HIERARCHY.iter().position(|c| c.receivers.contains(&recv))
+}
+
+// ---------------------------------------------------------------------
+// File parsing: functions, impl context, cfg(test) regions
+// ---------------------------------------------------------------------
+
+struct FnBody {
+    /// `Type::name` inside an impl block, bare `name` otherwise.
+    qual: String,
+    name: String,
+    /// Token range of the body, inclusive of the outer braces.
+    body: (usize, usize),
+}
+
+struct ParsedFile {
+    label: String,
+    toks: Vec<Tok>,
+    fns: Vec<FnBody>,
+    /// Line → suppressed rules (from `lint:allow` comments).
+    allows: HashMap<u32, HashSet<&'static str>>,
+}
+
+/// Index of the matching close brace for the open brace at `open`
+/// (counting `{`/`}` puncts only).
+fn match_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut i = open;
+    while i < toks.len() {
+        if toks[i].is_punct('{') {
+            depth += 1;
+        } else if toks[i].is_punct('}') {
+            depth -= 1;
+            if depth == 0 {
+                return i;
+            }
+        }
+        i += 1;
+    }
+    toks.len().saturating_sub(1)
+}
+
+fn parse_file(label: &str, src: &str) -> ParsedFile {
+    let toks = lex(src);
+    let mut allows: HashMap<u32, HashSet<&'static str>> = HashMap::new();
+    for t in &toks {
+        if t.kind != TokKind::Comment {
+            continue;
+        }
+        if let Some(pos) = t.text.find("lint:allow(") {
+            let rest = &t.text[pos + "lint:allow(".len()..];
+            if let Some(end) = rest.find(')') {
+                for rule in RULES {
+                    if rest[..end].split(',').any(|r| r.trim() == *rule) {
+                        allows.entry(t.line).or_default().insert(*rule);
+                    }
+                }
+            }
+        }
+    }
+
+    // Comment-free view of the token stream.
+    let code: Vec<usize> =
+        (0..toks.len()).filter(|&i| toks[i].kind != TokKind::Comment).collect();
+
+    // `#[cfg(test)]` / `#[test]` skip regions: from the attribute
+    // through the end of the following item's brace block.
+    let mut skip = vec![false; toks.len()];
+    let mut ci = 0usize;
+    while ci < code.len() {
+        let i = code[ci];
+        let is_attr_start =
+            toks[i].is_punct('#') && ci + 1 < code.len() && toks[code[ci + 1]].is_punct('[');
+        if !is_attr_start {
+            ci += 1;
+            continue;
+        }
+        // Collect the attribute's words up to the matching `]`.
+        let mut depth = 0usize;
+        let mut cj = ci + 1;
+        let mut words: Vec<&str> = Vec::new();
+        while cj < code.len() {
+            let t = &toks[code[cj]];
+            if t.is_punct('[') {
+                depth += 1;
+            } else if t.is_punct(']') {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if t.kind == TokKind::Ident {
+                words.push(&t.text);
+            }
+            cj += 1;
+        }
+        let is_test_attr = words.first().is_some_and(|w| *w == "test")
+            || (words.contains(&"cfg") && words.contains(&"test") && !words.contains(&"not"));
+        if is_test_attr {
+            // Skip through the following item's brace block.
+            let mut ck = cj + 1;
+            while ck < code.len() && !toks[code[ck]].is_punct('{') && !toks[code[ck]].is_punct(';')
+            {
+                ck += 1;
+            }
+            if ck < code.len() && toks[code[ck]].is_punct('{') {
+                let close = match_brace(&toks, code[ck]);
+                for s in skip.iter_mut().take(close + 1).skip(i) {
+                    *s = true;
+                }
+                while ci < code.len() && code[ci] <= close {
+                    ci += 1;
+                }
+                continue;
+            }
+        }
+        ci = cj + 1;
+    }
+
+    // Function collection with impl context.
+    let mut fns = Vec::new();
+    let mut impl_stack: Vec<(usize, String)> = Vec::new();
+    let mut ci = 0usize;
+    while ci < code.len() {
+        let i = code[ci];
+        while impl_stack.last().is_some_and(|&(end, _)| i > end) {
+            impl_stack.pop();
+        }
+        let t = &toks[i];
+        if t.is_ident("impl") && !skip[i] {
+            // Only treat as an impl *item* when a `{` follows before
+            // any `;` — `impl Trait` in signatures falls through.
+            let mut cj = ci + 1;
+            let mut ty: Option<String> = None;
+            let mut after_for: Option<String> = None;
+            let mut saw_for = false;
+            let mut is_item = false;
+            while cj < code.len() {
+                let u = &toks[code[cj]];
+                if u.is_punct('{') {
+                    is_item = true;
+                    break;
+                }
+                if u.is_punct(';') || u.is_punct(')') || u.is_ident("fn") {
+                    break;
+                }
+                if u.is_ident("for") {
+                    saw_for = true;
+                } else if u.is_ident("where") {
+                    saw_for = false;
+                } else if u.kind == TokKind::Ident {
+                    if saw_for && after_for.is_none() {
+                        after_for = Some(u.text.clone());
+                    } else if ty.is_none() {
+                        ty = Some(u.text.clone());
+                    }
+                }
+                cj += 1;
+            }
+            if is_item {
+                let open = code[cj];
+                let close = match_brace(&toks, open);
+                let name = after_for.or(ty).unwrap_or_else(|| "_".into());
+                impl_stack.push((close, name));
+                ci = cj + 1;
+                continue;
+            }
+        }
+        if t.is_ident("fn") && !skip[i] {
+            if let Some(&nix) = code.get(ci + 1) {
+                if toks[nix].kind == TokKind::Ident {
+                    let name = toks[nix].text.clone();
+                    // Body: first `{` before a top-level `;`.
+                    let mut cj = ci + 2;
+                    let mut open = None;
+                    while cj < code.len() {
+                        let u = &toks[code[cj]];
+                        if u.is_punct('{') {
+                            open = Some(code[cj]);
+                            break;
+                        }
+                        if u.is_punct(';') {
+                            break;
+                        }
+                        cj += 1;
+                    }
+                    if let Some(open) = open {
+                        let close = match_brace(&toks, open);
+                        let qual = match impl_stack.last() {
+                            Some((_, tyname)) => format!("{tyname}::{name}"),
+                            None => name.clone(),
+                        };
+                        fns.push(FnBody { qual, name, body: (open, close) });
+                        // Skip the signature, then walk the body region
+                        // normally so nothing inside is missed.
+                        ci = code.iter().position(|&x| x == open).unwrap_or(ci + 2);
+                        continue;
+                    }
+                }
+            }
+        }
+        ci += 1;
+    }
+
+    ParsedFile { label: label.to_string(), toks, fns, allows }
+}
+
+// ---------------------------------------------------------------------
+// Body walking: acquisitions, calls, guard liveness
+// ---------------------------------------------------------------------
+
+#[derive(Clone, Debug)]
+struct Guard {
+    class: Option<usize>,
+    receiver: String,
+    name: Option<String>,
+    line: u32,
+    /// Scope depth the guard dies at (`None` = statement-transient).
+    depth: Option<usize>,
+}
+
+/// A direct lock acquisition discovered in a body.
+struct Acq {
+    class: Option<usize>,
+    receiver: String,
+    method: String,
+    /// Token index (raw) of the method ident.
+    at: usize,
+}
+
+/// Skip back over one balanced bracket group ending at `i` (`]`, `)`
+/// or `>`); returns the index before the matching opener.
+fn skip_back_group(toks: &[Tok], i: usize) -> Option<usize> {
+    let (close, open) = match toks[i].text.as_str() {
+        "]" => (']', '['),
+        ")" => (')', '('),
+        ">" => ('>', '<'),
+        _ => return None,
+    };
+    let mut depth = 0i64;
+    let mut j = i;
+    loop {
+        if toks[j].is_punct(close) {
+            depth += 1;
+        } else if toks[j].is_punct(open) {
+            depth -= 1;
+            if depth == 0 {
+                return j.checked_sub(1);
+            }
+        }
+        j = j.checked_sub(1)?;
+    }
+}
+
+/// The receiver identifier of a method call whose `.` is at raw index
+/// `dot`: scan back over index/call groups to the nearest ident.
+fn receiver_of(toks: &[Tok], dot: usize) -> String {
+    let mut j = match dot.checked_sub(1) {
+        Some(j) => j,
+        None => return "?".into(),
+    };
+    loop {
+        match toks[j].text.as_str() {
+            "]" | ")" => match skip_back_group(toks, j) {
+                Some(nj) => j = nj,
+                None => return "?".into(),
+            },
+            _ => break,
+        }
+    }
+    if toks[j].kind == TokKind::Ident {
+        toks[j].text.clone()
+    } else {
+        "?".into()
+    }
+}
+
+/// The callee identifier of the call whose argument list closes at raw
+/// index `close` (a `)`). Handles turbofish (`parse::<u64>()`).
+fn callee_of_close(toks: &[Tok], close: usize) -> Option<String> {
+    let open = {
+        let mut depth = 0i64;
+        let mut j = close;
+        loop {
+            if toks[j].is_punct(')') {
+                depth += 1;
+            } else if toks[j].is_punct('(') {
+                depth -= 1;
+                if depth == 0 {
+                    break j;
+                }
+            }
+            j = j.checked_sub(1)?;
+        }
+    };
+    let mut j = open.checked_sub(1)?;
+    if toks[j].is_punct('>') {
+        j = skip_back_group(toks, j)?;
+        while toks[j].is_punct(':') {
+            j = j.checked_sub(1)?;
+        }
+    }
+    if toks[j].kind == TokKind::Ident {
+        Some(toks[j].text.clone())
+    } else {
+        None
+    }
+}
+
+/// Pass-1 summary of one function: what it acquires and calls.
+struct FnSummary {
+    acquires: Vec<Acq>,
+    calls: Vec<String>,
+}
+
+/// The comment-free token indices of a body range.
+fn body_code(toks: &[Tok], body: (usize, usize)) -> Vec<usize> {
+    (body.0..=body.1.min(toks.len().saturating_sub(1)))
+        .filter(|&i| toks[i].kind != TokKind::Comment)
+        .collect()
+}
+
+fn summarize(toks: &[Tok], body: (usize, usize)) -> FnSummary {
+    let mut acquires = Vec::new();
+    let mut calls = Vec::new();
+    let code = body_code(toks, body);
+    for (ci, &i) in code.iter().enumerate() {
+        let t = &toks[i];
+        if t.kind != TokKind::Ident {
+            continue;
+        }
+        if ci + 1 >= code.len() || !toks[code[ci + 1]].is_punct('(') {
+            continue;
+        }
+        let prev_dot = ci > 0 && toks[code[ci - 1]].is_punct('.');
+        let zero_arg = ci + 2 < code.len() && toks[code[ci + 2]].is_punct(')');
+        if prev_dot && zero_arg && ACQUIRE_METHODS.contains(&t.text.as_str()) {
+            let recv = receiver_of(toks, code[ci - 1]);
+            acquires.push(Acq {
+                class: class_of_receiver(&recv),
+                receiver: recv,
+                method: t.text.clone(),
+                at: i,
+            });
+            continue;
+        }
+        calls.push(t.text.clone());
+    }
+    FnSummary { acquires, calls }
+}
+
+// ---------------------------------------------------------------------
+// The lint driver
+// ---------------------------------------------------------------------
+
+/// Lint a set of in-memory sources: `(label, source)` pairs. This is
+/// the whole analysis — `lint_tree` in `mod.rs` just reads the files.
+pub fn lint_sources(sources: &[(String, String)]) -> Vec<Finding> {
+    let files: Vec<ParsedFile> = sources.iter().map(|(l, s)| parse_file(l, s)).collect();
+
+    // Pass 1: per-function summaries + definition counts per name.
+    let mut def_count: HashMap<String, usize> = HashMap::new();
+    let mut summaries: Vec<Vec<FnSummary>> = Vec::with_capacity(files.len());
+    for f in &files {
+        let mut per_file = Vec::with_capacity(f.fns.len());
+        for fb in &f.fns {
+            *def_count.entry(fb.name.clone()).or_insert(0) += 1;
+            per_file.push(summarize(&f.toks, fb.body));
+        }
+        summaries.push(per_file);
+    }
+
+    // Effects a call site may apply: declared EFFECTS always; crate
+    // functions only when uniquely named and not std-ambiguous.
+    let declared: HashSet<&str> = EFFECTS.iter().map(|e| e.name).collect();
+    let propagatable = |name: &str| -> bool {
+        def_count.get(name).copied().unwrap_or(0) == 1
+            && !PROPAGATION_DENYLIST.contains(&name)
+            && !ACQUIRE_METHODS.contains(&name)
+    };
+    let applicable = |name: &str| -> bool { declared.contains(name) || propagatable(name) };
+
+    // Seed effects with declared classes and direct acquisitions, then
+    // propagate to fixpoint through applicable callees.
+    let mut effects: BTreeMap<String, HashSet<usize>> = BTreeMap::new();
+    for e in EFFECTS {
+        if let Some(ci) = class_index(e.class) {
+            effects.entry(e.name.to_string()).or_default().insert(ci);
+        }
+    }
+    for (fi, f) in files.iter().enumerate() {
+        for (gi, fb) in f.fns.iter().enumerate() {
+            let entry = effects.entry(fb.name.clone()).or_default();
+            for a in &summaries[fi][gi].acquires {
+                if let Some(c) = a.class {
+                    entry.insert(c);
+                }
+            }
+        }
+    }
+    loop {
+        let mut changed = false;
+        for (fi, f) in files.iter().enumerate() {
+            for (gi, fb) in f.fns.iter().enumerate() {
+                let mut add: HashSet<usize> = HashSet::new();
+                for callee in &summaries[fi][gi].calls {
+                    if applicable(callee) {
+                        if let Some(es) = effects.get(callee.as_str()) {
+                            add.extend(es.iter().copied());
+                        }
+                    }
+                }
+                if !add.is_empty() {
+                    let entry = effects.entry(fb.name.clone()).or_default();
+                    let before = entry.len();
+                    entry.extend(add);
+                    changed |= entry.len() != before;
+                }
+            }
+        }
+        if !changed {
+            break;
+        }
+    }
+
+    // Pass 2: walk every body with guard tracking.
+    let mut findings = Vec::new();
+    for (fi, f) in files.iter().enumerate() {
+        for (gi, fb) in f.fns.iter().enumerate() {
+            check_body(f, fb, &summaries[fi][gi], &effects, &applicable, &mut findings);
+        }
+    }
+    findings.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    findings
+}
+
+fn is_det_root(file: &str, fn_name: &str) -> bool {
+    DET_ROOTS.contains(&fn_name) || DET_ROOT_DIRS.iter().any(|d| file.contains(d))
+}
+
+fn suppressed(f: &ParsedFile, rule: &'static str, line: u32) -> bool {
+    [line, line.saturating_sub(1)]
+        .iter()
+        .any(|l| f.allows.get(l).is_some_and(|rs| rs.contains(rule)))
+}
+
+/// Comment-free index (within `code`) of the `)` closing the call
+/// whose `(` sits at `code[open_ci]`.
+fn close_of_call(toks: &[Tok], code: &[usize], open_ci: usize) -> usize {
+    let mut depth = 0i64;
+    let mut ck = open_ci;
+    while ck < code.len() {
+        let u = &toks[code[ck]];
+        if u.is_punct('(') {
+            depth += 1;
+        } else if u.is_punct(')') {
+            depth -= 1;
+            if depth == 0 {
+                return ck;
+            }
+        }
+        ck += 1;
+    }
+    code.len().saturating_sub(1)
+}
+
+fn check_body(
+    f: &ParsedFile,
+    fb: &FnBody,
+    summary: &FnSummary,
+    effects: &BTreeMap<String, HashSet<usize>>,
+    applicable: &dyn Fn(&str) -> bool,
+    findings: &mut Vec<Finding>,
+) {
+    let toks = &f.toks;
+    let det_root = is_det_root(&f.label, &fb.name);
+    let code = body_code(toks, fb.body);
+    let acq_at: HashMap<usize, &Acq> = summary.acquires.iter().map(|a| (a.at, a)).collect();
+
+    let mut out: Vec<Finding> = Vec::new();
+    let mut push = |rule: &'static str, line: u32, detail: String, message: String| {
+        if !suppressed(f, rule, line) {
+            out.push(Finding {
+                rule,
+                file: f.label.clone(),
+                func: fb.qual.clone(),
+                line,
+                detail,
+                message,
+            });
+        }
+    };
+
+    let mut depth = 0usize;
+    let mut live: Vec<Guard> = Vec::new();
+    let mut stmt_let: Option<String> = None;
+    let mut stmt_start = true;
+
+    // Check an acquisition of `cls` (named `what`) against live guards.
+    let check_order =
+        |live: &[Guard], push: &mut dyn FnMut(&'static str, u32, String, String), cls: usize, what: &str, line: u32| {
+            for g in live {
+                if let Some(gc) = g.class {
+                    if HIERARCHY[gc].level >= HIERARCHY[cls].level {
+                        push(
+                            "lock_order",
+                            line,
+                            format!("{}<-{}", HIERARCHY[gc].name, what),
+                            format!(
+                                "acquires `{}` ({}, level {}) while holding `{}` ({}, level {}) — \
+                                 violates the canonical lock order",
+                                what,
+                                HIERARCHY[cls].name,
+                                HIERARCHY[cls].level,
+                                g.receiver,
+                                HIERARCHY[gc].name,
+                                HIERARCHY[gc].level,
+                            ),
+                        );
+                    }
+                }
+            }
+        };
+
+    let mut ci = 0usize;
+    while ci < code.len() {
+        let i = code[ci];
+        let t = &toks[i];
+
+        if t.is_punct('{') {
+            depth += 1;
+            stmt_start = true;
+            stmt_let = None;
+            ci += 1;
+            continue;
+        }
+        if t.is_punct('}') {
+            live.retain(|g| g.depth.is_some_and(|d| d < depth));
+            depth = depth.saturating_sub(1);
+            stmt_start = true;
+            stmt_let = None;
+            ci += 1;
+            continue;
+        }
+        if t.is_punct(';') {
+            live.retain(|g| g.depth.is_some());
+            stmt_start = true;
+            stmt_let = None;
+            ci += 1;
+            continue;
+        }
+
+        if stmt_start {
+            if t.is_ident("let") {
+                let mut cj = ci + 1;
+                let mut name = None;
+                while cj < code.len() {
+                    let u = &toks[code[cj]];
+                    if u.is_ident("mut") {
+                        cj += 1;
+                        continue;
+                    }
+                    if u.kind == TokKind::Ident {
+                        name = Some(u.text.clone());
+                    }
+                    break;
+                }
+                stmt_let = Some(name.unwrap_or_else(|| "_".into()));
+            }
+            stmt_start = false;
+        }
+
+        // `drop(name)` ends a guard's liveness early.
+        if t.is_ident("drop")
+            && ci + 2 < code.len()
+            && toks[code[ci + 1]].is_punct('(')
+            && toks[code[ci + 2]].kind == TokKind::Ident
+        {
+            let victim = toks[code[ci + 2]].text.clone();
+            live.retain(|g| g.name.as_deref() != Some(victim.as_str()));
+        }
+
+        // Direct lock acquisitions.
+        if let Some(acq) = acq_at.get(&i) {
+            if let Some(cls) = acq.class {
+                check_order(&live, &mut push, cls, &acq.receiver, t.line);
+            }
+            // Consume trailing `.unwrap()/.expect(…)/.unwrap_or_else(…)`
+            // — rule 4 on the first two, and they don't end the chain.
+            let mut cj = ci + 2; // at the zero-arg call's `)`
+            let mut poison_unwrap = false;
+            loop {
+                if cj + 2 < code.len()
+                    && toks[code[cj + 1]].is_punct('.')
+                    && toks[code[cj + 2]].kind == TokKind::Ident
+                    && cj + 3 < code.len()
+                    && toks[code[cj + 3]].is_punct('(')
+                {
+                    let m = toks[code[cj + 2]].text.as_str();
+                    if m == "unwrap" || m == "expect" || m == "unwrap_or_else" {
+                        if m != "unwrap_or_else" && !acq.method.ends_with("_safe") {
+                            poison_unwrap = true;
+                        }
+                        cj = close_of_call(toks, &code, cj + 3);
+                        continue;
+                    }
+                }
+                break;
+            }
+            if poison_unwrap {
+                push(
+                    "unwrap_boundary",
+                    t.line,
+                    format!("{}.{}-unwrap", acq.receiver, acq.method),
+                    format!(
+                        "`{recv}.{m}().unwrap()` panics (and cascades) on poison — use \
+                         `crate::sync`'s `{m}_safe()` instead",
+                        recv = acq.receiver,
+                        m = acq.method,
+                    ),
+                );
+            }
+            let chain_continues = cj + 1 < code.len() && toks[code[cj + 1]].is_punct('.');
+            let held = !chain_continues && stmt_let.is_some();
+            live.push(Guard {
+                class: acq.class,
+                receiver: acq.receiver.clone(),
+                name: if held { stmt_let.clone() } else { None },
+                line: t.line,
+                depth: if held { Some(depth) } else { None },
+            });
+            ci += 1;
+            continue;
+        }
+
+        // Calls.
+        let next_is_call = ci + 1 < code.len() && toks[code[ci + 1]].is_punct('(');
+        if t.kind == TokKind::Ident && next_is_call && !t.is_ident("drop") {
+            let name = t.text.as_str();
+            let prev_dot = ci > 0 && toks[code[ci - 1]].is_punct('.');
+
+            // Rule 1 via declared/propagated effects.
+            if applicable(name) {
+                if let Some(classes) = effects.get(name) {
+                    let mut cs: Vec<usize> = classes.iter().copied().collect();
+                    cs.sort_unstable();
+                    for cls in cs {
+                        check_order(&live, &mut push, cls, &format!("{name}()"), t.line);
+                    }
+                }
+                if let Some(e) = EFFECTS.iter().find(|e| e.name == name && e.held) {
+                    let close = close_of_call(toks, &code, ci + 1);
+                    let chain_continues =
+                        close + 1 < code.len() && toks[code[close + 1]].is_punct('.');
+                    let held = !chain_continues && stmt_let.is_some();
+                    live.push(Guard {
+                        class: class_index(e.class),
+                        receiver: name.to_string(),
+                        name: if held { stmt_let.clone() } else { None },
+                        line: t.line,
+                        depth: if held { Some(depth) } else { None },
+                    });
+                }
+            }
+
+            // Rule 2: blocking sink under any live guard.
+            if prev_dot && BLOCKING_SINKS.contains(&name) {
+                if let Some(g) = live.iter().find(|g| g.depth.is_some()).or_else(|| live.first())
+                {
+                    push(
+                        "guard_blocking",
+                        t.line,
+                        format!("{}-across-{}", g.receiver, name),
+                        format!(
+                            "guard `{}` (acquired line {}) is live across blocking call \
+                             `.{}()` — release it first",
+                            g.receiver, g.line, name,
+                        ),
+                    );
+                }
+            }
+
+            // Rule 3: wall clock / OS randomness in deterministic roots.
+            if det_root {
+                let path_now = name == "now"
+                    && !prev_dot
+                    && ci >= 3
+                    && toks[code[ci - 1]].is_punct(':')
+                    && toks[code[ci - 2]].is_punct(':')
+                    && matches!(toks[code[ci - 3]].text.as_str(), "Instant" | "SystemTime");
+                let method_now = name == "now" && prev_dot;
+                let rng = name == "thread_rng";
+                if path_now || method_now || rng {
+                    let src = if path_now {
+                        format!("{}::now", toks[code[ci - 3]].text)
+                    } else {
+                        format!(".{name}()")
+                    };
+                    push(
+                        "determinism",
+                        t.line,
+                        format!("clock-{src}"),
+                        format!(
+                            "`{src}` in deterministic path `{}` — replay and replication \
+                             must not read wall clocks or OS randomness",
+                            fb.name,
+                        ),
+                    );
+                }
+            }
+
+            // Rule 4 (boundary form): `boundary_call(…).unwrap()`.
+            if (name == "unwrap" || name == "expect") && prev_dot && ci >= 2 {
+                let rp = code[ci - 2];
+                if toks[rp].is_punct(')') {
+                    if let Some(callee) = callee_of_close(toks, rp) {
+                        if UNWRAP_BOUNDARY_FNS.contains(&callee.as_str()) {
+                            push(
+                                "unwrap_boundary",
+                                t.line,
+                                format!("{callee}-unwrap"),
+                                format!(
+                                    "`.{name}()` on the result of `{callee}(…)` — \
+                                     network/parse boundaries must handle errors",
+                                ),
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        ci += 1;
+    }
+    findings.append(&mut out);
+}
+
+/// Lint a single in-memory source (fixture tests and the self-tests).
+pub fn lint_source(label: &str, src: &str) -> Vec<Finding> {
+    lint_sources(&[(label.to_string(), src.to_string())])
+}

@@ -1,0 +1,171 @@
+//! `hopaas-lint` — the repo's concurrency-correctness linter.
+//!
+//! ```text
+//! cargo run --bin hopaas-lint                  # report findings
+//! cargo run --bin hopaas-lint -- --deny        # CI gate: fail on new/stale
+//! cargo run --bin hopaas-lint -- --write-baseline
+//! cargo run --bin hopaas-lint -- --hierarchy   # print the lock table
+//! ```
+//!
+//! Exit codes: 0 clean (or informational run), 1 policy violation
+//! under `--deny` (new finding or stale baseline entry), 2 usage or
+//! I/O error.
+
+use hopaas::analysis::{self, baseline, Finding, HIERARCHY, RULES};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+struct Opts {
+    root: Option<PathBuf>,
+    baseline: Option<PathBuf>,
+    deny: bool,
+    write_baseline: bool,
+    report: Option<PathBuf>,
+    hierarchy: bool,
+}
+
+fn usage() -> &'static str {
+    "usage: hopaas-lint [--root SRC_DIR] [--baseline FILE] [--deny] \
+     [--write-baseline] [--report FILE] [--hierarchy]"
+}
+
+fn parse_args() -> Result<Opts, String> {
+    let mut opts = Opts {
+        root: None,
+        baseline: None,
+        deny: false,
+        write_baseline: false,
+        report: None,
+        hierarchy: false,
+    };
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => opts.root = Some(args.next().ok_or("--root needs a value")?.into()),
+            "--baseline" => {
+                opts.baseline = Some(args.next().ok_or("--baseline needs a value")?.into());
+            }
+            "--deny" => opts.deny = true,
+            "--write-baseline" => opts.write_baseline = true,
+            "--report" => opts.report = Some(args.next().ok_or("--report needs a value")?.into()),
+            "--hierarchy" => opts.hierarchy = true,
+            "--help" | "-h" => return Err(String::new()),
+            other => return Err(format!("unknown argument `{other}`")),
+        }
+    }
+    Ok(opts)
+}
+
+fn print_hierarchy() {
+    println!("canonical lock hierarchy (acquire in ascending level order):\n");
+    for c in HIERARCHY {
+        println!("  {:>3}  {:<13} receivers: {}", c.level, c.name, c.receivers.join(", "));
+        println!("       {}", c.doc);
+    }
+    println!("\nrules: {}", RULES.join(", "));
+    println!("suppress with `// lint:allow(<rule>): <reason>` on or above the line");
+}
+
+fn render_report(findings: &[Finding], diff: &baseline::Diff, deny: bool) -> String {
+    let mut out = String::new();
+    out.push_str("hopaas-lint report\n==================\n\n");
+    if findings.is_empty() {
+        out.push_str("no findings.\n");
+        return out;
+    }
+    for rule in RULES {
+        let of_rule: Vec<&&Finding> = diff.new.iter().filter(|f| f.rule == *rule).collect();
+        if of_rule.is_empty() {
+            continue;
+        }
+        out.push_str(&format!("[{rule}] — {} new finding(s)\n", of_rule.len()));
+        for f in of_rule {
+            out.push_str(&format!("  {}\n", f.render()));
+        }
+        out.push('\n');
+    }
+    if !diff.stale.is_empty() {
+        out.push_str(&format!("stale baseline entries ({}) — delete them:\n", diff.stale.len()));
+        for k in &diff.stale {
+            out.push_str(&format!("  {k}\n"));
+        }
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "total: {} finding(s), {} baselined, {} new, {} stale{}\n",
+        findings.len(),
+        diff.baselined,
+        diff.new.len(),
+        diff.stale.len(),
+        if deny { " (--deny)" } else { "" },
+    ));
+    out
+}
+
+fn run() -> Result<ExitCode, String> {
+    let opts = match parse_args() {
+        Ok(o) => o,
+        Err(e) if e.is_empty() => {
+            println!("{}", usage());
+            return Ok(ExitCode::SUCCESS);
+        }
+        Err(e) => return Err(format!("{e}\n{}", usage())),
+    };
+
+    if opts.hierarchy {
+        print_hierarchy();
+        return Ok(ExitCode::SUCCESS);
+    }
+
+    let root = match opts.root.or_else(analysis::default_src_root) {
+        Some(r) => r,
+        None => return Err("cannot locate src/ — pass --root".into()),
+    };
+    let baseline_path =
+        opts.baseline.unwrap_or_else(|| analysis::default_baseline_path(&root));
+
+    let findings =
+        analysis::lint_tree(&root).map_err(|e| format!("scanning {}: {e}", root.display()))?;
+
+    if opts.write_baseline {
+        std::fs::write(&baseline_path, baseline::render(&findings))
+            .map_err(|e| format!("writing {}: {e}", baseline_path.display()))?;
+        println!(
+            "wrote {} key(s) to {}",
+            findings.len(),
+            baseline_path.display()
+        );
+        return Ok(ExitCode::SUCCESS);
+    }
+
+    let base = match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => baseline::parse(&text),
+        Err(_) => Default::default(),
+    };
+    let diff = baseline::diff(&findings, &base);
+    let report = render_report(&findings, &diff, opts.deny);
+    print!("{report}");
+    if let Some(path) = &opts.report {
+        std::fs::write(path, &report).map_err(|e| format!("writing {}: {e}", path.display()))?;
+    }
+
+    if opts.deny && (!diff.new.is_empty() || !diff.stale.is_empty()) {
+        eprintln!(
+            "hopaas-lint: --deny: {} new finding(s), {} stale baseline entr(ies)",
+            diff.new.len(),
+            diff.stale.len()
+        );
+        return Ok(ExitCode::FAILURE);
+    }
+    Ok(ExitCode::SUCCESS)
+}
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(code) => code,
+        Err(e) => {
+            eprintln!("hopaas-lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}

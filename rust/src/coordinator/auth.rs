@@ -18,6 +18,7 @@
 //! see the bearer token, not the IAM handshake.
 
 use crate::json::Value;
+use crate::sync::MutexExt;
 use hmac::{Hmac, Mac};
 use sha2::Sha256;
 use std::collections::HashSet;
@@ -113,7 +114,7 @@ impl TokenService {
     /// (server-relative seconds, as everywhere in the coordinator).
     pub fn issue(&self, user: &str, now: f64, ttl: f64) -> String {
         let uid = {
-            let mut g = self.next_uid.lock().unwrap();
+            let mut g = self.next_uid.lock_safe();
             let u = *g;
             *g += 1;
             u
@@ -147,7 +148,7 @@ impl TokenService {
         if now > claims.expires_at {
             return Err(AuthError::Expired);
         }
-        if self.revoked.lock().unwrap().contains(&claims.uid) {
+        if self.revoked.lock_safe().contains(&claims.uid) {
             return Err(AuthError::Revoked);
         }
         Ok(claims)
@@ -155,12 +156,12 @@ impl TokenService {
 
     /// Revoke a token by id ("can be revoked at any time", §3).
     pub fn revoke(&self, uid: u64) {
-        self.revoked.lock().unwrap().insert(uid);
+        self.revoked.lock_safe().insert(uid);
     }
 
     /// Number of revoked tokens (metrics).
     pub fn revoked_count(&self) -> usize {
-        self.revoked.lock().unwrap().len()
+        self.revoked.lock_safe().len()
     }
 }
 

@@ -19,11 +19,17 @@
 //!   is preserved (E7 tests it) while N concurrent fsyncs collapse into
 //!   one.
 //!
-//! Lock ordering: shard → {directory, router stripe}; the directory and
-//! router are leaf locks, readers copy out of them before taking a shard
-//! lock, and no path ever holds two shard locks — including compaction,
-//! which cuts one per-shard snapshot segment at a time, pausing only the
-//! shard being cut (see [`Engine::compact`]).
+//! Lock ordering: the canonical hierarchy is declared once, in
+//! [`crate::analysis::HIERARCHY`], and enforced by `hopaas-lint`.
+//! Ascending acquisition order: serializers (compaction,
+//! follower-apply) → registry directory → fleet bind gate → shard →
+//! fleet → view slots/builders/leaves → WAL writer queue → WAL ledger
+//! → replication ring → router stripes → metrics/obs. Readers copy out
+//! of the directory before taking a shard lock; directory *writers*
+//! publish entries only after the owning shard guard is released (see
+//! [`Engine::publish_dir_entry`]); no path ever holds two shard locks —
+//! including compaction, which cuts one per-shard snapshot segment at a
+//! time, pausing only the shard being cut (see [`Engine::compact`]).
 //!
 //! Recovery is parallel: the log is partitioned by *study* (stable
 //! `place(study_key, P)` buckets, so a study's records stay together
@@ -54,6 +60,7 @@ use crate::store::{
     GroupWal, GroupWalConfig, LoadedState, Record, RecoveryStats, ReplicationSource, Storage,
     WalAckInfo, FLEET_SHARD,
 };
+use crate::sync::{MutexExt, RwLockExt};
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, OnceLock, RwLock};
@@ -603,7 +610,7 @@ impl Engine {
             engine.repl_cuts = repl_cuts;
             engine.repl_next.store(resume, Ordering::Relaxed);
             engine.repl_primary_next.store(resume, Ordering::Relaxed);
-            *engine.follower_store.lock().unwrap() = Some(storage);
+            *engine.follower_store.lock_safe() = Some(storage);
         } else {
             let source = Arc::new(ReplicationSource::new(
                 engine.config.repl_buffer,
@@ -780,10 +787,11 @@ impl Engine {
         // The store lock doubles as the apply serialization point:
         // promote holds it while flipping writable, so a batch can
         // never land half-applied across the promotion boundary.
-        let mut store_guard = self.follower_store.lock().unwrap();
+        let mut store_guard = self.follower_store.lock_safe();
         if self.is_writable() {
             return Err(ApiError::Conflict("replication sealed: node is writable".into()));
         }
+        // lint:allow(determinism): span timing only — never applied state.
         let t0 = Instant::now();
         let mut cursor = self.repl_next.load(Ordering::Acquire);
         let mut studies_touched: HashSet<u64> = HashSet::new();
@@ -832,6 +840,9 @@ impl Engine {
         }
         if appended > 0 {
             if let Some(store) = store_guard.as_mut() {
+                // lint:allow(guard_blocking): the store lock IS the
+                // apply/promote serialization point — promote must not
+                // flip writable between this batch's append and fsync.
                 store.sync().map_err(|e| ApiError::Storage(e.to_string()))?;
             }
         }
@@ -847,7 +858,7 @@ impl Engine {
         }
         let changed = !studies_touched.is_empty();
         for id in studies_touched {
-            let Some(entry) = ({ self.directory.read().unwrap().lookup(id) }) else {
+            let Some(entry) = ({ self.directory.read_safe().lookup(id) }) else {
                 continue;
             };
             let guard = self.lock_shard(entry.shard);
@@ -858,6 +869,8 @@ impl Engine {
         if cursor >= self.repl_primary_next.load(Ordering::Acquire) {
             self.repl_behind_since_ms.store(0, Ordering::Relaxed);
         } else {
+            // lint:allow(determinism): replication-lag gauge only —
+            // feeds `/api/stats`, never the applied state.
             let now_ms = (self.now() * 1000.0) as u64;
             let _ = self.repl_behind_since_ms.compare_exchange(
                 0,
@@ -885,7 +898,7 @@ impl Engine {
     /// residual tail *before* calling this; any replication batch that
     /// arrives afterwards is rejected with `Conflict`.
     pub fn promote(&self) -> Result<u64, ApiError> {
-        let mut store_guard = self.follower_store.lock().unwrap();
+        let mut store_guard = self.follower_store.lock_safe();
         if self
             .writable
             .compare_exchange(false, true, Ordering::AcqRel, Ordering::Acquire)
@@ -950,11 +963,11 @@ impl Engine {
         // bare path stays two instructions.
         if obs::active() {
             let t0 = Instant::now();
-            let guard = self.shards[idx].state.lock().unwrap();
+            let guard = self.shards[idx].state.lock_safe();
             obs::stage(Stage::ShardLock, t0.elapsed());
             guard
         } else {
-            self.shards[idx].state.lock().unwrap()
+            self.shards[idx].state.lock_safe()
         }
     }
 
@@ -1071,7 +1084,14 @@ impl Engine {
         let mut admitted: Vec<String> = Vec::new();
         if let Some(wid) = worker {
             for _ in 0..n {
-                match self.fleet.lock().admit(wid, &key, tenant, now, &self.fleet.config) {
+                // Bind the admit result to a local: a `match` scrutinee
+                // keeps its temporaries (here the fleet guard) alive for
+                // every arm, and the `Err` arm re-locks the fleet to
+                // return earlier slots — scrutinizing the guard directly
+                // self-deadlocks on the partial-batch denial path.
+                let admit =
+                    self.fleet.lock().admit(wid, &key, tenant, now, &self.fleet.config);
+                match admit {
                     Ok(site) => admitted.push(site),
                     Err(e) => {
                         if matches!(e, ApiError::Quota(_)) {
@@ -1212,19 +1232,38 @@ impl Engine {
 
         // --- critical section 1: find/create study, reserve the trial
         // numbers, resolve sampler + history ---
+        let mut staged_dir: Option<DirEntry> = None;
         let (slot, numbers, sampler, arm, space, direction) = {
             let mut guard = self.lock_shard(shard_idx);
             let state = &mut *guard;
-            let slot = self.find_or_create_study(state, shard_idx, def, now, key)?;
+            // Validate the sampler config before creating the study: an
+            // ask with a broken sampler must not persist a half-usable
+            // study, and `find_or_create_study` must be the last
+            // fallible step under this guard — its staged directory
+            // entry is published right after the guard drops, so no
+            // early return may sit between the two.
+            let prebuilt: Option<Arc<dyn Sampler>> = match state.by_key.get(key) {
+                Some(&slot) if state.studies[slot].runtime.sampler.is_some() => None,
+                _ => Some(Arc::from(make_sampler(&def.sampler).map_err(ApiError::BadRequest)?)),
+            };
+            let slot =
+                self.find_or_create_study(state, shard_idx, def, now, key, &mut staged_dir)?;
             let study = &mut state.studies[slot];
             obs::set_study(study.id);
             let numbers: Vec<u64> = (0..r).map(|_| study.reserve_number()).collect();
             // The sampler is built once per study slot and shared across
             // asks (it is pure configuration; all mutable state lives in
             // the FitState).
-            let sampler: Arc<dyn Sampler> = match &study.runtime.sampler {
-                Some(s) => Arc::clone(s),
-                None => {
+            let sampler: Arc<dyn Sampler> = match (&study.runtime.sampler, prebuilt) {
+                (Some(s), _) => Arc::clone(s),
+                (None, Some(s)) => {
+                    study.runtime.sampler = Some(Arc::clone(&s));
+                    s
+                }
+                // Unreachable in practice: `prebuilt` is `None` only
+                // when the slot already carried a cached sampler, and
+                // both were read under this same guard.
+                (None, None) => {
                     let s: Arc<dyn Sampler> =
                         Arc::from(make_sampler(&def.sampler).map_err(ApiError::BadRequest)?);
                     study.runtime.sampler = Some(Arc::clone(&s));
@@ -1248,6 +1287,9 @@ impl Engine {
             };
             (slot, numbers, sampler, arm, study.def.space.clone(), study.def.direction)
         };
+        // Publish the created study's directory entry now that the
+        // shard guard is gone (registry level 10 < shard level 20).
+        self.publish_dir_entry(staged_dir);
 
         // --- fit OUTSIDE the lock (pure function of the history window,
         // no RNG — see the Sampler trait contract) ---
@@ -1279,7 +1321,7 @@ impl Engine {
         let replies = {
             // Bind-gate before shard lock (the engine-wide order is
             // gate → shard → fleet); held only for worker-bound asks.
-            let _bind_gate = worker.map(|_| self.fleet_bind_gate.read().unwrap());
+            let _bind_gate = worker.map(|_| self.fleet_bind_gate.read_safe());
             let mut guard = self.lock_shard(shard_idx);
             let replies = self.insert_trials(
                 &mut guard, shard_idx, slot, batch, now, node, worker, tenant, sites,
@@ -1342,10 +1384,12 @@ impl Engine {
 
         // --- critical section 1: find/create study, reserve the trial
         // number, snapshot history ---
+        let mut staged_dir: Option<DirEntry> = None;
         let (slot, trial_number, mo_obs, space) = {
             let mut guard = self.lock_shard(shard_idx);
             let state = &mut *guard;
-            let slot = self.find_or_create_study(state, shard_idx, &def, now, &key)?;
+            let slot =
+                self.find_or_create_study(state, shard_idx, &def, now, &key, &mut staged_dir)?;
             let study = &mut state.studies[slot];
             let trial_number = study.reserve_number();
             let skip = study
@@ -1360,6 +1404,9 @@ impl Engine {
                 .collect();
             (slot, trial_number, mo_obs, study.def.space.clone())
         };
+        // Publish the created study's directory entry now that the
+        // shard guard is gone (registry level 10 < shard level 20).
+        self.publish_dir_entry(staged_dir);
 
         // --- suggest outside the lock ---
         let key_hash = fnv1a(&key);
@@ -1373,7 +1420,7 @@ impl Engine {
 
         // --- critical section 2: insert the trial ---
         let reply = {
-            let _bind_gate = worker.map(|_| self.fleet_bind_gate.read().unwrap());
+            let _bind_gate = worker.map(|_| self.fleet_bind_gate.read_safe());
             let mut guard = self.lock_shard(shard_idx);
             let sites: Vec<String> = site.map(|s| vec![s.to_string()]).unwrap_or_default();
             self.insert_trials(
@@ -1469,7 +1516,8 @@ impl Engine {
             state.last_seen.insert(trial_id, now);
             self.router.insert(trial_id, shard_idx);
             if let Some(wid) = worker {
-                // Shard lock is held; the fleet lock is a leaf below it.
+                // Shard lock (level 20) is held; the fleet lock (25) is
+                // above it in the canonical order, so this nesting is legal.
                 let site = sites.get(i).map(String::as_str).unwrap_or("");
                 self.fleet.lock().bind(trial_id, wid, &study_key, site, tenant, now);
             }
@@ -1550,7 +1598,7 @@ impl Engine {
             // side) can therefore never observe the trial mid-handout —
             // it sees it either still queued or already leased, and the
             // records this section appends sort after the cut.
-            let _bind_gate = self.fleet_bind_gate.read().unwrap();
+            let _bind_gate = self.fleet_bind_gate.read_safe();
             let Some(trial_id) = self.fleet.lock().leases.pop_front(study_key) else {
                 return Ok(None);
             };
@@ -1871,7 +1919,7 @@ impl Engine {
         };
         let mut reaped = 0;
         for (shard_idx, shard) in self.shards.iter().enumerate() {
-            let mut guard = shard.state.lock().unwrap();
+            let mut guard = shard.state.lock_safe();
             let state = &mut *guard;
             let stale: Vec<u64> = state
                 .last_seen
@@ -2202,14 +2250,14 @@ impl Engine {
     /// directory guard is released before the shard lock is taken (leaf
     /// lock discipline).
     fn with_study<T>(&self, study_id: u64, f: impl FnOnce(&Study) -> T) -> Option<T> {
-        let entry = self.directory.read().unwrap().lookup(study_id)?;
+        let entry = self.directory.read_safe().lookup(study_id)?;
         let guard = self.lock_shard(entry.shard);
         Some(f(&guard.studies[entry.slot]))
     }
 
     /// Summaries of all studies, in id (creation) order.
     pub fn studies_json(&self) -> Value {
-        let entries = self.directory.read().unwrap().sorted();
+        let entries = self.directory.read_safe().sorted();
         let mut out: Vec<Value> = Vec::with_capacity(entries.len());
         let mut i = 0;
         while i < entries.len() {
@@ -2285,7 +2333,7 @@ impl Engine {
 
     /// Number of studies.
     pub fn n_studies(&self) -> usize {
-        self.directory.read().unwrap().len()
+        self.directory.read_safe().len()
     }
 
     /// Look up a study id by definition key.
@@ -2300,7 +2348,7 @@ impl Engine {
     pub fn tracked_running(&self) -> usize {
         self.shards
             .iter()
-            .map(|s| s.state.lock().unwrap().last_seen.len())
+            .map(|s| s.state.lock_safe().last_seen.len())
             .sum()
     }
 
@@ -2411,7 +2459,7 @@ impl Engine {
         let Some(wal) = self.wal.get() else { return Ok(()) };
         // One compaction at a time: the begin/cut/finish phases of two
         // drivers must not interleave on the writer thread.
-        let _serial = self.compact_lock.lock().unwrap();
+        let _serial = self.compact_lock.lock_safe();
         let mut cut_resets: Vec<(usize, u64)> = Vec::new();
         let mut fleet_cut: Option<u64> = None;
         match self.compact_phases(wal, &mut cut_resets, &mut fleet_cut) {
@@ -2513,10 +2561,10 @@ impl Engine {
                         }
                         // Take the next shard with the queue lock
                         // already released before the (slow) cut runs.
-                        let shard = queue.lock().unwrap().next();
+                        let shard = queue.lock_safe().next();
                         let Some(shard) = shard else { break };
                         let result = cut(shard);
-                        out.lock().unwrap().push(result);
+                        out.lock_safe().push(result);
                     });
                 }
             });
@@ -2577,7 +2625,7 @@ impl Engine {
             // record is appended under it) mirror the per-shard
             // exact-spec argument. Skipped entirely while the fleet was
             // never used, reused while clean, re-cut once dirty.
-            let _gate = self.fleet_bind_gate.write().unwrap();
+            let _gate = self.fleet_bind_gate.write_safe();
             let fl = self.fleet.lock();
             let clean = self.fleet_dirty.load(Ordering::Relaxed) == 0;
             if clean {
@@ -2591,8 +2639,7 @@ impl Engine {
             let cut = wal.shard_cut(shard)?;
             let snapshot = fl.snapshot_json();
             consumed
-                .lock()
-                .unwrap()
+                .lock_safe()
                 .push((shard, self.fleet_dirty.swap(0, Ordering::Relaxed)));
             (cut, snapshot)
         } else {
@@ -2611,8 +2658,7 @@ impl Engine {
             let cut = wal.shard_cut(shard)?;
             let snapshot = Self::shard_studies_value(&guard);
             consumed
-                .lock()
-                .unwrap()
+                .lock_safe()
                 .push((shard, self.shard_dirty[idx].swap(0, Ordering::Relaxed)));
             (cut, snapshot)
         };
@@ -2654,6 +2700,13 @@ impl Engine {
     /// persisting) it if new. Called with the shard lock held; the
     /// shard's `by_key` is authoritative for its keys, so creation
     /// races cannot duplicate a study.
+    ///
+    /// The directory entry for a created study is *staged*, not pushed:
+    /// the registry lock (level 10) sits below the shard lock (level
+    /// 20) in the canonical order, so the caller publishes the staged
+    /// entry via [`Engine::publish_dir_entry`] once its shard guard is
+    /// released. Callers must not early-return between a successful
+    /// call and that publish.
     fn find_or_create_study(
         &self,
         state: &mut ShardState,
@@ -2661,6 +2714,7 @@ impl Engine {
         def: &StudyDef,
         now: f64,
         key: &str,
+        staged_dir: &mut Option<DirEntry>,
     ) -> Result<usize, ApiError> {
         match state.by_key.get(key) {
             Some(&slot) => Ok(slot),
@@ -2681,10 +2735,7 @@ impl Engine {
                 state.studies.push(study);
                 let slot = state.studies.len() - 1;
                 state.by_key.insert(key.to_string(), slot);
-                self.directory
-                    .write()
-                    .unwrap()
-                    .push(DirEntry { id, shard: shard_idx, slot });
+                *staged_dir = Some(DirEntry { id, shard: shard_idx, slot });
                 self.metrics.studies_created.inc();
                 if let Some(sm) = self.metrics.shards.get(shard_idx) {
                     sm.studies.set(state.studies.len() as f64);
@@ -2694,6 +2745,17 @@ impl Engine {
                 self.views.on_study_created(&state.studies[slot]);
                 Ok(slot)
             }
+        }
+    }
+
+    /// Publish a directory entry staged by [`Engine::find_or_create_study`].
+    /// Must be called after the owning shard guard is dropped — the
+    /// directory lookup path copies the entry out before locking the
+    /// shard, and the write half follows the same registry-before-shard
+    /// order.
+    fn publish_dir_entry(&self, staged: Option<DirEntry>) {
+        if let Some(entry) = staged {
+            self.directory.write_safe().push(entry);
         }
     }
 
@@ -2822,21 +2884,21 @@ impl Engine {
                 .into_iter()
                 .map(|(site, n)| (site, n as f64))
                 .collect();
-            *self.metrics.site_leases.lock().unwrap() = loads;
+            *self.metrics.site_leases.lock_safe() = loads;
             let tenants: Vec<(String, f64)> = fl
                 .sched
                 .tenant_loads()
                 .into_iter()
                 .map(|(tenant, n)| (tenant, n as f64))
                 .collect();
-            *self.metrics.tenant_leases.lock().unwrap() = tenants;
+            *self.metrics.tenant_leases.lock_safe() = tenants;
         }
         // Read-path staleness: worst (runtime epoch − published view
         // epoch) across studies. 0 under synchronous publication; >0
         // would flag a mutation path missing its view hook.
         let mut worst_lag = 0u64;
         for shard in &self.shards {
-            let guard = shard.state.lock().unwrap();
+            let guard = shard.state.lock_safe();
             for study in &guard.studies {
                 let published = self.views.view_epoch(study.id).unwrap_or(0);
                 worst_lag = worst_lag.max(study.runtime.epoch.saturating_sub(published));
@@ -2850,7 +2912,7 @@ impl Engine {
     /// were ever found stale).
     fn rebuild_views(&self) {
         for shard in &self.shards {
-            let guard = shard.state.lock().unwrap();
+            let guard = shard.state.lock_safe();
             for study in &guard.studies {
                 self.views.rebuild_from(study);
             }
@@ -2957,9 +3019,11 @@ impl Engine {
             sm.studies.set(state.studies.len() as f64);
         }
         drop(guard);
+        // Registry (level 10) sits below the shard lock (level 20) in
+        // the canonical order, so the entry is published only after the
+        // shard guard is released.
         self.directory
-            .write()
-            .unwrap()
+            .write_safe()
             .push(DirEntry { id, shard: shard_idx, slot });
         self.next_study_id.fetch_max(id + 1, Ordering::Relaxed);
     }
@@ -3136,7 +3200,7 @@ impl Engine {
                 let v = &record.payload;
                 let study_id = v.get("study_id").as_u64().unwrap_or(0);
                 if let Some(t) = Trial::from_json(v.get("trial")) {
-                    let entry = self.directory.read().unwrap().lookup(study_id);
+                    let entry = self.directory.read_safe().lookup(study_id);
                     if let Some(DirEntry { shard, slot, .. }) = entry {
                         let mut guard = self.lock_shard(shard);
                         let state = &mut *guard;

@@ -6,6 +6,7 @@
 //! scrapeable, so the registry renders the standard exposition format.
 
 use crate::rng;
+use crate::sync::MutexExt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -120,7 +121,7 @@ impl Histogram {
         self.count.fetch_add(1, Ordering::Relaxed);
         self.sum_us
             .fetch_add((x * 1e6).max(0.0) as u64, Ordering::Relaxed);
-        let mut r = self.samples.lock().unwrap();
+        let mut r = self.samples.lock_safe();
         r.seen += 1;
         if r.samples.len() < RESERVOIR_CAP {
             r.samples.push(x);
@@ -153,7 +154,7 @@ impl Histogram {
     /// Quantile over the retained reservoir (q in [0,1]) — exact while
     /// under [`RESERVOIR_CAP`] observations, a uniform estimate past it.
     pub fn quantile(&self, q: f64) -> f64 {
-        let mut s = self.samples.lock().unwrap().samples.clone();
+        let mut s = self.samples.lock_safe().samples.clone();
         if s.is_empty() {
             return 0.0;
         }
@@ -164,7 +165,7 @@ impl Histogram {
 
     /// Clear retained samples (benches reuse histograms between phases).
     pub fn reset_samples(&self) {
-        let mut r = self.samples.lock().unwrap();
+        let mut r = self.samples.lock_safe();
         r.samples.clear();
         r.seen = 0;
     }
@@ -352,7 +353,7 @@ impl Metrics {
     /// instead of growing memory and scrape cardinality forever.
     pub fn inc_tenant_denial(&self, tenant: &str) {
         const MAX_TENANT_SERIES: usize = 1024;
-        let mut m = self.tenant_denials.lock().unwrap();
+        let mut m = self.tenant_denials.lock_safe();
         if m.len() >= MAX_TENANT_SERIES && !m.contains_key(tenant) {
             *m.entry("_other".to_string()).or_insert(0) += 1;
             return;
@@ -452,7 +453,7 @@ impl Metrics {
             out.push_str(&format!("{name} {}\n", c.get()));
         }
         {
-            let tenants = self.tenant_denials.lock().unwrap();
+            let tenants = self.tenant_denials.lock_safe();
             if !tenants.is_empty() {
                 family(
                     &mut out,
@@ -566,7 +567,7 @@ impl Metrics {
             out.push_str(&format!("{name} {}\n", g.get()));
         }
         {
-            let sites = self.site_leases.lock().unwrap();
+            let sites = self.site_leases.lock_safe();
             if !sites.is_empty() {
                 family(&mut out, "hopaas_site_leases", "gauge", "Active leases by site.");
                 for (site, n) in sites.iter() {
@@ -579,7 +580,7 @@ impl Metrics {
             }
         }
         {
-            let tenants = self.tenant_leases.lock().unwrap();
+            let tenants = self.tenant_leases.lock_safe();
             if !tenants.is_empty() {
                 family(&mut out, "hopaas_tenant_leases", "gauge", "Active leases by tenant.");
                 for (tenant, n) in tenants.iter() {

@@ -11,9 +11,12 @@
 //! * [`TrialRouter`] — a lock-striped `trial_id → shard` map, written
 //!   once per `ask` and read once per `tell`/`should_prune`/`fail`.
 //!
-//! Both are leaf locks in the engine's ordering: a shard lock may be
-//! held while taking a directory/router stripe lock, never the other
-//! way around, so no cycle (and no deadlock) is possible.
+//! Their places in the canonical lock order (declared once in
+//! [`crate::analysis::HIERARCHY`], enforced by `hopaas-lint`) differ:
+//! the directory sits *below* the shard locks — writers stage a
+//! [`DirEntry`] and publish it only after the shard guard drops — while
+//! router stripes sit *above* them, so a shard lock may be held while
+//! taking a stripe lock, never the other way around.
 //!
 //! Study→shard placement is *stable*: `shard_of = fnv1a(study_key) %
 //! n_shards`. The same FNV-1a hash seeds the deterministic sampler
@@ -21,6 +24,7 @@
 //! study definition — a recovered or second engine instance routes
 //! identically.
 
+use crate::sync::MutexExt;
 use std::collections::HashMap;
 use std::sync::Mutex;
 
@@ -114,22 +118,20 @@ impl TrialRouter {
 
     pub fn insert(&self, trial_id: u64, shard: usize) {
         self.stripe(trial_id)
-            .lock()
-            .unwrap()
+            .lock_safe()
             .insert(trial_id, shard as u32);
     }
 
     pub fn get(&self, trial_id: u64) -> Option<usize> {
         self.stripe(trial_id)
-            .lock()
-            .unwrap()
+            .lock_safe()
             .get(&trial_id)
             .map(|&s| s as usize)
     }
 
     /// Number of routed trials (tests/metrics).
     pub fn len(&self) -> usize {
-        self.stripes.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.stripes.iter().map(|s| s.lock_safe().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {

@@ -41,6 +41,7 @@ use super::views::{self, Cursor, ViewRegistry};
 use crate::http::{PathParams, Request, Response, Router, Server, ServerConfig, ServerHandle};
 use crate::json::Value;
 use crate::store::{Record, ReplFetch};
+use crate::sync::MutexExt;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -153,11 +154,11 @@ impl HopaasServer {
     /// Whether the replication applier is still running (follower mode,
     /// not yet promoted or stalled).
     pub fn replicating(&self) -> bool {
-        self.applier.lock().unwrap().is_some()
+        self.applier.lock_safe().is_some()
     }
 
     pub fn stop(self) {
-        if let Some(a) = self.applier.lock().unwrap().take() {
+        if let Some(a) = self.applier.lock_safe().take() {
             a.seal();
         }
         self.handle.stop();
@@ -904,7 +905,7 @@ pub fn build_router_opts(
         let engine = engine.clone();
         let applier = repl.applier.clone();
         router.post("/api/repl/promote", move |_, _| {
-            if let Some(a) = applier.lock().unwrap().take() {
+            if let Some(a) = applier.lock_safe().take() {
                 a.seal();
             }
             match engine.promote() {

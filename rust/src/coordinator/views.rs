@@ -37,6 +37,7 @@ use super::trial::{Trial, TrialState};
 use crate::http::Notify;
 use crate::json::write::{write_json_num, write_json_str};
 use crate::obs::{self, Stage};
+use crate::sync::{MutexExt, RwLockExt};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicI64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -372,7 +373,7 @@ impl ViewRegistry {
     }
 
     fn slot(&self, study_id: u64) -> Option<Arc<StudySlot>> {
-        self.slots.read().unwrap().get(&study_id).cloned()
+        self.slots.read_safe().get(&study_id).cloned()
     }
 
     // ----- writer side (engine calls, under the owning shard lock) -----
@@ -393,7 +394,7 @@ impl ViewRegistry {
             view: RwLock::new(view),
             events: Mutex::new(Vec::new()),
         });
-        self.slots.write().unwrap().insert(study.id, slot);
+        self.slots.write_safe().insert(study.id, slot);
         let took = t0.elapsed();
         self.metrics.view_refresh_seconds.observe(took.as_secs_f64());
         obs::stage(Stage::ViewPublish, took);
@@ -406,7 +407,7 @@ impl ViewRegistry {
         let Some(slot) = self.slot(study.id) else { return };
         let t0 = std::time::Instant::now();
         {
-            let mut b = slot.builder.lock().unwrap();
+            let mut b = slot.builder.lock_safe();
             for t in &study.trials[start_slot..] {
                 let lite = TrialLite::render(t);
                 b.count_delta(t.state, 1);
@@ -431,7 +432,7 @@ impl ViewRegistry {
         let t0 = std::time::Instant::now();
         let trial = &study.trials[trial_slot];
         {
-            let mut b = slot.builder.lock().unwrap();
+            let mut b = slot.builder.lock_safe();
             if trial_slot >= b.trials.len() {
                 // A mutation for a trial the registry never saw
                 // inserted; resync the tail defensively, then re-enter
@@ -456,7 +457,7 @@ impl ViewRegistry {
             Self::publish(&slot, &b, study);
         }
         if let Some(kind) = event {
-            let mut log = slot.events.lock().unwrap();
+            let mut log = slot.events.lock_safe();
             let seq = log.len() as u64 + 1;
             log.push(Arc::new(StudyEvent::render(seq, trial, kind)));
             drop(log);
@@ -475,7 +476,7 @@ impl ViewRegistry {
             best: b.best,
             trials: b.trials.clone(),
         });
-        *slot.view.write().unwrap() = view;
+        *slot.view.write_safe() = view;
     }
 
     /// Rebuild a study's view and event log from recovered state
@@ -492,7 +493,7 @@ impl ViewRegistry {
             let kb = (b.finished_at.unwrap_or(b.started_at), b.id);
             ka.partial_cmp(&kb).unwrap_or(std::cmp::Ordering::Equal)
         });
-        let mut log = slot.events.lock().unwrap();
+        let mut log = slot.events.lock_safe();
         log.clear();
         for t in terminal {
             let kind = match t.state {
@@ -510,32 +511,32 @@ impl ViewRegistry {
 
     /// The current snapshot of one study.
     pub fn study_view(&self, study_id: u64) -> Option<Arc<StudyView>> {
-        self.slot(study_id).map(|s| s.view.read().unwrap().clone())
+        self.slot(study_id).map(|s| s.view.read_safe().clone())
     }
 
     /// Current snapshots of all studies, ordered by study id.
     pub fn study_views(&self) -> Vec<Arc<StudyView>> {
-        let slots = self.slots.read().unwrap();
+        let slots = self.slots.read_safe();
         let mut ids: Vec<u64> = slots.keys().copied().collect();
         ids.sort_unstable();
-        ids.iter().map(|id| slots[id].view.read().unwrap().clone()).collect()
+        ids.iter().map(|id| slots[id].view.read_safe().clone()).collect()
     }
 
     /// View epoch of one study (staleness probes).
     pub fn view_epoch(&self, study_id: u64) -> Option<u64> {
-        self.slot(study_id).map(|s| s.view.read().unwrap().epoch)
+        self.slot(study_id).map(|s| s.view.read_safe().epoch)
     }
 
     /// The study's current event watermark, or None if unknown.
     pub fn watermark(&self, study_id: u64) -> Option<u64> {
-        self.slot(study_id).map(|s| s.events.lock().unwrap().len() as u64)
+        self.slot(study_id).map(|s| s.events.lock_safe().len() as u64)
     }
 
     /// Events with `seq > since` (bounded by `limit`), plus the current
     /// watermark. None = unknown study.
     pub fn events_after(&self, study_id: u64, since: u64, limit: usize) -> Option<EventsPage> {
         let slot = self.slot(study_id)?;
-        let log = slot.events.lock().unwrap();
+        let log = slot.events.lock_safe();
         let watermark = log.len() as u64;
         let start = (since as usize).min(log.len());
         let events: Vec<Arc<StudyEvent>> =
@@ -545,7 +546,7 @@ impl ViewRegistry {
 
     /// Number of registered studies.
     pub fn n_studies(&self) -> usize {
-        self.slots.read().unwrap().len()
+        self.slots.read_safe().len()
     }
 }
 

@@ -73,6 +73,7 @@ pub use registry::{WorkerInfo, WorkerState};
 
 use crate::coordinator::engine::ApiError;
 use crate::json::Value;
+use crate::sync::MutexExt;
 use lease::LeaseTable;
 use policy::TenantRateLedger;
 use registry::WorkerRegistry;
@@ -146,7 +147,7 @@ impl Fleet {
 
     /// Lock the fleet tables (leaf lock; see type docs).
     pub fn lock(&self) -> MutexGuard<'_, FleetState> {
-        self.state.lock().unwrap()
+        self.state.lock_safe()
     }
 
     /// Effective lease duration (infinite when expiry is disabled).
@@ -163,7 +164,7 @@ impl Fleet {
         if policy.tenant_ask_rate == 0 {
             return Ok(());
         }
-        self.ask_rates.lock().unwrap().note_ask(
+        self.ask_rates.lock_safe().note_ask(
             tenant,
             now,
             policy.tenant_ask_rate,
@@ -175,7 +176,7 @@ impl Fleet {
     /// are client-influenced strings; the map must not grow forever).
     pub fn gc_ask_rates(&self, now: f64) {
         if self.config.policy.tenant_ask_rate > 0 {
-            self.ask_rates.lock().unwrap().gc(now, self.config.policy.tenant_ask_window);
+            self.ask_rates.lock_safe().gc(now, self.config.policy.tenant_ask_window);
         }
     }
 }

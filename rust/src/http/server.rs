@@ -9,6 +9,7 @@
 use super::message::{parse_request, Deferred, ParseState, MAX_HEAD_BYTES};
 use super::{Method, Response, Router};
 use crate::obs::{self, ReqId, Tracer};
+use crate::sync::MutexExt;
 use std::io::{ErrorKind, Read, Write};
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -36,27 +37,30 @@ impl Notify {
 
     /// Bump the generation and wake all waiters.
     pub fn notify_all(&self) {
-        let mut g = self.generation.lock().unwrap();
+        let mut g = self.generation.lock_safe();
         *g = g.wrapping_add(1);
         self.cond.notify_all();
     }
 
     /// Current generation; pass to [`Notify::wait_changed`].
     pub fn generation(&self) -> u64 {
-        *self.generation.lock().unwrap()
+        *self.generation.lock_safe()
     }
 
     /// Block until the generation differs from `seen` or `timeout`
     /// elapses; returns the generation observed on wakeup.
     pub fn wait_changed(&self, seen: u64, timeout: Duration) -> u64 {
         let deadline = Instant::now() + timeout;
-        let mut g = self.generation.lock().unwrap();
+        let mut g = self.generation.lock_safe();
         while *g == seen {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
-            let (guard, _) = self.cond.wait_timeout(g, deadline - now).unwrap();
+            let (guard, _) = self
+                .cond
+                .wait_timeout(g, deadline - now)
+                .unwrap_or_else(|p| p.into_inner());
             g = guard;
         }
         *g
@@ -256,7 +260,7 @@ impl Server {
             let tracer = self.tracer.clone();
             std::thread::spawn(move || loop {
                 let conn = {
-                    let guard = rx.lock().unwrap();
+                    let guard = rx.lock_safe();
                     guard.recv()
                 };
                 match conn {

@@ -277,6 +277,7 @@ impl<'a> Parser<'a> {
                 self.i += 1;
             }
         }
+        // lint:allow(unwrap_boundary): the slice was just scanned as ASCII digits/signs — an internal invariant, not an input boundary.
         let text = std::str::from_utf8(&self.b[start..self.i]).unwrap();
         let n: f64 = text.parse().map_err(|_| self.err("number out of range"))?;
         if !n.is_finite() {

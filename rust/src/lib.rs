@@ -32,6 +32,7 @@
 //! Python (JAX + Pallas) runs only at build time (`make artifacts`); the
 //! request path is pure Rust.
 
+pub mod analysis;
 pub mod bench;
 pub mod config;
 pub mod coordinator;
@@ -45,6 +46,7 @@ pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod store;
+pub mod sync;
 pub mod worker;
 
 pub mod testutil;

@@ -35,6 +35,7 @@
 
 use crate::json::Value;
 use crate::rng;
+use crate::sync::MutexExt;
 use std::cell::RefCell;
 use std::fmt;
 use std::io::Write as _;
@@ -661,7 +662,7 @@ impl Tracer {
         if !self.stripes.is_empty() {
             let seq = self.seq.fetch_add(1, Ordering::Relaxed);
             let stripe = &self.stripes[(seq as usize) % self.stripes.len()];
-            let mut g = stripe.lock().unwrap();
+            let mut g = stripe.lock_safe();
             let pos = g.next;
             g.next = (g.next + 1) % g.slots.len().max(1);
             let slot = &mut g.slots[pos];
@@ -692,7 +693,7 @@ impl Tracer {
     /// requests always displace a faster exemplar; the window reset
     /// keeps a historic spike from pinning the slot forever.
     fn note_exemplar(&self, kind: OpKind, id: ReqId, total_us: u64, slow: bool) {
-        let mut slot = self.exemplars[kind.index()].lock().unwrap();
+        let mut slot = self.exemplars[kind.index()].lock_safe();
         slot.window += 1;
         if slot.window >= EXEMPLAR_WINDOW {
             slot.window = 0;
@@ -749,7 +750,7 @@ impl Tracer {
     pub fn get(&self, id: &str) -> Option<Value> {
         let mut best: Option<TraceRecord> = None;
         for stripe in &self.stripes {
-            let g = stripe.lock().unwrap();
+            let g = stripe.lock_safe();
             for rec in &g.slots {
                 if rec.used && rec.id.as_str() == id {
                     match &best {
@@ -767,7 +768,7 @@ impl Tracer {
     pub fn recent(&self, limit: usize, kind: Option<OpKind>, study: Option<u64>) -> Value {
         let mut rows: Vec<TraceRecord> = Vec::new();
         for stripe in &self.stripes {
-            let g = stripe.lock().unwrap();
+            let g = stripe.lock_safe();
             for rec in &g.slots {
                 if !rec.used {
                     continue;
@@ -814,7 +815,7 @@ impl Tracer {
         );
         out.push_str("# TYPE hopaas_slow_trace_seconds gauge\n");
         for kind in OpKind::ALL {
-            let slot = self.exemplars[kind.index()].lock().unwrap();
+            let slot = self.exemplars[kind.index()].lock_safe();
             if slot.present {
                 out.push_str(&format!(
                     "hopaas_slow_trace_seconds{{api=\"{}\",trace_id=\"{}\"}} {}\n",

@@ -10,6 +10,7 @@ mod manifest;
 
 pub use manifest::{Manifest, Variant};
 
+use crate::sync::MutexExt;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
@@ -77,7 +78,7 @@ impl Runtime {
         file: &str,
     ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>, RuntimeError> {
         {
-            let cache = self.cache.lock().unwrap();
+            let cache = self.cache.lock_safe();
             if let Some(exe) = cache.get(file) {
                 return Ok(exe.clone());
             }
@@ -89,8 +90,7 @@ impl Runtime {
         let comp = xla::XlaComputation::from_proto(&proto);
         let exe = std::sync::Arc::new(self.client.compile(&comp)?);
         self.cache
-            .lock()
-            .unwrap()
+            .lock_safe()
             .insert(file.to_string(), exe.clone());
         Ok(exe)
     }
@@ -109,7 +109,7 @@ impl Runtime {
 
     /// Number of compiled executables currently cached.
     pub fn cached(&self) -> usize {
-        self.cache.lock().unwrap().len()
+        self.cache.lock_safe().len()
     }
 }
 

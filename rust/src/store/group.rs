@@ -40,6 +40,7 @@
 use super::{Record, SegmentWriter, Storage};
 use crate::json::Value;
 use crate::obs::{self, ReqId};
+use crate::sync::MutexExt;
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, SyncSender, TryRecvError};
@@ -218,7 +219,7 @@ impl ReplicationSource {
             buf.next_seq = buf.next_seq.max(seq_last + 1);
         }
         let src = ReplicationSource { inner: Mutex::new(buf), signal, cap };
-        src.evict_locked(&mut src.inner.lock().unwrap());
+        src.evict_locked(&mut src.inner.lock_safe());
         src
     }
 
@@ -246,7 +247,7 @@ impl ReplicationSource {
     pub fn publish(&self, records: Vec<Record>) {
         let (Some(first), Some(last)) = (records.first(), records.last()) else { return };
         let (seq_first, seq_last) = (first.seq, last.seq);
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.inner.lock_safe();
         g.records += records.len();
         g.batches.push_back((seq_first, seq_last, records));
         g.next_seq = g.next_seq.max(seq_last + 1);
@@ -255,7 +256,7 @@ impl ReplicationSource {
 
     /// All buffered records with `seq >= from`, capped at `max`.
     pub fn fetch(&self, from: u64, max: usize) -> ReplFetch {
-        let g = self.inner.lock().unwrap();
+        let g = self.inner.lock_safe();
         if from < g.floor {
             return ReplFetch::TooOld { oldest: g.floor };
         }
@@ -285,17 +286,17 @@ impl ReplicationSource {
 
     /// Seq the next committed record will carry (the follower's target).
     pub fn next_seq(&self) -> u64 {
-        self.inner.lock().unwrap().next_seq
+        self.inner.lock_safe().next_seq
     }
 
     /// Oldest fetchable seq (diagnostics / `/api/stats`).
     pub fn floor(&self) -> u64 {
-        self.inner.lock().unwrap().floor
+        self.inner.lock_safe().floor
     }
 
     /// Buffered record count (diagnostics / `/api/stats`).
     pub fn buffered(&self) -> usize {
-        self.inner.lock().unwrap().records
+        self.inner.lock_safe().records
     }
 
     /// Wake parked followers; fired by the writer after each publish.
@@ -491,7 +492,7 @@ impl GroupWal {
     /// The recent-batch attribution ledger as JSON (newest last): seq
     /// range, fsync duration, and the trace ids each batch acked.
     pub fn ledger_json(&self) -> Value {
-        let g = self.ledger.lock().unwrap();
+        let g = self.ledger.lock_safe();
         Value::Arr(
             g.iter()
                 .map(|b| {
@@ -757,7 +758,7 @@ impl Writer {
                 // trace ids it acknowledged — in the bounded ledger.
                 let traces: Vec<String> =
                     jobs.iter().filter_map(|j| j.trace.map(|t| t.as_str().to_string())).collect();
-                let mut g = self.ledger.lock().unwrap();
+                let mut g = self.ledger.lock_safe();
                 if g.len() == LEDGER_CAP {
                     g.pop_front();
                 }

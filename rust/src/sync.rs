@@ -1,0 +1,83 @@
+//! Poison-safe locking helpers.
+//!
+//! `std` mutexes poison when a holder panics, and the idiomatic
+//! `lock().unwrap()` turns one panicked worker thread into a cascade:
+//! every later thread touching the same lock aborts too. For a serving
+//! system that is exactly backwards — the data under our locks is
+//! always left in a consistent state at panic boundaries (mutations
+//! are applied only after their WAL append succeeds, and view/metric
+//! updates are idempotent), so the right recovery is to take the lock
+//! anyway and keep serving.
+//!
+//! `LockExt` provides `lock_safe`/`read_safe`/`write_safe`, which
+//! recover the guard from a poisoned lock via
+//! [`std::sync::PoisonError::into_inner`]. The `hopaas-lint` rule
+//! `unwrap_boundary` flags any remaining `lock().unwrap()` so new code
+//! uses these instead (see `src/analysis/`).
+
+use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Poison-recovering accessors for [`Mutex`].
+pub trait MutexExt<T: ?Sized> {
+    /// Like `lock().unwrap()`, but recovers the guard when the lock is
+    /// poisoned instead of propagating the panic.
+    fn lock_safe(&self) -> MutexGuard<'_, T>;
+}
+
+impl<T: ?Sized> MutexExt<T> for Mutex<T> {
+    fn lock_safe(&self) -> MutexGuard<'_, T> {
+        self.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+}
+
+/// Poison-recovering accessors for [`RwLock`].
+pub trait RwLockExt<T: ?Sized> {
+    /// Like `read().unwrap()`, but recovers the guard on poison.
+    fn read_safe(&self) -> RwLockReadGuard<'_, T>;
+    /// Like `write().unwrap()`, but recovers the guard on poison.
+    fn write_safe(&self) -> RwLockWriteGuard<'_, T>;
+}
+
+impl<T: ?Sized> RwLockExt<T> for RwLock<T> {
+    fn read_safe(&self) -> RwLockReadGuard<'_, T> {
+        self.read().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+
+    fn write_safe(&self) -> RwLockWriteGuard<'_, T> {
+        self.write().unwrap_or_else(|poisoned| poisoned.into_inner())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn lock_safe_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7u64));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*m.lock_safe(), 7);
+    }
+
+    #[test]
+    fn rwlock_safe_recovers_from_poison() {
+        let l = Arc::new(RwLock::new(3u64));
+        let l2 = l.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(l.is_poisoned());
+        assert_eq!(*l.read_safe(), 3);
+        *l.write_safe() = 4;
+        assert_eq!(*l.read_safe(), 4);
+    }
+}

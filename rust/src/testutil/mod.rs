@@ -7,10 +7,16 @@
 //! invariants (routing, batching, state machines) are exercised through
 //! it — see the `proptest` substitution note in DESIGN.md §3. `crash`
 //! arms named kill-points inside the store so recovery can be driven
-//! through every step of the compaction protocol.
+//! through every step of the compaction protocol. `sched` is a
+//! deterministic interleaving checker (a shuttle-style controlled
+//! scheduler) and `models` the concurrency protocol miniatures it
+//! exercises — the dynamic half of the PR-10 concurrency tooling,
+//! alongside the `hopaas-lint` static analysis in `crate::analysis`.
 
 pub mod crash;
+pub mod models;
 pub mod prop;
+pub mod sched;
 
 use std::net::TcpListener;
 

@@ -1,0 +1,389 @@
+//! Concurrency protocol miniatures for the interleaving checker.
+//!
+//! Each model distills one real coordination protocol from the
+//! coordinator into a handful of scheduler steps, in two variants:
+//! the **shipped** protocol (`buggy = false`), which must survive
+//! exhaustive interleaving search, and a **planted bug** variant
+//! (`buggy = true`) — the ordering mistake the protocol exists to
+//! prevent — which the checker must find and name.
+//!
+//! The five models mirror, in order: the WAL group-commit
+//! publish-before-ack contract against the replication ring's eviction
+//! floor (`store/group.rs`); the tell-epoch guard on sampler fit-cache
+//! write-back (`coordinator/engine.rs` CS2); snapshot-swap view
+//! publication (`coordinator/views.rs`); promote-exactly-once on
+//! follower failover (`coordinator/replica.rs`); and the fleet
+//! scheduler's release-exactly-once slot accounting — the PR-4
+//! double-release bug class (`fleet/scheduler.rs`).
+
+use super::sched::{Instance, MCell};
+
+/// A named model: a fresh [`Instance`] per exploration run.
+pub struct Model {
+    pub name: String,
+    pub factory: Box<dyn Fn() -> Instance>,
+}
+
+/// All five protocol miniatures.
+pub fn all(buggy: bool) -> Vec<Model> {
+    vec![
+        wal_publish_before_ack(buggy),
+        fit_cache_epoch_guard(buggy),
+        view_snapshot_swap(buggy),
+        promote_once(buggy),
+        slot_release_once(buggy),
+    ]
+}
+
+/// WAL publish-before-ack vs the replication ring's eviction floor.
+///
+/// Contract (`store/group.rs`): a batch enters the replication ring
+/// *before* its commit is acknowledged, and the ring never evicts
+/// entries a follower has not fetched. Planted bug: ack before
+/// publish — a follower that reacts to the ack can find the ring
+/// missing the batch, a replication gap.
+pub fn wal_publish_before_ack(buggy: bool) -> Model {
+    let name = format!("wal_publish_before_ack{}", if buggy { "[buggy]" } else { "" });
+    let factory = move || {
+        let ring: MCell<Vec<u64>> = MCell::new(Vec::new());
+        let acked: MCell<u64> = MCell::new(0);
+        let fetched: MCell<u64> = MCell::new(0);
+        let gap: MCell<bool> = MCell::new(false);
+
+        let writer = {
+            let (ring, acked) = (ring.clone(), acked.clone());
+            Box::new(move |s: &super::sched::Sched| {
+                // One batch keeps the model exhaustively explorable;
+                // the race window is the same for every batch.
+                let seq = 1u64;
+                s.point("wal:append");
+                if buggy {
+                    // Planted bug: the client is acked before the
+                    // batch is visible to followers.
+                    s.point("ack");
+                    acked.set(seq);
+                    s.point("ring:publish");
+                    ring.with(|r| r.push(seq));
+                } else {
+                    s.point("ring:publish");
+                    ring.with(|r| r.push(seq));
+                    s.point("ack");
+                    acked.set(seq);
+                }
+            }) as Box<dyn FnOnce(&super::sched::Sched) + Send>
+        };
+
+        let follower = {
+            let (ring, acked, fetched, gap) =
+                (ring.clone(), acked.clone(), fetched.clone(), gap.clone());
+            Box::new(move |s: &super::sched::Sched| {
+                for _ in 0..2 {
+                    s.point("follower:fetch");
+                    let high = acked.get();
+                    let mut at = fetched.get();
+                    while at < high {
+                        at += 1;
+                        if ring.with(|r| r.contains(&at)) {
+                            fetched.set(at);
+                        } else {
+                            // An acked batch is neither fetched nor in
+                            // the ring: replication gap.
+                            gap.set(true);
+                            return;
+                        }
+                    }
+                }
+            }) as Box<dyn FnOnce(&super::sched::Sched) + Send>
+        };
+
+        let evictor = {
+            let (ring, fetched) = (ring.clone(), fetched.clone());
+            Box::new(move |s: &super::sched::Sched| {
+                s.point("ring:evict");
+                // Correct eviction floor: only below the fetch
+                // watermark, never by ack.
+                let floor = fetched.get();
+                ring.with(|r| r.retain(|&seq| seq > floor));
+            }) as Box<dyn FnOnce(&super::sched::Sched) + Send>
+        };
+
+        Instance {
+            n_locks: 0,
+            threads: vec![writer, follower, evictor],
+            finish: Box::new(move || {
+                if gap.get() {
+                    Err("follower observed an acked batch missing from the ring".into())
+                } else {
+                    Ok(())
+                }
+            }),
+        }
+    };
+    Model { name, factory: Box::new(factory) }
+}
+
+/// Tell-epoch guard on sampler fit-cache write-back (CS2).
+///
+/// Contract (`coordinator/engine.rs`): a fit computed outside the
+/// shard lock is written back only if the study's tell-epoch is
+/// unchanged; a concurrent `tell` bumps the epoch and invalidates the
+/// cache. Planted bug: unconditional write-back installs a fit for
+/// data that no longer exists.
+pub fn fit_cache_epoch_guard(buggy: bool) -> Model {
+    let name = format!("fit_cache_epoch_guard{}", if buggy { "[buggy]" } else { "" });
+    let factory = move || {
+        let epoch: MCell<u64> = MCell::new(0);
+        // Cache entry: (epoch the fit was computed at, fit payload).
+        let cache: MCell<Option<(u64, u64)>> = MCell::new(None);
+
+        let fitter = {
+            let (epoch, cache) = (epoch.clone(), cache.clone());
+            Box::new(move |s: &super::sched::Sched| {
+                s.point("cs2:read-epoch");
+                let e = epoch.get();
+                s.point("cs2:fit");
+                let fit = (e, e.wrapping_mul(10) + 7);
+                s.point("cs2:write-back");
+                if buggy {
+                    // Planted bug: no epoch check on write-back.
+                    cache.set(Some(fit));
+                } else {
+                    cache.with(|c| {
+                        // (the epoch read and the store are one model
+                        // step here: the real code does both under the
+                        // shard lock)
+                        if epoch.get() == e {
+                            *c = Some(fit);
+                        }
+                    });
+                }
+            }) as Box<dyn FnOnce(&super::sched::Sched) + Send>
+        };
+
+        let teller = {
+            let (epoch, cache) = (epoch.clone(), cache.clone());
+            Box::new(move |s: &super::sched::Sched| {
+                s.point("tell:bump-epoch");
+                epoch.with(|e| *e += 1);
+                cache.set(None);
+            }) as Box<dyn FnOnce(&super::sched::Sched) + Send>
+        };
+
+        Instance {
+            n_locks: 0,
+            threads: vec![fitter, teller],
+            finish: Box::new(move || match cache.get() {
+                Some((fit_epoch, _)) if fit_epoch != epoch.get() => Err(format!(
+                    "stale fit installed: cached epoch {fit_epoch}, current {}",
+                    epoch.get()
+                )),
+                _ => Ok(()),
+            }),
+        }
+    };
+    Model { name, factory: Box::new(factory) }
+}
+
+/// Snapshot-swap view publication vs reader snapshots.
+///
+/// Contract (`coordinator/views.rs`): a view rebuild produces a fresh
+/// immutable value and publishes it with a single pointer swap;
+/// readers always see a complete view. Planted bug: mutating the
+/// published view in place — a reader between the field writes sees a
+/// torn view.
+pub fn view_snapshot_swap(buggy: bool) -> Model {
+    let name = format!("view_snapshot_swap{}", if buggy { "[buggy]" } else { "" });
+    let factory = move || {
+        // Published view: (version, checksum); coherent iff
+        // checksum == version * 100.
+        let slot: MCell<(u64, u64)> = MCell::new((0, 0));
+        let torn: MCell<bool> = MCell::new(false);
+
+        let builder = {
+            let slot = slot.clone();
+            Box::new(move |s: &super::sched::Sched| {
+                for v in 1..=2u64 {
+                    s.point("view:rebuild");
+                    let fresh = (v, v * 100);
+                    if buggy {
+                        // Planted bug: in-place publication, field by
+                        // field, across a yield point.
+                        s.point("view:write-version");
+                        slot.with(|view| view.0 = fresh.0);
+                        s.point("view:write-checksum");
+                        slot.with(|view| view.1 = fresh.1);
+                    } else {
+                        s.point("view:swap");
+                        slot.set(fresh);
+                    }
+                }
+            }) as Box<dyn FnOnce(&super::sched::Sched) + Send>
+        };
+
+        let reader = {
+            let (slot, torn) = (slot.clone(), torn.clone());
+            Box::new(move |s: &super::sched::Sched| {
+                for _ in 0..2 {
+                    s.point("read:snapshot");
+                    let (v, sum) = slot.get();
+                    if sum != v * 100 {
+                        torn.set(true);
+                    }
+                }
+            }) as Box<dyn FnOnce(&super::sched::Sched) + Send>
+        };
+
+        Instance {
+            n_locks: 0,
+            threads: vec![builder, reader],
+            finish: Box::new(move || {
+                if torn.get() {
+                    Err("reader observed a torn view snapshot".into())
+                } else {
+                    Ok(())
+                }
+            }),
+        }
+    };
+    Model { name, factory: Box::new(factory) }
+}
+
+/// Promote-exactly-once on follower failover.
+///
+/// Contract (`coordinator/replica.rs`): when the primary dies, the
+/// promotion path runs exactly once — the winner atomically claims the
+/// flag, then drains and seals the applier. Planted bug: check and
+/// claim as separate steps — two promoters both win and the applier is
+/// drained twice.
+pub fn promote_once(buggy: bool) -> Model {
+    let name = format!("promote_once{}", if buggy { "[buggy]" } else { "" });
+    let factory = move || {
+        let promoted: MCell<bool> = MCell::new(false);
+        let drains: MCell<u32> = MCell::new(0);
+
+        let promoter = |promoted: MCell<bool>, drains: MCell<u32>| {
+            Box::new(move |s: &super::sched::Sched| {
+                let won = if buggy {
+                    // Planted bug: test-then-set across a yield point.
+                    s.point("promote:check");
+                    let already = promoted.get();
+                    s.point("promote:claim");
+                    if !already {
+                        promoted.set(true);
+                    }
+                    !already
+                } else {
+                    s.point("promote:cas");
+                    promoted.with(|p| !std::mem::replace(p, true))
+                };
+                if won {
+                    s.point("promote:drain-seal");
+                    drains.with(|d| *d += 1);
+                }
+            }) as Box<dyn FnOnce(&super::sched::Sched) + Send>
+        };
+
+        Instance {
+            n_locks: 0,
+            threads: vec![
+                promoter(promoted.clone(), drains.clone()),
+                promoter(promoted.clone(), drains.clone()),
+            ],
+            finish: Box::new(move || match drains.get() {
+                1 => Ok(()),
+                n => Err(format!("applier drained {n} times; promotion must run exactly once")),
+            }),
+        }
+    };
+    Model { name, factory: Box::new(factory) }
+}
+
+/// Release-exactly-once slot accounting (the PR-4 double-release bug).
+///
+/// Contract (`fleet/scheduler.rs`): a preempted trial's site slot is
+/// released once, whichever of the lease-expiry reaper or the explicit
+/// `fail` path gets there first — both guard on a per-trial released
+/// flag *atomically with* the decrement, under the fleet lock. Planted
+/// bug (shipped before PR 4 fixed it): flag check and slot decrement
+/// as separate steps — both paths pass the check and the site's used
+/// count goes negative, inflating capacity for every later admission.
+pub fn slot_release_once(buggy: bool) -> Model {
+    let name = format!("slot_release_once{}", if buggy { "[buggy]" } else { "" });
+    const FLEET_LOCK: usize = 0;
+    let factory = move || {
+        let released: MCell<bool> = MCell::new(false);
+        let used: MCell<i64> = MCell::new(1); // one admitted trial
+
+        let releaser = |path: &'static str, released: MCell<bool>, used: MCell<i64>| {
+            let (enter, dec): (&'static str, &'static str) = match path {
+                "reaper" => ("reaper:lock", "reaper:release"),
+                _ => ("fail:lock", "fail:release"),
+            };
+            Box::new(move |s: &super::sched::Sched| {
+                if buggy {
+                    // Planted bug: check under one lock acquisition,
+                    // decrement under another.
+                    s.acquire(FLEET_LOCK, enter);
+                    let already = released.get();
+                    s.release(FLEET_LOCK);
+                    if !already {
+                        s.acquire(FLEET_LOCK, dec);
+                        released.set(true);
+                        used.with(|u| *u -= 1);
+                        s.release(FLEET_LOCK);
+                    }
+                } else {
+                    s.acquire(FLEET_LOCK, enter);
+                    if !released.get() {
+                        released.set(true);
+                        used.with(|u| *u -= 1);
+                    }
+                    s.release(FLEET_LOCK);
+                }
+            }) as Box<dyn FnOnce(&super::sched::Sched) + Send>
+        };
+
+        Instance {
+            n_locks: 1,
+            threads: vec![
+                releaser("reaper", released.clone(), used.clone()),
+                releaser("fail", released.clone(), used.clone()),
+            ],
+            finish: Box::new(move || match used.get() {
+                0 => Ok(()),
+                n => Err(format!("slot accounting off: used = {n} (double release)")),
+            }),
+        }
+    };
+    Model { name, factory: Box::new(factory) }
+}
+
+/// Bonus self-test model (not part of [`all`]): two threads taking two
+/// locks — in the same order (`buggy = false`) or opposite orders
+/// (`buggy = true`). The buggy variant is the classic AB/BA deadlock
+/// the lock-hierarchy lint exists to prevent; the checker must find it
+/// as a [`super::sched::FailureKind::Deadlock`].
+pub fn lock_order_demo(buggy: bool) -> Model {
+    let name = format!("lock_order_demo{}", if buggy { "[buggy]" } else { "" });
+    const A: usize = 0;
+    const B: usize = 1;
+    let factory = move || {
+        let taker = |first: usize, second: usize| {
+            Box::new(move |s: &super::sched::Sched| {
+                s.acquire(first, if first == A { "lock:A" } else { "lock:B" });
+                s.point("critical");
+                s.acquire(second, if second == A { "lock:A" } else { "lock:B" });
+                s.release(second);
+                s.release(first);
+            }) as Box<dyn FnOnce(&super::sched::Sched) + Send>
+        };
+        let (t1_first, t1_second) = (A, B);
+        let (t2_first, t2_second) = if buggy { (B, A) } else { (A, B) };
+        Instance {
+            n_locks: 2,
+            threads: vec![taker(t1_first, t1_second), taker(t2_first, t2_second)],
+            finish: Box::new(|| Ok(())),
+        }
+    };
+    Model { name, factory: Box::new(factory) }
+}

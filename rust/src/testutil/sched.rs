@@ -1,0 +1,500 @@
+//! Deterministic interleaving checker: a shuttle-style controlled
+//! scheduler for small concurrency models.
+//!
+//! This is the dynamic half of the PR-10 concurrency tooling (the
+//! static half is `crate::analysis`, the lock-hierarchy lint). Models
+//! are miniatures of the repo's real protocols — WAL publish-before-ack,
+//! epoch-guarded fit-cache write-back, view publication, promote-once,
+//! scheduler slot release; see [`crate::testutil::models`] — written
+//! against a cooperative scheduler:
+//!
+//! * each model thread is a real OS thread, but only **one runs at a
+//!   time**: every interesting step is bracketed by a
+//!   [`Sched::point`] / [`Sched::acquire`] yield point, and the
+//!   explorer decides which blocked thread advances next;
+//! * the sequence of decisions fully determines the execution, so a
+//!   failing interleaving is **named** (a hash of its choice string)
+//!   and can be [`replay`]ed exactly;
+//! * exploration is **exhaustive DFS** over all interleavings up to
+//!   [`Options::max_execs`] executions, then falls back to seeded
+//!   random sampling (SplitMix64) — same options, same seed, same
+//!   result, byte for byte;
+//! * model mutexes are scheduler-aware: a thread whose next step is
+//!   [`Sched::acquire`] on a held lock is simply *not enabled*, and if
+//!   no thread is enabled while some are blocked the explorer reports a
+//!   **deadlock** with the trace that produced it.
+//!
+//! Shared model state lives in [`MCell`]s. Because at most one model
+//! thread runs between yield points, an `MCell` access is a single
+//! atomic step of the model: races must be *modeled* by splitting them
+//! across yield points (that is the point of the buggy variants).
+
+use std::panic::{self, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread;
+
+/// SplitMix64 — the same tiny seeded generator used by `bench`; good
+/// enough to diversify schedules and trivially reproducible.
+pub struct SplitMix64(pub u64);
+
+impl SplitMix64 {
+    pub fn next_u64(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+fn fnv1a_bytes(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h = (h ^ *b as u64).wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Stable, human-quotable name for an interleaving: a hash of its
+/// decision string. Two runs that made the same choices get the same
+/// name; a failure report quotes it and [`replay`] reproduces it.
+pub fn interleaving_name(choices: &[usize]) -> String {
+    let mut bytes = Vec::with_capacity(choices.len());
+    for &c in choices {
+        bytes.push(c as u8);
+        bytes.push(0xfe);
+    }
+    format!("ilv-{:08x}", fnv1a_bytes(&bytes) as u32)
+}
+
+/// Shared model state: a cell only ever touched by the single running
+/// model thread, so every access is one atomic model step.
+pub struct MCell<T>(Arc<Mutex<T>>);
+
+impl<T> Clone for MCell<T> {
+    fn clone(&self) -> Self {
+        MCell(self.0.clone())
+    }
+}
+
+impl<T> MCell<T> {
+    pub fn new(v: T) -> Self {
+        MCell(Arc::new(Mutex::new(v)))
+    }
+
+    /// Read-modify-write as one atomic model step.
+    pub fn with<R>(&self, f: impl FnOnce(&mut T) -> R) -> R {
+        f(&mut self.0.lock().unwrap_or_else(|p| p.into_inner()))
+    }
+
+    pub fn set(&self, v: T) {
+        self.with(|s| *s = v);
+    }
+}
+
+impl<T: Clone> MCell<T> {
+    pub fn get(&self) -> T {
+        self.with(|s| s.clone())
+    }
+}
+
+/// What a blocked thread is waiting to do next.
+#[derive(Clone, Copy)]
+enum Pending {
+    /// Plain yield point — always enabled.
+    Step,
+    /// Wants model lock `id` — enabled iff the lock is free.
+    Lock(usize),
+}
+
+enum TState {
+    /// Between yield points (or not yet at its first one).
+    Running,
+    Blocked(Pending, &'static str),
+    Done,
+}
+
+struct Ctl {
+    states: Vec<TState>,
+    locks: Vec<bool>,
+    abort: bool,
+    panicked: Option<String>,
+}
+
+struct Controller {
+    m: Mutex<Ctl>,
+    cv: Condvar,
+}
+
+/// Sentinel unwound through blocked threads when the explorer aborts a
+/// run after detecting a failure (so their OS threads exit cleanly).
+struct AbortToken;
+
+impl Controller {
+    fn new(n_threads: usize, n_locks: usize) -> Controller {
+        Controller {
+            m: Mutex::new(Ctl {
+                states: (0..n_threads).map(|_| TState::Running).collect(),
+                locks: vec![false; n_locks],
+                abort: false,
+                panicked: None,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, Ctl> {
+        self.m.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Model-thread side: park at a yield point until scheduled.
+    fn block(&self, tid: usize, pending: Pending, label: &'static str) {
+        let mut g = self.lock();
+        g.states[tid] = TState::Blocked(pending, label);
+        self.cv.notify_all();
+        loop {
+            if g.abort {
+                drop(g);
+                panic::panic_any(AbortToken);
+            }
+            if matches!(g.states[tid], TState::Running) {
+                return;
+            }
+            g = self.cv.wait(g).unwrap_or_else(|p| p.into_inner());
+        }
+    }
+
+    fn release_lock(&self, id: usize) {
+        let mut g = self.lock();
+        debug_assert!(g.locks[id], "releasing a lock that is not held");
+        g.locks[id] = false;
+    }
+
+    fn finish_thread(&self, tid: usize, payload: Option<Box<dyn std::any::Any + Send>>) {
+        let mut g = self.lock();
+        g.states[tid] = TState::Done;
+        if let Some(p) = payload {
+            if p.downcast_ref::<AbortToken>().is_none() && g.panicked.is_none() {
+                let msg = p
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| p.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "model thread panicked".into());
+                g.panicked = Some(msg);
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    fn abort_run(&self) {
+        let mut g = self.lock();
+        g.abort = true;
+        self.cv.notify_all();
+    }
+
+    /// Explorer side: wait until no thread is between yield points,
+    /// then report what can happen next.
+    fn await_quiescent(&self) -> Quiescent {
+        let mut g = self.lock();
+        loop {
+            if g.states.iter().any(|s| matches!(s, TState::Running)) {
+                g = self.cv.wait(g).unwrap_or_else(|p| p.into_inner());
+                continue;
+            }
+            if let Some(msg) = g.panicked.take() {
+                return Quiescent::Panicked(msg);
+            }
+            if g.states.iter().all(|s| matches!(s, TState::Done)) {
+                return Quiescent::AllDone;
+            }
+            let enabled: Vec<usize> = g
+                .states
+                .iter()
+                .enumerate()
+                .filter_map(|(tid, s)| match s {
+                    TState::Blocked(Pending::Step, _) => Some(tid),
+                    TState::Blocked(Pending::Lock(l), _) if !g.locks[*l] => Some(tid),
+                    _ => None,
+                })
+                .collect();
+            return Quiescent::Choice(enabled);
+        }
+    }
+
+    /// Explorer side: wake thread `tid`, granting its lock if it was
+    /// waiting on one. Returns the step label for the trace.
+    fn schedule(&self, tid: usize) -> &'static str {
+        let mut g = self.lock();
+        let (pending, label) = match &g.states[tid] {
+            TState::Blocked(pending, label) => (*pending, *label),
+            _ => unreachable!("scheduled a thread that is not blocked"),
+        };
+        if let Pending::Lock(l) = pending {
+            debug_assert!(!g.locks[l], "scheduled a thread onto a held lock");
+            g.locks[l] = true;
+        }
+        g.states[tid] = TState::Running;
+        self.cv.notify_all();
+        label
+    }
+}
+
+enum Quiescent {
+    AllDone,
+    Panicked(String),
+    Choice(Vec<usize>),
+}
+
+/// Handle passed to every model thread; all coordination goes through it.
+pub struct Sched {
+    ctl: Arc<Controller>,
+    tid: usize,
+}
+
+impl Sched {
+    /// A plain yield point: everything before it has happened, and the
+    /// explorer now decides who runs next.
+    pub fn point(&self, label: &'static str) {
+        self.ctl.block(self.tid, Pending::Step, label);
+    }
+
+    /// Acquire model lock `id`: blocks (is not *enabled*) until the
+    /// lock is free **and** the explorer schedules this thread, which
+    /// takes the lock atomically with the scheduling decision.
+    pub fn acquire(&self, id: usize, label: &'static str) {
+        self.ctl.block(self.tid, Pending::Lock(id), label);
+    }
+
+    /// Release model lock `id` (immediate; not a yield point).
+    pub fn release(&self, id: usize) {
+        self.ctl.release_lock(id);
+    }
+}
+
+/// One concrete, freshly-built run of a model: its threads and the
+/// end-of-run invariant check.
+pub struct Instance {
+    /// Number of model locks (ids `0..n_locks` valid in [`Sched::acquire`]).
+    pub n_locks: usize,
+    /// One closure per model thread.
+    pub threads: Vec<Box<dyn FnOnce(&Sched) + Send>>,
+    /// Invariant check, run after all threads finish cleanly.
+    pub finish: Box<dyn FnOnce() -> Result<(), String>>,
+}
+
+/// How a run failed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FailureKind {
+    /// Some threads blocked, none enabled.
+    Deadlock,
+    /// The end-of-run invariant check rejected the final state.
+    Invariant(String),
+    /// A model thread panicked mid-run.
+    Panic(String),
+}
+
+/// A failing interleaving: its stable name, the decision string that
+/// reproduces it, and the step trace `(thread, label)` it produced.
+#[derive(Debug, Clone)]
+pub struct Failure {
+    pub name: String,
+    pub kind: FailureKind,
+    pub choices: Vec<usize>,
+    pub trace: Vec<(usize, &'static str)>,
+}
+
+impl Failure {
+    /// Render the trace one step per line, e.g. `t1:ring:publish`.
+    pub fn render_trace(&self) -> String {
+        self.trace
+            .iter()
+            .map(|(tid, label)| format!("t{tid}:{label}"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+}
+
+/// Exploration result.
+#[derive(Debug)]
+pub struct Report {
+    /// Executions actually run (DFS + random).
+    pub execs: usize,
+    /// True iff DFS enumerated *every* interleaving within budget.
+    pub exhaustive: bool,
+    /// First failure found, if any (exploration stops at the first).
+    pub failure: Option<Failure>,
+}
+
+/// Exploration budget and seed.
+#[derive(Clone, Copy)]
+pub struct Options {
+    /// DFS execution budget; small models finish exhaustively below it.
+    pub max_execs: usize,
+    /// Seeded-random executions to run if DFS did not finish.
+    pub random_execs: usize,
+    pub seed: u64,
+    /// Per-run scheduler step budget (guards against unbounded models).
+    pub max_steps: usize,
+}
+
+impl Default for Options {
+    fn default() -> Options {
+        Options { max_execs: 4096, random_execs: 2048, seed: 0xC0FFEE, max_steps: 512 }
+    }
+}
+
+/// What one execution produced: the choices made, the enabled-count at
+/// each step (the DFS branching record), the trace, and the failure.
+struct RunOutcome {
+    choices: Vec<usize>,
+    counts: Vec<usize>,
+    trace: Vec<(usize, &'static str)>,
+    failure: Option<FailureKind>,
+}
+
+/// Run one execution under `decide` (given the step index and enabled
+/// count, pick an index into the enabled set).
+fn run_one(
+    inst: Instance,
+    max_steps: usize,
+    decide: &mut dyn FnMut(usize, usize) -> usize,
+) -> RunOutcome {
+    let n = inst.threads.len();
+    let ctl = Arc::new(Controller::new(n, inst.n_locks));
+    let mut handles = Vec::with_capacity(n);
+    for (tid, f) in inst.threads.into_iter().enumerate() {
+        let c = ctl.clone();
+        handles.push(thread::spawn(move || {
+            let s = Sched { ctl: c.clone(), tid };
+            // Every thread starts parked so nothing runs before the
+            // explorer's first decision.
+            let result = panic::catch_unwind(AssertUnwindSafe(|| {
+                s.point("spawn");
+                f(&s);
+            }));
+            c.finish_thread(tid, result.err());
+        }));
+    }
+
+    let mut choices = Vec::new();
+    let mut counts = Vec::new();
+    let mut trace = Vec::new();
+    let failure = loop {
+        match ctl.await_quiescent() {
+            Quiescent::AllDone => break None,
+            Quiescent::Panicked(msg) => break Some(FailureKind::Panic(msg)),
+            Quiescent::Choice(enabled) => {
+                if enabled.is_empty() {
+                    break Some(FailureKind::Deadlock);
+                }
+                if trace.len() >= max_steps {
+                    break Some(FailureKind::Panic(format!(
+                        "scheduler step budget ({max_steps}) exceeded — unbounded model?"
+                    )));
+                }
+                let k = decide(choices.len(), enabled.len()).min(enabled.len() - 1);
+                counts.push(enabled.len());
+                choices.push(k);
+                let tid = enabled[k];
+                let label = ctl.schedule(tid);
+                trace.push((tid, label));
+            }
+        }
+    };
+    if failure.is_some() {
+        ctl.abort_run();
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    let failure = match failure {
+        Some(f) => Some(f),
+        None => (inst.finish)().err().map(FailureKind::Invariant),
+    };
+    RunOutcome { choices, counts, trace, failure }
+}
+
+fn failure_from(
+    kind: FailureKind,
+    choices: Vec<usize>,
+    trace: Vec<(usize, &'static str)>,
+) -> Failure {
+    Failure { name: interleaving_name(&choices), kind, choices, trace }
+}
+
+/// Explore a model: exhaustive DFS over interleavings up to the budget,
+/// then seeded random sampling. Deterministic for fixed `opts`: the
+/// same exploration order, the same report, every time. Stops at the
+/// first failure.
+pub fn explore(factory: &dyn Fn() -> Instance, opts: &Options) -> Report {
+    let mut execs = 0usize;
+    // DFS over decision strings: rerun with an incremented prefix until
+    // the odometer rolls over.
+    let mut prefix: Vec<usize> = Vec::new();
+    loop {
+        if execs >= opts.max_execs {
+            break; // budget hit — fall through to random sampling
+        }
+        let run = run_one(factory(), opts.max_steps, &mut |step, n| {
+            if step < prefix.len() {
+                prefix[step].min(n - 1)
+            } else {
+                0
+            }
+        });
+        execs += 1;
+        if let Some(kind) = run.failure {
+            return Report {
+                execs,
+                exhaustive: false,
+                failure: Some(failure_from(kind, run.choices, run.trace)),
+            };
+        }
+        // Next prefix: bump the rightmost choice that still has an
+        // unexplored sibling; exhausted when none does.
+        let mut i = run.choices.len();
+        let next = loop {
+            if i == 0 {
+                break None;
+            }
+            i -= 1;
+            if run.choices[i] + 1 < run.counts[i] {
+                let mut p = run.choices[..i].to_vec();
+                p.push(run.choices[i] + 1);
+                break Some(p);
+            }
+        };
+        match next {
+            Some(p) => prefix = p,
+            None => return Report { execs, exhaustive: true, failure: None },
+        }
+    }
+    let mut rng = SplitMix64(opts.seed);
+    for _ in 0..opts.random_execs {
+        let run = run_one(factory(), opts.max_steps, &mut |_step, n| {
+            (rng.next_u64() % n as u64) as usize
+        });
+        execs += 1;
+        if let Some(kind) = run.failure {
+            return Report {
+                execs,
+                exhaustive: false,
+                failure: Some(failure_from(kind, run.choices, run.trace)),
+            };
+        }
+    }
+    Report { execs, exhaustive: false, failure: None }
+}
+
+/// Re-run a single interleaving from its decision string (as recorded
+/// in [`Failure::choices`]). Returns the (possibly clean) outcome.
+pub fn replay(factory: &dyn Fn() -> Instance, choices: &[usize], max_steps: usize) -> Report {
+    let run = run_one(factory(), max_steps, &mut |step, n| {
+        choices.get(step).copied().unwrap_or(0).min(n - 1)
+    });
+    Report {
+        execs: 1,
+        exhaustive: false,
+        failure: run.failure.map(|kind| failure_from(kind, run.choices, run.trace)),
+    }
+}

@@ -1,0 +1,434 @@
+//! Self-tests for `hopaas-lint` (`hopaas::analysis`): every rule gets a
+//! positive fixture (the lint must catch it), a negative fixture (the
+//! lint must accept it), and a suppression fixture (`lint:allow` must
+//! silence it) — plus baseline round-trips and the real-tree gate that
+//! keeps the production sources lint-clean.
+
+use hopaas::analysis::{self, baseline, lint_source, lint_sources, Finding, HIERARCHY};
+use std::path::Path;
+
+fn rules_of(findings: &[Finding]) -> Vec<&'static str> {
+    findings.iter().map(|f| f.rule).collect()
+}
+
+// ---------------------------------------------------------------------
+// Rule 1: lock_order
+// ---------------------------------------------------------------------
+
+#[test]
+fn lock_order_catches_descending_acquisition() {
+    // `state` is the shard class (level 20), `directory` the registry
+    // class (level 10): taking the directory under a shard guard
+    // inverts the canonical order.
+    let src = r#"
+        impl Engine {
+            fn bad(&self) {
+                let g = self.state.lock_safe();
+                let d = self.directory.write_safe();
+                g.touch(&d);
+            }
+        }
+    "#;
+    let findings = lint_source("src/fixture.rs", src);
+    assert_eq!(rules_of(&findings), vec!["lock_order"], "{findings:?}");
+    assert_eq!(findings[0].func, "Engine::bad");
+    assert_eq!(findings[0].detail, "shard<-directory");
+}
+
+#[test]
+fn lock_order_accepts_ascending_and_dropped_guards() {
+    let src = r#"
+        impl Engine {
+            fn ascending(&self) {
+                let d = self.directory.read_safe();
+                let g = self.state.lock_safe();
+                let q = self.queue.lock_safe();
+                g.touch(&d, &q);
+            }
+            fn scoped(&self) {
+                {
+                    let g = self.state.lock_safe();
+                    g.touch();
+                }
+                let d = self.directory.write_safe();
+                d.push(1);
+            }
+            fn explicit_drop(&self) {
+                let g = self.state.lock_safe();
+                drop(g);
+                let d = self.directory.write_safe();
+                d.push(1);
+            }
+        }
+    "#;
+    assert!(lint_source("src/fixture.rs", src).is_empty());
+}
+
+#[test]
+fn lock_order_suppressed_by_allow() {
+    let src = r#"
+        impl Engine {
+            fn exempt(&self) {
+                let g = self.state.lock_safe();
+                // lint:allow(lock_order): fixture — order proven safe by construction.
+                let d = self.directory.write_safe();
+                g.touch(&d);
+            }
+        }
+    "#;
+    assert!(lint_source("src/fixture.rs", src).is_empty());
+}
+
+#[test]
+fn lock_order_propagates_through_helpers() {
+    // `helper` acquires the WAL queue (level 40); calling it while
+    // holding the WAL ledger (level 42) is an inversion even though the
+    // acquisition is one call away.
+    let src = r#"
+        impl Engine {
+            fn helper(&self) {
+                let q = self.queue.lock_safe();
+                q.push_back(1);
+            }
+            fn bad(&self) {
+                let g = self.ledger.lock_safe();
+                self.helper();
+                g.touch();
+            }
+        }
+    "#;
+    let findings = lint_source("src/fixture.rs", src);
+    assert_eq!(rules_of(&findings), vec!["lock_order"], "{findings:?}");
+    assert_eq!(findings[0].detail, "wal_ledger<-helper()");
+}
+
+#[test]
+fn lock_order_tracks_declared_effects() {
+    // `lock_shard` is a declared effect: it returns a live shard guard,
+    // so a later directory acquisition inverts 20 -> 10.
+    let src = r#"
+        impl Engine {
+            fn bad(&self, idx: usize) {
+                let state = self.lock_shard(idx);
+                let d = self.directory.write_safe();
+                state.touch(&d);
+            }
+        }
+    "#;
+    let findings = lint_source("src/fixture.rs", src);
+    assert_eq!(rules_of(&findings), vec!["lock_order"], "{findings:?}");
+    assert_eq!(findings[0].detail, "shard<-directory");
+}
+
+// ---------------------------------------------------------------------
+// Rule 2: guard_blocking
+// ---------------------------------------------------------------------
+
+#[test]
+fn guard_blocking_catches_fsync_under_guard() {
+    let src = r#"
+        impl Wal {
+            fn bad(&self, file: &std::fs::File) {
+                let g = self.ledger.lock_safe();
+                file.sync_all().ok();
+                g.touch();
+            }
+        }
+    "#;
+    let findings = lint_source("src/fixture.rs", src);
+    assert_eq!(rules_of(&findings), vec!["guard_blocking"], "{findings:?}");
+    assert_eq!(findings[0].detail, "ledger-across-sync_all");
+}
+
+#[test]
+fn guard_blocking_accepts_sync_after_release() {
+    let src = r#"
+        impl Wal {
+            fn good(&self, file: &std::fs::File) {
+                {
+                    let g = self.ledger.lock_safe();
+                    g.touch();
+                }
+                file.sync_all().ok();
+            }
+        }
+    "#;
+    assert!(lint_source("src/fixture.rs", src).is_empty());
+}
+
+#[test]
+fn guard_blocking_suppressed_by_allow() {
+    let src = r#"
+        impl Wal {
+            fn exempt(&self, file: &std::fs::File) {
+                let g = self.ledger.lock_safe();
+                // lint:allow(guard_blocking): fixture — this lock IS the serialization point.
+                file.sync_all().ok();
+                g.touch();
+            }
+        }
+    "#;
+    assert!(lint_source("src/fixture.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------------
+// Rule 3: determinism
+// ---------------------------------------------------------------------
+
+#[test]
+fn determinism_catches_clock_in_det_root_fn() {
+    // `apply_event` is a deterministic root by name, whatever file it
+    // lives in.
+    let src = r#"
+        impl Engine {
+            fn apply_event(&mut self) {
+                let t0 = std::time::Instant::now();
+                self.note(t0);
+            }
+        }
+    "#;
+    let findings = lint_source("src/fixture.rs", src);
+    assert_eq!(rules_of(&findings), vec!["determinism"], "{findings:?}");
+    assert_eq!(findings[0].detail, "clock-Instant::now");
+}
+
+#[test]
+fn determinism_catches_rng_in_sampler_dir() {
+    // Everything under coordinator/samplers/ is a deterministic root by
+    // path.
+    let src = r#"
+        fn propose(n: usize) -> f64 {
+            let mut r = thread_rng();
+            r.gen()
+        }
+    "#;
+    let findings = lint_source("src/coordinator/samplers/fixture.rs", src);
+    assert_eq!(rules_of(&findings), vec!["determinism"], "{findings:?}");
+}
+
+#[test]
+fn determinism_ignores_clocks_outside_det_roots() {
+    let src = r#"
+        fn handle_request() -> u64 {
+            let t0 = std::time::Instant::now();
+            t0.elapsed().as_micros() as u64
+        }
+    "#;
+    assert!(lint_source("src/fixture.rs", src).is_empty());
+}
+
+#[test]
+fn determinism_suppressed_by_allow() {
+    let src = r#"
+        impl Engine {
+            fn apply_event(&mut self) {
+                // lint:allow(determinism): fixture — span timing only, never applied state.
+                let t0 = std::time::Instant::now();
+                self.note(t0);
+            }
+        }
+    "#;
+    assert!(lint_source("src/fixture.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------------
+// Rule 4: unwrap_boundary
+// ---------------------------------------------------------------------
+
+#[test]
+fn unwrap_boundary_catches_parse_unwrap() {
+    let src = r#"
+        fn bad(s: &str) -> u32 {
+            s.parse().unwrap()
+        }
+    "#;
+    let findings = lint_source("src/fixture.rs", src);
+    assert_eq!(rules_of(&findings), vec!["unwrap_boundary"], "{findings:?}");
+    assert_eq!(findings[0].detail, "parse-unwrap");
+}
+
+#[test]
+fn unwrap_boundary_catches_turbofish_parse_unwrap() {
+    let src = r#"
+        fn bad(s: &str) -> u32 {
+            s.parse::<u32>().expect("number")
+        }
+    "#;
+    let findings = lint_source("src/fixture.rs", src);
+    assert_eq!(rules_of(&findings), vec!["unwrap_boundary"], "{findings:?}");
+    assert_eq!(findings[0].detail, "parse-unwrap");
+}
+
+#[test]
+fn unwrap_boundary_catches_lock_poison_unwrap() {
+    let src = r#"
+        impl S {
+            fn bad(&self) -> usize {
+                let g = self.m.lock().unwrap();
+                g.len()
+            }
+        }
+    "#;
+    let findings = lint_source("src/fixture.rs", src);
+    assert_eq!(rules_of(&findings), vec!["unwrap_boundary"], "{findings:?}");
+    assert_eq!(findings[0].detail, "m.lock-unwrap");
+}
+
+#[test]
+fn unwrap_boundary_accepts_handled_results_and_safe_locks() {
+    let src = r#"
+        impl S {
+            fn good(&self, s: &str) -> u32 {
+                let g = self.m.lock_safe();
+                g.note();
+                s.parse().unwrap_or(0)
+            }
+            fn recovered(&self) -> usize {
+                self.m.lock().unwrap_or_else(|p| p.into_inner()).len()
+            }
+        }
+    "#;
+    assert!(lint_source("src/fixture.rs", src).is_empty());
+}
+
+#[test]
+fn unwrap_boundary_ignores_test_code() {
+    let src = r#"
+        fn shipping(s: &str) -> Result<u32, std::num::ParseIntError> {
+            s.parse()
+        }
+
+        #[cfg(test)]
+        mod tests {
+            #[test]
+            fn exercise() {
+                let v: u32 = "7".parse().unwrap();
+                assert_eq!(v, 7);
+            }
+        }
+    "#;
+    assert!(lint_source("src/fixture.rs", src).is_empty());
+}
+
+#[test]
+fn unwrap_boundary_suppressed_by_allow() {
+    let src = r#"
+        fn exempt(b: &[u8]) -> &str {
+            // lint:allow(unwrap_boundary): fixture — validated ASCII, not an input boundary.
+            std::str::from_utf8(b).unwrap()
+        }
+    "#;
+    assert!(lint_source("src/fixture.rs", src).is_empty());
+}
+
+// ---------------------------------------------------------------------
+// Baseline machinery
+// ---------------------------------------------------------------------
+
+#[test]
+fn baseline_roundtrip_covers_and_goes_stale() {
+    let bad = r#"
+        fn bad(s: &str) -> u32 {
+            s.parse().unwrap()
+        }
+    "#;
+    let findings = lint_source("src/fixture.rs", bad);
+    assert_eq!(findings.len(), 1);
+
+    // A freshly written baseline covers the finding...
+    let base = baseline::parse(&baseline::render(&findings));
+    let diff = baseline::diff(&findings, &base);
+    assert!(diff.new.is_empty());
+    assert!(diff.stale.is_empty());
+    assert_eq!(diff.baselined, 1);
+
+    // ...an empty baseline reports it as new...
+    let diff = baseline::diff(&findings, &Default::default());
+    assert_eq!(diff.new.len(), 1);
+
+    // ...and once the code is fixed, the old entry is stale (the
+    // "baselines only shrink" rule).
+    let diff = baseline::diff(&[], &base);
+    assert!(diff.new.is_empty());
+    assert_eq!(diff.stale.len(), 1);
+}
+
+#[test]
+fn baseline_keys_are_line_number_free() {
+    let v1 = lint_source("src/fixture.rs", "fn bad(s: &str) -> u32 { s.parse().unwrap() }");
+    let v2 = lint_source(
+        "src/fixture.rs",
+        "// a comment pushing the code down\n\nfn bad(s: &str) -> u32 { s.parse().unwrap() }",
+    );
+    assert_ne!(v1[0].line, v2[0].line);
+    assert_eq!(v1[0].key(), v2[0].key());
+}
+
+// ---------------------------------------------------------------------
+// The hierarchy table itself
+// ---------------------------------------------------------------------
+
+#[test]
+fn hierarchy_is_strictly_ascending_and_unambiguous() {
+    let mut seen = std::collections::HashSet::new();
+    let mut last = 0u32;
+    for (i, c) in HIERARCHY.iter().enumerate() {
+        assert!(i == 0 || c.level > last, "levels must strictly ascend at `{}`", c.name);
+        last = c.level;
+        for r in c.receivers {
+            assert!(seen.insert(*r), "receiver `{r}` appears in two lock classes");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The real tree: the gate CI enforces
+// ---------------------------------------------------------------------
+
+/// The committed production sources must be lint-clean against the
+/// committed baseline — and the baseline itself must be empty for the
+/// files this PR cleaned up (engine, views, group).
+#[test]
+fn production_tree_is_lint_clean() {
+    let root = Path::new("src");
+    let findings = analysis::lint_tree(root).expect("scan src/");
+    let base_text = std::fs::read_to_string("lint-baseline.txt").unwrap_or_default();
+    let base = baseline::parse(&base_text);
+
+    let diff = baseline::diff(&findings, &base);
+    let new: Vec<String> = diff.new.iter().map(|f| f.render()).collect();
+    assert!(new.is_empty(), "unbaselined findings:\n{}", new.join("\n"));
+    assert!(diff.stale.is_empty(), "stale baseline entries: {:?}", diff.stale);
+
+    for file in ["coordinator/engine.rs", "coordinator/views.rs", "store/group.rs"] {
+        assert!(
+            !base.iter().any(|k| k.contains(file)),
+            "baseline must be empty for {file}"
+        );
+        assert!(
+            !findings.iter().any(|f| f.file.ends_with(file)),
+            "{file} must be finding-free"
+        );
+    }
+}
+
+/// The in-memory lint and the on-disk file set agree on labels: every
+/// finding (if any ever appears) points at a real `src/…` path.
+#[test]
+fn collected_sources_have_stable_labels() {
+    let sources = analysis::collect_sources(Path::new("src")).expect("collect");
+    assert!(sources.iter().any(|(l, _)| l == "src/lib.rs"));
+    assert!(sources.iter().all(|(l, _)| l.starts_with("src/")));
+    // testutil is scaffolding, exempt from production lock discipline.
+    assert!(sources.iter().all(|(l, _)| !l.contains("testutil")));
+    // Sorted, deduplicated labels => deterministic reports.
+    let mut labels: Vec<&String> = sources.iter().map(|(l, _)| l).collect();
+    let n = labels.len();
+    labels.dedup();
+    assert_eq!(labels.len(), n);
+
+    let findings = lint_sources(&sources);
+    for f in &findings {
+        assert!(f.file.starts_with("src/"), "bad label {}", f.file);
+    }
+}

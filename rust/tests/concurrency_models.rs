@@ -1,0 +1,149 @@
+//! End-to-end tests for the deterministic interleaving checker
+//! (`hopaas::testutil::sched`) over the concurrency protocol
+//! miniatures (`hopaas::testutil::models`): the shipped protocols
+//! survive exhaustive search, every planted bug is found and named,
+//! a named interleaving replays to the identical failure, and the
+//! whole exploration is deterministic in its seed.
+
+use hopaas::testutil::models;
+use hopaas::testutil::sched::{explore, replay, FailureKind, Options};
+
+fn opts() -> Options {
+    Options { max_execs: 4096, random_execs: 1024, seed: 0x5EED_CAFE, max_steps: 256 }
+}
+
+#[test]
+fn shipped_protocols_survive_exhaustive_search() {
+    for m in models::all(false) {
+        let report = explore(&m.factory, &opts());
+        assert!(
+            report.failure.is_none(),
+            "{}: shipped protocol failed: {:?}",
+            m.name,
+            report.failure
+        );
+        assert!(
+            report.exhaustive,
+            "{}: expected exhaustive coverage, got {} execs without finishing",
+            m.name, report.execs
+        );
+        assert!(report.execs > 1, "{}: trivial exploration", m.name);
+    }
+}
+
+#[test]
+fn planted_bugs_are_found_and_named() {
+    for m in models::all(true) {
+        let report = explore(&m.factory, &opts());
+        let failure = report
+            .failure
+            .unwrap_or_else(|| panic!("{}: planted bug not found in {} execs", m.name, report.execs));
+        assert!(
+            matches!(failure.kind, FailureKind::Invariant(_)),
+            "{}: expected an invariant violation, got {:?}",
+            m.name,
+            failure.kind
+        );
+        // The failing interleaving is named after its decision string
+        // and carries a non-trivial trace.
+        assert!(failure.name.starts_with("ilv-"), "{}: {}", m.name, failure.name);
+        assert!(!failure.choices.is_empty(), "{}: empty decision string", m.name);
+        assert!(failure.trace.len() >= failure.choices.len().min(2));
+    }
+}
+
+/// The PR-4 bug class: double slot release. The pre-fix logic (flag
+/// check and slot decrement under separate lock acquisitions) must
+/// reproduce as a failing interleaving; the shipped logic must not.
+#[test]
+fn pr4_double_slot_release_reproduces_against_prefix_logic() {
+    let buggy = models::slot_release_once(true);
+    let report = explore(&buggy.factory, &opts());
+    let failure = report.failure.expect("double release not found");
+    match &failure.kind {
+        FailureKind::Invariant(msg) => {
+            assert!(msg.contains("used = -1"), "unexpected invariant message: {msg}")
+        }
+        other => panic!("expected invariant violation, got {other:?}"),
+    }
+    // The trace names the two colliding release paths.
+    let rendered = failure.render_trace();
+    assert!(rendered.contains("reaper:release"), "trace:\n{rendered}");
+    assert!(rendered.contains("fail:release"), "trace:\n{rendered}");
+
+    let fixed = models::slot_release_once(false);
+    let report = explore(&fixed.factory, &opts());
+    assert!(report.failure.is_none(), "shipped slot release failed: {:?}", report.failure);
+    assert!(report.exhaustive);
+}
+
+#[test]
+fn named_interleaving_replays_to_identical_failure() {
+    for m in models::all(true) {
+        let found = explore(&m.factory, &opts()).failure.expect("bug not found");
+        let replayed = replay(&m.factory, &found.choices, 256)
+            .failure
+            .unwrap_or_else(|| panic!("{}: replay of {} came back clean", m.name, found.name));
+        assert_eq!(replayed.name, found.name, "{}", m.name);
+        assert_eq!(replayed.kind, found.kind, "{}", m.name);
+        assert_eq!(replayed.trace, found.trace, "{}", m.name);
+        assert_eq!(replayed.choices, found.choices, "{}", m.name);
+    }
+}
+
+#[test]
+fn replaying_a_clean_interleaving_stays_clean() {
+    // The all-zeros decision string on the shipped promote-once model
+    // is a plain sequential run.
+    let m = models::promote_once(false);
+    let report = replay(&m.factory, &[0; 16], 256);
+    assert!(report.failure.is_none(), "{:?}", report.failure);
+}
+
+#[test]
+fn exploration_is_deterministic_in_its_options() {
+    // DFS phase: two explorations of the same buggy model emit the
+    // identical failure, trace and execution count.
+    for m1 in models::all(true) {
+        let m2 = models::all(true).into_iter().find(|m| m.name == m1.name).unwrap();
+        let (a, b) = (explore(&m1.factory, &opts()), explore(&m2.factory, &opts()));
+        assert_eq!(a.execs, b.execs, "{}", m1.name);
+        let (fa, fb) = (a.failure.unwrap(), b.failure.unwrap());
+        assert_eq!(fa.name, fb.name, "{}", m1.name);
+        assert_eq!(fa.kind, fb.kind, "{}", m1.name);
+        assert_eq!(fa.trace, fb.trace, "{}", m1.name);
+    }
+
+    // Seeded-random phase: strangle the DFS budget so discovery happens
+    // in the random phase, and check the same seed tells the same story.
+    let tight = Options { max_execs: 1, random_execs: 2048, seed: 42, max_steps: 256 };
+    let run = |seed: u64| {
+        let m = models::promote_once(true);
+        let mut o = tight;
+        o.seed = seed;
+        explore(&m.factory, &o)
+    };
+    let (a, b) = (run(42), run(42));
+    assert_eq!(a.execs, b.execs);
+    let (fa, fb) = (a.failure.expect("found"), b.failure.expect("found"));
+    assert_eq!(fa.name, fb.name);
+    assert_eq!(fa.choices, fb.choices);
+    assert_eq!(fa.trace, fb.trace);
+}
+
+#[test]
+fn opposite_lock_orders_deadlock_and_are_reported() {
+    let buggy = models::lock_order_demo(true);
+    let report = explore(&buggy.factory, &opts());
+    let failure = report.failure.expect("AB/BA deadlock not found");
+    assert_eq!(failure.kind, FailureKind::Deadlock);
+    // Replay reproduces the hang as a report, not an actual hang.
+    let replayed = replay(&buggy.factory, &failure.choices, 256).failure.expect("replay");
+    assert_eq!(replayed.kind, FailureKind::Deadlock);
+    assert_eq!(replayed.trace, failure.trace);
+
+    let fixed = models::lock_order_demo(false);
+    let report = explore(&fixed.factory, &opts());
+    assert!(report.failure.is_none(), "{:?}", report.failure);
+    assert!(report.exhaustive);
+}
